@@ -1,0 +1,71 @@
+//! Compare planners and decoders on one molecule: DFS vs Retro\*,
+//! BS vs MSBS — the single-molecule version of Table 3.
+//!
+//! `cargo run --release --example plan_molecule [-- --smiles S]
+//! [--deadline-ms 15000] [--oracle]`
+
+use anyhow::Result;
+use retroserve::benchkit::Flags;
+use retroserve::decoding::make_decoder;
+use retroserve::runtime::PjrtModel;
+use retroserve::search::policy::{ModelPolicy, OraclePolicy};
+use retroserve::search::{
+    dfs::Dfs, retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock,
+};
+use retroserve::tokenizer::Vocab;
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+    let stock = Stock::load(art.join("stock.txt"))?;
+    let smiles = if flags.has("smiles") {
+        flags.str_or("smiles", "")
+    } else {
+        retroserve::benchkit::load_queries(&art, 100)?
+            .into_iter()
+            .find(|q| q.solvable_hint && q.depth >= 2)
+            .map(|q| q.smiles)
+            .expect("a solvable query")
+    };
+    let limits = SearchLimits {
+        deadline: std::time::Duration::from_millis(flags.usize_or("deadline-ms", 15000) as u64),
+        ..Default::default()
+    };
+    println!("target: {smiles}\n");
+    println!(
+        "{:<12} {:<8} {:>8} {:>8} {:>12} {:>10}",
+        "planner", "decoder", "solved", "iters", "model calls", "wall s"
+    );
+
+    for planner_name in ["dfs", "retrostar"] {
+        for decoder_name in ["bs", "msbs"] {
+            let policy: Box<dyn ExpansionPolicy> = if flags.has("oracle") {
+                Box::new(OraclePolicy::new())
+            } else {
+                let model = PjrtModel::load(&art)?;
+                Box::new(ModelPolicy::new(model, make_decoder(decoder_name, 1)?, vocab.clone()))
+            };
+            let planner: Box<dyn Planner> = match planner_name {
+                "dfs" => Box::new(Dfs),
+                _ => Box::new(RetroStar::new(1)),
+            };
+            let r = planner.solve(&smiles, policy.as_ref(), &stock, &limits)?;
+            println!(
+                "{:<12} {:<8} {:>8} {:>8} {:>12} {:>10.2}",
+                planner_name,
+                decoder_name,
+                r.solved,
+                r.iterations,
+                r.decode_stats.model_calls,
+                r.wall_secs
+            );
+            if flags.has("show-route") {
+                if let Some(route) = &r.route {
+                    println!("{}", route.render());
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: load the served model, run one accelerated single-step
+//! expansion and one multi-step plan.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Optional flags: `--artifacts DIR`, `--smiles S`.
+
+use anyhow::Result;
+use retroserve::benchkit::Flags;
+use retroserve::decoding::msbs::Msbs;
+use retroserve::runtime::PjrtModel;
+use retroserve::search::policy::ModelPolicy;
+use retroserve::search::{retrostar::RetroStar, Planner, SearchLimits, Stock};
+use retroserve::tokenizer::Vocab;
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+
+    // 1. Load the AOT artifacts through the PJRT runtime (pure Rust —
+    //    Python was only involved at build time).
+    let model = PjrtModel::load(&art)?;
+    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+    let stock = Stock::load(art.join("stock.txt"))?;
+    println!(
+        "loaded model: vocab={} medusa_heads={} | stock: {} building blocks",
+        model.config().vocab,
+        model.config().n_medusa,
+        stock.len()
+    );
+
+    // 2. Pick a target: a held-out planning query unless one is given.
+    let smiles = match flags.has("smiles") {
+        true => flags.str_or("smiles", ""),
+        false => {
+            let queries = retroserve::benchkit::load_queries(&art, 50)?;
+            queries
+                .iter()
+                .find(|q| q.solvable_hint && q.depth >= 2)
+                .map(|q| q.smiles.clone())
+                .unwrap_or_else(|| queries[0].smiles.clone())
+        }
+    };
+    println!("\ntarget molecule: {smiles}");
+
+    // 3. Single-step expansion with MSBS (the paper's accelerated
+    //    decoder): 10 candidate precursor sets in a couple of model
+    //    calls per cycle instead of one per token.
+    use retroserve::search::ExpansionPolicy as _;
+    let policy = ModelPolicy::new(model, Box::new(Msbs::default()), vocab);
+    let t0 = std::time::Instant::now();
+    let proposals = &policy.expand_batch(&[&smiles], 10)?[0];
+    println!(
+        "\nsingle-step: {} precursor proposals in {:.0} ms (acceptance {:.0}%):",
+        proposals.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        policy.decode_stats().acceptance_rate() * 100.0
+    );
+    for p in proposals.iter().take(3) {
+        println!("  logp {:7.3}  {}", p.logp, p.reactants.join(" . "));
+    }
+
+    // 4. Multi-step planning with Retro* under a deadline.
+    let limits = SearchLimits {
+        deadline: std::time::Duration::from_secs(flags.usize_or("deadline-s", 15) as u64),
+        ..Default::default()
+    };
+    let result = RetroStar::new(1).solve(&smiles, &policy, &stock, &limits)?;
+    println!(
+        "\nmulti-step: solved={} in {:.2}s ({} iterations, {} model calls)",
+        result.solved, result.wall_secs, result.iterations, result.decode_stats.model_calls
+    );
+    if let Some(route) = result.route {
+        println!("route:\n{}", route.render());
+    }
+    Ok(())
+}

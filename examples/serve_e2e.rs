@@ -1,0 +1,139 @@
+//! End-to-end serving driver (the repository's system validation).
+//!
+//! Proves all layers compose: the AOT artifacts (L1 Pallas kernels
+//! lowered inside the L2 JAX model) load into the PJRT runtime, the L3
+//! coordinator serves concurrent planning sessions over TCP with
+//! cross-tree dynamic batching, and the paper's MSBS decoder drives the
+//! single-step expansions. Reports solved counts, latency percentiles,
+//! throughput and batcher merge statistics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_e2e -- \
+//!     --n 24 --clients 4 --deadline-ms 3000
+//! ```
+
+use anyhow::Result;
+use retroserve::benchkit::Flags;
+use retroserve::config::ServeConfig;
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::server::{Client, Server, ServerCtx};
+use retroserve::decoding::make_decoder;
+use retroserve::jsonx::Json;
+use retroserve::metrics::Metrics;
+use retroserve::runtime::server::SharedModel;
+use retroserve::runtime::PjrtModel;
+use retroserve::search::Stock;
+use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::{mean, percentile};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = flags.str_or("artifacts", "artifacts");
+    let n = flags.usize_or("n", 24);
+    let clients = flags.usize_or("clients", 4);
+    let deadline_ms = flags.usize_or("deadline-ms", 3000);
+    let decoder = flags.str_or("decoder", "msbs");
+
+    // --- boot the full stack ---
+    let t_boot = std::time::Instant::now();
+    let vocab = Vocab::load(&std::path::Path::new(&art).join("vocab.json"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let stock = Arc::new(Stock::load(std::path::Path::new(&art).join("stock.txt"))?);
+    let metrics = Arc::new(Metrics::new());
+    let art2 = art.clone();
+    let model = SharedModel::spawn(move || PjrtModel::load(&art2))?;
+    let hub = ExpansionHub::start(
+        model,
+        make_decoder(&decoder, 4)?,
+        vocab.clone(),
+        BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_micros(3000) },
+        metrics.clone(),
+    );
+    let sc = ServeConfig::from_config(&retroserve::config::Config::new());
+    let mut limits = sc.limits();
+    limits.deadline = std::time::Duration::from_millis(deadline_ms as u64);
+    let server = Server::start(
+        "127.0.0.1:0",
+        ServerCtx {
+            hub: hub.clone(),
+            stock: stock.clone(),
+            metrics: metrics.clone(),
+            default_limits: limits,
+            default_algo: "retrostar".into(),
+            default_beam_width: 1,
+        },
+    )?;
+    let addr = server.addr();
+    println!(
+        "booted full stack in {:.2}s (decoder={decoder}, stock={}) on {addr}",
+        t_boot.elapsed().as_secs_f64(),
+        stock.len()
+    );
+
+    // --- drive it with concurrent clients over real TCP ---
+    let queries: Vec<String> = retroserve::benchkit::load_queries(
+        std::path::Path::new(&art),
+        n,
+    )?
+    .into_iter()
+    .map(|q| q.smiles)
+    .collect();
+    anyhow::ensure!(!queries.is_empty(), "no queries; run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let chunk = queries.len().div_ceil(clients);
+    let mut joins = Vec::new();
+    for (c, batch) in queries.chunks(chunk).enumerate() {
+        let batch: Vec<String> = batch.to_vec();
+        joins.push(std::thread::spawn(move || -> Result<Vec<(bool, f64)>> {
+            let mut client = Client::connect(addr)?;
+            let mut out = Vec::new();
+            for q in &batch {
+                let t = std::time::Instant::now();
+                let resp = client.call(Json::obj(vec![
+                    ("op", Json::str("plan")),
+                    ("smiles", Json::str(q.clone())),
+                ]))?;
+                let solved = resp.get("solved").and_then(|x| x.as_bool()).unwrap_or(false);
+                out.push((solved, t.elapsed().as_secs_f64()));
+            }
+            eprintln!("client {c}: {} queries done", batch.len());
+            Ok(out)
+        }));
+    }
+    let mut lat = Vec::new();
+    let mut solved = 0usize;
+    for j in joins {
+        for (s, l) in j.join().expect("client thread")? {
+            solved += s as usize;
+            lat.push(l);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (batches, merged) = hub.merge_ratio();
+
+    println!("\n=== end-to-end serving report ===");
+    println!("queries:        {} over {clients} concurrent clients", lat.len());
+    println!("solved:         {} ({:.0}%)", solved, 100.0 * solved as f64 / lat.len() as f64);
+    println!("throughput:     {:.2} molecules/s", lat.len() as f64 / wall);
+    println!(
+        "latency:        mean {:.2}s  p50 {:.2}s  p90 {:.2}s  max {:.2}s",
+        mean(&lat),
+        percentile(&lat, 50.0),
+        percentile(&lat, 90.0),
+        percentile(&lat, 100.0)
+    );
+    println!(
+        "batcher:        {merged} expansion requests merged into {batches} model batches ({:.2}x)",
+        merged as f64 / batches.max(1) as f64
+    );
+    let stats = hub.stats();
+    println!(
+        "decode:         {} model calls, acceptance {:.0}%, avg effective batch {:.1}",
+        stats.model_calls,
+        stats.acceptance_rate() * 100.0,
+        stats.avg_effective_batch()
+    );
+    server.shutdown();
+    Ok(())
+}

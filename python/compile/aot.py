@@ -1,0 +1,182 @@
+"""AOT export: lower the trained model to HLO text artifacts for the
+Rust PJRT runtime.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Exported executables (all take the full parameter list first, in
+``model_config.json`` order, so the Rust side can keep one set of device
+buffers):
+
+* ``encode_b{B}.hlo.txt``    — ``(params..., src i32[B, Ls]) -> f32[B, Ls, D]``
+* ``decode_r{R}_l{L}_w{W}.hlo.txt`` —
+  ``(params..., mem f32[R, Ls, D], src_mask f32[R, Ls], tgt i32[R, L],
+  pos i32[R]) -> f32[R, W, H, V]`` — logits for a W-wide window of
+  positions starting at ``min(pos[r], L - W)`` per row (dynamic_slice
+  clamp semantics; the Rust runtime mirrors the clamp).
+
+Batch/row/length/window bucket grids are in :data:`ENC_BUCKETS` and
+:data:`DEC_BUCKETS`; the runtime pads every call up to the nearest
+bucket. A ``selftest.npz`` with a known input/output pair is written for
+the Rust integration test to verify numerics across the language
+boundary.
+
+Usage: ``python -m compile.aot [--artifacts DIR] [--no-pallas]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .model import ModelConfig
+
+ENC_BUCKETS = [1, 2, 4, 8, 16, 32]
+DEC_ROW_BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128]
+DEC_LEN_BUCKETS = [24, 48, 72]
+DEC_WIN_BUCKETS = [1, 8, 24]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_params(art: Path, cfg: ModelConfig) -> list[np.ndarray]:
+    npz = np.load(art / "params.npz")
+    return [np.asarray(npz[name]) for name in model_mod.param_names(cfg)]
+
+
+def make_encode(cfg: ModelConfig, names, use_pallas: bool):
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        (src,) = args[len(names) :]
+        return (model_mod.encode(params, cfg, src, use_pallas=use_pallas),)
+
+    return fn
+
+
+def make_decode(cfg: ModelConfig, names, w: int, use_pallas: bool):
+    heads = cfg.n_medusa + 1
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        mem, src_mask, tgt, pos = args[len(names) :]
+        logits = model_mod.decode(params, cfg, mem, src_mask, tgt, use_pallas=use_pallas)
+
+        def slice_row(lg, p):
+            return jax.lax.dynamic_slice(lg, (p, 0, 0), (w, heads, cfg.vocab))
+
+        return (jax.vmap(slice_row)(logits, pos),)
+
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument(
+        "--pallas",
+        action="store_true",
+        help="lower the decode through the interpret-mode Pallas kernels. "
+        "Numerics are identical to the default jnp path (pytest asserts "
+        "kernel==ref), but interpret-mode Pallas compiles to a sequential "
+        "grid loop that is ~20x slower under the CPU PJRT plugin "
+        "(EXPERIMENTS.md §Perf), so serving artifacts default to the "
+        "jnp lowering; on a real TPU the Mosaic lowering replaces both.",
+    )
+    args = ap.parse_args()
+    art = Path(args.artifacts)
+
+    with open(art / "model_config.json") as f:
+        config = json.load(f)
+    cfg = ModelConfig(**config["model"])
+    names = model_mod.param_names(cfg)
+    params = load_params(art, cfg)
+    param_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    use_pallas = args.pallas
+
+    d, ls = cfg.d_model, cfg.max_src
+    heads = cfg.n_medusa + 1
+    files = {}
+    t0 = time.time()
+
+    # --- encode buckets ---
+    for b in ENC_BUCKETS:
+        fn = make_encode(cfg, names, use_pallas=False)  # encoder has no medusa; jnp path
+        spec = jax.ShapeDtypeStruct((b, ls), jnp.int32)
+        lowered = jax.jit(fn, keep_unused=True).lower(*param_specs, spec)
+        text = to_hlo_text(lowered)
+        name = f"encode_b{b}.hlo.txt"
+        (art / name).write_text(text)
+        files[name] = {"kind": "encode", "rows": b}
+    print(f"encode buckets done ({time.time() - t0:.1f}s)", flush=True)
+
+    # --- decode buckets ---
+    for r in DEC_ROW_BUCKETS:
+        for l in DEC_LEN_BUCKETS:
+            for w in DEC_WIN_BUCKETS:
+                if w > l:
+                    continue
+                fn = make_decode(cfg, names, w, use_pallas=use_pallas)
+                mem = jax.ShapeDtypeStruct((r, ls, d), jnp.float32)
+                mask = jax.ShapeDtypeStruct((r, ls), jnp.float32)
+                tgt = jax.ShapeDtypeStruct((r, l), jnp.int32)
+                pos = jax.ShapeDtypeStruct((r,), jnp.int32)
+                lowered = jax.jit(fn, keep_unused=True).lower(*param_specs, mem, mask, tgt, pos)
+                text = to_hlo_text(lowered)
+                name = f"decode_r{r}_l{l}_w{w}.hlo.txt"
+                (art / name).write_text(text)
+                files[name] = {"kind": "decode", "rows": r, "len": l, "win": w}
+        print(f"decode r={r} done ({time.time() - t0:.1f}s)", flush=True)
+
+    # --- selftest fixture: known numerics across the language boundary ---
+    rng = np.random.default_rng(0)
+    b = 2
+    src = np.zeros((b, ls), np.int32)
+    src[0, :7] = [1, 5, 6, 7, 8, 9, 2]
+    src[1, :5] = [1, 10, 11, 12, 2]
+    pdict = dict(zip(names, params))
+    mem = np.asarray(model_mod.encode(pdict, cfg, jnp.asarray(src)))
+    mask = (src != 0).astype(np.float32)
+    lt, w = 24, 8
+    tgt = np.zeros((b, lt), np.int32)
+    tgt[0, :4] = [1, 5, 6, 7]
+    tgt[1, :3] = [1, 10, 11]
+    pos = np.array([3, 2], np.int32)
+    dec_fn = make_decode(cfg, names, w, use_pallas=use_pallas)
+    logits = np.asarray(dec_fn(*params, jnp.asarray(mem), jnp.asarray(mask),
+                               jnp.asarray(tgt), jnp.asarray(pos))[0])
+    np.savez(art / "selftest.npz", src=src, mem=mem, mask=mask, tgt=tgt, pos=pos,
+             logits=logits)
+
+    manifest = {
+        "files": files,
+        "enc_buckets": ENC_BUCKETS,
+        "dec_row_buckets": DEC_ROW_BUCKETS,
+        "dec_len_buckets": DEC_LEN_BUCKETS,
+        "dec_win_buckets": DEC_WIN_BUCKETS,
+        "heads": heads,
+        "pallas": use_pallas,
+        "selftest": {"lt": lt, "w": w},
+    }
+    with open(art / "aot_manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(files)} HLO artifacts to {art} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Dataset loading and batching for training (build-time only)."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from .tokenizer import Vocab, BOS, EOS, PAD
+
+
+def load_pairs(path: str | Path) -> list[tuple[str, str]]:
+    """Read a `src \t tgt [\t ...]` TSV."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            parts = line.rstrip("\n").split("\t")
+            if len(parts) >= 2:
+                out.append((parts[0], parts[1]))
+    return out
+
+
+def encode_pairs(
+    pairs: list[tuple[str, str]], vocab: Vocab, max_src: int, max_tgt: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Tokenize and pad to fixed shapes.
+
+    Returns (src, tgt_in, tgt_out):
+      src     (N, max_src)  BOS ... EOS PAD*
+      tgt_in  (N, max_tgt)  BOS tokens...            (decoder input)
+      tgt_out (N, max_tgt)  tokens... EOS PAD*       (next-token targets)
+    Pairs that do not fit are dropped.
+    """
+    srcs, tins, touts = [], [], []
+    for s, t in pairs:
+        se = vocab.encode(s, wrap=True)
+        te = vocab.encode(t, wrap=True)  # BOS ... EOS
+        if len(se) > max_src or len(te) > max_tgt:
+            continue
+        src = se + [PAD] * (max_src - len(se))
+        tin = te[:-1] + [PAD] * (max_tgt - (len(te) - 1))
+        tout = te[1:] + [PAD] * (max_tgt - (len(te) - 1))
+        srcs.append(src)
+        tins.append(tin)
+        touts.append(tout)
+    return (
+        np.asarray(srcs, np.int32),
+        np.asarray(tins, np.int32),
+        np.asarray(touts, np.int32),
+    )
+
+
+class Batches:
+    """Shuffled epoch iterator over pre-encoded arrays."""
+
+    def __init__(self, src, tgt_in, tgt_out, batch: int, seed: int = 0):
+        self.src, self.tgt_in, self.tgt_out = src, tgt_in, tgt_out
+        self.batch = batch
+        self.rng = np.random.default_rng(seed)
+        self.n = src.shape[0]
+
+    def __iter__(self):
+        order = self.rng.permutation(self.n)
+        for i in range(0, self.n - self.batch + 1, self.batch):
+            idx = order[i : i + self.batch]
+            yield self.src[idx], self.tgt_in[idx], self.tgt_out[idx]

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+``attention`` and ``medusa_heads`` are the interpret-mode Pallas kernels
+used by the AOT export; ``ref`` holds the semantics oracles used for
+training and for pytest/hypothesis equivalence checks.
+"""
+
+from . import ref  # noqa: F401
+from .attention import attention  # noqa: F401
+from .medusa import medusa_heads  # noqa: F401

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused scaled-dot-product attention.
+
+TPU adaptation: the whole (Lq, Lk) score tile for one (batch, head) pair
+is computed in VMEM — QK^T on the MXU, on-chip softmax, then the PV
+product — so scores never round-trip to HBM (the flash-attention
+property). Sequence lengths in this system are short (<= 72), so a
+single-tile-per-(b, h) schedule fits VMEM comfortably:
+
+    q/k/v tiles   3 x L x Dh      (72 x 16 f32 each ~ 4.5 KiB)
+    scores        L x L           (72 x 72 f32     ~ 20 KiB)
+
+For longer sequences the grid would add a KV-block dimension with an
+online-softmax accumulator; the BlockSpec layout below already isolates
+(b, h) so that change is local to this file.
+
+interpret=True is mandatory on this image (CPU PJRT; Mosaic custom-calls
+cannot execute) — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale):
+    q = q_ref[0]  # (Lq, Dh)
+    k = k_ref[0]  # (Lk, Dh)
+    v = v_ref[0]  # (Lk, Dh)
+    mask = m_ref[0]  # (Lq, Lk)
+    scores = (q @ k.T) * scale + mask
+    # numerically-stable softmax in VMEM
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - mx)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = w @ v
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention(q, k, v, mask, *, interpret: bool = True):
+    """Fused SDPA. q: (B, H, Lq, Dh); k/v: (B, H, Lk, Dh);
+    mask: (B, Lq, Lk) additive. Returns (B, H, Lq, Dh)."""
+    b, h, lq, dh = q.shape
+    lk = k.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b * h, lq, dh)
+    kf = k.reshape(b * h, lk, dh)
+    vf = v.reshape(b * h, lk, dh)
+    # broadcast the mask across heads
+    mf = jnp.broadcast_to(mask[:, None, :, :], (b, h, lq, lk)).reshape(b * h, lq, lk)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, lq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lq, lk), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lq, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, lq, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, mf.astype(q.dtype))
+    return out.reshape(b, h, lq, dh)

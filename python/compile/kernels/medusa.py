@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: fused Medusa-head fan-out.
+
+TPU adaptation of the paper's GPU-framed Medusa heads (see DESIGN.md
+§Hardware-Adaptation): instead of M separate GEMM launches that each
+stream the hidden states from HBM, one kernel keeps a ``(TILE_L, D)``
+block of hidden states resident in VMEM and iterates the M heads over
+the MXU, so ``h`` is read from HBM exactly once per tile.
+
+VMEM budget per grid step (f32):
+    h tile        TILE_L x D
+    per-head W1/W2  D x HH + HH x D   (streamed per head)
+    unembed       D x V
+    out tile      TILE_L x M x V
+With the default config (D=64, HH=64, V<=64, TILE_L=32, M=6) this is
+well under 1 MiB — far below the ~16 MiB VMEM ceiling, leaving room to
+scale D/V by an order of magnitude.
+
+Runs with ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+path and real-TPU performance is *estimated* (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_L = 32
+
+
+def _medusa_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, g_ref, b_ref, u_ref, o_ref, *, eps):
+    """One grid step: rows tile x all heads.
+
+    h_ref:  (TILE, D)
+    w1_ref: (M, D, HH);  b1_ref: (M, HH)
+    w2_ref: (M, HH, D);  b2_ref: (M, D)
+    g_ref/b_ref: (M, D); u_ref: (D, V)
+    o_ref:  (TILE, M, V)
+    """
+    h = h_ref[...]
+    m = w1_ref.shape[0]
+    u = u_ref[...]
+    for head in range(m):  # static unroll: heads iterate in-kernel so h is loaded once
+        t = jnp.maximum(h @ w1_ref[head] + b1_ref[head][None, :], 0.0)
+        r = t @ w2_ref[head] + b2_ref[head][None, :] + h
+        mu = jnp.mean(r, axis=-1, keepdims=True)
+        var = jnp.mean((r - mu) * (r - mu), axis=-1, keepdims=True)
+        r = (r - mu) / jnp.sqrt(var + eps) * g_ref[head][None, :] + b_ref[head][None, :]
+        o_ref[:, head, :] = r @ u
+
+
+@functools.partial(jax.jit, static_argnames=("tile_l", "interpret"))
+def medusa_heads(h, w1, b1, w2, b2, ln_g, ln_b, unembed, *, tile_l: int = DEFAULT_TILE_L,
+                 interpret: bool = True, eps: float = 1e-5):
+    """Fused Medusa-head projection.
+
+    h: (B, L, D) -> logits (B, L, M, V). See ``ref.medusa_heads_ref`` for
+    the semantics oracle.
+    """
+    b, l, d = h.shape
+    m, _, hh = w1.shape
+    v = unembed.shape[1]
+    rows = b * l
+    hf = h.reshape(rows, d)
+    # pad rows to a multiple of the tile
+    tile = min(tile_l, max(rows, 1))
+    pad = (-rows) % tile
+    if pad:
+        hf = jnp.concatenate([hf, jnp.zeros((pad, d), h.dtype)], axis=0)
+    grid = (hf.shape[0] // tile,)
+    out = pl.pallas_call(
+        functools.partial(_medusa_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d, hh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((m, hh), lambda i: (0, 0)),
+            pl.BlockSpec((m, hh, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, m, v), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hf.shape[0], m, v), h.dtype),
+        interpret=interpret,
+    )(hf, w1, b1, w2, b2, ln_g, ln_b, unembed)
+    return out[:rows].reshape(b, l, m, v)

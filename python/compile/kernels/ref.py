@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: pytest checks the Pallas
+kernels (interpret mode) against these implementations, and the training
+loop uses them directly (identical math, faster than interpret-mode
+Pallas on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, mask):
+    """Scaled dot-product attention.
+
+    q: (B, H, Lq, Dh); k, v: (B, H, Lk, Dh); mask: (B, Lq, Lk) additive.
+    Returns (B, H, Lq, Dh).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = scores + mask[:, None, :, :].astype(q.dtype)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def medusa_heads_ref(h, w1, b1, w2, b2, ln_g, ln_b, unembed, eps: float = 1e-5):
+    """Medusa head fan-out.
+
+    h: (B, L, D) final decoder hidden states;
+    w1: (M, D, Hh); b1: (M, Hh); w2: (M, Hh, D); b2: (M, D);
+    ln_g/ln_b: (M, D); unembed: (D, V).
+    Head m: ``LN_m(h + relu(h @ w1_m + b1_m) @ w2_m + b2_m) @ unembed``.
+    Returns (B, L, M, V).
+    """
+    t = jnp.einsum("bld,mdh->blmh", h, w1) + b1[None, None]
+    t = jax.nn.relu(t)
+    r = jnp.einsum("blmh,mhd->blmd", t, w2) + b2[None, None]
+    r = r + h[:, :, None, :]
+    mu = jnp.mean(r, axis=-1, keepdims=True)
+    var = jnp.var(r, axis=-1, keepdims=True)
+    r = (r - mu) / jnp.sqrt(var + eps) * ln_g[None, None] + ln_b[None, None]
+    return jnp.einsum("blmd,dv->blmv", r, unembed)

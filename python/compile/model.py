@@ -1,0 +1,313 @@
+"""L2: the SMILES-to-SMILES encoder-decoder transformer with Medusa heads.
+
+Pure-JAX (no flax/optax in the image); parameters live in a flat dict of
+arrays with deterministic ordering (see :func:`param_names`) so the Rust
+runtime can feed them positionally as PJRT buffers.
+
+Architecture (scaled-down Molecular Transformer + Medusa):
+
+* pre-LN encoder/decoder stacks, sinusoidal positions, tied unembedding;
+* ``n_medusa`` extra heads: per-head one-hidden-layer MLP with residual
+  and layer norm (the Medusa-1 recipe), sharing the tied unembedding;
+* decoder output is ``(B, L, 1 + n_medusa, V)``: index 0 is the main
+  next-token head, index k predicts the token ``k`` positions further.
+
+The compute hot-spots can route through the Pallas kernels in
+``kernels/`` (``use_pallas=True``; interpret mode) — the AOT export uses
+them so the L1 kernels genuinely lower into the served HLO.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 26
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 256
+    n_enc: int = 2
+    n_dec: int = 2
+    n_medusa: int = 6
+    medusa_hidden: int = 64
+    max_src: int = 64
+    max_tgt: int = 72
+    pad_id: int = 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json_dict(self) -> dict:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Ordered (insertion order = positional order) name -> shape map."""
+    d, f, hh, v, m = cfg.d_model, cfg.d_ff, cfg.medusa_hidden, cfg.vocab, cfg.n_medusa
+    shapes: dict[str, tuple[int, ...]] = {}
+    shapes["embed"] = (v, d)
+    for i in range(cfg.n_enc):
+        p = f"enc{i}"
+        shapes[f"{p}.ln1.g"] = (d,)
+        shapes[f"{p}.ln1.b"] = (d,)
+        shapes[f"{p}.attn.wq"] = (d, d)
+        shapes[f"{p}.attn.wk"] = (d, d)
+        shapes[f"{p}.attn.wv"] = (d, d)
+        shapes[f"{p}.attn.wo"] = (d, d)
+        shapes[f"{p}.ln2.g"] = (d,)
+        shapes[f"{p}.ln2.b"] = (d,)
+        shapes[f"{p}.ff.w1"] = (d, f)
+        shapes[f"{p}.ff.b1"] = (f,)
+        shapes[f"{p}.ff.w2"] = (f, d)
+        shapes[f"{p}.ff.b2"] = (d,)
+    shapes["enc.lnf.g"] = (d,)
+    shapes["enc.lnf.b"] = (d,)
+    for i in range(cfg.n_dec):
+        p = f"dec{i}"
+        shapes[f"{p}.ln1.g"] = (d,)
+        shapes[f"{p}.ln1.b"] = (d,)
+        shapes[f"{p}.attn.wq"] = (d, d)
+        shapes[f"{p}.attn.wk"] = (d, d)
+        shapes[f"{p}.attn.wv"] = (d, d)
+        shapes[f"{p}.attn.wo"] = (d, d)
+        shapes[f"{p}.ln2.g"] = (d,)
+        shapes[f"{p}.ln2.b"] = (d,)
+        shapes[f"{p}.xattn.wq"] = (d, d)
+        shapes[f"{p}.xattn.wk"] = (d, d)
+        shapes[f"{p}.xattn.wv"] = (d, d)
+        shapes[f"{p}.xattn.wo"] = (d, d)
+        shapes[f"{p}.ln3.g"] = (d,)
+        shapes[f"{p}.ln3.b"] = (d,)
+        shapes[f"{p}.ff.w1"] = (d, f)
+        shapes[f"{p}.ff.b1"] = (f,)
+        shapes[f"{p}.ff.w2"] = (f, d)
+        shapes[f"{p}.ff.b2"] = (d,)
+    shapes["dec.lnf.g"] = (d,)
+    shapes["dec.lnf.b"] = (d,)
+    # Medusa heads, stacked along a leading head axis.
+    shapes["medusa.w1"] = (m, d, hh)
+    shapes["medusa.b1"] = (m, hh)
+    shapes["medusa.w2"] = (m, hh, d)
+    shapes["medusa.b2"] = (m, d)
+    shapes["medusa.ln.g"] = (m, d)
+    shapes["medusa.ln.b"] = (m, d)
+    return shapes
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    return list(param_shapes(cfg).keys())
+
+
+def init_params(key, cfg: ModelConfig) -> dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", ".b1", ".b2")) or ".ln" in name or name.startswith("enc.lnf") or name.startswith("dec.lnf"):
+            if name.endswith(".g"):
+                params[name] = jnp.ones(shape, jnp.float32)
+            else:
+                params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / np.sqrt(fan_in)
+    return params
+
+
+# ---------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    pos = np.arange(length)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / d)
+    enc = np.zeros((length, d), np.float32)
+    enc[:, 0::2] = np.sin(angle)
+    enc[:, 1::2] = np.cos(angle)
+    return jnp.asarray(enc)
+
+
+def multi_head_attention(q_in, kv_in, mask, wq, wk, wv, wo, n_heads, use_pallas=False):
+    """mask: (B, Lq, Lk) additive (0 or -inf-ish)."""
+    b, lq, d = q_in.shape
+    lk = kv_in.shape[1]
+    dh = d // n_heads
+    q = (q_in @ wq).reshape(b, lq, n_heads, dh).transpose(0, 2, 1, 3)
+    k = (kv_in @ wk).reshape(b, lk, n_heads, dh).transpose(0, 2, 1, 3)
+    v = (kv_in @ wv).reshape(b, lk, n_heads, dh).transpose(0, 2, 1, 3)
+    if use_pallas:
+        out = kernels.attention(q, k, v, mask)  # (B, H, Lq, Dh)
+    else:
+        out = kernels.ref.attention_ref(q, k, v, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(b, lq, d)
+    return out @ wo
+
+
+def feed_forward(x, w1, b1, w2, b2):
+    return jax.nn.relu(x @ w1 + b1) @ w2 + b2
+
+
+def encode(params, cfg: ModelConfig, src, use_pallas: bool = False):
+    """src: (B, Ls) int32 -> memory (B, Ls, D)."""
+    b, ls = src.shape
+    x = params["embed"][src] * np.sqrt(cfg.d_model)
+    x = x + sinusoidal_positions(ls, cfg.d_model)[None]
+    pad_mask = (src != cfg.pad_id).astype(jnp.float32)  # (B, Ls)
+    attn_mask = (pad_mask[:, None, :] - 1.0) * 1e9  # (B, 1->Lq, Lk)
+    attn_mask = jnp.broadcast_to(attn_mask, (b, ls, ls))
+    for i in range(cfg.n_enc):
+        p = f"enc{i}"
+        h = layer_norm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        x = x + multi_head_attention(
+            h, h, attn_mask,
+            params[f"{p}.attn.wq"], params[f"{p}.attn.wk"],
+            params[f"{p}.attn.wv"], params[f"{p}.attn.wo"],
+            cfg.n_heads, use_pallas,
+        )
+        h = layer_norm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        x = x + feed_forward(
+            h, params[f"{p}.ff.w1"], params[f"{p}.ff.b1"],
+            params[f"{p}.ff.w2"], params[f"{p}.ff.b2"],
+        )
+    x = layer_norm(x, params["enc.lnf.g"], params["enc.lnf.b"])
+    # zero out pad positions so downstream cross-attention sees clean memory
+    return x * pad_mask[:, :, None]
+
+
+def decode(params, cfg: ModelConfig, mem, src_mask, tgt, use_pallas: bool = False,
+           pallas_attention: bool | None = None):
+    """Full-prefix decode.
+
+    mem: (B, Ls, D) encoder memory; src_mask: (B, Ls) 1.0/0.0;
+    tgt: (B, Lt) int32 (BOS-led, PAD-padded).
+    Returns logits (B, Lt, 1 + n_medusa, V).
+
+    ``use_pallas`` routes the Medusa fan-out through the Pallas kernel;
+    ``pallas_attention`` (default: same as ``use_pallas``) additionally
+    routes attention through the fused Pallas SDPA kernel. The AOT export
+    keeps attention on the jnp path by default because interpret-mode
+    Pallas attention compiles to a per-(b,h) loop that is slow under the
+    CPU PJRT backend (see DESIGN.md §Hardware-Adaptation).
+    """
+    if pallas_attention is None:
+        pallas_attention = use_pallas
+    b, lt = tgt.shape
+    ls = mem.shape[1]
+    x = params["embed"][tgt] * np.sqrt(cfg.d_model)
+    x = x + sinusoidal_positions(lt, cfg.d_model)[None]
+    causal = jnp.tril(jnp.ones((lt, lt), jnp.float32))
+    self_mask = (causal[None] - 1.0) * 1e9
+    self_mask = jnp.broadcast_to(self_mask, (b, lt, lt))
+    cross_mask = (src_mask[:, None, :] - 1.0) * 1e9
+    cross_mask = jnp.broadcast_to(cross_mask, (b, lt, ls))
+    for i in range(cfg.n_dec):
+        p = f"dec{i}"
+        h = layer_norm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        x = x + multi_head_attention(
+            h, h, self_mask,
+            params[f"{p}.attn.wq"], params[f"{p}.attn.wk"],
+            params[f"{p}.attn.wv"], params[f"{p}.attn.wo"],
+            cfg.n_heads, pallas_attention,
+        )
+        h = layer_norm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        x = x + multi_head_attention(
+            h, mem, cross_mask,
+            params[f"{p}.xattn.wq"], params[f"{p}.xattn.wk"],
+            params[f"{p}.xattn.wv"], params[f"{p}.xattn.wo"],
+            cfg.n_heads, pallas_attention,
+        )
+        h = layer_norm(x, params[f"{p}.ln3.g"], params[f"{p}.ln3.b"])
+        x = x + feed_forward(
+            h, params[f"{p}.ff.w1"], params[f"{p}.ff.b1"],
+            params[f"{p}.ff.w2"], params[f"{p}.ff.b2"],
+        )
+    h = layer_norm(x, params["dec.lnf.g"], params["dec.lnf.b"])
+    unembed = params["embed"].T  # tied
+    main = h @ unembed  # (B, Lt, V)
+    if cfg.n_medusa == 0:
+        return main[:, :, None, :]
+    if use_pallas:
+        med = kernels.medusa_heads(
+            h,
+            params["medusa.w1"], params["medusa.b1"],
+            params["medusa.w2"], params["medusa.b2"],
+            params["medusa.ln.g"], params["medusa.ln.b"],
+            unembed,
+        )  # (B, Lt, M, V)
+    else:
+        med = kernels.ref.medusa_heads_ref(
+            h,
+            params["medusa.w1"], params["medusa.b1"],
+            params["medusa.w2"], params["medusa.b2"],
+            params["medusa.ln.g"], params["medusa.ln.b"],
+            unembed,
+        )
+    return jnp.concatenate([main[:, :, None, :], med], axis=2)
+
+
+def forward(params, cfg: ModelConfig, src, tgt, use_pallas: bool = False):
+    """Encode + decode in one pass (training convenience)."""
+    mem = encode(params, cfg, src, use_pallas)
+    src_mask = (src != cfg.pad_id).astype(jnp.float32)
+    return decode(params, cfg, mem, src_mask, tgt, use_pallas)
+
+
+# ---------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------
+
+
+def training_loss(params, cfg: ModelConfig, src, tgt_in, tgt_out):
+    """Joint Medusa loss ("joint training, combined loss").
+
+    tgt_in:  (B, Lt) decoder input (BOS-led);
+    tgt_out: (B, Lt) next-token targets (tgt_in shifted left, EOS-capped).
+    Head k (0 = main) is trained to predict ``tgt_out`` shifted k more
+    positions; its loss contribution is weighted ``1/(k+1)`` to give the
+    main head priority (the paper's recipe).
+    """
+    logits = forward(params, cfg, src, tgt_in)  # (B, Lt, M+1, V)
+    b, lt, heads, v = logits.shape
+    log_p = jax.nn.log_softmax(logits, axis=-1)
+    total = 0.0
+    denom = 0.0
+    for k in range(heads):
+        # target for head k at position i is tgt_out[i + k]
+        tk = tgt_out[:, k:]
+        lp = log_p[:, : lt - k, k, :]
+        mask = (tk != cfg.pad_id).astype(jnp.float32)
+        nll = -jnp.take_along_axis(lp, tk[:, :, None], axis=-1)[:, :, 0]
+        w = 1.0 / (k + 1.0)
+        total = total + w * jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        denom += w
+    return total / denom
+
+
+def main_head_token_accuracy(params, cfg: ModelConfig, src, tgt_in, tgt_out):
+    logits = forward(params, cfg, src, tgt_in)
+    pred = jnp.argmax(logits[:, :, 0, :], axis=-1)
+    mask = tgt_out != cfg.pad_id
+    return jnp.sum((pred == tgt_out) & mask) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,83 @@
+"""Atomwise SMILES tokenizer — exact mirror of ``rust/src/tokenizer``.
+
+The vocabulary is built by the Rust ``datagen`` binary and stored in
+``artifacts/vocab.json``; both sides must tokenize identically, so keep
+this function in lockstep with ``tokenize`` in ``rust/src/tokenizer/mod.rs``.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+
+def tokenize(s: str) -> list[str]:
+    """Split a SMILES string into atomwise tokens.
+
+    Bracket expressions ``[...]``, two-character halogens ``Cl``/``Br`` and
+    ``%nn`` ring indices are single tokens; everything else is one char.
+    """
+    out: list[str] = []
+    i = 0
+    n = len(s)
+    while i < n:
+        c = s[i]
+        if c == "[":
+            j = i
+            while j < n and s[j] != "]":
+                j += 1
+            j = min(j + 1, n)
+            out.append(s[i:j])
+            i = j
+        elif c == "C" and i + 1 < n and s[i + 1] == "l":
+            out.append("Cl")
+            i += 2
+        elif c == "B" and i + 1 < n and s[i + 1] == "r":
+            out.append("Br")
+            i += 2
+        elif c == "%":
+            out.append(s[i : i + 3])
+            i += 3
+        else:
+            out.append(c)
+            i += 1
+    return out
+
+
+class Vocab:
+    """Fixed vocabulary loaded from ``vocab.json``."""
+
+    def __init__(self, tokens: list[str]):
+        assert tokens[: len(SPECIALS)] == SPECIALS, "special tokens must lead the vocab"
+        self.tokens = list(tokens)
+        self.id_of = {t: i for i, t in enumerate(self.tokens)}
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Vocab":
+        with open(path) as f:
+            data = json.load(f)
+        return cls(data["tokens"])
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def id(self, token: str) -> int:
+        return self.id_of.get(token, UNK)
+
+    def encode(self, s: str, wrap: bool = True) -> list[int]:
+        ids = [self.id(t) for t in tokenize(s)]
+        return [BOS] + ids + [EOS] if wrap else ids
+
+    def decode(self, ids) -> str:
+        out = []
+        for i in ids:
+            i = int(i)
+            if i == EOS:
+                break
+            if i in (PAD, BOS):
+                continue
+            out.append(self.tokens[i] if 0 <= i < len(self.tokens) else "<unk>")
+        return "".join(out)

@@ -1,0 +1,151 @@
+"""Build-time training of the Medusa SMILES-to-SMILES transformer.
+
+Hand-rolled Adam (no optax in the image) with the classic transformer
+inverse-sqrt warmup schedule. Trains on ``artifacts/dataset_train.tsv``
+(produced by the Rust ``datagen`` binary) and writes:
+
+* ``artifacts/params.npz``        — flat-named parameter arrays
+* ``artifacts/train_log.txt``     — step/loss/accuracy log
+* ``artifacts/model_config.json`` — architecture + vocab + buckets
+
+Usage: ``python -m compile.train [--steps N] [--batch N] [--artifacts DIR]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .model import ModelConfig
+from .tokenizer import Vocab
+
+
+def adam_init(params):
+    return (
+        {k: jnp.zeros_like(v) for k, v in params.items()},
+        {k: jnp.zeros_like(v) for k, v in params.items()},
+    )
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.98, eps=1e-9):
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = b1 * m[k] + (1 - b1) * g
+        vk = b2 * v[k] + (1 - b2) * g * g
+        mhat = mk / (1 - b1**step)
+        vhat = vk / (1 - b2**step)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v
+
+
+def lr_schedule(step, d_model, warmup=400, scale=2.0):
+    step = jnp.maximum(step, 1.0)
+    return scale * d_model**-0.5 * jnp.minimum(step**-0.5, step * warmup**-1.5)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=6000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=500)
+    args = ap.parse_args()
+
+    art = Path(args.artifacts)
+    vocab = Vocab.load(art / "vocab.json")
+    cfg = ModelConfig(vocab=len(vocab))
+    print(f"model config: {cfg}")
+
+    pairs = data_mod.load_pairs(art / "dataset_train.tsv")
+    src, tin, tout = data_mod.encode_pairs(pairs, vocab, cfg.max_src, cfg.max_tgt)
+    print(f"train samples: {src.shape[0]} (of {len(pairs)} pairs)")
+    test_pairs = data_mod.load_pairs(art / "dataset_test.tsv")
+    tsrc, ttin, ttout = data_mod.encode_pairs(test_pairs[:512], vocab, cfg.max_src, cfg.max_tgt)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model_mod.init_params(key, cfg)
+    m, v = adam_init(params)
+
+    loss_fn = lambda p, s, ti, to: model_mod.training_loss(p, cfg, s, ti, to)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    acc_fn = jax.jit(lambda p, s, ti, to: model_mod.main_head_token_accuracy(p, cfg, s, ti, to))
+
+    @jax.jit
+    def train_step(params, m, v, step, s, ti, to):
+        loss, grads = jax.value_and_grad(loss_fn)(params, s, ti, to)
+        lr = lr_schedule(step.astype(jnp.float32), cfg.d_model)
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    batches = data_mod.Batches(src, tin, tout, args.batch, seed=args.seed)
+    log_path = art / "train_log.txt"
+    log = open(log_path, "w")
+    step = 0
+    t0 = time.time()
+    running = []
+    while step < args.steps:
+        for bs, bti, bto in batches:
+            step += 1
+            params, m, v, loss = train_step(
+                params, m, v, jnp.asarray(step, jnp.float32), bs, bti, bto
+            )
+            running.append(float(loss))
+            if step % 100 == 0:
+                msg = (
+                    f"step {step} loss {np.mean(running[-100:]):.4f} "
+                    f"({(time.time() - t0) / step * 1000:.0f} ms/step)"
+                )
+                print(msg, flush=True)
+                log.write(msg + "\n")
+                log.flush()
+            if step % args.eval_every == 0 or step == args.steps:
+                acc = float(acc_fn(params, tsrc, ttin, ttout))
+                msg = f"step {step} test token accuracy (main head) {acc:.4f}"
+                print(msg, flush=True)
+                log.write(msg + "\n")
+                log.flush()
+            if step >= args.steps:
+                break
+
+    # Per-head accuracy on the eval slice (acceptance-rate proxy).
+    logits = model_mod.forward(params, cfg, tsrc, ttin)
+    head_accs = []
+    for k in range(cfg.n_medusa + 1):
+        lt = ttout.shape[1]
+        tk = ttout[:, k:]
+        pred = np.argmax(np.asarray(logits[:, : lt - k, k, :]), axis=-1)
+        mask = tk != cfg.pad_id
+        head_accs.append(float(((pred == tk) & mask).sum() / max(mask.sum(), 1)))
+    msg = "per-head token accuracy: " + " ".join(f"{a:.3f}" for a in head_accs)
+    print(msg)
+    log.write(msg + "\n")
+    log.close()
+
+    # Save parameters with flat names (ordering via model_mod.param_names).
+    np.savez(art / "params.npz", **{k: np.asarray(p) for k, p in params.items()})
+    config = {
+        "model": cfg.to_json_dict(),
+        "param_names": model_mod.param_names(cfg),
+        "param_shapes": {k: list(s) for k, s in model_mod.param_shapes(cfg).items()},
+        "head_token_accuracy": head_accs,
+        "train_steps": step,
+    }
+    with open(art / "model_config.json", "w") as f:
+        json.dump(config, f, indent=1)
+    print(f"saved params.npz + model_config.json to {art}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Tokenizer parity and vocabulary behaviour."""
+
+import json
+
+import pytest
+
+from compile.tokenizer import BOS, EOS, PAD, UNK, Vocab, tokenize
+
+
+def test_tokenize_atomwise():
+    assert tokenize("CCO") == ["C", "C", "O"]
+    assert tokenize("CCl") == ["C", "Cl"]
+    assert tokenize("BrCC") == ["Br", "C", "C"]
+    assert tokenize("c1cc[nH]c1") == ["c", "1", "c", "c", "[nH]", "c", "1"]
+    assert tokenize("C%12C") == ["C", "%12", "C"]
+    assert tokenize("CC(=O)O.CN") == ["C", "C", "(", "=", "O", ")", "O", ".", "C", "N"]
+
+
+def test_tokenize_brackets_with_charge():
+    assert tokenize("C[N+](C)C") == ["C", "[N+]", "(", "C", ")", "C"]
+    assert tokenize("[O-]C") == ["[O-]", "C"]
+
+
+def make_vocab(corpus):
+    toks = sorted({t for s in corpus for t in tokenize(s)})
+    return Vocab(["<pad>", "<bos>", "<eos>", "<unk>"] + toks)
+
+
+def test_encode_decode_roundtrip():
+    v = make_vocab(["CC(=O)O", "c1cc[nH]c1", "ClCCBr"])
+    for s in ["CC(=O)O", "c1cc[nH]c1", "ClCCBr"]:
+        ids = v.encode(s)
+        assert ids[0] == BOS and ids[-1] == EOS
+        assert v.decode(ids) == s
+
+
+def test_unknown_token():
+    v = make_vocab(["CC"])
+    ids = v.encode("CN", wrap=False)
+    assert ids == [v.id("C"), UNK]
+
+
+def test_decode_stops_at_eos():
+    v = make_vocab(["CO"])
+    c, o = v.id("C"), v.id("O")
+    assert v.decode([BOS, c, EOS, o]) == "C"
+    assert v.decode([c, PAD, o]) == "CO"
+
+
+def test_specials_assertion():
+    with pytest.raises(AssertionError):
+        Vocab(["<pad>", "x"])
+
+
+def test_vocab_load_matches_rust(tmp_path):
+    """vocab.json written by the Rust side loads and orders identically."""
+    doc = {"tokens": ["<pad>", "<bos>", "<eos>", "<unk>", "C", "Cl", "c"]}
+    p = tmp_path / "vocab.json"
+    p.write_text(json.dumps(doc))
+    v = Vocab.load(p)
+    assert len(v) == 7
+    assert v.id("Cl") == 5
+    assert v.encode("CClc", wrap=False) == [4, 5, 6]

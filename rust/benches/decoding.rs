@@ -1,0 +1,49 @@
+//! Decoding-engine benches over the mock model: pure L3 algorithm cost
+//! (beam bookkeeping, draft construction, verification, candidate
+//! pools) with model latency held at ~0.
+
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::tokenizer::{BOS, EOS};
+use retroserve::util::stats::mean;
+use retroserve::util::Rng;
+
+fn srcs(n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut s = vec![BOS];
+            for _ in 0..len {
+                s.push(4 + rng.gen_range(20) as i32);
+            }
+            s.push(EOS);
+            s
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== decoding engine benches (mock model, K=10) ==");
+    let model = MockModel::new(MockConfig::default());
+    let group = srcs(8, 30, 3);
+    for (name, decoder) in [
+        ("beam-search", Box::new(BeamSearch::vanilla()) as Box<dyn Decoder>),
+        ("beam-search-optimized", Box::new(BeamSearch::optimized())),
+        ("hsbs (3x10 drafts)", Box::new(Hsbs::new(3, 10))),
+        ("msbs", Box::new(Msbs::default())),
+    ] {
+        let mut times = Vec::new();
+        let mut stats = DecodeStats::default();
+        for _ in 0..12 {
+            let t0 = std::time::Instant::now();
+            decoder.generate(&model, &group, 10, &mut stats).unwrap();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{name:<28} {:>9.2} ms/group  ({} calls, eff batch {:.0})",
+            mean(&times),
+            stats.model_calls / 12,
+            stats.avg_effective_batch()
+        );
+    }
+}

@@ -1,0 +1,71 @@
+//! Micro benches for the L3 hot-path primitives (criterion is not
+//! available offline; this is a minimal warmup+repeat harness with
+//! mean/stddev reporting, run via `cargo bench`).
+
+use retroserve::chem;
+use retroserve::tokenizer::{tokenize, Vocab};
+use retroserve::util::stats::{mean, stddev};
+use retroserve::util::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters.min(10) {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    println!("{name:<44} {:>10.2} µs ± {:>8.2}", mean(&times), stddev(&times));
+}
+
+fn main() {
+    println!("== micro benches (hot-path primitives) ==");
+    let smiles = "CC(C)(C)OC(=O)NCCc1ccc(S(=O)(=O)NCC(=O)OCC)cc1";
+    let mol = chem::parse_smiles(smiles).unwrap();
+    let vocab = Vocab::build([smiles]);
+    let ids = vocab.encode(smiles, true);
+
+    bench("smiles parse (47 chars)", 2000, || {
+        std::hint::black_box(chem::parse_smiles(smiles).unwrap());
+    });
+    bench("valence validate", 2000, || {
+        std::hint::black_box(chem::valence::validate(&mol).unwrap());
+    });
+    bench("canonical ranks", 2000, || {
+        std::hint::black_box(chem::canon::canonical_ranks(&mol));
+    });
+    bench("canonical smiles (full)", 2000, || {
+        std::hint::black_box(chem::canonical_smiles(&mol));
+    });
+    bench("canonicalize end-to-end", 1000, || {
+        std::hint::black_box(chem::canonicalize(smiles).unwrap());
+    });
+    bench("tokenize", 5000, || {
+        std::hint::black_box(tokenize(smiles));
+    });
+    bench("vocab encode+decode", 5000, || {
+        let e = vocab.encode(smiles, true);
+        std::hint::black_box(vocab.decode(&e));
+    });
+    std::hint::black_box(&ids);
+
+    // template application
+    bench("find_disconnections", 2000, || {
+        std::hint::black_box(retroserve::synthchem::find_disconnections(&mol));
+    });
+    let ds = retroserve::synthchem::find_disconnections(&mol);
+    bench("apply_retro (first site)", 2000, || {
+        std::hint::black_box(retroserve::synthchem::apply_retro(&mol, &ds[0]));
+    });
+
+    // nucleus verification math
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..26).map(|_| rng.gen_f64() as f32 * 8.0).collect();
+    bench("softmax+log_softmax (V=26)", 5000, || {
+        std::hint::black_box(retroserve::model::softmax(&logits));
+        std::hint::black_box(retroserve::model::log_softmax(&logits));
+    });
+}

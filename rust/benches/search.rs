@@ -1,0 +1,54 @@
+//! Planner benches with the oracle policy: Retro* graph maintenance and
+//! DFS traversal cost isolated from model latency.
+
+use retroserve::chem;
+use retroserve::search::policy::OraclePolicy;
+use retroserve::search::{dfs::Dfs, retrostar::RetroStar, Planner, SearchLimits, Stock};
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
+use retroserve::util::stats::mean;
+use retroserve::util::Rng;
+
+fn main() {
+    println!("== planner benches (oracle policy) ==");
+    let blocks = generate_blocks(71, 600);
+    let stock = Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+        chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT).unwrap(),
+    ]));
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(5);
+    let mut targets = Vec::new();
+    while targets.len() < 20 {
+        let depth = 2 + rng.gen_range(3);
+        if let Some(t) = gen_tree(&idx, &mut rng, depth, 26) {
+            targets.push(t.product_smiles().to_string());
+        }
+    }
+    let limits = SearchLimits {
+        deadline: std::time::Duration::from_secs(10),
+        max_iterations: 200,
+        max_depth: 5,
+        expansions_per_step: 10,
+    };
+    for (name, planner) in [
+        ("retro* bw=1", Box::new(RetroStar::new(1)) as Box<dyn Planner>),
+        ("retro* bw=8", Box::new(RetroStar::new(8))),
+        ("dfs", Box::new(Dfs)),
+    ] {
+        let policy = OraclePolicy::new();
+        let mut times = Vec::new();
+        let mut solved = 0;
+        for t in &targets {
+            let t0 = std::time::Instant::now();
+            let r = planner.solve(t, &policy, &stock, &limits).unwrap();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            solved += r.solved as usize;
+        }
+        println!(
+            "{name:<14} {:>9.2} ms/target (solved {}/{})",
+            mean(&times),
+            solved,
+            targets.len()
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Shared plumbing for the table-reproduction bench harnesses
+//! (`bench_table1..4`) and the criterion-style micro benches.
+
+use crate::model::StepModel;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One held-out single-step sample.
+#[derive(Clone, Debug)]
+pub struct TestPair {
+    pub src: String,
+    pub tgt: String,
+    pub product: String,
+    /// Ground-truth canonical reactants joined with '.'.
+    pub reactants: String,
+    pub template: String,
+}
+
+/// Load `dataset_test.tsv`.
+pub fn load_test_pairs(art: &Path, limit: usize) -> Result<Vec<TestPair>> {
+    let text = std::fs::read_to_string(art.join("dataset_test.tsv"))
+        .context("dataset_test.tsv (run `make artifacts`)")?;
+    let mut out = Vec::new();
+    for line in text.lines().take(limit) {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() >= 5 {
+            out.push(TestPair {
+                src: f[0].into(),
+                tgt: f[1].into(),
+                product: f[2].into(),
+                reactants: f[3].into(),
+                template: f[4].into(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// One multi-step planning query.
+#[derive(Clone, Debug)]
+pub struct QueryRow {
+    pub smiles: String,
+    pub depth: usize,
+    pub solvable_hint: bool,
+}
+
+/// Load `queries10k.tsv`.
+pub fn load_queries(art: &Path, limit: usize) -> Result<Vec<QueryRow>> {
+    let text = std::fs::read_to_string(art.join("queries10k.tsv"))
+        .context("queries10k.tsv (run `make artifacts`)")?;
+    let mut out = Vec::new();
+    for line in text.lines().take(limit) {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() >= 3 {
+            out.push(QueryRow {
+                smiles: f[0].into(),
+                depth: f[1].parse().unwrap_or(0),
+                solvable_hint: f[2] == "1",
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Tiny flag parser for the bench binaries (`--name value`).
+pub struct Flags(std::collections::HashMap<String, String>);
+
+impl Flags {
+    pub fn parse() -> Flags {
+        let mut m = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1);
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                m.insert(name.to_string(), it.next().unwrap_or_else(|| "true".into()));
+            }
+        }
+        Flags(m)
+    }
+
+    pub fn str_or(&self, k: &str, d: &str) -> String {
+        self.0.get(k).cloned().unwrap_or_else(|| d.to_string())
+    }
+
+    pub fn usize_or(&self, k: &str, d: usize) -> usize {
+        self.0.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    pub fn f64_or(&self, k: &str, d: f64) -> f64 {
+        self.0.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    pub fn has(&self, k: &str) -> bool {
+        self.0.contains_key(k)
+    }
+}
+
+/// Pretty-print one table row: name + columns.
+pub fn row(name: &str, cols: &[String]) -> String {
+    let mut s = format!("{name:<24}");
+    for c in cols {
+        s.push_str(&format!(" | {c:>14}"));
+    }
+    s
+}
+
+/// Group query molecules into batches of `b` BOS/EOS-encoded sources.
+pub fn encode_groups(
+    vocab: &crate::tokenizer::Vocab,
+    srcs: &[String],
+    b: usize,
+    max_src: usize,
+) -> Vec<Vec<Vec<i32>>> {
+    let mut groups = Vec::new();
+    let mut cur: Vec<Vec<i32>> = Vec::with_capacity(b);
+    for s in srcs {
+        let ids = vocab.encode(s, true);
+        if ids.len() > max_src {
+            continue;
+        }
+        cur.push(ids);
+        if cur.len() == b {
+            groups.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups
+}
+
+/// Warm up the runtime's lazily-compiled executables so compile time
+/// stays out of the measured window.
+pub fn warmup_model(model: &dyn StepModel, vocab: &crate::tokenizer::Vocab, sample: &str) {
+    let ids = vocab.encode(sample, true);
+    if let Ok(mem) = model.encode(&[ids]) {
+        let _ = model.decode(
+            &[crate::model::DecodeRow {
+                mem,
+                mem_row: 0,
+                tgt: vec![crate::tokenizer::BOS],
+                pos: 0,
+            }],
+            1,
+        );
+        model.release(mem);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_groups_batches_correctly() {
+        let vocab = crate::tokenizer::Vocab::build(["CC", "CCC", "CCCC"]);
+        let srcs = vec!["CC".to_string(), "CCC".to_string(), "CCCC".to_string()];
+        let g = encode_groups(&vocab, &srcs, 2, 16);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].len(), 2);
+        assert_eq!(g[1].len(), 1);
+    }
+
+    #[test]
+    fn row_formats() {
+        let s = row("beam search", &["1.0".into(), "2.0".into()]);
+        assert!(s.contains("beam search"));
+        assert!(s.contains('|'));
+    }
+}

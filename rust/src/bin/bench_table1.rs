@@ -1,0 +1,139 @@
+//! Table 1 harness: single-step decoding comparison on the held-out
+//! test set.
+//!
+//! Reproduces all four sections of the paper's Table 1 — (A) wall time,
+//! (B) model calls, (C) average effective batch size, (D) acceptance
+//! rate — for BS / BS-optimized / HSBS / MSBS at batch sizes
+//! B ∈ {1, 4, 8, 16, 32}, K = 10.
+//!
+//! `bench_table1 [--artifacts DIR] [--n 200] [--k 10] [--runs 1]
+//! [--mock] [--batches 1,4,8,16,32]`
+//!
+//! `--mock` swaps the PJRT model for the deterministic in-process mock
+//! (useful to exercise the harness without artifacts). The molecule
+//! count is scaled down from the paper's 5007 to fit the single-core
+//! testbed; EXPERIMENTS.md records the scaling.
+
+use anyhow::Result;
+use retroserve::benchkit::{encode_groups, load_test_pairs, row, warmup_model, Flags};
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::StepModel;
+use retroserve::runtime::PjrtModel;
+use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::{mean, stddev};
+
+fn run_algo(
+    model: &dyn StepModel,
+    decoder: &dyn Decoder,
+    groups: &[Vec<Vec<i32>>],
+    k: usize,
+) -> (f64, DecodeStats) {
+    let mut stats = DecodeStats::default();
+    let t0 = std::time::Instant::now();
+    for g in groups {
+        decoder
+            .generate(model, g, k, &mut stats)
+            .expect("decode failed");
+    }
+    (t0.elapsed().as_secs_f64(), stats)
+}
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let n = flags.usize_or("n", 200);
+    let k = flags.usize_or("k", 10);
+    let runs = flags.usize_or("runs", 1);
+    let batches: Vec<usize> = flags
+        .str_or("batches", "1,4,8,16,32")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+
+    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+    let model: Box<dyn StepModel> = if flags.has("mock") {
+        Box::new(MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }))
+    } else {
+        Box::new(PjrtModel::load(&art)?)
+    };
+    let pairs = load_test_pairs(&art, n)?;
+    let srcs: Vec<String> = pairs.iter().map(|p| p.product.clone()).collect();
+    eprintln!(
+        "table1: {} molecules, K={}, batches {:?}, runs {} (paper: 5007 molecules)",
+        srcs.len(),
+        k,
+        batches,
+        runs
+    );
+    warmup_model(model.as_ref(), &vocab, &srcs[0]);
+
+    // algo name -> per-B (wall mean, wall std, calls, eff batch, acceptance)
+    let algos: Vec<(&str, Box<dyn Fn(usize) -> Box<dyn Decoder>>)> = vec![
+        ("Beam search", Box::new(|_b| Box::new(BeamSearch::vanilla()))),
+        ("Beam search optimized", Box::new(|_b| Box::new(BeamSearch::optimized()))),
+        ("HSBS", Box::new(|b| Box::new(Hsbs::for_batch_size(b)))),
+        ("MSBS", Box::new(|_b| Box::new(Msbs::default()))),
+    ];
+
+    let mut wall: Vec<Vec<String>> = vec![Vec::new(); algos.len()];
+    let mut calls: Vec<Vec<String>> = vec![Vec::new(); algos.len()];
+    let mut eff: Vec<Vec<String>> = vec![Vec::new(); algos.len()];
+    let mut acc: Vec<Vec<String>> = vec![Vec::new(); algos.len()];
+
+    for &b in &batches {
+        let groups = encode_groups(&vocab, &srcs, b, model.max_src());
+        for (ai, (name, make)) in algos.iter().enumerate() {
+            let decoder = make(b);
+            // warm the buckets this (algo, B) combination needs
+            let _ = run_algo(model.as_ref(), decoder.as_ref(), &groups[..1.min(groups.len())], k);
+            let mut times = Vec::new();
+            let mut last_stats = DecodeStats::default();
+            for _ in 0..runs {
+                let (t, s) = run_algo(model.as_ref(), decoder.as_ref(), &groups, k);
+                times.push(t);
+                last_stats = s;
+            }
+            eprintln!(
+                "  B={b:<3} {name:<24} {:.2}s calls={} eff={:.0} acc={:.0}%",
+                mean(&times),
+                last_stats.model_calls,
+                last_stats.avg_effective_batch(),
+                last_stats.acceptance_rate() * 100.0
+            );
+            wall[ai].push(format!("{:.2} ± {:.2}", mean(&times), stddev(&times)));
+            calls[ai].push(format!("{}", last_stats.model_calls));
+            eff[ai].push(format!("{:.0}", last_stats.avg_effective_batch()));
+            acc[ai].push(if name.contains("SBS") {
+                format!("{:.0}", last_stats.acceptance_rate() * 100.0)
+            } else {
+                "-".to_string()
+            });
+        }
+    }
+
+    let header: Vec<String> = batches.iter().map(|b| format!("B={b}")).collect();
+    println!("\n(A) Decoding wall time (K={k}), seconds");
+    println!("{}", row("", &header));
+    for (ai, (name, _)) in algos.iter().enumerate() {
+        println!("{}", row(name, &wall[ai]));
+    }
+    println!("\n(B) Model calls (K={k})");
+    println!("{}", row("", &header));
+    for (ai, (name, _)) in algos.iter().enumerate() {
+        println!("{}", row(name, &calls[ai]));
+    }
+    println!("\n(C) Average effective batch size (K={k})");
+    println!("{}", row("", &header));
+    for (ai, (name, _)) in algos.iter().enumerate() {
+        println!("{}", row(name, &eff[ai]));
+    }
+    println!("\n(D) Acceptance rate (K={k}), %");
+    println!("{}", row("", &header));
+    for (ai, (name, _)) in algos.iter().enumerate() {
+        if acc[ai].iter().any(|s| s != "-") {
+            println!("{}", row(name, &acc[ai]));
+        }
+    }
+    Ok(())
+}

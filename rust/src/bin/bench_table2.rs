@@ -1,0 +1,138 @@
+//! Table 2 harness: single-step top-N accuracy and invalid-SMILES rate
+//! per decoding strategy (BS / HSBS / MSBS; BS-optimized is
+//! accuracy-identical to BS by construction and can be added with
+//! `--with-bs-opt`).
+//!
+//! Accuracy: a prediction hits when its canonical sorted reactant set
+//! equals the ground truth. Invalid%: the share of rank-N hypotheses
+//! that fail SMILES parsing/valence validation.
+//!
+//! `bench_table2 [--artifacts DIR] [--n 500] [--k 10] [--b 8] [--mock]`
+
+use anyhow::Result;
+use retroserve::benchkit::{load_test_pairs, row, warmup_model, Flags};
+use retroserve::chem;
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::StepModel;
+use retroserve::runtime::PjrtModel;
+use retroserve::tokenizer::Vocab;
+
+struct Outcome {
+    /// per sample: rank (0-based) of the first hit, if any
+    hit_rank: Vec<Option<usize>>,
+    /// [rank] -> (invalid count, total count)
+    invalid: Vec<(usize, usize)>,
+}
+
+fn eval_algo(
+    model: &dyn StepModel,
+    decoder: &dyn Decoder,
+    vocab: &Vocab,
+    pairs: &[retroserve::benchkit::TestPair],
+    b: usize,
+    k: usize,
+) -> Outcome {
+    let mut hit_rank = Vec::with_capacity(pairs.len());
+    let mut invalid = vec![(0usize, 0usize); k];
+    let mut stats = DecodeStats::default();
+    for chunk in pairs.chunks(b) {
+        let srcs: Vec<Vec<i32>> = chunk.iter().map(|p| vocab.encode(&p.product, true)).collect();
+        let outs = decoder.generate(model, &srcs, k, &mut stats).expect("decode");
+        for (p, out) in chunk.iter().zip(outs.iter()) {
+            let mut hit = None;
+            for (rank, h) in out.hyps.iter().take(k).enumerate() {
+                invalid[rank].1 += 1;
+                let text = vocab.decode(h.body());
+                let mut comps = Vec::new();
+                let mut ok = h.finished();
+                for part in chem::split_components(&text) {
+                    match chem::canonicalize(part) {
+                        Ok(c) => comps.push(c),
+                        Err(_) => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok || comps.is_empty() {
+                    invalid[rank].0 += 1;
+                    continue;
+                }
+                comps.sort();
+                if hit.is_none() && comps.join(".") == p.reactants {
+                    hit = Some(rank);
+                }
+            }
+            hit_rank.push(hit);
+        }
+    }
+    Outcome { hit_rank, invalid }
+}
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let n = flags.usize_or("n", 500);
+    let k = flags.usize_or("k", 10);
+    let b = flags.usize_or("b", 8);
+
+    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+    let model: Box<dyn StepModel> = if flags.has("mock") {
+        Box::new(MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }))
+    } else {
+        Box::new(PjrtModel::load(&art)?)
+    };
+    let pairs = load_test_pairs(&art, n)?;
+    eprintln!("table2: {} samples, K={k}, batch {b} (paper: 5007)", pairs.len());
+    warmup_model(model.as_ref(), &vocab, &pairs[0].product);
+
+    let mut algos: Vec<(&str, Box<dyn Decoder>)> = vec![
+        ("BEAM SEARCH", Box::new(BeamSearch::vanilla())),
+        ("HSBS", Box::new(Hsbs::for_batch_size(b))),
+        ("MSBS", Box::new(Msbs::default())),
+    ];
+    if flags.has("with-bs-opt") {
+        algos.insert(1, ("BEAM SEARCH OPT", Box::new(BeamSearch::optimized())));
+    }
+
+    let ranks = [1usize, 3, 5, 10];
+    let mut acc_rows: Vec<(String, Vec<String>)> = Vec::new();
+    let mut inv_rows: Vec<(String, Vec<String>)> = Vec::new();
+    for (name, decoder) in &algos {
+        let t0 = std::time::Instant::now();
+        let o = eval_algo(model.as_ref(), decoder.as_ref(), &vocab, &pairs, b, k);
+        let total = o.hit_rank.len() as f64;
+        let accs: Vec<String> = ranks
+            .iter()
+            .map(|&r| {
+                let hits = o.hit_rank.iter().filter(|h| h.map(|x| x < r).unwrap_or(false)).count();
+                format!("{:.2}", 100.0 * hits as f64 / total)
+            })
+            .collect();
+        let invs: Vec<String> = ranks
+            .iter()
+            .map(|&r| {
+                let (bad, tot) = o.invalid[r - 1];
+                format!("{:.1}", 100.0 * bad as f64 / tot.max(1) as f64)
+            })
+            .collect();
+        eprintln!("  {name:<18} top-1 {} ({:.1}s)", accs[0], t0.elapsed().as_secs_f64());
+        acc_rows.push((name.to_string(), accs));
+        inv_rows.push((name.to_string(), invs));
+    }
+
+    let header: Vec<String> = ranks.iter().map(|r| format!("Top-{r}")).collect();
+    println!("\nAccuracy, % (N={} samples)", pairs.len());
+    println!("{}", row("", &header));
+    for (name, cols) in &acc_rows {
+        println!("{}", row(name, cols));
+    }
+    let header2: Vec<String> = ranks.iter().map(|r| format!("Pred. {r}")).collect();
+    println!("\nInvalid SMILES, %");
+    println!("{}", row("", &header2));
+    for (name, cols) in &inv_rows {
+        println!("{}", row(name, cols));
+    }
+    Ok(())
+}

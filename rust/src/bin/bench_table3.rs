@@ -1,0 +1,169 @@
+//! Table 3 harness: multi-step planning under deadlines —
+//! BS vs MSBS as the single-step engine inside DFS and Retro\*.
+//!
+//! Reports, per (algorithm, deadline) condition: solved molecules,
+//! common solved molecules, average time per solved molecule, average
+//! time per common solved molecule, and average algorithm iterations
+//! per common solved molecule — the exact rows of the paper's Table 3.
+//!
+//! `bench_table3 [--artifacts DIR] [--n 300] [--deadline-ms 5000]
+//! [--deadline2-ms 15000] [--k 10] [--max-iterations 500] [--mock]
+//! [--skip-dfs] [--oracle]`
+//!
+//! Defaults scale the paper's 10k molecules down for the single-core
+//! testbed; the deadline flags let the run mirror the paper's 5 s / 15 s.
+
+use anyhow::Result;
+use retroserve::benchkit::{load_queries, warmup_model, Flags};
+use retroserve::decoding::make_decoder;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::StepModel;
+use retroserve::runtime::PjrtModel;
+use retroserve::search::policy::{ModelPolicy, OraclePolicy};
+use retroserve::search::{dfs::Dfs, retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock};
+use retroserve::tokenizer::Vocab;
+
+struct CondResult {
+    solved: Vec<bool>,
+    wall: Vec<f64>,
+    iterations: Vec<usize>,
+}
+
+fn make_model(flags: &Flags, art: &std::path::Path, vocab: &Vocab) -> Result<Box<dyn StepModel>> {
+    Ok(if flags.has("mock") {
+        Box::new(MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }))
+    } else {
+        Box::new(PjrtModel::load(art)?)
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_condition(
+    flags: &Flags,
+    art: &std::path::Path,
+    vocab: &Vocab,
+    stock: &Stock,
+    queries: &[retroserve::benchkit::QueryRow],
+    planner: &dyn Planner,
+    decoder_name: &str,
+    limits: &SearchLimits,
+) -> Result<CondResult> {
+    // fresh model + policy per condition: no cache bleed between rows
+    let mut solved = Vec::with_capacity(queries.len());
+    let mut wall = Vec::with_capacity(queries.len());
+    let mut iterations = Vec::with_capacity(queries.len());
+    let oracle = flags.has("oracle");
+    let policy: Box<dyn ExpansionPolicy> = if oracle {
+        Box::new(OraclePolicy::new())
+    } else {
+        let model = make_model(flags, art, vocab)?;
+        warmup_model(model.as_ref(), vocab, &queries[0].smiles);
+        Box::new(ModelPolicy::new(model, make_decoder(decoder_name, 1)?, vocab.clone()))
+    };
+    for (i, q) in queries.iter().enumerate() {
+        let r = planner.solve(&q.smiles, policy.as_ref(), stock, limits)?;
+        solved.push(r.solved);
+        wall.push(r.wall_secs);
+        iterations.push(r.iterations);
+        if (i + 1) % 50 == 0 {
+            eprintln!(
+                "    {}/{} solved so far {}",
+                i + 1,
+                queries.len(),
+                solved.iter().filter(|&&s| s).count()
+            );
+        }
+    }
+    Ok(CondResult { solved, wall, iterations })
+}
+
+fn report(label: &str, bs: &CondResult, msbs: &CondResult) {
+    let n = bs.solved.len();
+    let count = |r: &CondResult| r.solved.iter().filter(|&&s| s).count();
+    let common: Vec<usize> = (0..n).filter(|&i| bs.solved[i] && msbs.solved[i]).collect();
+    let avg_solved = |r: &CondResult| {
+        let xs: Vec<f64> = (0..n).filter(|&i| r.solved[i]).map(|i| r.wall[i]).collect();
+        retroserve::util::stats::mean(&xs)
+    };
+    let avg_common_time = |r: &CondResult| {
+        let xs: Vec<f64> = common.iter().map(|&i| r.wall[i]).collect();
+        retroserve::util::stats::mean(&xs)
+    };
+    let avg_common_iters = |r: &CondResult| {
+        let xs: Vec<f64> = common.iter().map(|&i| r.iterations[i] as f64).collect();
+        retroserve::util::stats::mean(&xs)
+    };
+    println!("\n{label:<50} {:>10} {:>10}", "BS", "MSBS");
+    println!("{:<50} {:>10} {:>10}", "SOLVED MOLECULES", count(bs), count(msbs));
+    println!("{:<50} {:>21}", "COMMON SOLVED MOLECULES", common.len());
+    println!(
+        "{:<50} {:>10.2} {:>10.2}",
+        "AVG. TIME PER SOLVED MOLECULE, S",
+        avg_solved(bs),
+        avg_solved(msbs)
+    );
+    println!(
+        "{:<50} {:>10.2} {:>10.2}",
+        "AVG. TIME PER COMMON SOLVED MOLECULE, S",
+        avg_common_time(bs),
+        avg_common_time(msbs)
+    );
+    println!(
+        "{:<50} {:>10.2} {:>10.2}",
+        "AVG. ALG. ITERATIONS PER COMMON SOLVED MOLECULE",
+        avg_common_iters(bs),
+        avg_common_iters(msbs)
+    );
+}
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let n = flags.usize_or("n", 300);
+    let d1 = flags.usize_or("deadline-ms", 5000);
+    let d2 = flags.usize_or("deadline2-ms", 15000);
+    let k = flags.usize_or("k", 10);
+    let max_iter = flags.usize_or("max-iterations", 500);
+
+    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+    let stock = Stock::load(art.join("stock.txt"))?;
+    let queries = load_queries(&art, n)?;
+    eprintln!(
+        "table3: {} queries, deadlines {}ms/{}ms, k={k} (paper: 10000 queries, 5s/15s)",
+        queries.len(),
+        d1,
+        d2
+    );
+
+    let limits = |ms: usize| SearchLimits {
+        deadline: std::time::Duration::from_millis(ms as u64),
+        max_iterations: max_iter,
+        max_depth: 5,
+        expansions_per_step: k,
+    };
+
+    // DFS, deadline 1
+    if !flags.has("skip-dfs") {
+        eprintln!("condition: DFS {}ms BS", d1);
+        let bs = run_condition(&flags, &art, &vocab, &stock, &queries, &Dfs, "bs", &limits(d1))?;
+        eprintln!("condition: DFS {}ms MSBS", d1);
+        let ms = run_condition(&flags, &art, &vocab, &stock, &queries, &Dfs, "msbs", &limits(d1))?;
+        report(&format!("DFS, TIME LIMIT {:.0} SECONDS", d1 as f64 / 1e3), &bs, &ms);
+    }
+
+    // Retro*, deadline 1
+    eprintln!("condition: Retro* {}ms BS", d1);
+    let bs1 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "bs", &limits(d1))?;
+    eprintln!("condition: Retro* {}ms MSBS", d1);
+    let ms1 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "msbs", &limits(d1))?;
+    report(&format!("RETRO*, TIME LIMIT {:.0} SECONDS", d1 as f64 / 1e3), &bs1, &ms1);
+
+    // Retro*, deadline 2
+    eprintln!("condition: Retro* {}ms BS", d2);
+    let bs2 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "bs", &limits(d2))?;
+    eprintln!("condition: Retro* {}ms MSBS", d2);
+    let ms2 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "msbs", &limits(d2))?;
+    report(&format!("RETRO*, TIME LIMIT {:.0} SECONDS", d2 as f64 / 1e3), &bs2, &ms2);
+
+    Ok(())
+}

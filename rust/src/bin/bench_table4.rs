@@ -1,0 +1,106 @@
+//! Table 4 harness: forcing batching into Retro\* via beam width.
+//!
+//! Conditions (matching the paper's rows): BS at Bw=1, MSBS at Bw=1,
+//! BS-optimized at Bw=16, MSBS at Bw=16 — reporting solved-molecule
+//! percentage and total wall time, at two deadlines.
+//!
+//! `bench_table4 [--artifacts DIR] [--n 300] [--deadline-ms 5000]
+//! [--deadline2-ms 15000] [--k 10] [--max-iterations 500] [--mock]`
+
+use anyhow::Result;
+use retroserve::benchkit::{load_queries, warmup_model, Flags};
+use retroserve::decoding::make_decoder;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::StepModel;
+use retroserve::runtime::PjrtModel;
+use retroserve::search::policy::ModelPolicy;
+use retroserve::search::{retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock};
+use retroserve::tokenizer::Vocab;
+
+fn run_condition(
+    flags: &Flags,
+    art: &std::path::Path,
+    vocab: &Vocab,
+    stock: &Stock,
+    queries: &[retroserve::benchkit::QueryRow],
+    decoder_name: &str,
+    bw: usize,
+    limits: &SearchLimits,
+) -> Result<(f64, f64)> {
+    let model: Box<dyn StepModel> = if flags.has("mock") {
+        Box::new(MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }))
+    } else {
+        Box::new(PjrtModel::load(art)?)
+    };
+    warmup_model(model.as_ref(), vocab, &queries[0].smiles);
+    let policy: Box<dyn ExpansionPolicy> =
+        Box::new(ModelPolicy::new(model, make_decoder(decoder_name, bw)?, vocab.clone()));
+    let planner = RetroStar::new(bw);
+    let t0 = std::time::Instant::now();
+    let mut solved = 0usize;
+    for (i, q) in queries.iter().enumerate() {
+        let r = planner.solve(&q.smiles, policy.as_ref(), stock, limits)?;
+        solved += r.solved as usize;
+        if (i + 1) % 50 == 0 {
+            eprintln!("    {}/{} solved {}", i + 1, queries.len(), solved);
+        }
+    }
+    let total_h = t0.elapsed().as_secs_f64() / 3600.0;
+    Ok((100.0 * solved as f64 / queries.len() as f64, total_h))
+}
+
+fn main() -> Result<()> {
+    let flags = Flags::parse();
+    let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let n = flags.usize_or("n", 300);
+    let d1 = flags.usize_or("deadline-ms", 5000);
+    let d2 = flags.usize_or("deadline2-ms", 15000);
+    let k = flags.usize_or("k", 10);
+    let max_iter = flags.usize_or("max-iterations", 500);
+    let bw_wide = flags.usize_or("bw", 16);
+
+    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+    let stock = Stock::load(art.join("stock.txt"))?;
+    let queries = load_queries(&art, n)?;
+    eprintln!(
+        "table4: {} queries, Retro*, Bw 1 vs {}, deadlines {}ms/{}ms (paper: 10000, 5s/15s)",
+        queries.len(),
+        bw_wide,
+        d1,
+        d2
+    );
+
+    let limits = |ms: usize| SearchLimits {
+        deadline: std::time::Duration::from_millis(ms as u64),
+        max_iterations: max_iter,
+        max_depth: 5,
+        expansions_per_step: k,
+    };
+
+    // (label, decoder, beam width)
+    let conditions: Vec<(&str, &str, usize)> = vec![
+        ("BS", "bs", 1),
+        ("MSBS", "msbs", 1),
+        ("BS OPTIMIZED", "bs-opt", bw_wide),
+        ("MSBS", "msbs", bw_wide),
+    ];
+
+    for (section, dl) in [("(A)", d1), ("(B)", d2)] {
+        println!(
+            "\n{section} {}s LIMIT INFERENCE {:<14} {:>4} {:>22} {:>16}",
+            dl as f64 / 1e3,
+            "",
+            "Bw",
+            "Solved molecules, %",
+            "Total time, h"
+        );
+        for (label, dec, bw) in &conditions {
+            eprintln!("condition: {label} Bw={bw} deadline {dl}ms");
+            let (pct, hours) = run_condition(
+                &flags, &art, &vocab, &stock, &queries, dec, *bw, &limits(dl),
+            )?;
+            println!("{:<32} {:>4} {:>22.2} {:>16.3}", label, bw, pct, hours);
+        }
+    }
+    Ok(())
+}

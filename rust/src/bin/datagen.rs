@@ -1,0 +1,157 @@
+//! Data generation entrypoint.
+//!
+//! Writes the SynthChem data bundle into `artifacts/`:
+//!
+//! * `stock.txt` — building-block stock (one canonical SMILES per line);
+//! * `dataset_train.tsv` — `src \t tgt` single-step pairs (augmented);
+//! * `dataset_test.tsv` — `src \t tgt \t product \t reactants \t template`;
+//! * `queries10k.tsv` — `smiles \t depth \t solvable_hint` planning queries;
+//! * `vocab.json` — atomwise token vocabulary (shared with Python);
+//! * `data_manifest.json` — config echo + corpus statistics.
+//!
+//! Usage: `datagen [--out DIR] [--seed N] [--train N] [--test N]
+//! [--queries N] [--stock N] [--aug N] [--quick]`
+
+use retroserve::jsonx::Json;
+use retroserve::synthchem::gen::{generate, GenConfig};
+use retroserve::tokenizer::Vocab;
+use std::io::Write;
+use std::path::PathBuf;
+
+fn parse_args() -> (PathBuf, GenConfig) {
+    let mut out = PathBuf::from("artifacts");
+    let mut cfg = GenConfig::default();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> String {
+            *i += 1;
+            args.get(*i).unwrap_or_else(|| panic!("missing value for {}", args[*i - 1])).clone()
+        };
+        match args[i].as_str() {
+            "--out" => out = PathBuf::from(take(&mut i)),
+            "--seed" => cfg.seed = take(&mut i).parse().expect("seed"),
+            "--train" => cfg.train_reactions = take(&mut i).parse().expect("train"),
+            "--test" => cfg.test_reactions = take(&mut i).parse().expect("test"),
+            "--queries" => cfg.queries = take(&mut i).parse().expect("queries"),
+            "--stock" => cfg.stock_size = take(&mut i).parse().expect("stock"),
+            "--aug" => cfg.augmentation = take(&mut i).parse().expect("aug"),
+            "--quick" => {
+                cfg.stock_size = 2000;
+                cfg.shadow_blocks = 300;
+                cfg.train_reactions = 1500;
+                cfg.test_reactions = 500;
+                cfg.queries = 1000;
+            }
+            other => panic!("unknown argument {other}"),
+        }
+        i += 1;
+    }
+    (out, cfg)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (out, cfg) = parse_args();
+    std::fs::create_dir_all(&out)?;
+    eprintln!(
+        "datagen: stock={} train={} (x{} aug) test={} queries={} seed={}",
+        cfg.stock_size, cfg.train_reactions, cfg.augmentation, cfg.test_reactions, cfg.queries,
+        cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let bundle = generate(&cfg);
+    eprintln!(
+        "generated in {:.1}s: stock={} train={} test={} queries={}",
+        t0.elapsed().as_secs_f64(),
+        bundle.stock.len(),
+        bundle.train.len(),
+        bundle.test.len(),
+        bundle.queries.len()
+    );
+
+    // stock
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out.join("stock.txt"))?);
+    for s in &bundle.stock {
+        writeln!(f, "{s}")?;
+    }
+    drop(f);
+
+    // train/test pairs
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out.join("dataset_train.tsv"))?);
+    for p in &bundle.train {
+        writeln!(f, "{}\t{}", p.src, p.tgt)?;
+    }
+    drop(f);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out.join("dataset_test.tsv"))?);
+    for p in &bundle.test {
+        writeln!(
+            f,
+            "{}\t{}\t{}\t{}\t{}",
+            p.src,
+            p.tgt,
+            p.product_canonical,
+            p.reactants_canonical,
+            p.template.name()
+        )?;
+    }
+    drop(f);
+
+    // queries
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out.join("queries10k.tsv"))?);
+    for q in &bundle.queries {
+        writeln!(f, "{}\t{}\t{}", q.smiles, q.depth, q.solvable_hint as u8)?;
+    }
+    drop(f);
+
+    // vocabulary over all strings the model will ever see
+    let corpus: Vec<&str> = bundle
+        .train
+        .iter()
+        .flat_map(|p| [p.src.as_str(), p.tgt.as_str()])
+        .chain(bundle.test.iter().flat_map(|p| [p.src.as_str(), p.tgt.as_str()]))
+        .chain(bundle.stock.iter().map(|s| s.as_str()))
+        .chain(bundle.queries.iter().map(|q| q.smiles.as_str()))
+        .collect();
+    let vocab = Vocab::build(corpus);
+    std::fs::write(out.join("vocab.json"), vocab.to_json().to_string())?;
+
+    // statistics for the manifest (drives MAX_LEN choices downstream)
+    let tok_len = |s: &str| retroserve::tokenizer::tokenize(s).len();
+    let mut src_max = 0usize;
+    let mut tgt_max = 0usize;
+    let mut src_sum = 0usize;
+    let mut tgt_sum = 0usize;
+    for p in bundle.train.iter().chain(bundle.test.iter()) {
+        let a = tok_len(&p.src);
+        let b = tok_len(&p.tgt);
+        src_max = src_max.max(a);
+        tgt_max = tgt_max.max(b);
+        src_sum += a;
+        tgt_sum += b;
+    }
+    let npairs = bundle.train.len() + bundle.test.len();
+    let manifest = Json::obj(vec![
+        ("seed", Json::num(cfg.seed as f64)),
+        ("stock", Json::num(bundle.stock.len() as f64)),
+        ("train_pairs", Json::num(bundle.train.len() as f64)),
+        ("test_pairs", Json::num(bundle.test.len() as f64)),
+        ("queries", Json::num(bundle.queries.len() as f64)),
+        ("augmentation", Json::num(cfg.augmentation as f64)),
+        ("vocab_size", Json::num(vocab.len() as f64)),
+        ("src_tokens_max", Json::num(src_max as f64)),
+        ("tgt_tokens_max", Json::num(tgt_max as f64)),
+        ("src_tokens_mean", Json::num(src_sum as f64 / npairs.max(1) as f64)),
+        ("tgt_tokens_mean", Json::num(tgt_sum as f64 / npairs.max(1) as f64)),
+    ]);
+    std::fs::write(out.join("data_manifest.json"), manifest.to_string())?;
+    eprintln!(
+        "vocab={} src_max={} tgt_max={} src_mean={:.1} tgt_mean={:.1}",
+        vocab.len(),
+        src_max,
+        tgt_max,
+        src_sum as f64 / npairs.max(1) as f64,
+        tgt_sum as f64 / npairs.max(1) as f64
+    );
+    eprintln!("datagen: wrote artifacts to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Morgan-style canonical atom ranking.
+//!
+//! Canonical ranks are computed by iterative partition refinement over
+//! atom invariants, with deterministic tie-breaking (the classic
+//! canonical-labelling loop): refine until stable; if ties remain,
+//! artificially single out the lowest-index atom in the first tied class
+//! and refine again. The result is a permutation `rank[atom] ∈ 0..n`
+//! that is invariant under graph isomorphism, which [`super::writer`]
+//! turns into a canonical SMILES string.
+
+use super::Molecule;
+
+/// Initial atom invariant: everything locally observable.
+fn initial_invariant(m: &Molecule, v: usize, ring_atom: &[bool]) -> u64 {
+    let a = &m.atoms[v];
+    let h = super::valence::total_h(m, v).unwrap_or(0) as u64;
+    let mut x: u64 = a.element.atomic_number() as u64;
+    x = x * 2 + a.aromatic as u64;
+    x = x * 16 + (a.charge as i64 + 8) as u64;
+    x = x * 16 + h;
+    x = x * 8 + m.degree(v) as u64;
+    x = x * 2 + ring_atom[v] as u64;
+    x = x * 8 + super::valence::bond_order_sum_x2(m, v) as u64 % 8;
+    x
+}
+
+/// Compute canonical ranks: `rank[v]` in `[0, n)`, all distinct.
+pub fn canonical_ranks(m: &Molecule) -> Vec<usize> {
+    let n = m.num_atoms();
+    if n == 0 {
+        return Vec::new();
+    }
+    let ring_atom = m.ring_atoms();
+    // Start from sorted initial invariants -> dense ranks.
+    let inv: Vec<u64> = (0..n).map(|v| initial_invariant(m, v, &ring_atom)).collect();
+    let mut rank = dense_ranks_u64(&inv);
+
+    loop {
+        rank = refine(m, rank);
+        let classes = num_classes(&rank);
+        if classes == n {
+            return rank;
+        }
+        // Tie-break: find the first class with >1 member (by class rank),
+        // demote the member with the lowest atom index, refine again.
+        let mut chosen: Option<usize> = None;
+        let mut best_class = usize::MAX;
+        for v in 0..n {
+            let mut count = 0;
+            let mut lowest = usize::MAX;
+            if rank[v] < best_class {
+                for u in 0..n {
+                    if rank[u] == rank[v] {
+                        count += 1;
+                        lowest = lowest.min(u);
+                    }
+                }
+                if count > 1 {
+                    best_class = rank[v];
+                    chosen = Some(lowest);
+                }
+            }
+        }
+        let c = chosen.expect("ties imply a multi-member class");
+        // Give the chosen atom a strictly smaller rank than its classmates:
+        // everyone maps to 2r+1, the chosen atom to 2r.
+        for r in rank.iter_mut() {
+            *r = *r * 2 + 1;
+        }
+        rank[c] -= 1;
+        rank = dense_ranks_usize(&rank);
+    }
+}
+
+/// One sweep of neighborhood refinement until the partition stops
+/// splitting.
+fn refine(m: &Molecule, mut rank: Vec<usize>) -> Vec<usize> {
+    let n = m.num_atoms();
+    loop {
+        // Signature: own rank + sorted (bond order, neighbor rank) pairs.
+        let mut sigs: Vec<(usize, Vec<(u8, usize)>)> = Vec::with_capacity(n);
+        for v in 0..n {
+            let mut nb: Vec<(u8, usize)> = m
+                .neighbors(v)
+                .iter()
+                .map(|&(u, bi)| (m.bonds[bi].order.valence_x2(), rank[u]))
+                .collect();
+            nb.sort_unstable();
+            sigs.push((rank[v], nb));
+        }
+        let new_rank = dense_ranks_by(&sigs);
+        let stable = new_rank == rank;
+        rank = new_rank;
+        if stable {
+            return rank;
+        }
+    }
+}
+
+fn num_classes(rank: &[usize]) -> usize {
+    let mut seen = vec![false; rank.len()];
+    let mut c = 0;
+    for &r in rank {
+        if !seen[r] {
+            seen[r] = true;
+            c += 1;
+        }
+    }
+    c
+}
+
+fn dense_ranks_u64(keys: &[u64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by_key(|&i| keys[i]);
+    let mut rank = vec![0usize; keys.len()];
+    let mut r = 0;
+    for w in 0..idx.len() {
+        if w > 0 && keys[idx[w]] != keys[idx[w - 1]] {
+            r += 1;
+        }
+        rank[idx[w]] = r;
+    }
+    rank
+}
+
+fn dense_ranks_usize(keys: &[usize]) -> Vec<usize> {
+    let as64: Vec<u64> = keys.iter().map(|&k| k as u64).collect();
+    dense_ranks_u64(&as64)
+}
+
+fn dense_ranks_by<T: Ord>(keys: &[T]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[a].cmp(&keys[b]));
+    let mut rank = vec![0usize; keys.len()];
+    let mut r = 0;
+    for w in 0..idx.len() {
+        if w > 0 && keys[idx[w]] != keys[idx[w - 1]] {
+            r += 1;
+        }
+        rank[idx[w]] = r;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::parse_smiles;
+
+    #[test]
+    fn ranks_are_permutation() {
+        for s in ["CCO", "c1ccccc1", "CC(C)(C)OC(=O)N", "c1ccc2ccccc2c1"] {
+            let m = parse_smiles(s).unwrap();
+            let mut r = canonical_ranks(&m);
+            r.sort_unstable();
+            assert_eq!(r, (0..m.num_atoms()).collect::<Vec<_>>(), "{s}");
+        }
+    }
+
+    #[test]
+    fn symmetric_atoms_break_ties_deterministically() {
+        // benzene: all atoms equivalent; ranks still a permutation and
+        // stable across calls.
+        let m = parse_smiles("c1ccccc1").unwrap();
+        assert_eq!(canonical_ranks(&m), canonical_ranks(&m));
+    }
+
+    #[test]
+    fn distinguishes_inequivalent_atoms() {
+        // In CCO the two carbons are inequivalent; check the O always has
+        // a distinct rank.
+        let m = parse_smiles("CCO").unwrap();
+        let r = canonical_ranks(&m);
+        assert_ne!(r[0], r[1]);
+        assert_ne!(r[1], r[2]);
+    }
+}

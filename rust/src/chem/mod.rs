@@ -1,0 +1,438 @@
+//! # chem — a from-scratch SMILES/molecular-graph substrate
+//!
+//! The request path needs chemistry primitives (parsing model output,
+//! validity checks, canonicalization for stock lookup and deduplication)
+//! and the build image ships no RDKit, so this module implements the
+//! subset of cheminformatics the system needs:
+//!
+//! * a SMILES parser ([`parse_smiles`]) for organic-subset atoms,
+//!   brackets with charge/explicit-H, branches, ring closures and
+//!   aromatic lowercase notation;
+//! * a molecular graph ([`Molecule`]) with valence/implicit-hydrogen
+//!   accounting ([`valence`]);
+//! * Morgan-style canonical ranking ([`canon`]) and a canonical/rooted
+//!   SMILES writer ([`writer`]) — the pair gives us canonical SMILES
+//!   (`canonical_smiles`) and R-SMILES-style root-aligned augmentation
+//!   (`rooted_smiles`).
+//!
+//! Scope note: no stereochemistry, no isotopes — the SynthChem reaction
+//! world (see [`crate::synthchem`]) does not generate them, matching how
+//! the paper's USPTO-50K preprocessing strips stereo-unfriendly entries.
+
+pub mod canon;
+pub mod parser;
+pub mod valence;
+pub mod writer;
+
+use std::fmt;
+
+/// Chemical elements supported by the SynthChem world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Element {
+    B,
+    C,
+    N,
+    O,
+    S,
+    P,
+    F,
+    Cl,
+    Br,
+    I,
+}
+
+impl Element {
+    /// Standard atomic symbol.
+    pub fn symbol(self) -> &'static str {
+        match self {
+            Element::B => "B",
+            Element::C => "C",
+            Element::N => "N",
+            Element::O => "O",
+            Element::S => "S",
+            Element::P => "P",
+            Element::F => "F",
+            Element::Cl => "Cl",
+            Element::Br => "Br",
+            Element::I => "I",
+        }
+    }
+
+    /// Allowed total valences (bond order sum + implicit H), neutral atom.
+    pub fn valences(self) -> &'static [u8] {
+        match self {
+            Element::B => &[3],
+            Element::C => &[4],
+            Element::N => &[3],
+            Element::O => &[2],
+            Element::S => &[2, 4, 6],
+            Element::P => &[3, 5],
+            Element::F | Element::Cl | Element::Br | Element::I => &[1],
+        }
+    }
+
+    /// Whether the element may be written in aromatic (lowercase) form.
+    pub fn can_be_aromatic(self) -> bool {
+        matches!(self, Element::B | Element::C | Element::N | Element::O | Element::S | Element::P)
+    }
+
+    /// Atomic number (used as a canonical-invariant component).
+    pub fn atomic_number(self) -> u8 {
+        match self {
+            Element::B => 5,
+            Element::C => 6,
+            Element::N => 7,
+            Element::O => 8,
+            Element::P => 15,
+            Element::S => 16,
+            Element::F => 9,
+            Element::Cl => 17,
+            Element::Br => 35,
+            Element::I => 53,
+        }
+    }
+}
+
+/// Bond order. Aromatic bonds participate in valence as 1.5 (see
+/// [`valence`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BondOrder {
+    Single,
+    Double,
+    Triple,
+    Aromatic,
+}
+
+impl BondOrder {
+    /// Contribution to an atom's valence, doubled to stay integral
+    /// (Single=2, Double=4, Triple=6, Aromatic=3).
+    pub fn valence_x2(self) -> u8 {
+        match self {
+            BondOrder::Single => 2,
+            BondOrder::Double => 4,
+            BondOrder::Triple => 6,
+            BondOrder::Aromatic => 3,
+        }
+    }
+}
+
+/// An atom node in the molecular graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Atom {
+    pub element: Element,
+    pub aromatic: bool,
+    pub charge: i8,
+    /// Hydrogen count if fixed by a bracket spec (e.g. `[nH]`).
+    pub explicit_h: Option<u8>,
+}
+
+impl Atom {
+    pub fn new(element: Element) -> Self {
+        Self { element, aromatic: false, charge: 0, explicit_h: None }
+    }
+
+    pub fn aromatic(element: Element) -> Self {
+        Self { element, aromatic: true, charge: 0, explicit_h: None }
+    }
+}
+
+/// An edge in the molecular graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bond {
+    pub a: usize,
+    pub b: usize,
+    pub order: BondOrder,
+}
+
+impl Bond {
+    /// The endpoint that is not `v`.
+    pub fn other(&self, v: usize) -> usize {
+        if self.a == v {
+            self.b
+        } else {
+            self.a
+        }
+    }
+}
+
+/// A connected molecular graph.
+#[derive(Clone, Debug, Default)]
+pub struct Molecule {
+    pub atoms: Vec<Atom>,
+    pub bonds: Vec<Bond>,
+    /// Adjacency: for every atom, `(neighbor_atom, bond_index)` pairs in
+    /// insertion order.
+    adj: Vec<Vec<(usize, usize)>>,
+}
+
+impl Molecule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_atom(&mut self, atom: Atom) -> usize {
+        self.atoms.push(atom);
+        self.adj.push(Vec::new());
+        self.atoms.len() - 1
+    }
+
+    /// Add a bond; endpoints must exist and be distinct, duplicate bonds
+    /// are rejected.
+    pub fn add_bond(&mut self, a: usize, b: usize, order: BondOrder) -> Result<usize, ChemError> {
+        if a == b || a >= self.atoms.len() || b >= self.atoms.len() {
+            return Err(ChemError::Graph(format!("bad bond endpoints {a}-{b}")));
+        }
+        if self.adj[a].iter().any(|&(n, _)| n == b) {
+            return Err(ChemError::Graph(format!("duplicate bond {a}-{b}")));
+        }
+        let idx = self.bonds.len();
+        self.bonds.push(Bond { a, b, order });
+        self.adj[a].push((b, idx));
+        self.adj[b].push((a, idx));
+        Ok(idx)
+    }
+
+    pub fn num_atoms(&self) -> usize {
+        self.atoms.len()
+    }
+
+    pub fn num_bonds(&self) -> usize {
+        self.bonds.len()
+    }
+
+    /// Neighbors of atom `v` as `(neighbor, bond_index)` pairs.
+    pub fn neighbors(&self, v: usize) -> &[(usize, usize)] {
+        &self.adj[v]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    /// Bond between `a` and `b` if present.
+    pub fn bond_between(&self, a: usize, b: usize) -> Option<&Bond> {
+        self.adj[a]
+            .iter()
+            .find(|&&(n, _)| n == b)
+            .map(|&(_, bi)| &self.bonds[bi])
+    }
+
+    /// True if the graph is connected (single fragment). Empty = false.
+    pub fn is_connected(&self) -> bool {
+        if self.atoms.is_empty() {
+            return false;
+        }
+        let mut seen = vec![false; self.atoms.len()];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &(n, _) in &self.adj[v] {
+                if !seen[n] {
+                    seen[n] = true;
+                    count += 1;
+                    stack.push(n);
+                }
+            }
+        }
+        count == self.atoms.len()
+    }
+
+    /// Bond indices that lie on at least one cycle (non-bridge edges),
+    /// via bridge-finding DFS.
+    pub fn ring_bonds(&self) -> Vec<bool> {
+        let n = self.atoms.len();
+        let mut is_ring = vec![false; self.bonds.len()];
+        if n == 0 {
+            return is_ring;
+        }
+        let mut disc = vec![usize::MAX; n];
+        let mut low = vec![0usize; n];
+        let mut timer = 0usize;
+        // Iterative DFS computing bridges; every non-bridge edge is a ring bond.
+        for start in 0..n {
+            if disc[start] != usize::MAX {
+                continue;
+            }
+            // (vertex, parent_bond, neighbor cursor)
+            let mut stack: Vec<(usize, usize, usize)> = vec![(start, usize::MAX, 0)];
+            disc[start] = timer;
+            low[start] = timer;
+            timer += 1;
+            while let Some(&mut (v, pbond, ref mut cursor)) = stack.last_mut() {
+                if *cursor < self.adj[v].len() {
+                    let (n2, bi) = self.adj[v][*cursor];
+                    *cursor += 1;
+                    if bi == pbond {
+                        continue;
+                    }
+                    if disc[n2] == usize::MAX {
+                        disc[n2] = timer;
+                        low[n2] = timer;
+                        timer += 1;
+                        stack.push((n2, bi, 0));
+                    } else {
+                        // back edge -> on a cycle
+                        low[v] = low[v].min(disc[n2]);
+                        is_ring[bi] = true;
+                    }
+                } else {
+                    stack.pop();
+                    if let Some(&mut (parent, _, _)) = stack.last_mut() {
+                        low[parent] = low[parent].min(low[v]);
+                        if low[v] <= disc[parent] {
+                            // v..parent edge is on a cycle
+                            is_ring[pbond] = true;
+                        }
+                    }
+                }
+            }
+        }
+        is_ring
+    }
+
+    /// Atom indices that lie on at least one cycle.
+    pub fn ring_atoms(&self) -> Vec<bool> {
+        let ring_bonds = self.ring_bonds();
+        let mut out = vec![false; self.atoms.len()];
+        for (bi, bond) in self.bonds.iter().enumerate() {
+            if ring_bonds[bi] {
+                out[bond.a] = true;
+                out[bond.b] = true;
+            }
+        }
+        out
+    }
+
+    /// Molecular formula-ish summary used in tests/debugging, e.g. "C6H6".
+    pub fn formula(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut h = 0usize;
+        for (i, a) in self.atoms.iter().enumerate() {
+            *counts.entry(a.element.symbol()).or_insert(0) += 1;
+            h += valence::implicit_h(self, i).unwrap_or(0) as usize;
+            h += a.explicit_h.unwrap_or(0) as usize;
+        }
+        let mut s = String::new();
+        for (sym, c) in counts {
+            s.push_str(sym);
+            if c > 1 {
+                s.push_str(&c.to_string());
+            }
+        }
+        if h > 0 {
+            s.push('H');
+            if h > 1 {
+                s.push_str(&h.to_string());
+            }
+        }
+        s
+    }
+}
+
+/// Errors from parsing/validity/graph manipulation.
+#[derive(Debug, thiserror::Error)]
+pub enum ChemError {
+    #[error("SMILES parse error at {pos}: {msg}")]
+    Parse { pos: usize, msg: String },
+    #[error("valence error on atom {atom}: {msg}")]
+    Valence { atom: usize, msg: String },
+    #[error("graph error: {msg}", msg = .0)]
+    Graph(String),
+}
+
+impl fmt::Display for Molecule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", writer::canonical_smiles(self))
+    }
+}
+
+/// Parse a single-fragment SMILES string (no `.`).
+pub fn parse_smiles(s: &str) -> Result<Molecule, ChemError> {
+    parser::parse(s)
+}
+
+/// Parse and fully validate: connected, valence-sane, aromatic atoms in
+/// rings. This is the notion of "valid SMILES" used by the Table 2
+/// metrics.
+pub fn parse_validated(s: &str) -> Result<Molecule, ChemError> {
+    let m = parser::parse(s)?;
+    valence::validate(&m)?;
+    Ok(m)
+}
+
+/// Canonical SMILES of a molecule.
+pub fn canonical_smiles(m: &Molecule) -> String {
+    writer::canonical_smiles(m)
+}
+
+/// Canonicalize a SMILES string (parse → validate → canonical write).
+pub fn canonicalize(s: &str) -> Result<String, ChemError> {
+    Ok(writer::canonical_smiles(&parse_validated(s)?))
+}
+
+/// Split a reactant-set string on `.` into individual SMILES.
+pub fn split_components(s: &str) -> Vec<&str> {
+    s.split('.').filter(|p| !p.is_empty()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_valences() {
+        assert_eq!(Element::C.valences(), &[4]);
+        assert_eq!(Element::S.valences(), &[2, 4, 6]);
+        assert!(!Element::F.can_be_aromatic());
+    }
+
+    #[test]
+    fn graph_basics() {
+        let mut m = Molecule::new();
+        let a = m.add_atom(Atom::new(Element::C));
+        let b = m.add_atom(Atom::new(Element::O));
+        m.add_bond(a, b, BondOrder::Single).unwrap();
+        assert_eq!(m.num_atoms(), 2);
+        assert_eq!(m.degree(a), 1);
+        assert!(m.bond_between(a, b).is_some());
+        assert!(m.is_connected());
+        // Duplicate bond rejected
+        assert!(m.add_bond(a, b, BondOrder::Single).is_err());
+        // Self-bond rejected
+        assert!(m.add_bond(a, a, BondOrder::Single).is_err());
+    }
+
+    #[test]
+    fn ring_detection_benzene_plus_tail() {
+        // c1ccccc1C — ring bonds are the 6 aromatic ones, not the tail.
+        let m = parse_smiles("c1ccccc1C").unwrap();
+        let ring = m.ring_bonds();
+        assert_eq!(ring.iter().filter(|&&x| x).count(), 6);
+        let ring_atoms = m.ring_atoms();
+        assert_eq!(ring_atoms.iter().filter(|&&x| x).count(), 6);
+    }
+
+    #[test]
+    fn ring_detection_fused() {
+        // naphthalene: 11 ring bonds, all 10 atoms in rings
+        let m = parse_smiles("c1ccc2ccccc2c1").unwrap();
+        assert_eq!(m.ring_bonds().iter().filter(|&&x| x).count(), 11);
+        assert_eq!(m.ring_atoms().iter().filter(|&&x| x).count(), 10);
+    }
+
+    #[test]
+    fn formula_smoke() {
+        let m = parse_smiles("CCO").unwrap();
+        assert_eq!(m.formula(), "C2OH6");
+        let benzene = parse_smiles("c1ccccc1").unwrap();
+        assert_eq!(benzene.formula(), "C6H6");
+    }
+
+    #[test]
+    fn split_components_basic() {
+        assert_eq!(split_components("CC.O"), vec!["CC", "O"]);
+        assert_eq!(split_components("CC"), vec!["CC"]);
+    }
+}

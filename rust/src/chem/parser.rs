@@ -1,0 +1,460 @@
+//! SMILES parser.
+//!
+//! Supported grammar (the subset the SynthChem world and the model's
+//! vocabulary can produce):
+//!
+//! * organic-subset atoms: `B C N O S P F Cl Br I` and aromatic
+//!   `b c n o s p`;
+//! * bracket atoms `[<symbol><Hn><+/-n>]` (charge and explicit hydrogen
+//!   count; no isotopes, no atom maps, no stereo `@`);
+//! * bonds `- = # :` (`/` and `\` are accepted and treated as single);
+//! * branches `( ... )`;
+//! * ring closures `1`-`9` and `%nn`, with optional bond symbol before
+//!   the digit.
+//!
+//! `.` (fragment separator) is rejected here; callers split reactant sets
+//! with [`crate::chem::split_components`] first.
+
+use super::{Atom, BondOrder, ChemError, Element, Molecule};
+
+struct Parser<'a> {
+    src: &'a [u8],
+    pos: usize,
+    mol: Molecule,
+    /// Stack of "previous atom" indices for branch handling.
+    stack: Vec<usize>,
+    prev: Option<usize>,
+    /// Pending bond symbol to apply to the next atom/ring closure.
+    pending_bond: Option<BondOrder>,
+    /// Open ring closures: digit -> (atom, bond override at open site).
+    rings: Vec<Option<(usize, Option<BondOrder>)>>,
+}
+
+fn err(pos: usize, msg: impl Into<String>) -> ChemError {
+    ChemError::Parse { pos, msg: msg.into() }
+}
+
+/// Parse a single-fragment SMILES string into a [`Molecule`].
+pub fn parse(s: &str) -> Result<Molecule, ChemError> {
+    if s.is_empty() {
+        return Err(err(0, "empty SMILES"));
+    }
+    let mut p = Parser {
+        src: s.as_bytes(),
+        pos: 0,
+        mol: Molecule::new(),
+        stack: Vec::new(),
+        prev: None,
+        pending_bond: None,
+        rings: vec![None; 100],
+    };
+    p.run()?;
+    if p.rings.iter().any(|r| r.is_some()) {
+        return Err(err(s.len(), "unclosed ring bond"));
+    }
+    if !p.stack.is_empty() {
+        return Err(err(s.len(), "unclosed branch"));
+    }
+    if p.pending_bond.is_some() {
+        return Err(err(s.len(), "dangling bond symbol"));
+    }
+    if p.mol.atoms.is_empty() {
+        return Err(err(0, "no atoms"));
+    }
+    Ok(p.mol)
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn run(&mut self) -> Result<(), ChemError> {
+        while let Some(c) = self.peek() {
+            match c {
+                b'(' => {
+                    self.pos += 1;
+                    let prev = self
+                        .prev
+                        .ok_or_else(|| err(self.pos, "branch before any atom"))?;
+                    self.stack.push(prev);
+                }
+                b')' => {
+                    self.pos += 1;
+                    if self.pending_bond.is_some() {
+                        return Err(err(self.pos, "bond symbol before ')'"));
+                    }
+                    let top = self
+                        .stack
+                        .pop()
+                        .ok_or_else(|| err(self.pos, "unmatched ')'"))?;
+                    self.prev = Some(top);
+                }
+                b'-' => {
+                    self.pos += 1;
+                    self.set_bond(BondOrder::Single)?;
+                }
+                b'=' => {
+                    self.pos += 1;
+                    self.set_bond(BondOrder::Double)?;
+                }
+                b'#' => {
+                    self.pos += 1;
+                    self.set_bond(BondOrder::Triple)?;
+                }
+                b':' => {
+                    self.pos += 1;
+                    self.set_bond(BondOrder::Aromatic)?;
+                }
+                b'/' | b'\\' => {
+                    // stereo bonds degrade to single
+                    self.pos += 1;
+                    self.set_bond(BondOrder::Single)?;
+                }
+                b'0'..=b'9' => {
+                    self.pos += 1;
+                    self.ring_closure((c - b'0') as usize)?;
+                }
+                b'%' => {
+                    self.pos += 1;
+                    let d1 = self.bump().ok_or_else(|| err(self.pos, "EOF after %"))?;
+                    let d2 = self.bump().ok_or_else(|| err(self.pos, "EOF after %d"))?;
+                    if !(d1.is_ascii_digit() && d2.is_ascii_digit()) {
+                        return Err(err(self.pos, "bad %nn ring index"));
+                    }
+                    let idx = ((d1 - b'0') as usize) * 10 + (d2 - b'0') as usize;
+                    self.ring_closure(idx)?;
+                }
+                b'[' => {
+                    self.pos += 1;
+                    let atom = self.parse_bracket()?;
+                    self.attach(atom)?;
+                }
+                b'.' => {
+                    return Err(err(self.pos, "multi-fragment SMILES not allowed here"));
+                }
+                _ => {
+                    let atom = self.parse_organic()?;
+                    self.attach(atom)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn set_bond(&mut self, order: BondOrder) -> Result<(), ChemError> {
+        if self.pending_bond.is_some() {
+            return Err(err(self.pos, "two consecutive bond symbols"));
+        }
+        if self.prev.is_none() {
+            return Err(err(self.pos, "bond symbol before any atom"));
+        }
+        self.pending_bond = Some(order);
+        Ok(())
+    }
+
+    /// Default bond order between two atoms: aromatic if both aromatic,
+    /// else single.
+    fn default_bond(&self, a: usize, b: usize) -> BondOrder {
+        if self.mol.atoms[a].aromatic && self.mol.atoms[b].aromatic {
+            BondOrder::Aromatic
+        } else {
+            BondOrder::Single
+        }
+    }
+
+    fn attach(&mut self, atom: Atom) -> Result<(), ChemError> {
+        let idx = self.mol.add_atom(atom);
+        if let Some(prev) = self.prev {
+            let order = self
+                .pending_bond
+                .take()
+                .unwrap_or_else(|| self.default_bond(prev, idx));
+            self.mol
+                .add_bond(prev, idx, order)
+                .map_err(|e| err(self.pos, e.to_string()))?;
+        } else if self.pending_bond.is_some() {
+            return Err(err(self.pos, "bond before first atom"));
+        }
+        self.prev = Some(idx);
+        Ok(())
+    }
+
+    fn ring_closure(&mut self, digit: usize) -> Result<(), ChemError> {
+        let cur = self
+            .prev
+            .ok_or_else(|| err(self.pos, "ring digit before any atom"))?;
+        let pend = self.pending_bond.take();
+        match self.rings[digit].take() {
+            None => {
+                self.rings[digit] = Some((cur, pend));
+            }
+            Some((open_atom, open_bond)) => {
+                if open_atom == cur {
+                    return Err(err(self.pos, "ring bond to self"));
+                }
+                // Bond order: explicit symbol at either site wins (they must
+                // agree if both given), else default.
+                let order = match (open_bond, pend) {
+                    (Some(a), Some(b)) if a != b => {
+                        return Err(err(self.pos, "conflicting ring bond orders"))
+                    }
+                    (Some(a), _) => a,
+                    (_, Some(b)) => b,
+                    (None, None) => self.default_bond(open_atom, cur),
+                };
+                self.mol
+                    .add_bond(open_atom, cur, order)
+                    .map_err(|e| err(self.pos, e.to_string()))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn parse_organic(&mut self) -> Result<Atom, ChemError> {
+        let c = self.bump().ok_or_else(|| err(self.pos, "EOF"))?;
+        let (element, aromatic) = match c {
+            b'C' => {
+                if self.peek() == Some(b'l') {
+                    self.pos += 1;
+                    (Element::Cl, false)
+                } else {
+                    (Element::C, false)
+                }
+            }
+            b'B' => {
+                if self.peek() == Some(b'r') {
+                    self.pos += 1;
+                    (Element::Br, false)
+                } else {
+                    (Element::B, false)
+                }
+            }
+            b'N' => (Element::N, false),
+            b'O' => (Element::O, false),
+            b'S' => (Element::S, false),
+            b'P' => (Element::P, false),
+            b'F' => (Element::F, false),
+            b'I' => (Element::I, false),
+            b'c' => (Element::C, true),
+            b'n' => (Element::N, true),
+            b'o' => (Element::O, true),
+            b's' => (Element::S, true),
+            b'p' => (Element::P, true),
+            b'b' => (Element::B, true),
+            other => {
+                return Err(err(
+                    self.pos,
+                    format!("unexpected character '{}'", other as char),
+                ))
+            }
+        };
+        Ok(Atom { element, aromatic, charge: 0, explicit_h: None })
+    }
+
+    fn parse_bracket(&mut self) -> Result<Atom, ChemError> {
+        // symbol
+        let c = self.bump().ok_or_else(|| err(self.pos, "EOF in bracket"))?;
+        let (element, aromatic) = match c {
+            b'C' => {
+                if self.peek() == Some(b'l') {
+                    self.pos += 1;
+                    (Element::Cl, false)
+                } else {
+                    (Element::C, false)
+                }
+            }
+            b'B' => {
+                if self.peek() == Some(b'r') {
+                    self.pos += 1;
+                    (Element::Br, false)
+                } else {
+                    (Element::B, false)
+                }
+            }
+            b'N' => (Element::N, false),
+            b'O' => (Element::O, false),
+            b'S' => (Element::S, false),
+            b'P' => (Element::P, false),
+            b'F' => (Element::F, false),
+            b'I' => (Element::I, false),
+            b'c' => (Element::C, true),
+            b'n' => (Element::N, true),
+            b'o' => (Element::O, true),
+            b's' => (Element::S, true),
+            b'p' => (Element::P, true),
+            b'b' => (Element::B, true),
+            other => {
+                return Err(err(
+                    self.pos,
+                    format!("unsupported bracket symbol '{}'", other as char),
+                ))
+            }
+        };
+        let mut h: u8 = 0;
+        let mut h_given = false;
+        let mut charge: i8 = 0;
+        loop {
+            match self.bump().ok_or_else(|| err(self.pos, "unterminated bracket"))? {
+                b']' => break,
+                b'H' => {
+                    h_given = true;
+                    h = 1;
+                    if let Some(d @ b'0'..=b'9') = self.peek() {
+                        self.pos += 1;
+                        h = d - b'0';
+                    }
+                }
+                b'+' => {
+                    charge = 1;
+                    if let Some(d @ b'0'..=b'9') = self.peek() {
+                        self.pos += 1;
+                        charge = (d - b'0') as i8;
+                    } else {
+                        while self.peek() == Some(b'+') {
+                            self.pos += 1;
+                            charge += 1;
+                        }
+                    }
+                }
+                b'-' => {
+                    charge = -1;
+                    if let Some(d @ b'0'..=b'9') = self.peek() {
+                        self.pos += 1;
+                        charge = -((d - b'0') as i8);
+                    } else {
+                        while self.peek() == Some(b'-') {
+                            self.pos += 1;
+                            charge -= 1;
+                        }
+                    }
+                }
+                other => {
+                    return Err(err(
+                        self.pos,
+                        format!("unsupported bracket token '{}'", other as char),
+                    ))
+                }
+            }
+        }
+        // Bracket atoms carry no implicit hydrogens in SMILES: an absent
+        // H spec means exactly zero hydrogens.
+        let _ = h_given;
+        Ok(Atom { element, aromatic, charge, explicit_h: Some(h) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::Element;
+
+    #[test]
+    fn linear_chain() {
+        let m = parse("CCO").unwrap();
+        assert_eq!(m.num_atoms(), 3);
+        assert_eq!(m.num_bonds(), 2);
+        assert_eq!(m.atoms[2].element, Element::O);
+    }
+
+    #[test]
+    fn two_char_elements() {
+        let m = parse("CClBrI").is_err(); // Cl has valence 1; parse is fine, just graph shape
+        // parse itself should succeed (valence not checked here)
+        assert!(!m || parse("CClBrI").is_ok() == false);
+        let m2 = parse("CCl").unwrap();
+        assert_eq!(m2.atoms[1].element, Element::Cl);
+        let m3 = parse("CBr").unwrap();
+        assert_eq!(m3.atoms[1].element, Element::Br);
+    }
+
+    #[test]
+    fn branches() {
+        let m = parse("CC(C)(C)C").unwrap();
+        assert_eq!(m.num_atoms(), 5);
+        assert_eq!(m.degree(1), 4);
+    }
+
+    #[test]
+    fn double_triple_bonds() {
+        let m = parse("C=O").unwrap();
+        assert_eq!(m.bonds[0].order, BondOrder::Double);
+        let m = parse("C#N").unwrap();
+        assert_eq!(m.bonds[0].order, BondOrder::Triple);
+    }
+
+    #[test]
+    fn aromatic_ring() {
+        let m = parse("c1ccccc1").unwrap();
+        assert_eq!(m.num_atoms(), 6);
+        assert_eq!(m.num_bonds(), 6);
+        assert!(m.bonds.iter().all(|b| b.order == BondOrder::Aromatic));
+    }
+
+    #[test]
+    fn ring_closure_with_explicit_bond() {
+        let m = parse("C1CCCCC1").unwrap();
+        assert_eq!(m.num_bonds(), 6);
+        let m = parse("C=1CCCCC=1").unwrap();
+        assert_eq!(m.bonds.last().unwrap().order, BondOrder::Double);
+        assert!(parse("C=1CCCCC#1").is_err()); // conflicting orders
+    }
+
+    #[test]
+    fn percent_ring_index() {
+        let m = parse("C%12CCCCC%12").unwrap();
+        assert_eq!(m.num_bonds(), 6);
+    }
+
+    #[test]
+    fn brackets() {
+        let m = parse("C[NH2]C").unwrap();
+        assert_eq!(m.atoms[1].explicit_h, Some(2));
+        let m = parse("[O-]C").unwrap();
+        assert_eq!(m.atoms[0].charge, -1);
+        let m = parse("[N+2]").unwrap();
+        assert_eq!(m.atoms[0].charge, 2);
+        let m = parse("c1cc[nH]c1").unwrap();
+        assert_eq!(m.atoms[3].explicit_h, Some(1));
+        assert!(m.atoms[3].aromatic);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("").is_err());
+        assert!(parse("C(").is_err());
+        assert!(parse("C)").is_err());
+        assert!(parse("C1CC").is_err()); // unclosed ring
+        assert!(parse("C=").is_err()); // dangling bond
+        assert!(parse("C==C").is_err());
+        assert!(parse("CC.O").is_err()); // fragments rejected
+        assert!(parse("[N").is_err());
+        assert!(parse("Cq").is_err());
+        assert!(parse("C11").is_err()); // ring to self
+        assert!(parse("(C)").is_err()); // branch before atom
+    }
+
+    #[test]
+    fn stereo_degrades_to_single() {
+        let m = parse("C/C=C/C").unwrap();
+        assert_eq!(m.bonds[0].order, BondOrder::Single);
+        assert_eq!(m.bonds[1].order, BondOrder::Double);
+    }
+
+    #[test]
+    fn fused_bicyclic() {
+        let m = parse("C1CC2CCC1C2").is_ok();
+        assert!(m);
+        let naph = parse("c1ccc2ccccc2c1").unwrap();
+        assert_eq!(naph.num_atoms(), 10);
+        assert_eq!(naph.num_bonds(), 11);
+    }
+}

@@ -1,0 +1,260 @@
+//! Valence accounting and molecule validation.
+//!
+//! Aromatic bonds contribute 1.5 to valence; sums are tracked doubled so
+//! everything stays integral. Implicit hydrogens on organic-subset atoms
+//! fill up to the smallest allowed valence that covers the bond order sum
+//! (ceiling for odd doubled sums, which arise from an odd number of
+//! aromatic bonds).
+
+use super::{ChemError, Element, Molecule};
+
+/// Allowed total valences for an element at a given formal charge.
+///
+/// Covers the charge states the SynthChem world generates:
+/// `[N+]` (ammonium-like, 4), `[O-]` (alkoxide, 1), `[N-]` (amide anion, 2),
+/// `[S-]` (thiolate, 1), `[O+]` (oxocarbenium, 3), `[C-]`/`[C+]` (3).
+pub fn allowed_valences(element: Element, charge: i8) -> Vec<u8> {
+    match (element, charge) {
+        (_, 0) => element.valences().to_vec(),
+        (Element::N, 1) => vec![4],
+        (Element::N, -1) => vec![2],
+        (Element::O, -1) => vec![1],
+        (Element::O, 1) => vec![3],
+        (Element::S, -1) => vec![1],
+        (Element::C, 1) | (Element::C, -1) => vec![3],
+        (Element::B, -1) => vec![4],
+        // Fallback: keep neutral valences; validation will likely fail,
+        // which is the right outcome for exotic charges.
+        _ => element.valences().to_vec(),
+    }
+}
+
+/// Sum of bond orders at atom `v`, doubled (aromatic = 3).
+pub fn bond_order_sum_x2(m: &Molecule, v: usize) -> u32 {
+    m.neighbors(v)
+        .iter()
+        .map(|&(_, bi)| m.bonds[bi].order.valence_x2() as u32)
+        .sum()
+}
+
+/// σ-framework valence used at atom `v`.
+///
+/// For aromatic atoms each aromatic bond counts 1 (the π system is
+/// accounted separately: a π-acceptor like aromatic C contributes one
+/// extra valence unit, a π-donor like pyrrole N / furan O contributes a
+/// lone pair and nothing extra — see [`validate`]). For non-aromatic
+/// atoms this is the exact bond order sum (aromatic bonds on such atoms
+/// are rejected by validation; they'd count as 2 here).
+pub fn sigma_used(m: &Molecule, v: usize) -> u32 {
+    let atom = &m.atoms[v];
+    if atom.aromatic {
+        m.neighbors(v)
+            .iter()
+            .map(|&(_, bi)| match m.bonds[bi].order {
+                super::BondOrder::Aromatic => 1u32,
+                o => (o.valence_x2() / 2) as u32,
+            })
+            .sum()
+    } else {
+        (bond_order_sum_x2(m, v) + 1) / 2
+    }
+}
+
+/// Number of implicit hydrogens on atom `v`, or an error if no allowed
+/// valence can accommodate the bonded electrons.
+///
+/// Atoms with an explicit bracket H count have zero *implicit* hydrogens
+/// by definition; their total is validated in [`validate`].
+pub fn implicit_h(m: &Molecule, v: usize) -> Result<u8, ChemError> {
+    let atom = &m.atoms[v];
+    if atom.explicit_h.is_some() {
+        return Ok(0);
+    }
+    let used = sigma_used(m, v);
+    let allowed = allowed_valences(atom.element, atom.charge);
+    if atom.aromatic {
+        // Assume π participation costs one valence unit; π-donors
+        // (pyrrole N, furan O) then simply clamp at zero hydrogens.
+        for &val in allowed.iter() {
+            if used <= val as u32 {
+                return Ok((val as u32).saturating_sub(used + 1) as u8);
+            }
+        }
+    } else {
+        for &val in allowed.iter() {
+            if used <= val as u32 {
+                return Ok((val as u32 - used) as u8);
+            }
+        }
+    }
+    Err(ChemError::Valence {
+        atom: v,
+        msg: format!(
+            "{}{} has bond order sum {} exceeding allowed valences",
+            atom.element.symbol(),
+            if atom.charge != 0 { format!("{:+}", atom.charge) } else { String::new() },
+            used
+        ),
+    })
+}
+
+/// Total hydrogen count (implicit + explicit bracket count).
+pub fn total_h(m: &Molecule, v: usize) -> Result<u8, ChemError> {
+    Ok(m.atoms[v].explicit_h.unwrap_or(implicit_h(m, v)?))
+}
+
+/// Validate a parsed molecule:
+///
+/// 1. connected (single fragment);
+/// 2. every atom's bond order sum + hydrogens fits an allowed valence;
+/// 3. aromatic atoms have exactly 2 or 3 aromatic bonds and lie on a ring;
+/// 4. non-aromatic atoms carry no aromatic bonds.
+pub fn validate(m: &Molecule) -> Result<(), ChemError> {
+    if !m.is_connected() {
+        return Err(ChemError::Graph("molecule is not connected".into()));
+    }
+    let ring_atom = m.ring_atoms();
+    for v in 0..m.num_atoms() {
+        let atom = &m.atoms[v];
+        let arom_bonds = m
+            .neighbors(v)
+            .iter()
+            .filter(|&&(_, bi)| m.bonds[bi].order == super::BondOrder::Aromatic)
+            .count();
+        if atom.aromatic {
+            if !atom.element.can_be_aromatic() {
+                return Err(ChemError::Valence {
+                    atom: v,
+                    msg: format!("{} cannot be aromatic", atom.element.symbol()),
+                });
+            }
+            if !(2..=3).contains(&arom_bonds) {
+                return Err(ChemError::Valence {
+                    atom: v,
+                    msg: format!("aromatic atom with {arom_bonds} aromatic bonds"),
+                });
+            }
+            if !ring_atom[v] {
+                return Err(ChemError::Valence { atom: v, msg: "aromatic atom outside ring".into() });
+            }
+        } else if arom_bonds > 0 {
+            return Err(ChemError::Valence {
+                atom: v,
+                msg: "aromatic bond on non-aromatic atom".into(),
+            });
+        }
+        // Valence check including explicit hydrogens. Aromatic atoms may
+        // participate in the π system either as π-acceptor (total+1 must
+        // be an allowed valence: aromatic C, pyridine N) or as π-donor
+        // (total itself allowed: pyrrole N, furan O, thiophene S).
+        let used = sigma_used(m, v);
+        let h = atom.explicit_h.unwrap_or(implicit_h(m, v)?) as u32;
+        let total = used + h;
+        let allowed = allowed_valences(atom.element, atom.charge);
+        let ok = if atom.aromatic {
+            allowed.iter().any(|&val| total == val as u32 || total + 1 == val as u32)
+        } else {
+            allowed.iter().any(|&val| total == val as u32)
+        };
+        if !ok {
+            return Err(ChemError::Valence {
+                atom: v,
+                msg: format!(
+                    "total valence {total} not in allowed {allowed:?} for {}",
+                    atom.element.symbol()
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::parse_smiles;
+
+    fn ok(s: &str) {
+        let m = parse_smiles(s).unwrap_or_else(|e| panic!("{s}: parse failed: {e}"));
+        validate(&m).unwrap_or_else(|e| panic!("{s}: validate failed: {e}"));
+    }
+
+    fn bad(s: &str) {
+        if let Ok(m) = parse_smiles(s) {
+            assert!(validate(&m).is_err(), "{s}: expected invalid");
+        }
+    }
+
+    #[test]
+    fn implicit_h_counts() {
+        let m = parse_smiles("CCO").unwrap();
+        assert_eq!(implicit_h(&m, 0).unwrap(), 3);
+        assert_eq!(implicit_h(&m, 1).unwrap(), 2);
+        assert_eq!(implicit_h(&m, 2).unwrap(), 1);
+    }
+
+    #[test]
+    fn aromatic_h_counts() {
+        let m = parse_smiles("c1ccccc1").unwrap();
+        for v in 0..6 {
+            assert_eq!(implicit_h(&m, v).unwrap(), 1);
+        }
+        // pyridine N: no H
+        let m = parse_smiles("c1ccncc1").unwrap();
+        let n_idx = m.atoms.iter().position(|a| a.element == Element::N).unwrap();
+        assert_eq!(implicit_h(&m, n_idx).unwrap(), 0);
+    }
+
+    #[test]
+    fn valid_molecules() {
+        for s in [
+            "C", "CC", "CCO", "C=O", "C#N", "CC(=O)O", "c1ccccc1", "c1ccncc1",
+            "c1cc[nH]c1", "c1ccoc1", "c1ccsc1", "CS(=O)(=O)Cl", "CC(=O)NC",
+            "C[N+](C)(C)C", "[O-]C(=O)C", "FC(F)(F)C", "ClCCl", "O=S(=O)(O)O",
+            "c1ccc2ccccc2c1", "CC(C)(C)OC(=O)N", "BrCC", "IC",
+        ] {
+            ok(s);
+        }
+    }
+
+    #[test]
+    fn invalid_valence() {
+        bad("C(C)(C)(C)(C)C"); // 5-valent carbon
+        bad("O(C)(C)C"); // 3-valent oxygen
+        bad("N(C)(C)(C)C"); // 4-valent neutral N
+        bad("Cl(C)C"); // divalent chlorine
+        bad("[NH4]"); // neutral N with 4 H
+    }
+
+    #[test]
+    fn charged_valences() {
+        ok("[NH4+]");
+        ok("C[N+](C)(C)C");
+        ok("[O-]C");
+        bad("[O-](C)C"); // O- divalent
+    }
+
+    #[test]
+    fn aromatic_sanity() {
+        bad("cc"); // aromatic atoms not in a ring
+        bad("c1ccccc1c"); // dangling aromatic atom (1 aromatic bond... parses as single bond to ring, then c alone)
+        bad("C:C"); // aromatic bond between non-aromatic atoms
+    }
+
+    #[test]
+    fn disconnected_rejected() {
+        // Can't be built via parse (it rejects '.'), so construct directly.
+        use crate::chem::{Atom, Molecule};
+        let mut m = Molecule::new();
+        m.add_atom(Atom::new(Element::C));
+        m.add_atom(Atom::new(Element::C));
+        assert!(validate(&m).is_err());
+    }
+
+    #[test]
+    fn bracket_h_must_fit() {
+        bad("[CH5]");
+        ok("[CH4]");
+        bad("[OH3]");
+    }
+}

@@ -1,0 +1,321 @@
+//! SMILES writer: canonical, rooted, and randomized output.
+//!
+//! `canonical_smiles` orders the DFS by [`super::canon`] ranks from the
+//! rank-0 root, giving a unique string per isomorphism class.
+//! `rooted_smiles` keeps canonical neighbor ordering but starts from a
+//! chosen atom — the R-SMILES-style augmentation used by the data
+//! generator to maximize product/reactant string overlap (which is what
+//! makes speculative drafts cheap to accept).
+
+use super::{canon, valence, BondOrder, Molecule};
+
+/// Canonical SMILES (unique per isomorphism class).
+pub fn canonical_smiles(m: &Molecule) -> String {
+    let ranks = canon::canonical_ranks(m);
+    let root = (0..m.num_atoms()).min_by_key(|&v| ranks[v]).unwrap_or(0);
+    write_from(m, root, &ranks)
+}
+
+/// SMILES rooted at `root`, neighbor order still canonical.
+pub fn rooted_smiles(m: &Molecule, root: usize) -> String {
+    let ranks = canon::canonical_ranks(m);
+    write_from(m, root, &ranks)
+}
+
+/// SMILES with a random root and random neighbor order (for augmentation
+/// and property tests).
+pub fn random_smiles(m: &Molecule, rng: &mut crate::util::Rng) -> String {
+    let n = m.num_atoms();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    // order[v] acts as the "rank" of atom v.
+    let mut rank = vec![0usize; n];
+    for (r, &v) in order.iter().enumerate() {
+        rank[v] = r;
+    }
+    let root = order[0];
+    write_from(m, root, &rank)
+}
+
+/// Write SMILES starting from `root`, visiting neighbors in increasing
+/// `rank` order.
+pub fn write_from(m: &Molecule, root: usize, rank: &[usize]) -> String {
+    let n = m.num_atoms();
+    assert!(root < n, "root out of range");
+
+    // --- Pass 1: DFS to build the spanning tree and find ring bonds. ---
+    let mut visited = vec![false; n];
+    let mut children: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n]; // (child, bond)
+    let mut parent_bond = vec![usize::MAX; n];
+    let mut back_edges: Vec<usize> = Vec::new();
+
+    // Iterative preorder DFS with rank-ordered neighbor traversal. A
+    // neighbor marked visited may be an ancestor *or* a pending sibling
+    // (cycles); either way the edge is a ring-closure bond, and its
+    // opening/closing endpoints are decided by visit position below.
+    let mut stack = vec![root];
+    visited[root] = true;
+    let mut visit_order = Vec::with_capacity(n);
+    while let Some(v) = stack.pop() {
+        visit_order.push(v);
+        let mut nbrs: Vec<(usize, usize)> = m.neighbors(v).to_vec();
+        nbrs.sort_by_key(|&(u, _)| rank[u]);
+        // Push in reverse so the lowest-rank neighbor is processed first.
+        for &(u, bi) in nbrs.iter().rev() {
+            if bi == parent_bond[v] {
+                continue;
+            }
+            if !visited[u] {
+                visited[u] = true;
+                parent_bond[u] = bi;
+                children[v].push((u, bi));
+                stack.push(u);
+            } else if !back_edges.contains(&bi) {
+                back_edges.push(bi);
+            }
+        }
+        // Push order reversed the children; restore rank order.
+        children[v].sort_by_key(|&(u, _)| rank[u]);
+    }
+    assert!(
+        visit_order.len() == n,
+        "write_from requires a connected molecule"
+    );
+
+    let mut visit_pos = vec![0usize; n];
+    for (i, &v) in visit_order.iter().enumerate() {
+        visit_pos[v] = i;
+    }
+    // Ring digit opens at the earlier-visited endpoint, closes at the
+    // later one; openings at an atom are ordered by the closer's position
+    // so digit reuse stays unambiguous.
+    let mut ring_openings: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut ring_closings: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &bi in &back_edges {
+        let b = &m.bonds[bi];
+        let (open, close) = if visit_pos[b.a] < visit_pos[b.b] { (b.a, b.b) } else { (b.b, b.a) };
+        ring_openings[open].push(bi);
+        ring_closings[close].push(bi);
+    }
+    for v in 0..n {
+        ring_openings[v].sort_by_key(|&bi| {
+            let b = &m.bonds[bi];
+            visit_pos[b.a].max(visit_pos[b.b])
+        });
+        ring_closings[v].sort_by_key(|&bi| {
+            let b = &m.bonds[bi];
+            visit_pos[b.a].min(visit_pos[b.b])
+        });
+    }
+
+    // --- Pass 2: emit the string recursively. ---
+    let mut out = String::with_capacity(n * 2);
+    let mut digit_of_bond: Vec<Option<u8>> = vec![None; m.num_bonds()];
+    let mut free_digits: Vec<u8> = (1..=99).rev().collect();
+
+    // Explicit recursion on an explicit stack to avoid deep call stacks.
+    enum Op {
+        Visit(usize, usize), // (atom, incoming bond or MAX)
+        Char(char),
+    }
+    let mut ops = vec![Op::Visit(root, usize::MAX)];
+    while let Some(op) = ops.pop() {
+        match op {
+            Op::Char(c) => out.push(c),
+            Op::Visit(v, in_bond) => {
+                if in_bond != usize::MAX {
+                    out.push_str(bond_token(m, in_bond));
+                }
+                write_atom(m, v, &mut out);
+                // Ring digits (openings first, then closings).
+                for &bi in &ring_openings[v] {
+                    let d = free_digits.pop().expect("ring digit pool exhausted");
+                    digit_of_bond[bi] = Some(d);
+                    out.push_str(bond_token(m, bi));
+                    push_digit(&mut out, d);
+                }
+                for &bi in &ring_closings[v] {
+                    let d = digit_of_bond[bi].expect("closing unopened ring digit");
+                    digit_of_bond[bi] = None;
+                    free_digits.push(d);
+                    // Bond token was emitted at the opening site; emitting it
+                    // twice is legal but redundant.
+                    push_digit(&mut out, d);
+                }
+                // Children: all but the last in parentheses.
+                let kids = &children[v];
+                for (i, &(u, bi)) in kids.iter().enumerate().rev() {
+                    if i + 1 == kids.len() {
+                        ops.push(Op::Visit(u, bi));
+                    } else {
+                        ops.push(Op::Char(')'));
+                        ops.push(Op::Visit(u, bi));
+                        ops.push(Op::Char('('));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn push_digit(out: &mut String, d: u8) {
+    if d < 10 {
+        out.push((b'0' + d) as char);
+    } else {
+        out.push('%');
+        out.push((b'0' + d / 10) as char);
+        out.push((b'0' + d % 10) as char);
+    }
+}
+
+/// The bond symbol to print before an atom/ring digit ("" when implied).
+fn bond_token(m: &Molecule, bi: usize) -> &'static str {
+    let b = &m.bonds[bi];
+    let both_aromatic = m.atoms[b.a].aromatic && m.atoms[b.b].aromatic;
+    match b.order {
+        BondOrder::Single => {
+            if both_aromatic {
+                "-" // single bond between aromatic atoms must be explicit
+            } else {
+                ""
+            }
+        }
+        BondOrder::Aromatic => "",
+        BondOrder::Double => "=",
+        BondOrder::Triple => "#",
+    }
+}
+
+/// Emit one atom, bracketed only when necessary.
+fn write_atom(m: &Molecule, v: usize, out: &mut String) {
+    let a = &m.atoms[v];
+    let sym = a.element.symbol();
+    let sym_str: String = if a.aromatic { sym.to_lowercase() } else { sym.to_string() };
+    let needs_bracket = a.charge != 0 || bracket_needed_for_h(m, v);
+    if !needs_bracket {
+        out.push_str(&sym_str);
+        return;
+    }
+    out.push('[');
+    out.push_str(&sym_str);
+    let h = valence::total_h(m, v).unwrap_or(0);
+    if h == 1 {
+        out.push('H');
+    } else if h > 1 {
+        out.push('H');
+        out.push((b'0' + h) as char);
+    }
+    match a.charge.cmp(&0) {
+        std::cmp::Ordering::Greater => {
+            out.push('+');
+            if a.charge > 1 {
+                out.push((b'0' + a.charge as u8) as char);
+            }
+        }
+        std::cmp::Ordering::Less => {
+            out.push('-');
+            if a.charge < -1 {
+                out.push((b'0' + (-a.charge) as u8) as char);
+            }
+        }
+        std::cmp::Ordering::Equal => {}
+    }
+    out.push(']');
+}
+
+/// Would an organic-subset (bracket-free) spelling reproduce this atom's
+/// hydrogen count on re-parse?
+fn bracket_needed_for_h(m: &Molecule, v: usize) -> bool {
+    let a = &m.atoms[v];
+    let Some(h) = a.explicit_h else { return false };
+    // What would the parser infer for the bare symbol?
+    let used = (valence::bond_order_sum_x2(m, v) + 1) / 2;
+    for &val in valence::allowed_valences(a.element, a.charge).iter() {
+        if used <= val as u32 {
+            return (val as u32 - used) as u8 != h;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::{parse_smiles, parse_validated};
+    use crate::util::Rng;
+
+    fn canon(s: &str) -> String {
+        canonical_smiles(&parse_smiles(s).unwrap())
+    }
+
+    #[test]
+    fn roundtrip_reparses() {
+        for s in [
+            "CCO", "c1ccccc1", "CC(C)(C)OC(=O)N", "c1ccc2ccccc2c1",
+            "CS(=O)(=O)Cl", "C[N+](C)(C)C", "c1cc[nH]c1", "O=C(O)c1ccccc1",
+            "FC(F)(F)c1ccc(Br)cc1", "C#CCO",
+        ] {
+            let c = canon(s);
+            let m2 = parse_validated(&c).unwrap_or_else(|e| panic!("{s} -> {c}: {e}"));
+            assert_eq!(canonical_smiles(&m2), c, "idempotent for {s}");
+        }
+    }
+
+    #[test]
+    fn equivalent_spellings_converge() {
+        for (a, b) in [
+            ("OCC", "CCO"),
+            ("c1ccccc1C", "Cc1ccccc1"),
+            ("C(C)(C)C", "CC(C)C"),
+            ("O=C(O)C", "CC(=O)O"),
+            ("c1cc(ccc1)Br", "Brc1ccccc1"),
+        ] {
+            assert_eq!(canon(a), canon(b), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn inequivalent_molecules_differ() {
+        assert_ne!(canon("CCO"), canon("COC"));
+        assert_ne!(canon("c1ccncc1"), canon("c1ccccc1"));
+    }
+
+    #[test]
+    fn random_smiles_same_canonical() {
+        let mut rng = Rng::new(123);
+        for s in ["CC(=O)Nc1ccccc1", "c1ccc2ccccc2c1", "CC(C)(C)OC(=O)NCCO"] {
+            let m = parse_smiles(s).unwrap();
+            let reference = canonical_smiles(&m);
+            for _ in 0..20 {
+                let r = random_smiles(&m, &mut rng);
+                let m2 = parse_smiles(&r)
+                    .unwrap_or_else(|e| panic!("{s}: random form {r} unparseable: {e}"));
+                assert_eq!(canonical_smiles(&m2), reference, "{s} via {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rooted_smiles_starts_at_root() {
+        let m = parse_smiles("CCO").unwrap();
+        // Root at the oxygen: string must start with O.
+        let o = m.atoms.iter().position(|a| a.element == crate::chem::Element::O).unwrap();
+        let s = rooted_smiles(&m, o);
+        assert!(s.starts_with('O'), "{s}");
+    }
+
+    #[test]
+    fn pyrrole_keeps_nh() {
+        let c = canon("c1cc[nH]c1");
+        assert!(c.contains("[nH]"), "{c}");
+    }
+
+    #[test]
+    fn charges_preserved() {
+        let c = canon("C[N+](C)(C)C");
+        assert!(c.contains("[N+]"), "{c}");
+        let c = canon("[O-]C(=O)C");
+        assert!(c.contains("[O-]"), "{c}");
+    }
+}

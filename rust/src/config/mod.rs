@@ -1,0 +1,233 @@
+//! Configuration: a TOML-subset file format plus CLI overrides.
+//!
+//! The offline build has no `toml`/`serde`, so we parse the subset the
+//! project needs: `[section]` headers, `key = value` lines with string
+//! (quoted), integer, float and boolean values, and `#` comments.
+//! Every setting can be overridden on the command line as
+//! `--section.key value` (see [`Config::apply_override`]).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let raw = raw.trim();
+        if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+            return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+        }
+        if raw == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        // bare strings allowed (e.g. decoder = msbs)
+        Ok(Value::Str(raw.to_string()))
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: bad section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.values.insert(key, Value::parse(v)?);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path.as_ref())?)
+    }
+
+    /// CLI override: `--section.key value`.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        self.values.insert(key.to_string(), Value::parse(value)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().map(String::from))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Typed serving configuration assembled from a [`Config`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts: String,
+    pub listen: String,
+    pub decoder: String,
+    pub expansions_per_step: usize,
+    pub deadline_ms: u64,
+    pub max_iterations: usize,
+    pub max_depth: usize,
+    pub beam_width: usize,
+    pub algo: String,
+    /// Dynamic batcher: max merged rows per model batch.
+    pub batch_max: usize,
+    /// Dynamic batcher: max wait for more work, microseconds.
+    pub batch_wait_us: u64,
+    pub workers: usize,
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> ServeConfig {
+        ServeConfig {
+            artifacts: c.str_or("server.artifacts", "artifacts"),
+            listen: c.str_or("server.listen", "127.0.0.1:7878"),
+            decoder: c.str_or("planner.decoder", "msbs"),
+            expansions_per_step: c.int_or("planner.expansions_per_step", 10) as usize,
+            deadline_ms: c.int_or("planner.deadline_ms", 5000) as u64,
+            max_iterations: c.int_or("planner.max_iterations", 35000) as usize,
+            max_depth: c.int_or("planner.max_depth", 5) as usize,
+            beam_width: c.int_or("planner.beam_width", 1) as usize,
+            algo: c.str_or("planner.algo", "retrostar"),
+            batch_max: c.int_or("batcher.max_batch", 16) as usize,
+            batch_wait_us: c.int_or("batcher.max_wait_us", 2000) as u64,
+            workers: c.int_or("server.workers", 4) as usize,
+        }
+    }
+
+    pub fn limits(&self) -> crate::search::SearchLimits {
+        crate::search::SearchLimits {
+            deadline: std::time::Duration::from_millis(self.deadline_ms),
+            max_iterations: self.max_iterations,
+            max_depth: self.max_depth,
+            expansions_per_step: self.expansions_per_step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(
+            "top = 1\n[server]\nlisten = \"0.0.0.0:9999\"\nworkers = 8\n# comment\n[planner]\ndecoder = msbs\nnucleus = 0.9975\nuse_cache = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.int_or("top", 0), 1);
+        assert_eq!(c.str_or("server.listen", ""), "0.0.0.0:9999");
+        assert_eq!(c.int_or("server.workers", 0), 8);
+        assert_eq!(c.str_or("planner.decoder", ""), "msbs");
+        assert!((c.float_or("planner.nucleus", 0.0) - 0.9975).abs() < 1e-12);
+        assert!(c.bool_or("planner.use_cache", false));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("[server]\nworkers = 2\n").unwrap();
+        c.apply_override("server.workers", "16").unwrap();
+        assert_eq!(c.int_or("server.workers", 0), 16);
+    }
+
+    #[test]
+    fn defaults_fill_serve_config() {
+        let sc = ServeConfig::from_config(&Config::new());
+        assert_eq!(sc.decoder, "msbs");
+        assert_eq!(sc.deadline_ms, 5000);
+        assert_eq!(sc.max_depth, 5);
+        assert_eq!(sc.limits().expansions_per_step, 10);
+    }
+
+    #[test]
+    fn bad_section_rejected() {
+        assert!(Config::parse("[oops\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+    }
+}

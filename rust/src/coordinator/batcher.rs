@@ -1,0 +1,278 @@
+//! The dynamic batcher: merges single-step expansion requests from all
+//! in-flight planning sessions into batched decoder calls.
+//!
+//! Requests arrive on a channel; the hub thread drains up to
+//! `max_batch` of them (waiting at most `max_wait` for stragglers),
+//! deduplicates identical molecules, runs ONE decoder group call, and
+//! fans the parsed proposals back out. A shared expansion cache
+//! short-circuits repeat molecules across sessions.
+
+use crate::decoding::{DecodeStats, Decoder};
+use crate::metrics::Metrics;
+use crate::model::StepModel;
+use crate::search::policy::{proposals_from_output, Proposal};
+use crate::search::ExpansionPolicy;
+use crate::tokenizer::Vocab;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+struct ExpandReq {
+    smiles: String,
+    k: usize,
+    reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
+}
+
+/// Shared handle to the batcher thread.
+pub struct ExpansionHub {
+    tx: mpsc::Sender<ExpandReq>,
+    stats: Arc<Mutex<DecodeStats>>,
+    pub invalid: Arc<AtomicUsize>,
+    pub total_hyps: Arc<AtomicUsize>,
+    batches: Arc<AtomicU64>,
+    merged: Arc<AtomicU64>,
+}
+
+/// Batcher tuning knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: std::time::Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: std::time::Duration::from_micros(2000) }
+    }
+}
+
+impl ExpansionHub {
+    /// Start the hub thread. The model handle must be `Send` (use
+    /// [`crate::runtime::server::SharedModel`] for PJRT models).
+    pub fn start<M>(
+        model: M,
+        decoder: Box<dyn Decoder + Send>,
+        vocab: Vocab,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Arc<ExpansionHub>
+    where
+        M: StepModel + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<ExpandReq>();
+        let stats = Arc::new(Mutex::new(DecodeStats::default()));
+        let invalid = Arc::new(AtomicUsize::new(0));
+        let total = Arc::new(AtomicUsize::new(0));
+        let batches = Arc::new(AtomicU64::new(0));
+        let merged = Arc::new(AtomicU64::new(0));
+        {
+            let stats = stats.clone();
+            let invalid = invalid.clone();
+            let total = total.clone();
+            let batches = batches.clone();
+            let merged = merged.clone();
+            std::thread::Builder::new()
+                .name("expansion-hub".into())
+                .spawn(move || {
+                    let mut cache: HashMap<(String, usize), Vec<Proposal>> = HashMap::new();
+                    while let Ok(first) = rx.recv() {
+                        // gather a batch
+                        let mut batch = vec![first];
+                        let deadline = std::time::Instant::now() + cfg.max_wait;
+                        while batch.len() < cfg.max_batch {
+                            let now = std::time::Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            match rx.recv_timeout(deadline - now) {
+                                Ok(r) => batch.push(r),
+                                Err(_) => break,
+                            }
+                        }
+                        batches.fetch_add(1, Ordering::Relaxed);
+                        merged.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                        // serve from cache / dedupe
+                        let k_max = batch.iter().map(|r| r.k).max().unwrap_or(1);
+                        let mut unique: Vec<String> = Vec::new();
+                        let mut slot_of: HashMap<String, usize> = HashMap::new();
+                        for r in &batch {
+                            if cache.contains_key(&(r.smiles.clone(), k_max)) {
+                                continue;
+                            }
+                            if !slot_of.contains_key(&r.smiles) {
+                                slot_of.insert(r.smiles.clone(), unique.len());
+                                unique.push(r.smiles.clone());
+                            }
+                        }
+                        if !unique.is_empty() {
+                            let srcs: Vec<Vec<i32>> =
+                                unique.iter().map(|s| vocab.encode(s, true)).collect();
+                            let mut st = stats.lock().unwrap();
+                            metrics.inc("batcher.model_batches", 1);
+                            metrics.inc("batcher.model_rows", unique.len() as u64);
+                            let t0 = std::time::Instant::now();
+                            let result = decoder.generate(&model, &srcs, k_max, &mut st);
+                            drop(st);
+                            metrics.observe("batcher.decode", t0.elapsed().as_secs_f64());
+                            match result {
+                                Ok(outs) => {
+                                    for (s, gen) in unique.iter().zip(outs.iter()) {
+                                        let mut inv = 0usize;
+                                        let mut tot = 0usize;
+                                        let props = proposals_from_output(
+                                            &vocab, s, gen, &mut inv, &mut tot,
+                                        );
+                                        invalid.fetch_add(inv, Ordering::Relaxed);
+                                        total.fetch_add(tot, Ordering::Relaxed);
+                                        cache.insert((s.clone(), k_max), props);
+                                    }
+                                }
+                                Err(e) => {
+                                    let msg = format!("{e:#}");
+                                    for r in batch {
+                                        let _ = r
+                                            .reply
+                                            .send(Err(anyhow::anyhow!("decode failed: {msg}")));
+                                    }
+                                    continue;
+                                }
+                            }
+                        }
+                        for r in batch {
+                            let props = cache
+                                .get(&(r.smiles.clone(), k_max))
+                                .cloned()
+                                .unwrap_or_default();
+                            let mut out = props;
+                            out.truncate(r.k);
+                            let _ = r.reply.send(Ok(out));
+                        }
+                    }
+                })
+                .expect("spawn expansion hub");
+        }
+        Arc::new(ExpansionHub { tx, stats, invalid, total_hyps: total, batches, merged })
+    }
+
+    /// Blocking single-molecule expansion (used by the `expand` op).
+    pub fn expand(&self, smiles: &str, k: usize) -> Result<Vec<Proposal>> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(ExpandReq { smiles: smiles.to_string(), k, reply: tx })
+            .map_err(|_| anyhow::anyhow!("hub gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// (model batches run, requests merged into them).
+    pub fn merge_ratio(&self) -> (u64, u64) {
+        (self.batches.load(Ordering::Relaxed), self.merged.load(Ordering::Relaxed))
+    }
+}
+
+/// Per-session [`ExpansionPolicy`] view over the hub. `Send`, cheap to
+/// clone — each planning session owns one.
+#[derive(Clone)]
+pub struct BatchedPolicy {
+    hub: Arc<ExpansionHub>,
+    calls: Arc<AtomicUsize>,
+}
+
+impl BatchedPolicy {
+    pub fn new(hub: Arc<ExpansionHub>) -> Self {
+        Self { hub, calls: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+impl ExpansionPolicy for BatchedPolicy {
+    fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        // fan out, then join — the hub may merge these with other
+        // sessions' requests
+        let mut replies = Vec::with_capacity(molecules.len());
+        for m in molecules {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.hub
+                .tx
+                .send(ExpandReq { smiles: m.to_string(), k, reply: tx })
+                .map_err(|_| anyhow::anyhow!("hub gone"))?;
+            replies.push(rx);
+        }
+        replies
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?)
+            .collect()
+    }
+
+    fn decode_stats(&self) -> DecodeStats {
+        self.hub.stats()
+    }
+
+    fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::beam::BeamSearch;
+    use crate::model::mock::{MockConfig, MockModel};
+
+    fn hub() -> Arc<ExpansionHub> {
+        let vocab = Vocab::build(["CC(=O)O.CN", "CC(=O)NC", "CCO"]);
+        let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+        ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(5) },
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    #[test]
+    fn hub_expands_and_caches() {
+        let h = hub();
+        // the mock copies its input: a reactant-set string comes back as
+        // a valid 2-component proposal
+        let p1 = h.expand("CC(=O)O.CN", 3).unwrap();
+        assert!(!p1.is_empty());
+        let calls_before = h.stats().model_calls;
+        let p2 = h.expand("CC(=O)O.CN", 3).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(h.stats().model_calls, calls_before, "cache must serve repeats");
+    }
+
+    #[test]
+    fn concurrent_sessions_share_batches() {
+        let h = hub();
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let hc = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let policy = BatchedPolicy::new(hc);
+                policy.expand_batch(&["CC(=O)O.CN"], 3).unwrap()
+            }));
+        }
+        for j in joins {
+            assert!(!j.join().unwrap().is_empty());
+        }
+        let (batches, merged) = h.merge_ratio();
+        assert!(merged >= 4);
+        assert!(batches <= merged, "batches {batches} merged {merged}");
+    }
+
+    #[test]
+    fn batched_policy_counts_calls() {
+        let h = hub();
+        let p = BatchedPolicy::new(h);
+        let _ = p.expand_batch(&["CCO"], 2).unwrap();
+        let _ = p.expand_batch(&["CCO"], 2).unwrap();
+        assert_eq!(p.calls(), 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 serving coordinator.
+//!
+//! The request path (all Rust, Python never appears):
+//!
+//! ```text
+//! TCP clients ──► server (thread per connection)
+//!                    │  plan/expand requests
+//!                    ▼
+//!              ExpansionHub (dynamic batcher): merges single-step
+//!                    │  expansion calls from all in-flight planning
+//!                    │  sessions into batched decoder calls
+//!                    ▼
+//!              SharedModel (model-executor thread)
+//!                    ▼
+//!              PJRT CPU client over the AOT HLO artifacts
+//! ```
+//!
+//! Cross-tree batching is the paper's closing "future work" realized:
+//! AiZynthFinder calls its model with batch size 1; here concurrent
+//! planning sessions share model batches, so the effective batch grows
+//! with server load (and MSBS keeps its advantage at those batch sizes —
+//! Table 1's scalability column is the mechanism).
+
+pub mod batcher;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{BatchedPolicy, ExpansionHub};
+pub use server::Server;

@@ -1,0 +1,152 @@
+//! Line-delimited JSON protocol of the serving coordinator.
+//!
+//! Requests (one JSON object per line):
+//!
+//! ```json
+//! {"id": 1, "op": "plan", "smiles": "...", "algo": "retrostar",
+//!  "deadline_ms": 5000, "beam_width": 1}
+//! {"id": 2, "op": "expand", "smiles": "...", "k": 10}
+//! {"id": 3, "op": "metrics"}
+//! {"id": 4, "op": "ping"}
+//! ```
+//!
+//! Responses mirror the `id` and carry `ok`/`error` plus op-specific
+//! fields; routes serialize as nested `{smiles, logp?, children?}`.
+
+use crate::jsonx::Json;
+use crate::search::{Proposal, Route, SolveResult};
+
+/// Serialize a route tree.
+pub fn route_to_json(r: &Route) -> Json {
+    match r {
+        Route::Leaf { smiles } => Json::obj(vec![
+            ("smiles", Json::str(smiles.clone())),
+            ("in_stock", Json::Bool(true)),
+        ]),
+        Route::Step { smiles, logp, children } => Json::obj(vec![
+            ("smiles", Json::str(smiles.clone())),
+            ("logp", Json::num(*logp)),
+            ("children", Json::Arr(children.iter().map(route_to_json).collect())),
+        ]),
+    }
+}
+
+/// Parse a route tree (used by clients/tests).
+pub fn route_from_json(j: &Json) -> Option<Route> {
+    let smiles = j.get("smiles")?.as_str()?.to_string();
+    match j.get("children") {
+        None => Some(Route::Leaf { smiles }),
+        Some(ch) => {
+            let children = ch
+                .as_arr()?
+                .iter()
+                .map(route_from_json)
+                .collect::<Option<Vec<_>>>()?;
+            Some(Route::Step {
+                smiles,
+                logp: j.get("logp").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                children,
+            })
+        }
+    }
+}
+
+/// Build a `plan` response.
+pub fn plan_response(id: i64, r: &SolveResult) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("solved", Json::Bool(r.solved)),
+        ("iterations", Json::num(r.iterations as f64)),
+        ("expansions", Json::num(r.expansions as f64)),
+        ("wall_ms", Json::num(r.wall_secs * 1e3)),
+        ("model_calls", Json::num(r.decode_stats.model_calls as f64)),
+        (
+            "acceptance_rate",
+            Json::num(r.decode_stats.acceptance_rate()),
+        ),
+    ];
+    if let Some(route) = &r.route {
+        fields.push(("route", route_to_json(route)));
+        fields.push(("route_depth", Json::num(route.depth() as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Build an `expand` response.
+pub fn expand_response(id: i64, proposals: &[Proposal]) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        (
+            "proposals",
+            Json::Arr(
+                proposals
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            (
+                                "reactants",
+                                Json::Arr(
+                                    p.reactants.iter().map(|r| Json::str(r.clone())).collect(),
+                                ),
+                            ),
+                            ("logp", Json::num(p.logp)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Build an error response.
+pub fn error_response(id: i64, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_json_roundtrip() {
+        let r = Route::Step {
+            smiles: "CC(=O)NC".into(),
+            logp: -0.5,
+            children: vec![
+                Route::Leaf { smiles: "CC(=O)O".into() },
+                Route::Leaf { smiles: "CN".into() },
+            ],
+        };
+        let j = route_to_json(&r);
+        let back = route_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn error_shape() {
+        let e = error_response(7, "bad smiles");
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(e.get("id").unwrap().as_i64(), Some(7));
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("bad"));
+    }
+
+    #[test]
+    fn expand_shape() {
+        let e = expand_response(
+            1,
+            &[Proposal { reactants: vec!["CC".into(), "O".into()], logp: -1.0 }],
+        );
+        let arr = e.get("proposals").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(
+            arr[0].get("reactants").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("CC")
+        );
+    }
+}

@@ -1,0 +1,325 @@
+//! TCP server: thread-per-connection over the line-delimited JSON
+//! protocol, planning sessions sharing the expansion hub.
+
+use super::batcher::{BatchedPolicy, ExpansionHub};
+use super::protocol;
+use crate::jsonx::Json;
+use crate::metrics::Metrics;
+use crate::search::{dfs::Dfs, retrostar::RetroStar, Planner, SearchLimits, Stock};
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running coordinator server.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Everything a connection handler needs.
+pub struct ServerCtx {
+    pub hub: Arc<ExpansionHub>,
+    pub stock: Arc<Stock>,
+    pub metrics: Arc<Metrics>,
+    pub default_limits: SearchLimits,
+    pub default_algo: String,
+    pub default_beam_width: usize,
+}
+
+impl Server {
+    /// Bind and start serving on a background thread. Use port 0 for an
+    /// ephemeral port (tests); `addr()` reports the bound address.
+    pub fn start(listen: &str, ctx: ServerCtx) -> Result<Server> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let ctx = Arc::new(ctx);
+        let join = std::thread::Builder::new()
+            .name("coordinator-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let ctx = ctx.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("coordinator-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_connection(stream, &ctx);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr, stop, join: Some(join) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, ctx: &ServerCtx) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&line, ctx);
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Dispatch one request line to a response (exposed for direct testing).
+pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return protocol::error_response(-1, &format!("bad json: {e}")),
+    };
+    let id = req.get("id").and_then(|x| x.as_i64()).unwrap_or(-1);
+    let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("");
+    ctx.metrics.inc(&format!("op.{op}"), 1);
+    match op {
+        "ping" => Json::obj(vec![("id", Json::num(id as f64)), ("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        "metrics" => {
+            let mut m = ctx.metrics.snapshot();
+            if let Json::Obj(ref mut o) = m {
+                o.insert("id".into(), Json::num(id as f64));
+                o.insert("ok".into(), Json::Bool(true));
+                let (batches, merged) = ctx.hub.merge_ratio();
+                o.insert("batcher_batches".into(), Json::num(batches as f64));
+                o.insert("batcher_merged".into(), Json::num(merged as f64));
+            }
+            m
+        }
+        "expand" => {
+            let Some(smiles) = req.get("smiles").and_then(|x| x.as_str()) else {
+                return protocol::error_response(id, "missing smiles");
+            };
+            let k = req.get("k").and_then(|x| x.as_usize()).unwrap_or(10);
+            let canonical = match crate::chem::canonicalize(smiles) {
+                Ok(c) => c,
+                Err(e) => return protocol::error_response(id, &format!("bad smiles: {e}")),
+            };
+            match ctx
+                .metrics
+                .time("request.expand", || ctx.hub.expand(&canonical, k))
+            {
+                Ok(p) => protocol::expand_response(id, &p),
+                Err(e) => protocol::error_response(id, &format!("{e:#}")),
+            }
+        }
+        "plan" => {
+            let Some(smiles) = req.get("smiles").and_then(|x| x.as_str()) else {
+                return protocol::error_response(id, "missing smiles");
+            };
+            let mut limits = ctx.default_limits.clone();
+            if let Some(ms) = req.get("deadline_ms").and_then(|x| x.as_usize()) {
+                limits.deadline = std::time::Duration::from_millis(ms as u64);
+            }
+            if let Some(d) = req.get("max_depth").and_then(|x| x.as_usize()) {
+                limits.max_depth = d;
+            }
+            if let Some(k) = req.get("k").and_then(|x| x.as_usize()) {
+                limits.expansions_per_step = k;
+            }
+            let algo = req
+                .get("algo")
+                .and_then(|x| x.as_str())
+                .unwrap_or(&ctx.default_algo)
+                .to_string();
+            let bw = req
+                .get("beam_width")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(ctx.default_beam_width);
+            let policy = BatchedPolicy::new(ctx.hub.clone());
+            let planner: Box<dyn Planner> = match algo.as_str() {
+                "dfs" => Box::new(Dfs),
+                "retrostar" | "retro*" => Box::new(RetroStar::new(bw)),
+                other => return protocol::error_response(id, &format!("unknown algo {other}")),
+            };
+            let result = ctx.metrics.time("request.plan", || {
+                planner.solve(smiles, &policy, &ctx.stock, &limits)
+            });
+            match result {
+                Ok(r) => {
+                    ctx.metrics.inc(if r.solved { "plan.solved" } else { "plan.unsolved" }, 1);
+                    protocol::plan_response(id, &r)
+                }
+                Err(e) => protocol::error_response(id, &format!("{e:#}")),
+            }
+        }
+        other => protocol::error_response(id, &format!("unknown op {other:?}")),
+    }
+}
+
+/// Blocking client helper (used by examples/tests/benches).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: i64,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    /// Send a request object (id is filled in) and wait for the reply.
+    pub fn call(&mut self, mut req: Json) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Json::Obj(ref mut o) = req {
+            o.insert("id".into(), Json::num(id as f64));
+        }
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::decoding::beam::BeamSearch;
+    use crate::model::mock::{MockConfig, MockModel};
+    use crate::tokenizer::Vocab;
+
+    fn test_ctx() -> ServerCtx {
+        let vocab = Vocab::build(["CC(=O)O.CN", "CC(=O)NC", "CCO"]);
+        let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+        let metrics = Arc::new(Metrics::new());
+        let hub = ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig::default(),
+            metrics.clone(),
+        );
+        ServerCtx {
+            hub,
+            stock: Arc::new(Stock::from_iter([
+                crate::chem::canonicalize("CC(=O)O").unwrap(),
+                crate::chem::canonicalize("CN").unwrap(),
+            ])),
+            metrics,
+            default_limits: SearchLimits {
+                deadline: std::time::Duration::from_millis(500),
+                max_iterations: 50,
+                max_depth: 3,
+                expansions_per_step: 5,
+            },
+            default_algo: "retrostar".into(),
+            default_beam_width: 1,
+        }
+    }
+
+    #[test]
+    fn ping_and_unknown_op() {
+        let ctx = test_ctx();
+        let r = handle_line("{\"id\":1,\"op\":\"ping\"}", &ctx);
+        assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+        let r = handle_line("{\"id\":2,\"op\":\"nope\"}", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let r = handle_line("not json", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn expand_via_protocol() {
+        let ctx = test_ctx();
+        let r = handle_line("{\"id\":1,\"op\":\"expand\",\"smiles\":\"CC(=O)O.CN\",\"k\":3}", &ctx);
+        // multi-fragment input is rejected at canonicalization
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let r = handle_line("{\"id\":2,\"op\":\"expand\",\"smiles\":\"CC(=O)NC\",\"k\":3}", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert!(r.get("proposals").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn plan_via_tcp_roundtrip() {
+        let ctx = test_ctx();
+        let server = Server::start("127.0.0.1:0", ctx).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let pong = client.call(Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+        let plan = client
+            .call(Json::obj(vec![
+                ("op", Json::str("plan")),
+                ("smiles", Json::str("CC(=O)NC")),
+                ("deadline_ms", Json::num(300.0)),
+            ]))
+            .unwrap();
+        assert_eq!(plan.get("ok").unwrap().as_bool(), Some(true), "{plan:?}");
+        // mock model cannot really plan; solved may be false — shape is
+        // what matters here
+        assert!(plan.get("solved").is_some());
+        let m = client.call(Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+        assert!(m.get("counters").is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let ctx = test_ctx();
+        let server = Server::start("127.0.0.1:0", ctx).unwrap();
+        let addr = server.addr();
+        let mut joins = Vec::new();
+        for _ in 0..3 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c
+                    .call(Json::obj(vec![
+                        ("op", Json::str("expand")),
+                        ("smiles", Json::str("CC(=O)NC")),
+                    ]))
+                    .unwrap();
+                r.get("ok").unwrap().as_bool()
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), Some(true));
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,234 @@
+//! Beam search: the vanilla baseline and the "optimized" variant.
+//!
+//! Vanilla ("beam search" in Table 1): every query contributes K rows to
+//! every decode call until the *whole group* finishes — finished beams
+//! keep occupying rows, which is exactly the inefficiency the paper's
+//! "beam search optimized" baseline removes (finished beams are put
+//! aside, shrinking the effective batch).
+
+use super::{finalize, Beam, CandidatePool, Decoder, DecodeStats, GenOutput};
+use crate::model::{log_softmax, DecodeRow, StepModel};
+use crate::tokenizer::EOS;
+use anyhow::Result;
+
+/// Beam search configuration.
+#[derive(Clone, Debug)]
+pub struct BeamSearch {
+    /// Put finished beams aside (the "optimized" variant).
+    pub optimized: bool,
+}
+
+impl BeamSearch {
+    pub fn vanilla() -> Self {
+        Self { optimized: false }
+    }
+
+    pub fn optimized() -> Self {
+        Self { optimized: true }
+    }
+}
+
+impl Decoder for BeamSearch {
+    fn name(&self) -> &'static str {
+        if self.optimized {
+            "beam-search-optimized"
+        } else {
+            "beam-search"
+        }
+    }
+
+    fn generate(
+        &self,
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        stats: &mut DecodeStats,
+    ) -> Result<Vec<GenOutput>> {
+        let t0 = std::time::Instant::now();
+        let mem = model.encode(srcs)?;
+        stats.encode_calls += 1;
+        let max_len = model.max_tgt();
+
+        // Per query: K beams. Step 0 starts from a single root beam; the
+        // vanilla variant still submits K duplicate rows to keep the
+        // effective batch at B*K from the start (naive-implementation
+        // faithful).
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        while !done.iter().all(|&d| d) {
+            // Build rows.
+            let mut rows: Vec<DecodeRow> = Vec::new();
+            // (query, beam index) per row, for scatter-back.
+            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            for (q, qbeams) in beams.iter().enumerate() {
+                if done[q] && self.optimized {
+                    continue;
+                }
+                for (bi, b) in qbeams.iter().enumerate() {
+                    if self.optimized && b.finished {
+                        continue;
+                    }
+                    let live_row = !b.finished;
+                    // Vanilla: submit rows even for finished beams/queries.
+                    if !self.optimized || live_row {
+                        rows.push(DecodeRow {
+                            mem,
+                            mem_row: q,
+                            tgt: b.tokens.clone(),
+                            pos: b.tokens.len() - 1,
+                        });
+                        row_of.push((q, bi));
+                    }
+                }
+                // Vanilla duplicates the root beam K times on the first step.
+                if !self.optimized && qbeams.len() == 1 && !qbeams[0].finished {
+                    for _ in 1..k {
+                        rows.push(DecodeRow {
+                            mem,
+                            mem_row: q,
+                            tgt: qbeams[0].tokens.clone(),
+                            pos: qbeams[0].tokens.len() - 1,
+                        });
+                        row_of.push((q, usize::MAX)); // duplicate; ignored
+                    }
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let out = model.decode(&rows, 1)?;
+            stats.model_calls += 1;
+            stats.rows_logical += rows.len() as u64;
+            stats.rows_padded += out.padded_rows as u64;
+
+            // Expand each query.
+            let mut pools: Vec<CandidatePool> =
+                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            // carry forward finished beams as candidates
+            for (q, qbeams) in beams.iter().enumerate() {
+                for b in qbeams {
+                    if b.finished {
+                        pools[q].push(b.clone());
+                    }
+                }
+            }
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                if bi == usize::MAX {
+                    continue; // first-step duplicate row
+                }
+                let b = &beams[q][bi];
+                if b.finished {
+                    continue; // vanilla submitted it; result ignored
+                }
+                let j = out
+                    .offset_of(r, b.tokens.len() - 1)
+                    .expect("window covers last position");
+                let lsm = log_softmax(out.logits(r, j, 0));
+                for &tok in crate::model::top_k(&lsm, k).iter() {
+                    let mut t = b.tokens.clone();
+                    t.push(tok as i32);
+                    let finished = tok as i32 == EOS || t.len() >= max_len;
+                    pools[q].push(Beam { tokens: t, logp: b.logp + lsm[tok], finished });
+                }
+            }
+            for (q, pool) in pools.into_iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                let next = pool.take();
+                if !next.is_empty() {
+                    beams[q] = next;
+                }
+                done[q] = beams[q].iter().all(|b| b.finished);
+            }
+        }
+        model.release(mem);
+        stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(beams.into_iter().map(finalize).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mock::{MockConfig, MockModel};
+    use crate::tokenizer::BOS;
+
+    fn src(tokens: &[i32]) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend_from_slice(tokens);
+        v.push(EOS);
+        v
+    }
+
+    #[test]
+    fn top1_is_copy_of_source() {
+        let model = MockModel::new(MockConfig::default());
+        let mut stats = DecodeStats::default();
+        let out = BeamSearch::vanilla()
+            .generate(&model, &[src(&[5, 6, 7, 8])], 4, &mut stats)
+            .unwrap();
+        assert_eq!(out[0].hyps[0].body(), &[5, 6, 7, 8]);
+        assert!(out[0].hyps[0].finished());
+        assert_eq!(out[0].hyps.len(), 4);
+        // hypotheses sorted by logp
+        for w in out[0].hyps.windows(2) {
+            assert!(w[0].logp >= w[1].logp);
+        }
+    }
+
+    #[test]
+    fn optimized_matches_vanilla_results_with_fewer_rows() {
+        let model = MockModel::new(MockConfig::default());
+        let srcs = vec![src(&[5, 6, 7]), src(&[9, 10, 11, 12, 13])];
+        let mut s1 = DecodeStats::default();
+        let out1 = BeamSearch::vanilla().generate(&model, &srcs, 3, &mut s1).unwrap();
+        let mut s2 = DecodeStats::default();
+        let out2 = BeamSearch::optimized().generate(&model, &srcs, 3, &mut s2).unwrap();
+        for (a, b) in out1.iter().zip(out2.iter()) {
+            assert_eq!(a.hyps[0].tokens, b.hyps[0].tokens);
+            assert!((a.hyps[0].logp - b.hyps[0].logp).abs() < 1e-9);
+        }
+        assert!(
+            s2.rows_logical < s1.rows_logical,
+            "optimized {} !< vanilla {}",
+            s2.rows_logical,
+            s1.rows_logical
+        );
+    }
+
+    #[test]
+    fn vanilla_effective_batch_is_constant_bk() {
+        let model = MockModel::new(MockConfig::default());
+        let srcs = vec![src(&[5, 6, 7]), src(&[9, 10, 11, 12, 13])];
+        let mut s = DecodeStats::default();
+        BeamSearch::vanilla().generate(&model, &srcs, 5, &mut s).unwrap();
+        assert_eq!(s.avg_effective_batch(), 10.0); // B=2, K=5
+    }
+
+    #[test]
+    fn beams_are_distinct() {
+        let model = MockModel::new(MockConfig::default());
+        let mut stats = DecodeStats::default();
+        let out = BeamSearch::vanilla()
+            .generate(&model, &[src(&[5, 6, 7, 8, 9])], 5, &mut stats)
+            .unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for h in &out[0].hyps {
+            assert!(seen.insert(h.tokens.clone()), "duplicate {:?}", h.tokens);
+        }
+    }
+
+    #[test]
+    fn respects_max_len() {
+        let model = MockModel::new(MockConfig { max_tgt: 6, ..Default::default() });
+        let mut stats = DecodeStats::default();
+        let out = BeamSearch::vanilla()
+            .generate(&model, &[src(&[5, 6, 7, 8, 9, 10, 11, 12])], 2, &mut stats)
+            .unwrap();
+        for h in &out[0].hyps {
+            assert!(h.tokens.len() < 6);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! HSBS: speculative beam search with heuristic drafting.
+//!
+//! Drafts are fragments of the *query* SMILES (the SBS paper's insight:
+//! large parts of the product string reappear verbatim in the
+//! reactants). The "smart" variant extracts fragments starting right
+//! after positions whose token matches the beam's last generated token;
+//! remaining draft slots are filled with evenly spaced windows.
+//!
+//! Per step, every live beam submits `n_drafts` rows (prefix ++ draft).
+//! Verification is greedy-consistent: draft tokens are accepted while
+//! they equal the main head's argmax. Candidates are harvested at every
+//! accepted length from the best draft, ranked by cumulative
+//! log-probability, and the top K become the next beams. This trades a
+//! larger effective batch (`O(B*K*n_drafts)`) for fewer sequential model
+//! calls — the scalability ceiling the paper's Medusa variant removes.
+
+use super::{finalize, Beam, CandidatePool, Decoder, DecodeStats, GenOutput};
+use crate::model::{argmax, log_softmax, DecodeRow, StepModel};
+use crate::tokenizer::EOS;
+use anyhow::Result;
+
+/// Heuristic-drafting speculative beam search.
+#[derive(Clone, Debug)]
+pub struct Hsbs {
+    pub n_drafts: usize,
+    pub draft_len: usize,
+}
+
+impl Hsbs {
+    pub fn new(n_drafts: usize, draft_len: usize) -> Self {
+        Self { n_drafts: n_drafts.max(1), draft_len: draft_len.max(1) }
+    }
+
+    /// The paper's per-batch-size draft schedule (Table 1 caption):
+    /// B=1 -> 10x10, B<=4 -> 3x10, else 1x20.
+    pub fn for_batch_size(b: usize) -> Self {
+        if b <= 1 {
+            Self::new(10, 10)
+        } else if b <= 4 {
+            Self::new(3, 10)
+        } else {
+            Self::new(1, 20)
+        }
+    }
+
+    /// Extract drafts from the source for a beam whose last token is
+    /// `last`. Returns up to `n_drafts` non-empty token windows.
+    fn make_drafts(&self, src_body: &[i32], last: i32, budget: usize) -> Vec<Vec<i32>> {
+        let mut out: Vec<Vec<i32>> = Vec::with_capacity(self.n_drafts);
+        if budget == 0 || src_body.is_empty() {
+            return out;
+        }
+        let dlen = self.draft_len.min(budget);
+        // smart: windows following a token equal to `last`
+        for (i, &t) in src_body.iter().enumerate() {
+            if out.len() >= self.n_drafts {
+                break;
+            }
+            if t == last && i + 1 < src_body.len() {
+                let w: Vec<i32> =
+                    src_body[i + 1..(i + 1 + dlen).min(src_body.len())].to_vec();
+                if !w.is_empty() && !out.contains(&w) {
+                    out.push(w);
+                }
+            }
+        }
+        // fill: evenly spaced windows
+        let stride = (src_body.len() / self.n_drafts.max(1)).max(1);
+        let mut start = 0;
+        while out.len() < self.n_drafts && start < src_body.len() {
+            let w: Vec<i32> = src_body[start..(start + dlen).min(src_body.len())].to_vec();
+            if !w.is_empty() && !out.contains(&w) {
+                out.push(w);
+            }
+            start += stride;
+        }
+        out
+    }
+}
+
+impl Decoder for Hsbs {
+    fn name(&self) -> &'static str {
+        "hsbs"
+    }
+
+    fn generate(
+        &self,
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        stats: &mut DecodeStats,
+    ) -> Result<Vec<GenOutput>> {
+        let t0 = std::time::Instant::now();
+        let mem = model.encode(srcs)?;
+        stats.encode_calls += 1;
+        let max_len = model.max_tgt();
+        let win = self.draft_len + 1;
+
+        // Source bodies (without BOS/EOS) for drafting.
+        let bodies: Vec<&[i32]> = srcs
+            .iter()
+            .map(|s| {
+                let inner = &s[1..];
+                match inner.split_last() {
+                    Some((&last, rest)) if last == EOS => rest,
+                    _ => inner,
+                }
+            })
+            .collect();
+
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        while !done.iter().all(|&d| d) {
+            // Build (beam, draft) rows for all live beams.
+            let mut rows: Vec<DecodeRow> = Vec::new();
+            // (query, beam, draft tokens)
+            let mut row_meta: Vec<(usize, usize, Vec<i32>)> = Vec::new();
+            for (q, qbeams) in beams.iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                for (bi, b) in qbeams.iter().enumerate() {
+                    if b.finished {
+                        continue;
+                    }
+                    let budget = max_len.saturating_sub(b.tokens.len());
+                    let last = *b.tokens.last().unwrap();
+                    let mut drafts = self.make_drafts(bodies[q], last, budget);
+                    if drafts.is_empty() {
+                        drafts.push(Vec::new()); // plain one-token step
+                    }
+                    for d in drafts {
+                        let mut tgt = b.tokens.clone();
+                        tgt.extend_from_slice(&d);
+                        rows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+                        row_meta.push((q, bi, d));
+                    }
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let out = model.decode(&rows, win)?;
+            stats.model_calls += 1;
+            stats.rows_logical += rows.len() as u64;
+            stats.rows_padded += out.padded_rows as u64;
+
+            // Per (query, beam): pick the draft with most accepted tokens.
+            use std::collections::HashMap;
+            // (q, bi) -> (accepted, row index)
+            let mut best: HashMap<(usize, usize), (usize, usize)> = HashMap::new();
+            for (r, (q, bi, draft)) in row_meta.iter().enumerate() {
+                let b = &beams[*q][*bi];
+                let p0 = b.tokens.len() - 1;
+                let mut acc = 0;
+                for (j, &dt) in draft.iter().enumerate() {
+                    let Some(off) = out.offset_of(r, p0 + j) else { break };
+                    let greedy = argmax(out.logits(r, off, 0)) as i32;
+                    if greedy == dt && dt != EOS {
+                        acc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let e = best.entry((*q, *bi)).or_insert((acc, r));
+                if acc > e.0 {
+                    *e = (acc, r);
+                }
+            }
+
+            // Harvest candidates.
+            let mut pools: Vec<CandidatePool> =
+                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for (q, qbeams) in beams.iter().enumerate() {
+                for b in qbeams {
+                    if b.finished {
+                        pools[q].push(b.clone());
+                    }
+                }
+            }
+            for (&(q, bi), &(acc, r)) in best.iter() {
+                let b = &beams[q][bi];
+                let p0 = b.tokens.len() - 1;
+                let draft = &row_meta[r].2;
+                stats.drafts_offered += draft.len() as u64;
+                stats.drafts_accepted += acc as u64;
+                // Backbone-and-divergences harvesting (see msbs.rs for the
+                // rationale): top-K continuations at the end of the
+                // accepted backbone, top-K divergent branches elsewhere.
+                let ext_cap = acc.min(draft.len());
+                let mut cum = b.logp;
+                for j in 0..=ext_cap {
+                    let Some(off) = out.offset_of(r, p0 + j) else { break };
+                    let lsm = log_softmax(out.logits(r, off, 0));
+                    let prefix_len = b.tokens.len() + j;
+                    if prefix_len >= max_len {
+                        break;
+                    }
+                    let backbone_end = j == ext_cap;
+                    for &tok in crate::model::top_k(&lsm, k).iter() {
+                        if !backbone_end && tok as i32 == draft[j] {
+                            continue;
+                        }
+                        let mut t = b.tokens.clone();
+                        t.extend_from_slice(&draft[..j]);
+                        t.push(tok as i32);
+                        let finished = tok as i32 == EOS || t.len() >= max_len;
+                        pools[q].push(Beam { tokens: t, logp: cum + lsm[tok], finished });
+                    }
+                    if j < draft.len() {
+                        cum += lsm[draft[j] as usize];
+                    }
+                }
+            }
+            for (q, pool) in pools.into_iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                let next = pool.take();
+                if !next.is_empty() {
+                    beams[q] = next;
+                }
+                done[q] = beams[q].iter().all(|b| b.finished);
+            }
+        }
+        model.release(mem);
+        stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(beams.into_iter().map(finalize).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::beam::BeamSearch;
+    use crate::model::mock::{MockConfig, MockModel};
+    use crate::tokenizer::BOS;
+
+    fn src(tokens: &[i32]) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend_from_slice(tokens);
+        v.push(EOS);
+        v
+    }
+
+    #[test]
+    fn top1_matches_beam_search() {
+        let model = MockModel::new(MockConfig::default());
+        let s = vec![src(&[5, 6, 7, 8, 9, 10])];
+        let mut s1 = DecodeStats::default();
+        let bs = BeamSearch::vanilla().generate(&model, &s, 3, &mut s1).unwrap();
+        let mut s2 = DecodeStats::default();
+        let hs = Hsbs::new(4, 4).generate(&model, &s, 3, &mut s2).unwrap();
+        assert_eq!(bs[0].hyps[0].tokens, hs[0].hyps[0].tokens);
+        assert!((bs[0].hyps[0].logp - hs[0].hyps[0].logp).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fewer_model_calls_than_beam_search() {
+        // The mock's copy task means query fragments are perfect drafts.
+        // Like MSBS, the speculative win needs paper-scale K (nested
+        // beams of different lengths carry the progress).
+        let model = MockModel::new(MockConfig::default());
+        let body: Vec<i32> = (5..23).collect();
+        let s = vec![src(&body)];
+        let mut s1 = DecodeStats::default();
+        BeamSearch::vanilla().generate(&model, &s, 10, &mut s1).unwrap();
+        let mut s2 = DecodeStats::default();
+        Hsbs::new(4, 8).generate(&model, &s, 10, &mut s2).unwrap();
+        assert!(
+            s2.model_calls < s1.model_calls,
+            "hsbs {} !< bs {}",
+            s2.model_calls,
+            s1.model_calls
+        );
+        assert!(s2.acceptance_rate() > 0.5, "acceptance {}", s2.acceptance_rate());
+    }
+
+    #[test]
+    fn drafts_prefer_matching_positions() {
+        let h = Hsbs::new(3, 3);
+        // last token 7 appears at index 2; smart draft = src[3..6]
+        let drafts = h.make_drafts(&[5, 6, 7, 8, 9, 10], 7, 100);
+        assert_eq!(drafts[0], vec![8, 9, 10]);
+        assert_eq!(drafts.len(), 3);
+    }
+
+    #[test]
+    fn paper_schedule() {
+        assert_eq!((Hsbs::for_batch_size(1).n_drafts, Hsbs::for_batch_size(1).draft_len), (10, 10));
+        assert_eq!((Hsbs::for_batch_size(4).n_drafts, Hsbs::for_batch_size(4).draft_len), (3, 10));
+        assert_eq!((Hsbs::for_batch_size(16).n_drafts, Hsbs::for_batch_size(16).draft_len), (1, 20));
+    }
+
+    #[test]
+    fn all_hypotheses_finish_on_easy_input(){
+        let model = MockModel::new(MockConfig::default());
+        let mut st = DecodeStats::default();
+        let out = Hsbs::new(2, 5)
+            .generate(&model, &[src(&[5, 6, 7, 8])], 3, &mut st)
+            .unwrap();
+        assert_eq!(out[0].hyps.len(), 3);
+        assert!(out[0].hyps[0].finished());
+    }
+}

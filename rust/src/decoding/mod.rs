@@ -1,0 +1,229 @@
+//! Single-step decoding engines.
+//!
+//! Four inference strategies for the SMILES-to-SMILES transformer, all
+//! implementing [`Decoder`]:
+//!
+//! * [`beam::BeamSearch`] — vanilla beam search (finished beams keep
+//!   occupying model-call rows; the paper's "beam search" baseline) and
+//!   the "optimized" variant (finished beams leave the batch);
+//! * [`hsbs::Hsbs`] — speculative beam search with heuristic drafting
+//!   (query-fragment drafts, the SBS paper's "smart" variant);
+//! * [`msbs::Msbs`] — speculative beam search with Medusa-head drafting:
+//!   the paper's headline method. Two model calls per cycle (draft +
+//!   verify with top-p nucleus acceptance), top-K candidate harvesting
+//!   at every accepted prefix length.
+//!
+//! Engines operate on *groups* of queries (one encode per group, shared
+//! decode calls) so the batch-size sweeps of Table 1 and the beam-width
+//! batching of Table 4 fall out naturally.
+
+pub mod beam;
+pub mod hsbs;
+pub mod msbs;
+
+use crate::model::StepModel;
+use anyhow::Result;
+
+/// One generated hypothesis: tokens without BOS; ends with EOS iff the
+/// model finished it within the length budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hypothesis {
+    pub tokens: Vec<i32>,
+    pub logp: f64,
+}
+
+impl Hypothesis {
+    pub fn finished(&self) -> bool {
+        self.tokens.last() == Some(&crate::tokenizer::EOS)
+    }
+
+    /// Tokens without the trailing EOS.
+    pub fn body(&self) -> &[i32] {
+        match self.tokens.split_last() {
+            Some((&last, rest)) if last == crate::tokenizer::EOS => rest,
+            _ => &self.tokens,
+        }
+    }
+}
+
+/// K hypotheses for one query, sorted by descending log-probability.
+#[derive(Clone, Debug, Default)]
+pub struct GenOutput {
+    pub hyps: Vec<Hypothesis>,
+}
+
+/// Accounting for Table 1 (wall time is tracked by the caller's clock
+/// around `generate`, and also accumulated here for convenience).
+#[derive(Clone, Debug, Default)]
+pub struct DecodeStats {
+    /// Decoder forward passes (Table 1B).
+    pub model_calls: u64,
+    pub encode_calls: u64,
+    /// Sum over calls of the logical row count (Table 1C numerator).
+    pub rows_logical: u64,
+    /// Sum over calls of the padded (bucketed) row count.
+    pub rows_padded: u64,
+    /// Draft tokens offered by the chosen draft per verification.
+    pub drafts_offered: u64,
+    /// Draft tokens accepted (Table 1D numerator).
+    pub drafts_accepted: u64,
+    pub wall_secs: f64,
+}
+
+impl DecodeStats {
+    pub fn avg_effective_batch(&self) -> f64 {
+        if self.model_calls == 0 {
+            0.0
+        } else {
+            self.rows_logical as f64 / self.model_calls as f64
+        }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafts_offered == 0 {
+            0.0
+        } else {
+            self.drafts_accepted as f64 / self.drafts_offered as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &DecodeStats) {
+        self.model_calls += o.model_calls;
+        self.encode_calls += o.encode_calls;
+        self.rows_logical += o.rows_logical;
+        self.rows_padded += o.rows_padded;
+        self.drafts_offered += o.drafts_offered;
+        self.drafts_accepted += o.drafts_accepted;
+        self.wall_secs += o.wall_secs;
+    }
+}
+
+/// A decoding engine: generate K candidate target sequences for each of
+/// a group of query token sequences.
+pub trait Decoder: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// `srcs` are BOS/EOS-wrapped query token rows (one group = one
+    /// encode + shared decode batches).
+    fn generate(
+        &self,
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        stats: &mut DecodeStats,
+    ) -> Result<Vec<GenOutput>>;
+}
+
+/// An in-flight beam (BOS-led token prefix).
+#[derive(Clone, Debug)]
+pub(crate) struct Beam {
+    pub tokens: Vec<i32>,
+    pub logp: f64,
+    pub finished: bool,
+}
+
+impl Beam {
+    pub fn root() -> Beam {
+        Beam { tokens: vec![crate::tokenizer::BOS], logp: 0.0, finished: false }
+    }
+
+    pub fn into_hypothesis(self) -> Hypothesis {
+        Hypothesis { tokens: self.tokens[1..].to_vec(), logp: self.logp }
+    }
+}
+
+/// Candidate pool helper: keeps the best `k` unique token sequences.
+pub(crate) struct CandidatePool {
+    k: usize,
+    items: Vec<Beam>,
+}
+
+impl CandidatePool {
+    pub fn new(k: usize) -> Self {
+        Self { k, items: Vec::with_capacity(k * 4) }
+    }
+
+    pub fn push(&mut self, b: Beam) {
+        self.items.push(b);
+    }
+
+    /// Top-k by logp, deduplicated by token sequence (keep best score).
+    pub fn take(mut self) -> Vec<Beam> {
+        self.items.sort_by(|a, b| {
+            b.logp
+                .partial_cmp(&a.logp)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut seen: std::collections::HashSet<Vec<i32>> = std::collections::HashSet::new();
+        let mut out: Vec<Beam> = Vec::with_capacity(self.k);
+        for b in self.items.drain(..) {
+            if out.len() >= self.k {
+                break;
+            }
+            if seen.insert(b.tokens.clone()) {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+/// Build a decoder by name: `bs` / `beam-search`, `bs-opt`, `hsbs`,
+/// `msbs`. `batch_hint` sizes HSBS's draft schedule (Table 1 caption).
+pub fn make_decoder(name: &str, batch_hint: usize) -> anyhow::Result<Box<dyn Decoder + Send>> {
+    Ok(match name {
+        "bs" | "beam" | "beam-search" => Box::new(beam::BeamSearch::vanilla()),
+        "bs-opt" | "beam-search-optimized" => Box::new(beam::BeamSearch::optimized()),
+        "hsbs" => Box::new(hsbs::Hsbs::for_batch_size(batch_hint)),
+        "msbs" => Box::new(msbs::Msbs::default()),
+        other => anyhow::bail!("unknown decoder {other:?} (bs|bs-opt|hsbs|msbs)"),
+    })
+}
+
+/// Sort hypotheses by descending logp into a [`GenOutput`].
+pub(crate) fn finalize(beams: Vec<Beam>) -> GenOutput {
+    let mut hyps: Vec<Hypothesis> = beams.into_iter().map(Beam::into_hypothesis).collect();
+    hyps.sort_by(|a, b| b.logp.partial_cmp(&a.logp).unwrap_or(std::cmp::Ordering::Equal));
+    GenOutput { hyps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_pool_dedups_and_sorts() {
+        let mut pool = CandidatePool::new(2);
+        pool.push(Beam { tokens: vec![1, 5], logp: -1.0, finished: false });
+        pool.push(Beam { tokens: vec![1, 5], logp: -0.5, finished: false });
+        pool.push(Beam { tokens: vec![1, 6], logp: -2.0, finished: false });
+        pool.push(Beam { tokens: vec![1, 7], logp: -3.0, finished: false });
+        let top = pool.take();
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].tokens, vec![1, 5]);
+        assert_eq!(top[0].logp, -0.5);
+        assert_eq!(top[1].tokens, vec![1, 6]);
+    }
+
+    #[test]
+    fn hypothesis_body_strips_eos() {
+        let h = Hypothesis { tokens: vec![5, 6, crate::tokenizer::EOS], logp: 0.0 };
+        assert!(h.finished());
+        assert_eq!(h.body(), &[5, 6]);
+        let h2 = Hypothesis { tokens: vec![5, 6], logp: 0.0 };
+        assert!(!h2.finished());
+        assert_eq!(h2.body(), &[5, 6]);
+    }
+
+    #[test]
+    fn stats_rates() {
+        let s = DecodeStats {
+            model_calls: 4,
+            rows_logical: 40,
+            drafts_offered: 10,
+            drafts_accepted: 9,
+            ..Default::default()
+        };
+        assert_eq!(s.avg_effective_batch(), 10.0);
+        assert_eq!(s.acceptance_rate(), 0.9);
+    }
+}

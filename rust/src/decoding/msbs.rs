@@ -1,0 +1,371 @@
+//! MSBS: speculative beam search with Medusa-head drafting — the
+//! paper's headline contribution.
+//!
+//! Each cycle costs two model calls for the whole group:
+//!
+//! 1. **Draft call** (window 1): read all `M+1` heads at each live
+//!    beam's last position; greedy-pick head 0..M to form a draft of
+//!    `M` tokens per beam (one draft per beam — effective batch stays
+//!    `O(B*K)`, which is what makes MSBS scale where HSBS cannot).
+//! 2. **Verify call** (window `M+1`): decode `prefix ++ draft`; accept
+//!    draft tokens by the top-p (nucleus, default 99.75%) rank test —
+//!    a token is accepted while the probability mass of strictly more
+//!    probable tokens is below the nucleus (the argmax is therefore
+//!    always acceptable). Then harvest top-K continuations at *every*
+//!    accepted prefix length, rank all candidates by cumulative
+//!    log-probability and keep the top K as the next beams.
+//!
+//! Guarantees >= 1 generated token per cycle and <= M+1; finished beams
+//! are put aside (as in optimized beam search).
+
+use super::{finalize, Beam, CandidatePool, Decoder, DecodeStats, GenOutput};
+use crate::model::{argmax, log_softmax, softmax, DecodeRow, StepModel};
+use crate::tokenizer::EOS;
+use anyhow::Result;
+
+/// Medusa speculative beam search.
+#[derive(Clone, Debug)]
+pub struct Msbs {
+    /// Nucleus parameter for draft verification (paper: 0.9975).
+    pub nucleus: f64,
+    /// Cap on draft length (defaults to the model's Medusa head count).
+    pub max_draft: Option<usize>,
+}
+
+impl Default for Msbs {
+    fn default() -> Self {
+        Self { nucleus: 0.9975, max_draft: None }
+    }
+}
+
+impl Msbs {
+    pub fn new(nucleus: f64) -> Self {
+        Self { nucleus, max_draft: None }
+    }
+
+    /// Is `tok` inside the top-p nucleus of `probs` (or the argmax)?
+    fn in_nucleus(&self, probs: &[f64], tok: usize) -> bool {
+        let p_tok = probs[tok];
+        // mass of strictly-more-probable tokens (ties resolved in favor
+        // of acceptance); argmax has mass_before == 0.
+        let mass_before: f64 = probs.iter().filter(|&&p| p > p_tok).sum();
+        mass_before < self.nucleus
+    }
+}
+
+/// Per-cycle trace record (for the Fig. 1/2 example driver).
+#[derive(Clone, Debug)]
+pub struct CycleTrace {
+    pub cycle: usize,
+    pub drafts: Vec<Vec<i32>>,
+    pub accepted: Vec<usize>,
+    pub beams: Vec<(Vec<i32>, f64)>,
+}
+
+impl Decoder for Msbs {
+    fn name(&self) -> &'static str {
+        "msbs"
+    }
+
+    fn generate(
+        &self,
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        stats: &mut DecodeStats,
+    ) -> Result<Vec<GenOutput>> {
+        self.generate_traced(model, srcs, k, stats, &mut None)
+    }
+}
+
+impl Msbs {
+    /// `generate` with an optional per-cycle trace (first query only),
+    /// used by `examples/msbs_trace.rs` to reproduce Fig. 1/2.
+    pub fn generate_traced(
+        &self,
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        stats: &mut DecodeStats,
+        trace: &mut Option<Vec<CycleTrace>>,
+    ) -> Result<Vec<GenOutput>> {
+        let t0 = std::time::Instant::now();
+        let mem = model.encode(srcs)?;
+        stats.encode_calls += 1;
+        let max_len = model.max_tgt();
+        let m = if let Some(cap) = self.max_draft {
+            cap.min(model.medusa_heads())
+        } else {
+            model.medusa_heads()
+        };
+        anyhow::ensure!(m > 0, "MSBS requires a model with Medusa heads");
+
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut done: Vec<bool> = vec![false; srcs.len()];
+        let mut cycle = 0usize;
+
+        while !done.iter().all(|&d| d) {
+            cycle += 1;
+            // ---- call 1: draft ----
+            let mut rows: Vec<DecodeRow> = Vec::new();
+            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            for (q, qbeams) in beams.iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                for (bi, b) in qbeams.iter().enumerate() {
+                    if !b.finished {
+                        rows.push(DecodeRow {
+                            mem,
+                            mem_row: q,
+                            tgt: b.tokens.clone(),
+                            pos: b.tokens.len() - 1,
+                        });
+                        row_of.push((q, bi));
+                    }
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let dout = model.decode(&rows, 1)?;
+            stats.model_calls += 1;
+            stats.rows_logical += rows.len() as u64;
+            stats.rows_padded += dout.padded_rows as u64;
+
+            // Greedy draft per beam: token j from head j (head 0 = main).
+            let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                let b = &beams[q][bi];
+                let off = dout
+                    .offset_of(r, b.tokens.len() - 1)
+                    .expect("draft window covers last position");
+                let budget = max_len.saturating_sub(b.tokens.len() + 1).min(m);
+                let mut d = Vec::with_capacity(budget);
+                for h in 0..budget {
+                    d.push(argmax(dout.logits(r, off, h)) as i32);
+                }
+                drafts.push(d);
+            }
+
+            // ---- call 2: verify ----
+            let win = m + 1;
+            let mut vrows: Vec<DecodeRow> = Vec::with_capacity(rows.len());
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                let b = &beams[q][bi];
+                let mut tgt = b.tokens.clone();
+                tgt.extend_from_slice(&drafts[r]);
+                vrows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+            }
+            let vout = model.decode(&vrows, win)?;
+            stats.model_calls += 1;
+            stats.rows_logical += vrows.len() as u64;
+            stats.rows_padded += vout.padded_rows as u64;
+
+            // ---- acceptance + harvesting ----
+            let mut pools: Vec<CandidatePool> =
+                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for (q, qbeams) in beams.iter().enumerate() {
+                for b in qbeams {
+                    if b.finished {
+                        pools[q].push(b.clone());
+                    }
+                }
+            }
+            let mut accepted_log: Vec<usize> = Vec::with_capacity(rows.len());
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                let b = &beams[q][bi];
+                let p0 = b.tokens.len() - 1;
+                let draft = &drafts[r];
+                // accept a prefix of the draft via the nucleus test; an
+                // accepted EOS terminates the draft (nothing after it can
+                // be meaningful).
+                let mut acc = 0usize;
+                let mut eos_idx: Option<usize> = None;
+                for (j, &dt) in draft.iter().enumerate() {
+                    let Some(off) = vout.offset_of(r, p0 + j) else { break };
+                    let probs = softmax(vout.logits(r, off, 0));
+                    if !self.in_nucleus(&probs, dt as usize) {
+                        break;
+                    }
+                    acc += 1;
+                    if dt == EOS {
+                        eos_idx = Some(j);
+                        break;
+                    }
+                }
+                stats.drafts_offered += draft.len() as u64;
+                stats.drafts_accepted += acc as u64;
+                accepted_log.push(acc);
+
+                // Harvest candidates. The accepted tokens form a committed
+                // *backbone*: at its end we take the top-K continuations;
+                // at every earlier accepted position we take the top-K
+                // *divergent* branches (excluding the draft token itself —
+                // it already lives inside the backbone, and re-adding it
+                // would flood the pool with nested prefixes). Cumulative
+                // log-probability ranks the pool, so a weakly-accepted
+                // backbone can lose to a short divergence — the paper's
+                // "both shorter and longer sequences may be the most
+                // probable".
+                let ext_cap = eos_idx.unwrap_or(acc);
+                let mut cum = b.logp;
+                for j in 0..=ext_cap {
+                    let Some(off) = vout.offset_of(r, p0 + j) else { break };
+                    let prefix_len = b.tokens.len() + j;
+                    if prefix_len >= max_len {
+                        break;
+                    }
+                    let backbone_end = j == ext_cap;
+                    let lsm = log_softmax(vout.logits(r, off, 0));
+                    for &tok in crate::model::top_k(&lsm, k).iter() {
+                        if !backbone_end && tok as i32 == draft[j] {
+                            continue; // divergences only before the backbone end
+                        }
+                        let mut t = b.tokens.clone();
+                        t.extend_from_slice(&draft[..j]);
+                        t.push(tok as i32);
+                        let finished = tok as i32 == EOS || t.len() >= max_len;
+                        pools[q].push(Beam { tokens: t, logp: cum + lsm[tok], finished });
+                    }
+                    if j < draft.len() {
+                        cum += lsm[draft[j] as usize];
+                    }
+                }
+            }
+            for (q, pool) in pools.into_iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                let next = pool.take();
+                if !next.is_empty() {
+                    beams[q] = next;
+                }
+                done[q] = beams[q].iter().all(|b| b.finished);
+            }
+            if let Some(tr) = trace.as_mut() {
+                tr.push(CycleTrace {
+                    cycle,
+                    drafts: drafts.clone(),
+                    accepted: accepted_log,
+                    beams: beams[0]
+                        .iter()
+                        .map(|b| (b.tokens.clone(), b.logp))
+                        .collect(),
+                });
+            }
+        }
+        model.release(mem);
+        stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(beams.into_iter().map(finalize).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::beam::BeamSearch;
+    use crate::model::mock::{MockConfig, MockModel};
+    use crate::tokenizer::BOS;
+
+    fn src(tokens: &[i32]) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend_from_slice(tokens);
+        v.push(EOS);
+        v
+    }
+
+    #[test]
+    fn top1_matches_beam_search() {
+        let model = MockModel::new(MockConfig::default());
+        let s = vec![src(&[5, 6, 7, 8, 9, 10, 11])];
+        let mut s1 = DecodeStats::default();
+        let bs = BeamSearch::vanilla().generate(&model, &s, 3, &mut s1).unwrap();
+        let mut s2 = DecodeStats::default();
+        let ms = Msbs::default().generate(&model, &s, 3, &mut s2).unwrap();
+        assert_eq!(bs[0].hyps[0].tokens, ms[0].hyps[0].tokens);
+        assert!((bs[0].hyps[0].logp - ms[0].hyps[0].logp).abs() < 1e-9);
+    }
+
+    #[test]
+    fn far_fewer_model_calls_than_beam_search() {
+        // SBS progress relies on nested beams of different lengths: the
+        // longest beam advances by up to M+1 tokens per cycle, so the
+        // effect needs paper-scale K (the paper uses K=10).
+        let model = MockModel::new(MockConfig::default());
+        let body: Vec<i32> = (5..23).collect();
+        let s = vec![src(&body)];
+        let mut s1 = DecodeStats::default();
+        BeamSearch::vanilla().generate(&model, &s, 10, &mut s1).unwrap();
+        let mut s2 = DecodeStats::default();
+        Msbs::default().generate(&model, &s, 10, &mut s2).unwrap();
+        assert!(
+            (s2.model_calls as f64) < 0.7 * s1.model_calls as f64,
+            "msbs {} vs bs {}",
+            s2.model_calls,
+            s1.model_calls
+        );
+    }
+
+    #[test]
+    fn acceptance_rate_tracks_head_accuracy() {
+        // perfect heads -> high acceptance (tail cycles still truncate
+        // at EOS, so it does not reach exactly 1)
+        let perfect = MockModel::new(MockConfig {
+            head_base_acc: 100,
+            head_acc_decay: 0,
+            ..Default::default()
+        });
+        let body: Vec<i32> = (5..21).collect();
+        let s = vec![src(&body)];
+        let mut st = DecodeStats::default();
+        Msbs::default().generate(&perfect, &s, 10, &mut st).unwrap();
+        assert!(st.acceptance_rate() > 0.7, "{}", st.acceptance_rate());
+
+        // poor heads -> lower acceptance, but still the correct output
+        let poor = MockModel::new(MockConfig {
+            head_base_acc: 30,
+            head_acc_decay: 0,
+            ..Default::default()
+        });
+        let mut st2 = DecodeStats::default();
+        let out = Msbs::default().generate(&poor, &s, 10, &mut st2).unwrap();
+        assert!(st2.acceptance_rate() < st.acceptance_rate());
+        assert_eq!(out[0].hyps[0].body(), &body[..]);
+    }
+
+    #[test]
+    fn nucleus_cut_rejects_unlikely_tokens() {
+        let m = Msbs::new(0.9);
+        // probs: argmax 0.85, second 0.1, third 0.05
+        let probs = vec![0.85, 0.1, 0.05];
+        assert!(m.in_nucleus(&probs, 0)); // argmax always
+        assert!(m.in_nucleus(&probs, 1)); // 0.85 < 0.9
+        assert!(!m.in_nucleus(&probs, 2)); // 0.95 !< 0.9
+    }
+
+    #[test]
+    fn two_calls_per_cycle() {
+        let model = MockModel::new(MockConfig::default());
+        let s = vec![src(&[5, 6, 7, 8])];
+        let mut st = DecodeStats::default();
+        let mut trace = Some(Vec::new());
+        Msbs::default()
+            .generate_traced(&model, &s, 2, &mut st, &mut trace)
+            .unwrap();
+        let cycles = trace.unwrap().len() as u64;
+        assert_eq!(st.model_calls, 2 * cycles);
+    }
+
+    #[test]
+    fn batch_group_processes_all_queries() {
+        let model = MockModel::new(MockConfig::default());
+        let srcs = vec![src(&[5, 6, 7]), src(&[8, 9, 10, 11]), src(&[12, 13])];
+        let mut st = DecodeStats::default();
+        let out = Msbs::default().generate(&model, &srcs, 4, &mut st).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].hyps[0].body(), &[5, 6, 7]);
+        assert_eq!(out[1].hyps[0].body(), &[8, 9, 10, 11]);
+        assert_eq!(out[2].hyps[0].body(), &[12, 13]);
+    }
+}

@@ -1,0 +1,40 @@
+//! # retroserve
+//!
+//! A production-shaped reproduction of *"Fast and scalable retrosynthetic
+//! planning with a transformer neural network and speculative beam search"*
+//! (Andronov et al., 2025).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: single-step decoding
+//!   engines (beam search, optimized beam search, HSBS, MSBS), multi-step
+//!   planners (Retro\*, DFS), stock management, a request router with a
+//!   dynamic cross-tree batcher, metrics and a CLI. Python is never on the
+//!   request path.
+//! * **L2** — a JAX encoder-decoder transformer with Medusa heads
+//!   (`python/compile/model.py`), trained at build time and AOT-lowered to
+//!   HLO text artifacts per batch bucket.
+//! * **L1** — Pallas kernels for the Medusa-head fan-out and fused
+//!   attention (`python/compile/kernels/`), verified against a pure-jnp
+//!   oracle.
+//!
+//! The [`runtime`] module loads the HLO artifacts through the PJRT C API
+//! (`xla` crate) and exposes them behind the [`model::StepModel`] trait;
+//! [`model::mock`] provides a deterministic in-process model so the whole
+//! L3 stack is testable without artifacts.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index.
+
+pub mod chem;
+pub mod config;
+pub mod coordinator;
+pub mod decoding;
+pub mod jsonx;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod search;
+pub mod synthchem;
+pub mod tokenizer;
+pub mod util;
+pub mod benchkit;

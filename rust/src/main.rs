@@ -1,0 +1,228 @@
+//! `retroserve` CLI — the leader entrypoint.
+//!
+//! ```text
+//! retroserve serve   [--config FILE] [--listen ADDR] [--decoder NAME] ...
+//! retroserve plan    --smiles S [--algo retrostar|dfs] [--decoder NAME]
+//!                    [--deadline-ms N] [--beam-width N] [--artifacts DIR]
+//! retroserve expand  --smiles S [--decoder NAME] [--k N] [--artifacts DIR]
+//! retroserve info    [--artifacts DIR]
+//! ```
+//!
+//! All subcommands load the AOT artifacts (HLO text + params.npz) through
+//! the PJRT runtime; Python is never invoked.
+
+use anyhow::{bail, Context, Result};
+use retroserve::config::{Config, ServeConfig};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::server::{Server, ServerCtx};
+use retroserve::coordinator::BatchedPolicy;
+use retroserve::decoding::make_decoder;
+use retroserve::metrics::Metrics;
+use retroserve::runtime::server::SharedModel;
+use retroserve::runtime::PjrtModel;
+use retroserve::search::{dfs::Dfs, retrostar::RetroStar, Planner, Stock};
+use retroserve::tokenizer::Vocab;
+use std::sync::Arc;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = std::collections::HashMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = it.next().unwrap_or_else(|| "true".to_string());
+            flags.insert(name.to_string(), val);
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+fn build_hub(
+    artifacts: &str,
+    decoder: &str,
+    batch_hint: usize,
+    batcher: BatcherConfig,
+    metrics: Arc<Metrics>,
+) -> Result<(Arc<ExpansionHub>, Arc<Stock>, Vocab)> {
+    let vocab = Vocab::load(&std::path::Path::new(artifacts).join("vocab.json"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let stock = Arc::new(
+        Stock::load(std::path::Path::new(artifacts).join("stock.txt"))
+            .context("loading stock.txt")?,
+    );
+    let art = artifacts.to_string();
+    let model = SharedModel::spawn(move || PjrtModel::load(&art))?;
+    let dec = make_decoder(decoder, batch_hint)?;
+    let hub = ExpansionHub::start(model, dec, vocab.clone(), batcher, metrics);
+    Ok((hub, stock, vocab))
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
+        "expand" => cmd_expand(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "retroserve — transformer retrosynthesis serving with speculative beam search\n\
+                 \n\
+                 usage:\n\
+                 retroserve serve  [--config FILE] [--listen ADDR] [--decoder bs|bs-opt|hsbs|msbs]\n\
+                 retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] [--deadline-ms N]\n\
+                 [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
+                 retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR]\n\
+                 retroserve info   [--artifacts DIR]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::new(),
+    };
+    for (k, v) in &args.flags {
+        match k.as_str() {
+            "listen" => cfg.apply_override("server.listen", v)?,
+            "artifacts" => cfg.apply_override("server.artifacts", v)?,
+            "decoder" => cfg.apply_override("planner.decoder", v)?,
+            "beam-width" => cfg.apply_override("planner.beam_width", v)?,
+            "config" => {}
+            other => cfg.apply_override(other, v)?,
+        }
+    }
+    let sc = ServeConfig::from_config(&cfg);
+    let metrics = Arc::new(Metrics::new());
+    let (hub, stock, _vocab) = build_hub(
+        &sc.artifacts,
+        &sc.decoder,
+        sc.batch_max,
+        BatcherConfig {
+            max_batch: sc.batch_max,
+            max_wait: std::time::Duration::from_micros(sc.batch_wait_us),
+        },
+        metrics.clone(),
+    )?;
+    eprintln!(
+        "retroserve: serving on {} (decoder={}, algo={}, stock={})",
+        sc.listen,
+        sc.decoder,
+        sc.algo,
+        stock.len()
+    );
+    let server = Server::start(
+        &sc.listen,
+        ServerCtx {
+            hub,
+            stock,
+            metrics,
+            default_limits: sc.limits(),
+            default_algo: sc.algo.clone(),
+            default_beam_width: sc.beam_width,
+        },
+    )?;
+    eprintln!("retroserve: ready on {}", server.addr());
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let smiles = args.flags.get("smiles").context("--smiles required")?;
+    let artifacts = args.flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
+    let algo = args.flags.get("algo").map(String::as_str).unwrap_or("retrostar");
+    let bw: usize = args.flags.get("beam-width").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let metrics = Arc::new(Metrics::new());
+    let (hub, stock, _) = build_hub(
+        artifacts,
+        decoder,
+        bw.max(1),
+        BatcherConfig::default(),
+        metrics,
+    )?;
+    let mut limits = retroserve::search::SearchLimits::default();
+    if let Some(ms) = args.flags.get("deadline-ms") {
+        limits.deadline = std::time::Duration::from_millis(ms.parse()?);
+    }
+    if let Some(d) = args.flags.get("max-depth") {
+        limits.max_depth = d.parse()?;
+    }
+    if let Some(k) = args.flags.get("k") {
+        limits.expansions_per_step = k.parse()?;
+    }
+    let planner: Box<dyn Planner> = match algo {
+        "dfs" => Box::new(Dfs),
+        "retrostar" | "retro*" => Box::new(RetroStar::new(bw)),
+        other => bail!("unknown algo {other}"),
+    };
+    let policy = BatchedPolicy::new(hub);
+    let r = planner.solve(smiles, &policy, &stock, &limits)?;
+    println!(
+        "solved={} iterations={} expansions={} wall={:.2}s model_calls={} acceptance={:.1}%",
+        r.solved,
+        r.iterations,
+        r.expansions,
+        r.wall_secs,
+        r.decode_stats.model_calls,
+        r.decode_stats.acceptance_rate() * 100.0
+    );
+    if let Some(route) = &r.route {
+        println!("route (depth {}):\n{}", route.depth(), route.render());
+    }
+    Ok(())
+}
+
+fn cmd_expand(args: &Args) -> Result<()> {
+    let smiles = args.flags.get("smiles").context("--smiles required")?;
+    let artifacts = args.flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
+    let k: usize = args.flags.get("k").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let metrics = Arc::new(Metrics::new());
+    let (hub, _, _) = build_hub(artifacts, decoder, 1, BatcherConfig::default(), metrics)?;
+    let canonical = retroserve::chem::canonicalize(smiles)
+        .map_err(|e| anyhow::anyhow!("bad smiles: {e}"))?;
+    let t0 = std::time::Instant::now();
+    let proposals = hub.expand(&canonical, k)?;
+    let stats = hub.stats();
+    println!(
+        "{} proposals in {:.0} ms (model calls {}, acceptance {:.1}%)",
+        proposals.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        stats.model_calls,
+        stats.acceptance_rate() * 100.0
+    );
+    for (i, p) in proposals.iter().enumerate() {
+        println!("{:2}. logp {:7.3}  {}", i + 1, p.logp, p.reactants.join(" . "));
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let cfg = retroserve::runtime::RuntimeConfig::load(std::path::Path::new(artifacts))?;
+    println!("artifacts: {artifacts}");
+    println!(
+        "model: vocab={} d_model={} medusa_heads={} max_src={} max_tgt={}",
+        cfg.vocab, cfg.d_model, cfg.n_medusa, cfg.max_src, cfg.max_tgt
+    );
+    println!("encode buckets: {:?}", cfg.enc_buckets);
+    println!(
+        "decode buckets: rows {:?} x len {:?} x win {:?}",
+        cfg.dec_row_buckets, cfg.dec_len_buckets, cfg.dec_win_buckets
+    );
+    println!("params: {} arrays", cfg.param_names.len());
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Serving metrics: counters and log-bucketed latency histograms,
+//! exported as JSON by the coordinator's `metrics` op.
+
+use crate::jsonx::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Log-scaled histogram from 1 µs to ~100 s (5 buckets per decade).
+#[derive(Clone, Debug)]
+pub struct Hist {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const DECADES: usize = 8; // 1e-6 .. 1e2 seconds
+const PER_DECADE: usize = 5;
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self {
+            buckets: vec![0; DECADES * PER_DECADE + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Hist {
+    fn bucket_of(secs: f64) -> usize {
+        if secs <= 1e-6 {
+            return 0;
+        }
+        let idx = ((secs.log10() + 6.0) * PER_DECADE as f64).floor() as isize;
+        idx.clamp(0, (DECADES * PER_DECADE) as isize) as usize
+    }
+
+    /// Lower bound of bucket `i` in seconds.
+    fn bucket_lo(i: usize) -> f64 {
+        10f64.powf(i as f64 / PER_DECADE as f64 - 6.0)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.buckets[Self::bucket_of(secs)] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from the bucket boundaries.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_lo(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_s", Json::num(self.mean())),
+            ("min_s", Json::num(if self.count == 0 { 0.0 } else { self.min })),
+            ("max_s", Json::num(if self.count == 0 { 0.0 } else { self.max })),
+            ("p50_s", Json::num(self.percentile(50.0))),
+            ("p90_s", Json::num(self.percentile(90.0))),
+            ("p99_s", Json::num(self.percentile(99.0))),
+        ])
+    }
+}
+
+/// Global metrics registry (cheap enough at our request rates; a
+/// sharded design would replace the mutexes under real load).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe(&self, name: &str, secs: f64) {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(secs);
+    }
+
+    /// Time a closure into histogram `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let hists = self.hists.lock().unwrap();
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "latency",
+                Json::Obj(hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("requests", 1);
+        m.inc("requests", 2);
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Hist::default();
+        for x in [0.001, 0.002, 0.004, 0.1] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 0.02675).abs() < 1e-9);
+        assert!(h.percentile(50.0) <= 0.004);
+        assert!(h.percentile(100.0) >= 0.05);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for secs in [1e-7, 1e-6, 1e-5, 1e-3, 0.1, 1.0, 10.0, 99.0] {
+            let b = Hist::bucket_of(secs);
+            assert!(b >= last, "{secs}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let m = Metrics::new();
+        m.inc("a", 1);
+        m.observe("lat", 0.5);
+        let s = m.snapshot();
+        assert!(s.get("counters").unwrap().get("a").is_some());
+        assert!(s.get("latency").unwrap().get("lat").unwrap().get("count").is_some());
+    }
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        let s = m.snapshot();
+        assert_eq!(
+            s.get("latency").unwrap().get("op").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,283 @@
+//! A deterministic in-process [`StepModel`] for tests and benches.
+//!
+//! Semantics: a "copy translation" task. For a source `[BOS, t1..tn, EOS]`
+//! the correct target is `[t1..tn, EOS]`; the distribution at decoder
+//! position `p` puts most mass on `src[p+1]` (the copy), a bit on a
+//! deterministic "alternative" token, and a flat tail — enough structure
+//! to exercise beam bookkeeping, speculative verification and nucleus
+//! cuts without any artifacts. Medusa head `h` predicts `src[p+1+h]`,
+//! with a per-head accuracy knob that deterministically (seeded hash)
+//! corrupts some positions so acceptance rates are interesting.
+
+use super::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use crate::tokenizer::EOS;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Configuration for the mock distribution.
+#[derive(Clone, Debug)]
+pub struct MockConfig {
+    pub vocab: usize,
+    /// Extra Medusa heads (M).
+    pub medusa_heads: usize,
+    pub max_src: usize,
+    pub max_tgt: usize,
+    /// Percent of positions where Medusa head h (1-based) emits the
+    /// correct token; decays with h: `acc = base_acc - decay * h`.
+    pub head_base_acc: u32,
+    pub head_acc_decay: u32,
+    /// Seed for the deterministic corruption hash.
+    pub seed: u64,
+}
+
+impl Default for MockConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 26,
+            medusa_heads: 6,
+            max_src: 64,
+            max_tgt: 72,
+            head_base_acc: 95,
+            head_acc_decay: 4,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Deterministic mock model. Thread-safe; counts calls.
+pub struct MockModel {
+    cfg: MockConfig,
+    store: Mutex<HashMap<u64, Vec<Vec<i32>>>>,
+    next_id: AtomicU64,
+    pub encode_calls: AtomicU64,
+    pub decode_calls: AtomicU64,
+}
+
+impl MockModel {
+    pub fn new(cfg: MockConfig) -> Self {
+        Self {
+            cfg,
+            store: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            encode_calls: AtomicU64::new(0),
+            decode_calls: AtomicU64::new(0),
+        }
+    }
+
+    fn hash(&self, a: u64, b: u64, c: u64) -> u64 {
+        let mut x = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(a)
+            .wrapping_mul(0xBF58476D1CE4E5B9)
+            .wrapping_add(b)
+            .wrapping_mul(0x94D049BB133111EB)
+            .wrapping_add(c);
+        x ^= x >> 31;
+        x = x.wrapping_mul(0xD6E8FEB86659FD93);
+        x ^ (x >> 32)
+    }
+
+    /// The "true" next token for head `h` at decoder position `p`:
+    /// `src[p + 1 + h]`, or EOS past the end.
+    fn oracle(&self, src: &[i32], p: usize, h: usize) -> i32 {
+        let idx = p + 1 + h;
+        // src = [BOS, t1..tn, EOS]; target = [t1..tn, EOS]: the token at
+        // target position q is src[q + 1]. Decoder position p predicts
+        // target position p, i.e. src[p + 1]; head h shifts h more.
+        if idx < src.len() {
+            src[idx]
+        } else {
+            EOS
+        }
+    }
+
+    /// A deterministic wrong-but-plausible alternative token.
+    fn alt(&self, correct: i32, p: usize) -> i32 {
+        let v = self.cfg.vocab as i32;
+        let cand = 4 + ((correct + 7 + p as i32) % (v - 4).max(1));
+        if cand == correct {
+            4 + ((cand + 1 - 4) % (v - 4).max(1))
+        } else {
+            cand
+        }
+    }
+}
+
+impl StepModel for MockModel {
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn medusa_heads(&self) -> usize {
+        self.cfg.medusa_heads
+    }
+
+    fn max_src(&self) -> usize {
+        self.cfg.max_src
+    }
+
+    fn max_tgt(&self) -> usize {
+        self.cfg.max_tgt
+    }
+
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        self.encode_calls.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.store.lock().unwrap().insert(id, src.to_vec());
+        Ok(MemHandle(id))
+    }
+
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        self.decode_calls.fetch_add(1, Ordering::Relaxed);
+        let store = self.store.lock().unwrap();
+        let heads = self.cfg.medusa_heads + 1;
+        let vocab = self.cfg.vocab;
+        let mut data = vec![0f32; rows.len() * win * heads * vocab];
+        let mut starts = Vec::with_capacity(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            let srcs = store
+                .get(&row.mem.0)
+                .ok_or_else(|| anyhow::anyhow!("unknown mem handle"))?;
+            let src = &srcs[row.mem_row];
+            // emulate the dynamic_slice clamp against the padded length
+            let padded = self.cfg.max_tgt;
+            let start = row.pos.min(padded - win);
+            starts.push(start);
+            for j in 0..win {
+                let p = start + j;
+                for h in 0..heads {
+                    let correct = self.oracle(src, p, h);
+                    // per-head deterministic corruption
+                    let emitted = if h == 0 {
+                        correct
+                    } else {
+                        let acc = self
+                            .cfg
+                            .head_base_acc
+                            .saturating_sub(self.cfg.head_acc_decay * h as u32);
+                        if (self.hash(row.mem.0 * 131 + row.mem_row as u64, p as u64, h as u64)
+                            % 100) < acc as u64
+                        {
+                            correct
+                        } else {
+                            self.alt(correct, p)
+                        }
+                    };
+                    let alt = self.alt(emitted, p);
+                    let base = ((r * win + j) * heads + h) * vocab;
+                    let slice = &mut data[base..base + vocab];
+                    for s in slice.iter_mut() {
+                        *s = -4.0;
+                    }
+                    slice[emitted as usize] = 8.0;
+                    slice[alt as usize] = 4.0;
+                }
+            }
+        }
+        Ok(DecodeOut {
+            data,
+            rows: rows.len(),
+            win,
+            heads,
+            vocab,
+            starts,
+            padded_rows: rows.len().next_power_of_two(),
+        })
+    }
+
+    fn release(&self, mem: MemHandle) {
+        self.store.lock().unwrap().remove(&mem.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::argmax;
+    use crate::tokenizer::BOS;
+
+    fn src_seq() -> Vec<i32> {
+        vec![BOS, 5, 6, 7, 8, 9, EOS]
+    }
+
+    #[test]
+    fn greedy_main_head_copies_source() {
+        let m = MockModel::new(MockConfig::default());
+        let h = m.encode(&[src_seq()]).unwrap();
+        let mut prefix = vec![BOS];
+        for _ in 0..10 {
+            let out = m
+                .decode(
+                    &[DecodeRow { mem: h, mem_row: 0, tgt: prefix.clone(), pos: prefix.len() - 1 }],
+                    1,
+                )
+                .unwrap();
+            let j = out.offset_of(0, prefix.len() - 1).unwrap();
+            let next = argmax(out.logits(0, j, 0)) as i32;
+            prefix.push(next);
+            if next == EOS {
+                break;
+            }
+        }
+        assert_eq!(prefix, vec![BOS, 5, 6, 7, 8, 9, EOS]);
+    }
+
+    #[test]
+    fn medusa_heads_predict_ahead() {
+        let m = MockModel::new(MockConfig { head_base_acc: 100, head_acc_decay: 0, ..Default::default() });
+        let h = m.encode(&[src_seq()]).unwrap();
+        let out = m
+            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .unwrap();
+        // head k at position 0 predicts src[1 + k]
+        for k in 0..=6 {
+            let expect = if 1 + k < 7 { src_seq()[1 + k] } else { EOS };
+            assert_eq!(argmax(out.logits(0, 0, k)) as i32, expect, "head {k}");
+        }
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_present() {
+        let cfg = MockConfig { head_base_acc: 50, head_acc_decay: 0, ..Default::default() };
+        let m1 = MockModel::new(cfg.clone());
+        let m2 = MockModel::new(cfg);
+        let h1 = m1.encode(&[src_seq()]).unwrap();
+        let h2 = m2.encode(&[src_seq()]).unwrap();
+        let r1 = m1.decode(&[DecodeRow { mem: h1, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1).unwrap();
+        let r2 = m2.decode(&[DecodeRow { mem: h2, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1).unwrap();
+        assert_eq!(r1.data, r2.data);
+        // at 50% accuracy some head must disagree with the oracle
+        let mut wrong = 0;
+        for k in 1..=6 {
+            let expect = if 1 + k < 7 { src_seq()[1 + k] } else { EOS };
+            if argmax(r1.logits(0, 0, k)) as i32 != expect {
+                wrong += 1;
+            }
+        }
+        assert!(wrong > 0);
+    }
+
+    #[test]
+    fn window_clamp_mirrors_dynamic_slice() {
+        let m = MockModel::new(MockConfig { max_tgt: 16, ..Default::default() });
+        let h = m.encode(&[src_seq()]).unwrap();
+        let out = m
+            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 14 }], 8)
+            .unwrap();
+        assert_eq!(out.starts[0], 8); // min(14, 16-8)
+    }
+
+    #[test]
+    fn release_frees_handle() {
+        let m = MockModel::new(MockConfig::default());
+        let h = m.encode(&[src_seq()]).unwrap();
+        m.release(h);
+        assert!(m
+            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .is_err());
+    }
+}

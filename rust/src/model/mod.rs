@@ -1,0 +1,210 @@
+//! The `StepModel` abstraction: what a single-step retrosynthesis model
+//! looks like to the decoding engines and the planner.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::PjrtModel`] — the real thing: AOT-compiled HLO
+//!   executed through the PJRT C API;
+//! * [`mock::MockModel`] — a deterministic, pure-Rust fake with the same
+//!   interface and Medusa-head semantics, used by unit/integration tests
+//!   and benches that must not depend on artifacts.
+//!
+//! The interface mirrors the exported executables (see
+//! `python/compile/aot.py`): `encode` turns token rows into an opaque
+//! memory handle; `decode` runs the decoder on a set of rows, returning
+//! main + Medusa-head logits for a *window* of positions per row.
+
+pub mod mock;
+
+use anyhow::Result;
+
+/// Opaque handle to encoder memory for a batch of sources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MemHandle(pub u64);
+
+/// One decoder row: a target prefix (optionally extended with a draft)
+/// over one encoded source.
+#[derive(Debug, Clone)]
+pub struct DecodeRow {
+    pub mem: MemHandle,
+    /// Row within the encoded batch.
+    pub mem_row: usize,
+    /// BOS-led decoder input (prefix ++ draft), unpadded.
+    pub tgt: Vec<i32>,
+    /// First position whose logits are needed (window start).
+    pub pos: usize,
+}
+
+/// Logits for a window of positions per row: `(rows, win, heads, vocab)`.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub win: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    /// Actual window start per row after the dynamic-slice clamp
+    /// (`min(pos, padded_len - win)`); callers index relative to this.
+    pub starts: Vec<usize>,
+    /// Padded row count actually submitted to the executable (the
+    /// effective batch size for Table 1C accounting).
+    pub padded_rows: usize,
+}
+
+impl DecodeOut {
+    /// Logits slice for `(row, window offset, head)`.
+    pub fn logits(&self, row: usize, j: usize, head: usize) -> &[f32] {
+        debug_assert!(row < self.rows && j < self.win && head < self.heads);
+        let base = ((row * self.win + j) * self.heads + head) * self.vocab;
+        &self.data[base..base + self.vocab]
+    }
+
+    /// Window offset for absolute position `pos` in row `row`, if inside.
+    pub fn offset_of(&self, row: usize, pos: usize) -> Option<usize> {
+        let start = self.starts[row];
+        if pos >= start && pos < start + self.win {
+            Some(pos - start)
+        } else {
+            None
+        }
+    }
+}
+
+/// A single-step model: encoder memory + windowed Medusa decode.
+///
+/// Deliberately *not* `Send + Sync`: the PJRT wrapper types are
+/// `Rc`-based. Multi-threaded users go through
+/// [`crate::runtime::server::SharedModel`], which serializes calls onto
+/// a dedicated model-executor thread (the natural shape for a
+/// single-accelerator serving system).
+pub trait StepModel {
+    /// Vocabulary size (ids `0..vocab`, specials per [`crate::tokenizer`]).
+    fn vocab(&self) -> usize;
+    // (blanket impls for Box/&T are below the trait definition)
+    /// Number of *extra* Medusa heads M (0 = plain transformer).
+    fn medusa_heads(&self) -> usize;
+    /// Maximum source length (tokens incl. BOS/EOS).
+    fn max_src(&self) -> usize;
+    /// Maximum target length.
+    fn max_tgt(&self) -> usize;
+    /// Encode a batch of sources (unpadded token rows). The handle stays
+    /// valid until [`StepModel::release`].
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle>;
+    /// Run the decoder on `rows`, returning a `win`-wide logits window
+    /// per row. One invocation = one model call (Table 1B accounting).
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut>;
+    /// Drop an encoded batch.
+    fn release(&self, mem: MemHandle);
+}
+
+impl<T: StepModel + ?Sized> StepModel for Box<T> {
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+    fn medusa_heads(&self) -> usize {
+        (**self).medusa_heads()
+    }
+    fn max_src(&self) -> usize {
+        (**self).max_src()
+    }
+    fn max_tgt(&self) -> usize {
+        (**self).max_tgt()
+    }
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        (**self).encode(src)
+    }
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        (**self).decode(rows, win)
+    }
+    fn release(&self, mem: MemHandle) {
+        (**self).release(mem)
+    }
+}
+
+/// Log-softmax over a logits slice (f64 accumulation for stability).
+pub fn log_softmax(logits: &[f32]) -> Vec<f64> {
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - mx).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let lz = z.ln();
+    for e in exps.iter_mut() {
+        *e = *e; // keep layout
+    }
+    logits.iter().map(|&x| (x as f64) - mx - lz).collect()
+}
+
+/// Softmax probabilities.
+pub fn softmax(logits: &[f32]) -> Vec<f64> {
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - mx).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Argmax index of a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the top-`k` entries, descending.
+pub fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let z: f64 = ls.iter().map(|l| l.exp()).sum();
+        assert!((z - 1.0).abs() < 1e-9);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn softmax_matches_log_softmax() {
+        let logits = [0.5f32, -1.0, 2.0, 0.0];
+        let p = softmax(&logits);
+        let lp = log_softmax(&logits);
+        for (a, b) in p.iter().zip(lp.iter()) {
+            assert!((a.ln() - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn top_k_and_argmax() {
+        let xs = [0.1f64, 0.7, 0.2];
+        assert_eq!(top_k(&xs, 2), vec![1, 2]);
+        assert_eq!(argmax(&[0.1f32, 0.7, 0.2]), 1);
+    }
+
+    #[test]
+    fn decode_out_indexing() {
+        // rows=1, win=2, heads=2, vocab=3
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let out = DecodeOut {
+            data,
+            rows: 1,
+            win: 2,
+            heads: 2,
+            vocab: 3,
+            starts: vec![4],
+            padded_rows: 1,
+        };
+        assert_eq!(out.logits(0, 0, 0), &[0.0, 1.0, 2.0]);
+        assert_eq!(out.logits(0, 1, 1), &[9.0, 10.0, 11.0]);
+        assert_eq!(out.offset_of(0, 5), Some(1));
+        assert_eq!(out.offset_of(0, 3), None);
+    }
+}

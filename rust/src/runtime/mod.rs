@@ -1,0 +1,425 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and serve them
+//! behind the [`StepModel`] trait.
+//!
+//! The artifact contract (see `python/compile/aot.py`):
+//!
+//! * `params.npz` — trained parameters, uploaded to device once at
+//!   startup and passed positionally (order = `model_config.json`
+//!   `param_names`) to every executable;
+//! * `encode_b{B}.hlo.txt` — `(params..., src i32[B, Ls]) -> f32[B, Ls, D]`;
+//! * `decode_r{R}_l{L}_w{W}.hlo.txt` —
+//!   `(params..., mem, mask, tgt, pos) -> f32[R, W, H, V]`;
+//! * HLO **text** interchange (the image's xla_extension rejects jax's
+//!   64-bit-id serialized protos).
+//!
+//! Executables are compiled lazily per bucket and cached for the process
+//! lifetime. Encoder memory is read back to the host once per encode and
+//! re-packed per decode call, because decode batches freely mix rows
+//! from different encode batches (cross-tree batching in the
+//! coordinator); at the CPU-plugin scale this is a memcpy, not a PCIe
+//! transfer.
+
+use crate::jsonx::Json;
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use crate::tokenizer::PAD;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Model/runtime configuration loaded from `model_config.json` +
+/// `aot_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_medusa: usize,
+    pub max_src: usize,
+    pub max_tgt: usize,
+    pub enc_buckets: Vec<usize>,
+    pub dec_row_buckets: Vec<usize>,
+    pub dec_len_buckets: Vec<usize>,
+    pub dec_win_buckets: Vec<usize>,
+    pub param_names: Vec<String>,
+}
+
+impl RuntimeConfig {
+    pub fn load(art: &Path) -> Result<Self> {
+        let mc = Json::parse(
+            &std::fs::read_to_string(art.join("model_config.json"))
+                .context("model_config.json")?,
+        )
+        .map_err(|e| anyhow!("model_config.json: {e}"))?;
+        let am = Json::parse(
+            &std::fs::read_to_string(art.join("aot_manifest.json"))
+                .context("aot_manifest.json")?,
+        )
+        .map_err(|e| anyhow!("aot_manifest.json: {e}"))?;
+        let model = mc.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let usize_of = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let bucket_list = |k: &str| -> Result<Vec<usize>> {
+            Ok(am
+                .get(k)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing {k}"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect())
+        };
+        Ok(Self {
+            vocab: usize_of(model, "vocab")?,
+            d_model: usize_of(model, "d_model")?,
+            n_medusa: usize_of(model, "n_medusa")?,
+            max_src: usize_of(model, "max_src")?,
+            max_tgt: usize_of(model, "max_tgt")?,
+            enc_buckets: bucket_list("enc_buckets")?,
+            dec_row_buckets: bucket_list("dec_row_buckets")?,
+            dec_len_buckets: bucket_list("dec_len_buckets")?,
+            dec_win_buckets: bucket_list("dec_win_buckets")?,
+            param_names: mc
+                .get("param_names")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing param_names"))?
+                .iter()
+                .filter_map(|x| x.as_str().map(String::from))
+                .collect(),
+        })
+    }
+}
+
+/// Host-side copy of one encode batch: memory rows + masks.
+struct HostMem {
+    /// (rows, Ls, D) flattened.
+    mem: Vec<f32>,
+    /// (rows, Ls) flattened.
+    mask: Vec<f32>,
+    rows: usize,
+}
+
+/// The real [`StepModel`]: PJRT CPU client over the AOT artifacts.
+pub struct PjrtModel {
+    cfg: RuntimeConfig,
+    client: xla::PjRtClient,
+    params: Vec<xla::PjRtBuffer>,
+    art: PathBuf,
+    encodes: Mutex<HashMap<usize, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    decodes: Mutex<HashMap<(usize, usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    mems: Mutex<HashMap<u64, HostMem>>,
+    next_id: AtomicU64,
+    /// Cumulative executable-compile time (startup cost accounting).
+    pub compile_secs: Mutex<f64>,
+}
+
+impl PjrtModel {
+    /// Load artifacts from a directory (`artifacts/` by default).
+    pub fn load(art: impl AsRef<Path>) -> Result<Self> {
+        let art = art.as_ref().to_path_buf();
+        let cfg = RuntimeConfig::load(&art)?;
+        let client = xla::PjRtClient::cpu()?;
+        // Upload parameters once, in manifest order.
+        //
+        // NOTE: `PjRtBuffer::read_npz` in xla 0.1.6 passes the Rust
+        // `ElementType` discriminant where the C API expects the XLA
+        // `PrimitiveType` value (off by one: F32=10 lands on F16), so we
+        // go through `Literal::read_npz` + the typed buffer path, which
+        // converts correctly.
+        use xla::FromRawBytes;
+        let mut named: HashMap<String, xla::Literal> =
+            xla::Literal::read_npz(art.join("params.npz"), &())?
+                .into_iter()
+                .collect();
+        let mut params = Vec::with_capacity(cfg.param_names.len());
+        for name in &cfg.param_names {
+            let lit = named
+                .remove(name)
+                .ok_or_else(|| anyhow!("params.npz missing {name}"))?;
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>().with_context(|| format!("param {name} as f32"))?;
+            params.push(client.buffer_from_host_buffer(&data, &dims, None)?);
+        }
+        Ok(Self {
+            cfg,
+            client,
+            params,
+            art,
+            encodes: Mutex::new(HashMap::new()),
+            decodes: Mutex::new(HashMap::new()),
+            mems: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            compile_secs: Mutex::new(0.0),
+        })
+    }
+
+    pub fn config(&self) -> &RuntimeConfig {
+        &self.cfg
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        *self.compile_secs.lock().unwrap() += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    fn encode_exe(&self, bucket: usize) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut map = self.encodes.lock().unwrap();
+        if let Some(e) = map.get(&bucket) {
+            return Ok(e.clone());
+        }
+        let path = self.art.join(format!("encode_b{bucket}.hlo.txt"));
+        let exe = std::sync::Arc::new(self.compile(&path)?);
+        map.insert(bucket, exe.clone());
+        Ok(exe)
+    }
+
+    fn decode_exe(
+        &self,
+        r: usize,
+        l: usize,
+        w: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut map = self.decodes.lock().unwrap();
+        if let Some(e) = map.get(&(r, l, w)) {
+            return Ok(e.clone());
+        }
+        let path = self.art.join(format!("decode_r{r}_l{l}_w{w}.hlo.txt"));
+        let exe = std::sync::Arc::new(self.compile(&path)?);
+        map.insert((r, l, w), exe.clone());
+        Ok(exe)
+    }
+
+    fn pick_bucket(buckets: &[usize], n: usize) -> Result<usize> {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow!("no bucket >= {n} in {buckets:?}"))
+    }
+
+    /// Execute one decode chunk of at most `max(dec_row_buckets)` rows.
+    fn decode_chunk(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        let cfg = &self.cfg;
+        let w = Self::pick_bucket(&cfg.dec_win_buckets, win)?;
+        let need_len = rows
+            .iter()
+            .map(|r| r.tgt.len().max(r.pos + 1))
+            .max()
+            .unwrap_or(1)
+            .max(w);
+        let l = Self::pick_bucket(&cfg.dec_len_buckets, need_len)?;
+        let rb = Self::pick_bucket(&cfg.dec_row_buckets, rows.len())?;
+        let ls = cfg.max_src;
+        let d = cfg.d_model;
+
+        // Gather memory/mask rows.
+        let mems = self.mems.lock().unwrap();
+        let mut mem = vec![0f32; rb * ls * d];
+        let mut mask = vec![0f32; rb * ls];
+        let mut tgt = vec![PAD; rb * l];
+        let mut pos = vec![0i32; rb];
+        for (i, row) in rows.iter().enumerate() {
+            let hm = mems
+                .get(&row.mem.0)
+                .ok_or_else(|| anyhow!("unknown mem handle {:?}", row.mem))?;
+            if row.mem_row >= hm.rows {
+                bail!("mem row {} out of range {}", row.mem_row, hm.rows);
+            }
+            mem[i * ls * d..(i + 1) * ls * d]
+                .copy_from_slice(&hm.mem[row.mem_row * ls * d..(row.mem_row + 1) * ls * d]);
+            mask[i * ls..(i + 1) * ls]
+                .copy_from_slice(&hm.mask[row.mem_row * ls..(row.mem_row + 1) * ls]);
+            let n = row.tgt.len().min(l);
+            tgt[i * l..i * l + n].copy_from_slice(&row.tgt[..n]);
+            pos[i] = row.pos.min(l - 1) as i32;
+        }
+        drop(mems);
+
+        let exe = self.decode_exe(rb, l, w)?;
+        let mem_b = self.client.buffer_from_host_buffer(&mem, &[rb, ls, d], None)?;
+        let mask_b = self.client.buffer_from_host_buffer(&mask, &[rb, ls], None)?;
+        let tgt_b = self.client.buffer_from_host_buffer(&tgt, &[rb, l], None)?;
+        let pos_b = self.client.buffer_from_host_buffer(&pos, &[rb], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&mem_b);
+        args.push(&mask_b);
+        args.push(&tgt_b);
+        args.push(&pos_b);
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let data = lit.to_vec::<f32>()?;
+
+        let heads = cfg.n_medusa + 1;
+        let vocab = cfg.vocab;
+        // Trim padded rows; compute clamped starts (mirror dynamic_slice).
+        let row_elems = w * heads * vocab;
+        let starts: Vec<usize> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| (pos[i] as usize).min(l - w))
+            .collect();
+        Ok(DecodeOut {
+            data: data[..rows.len() * row_elems].to_vec(),
+            rows: rows.len(),
+            win: w,
+            heads,
+            vocab,
+            starts,
+            padded_rows: rb,
+        })
+    }
+}
+
+impl StepModel for PjrtModel {
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn medusa_heads(&self) -> usize {
+        self.cfg.n_medusa
+    }
+
+    fn max_src(&self) -> usize {
+        self.cfg.max_src
+    }
+
+    fn max_tgt(&self) -> usize {
+        self.cfg.max_tgt
+    }
+
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        let cfg = &self.cfg;
+        let ls = cfg.max_src;
+        let d = cfg.d_model;
+        let rows = src.len();
+        anyhow::ensure!(rows > 0, "empty encode batch");
+        let mut mem_all = vec![0f32; rows * ls * d];
+        let mut mask_all = vec![0f32; rows * ls];
+        // Process in bucket-sized chunks.
+        let max_bucket = *cfg.enc_buckets.iter().max().unwrap();
+        let mut done = 0usize;
+        while done < rows {
+            let n = (rows - done).min(max_bucket);
+            let b = Self::pick_bucket(&cfg.enc_buckets, n)?;
+            let mut toks = vec![PAD; b * ls];
+            for i in 0..n {
+                let s = &src[done + i];
+                anyhow::ensure!(
+                    s.len() <= ls,
+                    "source length {} exceeds max_src {}",
+                    s.len(),
+                    ls
+                );
+                toks[i * ls..i * ls + s.len()].copy_from_slice(s);
+                for (j, &t) in s.iter().enumerate() {
+                    if t != PAD {
+                        mask_all[(done + i) * ls + j] = 1.0;
+                    }
+                }
+            }
+            let exe = self.encode_exe(b)?;
+            let src_b = self.client.buffer_from_host_buffer(&toks, &[b, ls], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+            args.push(&src_b);
+            let result = exe.execute_b(&args)?;
+            let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+            let data = lit.to_vec::<f32>()?;
+            mem_all[done * ls * d..(done + n) * ls * d].copy_from_slice(&data[..n * ls * d]);
+            done += n;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.mems
+            .lock()
+            .unwrap()
+            .insert(id, HostMem { mem: mem_all, mask: mask_all, rows });
+        Ok(MemHandle(id))
+    }
+
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        anyhow::ensure!(!rows.is_empty(), "empty decode batch");
+        let max_rows = *self.cfg.dec_row_buckets.iter().max().unwrap();
+        if rows.len() <= max_rows {
+            return self.decode_chunk(rows, win);
+        }
+        // Oversized batches split transparently; the result is stitched
+        // back together (window size must agree across chunks, so we pin
+        // it to the bucket chosen for the first chunk).
+        let mut out: Option<DecodeOut> = None;
+        for chunk in rows.chunks(max_rows) {
+            let part = self.decode_chunk(chunk, win)?;
+            match &mut out {
+                None => out = Some(part),
+                Some(acc) => {
+                    anyhow::ensure!(acc.win == part.win, "window bucket mismatch across chunks");
+                    acc.data.extend_from_slice(&part.data);
+                    acc.rows += part.rows;
+                    acc.starts.extend_from_slice(&part.starts);
+                    acc.padded_rows += part.padded_rows;
+                }
+            }
+        }
+        Ok(out.unwrap())
+    }
+
+    fn release(&self, mem: MemHandle) {
+        self.mems.lock().unwrap().remove(&mem.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        assert_eq!(PjrtModel::pick_bucket(&[1, 2, 4, 8], 3).unwrap(), 4);
+        assert_eq!(PjrtModel::pick_bucket(&[1, 2, 4, 8], 1).unwrap(), 1);
+        assert_eq!(PjrtModel::pick_bucket(&[1, 2, 4, 8], 8).unwrap(), 8);
+        assert!(PjrtModel::pick_bucket(&[1, 2, 4, 8], 9).is_err());
+    }
+}
+
+pub mod server;
+
+impl PjrtModel {
+    /// Test-only: host copy of an encoded batch's memory.
+    pub fn debug_mem(&self, mem: crate::model::MemHandle) -> Option<Vec<f32>> {
+        self.mems.lock().unwrap().get(&mem.0).map(|h| h.mem.clone())
+    }
+
+    /// Eagerly compile the executables a workload will touch so compile
+    /// time stays out of measured windows. `max_rows` bounds the decode
+    /// row buckets compiled (e.g. `B*K` for a Table 1 sweep).
+    pub fn precompile(&self, max_enc_rows: usize, max_rows: usize, wins: &[usize]) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        for &b in self.cfg.enc_buckets.clone().iter().filter(|&&b| b <= max_enc_rows.max(1)) {
+            self.encode_exe(b)?;
+        }
+        let rows: Vec<usize> = self
+            .cfg
+            .dec_row_buckets
+            .iter()
+            .copied()
+            .filter(|&r| r <= max_rows.max(1) * 2)
+            .collect();
+        for &r in &rows {
+            for &l in self.cfg.dec_len_buckets.clone().iter() {
+                for &w in wins {
+                    if w <= l {
+                        self.decode_exe(r, l, w)?;
+                    }
+                }
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}

@@ -1,0 +1,197 @@
+//! Model-executor thread: makes a non-`Send` [`StepModel`] usable from
+//! many threads by serializing calls through a channel.
+//!
+//! This is the standard single-accelerator serving shape: one thread
+//! owns the device and executes requests in arrival order; callers hold
+//! a cheap cloneable [`SharedModel`] handle. The coordinator's dynamic
+//! batcher (see [`crate::coordinator`]) builds on this by merging
+//! expansion requests *before* they reach the executor.
+
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Req {
+    Encode(Vec<Vec<i32>>, mpsc::SyncSender<Result<MemHandle>>),
+    Decode(Vec<DecodeRow>, usize, mpsc::SyncSender<Result<DecodeOut>>),
+    Release(MemHandle),
+    Shutdown,
+}
+
+/// Static model metadata mirrored on the handle (so accessor methods
+/// need no round-trip).
+#[derive(Clone, Copy, Debug)]
+struct Meta {
+    vocab: usize,
+    medusa_heads: usize,
+    max_src: usize,
+    max_tgt: usize,
+}
+
+/// Cloneable, thread-safe handle to a model running on its own thread.
+#[derive(Clone)]
+pub struct SharedModel {
+    tx: mpsc::Sender<Req>,
+    meta: Meta,
+    // Keep the join handle so the executor thread is reaped on drop of
+    // the last handle.
+    _joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: Mutex<Option<mpsc::Sender<Req>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.lock().unwrap().take() {
+            let _ = tx.send(Req::Shutdown);
+        }
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl SharedModel {
+    /// Spawn the executor thread. `make` builds the model *on* that
+    /// thread (required: PJRT types are not `Send`).
+    pub fn spawn<F, M>(make: F) -> Result<SharedModel>
+    where
+        F: FnOnce() -> Result<M> + Send + 'static,
+        M: StepModel + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (meta_tx, meta_rx) = mpsc::sync_channel::<Result<Meta>>(1);
+        let handle = std::thread::Builder::new()
+            .name("model-executor".into())
+            .spawn(move || {
+                let model = match make() {
+                    Ok(m) => {
+                        let _ = meta_tx.send(Ok(Meta {
+                            vocab: m.vocab(),
+                            medusa_heads: m.medusa_heads(),
+                            max_src: m.max_src(),
+                            max_tgt: m.max_tgt(),
+                        }));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = meta_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Encode(src, reply) => {
+                            let _ = reply.send(model.encode(&src));
+                        }
+                        Req::Decode(rows, win, reply) => {
+                            let _ = reply.send(model.decode(&rows, win));
+                        }
+                        Req::Release(h) => model.release(h),
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        let meta = meta_rx
+            .recv()
+            .map_err(|_| anyhow!("model thread died during startup"))??;
+        Ok(SharedModel {
+            tx: tx.clone(),
+            meta,
+            _joiner: Arc::new(Joiner {
+                tx: Mutex::new(Some(tx)),
+                handle: Mutex::new(Some(handle)),
+            }),
+        })
+    }
+}
+
+impl StepModel for SharedModel {
+    fn vocab(&self) -> usize {
+        self.meta.vocab
+    }
+
+    fn medusa_heads(&self) -> usize {
+        self.meta.medusa_heads
+    }
+
+    fn max_src(&self) -> usize {
+        self.meta.max_src
+    }
+
+    fn max_tgt(&self) -> usize {
+        self.meta.max_tgt
+    }
+
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req::Encode(src.to_vec(), tx))
+            .map_err(|_| anyhow!("model thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("model thread gone"))?
+    }
+
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req::Decode(rows.to_vec(), win, tx))
+            .map_err(|_| anyhow!("model thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("model thread gone"))?
+    }
+
+    fn release(&self, mem: MemHandle) {
+        let _ = self.tx.send(Req::Release(mem));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mock::{MockConfig, MockModel};
+    use crate::tokenizer::{BOS, EOS};
+
+    #[test]
+    fn shared_model_round_trip() {
+        let shared =
+            SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
+        let h = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        let out = shared
+            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .unwrap();
+        assert_eq!(out.rows, 1);
+        shared.release(h);
+        assert_eq!(shared.vocab(), 26);
+        assert_eq!(shared.medusa_heads(), 6);
+    }
+
+    #[test]
+    fn shared_model_usable_from_many_threads() {
+        let shared =
+            SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let m = shared.clone();
+            joins.push(std::thread::spawn(move || {
+                let h = m.encode(&[vec![BOS, 5 + t, 6, EOS]]).unwrap();
+                let out = m
+                    .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+                    .unwrap();
+                m.release(h);
+                out.rows
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn spawn_error_propagates() {
+        let r = SharedModel::spawn(|| -> Result<MockModel> { anyhow::bail!("boom") });
+        assert!(r.is_err());
+    }
+}

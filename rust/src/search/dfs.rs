@@ -1,0 +1,192 @@
+//! Depth-first search planner (Table 3's "DFS" rows): greedily follow
+//! the highest-probability proposals, backtracking on failure, first
+//! closed route wins.
+
+use super::policy::ExpansionPolicy;
+use super::retrostar::DecodeDelta;
+use super::routes::Route;
+use super::{Planner, SearchLimits, SolveResult, Stock};
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// Depth-first planner.
+#[derive(Clone, Debug, Default)]
+pub struct Dfs;
+
+struct Ctx<'a> {
+    policy: &'a dyn ExpansionPolicy,
+    stock: &'a Stock,
+    limits: &'a SearchLimits,
+    t0: std::time::Instant,
+    iterations: usize,
+    expansions: usize,
+    /// (smiles, remaining budget) proven unsolvable.
+    failed: HashSet<(String, usize)>,
+}
+
+impl<'a> Ctx<'a> {
+    fn out_of_budget(&self) -> bool {
+        self.t0.elapsed() >= self.limits.deadline
+            || self.iterations >= self.limits.max_iterations
+    }
+
+    fn solve_mol(&mut self, smiles: &str, budget: usize, path: &mut Vec<String>) -> Result<Option<Route>> {
+        if self.stock.contains(smiles) {
+            return Ok(Some(Route::Leaf { smiles: smiles.to_string() }));
+        }
+        if budget == 0 || self.out_of_budget() {
+            return Ok(None);
+        }
+        if self.failed.contains(&(smiles.to_string(), budget)) {
+            return Ok(None);
+        }
+        if path.iter().any(|p| p == smiles) {
+            return Ok(None); // cycle
+        }
+        path.push(smiles.to_string());
+        self.iterations += 1;
+        self.expansions += 1;
+        let mut proposals = self
+            .policy
+            .expand_batch(&[smiles], self.limits.expansions_per_step)?
+            .pop()
+            .unwrap_or_default();
+        proposals.sort_by(|a, b| b.logp.partial_cmp(&a.logp).unwrap_or(std::cmp::Ordering::Equal));
+        for p in proposals {
+            if self.out_of_budget() {
+                break;
+            }
+            if p.reactants.iter().any(|r| r == smiles) {
+                continue;
+            }
+            let mut children = Vec::with_capacity(p.reactants.len());
+            let mut ok = true;
+            for r in &p.reactants {
+                match self.solve_mol(r, budget - 1, path)? {
+                    Some(route) => children.push(route),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                path.pop();
+                return Ok(Some(Route::Step {
+                    smiles: smiles.to_string(),
+                    logp: p.logp,
+                    children,
+                }));
+            }
+        }
+        path.pop();
+        self.failed.insert((smiles.to_string(), budget));
+        Ok(None)
+    }
+}
+
+impl Planner for Dfs {
+    fn name(&self) -> &'static str {
+        "dfs"
+    }
+
+    fn solve(
+        &self,
+        target: &str,
+        policy: &dyn ExpansionPolicy,
+        stock: &Stock,
+        limits: &SearchLimits,
+    ) -> Result<SolveResult> {
+        let t0 = std::time::Instant::now();
+        let target = crate::chem::canonicalize(target)
+            .map_err(|e| anyhow::anyhow!("target does not parse: {e}"))?;
+        let stats0 = policy.decode_stats();
+        let mut ctx = Ctx {
+            policy,
+            stock,
+            limits,
+            t0,
+            iterations: 0,
+            expansions: 0,
+            failed: HashSet::new(),
+        };
+        let mut path = Vec::new();
+        let route = ctx.solve_mol(&target, limits.max_depth, &mut path)?;
+        Ok(SolveResult {
+            solved: route.is_some(),
+            route,
+            iterations: ctx.iterations,
+            expansions: ctx.expansions,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            decode_stats: DecodeDelta::delta(policy, &stats0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::policy::OraclePolicy;
+
+    /// Stock from human-spelled SMILES (canonicalized).
+    fn stock_of(items: &[&str]) -> Stock {
+        Stock::from_iter(items.iter().map(|s| crate::chem::canonicalize(s).unwrap()))
+    }
+
+    fn limits() -> SearchLimits {
+        SearchLimits {
+            deadline: std::time::Duration::from_secs(10),
+            max_iterations: 500,
+            max_depth: 5,
+            expansions_per_step: 10,
+        }
+    }
+
+    #[test]
+    fn dfs_solves_amide() {
+        let stock = stock_of(&["CC(=O)O", "CN"]);
+        let r = Dfs.solve("CC(=O)NC", &OraclePolicy::new(), &stock, &limits()).unwrap();
+        assert!(r.solved);
+        assert!(r.route.unwrap().closed_over(&stock));
+    }
+
+    #[test]
+    fn dfs_two_step() {
+        let stock = stock_of(&["CC(=O)O",
+            "NCC(=O)O",
+            "CCO"]);
+        let r = Dfs.solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &limits()).unwrap();
+        assert!(r.solved, "{r:?}");
+        assert!(r.route.unwrap().depth() >= 2);
+    }
+
+    #[test]
+    fn dfs_respects_depth_budget() {
+        let stock = stock_of(&["CC(=O)O",
+            "NCC(=O)O",
+            "CCO"]);
+        let mut lim = limits();
+        lim.max_depth = 1;
+        let r = Dfs.solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &lim).unwrap();
+        assert!(!r.solved);
+    }
+
+    #[test]
+    fn dfs_memoizes_failures() {
+        let stock = stock_of(&["CCO"]);
+        let policy = OraclePolicy::new();
+        let r = Dfs.solve("CC(=O)NCC(=O)OCC", &policy, &stock, &limits()).unwrap();
+        assert!(!r.solved);
+        // expansions are bounded by distinct (molecule, budget) pairs,
+        // far below the iteration cap
+        assert!(r.expansions < 200, "{}", r.expansions);
+    }
+
+    #[test]
+    fn dfs_in_stock_target() {
+        let stock = stock_of(&["CCO"]);
+        let r = Dfs.solve("CCO", &OraclePolicy::new(), &stock, &limits()).unwrap();
+        assert!(r.solved);
+        assert_eq!(r.iterations, 0);
+    }
+}

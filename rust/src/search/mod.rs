@@ -1,0 +1,76 @@
+//! Multi-step synthesis planning: the AiZynthFinder-shaped planner.
+//!
+//! * [`stock`] — building-block membership (the PaRoutes-stock stand-in);
+//! * [`policy`] — single-step expansion policies: the neural
+//!   [`policy::ModelPolicy`] (any [`crate::decoding::Decoder`] over any
+//!   [`crate::model::StepModel`]) and the rule-based
+//!   [`policy::OraclePolicy`] (SynthChem templates; used for tests and
+//!   as a sanity baseline);
+//! * [`retrostar`] — Retro\* (AND–OR graph best-first search with
+//!   optional beam-width batching, Table 4);
+//! * [`dfs`] — depth-first search (Table 3's DFS rows);
+//! * [`routes`] — extracted synthesis routes.
+//!
+//! The planner stops at the *first* closed route (the paper's protocol),
+//! under a wall-clock deadline, iteration cap and depth cap.
+
+pub mod dfs;
+pub mod policy;
+pub mod retrostar;
+pub mod routes;
+pub mod stock;
+
+use crate::decoding::DecodeStats;
+use anyhow::Result;
+pub use policy::{ExpansionPolicy, Proposal};
+pub use routes::Route;
+pub use stock::Stock;
+
+/// Search-algorithm-independent limits (paper: 5 s / 15 s deadline,
+/// depth <= 5, <= 35,000 iterations; ours are configurable since the
+/// testbed is a single CPU core).
+#[derive(Clone, Debug)]
+pub struct SearchLimits {
+    pub deadline: std::time::Duration,
+    pub max_iterations: usize,
+    pub max_depth: usize,
+    /// Precursor sets requested per expansion (paper: 10).
+    pub expansions_per_step: usize,
+}
+
+impl Default for SearchLimits {
+    fn default() -> Self {
+        Self {
+            deadline: std::time::Duration::from_secs(5),
+            max_iterations: 35_000,
+            max_depth: 5,
+            expansions_per_step: 10,
+        }
+    }
+}
+
+/// Outcome of one planning query.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub solved: bool,
+    pub route: Option<Route>,
+    /// Search-algorithm iterations (Retro\*: queue pops; DFS: expansions).
+    pub iterations: usize,
+    /// Single-step policy invocations (expansion batches).
+    pub expansions: usize,
+    pub wall_secs: f64,
+    /// Aggregated decoding statistics from the policy.
+    pub decode_stats: DecodeStats,
+}
+
+/// A planning algorithm.
+pub trait Planner {
+    fn name(&self) -> &'static str;
+    fn solve(
+        &self,
+        target: &str,
+        policy: &dyn ExpansionPolicy,
+        stock: &Stock,
+        limits: &SearchLimits,
+    ) -> Result<SolveResult>;
+}

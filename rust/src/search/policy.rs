@@ -1,0 +1,296 @@
+//! Single-step expansion policies.
+//!
+//! [`ModelPolicy`] is the production path: tokenize the product, run a
+//! decoding engine ([`crate::decoding::Decoder`]) over the
+//! [`crate::model::StepModel`], then parse/validate/canonicalize the
+//! generated reactant sets (Table 2's invalid-SMILES accounting happens
+//! here). [`OraclePolicy`] replays the SynthChem retro templates — a
+//! deterministic reference used by planner tests and as a non-neural
+//! baseline.
+
+use crate::chem;
+use crate::decoding::{DecodeStats, Decoder};
+use crate::model::StepModel;
+use crate::synthchem;
+use crate::tokenizer::Vocab;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// One proposed precursor set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Proposal {
+    /// Canonical SMILES of each reactant, sorted.
+    pub reactants: Vec<String>,
+    /// Log-probability of the generated sequence (the paper's guiding
+    /// signal: "only the reactant probability").
+    pub logp: f64,
+}
+
+/// A single-step expansion policy: batched, returns up to `k` proposals
+/// per molecule.
+pub trait ExpansionPolicy {
+    /// Expand a batch of canonical product SMILES.
+    fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>>;
+    /// Cumulative decoding stats (zero for non-neural policies).
+    fn decode_stats(&self) -> DecodeStats {
+        DecodeStats::default()
+    }
+    /// Number of policy invocations so far.
+    fn calls(&self) -> usize;
+}
+
+/// Neural policy: decoder over a `StepModel`, with an expansion cache
+/// (planners revisit molecules constantly; AiZynthFinder caches too).
+pub struct ModelPolicy<M: StepModel> {
+    model: M,
+    decoder: Box<dyn Decoder>,
+    vocab: Vocab,
+    cache: RefCell<HashMap<(String, usize), Vec<Proposal>>>,
+    stats: RefCell<DecodeStats>,
+    calls: RefCell<usize>,
+    /// Count of hypotheses that failed SMILES validation (Table 2).
+    pub invalid_count: RefCell<usize>,
+    pub total_hyps: RefCell<usize>,
+}
+
+impl<M: StepModel> ModelPolicy<M> {
+    pub fn new(model: M, decoder: Box<dyn Decoder>, vocab: Vocab) -> Self {
+        Self {
+            model,
+            decoder,
+            vocab,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(DecodeStats::default()),
+            calls: RefCell::new(0),
+            invalid_count: RefCell::new(0),
+            total_hyps: RefCell::new(0),
+        }
+    }
+
+    pub fn decoder_name(&self) -> &'static str {
+        self.decoder.name()
+    }
+}
+
+/// Turn one generated hypothesis into a proposal (validate +
+/// canonicalize each component; reject no-ops and oversized sets).
+/// Shared by [`ModelPolicy`] and the coordinator's batched policy.
+pub fn hyp_to_proposal(
+    vocab: &Vocab,
+    product: &str,
+    tokens: &[i32],
+    logp: f64,
+) -> Option<Proposal> {
+    let text = vocab.decode(tokens);
+    let mut reactants = Vec::new();
+    for part in chem::split_components(&text) {
+        let canon = chem::canonicalize(part).ok()?;
+        reactants.push(canon);
+    }
+    if reactants.is_empty() || reactants.len() > 3 {
+        return None;
+    }
+    reactants.sort();
+    // reject identity proposals (product -> product)
+    if reactants.len() == 1 && reactants[0] == product {
+        return None;
+    }
+    Some(Proposal { reactants, logp })
+}
+
+/// Convert a full [`crate::decoding::GenOutput`] into deduplicated
+/// proposals, updating invalid/total counters (Table 2 accounting).
+pub fn proposals_from_output(
+    vocab: &Vocab,
+    product: &str,
+    gen: &crate::decoding::GenOutput,
+    invalid: &mut usize,
+    total: &mut usize,
+) -> Vec<Proposal> {
+    let mut proposals = Vec::with_capacity(gen.hyps.len());
+    let mut seen = std::collections::HashSet::new();
+    for h in &gen.hyps {
+        *total += 1;
+        if !h.finished() {
+            *invalid += 1;
+            continue;
+        }
+        match hyp_to_proposal(vocab, product, h.body(), h.logp) {
+            Some(p) => {
+                if seen.insert(p.reactants.clone()) {
+                    proposals.push(p);
+                }
+            }
+            None => *invalid += 1,
+        }
+    }
+    proposals
+}
+
+impl<M: StepModel> ExpansionPolicy for ModelPolicy<M> {
+    fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
+        // Serve cache hits; batch the misses through the decoder.
+        let mut out: Vec<Option<Vec<Proposal>>> = vec![None; molecules.len()];
+        let mut miss_idx = Vec::new();
+        let mut miss_srcs = Vec::new();
+        {
+            let cache = self.cache.borrow();
+            for (i, m) in molecules.iter().enumerate() {
+                if let Some(hit) = cache.get(&(m.to_string(), k)) {
+                    out[i] = Some(hit.clone());
+                } else {
+                    miss_idx.push(i);
+                    miss_srcs.push(self.vocab.encode(m, true));
+                }
+            }
+        }
+        if !miss_idx.is_empty() {
+            *self.calls.borrow_mut() += 1;
+            let mut stats = self.stats.borrow_mut();
+            let results = self.decoder.generate(&self.model, &miss_srcs, k, &mut stats)?;
+            drop(stats);
+            let mut cache = self.cache.borrow_mut();
+            for (slot, gen) in miss_idx.iter().zip(results.into_iter()) {
+                let product = molecules[*slot];
+                let mut invalid = self.invalid_count.borrow_mut();
+                let mut total = self.total_hyps.borrow_mut();
+                let proposals =
+                    proposals_from_output(&self.vocab, product, &gen, &mut invalid, &mut total);
+                drop(invalid);
+                drop(total);
+                cache.insert((product.to_string(), k), proposals.clone());
+                out[*slot] = Some(proposals);
+            }
+        }
+        Ok(out.into_iter().map(|o| o.unwrap_or_default()).collect())
+    }
+
+    fn decode_stats(&self) -> DecodeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn calls(&self) -> usize {
+        *self.calls.borrow()
+    }
+}
+
+/// Rule-based oracle policy over the SynthChem retro templates.
+pub struct OraclePolicy {
+    calls: RefCell<usize>,
+    /// Optional per-proposal score noise seed for tie-breaking variety.
+    pub uniform_logp: f64,
+}
+
+impl Default for OraclePolicy {
+    fn default() -> Self {
+        Self { calls: RefCell::new(0), uniform_logp: -0.7 }
+    }
+}
+
+impl OraclePolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ExpansionPolicy for OraclePolicy {
+    fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
+        *self.calls.borrow_mut() += 1;
+        let mut out = Vec::with_capacity(molecules.len());
+        for m in molecules {
+            let Ok(mol) = chem::parse_validated(m) else {
+                out.push(Vec::new());
+                continue;
+            };
+            let mut proposals = Vec::new();
+            let mut seen = std::collections::HashSet::new();
+            for (i, d) in synthchem::find_disconnections(&mol).into_iter().enumerate() {
+                if proposals.len() >= k {
+                    break;
+                }
+                let r = synthchem::apply_retro(&mol, &d);
+                let mut reactants: Vec<String> =
+                    r.reactants.iter().map(chem::canonical_smiles).collect();
+                reactants.sort();
+                if seen.insert(reactants.clone()) {
+                    proposals.push(Proposal {
+                        reactants,
+                        logp: self.uniform_logp - 0.01 * i as f64,
+                    });
+                }
+            }
+            out.push(proposals);
+        }
+        Ok(out)
+    }
+
+    fn calls(&self) -> usize {
+        *self.calls.borrow()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::beam::BeamSearch;
+    use crate::model::mock::{MockConfig, MockModel};
+
+    #[test]
+    fn oracle_policy_expands_amide() {
+        let p = OraclePolicy::new();
+        let out = p.expand_batch(&["CC(=O)NC"], 10).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(!out[0].is_empty());
+        let mut expect = vec![
+            crate::chem::canonicalize("CC(=O)O").unwrap(),
+            crate::chem::canonicalize("CN").unwrap(),
+        ];
+        expect.sort();
+        assert!(out[0].iter().any(|pr| pr.reactants == expect));
+    }
+
+    #[test]
+    fn oracle_policy_stock_leaf_has_no_expansions() {
+        let p = OraclePolicy::new();
+        let out = p.expand_batch(&["CCO"], 10).unwrap();
+        assert!(out[0].is_empty());
+    }
+
+    #[test]
+    fn model_policy_parses_and_caches() {
+        // Mock model copies the source: proposals = [product] which is
+        // rejected as identity, unless the product string parses into
+        // something else. Use a two-component trick: the mock copies
+        // "CC(=O)O.CN" -> identity on the *string* but the proposal is
+        // the two reactants, not the product.
+        let vocab = Vocab::build(["CC(=O)O.CN", "CC(=O)NC"]);
+        let model = MockModel::new(MockConfig {
+            vocab: vocab.len(),
+            ..Default::default()
+        });
+        let policy = ModelPolicy::new(model, Box::new(BeamSearch::optimized()), vocab);
+        // The mock will "translate" the product into a copy of the input
+        // string; feed it the reactant set directly so parsing kicks in.
+        let out = policy.expand_batch(&["CC(=O)O.CN"], 3).unwrap();
+        assert_eq!(out.len(), 1);
+        let mut expect = vec![
+            crate::chem::canonicalize("CC(=O)O").unwrap(),
+            crate::chem::canonicalize("CN").unwrap(),
+        ];
+        expect.sort();
+        assert!(out[0].iter().any(|p| p.reactants == expect));
+        let calls_before = policy.calls();
+        let _ = policy.expand_batch(&["CC(=O)O.CN"], 3).unwrap();
+        assert_eq!(policy.calls(), calls_before, "second expansion must hit the cache");
+    }
+
+    #[test]
+    fn model_policy_counts_invalid() {
+        let vocab = Vocab::build(["C)("]); // degenerate vocab
+        let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+        let policy = ModelPolicy::new(model, Box::new(BeamSearch::optimized()), vocab);
+        let _ = policy.expand_batch(&["C)("], 3).unwrap();
+        assert!(*policy.invalid_count.borrow() > 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Synthesis routes: the tree a successful search returns.
+
+/// One retrosynthetic route: a tree from the target down to stock
+/// leaves.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Route {
+    /// A building block (in stock).
+    Leaf { smiles: String },
+    /// A reaction step.
+    Step { smiles: String, logp: f64, children: Vec<Route> },
+}
+
+impl Route {
+    pub fn smiles(&self) -> &str {
+        match self {
+            Route::Leaf { smiles } | Route::Step { smiles, .. } => smiles,
+        }
+    }
+
+    /// Number of reaction steps in the route.
+    pub fn num_steps(&self) -> usize {
+        match self {
+            Route::Leaf { .. } => 0,
+            Route::Step { children, .. } => {
+                1 + children.iter().map(Route::num_steps).sum::<usize>()
+            }
+        }
+    }
+
+    /// Longest path of reactions (the "route length" the depth cap
+    /// bounds).
+    pub fn depth(&self) -> usize {
+        match self {
+            Route::Leaf { .. } => 0,
+            Route::Step { children, .. } => {
+                1 + children.iter().map(Route::depth).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// All leaf SMILES (must be in stock for a closed route).
+    pub fn leaves(&self) -> Vec<&str> {
+        match self {
+            Route::Leaf { smiles } => vec![smiles],
+            Route::Step { children, .. } => {
+                children.iter().flat_map(Route::leaves).collect()
+            }
+        }
+    }
+
+    /// Sum of step costs (-logp); lower is better.
+    pub fn cost(&self) -> f64 {
+        match self {
+            Route::Leaf { .. } => 0.0,
+            Route::Step { logp, children, .. } => {
+                -logp + children.iter().map(Route::cost).sum::<f64>()
+            }
+        }
+    }
+
+    /// Render an indented text tree (for the CLI and examples).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, depth: usize) {
+        let pad = "  ".repeat(depth);
+        match self {
+            Route::Leaf { smiles } => {
+                out.push_str(&format!("{pad}[stock] {smiles}\n"));
+            }
+            Route::Step { smiles, logp, children } => {
+                out.push_str(&format!("{pad}{smiles}   (logp {logp:.3})\n"));
+                for c in children {
+                    c.render_into(out, depth + 1);
+                }
+            }
+        }
+    }
+
+    /// Verify the route is *closed* over a stock: every leaf in stock.
+    pub fn closed_over(&self, stock: &super::Stock) -> bool {
+        self.leaves().iter().all(|l| stock.contains(l))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::Stock;
+
+    fn sample() -> Route {
+        Route::Step {
+            smiles: "CC(=O)NC".into(),
+            logp: -0.5,
+            children: vec![
+                Route::Leaf { smiles: "CC(=O)O".into() },
+                Route::Step {
+                    smiles: "CN".into(),
+                    logp: -1.0,
+                    children: vec![Route::Leaf { smiles: "CO".into() }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn structure_metrics() {
+        let r = sample();
+        assert_eq!(r.num_steps(), 2);
+        assert_eq!(r.depth(), 2);
+        assert_eq!(r.leaves(), vec!["CC(=O)O", "CO"]);
+        assert!((r.cost() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_over_stock() {
+        let r = sample();
+        let full = Stock::from_iter(["CC(=O)O".to_string(), "CO".to_string()]);
+        assert!(r.closed_over(&full));
+        let partial = Stock::from_iter(["CC(=O)O".to_string()]);
+        assert!(!r.closed_over(&partial));
+    }
+
+    #[test]
+    fn render_contains_all_molecules() {
+        let text = sample().render();
+        for m in ["CC(=O)NC", "CC(=O)O", "CN", "CO"] {
+            assert!(text.contains(m), "{text}");
+        }
+    }
+}

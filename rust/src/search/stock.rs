@@ -1,0 +1,73 @@
+//! Building-block stock: membership of canonical SMILES.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+/// The stock of purchasable building blocks. Queries must be canonical
+/// SMILES (the planner canonicalizes once per molecule node).
+#[derive(Clone, Debug, Default)]
+pub struct Stock {
+    set: HashSet<String>,
+}
+
+impl Stock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = String>>(it: I) -> Self {
+        Self { set: it.into_iter().collect() }
+    }
+
+    /// Load `stock.txt` (one canonical SMILES per line).
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Self {
+            set: text
+                .lines()
+                .map(|l| l.trim().to_string())
+                .filter(|l| !l.is_empty())
+                .collect(),
+        })
+    }
+
+    pub fn insert(&mut self, smiles: String) {
+        self.set.insert(smiles);
+    }
+
+    pub fn contains(&self, canonical_smiles: &str) -> bool {
+        self.set.contains(canonical_smiles)
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership() {
+        let s = Stock::from_iter(["CCO".to_string(), "CC(=O)O".to_string()]);
+        assert!(s.contains("CCO"));
+        assert!(!s.contains("CCN"));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("retroserve_stock_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("stock.txt");
+        std::fs::write(&p, "CCO\n\nCC(=O)O \n").unwrap();
+        let s = Stock::load(&p).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains("CC(=O)O"));
+    }
+}

@@ -1,0 +1,399 @@
+//! Building-block generation.
+//!
+//! Blocks are constructed programmatically (not parsed from strings) so
+//! every reactive site's atom index is known exactly — forward joins in
+//! the tree generator then need no pattern matching. The default stock
+//! size is 13,414 to match the PaRoutes stock used by the paper.
+
+use super::{Block, Port};
+use crate::chem::{Atom, BondOrder, Element, Molecule};
+use crate::util::Rng;
+
+/// Default stock cardinality (PaRoutes: 13,414 molecules).
+pub const DEFAULT_STOCK_SIZE: usize = 13_414;
+
+/// Scaffold families blocks are grown from.
+#[derive(Clone, Copy, Debug)]
+enum Scaffold {
+    Chain,
+    Benzene,
+    Pyridine,
+    Thiophene,
+    Furan,
+    Pyrrole,
+    Cyclopentane,
+    Cyclohexane,
+}
+
+const SCAFFOLDS: [(Scaffold, f64); 8] = [
+    (Scaffold::Chain, 3.0),
+    (Scaffold::Benzene, 3.0),
+    (Scaffold::Pyridine, 1.5),
+    (Scaffold::Thiophene, 0.8),
+    (Scaffold::Furan, 0.8),
+    (Scaffold::Pyrrole, 0.6),
+    (Scaffold::Cyclopentane, 0.7),
+    (Scaffold::Cyclohexane, 0.7),
+];
+
+/// Functional groups we can graft; weights tuned so every template has
+/// partners available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Group {
+    Acid,
+    Amine,
+    Alcohol,
+    Thiol,
+    AlkylChloride,
+    AlkylBromide,
+    ArylBromide,
+    BoronicAcid,
+    Alkyne,
+    SulfonylChloride,
+    // inert decorations
+    Methyl,
+    Fluoro,
+    Trifluoromethyl,
+}
+
+const PORT_GROUPS: [(Group, f64); 10] = [
+    (Group::Acid, 1.6),
+    (Group::Amine, 1.8),
+    (Group::Alcohol, 1.4),
+    (Group::Thiol, 0.5),
+    (Group::AlkylChloride, 0.6),
+    (Group::AlkylBromide, 1.0),
+    (Group::ArylBromide, 1.2),
+    (Group::BoronicAcid, 0.8),
+    (Group::Alkyne, 0.6),
+    (Group::SulfonylChloride, 0.7),
+];
+
+const INERT_GROUPS: [(Group, f64); 3] =
+    [(Group::Methyl, 2.0), (Group::Fluoro, 1.0), (Group::Trifluoromethyl, 0.5)];
+
+/// Build the scaffold; returns the molecule and the attachable positions
+/// (atoms with a free hydrogen).
+fn build_scaffold(kind: Scaffold, rng: &mut Rng) -> (Molecule, Vec<usize>) {
+    let mut m = Molecule::new();
+    match kind {
+        Scaffold::Chain => {
+            let len = 1 + rng.gen_range(4); // 1..=4 carbons
+            let mut prev = m.add_atom(Atom::new(Element::C));
+            for _ in 1..len {
+                let c = m.add_atom(Atom::new(Element::C));
+                m.add_bond(prev, c, BondOrder::Single).unwrap();
+                // small chance of branching instead of extending
+                prev = if rng.gen_bool(0.25) { prev } else { c };
+            }
+            let sites = (0..m.num_atoms()).collect();
+            (m, sites)
+        }
+        Scaffold::Benzene => {
+            let ring: Vec<usize> =
+                (0..6).map(|_| m.add_atom(Atom::aromatic(Element::C))).collect();
+            for i in 0..6 {
+                m.add_bond(ring[i], ring[(i + 1) % 6], BondOrder::Aromatic).unwrap();
+            }
+            (m, ring)
+        }
+        Scaffold::Pyridine => {
+            let mut ring = Vec::new();
+            for i in 0..6 {
+                let el = if i == 0 { Element::N } else { Element::C };
+                ring.push(m.add_atom(Atom::aromatic(el)));
+            }
+            for i in 0..6 {
+                m.add_bond(ring[i], ring[(i + 1) % 6], BondOrder::Aromatic).unwrap();
+            }
+            // N has no H in pyridine; only carbons are substitution sites.
+            (m, ring[1..].to_vec())
+        }
+        Scaffold::Thiophene | Scaffold::Furan | Scaffold::Pyrrole => {
+            let het = match kind {
+                Scaffold::Thiophene => Element::S,
+                Scaffold::Furan => Element::O,
+                _ => Element::N,
+            };
+            let mut ring = Vec::new();
+            let mut a0 = Atom::aromatic(het);
+            if het == Element::N {
+                a0.explicit_h = Some(1); // pyrrole [nH]
+            }
+            ring.push(m.add_atom(a0));
+            for _ in 1..5 {
+                ring.push(m.add_atom(Atom::aromatic(Element::C)));
+            }
+            for i in 0..5 {
+                m.add_bond(ring[i], ring[(i + 1) % 5], BondOrder::Aromatic).unwrap();
+            }
+            (m, ring[1..].to_vec())
+        }
+        Scaffold::Cyclopentane | Scaffold::Cyclohexane => {
+            let n = if matches!(kind, Scaffold::Cyclopentane) { 5 } else { 6 };
+            let ring: Vec<usize> = (0..n).map(|_| m.add_atom(Atom::new(Element::C))).collect();
+            for i in 0..n {
+                m.add_bond(ring[i], ring[(i + 1) % n], BondOrder::Single).unwrap();
+            }
+            (m, ring)
+        }
+    }
+}
+
+/// Whether atom `v` still has a free hydrogen to substitute.
+fn has_free_h(m: &Molecule, v: usize) -> bool {
+    crate::chem::valence::total_h(m, v).map(|h| h > 0).unwrap_or(false)
+}
+
+/// Graft `group` onto `site`; returns the port if the group is reactive.
+fn graft(m: &mut Molecule, site: usize, group: Group, aromatic_site: bool) -> Option<Option<Port>> {
+    match group {
+        Group::Acid => {
+            let c = m.add_atom(Atom::new(Element::C));
+            let o1 = m.add_atom(Atom::new(Element::O));
+            let o2 = m.add_atom(Atom::new(Element::O));
+            m.add_bond(site, c, BondOrder::Single).ok()?;
+            m.add_bond(c, o1, BondOrder::Double).ok()?;
+            m.add_bond(c, o2, BondOrder::Single).ok()?;
+            Some(Some(Port::Acid(c)))
+        }
+        Group::Amine => {
+            let n = m.add_atom(Atom::new(Element::N));
+            m.add_bond(site, n, BondOrder::Single).ok()?;
+            Some(Some(Port::Amine(n)))
+        }
+        Group::Alcohol => {
+            let o = m.add_atom(Atom::new(Element::O));
+            m.add_bond(site, o, BondOrder::Single).ok()?;
+            Some(Some(Port::Alcohol(o)))
+        }
+        Group::Thiol => {
+            let s = m.add_atom(Atom::new(Element::S));
+            m.add_bond(site, s, BondOrder::Single).ok()?;
+            Some(Some(Port::Thiol(s)))
+        }
+        Group::AlkylChloride | Group::AlkylBromide => {
+            if aromatic_site {
+                return None; // alkyl halides only on sp3 carbons
+            }
+            let el = if group == Group::AlkylChloride { Element::Cl } else { Element::Br };
+            let x = m.add_atom(Atom::new(el));
+            m.add_bond(site, x, BondOrder::Single).ok()?;
+            Some(Some(Port::AlkylHalide(site, x)))
+        }
+        Group::ArylBromide => {
+            if !aromatic_site {
+                return None;
+            }
+            let x = m.add_atom(Atom::new(Element::Br));
+            m.add_bond(site, x, BondOrder::Single).ok()?;
+            Some(Some(Port::ArylBromide(site, x)))
+        }
+        Group::BoronicAcid => {
+            if !aromatic_site {
+                return None;
+            }
+            let b = m.add_atom(Atom::new(Element::B));
+            let o1 = m.add_atom(Atom::new(Element::O));
+            let o2 = m.add_atom(Atom::new(Element::O));
+            m.add_bond(site, b, BondOrder::Single).ok()?;
+            m.add_bond(b, o1, BondOrder::Single).ok()?;
+            m.add_bond(b, o2, BondOrder::Single).ok()?;
+            Some(Some(Port::BoronicAcid(site, b)))
+        }
+        Group::Alkyne => {
+            let c1 = m.add_atom(Atom::new(Element::C));
+            let c2 = m.add_atom(Atom::new(Element::C));
+            m.add_bond(site, c1, BondOrder::Single).ok()?;
+            m.add_bond(c1, c2, BondOrder::Triple).ok()?;
+            Some(Some(Port::Alkyne(c2)))
+        }
+        Group::SulfonylChloride => {
+            let s = m.add_atom(Atom::new(Element::S));
+            let o1 = m.add_atom(Atom::new(Element::O));
+            let o2 = m.add_atom(Atom::new(Element::O));
+            let cl = m.add_atom(Atom::new(Element::Cl));
+            m.add_bond(site, s, BondOrder::Single).ok()?;
+            m.add_bond(s, o1, BondOrder::Double).ok()?;
+            m.add_bond(s, o2, BondOrder::Double).ok()?;
+            m.add_bond(s, cl, BondOrder::Single).ok()?;
+            Some(Some(Port::SulfonylChloride(s, cl)))
+        }
+        Group::Methyl => {
+            let c = m.add_atom(Atom::new(Element::C));
+            m.add_bond(site, c, BondOrder::Single).ok()?;
+            Some(None)
+        }
+        Group::Fluoro => {
+            let f = m.add_atom(Atom::new(Element::F));
+            m.add_bond(site, f, BondOrder::Single).ok()?;
+            Some(None)
+        }
+        Group::Trifluoromethyl => {
+            let c = m.add_atom(Atom::new(Element::C));
+            m.add_bond(site, c, BondOrder::Single).ok()?;
+            for _ in 0..3 {
+                let f = m.add_atom(Atom::new(Element::F));
+                m.add_bond(c, f, BondOrder::Single).ok()?;
+            }
+            Some(None)
+        }
+    }
+}
+
+/// Generate one candidate block (may fail validity; caller retries).
+fn gen_block(rng: &mut Rng) -> Option<Block> {
+    let weights: Vec<f64> = SCAFFOLDS.iter().map(|&(_, w)| w).collect();
+    let (scaffold, _) = SCAFFOLDS[rng.choose_weighted(&weights)];
+    let (mut m, mut sites) = build_scaffold(scaffold, rng);
+    let aromatic = m.atoms.iter().any(|a| a.aromatic);
+
+    let mut ports = Vec::new();
+    let n_ports = 1 + rng.gen_bool(0.35) as usize;
+    let n_inert = rng.gen_range(3); // 0..=2
+    let pw: Vec<f64> = PORT_GROUPS.iter().map(|&(_, w)| w).collect();
+    let iw: Vec<f64> = INERT_GROUPS.iter().map(|&(_, w)| w).collect();
+
+    for k in 0..(n_ports + n_inert) {
+        if sites.is_empty() {
+            break;
+        }
+        let group = if k < n_ports {
+            PORT_GROUPS[rng.choose_weighted(&pw)].0
+        } else {
+            INERT_GROUPS[rng.choose_weighted(&iw)].0
+        };
+        // pick a site with a free hydrogen
+        let mut tries = 0;
+        loop {
+            if tries > 8 || sites.is_empty() {
+                break;
+            }
+            tries += 1;
+            let si = rng.gen_range(sites.len());
+            let site = sites[si];
+            if !has_free_h(&m, site) {
+                sites.swap_remove(si);
+                continue;
+            }
+            let arom = m.atoms[site].aromatic;
+            if let Some(port) = graft(&mut m, site, group, arom) {
+                if let Some(p) = port {
+                    ports.push(p);
+                }
+                // one substituent per site for rings, chains may stack
+                if arom || rng.gen_bool(0.5) {
+                    sites.swap_remove(si);
+                }
+                break;
+            } else {
+                // group incompatible with this site type; try another group family
+                if aromatic {
+                    break;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    if ports.is_empty() {
+        return None;
+    }
+    crate::chem::valence::validate(&m).ok()?;
+    Some(Block { mol: m, ports })
+}
+
+/// Generate `count` unique building blocks (unique by canonical SMILES).
+pub fn generate_blocks(seed: u64, count: usize) -> Vec<Block> {
+    let mut rng = Rng::new(seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(count);
+    let mut attempts = 0usize;
+    while out.len() < count && attempts < count * 200 {
+        attempts += 1;
+        if let Some(b) = gen_block(&mut rng) {
+            let smi = b.smiles();
+            if smi.len() <= 40 && seen.insert(smi) {
+                out.push(b);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_are_valid_and_unique() {
+        let blocks = generate_blocks(7, 300);
+        assert_eq!(blocks.len(), 300);
+        let mut seen = std::collections::HashSet::new();
+        for b in &blocks {
+            crate::chem::valence::validate(&b.mol).unwrap();
+            assert!(!b.ports.is_empty());
+            assert!(seen.insert(b.smiles()));
+        }
+    }
+
+    #[test]
+    fn blocks_deterministic_under_seed() {
+        let a = generate_blocks(42, 50);
+        let b = generate_blocks(42, 50);
+        let sa: Vec<String> = a.iter().map(|x| x.smiles()).collect();
+        let sb: Vec<String> = b.iter().map(|x| x.smiles()).collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn port_anchors_in_bounds() {
+        for b in generate_blocks(3, 100) {
+            for p in &b.ports {
+                assert!(p.anchor() < b.mol.num_atoms(), "{:?} in {}", p, b.smiles());
+            }
+        }
+    }
+
+    #[test]
+    fn port_variety_covers_templates() {
+        let blocks = generate_blocks(11, 2000);
+        let mut acid = 0;
+        let mut amine = 0;
+        let mut alcohol = 0;
+        let mut arbr = 0;
+        let mut boron = 0;
+        let mut sulfonyl = 0;
+        let mut alkyl = 0;
+        let mut alkyne = 0;
+        let mut thiol = 0;
+        for b in &blocks {
+            for p in &b.ports {
+                match p {
+                    Port::Acid(_) => acid += 1,
+                    Port::Amine(_) => amine += 1,
+                    Port::Alcohol(_) => alcohol += 1,
+                    Port::Thiol(_) => thiol += 1,
+                    Port::AlkylHalide(..) => alkyl += 1,
+                    Port::ArylBromide(..) => arbr += 1,
+                    Port::BoronicAcid(..) => boron += 1,
+                    Port::Alkyne(_) => alkyne += 1,
+                    Port::SulfonylChloride(..) => sulfonyl += 1,
+                }
+            }
+        }
+        for (name, c) in [
+            ("acid", acid),
+            ("amine", amine),
+            ("alcohol", alcohol),
+            ("thiol", thiol),
+            ("alkyl halide", alkyl),
+            ("aryl bromide", arbr),
+            ("boronic acid", boron),
+            ("alkyne", alkyne),
+            ("sulfonyl chloride", sulfonyl),
+        ] {
+            assert!(c > 10, "too few {name} ports: {c}");
+        }
+    }
+}

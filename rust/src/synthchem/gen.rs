@@ -1,0 +1,564 @@
+//! Dataset generation: synthesis trees, single-step pairs with
+//! root-aligned augmentation, the building-block stock and the multi-step
+//! query set.
+//!
+//! The generator is the SynthChem replacement for USPTO-50K (single-step
+//! pairs), Caspyrus10k (the 10k query set) and the PaRoutes stock
+//! (13,414 building blocks). All outputs are deterministic under a seed.
+
+use super::blocks::generate_blocks;
+use super::templates::{
+    apply_retro, find_disconnections, forward_boc, forward_join, Template, BOC_REAGENT,
+};
+use super::{Block, Port, Reaction, SynthTree};
+use crate::chem::{canon, canonical_smiles, parse_smiles, writer, Molecule};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Port kind, used to index partner blocks per template role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PortKind {
+    Acid,
+    Amine,
+    Alcohol,
+    Thiol,
+    AlkylHalide,
+    ArylBromide,
+    BoronicAcid,
+    Alkyne,
+    SulfonylChloride,
+}
+
+impl PortKind {
+    pub fn of(p: &Port) -> PortKind {
+        match p {
+            Port::Acid(_) => PortKind::Acid,
+            Port::Amine(_) => PortKind::Amine,
+            Port::Alcohol(_) => PortKind::Alcohol,
+            Port::Thiol(_) => PortKind::Thiol,
+            Port::AlkylHalide(..) => PortKind::AlkylHalide,
+            Port::ArylBromide(..) => PortKind::ArylBromide,
+            Port::BoronicAcid(..) => PortKind::BoronicAcid,
+            Port::Alkyne(_) => PortKind::Alkyne,
+            Port::SulfonylChloride(..) => PortKind::SulfonylChloride,
+        }
+    }
+}
+
+/// (template, role-A port kind, role-B port kind, sampling weight)
+const TEMPLATE_ROLES: [(Template, PortKind, PortKind, f64); 8] = [
+    (Template::Amide, PortKind::Acid, PortKind::Amine, 2.2),
+    (Template::Ester, PortKind::Acid, PortKind::Alcohol, 1.2),
+    (Template::Ether, PortKind::Alcohol, PortKind::AlkylHalide, 0.9),
+    (Template::Thioether, PortKind::Thiol, PortKind::AlkylHalide, 0.35),
+    (Template::Sulfonamide, PortKind::SulfonylChloride, PortKind::Amine, 0.9),
+    (Template::Suzuki, PortKind::BoronicAcid, PortKind::ArylBromide, 1.1),
+    (Template::NAlkylation, PortKind::Amine, PortKind::AlkylHalide, 0.8),
+    (Template::Sonogashira, PortKind::Alkyne, PortKind::ArylBromide, 0.55),
+];
+
+/// Translate a port through a join atom map; consumed sites disappear.
+fn translate_port(p: &Port, map: &[Option<usize>]) -> Option<Port> {
+    let t = |i: usize| map.get(i).copied().flatten();
+    Some(match *p {
+        Port::Acid(a) => Port::Acid(t(a)?),
+        Port::Amine(a) => Port::Amine(t(a)?),
+        Port::Alcohol(a) => Port::Alcohol(t(a)?),
+        Port::Thiol(a) => Port::Thiol(t(a)?),
+        Port::AlkylHalide(a, x) => Port::AlkylHalide(t(a)?, t(x)?),
+        Port::ArylBromide(a, x) => Port::ArylBromide(t(a)?, t(x)?),
+        Port::BoronicAcid(a, x) => Port::BoronicAcid(t(a)?, t(x)?),
+        Port::Alkyne(a) => Port::Alkyne(t(a)?),
+        Port::SulfonylChloride(a, x) => Port::SulfonylChloride(t(a)?, t(x)?),
+    })
+}
+
+/// Index from port kind to (block index, port) pairs.
+pub struct BlockIndex {
+    pub blocks: Vec<Block>,
+    by_kind: HashMap<PortKind, Vec<(usize, Port)>>,
+}
+
+impl BlockIndex {
+    pub fn new(blocks: Vec<Block>) -> Self {
+        let mut by_kind: HashMap<PortKind, Vec<(usize, Port)>> = HashMap::new();
+        for (i, b) in blocks.iter().enumerate() {
+            for p in &b.ports {
+                by_kind.entry(PortKind::of(p)).or_default().push((i, *p));
+            }
+        }
+        Self { blocks, by_kind }
+    }
+
+    fn sample(&self, kind: PortKind, rng: &mut Rng) -> Option<(usize, Port)> {
+        let v = self.by_kind.get(&kind)?;
+        if v.is_empty() {
+            return None;
+        }
+        Some(v[rng.gen_range(v.len())])
+    }
+}
+
+/// Grow a synthesis tree of exactly `depth` joins (best effort; returns
+/// `None` if growth stalls). The tree is a caterpillar: each step joins
+/// the current product with a fresh building block (or Boc-protects).
+pub fn gen_tree(
+    idx: &BlockIndex,
+    rng: &mut Rng,
+    depth: usize,
+    max_atoms: usize,
+) -> Option<SynthTree> {
+    // start from a random block with at least one port
+    let start = rng.gen_range(idx.blocks.len());
+    let block = &idx.blocks[start];
+    let mut cur_mol = block.mol.clone();
+    let mut cur_ports: Vec<Port> = block.ports.clone();
+    let mut tree = SynthTree::Leaf(block.smiles());
+
+    let weights: Vec<f64> = TEMPLATE_ROLES.iter().map(|&(_, _, _, w)| w).collect();
+
+    'outer: for _ in 0..depth {
+        // Occasionally Boc-protect an amine instead of joining.
+        if rng.gen_bool(0.06) {
+            if let Some(pos) = cur_ports.iter().position(|p| matches!(p, Port::Amine(_))) {
+                if let Port::Amine(n) = cur_ports[pos] {
+                    if let Some(j) = forward_boc(&cur_mol, n) {
+                        if j.product.num_atoms() <= max_atoms {
+                            cur_ports.remove(pos);
+                            cur_ports = cur_ports
+                                .iter()
+                                .filter_map(|p| translate_port(p, &j.map_a))
+                                .collect();
+                            let product = canonical_smiles(&j.product);
+                            cur_mol = j.product;
+                            let reagent =
+                                crate::chem::canonicalize(BOC_REAGENT).expect("Boc reagent");
+                            tree = SynthTree::Node {
+                                template: Template::BocProtection,
+                                product,
+                                children: vec![tree, SynthTree::Leaf(reagent)],
+                            };
+                            continue 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        // Try templates in weighted random order until one fits.
+        for _try in 0..12 {
+            let (t, ka, kb, _) = TEMPLATE_ROLES[rng.choose_weighted(&weights)];
+            // Current product can play role A or role B.
+            let cur_as_a = cur_ports.iter().copied().filter(|p| PortKind::of(p) == ka).next();
+            let cur_as_b = cur_ports.iter().copied().filter(|p| PortKind::of(p) == kb).next();
+            let play_a = match (cur_as_a, cur_as_b) {
+                (Some(_), Some(_)) => rng.gen_bool(0.5),
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => continue,
+            };
+            let (partner_idx, partner_port) =
+                match idx.sample(if play_a { kb } else { ka }, rng) {
+                    Some(x) => x,
+                    None => continue,
+                };
+            let partner = &idx.blocks[partner_idx];
+            let (j, cur_port) = if play_a {
+                let pa = cur_as_a.unwrap();
+                (forward_join(t, &cur_mol, pa, &partner.mol, partner_port), pa)
+            } else {
+                let pb = cur_as_b.unwrap();
+                (forward_join(t, &partner.mol, partner_port, &cur_mol, pb), pb)
+            };
+            let Some(j) = j else { continue };
+            if j.product.num_atoms() > max_atoms {
+                continue;
+            }
+            let (cur_map, partner_map) =
+                if play_a { (&j.map_a, &j.map_b) } else { (&j.map_b, &j.map_a) };
+            // surviving ports: current's (minus the consumed one) + partner's
+            let mut next_ports: Vec<Port> = cur_ports
+                .iter()
+                .filter(|&&p| p != cur_port)
+                .filter_map(|p| translate_port(p, cur_map))
+                .collect();
+            next_ports.extend(
+                partner
+                    .ports
+                    .iter()
+                    .filter(|&&p| p != partner_port)
+                    .filter_map(|p| translate_port(p, partner_map)),
+            );
+            let product = canonical_smiles(&j.product);
+            let partner_leaf = SynthTree::Leaf(partner.smiles());
+            let children = if play_a {
+                vec![tree, partner_leaf]
+            } else {
+                vec![partner_leaf, tree]
+            };
+            cur_mol = j.product;
+            cur_ports = next_ports;
+            tree = SynthTree::Node { template: t, product, children };
+            continue 'outer;
+        }
+        // could not grow further
+        return if tree.depth() > 0 { Some(tree) } else { None };
+    }
+    if tree.depth() == 0 {
+        None
+    } else {
+        Some(tree)
+    }
+}
+
+/// One training/eval sample: tokenizable source and target strings plus
+/// provenance metadata.
+#[derive(Clone, Debug)]
+pub struct Pair {
+    /// Product SMILES (possibly non-canonically rooted for augmentation).
+    pub src: String,
+    /// Reactants joined with '.'; the fragment sharing the source root
+    /// comes first (R-SMILES-style alignment).
+    pub tgt: String,
+    /// Canonical product (grouping key for top-N evaluation).
+    pub product_canonical: String,
+    /// Canonical sorted reactants (the ground-truth answer).
+    pub reactants_canonical: String,
+    pub template: Template,
+}
+
+/// Produce the aligned `(src, tgt)` strings for a reaction, rooting the
+/// product SMILES at `root` and the matching reactant fragment at the
+/// image of `root` under the retro atom map.
+pub fn aligned_pair(
+    product: &Molecule,
+    expected_reactants: &[String],
+    root: usize,
+) -> Option<(String, String)> {
+    let mut expect: Vec<String> = expected_reactants.to_vec();
+    expect.sort();
+    let ds = find_disconnections(product);
+    for d in &ds {
+        let r = apply_retro(product, d);
+        let mut rs: Vec<String> = r.reactants.iter().map(canonical_smiles).collect();
+        rs.sort();
+        if rs != expect {
+            continue;
+        }
+        let ranks = canon::canonical_ranks(product);
+        let src = writer::write_from(product, root, &ranks);
+        // Map the root into a reactant fragment; if the root atom was
+        // consumed (Boc), fall back to fragment 0's canonical form.
+        let (main_i, main_atom) = match r.atom_map.get(root).copied().flatten() {
+            Some(x) => x,
+            None => (0, 0),
+        };
+        let main = &r.reactants[main_i];
+        let main_ranks = canon::canonical_ranks(main);
+        let main_str = writer::write_from(main, main_atom, &main_ranks);
+        let mut others: Vec<String> = r
+            .reactants
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != main_i)
+            .map(|(_, m)| canonical_smiles(m))
+            .collect();
+        others.sort();
+        let tgt = if others.is_empty() {
+            main_str
+        } else {
+            format!("{}.{}", main_str, others.join("."))
+        };
+        return Some((src, tgt));
+    }
+    None
+}
+
+/// Generated data bundle.
+pub struct DataBundle {
+    pub stock: Vec<String>,
+    pub train: Vec<Pair>,
+    pub test: Vec<Pair>,
+    pub queries: Vec<Query>,
+}
+
+/// A multi-step planning query.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub smiles: String,
+    /// Depth of the generating tree (route length lower bound).
+    pub depth: usize,
+    /// Whether all generating leaves are in stock (solvable by
+    /// construction; the planner may still find other routes).
+    pub solvable_hint: bool,
+}
+
+/// Generation configuration.
+pub struct GenConfig {
+    pub seed: u64,
+    pub stock_size: usize,
+    /// Extra out-of-stock blocks used to make unsolvable queries.
+    pub shadow_blocks: usize,
+    pub train_reactions: usize,
+    pub test_reactions: usize,
+    pub queries: usize,
+    pub augmentation: usize,
+    pub max_atoms: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self {
+            seed: 20250710,
+            stock_size: super::blocks::DEFAULT_STOCK_SIZE,
+            shadow_blocks: 1500,
+            train_reactions: 12_000,
+            test_reactions: 5_007,
+            queries: 10_000,
+            augmentation: 4,
+            max_atoms: 26,
+        }
+    }
+}
+
+/// Hard caps on tokenized sequence lengths; pairs exceeding them are
+/// dropped so the AOT-exported executables can use fixed shapes
+/// (`MAX_SRC`/`MAX_TGT` in `python/compile/model.py` must cover these
+/// plus BOS/EOS).
+pub const MAX_SRC_TOKENS: usize = 60;
+pub const MAX_TGT_TOKENS: usize = 68;
+
+/// Emit pairs for every reaction of a tree (one per node), augmented
+/// `aug` times with random roots (first variant = canonical root).
+fn emit_pairs(tree: &SynthTree, aug: usize, rng: &mut Rng, out: &mut Vec<Pair>) {
+    let mut reactions: Vec<Reaction> = Vec::new();
+    tree.reactions(&mut reactions);
+    for rx in &reactions {
+        let Ok(product) = parse_smiles(&rx.product) else { continue };
+        let n = product.num_atoms();
+        let ranks = canon::canonical_ranks(&product);
+        let canonical_root = (0..n).min_by_key(|&v| ranks[v]).unwrap_or(0);
+        for k in 0..aug.max(1) {
+            let root = if k == 0 { canonical_root } else { rng.gen_range(n) };
+            if let Some((src, tgt)) = aligned_pair(&product, &rx.reactants, root) {
+                if crate::tokenizer::tokenize(&src).len() > MAX_SRC_TOKENS
+                    || crate::tokenizer::tokenize(&tgt).len() > MAX_TGT_TOKENS
+                {
+                    continue;
+                }
+                out.push(Pair {
+                    src,
+                    tgt,
+                    product_canonical: rx.product.clone(),
+                    reactants_canonical: rx.reactants_joined(),
+                    template: rx.template,
+                });
+            }
+        }
+    }
+}
+
+/// Generate the full data bundle (stock, train/test pairs, queries).
+pub fn generate(cfg: &GenConfig) -> DataBundle {
+    let all_blocks = generate_blocks(cfg.seed, cfg.stock_size + cfg.shadow_blocks);
+    let (stock_blocks, shadow) = all_blocks.split_at(cfg.stock_size.min(all_blocks.len()));
+
+    let mut stock: Vec<String> = stock_blocks.iter().map(|b| b.smiles()).collect();
+    stock.push(crate::chem::canonicalize(BOC_REAGENT).expect("Boc reagent"));
+    stock.sort();
+    stock.dedup();
+
+    let idx = BlockIndex::new(stock_blocks.to_vec());
+    let shadow_idx = BlockIndex::new(shadow.to_vec());
+
+    let mut rng = Rng::new(cfg.seed ^ 0xD1CE);
+    // --- single-step pairs ---
+    let mut train: Vec<Pair> = Vec::new();
+    let mut test: Vec<Pair> = Vec::new();
+    let mut seen_products = std::collections::HashSet::new();
+    let test_target = cfg.test_reactions;
+    let train_target = cfg.train_reactions;
+    let mut guard = 0usize;
+    while (train.len() < train_target * cfg.augmentation.max(1) || test.len() < test_target)
+        && guard < (train_target + test_target) * 40
+    {
+        guard += 1;
+        let depth = 1 + rng.gen_range(3); // single-step data from shallow trees
+        let Some(tree) = gen_tree(&idx, &mut rng, depth, cfg.max_atoms) else { continue };
+        // avoid product leakage between splits
+        let product_key = tree.product_smiles().to_string();
+        if !seen_products.insert(product_key) {
+            continue;
+        }
+        // 1 in 4 trees feed the test split until it is full
+        if test.len() < test_target && rng.gen_bool(0.25) {
+            let before = test.len();
+            emit_pairs(&tree, 1, &mut rng, &mut test);
+            test.truncate(before + (test_target - before).min(test.len() - before));
+        } else if train.len() < train_target * cfg.augmentation.max(1) {
+            emit_pairs(&tree, cfg.augmentation, &mut rng, &mut train);
+        }
+    }
+    train.truncate(train_target * cfg.augmentation.max(1));
+    test.truncate(test_target);
+
+    // --- multi-step queries ---
+    let mut queries = Vec::with_capacity(cfg.queries);
+    let mut qseen = std::collections::HashSet::new();
+    let mut qguard = 0usize;
+    while queries.len() < cfg.queries && qguard < cfg.queries * 60 {
+        qguard += 1;
+        let roll = rng.gen_f64();
+        let (use_shadow, depth) = if roll < 0.42 {
+            (false, 1 + rng.gen_range(2)) // easy: depth 1-2
+        } else if roll < 0.80 {
+            (false, 3 + rng.gen_range(3)) // deep: depth 3-5
+        } else {
+            (true, 1 + rng.gen_range(4)) // unsolvable-by-construction mix
+        };
+        let tree = if use_shadow {
+            gen_tree(&shadow_idx, &mut rng, depth, cfg.max_atoms)
+        } else {
+            gen_tree(&idx, &mut rng, depth, cfg.max_atoms)
+        };
+        let Some(tree) = tree else { continue };
+        let smiles = tree.product_smiles().to_string();
+        if crate::tokenizer::tokenize(&smiles).len() > MAX_SRC_TOKENS {
+            continue;
+        }
+        if !qseen.insert(smiles.clone()) {
+            continue;
+        }
+        queries.push(Query { smiles, depth: tree.depth(), solvable_hint: !use_shadow });
+    }
+
+    DataBundle { stock, train, test, queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> GenConfig {
+        GenConfig {
+            seed: 99,
+            stock_size: 400,
+            shadow_blocks: 60,
+            train_reactions: 60,
+            test_reactions: 30,
+            queries: 40,
+            augmentation: 2,
+            max_atoms: 30,
+        }
+    }
+
+    #[test]
+    fn gen_tree_produces_valid_products() {
+        let blocks = generate_blocks(5, 300);
+        let idx = BlockIndex::new(blocks);
+        let mut rng = Rng::new(17);
+        let mut grown = 0;
+        for _ in 0..40 {
+            if let Some(tree) = gen_tree(&idx, &mut rng, 3, 30) {
+                grown += 1;
+                let m = parse_smiles(tree.product_smiles()).unwrap();
+                crate::chem::valence::validate(&m).unwrap();
+                assert!(tree.depth() >= 1);
+            }
+        }
+        assert!(grown > 10, "tree generation stalls: {grown}/40");
+    }
+
+    #[test]
+    fn every_tree_reaction_is_rediscoverable() {
+        // ground truth must be reachable by the retro matchers, otherwise
+        // training data and oracle disagree.
+        let blocks = generate_blocks(6, 300);
+        let idx = BlockIndex::new(blocks);
+        let mut rng = Rng::new(23);
+        let mut checked = 0;
+        for _ in 0..25 {
+            let Some(tree) = gen_tree(&idx, &mut rng, 2, 30) else { continue };
+            let mut rs = Vec::new();
+            tree.reactions(&mut rs);
+            for rx in &rs {
+                let product = parse_smiles(&rx.product).unwrap();
+                let pair = aligned_pair(&product, &rx.reactants, 0);
+                assert!(
+                    pair.is_some(),
+                    "reaction not rediscoverable: {} -> {:?} ({})",
+                    rx.product,
+                    rx.reactants,
+                    rx.template.name()
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn aligned_pair_source_root_respected() {
+        let blocks = generate_blocks(8, 200);
+        let idx = BlockIndex::new(blocks);
+        let mut rng = Rng::new(31);
+        let tree = (0..50)
+            .find_map(|_| gen_tree(&idx, &mut rng, 1, 30))
+            .expect("a tree");
+        let mut rs = Vec::new();
+        tree.reactions(&mut rs);
+        let rx = &rs[0];
+        let product = parse_smiles(&rx.product).unwrap();
+        for root in 0..product.num_atoms().min(6) {
+            if let Some((src, tgt)) = aligned_pair(&product, &rx.reactants, root) {
+                // src re-canonicalizes to the product
+                assert_eq!(crate::chem::canonicalize(&src).unwrap(), rx.product);
+                // tgt components re-canonicalize to the reactants
+                let mut got: Vec<String> = crate::chem::split_components(&tgt)
+                    .iter()
+                    .map(|s| crate::chem::canonicalize(s).unwrap())
+                    .collect();
+                got.sort();
+                let mut expect = rx.reactants.clone();
+                expect.sort();
+                assert_eq!(got, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn bundle_shapes_and_determinism() {
+        let cfg = small_cfg();
+        let b1 = generate(&cfg);
+        assert!(b1.train.len() >= cfg.train_reactions, "train={}", b1.train.len());
+        assert_eq!(b1.test.len(), cfg.test_reactions);
+        assert_eq!(b1.queries.len(), cfg.queries);
+        assert!(b1.stock.len() >= cfg.stock_size.min(400));
+        let b2 = generate(&cfg);
+        assert_eq!(b1.train.len(), b2.train.len());
+        assert_eq!(b1.train[0].src, b2.train[0].src);
+        assert_eq!(b1.queries[0].smiles, b2.queries[0].smiles);
+    }
+
+    #[test]
+    fn no_product_leakage_between_splits() {
+        let b = generate(&small_cfg());
+        let train_products: std::collections::HashSet<&str> =
+            b.train.iter().map(|p| p.product_canonical.as_str()).collect();
+        for p in &b.test {
+            assert!(
+                !train_products.contains(p.product_canonical.as_str()),
+                "leaked {}",
+                p.product_canonical
+            );
+        }
+    }
+
+    #[test]
+    fn queries_have_difficulty_mix() {
+        let b = generate(&small_cfg());
+        let solvable = b.queries.iter().filter(|q| q.solvable_hint).count();
+        assert!(solvable > b.queries.len() / 2);
+        assert!(solvable < b.queries.len());
+        assert!(b.queries.iter().any(|q| q.depth >= 3));
+    }
+}

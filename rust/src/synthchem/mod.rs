@@ -1,0 +1,185 @@
+//! # synthchem — the synthetic reaction world
+//!
+//! The paper trains on USPTO-50K and plans over Caspyrus10k with the
+//! PaRoutes building-block stock; none of those are available in this
+//! image, so this module implements a *synthetic but chemically-shaped*
+//! reaction world with the statistical property that drives the paper's
+//! method: **products share long contiguous SMILES fragments with their
+//! reactants**, so speculative drafts (query fragments for HSBS, Medusa
+//! head predictions for MSBS) have high acceptance rates.
+//!
+//! The world consists of:
+//!
+//! * [`templates`] — named reaction templates (amide, ester, ether,
+//!   sulfonamide, Suzuki biaryl, N-alkylation, Boc protection,
+//!   Sonogashira, thioether), each with a forward *join* (graph surgery
+//!   used by the generator) and a retro *matcher + split* (used for
+//!   ground truth, oracle policies and validity checks);
+//! * [`blocks`] — a building-block generator producing the stock
+//!   (13,414 molecules by default, matching the PaRoutes stock
+//!   cardinality);
+//! * [`gen`] — dataset generation: single-step training/test pairs with
+//!   root-aligned augmentation, and the 10k multi-step query set with a
+//!   solvable/unsolvable difficulty mix.
+//!
+//! Everything is deterministic under a seed.
+
+pub mod blocks;
+pub mod gen;
+pub mod templates;
+
+pub use templates::{apply_retro, find_disconnections, Disconnection, Template};
+
+use crate::chem::Molecule;
+
+/// A reactive site on a building block, recorded at generation time so
+/// forward joins need no pattern matching.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Port {
+    /// Carboxylic acid: the carbonyl carbon (whose -OH is consumed).
+    Acid(usize),
+    /// Primary/secondary amine nitrogen with a free H.
+    Amine(usize),
+    /// Hydroxyl oxygen.
+    Alcohol(usize),
+    /// Thiol sulfur.
+    Thiol(usize),
+    /// sp3 carbon bearing a halide leaving group `(carbon, halide)`.
+    AlkylHalide(usize, usize),
+    /// Aromatic carbon bearing Br `(carbon, bromine)`.
+    ArylBromide(usize, usize),
+    /// Aromatic carbon bearing B(O)O `(carbon, boron)`.
+    BoronicAcid(usize, usize),
+    /// Terminal alkyne carbon.
+    Alkyne(usize),
+    /// Sulfonyl chloride: `(sulfur, chlorine)`.
+    SulfonylChloride(usize, usize),
+}
+
+impl Port {
+    /// The anchor atom that survives into the product.
+    pub fn anchor(&self) -> usize {
+        match *self {
+            Port::Acid(a)
+            | Port::Amine(a)
+            | Port::Alcohol(a)
+            | Port::Thiol(a)
+            | Port::AlkylHalide(a, _)
+            | Port::ArylBromide(a, _)
+            | Port::BoronicAcid(a, _)
+            | Port::Alkyne(a)
+            | Port::SulfonylChloride(a, _) => a,
+        }
+    }
+}
+
+/// A building block: molecule + its reactive ports.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub mol: Molecule,
+    pub ports: Vec<Port>,
+}
+
+impl Block {
+    pub fn smiles(&self) -> String {
+        crate::chem::canonical_smiles(&self.mol)
+    }
+
+    /// Ports matching a predicate.
+    pub fn ports_of(&self, f: impl Fn(&Port) -> bool) -> Vec<Port> {
+        self.ports.iter().copied().filter(|p| f(p)).collect()
+    }
+}
+
+/// A reaction record: product + reactant set (all canonical SMILES).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reaction {
+    pub template: Template,
+    pub product: String,
+    pub reactants: Vec<String>,
+}
+
+impl Reaction {
+    /// Reactants joined with '.' in sorted order (the canonical target
+    /// string for single-step evaluation).
+    pub fn reactants_joined(&self) -> String {
+        let mut rs = self.reactants.clone();
+        rs.sort();
+        rs.join(".")
+    }
+}
+
+/// A multi-step synthesis tree produced by the generator: either a stock
+/// leaf or a join of children via a template.
+#[derive(Clone, Debug)]
+pub enum SynthTree {
+    Leaf(String),
+    Node { template: Template, product: String, children: Vec<SynthTree> },
+}
+
+impl SynthTree {
+    pub fn product_smiles(&self) -> &str {
+        match self {
+            SynthTree::Leaf(s) => s,
+            SynthTree::Node { product, .. } => product,
+        }
+    }
+
+    /// Depth of the tree (leaf = 0).
+    pub fn depth(&self) -> usize {
+        match self {
+            SynthTree::Leaf(_) => 0,
+            SynthTree::Node { children, .. } => {
+                1 + children.iter().map(|c| c.depth()).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Append all single-step reactions in the tree (post-order).
+    pub fn reactions(&self, out: &mut Vec<Reaction>) {
+        if let SynthTree::Node { template, product, children } = self {
+            for c in children {
+                c.reactions(out);
+            }
+            out.push(Reaction {
+                template: *template,
+                product: product.clone(),
+                reactants: children.iter().map(|c| c.product_smiles().to_string()).collect(),
+            });
+        }
+    }
+
+    /// Leaf SMILES (the molecules that must be in stock for solvability).
+    pub fn leaves(&self, out: &mut Vec<String>) {
+        match self {
+            SynthTree::Leaf(s) => out.push(s.clone()),
+            SynthTree::Node { children, .. } => {
+                for c in children {
+                    c.leaves(out);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_tree_depth_and_leaves() {
+        let t = SynthTree::Node {
+            template: Template::Amide,
+            product: "CC(=O)NC".into(),
+            children: vec![SynthTree::Leaf("CC(=O)O".into()), SynthTree::Leaf("CN".into())],
+        };
+        assert_eq!(t.depth(), 1);
+        let mut leaves = Vec::new();
+        t.leaves(&mut leaves);
+        assert_eq!(leaves, vec!["CC(=O)O".to_string(), "CN".to_string()]);
+        let mut rs = Vec::new();
+        t.reactions(&mut rs);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].reactants_joined(), "CC(=O)O.CN");
+    }
+}

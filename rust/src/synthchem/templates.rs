@@ -1,0 +1,799 @@
+//! Reaction templates: forward joins (graph surgery for the generator)
+//! and retro matchers + splits (ground truth and oracle policies).
+//!
+//! Each template models a common medicinal-chemistry coupling. The
+//! forward direction consumes *ports* on two building blocks (or one,
+//! for protections) and produces the joined product together with atom
+//! maps; the retro direction pattern-matches a product and splits it
+//! into reactant molecules, also with atom maps. Atom maps are what let
+//! the data generator write root-aligned product/reactant SMILES pairs
+//! (the R-SMILES property that speculative decoding feeds on).
+
+use crate::chem::{Atom, BondOrder, Element, Molecule};
+
+/// The reaction templates of the SynthChem world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Template {
+    /// acid + amine -> amide (C(=O)-N)
+    Amide,
+    /// acid + alcohol -> ester (C(=O)-O-C)
+    Ester,
+    /// alcohol + alkyl halide -> ether (C-O-C)
+    Ether,
+    /// thiol + alkyl halide -> thioether (C-S-C)
+    Thioether,
+    /// sulfonyl chloride + amine -> sulfonamide (S(=O)(=O)-N)
+    Sulfonamide,
+    /// boronic acid + aryl bromide -> biaryl (c-c)
+    Suzuki,
+    /// amine + alkyl halide -> tertiary/secondary amine (N-C)
+    NAlkylation,
+    /// amine -> Boc-protected amine (unary)
+    BocProtection,
+    /// terminal alkyne + aryl bromide -> aryl alkyne (C#C-c)
+    Sonogashira,
+}
+
+impl Template {
+    pub const ALL: [Template; 9] = [
+        Template::Amide,
+        Template::Ester,
+        Template::Ether,
+        Template::Thioether,
+        Template::Sulfonamide,
+        Template::Suzuki,
+        Template::NAlkylation,
+        Template::BocProtection,
+        Template::Sonogashira,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Template::Amide => "amide",
+            Template::Ester => "ester",
+            Template::Ether => "ether",
+            Template::Thioether => "thioether",
+            Template::Sulfonamide => "sulfonamide",
+            Template::Suzuki => "suzuki",
+            Template::NAlkylation => "n-alkylation",
+            Template::BocProtection => "boc-protection",
+            Template::Sonogashira => "sonogashira",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Template> {
+        Template::ALL.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+/// The reagent paired with Boc deprotection in the retro direction
+/// (di-tert-butyl dicarbonate stand-in, always present in stock).
+pub const BOC_REAGENT: &str = "CC(C)(C)OC(=O)Cl";
+
+/// Result of a forward join: the product plus per-input atom maps
+/// (`None` for atoms consumed as leaving groups).
+#[derive(Clone, Debug)]
+pub struct JoinResult {
+    pub product: Molecule,
+    pub map_a: Vec<Option<usize>>,
+    pub map_b: Vec<Option<usize>>,
+}
+
+/// Result of a retro split: reactant molecules plus a map from each
+/// product atom to `(reactant_index, atom_index)`.
+#[derive(Clone, Debug)]
+pub struct RetroResult {
+    pub template: Template,
+    pub reactants: Vec<Molecule>,
+    pub atom_map: Vec<Option<(usize, usize)>>,
+}
+
+/// A matched retro site on a product molecule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Disconnection {
+    pub template: Template,
+    /// Primary matched bond (or the N–C(O) bond for Boc).
+    pub bond: usize,
+    /// Template-specific variant selector:
+    /// * `Suzuki` — which endpoint receives the boronic acid;
+    /// * `Ether`/`Thioether`/`NAlkylation` — leaving halide (false = Br,
+    ///   true = Cl), since the forward reaction accepts either;
+    /// * other templates — unused (false).
+    pub flipped: bool,
+}
+
+// ---------------------------------------------------------------------
+// Graph surgery helpers
+// ---------------------------------------------------------------------
+
+/// Copy `m` with the atoms in `rm` removed; returns the new molecule and
+/// an old→new index map.
+fn remove_atoms(m: &Molecule, rm: &[usize]) -> (Molecule, Vec<Option<usize>>) {
+    let mut out = Molecule::new();
+    let mut map = vec![None; m.num_atoms()];
+    for v in 0..m.num_atoms() {
+        if !rm.contains(&v) {
+            map[v] = Some(out.add_atom(m.atoms[v].clone()));
+        }
+    }
+    for b in &m.bonds {
+        if let (Some(a), Some(c)) = (map[b.a], map[b.b]) {
+            out.add_bond(a, c, b.order).expect("copied bond");
+        }
+    }
+    (out, map)
+}
+
+/// Union of two molecules; `b`'s atoms are offset by `a.num_atoms()`.
+fn union(a: &Molecule, b: &Molecule) -> (Molecule, usize) {
+    let mut out = a.clone();
+    let off = a.num_atoms();
+    for atom in &b.atoms {
+        out.add_atom(atom.clone());
+    }
+    for bond in &b.bonds {
+        out.add_bond(bond.a + off, bond.b + off, bond.order).expect("union bond");
+    }
+    (out, off)
+}
+
+/// Split a molecule into connected components; returns per-component
+/// molecules and a map old→(component, new index).
+fn components(m: &Molecule) -> (Vec<Molecule>, Vec<(usize, usize)>) {
+    let n = m.num_atoms();
+    let mut comp = vec![usize::MAX; n];
+    let mut ncomp = 0;
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        let mut stack = vec![s];
+        comp[s] = ncomp;
+        while let Some(v) = stack.pop() {
+            for &(u, _) in m.neighbors(v) {
+                if comp[u] == usize::MAX {
+                    comp[u] = ncomp;
+                    stack.push(u);
+                }
+            }
+        }
+        ncomp += 1;
+    }
+    let mut mols: Vec<Molecule> = (0..ncomp).map(|_| Molecule::new()).collect();
+    let mut map = vec![(0usize, 0usize); n];
+    for v in 0..n {
+        let c = comp[v];
+        let idx = mols[c].add_atom(m.atoms[v].clone());
+        map[v] = (c, idx);
+    }
+    for b in &m.bonds {
+        let (ca, ia) = map[b.a];
+        let (cb, ib) = map[b.b];
+        debug_assert_eq!(ca, cb);
+        mols[ca].add_bond(ia, ib, b.order).expect("component bond");
+    }
+    (mols, map)
+}
+
+/// Leaving/cap group to attach at a split site.
+#[derive(Clone, Copy, Debug)]
+enum Cap {
+    None,
+    Hydroxyl,
+    Bromide,
+    Chloride,
+    BoronicAcid,
+}
+
+fn attach_cap(m: &mut Molecule, anchor: usize, cap: Cap) {
+    match cap {
+        Cap::None => {}
+        Cap::Hydroxyl => {
+            let o = m.add_atom(Atom::new(Element::O));
+            m.add_bond(anchor, o, BondOrder::Single).unwrap();
+        }
+        Cap::Bromide => {
+            let x = m.add_atom(Atom::new(Element::Br));
+            m.add_bond(anchor, x, BondOrder::Single).unwrap();
+        }
+        Cap::Chloride => {
+            let x = m.add_atom(Atom::new(Element::Cl));
+            m.add_bond(anchor, x, BondOrder::Single).unwrap();
+        }
+        Cap::BoronicAcid => {
+            let b = m.add_atom(Atom::new(Element::B));
+            let o1 = m.add_atom(Atom::new(Element::O));
+            let o2 = m.add_atom(Atom::new(Element::O));
+            m.add_bond(anchor, b, BondOrder::Single).unwrap();
+            m.add_bond(b, o1, BondOrder::Single).unwrap();
+            m.add_bond(b, o2, BondOrder::Single).unwrap();
+        }
+    }
+}
+
+/// Break bond `bi` of `m`, cap the two ends, and return the two reactant
+/// components with atom maps. Panics if the bond is a ring bond (callers
+/// must match non-ring bonds only).
+fn split_bond(m: &Molecule, template: Template, bi: usize, cap_a: Cap, cap_b: Cap) -> RetroResult {
+    let bond = m.bonds[bi];
+    // Rebuild without the bond.
+    let mut scratch = Molecule::new();
+    for a in &m.atoms {
+        scratch.add_atom(a.clone());
+    }
+    for (i, b) in m.bonds.iter().enumerate() {
+        if i != bi {
+            scratch.add_bond(b.a, b.b, b.order).unwrap();
+        }
+    }
+    attach_cap(&mut scratch, bond.a, cap_a);
+    attach_cap(&mut scratch, bond.b, cap_b);
+    let (mols, map) = components(&scratch);
+    assert_eq!(mols.len(), 2, "split of non-ring bond must give 2 components");
+    let atom_map = (0..m.num_atoms()).map(|v| Some(map[v])).collect();
+    RetroResult { template, reactants: mols, atom_map }
+}
+
+// ---------------------------------------------------------------------
+// Atom predicates used by matchers
+// ---------------------------------------------------------------------
+
+/// Carbon with a double-bonded oxygen neighbor.
+fn is_carbonyl_c(m: &Molecule, v: usize) -> bool {
+    m.atoms[v].element == Element::C
+        && !m.atoms[v].aromatic
+        && m.neighbors(v).iter().any(|&(u, bi)| {
+            m.atoms[u].element == Element::O && m.bonds[bi].order == BondOrder::Double
+        })
+}
+
+/// Sulfur with two double-bonded oxygens (sulfonyl).
+fn is_sulfonyl_s(m: &Molecule, v: usize) -> bool {
+    m.atoms[v].element == Element::S
+        && m.neighbors(v)
+            .iter()
+            .filter(|&&(u, bi)| {
+                m.atoms[u].element == Element::O && m.bonds[bi].order == BondOrder::Double
+            })
+            .count()
+            == 2
+}
+
+/// sp carbon (has a triple bond).
+fn is_sp_carbon(m: &Molecule, v: usize) -> bool {
+    m.atoms[v].element == Element::C
+        && m.neighbors(v).iter().any(|&(_, bi)| m.bonds[bi].order == BondOrder::Triple)
+}
+
+/// Plain sp3-ish carbon: non-aromatic C with only single bonds.
+fn is_sp3_carbon(m: &Molecule, v: usize) -> bool {
+    m.atoms[v].element == Element::C
+        && !m.atoms[v].aromatic
+        && m.neighbors(v).iter().all(|&(_, bi)| m.bonds[bi].order == BondOrder::Single)
+}
+
+/// The terminal hydroxyl oxygen of a carboxylic acid rooted at carbonyl
+/// carbon `c` (single-bonded O with degree 1).
+fn acid_hydroxyl(m: &Molecule, c: usize) -> Option<usize> {
+    m.neighbors(c)
+        .iter()
+        .find(|&&(u, bi)| {
+            m.atoms[u].element == Element::O
+                && m.bonds[bi].order == BondOrder::Single
+                && m.degree(u) == 1
+                && m.atoms[u].charge == 0
+        })
+        .map(|&(u, _)| u)
+}
+
+/// Detect a Boc group on nitrogen `n`: N-C(=O)-O-C(C)(C)C.
+/// Returns the seven Boc atoms (carbonyl C, =O, ester O, quat C, 3 methyls).
+fn boc_group_on_n(m: &Molecule, n: usize) -> Option<[usize; 7]> {
+    if m.atoms[n].element != Element::N || m.atoms[n].aromatic {
+        return None;
+    }
+    for &(c1, bi) in m.neighbors(n) {
+        if m.bonds[bi].order != BondOrder::Single || !is_carbonyl_c(m, c1) {
+            continue;
+        }
+        let o_dbl = m
+            .neighbors(c1)
+            .iter()
+            .find(|&&(u, b2)| {
+                m.atoms[u].element == Element::O && m.bonds[b2].order == BondOrder::Double
+            })
+            .map(|&(u, _)| u)?;
+        // ester oxygen
+        let Some(&(o_est, _)) = m.neighbors(c1).iter().find(|&&(u, b2)| {
+            u != o_dbl
+                && m.atoms[u].element == Element::O
+                && m.bonds[b2].order == BondOrder::Single
+                && m.degree(u) == 2
+        }) else {
+            continue;
+        };
+        // quaternary carbon with three methyls
+        let Some(&(cq, _)) = m.neighbors(o_est).iter().find(|&&(u, _)| u != c1) else {
+            continue;
+        };
+        if m.atoms[cq].element != Element::C || m.degree(cq) != 4 {
+            continue;
+        }
+        let methyls: Vec<usize> = m
+            .neighbors(cq)
+            .iter()
+            .filter(|&&(u, _)| u != o_est && m.atoms[u].element == Element::C && m.degree(u) == 1)
+            .map(|&(u, _)| u)
+            .collect();
+        if methyls.len() == 3 {
+            return Some([c1, o_dbl, o_est, cq, methyls[0], methyls[1], methyls[2]]);
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Retro matching
+// ---------------------------------------------------------------------
+
+/// Find all template disconnection sites on a product molecule.
+pub fn find_disconnections(m: &Molecule) -> Vec<Disconnection> {
+    let ring = m.ring_bonds();
+    let mut out = Vec::new();
+    for (bi, b) in m.bonds.iter().enumerate() {
+        if ring[bi] || b.order != BondOrder::Single {
+            continue;
+        }
+        let (a, c) = (b.a, b.b);
+        for (x, y) in [(a, c), (c, a)] {
+            let ax = &m.atoms[x];
+            let ay = &m.atoms[y];
+            // Amide: carbonyl C — non-aromatic N (excluding Boc carbamate,
+            // which is matched as BocProtection below but also valid here).
+            if is_carbonyl_c(m, x) && ay.element == Element::N && !ay.aromatic {
+                // skip if x is a carbamate carbon (has an ester O) — that's Boc
+                let has_ester_o = m.neighbors(x).iter().any(|&(u, b2)| {
+                    m.atoms[u].element == Element::O
+                        && m.bonds[b2].order == BondOrder::Single
+                        && m.degree(u) == 2
+                });
+                if !has_ester_o {
+                    out.push(Disconnection { template: Template::Amide, bond: bi, flipped: x > y });
+                }
+            }
+            // Ester: carbonyl C — ester O (degree 2)
+            if is_carbonyl_c(m, x)
+                && ay.element == Element::O
+                && !ay.aromatic
+                && m.degree(y) == 2
+                && m.neighbors(y).iter().all(|&(u, _)| m.atoms[u].element == Element::C)
+            {
+                out.push(Disconnection { template: Template::Ester, bond: bi, flipped: x > y });
+            }
+            // Sulfonamide: sulfonyl S — N
+            if is_sulfonyl_s(m, x) && ay.element == Element::N && !ay.aromatic {
+                out.push(Disconnection { template: Template::Sulfonamide, bond: bi, flipped: x > y });
+            }
+            // Sonogashira: sp C — aromatic c
+            if is_sp_carbon(m, x) && ay.element == Element::C && ay.aromatic {
+                out.push(Disconnection { template: Template::Sonogashira, bond: bi, flipped: x > y });
+            }
+            // N-alkylation: plain N — sp3 C (no carbonyl/sulfonyl on N side)
+            if ax.element == Element::N
+                && !ax.aromatic
+                && ax.charge == 0
+                && is_sp3_carbon(m, y)
+                && !m.neighbors(x).iter().any(|&(u, _)| is_carbonyl_c(m, u) || is_sulfonyl_s(m, u))
+                && boc_group_on_n(m, x).is_none()
+            {
+                // both leaving halides are plausible precursors
+                out.push(Disconnection { template: Template::NAlkylation, bond: bi, flipped: false });
+                out.push(Disconnection { template: Template::NAlkylation, bond: bi, flipped: true });
+            }
+        }
+        // Heteroatom-split templates; the C–O/C–S orientation is fixed by
+        // the bond's atoms, `flipped` selects the leaving halide (Br/Cl).
+        let (ax, ay) = (&m.atoms[a], &m.atoms[c]);
+        for (o, cc) in [(a, c), (c, a)] {
+            if m.atoms[o].element == Element::O
+                && !m.atoms[o].aromatic
+                && m.degree(o) == 2
+                && m.neighbors(o).iter().all(|&(u, _)| {
+                    m.atoms[u].element == Element::C && !is_carbonyl_c(m, u)
+                })
+                && is_sp3_carbon(m, cc)
+            {
+                out.push(Disconnection { template: Template::Ether, bond: bi, flipped: false });
+                out.push(Disconnection { template: Template::Ether, bond: bi, flipped: true });
+            }
+            // Thioether: same with S, degree-2 non-sulfonyl sulfur.
+            if m.atoms[o].element == Element::S
+                && !m.atoms[o].aromatic
+                && m.degree(o) == 2
+                && !is_sulfonyl_s(m, o)
+                && m.neighbors(o).iter().all(|&(u, _)| {
+                    m.atoms[u].element == Element::C && !is_carbonyl_c(m, u)
+                })
+                && is_sp3_carbon(m, cc)
+            {
+                out.push(Disconnection { template: Template::Thioether, bond: bi, flipped: false });
+                out.push(Disconnection { template: Template::Thioether, bond: bi, flipped: true });
+            }
+        }
+        // Suzuki: aromatic c — aromatic c across rings.
+        if ax.element == Element::C && ax.aromatic && ay.element == Element::C && ay.aromatic {
+            out.push(Disconnection { template: Template::Suzuki, bond: bi, flipped: false });
+            out.push(Disconnection { template: Template::Suzuki, bond: bi, flipped: true });
+        }
+    }
+    // Boc protection (unary): any N carrying a Boc group.
+    for n in 0..m.num_atoms() {
+        if boc_group_on_n(m, n).is_some() {
+            // encode the N–C(=O) bond index for apply_retro
+            if let Some(&(_, bi)) = m
+                .neighbors(n)
+                .iter()
+                .find(|&&(u, b2)| m.bonds[b2].order == BondOrder::Single && is_carbonyl_c(m, u))
+            {
+                out.push(Disconnection { template: Template::BocProtection, bond: bi, flipped: false });
+            }
+        }
+    }
+    out.sort_by_key(|d| (d.bond, d.template as usize, d.flipped as usize));
+    out.dedup();
+    out
+}
+
+/// Apply a retro disconnection, producing reactant molecules and atom maps.
+pub fn apply_retro(m: &Molecule, d: &Disconnection) -> RetroResult {
+    let b = m.bonds[d.bond];
+    match d.template {
+        Template::Amide => {
+            // orientation: carbonyl C end gets the hydroxyl cap
+            let (c_end, _n_end) = if is_carbonyl_c(m, b.a) { (b.a, b.b) } else { (b.b, b.a) };
+            if c_end == b.a {
+                split_bond(m, d.template, d.bond, Cap::Hydroxyl, Cap::None)
+            } else {
+                split_bond(m, d.template, d.bond, Cap::None, Cap::Hydroxyl)
+            }
+        }
+        Template::Ester => {
+            // carbonyl side gets OH, alkoxy side keeps its O (no cap)
+            let c_end = if is_carbonyl_c(m, b.a) { b.a } else { b.b };
+            if c_end == b.a {
+                split_bond(m, d.template, d.bond, Cap::Hydroxyl, Cap::None)
+            } else {
+                split_bond(m, d.template, d.bond, Cap::None, Cap::Hydroxyl)
+            }
+        }
+        Template::Sulfonamide => {
+            let s_end = if is_sulfonyl_s(m, b.a) { b.a } else { b.b };
+            if s_end == b.a {
+                split_bond(m, d.template, d.bond, Cap::Chloride, Cap::None)
+            } else {
+                split_bond(m, d.template, d.bond, Cap::None, Cap::Chloride)
+            }
+        }
+        Template::Ether | Template::Thioether => {
+            // The heteroatom side keeps the O/S; the carbon side gets the
+            // leaving halide chosen by `flipped` (false = Br, true = Cl).
+            let o_elem = if d.template == Template::Ether { Element::O } else { Element::S };
+            let o_is_a = m.atoms[b.a].element == o_elem;
+            let cap = if d.flipped { Cap::Chloride } else { Cap::Bromide };
+            if o_is_a {
+                split_bond(m, d.template, d.bond, Cap::None, cap)
+            } else {
+                split_bond(m, d.template, d.bond, cap, Cap::None)
+            }
+        }
+        Template::Suzuki => {
+            if d.flipped {
+                split_bond(m, d.template, d.bond, Cap::Bromide, Cap::BoronicAcid)
+            } else {
+                split_bond(m, d.template, d.bond, Cap::BoronicAcid, Cap::Bromide)
+            }
+        }
+        Template::NAlkylation => {
+            let n_end = if m.atoms[b.a].element == Element::N { b.a } else { b.b };
+            let cap = if d.flipped { Cap::Chloride } else { Cap::Bromide };
+            if n_end == b.a {
+                split_bond(m, d.template, d.bond, Cap::None, cap)
+            } else {
+                split_bond(m, d.template, d.bond, cap, Cap::None)
+            }
+        }
+        Template::Sonogashira => {
+            let sp_end = if is_sp_carbon(m, b.a) { b.a } else { b.b };
+            if sp_end == b.a {
+                split_bond(m, d.template, d.bond, Cap::None, Cap::Bromide)
+            } else {
+                split_bond(m, d.template, d.bond, Cap::Bromide, Cap::None)
+            }
+        }
+        Template::BocProtection => {
+            // Remove the whole Boc group from the N; pair with the reagent.
+            let n_end = if m.atoms[b.a].element == Element::N { b.a } else { b.b };
+            let boc = boc_group_on_n(m, n_end).expect("Boc disconnection without Boc group");
+            let (amine, map) = remove_atoms(m, &boc);
+            let reagent = crate::chem::parse_smiles(BOC_REAGENT).expect("Boc reagent parses");
+            let atom_map = map.iter().map(|&o| o.map(|i| (0usize, i))).collect();
+            RetroResult {
+                template: d.template,
+                reactants: vec![amine, reagent],
+                atom_map,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Forward joins
+// ---------------------------------------------------------------------
+
+/// Join two molecules at the given ports. Returns `None` when the port
+/// kinds do not fit the template.
+pub fn forward_join(
+    t: Template,
+    a: &Molecule,
+    port_a: super::Port,
+    b: &Molecule,
+    port_b: super::Port,
+) -> Option<JoinResult> {
+    use super::Port as P;
+    // (anchor_a, remove_from_a, anchor_b, remove_from_b, bond order)
+    let plan: (usize, Vec<usize>, usize, Vec<usize>) = match (t, port_a, port_b) {
+        (Template::Amide, P::Acid(c), P::Amine(n)) => {
+            let oh = acid_hydroxyl(a, c)?;
+            (c, vec![oh], n, vec![])
+        }
+        (Template::Ester, P::Acid(c), P::Alcohol(o)) => {
+            let oh = acid_hydroxyl(a, c)?;
+            (c, vec![oh], o, vec![])
+        }
+        (Template::Ether, P::Alcohol(o), P::AlkylHalide(cx, x)) => (o, vec![], cx, vec![x]),
+        (Template::Thioether, P::Thiol(s), P::AlkylHalide(cx, x)) => (s, vec![], cx, vec![x]),
+        (Template::Sulfonamide, P::SulfonylChloride(s, cl), P::Amine(n)) => (s, vec![cl], n, vec![]),
+        (Template::Suzuki, P::BoronicAcid(c, bb), P::ArylBromide(c2, br)) => {
+            // remove B and its two oxygens
+            let mut rm = vec![bb];
+            for &(u, _) in a.neighbors(bb) {
+                if a.atoms[u].element == Element::O {
+                    rm.push(u);
+                }
+            }
+            (c, rm, c2, vec![br])
+        }
+        (Template::NAlkylation, P::Amine(n), P::AlkylHalide(cx, x)) => (n, vec![], cx, vec![x]),
+        (Template::Sonogashira, P::Alkyne(c), P::ArylBromide(c2, br)) => (c, vec![], c2, vec![br]),
+        _ => return None,
+    };
+    let (anchor_a, rm_a, anchor_b, rm_b) = plan;
+    let (mut joined, off) = union(a, b);
+    let rm_all: Vec<usize> = rm_a.iter().copied().chain(rm_b.iter().map(|&v| v + off)).collect();
+    // Add the new bond before removal (indices still valid).
+    joined
+        .add_bond(anchor_a, anchor_b + off, BondOrder::Single)
+        .ok()?;
+    let (product, map) = remove_atoms(&joined, &rm_all);
+    let map_a = (0..a.num_atoms()).map(|v| map[v]).collect();
+    let map_b = (0..b.num_atoms()).map(|v| map[v + off]).collect();
+    // Sanity: still valid chemistry?
+    crate::chem::valence::validate(&product).ok()?;
+    Some(JoinResult { product, map_a, map_b })
+}
+
+/// Unary Boc protection of an amine nitrogen.
+pub fn forward_boc(a: &Molecule, n: usize) -> Option<JoinResult> {
+    if a.atoms[n].element != Element::N || a.atoms[n].aromatic {
+        return None;
+    }
+    // need a free H on the nitrogen
+    if crate::chem::valence::total_h(a, n).ok()? == 0 {
+        return None;
+    }
+    let mut m = a.clone();
+    let c1 = m.add_atom(Atom::new(Element::C));
+    let o_dbl = m.add_atom(Atom::new(Element::O));
+    let o_est = m.add_atom(Atom::new(Element::O));
+    let cq = m.add_atom(Atom::new(Element::C));
+    let m1 = m.add_atom(Atom::new(Element::C));
+    let m2 = m.add_atom(Atom::new(Element::C));
+    let m3 = m.add_atom(Atom::new(Element::C));
+    m.add_bond(n, c1, BondOrder::Single).ok()?;
+    m.add_bond(c1, o_dbl, BondOrder::Double).ok()?;
+    m.add_bond(c1, o_est, BondOrder::Single).ok()?;
+    m.add_bond(o_est, cq, BondOrder::Single).ok()?;
+    m.add_bond(cq, m1, BondOrder::Single).ok()?;
+    m.add_bond(cq, m2, BondOrder::Single).ok()?;
+    m.add_bond(cq, m3, BondOrder::Single).ok()?;
+    crate::chem::valence::validate(&m).ok()?;
+    let map_a = (0..a.num_atoms()).map(Some).collect();
+    Some(JoinResult { product: m, map_a, map_b: Vec::new() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::{canonical_smiles, parse_smiles, parse_validated};
+    use crate::synthchem::Port;
+
+    fn mol(s: &str) -> Molecule {
+        parse_validated(s).unwrap_or_else(|e| panic!("{s}: {e}"))
+    }
+
+    #[test]
+    fn amide_join_and_retro_roundtrip() {
+        // acetic acid + methylamine -> N-methylacetamide
+        let acid = mol("CC(=O)O");
+        let amine = mol("CN");
+        let c = acid
+            .atoms
+            .iter()
+            .enumerate()
+            .find(|(i, a)| a.element == Element::C && is_carbonyl_c(&acid, *i))
+            .unwrap()
+            .0;
+        let n = amine.atoms.iter().position(|a| a.element == Element::N).unwrap();
+        let j = forward_join(Template::Amide, &acid, Port::Acid(c), &amine, Port::Amine(n)).unwrap();
+        let product = canonical_smiles(&j.product);
+        assert_eq!(product, canonical_smiles(&mol("CC(=O)NC")));
+
+        // retro finds the amide bond and splits back
+        let ds = find_disconnections(&j.product);
+        let amides: Vec<_> = ds.iter().filter(|d| d.template == Template::Amide).collect();
+        assert_eq!(amides.len(), 1);
+        let r = apply_retro(&j.product, amides[0]);
+        let mut rs: Vec<String> = r.reactants.iter().map(canonical_smiles).collect();
+        rs.sort();
+        let mut expect = vec![canonical_smiles(&acid), canonical_smiles(&amine)];
+        expect.sort();
+        assert_eq!(rs, expect);
+    }
+
+    #[test]
+    fn ester_retro() {
+        let m = mol("CC(=O)OCC"); // ethyl acetate
+        let ds = find_disconnections(&m);
+        let esters: Vec<_> = ds.iter().filter(|d| d.template == Template::Ester).collect();
+        assert_eq!(esters.len(), 1);
+        let r = apply_retro(&m, esters[0]);
+        let mut rs: Vec<String> = r.reactants.iter().map(canonical_smiles).collect();
+        rs.sort();
+        let mut expect = vec![
+            canonical_smiles(&mol("CC(=O)O")),
+            canonical_smiles(&mol("OCC")),
+        ];
+        expect.sort();
+        assert_eq!(rs, expect);
+    }
+
+    #[test]
+    fn ether_retro_two_orientations() {
+        let m = mol("COCC"); // methyl ethyl ether: two C-O cuts x two halides
+        let ds = find_disconnections(&m);
+        let ethers: Vec<_> = ds.iter().filter(|d| d.template == Template::Ether).collect();
+        assert_eq!(ethers.len(), 4);
+        for d in ethers {
+            let r = apply_retro(&m, d);
+            assert_eq!(r.reactants.len(), 2);
+            for rm in &r.reactants {
+                crate::chem::valence::validate(rm).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn sulfonamide_join_and_retro() {
+        let sc = mol("CS(=O)(=O)Cl");
+        let amine = mol("NCC");
+        let s = sc.atoms.iter().position(|a| a.element == Element::S).unwrap();
+        let cl = sc.atoms.iter().position(|a| a.element == Element::Cl).unwrap();
+        let n = amine.atoms.iter().position(|a| a.element == Element::N).unwrap();
+        let j = forward_join(
+            Template::Sulfonamide,
+            &sc,
+            Port::SulfonylChloride(s, cl),
+            &amine,
+            Port::Amine(n),
+        )
+        .unwrap();
+        assert_eq!(canonical_smiles(&j.product), canonical_smiles(&mol("CS(=O)(=O)NCC")));
+        let ds = find_disconnections(&j.product);
+        let hit: Vec<_> = ds.iter().filter(|d| d.template == Template::Sulfonamide).collect();
+        assert_eq!(hit.len(), 1);
+        let r = apply_retro(&j.product, hit[0]);
+        let mut rs: Vec<String> = r.reactants.iter().map(canonical_smiles).collect();
+        rs.sort();
+        let mut expect = vec![canonical_smiles(&sc), canonical_smiles(&amine)];
+        expect.sort();
+        assert_eq!(rs, expect);
+    }
+
+    #[test]
+    fn suzuki_join_and_retro() {
+        let ba = mol("OB(O)c1ccccc1");
+        let arbr = mol("Brc1ccncc1");
+        let b_atom = ba.atoms.iter().position(|a| a.element == Element::B).unwrap();
+        let c_anchor = ba.neighbors(b_atom).iter().find(|&&(u, _)| ba.atoms[u].element == Element::C).unwrap().0;
+        let br = arbr.atoms.iter().position(|a| a.element == Element::Br).unwrap();
+        let c2 = arbr.neighbors(br)[0].0;
+        let j = forward_join(
+            Template::Suzuki,
+            &ba,
+            Port::BoronicAcid(c_anchor, b_atom),
+            &arbr,
+            Port::ArylBromide(c2, br),
+        )
+        .unwrap();
+        assert_eq!(canonical_smiles(&j.product), canonical_smiles(&mol("c1ccc(-c2ccncc2)cc1")));
+        let ds = find_disconnections(&j.product);
+        assert!(ds.iter().any(|d| d.template == Template::Suzuki));
+    }
+
+    #[test]
+    fn boc_protection_roundtrip() {
+        let amine = mol("NCCc1ccccc1");
+        let n = amine.atoms.iter().position(|a| a.element == Element::N).unwrap();
+        let j = forward_boc(&amine, n).unwrap();
+        let prod = canonical_smiles(&j.product);
+        assert!(prod.contains("C(C)(C)"), "{prod}");
+        let ds = find_disconnections(&j.product);
+        let boc: Vec<_> = ds.iter().filter(|d| d.template == Template::BocProtection).collect();
+        assert_eq!(boc.len(), 1);
+        let r = apply_retro(&j.product, boc[0]);
+        assert_eq!(r.reactants.len(), 2);
+        let rs: Vec<String> = r.reactants.iter().map(canonical_smiles).collect();
+        assert!(rs.contains(&canonical_smiles(&amine)));
+        assert!(rs.contains(&crate::chem::canonicalize(BOC_REAGENT).unwrap()));
+        // amide matcher must NOT fire on the carbamate bond
+        assert!(!ds.iter().any(|d| d.template == Template::Amide));
+    }
+
+    #[test]
+    fn n_alkylation_and_sonogashira() {
+        let m = mol("C#Cc1ccccc1");
+        let ds = find_disconnections(&m);
+        assert!(ds.iter().any(|d| d.template == Template::Sonogashira));
+        let m2 = mol("CCNCC");
+        let ds2 = find_disconnections(&m2);
+        assert!(ds2.iter().any(|d| d.template == Template::NAlkylation));
+    }
+
+    #[test]
+    fn ring_bonds_never_matched() {
+        // cyclic ether (THF): the C-O bonds are ring bonds -> no ether cut
+        let m = mol("C1CCOC1");
+        let ds = find_disconnections(&m);
+        assert!(ds.iter().all(|d| d.template != Template::Ether));
+    }
+
+    #[test]
+    fn atom_maps_are_consistent() {
+        let m = mol("CC(=O)NCCO");
+        let ds = find_disconnections(&m);
+        let d = ds.iter().find(|d| d.template == Template::Amide).unwrap();
+        let r = apply_retro(&m, d);
+        for (v, slot) in r.atom_map.iter().enumerate() {
+            let (ri, ai) = slot.expect("bond split keeps all atoms");
+            assert_eq!(
+                r.reactants[ri].atoms[ai].element,
+                m.atoms[v].element,
+                "atom {v} mapped to different element"
+            );
+        }
+    }
+
+    #[test]
+    fn retro_products_all_validate() {
+        for s in ["CC(=O)NCC", "CC(=O)OCC", "COC", "CSC", "CS(=O)(=O)NC", "CCNC", "C#Cc1ccccc1"] {
+            let m = mol(s);
+            for d in find_disconnections(&m) {
+                let r = apply_retro(&m, &d);
+                for rm in &r.reactants {
+                    crate::chem::valence::validate(rm)
+                        .unwrap_or_else(|e| panic!("{s} via {:?}: {e}", d.template));
+                }
+            }
+        }
+    }
+}

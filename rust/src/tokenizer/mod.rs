@@ -1,0 +1,239 @@
+//! Atomwise SMILES tokenizer with a fixed vocabulary shared between the
+//! Python compile path and the Rust request path.
+//!
+//! Tokenization follows the Molecular Transformer convention: bracket
+//! expressions `[...]` and two-character halogens `Cl`/`Br` are single
+//! tokens; everything else is one character per token. The vocabulary is
+//! built once at datagen time and written to `artifacts/vocab.json`;
+//! `python/compile/tokenizer.py` reads the same file, so ids agree across
+//! the language boundary by construction.
+
+use crate::jsonx::Json;
+use std::collections::HashMap;
+
+/// Reserved special token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+/// Names of the special tokens, in id order.
+pub const SPECIALS: [&str; 4] = ["<pad>", "<bos>", "<eos>", "<unk>"];
+
+/// Split a SMILES string into atomwise tokens.
+pub fn tokenize(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'[' => {
+                // bracket atom: consume through ']'
+                let start = i;
+                while i < b.len() && b[i] != b']' {
+                    i += 1;
+                }
+                i = (i + 1).min(b.len());
+                out.push(s[start..i].to_string());
+            }
+            b'C' if b.get(i + 1) == Some(&b'l') => {
+                out.push("Cl".to_string());
+                i += 2;
+            }
+            b'B' if b.get(i + 1) == Some(&b'r') => {
+                out.push("Br".to_string());
+                i += 2;
+            }
+            b'%' => {
+                // two-digit ring index is one token
+                let end = (i + 3).min(b.len());
+                out.push(s[i..end].to_string());
+                i = end;
+            }
+            _ => {
+                let len = if b[i] < 0x80 { 1 } else { 2 };
+                out.push(s[i..(i + len).min(b.len())].to_string());
+                i += len;
+            }
+        }
+    }
+    out
+}
+
+/// A fixed vocabulary mapping tokens to ids.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    id_of: HashMap<String, i32>,
+    tokens: Vec<String>,
+}
+
+impl Vocab {
+    /// Build a vocabulary from an iterator of corpus strings. Token order
+    /// (and therefore ids) is deterministic: specials, then sorted tokens.
+    pub fn build<'a>(corpus: impl IntoIterator<Item = &'a str>) -> Vocab {
+        let mut set = std::collections::BTreeSet::new();
+        for s in corpus {
+            for t in tokenize(s) {
+                set.insert(t);
+            }
+        }
+        let mut tokens: Vec<String> = SPECIALS.iter().map(|s| s.to_string()).collect();
+        tokens.extend(set.into_iter());
+        let id_of = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i32))
+            .collect();
+        Vocab { id_of, tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn id(&self, token: &str) -> i32 {
+        self.id_of.get(token).copied().unwrap_or(UNK)
+    }
+
+    pub fn token(&self, id: i32) -> &str {
+        self.tokens
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Encode a string to ids, optionally wrapping with BOS/EOS.
+    pub fn encode(&self, s: &str, wrap: bool) -> Vec<i32> {
+        let mut out = Vec::new();
+        if wrap {
+            out.push(BOS);
+        }
+        for t in tokenize(s) {
+            out.push(self.id(&t));
+        }
+        if wrap {
+            out.push(EOS);
+        }
+        out
+    }
+
+    /// Decode ids back to a string, stopping at EOS and skipping
+    /// PAD/BOS.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id == PAD || id == BOS {
+                continue;
+            }
+            s.push_str(self.token(id));
+        }
+        s
+    }
+
+    /// Serialize as JSON (`{"tokens": [...]}`) for the Python side.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "tokens",
+            Json::Arr(self.tokens.iter().map(|t| Json::str(t.clone())).collect()),
+        )])
+    }
+
+    /// Load from the JSON produced by [`Vocab::to_json`].
+    pub fn from_json(j: &Json) -> Result<Vocab, String> {
+        let arr = j
+            .get("tokens")
+            .and_then(|t| t.as_arr())
+            .ok_or("vocab.json missing 'tokens'")?;
+        let tokens: Vec<String> = arr
+            .iter()
+            .map(|t| t.as_str().map(|s| s.to_string()).ok_or("non-string token"))
+            .collect::<Result<_, _>>()?;
+        for (i, s) in SPECIALS.iter().enumerate() {
+            if tokens.get(i).map(|t| t.as_str()) != Some(*s) {
+                return Err(format!("special token {i} must be {s}"));
+            }
+        }
+        let id_of = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i32))
+            .collect();
+        Ok(Vocab { id_of, tokens })
+    }
+
+    /// Load a vocabulary from `vocab.json` on disk.
+    pub fn load(path: &std::path::Path) -> Result<Vocab, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Vocab::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_atomwise() {
+        assert_eq!(tokenize("CCO"), vec!["C", "C", "O"]);
+        assert_eq!(tokenize("CCl"), vec!["C", "Cl"]);
+        assert_eq!(tokenize("BrCC"), vec!["Br", "C", "C"]);
+        assert_eq!(
+            tokenize("c1cc[nH]c1"),
+            vec!["c", "1", "c", "c", "[nH]", "c", "1"]
+        );
+        assert_eq!(tokenize("C%12C"), vec!["C", "%12", "C"]);
+        assert_eq!(tokenize("CC(=O)O.CN"), vec!["C", "C", "(", "=", "O", ")", "O", ".", "C", "N"]);
+    }
+
+    #[test]
+    fn vocab_roundtrip() {
+        let v = Vocab::build(["CC(=O)O", "c1cc[nH]c1", "ClCCBr"]);
+        for s in ["CC(=O)O", "c1cc[nH]c1", "ClCCBr"] {
+            let ids = v.encode(s, true);
+            assert_eq!(ids[0], BOS);
+            assert_eq!(*ids.last().unwrap(), EOS);
+            assert_eq!(v.decode(&ids), s);
+        }
+    }
+
+    #[test]
+    fn unknown_tokens_map_to_unk() {
+        let v = Vocab::build(["CC"]);
+        let ids = v.encode("CN", false);
+        assert_eq!(ids[0], v.id("C"));
+        assert_eq!(ids[1], UNK);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = Vocab::build(["CC(=O)NC", "c1ccccc1"]);
+        let j = v.to_json();
+        let v2 = Vocab::from_json(&j).unwrap();
+        assert_eq!(v.len(), v2.len());
+        for s in ["CC(=O)NC", "c1ccccc1"] {
+            assert_eq!(v.encode(s, true), v2.encode(s, true));
+        }
+    }
+
+    #[test]
+    fn specials_enforced() {
+        let j = Json::parse("{\"tokens\":[\"<pad>\",\"<bos>\",\"x\"]}").unwrap();
+        assert!(Vocab::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let v = Vocab::build(["CO"]);
+        let c = v.id("C");
+        let o = v.id("O");
+        assert_eq!(v.decode(&[BOS, c, EOS, o]), "C");
+        assert_eq!(v.decode(&[c, PAD, o]), "CO");
+    }
+}

@@ -1,0 +1,79 @@
+//! Chemistry substrate integration: parser + valence + canon + writer
+//! working together over a realistic molecule population, plus the
+//! template engine's chemistry-level guarantees.
+
+use retroserve::chem::{self, parse_smiles, parse_validated};
+use retroserve::synthchem::{apply_retro, find_disconnections};
+
+const DRUGLIKE: &[&str] = &[
+    // hand-written, chemistry-shaped structures within the SynthChem grammar
+    "CC(C)(C)OC(=O)NCCc1ccccc1",
+    "CC(=O)Nc1ccc(S(=O)(=O)NCC)cc1",
+    "O=C(OCC)c1ccc(-c2ccncc2)cc1",
+    "FC(F)(F)c1cc(C#Cc2ccsc2)ccc1Br",
+    "CCN(CC)CCOC(=O)c1ccccc1N",
+    "c1ccc2c(c1)ccc1ccccc12",
+    "CC(C)Oc1ccc(CN(C)C(=O)CCl)cc1",
+    "OB(O)c1ccco1",
+];
+
+#[test]
+fn druglike_molecules_roundtrip_and_validate() {
+    for s in DRUGLIKE {
+        let m = parse_validated(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        let c = chem::canonical_smiles(&m);
+        let m2 = parse_validated(&c).unwrap_or_else(|e| panic!("{s} canon {c}: {e}"));
+        assert_eq!(chem::canonical_smiles(&m2), c, "{s}");
+    }
+}
+
+#[test]
+fn disconnection_reactants_always_validate() {
+    for s in DRUGLIKE {
+        let m = parse_smiles(s).unwrap();
+        for d in find_disconnections(&m) {
+            let r = apply_retro(&m, &d);
+            for reactant in &r.reactants {
+                retroserve::chem::valence::validate(reactant)
+                    .unwrap_or_else(|e| panic!("{s} via {:?}: {e}", d.template));
+            }
+        }
+    }
+}
+
+#[test]
+fn atom_count_is_conserved_or_grows_by_leaving_groups() {
+    // retro adds leaving groups (OH, Br, Cl, B(O)O) but never loses atoms
+    for s in DRUGLIKE {
+        let m = parse_smiles(s).unwrap();
+        for d in find_disconnections(&m) {
+            let r = apply_retro(&m, &d);
+            let total: usize = r.reactants.iter().map(|x| x.num_atoms()).sum();
+            assert!(total >= m.num_atoms(), "{s} via {:?} lost atoms", d.template);
+            assert!(total <= m.num_atoms() + 9, "{s} via {:?} gained too many", d.template);
+        }
+    }
+}
+
+#[test]
+fn canonicalization_is_spelling_invariant_for_ring_systems() {
+    let spellings = [
+        ("c1ccc2ccccc2c1", "c1ccc2c(c1)cccc2"),
+        ("C1CCCCC1", "C1CCCCC1"),
+        ("c1ccncc1", "n1ccccc1"),
+    ];
+    for (a, b) in spellings {
+        assert_eq!(
+            chem::canonicalize(a).unwrap(),
+            chem::canonicalize(b).unwrap(),
+            "{a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn invalid_structures_rejected() {
+    for s in ["C1CC", "c1ccc1q", "N(C)(C)(C)C", "[CH5]", "C=#C"] {
+        assert!(chem::canonicalize(s).is_err(), "{s} should be invalid");
+    }
+}

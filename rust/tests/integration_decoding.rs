@@ -1,0 +1,105 @@
+//! Decoding-engine integration over the mock model: cross-engine
+//! agreement, Table-1-style statistics shape, and batch-size scaling
+//! behaviour.
+
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::tokenizer::{BOS, EOS};
+use retroserve::util::Rng;
+
+fn random_srcs(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 10 + rng.gen_range(14);
+            let mut s = vec![BOS];
+            for _ in 0..len {
+                s.push(4 + rng.gen_range(20) as i32);
+            }
+            s.push(EOS);
+            s
+        })
+        .collect()
+}
+
+#[test]
+fn all_engines_agree_on_top1_across_batches() {
+    let model = MockModel::new(MockConfig::default());
+    let srcs = random_srcs(12, 3);
+    let k = 10;
+    let mut reference: Option<Vec<Vec<i32>>> = None;
+    for b in [1usize, 4, 12] {
+        for decoder in [
+            Box::new(BeamSearch::vanilla()) as Box<dyn Decoder>,
+            Box::new(BeamSearch::optimized()),
+            Box::new(Hsbs::for_batch_size(b)),
+            Box::new(Msbs::default()),
+        ] {
+            let mut tops = Vec::new();
+            for group in srcs.chunks(b) {
+                let out = decoder
+                    .generate(&model, group, k, &mut DecodeStats::default())
+                    .unwrap();
+                tops.extend(out.into_iter().map(|o| o.hyps[0].tokens.clone()));
+            }
+            match &reference {
+                None => reference = Some(tops),
+                Some(r) => assert_eq!(r, &tops, "{} at B={b}", decoder.name()),
+            }
+        }
+    }
+}
+
+#[test]
+fn msbs_calls_scale_down_with_medusa_quality() {
+    let srcs = random_srcs(6, 5);
+    let mut calls = Vec::new();
+    for acc in [100u32, 70, 40] {
+        let model = MockModel::new(MockConfig {
+            head_base_acc: acc,
+            head_acc_decay: 0,
+            ..Default::default()
+        });
+        let mut stats = DecodeStats::default();
+        Msbs::default().generate(&model, &srcs, 10, &mut stats).unwrap();
+        calls.push(stats.model_calls);
+    }
+    assert!(calls[0] <= calls[1] && calls[1] <= calls[2], "{calls:?}");
+}
+
+#[test]
+fn table1_stat_shape_bs_vs_msbs() {
+    // the relationships Table 1 reports must hold on the mock:
+    // calls(MSBS) < calls(BS); eff_batch(BS) == B*K constant;
+    // acceptance(MSBS) in (0, 1].
+    let model = MockModel::new(MockConfig::default());
+    let srcs = random_srcs(8, 11);
+    let k = 10;
+    let mut bs = DecodeStats::default();
+    for g in srcs.chunks(4) {
+        BeamSearch::vanilla().generate(&model, g, k, &mut bs).unwrap();
+    }
+    let mut ms = DecodeStats::default();
+    for g in srcs.chunks(4) {
+        Msbs::default().generate(&model, g, k, &mut ms).unwrap();
+    }
+    assert!(ms.model_calls < bs.model_calls);
+    assert_eq!(bs.avg_effective_batch(), 40.0);
+    let a = ms.acceptance_rate();
+    assert!(a > 0.3 && a <= 1.0, "{a}");
+}
+
+#[test]
+fn hsbs_draft_schedule_shrinks_with_batch() {
+    // B=1 uses 10 drafts; B=16 uses 1: the effective batch per beam
+    // must shrink accordingly.
+    let model = MockModel::new(MockConfig::default());
+    let srcs = random_srcs(16, 13);
+    let mut s1 = DecodeStats::default();
+    Hsbs::for_batch_size(1).generate(&model, &srcs[..1], 10, &mut s1).unwrap();
+    let mut s16 = DecodeStats::default();
+    Hsbs::for_batch_size(16).generate(&model, &srcs, 10, &mut s16).unwrap();
+    let per_beam_1 = s1.avg_effective_batch() / 10.0;
+    let per_beam_16 = s16.avg_effective_batch() / (16.0 * 10.0);
+    assert!(per_beam_1 > per_beam_16, "{per_beam_1} vs {per_beam_16}");
+}

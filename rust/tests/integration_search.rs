@@ -1,0 +1,116 @@
+//! Planner integration over the SynthChem world with the oracle policy:
+//! solve rates, deadline behaviour, route quality, beam-width batching.
+
+use retroserve::chem;
+use retroserve::search::policy::OraclePolicy;
+use retroserve::search::{dfs::Dfs, retrostar::RetroStar, Planner, SearchLimits, Stock};
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
+use retroserve::util::Rng;
+
+struct World {
+    stock: Stock,
+    targets: Vec<(String, usize)>, // (smiles, depth)
+}
+
+fn world(seed: u64, n_targets: usize) -> World {
+    let blocks = generate_blocks(seed, 500);
+    let stock = Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+        chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT).unwrap(),
+    ]));
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(seed ^ 77);
+    let mut targets = Vec::new();
+    let mut guard = 0;
+    while targets.len() < n_targets && guard < n_targets * 40 {
+        guard += 1;
+        let depth = 1 + rng.gen_range(3);
+        if let Some(t) = gen_tree(&idx, &mut rng, depth, 26) {
+            targets.push((t.product_smiles().to_string(), t.depth()));
+        }
+    }
+    World { stock, targets }
+}
+
+fn limits() -> SearchLimits {
+    SearchLimits {
+        deadline: std::time::Duration::from_secs(5),
+        max_iterations: 300,
+        max_depth: 5,
+        expansions_per_step: 10,
+    }
+}
+
+#[test]
+fn oracle_solves_most_generated_targets_with_both_planners() {
+    let w = world(101, 20);
+    assert!(w.targets.len() >= 15);
+    for planner in [&RetroStar::new(1) as &dyn Planner, &Dfs] {
+        let policy = OraclePolicy::new();
+        let mut solved = 0;
+        for (t, _) in &w.targets {
+            let r = planner.solve(t, &policy, &w.stock, &limits()).unwrap();
+            if r.solved {
+                solved += 1;
+                let route = r.route.unwrap();
+                assert!(route.closed_over(&w.stock));
+            }
+        }
+        assert!(
+            solved * 10 >= w.targets.len() * 7,
+            "{}: solved only {solved}/{}",
+            planner.name(),
+            w.targets.len()
+        );
+    }
+}
+
+#[test]
+fn route_depth_tracks_generation_depth() {
+    let w = world(103, 12);
+    let policy = OraclePolicy::new();
+    let planner = RetroStar::new(1);
+    for (t, depth) in &w.targets {
+        let r = planner.solve(t, &policy, &w.stock, &limits()).unwrap();
+        if let Some(route) = r.route {
+            // a valid route may be shorter than the generating tree (other
+            // disconnections exist) but never deeper than the cap
+            assert!(route.depth() <= 5, "target {t} depth {} gen {}", route.depth(), depth);
+        }
+    }
+}
+
+#[test]
+fn beam_width_reduces_expansion_batches() {
+    let w = world(107, 10);
+    let lim = limits();
+    let mut total_exp_bw1 = 0;
+    let mut total_exp_bw8 = 0;
+    for (t, _) in &w.targets {
+        let p1 = OraclePolicy::new();
+        let r1 = RetroStar::new(1).solve(t, &p1, &w.stock, &lim).unwrap();
+        total_exp_bw1 += r1.expansions;
+        let p8 = OraclePolicy::new();
+        let r8 = RetroStar::new(8).solve(t, &p8, &w.stock, &lim).unwrap();
+        total_exp_bw8 += r8.expansions;
+    }
+    assert!(
+        total_exp_bw8 <= total_exp_bw1,
+        "bw8 {total_exp_bw8} > bw1 {total_exp_bw1}"
+    );
+}
+
+#[test]
+fn zero_deadline_solves_nothing_nontrivial() {
+    let w = world(109, 6);
+    let mut lim = limits();
+    lim.deadline = std::time::Duration::from_millis(0);
+    let policy = OraclePolicy::new();
+    for (t, _) in &w.targets {
+        if w.stock.contains(t) {
+            continue;
+        }
+        let r = RetroStar::new(1).solve(t, &policy, &w.stock, &lim).unwrap();
+        assert!(!r.solved);
+    }
+}

@@ -1,0 +1,113 @@
+//! Full-stack coordinator integration over TCP with the mock model:
+//! concurrent planning sessions, cross-tree batching, metrics.
+
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::server::{Client, Server, ServerCtx};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::jsonx::Json;
+use retroserve::metrics::Metrics;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::search::{SearchLimits, Stock};
+use retroserve::tokenizer::Vocab;
+use std::sync::Arc;
+
+/// A world where the mock model is a *perfect* single-step policy:
+/// the copy task means expanding "A.B" yields [A, B]; so any molecule
+/// string spelled "x.y" (never valid chemistry) won't work — instead we
+/// exploit the identity: a product whose training "reactants" string is
+/// itself a valid split. Here we only exercise protocol mechanics, not
+/// chemistry, so unsolved plans are acceptable outcomes.
+fn ctx() -> ServerCtx {
+    let vocab = Vocab::build(["CC(=O)NC", "CC(=O)O.CN", "CCO"]);
+    let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+    let metrics = Arc::new(Metrics::new());
+    let hub = ExpansionHub::start(
+        model,
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(2) },
+        metrics.clone(),
+    );
+    ServerCtx {
+        hub,
+        stock: Arc::new(Stock::from_iter([
+            retroserve::chem::canonicalize("CC(=O)O").unwrap(),
+            retroserve::chem::canonicalize("CN").unwrap(),
+        ])),
+        metrics,
+        default_limits: SearchLimits {
+            deadline: std::time::Duration::from_millis(400),
+            max_iterations: 30,
+            max_depth: 3,
+            expansions_per_step: 5,
+        },
+        default_algo: "retrostar".into(),
+        default_beam_width: 1,
+    }
+}
+
+#[test]
+fn many_concurrent_planning_sessions_share_the_hub() {
+    let server = Server::start("127.0.0.1:0", ctx()).unwrap();
+    let addr = server.addr();
+    let mut joins = Vec::new();
+    for i in 0..6 {
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let r = c
+                .call(Json::obj(vec![
+                    ("op", Json::str("plan")),
+                    ("smiles", Json::str("CC(=O)NC")),
+                    ("algo", Json::str(if i % 2 == 0 { "retrostar" } else { "dfs" })),
+                ]))
+                .unwrap();
+            assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
+            r.get("wall_ms").and_then(|x| x.as_f64()).unwrap()
+        }));
+    }
+    for j in joins {
+        let wall = j.join().unwrap();
+        assert!(wall < 5_000.0);
+    }
+    // metrics reflect the traffic
+    let mut c = Client::connect(addr).unwrap();
+    let m = c.call(Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    let plans = m
+        .get("counters")
+        .and_then(|x| x.get("op.plan"))
+        .and_then(|x| x.as_usize())
+        .unwrap_or(0);
+    assert_eq!(plans, 6);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_do_not_kill_the_connection() {
+    let server = Server::start("127.0.0.1:0", ctx()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let r = c.call(Json::obj(vec![("op", Json::str("plan"))])).unwrap(); // missing smiles
+    assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
+    let r = c.call(Json::obj(vec![("op", Json::str("expand")), ("smiles", Json::str("not-smiles(("))])).unwrap();
+    assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
+    // connection still alive
+    let r = c.call(Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(r.get("pong").and_then(|x| x.as_bool()), Some(true));
+    server.shutdown();
+}
+
+#[test]
+fn per_request_limits_override_defaults() {
+    let server = Server::start("127.0.0.1:0", ctx()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let t0 = std::time::Instant::now();
+    let r = c
+        .call(Json::obj(vec![
+            ("op", Json::str("plan")),
+            ("smiles", Json::str("CC(=O)NC")),
+            ("deadline_ms", Json::num(50.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true));
+    assert!(t0.elapsed().as_secs_f64() < 3.0);
+    server.shutdown();
+}

@@ -1,0 +1,185 @@
+//! Property-based tests (hand-rolled generators — the offline build has
+//! no proptest crate; determinism comes from the seeded [`Rng`]).
+//!
+//! Invariants covered:
+//! * chem: random molecules round-trip through random SMILES spellings
+//!   to one canonical form; validity is spelling-invariant.
+//! * tokenizer: encode/decode identity on every generable string.
+//! * synthchem: every generated reaction is rediscoverable by the retro
+//!   matchers.
+//! * decoding: MSBS/HSBS top-1 equals beam-search top-1 on the mock
+//!   model across many random "molecules"; stats invariants hold.
+//! * retro*: a route returned solved is always closed over the stock
+//!   and within the depth cap.
+
+use retroserve::chem;
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
+use retroserve::tokenizer::{Vocab, BOS, EOS};
+use retroserve::util::Rng;
+
+/// Sample random valid molecules via the SynthChem generator.
+fn random_molecules(seed: u64, count: usize) -> Vec<String> {
+    let blocks = generate_blocks(seed, 250);
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut out = Vec::new();
+    let mut guard = 0;
+    while out.len() < count && guard < count * 30 {
+        guard += 1;
+        let depth = 1 + rng.gen_range(3);
+        if let Some(t) = gen_tree(&idx, &mut rng, depth, 26) {
+            out.push(t.product_smiles().to_string());
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_random_spellings_share_canonical_form() {
+    let mols = random_molecules(11, 40);
+    assert!(mols.len() >= 30);
+    let mut rng = Rng::new(42);
+    for smiles in &mols {
+        let m = chem::parse_smiles(smiles).unwrap();
+        let canonical = chem::canonical_smiles(&m);
+        for _ in 0..8 {
+            let spelling = chem::writer::random_smiles(&m, &mut rng);
+            let m2 = chem::parse_validated(&spelling)
+                .unwrap_or_else(|e| panic!("{smiles}: spelling {spelling}: {e}"));
+            assert_eq!(chem::canonical_smiles(&m2), canonical, "via {spelling}");
+        }
+    }
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_on_generated_strings() {
+    let mols = random_molecules(13, 40);
+    let vocab = Vocab::build(mols.iter().map(|s| s.as_str()));
+    for s in &mols {
+        let ids = vocab.encode(s, true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(vocab.decode(&ids), *s);
+    }
+}
+
+#[test]
+fn prop_generated_reactions_are_rediscoverable() {
+    let blocks = generate_blocks(17, 300);
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(99);
+    let mut checked = 0;
+    for _ in 0..30 {
+        let Some(tree) = gen_tree(&idx, &mut rng, 2, 26) else { continue };
+        let mut reactions = Vec::new();
+        tree.reactions(&mut reactions);
+        for rx in &reactions {
+            let product = chem::parse_smiles(&rx.product).unwrap();
+            let mut expect: Vec<String> = rx.reactants.clone();
+            expect.sort();
+            let found = retroserve::synthchem::find_disconnections(&product)
+                .iter()
+                .any(|d| {
+                    let r = retroserve::synthchem::apply_retro(&product, d);
+                    let mut rs: Vec<String> =
+                        r.reactants.iter().map(chem::canonical_smiles).collect();
+                    rs.sort();
+                    rs == expect
+                });
+            assert!(found, "{} -> {:?} not rediscoverable", rx.product, rx.reactants);
+            checked += 1;
+        }
+    }
+    assert!(checked > 20, "only {checked} reactions checked");
+}
+
+#[test]
+fn prop_speculative_decoders_match_beam_search_top1() {
+    let model = MockModel::new(MockConfig::default());
+    let mut rng = Rng::new(7);
+    for trial in 0..25 {
+        let len = 6 + rng.gen_range(15);
+        let mut src = vec![BOS];
+        for _ in 0..len {
+            src.push(4 + rng.gen_range(20) as i32);
+        }
+        src.push(EOS);
+        let srcs = vec![src];
+        let k = 4 + rng.gen_range(7); // 4..=10
+        let mut s_bs = DecodeStats::default();
+        let bs = BeamSearch::vanilla().generate(&model, &srcs, k, &mut s_bs).unwrap();
+        for (name, out) in [
+            ("msbs", Msbs::default().generate(&model, &srcs, k, &mut DecodeStats::default()).unwrap()),
+            ("hsbs", Hsbs::new(3, 6).generate(&model, &srcs, k, &mut DecodeStats::default()).unwrap()),
+        ] {
+            assert_eq!(
+                bs[0].hyps[0].tokens, out[0].hyps[0].tokens,
+                "trial {trial}: {name} top-1 mismatch"
+            );
+            assert!(
+                (bs[0].hyps[0].logp - out[0].hyps[0].logp).abs() < 1e-9,
+                "trial {trial}: {name} top-1 logp mismatch"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_decode_stats_invariants() {
+    let model = MockModel::new(MockConfig::default());
+    let mut rng = Rng::new(23);
+    for _ in 0..10 {
+        let len = 8 + rng.gen_range(10);
+        let mut src = vec![BOS];
+        for _ in 0..len {
+            src.push(4 + rng.gen_range(20) as i32);
+        }
+        src.push(EOS);
+        let mut stats = DecodeStats::default();
+        Msbs::default().generate(&model, &[src], 6, &mut stats).unwrap();
+        assert!(stats.drafts_accepted <= stats.drafts_offered);
+        assert!(stats.model_calls % 2 == 0, "MSBS uses call pairs");
+        assert!(stats.rows_padded >= stats.rows_logical);
+        let rate = stats.acceptance_rate();
+        assert!((0.0..=1.0).contains(&rate));
+    }
+}
+
+#[test]
+fn prop_solved_routes_are_closed_and_depth_capped() {
+    use retroserve::search::policy::OraclePolicy;
+    use retroserve::search::{retrostar::RetroStar, Planner, SearchLimits, Stock};
+
+    let blocks = generate_blocks(31, 400);
+    let stock = Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+        chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT).unwrap(),
+    ]));
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(5);
+    let limits = SearchLimits {
+        deadline: std::time::Duration::from_secs(5),
+        max_iterations: 200,
+        max_depth: 5,
+        expansions_per_step: 10,
+    };
+    let planner = RetroStar::new(1);
+    let policy = OraclePolicy::new();
+    let mut solved = 0;
+    for _ in 0..15 {
+        let depth = 1 + rng.gen_range(3);
+        let Some(tree) = gen_tree(&idx, &mut rng, depth, 26) else { continue };
+        let r = planner
+            .solve(tree.product_smiles(), &policy, &stock, &limits)
+            .unwrap();
+        if r.solved {
+            solved += 1;
+            let route = r.route.unwrap();
+            assert!(route.closed_over(&stock), "open route returned as solved");
+            assert!(route.depth() <= limits.max_depth);
+        }
+    }
+    assert!(solved >= 8, "oracle should solve most generated targets: {solved}");
+}
