@@ -1,12 +1,21 @@
-//! Decoding-engine benches over the mock model: pure L3 algorithm cost
-//! (beam bookkeeping, draft construction, verification, candidate
-//! pools) with model latency held at ~0.
+//! Decoding-engine scaling benches over the mock model: how host-side
+//! cost (beam bookkeeping, draft construction, verification, candidate
+//! pools) grows with beam width K and group size B, with model latency
+//! held at ~0. Complements `benches/micro.rs`, which measures one fixed
+//! workload and emits `BENCH_decoding.json`; this bench sweeps the
+//! axes. Steady-state heap allocations per group are reported via a
+//! counting global allocator — the zero-allocation decoding core should
+//! keep them flat as K grows (the seed scaled with K * sequence length).
 
+use retroserve::benchkit::{allocs_now, CountingAlloc};
 use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::tokenizer::{BOS, EOS};
 use retroserve::util::stats::mean;
 use retroserve::util::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn srcs(n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
     let mut rng = Rng::new(seed);
@@ -22,28 +31,51 @@ fn srcs(n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
         .collect()
 }
 
-fn main() {
-    println!("== decoding engine benches (mock model, K=10) ==");
-    let model = MockModel::new(MockConfig::default());
-    let group = srcs(8, 30, 3);
-    for (name, decoder) in [
+fn engines() -> Vec<(&'static str, Box<dyn Decoder>)> {
+    vec![
         ("beam-search", Box::new(BeamSearch::vanilla()) as Box<dyn Decoder>),
         ("beam-search-optimized", Box::new(BeamSearch::optimized())),
         ("hsbs (3x10 drafts)", Box::new(Hsbs::new(3, 10))),
         ("msbs", Box::new(Msbs::default())),
-    ] {
-        let mut times = Vec::new();
+    ]
+}
+
+fn sweep(label: &str, group: &[Vec<i32>], k: usize, reps: u64) {
+    println!("-- {label} --");
+    for (name, decoder) in engines() {
+        let model = MockModel::new(MockConfig::default());
+        // warmup: exclude one-time buffer growth from the steady state
+        decoder.generate(&model, group, k, &mut DecodeStats::default()).unwrap();
+        // pre-size harness buffers so they don't pollute the counter
+        let mut times = Vec::with_capacity(reps as usize);
         let mut stats = DecodeStats::default();
-        for _ in 0..12 {
+        let a0 = allocs_now();
+        for _ in 0..reps {
             let t0 = std::time::Instant::now();
-            decoder.generate(&model, &group, 10, &mut stats).unwrap();
+            decoder.generate(&model, group, k, &mut stats).unwrap();
             times.push(t0.elapsed().as_secs_f64() * 1e3);
         }
+        let allocs_per_group = (allocs_now() - a0) / reps;
         println!(
-            "{name:<28} {:>9.2} ms/group  ({} calls, eff batch {:.0})",
+            "{name:<28} {:>9.2} ms/group  ({} calls, eff batch {:.0}, {} allocs/group)",
             mean(&times),
-            stats.model_calls / 12,
-            stats.avg_effective_batch()
+            stats.model_calls / reps,
+            stats.avg_effective_batch(),
+            allocs_per_group
         );
+    }
+}
+
+fn main() {
+    println!("== decoding engine scaling benches (mock model) ==");
+    // K sweep at fixed B: host-side cost and allocations vs beam width.
+    for k in [1usize, 5, 10, 20] {
+        let group = srcs(4, 25, 3);
+        sweep(&format!("B=4, len=25, K={k}"), &group, k, 8);
+    }
+    // B sweep at fixed K: group batching behaviour.
+    for b in [1usize, 8, 16] {
+        let group = srcs(b, 25, 7);
+        sweep(&format!("B={b}, len=25, K=10"), &group, 10, 8);
     }
 }

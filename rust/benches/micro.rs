@@ -1,11 +1,23 @@
 //! Micro benches for the L3 hot-path primitives (criterion is not
 //! available offline; this is a minimal warmup+repeat harness with
 //! mean/stddev reporting, run via `cargo bench`).
+//!
+//! The decode-cycle section measures the host-side cost of every
+//! decoding engine over the mock model (model latency ~0, so this
+//! isolates beam bookkeeping, scoring, candidate pools) and emits
+//! `BENCH_decoding.json` with tokens/sec, model calls and a heap
+//! allocations-per-cycle proxy from the counting global allocator.
 
+use retroserve::benchkit::{allocs_now, write_bench_json, BenchRecord, CountingAlloc};
 use retroserve::chem;
-use retroserve::tokenizer::{tokenize, Vocab};
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::tokenizer::{tokenize, Vocab, BOS, EOS};
 use retroserve::util::stats::{mean, stddev};
 use retroserve::util::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     // warmup
@@ -19,6 +31,79 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         times.push(t0.elapsed().as_secs_f64() * 1e6);
     }
     println!("{name:<44} {:>10.2} µs ± {:>8.2}", mean(&times), stddev(&times));
+}
+
+fn rand_srcs(n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut s = vec![BOS];
+            for _ in 0..len {
+                s.push(4 + rng.gen_range(20) as i32);
+            }
+            s.push(EOS);
+            s
+        })
+        .collect()
+}
+
+/// Decode-cycle benchmark over the mock model: wall time, model calls,
+/// generated tokens/sec, and steady-state allocations per decode cycle
+/// (model-call cost held constant by the mock).
+fn bench_decode_cycles() -> Vec<BenchRecord> {
+    println!("== decode-cycle benches (mock model, B=8, K=10) ==");
+    let group = rand_srcs(8, 30, 3);
+    let k = 10;
+    let reps = 12usize;
+    let mut records = Vec::new();
+    for (name, decoder) in [
+        ("beam-search", Box::new(BeamSearch::vanilla()) as Box<dyn Decoder>),
+        ("beam-search-optimized", Box::new(BeamSearch::optimized())),
+        ("hsbs-3x10", Box::new(Hsbs::new(3, 10))),
+        ("msbs", Box::new(Msbs::default())),
+    ] {
+        // One fresh model per engine so mock handle ids (and therefore
+        // Medusa corruption patterns) are identical across engines.
+        let model = MockModel::new(MockConfig::default());
+        // warmup
+        let mut warm = DecodeStats::default();
+        decoder.generate(&model, &group, k, &mut warm).unwrap();
+
+        let mut times = Vec::with_capacity(reps);
+        let mut stats = DecodeStats::default();
+        let mut gen_tokens = 0u64;
+        let a0 = allocs_now();
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let out = decoder.generate(&model, &group, k, &mut stats).unwrap();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            gen_tokens += out
+                .iter()
+                .flat_map(|g| g.hyps.iter())
+                .map(|h| h.tokens.len() as u64)
+                .sum::<u64>();
+        }
+        let allocs = allocs_now() - a0;
+        let ms = mean(&times);
+        let calls = stats.model_calls / reps as u64;
+        // Cycles: one decode call per cycle for BS/HSBS, two for MSBS.
+        let cycles = if name == "msbs" { calls / 2 } else { calls };
+        let allocs_per_cycle = allocs as f64 / (cycles.max(1) * reps as u64) as f64;
+        let toks_per_sec = gen_tokens as f64 / (ms * 1e-3 * reps as f64);
+        println!(
+            "{name:<24} {ms:>9.3} ms/group  {calls:>4} calls  \
+             {allocs_per_cycle:>8.1} allocs/cycle  {toks_per_sec:>12.0} tok/s"
+        );
+        records.push(
+            BenchRecord::new(name)
+                .metric("ms_per_group", ms)
+                .metric("model_calls", calls as f64)
+                .metric("tokens_per_sec", toks_per_sec)
+                .metric("allocs_per_cycle", allocs_per_cycle)
+                .metric("avg_effective_batch", stats.avg_effective_batch()),
+        );
+    }
+    records
 }
 
 fn main() {
@@ -68,4 +153,20 @@ fn main() {
         std::hint::black_box(retroserve::model::softmax(&logits));
         std::hint::black_box(retroserve::model::log_softmax(&logits));
     });
+    let mut scratch = retroserve::model::scratch::ScoringScratch::new();
+    bench("scratch top_k_log_softmax (V=26,k=10)", 5000, || {
+        scratch.top_k_log_softmax(&logits, 10);
+        std::hint::black_box(scratch.topk.len());
+    });
+    bench("fused nucleus_mass_before (V=26)", 5000, || {
+        std::hint::black_box(retroserve::model::scratch::nucleus_mass_before(&logits, 3));
+    });
+
+    // decoding engines end-to-end (host-side cost only)
+    let records = bench_decode_cycles();
+    let path = std::path::Path::new("BENCH_decoding.json");
+    match write_bench_json(path, "decoding-micro", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
 }

@@ -30,6 +30,7 @@ fn main() {
         max_depth: 5,
         expansions_per_step: 10,
     };
+    let mut records = Vec::new();
     for (name, planner) in [
         ("retro* bw=1", Box::new(RetroStar::new(1)) as Box<dyn Planner>),
         ("retro* bw=8", Box::new(RetroStar::new(8))),
@@ -50,5 +51,16 @@ fn main() {
             solved,
             targets.len()
         );
+        records.push(
+            retroserve::benchkit::BenchRecord::new(name)
+                .metric("ms_per_target", mean(&times))
+                .metric("solved", solved as f64)
+                .metric("targets", targets.len() as f64),
+        );
+    }
+    let path = std::path::Path::new("BENCH_search.json");
+    match retroserve::benchkit::write_bench_json(path, "search-oracle", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
     }
 }

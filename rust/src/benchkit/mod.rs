@@ -1,9 +1,12 @@
 //! Shared plumbing for the table-reproduction bench harnesses
 //! (`bench_table1..4`) and the criterion-style micro benches.
 
+use crate::jsonx::Json;
 use crate::model::StepModel;
 use anyhow::{Context, Result};
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// One held-out single-step sample.
 #[derive(Clone, Debug)]
@@ -94,6 +97,79 @@ impl Flags {
     }
 }
 
+/// Allocation-counting `GlobalAlloc` wrapper shared by the bench
+/// binaries (each still declares its own `#[global_allocator]`
+/// registration — that attribute must live in the final binary).
+/// `alloc`/`realloc` bump a global counter; read it with
+/// [`allocs_now`] and difference across a measured window.
+pub struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Total allocations (+reallocations) since process start.
+pub fn allocs_now() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+// SAFETY: delegates directly to `System`; the counter has no effect on
+// allocation behaviour.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// One benchmark result for machine-readable emission: a name plus
+/// flat metric key/value pairs.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), metrics: Vec::new() }
+    }
+
+    pub fn metric(mut self, key: impl Into<String>, value: f64) -> Self {
+        self.metrics.push((key.into(), value));
+        self
+    }
+}
+
+/// Serialize bench records to a `BENCH_*.json` file so the perf
+/// trajectory is machine-readable across PRs. Shape:
+/// `{"suite": ..., "results": [{"name": ..., <metric>: <value>, ...}]}`.
+pub fn write_bench_json(path: &Path, suite: &str, records: &[BenchRecord]) -> Result<()> {
+    let results: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut pairs: Vec<(&str, Json)> = vec![("name", Json::str(r.name.clone()))];
+            for (k, v) in &r.metrics {
+                pairs.push((k.as_str(), Json::num(*v)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("suite", Json::str(suite)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(path, doc.to_string()).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
 /// Pretty-print one table row: name + columns.
 pub fn row(name: &str, cols: &[String]) -> String {
     let mut s = format!("{name:<24}");
@@ -158,6 +234,23 @@ mod tests {
         assert_eq!(g.len(), 2);
         assert_eq!(g[0].len(), 2);
         assert_eq!(g[1].len(), 1);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let recs = vec![
+            BenchRecord::new("msbs").metric("ms_per_group", 1.5).metric("model_calls", 20.0),
+            BenchRecord::new("beam-search").metric("ms_per_group", 4.0),
+        ];
+        let path = std::env::temp_dir().join("retroserve_bench_json_test.json");
+        write_bench_json(&path, "decoding-micro", &recs).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("suite").and_then(|s| s.as_str()), Some("decoding-micro"));
+        let results = doc.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").and_then(|s| s.as_str()), Some("msbs"));
+        assert_eq!(results[0].get("ms_per_group").and_then(|x| x.as_f64()), Some(1.5));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Shared-prefix token arena: beam prefixes as parent-pointer trie nodes.
+//!
+//! Every decoder used to carry each beam as an owned `Vec<i32>` and
+//! clone it on every candidate push — O(len) heap traffic per candidate,
+//! thousands of times per decode cycle. The arena replaces that with a
+//! parent-pointer trie: extending a beam is one `push` (an O(1) append
+//! to a flat `Vec<Node>`), candidates share their common prefix
+//! structurally, and full token sequences are materialized only when a
+//! model call or `finalize` actually needs the bytes.
+//!
+//! Each node also carries a *chain hash* of its token sequence
+//! (`mix(parent_hash, tok)`), so two nodes spell the same sequence iff
+//! their hashes match (collisions are resolved exactly via
+//! [`TokenArena::seq_eq`]). This is what lets [`super::CandidatePool`]
+//! deduplicate candidates without ever materializing or cloning a token
+//! vector.
+//!
+//! The arena is append-only and lives for one `generate` call: nodes of
+//! discarded candidates are retained (24 bytes each) and reclaimed in
+//! bulk when the arena drops — the classic trade of a little memory for
+//! zero per-candidate allocation.
+
+/// Index of a node in a [`TokenArena`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(u32);
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy)]
+struct Node {
+    parent: u32,
+    tok: i32,
+    len: u32,
+    hash: u64,
+}
+
+/// Append-only parent-pointer trie over token ids.
+pub struct TokenArena {
+    nodes: Vec<Node>,
+}
+
+#[inline]
+fn mix(parent_hash: u64, tok: i32) -> u64 {
+    // SplitMix64-style finalizer over (parent chain, token): order-
+    // sensitive, so distinct sequences get distinct hashes w.h.p.
+    let mut x = parent_hash
+        .rotate_left(5)
+        .wrapping_add(tok as u32 as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^ (x >> 27)
+}
+
+impl TokenArena {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { nodes: Vec::with_capacity(n) }
+    }
+
+    /// Number of nodes allocated so far (diagnostics).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Start a new chain (a length-1 sequence holding `tok`, usually BOS).
+    pub fn root(&mut self, tok: i32) -> NodeId {
+        self.alloc(NIL, tok, 1, mix(0x5EED_F00D_CAFE_D00D, tok))
+    }
+
+    /// Extend `parent`'s sequence by one token. O(1).
+    pub fn push(&mut self, parent: NodeId, tok: i32) -> NodeId {
+        let p = &self.nodes[parent.0 as usize];
+        let (len, hash) = (p.len + 1, mix(p.hash, tok));
+        self.alloc(parent.0, tok, len, hash)
+    }
+
+    #[inline]
+    fn alloc(&mut self, parent: u32, tok: i32, len: u32, hash: u64) -> NodeId {
+        let id = self.nodes.len() as u32;
+        debug_assert!(id != NIL, "arena overflow");
+        self.nodes.push(Node { parent, tok, len, hash });
+        NodeId(id)
+    }
+
+    /// Sequence length of the chain ending at `id`.
+    #[inline]
+    pub fn len(&self, id: NodeId) -> usize {
+        self.nodes[id.0 as usize].len as usize
+    }
+
+    /// Last token of the chain ending at `id`.
+    #[inline]
+    pub fn last_tok(&self, id: NodeId) -> i32 {
+        self.nodes[id.0 as usize].tok
+    }
+
+    /// Order-sensitive hash of the full token sequence at `id`.
+    #[inline]
+    pub fn seq_hash(&self, id: NodeId) -> u64 {
+        self.nodes[id.0 as usize].hash
+    }
+
+    /// Exact sequence equality (used to resolve rare hash collisions).
+    pub fn seq_eq(&self, a: NodeId, b: NodeId) -> bool {
+        if a == b {
+            return true;
+        }
+        let (mut x, mut y) = (a.0, b.0);
+        if self.nodes[x as usize].len != self.nodes[y as usize].len {
+            return false;
+        }
+        while x != y {
+            // x == NIL implies y == NIL here because lengths match.
+            if x == NIL {
+                return true;
+            }
+            let (nx, ny) = (&self.nodes[x as usize], &self.nodes[y as usize]);
+            if nx.tok != ny.tok {
+                return false;
+            }
+            x = nx.parent;
+            y = ny.parent;
+        }
+        true
+    }
+
+    /// Write the full token sequence at `id` into `out` (cleared first).
+    /// Reuses `out`'s capacity, so steady-state calls allocate nothing.
+    pub fn materialize_into(&self, id: NodeId, out: &mut Vec<i32>) {
+        out.clear();
+        let mut cur = id.0;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            out.push(n.tok);
+            cur = n.parent;
+        }
+        out.reverse();
+    }
+
+    /// Allocate and return the token sequence at `id`.
+    pub fn tokens(&self, id: NodeId) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.len(id));
+        self.materialize_into(id, &mut out);
+        out
+    }
+}
+
+impl Default for TokenArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_materialize() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        let n1 = a.push(r, 5);
+        let n2 = a.push(n1, 6);
+        let sib = a.push(n1, 7);
+        assert_eq!(a.tokens(n2), vec![1, 5, 6]);
+        assert_eq!(a.tokens(sib), vec![1, 5, 7]);
+        assert_eq!(a.tokens(r), vec![1]);
+        assert_eq!(a.len(n2), 3);
+        assert_eq!(a.last_tok(n2), 6);
+        assert_eq!(a.node_count(), 4);
+    }
+
+    #[test]
+    fn materialize_reuses_buffer() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        let n = a.push(r, 9);
+        let mut buf = Vec::with_capacity(8);
+        a.materialize_into(n, &mut buf);
+        assert_eq!(buf, vec![1, 9]);
+        let ptr = buf.as_ptr();
+        a.materialize_into(r, &mut buf);
+        assert_eq!(buf, vec![1]);
+        assert_eq!(ptr, buf.as_ptr(), "no reallocation for shorter sequences");
+    }
+
+    #[test]
+    fn equal_sequences_equal_hashes() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        // Two different paths spelling [1, 5, 6].
+        let p1 = a.push(r, 5);
+        let x = a.push(p1, 6);
+        let p2 = a.push(r, 5);
+        let y = a.push(p2, 6);
+        assert_ne!(x, y);
+        assert_eq!(a.seq_hash(x), a.seq_hash(y));
+        assert!(a.seq_eq(x, y));
+        // Distinct sequences: distinct hash (w.h.p.) and !seq_eq.
+        let z = a.push(p1, 7);
+        assert_ne!(a.seq_hash(x), a.seq_hash(z));
+        assert!(!a.seq_eq(x, z));
+        // Same multiset, different order.
+        let r2 = a.root(1);
+        let q = a.push(r2, 6);
+        let w = a.push(q, 5);
+        assert_ne!(a.seq_hash(x), a.seq_hash(w));
+        assert!(!a.seq_eq(x, w));
+        // Different lengths never compare equal.
+        assert!(!a.seq_eq(x, p1));
+    }
+
+    #[test]
+    fn roots_are_independent_chains() {
+        let mut a = TokenArena::new();
+        let r1 = a.root(1);
+        let r2 = a.root(1);
+        assert!(a.seq_eq(r1, r2));
+        assert_eq!(a.seq_hash(r1), a.seq_hash(r2));
+        let r3 = a.root(2);
+        assert!(!a.seq_eq(r1, r3));
+    }
+}

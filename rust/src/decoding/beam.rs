@@ -5,9 +5,17 @@
 //! keep occupying rows, which is exactly the inefficiency the paper's
 //! "beam search optimized" baseline removes (finished beams are put
 //! aside, shrinking the effective batch).
+//!
+//! Runs on the zero-allocation decoding core: beams live in a
+//! [`TokenArena`], scoring goes through a reusable
+//! [`ScoringScratch`], and candidate rows recycle their buffers via
+//! [`RowBuf`] — steady-state cycles perform no heap allocation on the
+//! host side.
 
-use super::{finalize, Beam, CandidatePool, Decoder, DecodeStats, GenOutput};
-use crate::model::{log_softmax, DecodeRow, StepModel};
+use super::arena::TokenArena;
+use super::{finalize, Beam, CandidatePool, DecodeStats, Decoder, GenOutput, RowBuf};
+use crate::model::scratch::ScoringScratch;
+use crate::model::StepModel;
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -53,14 +61,23 @@ impl Decoder for BeamSearch {
         // vanilla variant still submits K duplicate rows to keep the
         // effective batch at B*K from the start (naive-implementation
         // faithful).
-        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
+        let root = Beam::root(&mut arena);
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![root]).collect();
         let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        let mut scratch = ScoringScratch::new();
+        let mut rowbuf = RowBuf::new();
+        // (query, beam index) per row, for scatter-back.
+        let mut row_of: Vec<(usize, usize)> = Vec::new();
+        let mut pools: Vec<CandidatePool> =
+            (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+        let mut next: Vec<Beam> = Vec::with_capacity(k);
 
         while !done.iter().all(|&d| d) {
             // Build rows.
-            let mut rows: Vec<DecodeRow> = Vec::new();
-            // (query, beam index) per row, for scatter-back.
-            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            rowbuf.begin();
+            row_of.clear();
             for (q, qbeams) in beams.iter().enumerate() {
                 if done[q] && self.optimized {
                     continue;
@@ -72,44 +89,35 @@ impl Decoder for BeamSearch {
                     let live_row = !b.finished;
                     // Vanilla: submit rows even for finished beams/queries.
                     if !self.optimized || live_row {
-                        rows.push(DecodeRow {
-                            mem,
-                            mem_row: q,
-                            tgt: b.tokens.clone(),
-                            pos: b.tokens.len() - 1,
-                        });
+                        rowbuf.push_row(&arena, mem, q, b.node, &[]);
                         row_of.push((q, bi));
                     }
                 }
                 // Vanilla duplicates the root beam K times on the first step.
                 if !self.optimized && qbeams.len() == 1 && !qbeams[0].finished {
                     for _ in 1..k {
-                        rows.push(DecodeRow {
-                            mem,
-                            mem_row: q,
-                            tgt: qbeams[0].tokens.clone(),
-                            pos: qbeams[0].tokens.len() - 1,
-                        });
+                        rowbuf.push_row(&arena, mem, q, qbeams[0].node, &[]);
                         row_of.push((q, usize::MAX)); // duplicate; ignored
                     }
                 }
             }
-            if rows.is_empty() {
+            if rowbuf.is_empty() {
                 break;
             }
-            let out = model.decode(&rows, 1)?;
+            let out = model.decode(&rowbuf.rows, 1)?;
             stats.model_calls += 1;
-            stats.rows_logical += rows.len() as u64;
+            stats.rows_logical += rowbuf.len() as u64;
             stats.rows_padded += out.padded_rows as u64;
 
             // Expand each query.
-            let mut pools: Vec<CandidatePool> =
-                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for pool in pools.iter_mut() {
+                pool.reset();
+            }
             // carry forward finished beams as candidates
             for (q, qbeams) in beams.iter().enumerate() {
                 for b in qbeams {
                     if b.finished {
-                        pools[q].push(b.clone());
+                        pools[q].push(*b);
                     }
                 }
             }
@@ -117,35 +125,34 @@ impl Decoder for BeamSearch {
                 if bi == usize::MAX {
                     continue; // first-step duplicate row
                 }
-                let b = &beams[q][bi];
+                let b = beams[q][bi];
                 if b.finished {
                     continue; // vanilla submitted it; result ignored
                 }
                 let j = out
-                    .offset_of(r, b.tokens.len() - 1)
+                    .offset_of(r, arena.len(b.node) - 1)
                     .expect("window covers last position");
-                let lsm = log_softmax(out.logits(r, j, 0));
-                for &tok in crate::model::top_k(&lsm, k).iter() {
-                    let mut t = b.tokens.clone();
-                    t.push(tok as i32);
-                    let finished = tok as i32 == EOS || t.len() >= max_len;
-                    pools[q].push(Beam { tokens: t, logp: b.logp + lsm[tok], finished });
+                scratch.top_k_log_softmax(out.logits(r, j, 0), k);
+                for &tok in &scratch.topk {
+                    let node = arena.push(b.node, tok as i32);
+                    let finished = tok as i32 == EOS || arena.len(node) >= max_len;
+                    pools[q].push(Beam { node, logp: b.logp + scratch.lsm[tok], finished });
                 }
             }
-            for (q, pool) in pools.into_iter().enumerate() {
+            for (q, pool) in pools.iter_mut().enumerate() {
                 if done[q] {
                     continue;
                 }
-                let next = pool.take();
+                pool.take_into(&arena, &mut next);
                 if !next.is_empty() {
-                    beams[q] = next;
+                    std::mem::swap(&mut beams[q], &mut next);
                 }
                 done[q] = beams[q].iter().all(|b| b.finished);
             }
         }
         model.release(mem);
         stats.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(beams.into_iter().map(finalize).collect())
+        Ok(beams.iter().map(|qb| finalize(&arena, qb)).collect())
     }
 }
 

@@ -13,9 +13,16 @@
 //! log-probability, and the top K become the next beams. This trades a
 //! larger effective batch (`O(B*K*n_drafts)`) for fewer sequential model
 //! calls — the scalability ceiling the paper's Medusa variant removes.
+//!
+//! Hot-loop layout: drafts are `(start, end)` windows into the query
+//! body (never copied), beams are [`TokenArena`] nodes, and the
+//! best-draft-per-beam selection is a single deterministic scan over
+//! the row metadata (rows for one beam are contiguous by construction).
 
-use super::{finalize, Beam, CandidatePool, Decoder, DecodeStats, GenOutput};
-use crate::model::{argmax, log_softmax, DecodeRow, StepModel};
+use super::arena::TokenArena;
+use super::{finalize, Beam, CandidatePool, DecodeStats, Decoder, GenOutput, RowBuf};
+use crate::model::scratch::ScoringScratch;
+use crate::model::{argmax, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -44,22 +51,31 @@ impl Hsbs {
     }
 
     /// Extract drafts from the source for a beam whose last token is
-    /// `last`. Returns up to `n_drafts` non-empty token windows.
-    fn make_drafts(&self, src_body: &[i32], last: i32, budget: usize) -> Vec<Vec<i32>> {
-        let mut out: Vec<Vec<i32>> = Vec::with_capacity(self.n_drafts);
+    /// `last`: up to `n_drafts` non-empty `(start, end)` windows into
+    /// `src_body`, written into `out` (cleared first; no token copies).
+    fn make_drafts_into(
+        &self,
+        src_body: &[i32],
+        last: i32,
+        budget: usize,
+        out: &mut Vec<(usize, usize)>,
+    ) {
+        out.clear();
         if budget == 0 || src_body.is_empty() {
-            return out;
+            return;
         }
         let dlen = self.draft_len.min(budget);
+        let contains = |out: &[(usize, usize)], w: (usize, usize)| {
+            out.iter().any(|&(s, e)| src_body[s..e] == src_body[w.0..w.1])
+        };
         // smart: windows following a token equal to `last`
         for (i, &t) in src_body.iter().enumerate() {
             if out.len() >= self.n_drafts {
                 break;
             }
             if t == last && i + 1 < src_body.len() {
-                let w: Vec<i32> =
-                    src_body[i + 1..(i + 1 + dlen).min(src_body.len())].to_vec();
-                if !w.is_empty() && !out.contains(&w) {
+                let w = (i + 1, (i + 1 + dlen).min(src_body.len()));
+                if w.1 > w.0 && !contains(out, w) {
                     out.push(w);
                 }
             }
@@ -68,13 +84,12 @@ impl Hsbs {
         let stride = (src_body.len() / self.n_drafts.max(1)).max(1);
         let mut start = 0;
         while out.len() < self.n_drafts && start < src_body.len() {
-            let w: Vec<i32> = src_body[start..(start + dlen).min(src_body.len())].to_vec();
-            if !w.is_empty() && !out.contains(&w) {
+            let w = (start, (start + dlen).min(src_body.len()));
+            if w.1 > w.0 && !contains(out, w) {
                 out.push(w);
             }
             start += stride;
         }
-        out
     }
 }
 
@@ -108,14 +123,26 @@ impl Decoder for Hsbs {
             })
             .collect();
 
-        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
+        let root = Beam::root(&mut arena);
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![root]).collect();
         let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        let mut scratch = ScoringScratch::new();
+        let mut rowbuf = RowBuf::new();
+        // (query, beam, draft window into bodies[query]) per row.
+        let mut row_meta: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let mut windows: Vec<(usize, usize)> = Vec::new();
+        // (query, beam, accepted, row) — best draft per beam.
+        let mut best: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let mut pools: Vec<CandidatePool> =
+            (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+        let mut next: Vec<Beam> = Vec::with_capacity(k);
 
         while !done.iter().all(|&d| d) {
             // Build (beam, draft) rows for all live beams.
-            let mut rows: Vec<DecodeRow> = Vec::new();
-            // (query, beam, draft tokens)
-            let mut row_meta: Vec<(usize, usize, Vec<i32>)> = Vec::new();
+            rowbuf.begin();
+            row_meta.clear();
             for (q, qbeams) in beams.iter().enumerate() {
                 if done[q] {
                     continue;
@@ -124,35 +151,34 @@ impl Decoder for Hsbs {
                     if b.finished {
                         continue;
                     }
-                    let budget = max_len.saturating_sub(b.tokens.len());
-                    let last = *b.tokens.last().unwrap();
-                    let mut drafts = self.make_drafts(bodies[q], last, budget);
-                    if drafts.is_empty() {
-                        drafts.push(Vec::new()); // plain one-token step
+                    let budget = max_len.saturating_sub(arena.len(b.node));
+                    let last = arena.last_tok(b.node);
+                    self.make_drafts_into(bodies[q], last, budget, &mut windows);
+                    if windows.is_empty() {
+                        windows.push((0, 0)); // plain one-token step
                     }
-                    for d in drafts {
-                        let mut tgt = b.tokens.clone();
-                        tgt.extend_from_slice(&d);
-                        rows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
-                        row_meta.push((q, bi, d));
+                    for &(s, e) in &windows {
+                        rowbuf.push_row(&arena, mem, q, b.node, &bodies[q][s..e]);
+                        row_meta.push((q, bi, s, e));
                     }
                 }
             }
-            if rows.is_empty() {
+            if rowbuf.is_empty() {
                 break;
             }
-            let out = model.decode(&rows, win)?;
+            let out = model.decode(&rowbuf.rows, win)?;
             stats.model_calls += 1;
-            stats.rows_logical += rows.len() as u64;
+            stats.rows_logical += rowbuf.len() as u64;
             stats.rows_padded += out.padded_rows as u64;
 
-            // Per (query, beam): pick the draft with most accepted tokens.
-            use std::collections::HashMap;
-            // (q, bi) -> (accepted, row index)
-            let mut best: HashMap<(usize, usize), (usize, usize)> = HashMap::new();
-            for (r, (q, bi, draft)) in row_meta.iter().enumerate() {
-                let b = &beams[*q][*bi];
-                let p0 = b.tokens.len() - 1;
+            // Per (query, beam): pick the draft with most accepted
+            // tokens. Rows of one beam are contiguous, so one scan with
+            // a running entry suffices (deterministic, beam order).
+            best.clear();
+            for (r, &(q, bi, s, e)) in row_meta.iter().enumerate() {
+                let b = beams[q][bi];
+                let p0 = arena.len(b.node) - 1;
+                let draft = &bodies[q][s..e];
                 let mut acc = 0;
                 for (j, &dt) in draft.iter().enumerate() {
                     let Some(off) = out.offset_of(r, p0 + j) else { break };
@@ -163,26 +189,35 @@ impl Decoder for Hsbs {
                         break;
                     }
                 }
-                let e = best.entry((*q, *bi)).or_insert((acc, r));
-                if acc > e.0 {
-                    *e = (acc, r);
+                let same_beam = matches!(best.last(), Some(e) if e.0 == q && e.1 == bi);
+                if same_beam {
+                    let entry = best.last_mut().expect("just matched");
+                    if acc > entry.2 {
+                        entry.2 = acc;
+                        entry.3 = r;
+                    }
+                } else {
+                    best.push((q, bi, acc, r));
                 }
             }
 
             // Harvest candidates.
-            let mut pools: Vec<CandidatePool> =
-                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for pool in pools.iter_mut() {
+                pool.reset();
+            }
             for (q, qbeams) in beams.iter().enumerate() {
                 for b in qbeams {
                     if b.finished {
-                        pools[q].push(b.clone());
+                        pools[q].push(*b);
                     }
                 }
             }
-            for (&(q, bi), &(acc, r)) in best.iter() {
-                let b = &beams[q][bi];
-                let p0 = b.tokens.len() - 1;
-                let draft = &row_meta[r].2;
+            for &(q, bi, acc, r) in best.iter() {
+                let b = beams[q][bi];
+                let blen = arena.len(b.node);
+                let p0 = blen - 1;
+                let (ds, de) = (row_meta[r].2, row_meta[r].3);
+                let draft = &bodies[q][ds..de];
                 stats.drafts_offered += draft.len() as u64;
                 stats.drafts_accepted += acc as u64;
                 // Backbone-and-divergences harvesting (see msbs.rs for the
@@ -190,43 +225,49 @@ impl Decoder for Hsbs {
                 // accepted backbone, top-K divergent branches elsewhere.
                 let ext_cap = acc.min(draft.len());
                 let mut cum = b.logp;
+                let mut backbone = b.node;
                 for j in 0..=ext_cap {
+                    if j > 0 {
+                        backbone = arena.push(backbone, draft[j - 1]);
+                    }
                     let Some(off) = out.offset_of(r, p0 + j) else { break };
-                    let lsm = log_softmax(out.logits(r, off, 0));
-                    let prefix_len = b.tokens.len() + j;
+                    let prefix_len = blen + j;
                     if prefix_len >= max_len {
                         break;
                     }
                     let backbone_end = j == ext_cap;
-                    for &tok in crate::model::top_k(&lsm, k).iter() {
+                    scratch.top_k_log_softmax(out.logits(r, off, 0), k);
+                    for &tok in &scratch.topk {
                         if !backbone_end && tok as i32 == draft[j] {
                             continue;
                         }
-                        let mut t = b.tokens.clone();
-                        t.extend_from_slice(&draft[..j]);
-                        t.push(tok as i32);
-                        let finished = tok as i32 == EOS || t.len() >= max_len;
-                        pools[q].push(Beam { tokens: t, logp: cum + lsm[tok], finished });
+                        let node = arena.push(backbone, tok as i32);
+                        let finished = tok as i32 == EOS || arena.len(node) >= max_len;
+                        pools[q].push(Beam {
+                            node,
+                            logp: cum + scratch.lsm[tok],
+                            finished,
+                        });
                     }
                     if j < draft.len() {
-                        cum += lsm[draft[j] as usize];
+                        cum += scratch.lsm[draft[j] as usize];
                     }
                 }
             }
-            for (q, pool) in pools.into_iter().enumerate() {
+            for (q, pool) in pools.iter_mut().enumerate() {
                 if done[q] {
                     continue;
                 }
-                let next = pool.take();
+                pool.take_into(&arena, &mut next);
                 if !next.is_empty() {
-                    beams[q] = next;
+                    std::mem::swap(&mut beams[q], &mut next);
                 }
                 done[q] = beams[q].iter().all(|b| b.finished);
             }
         }
         model.release(mem);
         stats.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(beams.into_iter().map(finalize).collect())
+        Ok(beams.iter().map(|qb| finalize(&arena, qb)).collect())
     }
 }
 
@@ -242,6 +283,12 @@ mod tests {
         v.extend_from_slice(tokens);
         v.push(EOS);
         v
+    }
+
+    fn drafts_of(h: &Hsbs, body: &[i32], last: i32, budget: usize) -> Vec<Vec<i32>> {
+        let mut windows = Vec::new();
+        h.make_drafts_into(body, last, budget, &mut windows);
+        windows.iter().map(|&(s, e)| body[s..e].to_vec()).collect()
     }
 
     #[test]
@@ -281,20 +328,24 @@ mod tests {
     fn drafts_prefer_matching_positions() {
         let h = Hsbs::new(3, 3);
         // last token 7 appears at index 2; smart draft = src[3..6]
-        let drafts = h.make_drafts(&[5, 6, 7, 8, 9, 10], 7, 100);
+        let drafts = drafts_of(&h, &[5, 6, 7, 8, 9, 10], 7, 100);
         assert_eq!(drafts[0], vec![8, 9, 10]);
         assert_eq!(drafts.len(), 3);
     }
 
     #[test]
     fn paper_schedule() {
-        assert_eq!((Hsbs::for_batch_size(1).n_drafts, Hsbs::for_batch_size(1).draft_len), (10, 10));
-        assert_eq!((Hsbs::for_batch_size(4).n_drafts, Hsbs::for_batch_size(4).draft_len), (3, 10));
-        assert_eq!((Hsbs::for_batch_size(16).n_drafts, Hsbs::for_batch_size(16).draft_len), (1, 20));
+        let sched = |b: usize| {
+            let h = Hsbs::for_batch_size(b);
+            (h.n_drafts, h.draft_len)
+        };
+        assert_eq!(sched(1), (10, 10));
+        assert_eq!(sched(4), (3, 10));
+        assert_eq!(sched(16), (1, 20));
     }
 
     #[test]
-    fn all_hypotheses_finish_on_easy_input(){
+    fn all_hypotheses_finish_on_easy_input() {
         let model = MockModel::new(MockConfig::default());
         let mut st = DecodeStats::default();
         let out = Hsbs::new(2, 5)

@@ -16,13 +16,35 @@
 //! Engines operate on *groups* of queries (one encode per group, shared
 //! decode calls) so the batch-size sweeps of Table 1 and the beam-width
 //! batching of Table 4 fall out naturally.
+//!
+//! ## Zero-allocation decoding core
+//!
+//! All four engines share three primitives that keep the host-side hot
+//! loop free of steady-state heap traffic (model calls dominate wall
+//! time in production; the paper's several-second planning budget is
+//! why the host side must not add to them):
+//!
+//! * [`arena::TokenArena`] — beam prefixes as parent-pointer trie
+//!   nodes: extending a beam is an O(1) node push, not an O(len)
+//!   `Vec<i32>` clone; sequences materialize only for model calls and
+//!   [`finalize`];
+//! * [`crate::model::scratch::ScoringScratch`] — reusable log-softmax /
+//!   top-k buffers plus a fused nucleus-mass test over raw logits;
+//! * [`CandidatePool`] — top-k by partial selection over beam indices,
+//!   deduplicated by arena chain-hash instead of cloned token vectors.
+//!
+//! Semantics (hypotheses, tie order, log-probabilities, model-call
+//! accounting) are preserved exactly; `tests/parity_decoding.rs` pins
+//! them against reference implementations of the seed algorithms.
 
+pub mod arena;
 pub mod beam;
 pub mod hsbs;
 pub mod msbs;
 
-use crate::model::StepModel;
+use crate::model::{DecodeRow, MemHandle, StepModel};
 use anyhow::Result;
+use arena::{NodeId, TokenArena};
 
 /// One generated hypothesis: tokens without BOS; ends with EOS iff the
 /// model finished it within the length budget.
@@ -113,57 +135,152 @@ pub trait Decoder: Send + Sync {
     ) -> Result<Vec<GenOutput>>;
 }
 
-/// An in-flight beam (BOS-led token prefix).
-#[derive(Clone, Debug)]
+/// An in-flight beam: a prefix node in the token arena plus its score.
+/// 24 bytes, `Copy` — extending or carrying a beam never touches the
+/// heap.
+#[derive(Clone, Copy, Debug)]
 pub(crate) struct Beam {
-    pub tokens: Vec<i32>,
+    pub node: NodeId,
     pub logp: f64,
     pub finished: bool,
 }
 
 impl Beam {
-    pub fn root() -> Beam {
-        Beam { tokens: vec![crate::tokenizer::BOS], logp: 0.0, finished: false }
+    /// A fresh BOS-only beam rooted in `arena`.
+    pub fn root(arena: &mut TokenArena) -> Beam {
+        Beam { node: arena.root(crate::tokenizer::BOS), logp: 0.0, finished: false }
+    }
+}
+
+/// Reusable decode-call row storage: `DecodeRow.tgt` buffers are
+/// recycled between cycles, so steady-state row building allocates
+/// nothing.
+pub(crate) struct RowBuf {
+    pub rows: Vec<DecodeRow>,
+    spare: Vec<Vec<i32>>,
+}
+
+impl RowBuf {
+    pub fn new() -> Self {
+        Self { rows: Vec::new(), spare: Vec::new() }
     }
 
-    pub fn into_hypothesis(self) -> Hypothesis {
-        Hypothesis { tokens: self.tokens[1..].to_vec(), logp: self.logp }
+    /// Start a new decode call: reclaim all previous rows' buffers.
+    pub fn begin(&mut self) {
+        for r in self.rows.drain(..) {
+            self.spare.push(r.tgt);
+        }
+    }
+
+    /// Append a row for `node`'s sequence extended by `ext`, windowed at
+    /// the node's last position (the seed's `prefix ++ draft` shape).
+    pub fn push_row(
+        &mut self,
+        arena: &TokenArena,
+        mem: MemHandle,
+        mem_row: usize,
+        node: NodeId,
+        ext: &[i32],
+    ) {
+        let mut tgt = self.spare.pop().unwrap_or_default();
+        arena.materialize_into(node, &mut tgt);
+        tgt.extend_from_slice(ext);
+        self.rows.push(DecodeRow { mem, mem_row, tgt, pos: arena.len(node) - 1 });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
     }
 }
 
 /// Candidate pool helper: keeps the best `k` unique token sequences.
+///
+/// `push` records a `Copy` beam; `take_into` ranks by log-probability
+/// (partial selection — the tail beyond the worst position a unique
+/// top-k member can occupy is never sorted) and deduplicates by arena
+/// chain-hash with exact collision resolution, all in reusable buffers.
 pub(crate) struct CandidatePool {
     k: usize,
     items: Vec<Beam>,
+    idx: Vec<u32>,
+    seen: std::collections::HashMap<u64, NodeId>,
 }
 
 impl CandidatePool {
     pub fn new(k: usize) -> Self {
-        Self { k, items: Vec::with_capacity(k * 4) }
+        Self {
+            k,
+            items: Vec::with_capacity(k * 4),
+            idx: Vec::new(),
+            seen: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Clear for the next cycle (buffers keep their capacity).
+    pub fn reset(&mut self) {
+        self.items.clear();
     }
 
     pub fn push(&mut self, b: Beam) {
         self.items.push(b);
     }
 
-    /// Top-k by logp, deduplicated by token sequence (keep best score).
-    pub fn take(mut self) -> Vec<Beam> {
-        self.items.sort_by(|a, b| {
-            b.logp
-                .partial_cmp(&a.logp)
+    /// Top-k by logp into `out`, deduplicated by token sequence (first
+    /// occurrence in rank order wins, i.e. the best score). Rank order
+    /// matches the seed's stable sort: logp descending, insertion order
+    /// ascending on ties.
+    pub fn take_into(&mut self, arena: &TokenArena, out: &mut Vec<Beam>) {
+        out.clear();
+        let items = &self.items;
+        self.idx.clear();
+        self.idx.extend(0..items.len() as u32);
+        let cmp = |a: &u32, b: &u32| {
+            items[*b as usize]
+                .logp
+                .partial_cmp(&items[*a as usize].logp)
                 .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let mut seen: std::collections::HashSet<Vec<i32>> = std::collections::HashSet::new();
-        let mut out: Vec<Beam> = Vec::with_capacity(self.k);
-        for b in self.items.drain(..) {
+                .then_with(|| a.cmp(b))
+        };
+        // Each distinct sequence occurs at most (k live parents + 1
+        // finished carryover) times in a cycle's pool, so the k best
+        // unique sequences all rank within the first k*(k+1) entries;
+        // everything past that partition point is never even sorted.
+        let cap = self.k * (self.k + 1);
+        if self.idx.len() > cap {
+            self.idx.select_nth_unstable_by(cap, cmp);
+            self.idx.truncate(cap);
+        }
+        self.idx.sort_unstable_by(cmp);
+        self.seen.clear();
+        for &i in &self.idx {
             if out.len() >= self.k {
                 break;
             }
-            if seen.insert(b.tokens.clone()) {
-                out.push(b);
+            let b = items[i as usize];
+            let mut key = arena.seq_hash(b.node);
+            loop {
+                use std::collections::hash_map::Entry;
+                match self.seen.entry(key) {
+                    Entry::Vacant(v) => {
+                        v.insert(b.node);
+                        out.push(b);
+                        break;
+                    }
+                    Entry::Occupied(o) => {
+                        if arena.seq_eq(*o.get(), b.node) {
+                            break; // true duplicate sequence: skip
+                        }
+                        // 64-bit hash collision between distinct
+                        // sequences: probe to a fresh slot.
+                        key = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                    }
+                }
             }
         }
-        out
     }
 }
 
@@ -179,9 +296,18 @@ pub fn make_decoder(name: &str, batch_hint: usize) -> anyhow::Result<Box<dyn Dec
     })
 }
 
-/// Sort hypotheses by descending logp into a [`GenOutput`].
-pub(crate) fn finalize(beams: Vec<Beam>) -> GenOutput {
-    let mut hyps: Vec<Hypothesis> = beams.into_iter().map(Beam::into_hypothesis).collect();
+/// Materialize beams and sort hypotheses by descending logp into a
+/// [`GenOutput`] (the only point where beam token sequences are copied
+/// out of the arena).
+pub(crate) fn finalize(arena: &TokenArena, beams: &[Beam]) -> GenOutput {
+    let mut hyps: Vec<Hypothesis> = beams
+        .iter()
+        .map(|b| {
+            let mut tokens = arena.tokens(b.node);
+            tokens.remove(0); // strip BOS
+            Hypothesis { tokens, logp: b.logp }
+        })
+        .collect();
     hyps.sort_by(|a, b| b.logp.partial_cmp(&a.logp).unwrap_or(std::cmp::Ordering::Equal));
     GenOutput { hyps }
 }
@@ -190,18 +316,84 @@ pub(crate) fn finalize(beams: Vec<Beam>) -> GenOutput {
 mod tests {
     use super::*;
 
+    fn beam(arena: &mut TokenArena, toks: &[i32], logp: f64) -> Beam {
+        let mut node = arena.root(toks[0]);
+        for &t in &toks[1..] {
+            node = arena.push(node, t);
+        }
+        Beam { node, logp, finished: false }
+    }
+
     #[test]
     fn candidate_pool_dedups_and_sorts() {
+        let mut arena = TokenArena::new();
         let mut pool = CandidatePool::new(2);
-        pool.push(Beam { tokens: vec![1, 5], logp: -1.0, finished: false });
-        pool.push(Beam { tokens: vec![1, 5], logp: -0.5, finished: false });
-        pool.push(Beam { tokens: vec![1, 6], logp: -2.0, finished: false });
-        pool.push(Beam { tokens: vec![1, 7], logp: -3.0, finished: false });
-        let top = pool.take();
+        let dup_a = beam(&mut arena, &[1, 5], -1.0);
+        let dup_b = beam(&mut arena, &[1, 5], -0.5); // same sequence, distinct node
+        pool.push(dup_a);
+        pool.push(dup_b);
+        pool.push(beam(&mut arena, &[1, 6], -2.0));
+        pool.push(beam(&mut arena, &[1, 7], -3.0));
+        let mut top = Vec::new();
+        pool.take_into(&arena, &mut top);
         assert_eq!(top.len(), 2);
-        assert_eq!(top[0].tokens, vec![1, 5]);
+        assert_eq!(arena.tokens(top[0].node), vec![1, 5]);
         assert_eq!(top[0].logp, -0.5);
-        assert_eq!(top[1].tokens, vec![1, 6]);
+        assert_eq!(arena.tokens(top[1].node), vec![1, 6]);
+    }
+
+    #[test]
+    fn candidate_pool_insertion_order_breaks_ties() {
+        let mut arena = TokenArena::new();
+        let mut pool = CandidatePool::new(1);
+        pool.push(beam(&mut arena, &[1, 8], -1.0));
+        pool.push(beam(&mut arena, &[1, 9], -1.0));
+        let mut top = Vec::new();
+        pool.take_into(&arena, &mut top);
+        assert_eq!(arena.tokens(top[0].node), vec![1, 8], "first pushed wins ties");
+    }
+
+    #[test]
+    fn candidate_pool_reset_reuses_buffers() {
+        let mut arena = TokenArena::new();
+        let mut pool = CandidatePool::new(2);
+        let mut top = Vec::new();
+        for round in 0..3 {
+            pool.reset();
+            pool.push(beam(&mut arena, &[1, 5 + round], -1.0));
+            pool.take_into(&arena, &mut top);
+            assert_eq!(top.len(), 1);
+            assert_eq!(arena.tokens(top[0].node), vec![1, 5 + round]);
+        }
+    }
+
+    #[test]
+    fn row_buf_recycles_tgt_buffers() {
+        let mut arena = TokenArena::new();
+        let b = beam(&mut arena, &[1, 5, 6], 0.0);
+        let mut rb = RowBuf::new();
+        rb.begin();
+        rb.push_row(&arena, MemHandle(1), 0, b.node, &[7, 8]);
+        assert_eq!(rb.len(), 1);
+        assert_eq!(rb.rows[0].tgt, vec![1, 5, 6, 7, 8]);
+        assert_eq!(rb.rows[0].pos, 2);
+        let ptr = rb.rows[0].tgt.as_ptr();
+        rb.begin();
+        assert!(rb.is_empty());
+        rb.push_row(&arena, MemHandle(1), 0, b.node, &[]);
+        assert_eq!(rb.rows[0].tgt, vec![1, 5, 6]);
+        assert_eq!(ptr, rb.rows[0].tgt.as_ptr(), "tgt buffer must be recycled");
+    }
+
+    #[test]
+    fn finalize_sorts_and_strips_bos() {
+        let mut arena = TokenArena::new();
+        let a = beam(&mut arena, &[1, 5, 2], -2.0);
+        let b = beam(&mut arena, &[1, 6, 2], -1.0);
+        let out = finalize(&arena, &[a, b]);
+        assert_eq!(out.hyps[0].tokens, vec![6, 2]);
+        assert_eq!(out.hyps[1].tokens, vec![5, 2]);
+        assert!(out.hyps[0].logp >= out.hyps[1].logp);
     }
 
     #[test]

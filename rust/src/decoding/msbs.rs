@@ -17,9 +17,16 @@
 //!
 //! Guarantees >= 1 generated token per cycle and <= M+1; finished beams
 //! are put aside (as in optimized beam search).
+//!
+//! Hot-loop layout: beams are [`TokenArena`] nodes, drafts live in one
+//! flat per-cycle buffer indexed by spans, the nucleus test runs fused
+//! over raw logits ([`nucleus_mass_before`]), and candidate pools
+//! deduplicate by arena chain-hash — no steady-state allocation.
 
-use super::{finalize, Beam, CandidatePool, Decoder, DecodeStats, GenOutput};
-use crate::model::{argmax, log_softmax, softmax, DecodeRow, StepModel};
+use super::arena::TokenArena;
+use super::{finalize, Beam, CandidatePool, DecodeStats, Decoder, GenOutput, RowBuf};
+use crate::model::scratch::{nucleus_mass_before, ScoringScratch};
+use crate::model::{argmax, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -44,6 +51,9 @@ impl Msbs {
     }
 
     /// Is `tok` inside the top-p nucleus of `probs` (or the argmax)?
+    /// Reference form over materialized probabilities, kept only to
+    /// cross-check the fused [`nucleus_mass_before`] the hot loop uses.
+    #[cfg(test)]
     fn in_nucleus(&self, probs: &[f64], tok: usize) -> bool {
         let p_tok = probs[tok];
         // mass of strictly-more-probable tokens (ties resolved in favor
@@ -100,83 +110,97 @@ impl Msbs {
         };
         anyhow::ensure!(m > 0, "MSBS requires a model with Medusa heads");
 
-        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
+        let root = Beam::root(&mut arena);
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![root]).collect();
         let mut done: Vec<bool> = vec![false; srcs.len()];
         let mut cycle = 0usize;
+
+        let mut scratch = ScoringScratch::new();
+        let mut rowbuf = RowBuf::new();
+        let mut vrowbuf = RowBuf::new();
+        let mut row_of: Vec<(usize, usize)> = Vec::new();
+        // Per-cycle drafts: one flat token buffer + a (start, end) span
+        // per row, reused across cycles.
+        let mut draft_flat: Vec<i32> = Vec::new();
+        let mut draft_span: Vec<(usize, usize)> = Vec::new();
+        let mut accepted_log: Vec<usize> = Vec::new();
+        let mut pools: Vec<CandidatePool> =
+            (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+        let mut next: Vec<Beam> = Vec::with_capacity(k);
 
         while !done.iter().all(|&d| d) {
             cycle += 1;
             // ---- call 1: draft ----
-            let mut rows: Vec<DecodeRow> = Vec::new();
-            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            rowbuf.begin();
+            row_of.clear();
             for (q, qbeams) in beams.iter().enumerate() {
                 if done[q] {
                     continue;
                 }
                 for (bi, b) in qbeams.iter().enumerate() {
                     if !b.finished {
-                        rows.push(DecodeRow {
-                            mem,
-                            mem_row: q,
-                            tgt: b.tokens.clone(),
-                            pos: b.tokens.len() - 1,
-                        });
+                        rowbuf.push_row(&arena, mem, q, b.node, &[]);
                         row_of.push((q, bi));
                     }
                 }
             }
-            if rows.is_empty() {
+            if rowbuf.is_empty() {
                 break;
             }
-            let dout = model.decode(&rows, 1)?;
+            let dout = model.decode(&rowbuf.rows, 1)?;
             stats.model_calls += 1;
-            stats.rows_logical += rows.len() as u64;
+            stats.rows_logical += rowbuf.len() as u64;
             stats.rows_padded += dout.padded_rows as u64;
 
             // Greedy draft per beam: token j from head j (head 0 = main).
-            let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
+            draft_flat.clear();
+            draft_span.clear();
             for (r, &(q, bi)) in row_of.iter().enumerate() {
-                let b = &beams[q][bi];
+                let b = beams[q][bi];
+                let blen = arena.len(b.node);
                 let off = dout
-                    .offset_of(r, b.tokens.len() - 1)
+                    .offset_of(r, blen - 1)
                     .expect("draft window covers last position");
-                let budget = max_len.saturating_sub(b.tokens.len() + 1).min(m);
-                let mut d = Vec::with_capacity(budget);
+                let budget = max_len.saturating_sub(blen + 1).min(m);
+                let start = draft_flat.len();
                 for h in 0..budget {
-                    d.push(argmax(dout.logits(r, off, h)) as i32);
+                    draft_flat.push(argmax(dout.logits(r, off, h)) as i32);
                 }
-                drafts.push(d);
+                draft_span.push((start, draft_flat.len()));
             }
 
             // ---- call 2: verify ----
             let win = m + 1;
-            let mut vrows: Vec<DecodeRow> = Vec::with_capacity(rows.len());
+            vrowbuf.begin();
             for (r, &(q, bi)) in row_of.iter().enumerate() {
-                let b = &beams[q][bi];
-                let mut tgt = b.tokens.clone();
-                tgt.extend_from_slice(&drafts[r]);
-                vrows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+                let b = beams[q][bi];
+                let (s, e) = draft_span[r];
+                vrowbuf.push_row(&arena, mem, q, b.node, &draft_flat[s..e]);
             }
-            let vout = model.decode(&vrows, win)?;
+            let vout = model.decode(&vrowbuf.rows, win)?;
             stats.model_calls += 1;
-            stats.rows_logical += vrows.len() as u64;
+            stats.rows_logical += vrowbuf.len() as u64;
             stats.rows_padded += vout.padded_rows as u64;
 
             // ---- acceptance + harvesting ----
-            let mut pools: Vec<CandidatePool> =
-                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for pool in pools.iter_mut() {
+                pool.reset();
+            }
             for (q, qbeams) in beams.iter().enumerate() {
                 for b in qbeams {
                     if b.finished {
-                        pools[q].push(b.clone());
+                        pools[q].push(*b);
                     }
                 }
             }
-            let mut accepted_log: Vec<usize> = Vec::with_capacity(rows.len());
+            accepted_log.clear();
             for (r, &(q, bi)) in row_of.iter().enumerate() {
-                let b = &beams[q][bi];
-                let p0 = b.tokens.len() - 1;
-                let draft = &drafts[r];
+                let b = beams[q][bi];
+                let blen = arena.len(b.node);
+                let p0 = blen - 1;
+                let (ds, de) = draft_span[r];
+                let draft = &draft_flat[ds..de];
                 // accept a prefix of the draft via the nucleus test; an
                 // accepted EOS terminates the draft (nothing after it can
                 // be meaningful).
@@ -184,8 +208,7 @@ impl Msbs {
                 let mut eos_idx: Option<usize> = None;
                 for (j, &dt) in draft.iter().enumerate() {
                     let Some(off) = vout.offset_of(r, p0 + j) else { break };
-                    let probs = softmax(vout.logits(r, off, 0));
-                    if !self.in_nucleus(&probs, dt as usize) {
+                    if nucleus_mass_before(vout.logits(r, off, 0), dt as usize) >= self.nucleus {
                         break;
                     }
                     acc += 1;
@@ -210,54 +233,63 @@ impl Msbs {
                 // probable".
                 let ext_cap = eos_idx.unwrap_or(acc);
                 let mut cum = b.logp;
+                let mut backbone = b.node;
                 for j in 0..=ext_cap {
+                    if j > 0 {
+                        backbone = arena.push(backbone, draft[j - 1]);
+                    }
                     let Some(off) = vout.offset_of(r, p0 + j) else { break };
-                    let prefix_len = b.tokens.len() + j;
+                    let prefix_len = blen + j;
                     if prefix_len >= max_len {
                         break;
                     }
                     let backbone_end = j == ext_cap;
-                    let lsm = log_softmax(vout.logits(r, off, 0));
-                    for &tok in crate::model::top_k(&lsm, k).iter() {
+                    scratch.top_k_log_softmax(vout.logits(r, off, 0), k);
+                    for &tok in &scratch.topk {
                         if !backbone_end && tok as i32 == draft[j] {
                             continue; // divergences only before the backbone end
                         }
-                        let mut t = b.tokens.clone();
-                        t.extend_from_slice(&draft[..j]);
-                        t.push(tok as i32);
-                        let finished = tok as i32 == EOS || t.len() >= max_len;
-                        pools[q].push(Beam { tokens: t, logp: cum + lsm[tok], finished });
+                        let node = arena.push(backbone, tok as i32);
+                        let finished = tok as i32 == EOS || arena.len(node) >= max_len;
+                        pools[q].push(Beam {
+                            node,
+                            logp: cum + scratch.lsm[tok],
+                            finished,
+                        });
                     }
                     if j < draft.len() {
-                        cum += lsm[draft[j] as usize];
+                        cum += scratch.lsm[draft[j] as usize];
                     }
                 }
             }
-            for (q, pool) in pools.into_iter().enumerate() {
+            for (q, pool) in pools.iter_mut().enumerate() {
                 if done[q] {
                     continue;
                 }
-                let next = pool.take();
+                pool.take_into(&arena, &mut next);
                 if !next.is_empty() {
-                    beams[q] = next;
+                    std::mem::swap(&mut beams[q], &mut next);
                 }
                 done[q] = beams[q].iter().all(|b| b.finished);
             }
             if let Some(tr) = trace.as_mut() {
                 tr.push(CycleTrace {
                     cycle,
-                    drafts: drafts.clone(),
-                    accepted: accepted_log,
+                    drafts: draft_span
+                        .iter()
+                        .map(|&(s, e)| draft_flat[s..e].to_vec())
+                        .collect(),
+                    accepted: accepted_log.clone(),
                     beams: beams[0]
                         .iter()
-                        .map(|b| (b.tokens.clone(), b.logp))
+                        .map(|b| (arena.tokens(b.node), b.logp))
                         .collect(),
                 });
             }
         }
         model.release(mem);
         stats.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(beams.into_iter().map(finalize).collect())
+        Ok(beams.iter().map(|qb| finalize(&arena, qb)).collect())
     }
 }
 
@@ -342,6 +374,18 @@ mod tests {
         assert!(m.in_nucleus(&probs, 0)); // argmax always
         assert!(m.in_nucleus(&probs, 1)); // 0.85 < 0.9
         assert!(!m.in_nucleus(&probs, 2)); // 0.95 !< 0.9
+    }
+
+    #[test]
+    fn fused_nucleus_test_agrees_with_reference() {
+        use crate::model::softmax;
+        let m = Msbs::new(0.9975);
+        let logits: Vec<f32> = vec![8.0, 4.0, -4.0, -4.0, -4.0, 2.0];
+        let probs = softmax(&logits);
+        for tok in 0..logits.len() {
+            let fused = nucleus_mass_before(&logits, tok) < m.nucleus;
+            assert_eq!(fused, m.in_nucleus(&probs, tok), "tok={tok}");
+        }
     }
 
     #[test]

@@ -81,13 +81,6 @@ impl Json {
         Json::Num(x)
     }
 
-    /// Serialize to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -135,6 +128,16 @@ impl Json {
             return Err(format!("trailing data at byte {}", p.i));
         }
         Ok(v)
+    }
+}
+
+/// Compact serialization (`.to_string()` comes from the blanket
+/// `ToString` impl).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

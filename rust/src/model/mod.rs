@@ -15,6 +15,7 @@
 //! main + Medusa-head logits for a *window* of positions per row.
 
 pub mod mock;
+pub mod scratch;
 
 use anyhow::Result;
 
@@ -122,14 +123,15 @@ impl<T: StepModel + ?Sized> StepModel for Box<T> {
 }
 
 /// Log-softmax over a logits slice (f64 accumulation for stability).
+/// Allocates the result; the decoding hot loop uses
+/// [`scratch::ScoringScratch`] to reuse buffers instead.
 pub fn log_softmax(logits: &[f32]) -> Vec<f64> {
     let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let mut exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - mx).exp()).collect();
-    let z: f64 = exps.iter().sum();
-    let lz = z.ln();
-    for e in exps.iter_mut() {
-        *e = *e; // keep layout
+    let mut z = 0.0f64;
+    for &x in logits {
+        z += ((x as f64) - mx).exp();
     }
+    let lz = z.ln();
     logits.iter().map(|&x| (x as f64) - mx - lz).collect()
 }
 
@@ -152,12 +154,10 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// Indices of the top-`k` entries, descending.
+/// Indices of the top-`k` entries, descending (ties broken by ascending
+/// index, like a stable sort). Partial selection, O(n + k log k).
 pub fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
-    idx.truncate(k);
-    idx
+    scratch::top_k_indices(xs, k)
 }
 
 #[cfg(test)]

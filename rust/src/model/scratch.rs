@@ -1,0 +1,181 @@
+//! Reusable scoring buffers for the decoding hot loop.
+//!
+//! The seed implementation allocated a fresh full-vocab `Vec<f64>` for
+//! every `softmax`/`log_softmax` call and sorted the entire vocabulary
+//! in `top_k` — per position, per cycle, per beam. [`ScoringScratch`]
+//! owns those buffers once per `generate` call and refills them in
+//! place, and top-k selection uses `select_nth_unstable_by` (O(V + k
+//! log k)) instead of a full O(V log V) sort.
+//!
+//! Numeric parity with the seed is deliberate and exact: max/sum/ln are
+//! evaluated in the same order with the same f64 intermediates, so
+//! `lsm` values are bit-identical to the seed's `log_softmax`, and the
+//! top-k comparator totalizes the seed's stable sort (value descending,
+//! then index ascending), so tie-breaks match the seed's output
+//! token-for-token.
+
+/// Reusable buffers: log-softmax values + top-k index selection.
+pub struct ScoringScratch {
+    /// Log-softmax of the last scored logits row (valid after
+    /// [`ScoringScratch::log_softmax`] / [`ScoringScratch::top_k_log_softmax`]).
+    pub lsm: Vec<f64>,
+    /// Top-k indices into `lsm`, descending score (valid after
+    /// [`ScoringScratch::top_k_log_softmax`]).
+    pub topk: Vec<usize>,
+    idx: Vec<u32>,
+}
+
+impl ScoringScratch {
+    pub fn new() -> Self {
+        Self { lsm: Vec::new(), topk: Vec::new(), idx: Vec::new() }
+    }
+
+    /// Fill `self.lsm` with the log-softmax of `logits` (f64
+    /// accumulation, bit-identical to [`crate::model::log_softmax`]).
+    pub fn log_softmax(&mut self, logits: &[f32]) {
+        let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut z = 0.0f64;
+        for &x in logits {
+            z += ((x as f64) - mx).exp();
+        }
+        let lz = z.ln();
+        self.lsm.clear();
+        self.lsm.extend(logits.iter().map(|&x| (x as f64) - mx - lz));
+    }
+
+    /// Log-softmax `logits` into `self.lsm`, then select the top-`k`
+    /// indices into `self.topk` (descending; ties by ascending index,
+    /// matching the seed's stable full sort).
+    pub fn top_k_log_softmax(&mut self, logits: &[f32], k: usize) {
+        self.log_softmax(logits);
+        let lsm = &self.lsm;
+        self.idx.clear();
+        self.idx.extend(0..lsm.len() as u32);
+        let cmp = |a: &u32, b: &u32| {
+            lsm[*b as usize]
+                .partial_cmp(&lsm[*a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.cmp(b))
+        };
+        let n = self.idx.len();
+        if k < n {
+            self.idx.select_nth_unstable_by(k, cmp);
+            self.idx.truncate(k);
+        }
+        self.idx.sort_unstable_by(cmp);
+        self.topk.clear();
+        self.topk.extend(self.idx.iter().map(|&i| i as usize));
+    }
+}
+
+impl Default for ScoringScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Probability mass of tokens strictly more probable than `tok`, fused
+/// over raw logits: one max pass + one sum pass, no `Vec` materialized.
+/// This is the MSBS nucleus acceptance test.
+///
+/// Equivalence to the seed's materializing form (`softmax(logits)` then
+/// summing entries greater than `probs[tok]`): the filter is exact —
+/// distinct f32 logits stay distinct through `exp` in f64 (an f32 ulp
+/// is ~1e9 f64 ulps), so `p_i > p_tok` iff `logits[i] > logits[tok]` —
+/// but the mass itself is computed as `(Σ e_i)/z` instead of
+/// `Σ (e_i/z)`, which can differ in the last ulp (~1e-16 relative).
+/// The accept decision `mass < nucleus` therefore agrees with the seed
+/// unless the true mass lies within ~1e-16 of the nucleus parameter —
+/// unobservable in practice and impossible for the mock's logit grid,
+/// which is what the parity suite pins.
+pub fn nucleus_mass_before(logits: &[f32], tok: usize) -> f64 {
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lt = logits[tok];
+    let mut z = 0.0f64;
+    let mut above = 0.0f64;
+    for &x in logits {
+        let e = ((x as f64) - mx).exp();
+        z += e;
+        if x > lt {
+            above += e;
+        }
+    }
+    above / z
+}
+
+/// Indices of the top-`k` entries of `xs`, descending (ties by ascending
+/// index). Partial selection: O(n + k log k). The convenience form of
+/// [`ScoringScratch::top_k_log_softmax`] for callers outside the hot loop.
+pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let cmp = |a: &usize, b: &usize| {
+        xs[*b]
+            .partial_cmp(&xs[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{log_softmax, softmax};
+
+    #[test]
+    fn log_softmax_matches_free_function() {
+        let logits: Vec<f32> = vec![0.5, -1.0, 2.0, 0.0, 8.0, -4.0];
+        let mut s = ScoringScratch::new();
+        s.log_softmax(&logits);
+        let want = log_softmax(&logits);
+        assert_eq!(s.lsm, want, "scratch log-softmax must be bit-identical");
+        // buffer reuse across different widths
+        s.log_softmax(&logits[..3]);
+        assert_eq!(s.lsm, log_softmax(&logits[..3]));
+    }
+
+    #[test]
+    fn top_k_matches_stable_full_sort() {
+        // include exact ties to exercise the index tie-break
+        let xs = vec![0.1, 0.9, 0.5, 0.9, 0.5, 0.5, -1.0];
+        for k in 0..=xs.len() + 1 {
+            let got = top_k_indices(&xs, k);
+            // reference: the seed's stable sort
+            let mut idx: Vec<usize> = (0..xs.len()).collect();
+            idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+            idx.truncate(k);
+            assert_eq!(got, idx, "k={k}");
+        }
+    }
+
+    #[test]
+    fn top_k_log_softmax_selects_same_indices() {
+        let logits: Vec<f32> = (0..26).map(|i| ((i * 7) % 13) as f32 - 4.0).collect();
+        let mut s = ScoringScratch::new();
+        for k in [1usize, 3, 10, 26] {
+            s.top_k_log_softmax(&logits, k);
+            let want = top_k_indices(&log_softmax(&logits), k);
+            assert_eq!(s.topk, want, "k={k}");
+            assert_eq!(s.lsm, log_softmax(&logits));
+        }
+    }
+
+    #[test]
+    fn nucleus_mass_matches_softmax_filter() {
+        let logits: Vec<f32> = vec![8.0, 4.0, -4.0, -4.0, 2.0, -1.0];
+        let probs = softmax(&logits);
+        for tok in 0..logits.len() {
+            let p_tok = probs[tok];
+            let want: f64 = probs.iter().filter(|&&p| p > p_tok).sum();
+            let got = nucleus_mass_before(&logits, tok);
+            assert!((got - want).abs() < 1e-12, "tok={tok}: {got} vs {want}");
+        }
+        // argmax always has zero mass before it
+        assert_eq!(nucleus_mass_before(&logits, 0), 0.0);
+    }
+}

@@ -21,11 +21,19 @@
 
 use crate::jsonx::Json;
 use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+#[cfg(feature = "pjrt")]
 use crate::tokenizer::PAD;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::atomic::{AtomicU64, Ordering};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// Model/runtime configuration loaded from `model_config.json` +
@@ -93,6 +101,7 @@ impl RuntimeConfig {
 }
 
 /// Host-side copy of one encode batch: memory rows + masks.
+#[cfg(feature = "pjrt")]
 struct HostMem {
     /// (rows, Ls, D) flattened.
     mem: Vec<f32>,
@@ -102,6 +111,7 @@ struct HostMem {
 }
 
 /// The real [`StepModel`]: PJRT CPU client over the AOT artifacts.
+#[cfg(feature = "pjrt")]
 pub struct PjrtModel {
     cfg: RuntimeConfig,
     client: xla::PjRtClient,
@@ -115,6 +125,7 @@ pub struct PjrtModel {
     pub compile_secs: Mutex<f64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtModel {
     /// Load artifacts from a directory (`artifacts/` by default).
     pub fn load(art: impl AsRef<Path>) -> Result<Self> {
@@ -279,6 +290,7 @@ impl PjrtModel {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl StepModel for PjrtModel {
     fn vocab(&self) -> usize {
         self.cfg.vocab
@@ -375,7 +387,7 @@ impl StepModel for PjrtModel {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -390,6 +402,75 @@ mod tests {
 
 pub mod server;
 
+/// Stub [`PjrtModel`] for builds without the `pjrt` feature (the offline
+/// environment has no `xla` crate). Loading reports a clear error;
+/// everything that only needs the mock model keeps working.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtModel {
+    cfg: RuntimeConfig,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtModel {
+    /// Always fails: the binary was built without PJRT support.
+    pub fn load(art: impl AsRef<Path>) -> Result<Self> {
+        let _ = art;
+        Err(anyhow!(
+            "built without the `pjrt` feature (no `xla` crate in this environment); \
+             rebuild with `--features pjrt` or pass --mock to use the in-process mock model"
+        ))
+    }
+
+    pub fn config(&self) -> &RuntimeConfig {
+        &self.cfg
+    }
+
+    /// Test-only: host copy of an encoded batch's memory.
+    pub fn debug_mem(&self, _mem: crate::model::MemHandle) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// No-op in the stub (nothing to compile).
+    pub fn precompile(
+        &self,
+        _max_enc_rows: usize,
+        _max_rows: usize,
+        _wins: &[usize],
+    ) -> Result<f64> {
+        Ok(0.0)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl StepModel for PjrtModel {
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn medusa_heads(&self) -> usize {
+        self.cfg.n_medusa
+    }
+
+    fn max_src(&self) -> usize {
+        self.cfg.max_src
+    }
+
+    fn max_tgt(&self) -> usize {
+        self.cfg.max_tgt
+    }
+
+    fn encode(&self, _src: &[Vec<i32>]) -> Result<MemHandle> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+
+    fn decode(&self, _rows: &[DecodeRow], _win: usize) -> Result<DecodeOut> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+
+    fn release(&self, _mem: MemHandle) {}
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtModel {
     /// Test-only: host copy of an encoded batch's memory.
     pub fn debug_mem(&self, mem: crate::model::MemHandle) -> Option<Vec<f32>> {

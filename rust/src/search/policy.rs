@@ -13,9 +13,9 @@ use crate::decoding::{DecodeStats, Decoder};
 use crate::model::StepModel;
 use crate::synthchem;
 use crate::tokenizer::Vocab;
+use crate::util::lru::LruCache;
 use anyhow::Result;
 use std::cell::RefCell;
-use std::collections::HashMap;
 
 /// One proposed precursor set.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,13 +40,19 @@ pub trait ExpansionPolicy {
     fn calls(&self) -> usize;
 }
 
-/// Neural policy: decoder over a `StepModel`, with an expansion cache
-/// (planners revisit molecules constantly; AiZynthFinder caches too).
+/// Default bound on the expansion cache: planners revisit molecules
+/// constantly, but an unbounded map is a slow leak under sustained
+/// serving traffic.
+pub const DEFAULT_CACHE_CAP: usize = 10_000;
+
+/// Neural policy: decoder over a `StepModel`, with a bounded LRU
+/// expansion cache (planners revisit molecules constantly;
+/// AiZynthFinder caches too).
 pub struct ModelPolicy<M: StepModel> {
     model: M,
     decoder: Box<dyn Decoder>,
     vocab: Vocab,
-    cache: RefCell<HashMap<(String, usize), Vec<Proposal>>>,
+    cache: RefCell<LruCache<(String, usize), Vec<Proposal>>>,
     stats: RefCell<DecodeStats>,
     calls: RefCell<usize>,
     /// Count of hypotheses that failed SMILES validation (Table 2).
@@ -56,11 +62,21 @@ pub struct ModelPolicy<M: StepModel> {
 
 impl<M: StepModel> ModelPolicy<M> {
     pub fn new(model: M, decoder: Box<dyn Decoder>, vocab: Vocab) -> Self {
+        Self::with_cache_capacity(model, decoder, vocab, DEFAULT_CACHE_CAP)
+    }
+
+    /// `new` with an explicit expansion-cache bound (entries, LRU).
+    pub fn with_cache_capacity(
+        model: M,
+        decoder: Box<dyn Decoder>,
+        vocab: Vocab,
+        cache_cap: usize,
+    ) -> Self {
         Self {
             model,
             decoder,
             vocab,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(LruCache::new(cache_cap)),
             stats: RefCell::new(DecodeStats::default()),
             calls: RefCell::new(0),
             invalid_count: RefCell::new(0),
@@ -70,6 +86,11 @@ impl<M: StepModel> ModelPolicy<M> {
 
     pub fn decoder_name(&self) -> &'static str {
         self.decoder.name()
+    }
+
+    /// Current expansion-cache occupancy (diagnostics).
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
     }
 }
 
@@ -130,37 +151,40 @@ pub fn proposals_from_output(
 
 impl<M: StepModel> ExpansionPolicy for ModelPolicy<M> {
     fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
-        // Serve cache hits; batch the misses through the decoder.
+        // Serve cache hits; batch the misses through the decoder. The
+        // lookup key is built once per molecule and reused for the
+        // insert on a miss (the seed allocated it twice).
         let mut out: Vec<Option<Vec<Proposal>>> = vec![None; molecules.len()];
-        let mut miss_idx = Vec::new();
+        let mut misses: Vec<(usize, (String, usize))> = Vec::new();
         let mut miss_srcs = Vec::new();
         {
-            let cache = self.cache.borrow();
+            let mut cache = self.cache.borrow_mut();
             for (i, m) in molecules.iter().enumerate() {
-                if let Some(hit) = cache.get(&(m.to_string(), k)) {
+                let key = (m.to_string(), k);
+                if let Some(hit) = cache.get(&key) {
                     out[i] = Some(hit.clone());
                 } else {
-                    miss_idx.push(i);
+                    misses.push((i, key));
                     miss_srcs.push(self.vocab.encode(m, true));
                 }
             }
         }
-        if !miss_idx.is_empty() {
+        if !misses.is_empty() {
             *self.calls.borrow_mut() += 1;
             let mut stats = self.stats.borrow_mut();
             let results = self.decoder.generate(&self.model, &miss_srcs, k, &mut stats)?;
             drop(stats);
             let mut cache = self.cache.borrow_mut();
-            for (slot, gen) in miss_idx.iter().zip(results.into_iter()) {
-                let product = molecules[*slot];
+            for ((slot, key), gen) in misses.into_iter().zip(results.into_iter()) {
+                let product = molecules[slot];
                 let mut invalid = self.invalid_count.borrow_mut();
                 let mut total = self.total_hyps.borrow_mut();
                 let proposals =
                     proposals_from_output(&self.vocab, product, &gen, &mut invalid, &mut total);
                 drop(invalid);
                 drop(total);
-                cache.insert((product.to_string(), k), proposals.clone());
-                out[*slot] = Some(proposals);
+                cache.insert(key, proposals.clone());
+                out[slot] = Some(proposals);
             }
         }
         Ok(out.into_iter().map(|o| o.unwrap_or_default()).collect())
@@ -283,6 +307,29 @@ mod tests {
         let calls_before = policy.calls();
         let _ = policy.expand_batch(&["CC(=O)O.CN"], 3).unwrap();
         assert_eq!(policy.calls(), calls_before, "second expansion must hit the cache");
+    }
+
+    #[test]
+    fn model_policy_cache_is_bounded() {
+        let vocab = Vocab::build(["CCO", "CCN", "CCC", "CC(=O)O.CN"]);
+        let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+        let policy = ModelPolicy::with_cache_capacity(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            2,
+        );
+        for m in ["CCO", "CCN", "CCC", "CC(=O)O.CN"] {
+            let _ = policy.expand_batch(&[m], 2).unwrap();
+        }
+        assert!(policy.cache_len() <= 2, "cache grew to {}", policy.cache_len());
+        // most-recent entry still hits
+        let calls_before = policy.calls();
+        let _ = policy.expand_batch(&["CC(=O)O.CN"], 2).unwrap();
+        assert_eq!(policy.calls(), calls_before);
+        // evicted entry misses (recomputes)
+        let _ = policy.expand_batch(&["CCO"], 2).unwrap();
+        assert_eq!(policy.calls(), calls_before + 1);
     }
 
     #[test]

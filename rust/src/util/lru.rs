@@ -1,0 +1,208 @@
+//! A small, dependency-free LRU cache (the offline build has no `lru`
+//! crate): HashMap for lookup + an intrusive doubly-linked recency list
+//! over a slab, so `get`/`insert` are O(1). The key is stored once and
+//! shared between the map and the slab via `Rc` (a refcount bump, not a
+//! deep clone — "allocate the key once" is the whole point for the
+//! `(String, usize)` expansion-cache keys). `Rc` makes the cache
+//! single-threaded; the policy layer already wraps it in `RefCell`.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::rc::Rc;
+
+const NIL: usize = usize::MAX;
+
+struct Entry<K, V> {
+    key: Rc<K>,
+    val: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Bounded map evicting the least-recently-used entry on overflow.
+pub struct LruCache<K, V> {
+    cap: usize,
+    map: HashMap<Rc<K>, usize>,
+    slab: Vec<Entry<K, V>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl<K: Eq + Hash, V> LruCache<K, V> {
+    /// `cap` must be >= 1 (clamped).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            map: HashMap::with_capacity(cap.min(1 << 16)),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Look up `k`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        let &i = self.map.get(k)?;
+        self.unlink(i);
+        self.push_front(i);
+        Some(&self.slab[i].val)
+    }
+
+    /// Insert or replace; evicts the least-recently-used entry at cap.
+    pub fn insert(&mut self, k: K, v: V) {
+        if let Some(&i) = self.map.get(&k) {
+            self.slab[i].val = v;
+            self.unlink(i);
+            self.push_front(i);
+            return;
+        }
+        if self.map.len() >= self.cap {
+            let t = self.tail;
+            debug_assert!(t != NIL);
+            self.unlink(t);
+            let victim = Rc::clone(&self.slab[t].key);
+            self.map.remove(&victim);
+            self.free.push(t);
+        }
+        let key = Rc::new(k);
+        let entry = Entry { key: Rc::clone(&key), val: v, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slab[i] = entry;
+                i
+            }
+            None => {
+                self.slab.push(entry);
+                self.slab.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.slab[i].prev, self.slab[i].next);
+        if p != NIL {
+            self.slab[p].next = n;
+        } else if self.head == i {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slab[n].prev = p;
+        } else if self.tail == i {
+            self.tail = p;
+        }
+        self.slab[i].prev = NIL;
+        self.slab[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slab[i].prev = NIL;
+        self.slab[i].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut c: LruCache<String, i32> = LruCache::new(4);
+        assert!(c.is_empty());
+        c.insert("a".into(), 1);
+        c.insert("b".into(), 2);
+        assert_eq!(c.get(&"a".to_string()), Some(&1));
+        assert_eq!(c.get(&"b".to_string()), Some(&2));
+        assert_eq!(c.get(&"c".to_string()), None);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<i32, i32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(&10)); // touch 1: LRU is now 2
+        c.insert(3, 30); // evicts 2
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.get(&3), Some(&30));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn replace_updates_value_and_recency() {
+        let mut c: LruCache<i32, i32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // touch + replace: LRU is now 2
+        c.insert(3, 30); // evicts 2
+        assert_eq!(c.get(&1), Some(&11));
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&3), Some(&30));
+    }
+
+    #[test]
+    fn capacity_one() {
+        let mut c: LruCache<i32, i32> = LruCache::new(1);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2), Some(&20));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_cap_is_clamped() {
+        let mut c: LruCache<i32, i32> = LruCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert(1, 10);
+        assert_eq!(c.get(&1), Some(&10));
+    }
+
+    #[test]
+    fn slab_slots_are_reused() {
+        let mut c: LruCache<i32, i32> = LruCache::new(2);
+        for i in 0..100 {
+            c.insert(i, i);
+        }
+        assert!(c.slab.len() <= 3, "slab grew to {}", c.slab.len());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&99), Some(&99));
+        assert_eq!(c.get(&98), Some(&98));
+        assert_eq!(c.get(&0), None);
+    }
+
+    #[test]
+    fn key_is_shared_not_cloned() {
+        // The map key and slab key are the same allocation.
+        let mut c: LruCache<String, i32> = LruCache::new(2);
+        c.insert("long-lived-key".to_string(), 1);
+        let slab_key = Rc::clone(&c.slab[c.head].key);
+        // 3 strong refs: map, slab, and our probe.
+        assert_eq!(Rc::strong_count(&slab_key), 3);
+    }
+}

@@ -9,6 +9,7 @@
 //! [SplitMix64]: https://prng.di.unimi.it/splitmix64.c
 //! [xoshiro256++]: https://prng.di.unimi.it/xoshiro256plusplus.c
 
+pub mod lru;
 pub mod stats;
 
 /// Deterministic 64-bit PRNG (xoshiro256++), seeded via SplitMix64.

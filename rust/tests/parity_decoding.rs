@@ -1,0 +1,662 @@
+//! Decoder parity: the zero-allocation decoding core (token arena +
+//! scoring scratch + partial top-k) must reproduce the seed
+//! implementations' outputs *exactly* — same hypothesis token
+//! sequences, logp within 1e-9, identical `DecodeStats` accounting
+//! (Table 1B model calls in particular).
+//!
+//! The `reference` module below is a transcription of the seed
+//! algorithms: owned `Vec<i32>` beams cloned per candidate, fresh
+//! softmax/log-softmax allocations per position, full-vocabulary stable
+//! sorts for top-k, and `HashSet<Vec<i32>>` candidate dedup. One
+//! deliberate deviation: the seed's HSBS picked the best draft per beam
+//! via `HashMap` iteration, whose order is randomized per process — the
+//! reference uses a `BTreeMap` so both sides iterate beams in the same
+//! (query, beam) order the new engine uses.
+
+use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::tokenizer::{BOS, EOS};
+use retroserve::util::Rng;
+
+mod reference {
+    use retroserve::model::{argmax, log_softmax, softmax, DecodeRow, StepModel};
+    use retroserve::decoding::DecodeStats;
+    use retroserve::tokenizer::EOS;
+
+    #[derive(Clone, Debug)]
+    struct Beam {
+        tokens: Vec<i32>,
+        logp: f64,
+        finished: bool,
+    }
+
+    impl Beam {
+        fn root() -> Beam {
+            Beam { tokens: vec![retroserve::tokenizer::BOS], logp: 0.0, finished: false }
+        }
+    }
+
+    /// One reference hypothesis: tokens without BOS.
+    pub type Hyp = (Vec<i32>, f64);
+
+    /// The seed's full-sort top-k (stable: ties keep index order).
+    fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+        idx.truncate(k);
+        idx
+    }
+
+    /// The seed's candidate pool: sort everything, dedup by cloned
+    /// token sequence.
+    struct CandidatePool {
+        k: usize,
+        items: Vec<Beam>,
+    }
+
+    impl CandidatePool {
+        fn new(k: usize) -> Self {
+            Self { k, items: Vec::new() }
+        }
+
+        fn push(&mut self, b: Beam) {
+            self.items.push(b);
+        }
+
+        fn take(mut self) -> Vec<Beam> {
+            self.items.sort_by(|a, b| {
+                b.logp.partial_cmp(&a.logp).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut seen: std::collections::HashSet<Vec<i32>> = std::collections::HashSet::new();
+            let mut out: Vec<Beam> = Vec::with_capacity(self.k);
+            for b in self.items.drain(..) {
+                if out.len() >= self.k {
+                    break;
+                }
+                if seen.insert(b.tokens.clone()) {
+                    out.push(b);
+                }
+            }
+            out
+        }
+    }
+
+    fn finalize(beams: Vec<Beam>) -> Vec<Hyp> {
+        let mut hyps: Vec<Hyp> =
+            beams.into_iter().map(|b| (b.tokens[1..].to_vec(), b.logp)).collect();
+        hyps.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        hyps
+    }
+
+    /// Seed beam search (vanilla / optimized).
+    pub fn beam_search(
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        optimized: bool,
+        stats: &mut DecodeStats,
+    ) -> Vec<Vec<Hyp>> {
+        let mem = model.encode(srcs).unwrap();
+        stats.encode_calls += 1;
+        let max_len = model.max_tgt();
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        while !done.iter().all(|&d| d) {
+            let mut rows: Vec<DecodeRow> = Vec::new();
+            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            for (q, qbeams) in beams.iter().enumerate() {
+                if done[q] && optimized {
+                    continue;
+                }
+                for (bi, b) in qbeams.iter().enumerate() {
+                    if optimized && b.finished {
+                        continue;
+                    }
+                    let live_row = !b.finished;
+                    if !optimized || live_row {
+                        rows.push(DecodeRow {
+                            mem,
+                            mem_row: q,
+                            tgt: b.tokens.clone(),
+                            pos: b.tokens.len() - 1,
+                        });
+                        row_of.push((q, bi));
+                    }
+                }
+                if !optimized && qbeams.len() == 1 && !qbeams[0].finished {
+                    for _ in 1..k {
+                        rows.push(DecodeRow {
+                            mem,
+                            mem_row: q,
+                            tgt: qbeams[0].tokens.clone(),
+                            pos: qbeams[0].tokens.len() - 1,
+                        });
+                        row_of.push((q, usize::MAX));
+                    }
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let out = model.decode(&rows, 1).unwrap();
+            stats.model_calls += 1;
+            stats.rows_logical += rows.len() as u64;
+            stats.rows_padded += out.padded_rows as u64;
+
+            let mut pools: Vec<CandidatePool> =
+                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for (q, qbeams) in beams.iter().enumerate() {
+                for b in qbeams {
+                    if b.finished {
+                        pools[q].push(b.clone());
+                    }
+                }
+            }
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                if bi == usize::MAX {
+                    continue;
+                }
+                let b = &beams[q][bi];
+                if b.finished {
+                    continue;
+                }
+                let j = out.offset_of(r, b.tokens.len() - 1).unwrap();
+                let lsm = log_softmax(out.logits(r, j, 0));
+                for &tok in top_k(&lsm, k).iter() {
+                    let mut t = b.tokens.clone();
+                    t.push(tok as i32);
+                    let finished = tok as i32 == EOS || t.len() >= max_len;
+                    pools[q].push(Beam { tokens: t, logp: b.logp + lsm[tok], finished });
+                }
+            }
+            for (q, pool) in pools.into_iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                let next = pool.take();
+                if !next.is_empty() {
+                    beams[q] = next;
+                }
+                done[q] = beams[q].iter().all(|b| b.finished);
+            }
+        }
+        model.release(mem);
+        beams.into_iter().map(finalize).collect()
+    }
+
+    /// Seed MSBS (softmax-materializing nucleus test).
+    pub fn msbs(
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        nucleus: f64,
+        stats: &mut DecodeStats,
+    ) -> Vec<Vec<Hyp>> {
+        let in_nucleus = |probs: &[f64], tok: usize| -> bool {
+            let p_tok = probs[tok];
+            let mass_before: f64 = probs.iter().filter(|&&p| p > p_tok).sum();
+            mass_before < nucleus
+        };
+        let mem = model.encode(srcs).unwrap();
+        stats.encode_calls += 1;
+        let max_len = model.max_tgt();
+        let m = model.medusa_heads();
+        assert!(m > 0);
+
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        while !done.iter().all(|&d| d) {
+            let mut rows: Vec<DecodeRow> = Vec::new();
+            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            for (q, qbeams) in beams.iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                for (bi, b) in qbeams.iter().enumerate() {
+                    if !b.finished {
+                        rows.push(DecodeRow {
+                            mem,
+                            mem_row: q,
+                            tgt: b.tokens.clone(),
+                            pos: b.tokens.len() - 1,
+                        });
+                        row_of.push((q, bi));
+                    }
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let dout = model.decode(&rows, 1).unwrap();
+            stats.model_calls += 1;
+            stats.rows_logical += rows.len() as u64;
+            stats.rows_padded += dout.padded_rows as u64;
+
+            let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                let b = &beams[q][bi];
+                let off = dout.offset_of(r, b.tokens.len() - 1).unwrap();
+                let budget = max_len.saturating_sub(b.tokens.len() + 1).min(m);
+                let mut d = Vec::with_capacity(budget);
+                for h in 0..budget {
+                    d.push(argmax(dout.logits(r, off, h)) as i32);
+                }
+                drafts.push(d);
+            }
+
+            let win = m + 1;
+            let mut vrows: Vec<DecodeRow> = Vec::with_capacity(rows.len());
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                let b = &beams[q][bi];
+                let mut tgt = b.tokens.clone();
+                tgt.extend_from_slice(&drafts[r]);
+                vrows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+            }
+            let vout = model.decode(&vrows, win).unwrap();
+            stats.model_calls += 1;
+            stats.rows_logical += vrows.len() as u64;
+            stats.rows_padded += vout.padded_rows as u64;
+
+            let mut pools: Vec<CandidatePool> =
+                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for (q, qbeams) in beams.iter().enumerate() {
+                for b in qbeams {
+                    if b.finished {
+                        pools[q].push(b.clone());
+                    }
+                }
+            }
+            for (r, &(q, bi)) in row_of.iter().enumerate() {
+                let b = &beams[q][bi];
+                let p0 = b.tokens.len() - 1;
+                let draft = &drafts[r];
+                let mut acc = 0usize;
+                let mut eos_idx: Option<usize> = None;
+                for (j, &dt) in draft.iter().enumerate() {
+                    let Some(off) = vout.offset_of(r, p0 + j) else { break };
+                    let probs = softmax(vout.logits(r, off, 0));
+                    if !in_nucleus(&probs, dt as usize) {
+                        break;
+                    }
+                    acc += 1;
+                    if dt == EOS {
+                        eos_idx = Some(j);
+                        break;
+                    }
+                }
+                stats.drafts_offered += draft.len() as u64;
+                stats.drafts_accepted += acc as u64;
+
+                let ext_cap = eos_idx.unwrap_or(acc);
+                let mut cum = b.logp;
+                for j in 0..=ext_cap {
+                    let Some(off) = vout.offset_of(r, p0 + j) else { break };
+                    let prefix_len = b.tokens.len() + j;
+                    if prefix_len >= max_len {
+                        break;
+                    }
+                    let backbone_end = j == ext_cap;
+                    let lsm = log_softmax(vout.logits(r, off, 0));
+                    for &tok in top_k(&lsm, k).iter() {
+                        if !backbone_end && tok as i32 == draft[j] {
+                            continue;
+                        }
+                        let mut t = b.tokens.clone();
+                        t.extend_from_slice(&draft[..j]);
+                        t.push(tok as i32);
+                        let finished = tok as i32 == EOS || t.len() >= max_len;
+                        pools[q].push(Beam { tokens: t, logp: cum + lsm[tok], finished });
+                    }
+                    if j < draft.len() {
+                        cum += lsm[draft[j] as usize];
+                    }
+                }
+            }
+            for (q, pool) in pools.into_iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                let next = pool.take();
+                if !next.is_empty() {
+                    beams[q] = next;
+                }
+                done[q] = beams[q].iter().all(|b| b.finished);
+            }
+        }
+        model.release(mem);
+        beams.into_iter().map(finalize).collect()
+    }
+
+    /// Seed HSBS (with the BTreeMap determinization noted in the module
+    /// docs).
+    pub fn hsbs(
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+        n_drafts: usize,
+        draft_len: usize,
+        stats: &mut DecodeStats,
+    ) -> Vec<Vec<Hyp>> {
+        let make_drafts = |src_body: &[i32], last: i32, budget: usize| -> Vec<Vec<i32>> {
+            let mut out: Vec<Vec<i32>> = Vec::with_capacity(n_drafts);
+            if budget == 0 || src_body.is_empty() {
+                return out;
+            }
+            let dlen = draft_len.min(budget);
+            for (i, &t) in src_body.iter().enumerate() {
+                if out.len() >= n_drafts {
+                    break;
+                }
+                if t == last && i + 1 < src_body.len() {
+                    let w: Vec<i32> =
+                        src_body[i + 1..(i + 1 + dlen).min(src_body.len())].to_vec();
+                    if !w.is_empty() && !out.contains(&w) {
+                        out.push(w);
+                    }
+                }
+            }
+            let stride = (src_body.len() / n_drafts.max(1)).max(1);
+            let mut start = 0;
+            while out.len() < n_drafts && start < src_body.len() {
+                let w: Vec<i32> = src_body[start..(start + dlen).min(src_body.len())].to_vec();
+                if !w.is_empty() && !out.contains(&w) {
+                    out.push(w);
+                }
+                start += stride;
+            }
+            out
+        };
+
+        let mem = model.encode(srcs).unwrap();
+        stats.encode_calls += 1;
+        let max_len = model.max_tgt();
+        let win = draft_len + 1;
+
+        let bodies: Vec<&[i32]> = srcs
+            .iter()
+            .map(|s| {
+                let inner = &s[1..];
+                match inner.split_last() {
+                    Some((&last, rest)) if last == EOS => rest,
+                    _ => inner,
+                }
+            })
+            .collect();
+
+        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![Beam::root()]).collect();
+        let mut done: Vec<bool> = vec![false; srcs.len()];
+
+        while !done.iter().all(|&d| d) {
+            let mut rows: Vec<DecodeRow> = Vec::new();
+            let mut row_meta: Vec<(usize, usize, Vec<i32>)> = Vec::new();
+            for (q, qbeams) in beams.iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                for (bi, b) in qbeams.iter().enumerate() {
+                    if b.finished {
+                        continue;
+                    }
+                    let budget = max_len.saturating_sub(b.tokens.len());
+                    let last = *b.tokens.last().unwrap();
+                    let mut drafts = make_drafts(bodies[q], last, budget);
+                    if drafts.is_empty() {
+                        drafts.push(Vec::new());
+                    }
+                    for d in drafts {
+                        let mut tgt = b.tokens.clone();
+                        tgt.extend_from_slice(&d);
+                        rows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+                        row_meta.push((q, bi, d));
+                    }
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let out = model.decode(&rows, win).unwrap();
+            stats.model_calls += 1;
+            stats.rows_logical += rows.len() as u64;
+            stats.rows_padded += out.padded_rows as u64;
+
+            use std::collections::BTreeMap;
+            let mut best: BTreeMap<(usize, usize), (usize, usize)> = BTreeMap::new();
+            for (r, (q, bi, draft)) in row_meta.iter().enumerate() {
+                let b = &beams[*q][*bi];
+                let p0 = b.tokens.len() - 1;
+                let mut acc = 0;
+                for (j, &dt) in draft.iter().enumerate() {
+                    let Some(off) = out.offset_of(r, p0 + j) else { break };
+                    let greedy = argmax(out.logits(r, off, 0)) as i32;
+                    if greedy == dt && dt != EOS {
+                        acc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let e = best.entry((*q, *bi)).or_insert((acc, r));
+                if acc > e.0 {
+                    *e = (acc, r);
+                }
+            }
+
+            let mut pools: Vec<CandidatePool> =
+                (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
+            for (q, qbeams) in beams.iter().enumerate() {
+                for b in qbeams {
+                    if b.finished {
+                        pools[q].push(b.clone());
+                    }
+                }
+            }
+            for (&(q, bi), &(acc, r)) in best.iter() {
+                let b = &beams[q][bi];
+                let p0 = b.tokens.len() - 1;
+                let draft = &row_meta[r].2;
+                stats.drafts_offered += draft.len() as u64;
+                stats.drafts_accepted += acc as u64;
+                let ext_cap = acc.min(draft.len());
+                let mut cum = b.logp;
+                for j in 0..=ext_cap {
+                    let Some(off) = out.offset_of(r, p0 + j) else { break };
+                    let lsm = log_softmax(out.logits(r, off, 0));
+                    let prefix_len = b.tokens.len() + j;
+                    if prefix_len >= max_len {
+                        break;
+                    }
+                    let backbone_end = j == ext_cap;
+                    for &tok in top_k(&lsm, k).iter() {
+                        if !backbone_end && tok as i32 == draft[j] {
+                            continue;
+                        }
+                        let mut t = b.tokens.clone();
+                        t.extend_from_slice(&draft[..j]);
+                        t.push(tok as i32);
+                        let finished = tok as i32 == EOS || t.len() >= max_len;
+                        pools[q].push(Beam { tokens: t, logp: cum + lsm[tok], finished });
+                    }
+                    if j < draft.len() {
+                        cum += lsm[draft[j] as usize];
+                    }
+                }
+            }
+            for (q, pool) in pools.into_iter().enumerate() {
+                if done[q] {
+                    continue;
+                }
+                let next = pool.take();
+                if !next.is_empty() {
+                    beams[q] = next;
+                }
+                done[q] = beams[q].iter().all(|b| b.finished);
+            }
+        }
+        model.release(mem);
+        beams.into_iter().map(finalize).collect()
+    }
+}
+
+fn random_srcs(rng: &mut Rng, n: usize, max_body: usize, vocab: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|_| {
+            let len = 4 + rng.gen_range(max_body.saturating_sub(4).max(1));
+            let mut s = vec![BOS];
+            for _ in 0..len {
+                s.push(4 + rng.gen_range(vocab - 4) as i32);
+            }
+            s.push(EOS);
+            s
+        })
+        .collect()
+}
+
+struct Scenario {
+    cfg: MockConfig,
+    n_srcs: usize,
+    max_body: usize,
+    k: usize,
+    seed: u64,
+}
+
+fn scenarios() -> Vec<Scenario> {
+    let base = MockConfig::default();
+    vec![
+        Scenario { cfg: base.clone(), n_srcs: 3, max_body: 14, k: 3, seed: 11 },
+        Scenario { cfg: base.clone(), n_srcs: 1, max_body: 18, k: 10, seed: 12 },
+        Scenario {
+            cfg: MockConfig { head_base_acc: 100, head_acc_decay: 0, ..base.clone() },
+            n_srcs: 2,
+            max_body: 16,
+            k: 5,
+            seed: 13,
+        },
+        Scenario {
+            cfg: MockConfig { head_base_acc: 55, head_acc_decay: 5, ..base.clone() },
+            n_srcs: 4,
+            max_body: 12,
+            k: 4,
+            seed: 14,
+        },
+        Scenario {
+            cfg: MockConfig { medusa_heads: 4, max_tgt: 20, seed: 7, ..base.clone() },
+            n_srcs: 3,
+            max_body: 24,
+            k: 2,
+            seed: 15,
+        },
+        Scenario {
+            cfg: MockConfig { head_base_acc: 30, head_acc_decay: 0, ..base },
+            n_srcs: 2,
+            max_body: 15,
+            k: 1,
+            seed: 16,
+        },
+    ]
+}
+
+fn assert_outputs_match(
+    label: &str,
+    got: &[retroserve::decoding::GenOutput],
+    want: &[Vec<reference::Hyp>],
+) {
+    assert_eq!(got.len(), want.len(), "{label}: query count");
+    for (q, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(
+            g.hyps.len(),
+            w.len(),
+            "{label} q{q}: hypothesis count {} vs {}",
+            g.hyps.len(),
+            w.len()
+        );
+        for (i, (gh, wh)) in g.hyps.iter().zip(w.iter()).enumerate() {
+            assert_eq!(gh.tokens, wh.0, "{label} q{q} hyp{i}: token sequence");
+            assert!(
+                (gh.logp - wh.1).abs() < 1e-9,
+                "{label} q{q} hyp{i}: logp {} vs {}",
+                gh.logp,
+                wh.1
+            );
+        }
+    }
+}
+
+fn assert_stats_match(label: &str, got: &DecodeStats, want: &DecodeStats) {
+    assert_eq!(got.model_calls, want.model_calls, "{label}: model_calls");
+    assert_eq!(got.encode_calls, want.encode_calls, "{label}: encode_calls");
+    assert_eq!(got.rows_logical, want.rows_logical, "{label}: rows_logical");
+    assert_eq!(got.rows_padded, want.rows_padded, "{label}: rows_padded");
+    assert_eq!(got.drafts_offered, want.drafts_offered, "{label}: drafts_offered");
+    assert_eq!(got.drafts_accepted, want.drafts_accepted, "{label}: drafts_accepted");
+}
+
+#[test]
+fn beam_search_matches_seed_reference() {
+    for (si, sc) in scenarios().iter().enumerate() {
+        let mut rng = Rng::new(sc.seed);
+        let srcs = random_srcs(&mut rng, sc.n_srcs, sc.max_body, sc.cfg.vocab);
+        for optimized in [false, true] {
+            let label = format!("scenario {si} optimized={optimized}");
+            // Fresh model per run: the mock's Medusa corruption hash
+            // keys on the encode handle id, which increments per encode.
+            let mut ref_stats = DecodeStats::default();
+            let ref_model = MockModel::new(sc.cfg.clone());
+            let want =
+                reference::beam_search(&ref_model, &srcs, sc.k, optimized, &mut ref_stats);
+            let decoder =
+                if optimized { BeamSearch::optimized() } else { BeamSearch::vanilla() };
+            let mut stats = DecodeStats::default();
+            let model = MockModel::new(sc.cfg.clone());
+            let got = decoder.generate(&model, &srcs, sc.k, &mut stats).unwrap();
+            assert_outputs_match(&label, &got, &want);
+            assert_stats_match(&label, &stats, &ref_stats);
+        }
+    }
+}
+
+#[test]
+fn msbs_matches_seed_reference() {
+    for (si, sc) in scenarios().iter().enumerate() {
+        let mut rng = Rng::new(sc.seed ^ 0xA5A5);
+        let srcs = random_srcs(&mut rng, sc.n_srcs, sc.max_body, sc.cfg.vocab);
+        let label = format!("scenario {si} msbs");
+        let msbs = Msbs::default();
+        let mut ref_stats = DecodeStats::default();
+        let ref_model = MockModel::new(sc.cfg.clone());
+        let want = reference::msbs(&ref_model, &srcs, sc.k, msbs.nucleus, &mut ref_stats);
+        let mut stats = DecodeStats::default();
+        let model = MockModel::new(sc.cfg.clone());
+        let got = msbs.generate(&model, &srcs, sc.k, &mut stats).unwrap();
+        assert_outputs_match(&label, &got, &want);
+        assert_stats_match(&label, &stats, &ref_stats);
+    }
+}
+
+#[test]
+fn hsbs_matches_seed_reference() {
+    for (si, sc) in scenarios().iter().enumerate() {
+        let mut rng = Rng::new(sc.seed ^ 0x5A5A);
+        let srcs = random_srcs(&mut rng, sc.n_srcs, sc.max_body, sc.cfg.vocab);
+        for (n_drafts, draft_len) in [(10, 10), (3, 10), (1, 20), (4, 4)] {
+            let label = format!("scenario {si} hsbs {n_drafts}x{draft_len}");
+            let mut ref_stats = DecodeStats::default();
+            let ref_model = MockModel::new(sc.cfg.clone());
+            let want = reference::hsbs(
+                &ref_model,
+                &srcs,
+                sc.k,
+                n_drafts,
+                draft_len,
+                &mut ref_stats,
+            );
+            let mut stats = DecodeStats::default();
+            let model = MockModel::new(sc.cfg.clone());
+            let got = Hsbs::new(n_drafts, draft_len)
+                .generate(&model, &srcs, sc.k, &mut stats)
+                .unwrap();
+            assert_outputs_match(&label, &got, &want);
+            assert_stats_match(&label, &stats, &ref_stats);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Minimal offline-compatible subset of the `anyhow` API.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the slice of `anyhow` the workspace actually uses: the
+//! string-backed [`Error`] type, [`Result`], the `anyhow!`/`bail!`/
+//! `ensure!` macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Context frames are joined with `": "` in Display (both
+//! plain and alternate), mirroring `anyhow`'s `{:#}` rendering.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what lets the blanket
+//! `From<E: std::error::Error>` conversion coexist with `From<Error>`.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context frames.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context frame (rendered as `context: cause`).
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` in real anyhow appends the cause chain; our chain is
+        // already flattened into the message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macros_and_formats() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} items");
+        assert_eq!(e.to_string(), "got 3 items");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e:#}"), "owned");
+        assert_eq!(format!("{e:?}"), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: gone");
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", "flag")).unwrap_err();
+        assert_eq!(e.to_string(), "missing flag");
+        let some = Some(7).context("unused").unwrap();
+        assert_eq!(some, 7);
+    }
+}
