@@ -47,7 +47,11 @@ fn main() -> Result<()> {
         model,
         make_decoder(&decoder, 4)?,
         vocab.clone(),
-        BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_micros(3000) },
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_micros(3000),
+            ..Default::default()
+        },
         metrics.clone(),
     );
     let sc = ServeConfig::from_config(&retroserve::config::Config::new());
@@ -124,8 +128,14 @@ fn main() -> Result<()> {
         percentile(&lat, 100.0)
     );
     println!(
-        "batcher:        {merged} expansion requests merged into {batches} model batches ({:.2}x)",
+        "batcher:        {merged} expansion requests merged into {batches} decode tasks \
+         ({:.2}x)",
         merged as f64 / batches.max(1) as f64
+    );
+    let (fused_calls, fused_rows) = hub.fused_ratio();
+    println!(
+        "fused decoding: {fused_calls} device calls, avg effective batch {:.1} rows/call",
+        fused_rows as f64 / fused_calls.max(1) as f64
     );
     let stats = hub.stats();
     println!(

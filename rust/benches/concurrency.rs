@@ -1,0 +1,257 @@
+//! Concurrency bench: request-granularity serving vs cycle-level fused
+//! scheduling, at 1 / 4 / 16 concurrent mock planning sessions.
+//!
+//! Closed-loop simulation: each session issues a chain of expansion
+//! requests (one molecule each, varied length), issuing the next the
+//! moment the previous completes. Two serving disciplines over the SAME
+//! workload and model:
+//!
+//! * **request-granular** — the pre-scheduler hub: all currently
+//!   pending requests merge into one group and a whole multi-cycle
+//!   `generate` runs to completion before anyone is answered. Every
+//!   session stalls behind the slowest molecule in the group, and the
+//!   device batch decays as beams finish (Table 1C).
+//! * **cycle-fused** — a [`DecodeScheduler`]: every request is a
+//!   resumable task; each tick fuses ALL in-flight tasks' rows into one
+//!   device call, and a finishing task's session re-enters the pipeline
+//!   on the very next tick.
+//!
+//! The mock model sleeps a fixed `DEVICE_CALL_US` per decode call so
+//! device time dominates, making latency percentiles meaningful. The
+//! counting global allocator reports steady-state allocations per fused
+//! tick (ticks with no submit/retire, past warm-up) — the
+//! zero-allocation discipline check for the scheduler hot path.
+//!
+//! Emits `BENCH_concurrency.json`.
+
+use anyhow::Result;
+use retroserve::benchkit::{allocs_now, write_bench_json, BenchRecord, CountingAlloc};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig};
+use retroserve::decoding::{DecodeStats, Decoder};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use retroserve::tokenizer::{BOS, EOS};
+use retroserve::util::stats::percentile;
+use retroserve::util::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Synthetic device latency per decode call.
+const DEVICE_CALL_US: u64 = 200;
+/// Requests each session issues, back to back.
+const REQUESTS_PER_SESSION: usize = 6;
+const K: usize = 10;
+
+/// Mock model plus a fixed per-decode-call sleep (device time).
+struct DelayModel {
+    inner: MockModel,
+    delay: std::time::Duration,
+}
+
+impl StepModel for DelayModel {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn medusa_heads(&self) -> usize {
+        self.inner.medusa_heads()
+    }
+    fn max_src(&self) -> usize {
+        self.inner.max_src()
+    }
+    fn max_tgt(&self) -> usize {
+        self.inner.max_tgt()
+    }
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        self.inner.encode(src)
+    }
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(rows, win)
+    }
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.decode_into(rows, win, out)
+    }
+    fn pad_rows(&self, n: usize) -> usize {
+        self.inner.pad_rows(n)
+    }
+    fn release(&self, mem: MemHandle) {
+        self.inner.release(mem)
+    }
+}
+
+fn make_model() -> DelayModel {
+    DelayModel {
+        inner: MockModel::new(MockConfig::default()),
+        delay: std::time::Duration::from_micros(DEVICE_CALL_US),
+    }
+}
+
+/// The (session, step) request workload: same for both disciplines.
+fn workload(sessions: usize) -> Vec<Vec<Vec<i32>>> {
+    let mut rng = Rng::new(0x5E55);
+    (0..sessions)
+        .map(|_| {
+            (0..REQUESTS_PER_SESSION)
+                .map(|_| {
+                    let len = 6 + rng.gen_range(25);
+                    let mut s = vec![BOS];
+                    for _ in 0..len {
+                        s.push(4 + rng.gen_range(20) as i32);
+                    }
+                    s.push(EOS);
+                    s
+                })
+                .collect()
+        })
+        .collect()
+}
+
+struct RunReport {
+    model_calls: u64,
+    avg_effective_batch: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    wall_ms: f64,
+    allocs_per_tick_steady: f64,
+}
+
+/// Request-granularity discipline: drain everything pending into one
+/// group, run `generate` to completion, answer, repeat.
+fn run_request_granular(sessions: usize) -> RunReport {
+    let work = workload(sessions);
+    let model = make_model();
+    let dec = Msbs::default();
+    let mut stats = DecodeStats::default();
+    // (session, step index, issue time)
+    let mut pending: Vec<(usize, usize)> = (0..sessions).map(|s| (s, 0)).collect();
+    let mut issue: Vec<std::time::Instant> = vec![std::time::Instant::now(); sessions];
+    let mut latencies: Vec<f64> = Vec::new();
+    let t0 = std::time::Instant::now();
+    while !pending.is_empty() {
+        let batch: Vec<(usize, usize)> = pending.drain(..).collect();
+        let srcs: Vec<Vec<i32>> = batch.iter().map(|&(s, i)| work[s][i].clone()).collect();
+        dec.generate(&model, &srcs, K, &mut stats).expect("generate");
+        let now = std::time::Instant::now();
+        for &(s, i) in &batch {
+            latencies.push(now.duration_since(issue[s]).as_secs_f64() * 1e3);
+            if i + 1 < REQUESTS_PER_SESSION {
+                issue[s] = now;
+                pending.push((s, i + 1));
+            }
+        }
+    }
+    RunReport {
+        model_calls: stats.model_calls,
+        avg_effective_batch: stats.avg_effective_batch(),
+        p50_ms: percentile(&latencies, 50.0),
+        p95_ms: percentile(&latencies, 95.0),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        allocs_per_tick_steady: f64::NAN,
+    }
+}
+
+/// Cycle-fused discipline: one task per request, every tick fuses all
+/// in-flight tasks' rows into one device call.
+fn run_cycle_fused(sessions: usize) -> RunReport {
+    let work = workload(sessions);
+    let model = make_model();
+    let dec = Msbs::default();
+    let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4096 });
+    let mut issue: Vec<std::time::Instant> = vec![std::time::Instant::now(); sessions];
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut task_of = std::collections::HashMap::new();
+    let mut finished: Vec<Finished> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for (s, chain) in work.iter().enumerate() {
+        let id = sched.submit(dec.start_task(&model, &chain[..1], K).expect("task"));
+        task_of.insert(id, (s, 0usize));
+    }
+    let mut ticks = 0u64;
+    let mut steady_ticks = 0u64;
+    let mut steady_allocs = 0u64;
+    while !sched.is_idle() {
+        finished.clear();
+        let a0 = allocs_now();
+        sched.tick(&model, &mut finished).expect("tick");
+        let spent = allocs_now() - a0;
+        ticks += 1;
+        // Steady state = past buffer warm-up, no task retiring in this
+        // tick (retiring finalizes hypotheses, which rightly allocates).
+        if ticks > 12 && finished.is_empty() {
+            steady_ticks += 1;
+            steady_allocs += spent;
+        }
+        let now = std::time::Instant::now();
+        for f in finished.drain(..) {
+            let (s, i) = task_of.remove(&f.id).expect("task bookkeeping");
+            latencies.push(now.duration_since(issue[s]).as_secs_f64() * 1e3);
+            if i + 1 < REQUESTS_PER_SESSION {
+                issue[s] = now;
+                let next = &work[s][i + 1..i + 2];
+                let id = sched.submit(dec.start_task(&model, next, K).expect("task"));
+                task_of.insert(id, (s, i + 1));
+            }
+        }
+    }
+    RunReport {
+        model_calls: sched.stats.fused_calls,
+        avg_effective_batch: sched.stats.avg_effective_batch(),
+        p50_ms: percentile(&latencies, 50.0),
+        p95_ms: percentile(&latencies, 95.0),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        allocs_per_tick_steady: if steady_ticks == 0 {
+            f64::NAN
+        } else {
+            steady_allocs as f64 / steady_ticks as f64
+        },
+    }
+}
+
+fn main() {
+    println!(
+        "== concurrency bench (msbs, K={K}, {REQUESTS_PER_SESSION} requests/session, \
+         device call {DEVICE_CALL_US}us) =="
+    );
+    let mut records = Vec::new();
+    for sessions in [1usize, 4, 16] {
+        let rg = run_request_granular(sessions);
+        let cf = run_cycle_fused(sessions);
+        for (name, r) in [("request-granular", &rg), ("cycle-fused", &cf)] {
+            println!(
+                "{name:<18} s={sessions:<3} calls {:>5}  eff.batch {:>6.1}  \
+                 p50 {:>7.2}ms  p95 {:>7.2}ms  wall {:>8.1}ms",
+                r.model_calls, r.avg_effective_batch, r.p50_ms, r.p95_ms, r.wall_ms
+            );
+            let mut rec = BenchRecord::new(format!("{name}-s{sessions}"))
+                .metric("sessions", sessions as f64)
+                .metric("model_calls", r.model_calls as f64)
+                .metric("avg_effective_batch", r.avg_effective_batch)
+                .metric("p50_ms", r.p50_ms)
+                .metric("p95_ms", r.p95_ms)
+                .metric("wall_ms", r.wall_ms);
+            if r.allocs_per_tick_steady.is_finite() {
+                rec = rec.metric("allocs_per_tick_steady", r.allocs_per_tick_steady);
+            }
+            records.push(rec);
+        }
+        if sessions == 16 {
+            let fewer = cf.model_calls < rg.model_calls;
+            let batch_x = cf.avg_effective_batch / rg.avg_effective_batch.max(1e-9);
+            println!(
+                "  -> at 16 sessions: fused calls {} vs {} ({}), effective batch {:.2}x",
+                cf.model_calls,
+                rg.model_calls,
+                if fewer { "fewer" } else { "NOT fewer" },
+                batch_x
+            );
+        }
+    }
+    let path = std::path::Path::new("BENCH_concurrency.json");
+    match write_bench_json(path, "concurrency", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}

@@ -20,7 +20,9 @@ use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::model::StepModel;
 use retroserve::runtime::PjrtModel;
 use retroserve::search::policy::{ModelPolicy, OraclePolicy};
-use retroserve::search::{dfs::Dfs, retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock};
+use retroserve::search::{
+    dfs::Dfs, retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock,
+};
 use retroserve::tokenizer::Vocab;
 
 struct CondResult {
@@ -153,16 +155,17 @@ fn main() -> Result<()> {
 
     // Retro*, deadline 1
     eprintln!("condition: Retro* {}ms BS", d1);
-    let bs1 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "bs", &limits(d1))?;
+    let rs = RetroStar::new(1);
+    let bs1 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "bs", &limits(d1))?;
     eprintln!("condition: Retro* {}ms MSBS", d1);
-    let ms1 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "msbs", &limits(d1))?;
+    let ms1 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "msbs", &limits(d1))?;
     report(&format!("RETRO*, TIME LIMIT {:.0} SECONDS", d1 as f64 / 1e3), &bs1, &ms1);
 
     // Retro*, deadline 2
     eprintln!("condition: Retro* {}ms BS", d2);
-    let bs2 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "bs", &limits(d2))?;
+    let bs2 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "bs", &limits(d2))?;
     eprintln!("condition: Retro* {}ms MSBS", d2);
-    let ms2 = run_condition(&flags, &art, &vocab, &stock, &queries, &RetroStar::new(1), "msbs", &limits(d2))?;
+    let ms2 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "msbs", &limits(d2))?;
     report(&format!("RETRO*, TIME LIMIT {:.0} SECONDS", d2 as f64 / 1e3), &bs2, &ms2);
 
     Ok(())

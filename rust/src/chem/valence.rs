@@ -135,7 +135,10 @@ pub fn validate(m: &Molecule) -> Result<(), ChemError> {
                 });
             }
             if !ring_atom[v] {
-                return Err(ChemError::Valence { atom: v, msg: "aromatic atom outside ring".into() });
+                return Err(ChemError::Valence {
+                    atom: v,
+                    msg: "aromatic atom outside ring".into(),
+                });
             }
         } else if arom_bonds > 0 {
             return Err(ChemError::Valence {
@@ -237,7 +240,9 @@ mod tests {
     #[test]
     fn aromatic_sanity() {
         bad("cc"); // aromatic atoms not in a ring
-        bad("c1ccccc1c"); // dangling aromatic atom (1 aromatic bond... parses as single bond to ring, then c alone)
+        // dangling aromatic atom (1 aromatic bond... parses as single
+        // bond to ring, then c alone)
+        bad("c1ccccc1c");
         bad("C:C"); // aromatic bond between non-aromatic atoms
     }
 

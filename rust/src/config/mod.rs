@@ -156,10 +156,14 @@ pub struct ServeConfig {
     pub max_depth: usize,
     pub beam_width: usize,
     pub algo: String,
-    /// Dynamic batcher: max merged rows per model batch.
+    /// Continuous batcher: max requests merged into one decode task.
     pub batch_max: usize,
-    /// Dynamic batcher: max wait for more work, microseconds.
+    /// Continuous batcher: max idle wait for more work, microseconds.
     pub batch_wait_us: u64,
+    /// Continuous batcher: fused-call row budget per scheduler tick.
+    pub batch_rows: usize,
+    /// Expansion cache capacity (molecules, LRU).
+    pub cache_cap: usize,
     pub workers: usize,
 }
 
@@ -177,6 +181,8 @@ impl ServeConfig {
             algo: c.str_or("planner.algo", "retrostar"),
             batch_max: c.int_or("batcher.max_batch", 16) as usize,
             batch_wait_us: c.int_or("batcher.max_wait_us", 2000) as u64,
+            batch_rows: c.int_or("batcher.max_rows", 256) as usize,
+            cache_cap: c.int_or("batcher.cache_cap", 10_000) as usize,
             workers: c.int_or("server.workers", 4) as usize,
         }
     }
@@ -197,10 +203,11 @@ mod tests {
 
     #[test]
     fn parse_sections_and_types() {
-        let c = Config::parse(
-            "top = 1\n[server]\nlisten = \"0.0.0.0:9999\"\nworkers = 8\n# comment\n[planner]\ndecoder = msbs\nnucleus = 0.9975\nuse_cache = true\n",
-        )
-        .unwrap();
+        let text = concat!(
+            "top = 1\n[server]\nlisten = \"0.0.0.0:9999\"\nworkers = 8\n",
+            "# comment\n[planner]\ndecoder = msbs\nnucleus = 0.9975\nuse_cache = true\n",
+        );
+        let c = Config::parse(text).unwrap();
         assert_eq!(c.int_or("top", 0), 1);
         assert_eq!(c.str_or("server.listen", ""), "0.0.0.0:9999");
         assert_eq!(c.int_or("server.workers", 0), 8);

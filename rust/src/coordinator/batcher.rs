@@ -1,18 +1,30 @@
-//! The dynamic batcher: merges single-step expansion requests from all
-//! in-flight planning sessions into batched decoder calls.
+//! The continuous batcher: merges single-step expansion requests from
+//! all in-flight planning sessions into *cycle-level* fused decoder
+//! calls.
 //!
-//! Requests arrive on a channel; the hub thread drains up to
-//! `max_batch` of them (waiting at most `max_wait` for stragglers),
-//! deduplicates identical molecules, runs ONE decoder group call, and
-//! fans the parsed proposals back out. A shared expansion cache
-//! short-circuits repeat molecules across sessions.
+//! Requests arrive on a channel. Cache hits answer immediately. Misses
+//! are grouped (per drain) into one resumable decode task and submitted
+//! to a [`DecodeScheduler`]; the hub thread then ticks the scheduler —
+//! ONE fused `decode` per tick across *all* in-flight tasks — so a
+//! request that arrives while earlier expansions are mid-decode joins
+//! the very next device call instead of queueing behind a whole
+//! multi-cycle `generate`. Finished tasks fan their parsed proposals
+//! back out and populate the shared cache.
+//!
+//! The expansion cache is a bounded [`LruCache`] keyed by *molecule*
+//! (not `(molecule, k)`): an entry decoded at k' serves any request with
+//! k <= k' by truncation, and a larger-k request replaces the entry —
+//! the same molecule is never re-decoded just because co-batched k
+//! differed, and sustained traffic cannot leak memory.
 
+use crate::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
 use crate::decoding::{DecodeStats, Decoder};
 use crate::metrics::Metrics;
 use crate::model::StepModel;
-use crate::search::policy::{proposals_from_output, Proposal};
+use crate::search::policy::{proposals_from_output, Proposal, DEFAULT_CACHE_CAP};
 use crate::search::ExpansionPolicy;
 use crate::tokenizer::Vocab;
+use crate::util::lru::LruCache;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -30,21 +42,52 @@ pub struct ExpansionHub {
     stats: Arc<Mutex<DecodeStats>>,
     pub invalid: Arc<AtomicUsize>,
     pub total_hyps: Arc<AtomicUsize>,
+    /// Decode tasks submitted (each merges >= 1 request).
     batches: Arc<AtomicU64>,
+    /// Requests admitted.
     merged: Arc<AtomicU64>,
+    /// Fused device calls / fused logical rows (cycle-level batching).
+    fused_calls: Arc<AtomicU64>,
+    fused_rows: Arc<AtomicU64>,
 }
 
 /// Batcher tuning knobs.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
+    /// Most requests drained into one decode task (one encode group).
     pub max_batch: usize,
+    /// How long an *idle* hub waits for stragglers before the first
+    /// tick. While decoding, arrivals are drained non-blockingly and
+    /// join the next tick anyway.
     pub max_wait: std::time::Duration,
+    /// Fused-call row budget per scheduler tick.
+    pub max_rows: usize,
+    /// Expansion-cache capacity (molecules, LRU).
+    pub cache_cap: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 16, max_wait: std::time::Duration::from_micros(2000) }
+        Self {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_micros(2000),
+            max_rows: 256,
+            cache_cap: DEFAULT_CACHE_CAP,
+        }
     }
+}
+
+/// A cached expansion: proposals decoded at beam width `k` (serves any
+/// request with a smaller or equal k by truncation).
+struct CachedExpansion {
+    k: usize,
+    props: Vec<Proposal>,
+}
+
+/// In-flight bookkeeping for one submitted decode task.
+struct TaskMeta {
+    mols: Vec<String>,
+    k: usize,
 }
 
 impl ExpansionHub {
@@ -66,93 +109,49 @@ impl ExpansionHub {
         let total = Arc::new(AtomicUsize::new(0));
         let batches = Arc::new(AtomicU64::new(0));
         let merged = Arc::new(AtomicU64::new(0));
+        let fused_calls = Arc::new(AtomicU64::new(0));
+        let fused_rows = Arc::new(AtomicU64::new(0));
         {
             let stats = stats.clone();
             let invalid = invalid.clone();
             let total = total.clone();
             let batches = batches.clone();
             let merged = merged.clone();
+            let fused_calls = fused_calls.clone();
+            let fused_rows = fused_rows.clone();
             std::thread::Builder::new()
                 .name("expansion-hub".into())
                 .spawn(move || {
-                    let mut cache: HashMap<(String, usize), Vec<Proposal>> = HashMap::new();
-                    while let Ok(first) = rx.recv() {
-                        // gather a batch
-                        let mut batch = vec![first];
-                        let deadline = std::time::Instant::now() + cfg.max_wait;
-                        while batch.len() < cfg.max_batch {
-                            let now = std::time::Instant::now();
-                            if now >= deadline {
-                                break;
-                            }
-                            match rx.recv_timeout(deadline - now) {
-                                Ok(r) => batch.push(r),
-                                Err(_) => break,
-                            }
-                        }
-                        batches.fetch_add(1, Ordering::Relaxed);
-                        merged.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                        // serve from cache / dedupe
-                        let k_max = batch.iter().map(|r| r.k).max().unwrap_or(1);
-                        let mut unique: Vec<String> = Vec::new();
-                        let mut slot_of: HashMap<String, usize> = HashMap::new();
-                        for r in &batch {
-                            if cache.contains_key(&(r.smiles.clone(), k_max)) {
-                                continue;
-                            }
-                            if !slot_of.contains_key(&r.smiles) {
-                                slot_of.insert(r.smiles.clone(), unique.len());
-                                unique.push(r.smiles.clone());
-                            }
-                        }
-                        if !unique.is_empty() {
-                            let srcs: Vec<Vec<i32>> =
-                                unique.iter().map(|s| vocab.encode(s, true)).collect();
-                            let mut st = stats.lock().unwrap();
-                            metrics.inc("batcher.model_batches", 1);
-                            metrics.inc("batcher.model_rows", unique.len() as u64);
-                            let t0 = std::time::Instant::now();
-                            let result = decoder.generate(&model, &srcs, k_max, &mut st);
-                            drop(st);
-                            metrics.observe("batcher.decode", t0.elapsed().as_secs_f64());
-                            match result {
-                                Ok(outs) => {
-                                    for (s, gen) in unique.iter().zip(outs.iter()) {
-                                        let mut inv = 0usize;
-                                        let mut tot = 0usize;
-                                        let props = proposals_from_output(
-                                            &vocab, s, gen, &mut inv, &mut tot,
-                                        );
-                                        invalid.fetch_add(inv, Ordering::Relaxed);
-                                        total.fetch_add(tot, Ordering::Relaxed);
-                                        cache.insert((s.clone(), k_max), props);
-                                    }
-                                }
-                                Err(e) => {
-                                    let msg = format!("{e:#}");
-                                    for r in batch {
-                                        let _ = r
-                                            .reply
-                                            .send(Err(anyhow::anyhow!("decode failed: {msg}")));
-                                    }
-                                    continue;
-                                }
-                            }
-                        }
-                        for r in batch {
-                            let props = cache
-                                .get(&(r.smiles.clone(), k_max))
-                                .cloned()
-                                .unwrap_or_default();
-                            let mut out = props;
-                            out.truncate(r.k);
-                            let _ = r.reply.send(Ok(out));
-                        }
-                    }
+                    hub_loop(
+                        rx,
+                        model,
+                        decoder,
+                        vocab,
+                        cfg,
+                        metrics,
+                        HubCounters {
+                            stats,
+                            invalid,
+                            total,
+                            batches,
+                            merged,
+                            fused_calls,
+                            fused_rows,
+                        },
+                    )
                 })
                 .expect("spawn expansion hub");
         }
-        Arc::new(ExpansionHub { tx, stats, invalid, total_hyps: total, batches, merged })
+        Arc::new(ExpansionHub {
+            tx,
+            stats,
+            invalid,
+            total_hyps: total,
+            batches,
+            merged,
+            fused_calls,
+            fused_rows,
+        })
     }
 
     /// Blocking single-molecule expansion (used by the `expand` op).
@@ -168,9 +167,280 @@ impl ExpansionHub {
         self.stats.lock().unwrap().clone()
     }
 
-    /// (model batches run, requests merged into them).
+    /// (decode tasks submitted, requests merged into them).
     pub fn merge_ratio(&self) -> (u64, u64) {
         (self.batches.load(Ordering::Relaxed), self.merged.load(Ordering::Relaxed))
+    }
+
+    /// (fused device calls, fused logical rows): the cycle-level
+    /// batching counters; rows/calls is the serving effective batch.
+    pub fn fused_ratio(&self) -> (u64, u64) {
+        (
+            self.fused_calls.load(Ordering::Relaxed),
+            self.fused_rows.load(Ordering::Relaxed),
+        )
+    }
+}
+
+struct HubCounters {
+    stats: Arc<Mutex<DecodeStats>>,
+    invalid: Arc<AtomicUsize>,
+    total: Arc<AtomicUsize>,
+    batches: Arc<AtomicU64>,
+    merged: Arc<AtomicU64>,
+    fused_calls: Arc<AtomicU64>,
+    fused_rows: Arc<AtomicU64>,
+}
+
+/// A queued requester: requested beam width + reply channel.
+type Waiter = (usize, mpsc::SyncSender<Result<Vec<Proposal>>>);
+
+/// Mutable per-loop state: waiters and in-flight coverage.
+struct HubState {
+    cache: LruCache<String, CachedExpansion>,
+    /// Requests not yet answered, per molecule.
+    waiting: HashMap<String, Vec<Waiter>>,
+    /// Max beam width currently being decoded per molecule.
+    covered: HashMap<String, usize>,
+    /// Misses gathered this round, unique by molecule.
+    to_submit: Vec<(String, usize)>,
+}
+
+impl HubState {
+    /// Serve a request from cache or queue it (possibly scheduling a
+    /// decode for this round).
+    fn admit(&mut self, req: ExpandReq) {
+        if let Some(c) = self.cache.get(&req.smiles) {
+            if c.k >= req.k {
+                let mut out = c.props.clone();
+                out.truncate(req.k);
+                let _ = req.reply.send(Ok(out));
+                return;
+            }
+        }
+        let in_flight_covers = self.covered.get(&req.smiles).is_some_and(|&ck| ck >= req.k);
+        if !in_flight_covers {
+            if let Some(e) = self.to_submit.iter_mut().find(|(m, _)| *m == req.smiles) {
+                e.1 = e.1.max(req.k);
+            } else {
+                self.to_submit.push((req.smiles.clone(), req.k));
+            }
+        }
+        self.waiting.entry(req.smiles).or_default().push((req.k, req.reply));
+    }
+
+    /// Fail every queued request (scheduler abort path).
+    fn fail_all(&mut self, msg: &str) {
+        for (_, ws) in self.waiting.drain() {
+            for (_, reply) in ws {
+                let _ = reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
+            }
+        }
+        self.covered.clear();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hub_loop<M: StepModel>(
+    rx: mpsc::Receiver<ExpandReq>,
+    model: M,
+    decoder: Box<dyn Decoder + Send>,
+    vocab: Vocab,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+    counters: HubCounters,
+) {
+    let mut scheduler = DecodeScheduler::new(SchedulerConfig { max_rows: cfg.max_rows });
+    let mut state = HubState {
+        cache: LruCache::new(cfg.cache_cap),
+        waiting: HashMap::new(),
+        covered: HashMap::new(),
+        to_submit: Vec::new(),
+    };
+    let mut tasks_meta: HashMap<TaskId, TaskMeta> = HashMap::new();
+    let mut finished: Vec<Finished> = Vec::new();
+    let mut open = true;
+
+    while open || !scheduler.is_idle() || !state.waiting.is_empty() {
+        // ---- 1. gather requests ----
+        state.to_submit.clear();
+        if open && scheduler.is_idle() && state.waiting.is_empty() {
+            // Idle: block for the next request, then give stragglers a
+            // short window so simultaneous arrivals share one encode.
+            match rx.recv() {
+                Ok(r) => {
+                    counters.merged.fetch_add(1, Ordering::Relaxed);
+                    state.admit(r);
+                    let deadline = std::time::Instant::now() + cfg.max_wait;
+                    let mut n = 1;
+                    while n < cfg.max_batch {
+                        let now = std::time::Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(r) => {
+                                counters.merged.fetch_add(1, Ordering::Relaxed);
+                                state.admit(r);
+                                n += 1;
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        } else {
+            // Busy: drain without blocking — late arrivals join the
+            // very next fused call.
+            let mut drained = 0;
+            while drained < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(r) => {
+                        counters.merged.fetch_add(1, Ordering::Relaxed);
+                        state.admit(r);
+                        drained += 1;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // ---- 2. submit this round's misses as one task ----
+        if !state.to_submit.is_empty() {
+            let k_max = state.to_submit.iter().map(|(_, k)| *k).max().unwrap_or(1);
+            let mols: Vec<String> = state.to_submit.iter().map(|(m, _)| m.clone()).collect();
+            let srcs: Vec<Vec<i32>> = mols.iter().map(|s| vocab.encode(s, true)).collect();
+            match decoder.start_task(&model, &srcs, k_max) {
+                Ok(task) => {
+                    let id = scheduler.submit(task);
+                    counters.batches.fetch_add(1, Ordering::Relaxed);
+                    metrics.inc("batcher.tasks", 1);
+                    metrics.inc("batcher.task_molecules", mols.len() as u64);
+                    for m in &mols {
+                        let e = state.covered.entry(m.clone()).or_insert(0);
+                        *e = (*e).max(k_max);
+                    }
+                    tasks_meta.insert(id, TaskMeta { mols, k: k_max });
+                }
+                Err(e) => {
+                    // Encode failed: fail only the waiters this round's
+                    // task would have served (anything still covered by
+                    // an older in-flight task keeps waiting).
+                    let msg = format!("{e:#}");
+                    for (m, _) in std::mem::take(&mut state.to_submit) {
+                        let ck = state.covered.get(&m).copied().unwrap_or(0);
+                        if let Some(ws) = state.waiting.remove(&m) {
+                            let mut kept = Vec::new();
+                            for (wk, reply) in ws {
+                                if wk > ck {
+                                    let _ = reply
+                                        .send(Err(anyhow::anyhow!("encode failed: {msg}")));
+                                } else {
+                                    kept.push((wk, reply));
+                                }
+                            }
+                            if !kept.is_empty() {
+                                state.waiting.insert(m, kept);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- 3. one fused tick ----
+        if scheduler.is_idle() {
+            if !state.waiting.is_empty() {
+                // Unreachable by construction (waiters always have a
+                // covering task); fail loudly instead of spinning.
+                state.fail_all("internal: waiters without an in-flight task");
+            }
+            continue;
+        }
+        finished.clear();
+        let t_tick = std::time::Instant::now();
+        match scheduler.tick(&model, &mut finished) {
+            Ok(rows) => {
+                if rows > 0 {
+                    counters.fused_calls.fetch_add(1, Ordering::Relaxed);
+                    counters.fused_rows.fetch_add(rows as u64, Ordering::Relaxed);
+                    metrics.inc("batcher.fused_calls", 1);
+                    metrics.inc("batcher.fused_rows", rows as u64);
+                    // A rows>0 tick is dominated by its one fused device
+                    // call: this histogram replaces the old whole-
+                    // `generate` "batcher.decode" timing at cycle
+                    // granularity.
+                    metrics.observe("batcher.decode", t_tick.elapsed().as_secs_f64());
+                }
+                for f in finished.drain(..) {
+                    let meta = tasks_meta.remove(&f.id).expect("task bookkeeping");
+                    counters.stats.lock().unwrap().merge(&f.stats);
+                    retire_task(&meta, &f, &vocab, &mut state, &counters);
+                }
+            }
+            Err(e) => {
+                // A fused call failed: every in-flight task shared it,
+                // so fail all waiters and reset.
+                let msg = format!("{e:#}");
+                scheduler.abort(&model);
+                tasks_meta.clear();
+                state.fail_all(&msg);
+            }
+        }
+    }
+}
+
+/// Parse a finished task's outputs, populate the cache, and answer every
+/// waiter the task covers.
+fn retire_task(
+    meta: &TaskMeta,
+    f: &Finished,
+    vocab: &Vocab,
+    state: &mut HubState,
+    counters: &HubCounters,
+) {
+    for (mol, gen) in meta.mols.iter().zip(f.outputs.iter()) {
+        let mut inv = 0usize;
+        let mut tot = 0usize;
+        let props = proposals_from_output(vocab, mol, gen, &mut inv, &mut tot);
+        counters.invalid.fetch_add(inv, Ordering::Relaxed);
+        counters.total.fetch_add(tot, Ordering::Relaxed);
+        let stale = state.cache.get(mol).is_none_or(|c| c.k <= meta.k);
+        if stale {
+            state.cache.insert(mol.clone(), CachedExpansion { k: meta.k, props: props.clone() });
+        }
+        if let Some(ws) = state.waiting.remove(mol) {
+            let mut kept = Vec::new();
+            for (wk, reply) in ws {
+                if wk <= meta.k {
+                    let mut out = props.clone();
+                    out.truncate(wk);
+                    let _ = reply.send(Ok(out));
+                } else {
+                    // A wider request for the same molecule is covered
+                    // by a younger, larger-k task still in flight.
+                    kept.push((wk, reply));
+                }
+            }
+            if !kept.is_empty() {
+                state.waiting.insert(mol.clone(), kept);
+            }
+        }
+        if state.covered.get(mol).is_some_and(|&ck| ck <= meta.k) {
+            state.covered.remove(mol);
+        }
     }
 }
 
@@ -230,7 +500,11 @@ mod tests {
             model,
             Box::new(BeamSearch::optimized()),
             vocab,
-            BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(5) },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(5),
+                ..Default::default()
+            },
             Arc::new(Metrics::new()),
         )
     }
@@ -246,6 +520,48 @@ mod tests {
         let p2 = h.expand("CC(=O)O.CN", 3).unwrap();
         assert_eq!(p1, p2);
         assert_eq!(h.stats().model_calls, calls_before, "cache must serve repeats");
+    }
+
+    #[test]
+    fn cache_serves_smaller_k_and_redecodes_larger() {
+        let h = hub();
+        let p5 = h.expand("CC(=O)O.CN", 5).unwrap();
+        let calls_after_first = h.stats().model_calls;
+        // smaller k: truncation of the stored expansion, no decode
+        let p2 = h.expand("CC(=O)O.CN", 2).unwrap();
+        assert_eq!(h.stats().model_calls, calls_after_first, "k<=stored must hit");
+        assert!(p2.len() <= 2);
+        assert_eq!(&p5[..p2.len()], &p2[..]);
+        // larger k: must re-decode
+        let _p8 = h.expand("CC(=O)O.CN", 8).unwrap();
+        assert!(h.stats().model_calls > calls_after_first, "k>stored must miss");
+        // and the cache now stores the larger entry
+        let calls = h.stats().model_calls;
+        let _ = h.expand("CC(=O)O.CN", 8).unwrap();
+        assert_eq!(h.stats().model_calls, calls);
+    }
+
+    #[test]
+    fn cache_is_bounded() {
+        let vocab = Vocab::build(["CC(=O)O.CN", "CC(=O)NC", "CCO", "CCN", "CCC"]);
+        let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+        let h = ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig { cache_cap: 2, ..Default::default() },
+            Arc::new(Metrics::new()),
+        );
+        for m in ["CCO", "CCN", "CCC", "CC(=O)NC"] {
+            let _ = h.expand(m, 2).unwrap();
+        }
+        // most-recent entry still hits
+        let calls = h.stats().model_calls;
+        let _ = h.expand("CC(=O)NC", 2).unwrap();
+        assert_eq!(h.stats().model_calls, calls);
+        // evicted entry recomputes
+        let _ = h.expand("CCO", 2).unwrap();
+        assert!(h.stats().model_calls > calls);
     }
 
     #[test]
@@ -265,6 +581,26 @@ mod tests {
         let (batches, merged) = h.merge_ratio();
         assert!(merged >= 4);
         assert!(batches <= merged, "batches {batches} merged {merged}");
+    }
+
+    #[test]
+    fn concurrent_distinct_molecules_fuse_calls() {
+        let h = hub();
+        let mols = ["CC(=O)O.CN", "CC(=O)NC", "CCO"];
+        let mut joins = Vec::new();
+        for m in mols {
+            let hc = h.clone();
+            joins.push(std::thread::spawn(move || hc.expand(m, 3).unwrap()));
+        }
+        for j in joins {
+            let _ = j.join().unwrap();
+        }
+        let (fused_calls, fused_rows) = h.fused_ratio();
+        assert!(fused_calls > 0);
+        assert!(fused_rows >= fused_calls, "rows {fused_rows} calls {fused_calls}");
+        // Solo per-molecule decoding would have cost at least as many
+        // device calls as the hub's fused path.
+        assert!(h.stats().model_calls >= fused_calls);
     }
 
     #[test]

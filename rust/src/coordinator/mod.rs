@@ -6,9 +6,10 @@
 //! TCP clients ──► server (thread per connection)
 //!                    │  plan/expand requests
 //!                    ▼
-//!              ExpansionHub (dynamic batcher): merges single-step
-//!                    │  expansion calls from all in-flight planning
-//!                    │  sessions into batched decoder calls
+//!              ExpansionHub (continuous batcher): expansion requests
+//!                    │  become resumable decode tasks; a
+//!                    │  DecodeScheduler fuses all in-flight tasks'
+//!                    │  rows into ONE device call per decode cycle
 //!                    ▼
 //!              SharedModel (model-executor thread)
 //!                    ▼
@@ -17,9 +18,11 @@
 //!
 //! Cross-tree batching is the paper's closing "future work" realized:
 //! AiZynthFinder calls its model with batch size 1; here concurrent
-//! planning sessions share model batches, so the effective batch grows
-//! with server load (and MSBS keeps its advantage at those batch sizes —
-//! Table 1's scalability column is the mechanism).
+//! planning sessions share *decode cycles*, not just request batches —
+//! a request that arrives mid-decode joins the very next device call,
+//! so the effective batch stays high even as earlier requests' beams
+//! finish (Table 1's scalability column is the mechanism; Table 1C's
+//! effective-batch decay is what the fusion removes).
 
 pub mod batcher;
 pub mod protocol;

@@ -114,7 +114,11 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
     let op = req.get("op").and_then(|x| x.as_str()).unwrap_or("");
     ctx.metrics.inc(&format!("op.{op}"), 1);
     match op {
-        "ping" => Json::obj(vec![("id", Json::num(id as f64)), ("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        "ping" => Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("ok", Json::Bool(true)),
+            ("pong", Json::Bool(true)),
+        ]),
         "metrics" => {
             let mut m = ctx.metrics.snapshot();
             if let Json::Obj(ref mut o) = m {
@@ -123,6 +127,9 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                 let (batches, merged) = ctx.hub.merge_ratio();
                 o.insert("batcher_batches".into(), Json::num(batches as f64));
                 o.insert("batcher_merged".into(), Json::num(merged as f64));
+                let (fused_calls, fused_rows) = ctx.hub.fused_ratio();
+                o.insert("batcher_fused_calls".into(), Json::num(fused_calls as f64));
+                o.insert("batcher_fused_rows".into(), Json::num(fused_rows as f64));
             }
             m
         }

@@ -15,10 +15,19 @@
 //! deduplicate candidates without ever materializing or cloning a token
 //! vector.
 //!
-//! The arena is append-only and lives for one `generate` call: nodes of
-//! discarded candidates are retained (24 bytes each) and reclaimed in
-//! bulk when the arena drops — the classic trade of a little memory for
-//! zero per-candidate allocation.
+//! The arena is append-only *within* a decode cycle: nodes of discarded
+//! candidates are retained (24 bytes each) until either the arena drops
+//! or the owning task runs a **compaction** between cycles
+//! ([`TokenArena::compact_begin`] / [`TokenArena::compact_mark`] /
+//! [`TokenArena::compact_finish`]): live chains — the current beams and
+//! their ancestors — are copied into a fresh node table (ancestor-first,
+//! so parents always precede children), ids are remapped through a
+//! reusable [`CompactScratch`], and everything else is dropped in bulk.
+//! Chain hashes, lengths and tokens are preserved verbatim, so dedup and
+//! parity semantics are unaffected; the swap keeps both buffers'
+//! capacity, so steady-state compaction allocates nothing. This bounds
+//! arena growth on long sequences / huge K instead of retaining every
+//! discarded candidate for a whole `generate`/task lifetime.
 
 /// Index of a node in a [`TokenArena`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -147,6 +156,64 @@ impl TokenArena {
         self.materialize_into(id, &mut out);
         out
     }
+
+    /// Start a compaction pass: reset `scratch`'s remap table for this
+    /// arena's current node count.
+    pub fn compact_begin(&self, scratch: &mut CompactScratch) {
+        scratch.remap.clear();
+        scratch.remap.resize(self.nodes.len(), NIL);
+        scratch.nodes.clear();
+        scratch.stack.clear();
+    }
+
+    /// Mark the chain ending at `id` (the node and all its ancestors) as
+    /// live, assigning new ids ancestor-first. Idempotent per node:
+    /// chains shared between marked beams are copied once.
+    pub fn compact_mark(&self, scratch: &mut CompactScratch, id: NodeId) {
+        let mut cur = id.0;
+        while cur != NIL && scratch.remap[cur as usize] == NIL {
+            scratch.stack.push(cur);
+            cur = self.nodes[cur as usize].parent;
+        }
+        while let Some(old) = scratch.stack.pop() {
+            let n = self.nodes[old as usize];
+            let parent = if n.parent == NIL { NIL } else { scratch.remap[n.parent as usize] };
+            scratch.remap[old as usize] = scratch.nodes.len() as u32;
+            scratch.nodes.push(Node { parent, ..n });
+        }
+    }
+
+    /// Swap the compacted node table in. Old ids stay translatable via
+    /// [`CompactScratch::remapped`] until the next `compact_begin`; the
+    /// old buffer becomes the scratch's spare (capacity retained).
+    pub fn compact_finish(&mut self, scratch: &mut CompactScratch) {
+        std::mem::swap(&mut self.nodes, &mut scratch.nodes);
+    }
+}
+
+/// Reusable buffers for [`TokenArena`] compaction. One per decode task;
+/// all three vectors keep their capacity across passes.
+#[derive(Default)]
+pub struct CompactScratch {
+    /// old node id -> new node id (`NIL` = dead).
+    remap: Vec<u32>,
+    stack: Vec<u32>,
+    nodes: Vec<Node>,
+}
+
+impl CompactScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Translate a pre-compaction id to its post-compaction id. The id
+    /// must have been marked live in the pass that just finished.
+    #[inline]
+    pub fn remapped(&self, id: NodeId) -> NodeId {
+        let new = self.remap[id.0 as usize];
+        debug_assert!(new != NIL, "remapping a dead node");
+        NodeId(new)
+    }
 }
 
 impl Default for TokenArena {
@@ -212,6 +279,78 @@ mod tests {
         assert!(!a.seq_eq(x, w));
         // Different lengths never compare equal.
         assert!(!a.seq_eq(x, p1));
+    }
+
+    #[test]
+    fn compact_keeps_live_chains_and_drops_the_rest() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        let keep1 = a.push(r, 5);
+        let keep2 = a.push(keep1, 6);
+        let dead = a.push(r, 7);
+        let _dead2 = a.push(dead, 8);
+        let keep3 = a.push(r, 9); // second live branch sharing the root
+        assert_eq!(a.node_count(), 6);
+        let (h2, h3) = (a.seq_hash(keep2), a.seq_hash(keep3));
+
+        let mut s = CompactScratch::new();
+        a.compact_begin(&mut s);
+        a.compact_mark(&mut s, keep2);
+        a.compact_mark(&mut s, keep3);
+        a.compact_finish(&mut s);
+
+        // live: root, keep1, keep2, keep3 — dead branch gone
+        assert_eq!(a.node_count(), 4);
+        let k2 = s.remapped(keep2);
+        let k3 = s.remapped(keep3);
+        assert_eq!(a.tokens(k2), vec![1, 5, 6]);
+        assert_eq!(a.tokens(k3), vec![1, 9]);
+        assert_eq!(a.seq_hash(k2), h2, "chain hashes preserved");
+        assert_eq!(a.seq_hash(k3), h3);
+        assert_eq!(a.len(k2), 3);
+        assert_eq!(a.last_tok(k2), 6);
+        // the arena stays usable: push onto a remapped node
+        let grown = a.push(k2, 11);
+        assert_eq!(a.tokens(grown), vec![1, 5, 6, 11]);
+    }
+
+    #[test]
+    fn compact_is_idempotent_for_shared_prefixes() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        let x = a.push(r, 5);
+        let y = a.push(x, 6);
+        let mut s = CompactScratch::new();
+        a.compact_begin(&mut s);
+        a.compact_mark(&mut s, y);
+        a.compact_mark(&mut s, y); // double-mark: copied once
+        a.compact_mark(&mut s, x); // ancestor already live
+        a.compact_finish(&mut s);
+        assert_eq!(a.node_count(), 3);
+        assert_eq!(a.tokens(s.remapped(y)), vec![1, 5, 6]);
+        assert_eq!(a.tokens(s.remapped(x)), vec![1, 5]);
+    }
+
+    #[test]
+    fn compact_scratch_buffers_are_reused() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        let mut tip = r;
+        for t in 0..32 {
+            tip = a.push(tip, t);
+        }
+        let mut s = CompactScratch::new();
+        a.compact_begin(&mut s);
+        a.compact_mark(&mut s, tip);
+        a.compact_finish(&mut s);
+        tip = s.remapped(tip);
+        let remap_ptr = s.remap.as_ptr();
+        // A second pass over a same-sized arena must not reallocate.
+        a.compact_begin(&mut s);
+        a.compact_mark(&mut s, tip);
+        a.compact_finish(&mut s);
+        assert_eq!(remap_ptr, s.remap.as_ptr());
+        assert_eq!(a.node_count(), 33);
     }
 
     #[test]

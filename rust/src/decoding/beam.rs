@@ -11,11 +11,19 @@
 //! [`ScoringScratch`], and candidate rows recycle their buffers via
 //! [`RowBuf`] — steady-state cycles perform no heap allocation on the
 //! host side.
+//!
+//! The algorithm itself lives in [`BeamTask`], a resumable
+//! [`DecodeTask`]: one `next_rows`/`absorb` round trip per beam step.
+//! `BeamSearch::generate` is the solo driver over it; the fused
+//! [`super::scheduler::DecodeScheduler`] interleaves many such tasks.
 
-use super::arena::TokenArena;
-use super::{finalize, Beam, CandidatePool, DecodeStats, Decoder, GenOutput, RowBuf};
+use super::arena::{CompactScratch, TokenArena};
+use super::{
+    compact_beams, finalize, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput,
+    RowBuf, TaskState, COMPACT_MIN,
+};
 use crate::model::scratch::ScoringScratch;
-use crate::model::StepModel;
+use crate::model::{DecodeOut, MemHandle, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -45,114 +53,157 @@ impl Decoder for BeamSearch {
         }
     }
 
-    fn generate(
+    fn start_task(
         &self,
         model: &dyn StepModel,
         srcs: &[Vec<i32>],
         k: usize,
-        stats: &mut DecodeStats,
-    ) -> Result<Vec<GenOutput>> {
-        let t0 = std::time::Instant::now();
+    ) -> Result<Box<dyn DecodeTask>> {
         let mem = model.encode(srcs)?;
-        stats.encode_calls += 1;
-        let max_len = model.max_tgt();
-
         // Per query: K beams. Step 0 starts from a single root beam; the
         // vanilla variant still submits K duplicate rows to keep the
         // effective batch at B*K from the start (naive-implementation
         // faithful).
         let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
         let root = Beam::root(&mut arena);
-        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![root]).collect();
-        let mut done: Vec<bool> = vec![false; srcs.len()];
+        Ok(Box::new(BeamTask {
+            optimized: self.optimized,
+            k,
+            max_len: model.max_tgt(),
+            mem,
+            arena,
+            beams: srcs.iter().map(|_| vec![root]).collect(),
+            done: vec![false; srcs.len()],
+            scratch: ScoringScratch::new(),
+            row_of: Vec::new(),
+            pools: (0..srcs.len()).map(|_| CandidatePool::new(k)).collect(),
+            next: Vec::with_capacity(k),
+            stats: DecodeStats { encode_calls: 1, ..Default::default() },
+            compact: CompactScratch::new(),
+            compact_at: COMPACT_MIN,
+        }))
+    }
+}
 
-        let mut scratch = ScoringScratch::new();
-        let mut rowbuf = RowBuf::new();
-        // (query, beam index) per row, for scatter-back.
-        let mut row_of: Vec<(usize, usize)> = Vec::new();
-        let mut pools: Vec<CandidatePool> =
-            (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
-        let mut next: Vec<Beam> = Vec::with_capacity(k);
+/// Resumable beam-search state: one `next_rows`/`absorb` round trip per
+/// beam step.
+pub struct BeamTask {
+    optimized: bool,
+    k: usize,
+    max_len: usize,
+    mem: MemHandle,
+    arena: TokenArena,
+    beams: Vec<Vec<Beam>>,
+    done: Vec<bool>,
+    scratch: ScoringScratch,
+    /// (query, beam index) per row, for scatter-back.
+    row_of: Vec<(usize, usize)>,
+    pools: Vec<CandidatePool>,
+    next: Vec<Beam>,
+    stats: DecodeStats,
+    compact: CompactScratch,
+    compact_at: usize,
+}
 
-        while !done.iter().all(|&d| d) {
-            // Build rows.
-            rowbuf.begin();
-            row_of.clear();
-            for (q, qbeams) in beams.iter().enumerate() {
-                if done[q] && self.optimized {
+impl DecodeTask for BeamTask {
+    fn next_rows(&mut self, rows: &mut RowBuf) -> TaskState {
+        if self.done.iter().all(|&d| d) {
+            return TaskState::Done;
+        }
+        self.row_of.clear();
+        let before = rows.len();
+        for (q, qbeams) in self.beams.iter().enumerate() {
+            if self.done[q] && self.optimized {
+                continue;
+            }
+            for (bi, b) in qbeams.iter().enumerate() {
+                if self.optimized && b.finished {
                     continue;
                 }
-                for (bi, b) in qbeams.iter().enumerate() {
-                    if self.optimized && b.finished {
-                        continue;
-                    }
-                    let live_row = !b.finished;
-                    // Vanilla: submit rows even for finished beams/queries.
-                    if !self.optimized || live_row {
-                        rowbuf.push_row(&arena, mem, q, b.node, &[]);
-                        row_of.push((q, bi));
-                    }
-                }
-                // Vanilla duplicates the root beam K times on the first step.
-                if !self.optimized && qbeams.len() == 1 && !qbeams[0].finished {
-                    for _ in 1..k {
-                        rowbuf.push_row(&arena, mem, q, qbeams[0].node, &[]);
-                        row_of.push((q, usize::MAX)); // duplicate; ignored
-                    }
+                let live_row = !b.finished;
+                // Vanilla: submit rows even for finished beams/queries.
+                if !self.optimized || live_row {
+                    rows.push_row(&self.arena, self.mem, q, b.node, &[]);
+                    self.row_of.push((q, bi));
                 }
             }
-            if rowbuf.is_empty() {
-                break;
-            }
-            let out = model.decode(&rowbuf.rows, 1)?;
-            stats.model_calls += 1;
-            stats.rows_logical += rowbuf.len() as u64;
-            stats.rows_padded += out.padded_rows as u64;
-
-            // Expand each query.
-            for pool in pools.iter_mut() {
-                pool.reset();
-            }
-            // carry forward finished beams as candidates
-            for (q, qbeams) in beams.iter().enumerate() {
-                for b in qbeams {
-                    if b.finished {
-                        pools[q].push(*b);
-                    }
+            // Vanilla duplicates the root beam K times on the first step.
+            if !self.optimized && qbeams.len() == 1 && !qbeams[0].finished {
+                for _ in 1..self.k {
+                    rows.push_row(&self.arena, self.mem, q, qbeams[0].node, &[]);
+                    self.row_of.push((q, usize::MAX)); // duplicate; ignored
                 }
-            }
-            for (r, &(q, bi)) in row_of.iter().enumerate() {
-                if bi == usize::MAX {
-                    continue; // first-step duplicate row
-                }
-                let b = beams[q][bi];
-                if b.finished {
-                    continue; // vanilla submitted it; result ignored
-                }
-                let j = out
-                    .offset_of(r, arena.len(b.node) - 1)
-                    .expect("window covers last position");
-                scratch.top_k_log_softmax(out.logits(r, j, 0), k);
-                for &tok in &scratch.topk {
-                    let node = arena.push(b.node, tok as i32);
-                    let finished = tok as i32 == EOS || arena.len(node) >= max_len;
-                    pools[q].push(Beam { node, logp: b.logp + scratch.lsm[tok], finished });
-                }
-            }
-            for (q, pool) in pools.iter_mut().enumerate() {
-                if done[q] {
-                    continue;
-                }
-                pool.take_into(&arena, &mut next);
-                if !next.is_empty() {
-                    std::mem::swap(&mut beams[q], &mut next);
-                }
-                done[q] = beams[q].iter().all(|b| b.finished);
             }
         }
-        model.release(mem);
-        stats.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(beams.iter().map(|qb| finalize(&arena, qb)).collect())
+        if rows.len() == before {
+            TaskState::Done
+        } else {
+            TaskState::Need { win: 1 }
+        }
+    }
+
+    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>) {
+        debug_assert_eq!(range.len(), self.row_of.len());
+        // Expand each query.
+        for pool in self.pools.iter_mut() {
+            pool.reset();
+        }
+        // carry forward finished beams as candidates
+        for (q, qbeams) in self.beams.iter().enumerate() {
+            for b in qbeams {
+                if b.finished {
+                    self.pools[q].push(*b);
+                }
+            }
+        }
+        for (r, &(q, bi)) in self.row_of.iter().enumerate() {
+            if bi == usize::MAX {
+                continue; // first-step duplicate row
+            }
+            let b = self.beams[q][bi];
+            if b.finished {
+                continue; // vanilla submitted it; result ignored
+            }
+            let gr = range.start + r;
+            let j = out
+                .offset_of(gr, self.arena.len(b.node) - 1)
+                .expect("window covers last position");
+            self.scratch.top_k_log_softmax(out.logits(gr, j, 0), self.k);
+            for &tok in &self.scratch.topk {
+                let node = self.arena.push(b.node, tok as i32);
+                let finished = tok as i32 == EOS || self.arena.len(node) >= self.max_len;
+                self.pools[q].push(Beam {
+                    node,
+                    logp: b.logp + self.scratch.lsm[tok],
+                    finished,
+                });
+            }
+        }
+        for (q, pool) in self.pools.iter_mut().enumerate() {
+            if self.done[q] {
+                continue;
+            }
+            pool.take_into(&self.arena, &mut self.next);
+            if !self.next.is_empty() {
+                std::mem::swap(&mut self.beams[q], &mut self.next);
+            }
+            self.done[q] = self.beams[q].iter().all(|b| b.finished);
+        }
+        compact_beams(&mut self.arena, &mut self.compact, &mut self.beams, &mut self.compact_at);
+    }
+
+    fn stats_mut(&mut self) -> &mut DecodeStats {
+        &mut self.stats
+    }
+
+    fn arena_nodes(&self) -> usize {
+        self.arena.node_count()
+    }
+
+    fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
+        model.release(self.mem);
+        let outs = self.beams.iter().map(|qb| finalize(&self.arena, qb)).collect();
+        (outs, self.stats)
     }
 }
 

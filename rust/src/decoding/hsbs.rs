@@ -18,11 +18,18 @@
 //! body (never copied), beams are [`TokenArena`] nodes, and the
 //! best-draft-per-beam selection is a single deterministic scan over
 //! the row metadata (rows for one beam are contiguous by construction).
+//!
+//! The algorithm lives in [`HsbsTask`], a resumable [`DecodeTask`]: one
+//! `next_rows`/`absorb` round trip per draft-and-verify step (HSBS
+//! verifies in the same call that scores, so one phase per cycle).
 
-use super::arena::TokenArena;
-use super::{finalize, Beam, CandidatePool, DecodeStats, Decoder, GenOutput, RowBuf};
+use super::arena::{CompactScratch, TokenArena};
+use super::{
+    compact_beams, finalize, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput,
+    RowBuf, TaskState, COMPACT_MIN,
+};
 use crate::model::scratch::ScoringScratch;
-use crate::model::{argmax, StepModel};
+use crate::model::{argmax, DecodeOut, MemHandle, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -98,176 +105,220 @@ impl Decoder for Hsbs {
         "hsbs"
     }
 
-    fn generate(
+    fn start_task(
         &self,
         model: &dyn StepModel,
         srcs: &[Vec<i32>],
         k: usize,
-        stats: &mut DecodeStats,
-    ) -> Result<Vec<GenOutput>> {
-        let t0 = std::time::Instant::now();
+    ) -> Result<Box<dyn DecodeTask>> {
         let mem = model.encode(srcs)?;
-        stats.encode_calls += 1;
-        let max_len = model.max_tgt();
-        let win = self.draft_len + 1;
-
         // Source bodies (without BOS/EOS) for drafting.
-        let bodies: Vec<&[i32]> = srcs
+        let bodies: Vec<Vec<i32>> = srcs
             .iter()
             .map(|s| {
                 let inner = &s[1..];
                 match inner.split_last() {
-                    Some((&last, rest)) if last == EOS => rest,
-                    _ => inner,
+                    Some((&last, rest)) if last == EOS => rest.to_vec(),
+                    _ => inner.to_vec(),
                 }
             })
             .collect();
-
         let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
         let root = Beam::root(&mut arena);
-        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![root]).collect();
-        let mut done: Vec<bool> = vec![false; srcs.len()];
+        Ok(Box::new(HsbsTask {
+            cfg: self.clone(),
+            k,
+            max_len: model.max_tgt(),
+            mem,
+            bodies,
+            arena,
+            beams: srcs.iter().map(|_| vec![root]).collect(),
+            done: vec![false; srcs.len()],
+            scratch: ScoringScratch::new(),
+            row_meta: Vec::new(),
+            windows: Vec::new(),
+            best: Vec::new(),
+            pools: (0..srcs.len()).map(|_| CandidatePool::new(k)).collect(),
+            next: Vec::with_capacity(k),
+            stats: DecodeStats { encode_calls: 1, ..Default::default() },
+            compact: CompactScratch::new(),
+            compact_at: COMPACT_MIN,
+        }))
+    }
+}
 
-        let mut scratch = ScoringScratch::new();
-        let mut rowbuf = RowBuf::new();
-        // (query, beam, draft window into bodies[query]) per row.
-        let mut row_meta: Vec<(usize, usize, usize, usize)> = Vec::new();
-        let mut windows: Vec<(usize, usize)> = Vec::new();
-        // (query, beam, accepted, row) — best draft per beam.
-        let mut best: Vec<(usize, usize, usize, usize)> = Vec::new();
-        let mut pools: Vec<CandidatePool> =
-            (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
-        let mut next: Vec<Beam> = Vec::with_capacity(k);
+/// Resumable HSBS state: one `next_rows`/`absorb` round trip per
+/// speculative step.
+pub struct HsbsTask {
+    cfg: Hsbs,
+    k: usize,
+    max_len: usize,
+    mem: MemHandle,
+    /// Source bodies (without BOS/EOS), owned by the task for drafting.
+    bodies: Vec<Vec<i32>>,
+    arena: TokenArena,
+    beams: Vec<Vec<Beam>>,
+    done: Vec<bool>,
+    scratch: ScoringScratch,
+    /// (query, beam, draft window into bodies[query]) per row.
+    row_meta: Vec<(usize, usize, usize, usize)>,
+    windows: Vec<(usize, usize)>,
+    /// (query, beam, accepted, row) — best draft per beam.
+    best: Vec<(usize, usize, usize, usize)>,
+    pools: Vec<CandidatePool>,
+    next: Vec<Beam>,
+    stats: DecodeStats,
+    compact: CompactScratch,
+    compact_at: usize,
+}
 
-        while !done.iter().all(|&d| d) {
-            // Build (beam, draft) rows for all live beams.
-            rowbuf.begin();
-            row_meta.clear();
-            for (q, qbeams) in beams.iter().enumerate() {
-                if done[q] {
+impl DecodeTask for HsbsTask {
+    fn next_rows(&mut self, rows: &mut RowBuf) -> TaskState {
+        if self.done.iter().all(|&d| d) {
+            return TaskState::Done;
+        }
+        // Build (beam, draft) rows for all live beams.
+        self.row_meta.clear();
+        let before = rows.len();
+        for (q, qbeams) in self.beams.iter().enumerate() {
+            if self.done[q] {
+                continue;
+            }
+            for (bi, b) in qbeams.iter().enumerate() {
+                if b.finished {
                     continue;
                 }
-                for (bi, b) in qbeams.iter().enumerate() {
-                    if b.finished {
-                        continue;
-                    }
-                    let budget = max_len.saturating_sub(arena.len(b.node));
-                    let last = arena.last_tok(b.node);
-                    self.make_drafts_into(bodies[q], last, budget, &mut windows);
-                    if windows.is_empty() {
-                        windows.push((0, 0)); // plain one-token step
-                    }
-                    for &(s, e) in &windows {
-                        rowbuf.push_row(&arena, mem, q, b.node, &bodies[q][s..e]);
-                        row_meta.push((q, bi, s, e));
-                    }
+                let budget = self.max_len.saturating_sub(self.arena.len(b.node));
+                let last = self.arena.last_tok(b.node);
+                self.cfg.make_drafts_into(&self.bodies[q], last, budget, &mut self.windows);
+                if self.windows.is_empty() {
+                    self.windows.push((0, 0)); // plain one-token step
                 }
-            }
-            if rowbuf.is_empty() {
-                break;
-            }
-            let out = model.decode(&rowbuf.rows, win)?;
-            stats.model_calls += 1;
-            stats.rows_logical += rowbuf.len() as u64;
-            stats.rows_padded += out.padded_rows as u64;
-
-            // Per (query, beam): pick the draft with most accepted
-            // tokens. Rows of one beam are contiguous, so one scan with
-            // a running entry suffices (deterministic, beam order).
-            best.clear();
-            for (r, &(q, bi, s, e)) in row_meta.iter().enumerate() {
-                let b = beams[q][bi];
-                let p0 = arena.len(b.node) - 1;
-                let draft = &bodies[q][s..e];
-                let mut acc = 0;
-                for (j, &dt) in draft.iter().enumerate() {
-                    let Some(off) = out.offset_of(r, p0 + j) else { break };
-                    let greedy = argmax(out.logits(r, off, 0)) as i32;
-                    if greedy == dt && dt != EOS {
-                        acc += 1;
-                    } else {
-                        break;
-                    }
+                for &(s, e) in &self.windows {
+                    rows.push_row(&self.arena, self.mem, q, b.node, &self.bodies[q][s..e]);
+                    self.row_meta.push((q, bi, s, e));
                 }
-                let same_beam = matches!(best.last(), Some(e) if e.0 == q && e.1 == bi);
-                if same_beam {
-                    let entry = best.last_mut().expect("just matched");
-                    if acc > entry.2 {
-                        entry.2 = acc;
-                        entry.3 = r;
-                    }
-                } else {
-                    best.push((q, bi, acc, r));
-                }
-            }
-
-            // Harvest candidates.
-            for pool in pools.iter_mut() {
-                pool.reset();
-            }
-            for (q, qbeams) in beams.iter().enumerate() {
-                for b in qbeams {
-                    if b.finished {
-                        pools[q].push(*b);
-                    }
-                }
-            }
-            for &(q, bi, acc, r) in best.iter() {
-                let b = beams[q][bi];
-                let blen = arena.len(b.node);
-                let p0 = blen - 1;
-                let (ds, de) = (row_meta[r].2, row_meta[r].3);
-                let draft = &bodies[q][ds..de];
-                stats.drafts_offered += draft.len() as u64;
-                stats.drafts_accepted += acc as u64;
-                // Backbone-and-divergences harvesting (see msbs.rs for the
-                // rationale): top-K continuations at the end of the
-                // accepted backbone, top-K divergent branches elsewhere.
-                let ext_cap = acc.min(draft.len());
-                let mut cum = b.logp;
-                let mut backbone = b.node;
-                for j in 0..=ext_cap {
-                    if j > 0 {
-                        backbone = arena.push(backbone, draft[j - 1]);
-                    }
-                    let Some(off) = out.offset_of(r, p0 + j) else { break };
-                    let prefix_len = blen + j;
-                    if prefix_len >= max_len {
-                        break;
-                    }
-                    let backbone_end = j == ext_cap;
-                    scratch.top_k_log_softmax(out.logits(r, off, 0), k);
-                    for &tok in &scratch.topk {
-                        if !backbone_end && tok as i32 == draft[j] {
-                            continue;
-                        }
-                        let node = arena.push(backbone, tok as i32);
-                        let finished = tok as i32 == EOS || arena.len(node) >= max_len;
-                        pools[q].push(Beam {
-                            node,
-                            logp: cum + scratch.lsm[tok],
-                            finished,
-                        });
-                    }
-                    if j < draft.len() {
-                        cum += scratch.lsm[draft[j] as usize];
-                    }
-                }
-            }
-            for (q, pool) in pools.iter_mut().enumerate() {
-                if done[q] {
-                    continue;
-                }
-                pool.take_into(&arena, &mut next);
-                if !next.is_empty() {
-                    std::mem::swap(&mut beams[q], &mut next);
-                }
-                done[q] = beams[q].iter().all(|b| b.finished);
             }
         }
-        model.release(mem);
-        stats.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(beams.iter().map(|qb| finalize(&arena, qb)).collect())
+        if rows.len() == before {
+            TaskState::Done
+        } else {
+            TaskState::Need { win: self.cfg.draft_len + 1 }
+        }
+    }
+
+    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>) {
+        debug_assert_eq!(range.len(), self.row_meta.len());
+        // Per (query, beam): pick the draft with most accepted
+        // tokens. Rows of one beam are contiguous, so one scan with
+        // a running entry suffices (deterministic, beam order).
+        self.best.clear();
+        for (r, &(q, bi, s, e)) in self.row_meta.iter().enumerate() {
+            let b = self.beams[q][bi];
+            let p0 = self.arena.len(b.node) - 1;
+            let draft = &self.bodies[q][s..e];
+            let gr = range.start + r;
+            let mut acc = 0;
+            for (j, &dt) in draft.iter().enumerate() {
+                let Some(off) = out.offset_of(gr, p0 + j) else { break };
+                let greedy = argmax(out.logits(gr, off, 0)) as i32;
+                if greedy == dt && dt != EOS {
+                    acc += 1;
+                } else {
+                    break;
+                }
+            }
+            let same_beam = matches!(self.best.last(), Some(e) if e.0 == q && e.1 == bi);
+            if same_beam {
+                let entry = self.best.last_mut().expect("just matched");
+                if acc > entry.2 {
+                    entry.2 = acc;
+                    entry.3 = r;
+                }
+            } else {
+                self.best.push((q, bi, acc, r));
+            }
+        }
+
+        // Harvest candidates.
+        for pool in self.pools.iter_mut() {
+            pool.reset();
+        }
+        for (q, qbeams) in self.beams.iter().enumerate() {
+            for b in qbeams {
+                if b.finished {
+                    self.pools[q].push(*b);
+                }
+            }
+        }
+        for &(q, bi, acc, r) in self.best.iter() {
+            let b = self.beams[q][bi];
+            let blen = self.arena.len(b.node);
+            let p0 = blen - 1;
+            let gr = range.start + r;
+            let (ds, de) = (self.row_meta[r].2, self.row_meta[r].3);
+            let draft = &self.bodies[q][ds..de];
+            self.stats.drafts_offered += draft.len() as u64;
+            self.stats.drafts_accepted += acc as u64;
+            // Backbone-and-divergences harvesting (see msbs.rs for the
+            // rationale): top-K continuations at the end of the
+            // accepted backbone, top-K divergent branches elsewhere.
+            let ext_cap = acc.min(draft.len());
+            let mut cum = b.logp;
+            let mut backbone = b.node;
+            for j in 0..=ext_cap {
+                if j > 0 {
+                    backbone = self.arena.push(backbone, draft[j - 1]);
+                }
+                let Some(off) = out.offset_of(gr, p0 + j) else { break };
+                let prefix_len = blen + j;
+                if prefix_len >= self.max_len {
+                    break;
+                }
+                let backbone_end = j == ext_cap;
+                self.scratch.top_k_log_softmax(out.logits(gr, off, 0), self.k);
+                for &tok in &self.scratch.topk {
+                    if !backbone_end && tok as i32 == draft[j] {
+                        continue;
+                    }
+                    let node = self.arena.push(backbone, tok as i32);
+                    let finished = tok as i32 == EOS || self.arena.len(node) >= self.max_len;
+                    self.pools[q].push(Beam {
+                        node,
+                        logp: cum + self.scratch.lsm[tok],
+                        finished,
+                    });
+                }
+                if j < draft.len() {
+                    cum += self.scratch.lsm[draft[j] as usize];
+                }
+            }
+        }
+        for (q, pool) in self.pools.iter_mut().enumerate() {
+            if self.done[q] {
+                continue;
+            }
+            pool.take_into(&self.arena, &mut self.next);
+            if !self.next.is_empty() {
+                std::mem::swap(&mut self.beams[q], &mut self.next);
+            }
+            self.done[q] = self.beams[q].iter().all(|b| b.finished);
+        }
+        compact_beams(&mut self.arena, &mut self.compact, &mut self.beams, &mut self.compact_at);
+    }
+
+    fn stats_mut(&mut self) -> &mut DecodeStats {
+        &mut self.stats
+    }
+
+    fn arena_nodes(&self) -> usize {
+        self.arena.node_count()
+    }
+
+    fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
+        model.release(self.mem);
+        let outs = self.beams.iter().map(|qb| finalize(&self.arena, qb)).collect();
+        (outs, self.stats)
     }
 }
 

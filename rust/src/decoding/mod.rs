@@ -17,21 +17,56 @@
 //! decode calls) so the batch-size sweeps of Table 1 and the beam-width
 //! batching of Table 4 fall out naturally.
 //!
+//! ## Resumable tasks and cycle-level batching
+//!
+//! Every engine is written as a **resumable state machine** behind the
+//! [`DecodeTask`] trait rather than a closed `generate` loop. One
+//! [`DecodeTask::next_rows`] / [`DecodeTask::absorb`] round trip equals
+//! one of the engine's decode cycles (MSBS's draft and verify calls are
+//! two explicit phases of its task), which makes two drivers possible
+//! over the *same* algorithm code:
+//!
+//! * [`Decoder::generate`] — the classic closed loop, now a thin default
+//!   driver ([`run_task_to_done`]) over one task: build rows, run one
+//!   [`StepModel::decode_into`], absorb, repeat. Existing callers,
+//!   benches and the table harnesses are untouched.
+//! * [`scheduler::DecodeScheduler`] — cycle-level continuous batching:
+//!   many in-flight tasks' pending rows are concatenated into ONE fused
+//!   model call per tick (per-row [`MemHandle`]s keep encoder memory
+//!   per task), the logits windows are demultiplexed back, and a new
+//!   expansion request joins the very next device call instead of
+//!   queueing behind a whole multi-cycle `generate`. This is the
+//!   serving-side lever behind the paper's throughput-under-latency
+//!   claims: effective batch per call stays high even as individual
+//!   requests' beams finish (the Table 1C decay).
+//!
+//! Task contract: `next_rows` *rebuilds* the current phase's rows and
+//! must be idempotent (the scheduler may bounce a task to the next tick
+//! when the fused-row budget is exhausted); all state advances happen in
+//! `absorb`, which receives the fused [`crate::model::DecodeOut`] plus
+//! the range its own rows occupy in it. Interleaving is
+//! result-invariant: `tests/parity_decoding.rs` pins scheduler-fused
+//! decoding bit-identical to solo `generate` for all four engines.
+//!
 //! ## Zero-allocation decoding core
 //!
-//! All four engines share three primitives that keep the host-side hot
-//! loop free of steady-state heap traffic (model calls dominate wall
-//! time in production; the paper's several-second planning budget is
-//! why the host side must not add to them):
+//! All engines share primitives that keep the host-side hot loop free of
+//! steady-state heap traffic (model calls dominate wall time in
+//! production; the paper's several-second planning budget is why the
+//! host side must not add to them):
 //!
 //! * [`arena::TokenArena`] — beam prefixes as parent-pointer trie
 //!   nodes: extending a beam is an O(1) node push, not an O(len)
 //!   `Vec<i32>` clone; sequences materialize only for model calls and
-//!   [`finalize`];
+//!   [`finalize`]; per-cycle compaction keeps the node table bounded on
+//!   long sequences / huge K;
 //! * [`crate::model::scratch::ScoringScratch`] — reusable log-softmax /
 //!   top-k buffers plus a fused nucleus-mass test over raw logits;
 //! * [`CandidatePool`] — top-k by partial selection over beam indices,
-//!   deduplicated by arena chain-hash instead of cloned token vectors.
+//!   deduplicated by arena chain-hash instead of cloned token vectors;
+//! * [`RowBuf`] + [`StepModel::decode_into`] — decode-call inputs *and*
+//!   outputs recycle their buffers, so a steady-state cycle (or fused
+//!   scheduler tick) performs no heap allocation.
 //!
 //! Semantics (hypotheses, tie order, log-probabilities, model-call
 //! accounting) are preserved exactly; `tests/parity_decoding.rs` pins
@@ -41,8 +76,9 @@ pub mod arena;
 pub mod beam;
 pub mod hsbs;
 pub mod msbs;
+pub mod scheduler;
 
-use crate::model::{DecodeRow, MemHandle, StepModel};
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
 use anyhow::Result;
 use arena::{NodeId, TokenArena};
 
@@ -120,19 +156,107 @@ impl DecodeStats {
     }
 }
 
+/// What a resumable decode task wants next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Rows were appended; the task needs one model call with a logits
+    /// window of at least `win` positions, then an [`DecodeTask::absorb`].
+    Need { win: usize },
+    /// All queries finished (or nothing left to decode): outputs are
+    /// ready via [`DecodeTask::finish`].
+    Done,
+}
+
+/// A resumable decoding engine instance: one group of queries advancing
+/// one decode cycle per `next_rows`/`absorb` round trip.
+///
+/// Contract:
+/// * `next_rows` **rebuilds** the current phase's rows from task state
+///   and appends them to `rows` (which may already hold other tasks'
+///   rows). It must be idempotent — calling it again without an
+///   intervening `absorb` appends an identical row set, so a scheduler
+///   can truncate a task's rows back off the buffer and retry it next
+///   tick when the fused-row budget is exhausted.
+/// * `absorb` consumes the logits of this task's rows (`range` indexes
+///   the rows of the call `out` answers; the window may be *wider* than
+///   requested — logits are read by absolute position) and advances the
+///   state machine by one phase.
+/// * The driver — solo [`run_task_to_done`] or the fused
+///   [`scheduler::DecodeScheduler`] — adds model-call-level accounting
+///   (`model_calls`, `rows_logical`, `rows_padded`) through `stats_mut`;
+///   the task itself accounts encode calls and draft acceptance.
+pub trait DecodeTask: Send {
+    /// Append pending rows for the current phase; see the trait docs.
+    fn next_rows(&mut self, rows: &mut RowBuf) -> TaskState;
+    /// Consume this task's logits window and advance one phase.
+    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>);
+    /// Per-task accounting (the paper's Table 1 counters).
+    fn stats_mut(&mut self) -> &mut DecodeStats;
+    /// Current token-arena node count (compaction diagnostics).
+    fn arena_nodes(&self) -> usize;
+    /// Release device memory and return per-query outputs plus the
+    /// accumulated stats. Callable in any state (partial outputs are
+    /// whatever the beams hold).
+    fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats);
+}
+
+/// Drive a single task to completion against `model`: the closed-loop
+/// `generate` shape, with the decode output buffer recycled across
+/// cycles via [`StepModel::decode_into`].
+pub fn run_task_to_done(model: &dyn StepModel, task: &mut dyn DecodeTask) -> Result<()> {
+    let mut rows = RowBuf::new();
+    let mut out = DecodeOut::default();
+    loop {
+        rows.begin();
+        match task.next_rows(&mut rows) {
+            TaskState::Done => return Ok(()),
+            TaskState::Need { win } => {
+                model.decode_into(&rows.rows, win, &mut out)?;
+                let (n, padded) = (rows.len() as u64, out.padded_rows as u64);
+                let st = task.stats_mut();
+                st.model_calls += 1;
+                st.rows_logical += n;
+                st.rows_padded += padded;
+                task.absorb(&out, 0..rows.len());
+            }
+        }
+    }
+}
+
 /// A decoding engine: generate K candidate target sequences for each of
 /// a group of query token sequences.
 pub trait Decoder: Send + Sync {
     fn name(&self) -> &'static str;
+    /// Start a resumable task over one group: encodes `srcs` (the task
+    /// owns the returned memory until `finish`) and returns the engine's
+    /// state machine positioned before its first decode cycle.
+    fn start_task(
+        &self,
+        model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+    ) -> Result<Box<dyn DecodeTask>>;
     /// `srcs` are BOS/EOS-wrapped query token rows (one group = one
-    /// encode + shared decode batches).
+    /// encode + shared decode batches). Default: drive one task to
+    /// completion (solo closed loop).
     fn generate(
         &self,
         model: &dyn StepModel,
         srcs: &[Vec<i32>],
         k: usize,
         stats: &mut DecodeStats,
-    ) -> Result<Vec<GenOutput>>;
+    ) -> Result<Vec<GenOutput>> {
+        let t0 = std::time::Instant::now();
+        let mut task = self.start_task(model, srcs, k)?;
+        if let Err(e) = run_task_to_done(model, task.as_mut()) {
+            let _ = task.finish(model); // release encoder memory
+            return Err(e);
+        }
+        let (outs, tstats) = task.finish(model);
+        stats.merge(&tstats);
+        stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
 }
 
 /// An in-flight beam: a prefix node in the token arena plus its score.
@@ -154,8 +278,9 @@ impl Beam {
 
 /// Reusable decode-call row storage: `DecodeRow.tgt` buffers are
 /// recycled between cycles, so steady-state row building allocates
-/// nothing.
-pub(crate) struct RowBuf {
+/// nothing. Tasks append rows here; the solo driver and the fused
+/// scheduler both own one `RowBuf` for the lifetime of their loop.
+pub struct RowBuf {
     pub rows: Vec<DecodeRow>,
     spare: Vec<Vec<i32>>,
 }
@@ -194,6 +319,21 @@ impl RowBuf {
 
     pub fn len(&self) -> usize {
         self.rows.len()
+    }
+
+    /// Drop rows back to `n`, reclaiming their buffers (the scheduler
+    /// uses this to bounce a task whose rows overflow the tick budget).
+    pub fn truncate_to(&mut self, n: usize) {
+        while self.rows.len() > n {
+            let r = self.rows.pop().expect("len checked");
+            self.spare.push(r.tgt);
+        }
+    }
+}
+
+impl Default for RowBuf {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -282,6 +422,40 @@ impl CandidatePool {
             }
         }
     }
+}
+
+/// Compaction trigger floor: below this many arena nodes the bookkeeping
+/// is not worth one live-chain copy.
+pub(crate) const COMPACT_MIN: usize = 1024;
+
+/// End-of-cycle arena compaction shared by all engines: once the node
+/// table crosses the task's moving threshold, copy the chains reachable
+/// from the current beams (the only node ids still live between cycles)
+/// and drop every discarded candidate. The threshold re-arms at 4x the
+/// live size, so compaction cost is amortized geometric and the arena
+/// stays within a constant factor of the live beam set.
+pub(crate) fn compact_beams(
+    arena: &mut TokenArena,
+    scratch: &mut arena::CompactScratch,
+    beams: &mut [Vec<Beam>],
+    compact_at: &mut usize,
+) {
+    if arena.node_count() < *compact_at {
+        return;
+    }
+    arena.compact_begin(scratch);
+    for qbeams in beams.iter() {
+        for b in qbeams {
+            arena.compact_mark(scratch, b.node);
+        }
+    }
+    arena.compact_finish(scratch);
+    for qbeams in beams.iter_mut() {
+        for b in qbeams {
+            b.node = scratch.remapped(b.node);
+        }
+    }
+    *compact_at = (arena.node_count() * 4).max(COMPACT_MIN);
 }
 
 /// Build a decoder by name: `bs` / `beam-search`, `bs-opt`, `hsbs`,

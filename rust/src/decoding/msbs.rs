@@ -22,11 +22,19 @@
 //! flat per-cycle buffer indexed by spans, the nucleus test runs fused
 //! over raw logits ([`nucleus_mass_before`]), and candidate pools
 //! deduplicate by arena chain-hash — no steady-state allocation.
+//!
+//! The algorithm lives in [`MsbsTask`], a resumable [`DecodeTask`] with
+//! an explicit two-phase cycle: the draft call and the verify call are
+//! separate `next_rows`/`absorb` round trips, so a fused scheduler can
+//! interleave other tasks' rows into either phase's device call.
 
-use super::arena::TokenArena;
-use super::{finalize, Beam, CandidatePool, DecodeStats, Decoder, GenOutput, RowBuf};
+use super::arena::{CompactScratch, TokenArena};
+use super::{
+    compact_beams, finalize, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput,
+    RowBuf, TaskState, COMPACT_MIN,
+};
 use crate::model::scratch::{nucleus_mass_before, ScoringScratch};
-use crate::model::{argmax, StepModel};
+use crate::model::{argmax, DecodeOut, MemHandle, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -77,18 +85,62 @@ impl Decoder for Msbs {
         "msbs"
     }
 
-    fn generate(
+    fn start_task(
         &self,
         model: &dyn StepModel,
         srcs: &[Vec<i32>],
         k: usize,
-        stats: &mut DecodeStats,
-    ) -> Result<Vec<GenOutput>> {
-        self.generate_traced(model, srcs, k, stats, &mut None)
+    ) -> Result<Box<dyn DecodeTask>> {
+        Ok(Box::new(self.task(model, srcs, k)?))
     }
 }
 
+/// Which device call an [`MsbsTask`] runs next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum MsbsPhase {
+    Draft,
+    Verify,
+}
+
 impl Msbs {
+    /// Build the concrete task (the trait object path goes through
+    /// [`Decoder::start_task`]; [`Msbs::generate_traced`] needs the
+    /// concrete type to thread the trace through).
+    fn task(&self, model: &dyn StepModel, srcs: &[Vec<i32>], k: usize) -> Result<MsbsTask> {
+        let m = if let Some(cap) = self.max_draft {
+            cap.min(model.medusa_heads())
+        } else {
+            model.medusa_heads()
+        };
+        anyhow::ensure!(m > 0, "MSBS requires a model with Medusa heads");
+        let mem = model.encode(srcs)?;
+        let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
+        let root = Beam::root(&mut arena);
+        Ok(MsbsTask {
+            nucleus: self.nucleus,
+            k,
+            m,
+            max_len: model.max_tgt(),
+            mem,
+            arena,
+            beams: srcs.iter().map(|_| vec![root]).collect(),
+            done: vec![false; srcs.len()],
+            phase: MsbsPhase::Draft,
+            cycle: 0,
+            scratch: ScoringScratch::new(),
+            row_of: Vec::new(),
+            draft_flat: Vec::new(),
+            draft_span: Vec::new(),
+            accepted_log: Vec::new(),
+            pools: (0..srcs.len()).map(|_| CandidatePool::new(k)).collect(),
+            next: Vec::with_capacity(k),
+            trace: None,
+            stats: DecodeStats { encode_calls: 1, ..Default::default() },
+            compact: CompactScratch::new(),
+            compact_at: COMPACT_MIN,
+        })
+    }
+
     /// `generate` with an optional per-cycle trace (first query only),
     /// used by `examples/msbs_trace.rs` to reproduce Fig. 1/2.
     pub fn generate_traced(
@@ -100,196 +152,244 @@ impl Msbs {
         trace: &mut Option<Vec<CycleTrace>>,
     ) -> Result<Vec<GenOutput>> {
         let t0 = std::time::Instant::now();
-        let mem = model.encode(srcs)?;
-        stats.encode_calls += 1;
-        let max_len = model.max_tgt();
-        let m = if let Some(cap) = self.max_draft {
-            cap.min(model.medusa_heads())
-        } else {
-            model.medusa_heads()
-        };
-        anyhow::ensure!(m > 0, "MSBS requires a model with Medusa heads");
+        let mut task = self.task(model, srcs, k)?;
+        task.trace = trace.take();
+        if let Err(e) = super::run_task_to_done(model, &mut task) {
+            *trace = task.trace.take(); // completed cycles survive the error
+            let _ = Box::new(task).finish(model); // release encoder memory
+            return Err(e);
+        }
+        *trace = task.trace.take();
+        let (outs, tstats) = Box::new(task).finish(model);
+        stats.merge(&tstats);
+        stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+}
 
-        let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
-        let root = Beam::root(&mut arena);
-        let mut beams: Vec<Vec<Beam>> = srcs.iter().map(|_| vec![root]).collect();
-        let mut done: Vec<bool> = vec![false; srcs.len()];
-        let mut cycle = 0usize;
+/// Resumable MSBS state: each decode cycle is two explicit phases
+/// (draft, then verify), one `next_rows`/`absorb` round trip each.
+pub struct MsbsTask {
+    nucleus: f64,
+    k: usize,
+    /// Draft length (Medusa heads, possibly capped).
+    m: usize,
+    max_len: usize,
+    mem: MemHandle,
+    arena: TokenArena,
+    beams: Vec<Vec<Beam>>,
+    done: Vec<bool>,
+    phase: MsbsPhase,
+    cycle: usize,
+    scratch: ScoringScratch,
+    row_of: Vec<(usize, usize)>,
+    /// Per-cycle drafts: one flat token buffer + a (start, end) span
+    /// per row, reused across cycles.
+    draft_flat: Vec<i32>,
+    draft_span: Vec<(usize, usize)>,
+    accepted_log: Vec<usize>,
+    pools: Vec<CandidatePool>,
+    next: Vec<Beam>,
+    trace: Option<Vec<CycleTrace>>,
+    stats: DecodeStats,
+    compact: CompactScratch,
+    compact_at: usize,
+}
 
-        let mut scratch = ScoringScratch::new();
-        let mut rowbuf = RowBuf::new();
-        let mut vrowbuf = RowBuf::new();
-        let mut row_of: Vec<(usize, usize)> = Vec::new();
-        // Per-cycle drafts: one flat token buffer + a (start, end) span
-        // per row, reused across cycles.
-        let mut draft_flat: Vec<i32> = Vec::new();
-        let mut draft_span: Vec<(usize, usize)> = Vec::new();
-        let mut accepted_log: Vec<usize> = Vec::new();
-        let mut pools: Vec<CandidatePool> =
-            (0..srcs.len()).map(|_| CandidatePool::new(k)).collect();
-        let mut next: Vec<Beam> = Vec::with_capacity(k);
+impl MsbsTask {
+    /// Absorb the draft call: greedy draft per beam, token j from head j
+    /// (head 0 = main).
+    fn absorb_draft(&mut self, dout: &DecodeOut, range: std::ops::Range<usize>) {
+        self.cycle += 1;
+        self.draft_flat.clear();
+        self.draft_span.clear();
+        for (r, &(q, bi)) in self.row_of.iter().enumerate() {
+            let b = self.beams[q][bi];
+            let blen = self.arena.len(b.node);
+            let gr = range.start + r;
+            let off = dout
+                .offset_of(gr, blen - 1)
+                .expect("draft window covers last position");
+            let budget = self.max_len.saturating_sub(blen + 1).min(self.m);
+            let start = self.draft_flat.len();
+            for h in 0..budget {
+                self.draft_flat.push(argmax(dout.logits(gr, off, h)) as i32);
+            }
+            self.draft_span.push((start, self.draft_flat.len()));
+        }
+        self.phase = MsbsPhase::Verify;
+    }
 
-        while !done.iter().all(|&d| d) {
-            cycle += 1;
-            // ---- call 1: draft ----
-            rowbuf.begin();
-            row_of.clear();
-            for (q, qbeams) in beams.iter().enumerate() {
-                if done[q] {
-                    continue;
+    /// Absorb the verify call: nucleus acceptance + candidate harvest.
+    fn absorb_verify(&mut self, vout: &DecodeOut, range: std::ops::Range<usize>) {
+        for pool in self.pools.iter_mut() {
+            pool.reset();
+        }
+        for (q, qbeams) in self.beams.iter().enumerate() {
+            for b in qbeams {
+                if b.finished {
+                    self.pools[q].push(*b);
                 }
-                for (bi, b) in qbeams.iter().enumerate() {
-                    if !b.finished {
-                        rowbuf.push_row(&arena, mem, q, b.node, &[]);
-                        row_of.push((q, bi));
-                    }
-                }
-            }
-            if rowbuf.is_empty() {
-                break;
-            }
-            let dout = model.decode(&rowbuf.rows, 1)?;
-            stats.model_calls += 1;
-            stats.rows_logical += rowbuf.len() as u64;
-            stats.rows_padded += dout.padded_rows as u64;
-
-            // Greedy draft per beam: token j from head j (head 0 = main).
-            draft_flat.clear();
-            draft_span.clear();
-            for (r, &(q, bi)) in row_of.iter().enumerate() {
-                let b = beams[q][bi];
-                let blen = arena.len(b.node);
-                let off = dout
-                    .offset_of(r, blen - 1)
-                    .expect("draft window covers last position");
-                let budget = max_len.saturating_sub(blen + 1).min(m);
-                let start = draft_flat.len();
-                for h in 0..budget {
-                    draft_flat.push(argmax(dout.logits(r, off, h)) as i32);
-                }
-                draft_span.push((start, draft_flat.len()));
-            }
-
-            // ---- call 2: verify ----
-            let win = m + 1;
-            vrowbuf.begin();
-            for (r, &(q, bi)) in row_of.iter().enumerate() {
-                let b = beams[q][bi];
-                let (s, e) = draft_span[r];
-                vrowbuf.push_row(&arena, mem, q, b.node, &draft_flat[s..e]);
-            }
-            let vout = model.decode(&vrowbuf.rows, win)?;
-            stats.model_calls += 1;
-            stats.rows_logical += vrowbuf.len() as u64;
-            stats.rows_padded += vout.padded_rows as u64;
-
-            // ---- acceptance + harvesting ----
-            for pool in pools.iter_mut() {
-                pool.reset();
-            }
-            for (q, qbeams) in beams.iter().enumerate() {
-                for b in qbeams {
-                    if b.finished {
-                        pools[q].push(*b);
-                    }
-                }
-            }
-            accepted_log.clear();
-            for (r, &(q, bi)) in row_of.iter().enumerate() {
-                let b = beams[q][bi];
-                let blen = arena.len(b.node);
-                let p0 = blen - 1;
-                let (ds, de) = draft_span[r];
-                let draft = &draft_flat[ds..de];
-                // accept a prefix of the draft via the nucleus test; an
-                // accepted EOS terminates the draft (nothing after it can
-                // be meaningful).
-                let mut acc = 0usize;
-                let mut eos_idx: Option<usize> = None;
-                for (j, &dt) in draft.iter().enumerate() {
-                    let Some(off) = vout.offset_of(r, p0 + j) else { break };
-                    if nucleus_mass_before(vout.logits(r, off, 0), dt as usize) >= self.nucleus {
-                        break;
-                    }
-                    acc += 1;
-                    if dt == EOS {
-                        eos_idx = Some(j);
-                        break;
-                    }
-                }
-                stats.drafts_offered += draft.len() as u64;
-                stats.drafts_accepted += acc as u64;
-                accepted_log.push(acc);
-
-                // Harvest candidates. The accepted tokens form a committed
-                // *backbone*: at its end we take the top-K continuations;
-                // at every earlier accepted position we take the top-K
-                // *divergent* branches (excluding the draft token itself —
-                // it already lives inside the backbone, and re-adding it
-                // would flood the pool with nested prefixes). Cumulative
-                // log-probability ranks the pool, so a weakly-accepted
-                // backbone can lose to a short divergence — the paper's
-                // "both shorter and longer sequences may be the most
-                // probable".
-                let ext_cap = eos_idx.unwrap_or(acc);
-                let mut cum = b.logp;
-                let mut backbone = b.node;
-                for j in 0..=ext_cap {
-                    if j > 0 {
-                        backbone = arena.push(backbone, draft[j - 1]);
-                    }
-                    let Some(off) = vout.offset_of(r, p0 + j) else { break };
-                    let prefix_len = blen + j;
-                    if prefix_len >= max_len {
-                        break;
-                    }
-                    let backbone_end = j == ext_cap;
-                    scratch.top_k_log_softmax(vout.logits(r, off, 0), k);
-                    for &tok in &scratch.topk {
-                        if !backbone_end && tok as i32 == draft[j] {
-                            continue; // divergences only before the backbone end
-                        }
-                        let node = arena.push(backbone, tok as i32);
-                        let finished = tok as i32 == EOS || arena.len(node) >= max_len;
-                        pools[q].push(Beam {
-                            node,
-                            logp: cum + scratch.lsm[tok],
-                            finished,
-                        });
-                    }
-                    if j < draft.len() {
-                        cum += scratch.lsm[draft[j] as usize];
-                    }
-                }
-            }
-            for (q, pool) in pools.iter_mut().enumerate() {
-                if done[q] {
-                    continue;
-                }
-                pool.take_into(&arena, &mut next);
-                if !next.is_empty() {
-                    std::mem::swap(&mut beams[q], &mut next);
-                }
-                done[q] = beams[q].iter().all(|b| b.finished);
-            }
-            if let Some(tr) = trace.as_mut() {
-                tr.push(CycleTrace {
-                    cycle,
-                    drafts: draft_span
-                        .iter()
-                        .map(|&(s, e)| draft_flat[s..e].to_vec())
-                        .collect(),
-                    accepted: accepted_log.clone(),
-                    beams: beams[0]
-                        .iter()
-                        .map(|b| (arena.tokens(b.node), b.logp))
-                        .collect(),
-                });
             }
         }
-        model.release(mem);
-        stats.wall_secs += t0.elapsed().as_secs_f64();
-        Ok(beams.iter().map(|qb| finalize(&arena, qb)).collect())
+        self.accepted_log.clear();
+        for (r, &(q, bi)) in self.row_of.iter().enumerate() {
+            let b = self.beams[q][bi];
+            let blen = self.arena.len(b.node);
+            let p0 = blen - 1;
+            let gr = range.start + r;
+            let (ds, de) = self.draft_span[r];
+            let draft = &self.draft_flat[ds..de];
+            // accept a prefix of the draft via the nucleus test; an
+            // accepted EOS terminates the draft (nothing after it can
+            // be meaningful).
+            let mut acc = 0usize;
+            let mut eos_idx: Option<usize> = None;
+            for (j, &dt) in draft.iter().enumerate() {
+                let Some(off) = vout.offset_of(gr, p0 + j) else { break };
+                if nucleus_mass_before(vout.logits(gr, off, 0), dt as usize) >= self.nucleus {
+                    break;
+                }
+                acc += 1;
+                if dt == EOS {
+                    eos_idx = Some(j);
+                    break;
+                }
+            }
+            self.stats.drafts_offered += draft.len() as u64;
+            self.stats.drafts_accepted += acc as u64;
+            self.accepted_log.push(acc);
+
+            // Harvest candidates. The accepted tokens form a committed
+            // *backbone*: at its end we take the top-K continuations;
+            // at every earlier accepted position we take the top-K
+            // *divergent* branches (excluding the draft token itself —
+            // it already lives inside the backbone, and re-adding it
+            // would flood the pool with nested prefixes). Cumulative
+            // log-probability ranks the pool, so a weakly-accepted
+            // backbone can lose to a short divergence — the paper's
+            // "both shorter and longer sequences may be the most
+            // probable".
+            let ext_cap = eos_idx.unwrap_or(acc);
+            let mut cum = b.logp;
+            let mut backbone = b.node;
+            for j in 0..=ext_cap {
+                if j > 0 {
+                    backbone = self.arena.push(backbone, draft[j - 1]);
+                }
+                let Some(off) = vout.offset_of(gr, p0 + j) else { break };
+                let prefix_len = blen + j;
+                if prefix_len >= self.max_len {
+                    break;
+                }
+                let backbone_end = j == ext_cap;
+                self.scratch.top_k_log_softmax(vout.logits(gr, off, 0), self.k);
+                for &tok in &self.scratch.topk {
+                    if !backbone_end && tok as i32 == draft[j] {
+                        continue; // divergences only before the backbone end
+                    }
+                    let node = self.arena.push(backbone, tok as i32);
+                    let finished = tok as i32 == EOS || self.arena.len(node) >= self.max_len;
+                    self.pools[q].push(Beam {
+                        node,
+                        logp: cum + self.scratch.lsm[tok],
+                        finished,
+                    });
+                }
+                if j < draft.len() {
+                    cum += self.scratch.lsm[draft[j] as usize];
+                }
+            }
+        }
+        for (q, pool) in self.pools.iter_mut().enumerate() {
+            if self.done[q] {
+                continue;
+            }
+            pool.take_into(&self.arena, &mut self.next);
+            if !self.next.is_empty() {
+                std::mem::swap(&mut self.beams[q], &mut self.next);
+            }
+            self.done[q] = self.beams[q].iter().all(|b| b.finished);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(CycleTrace {
+                cycle: self.cycle,
+                drafts: self
+                    .draft_span
+                    .iter()
+                    .map(|&(s, e)| self.draft_flat[s..e].to_vec())
+                    .collect(),
+                accepted: self.accepted_log.clone(),
+                beams: self.beams[0]
+                    .iter()
+                    .map(|b| (self.arena.tokens(b.node), b.logp))
+                    .collect(),
+            });
+        }
+        compact_beams(&mut self.arena, &mut self.compact, &mut self.beams, &mut self.compact_at);
+        self.phase = MsbsPhase::Draft;
+    }
+}
+
+impl DecodeTask for MsbsTask {
+    fn next_rows(&mut self, rows: &mut RowBuf) -> TaskState {
+        match self.phase {
+            MsbsPhase::Draft => {
+                if self.done.iter().all(|&d| d) {
+                    return TaskState::Done;
+                }
+                self.row_of.clear();
+                let before = rows.len();
+                for (q, qbeams) in self.beams.iter().enumerate() {
+                    if self.done[q] {
+                        continue;
+                    }
+                    for (bi, b) in qbeams.iter().enumerate() {
+                        if !b.finished {
+                            rows.push_row(&self.arena, self.mem, q, b.node, &[]);
+                            self.row_of.push((q, bi));
+                        }
+                    }
+                }
+                if rows.len() == before {
+                    TaskState::Done
+                } else {
+                    TaskState::Need { win: 1 }
+                }
+            }
+            MsbsPhase::Verify => {
+                // Never empty: the draft phase only transitions here
+                // with at least one live row.
+                for (r, &(q, bi)) in self.row_of.iter().enumerate() {
+                    let b = self.beams[q][bi];
+                    let (s, e) = self.draft_span[r];
+                    rows.push_row(&self.arena, self.mem, q, b.node, &self.draft_flat[s..e]);
+                }
+                TaskState::Need { win: self.m + 1 }
+            }
+        }
+    }
+
+    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>) {
+        debug_assert_eq!(range.len(), self.row_of.len());
+        match self.phase {
+            MsbsPhase::Draft => self.absorb_draft(out, range),
+            MsbsPhase::Verify => self.absorb_verify(out, range),
+        }
+    }
+
+    fn stats_mut(&mut self) -> &mut DecodeStats {
+        &mut self.stats
+    }
+
+    fn arena_nodes(&self) -> usize {
+        self.arena.node_count()
+    }
+
+    fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
+        model.release(self.mem);
+        let outs = self.beams.iter().map(|qb| finalize(&self.arena, qb)).collect();
+        (outs, self.stats)
     }
 }
 

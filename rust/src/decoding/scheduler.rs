@@ -1,0 +1,362 @@
+//! Cycle-level continuous batching: one fused device call per tick over
+//! the pending rows of many in-flight [`DecodeTask`]s.
+//!
+//! The request-granularity hub ran one `generate` *to completion* per
+//! batch, so every concurrent planning session stalled behind the
+//! slowest group, late requests waited out whole multi-cycle decodes,
+//! and the device saw shrinking batches as beams finished — exactly the
+//! Table 1C effective-batch decay the paper measures. The scheduler is
+//! the same shift continuous batching brought to LLM serving, applied at
+//! the decode-*cycle* level:
+//!
+//! * [`DecodeScheduler::submit`] parks a resumable task (its encoder
+//!   memory already lives behind a per-row [`crate::model::MemHandle`],
+//!   so rows from different tasks mix freely in one call);
+//! * [`DecodeScheduler::tick`] polls tasks **oldest-first**, concatenates
+//!   their pending rows into ONE [`StepModel::decode_into`] call (window
+//!   = the widest any staged task asked for; logits are addressed by
+//!   absolute position, so a wider window is harmless), demultiplexes
+//!   the output windows back via [`DecodeTask::absorb`], and retires
+//!   finished tasks;
+//! * a `max_rows` budget bounds the fused call. Fairness is strict
+//!   oldest-first with head-of-line blocking: a task whose rows don't
+//!   fit waits for the next tick and nothing younger jumps the queue
+//!   (no starvation; the oldest staged task is always admitted even if
+//!   it alone exceeds the budget). Deferral never changes results —
+//!   `next_rows` is idempotent and logits are position-pure — it only
+//!   trades latency, which `tests/parity_decoding.rs` pins.
+//!
+//! Per-task accounting stays solo-equivalent: each staged task is
+//! charged one `model_call`, its own logical rows, and the padding the
+//! device *would* have applied to its rows alone
+//! ([`StepModel::pad_rows`]) — so a task's `DecodeStats` are identical
+//! whether it ran fused or via `Decoder::generate`. The scheduler's own
+//! [`FusedStats`] track the actual fused calls for throughput
+//! accounting.
+//!
+//! Steady-state ticks allocate nothing: rows, the fused output buffer,
+//! and the staging table are all recycled; tasks reuse their arenas,
+//! pools and scratch (see the benches' counting-allocator check).
+
+use super::{DecodeStats, DecodeTask, GenOutput, RowBuf, TaskState};
+use crate::model::{DecodeOut, StepModel};
+use anyhow::Result;
+
+/// Identifies a submitted task until it is returned via [`Finished`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskId(pub u64);
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Fused-call row budget per tick. The oldest staged task may exceed
+    /// it alone; younger tasks then wait for the next tick.
+    pub max_rows: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_rows: 256 }
+    }
+}
+
+/// Whole-scheduler accounting across fused calls.
+#[derive(Clone, Debug, Default)]
+pub struct FusedStats {
+    /// Fused device calls issued.
+    pub fused_calls: u64,
+    /// Sum of logical rows over fused calls.
+    pub rows_logical: u64,
+    /// Sum of device-padded rows over fused calls.
+    pub rows_padded: u64,
+    /// Tasks submitted / retired.
+    pub tasks_submitted: u64,
+    pub tasks_finished: u64,
+}
+
+impl FusedStats {
+    /// Average logical rows per fused call (the serving-side Table 1C).
+    pub fn avg_effective_batch(&self) -> f64 {
+        if self.fused_calls == 0 {
+            0.0
+        } else {
+            self.rows_logical as f64 / self.fused_calls as f64
+        }
+    }
+}
+
+/// A retired task: its per-query outputs and solo-equivalent stats.
+pub struct Finished {
+    pub id: TaskId,
+    pub outputs: Vec<GenOutput>,
+    pub stats: DecodeStats,
+}
+
+struct InFlight {
+    id: TaskId,
+    task: Box<dyn DecodeTask>,
+    done: bool,
+}
+
+/// Owns many in-flight decode tasks and drives them with fused calls.
+pub struct DecodeScheduler {
+    cfg: SchedulerConfig,
+    /// Submission order == service order (oldest first).
+    tasks: Vec<InFlight>,
+    rows: RowBuf,
+    out: DecodeOut,
+    /// (task index, row start, row end) staged this tick.
+    staged: Vec<(usize, usize, usize)>,
+    next_id: u64,
+    pub stats: FusedStats,
+}
+
+impl DecodeScheduler {
+    pub fn new(mut cfg: SchedulerConfig) -> Self {
+        cfg.max_rows = cfg.max_rows.max(1);
+        Self {
+            cfg,
+            tasks: Vec::new(),
+            rows: RowBuf::new(),
+            out: DecodeOut::default(),
+            staged: Vec::new(),
+            next_id: 1,
+            stats: FusedStats::default(),
+        }
+    }
+
+    /// Park a task; it joins the very next tick's fused call.
+    pub fn submit(&mut self, task: Box<dyn DecodeTask>) -> TaskId {
+        let id = TaskId(self.next_id);
+        self.next_id += 1;
+        self.stats.tasks_submitted += 1;
+        self.tasks.push(InFlight { id, task, done: false });
+        id
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Total arena nodes across in-flight tasks (memory diagnostics).
+    pub fn arena_nodes(&self) -> usize {
+        self.tasks.iter().map(|t| t.task.arena_nodes()).sum()
+    }
+
+    /// Run one fused decode over as many tasks' pending rows as the
+    /// budget admits (oldest-first), absorb the results, and append
+    /// retired tasks to `finished`. Returns the number of logical rows
+    /// fused this tick (0 when the scheduler only retired tasks or is
+    /// idle).
+    pub fn tick(&mut self, model: &dyn StepModel, finished: &mut Vec<Finished>) -> Result<usize> {
+        self.rows.begin();
+        self.staged.clear();
+        let mut win = 1usize;
+        let mut done_any = false;
+        for (i, slot) in self.tasks.iter_mut().enumerate() {
+            if self.rows.len() >= self.cfg.max_rows {
+                break; // budget exhausted; younger tasks wait (oldest-first)
+            }
+            let start = self.rows.len();
+            match slot.task.next_rows(&mut self.rows) {
+                TaskState::Done => {
+                    slot.done = true;
+                    done_any = true;
+                }
+                TaskState::Need { win: w } => {
+                    let end = self.rows.len();
+                    if end > self.cfg.max_rows && !self.staged.is_empty() {
+                        // Doesn't fit: put its rows back and stop — no
+                        // younger task may jump the queue past it.
+                        self.rows.truncate_to(start);
+                        break;
+                    }
+                    win = win.max(w);
+                    self.staged.push((i, start, end));
+                }
+            }
+        }
+
+        let fused_rows = self.rows.len();
+        if !self.staged.is_empty() {
+            model.decode_into(&self.rows.rows, win, &mut self.out)?;
+            self.stats.fused_calls += 1;
+            self.stats.rows_logical += fused_rows as u64;
+            self.stats.rows_padded += self.out.padded_rows as u64;
+            for &(i, start, end) in &self.staged {
+                let slot = &mut self.tasks[i];
+                let st = slot.task.stats_mut();
+                st.model_calls += 1;
+                st.rows_logical += (end - start) as u64;
+                st.rows_padded += model.pad_rows(end - start) as u64;
+                slot.task.absorb(&self.out, start..end);
+            }
+        }
+
+        if done_any {
+            let mut kept = Vec::with_capacity(self.tasks.len());
+            for slot in std::mem::take(&mut self.tasks) {
+                if slot.done {
+                    let (outputs, stats) = slot.task.finish(model);
+                    self.stats.tasks_finished += 1;
+                    finished.push(Finished { id: slot.id, outputs, stats });
+                } else {
+                    kept.push(slot);
+                }
+            }
+            self.tasks = kept;
+        }
+        Ok(fused_rows)
+    }
+
+    /// Tick until every in-flight task has retired.
+    pub fn run_to_idle(
+        &mut self,
+        model: &dyn StepModel,
+        finished: &mut Vec<Finished>,
+    ) -> Result<()> {
+        while !self.is_idle() {
+            self.tick(model, finished)?;
+        }
+        Ok(())
+    }
+
+    /// Drop every in-flight task, releasing its device memory. Used on
+    /// decode failure: partial outputs are discarded.
+    pub fn abort(&mut self, model: &dyn StepModel) {
+        for slot in std::mem::take(&mut self.tasks) {
+            let _ = slot.task.finish(model);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoding::{beam::BeamSearch, msbs::Msbs, DecodeStats, Decoder};
+    use crate::model::mock::{MockConfig, MockModel};
+    use crate::tokenizer::{BOS, EOS};
+
+    fn src(tokens: &[i32]) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend_from_slice(tokens);
+        v.push(EOS);
+        v
+    }
+
+    fn groups() -> Vec<Vec<Vec<i32>>> {
+        vec![
+            vec![src(&[5, 6, 7, 8]), src(&[9, 10, 11])],
+            vec![src(&[12, 13, 14, 15, 16])],
+            vec![src(&[6, 8, 10])],
+        ]
+    }
+
+    #[test]
+    fn fused_ticks_match_solo_generate() {
+        let dec = BeamSearch::optimized();
+        // Solo reference on its own model, sequential (same encode-id
+        // order as the scheduler run below).
+        let solo_model = MockModel::new(MockConfig::default());
+        let mut solo = Vec::new();
+        for g in groups() {
+            let mut st = DecodeStats::default();
+            let out = dec.generate(&solo_model, &g, 3, &mut st).unwrap();
+            solo.push((out, st));
+        }
+        // Fused: all three tasks share every tick.
+        let model = MockModel::new(MockConfig::default());
+        let mut sched = DecodeScheduler::new(SchedulerConfig::default());
+        let mut ids = Vec::new();
+        for g in groups() {
+            ids.push(sched.submit(dec.start_task(&model, &g, 3).unwrap()));
+        }
+        let mut finished = Vec::new();
+        sched.run_to_idle(&model, &mut finished).unwrap();
+        assert_eq!(finished.len(), 3);
+        for (i, id) in ids.iter().enumerate() {
+            let f = finished.iter().find(|f| f.id == *id).unwrap();
+            let (want_out, want_st) = &solo[i];
+            assert_eq!(f.outputs.len(), want_out.len());
+            for (a, b) in f.outputs.iter().zip(want_out.iter()) {
+                for (x, y) in a.hyps.iter().zip(b.hyps.iter()) {
+                    assert_eq!(x.tokens, y.tokens);
+                    assert!((x.logp - y.logp).abs() < 1e-9);
+                }
+            }
+            assert_eq!(f.stats.model_calls, want_st.model_calls);
+            assert_eq!(f.stats.rows_logical, want_st.rows_logical);
+            assert_eq!(f.stats.rows_padded, want_st.rows_padded);
+        }
+        // Fusion actually fused: fewer device calls than the solo total.
+        let solo_calls: u64 = solo.iter().map(|(_, st)| st.model_calls).sum();
+        assert!(
+            sched.stats.fused_calls < solo_calls,
+            "fused {} !< solo {}",
+            sched.stats.fused_calls,
+            solo_calls
+        );
+        assert_eq!(sched.stats.tasks_finished, 3);
+    }
+
+    #[test]
+    fn budget_defers_youngest_without_changing_results() {
+        let dec = Msbs::default();
+        let solo_model = MockModel::new(MockConfig::default());
+        let mut solo = Vec::new();
+        for g in groups() {
+            let mut st = DecodeStats::default();
+            let out = dec.generate(&solo_model, &g, 4, &mut st).unwrap();
+            solo.push((out, st));
+        }
+        let model = MockModel::new(MockConfig::default());
+        // Tiny budget: most ticks carry a single task's rows.
+        let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4 });
+        let mut ids = Vec::new();
+        for g in groups() {
+            ids.push(sched.submit(dec.start_task(&model, &g, 4).unwrap()));
+        }
+        let mut finished = Vec::new();
+        sched.run_to_idle(&model, &mut finished).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            let f = finished.iter().find(|f| f.id == *id).unwrap();
+            let (want_out, want_st) = &solo[i];
+            for (a, b) in f.outputs.iter().zip(want_out.iter()) {
+                assert_eq!(a.hyps[0].tokens, b.hyps[0].tokens);
+            }
+            assert_eq!(f.stats.model_calls, want_st.model_calls, "task {i}");
+            assert_eq!(f.stats.rows_logical, want_st.rows_logical, "task {i}");
+        }
+    }
+
+    #[test]
+    fn abort_releases_encoder_memory() {
+        let dec = BeamSearch::vanilla();
+        let model = MockModel::new(MockConfig::default());
+        let mut sched = DecodeScheduler::new(SchedulerConfig::default());
+        sched.submit(dec.start_task(&model, &groups()[0], 2).unwrap());
+        let mut finished = Vec::new();
+        sched.tick(&model, &mut finished).unwrap();
+        sched.abort(&model);
+        assert!(sched.is_idle());
+        // A fresh task still works and ids keep advancing.
+        let id = sched.submit(dec.start_task(&model, &groups()[1], 2).unwrap());
+        assert!(id.0 >= 2);
+        sched.run_to_idle(&model, &mut finished).unwrap();
+        assert_eq!(finished.len(), 1);
+    }
+
+    #[test]
+    fn idle_tick_is_a_noop() {
+        let model = MockModel::new(MockConfig::default());
+        let mut sched = DecodeScheduler::new(SchedulerConfig::default());
+        let mut finished = Vec::new();
+        assert_eq!(sched.tick(&model, &mut finished).unwrap(), 0);
+        assert!(finished.is_empty());
+        assert_eq!(sched.stats.fused_calls, 0);
+    }
+}

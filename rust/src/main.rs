@@ -73,11 +73,14 @@ fn main() -> Result<()> {
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "retroserve — transformer retrosynthesis serving with speculative beam search\n\
+                "retroserve — transformer retrosynthesis serving with speculative beam \
+                 search\n\
                  \n\
                  usage:\n\
-                 retroserve serve  [--config FILE] [--listen ADDR] [--decoder bs|bs-opt|hsbs|msbs]\n\
-                 retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] [--deadline-ms N]\n\
+                 retroserve serve  [--config FILE] [--listen ADDR] \
+                 [--decoder bs|bs-opt|hsbs|msbs]\n\
+                 retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] \
+                 [--deadline-ms N]\n\
                  [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
                  retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR]\n\
                  retroserve info   [--artifacts DIR]"
@@ -111,6 +114,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         BatcherConfig {
             max_batch: sc.batch_max,
             max_wait: std::time::Duration::from_micros(sc.batch_wait_us),
+            max_rows: sc.batch_rows,
+            cache_cap: sc.cache_cap,
         },
         metrics.clone(),
     )?;

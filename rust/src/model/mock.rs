@@ -132,12 +132,24 @@ impl StepModel for MockModel {
     }
 
     fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        let mut out = DecodeOut::default();
+        self.decode_into(rows, win, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
         self.decode_calls.fetch_add(1, Ordering::Relaxed);
         let store = self.store.lock().unwrap();
         let heads = self.cfg.medusa_heads + 1;
         let vocab = self.cfg.vocab;
-        let mut data = vec![0f32; rows.len() * win * heads * vocab];
-        let mut starts = Vec::with_capacity(rows.len());
+        out.data.clear();
+        out.data.resize(rows.len() * win * heads * vocab, 0f32);
+        out.starts.clear();
+        out.rows = rows.len();
+        out.win = win;
+        out.heads = heads;
+        out.vocab = vocab;
+        out.padded_rows = self.pad_rows(rows.len());
         for (r, row) in rows.iter().enumerate() {
             let srcs = store
                 .get(&row.mem.0)
@@ -146,7 +158,7 @@ impl StepModel for MockModel {
             // emulate the dynamic_slice clamp against the padded length
             let padded = self.cfg.max_tgt;
             let start = row.pos.min(padded - win);
-            starts.push(start);
+            out.starts.push(start);
             for j in 0..win {
                 let p = start + j;
                 for h in 0..heads {
@@ -160,7 +172,8 @@ impl StepModel for MockModel {
                             .head_base_acc
                             .saturating_sub(self.cfg.head_acc_decay * h as u32);
                         if (self.hash(row.mem.0 * 131 + row.mem_row as u64, p as u64, h as u64)
-                            % 100) < acc as u64
+                            % 100)
+                            < acc as u64
                         {
                             correct
                         } else {
@@ -169,7 +182,7 @@ impl StepModel for MockModel {
                     };
                     let alt = self.alt(emitted, p);
                     let base = ((r * win + j) * heads + h) * vocab;
-                    let slice = &mut data[base..base + vocab];
+                    let slice = &mut out.data[base..base + vocab];
                     for s in slice.iter_mut() {
                         *s = -4.0;
                     }
@@ -178,15 +191,7 @@ impl StepModel for MockModel {
                 }
             }
         }
-        Ok(DecodeOut {
-            data,
-            rows: rows.len(),
-            win,
-            heads,
-            vocab,
-            starts,
-            padded_rows: rows.len().next_power_of_two(),
-        })
+        Ok(())
     }
 
     fn release(&self, mem: MemHandle) {
@@ -228,7 +233,11 @@ mod tests {
 
     #[test]
     fn medusa_heads_predict_ahead() {
-        let m = MockModel::new(MockConfig { head_base_acc: 100, head_acc_decay: 0, ..Default::default() });
+        let m = MockModel::new(MockConfig {
+            head_base_acc: 100,
+            head_acc_decay: 0,
+            ..Default::default()
+        });
         let h = m.encode(&[src_seq()]).unwrap();
         let out = m
             .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
@@ -247,8 +256,12 @@ mod tests {
         let m2 = MockModel::new(cfg);
         let h1 = m1.encode(&[src_seq()]).unwrap();
         let h2 = m2.encode(&[src_seq()]).unwrap();
-        let r1 = m1.decode(&[DecodeRow { mem: h1, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1).unwrap();
-        let r2 = m2.decode(&[DecodeRow { mem: h2, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1).unwrap();
+        let r1 = m1
+            .decode(&[DecodeRow { mem: h1, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .unwrap();
+        let r2 = m2
+            .decode(&[DecodeRow { mem: h2, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .unwrap();
         assert_eq!(r1.data, r2.data);
         // at 50% accuracy some head must disagree with the oracle
         let mut wrong = 0;
@@ -269,6 +282,36 @@ mod tests {
             .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 14 }], 8)
             .unwrap();
         assert_eq!(out.starts[0], 8); // min(14, 16-8)
+    }
+
+    #[test]
+    fn decode_into_recycles_buffers() {
+        let m = MockModel::new(MockConfig::default());
+        let h = m.encode(&[src_seq()]).unwrap();
+        let row = DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 };
+        let mut out = DecodeOut::default();
+        m.decode_into(std::slice::from_ref(&row), 2, &mut out).unwrap();
+        let want = m.decode(std::slice::from_ref(&row), 2).unwrap();
+        assert_eq!(out.data, want.data);
+        assert_eq!(out.starts, want.starts);
+        assert_eq!(out.padded_rows, want.padded_rows);
+        let ptr = out.data.as_ptr();
+        // Refill with a smaller window: same backing buffer.
+        m.decode_into(std::slice::from_ref(&row), 1, &mut out).unwrap();
+        assert_eq!(ptr, out.data.as_ptr(), "data buffer must be recycled");
+        assert_eq!(out.win, 1);
+    }
+
+    #[test]
+    fn pad_rows_is_next_power_of_two() {
+        let m = MockModel::new(MockConfig::default());
+        let h = m.encode(&[src_seq(), src_seq(), src_seq()]).unwrap();
+        let rows: Vec<DecodeRow> = (0..3)
+            .map(|i| DecodeRow { mem: h, mem_row: i, tgt: vec![BOS], pos: 0 })
+            .collect();
+        let out = m.decode(&rows, 1).unwrap();
+        assert_eq!(out.padded_rows, m.pad_rows(3));
+        assert_eq!(out.padded_rows, 4);
     }
 
     #[test]

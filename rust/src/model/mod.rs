@@ -37,7 +37,12 @@ pub struct DecodeRow {
 }
 
 /// Logits for a window of positions per row: `(rows, win, heads, vocab)`.
-#[derive(Debug, Clone)]
+///
+/// `Default` yields an empty buffer suitable for
+/// [`StepModel::decode_into`]: callers keep one `DecodeOut` alive across
+/// calls and the implementation refills `data`/`starts` in place, so
+/// steady-state decode output costs no heap allocation.
+#[derive(Debug, Clone, Default)]
 pub struct DecodeOut {
     pub data: Vec<f32>,
     pub rows: usize,
@@ -94,6 +99,24 @@ pub trait StepModel {
     /// Run the decoder on `rows`, returning a `win`-wide logits window
     /// per row. One invocation = one model call (Table 1B accounting).
     fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut>;
+    /// [`StepModel::decode`] into a caller-owned buffer. The default
+    /// delegates to `decode` (allocating); implementations that can
+    /// refill `out.data`/`out.starts` in place (mock, shared-model
+    /// executor) override it so the decoding hot loop and the fused
+    /// scheduler recycle one output buffer across calls.
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        *out = self.decode(rows, win)?;
+        Ok(())
+    }
+    /// Padded (device-submitted) row count for a batch of `n` logical
+    /// rows — the number `decode` reports in `DecodeOut::padded_rows`.
+    /// Used for per-task Table 1C accounting when several tasks share
+    /// one fused call: each task is charged what the device *would*
+    /// have padded had it decoded alone, which is what solo `generate`
+    /// reports. Default: next power of two (the mock's rule).
+    fn pad_rows(&self, n: usize) -> usize {
+        n.next_power_of_two()
+    }
     /// Drop an encoded batch.
     fn release(&self, mem: MemHandle);
 }
@@ -116,6 +139,12 @@ impl<T: StepModel + ?Sized> StepModel for Box<T> {
     }
     fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
         (**self).decode(rows, win)
+    }
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        (**self).decode_into(rows, win, out)
+    }
+    fn pad_rows(&self, n: usize) -> usize {
+        (**self).pad_rows(n)
     }
     fn release(&self, mem: MemHandle) {
         (**self).release(mem)

@@ -385,6 +385,20 @@ impl StepModel for PjrtModel {
     fn release(&self, mem: MemHandle) {
         self.mems.lock().unwrap().remove(&mem.0);
     }
+
+    fn pad_rows(&self, n: usize) -> usize {
+        // Mirror `decode`'s chunking + row-bucket pick so per-task
+        // accounting under the fused scheduler matches what a solo
+        // decode would have reported.
+        let max = *self.cfg.dec_row_buckets.iter().max().unwrap_or(&1);
+        let (full, rem) = (n / max, n % max);
+        let tail = if rem > 0 {
+            Self::pick_bucket(&self.cfg.dec_row_buckets, rem).unwrap_or(max)
+        } else {
+            0
+        };
+        full * max + tail
+    }
 }
 
 #[cfg(all(test, feature = "pjrt"))]

@@ -15,6 +15,10 @@ use std::sync::{Arc, Mutex};
 enum Req {
     Encode(Vec<Vec<i32>>, mpsc::SyncSender<Result<MemHandle>>),
     Decode(Vec<DecodeRow>, usize, mpsc::SyncSender<Result<DecodeOut>>),
+    /// `decode_into` round trip: the caller's output buffer travels to
+    /// the executor thread, is refilled in place there, and comes back —
+    /// so buffer recycling survives the thread hop.
+    DecodeInto(Vec<DecodeRow>, usize, Box<DecodeOut>, mpsc::SyncSender<Result<Box<DecodeOut>>>),
     Release(MemHandle),
     Shutdown,
 }
@@ -91,6 +95,10 @@ impl SharedModel {
                         Req::Decode(rows, win, reply) => {
                             let _ = reply.send(model.decode(&rows, win));
                         }
+                        Req::DecodeInto(rows, win, mut buf, reply) => {
+                            let r = model.decode_into(&rows, win, &mut buf).map(|()| buf);
+                            let _ = reply.send(r);
+                        }
                         Req::Release(h) => model.release(h),
                         Req::Shutdown => break,
                     }
@@ -143,6 +151,17 @@ impl StepModel for SharedModel {
         rx.recv().map_err(|_| anyhow!("model thread gone"))?
     }
 
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let buf = Box::new(std::mem::take(out));
+        self.tx
+            .send(Req::DecodeInto(rows.to_vec(), win, buf, tx))
+            .map_err(|_| anyhow!("model thread gone"))?;
+        let filled = rx.recv().map_err(|_| anyhow!("model thread gone"))??;
+        *out = *filled;
+        Ok(())
+    }
+
     fn release(&self, mem: MemHandle) {
         let _ = self.tx.send(Req::Release(mem));
     }
@@ -166,6 +185,20 @@ mod tests {
         shared.release(h);
         assert_eq!(shared.vocab(), 26);
         assert_eq!(shared.medusa_heads(), 6);
+    }
+
+    #[test]
+    fn shared_model_decode_into_matches_decode() {
+        let shared =
+            SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
+        let h = shared.encode(&[vec![BOS, 5, 6, 7, EOS]]).unwrap();
+        let row = DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 };
+        let want = shared.decode(std::slice::from_ref(&row), 2).unwrap();
+        let mut out = DecodeOut::default();
+        shared.decode_into(std::slice::from_ref(&row), 2, &mut out).unwrap();
+        assert_eq!(out.data, want.data);
+        assert_eq!(out.starts, want.starts);
+        shared.release(h);
     }
 
     #[test]

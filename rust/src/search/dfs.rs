@@ -30,7 +30,12 @@ impl<'a> Ctx<'a> {
             || self.iterations >= self.limits.max_iterations
     }
 
-    fn solve_mol(&mut self, smiles: &str, budget: usize, path: &mut Vec<String>) -> Result<Option<Route>> {
+    fn solve_mol(
+        &mut self,
+        smiles: &str,
+        budget: usize,
+        path: &mut Vec<String>,
+    ) -> Result<Option<Route>> {
         if self.stock.contains(smiles) {
             return Ok(Some(Route::Leaf { smiles: smiles.to_string() }));
         }

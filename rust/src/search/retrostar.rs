@@ -299,7 +299,12 @@ impl Planner for RetroStar {
                         .map(|r| g.get_or_insert(r, depth + 1, stock))
                         .collect();
                     let ri = g.rxns.len();
-                    g.rxns.push(RxnNode { product, reactants: reactants.clone(), cost, logp: p.logp });
+                    g.rxns.push(RxnNode {
+                        product,
+                        reactants: reactants.clone(),
+                        cost,
+                        logp: p.logp,
+                    });
                     g.mols[product].child_rxns.push(ri);
                     for &c in &reactants {
                         g.mols[c].parent_rxns.push(ri);

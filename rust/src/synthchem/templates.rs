@@ -372,11 +372,19 @@ pub fn find_disconnections(m: &Molecule) -> Vec<Disconnection> {
             }
             // Sulfonamide: sulfonyl S — N
             if is_sulfonyl_s(m, x) && ay.element == Element::N && !ay.aromatic {
-                out.push(Disconnection { template: Template::Sulfonamide, bond: bi, flipped: x > y });
+                out.push(Disconnection {
+                    template: Template::Sulfonamide,
+                    bond: bi,
+                    flipped: x > y,
+                });
             }
             // Sonogashira: sp C — aromatic c
             if is_sp_carbon(m, x) && ay.element == Element::C && ay.aromatic {
-                out.push(Disconnection { template: Template::Sonogashira, bond: bi, flipped: x > y });
+                out.push(Disconnection {
+                    template: Template::Sonogashira,
+                    bond: bi,
+                    flipped: x > y,
+                });
             }
             // N-alkylation: plain N — sp3 C (no carbonyl/sulfonyl on N side)
             if ax.element == Element::N
@@ -387,8 +395,13 @@ pub fn find_disconnections(m: &Molecule) -> Vec<Disconnection> {
                 && boc_group_on_n(m, x).is_none()
             {
                 // both leaving halides are plausible precursors
-                out.push(Disconnection { template: Template::NAlkylation, bond: bi, flipped: false });
-                out.push(Disconnection { template: Template::NAlkylation, bond: bi, flipped: true });
+                for flipped in [false, true] {
+                    out.push(Disconnection {
+                        template: Template::NAlkylation,
+                        bond: bi,
+                        flipped,
+                    });
+                }
             }
         }
         // Heteroatom-split templates; the C–O/C–S orientation is fixed by
@@ -435,7 +448,11 @@ pub fn find_disconnections(m: &Molecule) -> Vec<Disconnection> {
                 .iter()
                 .find(|&&(u, b2)| m.bonds[b2].order == BondOrder::Single && is_carbonyl_c(m, u))
             {
-                out.push(Disconnection { template: Template::BocProtection, bond: bi, flipped: false });
+                out.push(Disconnection {
+                    template: Template::BocProtection,
+                    bond: bi,
+                    flipped: false,
+                });
             }
         }
     }
@@ -552,7 +569,9 @@ pub fn forward_join(
         }
         (Template::Ether, P::Alcohol(o), P::AlkylHalide(cx, x)) => (o, vec![], cx, vec![x]),
         (Template::Thioether, P::Thiol(s), P::AlkylHalide(cx, x)) => (s, vec![], cx, vec![x]),
-        (Template::Sulfonamide, P::SulfonylChloride(s, cl), P::Amine(n)) => (s, vec![cl], n, vec![]),
+        (Template::Sulfonamide, P::SulfonylChloride(s, cl), P::Amine(n)) => {
+            (s, vec![cl], n, vec![])
+        }
         (Template::Suzuki, P::BoronicAcid(c, bb), P::ArylBromide(c2, br)) => {
             // remove B and its two oxygens
             let mut rm = vec![bb];
@@ -634,7 +653,8 @@ mod tests {
             .unwrap()
             .0;
         let n = amine.atoms.iter().position(|a| a.element == Element::N).unwrap();
-        let j = forward_join(Template::Amide, &acid, Port::Acid(c), &amine, Port::Amine(n)).unwrap();
+        let j = forward_join(Template::Amide, &acid, Port::Acid(c), &amine, Port::Amine(n))
+            .unwrap();
         let product = canonical_smiles(&j.product);
         assert_eq!(product, canonical_smiles(&mol("CC(=O)NC")));
 
@@ -714,7 +734,12 @@ mod tests {
         let ba = mol("OB(O)c1ccccc1");
         let arbr = mol("Brc1ccncc1");
         let b_atom = ba.atoms.iter().position(|a| a.element == Element::B).unwrap();
-        let c_anchor = ba.neighbors(b_atom).iter().find(|&&(u, _)| ba.atoms[u].element == Element::C).unwrap().0;
+        let c_anchor = ba
+            .neighbors(b_atom)
+            .iter()
+            .find(|&&(u, _)| ba.atoms[u].element == Element::C)
+            .unwrap()
+            .0;
         let br = arbr.atoms.iter().position(|a| a.element == Element::Br).unwrap();
         let c2 = arbr.neighbors(br)[0].0;
         let j = forward_join(

@@ -1,8 +1,10 @@
 //! Decoding-engine integration over the mock model: cross-engine
-//! agreement, Table-1-style statistics shape, and batch-size scaling
-//! behaviour.
+//! agreement, Table-1-style statistics shape, batch-size scaling
+//! behaviour, and arena-compaction memory bounds.
 
-use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
+use retroserve::decoding::{
+    beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, DecodeTask, Decoder, RowBuf, TaskState,
+};
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::tokenizer::{BOS, EOS};
 use retroserve::util::Rng;
@@ -87,6 +89,46 @@ fn table1_stat_shape_bs_vs_msbs() {
     assert_eq!(bs.avg_effective_batch(), 40.0);
     let a = ms.acceptance_rate();
     assert!(a > 0.3 && a <= 1.0, "{a}");
+}
+
+#[test]
+fn arena_compaction_bounds_node_growth() {
+    // Long sequence + wide beam: the pre-compaction design retained
+    // every discarded candidate node until `generate` returned — here
+    // roughly K*K pushes per cycle for ~88 cycles (> 20k nodes). With
+    // per-cycle compaction the live set is the K beams' chains
+    // (<= K * len ~ 1.4k nodes) and the trigger re-arms at 4x live, so
+    // the observed peak must stay well under the uncompacted total.
+    let model = MockModel::new(MockConfig { max_src: 80, max_tgt: 90, ..Default::default() });
+    let body: Vec<i32> = (0..64).map(|i| 4 + (i % 20)).collect();
+    let mut src = vec![BOS];
+    src.extend_from_slice(&body);
+    src.push(EOS);
+    let k = 16;
+    let dec = BeamSearch::vanilla();
+    let mut task = dec.start_task(&model, &[src], k).unwrap();
+    let mut rows = RowBuf::new();
+    let mut peak = 0usize;
+    let mut cycles = 0usize;
+    loop {
+        rows.begin();
+        match task.next_rows(&mut rows) {
+            TaskState::Done => break,
+            TaskState::Need { win } => {
+                cycles += 1;
+                let out = model.decode(&rows.rows, win).unwrap();
+                task.absorb(&out, 0..rows.rows.len());
+                peak = peak.max(task.arena_nodes());
+            }
+        }
+    }
+    // ~k*k candidate pushes per cycle over this many cycles is what the
+    // uncompacted arena would retain; the bound below is far under it.
+    assert!(cycles > 50, "expected a long decode, got {cycles} cycles");
+    assert!(peak < 10_000, "arena peaked at {peak} nodes over {cycles} cycles");
+    // Compaction must not disturb results: top-1 is still the copy task.
+    let (outs, _) = task.finish(&model);
+    assert_eq!(outs[0].hyps[0].body(), &body[..]);
 }
 
 #[test]

@@ -25,7 +25,11 @@ fn ctx() -> ServerCtx {
         model,
         Box::new(Msbs::default()),
         vocab,
-        BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(2) },
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+            ..Default::default()
+        },
         metrics.clone(),
     );
     ServerCtx {
@@ -87,7 +91,12 @@ fn malformed_requests_do_not_kill_the_connection() {
     let mut c = Client::connect(server.addr()).unwrap();
     let r = c.call(Json::obj(vec![("op", Json::str("plan"))])).unwrap(); // missing smiles
     assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
-    let r = c.call(Json::obj(vec![("op", Json::str("expand")), ("smiles", Json::str("not-smiles(("))])).unwrap();
+    let r = c
+        .call(Json::obj(vec![
+            ("op", Json::str("expand")),
+            ("smiles", Json::str("not-smiles((")),
+        ]))
+        .unwrap();
     assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false));
     // connection still alive
     let r = c.call(Json::obj(vec![("op", Json::str("ping"))])).unwrap();

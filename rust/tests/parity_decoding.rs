@@ -633,6 +633,132 @@ fn msbs_matches_seed_reference() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Scheduler parity: fusing many tasks' rows into shared device calls
+// (with staggered joins and row-budget deferrals) must be invisible in
+// the results — identical hypotheses, logp within 1e-9, and per-task
+// DecodeStats identical to solo `generate`.
+//
+// The solo references run sequentially on ONE fresh model so encode
+// handles are assigned in the same order as the scheduler run (the
+// mock's Medusa corruption hash keys on the handle id).
+// ---------------------------------------------------------------------
+
+use retroserve::decoding::scheduler::{DecodeScheduler, SchedulerConfig};
+use retroserve::decoding::GenOutput;
+
+fn engines() -> Vec<Box<dyn Decoder>> {
+    vec![
+        Box::new(BeamSearch::vanilla()),
+        Box::new(BeamSearch::optimized()),
+        Box::new(Hsbs::new(3, 10)),
+        Box::new(Msbs::default()),
+    ]
+}
+
+/// Three task groups of different shapes and beam widths.
+fn task_groups(rng: &mut Rng, vocab: usize) -> Vec<(Vec<Vec<i32>>, usize)> {
+    vec![
+        (random_srcs(rng, 2, 14, vocab), 3),
+        (random_srcs(rng, 1, 20, vocab), 5),
+        (random_srcs(rng, 3, 10, vocab), 2),
+    ]
+}
+
+fn solo_reference(
+    cfg: &MockConfig,
+    dec: &dyn Decoder,
+    groups: &[(Vec<Vec<i32>>, usize)],
+) -> Vec<(Vec<GenOutput>, DecodeStats)> {
+    let model = MockModel::new(cfg.clone());
+    groups
+        .iter()
+        .map(|(srcs, k)| {
+            let mut st = DecodeStats::default();
+            let out = dec.generate(&model, srcs, *k, &mut st).unwrap();
+            (out, st)
+        })
+        .collect()
+}
+
+fn assert_finished_matches(
+    label: &str,
+    got_out: &[GenOutput],
+    got_stats: &DecodeStats,
+    want: &(Vec<GenOutput>, DecodeStats),
+) {
+    assert_eq!(got_out.len(), want.0.len(), "{label}: query count");
+    for (q, (g, w)) in got_out.iter().zip(want.0.iter()).enumerate() {
+        assert_eq!(g.hyps.len(), w.hyps.len(), "{label} q{q}: hyp count");
+        for (i, (gh, wh)) in g.hyps.iter().zip(w.hyps.iter()).enumerate() {
+            assert_eq!(gh.tokens, wh.tokens, "{label} q{q} hyp{i}: tokens");
+            assert!(
+                (gh.logp - wh.logp).abs() < 1e-9,
+                "{label} q{q} hyp{i}: logp {} vs {}",
+                gh.logp,
+                wh.logp
+            );
+        }
+    }
+    assert_stats_match(label, got_stats, &want.1);
+}
+
+fn run_scheduler_parity(max_rows: usize, stagger: bool) {
+    for cfg in [
+        MockConfig::default(),
+        MockConfig { head_base_acc: 55, head_acc_decay: 5, ..Default::default() },
+    ] {
+        for dec in engines() {
+            let mut rng = Rng::new(0xBEEF ^ max_rows as u64);
+            let groups = task_groups(&mut rng, cfg.vocab);
+            let solo = solo_reference(&cfg, dec.as_ref(), &groups);
+
+            let model = MockModel::new(cfg.clone());
+            let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows });
+            let mut finished = Vec::new();
+            let mut ids = Vec::new();
+            for (gi, (srcs, k)) in groups.iter().enumerate() {
+                ids.push(sched.submit(dec.start_task(&model, srcs, *k).unwrap()));
+                if stagger && gi + 1 < groups.len() {
+                    // Let earlier tasks advance a cycle or two before the
+                    // next one joins mid-flight.
+                    for _ in 0..=gi {
+                        sched.tick(&model, &mut finished).unwrap();
+                    }
+                }
+            }
+            sched.run_to_idle(&model, &mut finished).unwrap();
+            assert_eq!(finished.len(), groups.len());
+            for (gi, id) in ids.iter().enumerate() {
+                let f = finished.iter().find(|f| f.id == *id).unwrap();
+                let label = format!(
+                    "{} max_rows={max_rows} stagger={stagger} task{gi}",
+                    dec.name()
+                );
+                assert_finished_matches(&label, &f.outputs, &f.stats, &solo[gi]);
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduler_interleaving_matches_solo_generate() {
+    // Unbounded-ish budget: every tick fuses all live tasks.
+    run_scheduler_parity(4096, false);
+}
+
+#[test]
+fn scheduler_staggered_joins_match_solo_generate() {
+    run_scheduler_parity(4096, true);
+}
+
+#[test]
+fn scheduler_row_budget_deferral_matches_solo_generate() {
+    // Tiny budget: head-of-line blocking constantly defers younger
+    // tasks; results and per-task stats must not change.
+    run_scheduler_parity(6, true);
+}
+
 #[test]
 fn hsbs_matches_seed_reference() {
     for (si, sc) in scenarios().iter().enumerate() {

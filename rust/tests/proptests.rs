@@ -111,10 +111,11 @@ fn prop_speculative_decoders_match_beam_search_top1() {
         let k = 4 + rng.gen_range(7); // 4..=10
         let mut s_bs = DecodeStats::default();
         let bs = BeamSearch::vanilla().generate(&model, &srcs, k, &mut s_bs).unwrap();
-        for (name, out) in [
-            ("msbs", Msbs::default().generate(&model, &srcs, k, &mut DecodeStats::default()).unwrap()),
-            ("hsbs", Hsbs::new(3, 6).generate(&model, &srcs, k, &mut DecodeStats::default()).unwrap()),
-        ] {
+        let mut s_ms = DecodeStats::default();
+        let ms = Msbs::default().generate(&model, &srcs, k, &mut s_ms).unwrap();
+        let mut s_hs = DecodeStats::default();
+        let hs = Hsbs::new(3, 6).generate(&model, &srcs, k, &mut s_hs).unwrap();
+        for (name, out) in [("msbs", ms), ("hsbs", hs)] {
             assert_eq!(
                 bs[0].hyps[0].tokens, out[0].hyps[0].tokens,
                 "trial {trial}: {name} top-1 mismatch"

@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Bench regression gate: diff a fresh BENCH_*.json against the
+committed baseline.
+
+Usage:
+    bench_regression.py BASELINE.json FRESH.json [--max-regress 0.15]
+
+Rules, per result name present in both files:
+  * `tokens_per_sec` may not drop more than --max-regress (relative) —
+    wall-clock throughput, inherently machine-noisy, hence the slack;
+  * `model_calls` may not increase at all — it is deterministic, so any
+    increase is an algorithmic regression, not noise.
+
+A missing or empty baseline passes with a warning (the first toolchain
+run populates it; see bench/baseline/README.md).
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return None
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def main(argv):
+    max_regress = 0.15
+    args = []
+    i = 1
+    while i < len(argv):
+        if argv[i] == "--max-regress":
+            max_regress = float(argv[i + 1])
+            i += 2
+            continue
+        args.append(argv[i])
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    baseline, fresh = load(args[0]), load(args[1])
+    if fresh is None:
+        print(f"FAIL: fresh results {args[1]} missing")
+        return 1
+    if not baseline:
+        print(f"WARN: baseline {args[0]} missing or empty; nothing to gate "
+              "(commit a populated baseline to arm this check)")
+        return 0
+    failures = []
+    for name, base in baseline.items():
+        cur = fresh.get(name)
+        if cur is None:
+            failures.append(f"{name}: present in baseline but not in fresh run")
+            continue
+        b_tps, c_tps = base.get("tokens_per_sec"), cur.get("tokens_per_sec")
+        if b_tps and c_tps is not None:
+            drop = (b_tps - c_tps) / b_tps
+            status = "FAIL" if drop > max_regress else "ok"
+            print(f"{status}: {name} tokens/sec {b_tps:.0f} -> {c_tps:.0f} "
+                  f"({-drop * 100.0:+.1f}%)")
+            if drop > max_regress:
+                failures.append(
+                    f"{name}: tokens/sec regressed {drop * 100.0:.1f}% "
+                    f"(> {max_regress * 100.0:.0f}%)")
+        b_mc, c_mc = base.get("model_calls"), cur.get("model_calls")
+        if b_mc is not None and c_mc is not None and c_mc > b_mc:
+            failures.append(
+                f"{name}: model_calls increased {b_mc:.0f} -> {c_mc:.0f}")
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
