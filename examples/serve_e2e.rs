@@ -66,6 +66,7 @@ fn main() -> Result<()> {
             default_limits: limits,
             default_algo: "retrostar".into(),
             default_beam_width: 1,
+            default_spec_depth: 1,
         },
     )?;
     let addr = server.addr();

@@ -1,0 +1,220 @@
+//! Search-layer comparison: blocking Retro\* vs speculative pipelined
+//! Retro\* over the SAME hub/scheduler serving stack, at **one**
+//! planning session.
+//!
+//! This is the gap PR 2 left open: the scheduler fuses decode cycles
+//! across sessions, but a solo blocking session keeps exactly one
+//! per-query task in flight, so every scheduler tick carries one task's
+//! rows (effective batch ≈ 1) and the tick count per solved molecule is
+//! the full serial sum of decode cycles. Speculative mode
+//! (`spec_depth = 4`) keeps the top-1 frontier expansion plus three
+//! next-best speculative expansions in flight as per-query futures, so
+//! one fused tick advances up to four expansions — the headline metric
+//! is **scheduler ticks per solved molecule**, which speculation should
+//! cut by ≥ 2x on this workload.
+//!
+//! The model is a [`ScriptedModel`] replaying the SynthChem oracle
+//! through real multi-cycle MSBS decoding, with a fixed synthetic
+//! device latency per fused call so tick counts dominate wall time the
+//! way device calls would. Emits `BENCH_search_pipelined.json`.
+
+use anyhow::Result;
+use retroserve::benchkit::{write_bench_json, BenchRecord};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::BatchedPolicy;
+use retroserve::decoding::msbs::Msbs;
+use retroserve::metrics::Metrics;
+use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
+use retroserve::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use retroserve::search::{retrostar::RetroStar, Planner, SearchLimits, SpecStats, Stock};
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
+use retroserve::tokenizer::Vocab;
+use retroserve::util::Rng;
+use std::sync::Arc;
+
+/// Synthetic device latency per fused decode call.
+const DEVICE_CALL_US: u64 = 150;
+const SPEC_DEPTH: usize = 4;
+const TARGETS: usize = 14;
+const K: usize = 8;
+
+/// Scripted model plus a fixed per-decode-call sleep (device time).
+struct DelayModel {
+    inner: ScriptedModel,
+    delay: std::time::Duration,
+}
+
+impl StepModel for DelayModel {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn medusa_heads(&self) -> usize {
+        self.inner.medusa_heads()
+    }
+    fn max_src(&self) -> usize {
+        self.inner.max_src()
+    }
+    fn max_tgt(&self) -> usize {
+        self.inner.max_tgt()
+    }
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        self.inner.encode(src)
+    }
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(rows, win)
+    }
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.decode_into(rows, win, out)
+    }
+    fn release(&self, mem: MemHandle) {
+        self.inner.release(mem)
+    }
+}
+
+fn workload() -> (Vec<String>, Stock, Vocab) {
+    let blocks = generate_blocks(71, 400);
+    let stock = Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+        retroserve::chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT).unwrap(),
+    ]));
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(0xBEEF);
+    let mut targets = Vec::new();
+    while targets.len() < TARGETS {
+        let depth = 2 + rng.gen_range(3);
+        if let Some(t) = gen_tree(&idx, &mut rng, depth, 26) {
+            targets.push(t.product_smiles().to_string());
+        }
+    }
+    let vocab = smiles_vocab(targets.iter().map(String::as_str));
+    (targets, stock, vocab)
+}
+
+struct RunReport {
+    solved: usize,
+    ticks: u64,
+    fused_rows: u64,
+    model_calls: u64,
+    wall_ms: f64,
+    spec: SpecStats,
+}
+
+fn run(targets: &[String], stock: &Stock, vocab: &Vocab, spec_depth: usize) -> RunReport {
+    // Fresh hub per discipline: identical cold caches, fair tick counts.
+    let hub = ExpansionHub::start(
+        DelayModel {
+            inner: ScriptedModel::new(vocab.clone(), oracle_script()),
+            delay: std::time::Duration::from_micros(DEVICE_CALL_US),
+        },
+        Box::new(Msbs::default()),
+        vocab.clone(),
+        BatcherConfig {
+            max_wait: std::time::Duration::from_micros(100),
+            max_rows: 1024,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let policy = BatchedPolicy::new(hub.clone());
+    let limits = SearchLimits {
+        deadline: std::time::Duration::from_secs(20),
+        max_iterations: 100,
+        max_depth: 5,
+        expansions_per_step: K,
+    };
+    let planner = RetroStar::new(1).with_spec_depth(spec_depth);
+    let mut solved = 0usize;
+    let mut spec = SpecStats::default();
+    let t0 = std::time::Instant::now();
+    for t in targets {
+        // spec_depth = 1 rides the classic blocking path; deeper rides
+        // per-query futures.
+        let r = if spec_depth == 1 {
+            planner.solve(t, &policy, stock, &limits).expect("solve")
+        } else {
+            planner
+                .solve_pipelined(t, &policy, stock, &limits)
+                .expect("solve_pipelined")
+        };
+        solved += r.solved as usize;
+        spec.groups_submitted += r.spec.groups_submitted;
+        spec.groups_applied += r.spec.groups_applied;
+        spec.groups_cancelled += r.spec.groups_cancelled;
+        spec.spec_hits += r.spec.spec_hits;
+        spec.max_in_flight = spec.max_in_flight.max(r.spec.max_in_flight);
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (ticks, fused_rows) = hub.fused_ratio();
+    RunReport {
+        solved,
+        ticks,
+        fused_rows,
+        model_calls: hub.stats().model_calls,
+        wall_ms,
+        spec,
+    }
+}
+
+fn main() {
+    println!(
+        "== search pipelined bench (msbs, K={K}, 1 session, device call {DEVICE_CALL_US}us) =="
+    );
+    let (targets, stock, vocab) = workload();
+    let mut records = Vec::new();
+    let mut reports = Vec::new();
+    for (name, sd) in [("search-blocking", 1usize), ("search-pipelined", SPEC_DEPTH)] {
+        let r = run(&targets, &stock, &vocab, sd);
+        let tps = r.ticks as f64 / (r.solved.max(1)) as f64;
+        let eff = r.fused_rows as f64 / (r.ticks.max(1)) as f64;
+        println!(
+            "{name:<17} spec_depth={sd}  solved {:>2}/{}  ticks {:>5}  ticks/solved {:>7.1}  \
+             eff.rows/tick {:>5.2}  wall {:>8.1}ms",
+            r.solved,
+            targets.len(),
+            r.ticks,
+            tps,
+            eff,
+            r.wall_ms
+        );
+        if sd > 1 {
+            println!(
+                "  speculation: submitted {} applied {} cancelled {} hits {} max_in_flight {}",
+                r.spec.groups_submitted,
+                r.spec.groups_applied,
+                r.spec.groups_cancelled,
+                r.spec.spec_hits,
+                r.spec.max_in_flight
+            );
+        }
+        records.push(
+            BenchRecord::new(name)
+                .metric("spec_depth", sd as f64)
+                .metric("solved", r.solved as f64)
+                .metric("targets", targets.len() as f64)
+                .metric("scheduler_ticks", r.ticks as f64)
+                .metric("ticks_per_solved", tps)
+                .metric("rows_per_tick", eff)
+                .metric("model_calls", r.model_calls as f64)
+                .metric("wall_ms", r.wall_ms)
+                .metric("spec_submitted", r.spec.groups_submitted as f64)
+                .metric("spec_cancelled", r.spec.groups_cancelled as f64)
+                .metric("spec_hits", r.spec.spec_hits as f64),
+        );
+        reports.push(r);
+    }
+    let (blocking, pipelined) = (&reports[0], &reports[1]);
+    let b_tps = blocking.ticks as f64 / blocking.solved.max(1) as f64;
+    let p_tps = pipelined.ticks as f64 / pipelined.solved.max(1) as f64;
+    let ratio = b_tps / p_tps.max(1e-9);
+    println!(
+        "  -> ticks/solved: blocking {b_tps:.1} vs pipelined {p_tps:.1} ({ratio:.2}x fewer; \
+         target >= 2x at 1 session)"
+    );
+    let path = std::path::Path::new("BENCH_search_pipelined.json");
+    match write_bench_json(path, "search-pipelined", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}

@@ -8,10 +8,14 @@
 //!
 //! `bench_table3 [--artifacts DIR] [--n 300] [--deadline-ms 5000]
 //! [--deadline2-ms 15000] [--k 10] [--max-iterations 500] [--mock]
-//! [--skip-dfs] [--oracle]`
+//! [--skip-dfs] [--oracle] [--share-cache]`
 //!
 //! Defaults scale the paper's 10k molecules down for the single-core
 //! testbed; the deadline flags let the run mirror the paper's 5 s / 15 s.
+//! `--share-cache` shares one molecule-keyed expansion cache across all
+//! conditions using the same decoder (warm-cache serving semantics —
+//! later conditions reuse earlier decodes); off by default to keep the
+//! paper-faithful cold-cache runs.
 
 use anyhow::Result;
 use retroserve::benchkit::{load_queries, warmup_model, Flags};
@@ -19,11 +23,14 @@ use retroserve::decoding::make_decoder;
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::model::StepModel;
 use retroserve::runtime::PjrtModel;
-use retroserve::search::policy::{ModelPolicy, OraclePolicy};
+use retroserve::search::policy::{
+    ModelPolicy, OraclePolicy, SharedExpansionCache, DEFAULT_CACHE_CAP,
+};
 use retroserve::search::{
     dfs::Dfs, retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock,
 };
 use retroserve::tokenizer::Vocab;
+use std::collections::HashMap;
 
 struct CondResult {
     solved: Vec<bool>,
@@ -49,8 +56,10 @@ fn run_condition(
     planner: &dyn Planner,
     decoder_name: &str,
     limits: &SearchLimits,
+    cache: Option<SharedExpansionCache>,
 ) -> Result<CondResult> {
-    // fresh model + policy per condition: no cache bleed between rows
+    // fresh model + policy per condition (no cache bleed between rows),
+    // unless --share-cache passed a condition-spanning cache in
     let mut solved = Vec::with_capacity(queries.len());
     let mut wall = Vec::with_capacity(queries.len());
     let mut iterations = Vec::with_capacity(queries.len());
@@ -60,7 +69,11 @@ fn run_condition(
     } else {
         let model = make_model(flags, art, vocab)?;
         warmup_model(model.as_ref(), vocab, &queries[0].smiles);
-        Box::new(ModelPolicy::new(model, make_decoder(decoder_name, 1)?, vocab.clone()))
+        let dec = make_decoder(decoder_name, 1)?;
+        match cache {
+            Some(c) => Box::new(ModelPolicy::with_shared_cache(model, dec, vocab.clone(), c)),
+            None => Box::new(ModelPolicy::new(model, dec, vocab.clone())),
+        }
     };
     for (i, q) in queries.iter().enumerate() {
         let r = planner.solve(&q.smiles, policy.as_ref(), stock, limits)?;
@@ -144,28 +157,54 @@ fn main() -> Result<()> {
         expansions_per_step: k,
     };
 
+    // --share-cache: one molecule-keyed cache per decoder, spanning
+    // every condition that decoder appears in.
+    let share = flags.has("share-cache");
+    let mut caches: HashMap<&str, SharedExpansionCache> = HashMap::new();
+    let mut cache_for = move |dec: &'static str| {
+        share.then(|| {
+            caches
+                .entry(dec)
+                .or_insert_with(|| SharedExpansionCache::new(DEFAULT_CACHE_CAP))
+                .clone()
+        })
+    };
+
     // DFS, deadline 1
     if !flags.has("skip-dfs") {
         eprintln!("condition: DFS {}ms BS", d1);
-        let bs = run_condition(&flags, &art, &vocab, &stock, &queries, &Dfs, "bs", &limits(d1))?;
+        let bs = run_condition(
+            &flags, &art, &vocab, &stock, &queries, &Dfs, "bs", &limits(d1), cache_for("bs"),
+        )?;
         eprintln!("condition: DFS {}ms MSBS", d1);
-        let ms = run_condition(&flags, &art, &vocab, &stock, &queries, &Dfs, "msbs", &limits(d1))?;
+        let ms = run_condition(
+            &flags, &art, &vocab, &stock, &queries, &Dfs, "msbs", &limits(d1),
+            cache_for("msbs"),
+        )?;
         report(&format!("DFS, TIME LIMIT {:.0} SECONDS", d1 as f64 / 1e3), &bs, &ms);
     }
 
     // Retro*, deadline 1
     eprintln!("condition: Retro* {}ms BS", d1);
     let rs = RetroStar::new(1);
-    let bs1 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "bs", &limits(d1))?;
+    let bs1 = run_condition(
+        &flags, &art, &vocab, &stock, &queries, &rs, "bs", &limits(d1), cache_for("bs"),
+    )?;
     eprintln!("condition: Retro* {}ms MSBS", d1);
-    let ms1 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "msbs", &limits(d1))?;
+    let ms1 = run_condition(
+        &flags, &art, &vocab, &stock, &queries, &rs, "msbs", &limits(d1), cache_for("msbs"),
+    )?;
     report(&format!("RETRO*, TIME LIMIT {:.0} SECONDS", d1 as f64 / 1e3), &bs1, &ms1);
 
     // Retro*, deadline 2
     eprintln!("condition: Retro* {}ms BS", d2);
-    let bs2 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "bs", &limits(d2))?;
+    let bs2 = run_condition(
+        &flags, &art, &vocab, &stock, &queries, &rs, "bs", &limits(d2), cache_for("bs"),
+    )?;
     eprintln!("condition: Retro* {}ms MSBS", d2);
-    let ms2 = run_condition(&flags, &art, &vocab, &stock, &queries, &rs, "msbs", &limits(d2))?;
+    let ms2 = run_condition(
+        &flags, &art, &vocab, &stock, &queries, &rs, "msbs", &limits(d2), cache_for("msbs"),
+    )?;
     report(&format!("RETRO*, TIME LIMIT {:.0} SECONDS", d2 as f64 / 1e3), &bs2, &ms2);
 
     Ok(())

@@ -5,7 +5,12 @@
 //! percentage and total wall time, at two deadlines.
 //!
 //! `bench_table4 [--artifacts DIR] [--n 300] [--deadline-ms 5000]
-//! [--deadline2-ms 15000] [--k 10] [--max-iterations 500] [--mock]`
+//! [--deadline2-ms 15000] [--k 10] [--max-iterations 500] [--mock]
+//! [--share-cache]`
+//!
+//! `--share-cache` shares one molecule-keyed expansion cache across the
+//! two deadline runs of each (decoder, Bw) condition — warm-cache
+//! serving semantics; off by default for paper-faithful cold runs.
 
 use anyhow::Result;
 use retroserve::benchkit::{load_queries, warmup_model, Flags};
@@ -13,10 +18,12 @@ use retroserve::decoding::make_decoder;
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::model::StepModel;
 use retroserve::runtime::PjrtModel;
-use retroserve::search::policy::ModelPolicy;
+use retroserve::search::policy::{ModelPolicy, SharedExpansionCache, DEFAULT_CACHE_CAP};
 use retroserve::search::{retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock};
 use retroserve::tokenizer::Vocab;
+use std::collections::HashMap;
 
+#[allow(clippy::too_many_arguments)]
 fn run_condition(
     flags: &Flags,
     art: &std::path::Path,
@@ -26,6 +33,7 @@ fn run_condition(
     decoder_name: &str,
     bw: usize,
     limits: &SearchLimits,
+    cache: Option<SharedExpansionCache>,
 ) -> Result<(f64, f64)> {
     let model: Box<dyn StepModel> = if flags.has("mock") {
         Box::new(MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }))
@@ -33,8 +41,11 @@ fn run_condition(
         Box::new(PjrtModel::load(art)?)
     };
     warmup_model(model.as_ref(), vocab, &queries[0].smiles);
-    let policy: Box<dyn ExpansionPolicy> =
-        Box::new(ModelPolicy::new(model, make_decoder(decoder_name, bw)?, vocab.clone()));
+    let dec = make_decoder(decoder_name, bw)?;
+    let policy: Box<dyn ExpansionPolicy> = match cache {
+        Some(c) => Box::new(ModelPolicy::with_shared_cache(model, dec, vocab.clone(), c)),
+        None => Box::new(ModelPolicy::new(model, dec, vocab.clone())),
+    };
     let planner = RetroStar::new(bw);
     let t0 = std::time::Instant::now();
     let mut solved = 0usize;
@@ -85,6 +96,12 @@ fn main() -> Result<()> {
         ("MSBS", "msbs", bw_wide),
     ];
 
+    // --share-cache: one cache per (decoder, Bw), spanning deadlines.
+    // hsbs's draft schedule depends on the batch hint, so Bw is part of
+    // the key — a cache is an equivalence claim over decode outputs.
+    let share = flags.has("share-cache");
+    let mut caches: HashMap<(String, usize), SharedExpansionCache> = HashMap::new();
+
     for (section, dl) in [("(A)", d1), ("(B)", d2)] {
         println!(
             "\n{section} {}s LIMIT INFERENCE {:<14} {:>4} {:>22} {:>16}",
@@ -96,8 +113,14 @@ fn main() -> Result<()> {
         );
         for (label, dec, bw) in &conditions {
             eprintln!("condition: {label} Bw={bw} deadline {dl}ms");
+            let cache = share.then(|| {
+                caches
+                    .entry((dec.to_string(), *bw))
+                    .or_insert_with(|| SharedExpansionCache::new(DEFAULT_CACHE_CAP))
+                    .clone()
+            });
             let (pct, hours) = run_condition(
-                &flags, &art, &vocab, &stock, &queries, dec, *bw, &limits(dl),
+                &flags, &art, &vocab, &stock, &queries, dec, *bw, &limits(dl), cache,
             )?;
             println!("{:<32} {:>4} {:>22.2} {:>16.3}", label, bw, pct, hours);
         }

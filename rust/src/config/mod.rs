@@ -155,6 +155,9 @@ pub struct ServeConfig {
     pub max_iterations: usize,
     pub max_depth: usize,
     pub beam_width: usize,
+    /// Pipelined Retro\*: expansion groups kept in flight per plan
+    /// (1 = sequential selection semantics).
+    pub spec_depth: usize,
     pub algo: String,
     /// Continuous batcher: max requests merged into one decode task.
     pub batch_max: usize,
@@ -178,6 +181,7 @@ impl ServeConfig {
             max_iterations: c.int_or("planner.max_iterations", 35000) as usize,
             max_depth: c.int_or("planner.max_depth", 5) as usize,
             beam_width: c.int_or("planner.beam_width", 1) as usize,
+            spec_depth: c.int_or("planner.spec_depth", 1).max(1) as usize,
             algo: c.str_or("planner.algo", "retrostar"),
             batch_max: c.int_or("batcher.max_batch", 16) as usize,
             batch_wait_us: c.int_or("batcher.max_wait_us", 2000) as u64,
@@ -229,7 +233,16 @@ mod tests {
         assert_eq!(sc.decoder, "msbs");
         assert_eq!(sc.deadline_ms, 5000);
         assert_eq!(sc.max_depth, 5);
+        assert_eq!(sc.spec_depth, 1);
         assert_eq!(sc.limits().expansions_per_step, 10);
+    }
+
+    #[test]
+    fn spec_depth_parses_and_clamps() {
+        let c = Config::parse("[planner]\nspec_depth = 4\n").unwrap();
+        assert_eq!(ServeConfig::from_config(&c).spec_depth, 4);
+        let c = Config::parse("[planner]\nspec_depth = 0\n").unwrap();
+        assert_eq!(ServeConfig::from_config(&c).spec_depth, 1, "clamped to >= 1");
     }
 
     #[test]

@@ -2,14 +2,20 @@
 //! all in-flight planning sessions into *cycle-level* fused decoder
 //! calls.
 //!
-//! Requests arrive on a channel. Cache hits answer immediately. Misses
-//! are grouped (per drain) into one resumable decode task and submitted
-//! to a [`DecodeScheduler`]; the hub thread then ticks the scheduler —
-//! ONE fused `decode` per tick across *all* in-flight tasks — so a
-//! request that arrives while earlier expansions are mid-decode joins
-//! the very next device call instead of queueing behind a whole
-//! multi-cycle `generate`. Finished tasks fan their parsed proposals
-//! back out and populate the shared cache.
+//! Requests arrive on a channel — blocking ([`ExpansionHub::expand`])
+//! or as futures ([`ExpansionHub::submit`] →
+//! [`ExpansionFuture`]: poll / wait / cancel). Cache hits answer
+//! immediately. Each missing molecule becomes **one resumable decode
+//! task of its own** submitted to the [`DecodeScheduler`]; the hub
+//! thread then ticks the scheduler — ONE fused `decode` per tick across
+//! *all* in-flight tasks — so every molecule joins the very next device
+//! call when it arrives and **retires independently** the moment its own
+//! beams finish, instead of waiting out the slowest co-arrival in a
+//! drained batch. Cancellation (speculative searches abandoning
+//! invalidated expansions) removes a molecule's task from the scheduler
+//! as soon as its last waiter goes away, releasing its fused-call rows
+//! and encoder memory. A tick error fails only the waiters of the tasks
+//! that were actually in the errored fused call.
 //!
 //! The expansion cache is a bounded [`LruCache`] keyed by *molecule*
 //! (not `(molecule, k)`): an entry decoded at k' serves any request with
@@ -21,10 +27,12 @@ use crate::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, Tas
 use crate::decoding::{DecodeStats, Decoder};
 use crate::metrics::Metrics;
 use crate::model::StepModel;
-use crate::search::policy::{proposals_from_output, Proposal, DEFAULT_CACHE_CAP};
+use crate::search::policy::{
+    proposals_from_output, AsyncExpansionPolicy, ExpansionHandle, KTruncatedCache, Proposal,
+    DEFAULT_CACHE_CAP,
+};
 use crate::search::ExpansionPolicy;
 use crate::tokenizer::Vocab;
-use crate::util::lru::LruCache;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -33,28 +41,96 @@ use std::sync::{mpsc, Arc, Mutex};
 struct ExpandReq {
     smiles: String,
     k: usize,
+    ticket: u64,
     reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
+}
+
+enum HubMsg {
+    Expand(ExpandReq),
+    /// Withdraw the waiter `ticket` registered for `smiles`; the last
+    /// waiter leaving cancels the molecule's in-flight decode tasks.
+    Cancel { smiles: String, ticket: u64 },
+    /// Introspection: (molecules with waiters, in-flight decode tasks,
+    /// scheduler in-flight count). Tests use this to pin "no leaked
+    /// waiters / tasks" after cancellation.
+    Debug(mpsc::SyncSender<(usize, usize, usize)>),
 }
 
 /// Shared handle to the batcher thread.
 pub struct ExpansionHub {
-    tx: mpsc::Sender<ExpandReq>,
+    tx: mpsc::Sender<HubMsg>,
+    next_ticket: AtomicU64,
     stats: Arc<Mutex<DecodeStats>>,
     pub invalid: Arc<AtomicUsize>,
     pub total_hyps: Arc<AtomicUsize>,
-    /// Decode tasks submitted (each merges >= 1 request).
+    /// Per-query decode tasks submitted.
     batches: Arc<AtomicU64>,
     /// Requests admitted.
     merged: Arc<AtomicU64>,
     /// Fused device calls / fused logical rows (cycle-level batching).
     fused_calls: Arc<AtomicU64>,
     fused_rows: Arc<AtomicU64>,
+    /// In-flight tasks abandoned because every waiter cancelled.
+    cancelled: Arc<AtomicU64>,
+}
+
+/// A pending single-molecule expansion: the hub's future. Dropping it
+/// without consuming the result cancels the request (so abandoned
+/// speculation releases its decode work automatically).
+pub struct ExpansionFuture {
+    smiles: String,
+    ticket: u64,
+    rx: mpsc::Receiver<Result<Vec<Proposal>>>,
+    hub_tx: mpsc::Sender<HubMsg>,
+    spent: bool,
+}
+
+impl ExpansionFuture {
+    /// Non-blocking: `Some` exactly once, when the expansion retired.
+    pub fn poll(&mut self) -> Option<Result<Vec<Proposal>>> {
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.spent = true;
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.spent = true;
+                Some(Err(anyhow::anyhow!("hub gone")))
+            }
+        }
+    }
+
+    /// Block until the expansion retires.
+    pub fn wait(mut self) -> Result<Vec<Proposal>> {
+        self.spent = true;
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("hub gone")),
+        }
+    }
+
+    /// Abandon the request. If this was the molecule's last waiter, its
+    /// in-flight decode task leaves the scheduler (rows + encoder
+    /// memory released). Equivalent to dropping the future.
+    pub fn cancel(self) {}
+}
+
+impl Drop for ExpansionFuture {
+    fn drop(&mut self) {
+        if !self.spent {
+            let _ = self.hub_tx.send(HubMsg::Cancel {
+                smiles: std::mem::take(&mut self.smiles),
+                ticket: self.ticket,
+            });
+        }
+    }
 }
 
 /// Batcher tuning knobs.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
-    /// Most requests drained into one decode task (one encode group).
+    /// Most requests drained per gather round.
     pub max_batch: usize,
     /// How long an *idle* hub waits for stragglers before the first
     /// tick. While decoding, arrivals are drained non-blockingly and
@@ -77,16 +153,9 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A cached expansion: proposals decoded at beam width `k` (serves any
-/// request with a smaller or equal k by truncation).
-struct CachedExpansion {
-    k: usize,
-    props: Vec<Proposal>,
-}
-
-/// In-flight bookkeeping for one submitted decode task.
+/// In-flight bookkeeping for one per-query decode task.
 struct TaskMeta {
-    mols: Vec<String>,
+    mol: String,
     k: usize,
 }
 
@@ -103,7 +172,7 @@ impl ExpansionHub {
     where
         M: StepModel + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<ExpandReq>();
+        let (tx, rx) = mpsc::channel::<HubMsg>();
         let stats = Arc::new(Mutex::new(DecodeStats::default()));
         let invalid = Arc::new(AtomicUsize::new(0));
         let total = Arc::new(AtomicUsize::new(0));
@@ -111,6 +180,7 @@ impl ExpansionHub {
         let merged = Arc::new(AtomicU64::new(0));
         let fused_calls = Arc::new(AtomicU64::new(0));
         let fused_rows = Arc::new(AtomicU64::new(0));
+        let cancelled = Arc::new(AtomicU64::new(0));
         {
             let stats = stats.clone();
             let invalid = invalid.clone();
@@ -119,6 +189,7 @@ impl ExpansionHub {
             let merged = merged.clone();
             let fused_calls = fused_calls.clone();
             let fused_rows = fused_rows.clone();
+            let cancelled = cancelled.clone();
             std::thread::Builder::new()
                 .name("expansion-hub".into())
                 .spawn(move || {
@@ -137,6 +208,7 @@ impl ExpansionHub {
                             merged,
                             fused_calls,
                             fused_rows,
+                            cancelled,
                         },
                     )
                 })
@@ -144,6 +216,7 @@ impl ExpansionHub {
         }
         Arc::new(ExpansionHub {
             tx,
+            next_ticket: AtomicU64::new(1),
             stats,
             invalid,
             total_hyps: total,
@@ -151,23 +224,39 @@ impl ExpansionHub {
             merged,
             fused_calls,
             fused_rows,
+            cancelled,
+        })
+    }
+
+    /// Asynchronous single-molecule expansion: returns a future the
+    /// caller polls, waits on, or cancels. This is the pipelined
+    /// planner's entry point.
+    pub fn submit(&self, smiles: &str, k: usize) -> Result<ExpansionFuture> {
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(HubMsg::Expand(ExpandReq { smiles: smiles.to_string(), k, ticket, reply }))
+            .map_err(|_| anyhow::anyhow!("hub gone"))?;
+        Ok(ExpansionFuture {
+            smiles: smiles.to_string(),
+            ticket,
+            rx,
+            hub_tx: self.tx.clone(),
+            spent: false,
         })
     }
 
     /// Blocking single-molecule expansion (used by the `expand` op).
     pub fn expand(&self, smiles: &str, k: usize) -> Result<Vec<Proposal>> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(ExpandReq { smiles: smiles.to_string(), k, reply: tx })
-            .map_err(|_| anyhow::anyhow!("hub gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?
+        self.submit(smiles, k)?.wait()
     }
 
     pub fn stats(&self) -> DecodeStats {
         self.stats.lock().unwrap().clone()
     }
 
-    /// (decode tasks submitted, requests merged into them).
+    /// (per-query decode tasks submitted, requests admitted): requests
+    /// per task is the cache + coalescing amplification.
     pub fn merge_ratio(&self) -> (u64, u64) {
         (self.batches.load(Ordering::Relaxed), self.merged.load(Ordering::Relaxed))
     }
@@ -180,6 +269,23 @@ impl ExpansionHub {
             self.fused_rows.load(Ordering::Relaxed),
         )
     }
+
+    /// In-flight decode tasks abandoned after their last waiter
+    /// cancelled.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Hub-thread state snapshot for tests and diagnostics:
+    /// `(molecules with waiters, in-flight decode tasks, scheduler
+    /// in-flight)`. Blocks until the hub finishes its current tick.
+    pub fn debug_snapshot(&self) -> Result<(usize, usize, usize)> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(HubMsg::Debug(tx))
+            .map_err(|_| anyhow::anyhow!("hub gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))
+    }
 }
 
 struct HubCounters {
@@ -190,18 +296,26 @@ struct HubCounters {
     merged: Arc<AtomicU64>,
     fused_calls: Arc<AtomicU64>,
     fused_rows: Arc<AtomicU64>,
+    cancelled: Arc<AtomicU64>,
 }
 
-/// A queued requester: requested beam width + reply channel.
-type Waiter = (usize, mpsc::SyncSender<Result<Vec<Proposal>>>);
+/// A queued requester.
+struct Waiter {
+    ticket: u64,
+    k: usize,
+    reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
+}
 
 /// Mutable per-loop state: waiters and in-flight coverage.
 struct HubState {
-    cache: LruCache<String, CachedExpansion>,
+    /// Molecule-keyed, k-truncating expansion cache (shared core with
+    /// the offline policies — see [`KTruncatedCache`]).
+    cache: KTruncatedCache,
     /// Requests not yet answered, per molecule.
     waiting: HashMap<String, Vec<Waiter>>,
-    /// Max beam width currently being decoded per molecule.
-    covered: HashMap<String, usize>,
+    /// In-flight per-query decode tasks per molecule — usually one; a
+    /// wider-k re-request adds a second while the first still flies.
+    covered: HashMap<String, Vec<(TaskId, usize)>>,
     /// Misses gathered this round, unique by molecule.
     to_submit: Vec<(String, usize)>,
 }
@@ -210,15 +324,14 @@ impl HubState {
     /// Serve a request from cache or queue it (possibly scheduling a
     /// decode for this round).
     fn admit(&mut self, req: ExpandReq) {
-        if let Some(c) = self.cache.get(&req.smiles) {
-            if c.k >= req.k {
-                let mut out = c.props.clone();
-                out.truncate(req.k);
-                let _ = req.reply.send(Ok(out));
-                return;
-            }
+        if let Some(out) = self.cache.get(&req.smiles, req.k) {
+            let _ = req.reply.send(Ok(out));
+            return;
         }
-        let in_flight_covers = self.covered.get(&req.smiles).is_some_and(|&ck| ck >= req.k);
+        let in_flight_covers = self
+            .covered
+            .get(&req.smiles)
+            .is_some_and(|tasks| tasks.iter().any(|&(_, ck)| ck >= req.k));
         if !in_flight_covers {
             if let Some(e) = self.to_submit.iter_mut().find(|(m, _)| *m == req.smiles) {
                 e.1 = e.1.max(req.k);
@@ -226,23 +339,95 @@ impl HubState {
                 self.to_submit.push((req.smiles.clone(), req.k));
             }
         }
-        self.waiting.entry(req.smiles).or_default().push((req.k, req.reply));
+        self.waiting
+            .entry(req.smiles)
+            .or_default()
+            .push(Waiter { ticket: req.ticket, k: req.k, reply: req.reply });
     }
 
-    /// Fail every queued request (scheduler abort path).
+    /// Remove one waiter; returns true when the molecule has no waiters
+    /// left (its in-flight tasks may then be abandoned).
+    fn remove_waiter(&mut self, smiles: &str, ticket: u64) -> bool {
+        let Some(ws) = self.waiting.get_mut(smiles) else {
+            return false; // already answered (or never queued)
+        };
+        ws.retain(|w| w.ticket != ticket);
+        if ws.is_empty() {
+            self.waiting.remove(smiles);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Max beam width of the remaining in-flight tasks for a molecule.
+    fn covered_k(&self, smiles: &str) -> usize {
+        self.covered
+            .get(smiles)
+            .map(|tasks| tasks.iter().map(|&(_, k)| k).max().unwrap_or(0))
+            .unwrap_or(0)
+    }
+
+    /// Fail every queued request (hub-invariant breach only; tick
+    /// errors are scoped per failed task instead).
     fn fail_all(&mut self, msg: &str) {
         for (_, ws) in self.waiting.drain() {
-            for (_, reply) in ws {
-                let _ = reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
+            for w in ws {
+                let _ = w.reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
             }
         }
         self.covered.clear();
     }
 }
 
+/// Fail the waiters of one failed/unstartable task, keeping any waiter
+/// another in-flight task still covers.
+fn fail_task_waiters(state: &mut HubState, mol: &str, task_k: usize, msg: &str) {
+    let remaining_k = state.covered_k(mol);
+    if let Some(ws) = state.waiting.remove(mol) {
+        let mut kept = Vec::new();
+        for w in ws {
+            if w.k <= task_k && w.k > remaining_k {
+                let _ = w.reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
+            } else {
+                kept.push(w);
+            }
+        }
+        if !kept.is_empty() {
+            state.waiting.insert(mol.to_string(), kept);
+        }
+    }
+}
+
+/// Route one inbound message: admit expansions, queue cancellations,
+/// answer debug probes. Returns whether the message was an expansion
+/// (the only kind counted toward the gather budget).
+fn on_msg(
+    msg: HubMsg,
+    state: &mut HubState,
+    cancels: &mut Vec<(String, u64)>,
+    sched_in_flight: usize,
+) -> bool {
+    match msg {
+        HubMsg::Expand(r) => {
+            state.admit(r);
+            true
+        }
+        HubMsg::Cancel { smiles, ticket } => {
+            cancels.push((smiles, ticket));
+            false
+        }
+        HubMsg::Debug(tx) => {
+            let tasks: usize = state.covered.values().map(Vec::len).sum();
+            let _ = tx.send((state.waiting.len(), tasks, sched_in_flight));
+            false
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn hub_loop<M: StepModel>(
-    rx: mpsc::Receiver<ExpandReq>,
+    rx: mpsc::Receiver<HubMsg>,
     model: M,
     decoder: Box<dyn Decoder + Send>,
     vocab: Vocab,
@@ -252,13 +437,15 @@ fn hub_loop<M: StepModel>(
 ) {
     let mut scheduler = DecodeScheduler::new(SchedulerConfig { max_rows: cfg.max_rows });
     let mut state = HubState {
-        cache: LruCache::new(cfg.cache_cap),
+        cache: KTruncatedCache::new(cfg.cache_cap),
         waiting: HashMap::new(),
         covered: HashMap::new(),
         to_submit: Vec::new(),
     };
     let mut tasks_meta: HashMap<TaskId, TaskMeta> = HashMap::new();
+    let mut cancels: Vec<(String, u64)> = Vec::new();
     let mut finished: Vec<Finished> = Vec::new();
+    let mut in_flight_hw = 0usize;
     let mut open = true;
 
     while open || !scheduler.is_idle() || !state.waiting.is_empty() {
@@ -266,23 +453,28 @@ fn hub_loop<M: StepModel>(
         state.to_submit.clear();
         if open && scheduler.is_idle() && state.waiting.is_empty() {
             // Idle: block for the next request, then give stragglers a
-            // short window so simultaneous arrivals share one encode.
+            // short window so simultaneous arrivals share the first
+            // ticks.
             match rx.recv() {
-                Ok(r) => {
-                    counters.merged.fetch_add(1, Ordering::Relaxed);
-                    state.admit(r);
+                Ok(msg) => {
+                    let mut n = 0;
+                    if on_msg(msg, &mut state, &mut cancels, scheduler.in_flight()) {
+                        counters.merged.fetch_add(1, Ordering::Relaxed);
+                        n += 1;
+                    }
                     let deadline = std::time::Instant::now() + cfg.max_wait;
-                    let mut n = 1;
-                    while n < cfg.max_batch {
+                    while n < cfg.max_batch && !state.to_submit.is_empty() {
                         let now = std::time::Instant::now();
                         if now >= deadline {
                             break;
                         }
                         match rx.recv_timeout(deadline - now) {
-                            Ok(r) => {
-                                counters.merged.fetch_add(1, Ordering::Relaxed);
-                                state.admit(r);
-                                n += 1;
+                            Ok(msg) => {
+                                let fl = scheduler.in_flight();
+                                if on_msg(msg, &mut state, &mut cancels, fl) {
+                                    counters.merged.fetch_add(1, Ordering::Relaxed);
+                                    n += 1;
+                                }
                             }
                             Err(mpsc::RecvTimeoutError::Timeout) => break,
                             Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -303,10 +495,11 @@ fn hub_loop<M: StepModel>(
             let mut drained = 0;
             while drained < cfg.max_batch {
                 match rx.try_recv() {
-                    Ok(r) => {
-                        counters.merged.fetch_add(1, Ordering::Relaxed);
-                        state.admit(r);
-                        drained += 1;
+                    Ok(msg) => {
+                        if on_msg(msg, &mut state, &mut cancels, scheduler.in_flight()) {
+                            counters.merged.fetch_add(1, Ordering::Relaxed);
+                            drained += 1;
+                        }
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
@@ -317,50 +510,57 @@ fn hub_loop<M: StepModel>(
             }
         }
 
-        // ---- 2. submit this round's misses as one task ----
-        if !state.to_submit.is_empty() {
-            let k_max = state.to_submit.iter().map(|(_, k)| *k).max().unwrap_or(1);
-            let mols: Vec<String> = state.to_submit.iter().map(|(m, _)| m.clone()).collect();
-            let srcs: Vec<Vec<i32>> = mols.iter().map(|s| vocab.encode(s, true)).collect();
-            match decoder.start_task(&model, &srcs, k_max) {
-                Ok(task) => {
-                    let id = scheduler.submit(task);
-                    counters.batches.fetch_add(1, Ordering::Relaxed);
-                    metrics.inc("batcher.tasks", 1);
-                    metrics.inc("batcher.task_molecules", mols.len() as u64);
-                    for m in &mols {
-                        let e = state.covered.entry(m.clone()).or_insert(0);
-                        *e = (*e).max(k_max);
-                    }
-                    tasks_meta.insert(id, TaskMeta { mols, k: k_max });
-                }
-                Err(e) => {
-                    // Encode failed: fail only the waiters this round's
-                    // task would have served (anything still covered by
-                    // an older in-flight task keeps waiting).
-                    let msg = format!("{e:#}");
-                    for (m, _) in std::mem::take(&mut state.to_submit) {
-                        let ck = state.covered.get(&m).copied().unwrap_or(0);
-                        if let Some(ws) = state.waiting.remove(&m) {
-                            let mut kept = Vec::new();
-                            for (wk, reply) in ws {
-                                if wk > ck {
-                                    let _ = reply
-                                        .send(Err(anyhow::anyhow!("encode failed: {msg}")));
-                                } else {
-                                    kept.push((wk, reply));
-                                }
-                            }
-                            if !kept.is_empty() {
-                                state.waiting.insert(m, kept);
-                            }
+        // ---- 2. apply cancellations ----
+        // A molecule whose last waiter withdrew loses its queued miss
+        // and its in-flight decode tasks: the scheduler frees the rows
+        // and encoder memory immediately, so speculative searches that
+        // changed their mind never pay for the full decode.
+        for (smiles, ticket) in cancels.drain(..) {
+            if state.remove_waiter(&smiles, ticket) {
+                state.to_submit.retain(|(m, _)| *m != smiles);
+                if let Some(tasks) = state.covered.remove(&smiles) {
+                    for (id, _) in tasks {
+                        if scheduler.cancel(&model, id) {
+                            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                            metrics.inc("batcher.tasks_cancelled", 1);
                         }
+                        tasks_meta.remove(&id);
                     }
                 }
             }
         }
 
-        // ---- 3. one fused tick ----
+        // ---- 3. submit this round's misses: one task per query ----
+        // Per-query tasks let each molecule retire independently while
+        // still fusing into the same scheduler ticks; a slow molecule
+        // no longer stalls its co-arrivals' answers.
+        for (mol, k) in std::mem::take(&mut state.to_submit) {
+            let srcs = [vocab.encode(&mol, true)];
+            match decoder.start_task(&model, &srcs, k) {
+                Ok(task) => {
+                    let id = scheduler.submit(task);
+                    counters.batches.fetch_add(1, Ordering::Relaxed);
+                    metrics.inc("batcher.tasks", 1);
+                    state.covered.entry(mol.clone()).or_default().push((id, k));
+                    tasks_meta.insert(id, TaskMeta { mol, k });
+                }
+                Err(e) => {
+                    // Encode failed: fail only this molecule's waiters
+                    // (anything covered by an older in-flight task
+                    // keeps waiting).
+                    let msg = format!("encode failed: {e:#}");
+                    fail_task_waiters(&mut state, &mol, k, &msg);
+                }
+            }
+        }
+
+        // ---- 4. one fused tick ----
+        // Publish the in-flight high-water mark only when it moves:
+        // steady-state ticks must stay free of mutex/alloc traffic.
+        if scheduler.in_flight() > in_flight_hw {
+            in_flight_hw = scheduler.in_flight();
+            metrics.gauge_max("scheduler.in_flight_tasks", in_flight_hw as u64);
+        }
         if scheduler.is_idle() {
             if !state.waiting.is_empty() {
                 // Unreachable by construction (waiters always have a
@@ -387,65 +587,77 @@ fn hub_loop<M: StepModel>(
                 for f in finished.drain(..) {
                     let meta = tasks_meta.remove(&f.id).expect("task bookkeeping");
                     counters.stats.lock().unwrap().merge(&f.stats);
-                    retire_task(&meta, &f, &vocab, &mut state, &counters);
+                    retire_task(f.id, &meta, &f, &vocab, &mut state, &counters);
                 }
             }
             Err(e) => {
-                // A fused call failed: every in-flight task shared it,
-                // so fail all waiters and reset.
+                // The fused call failed: exactly the tasks staged in it
+                // were dropped by the scheduler. Fail their waiters and
+                // nobody else's — unstaged tasks keep flying.
                 let msg = format!("{e:#}");
-                scheduler.abort(&model);
-                tasks_meta.clear();
-                state.fail_all(&msg);
+                for id in scheduler.drain_failed() {
+                    if let Some(meta) = tasks_meta.remove(&id) {
+                        if let Some(tasks) = state.covered.get_mut(&meta.mol) {
+                            tasks.retain(|&(tid, _)| tid != id);
+                            if tasks.is_empty() {
+                                state.covered.remove(&meta.mol);
+                            }
+                        }
+                        fail_task_waiters(&mut state, &meta.mol, meta.k, &msg);
+                    }
+                }
             }
         }
     }
 }
 
-/// Parse a finished task's outputs, populate the cache, and answer every
-/// waiter the task covers.
+/// Parse a finished per-query task's output, populate the cache, and
+/// answer every waiter the task covers.
 fn retire_task(
+    id: TaskId,
     meta: &TaskMeta,
     f: &Finished,
     vocab: &Vocab,
     state: &mut HubState,
     counters: &HubCounters,
 ) {
-    for (mol, gen) in meta.mols.iter().zip(f.outputs.iter()) {
-        let mut inv = 0usize;
-        let mut tot = 0usize;
-        let props = proposals_from_output(vocab, mol, gen, &mut inv, &mut tot);
-        counters.invalid.fetch_add(inv, Ordering::Relaxed);
-        counters.total.fetch_add(tot, Ordering::Relaxed);
-        let stale = state.cache.get(mol).is_none_or(|c| c.k <= meta.k);
-        if stale {
-            state.cache.insert(mol.clone(), CachedExpansion { k: meta.k, props: props.clone() });
-        }
-        if let Some(ws) = state.waiting.remove(mol) {
-            let mut kept = Vec::new();
-            for (wk, reply) in ws {
-                if wk <= meta.k {
-                    let mut out = props.clone();
-                    out.truncate(wk);
-                    let _ = reply.send(Ok(out));
-                } else {
-                    // A wider request for the same molecule is covered
-                    // by a younger, larger-k task still in flight.
-                    kept.push((wk, reply));
-                }
-            }
-            if !kept.is_empty() {
-                state.waiting.insert(mol.clone(), kept);
+    let gen = f.outputs.first().expect("per-query task has one output");
+    let mol = &meta.mol;
+    let mut inv = 0usize;
+    let mut tot = 0usize;
+    let props = proposals_from_output(vocab, mol, gen, &mut inv, &mut tot);
+    counters.invalid.fetch_add(inv, Ordering::Relaxed);
+    counters.total.fetch_add(tot, Ordering::Relaxed);
+    state.cache.insert(mol.clone(), meta.k, props.clone());
+    if let Some(ws) = state.waiting.remove(mol) {
+        let mut kept = Vec::new();
+        for w in ws {
+            if w.k <= meta.k {
+                let mut out = props.clone();
+                out.truncate(w.k);
+                let _ = w.reply.send(Ok(out));
+            } else {
+                // A wider request for the same molecule is covered by a
+                // younger, larger-k task still in flight.
+                kept.push(w);
             }
         }
-        if state.covered.get(mol).is_some_and(|&ck| ck <= meta.k) {
+        if !kept.is_empty() {
+            state.waiting.insert(mol.clone(), kept);
+        }
+    }
+    if let Some(tasks) = state.covered.get_mut(mol) {
+        tasks.retain(|&(tid, _)| tid != id);
+        if tasks.is_empty() {
             state.covered.remove(mol);
         }
     }
 }
 
 /// Per-session [`ExpansionPolicy`] view over the hub. `Send`, cheap to
-/// clone — each planning session owns one.
+/// clone — each planning session owns one. Also implements
+/// [`AsyncExpansionPolicy`], so pipelined Retro\* rides per-query
+/// futures straight into the scheduler.
 #[derive(Clone)]
 pub struct BatchedPolicy {
     hub: Arc<ExpansionHub>,
@@ -458,24 +670,67 @@ impl BatchedPolicy {
     }
 }
 
+/// A group of per-molecule hub futures joined into one batch handle.
+struct HubHandle {
+    futs: Vec<Option<ExpansionFuture>>,
+    results: Vec<Option<Vec<Proposal>>>,
+}
+
+impl ExpansionHandle for HubHandle {
+    fn poll(&mut self) -> Option<Result<Vec<Vec<Proposal>>>> {
+        let mut pending = false;
+        for (i, slot) in self.futs.iter_mut().enumerate() {
+            if self.results[i].is_some() {
+                continue;
+            }
+            let Some(f) = slot.as_mut() else { continue };
+            match f.poll() {
+                Some(Ok(p)) => {
+                    self.results[i] = Some(p);
+                    *slot = None;
+                }
+                // On error the handle is spent; dropping it (and the
+                // remaining futures with it) cancels the rest.
+                Some(Err(e)) => return Some(Err(e)),
+                None => pending = true,
+            }
+        }
+        if pending {
+            return None;
+        }
+        Some(Ok(self
+            .results
+            .iter_mut()
+            .map(|r| r.take().unwrap_or_default())
+            .collect()))
+    }
+
+    fn wait(mut self: Box<Self>) -> Result<Vec<Vec<Proposal>>> {
+        for (i, slot) in self.futs.iter_mut().enumerate() {
+            if self.results[i].is_some() {
+                continue;
+            }
+            if let Some(f) = slot.take() {
+                self.results[i] = Some(f.wait()?);
+            }
+        }
+        Ok(self
+            .results
+            .iter_mut()
+            .map(|r| r.take().unwrap_or_default())
+            .collect())
+    }
+
+    fn cancel(self: Box<Self>) {
+        // Drop on the remaining futures sends the hub cancellations.
+    }
+}
+
 impl ExpansionPolicy for BatchedPolicy {
     fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
-        self.calls.fetch_add(1, Ordering::Relaxed);
         // fan out, then join — the hub may merge these with other
         // sessions' requests
-        let mut replies = Vec::with_capacity(molecules.len());
-        for m in molecules {
-            let (tx, rx) = mpsc::sync_channel(1);
-            self.hub
-                .tx
-                .send(ExpandReq { smiles: m.to_string(), k, reply: tx })
-                .map_err(|_| anyhow::anyhow!("hub gone"))?;
-            replies.push(rx);
-        }
-        replies
-            .into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?)
-            .collect()
+        self.submit(molecules, k)?.wait()
     }
 
     fn decode_stats(&self) -> DecodeStats {
@@ -484,6 +739,17 @@ impl ExpansionPolicy for BatchedPolicy {
 
     fn calls(&self) -> usize {
         self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl AsyncExpansionPolicy for BatchedPolicy {
+    fn submit(&self, molecules: &[&str], k: usize) -> Result<Box<dyn ExpansionHandle>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut futs = Vec::with_capacity(molecules.len());
+        for m in molecules {
+            futs.push(Some(self.hub.submit(m, k)?));
+        }
+        Ok(Box::new(HubHandle { results: vec![None; futs.len()], futs }))
     }
 }
 
@@ -578,9 +844,9 @@ mod tests {
         for j in joins {
             assert!(!j.join().unwrap().is_empty());
         }
-        let (batches, merged) = h.merge_ratio();
+        let (tasks, merged) = h.merge_ratio();
         assert!(merged >= 4);
-        assert!(batches <= merged, "batches {batches} merged {merged}");
+        assert!(tasks <= merged, "tasks {tasks} merged {merged}");
     }
 
     #[test]
@@ -604,11 +870,76 @@ mod tests {
     }
 
     #[test]
+    fn futures_poll_to_completion() {
+        let h = hub();
+        let mut fut = h.submit("CC(=O)O.CN", 3).unwrap();
+        let mut result = None;
+        for _ in 0..2000 {
+            if let Some(r) = fut.poll() {
+                result = Some(r);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        let props = result.expect("future must complete").unwrap();
+        assert!(!props.is_empty());
+        // a second future for the same molecule hits the cache
+        let calls = h.stats().model_calls;
+        let p2 = h.submit("CC(=O)O.CN", 3).unwrap().wait().unwrap();
+        assert_eq!(props, p2);
+        assert_eq!(h.stats().model_calls, calls);
+    }
+
+    #[test]
+    fn cancelled_future_leaves_no_state_behind() {
+        let h = hub();
+        let fut = h.submit("CC(=O)NC", 4).unwrap();
+        fut.cancel();
+        // settle: the hub processes the cancel between ticks
+        let mut clean = false;
+        for _ in 0..2000 {
+            let (waiting, tasks, in_flight) = h.debug_snapshot().unwrap();
+            if waiting == 0 && tasks == 0 && in_flight == 0 {
+                clean = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        assert!(clean, "cancelled request must leave no waiters or tasks");
+        // the hub still serves fresh work afterwards
+        let p = h.expand("CC(=O)O.CN", 3).unwrap();
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn cancel_with_remaining_waiter_keeps_the_task() {
+        let h = hub();
+        // two futures on the same molecule: cancelling one must not
+        // starve the other
+        let keep = h.submit("CC(=O)O.CN", 3).unwrap();
+        let drop_me = h.submit("CC(=O)O.CN", 3).unwrap();
+        drop_me.cancel();
+        let props = keep.wait().unwrap();
+        assert!(!props.is_empty(), "surviving waiter must still be answered");
+    }
+
+    #[test]
     fn batched_policy_counts_calls() {
         let h = hub();
         let p = BatchedPolicy::new(h);
         let _ = p.expand_batch(&["CCO"], 2).unwrap();
         let _ = p.expand_batch(&["CCO"], 2).unwrap();
         assert_eq!(p.calls(), 2);
+    }
+
+    #[test]
+    fn async_policy_handle_round_trip() {
+        let h = hub();
+        let p = BatchedPolicy::new(h);
+        let handle = AsyncExpansionPolicy::submit(&p, &["CC(=O)O.CN", "CCO"], 3).unwrap();
+        let out = handle.wait().unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(!out[0].is_empty());
+        assert_eq!(p.calls(), 1);
     }
 }

@@ -4,14 +4,22 @@
 //!
 //! ```text
 //! TCP clients ──► server (thread per connection)
-//!                    │  plan/expand requests
+//!                    │  plan: pipelined Retro* keeps up to spec_depth
+//!                    │  expansion groups in flight as futures
 //!                    ▼
-//!              ExpansionHub (continuous batcher): expansion requests
-//!                    │  become resumable decode tasks; a
-//!                    │  DecodeScheduler fuses all in-flight tasks'
-//!                    │  rows into ONE device call per decode cycle
+//!              ExpansionHub (continuous batcher)
+//!                    │  submit(smiles, k) -> ExpansionFuture
+//!                    │  (poll / wait / cancel); each cache-missing
+//!                    │  molecule becomes ONE per-query decode task —
+//!                    │  it retires the moment its own beams finish,
+//!                    │  and cancellation drops it from the scheduler
 //!                    ▼
-//!              SharedModel (model-executor thread)
+//!              DecodeScheduler: ONE fused device call per decode
+//!                    │  cycle over ALL in-flight tasks' rows; a tick
+//!                    │  error fails only the tasks in that call
+//!                    ▼
+//!              SharedModel (model-executor thread; startup Meta ships
+//!                    │  the device's row-bucketing rule)
 //!                    ▼
 //!              PJRT CPU client over the AOT HLO artifacts
 //! ```
@@ -22,11 +30,24 @@
 //! a request that arrives mid-decode joins the very next device call,
 //! so the effective batch stays high even as earlier requests' beams
 //! finish (Table 1's scalability column is the mechanism; Table 1C's
-//! effective-batch decay is what the fusion removes).
+//! effective-batch decay is what the fusion removes). Per-query tasks
+//! plus speculative pipelined search extend the same lever *inside* a
+//! single planning session: a solo session no longer degenerates to
+//! effective batch 1, because its own next-best expansions ride the
+//! same fused ticks.
+//!
+//! **Speculation-determinism contract:** `spec_depth = 1` plans are
+//! bit-identical to the sequential planner (same selections, graph,
+//! route, iteration counts and per-task decode stats —
+//! `tests/parity_search.rs`). `spec_depth > 1` may expand extra
+//! molecules (absorbed in completion-arrival order) and cancels
+//! invalidated speculations; every applied expansion is real model
+//! output, and cancelled tasks free their scheduler rows and encoder
+//! memory immediately.
 
 pub mod batcher;
 pub mod protocol;
 pub mod server;
 
-pub use batcher::{BatchedPolicy, ExpansionHub};
+pub use batcher::{BatchedPolicy, ExpansionFuture, ExpansionHub};
 pub use server::Server;

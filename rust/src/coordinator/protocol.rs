@@ -4,11 +4,16 @@
 //!
 //! ```json
 //! {"id": 1, "op": "plan", "smiles": "...", "algo": "retrostar",
-//!  "deadline_ms": 5000, "beam_width": 1}
+//!  "deadline_ms": 5000, "beam_width": 1, "spec_depth": 1}
 //! {"id": 2, "op": "expand", "smiles": "...", "k": 10}
 //! {"id": 3, "op": "metrics"}
 //! {"id": 4, "op": "ping"}
 //! ```
+//!
+//! `spec_depth` sets how many expansion groups pipelined Retro\* keeps
+//! in flight (1 = sequential selection; the default comes from
+//! `planner.spec_depth`). Plan responses report the speculation
+//! accounting under `speculation`.
 //!
 //! Responses mirror the `id` and carry `ok`/`error` plus op-specific
 //! fields; routes serialize as nested `{smiles, logp?, children?}`.
@@ -64,6 +69,16 @@ pub fn plan_response(id: i64, r: &SolveResult) -> Json {
         (
             "acceptance_rate",
             Json::num(r.decode_stats.acceptance_rate()),
+        ),
+        (
+            "speculation",
+            Json::obj(vec![
+                ("submitted", Json::num(r.spec.groups_submitted as f64)),
+                ("applied", Json::num(r.spec.groups_applied as f64)),
+                ("cancelled", Json::num(r.spec.groups_cancelled as f64)),
+                ("hits", Json::num(r.spec.spec_hits as f64)),
+                ("max_in_flight", Json::num(r.spec.max_in_flight as f64)),
+            ]),
         ),
     ];
     if let Some(route) = &r.route {

@@ -27,6 +27,9 @@ pub struct ServerCtx {
     pub default_limits: SearchLimits,
     pub default_algo: String,
     pub default_beam_width: usize,
+    /// Default in-flight expansion depth for pipelined Retro\* (1 =
+    /// sequential selection; requests may override via `spec_depth`).
+    pub default_spec_depth: usize,
 }
 
 impl Server {
@@ -173,18 +176,35 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                 .get("beam_width")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(ctx.default_beam_width);
+            let sd = req
+                .get("spec_depth")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(ctx.default_spec_depth)
+                .max(1);
             let policy = BatchedPolicy::new(ctx.hub.clone());
-            let planner: Box<dyn Planner> = match algo.as_str() {
-                "dfs" => Box::new(Dfs),
-                "retrostar" | "retro*" => Box::new(RetroStar::new(bw)),
+            // Retro* plans ride the async path: per-query expansion
+            // futures into the hub's scheduler. spec_depth = 1 keeps
+            // sequential selection semantics (pinned bit-identical by
+            // the parity suite); deeper keeps that many expansion
+            // groups in flight speculatively.
+            let result = match algo.as_str() {
+                "dfs" => ctx
+                    .metrics
+                    .time("request.plan", || Dfs.solve(smiles, &policy, &ctx.stock, &limits)),
+                "retrostar" | "retro*" => ctx.metrics.time("request.plan", || {
+                    RetroStar::new(bw)
+                        .with_spec_depth(sd)
+                        .solve_pipelined(smiles, &policy, &ctx.stock, &limits)
+                }),
                 other => return protocol::error_response(id, &format!("unknown algo {other}")),
             };
-            let result = ctx.metrics.time("request.plan", || {
-                planner.solve(smiles, &policy, &ctx.stock, &limits)
-            });
             match result {
                 Ok(r) => {
                     ctx.metrics.inc(if r.solved { "plan.solved" } else { "plan.unsolved" }, 1);
+                    ctx.metrics.gauge_max("plan.spec_in_flight", r.spec.max_in_flight);
+                    ctx.metrics.inc("plan.spec_submitted", r.spec.groups_submitted);
+                    ctx.metrics.inc("plan.spec_cancelled", r.spec.groups_cancelled);
+                    ctx.metrics.inc("plan.spec_hits", r.spec.spec_hits);
                     protocol::plan_response(id, &r)
                 }
                 Err(e) => protocol::error_response(id, &format!("{e:#}")),
@@ -258,6 +278,7 @@ mod tests {
             },
             default_algo: "retrostar".into(),
             default_beam_width: 1,
+            default_spec_depth: 1,
         }
     }
 
@@ -304,6 +325,18 @@ mod tests {
         let m = client.call(Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
         assert!(m.get("counters").is_some());
         server.shutdown();
+    }
+
+    #[test]
+    fn plan_accepts_spec_depth() {
+        let ctx = test_ctx();
+        let r = handle_line(
+            "{\"id\":1,\"op\":\"plan\",\"smiles\":\"CC(=O)NC\",\"deadline_ms\":200,\
+             \"spec_depth\":4}",
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert!(r.get("speculation").is_some(), "plan response must report speculation");
     }
 
     #[test]

@@ -72,6 +72,9 @@ pub struct FusedStats {
     /// Tasks submitted / retired.
     pub tasks_submitted: u64,
     pub tasks_finished: u64,
+    /// Tasks abandoned via [`DecodeScheduler::cancel`] (speculative
+    /// expansions whose waiters went away).
+    pub tasks_cancelled: u64,
 }
 
 impl FusedStats {
@@ -107,6 +110,9 @@ pub struct DecodeScheduler {
     out: DecodeOut,
     /// (task index, row start, row end) staged this tick.
     staged: Vec<(usize, usize, usize)>,
+    /// Tasks dropped by the last errored tick (see
+    /// [`DecodeScheduler::drain_failed`]).
+    failed: Vec<TaskId>,
     next_id: u64,
     pub stats: FusedStats,
 }
@@ -120,6 +126,7 @@ impl DecodeScheduler {
             rows: RowBuf::new(),
             out: DecodeOut::default(),
             staged: Vec::new(),
+            failed: Vec::new(),
             next_id: 1,
             stats: FusedStats::default(),
         }
@@ -145,6 +152,28 @@ impl DecodeScheduler {
     /// Total arena nodes across in-flight tasks (memory diagnostics).
     pub fn arena_nodes(&self) -> usize {
         self.tasks.iter().map(|t| t.task.arena_nodes()).sum()
+    }
+
+    /// Abandon one in-flight task: its rows leave the very next fused
+    /// call and its encoder memory is released. Partial outputs are
+    /// discarded — the task never appears in `finished`. Returns whether
+    /// the id was in flight (a task that already retired is a no-op).
+    pub fn cancel(&mut self, model: &dyn StepModel, id: TaskId) -> bool {
+        if let Some(pos) = self.tasks.iter().position(|t| t.id == id) {
+            let slot = self.tasks.remove(pos);
+            let _ = slot.task.finish(model);
+            self.stats.tasks_cancelled += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Task ids dropped by the last errored [`DecodeScheduler::tick`]:
+    /// exactly the tasks whose rows were in the failed fused call.
+    /// Unstaged tasks keep flying — callers fail only these waiters.
+    pub fn drain_failed(&mut self) -> Vec<TaskId> {
+        std::mem::take(&mut self.failed)
     }
 
     /// Run one fused decode over as many tasks' pending rows as the
@@ -183,7 +212,20 @@ impl DecodeScheduler {
 
         let fused_rows = self.rows.len();
         if !self.staged.is_empty() {
-            model.decode_into(&self.rows.rows, win, &mut self.out)?;
+            if let Err(e) = model.decode_into(&self.rows.rows, win, &mut self.out) {
+                // The fused call failed: exactly the *staged* tasks were
+                // in it. Drop them (releasing encoder memory), record
+                // their ids for the caller, and leave every unstaged
+                // task intact — a tick error must not fail tasks that
+                // never touched the errored call.
+                for &(i, _, _) in self.staged.iter().rev() {
+                    let slot = self.tasks.remove(i);
+                    self.failed.push(slot.id);
+                    let _ = slot.task.finish(model);
+                }
+                self.staged.clear();
+                return Err(e);
+            }
             self.stats.fused_calls += 1;
             self.stats.rows_logical += fused_rows as u64;
             self.stats.rows_padded += self.out.padded_rows as u64;
@@ -225,8 +267,10 @@ impl DecodeScheduler {
         Ok(())
     }
 
-    /// Drop every in-flight task, releasing its device memory. Used on
-    /// decode failure: partial outputs are discarded.
+    /// Drop every in-flight task, releasing its device memory; partial
+    /// outputs are discarded. A fused-call *error* no longer needs this
+    /// (the failed tick already drops exactly its staged tasks — see
+    /// [`DecodeScheduler::drain_failed`]); this is the full-reset path.
     pub fn abort(&mut self, model: &dyn StepModel) {
         for slot in std::mem::take(&mut self.tasks) {
             let _ = slot.task.finish(model);
@@ -348,6 +392,99 @@ mod tests {
         assert!(id.0 >= 2);
         sched.run_to_idle(&model, &mut finished).unwrap();
         assert_eq!(finished.len(), 1);
+    }
+
+    #[test]
+    fn cancel_releases_memory_and_skips_output() {
+        let dec = BeamSearch::optimized();
+        let model = MockModel::new(MockConfig::default());
+        let mut sched = DecodeScheduler::new(SchedulerConfig::default());
+        let keep = sched.submit(dec.start_task(&model, &groups()[0], 2).unwrap());
+        let drop_id = sched.submit(dec.start_task(&model, &groups()[1], 2).unwrap());
+        let handles_full = model.live_handles();
+        let mut finished = Vec::new();
+        sched.tick(&model, &mut finished).unwrap();
+        assert!(sched.cancel(&model, drop_id), "in-flight task must cancel");
+        assert!(
+            model.live_handles() < handles_full,
+            "cancel must release the task's encoder memory"
+        );
+        assert_eq!(sched.stats.tasks_cancelled, 1);
+        assert!(!sched.cancel(&model, drop_id), "second cancel is a no-op");
+        sched.run_to_idle(&model, &mut finished).unwrap();
+        assert_eq!(finished.len(), 1, "cancelled task must not retire");
+        assert_eq!(finished[0].id, keep);
+        assert_eq!(model.live_handles(), 0, "all encoder memory released");
+    }
+
+    /// Fails the N-th decode call, then delegates.
+    struct FailNth {
+        inner: MockModel,
+        calls: std::sync::atomic::AtomicUsize,
+        fail_at: usize,
+    }
+
+    impl crate::model::StepModel for FailNth {
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn medusa_heads(&self) -> usize {
+            self.inner.medusa_heads()
+        }
+        fn max_src(&self) -> usize {
+            self.inner.max_src()
+        }
+        fn max_tgt(&self) -> usize {
+            self.inner.max_tgt()
+        }
+        fn encode(&self, src: &[Vec<i32>]) -> Result<crate::model::MemHandle> {
+            self.inner.encode(src)
+        }
+        fn decode(&self, rows: &[crate::model::DecodeRow], win: usize) -> Result<DecodeOut> {
+            let mut out = DecodeOut::default();
+            self.decode_into(rows, win, &mut out)?;
+            Ok(out)
+        }
+        fn decode_into(
+            &self,
+            rows: &[crate::model::DecodeRow],
+            win: usize,
+            out: &mut DecodeOut,
+        ) -> Result<()> {
+            let n = self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if n + 1 == self.fail_at {
+                anyhow::bail!("injected device fault");
+            }
+            self.inner.decode_into(rows, win, out)
+        }
+        fn release(&self, mem: crate::model::MemHandle) {
+            self.inner.release(mem)
+        }
+    }
+
+    #[test]
+    fn tick_error_fails_only_staged_tasks() {
+        let dec = BeamSearch::optimized();
+        let model = FailNth {
+            inner: MockModel::new(MockConfig::default()),
+            calls: std::sync::atomic::AtomicUsize::new(0),
+            fail_at: 1,
+        };
+        // Tiny budget: only the oldest task's rows fit the first tick,
+        // which is the one that errors.
+        let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 1 });
+        let a = sched.submit(dec.start_task(&model, &groups()[0], 2).unwrap());
+        let b = sched.submit(dec.start_task(&model, &groups()[2], 2).unwrap());
+        let mut finished = Vec::new();
+        let err = sched.tick(&model, &mut finished);
+        assert!(err.is_err());
+        assert_eq!(sched.drain_failed(), vec![a], "only the staged task fails");
+        assert!(sched.drain_failed().is_empty(), "drain is one-shot");
+        assert_eq!(sched.in_flight(), 1, "unstaged task keeps flying");
+        sched.run_to_idle(&model, &mut finished).unwrap();
+        assert_eq!(finished.len(), 1);
+        assert_eq!(finished[0].id, b);
+        assert_eq!(model.inner.live_handles(), 0, "failed task released its memory");
     }
 
     #[test]

@@ -101,6 +101,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "artifacts" => cfg.apply_override("server.artifacts", v)?,
             "decoder" => cfg.apply_override("planner.decoder", v)?,
             "beam-width" => cfg.apply_override("planner.beam_width", v)?,
+            "spec-depth" => cfg.apply_override("planner.spec_depth", v)?,
             "config" => {}
             other => cfg.apply_override(other, v)?,
         }
@@ -135,6 +136,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default_limits: sc.limits(),
             default_algo: sc.algo.clone(),
             default_beam_width: sc.beam_width,
+            default_spec_depth: sc.spec_depth,
         },
     )?;
     eprintln!("retroserve: ready on {}", server.addr());
@@ -168,13 +170,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
     if let Some(k) = args.flags.get("k") {
         limits.expansions_per_step = k.parse()?;
     }
-    let planner: Box<dyn Planner> = match algo {
-        "dfs" => Box::new(Dfs),
-        "retrostar" | "retro*" => Box::new(RetroStar::new(bw)),
+    let sd: usize =
+        args.flags.get("spec-depth").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let policy = BatchedPolicy::new(hub);
+    let r = match algo {
+        "dfs" => Dfs.solve(smiles, &policy, &stock, &limits)?,
+        "retrostar" | "retro*" => RetroStar::new(bw)
+            .with_spec_depth(sd)
+            .solve_pipelined(smiles, &policy, &stock, &limits)?,
         other => bail!("unknown algo {other}"),
     };
-    let policy = BatchedPolicy::new(hub);
-    let r = planner.solve(smiles, &policy, &stock, &limits)?;
     println!(
         "solved={} iterations={} expansions={} wall={:.2}s model_calls={} acceptance={:.1}%",
         r.solved,
@@ -184,6 +189,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
         r.decode_stats.model_calls,
         r.decode_stats.acceptance_rate() * 100.0
     );
+    if r.spec.groups_submitted > 0 && sd > 1 {
+        println!(
+            "speculation: submitted={} applied={} cancelled={} hits={} max_in_flight={}",
+            r.spec.groups_submitted,
+            r.spec.groups_applied,
+            r.spec.groups_cancelled,
+            r.spec.spec_hits,
+            r.spec.max_in_flight
+        );
+    }
     if let Some(route) = &r.route {
         println!("route (depth {}):\n{}", route.depth(), route.render());
     }

@@ -99,6 +99,7 @@ impl Hist {
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
     hists: Mutex<BTreeMap<String, Hist>>,
+    gauges: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Metrics {
@@ -108,6 +109,23 @@ impl Metrics {
 
     pub fn inc(&self, name: &str, by: u64) {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge to the current value.
+    pub fn gauge_set(&self, name: &str, v: u64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    /// Record a gauge as a running maximum (high-water mark) — e.g.
+    /// the deepest in-flight task count a scheduler ever reached.
+    pub fn gauge_max(&self, name: &str, v: u64) {
+        let mut g = self.gauges.lock().unwrap();
+        let e = g.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     pub fn observe(&self, name: &str, secs: f64) {
@@ -134,11 +152,21 @@ impl Metrics {
     pub fn snapshot(&self) -> Json {
         let counters = self.counters.lock().unwrap();
         let hists = self.hists.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
         Json::obj(vec![
             (
                 "counters",
                 Json::Obj(
                     counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    gauges
                         .iter()
                         .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
                         .collect(),
@@ -195,6 +223,23 @@ mod tests {
         let s = m.snapshot();
         assert!(s.get("counters").unwrap().get("a").is_some());
         assert!(s.get("latency").unwrap().get("lat").unwrap().get("count").is_some());
+    }
+
+    #[test]
+    fn gauges_track_high_water_and_snapshot() {
+        let m = Metrics::new();
+        m.gauge_max("depth", 3);
+        m.gauge_max("depth", 7);
+        m.gauge_max("depth", 5);
+        assert_eq!(m.gauge("depth"), 7);
+        m.gauge_set("depth", 2);
+        assert_eq!(m.gauge("depth"), 2);
+        assert_eq!(m.gauge("missing"), 0);
+        let s = m.snapshot();
+        assert_eq!(
+            s.get("gauges").unwrap().get("depth").unwrap().as_usize(),
+            Some(2)
+        );
     }
 
     #[test]

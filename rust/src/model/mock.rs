@@ -95,6 +95,12 @@ impl MockModel {
         }
     }
 
+    /// Encoded batches currently held (leak diagnostics: every
+    /// `encode` must be balanced by a `release`).
+    pub fn live_handles(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
     /// A deterministic wrong-but-plausible alternative token.
     fn alt(&self, correct: i32, p: usize) -> i32 {
         let v = self.cfg.vocab as i32;

@@ -1,13 +1,18 @@
 //! The `StepModel` abstraction: what a single-step retrosynthesis model
 //! looks like to the decoding engines and the planner.
 //!
-//! Two implementations exist:
+//! Three implementations exist:
 //!
 //! * [`crate::runtime::PjrtModel`] — the real thing: AOT-compiled HLO
 //!   executed through the PJRT C API;
 //! * [`mock::MockModel`] — a deterministic, pure-Rust fake with the same
 //!   interface and Medusa-head semantics, used by unit/integration tests
-//!   and benches that must not depend on artifacts.
+//!   and benches that must not depend on artifacts;
+//! * [`scripted::ScriptedModel`] — a trie-shaped distribution over
+//!   caller-provided target strings per source, so planner tests and
+//!   search benches get a neural path that actually *solves* molecules
+//!   (e.g. [`scripted::oracle_script`] replays the SynthChem templates
+//!   through real multi-cycle decoding).
 //!
 //! The interface mirrors the exported executables (see
 //! `python/compile/aot.py`): `encode` turns token rows into an opaque
@@ -16,6 +21,7 @@
 
 pub mod mock;
 pub mod scratch;
+pub mod scripted;
 
 use anyhow::Result;
 

@@ -23,14 +23,25 @@ enum Req {
     Shutdown,
 }
 
+/// Row counts the wrapped model's bucketing rule is sampled at during
+/// startup. Far above any realistic fused-call row budget; beyond it
+/// `pad_rows` falls back to next-power-of-two.
+const PAD_TABLE_ROWS: usize = 4096;
+
 /// Static model metadata mirrored on the handle (so accessor methods
 /// need no round-trip).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct Meta {
     vocab: usize,
     medusa_heads: usize,
     max_src: usize,
     max_tgt: usize,
+    /// The wrapped model's row-bucketing rule, sampled at startup:
+    /// `pad_table[n] == wrapped.pad_rows(n)` for `n <= PAD_TABLE_ROWS`.
+    /// Shipping the rule in the startup meta keeps the scheduler's
+    /// solo-equivalent per-task padding accounting exact for real PJRT
+    /// bucket shapes, not just the default power-of-two rule.
+    pad_table: Arc<Vec<usize>>,
 }
 
 /// Cloneable, thread-safe handle to a model running on its own thread.
@@ -79,6 +90,9 @@ impl SharedModel {
                             medusa_heads: m.medusa_heads(),
                             max_src: m.max_src(),
                             max_tgt: m.max_tgt(),
+                            pad_table: Arc::new(
+                                (0..=PAD_TABLE_ROWS).map(|n| m.pad_rows(n)).collect(),
+                            ),
                         }));
                         m
                     }
@@ -162,6 +176,17 @@ impl StepModel for SharedModel {
         Ok(())
     }
 
+    fn pad_rows(&self, n: usize) -> usize {
+        // Mirror the wrapped model's bucketing (sampled at startup) so
+        // per-task padded-row accounting matches what the device really
+        // does, with no executor-thread round-trip on the hot path.
+        self.meta
+            .pad_table
+            .get(n)
+            .copied()
+            .unwrap_or_else(|| n.next_power_of_two())
+    }
+
     fn release(&self, mem: MemHandle) {
         let _ = self.tx.send(Req::Release(mem));
     }
@@ -220,6 +245,49 @@ mod tests {
         for j in joins {
             assert_eq!(j.join().unwrap(), 1);
         }
+    }
+
+    #[test]
+    fn pad_rows_mirrors_wrapped_models_bucketing() {
+        /// A model whose device buckets rows to multiples of 3 — not
+        /// the default power-of-two rule.
+        struct Mod3(MockModel);
+        impl StepModel for Mod3 {
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn medusa_heads(&self) -> usize {
+                self.0.medusa_heads()
+            }
+            fn max_src(&self) -> usize {
+                self.0.max_src()
+            }
+            fn max_tgt(&self) -> usize {
+                self.0.max_tgt()
+            }
+            fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+                self.0.encode(src)
+            }
+            fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+                self.0.decode(rows, win)
+            }
+            fn pad_rows(&self, n: usize) -> usize {
+                n.div_ceil(3) * 3
+            }
+            fn release(&self, mem: MemHandle) {
+                self.0.release(mem)
+            }
+        }
+        let shared =
+            SharedModel::spawn(|| Ok(Mod3(MockModel::new(MockConfig::default())))).unwrap();
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 100] {
+            assert_eq!(shared.pad_rows(n), n.div_ceil(3) * 3, "n={n}");
+        }
+        // Default-rule models still agree with themselves.
+        let shared2 =
+            SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
+        assert_eq!(shared2.pad_rows(3), 4);
+        assert_eq!(shared2.pad_rows(5), 8);
     }
 
     #[test]

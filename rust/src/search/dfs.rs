@@ -124,6 +124,7 @@ impl Planner for Dfs {
             expansions: ctx.expansions,
             wall_secs: t0.elapsed().as_secs_f64(),
             decode_stats: DecodeDelta::delta(policy, &stats0),
+            spec: Default::default(),
         })
     }
 }

@@ -22,7 +22,7 @@ pub mod stock;
 
 use crate::decoding::DecodeStats;
 use anyhow::Result;
-pub use policy::{ExpansionPolicy, Proposal};
+pub use policy::{AsyncExpansionPolicy, EagerAsync, ExpansionHandle, ExpansionPolicy, Proposal};
 pub use routes::Route;
 pub use stock::Stock;
 
@@ -49,6 +49,24 @@ impl Default for SearchLimits {
     }
 }
 
+/// Speculative-pipeline accounting for one solve. All-zero on the
+/// blocking path and at `spec_depth = 1` with nothing speculated.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Expansion groups handed to the policy (committed + speculative).
+    pub groups_submitted: u64,
+    /// Groups whose results were absorbed into the search graph.
+    pub groups_applied: u64,
+    /// Speculative groups cancelled after a graph update invalidated
+    /// them — the waste side of speculation.
+    pub groups_cancelled: u64,
+    /// Applied groups that had been submitted speculatively — the win
+    /// side: expansions that overlapped instead of waiting their turn.
+    pub spec_hits: u64,
+    /// High-water mark of groups simultaneously in flight.
+    pub max_in_flight: u64,
+}
+
 /// Outcome of one planning query.
 #[derive(Clone, Debug)]
 pub struct SolveResult {
@@ -61,6 +79,8 @@ pub struct SolveResult {
     pub wall_secs: f64,
     /// Aggregated decoding statistics from the policy.
     pub decode_stats: DecodeStats,
+    /// Speculation accounting (pipelined Retro\* only).
+    pub spec: SpecStats,
 }
 
 /// A planning algorithm.

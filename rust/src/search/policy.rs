@@ -7,6 +7,17 @@
 //! here). [`OraclePolicy`] replays the SynthChem retro templates — a
 //! deterministic reference used by planner tests and as a non-neural
 //! baseline.
+//!
+//! Two calling conventions exist over the same proposal semantics:
+//!
+//! * [`ExpansionPolicy::expand_batch`] — the blocking path every planner
+//!   understands;
+//! * [`AsyncExpansionPolicy::submit`] — an [`ExpansionHandle`] future
+//!   the pipelined planner polls, so several expansions can be in
+//!   flight at once (the coordinator's hub answers these with per-query
+//!   decode tasks). [`EagerAsync`] adapts any blocking policy to the
+//!   async interface by evaluating at submit time, which keeps the
+//!   pipelined planner runnable against the oracle and offline policies.
 
 use crate::chem;
 use crate::decoding::{DecodeStats, Decoder};
@@ -16,6 +27,7 @@ use crate::tokenizer::Vocab;
 use crate::util::lru::LruCache;
 use anyhow::Result;
 use std::cell::RefCell;
+use std::rc::Rc;
 
 /// One proposed precursor set.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,19 +52,177 @@ pub trait ExpansionPolicy {
     fn calls(&self) -> usize;
 }
 
+/// A pending batched expansion submitted through an
+/// [`AsyncExpansionPolicy`].
+pub trait ExpansionHandle {
+    /// Non-blocking completion check: returns `Some` exactly once, when
+    /// every molecule in the batch has retired (or the batch failed).
+    /// After that the handle is spent.
+    fn poll(&mut self) -> Option<Result<Vec<Vec<Proposal>>>>;
+    /// Block until the batch retires.
+    fn wait(self: Box<Self>) -> Result<Vec<Vec<Proposal>>>;
+    /// Abandon the batch: any decode work still queued for it may be
+    /// cancelled (speculative expansions invalidated by graph updates).
+    fn cancel(self: Box<Self>);
+}
+
+/// An expansion policy that can also run expansions *asynchronously*:
+/// `submit` returns a future-like [`ExpansionHandle`] instead of
+/// blocking, so a planner can keep several expansions in flight
+/// (speculative pipelined search). The blocking supertrait methods keep
+/// every async policy usable by the classic planners.
+pub trait AsyncExpansionPolicy: ExpansionPolicy {
+    /// Start expanding a batch of canonical product SMILES.
+    fn submit(&self, molecules: &[&str], k: usize) -> Result<Box<dyn ExpansionHandle>>;
+}
+
+/// Adapter: any blocking policy as an async one. `submit` evaluates the
+/// whole batch eagerly, so the handle is ready on the first poll —
+/// speculation buys nothing here, but the pipelined planner runs
+/// unchanged (and, at `spec_depth = 1`, bit-identically to the
+/// sequential loop).
+pub struct EagerAsync<'a>(pub &'a dyn ExpansionPolicy);
+
+struct ReadyHandle(Option<Result<Vec<Vec<Proposal>>>>);
+
+impl ExpansionHandle for ReadyHandle {
+    fn poll(&mut self) -> Option<Result<Vec<Vec<Proposal>>>> {
+        self.0.take()
+    }
+
+    fn wait(mut self: Box<Self>) -> Result<Vec<Vec<Proposal>>> {
+        self.0.take().expect("ReadyHandle polled after completion")
+    }
+
+    fn cancel(self: Box<Self>) {}
+}
+
+impl ExpansionPolicy for EagerAsync<'_> {
+    fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
+        self.0.expand_batch(molecules, k)
+    }
+
+    fn decode_stats(&self) -> DecodeStats {
+        self.0.decode_stats()
+    }
+
+    fn calls(&self) -> usize {
+        self.0.calls()
+    }
+}
+
+impl AsyncExpansionPolicy for EagerAsync<'_> {
+    fn submit(&self, molecules: &[&str], k: usize) -> Result<Box<dyn ExpansionHandle>> {
+        Ok(Box::new(ReadyHandle(Some(self.0.expand_batch(molecules, k)))))
+    }
+}
+
 /// Default bound on the expansion cache: planners revisit molecules
 /// constantly, but an unbounded map is a slow leak under sustained
 /// serving traffic.
 pub const DEFAULT_CACHE_CAP: usize = 10_000;
 
+/// A cached expansion decoded at beam width `k`: serves any request
+/// with `k' <= k` by truncation.
+struct CachedProposals {
+    k: usize,
+    props: Vec<Proposal>,
+}
+
+/// Molecule-keyed, k-truncating expansion cache core: one entry per
+/// molecule, decoded at some beam width; any request with a smaller or
+/// equal k is served by truncation, and a wider decode replaces the
+/// entry. This is the ONE implementation of those semantics — the hub
+/// uses it directly on its own thread and [`SharedExpansionCache`]
+/// wraps it for offline policies, so serving and offline behavior
+/// cannot silently diverge.
+pub struct KTruncatedCache {
+    inner: LruCache<String, CachedProposals>,
+}
+
+impl KTruncatedCache {
+    pub fn new(cap: usize) -> Self {
+        Self { inner: LruCache::new(cap) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Proposals for `mol` truncated to `k`, if an entry decoded at
+    /// `>= k` exists (marks the entry most-recently-used either way).
+    // &String, not &str: the LruCache lookup needs the owned key type,
+    // and every caller already holds a String — this keeps cache
+    // probes allocation-free on the hub's hot path.
+    #[allow(clippy::ptr_arg)]
+    pub fn get(&mut self, mol: &String, k: usize) -> Option<Vec<Proposal>> {
+        let c = self.inner.get(mol)?;
+        if c.k >= k {
+            let mut out = c.props.clone();
+            out.truncate(k);
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Store proposals decoded at `k` unless a wider entry is already
+    /// cached.
+    pub fn insert(&mut self, mol: String, k: usize, props: Vec<Proposal>) {
+        let stale = self.inner.get(&mol).is_none_or(|c| c.k <= k);
+        if stale {
+            self.inner.insert(mol, CachedProposals { k, props });
+        }
+    }
+}
+
+/// [`KTruncatedCache`] shareable across [`ModelPolicy`] instances: the
+/// offline table harnesses run several policies over one query set, and
+/// re-decoding a molecule just because a different policy object asked
+/// is pure waste. `Rc<RefCell<…>>` because policies are
+/// single-threaded by construction (`RefCell` counters); the serving
+/// path shares through the hub's own cache instead.
+#[derive(Clone)]
+pub struct SharedExpansionCache(Rc<RefCell<KTruncatedCache>>);
+
+impl SharedExpansionCache {
+    pub fn new(cap: usize) -> Self {
+        Self(Rc::new(RefCell::new(KTruncatedCache::new(cap))))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.borrow().is_empty()
+    }
+
+    /// See [`KTruncatedCache::get`].
+    #[allow(clippy::ptr_arg)]
+    pub fn get(&self, mol: &String, k: usize) -> Option<Vec<Proposal>> {
+        self.0.borrow_mut().get(mol, k)
+    }
+
+    /// See [`KTruncatedCache::insert`].
+    pub fn insert(&self, mol: String, k: usize, props: Vec<Proposal>) {
+        self.0.borrow_mut().insert(mol, k, props)
+    }
+}
+
 /// Neural policy: decoder over a `StepModel`, with a bounded LRU
 /// expansion cache (planners revisit molecules constantly;
-/// AiZynthFinder caches too).
+/// AiZynthFinder caches too). The cache is molecule-keyed and can be
+/// shared across policy instances via [`ModelPolicy::with_shared_cache`].
 pub struct ModelPolicy<M: StepModel> {
     model: M,
     decoder: Box<dyn Decoder>,
     vocab: Vocab,
-    cache: RefCell<LruCache<(String, usize), Vec<Proposal>>>,
+    cache: SharedExpansionCache,
     stats: RefCell<DecodeStats>,
     calls: RefCell<usize>,
     /// Count of hypotheses that failed SMILES validation (Table 2).
@@ -72,11 +242,24 @@ impl<M: StepModel> ModelPolicy<M> {
         vocab: Vocab,
         cache_cap: usize,
     ) -> Self {
+        Self::with_shared_cache(model, decoder, vocab, SharedExpansionCache::new(cache_cap))
+    }
+
+    /// `new` over a caller-owned cache, shared with other policies.
+    /// Only share across policies whose model and decoder produce the
+    /// same proposals for the same `(molecule, k)` — a cache is an
+    /// equivalence claim, not just a speedup.
+    pub fn with_shared_cache(
+        model: M,
+        decoder: Box<dyn Decoder>,
+        vocab: Vocab,
+        cache: SharedExpansionCache,
+    ) -> Self {
         Self {
             model,
             decoder,
             vocab,
-            cache: RefCell::new(LruCache::new(cache_cap)),
+            cache,
             stats: RefCell::new(DecodeStats::default()),
             calls: RefCell::new(0),
             invalid_count: RefCell::new(0),
@@ -90,7 +273,7 @@ impl<M: StepModel> ModelPolicy<M> {
 
     /// Current expansion-cache occupancy (diagnostics).
     pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.len()
     }
 }
 
@@ -151,22 +334,19 @@ pub fn proposals_from_output(
 
 impl<M: StepModel> ExpansionPolicy for ModelPolicy<M> {
     fn expand_batch(&self, molecules: &[&str], k: usize) -> Result<Vec<Vec<Proposal>>> {
-        // Serve cache hits; batch the misses through the decoder. The
-        // lookup key is built once per molecule and reused for the
-        // insert on a miss (the seed allocated it twice).
+        // Serve cache hits (any entry decoded at >= k, truncated); batch
+        // the misses through the decoder. The key String is allocated
+        // once per molecule and reused for the insert on a miss.
         let mut out: Vec<Option<Vec<Proposal>>> = vec![None; molecules.len()];
-        let mut misses: Vec<(usize, (String, usize))> = Vec::new();
+        let mut misses: Vec<(usize, String)> = Vec::new();
         let mut miss_srcs = Vec::new();
-        {
-            let mut cache = self.cache.borrow_mut();
-            for (i, m) in molecules.iter().enumerate() {
-                let key = (m.to_string(), k);
-                if let Some(hit) = cache.get(&key) {
-                    out[i] = Some(hit.clone());
-                } else {
-                    misses.push((i, key));
-                    miss_srcs.push(self.vocab.encode(m, true));
-                }
+        for (i, m) in molecules.iter().enumerate() {
+            let key = m.to_string();
+            if let Some(hit) = self.cache.get(&key, k) {
+                out[i] = Some(hit);
+            } else {
+                misses.push((i, key));
+                miss_srcs.push(self.vocab.encode(m, true));
             }
         }
         if !misses.is_empty() {
@@ -174,8 +354,7 @@ impl<M: StepModel> ExpansionPolicy for ModelPolicy<M> {
             let mut stats = self.stats.borrow_mut();
             let results = self.decoder.generate(&self.model, &miss_srcs, k, &mut stats)?;
             drop(stats);
-            let mut cache = self.cache.borrow_mut();
-            for ((slot, key), gen) in misses.into_iter().zip(results.into_iter()) {
+            for ((slot, mol), gen) in misses.into_iter().zip(results.into_iter()) {
                 let product = molecules[slot];
                 let mut invalid = self.invalid_count.borrow_mut();
                 let mut total = self.total_hyps.borrow_mut();
@@ -183,7 +362,7 @@ impl<M: StepModel> ExpansionPolicy for ModelPolicy<M> {
                     proposals_from_output(&self.vocab, product, &gen, &mut invalid, &mut total);
                 drop(invalid);
                 drop(total);
-                cache.insert(key, proposals.clone());
+                self.cache.insert(mol, k, proposals.clone());
                 out[slot] = Some(proposals);
             }
         }
@@ -330,6 +509,55 @@ mod tests {
         // evicted entry misses (recomputes)
         let _ = policy.expand_batch(&["CCO"], 2).unwrap();
         assert_eq!(policy.calls(), calls_before + 1);
+    }
+
+    #[test]
+    fn shared_cache_spans_policy_instances() {
+        let vocab = Vocab::build(["CC(=O)O.CN"]);
+        let cache = SharedExpansionCache::new(16);
+        let mk = || {
+            ModelPolicy::with_shared_cache(
+                MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }),
+                Box::new(BeamSearch::optimized()),
+                vocab.clone(),
+                cache.clone(),
+            )
+        };
+        let a = mk();
+        let b = mk();
+        let out_a = a.expand_batch(&["CC(=O)O.CN"], 3).unwrap();
+        assert_eq!(a.calls(), 1);
+        // The second policy must be served from the shared cache.
+        let out_b = b.expand_batch(&["CC(=O)O.CN"], 3).unwrap();
+        assert_eq!(b.calls(), 0, "shared cache must serve policy b");
+        assert_eq!(out_a, out_b);
+        // Molecule-keyed truncation: smaller k hits the stored entry.
+        let out_small = b.expand_batch(&["CC(=O)O.CN"], 1).unwrap();
+        assert_eq!(b.calls(), 0);
+        assert!(out_small[0].len() <= 1);
+        assert_eq!(&out_a[0][..out_small[0].len()], &out_small[0][..]);
+        // Larger k re-decodes and widens the shared entry.
+        let _ = b.expand_batch(&["CC(=O)O.CN"], 6).unwrap();
+        assert_eq!(b.calls(), 1);
+        let _ = a.expand_batch(&["CC(=O)O.CN"], 6).unwrap();
+        assert_eq!(a.calls(), 1, "widened entry must serve policy a");
+    }
+
+    #[test]
+    fn eager_async_adapter_is_ready_immediately() {
+        let p = OraclePolicy::new();
+        let asyncp = EagerAsync(&p);
+        let mut h = asyncp.submit(&["CC(=O)NC"], 5).unwrap();
+        let out = h.poll().expect("eager handle must be ready").unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(!out[0].is_empty());
+        // wait() path and blocking delegation agree
+        let h2 = asyncp.submit(&["CC(=O)NC"], 5).unwrap();
+        let out2 = h2.wait().unwrap();
+        assert_eq!(out, out2);
+        assert_eq!(out, asyncp.expand_batch(&["CC(=O)NC"], 5).unwrap());
+        // cancel is a no-op for the eager adapter
+        asyncp.submit(&["CC(=O)NC"], 5).unwrap().cancel();
     }
 
     #[test]

@@ -10,33 +10,76 @@
 //! pops the `beam_width` open molecules with the smallest `b` and
 //! expands them in **one batched policy call** — `beam_width > 1` is
 //! Table 4's "Bw" column (the paper's forced-batching experiment).
+//!
+//! ## Pipelined, speculative expansion
+//!
+//! [`RetroStar::solve_pipelined`] runs the same search over an
+//! [`AsyncExpansionPolicy`]: up to `spec_depth` selection groups stay in
+//! flight at once — the top-ranked group plus speculatively-selected
+//! next-best groups, chosen under the optimistic assumption that every
+//! in-flight expansion fails (a failed expansion removes its molecule
+//! from the open set and leaves the rest of the `b`-ranking unchanged,
+//! so "next best excluding in-flight" is the best available guess at
+//! the next selection). Completions are absorbed in arrival order;
+//! speculations that a graph update pushes out of the selection window
+//! are cancelled, releasing their decode work.
+//!
+//! **Determinism contract:** at `spec_depth = 1` the pipelined loop
+//! performs the *same* selections, expansions, graph updates and route
+//! checks, in the same order, as the sequential loop — results are
+//! bit-identical (`tests/parity_search.rs` pins route, iteration and
+//! decode-stat equality). At `spec_depth > 1` the set of expanded
+//! molecules may differ (speculation expands nodes the sequential
+//! search would have skipped), but every applied expansion is real
+//! model output and the first closed route found is still returned.
 
-use super::policy::ExpansionPolicy;
+use super::policy::{AsyncExpansionPolicy, EagerAsync, ExpansionHandle, ExpansionPolicy};
 use super::routes::Route;
-use super::{Planner, SearchLimits, SolveResult, Stock};
+use super::{Planner, SearchLimits, SolveResult, SpecStats, Stock};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 
 const INF: f64 = f64::INFINITY;
 /// Floor on reaction cost so zero-cost cycles cannot form.
 const MIN_COST: f64 = 1e-3;
+/// Sleep between poll sweeps while waiting on in-flight expansions
+/// (speculative mode only; with one group in flight the wait is a
+/// blocking `wait()`).
+const POLL_SLEEP: std::time::Duration = std::time::Duration::from_micros(100);
 
 /// Retro\* planner.
 #[derive(Clone, Debug)]
 pub struct RetroStar {
     /// Molecules expanded per algorithm iteration (Table 4 "Bw").
     pub beam_width: usize,
+    /// Expansion groups kept in flight by the pipelined loop (1 =
+    /// sequential; > 1 enables speculative selection).
+    pub spec_depth: usize,
 }
 
 impl Default for RetroStar {
     fn default() -> Self {
-        Self { beam_width: 1 }
+        Self { beam_width: 1, spec_depth: 1 }
     }
 }
 
 impl RetroStar {
     pub fn new(beam_width: usize) -> Self {
-        Self { beam_width: beam_width.max(1) }
+        Self { beam_width: beam_width.max(1), spec_depth: 1 }
+    }
+
+    /// Set the pipelined loop's in-flight depth.
+    ///
+    /// Depths > 1 only pay off over a *genuinely asynchronous* policy
+    /// (the coordinator's hub): expansions overlap in the fused
+    /// scheduler. Over a blocking policy ([`Planner::solve`] routes
+    /// through [`EagerAsync`]) every speculative submit decodes
+    /// synchronously at submit time, so speculation adds work —
+    /// possibly thrown away by a window cancellation — with zero
+    /// overlap; keep `spec_depth = 1` there.
+    pub fn with_spec_depth(mut self, spec_depth: usize) -> Self {
+        self.spec_depth = spec_depth.max(1);
+        self
     }
 }
 
@@ -180,6 +223,80 @@ impl Graph {
         }
     }
 
+    /// Open molecules (unexpanded, not stock, not dead, within depth,
+    /// reachable) sorted by ascending `b` — the selection ranking. The
+    /// sort is stable, so ties keep node-creation order; both solve
+    /// loops share this exact ordering.
+    fn ranked_open(&self, max_depth: usize) -> Vec<usize> {
+        let mut open: Vec<usize> = (0..self.mols.len())
+            .filter(|&i| {
+                let m = &self.mols[i];
+                !m.expanded && !m.in_stock && !m.dead && m.depth < max_depth && m.b.is_finite()
+            })
+            .collect();
+        open.sort_by(|&a, &b| {
+            self.mols[a]
+                .b
+                .partial_cmp(&self.mols[b].b)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        open
+    }
+
+    /// Mark `product` expanded and graft its proposed reactions into the
+    /// graph (a proposal-less expansion kills the node).
+    fn apply_expansion(
+        &mut self,
+        product: usize,
+        props: Vec<crate::search::Proposal>,
+        stock: &Stock,
+    ) {
+        self.mols[product].expanded = true;
+        let depth = self.mols[product].depth;
+        let mut any = false;
+        for p in props {
+            // reject self-referential reactions
+            if p.reactants.iter().any(|r| r == &self.mols[product].smiles) {
+                continue;
+            }
+            let cost = (-p.logp).max(MIN_COST);
+            let reactants: Vec<usize> = p
+                .reactants
+                .iter()
+                .map(|r| self.get_or_insert(r, depth + 1, stock))
+                .collect();
+            let ri = self.rxns.len();
+            self.rxns.push(RxnNode {
+                product,
+                reactants: reactants.clone(),
+                cost,
+                logp: p.logp,
+            });
+            self.mols[product].child_rxns.push(ri);
+            for &c in &reactants {
+                self.mols[c].parent_rxns.push(ri);
+            }
+            any = true;
+        }
+        if !any {
+            self.mols[product].dead = true;
+        }
+    }
+
+    /// If the root currently closes over `stock`, extract that route.
+    fn closed_route(&self, stock: &Stock) -> Option<Route> {
+        if !self.mols[0].v.is_finite() {
+            return None;
+        }
+        let mut visited = Vec::new();
+        let route = self.best_route(0, &mut visited)?;
+        if route.closed_over(stock) {
+            Some(route)
+        } else {
+            None
+        }
+    }
+
     /// Greedily extract the current best route; `None` if not closed.
     fn best_route(&self, m: usize, visited: &mut Vec<usize>) -> Option<Route> {
         let node = &self.mols[m];
@@ -219,6 +336,23 @@ impl Graph {
     }
 }
 
+/// One in-flight expansion group of the pipelined loop.
+struct Pending {
+    /// Molecule node indices, selection order.
+    mols: Vec<usize>,
+    /// Submitted while older groups were already in flight.
+    speculative: bool,
+    handle: Option<Box<dyn ExpansionHandle>>,
+}
+
+impl Pending {
+    fn cancel(mut self) {
+        if let Some(h) = self.handle.take() {
+            h.cancel();
+        }
+    }
+}
+
 impl Planner for RetroStar {
     fn name(&self) -> &'static str {
         "retro*"
@@ -231,6 +365,11 @@ impl Planner for RetroStar {
         stock: &Stock,
         limits: &SearchLimits,
     ) -> Result<SolveResult> {
+        if self.spec_depth > 1 {
+            // Speculation over a blocking policy: submits evaluate
+            // eagerly, so nothing overlaps, but semantics are uniform.
+            return self.solve_pipelined(target, &EagerAsync(policy), stock, limits);
+        }
         let t0 = std::time::Instant::now();
         let target = crate::chem::canonicalize(target)
             .map_err(|e| anyhow::anyhow!("target does not parse: {e}"))?;
@@ -248,6 +387,7 @@ impl Planner for RetroStar {
                 expansions: 0,
                 wall_secs: t0.elapsed().as_secs_f64(),
                 decode_stats: DecodeDelta::delta(policy, &stats0),
+                spec: SpecStats::default(),
             });
         }
 
@@ -257,25 +397,10 @@ impl Planner for RetroStar {
             }
             g.recompute(limits.max_depth);
             // Select up to beam_width open molecules with smallest b.
-            let mut open: Vec<usize> = (0..g.mols.len())
-                .filter(|&i| {
-                    let m = &g.mols[i];
-                    !m.expanded
-                        && !m.in_stock
-                        && !m.dead
-                        && m.depth < limits.max_depth
-                        && m.b.is_finite()
-                })
-                .collect();
+            let mut open = g.ranked_open(limits.max_depth);
             if open.is_empty() {
                 break; // search space exhausted
             }
-            open.sort_by(|&a, &b| {
-                g.mols[a]
-                    .b
-                    .partial_cmp(&g.mols[b].b)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
             open.truncate(self.beam_width);
             iterations += open.len();
             expansions += 1;
@@ -283,54 +408,20 @@ impl Planner for RetroStar {
             let mols: Vec<&str> = open.iter().map(|&i| g.mols[i].smiles.as_str()).collect();
             let proposals = policy.expand_batch(&mols, limits.expansions_per_step)?;
             for (slot, props) in open.iter().zip(proposals.into_iter()) {
-                let product = *slot;
-                g.mols[product].expanded = true;
-                let depth = g.mols[product].depth;
-                let mut any = false;
-                for p in props {
-                    // reject self-referential reactions
-                    if p.reactants.iter().any(|r| r == &g.mols[product].smiles) {
-                        continue;
-                    }
-                    let cost = (-p.logp).max(MIN_COST);
-                    let reactants: Vec<usize> = p
-                        .reactants
-                        .iter()
-                        .map(|r| g.get_or_insert(r, depth + 1, stock))
-                        .collect();
-                    let ri = g.rxns.len();
-                    g.rxns.push(RxnNode {
-                        product,
-                        reactants: reactants.clone(),
-                        cost,
-                        logp: p.logp,
-                    });
-                    g.mols[product].child_rxns.push(ri);
-                    for &c in &reactants {
-                        g.mols[c].parent_rxns.push(ri);
-                    }
-                    any = true;
-                }
-                if !any {
-                    g.mols[product].dead = true;
-                }
+                g.apply_expansion(*slot, props, stock);
             }
             // Closed-route check (first route wins, per the paper).
             g.recompute(limits.max_depth);
-            if g.mols[0].v.is_finite() {
-                let mut visited = Vec::new();
-                if let Some(route) = g.best_route(0, &mut visited) {
-                    if route.closed_over(stock) {
-                        return Ok(SolveResult {
-                            solved: true,
-                            route: Some(route),
-                            iterations,
-                            expansions,
-                            wall_secs: t0.elapsed().as_secs_f64(),
-                            decode_stats: DecodeDelta::delta(policy, &stats0),
-                        });
-                    }
-                }
+            if let Some(route) = g.closed_route(stock) {
+                return Ok(SolveResult {
+                    solved: true,
+                    route: Some(route),
+                    iterations,
+                    expansions,
+                    wall_secs: t0.elapsed().as_secs_f64(),
+                    decode_stats: DecodeDelta::delta(policy, &stats0),
+                    spec: SpecStats::default(),
+                });
             }
         }
         Ok(SolveResult {
@@ -340,6 +431,191 @@ impl Planner for RetroStar {
             expansions,
             wall_secs: t0.elapsed().as_secs_f64(),
             decode_stats: DecodeDelta::delta(policy, &stats0),
+            spec: SpecStats::default(),
+        })
+    }
+}
+
+impl RetroStar {
+    /// Pipelined Retro\* over per-query expansion futures. Keeps up to
+    /// `spec_depth` selection groups in flight (see the module docs for
+    /// the speculation and determinism contract); each group is
+    /// `beam_width` molecules, exactly as the sequential selection.
+    pub fn solve_pipelined(
+        &self,
+        target: &str,
+        policy: &dyn AsyncExpansionPolicy,
+        stock: &Stock,
+        limits: &SearchLimits,
+    ) -> Result<SolveResult> {
+        let spec_depth = self.spec_depth.max(1);
+        let t0 = std::time::Instant::now();
+        let target = crate::chem::canonicalize(target)
+            .map_err(|e| anyhow::anyhow!("target does not parse: {e}"))?;
+        let stats0 = policy.decode_stats();
+        let mut g = Graph::new(&target, stock);
+        let mut iterations = 0usize;
+        let mut expansions = 0usize;
+        let mut spec = SpecStats::default();
+        let mut inflight: VecDeque<Pending> = VecDeque::new();
+
+        if g.mols[0].in_stock {
+            return Ok(SolveResult {
+                solved: true,
+                route: Some(Route::Leaf { smiles: target }),
+                iterations: 0,
+                expansions: 0,
+                wall_secs: t0.elapsed().as_secs_f64(),
+                decode_stats: DecodeDelta::delta_async(policy, &stats0),
+                spec,
+            });
+        }
+
+        let solved = 'search: loop {
+            // Budget gate: the same predicate, at the same cadence (once
+            // per absorbed group), as the sequential loop.
+            if t0.elapsed() >= limits.deadline || iterations >= limits.max_iterations {
+                break 'search None;
+            }
+            g.recompute(limits.max_depth);
+            let ranked = g.ranked_open(limits.max_depth);
+            if ranked.is_empty() && inflight.is_empty() {
+                break 'search None; // search space exhausted
+            }
+
+            // Cancel speculations the last graph update invalidated: a
+            // speculative group survives only while every one of its
+            // molecules still sits inside the selection window (the top
+            // spec_depth * beam_width of the ranking). The oldest group
+            // is committed and never cancelled.
+            let window: HashSet<usize> = ranked
+                .iter()
+                .copied()
+                .take(spec_depth * self.beam_width)
+                .collect();
+            let mut kept: VecDeque<Pending> = VecDeque::with_capacity(inflight.len());
+            for p in inflight.drain(..) {
+                // The oldest surviving group is the committed one;
+                // cancelling it would risk livelock, so it always stays.
+                if kept.is_empty() || p.mols.iter().all(|m| window.contains(m)) {
+                    kept.push_back(p);
+                } else {
+                    spec.groups_cancelled += 1;
+                    p.cancel();
+                }
+            }
+            inflight = kept;
+
+            // Top up to spec_depth groups, next-best-first, skipping
+            // molecules already in flight (optimistic assumption: every
+            // in-flight expansion fails, which removes it from the open
+            // set and leaves the rest of the ranking unchanged).
+            let busy: HashSet<usize> =
+                inflight.iter().flat_map(|p| p.mols.iter().copied()).collect();
+            let mut avail = ranked.iter().copied().filter(|m| !busy.contains(m));
+            while inflight.len() < spec_depth {
+                let group: Vec<usize> = avail.by_ref().take(self.beam_width).collect();
+                if group.is_empty() {
+                    break;
+                }
+                let smiles: Vec<String> =
+                    group.iter().map(|&i| g.mols[i].smiles.clone()).collect();
+                let refs: Vec<&str> = smiles.iter().map(String::as_str).collect();
+                let speculative = !inflight.is_empty();
+                let handle = match policy.submit(&refs, limits.expansions_per_step) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        for p in inflight.drain(..) {
+                            p.cancel();
+                        }
+                        return Err(e);
+                    }
+                };
+                spec.groups_submitted += 1;
+                inflight.push_back(Pending { mols: group, speculative, handle: Some(handle) });
+            }
+            spec.max_in_flight = spec.max_in_flight.max(inflight.len() as u64);
+            if inflight.is_empty() {
+                break 'search None; // nothing expandable remains
+            }
+
+            // Absorb the next completion in arrival order (oldest-first
+            // sweeps break ties deterministically). A single in-flight
+            // group blocks outright — the sequential shape, which the
+            // spec_depth = 1 parity relies on.
+            let done: Pending;
+            let results: Vec<Vec<crate::search::Proposal>>;
+            if inflight.len() == 1 {
+                let mut p = inflight.pop_front().expect("one in flight");
+                match p.handle.take().expect("pending handle").wait() {
+                    Ok(r) => {
+                        done = p;
+                        results = r;
+                    }
+                    Err(e) => return Err(e),
+                }
+            } else {
+                let mut found: Option<(usize, Result<Vec<Vec<crate::search::Proposal>>>)>;
+                loop {
+                    found = None;
+                    for (i, p) in inflight.iter_mut().enumerate() {
+                        if let Some(r) = p.handle.as_mut().expect("pending handle").poll() {
+                            found = Some((i, r));
+                            break;
+                        }
+                    }
+                    if found.is_some() {
+                        break;
+                    }
+                    if t0.elapsed() >= limits.deadline {
+                        break 'search None; // deadline while waiting
+                    }
+                    std::thread::sleep(POLL_SLEEP);
+                }
+                match found.expect("loop exits with a completion") {
+                    (i, Ok(r)) => {
+                        let mut p = inflight.remove(i).expect("index in range");
+                        p.handle = None; // spent
+                        done = p;
+                        results = r;
+                    }
+                    (i, Err(e)) => {
+                        let _ = inflight.remove(i); // its handle is spent
+                        for p in inflight.drain(..) {
+                            p.cancel();
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+
+            iterations += done.mols.len();
+            expansions += 1;
+            spec.groups_applied += 1;
+            if done.speculative {
+                spec.spec_hits += 1;
+            }
+            for (slot, props) in done.mols.iter().zip(results.into_iter()) {
+                g.apply_expansion(*slot, props, stock);
+            }
+            // Closed-route check (first route wins, per the paper).
+            g.recompute(limits.max_depth);
+            if let Some(route) = g.closed_route(stock) {
+                break 'search Some(route);
+            }
+        };
+
+        for p in inflight.drain(..) {
+            p.cancel();
+        }
+        Ok(SolveResult {
+            solved: solved.is_some(),
+            route: solved,
+            iterations,
+            expansions,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            decode_stats: DecodeDelta::delta_async(policy, &stats0),
+            spec,
         })
     }
 }
@@ -353,7 +629,22 @@ impl DecodeDelta {
         policy: &dyn ExpansionPolicy,
         before: &crate::decoding::DecodeStats,
     ) -> crate::decoding::DecodeStats {
-        let after = policy.decode_stats();
+        Self::between(policy.decode_stats(), before)
+    }
+
+    /// As [`DecodeDelta::delta`] for async policies (avoids relying on
+    /// dyn-trait upcasting).
+    pub(crate) fn delta_async(
+        policy: &dyn AsyncExpansionPolicy,
+        before: &crate::decoding::DecodeStats,
+    ) -> crate::decoding::DecodeStats {
+        Self::between(policy.decode_stats(), before)
+    }
+
+    fn between(
+        after: crate::decoding::DecodeStats,
+        before: &crate::decoding::DecodeStats,
+    ) -> crate::decoding::DecodeStats {
         crate::decoding::DecodeStats {
             model_calls: after.model_calls - before.model_calls,
             encode_calls: after.encode_calls - before.encode_calls,
@@ -459,6 +750,56 @@ mod tests {
             .unwrap();
         // wider beam needs no more policy batches than molecules
         assert!(r4.expansions <= r1.expansions + r4.iterations);
+    }
+
+    #[test]
+    fn pipelined_depth_one_matches_sequential() {
+        let stock = stock_of(&["CC(=O)O", "NCC(=O)O", "CCO"]);
+        let seq = RetroStar::new(1)
+            .solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        let pol = OraclePolicy::new();
+        let pip = RetroStar::new(1)
+            .solve_pipelined("CC(=O)NCC(=O)OCC", &EagerAsync(&pol), &stock, &limits())
+            .unwrap();
+        assert_eq!(seq.solved, pip.solved);
+        assert_eq!(seq.route, pip.route);
+        assert_eq!(seq.iterations, pip.iterations);
+        assert_eq!(seq.expansions, pip.expansions);
+        assert_eq!(pip.spec.groups_cancelled, 0);
+        assert_eq!(pip.spec.spec_hits, 0);
+        assert_eq!(pip.spec.max_in_flight, 1);
+    }
+
+    #[test]
+    fn speculative_mode_still_solves() {
+        let stock = stock_of(&["CC(=O)O", "NCC(=O)O", "CCO"]);
+        let r = RetroStar::new(1)
+            .with_spec_depth(4)
+            .solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        assert!(r.solved, "{r:?}");
+        assert!(r.route.unwrap().closed_over(&stock));
+        assert!(r.spec.groups_applied > 0);
+        assert!(r.spec.groups_submitted >= r.spec.groups_applied);
+    }
+
+    #[test]
+    fn speculative_mode_respects_unsolvable_and_depth_caps() {
+        let stock = stock_of(&["CCO"]);
+        let r = RetroStar::new(1)
+            .with_spec_depth(3)
+            .solve("CC(=O)NCC", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        assert!(!r.solved);
+        assert!(r.iterations > 0);
+        // In-stock target short-circuits identically.
+        let r = RetroStar::new(1)
+            .with_spec_depth(3)
+            .solve("CCO", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        assert!(r.solved);
+        assert_eq!(r.iterations, 0);
     }
 
     #[test]

@@ -47,6 +47,7 @@ fn ctx() -> ServerCtx {
         },
         default_algo: "retrostar".into(),
         default_beam_width: 1,
+        default_spec_depth: 1,
     }
 }
 

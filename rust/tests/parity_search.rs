@@ -1,0 +1,293 @@
+//! Pipelined-search parity and cancellation suite.
+//!
+//! Pins the speculation-determinism contract: pipelined Retro\* at
+//! `spec_depth = 1` is **bit-identical** to the sequential planner —
+//! same route, same iteration/expansion counts, same per-solve decode
+//! stats — across the oracle policy, a solving neural path
+//! ([`ScriptedModel`] + `ModelPolicy`), and the full hub/scheduler
+//! serving stack. Also pins that abandoned speculative expansions
+//! release their scheduler tasks and leak no waiters.
+
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::BatchedPolicy;
+use retroserve::decoding::msbs::Msbs;
+use retroserve::decoding::DecodeStats;
+use retroserve::metrics::Metrics;
+use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
+use retroserve::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use retroserve::search::policy::{ModelPolicy, OraclePolicy};
+use retroserve::search::{
+    retrostar::RetroStar, EagerAsync, Planner, SearchLimits, SolveResult, Stock,
+};
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
+use retroserve::util::Rng;
+use std::sync::Arc;
+
+fn limits() -> SearchLimits {
+    SearchLimits {
+        deadline: std::time::Duration::from_secs(30),
+        max_iterations: 120,
+        max_depth: 5,
+        expansions_per_step: 8,
+    }
+}
+
+/// A mix of handcrafted and generator-produced targets with a stock
+/// that solves some and starves others.
+fn workload() -> (Vec<String>, Stock) {
+    let blocks = generate_blocks(71, 200);
+    let mut stock_items: Vec<String> = blocks.iter().map(|b| b.smiles()).collect();
+    stock_items.push(
+        retroserve::chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT).unwrap(),
+    );
+    for s in ["CC(=O)O", "CN", "NCC(=O)O", "CCO"] {
+        stock_items.push(retroserve::chem::canonicalize(s).unwrap());
+    }
+    let stock = Stock::from_iter(stock_items);
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(17);
+    let mut targets = vec![
+        "CC(=O)NC".to_string(),
+        "CC(=O)NCC(=O)OCC".to_string(),
+        "CC(=O)NCC".to_string(), // unsolvable over this stock? fine either way
+    ];
+    while targets.len() < 9 {
+        let depth = 2 + rng.gen_range(2);
+        if let Some(t) = gen_tree(&idx, &mut rng, depth, 24) {
+            targets.push(t.product_smiles().to_string());
+        }
+    }
+    (targets, stock)
+}
+
+fn assert_stats_eq(a: &DecodeStats, b: &DecodeStats, ctx: &str) {
+    assert_eq!(a.model_calls, b.model_calls, "{ctx}: model_calls");
+    assert_eq!(a.encode_calls, b.encode_calls, "{ctx}: encode_calls");
+    assert_eq!(a.rows_logical, b.rows_logical, "{ctx}: rows_logical");
+    assert_eq!(a.rows_padded, b.rows_padded, "{ctx}: rows_padded");
+    assert_eq!(a.drafts_offered, b.drafts_offered, "{ctx}: drafts_offered");
+    assert_eq!(a.drafts_accepted, b.drafts_accepted, "{ctx}: drafts_accepted");
+}
+
+fn assert_bit_identical(seq: &SolveResult, pip: &SolveResult, ctx: &str) {
+    assert_eq!(seq.solved, pip.solved, "{ctx}: solved");
+    assert_eq!(seq.route, pip.route, "{ctx}: route");
+    assert_eq!(seq.iterations, pip.iterations, "{ctx}: iterations");
+    assert_eq!(seq.expansions, pip.expansions, "{ctx}: expansions");
+    assert_stats_eq(&seq.decode_stats, &pip.decode_stats, ctx);
+    assert_eq!(pip.spec.groups_cancelled, 0, "{ctx}: depth-1 never cancels");
+    assert_eq!(pip.spec.spec_hits, 0, "{ctx}: depth-1 never speculates");
+}
+
+#[test]
+fn depth_one_matches_sequential_over_oracle_policy() {
+    let (targets, stock) = workload();
+    for bw in [1usize, 4] {
+        for t in &targets {
+            let seq = RetroStar::new(bw)
+                .solve(t, &OraclePolicy::new(), &stock, &limits())
+                .unwrap();
+            let pol = OraclePolicy::new();
+            let pip = RetroStar::new(bw)
+                .solve_pipelined(t, &EagerAsync(&pol), &stock, &limits())
+                .unwrap();
+            assert_bit_identical(&seq, &pip, &format!("oracle bw={bw} target={t}"));
+        }
+    }
+}
+
+#[test]
+fn depth_one_matches_sequential_over_scripted_neural_policy() {
+    let (targets, stock) = workload();
+    let vocab = smiles_vocab(targets.iter().map(String::as_str));
+    for t in targets.iter().take(5) {
+        let mk = || {
+            ModelPolicy::new(
+                ScriptedModel::new(vocab.clone(), oracle_script()),
+                Box::new(Msbs::default()),
+                vocab.clone(),
+            )
+        };
+        let pol_seq = mk();
+        let seq = RetroStar::new(1).solve(t, &pol_seq, &stock, &limits()).unwrap();
+        let pol_pip = mk();
+        let pip = RetroStar::new(1)
+            .solve_pipelined(t, &EagerAsync(&pol_pip), &stock, &limits())
+            .unwrap();
+        assert_bit_identical(&seq, &pip, &format!("scripted target={t}"));
+    }
+}
+
+fn scripted_hub(vocab: &retroserve::tokenizer::Vocab) -> Arc<ExpansionHub> {
+    ExpansionHub::start(
+        ScriptedModel::new(vocab.clone(), oracle_script()),
+        Box::new(Msbs::default()),
+        vocab.clone(),
+        BatcherConfig {
+            max_wait: std::time::Duration::from_micros(100),
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    )
+}
+
+#[test]
+fn depth_one_matches_sequential_through_the_hub() {
+    let (targets, stock) = workload();
+    let vocab = smiles_vocab(targets.iter().map(String::as_str));
+    for t in targets.iter().take(4) {
+        // Fresh hub per side: identical cold-cache state.
+        let seq = RetroStar::new(1)
+            .solve(t, &BatchedPolicy::new(scripted_hub(&vocab)), &stock, &limits())
+            .unwrap();
+        let pip = RetroStar::new(1)
+            .solve_pipelined(
+                t,
+                &BatchedPolicy::new(scripted_hub(&vocab)),
+                &stock,
+                &limits(),
+            )
+            .unwrap();
+        assert_bit_identical(&seq, &pip, &format!("hub target={t}"));
+    }
+}
+
+#[test]
+fn speculative_hub_planning_solves_the_solvable_molecules() {
+    let (targets, stock) = workload();
+    let vocab = smiles_vocab(targets.iter().map(String::as_str));
+    // Speculation burns iteration budget on extra (absorbed-in-arrival-
+    // order, timing-dependent) expansions, so give the speculative side
+    // plenty of headroom: the contract is "no solvable molecule is
+    // lost", not bit-identical iteration accounting.
+    let mut spec_limits = limits();
+    spec_limits.max_iterations = 500;
+    let mut solved_seq = 0usize;
+    let mut solved_spec = 0usize;
+    let mut spec_submitted = 0u64;
+    for t in &targets {
+        let seq = RetroStar::new(1)
+            .solve(t, &BatchedPolicy::new(scripted_hub(&vocab)), &stock, &limits())
+            .unwrap();
+        let spec = RetroStar::new(1)
+            .with_spec_depth(4)
+            .solve_pipelined(
+                t,
+                &BatchedPolicy::new(scripted_hub(&vocab)),
+                &stock,
+                &spec_limits,
+            )
+            .unwrap();
+        solved_seq += seq.solved as usize;
+        solved_spec += spec.solved as usize;
+        spec_submitted += spec.spec.groups_submitted;
+        assert!(spec.spec.max_in_flight >= 1);
+        assert!(spec.spec.groups_submitted >= spec.spec.groups_applied);
+        if seq.solved {
+            assert!(
+                spec.solved,
+                "speculation must not lose solvable molecules: {t}"
+            );
+        }
+    }
+    assert!(
+        solved_spec >= solved_seq,
+        "speculation lost solves: {solved_spec} < {solved_seq}"
+    );
+    assert!(solved_seq >= 3, "workload must actually solve molecules");
+    assert!(spec_submitted > 0);
+}
+
+/// Wraps a model with a gate: while `hold` is set, decode calls block.
+/// Lets the cancellation test pin "task is mid-flight when the cancel
+/// arrives" without timing games.
+struct GatedModel {
+    inner: ScriptedModel,
+    hold: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl GatedModel {
+    fn wait_gate(&self) {
+        while self.hold.load(std::sync::atomic::Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+impl StepModel for GatedModel {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn medusa_heads(&self) -> usize {
+        self.inner.medusa_heads()
+    }
+    fn max_src(&self) -> usize {
+        self.inner.max_src()
+    }
+    fn max_tgt(&self) -> usize {
+        self.inner.max_tgt()
+    }
+    fn encode(&self, src: &[Vec<i32>]) -> anyhow::Result<MemHandle> {
+        self.inner.encode(src)
+    }
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> anyhow::Result<DecodeOut> {
+        self.wait_gate();
+        self.inner.decode(rows, win)
+    }
+    fn decode_into(
+        &self,
+        rows: &[DecodeRow],
+        win: usize,
+        out: &mut DecodeOut,
+    ) -> anyhow::Result<()> {
+        self.wait_gate();
+        self.inner.decode_into(rows, win, out)
+    }
+    fn release(&self, mem: MemHandle) {
+        self.inner.release(mem)
+    }
+}
+
+#[test]
+fn cancelled_speculation_releases_scheduler_tasks_and_waiters() {
+    let product = retroserve::chem::canonicalize("CC(=O)NCC(=O)OCC").unwrap();
+    let vocab = smiles_vocab([product.as_str()].into_iter());
+    let hold = Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let hub = ExpansionHub::start(
+        GatedModel {
+            inner: ScriptedModel::new(vocab.clone(), oracle_script()),
+            hold: hold.clone(),
+        },
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig {
+            max_wait: std::time::Duration::from_micros(100),
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    // Submit, give the hub time to start the per-query task and block
+    // inside the gated fused call…
+    let fut = hub.submit(&product, 6).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // …then abandon the expansion while it is mid-decode.
+    fut.cancel();
+    hold.store(false, std::sync::atomic::Ordering::Relaxed);
+    // The hub processes the cancel after the gated tick returns: the
+    // task leaves the scheduler, no waiters remain.
+    let mut clean = false;
+    for _ in 0..5000 {
+        let (waiting, tasks, in_flight) = hub.debug_snapshot().unwrap();
+        if waiting == 0 && tasks == 0 && in_flight == 0 {
+            clean = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_micros(500));
+    }
+    assert!(clean, "cancelled task must leave no waiters or scheduler state");
+    assert_eq!(hub.cancelled(), 1, "exactly one in-flight task abandoned");
+    // The hub still serves fresh work afterwards (nothing wedged).
+    let props = hub.expand(&product, 4).unwrap();
+    assert!(!props.is_empty());
+}

@@ -1,18 +1,26 @@
 #!/usr/bin/env python3
-"""Bench regression gate: diff a fresh BENCH_*.json against the
-committed baseline.
+"""Bench regression gate: diff fresh BENCH_*.json files against their
+committed baselines and emit one combined summary.
 
 Usage:
-    bench_regression.py BASELINE.json FRESH.json [--max-regress 0.15]
+    bench_regression.py BASELINE.json FRESH.json
+                        [BASELINE2.json FRESH2.json ...]
+                        [--max-regress 0.15]
 
-Rules, per result name present in both files:
+Any number of (baseline, fresh) pairs may be given; the gate fails if
+any pair fails. Rules, per result name present in both files of a pair:
+
   * `tokens_per_sec` may not drop more than --max-regress (relative) —
     wall-clock throughput, inherently machine-noisy, hence the slack;
+  * `ms_per_target` / `wall_ms` may not *increase* more than
+    --max-regress (relative) — same slack, opposite direction;
   * `model_calls` may not increase at all — it is deterministic, so any
-    increase is an algorithmic regression, not noise.
+    increase is an algorithmic regression, not noise;
+  * `solved` must match exactly — the planner workloads are seeded and
+    deterministic, so any change in solve count is a semantic change.
 
-A missing or empty baseline passes with a warning (the first toolchain
-run populates it; see bench/baseline/README.md).
+A missing or empty baseline passes that pair with a warning (the first
+toolchain run populates it; see bench/baseline/README.md).
 """
 
 import json
@@ -28,6 +36,58 @@ def load(path):
     return {r["name"]: r for r in doc.get("results", [])}
 
 
+def check_pair(base_path, fresh_path, max_regress, lines):
+    """Returns a list of failure strings for one (baseline, fresh) pair."""
+    baseline, fresh = load(base_path), load(fresh_path)
+    if fresh is None:
+        return [f"{fresh_path}: fresh results missing"]
+    if not baseline:
+        lines.append(f"WARN {base_path}: baseline missing or empty; nothing "
+                     "to gate (commit a populated baseline to arm this check)")
+        return []
+    failures = []
+    for name, base in baseline.items():
+        cur = fresh.get(name)
+        tag = f"{fresh_path}:{name}"
+        if cur is None:
+            failures.append(f"{tag}: present in baseline but not in fresh run")
+            continue
+        # throughput: higher is better, bounded relative drop
+        b_tps, c_tps = base.get("tokens_per_sec"), cur.get("tokens_per_sec")
+        if b_tps and c_tps is not None:
+            drop = (b_tps - c_tps) / b_tps
+            ok = drop <= max_regress
+            lines.append(f"{'ok  ' if ok else 'FAIL'} {tag} tokens/sec "
+                         f"{b_tps:.0f} -> {c_tps:.0f} ({-drop * 100.0:+.1f}%)")
+            if not ok:
+                failures.append(
+                    f"{tag}: tokens/sec regressed {drop * 100.0:.1f}% "
+                    f"(> {max_regress * 100.0:.0f}%)")
+        # wall time: lower is better, bounded relative increase
+        for key in ("ms_per_target", "wall_ms"):
+            b_ms, c_ms = base.get(key), cur.get(key)
+            if b_ms and c_ms is not None:
+                rise = (c_ms - b_ms) / b_ms
+                ok = rise <= max_regress
+                lines.append(f"{'ok  ' if ok else 'FAIL'} {tag} {key} "
+                             f"{b_ms:.2f} -> {c_ms:.2f} ({rise * 100.0:+.1f}%)")
+                if not ok:
+                    failures.append(
+                        f"{tag}: {key} rose {rise * 100.0:.1f}% "
+                        f"(> {max_regress * 100.0:.0f}%)")
+        # deterministic counters
+        b_mc, c_mc = base.get("model_calls"), cur.get("model_calls")
+        if b_mc is not None and c_mc is not None and c_mc > b_mc:
+            failures.append(
+                f"{tag}: model_calls increased {b_mc:.0f} -> {c_mc:.0f}")
+        b_s, c_s = base.get("solved"), cur.get("solved")
+        if b_s is not None and c_s is not None and c_s != b_s:
+            failures.append(
+                f"{tag}: solved count changed {b_s:.0f} -> {c_s:.0f} "
+                "(deterministic workload; exact match required)")
+    return failures
+
+
 def main(argv):
     max_regress = 0.15
     args = []
@@ -39,39 +99,19 @@ def main(argv):
             continue
         args.append(argv[i])
         i += 1
-    if len(args) != 2:
+    if len(args) < 2 or len(args) % 2 != 0:
         print(__doc__)
         return 2
-    baseline, fresh = load(args[0]), load(args[1])
-    if fresh is None:
-        print(f"FAIL: fresh results {args[1]} missing")
-        return 1
-    if not baseline:
-        print(f"WARN: baseline {args[0]} missing or empty; nothing to gate "
-              "(commit a populated baseline to arm this check)")
-        return 0
+    pairs = [(args[j], args[j + 1]) for j in range(0, len(args), 2)]
+    lines = []
     failures = []
-    for name, base in baseline.items():
-        cur = fresh.get(name)
-        if cur is None:
-            failures.append(f"{name}: present in baseline but not in fresh run")
-            continue
-        b_tps, c_tps = base.get("tokens_per_sec"), cur.get("tokens_per_sec")
-        if b_tps and c_tps is not None:
-            drop = (b_tps - c_tps) / b_tps
-            status = "FAIL" if drop > max_regress else "ok"
-            print(f"{status}: {name} tokens/sec {b_tps:.0f} -> {c_tps:.0f} "
-                  f"({-drop * 100.0:+.1f}%)")
-            if drop > max_regress:
-                failures.append(
-                    f"{name}: tokens/sec regressed {drop * 100.0:.1f}% "
-                    f"(> {max_regress * 100.0:.0f}%)")
-        b_mc, c_mc = base.get("model_calls"), cur.get("model_calls")
-        if b_mc is not None and c_mc is not None and c_mc > b_mc:
-            failures.append(
-                f"{name}: model_calls increased {b_mc:.0f} -> {c_mc:.0f}")
+    for base_path, fresh_path in pairs:
+        failures.extend(check_pair(base_path, fresh_path, max_regress, lines))
+    for line in lines:
+        print(line)
+    print(f"\n== bench regression summary: {len(pairs)} pair(s), "
+          f"{len(failures)} failure(s) ==")
     if failures:
-        print("\nbench regression gate FAILED:")
         for f in failures:
             print(f"  - {f}")
         return 1
