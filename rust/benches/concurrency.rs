@@ -24,13 +24,14 @@
 //!
 //! Emits `BENCH_concurrency.json`.
 
-use anyhow::Result;
-use retroserve::benchkit::{allocs_now, write_bench_json, BenchRecord, CountingAlloc};
+use retroserve::benchkit::{
+    allocs_now, write_bench_json, BenchRecord, CountingAlloc, InstrumentedModel,
+};
 use retroserve::decoding::msbs::Msbs;
-use retroserve::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig};
+use retroserve::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
 use retroserve::decoding::{DecodeStats, Decoder};
 use retroserve::model::mock::{MockConfig, MockModel};
-use retroserve::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use retroserve::model::{encode_shared, StepModel};
 use retroserve::tokenizer::{BOS, EOS};
 use retroserve::util::stats::percentile;
 use retroserve::util::Rng;
@@ -44,49 +45,9 @@ const DEVICE_CALL_US: u64 = 200;
 const REQUESTS_PER_SESSION: usize = 6;
 const K: usize = 10;
 
-/// Mock model plus a fixed per-decode-call sleep (device time).
-struct DelayModel {
-    inner: MockModel,
-    delay: std::time::Duration,
-}
-
-impl StepModel for DelayModel {
-    fn vocab(&self) -> usize {
-        self.inner.vocab()
-    }
-    fn medusa_heads(&self) -> usize {
-        self.inner.medusa_heads()
-    }
-    fn max_src(&self) -> usize {
-        self.inner.max_src()
-    }
-    fn max_tgt(&self) -> usize {
-        self.inner.max_tgt()
-    }
-    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
-        self.inner.encode(src)
-    }
-    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
-        std::thread::sleep(self.delay);
-        self.inner.decode(rows, win)
-    }
-    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
-        std::thread::sleep(self.delay);
-        self.inner.decode_into(rows, win, out)
-    }
-    fn pad_rows(&self, n: usize) -> usize {
-        self.inner.pad_rows(n)
-    }
-    fn release(&self, mem: MemHandle) {
-        self.inner.release(mem)
-    }
-}
-
-fn make_model() -> DelayModel {
-    DelayModel {
-        inner: MockModel::new(MockConfig::default()),
-        delay: std::time::Duration::from_micros(DEVICE_CALL_US),
-    }
+fn make_model() -> InstrumentedModel<MockModel> {
+    InstrumentedModel::new(MockModel::new(MockConfig::default()))
+        .with_decode_delay(std::time::Duration::from_micros(DEVICE_CALL_US))
 }
 
 /// The (session, step) request workload: same for both disciplines.
@@ -111,6 +72,7 @@ fn workload(sessions: usize) -> Vec<Vec<Vec<i32>>> {
 
 struct RunReport {
     model_calls: u64,
+    encode_calls: u64,
     avg_effective_batch: f64,
     p50_ms: f64,
     p95_ms: f64,
@@ -145,6 +107,7 @@ fn run_request_granular(sessions: usize) -> RunReport {
     }
     RunReport {
         model_calls: stats.model_calls,
+        encode_calls: model.inner().encode_calls.load(std::sync::atomic::Ordering::Relaxed),
         avg_effective_batch: stats.avg_effective_batch(),
         p50_ms: percentile(&latencies, 50.0),
         p95_ms: percentile(&latencies, 95.0),
@@ -154,7 +117,10 @@ fn run_request_granular(sessions: usize) -> RunReport {
 }
 
 /// Cycle-fused discipline: one task per request, every tick fuses all
-/// in-flight tasks' rows into one device call.
+/// in-flight tasks' rows into one device call. Admission is
+/// encode-fused like the hub's: all requests becoming ready in the
+/// same round (initial co-arrivals, and the sessions whose previous
+/// request retired in the same tick) share ONE `encode_shared` call.
 fn run_cycle_fused(sessions: usize) -> RunReport {
     let work = workload(sessions);
     let model = make_model();
@@ -165,13 +131,29 @@ fn run_cycle_fused(sessions: usize) -> RunReport {
     let mut task_of = std::collections::HashMap::new();
     let mut finished: Vec<Finished> = Vec::new();
     let t0 = std::time::Instant::now();
-    for (s, chain) in work.iter().enumerate() {
-        let id = sched.submit(dec.start_task(&model, &chain[..1], K).expect("task"));
-        task_of.insert(id, (s, 0usize));
+    // One fused encode admits a whole round of co-arriving requests.
+    fn submit_round(
+        model: &dyn StepModel,
+        dec: &Msbs,
+        work: &[Vec<Vec<i32>>],
+        sched: &mut DecodeScheduler,
+        task_of: &mut std::collections::HashMap<TaskId, (usize, usize)>,
+        round: &[(usize, usize)],
+    ) {
+        let srcs: Vec<Vec<i32>> = round.iter().map(|&(s, i)| work[s][i].clone()).collect();
+        let views = encode_shared(model, &srcs).expect("encode");
+        for ((&(s, i), view), src) in round.iter().zip(views).zip(srcs.iter()) {
+            let one = std::slice::from_ref(src);
+            let task = dec.start_task_on(model, vec![view], one, K).expect("task");
+            task_of.insert(sched.submit(task), (s, i));
+        }
     }
+    let first_round: Vec<(usize, usize)> = (0..sessions).map(|s| (s, 0)).collect();
+    submit_round(&model, &dec, &work, &mut sched, &mut task_of, &first_round);
     let mut ticks = 0u64;
     let mut steady_ticks = 0u64;
     let mut steady_allocs = 0u64;
+    let mut next_round: Vec<(usize, usize)> = Vec::new();
     while !sched.is_idle() {
         finished.clear();
         let a0 = allocs_now();
@@ -185,19 +167,22 @@ fn run_cycle_fused(sessions: usize) -> RunReport {
             steady_allocs += spent;
         }
         let now = std::time::Instant::now();
+        next_round.clear();
         for f in finished.drain(..) {
             let (s, i) = task_of.remove(&f.id).expect("task bookkeeping");
             latencies.push(now.duration_since(issue[s]).as_secs_f64() * 1e3);
             if i + 1 < REQUESTS_PER_SESSION {
                 issue[s] = now;
-                let next = &work[s][i + 1..i + 2];
-                let id = sched.submit(dec.start_task(&model, next, K).expect("task"));
-                task_of.insert(id, (s, i + 1));
+                next_round.push((s, i + 1));
             }
+        }
+        if !next_round.is_empty() {
+            submit_round(&model, &dec, &work, &mut sched, &mut task_of, &next_round);
         }
     }
     RunReport {
         model_calls: sched.stats.fused_calls,
+        encode_calls: model.inner().encode_calls.load(std::sync::atomic::Ordering::Relaxed),
         avg_effective_batch: sched.stats.avg_effective_batch(),
         p50_ms: percentile(&latencies, 50.0),
         p95_ms: percentile(&latencies, 95.0),
@@ -219,15 +204,19 @@ fn main() {
     for sessions in [1usize, 4, 16] {
         let rg = run_request_granular(sessions);
         let cf = run_cycle_fused(sessions);
+        let requests = (sessions * REQUESTS_PER_SESSION) as u64;
         for (name, r) in [("request-granular", &rg), ("cycle-fused", &cf)] {
             println!(
-                "{name:<18} s={sessions:<3} calls {:>5}  eff.batch {:>6.1}  \
+                "{name:<18} s={sessions:<3} calls {:>5}  encodes {:>4}  eff.batch {:>6.1}  \
                  p50 {:>7.2}ms  p95 {:>7.2}ms  wall {:>8.1}ms",
-                r.model_calls, r.avg_effective_batch, r.p50_ms, r.p95_ms, r.wall_ms
+                r.model_calls, r.encode_calls, r.avg_effective_batch, r.p50_ms, r.p95_ms,
+                r.wall_ms
             );
             let mut rec = BenchRecord::new(format!("{name}-s{sessions}"))
                 .metric("sessions", sessions as f64)
                 .metric("model_calls", r.model_calls as f64)
+                .metric("encode_calls", r.encode_calls as f64)
+                .metric("encode_calls_per_request", r.encode_calls as f64 / requests as f64)
                 .metric("avg_effective_batch", r.avg_effective_batch)
                 .metric("p50_ms", r.p50_ms)
                 .metric("p95_ms", r.p95_ms)
@@ -241,11 +230,14 @@ fn main() {
             let fewer = cf.model_calls < rg.model_calls;
             let batch_x = cf.avg_effective_batch / rg.avg_effective_batch.max(1e-9);
             println!(
-                "  -> at 16 sessions: fused calls {} vs {} ({}), effective batch {:.2}x",
+                "  -> at 16 sessions: fused calls {} vs {} ({}), effective batch {:.2}x; \
+                 {} encodes for {requests} requests (admission fused; see \
+                 BENCH_encode_fusion.json for the fan-in sweep)",
                 cf.model_calls,
                 rg.model_calls,
                 if fewer { "fewer" } else { "NOT fewer" },
-                batch_x
+                batch_x,
+                cf.encode_calls
             );
         }
     }

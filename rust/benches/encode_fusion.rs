@@ -1,0 +1,154 @@
+//! Encode-fusion bench: physical encoder calls per admission round
+//! through the [`ExpansionHub`], at 1 / 4 / 16 co-submitting sessions.
+//!
+//! Workload: `WAVES` waves; in each wave every session submits ONE
+//! distinct (cache-missing) molecule and all futures are awaited before
+//! the next wave — the co-arrival shape multi-session serving produces
+//! and the shape the fused-encode admission groups exist for. Before
+//! this stage, every miss paid its own `StepModel::encode` call
+//! (encoder calls = requests); with shared-encode admission, every
+//! gather round pays exactly ONE (encoder calls = rounds), so at
+//! fan-in N one call does the work of N.
+//!
+//! The mock model sleeps a fixed latency per encode *and* per decode
+//! call so the amortization shows up in wall time, not just in the
+//! counters. Reported per session count:
+//!
+//! * `encode_calls` (physical, from the hub counter) vs `requests`
+//!   (what per-molecule encoding would have paid) — `fusion_x` is the
+//!   ratio; the acceptance bar is >= 4x at 16 sessions;
+//! * the one-call-per-round invariant (`encode_calls == encode_rounds`),
+//!   printed as a PASS/VIOLATION check (CI runs this bench advisory).
+//!
+//! Emits `BENCH_encode_fusion.json`.
+
+use retroserve::benchkit::{write_bench_json, BenchRecord, InstrumentedModel};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::metrics::Metrics;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::tokenizer::Vocab;
+use retroserve::util::Rng;
+use std::sync::Arc;
+
+/// Synthetic device latency per encoder call.
+const ENCODE_CALL_US: u64 = 300;
+/// Synthetic device latency per decode call.
+const DEVICE_CALL_US: u64 = 200;
+const WAVES: usize = 6;
+const K: usize = 8;
+
+/// Distinct pseudo-SMILES per (wave, session) so every request misses
+/// the cache, plus a vocabulary covering them all.
+fn workload(sessions: usize) -> (Vec<Vec<String>>, Vocab) {
+    let mut rng = Rng::new(0xFACADE ^ sessions as u64);
+    let mut seen = std::collections::HashSet::new();
+    let alphabet = ['C', 'N', 'O'];
+    let mut waves = Vec::with_capacity(WAVES);
+    for _ in 0..WAVES {
+        let mut wave = Vec::with_capacity(sessions);
+        while wave.len() < sessions {
+            let len = 6 + rng.gen_range(24);
+            let s: String = (0..len).map(|_| alphabet[rng.gen_range(3)]).collect();
+            if seen.insert(s.clone()) {
+                wave.push(s);
+            }
+        }
+        waves.push(wave);
+    }
+    let vocab = Vocab::build(waves.iter().flatten().map(String::as_str));
+    (waves, vocab)
+}
+
+struct RunReport {
+    requests: u64,
+    encode_calls: u64,
+    encode_rounds: u64,
+    wall_ms: f64,
+}
+
+fn run(sessions: usize) -> RunReport {
+    let (waves, vocab) = workload(sessions);
+    let hub = ExpansionHub::start(
+        InstrumentedModel::new(MockModel::new(MockConfig {
+            vocab: vocab.len(),
+            ..Default::default()
+        }))
+        .with_encode_delay(std::time::Duration::from_micros(ENCODE_CALL_US))
+        .with_decode_delay(std::time::Duration::from_micros(DEVICE_CALL_US)),
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig {
+            max_batch: 2 * sessions.max(8),
+            max_wait: std::time::Duration::from_millis(3),
+            max_rows: 4096,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let t0 = std::time::Instant::now();
+    for wave in &waves {
+        let futs: Vec<_> = wave.iter().map(|m| hub.submit(m, K).expect("submit")).collect();
+        for f in futs {
+            let _ = f.wait().expect("expansion");
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (encode_calls, encode_rounds) = hub.encode_ratio();
+    RunReport {
+        requests: (sessions * WAVES) as u64,
+        encode_calls,
+        encode_rounds,
+        wall_ms,
+    }
+}
+
+fn main() {
+    println!(
+        "== encode fusion bench (msbs, K={K}, {WAVES} waves, encode {ENCODE_CALL_US}us, \
+         decode {DEVICE_CALL_US}us) =="
+    );
+    let mut records = Vec::new();
+    let mut all_ok = true;
+    for sessions in [1usize, 4, 16] {
+        let r = run(sessions);
+        let fusion = r.requests as f64 / r.encode_calls.max(1) as f64;
+        let per_round_ok = r.encode_calls <= r.encode_rounds;
+        all_ok &= per_round_ok;
+        println!(
+            "sessions {sessions:<3} requests {:>3}  encode calls {:>3}  rounds {:>3}  \
+             fusion {fusion:>5.1}x  wall {:>8.1}ms  one-call-per-round {}",
+            r.requests,
+            r.encode_calls,
+            r.encode_rounds,
+            r.wall_ms,
+            if per_round_ok { "PASS" } else { "VIOLATION" }
+        );
+        records.push(
+            BenchRecord::new(format!("encode-fusion-s{sessions}"))
+                .metric("sessions", sessions as f64)
+                .metric("requests", r.requests as f64)
+                .metric("encode_calls", r.encode_calls as f64)
+                .metric("encode_rounds", r.encode_rounds as f64)
+                .metric("encode_calls_per_request", r.encode_calls as f64 / r.requests as f64)
+                .metric("fusion_x", fusion)
+                .metric("wall_ms", r.wall_ms),
+        );
+        if sessions == 16 {
+            println!(
+                "  -> at 16-session fan-in: {} encode calls for {} misses \
+                 ({fusion:.1}x fewer; target >= 4x)",
+                r.encode_calls, r.requests
+            );
+        }
+    }
+    println!(
+        "encoder-calls-per-round invariant: {}",
+        if all_ok { "PASS" } else { "VIOLATION" }
+    );
+    let path = std::path::Path::new("BENCH_encode_fusion.json");
+    match write_bench_json(path, "encode-fusion", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}

@@ -18,14 +18,12 @@
 //! device latency per fused call so tick counts dominate wall time the
 //! way device calls would. Emits `BENCH_search_pipelined.json`.
 
-use anyhow::Result;
-use retroserve::benchkit::{write_bench_json, BenchRecord};
+use retroserve::benchkit::{write_bench_json, BenchRecord, InstrumentedModel};
 use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
 use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::msbs::Msbs;
 use retroserve::metrics::Metrics;
 use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
-use retroserve::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
 use retroserve::search::{retrostar::RetroStar, Planner, SearchLimits, SpecStats, Stock};
 use retroserve::synthchem::blocks::generate_blocks;
 use retroserve::synthchem::gen::{gen_tree, BlockIndex};
@@ -38,41 +36,6 @@ const DEVICE_CALL_US: u64 = 150;
 const SPEC_DEPTH: usize = 4;
 const TARGETS: usize = 14;
 const K: usize = 8;
-
-/// Scripted model plus a fixed per-decode-call sleep (device time).
-struct DelayModel {
-    inner: ScriptedModel,
-    delay: std::time::Duration,
-}
-
-impl StepModel for DelayModel {
-    fn vocab(&self) -> usize {
-        self.inner.vocab()
-    }
-    fn medusa_heads(&self) -> usize {
-        self.inner.medusa_heads()
-    }
-    fn max_src(&self) -> usize {
-        self.inner.max_src()
-    }
-    fn max_tgt(&self) -> usize {
-        self.inner.max_tgt()
-    }
-    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
-        self.inner.encode(src)
-    }
-    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
-        std::thread::sleep(self.delay);
-        self.inner.decode(rows, win)
-    }
-    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
-        std::thread::sleep(self.delay);
-        self.inner.decode_into(rows, win, out)
-    }
-    fn release(&self, mem: MemHandle) {
-        self.inner.release(mem)
-    }
-}
 
 fn workload() -> (Vec<String>, Stock, Vocab) {
     let blocks = generate_blocks(71, 400);
@@ -97,6 +60,7 @@ struct RunReport {
     ticks: u64,
     fused_rows: u64,
     model_calls: u64,
+    encode_calls: u64,
     wall_ms: f64,
     spec: SpecStats,
 }
@@ -104,10 +68,8 @@ struct RunReport {
 fn run(targets: &[String], stock: &Stock, vocab: &Vocab, spec_depth: usize) -> RunReport {
     // Fresh hub per discipline: identical cold caches, fair tick counts.
     let hub = ExpansionHub::start(
-        DelayModel {
-            inner: ScriptedModel::new(vocab.clone(), oracle_script()),
-            delay: std::time::Duration::from_micros(DEVICE_CALL_US),
-        },
+        InstrumentedModel::new(ScriptedModel::new(vocab.clone(), oracle_script()))
+            .with_decode_delay(std::time::Duration::from_micros(DEVICE_CALL_US)),
         Box::new(Msbs::default()),
         vocab.clone(),
         BatcherConfig {
@@ -147,11 +109,13 @@ fn run(targets: &[String], stock: &Stock, vocab: &Vocab, spec_depth: usize) -> R
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let (ticks, fused_rows) = hub.fused_ratio();
+    let (encode_calls, _rounds) = hub.encode_ratio();
     RunReport {
         solved,
         ticks,
         fused_rows,
         model_calls: hub.stats().model_calls,
+        encode_calls,
         wall_ms,
         spec,
     }
@@ -168,14 +132,16 @@ fn main() {
         let r = run(&targets, &stock, &vocab, sd);
         let tps = r.ticks as f64 / (r.solved.max(1)) as f64;
         let eff = r.fused_rows as f64 / (r.ticks.max(1)) as f64;
+        let eps = r.encode_calls as f64 / (r.solved.max(1)) as f64;
         println!(
             "{name:<17} spec_depth={sd}  solved {:>2}/{}  ticks {:>5}  ticks/solved {:>7.1}  \
-             eff.rows/tick {:>5.2}  wall {:>8.1}ms",
+             eff.rows/tick {:>5.2}  encodes/solved {:>5.1}  wall {:>8.1}ms",
             r.solved,
             targets.len(),
             r.ticks,
             tps,
             eff,
+            eps,
             r.wall_ms
         );
         if sd > 1 {
@@ -197,6 +163,8 @@ fn main() {
                 .metric("ticks_per_solved", tps)
                 .metric("rows_per_tick", eff)
                 .metric("model_calls", r.model_calls as f64)
+                .metric("encode_calls", r.encode_calls as f64)
+                .metric("encode_calls_per_solved", eps)
                 .metric("wall_ms", r.wall_ms)
                 .metric("spec_submitted", r.spec.groups_submitted as f64)
                 .metric("spec_cancelled", r.spec.groups_cancelled as f64)

@@ -2,11 +2,157 @@
 //! (`bench_table1..4`) and the criterion-style micro benches.
 
 use crate::jsonx::Json;
-use crate::model::StepModel;
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
 use anyhow::{Context, Result};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Instrumented [`StepModel`] wrapper shared by the benches and the
+/// integration tests, so harnesses stop hand-writing ~40-line
+/// delegation impls per knob:
+///
+/// * optional fixed per-call **device latencies** (`with_encode_delay`
+///   / `with_decode_delay`) — synthetic device time so batching wins
+///   show up in wall clock, not just in call counters;
+/// * an optional **decode gate** (`with_gate`): while the shared flag
+///   is set, decode calls block — tests use it to pin "a task is
+///   mid-flight when X happens" without timing games;
+/// * a shared **live-handle counter** (`with_live_counter`): `encode`
+///   minus `release`, observable from outside even after the model
+///   moves onto a [`crate::runtime::server::SharedModel`] executor
+///   thread — the ref-count tests' probe;
+/// * **encode-failure injection** (`with_encode_failure`): `encode`
+///   errors for any batch the predicate matches — blast-radius and
+///   fallback tests.
+///
+/// Everything defaults to a transparent pass-through.
+pub struct InstrumentedModel<M> {
+    inner: M,
+    encode_delay: std::time::Duration,
+    decode_delay: std::time::Duration,
+    hold: Arc<AtomicBool>,
+    live: Arc<AtomicIsize>,
+    encode_fail: Option<Box<dyn Fn(&[Vec<i32>]) -> bool + Send + Sync>>,
+}
+
+impl<M> InstrumentedModel<M> {
+    pub fn new(inner: M) -> Self {
+        Self {
+            inner,
+            encode_delay: std::time::Duration::ZERO,
+            decode_delay: std::time::Duration::ZERO,
+            hold: Arc::new(AtomicBool::new(false)),
+            live: Arc::new(AtomicIsize::new(0)),
+            encode_fail: None,
+        }
+    }
+
+    /// Sleep this long inside every `encode` call.
+    pub fn with_encode_delay(mut self, d: std::time::Duration) -> Self {
+        self.encode_delay = d;
+        self
+    }
+
+    /// Sleep this long inside every `decode`/`decode_into` call.
+    pub fn with_decode_delay(mut self, d: std::time::Duration) -> Self {
+        self.decode_delay = d;
+        self
+    }
+
+    /// Decode calls block while `hold` is set (checked every 200µs —
+    /// this is a test gate, not a serving wait path).
+    pub fn with_gate(mut self, hold: Arc<AtomicBool>) -> Self {
+        self.hold = hold;
+        self
+    }
+
+    /// Mirror the live encoded-batch count (`encode` − `release`) into
+    /// `live`.
+    pub fn with_live_counter(mut self, live: Arc<AtomicIsize>) -> Self {
+        self.live = live;
+        self
+    }
+
+    /// `encode` errors for any batch the predicate matches (failure
+    /// injection for blast-radius / fallback tests).
+    pub fn with_encode_failure<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&[Vec<i32>]) -> bool + Send + Sync + 'static,
+    {
+        self.encode_fail = Some(Box::new(f));
+        self
+    }
+
+    /// The wrapped model (e.g. to read `MockModel::encode_calls`).
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    fn wait_gate(&self) {
+        while self.hold.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+impl<M: StepModel> StepModel for InstrumentedModel<M> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn medusa_heads(&self) -> usize {
+        self.inner.medusa_heads()
+    }
+
+    fn max_src(&self) -> usize {
+        self.inner.max_src()
+    }
+
+    fn max_tgt(&self) -> usize {
+        self.inner.max_tgt()
+    }
+
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        if let Some(fail) = &self.encode_fail {
+            if fail(src) {
+                anyhow::bail!("injected encode failure");
+            }
+        }
+        if !self.encode_delay.is_zero() {
+            std::thread::sleep(self.encode_delay);
+        }
+        let h = self.inner.encode(src)?;
+        self.live.fetch_add(1, Ordering::SeqCst);
+        Ok(h)
+    }
+
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        self.wait_gate();
+        if !self.decode_delay.is_zero() {
+            std::thread::sleep(self.decode_delay);
+        }
+        self.inner.decode(rows, win)
+    }
+
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        self.wait_gate();
+        if !self.decode_delay.is_zero() {
+            std::thread::sleep(self.decode_delay);
+        }
+        self.inner.decode_into(rows, win, out)
+    }
+
+    fn pad_rows(&self, n: usize) -> usize {
+        self.inner.pad_rows(n)
+    }
+
+    fn release(&self, mem: MemHandle) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+        self.inner.release(mem)
+    }
+}
 
 /// One held-out single-step sample.
 #[derive(Clone, Debug)]
@@ -251,6 +397,24 @@ mod tests {
         assert_eq!(results[0].get("name").and_then(|s| s.as_str()), Some("msbs"));
         assert_eq!(results[0].get("ms_per_group").and_then(|x| x.as_f64()), Some(1.5));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn instrumented_model_tracks_live_handles_and_delegates() {
+        use crate::model::mock::{MockConfig, MockModel};
+        use crate::tokenizer::{BOS, EOS};
+        let live = Arc::new(AtomicIsize::new(0));
+        let m = InstrumentedModel::new(MockModel::new(MockConfig::default()))
+            .with_live_counter(live.clone());
+        let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        assert_eq!(live.load(Ordering::SeqCst), 1);
+        let out = m
+            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .unwrap();
+        assert_eq!(out.rows, 1);
+        m.release(h);
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        assert_eq!(m.inner().encode_calls.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -17,16 +17,44 @@
 //! and encoder memory. A tick error fails only the waiters of the tasks
 //! that were actually in the errored fused call.
 //!
+//! ## Fused-encode admission
+//!
+//! All cache-missing molecules gathered in one submission round share
+//! **one** [`StepModel::encode`] call
+//! ([`crate::model::encode_shared`]): each molecule then decodes over
+//! its own ref-counted row view ([`crate::model::MemView`]) of the
+//! shared batch, handed to the engine through
+//! [`Decoder::start_task_on`]. Encoder cost is therefore O(submission
+//! rounds), not O(misses) — at fan-in N one call does the work of N —
+//! while retirement stays per-query. The batch memory is released on
+//! the device exactly when the round's *last* member task retires or is
+//! cancelled, so abandoning one speculative expansion never strands its
+//! co-arrivals' memory. [`ExpansionHub::encode_ratio`] exposes the
+//! (physical encoder calls, encoding rounds) counters — equal while
+//! fused encodes succeed; a round whose fused encode errors falls back
+//! to per-molecule encodes, so one bad source fails only its own
+//! waiters.
+//!
+//! ## Event-driven completion
+//!
+//! Retirements, failures and processed cancellations bump a
+//! condvar-backed completion epoch; [`ExpansionHub::wait_any`] and the
+//! pipelined planner's multi-group wait ([`HubHandle`]'s `wait_event`)
+//! block on it instead of sleep-polling, so a completion wakes its
+//! waiter immediately and an idle wait burns no CPU.
+//!
 //! The expansion cache is a bounded [`LruCache`] keyed by *molecule*
 //! (not `(molecule, k)`): an entry decoded at k' serves any request with
 //! k <= k' by truncation, and a larger-k request replaces the entry —
 //! the same molecule is never re-decoded just because co-batched k
 //! differed, and sustained traffic cannot leak memory.
+//!
+//! [`LruCache`]: crate::util::lru::LruCache
 
 use crate::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
 use crate::decoding::{DecodeStats, Decoder};
 use crate::metrics::Metrics;
-use crate::model::StepModel;
+use crate::model::{encode_shared, MemView, StepModel};
 use crate::search::policy::{
     proposals_from_output, AsyncExpansionPolicy, ExpansionHandle, KTruncatedCache, Proposal,
     DEFAULT_CACHE_CAP,
@@ -36,7 +64,53 @@ use crate::tokenizer::Vocab;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Condvar-backed completion events: the hub bumps the epoch whenever
+/// something a waiter could observe happened (a request was answered, a
+/// task failed, a cancellation was processed), and waiters block on it
+/// instead of sleep-polling.
+///
+/// The epoch protocol makes missed wakeups impossible: capture
+/// [`CompletionQueue::epoch`] BEFORE polling, then
+/// [`CompletionQueue::wait_past`] that value — any event after the
+/// capture advances the epoch past it, so the wait returns immediately.
+/// Spurious wakeups merely cost a re-poll.
+pub(crate) struct CompletionQueue {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl CompletionQueue {
+    fn new() -> Self {
+        Self { epoch: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    fn notify(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until the epoch advances past `seen` or `deadline` passes;
+    /// returns the current epoch (feed it back in as the next `seen`).
+    pub(crate) fn wait_past(&self, seen: u64, deadline: std::time::Instant) -> u64 {
+        let mut e = self.epoch.lock().unwrap();
+        while *e <= seen {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(e, deadline - now).unwrap();
+            e = guard;
+        }
+        *e
+    }
+}
 
 struct ExpandReq {
     smiles: String,
@@ -51,9 +125,11 @@ enum HubMsg {
     /// waiter leaving cancels the molecule's in-flight decode tasks.
     Cancel { smiles: String, ticket: u64 },
     /// Introspection: (molecules with waiters, in-flight decode tasks,
-    /// scheduler in-flight count). Tests use this to pin "no leaked
-    /// waiters / tasks" after cancellation.
-    Debug(mpsc::SyncSender<(usize, usize, usize)>),
+    /// scheduler in-flight count, encoder calls, encoding rounds) —
+    /// read together on the hub thread so the snapshot is internally
+    /// consistent. Tests use this to pin "no leaked waiters / tasks"
+    /// after cancellation and one-encode-per-round through the stack.
+    Debug(mpsc::SyncSender<(usize, usize, usize, u64, u64)>),
 }
 
 /// Shared handle to the batcher thread.
@@ -70,8 +146,33 @@ pub struct ExpansionHub {
     /// Fused device calls / fused logical rows (cycle-level batching).
     fused_calls: Arc<AtomicU64>,
     fused_rows: Arc<AtomicU64>,
+    /// Physical encoder calls / submission rounds that encoded
+    /// (fused-encode admission keeps these equal at any fan-in).
+    encode_calls: Arc<AtomicU64>,
+    encode_rounds: Arc<AtomicU64>,
     /// In-flight tasks abandoned because every waiter cancelled.
     cancelled: Arc<AtomicU64>,
+    /// Completion events waiters block on (no sleep-polling).
+    events: Arc<CompletionQueue>,
+}
+
+/// Hub-thread state snapshot (see [`ExpansionHub::debug_snapshot`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HubSnapshot {
+    /// Molecules with registered waiters.
+    pub waiting_molecules: usize,
+    /// In-flight per-query decode tasks the hub tracks.
+    pub decode_tasks: usize,
+    /// Tasks currently inside the scheduler.
+    pub sched_in_flight: usize,
+    /// Physical [`StepModel::encode`] calls issued so far.
+    pub encode_calls: u64,
+    /// Submission rounds that attempted an encode. Fused-encode
+    /// admission means `encode_calls == encode_rounds` whenever every
+    /// round's fused encode succeeded; a round whose fused encode
+    /// errors falls back to per-molecule encodes (extra calls on that
+    /// error path only — one bad source must not fail its co-arrivals).
+    pub encode_rounds: u64,
 }
 
 /// A pending single-molecule expansion: the hub's future. Dropping it
@@ -82,27 +183,51 @@ pub struct ExpansionFuture {
     ticket: u64,
     rx: mpsc::Receiver<Result<Vec<Proposal>>>,
     hub_tx: mpsc::Sender<HubMsg>,
+    /// A result pulled off the channel but not yet consumed
+    /// ([`ExpansionHub::wait_any`] buffers here so readiness can be
+    /// observed without consuming).
+    ready: Option<Result<Vec<Proposal>>>,
     spent: bool,
 }
 
 impl ExpansionFuture {
-    /// Non-blocking: `Some` exactly once, when the expansion retired.
-    pub fn poll(&mut self) -> Option<Result<Vec<Proposal>>> {
+    /// Pull a pending result into the local buffer without consuming
+    /// it; `true` when one is held. A future whose result was already
+    /// consumed stays not-ready forever.
+    fn fill(&mut self) -> bool {
+        if self.spent {
+            return self.ready.is_some();
+        }
         match self.rx.try_recv() {
             Ok(r) => {
                 self.spent = true;
-                Some(r)
+                self.ready = Some(r);
+                true
             }
-            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Empty) => false,
             Err(mpsc::TryRecvError::Disconnected) => {
                 self.spent = true;
-                Some(Err(anyhow::anyhow!("hub gone")))
+                self.ready = Some(Err(anyhow::anyhow!("hub gone")));
+                true
             }
         }
     }
 
-    /// Block until the expansion retires.
+    /// Non-blocking: `Some` exactly once, when the expansion retired.
+    pub fn poll(&mut self) -> Option<Result<Vec<Proposal>>> {
+        if self.fill() {
+            self.ready.take()
+        } else {
+            None
+        }
+    }
+
+    /// Block until the expansion retires (channel-blocking — no
+    /// polling).
     pub fn wait(mut self) -> Result<Vec<Proposal>> {
+        if let Some(r) = self.ready.take() {
+            return r;
+        }
         self.spent = true;
         match self.rx.recv() {
             Ok(r) => r,
@@ -180,7 +305,10 @@ impl ExpansionHub {
         let merged = Arc::new(AtomicU64::new(0));
         let fused_calls = Arc::new(AtomicU64::new(0));
         let fused_rows = Arc::new(AtomicU64::new(0));
+        let encode_calls = Arc::new(AtomicU64::new(0));
+        let encode_rounds = Arc::new(AtomicU64::new(0));
         let cancelled = Arc::new(AtomicU64::new(0));
+        let events = Arc::new(CompletionQueue::new());
         {
             let stats = stats.clone();
             let invalid = invalid.clone();
@@ -189,7 +317,10 @@ impl ExpansionHub {
             let merged = merged.clone();
             let fused_calls = fused_calls.clone();
             let fused_rows = fused_rows.clone();
+            let encode_calls = encode_calls.clone();
+            let encode_rounds = encode_rounds.clone();
             let cancelled = cancelled.clone();
+            let events = events.clone();
             std::thread::Builder::new()
                 .name("expansion-hub".into())
                 .spawn(move || {
@@ -208,8 +339,11 @@ impl ExpansionHub {
                             merged,
                             fused_calls,
                             fused_rows,
+                            encode_calls,
+                            encode_rounds,
                             cancelled,
                         },
+                        events,
                     )
                 })
                 .expect("spawn expansion hub");
@@ -224,7 +358,10 @@ impl ExpansionHub {
             merged,
             fused_calls,
             fused_rows,
+            encode_calls,
+            encode_rounds,
             cancelled,
+            events,
         })
     }
 
@@ -242,8 +379,49 @@ impl ExpansionHub {
             ticket,
             rx,
             hub_tx: self.tx.clone(),
+            ready: None,
             spent: false,
         })
+    }
+
+    /// Block until at least one of `futs` (futures from **this** hub)
+    /// holds a result or `deadline` passes; returns the index of a
+    /// ready future — its next `poll`/`wait` returns without blocking.
+    /// Futures whose results were already consumed are skipped; if all
+    /// are consumed (or none completes in time) this returns `None`.
+    /// Condvar-backed: the wait wakes on hub completion events, never
+    /// sleep-polls.
+    pub fn wait_any(
+        &self,
+        futs: &mut [ExpansionFuture],
+        deadline: std::time::Instant,
+    ) -> Option<usize> {
+        loop {
+            let seen = self.events.epoch();
+            for (i, f) in futs.iter_mut().enumerate() {
+                if f.fill() {
+                    return Some(i);
+                }
+            }
+            if std::time::Instant::now() >= deadline {
+                return None;
+            }
+            self.events.wait_past(seen, deadline);
+        }
+    }
+
+    /// Current completion-event epoch; pair with
+    /// [`ExpansionHub::wait_completion_past`] for event-driven polling
+    /// (capture the epoch BEFORE inspecting state, then wait past it —
+    /// no event is ever missed, and no caller ever sleep-polls).
+    pub fn completion_epoch(&self) -> u64 {
+        self.events.epoch()
+    }
+
+    /// Block until a completion event past `seen` occurs or `deadline`
+    /// passes; returns the epoch observed.
+    pub fn wait_completion_past(&self, seen: u64, deadline: std::time::Instant) -> u64 {
+        self.events.wait_past(seen, deadline)
     }
 
     /// Blocking single-molecule expansion (used by the `expand` op).
@@ -270,21 +448,43 @@ impl ExpansionHub {
         )
     }
 
+    /// (physical encoder calls, submission rounds that encoded): the
+    /// fused-encode admission counters. One call per round regardless
+    /// of miss count, so these are equal while fused encodes succeed
+    /// (a round whose fused encode errors retries per molecule — extra
+    /// calls on that recovery path only); misses per call is the
+    /// encode-fusion amplification.
+    pub fn encode_ratio(&self) -> (u64, u64) {
+        (
+            self.encode_calls.load(Ordering::Relaxed),
+            self.encode_rounds.load(Ordering::Relaxed),
+        )
+    }
+
     /// In-flight decode tasks abandoned after their last waiter
     /// cancelled.
     pub fn cancelled(&self) -> u64 {
         self.cancelled.load(Ordering::Relaxed)
     }
 
-    /// Hub-thread state snapshot for tests and diagnostics:
-    /// `(molecules with waiters, in-flight decode tasks, scheduler
-    /// in-flight)`. Blocks until the hub finishes its current tick.
-    pub fn debug_snapshot(&self) -> Result<(usize, usize, usize)> {
+    /// Hub-thread state snapshot for tests and diagnostics; blocks
+    /// until the hub finishes its current tick. The encoder counters
+    /// ride along so tests can pin one-encode-per-round through the
+    /// full stack.
+    pub fn debug_snapshot(&self) -> Result<HubSnapshot> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx
             .send(HubMsg::Debug(tx))
             .map_err(|_| anyhow::anyhow!("hub gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))
+        let (waiting_molecules, decode_tasks, sched_in_flight, encode_calls, encode_rounds) =
+            rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?;
+        Ok(HubSnapshot {
+            waiting_molecules,
+            decode_tasks,
+            sched_in_flight,
+            encode_calls,
+            encode_rounds,
+        })
     }
 }
 
@@ -296,6 +496,8 @@ struct HubCounters {
     merged: Arc<AtomicU64>,
     fused_calls: Arc<AtomicU64>,
     fused_rows: Arc<AtomicU64>,
+    encode_calls: Arc<AtomicU64>,
+    encode_rounds: Arc<AtomicU64>,
     cancelled: Arc<AtomicU64>,
 }
 
@@ -316,33 +518,68 @@ struct HubState {
     /// In-flight per-query decode tasks per molecule — usually one; a
     /// wider-k re-request adds a second while the first still flies.
     covered: HashMap<String, Vec<(TaskId, usize)>>,
-    /// Misses gathered this round, unique by molecule.
-    to_submit: Vec<(String, usize)>,
+    /// Misses gathered this round in admission order — the row order of
+    /// the round's fused encode. `None` marks a slot whose molecule was
+    /// cancelled before submit.
+    to_submit: Vec<Option<(String, usize)>>,
+    /// Molecule -> index into `to_submit`: the per-request merge and
+    /// the per-cancel removal are O(1) map operations instead of a
+    /// linear scan over the round (O(n²) at high fan-in before).
+    to_submit_idx: HashMap<String, usize>,
 }
 
 impl HubState {
     /// Serve a request from cache or queue it (possibly scheduling a
-    /// decode for this round).
-    fn admit(&mut self, req: ExpandReq) {
+    /// decode for this round). Returns whether the request was answered
+    /// immediately (cache hit) — the caller signals completion events
+    /// only then.
+    fn admit(&mut self, req: ExpandReq) -> bool {
         if let Some(out) = self.cache.get(&req.smiles, req.k) {
             let _ = req.reply.send(Ok(out));
-            return;
+            return true;
         }
         let in_flight_covers = self
             .covered
             .get(&req.smiles)
             .is_some_and(|tasks| tasks.iter().any(|&(_, ck)| ck >= req.k));
         if !in_flight_covers {
-            if let Some(e) = self.to_submit.iter_mut().find(|(m, _)| *m == req.smiles) {
-                e.1 = e.1.max(req.k);
-            } else {
-                self.to_submit.push((req.smiles.clone(), req.k));
+            use std::collections::hash_map::Entry;
+            match self.to_submit_idx.entry(req.smiles.clone()) {
+                Entry::Occupied(o) => {
+                    let slot =
+                        self.to_submit[*o.get()].as_mut().expect("indexed slots are live");
+                    slot.1 = slot.1.max(req.k);
+                }
+                Entry::Vacant(v) => {
+                    v.insert(self.to_submit.len());
+                    self.to_submit.push(Some((req.smiles.clone(), req.k)));
+                }
             }
         }
         self.waiting
             .entry(req.smiles)
             .or_default()
             .push(Waiter { ticket: req.ticket, k: req.k, reply: req.reply });
+        false
+    }
+
+    /// Drop a molecule's queued miss (its last waiter cancelled before
+    /// submit). O(1): the slot is tombstoned, not compacted.
+    fn drop_queued_miss(&mut self, smiles: &str) {
+        if let Some(i) = self.to_submit_idx.remove(smiles) {
+            self.to_submit[i] = None;
+        }
+    }
+
+    /// Whether any miss is still queued for this round.
+    fn has_queued_misses(&self) -> bool {
+        !self.to_submit_idx.is_empty()
+    }
+
+    /// Take this round's misses in admission order, clearing the queue.
+    fn take_submit_round(&mut self) -> Vec<(String, usize)> {
+        self.to_submit_idx.clear();
+        self.to_submit.drain(..).flatten().collect()
     }
 
     /// Remove one waiter; returns true when the molecule has no waiters
@@ -399,18 +636,58 @@ fn fail_task_waiters(state: &mut HubState, mol: &str, task_k: usize, msg: &str) 
     }
 }
 
+/// Start one molecule's per-query decode task over its pre-encoded
+/// view and wire the hub bookkeeping. On failure (`start_task_on` has
+/// already released the view) the molecule's waiters are failed —
+/// anything covered by an older in-flight task keeps waiting, and the
+/// round's siblings are untouched. Returns whether the task started.
+#[allow(clippy::too_many_arguments)]
+fn start_round_task(
+    model: &dyn StepModel,
+    decoder: &(dyn Decoder + Send),
+    scheduler: &mut DecodeScheduler,
+    state: &mut HubState,
+    tasks_meta: &mut HashMap<TaskId, TaskMeta>,
+    counters: &HubCounters,
+    metrics: &Metrics,
+    mol: String,
+    k: usize,
+    view: MemView,
+    srcs: &[Vec<i32>],
+) -> bool {
+    match decoder.start_task_on(model, vec![view], srcs, k) {
+        Ok(task) => {
+            let id = scheduler.submit(task);
+            counters.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.inc("batcher.tasks", 1);
+            state.covered.entry(mol.clone()).or_default().push((id, k));
+            tasks_meta.insert(id, TaskMeta { mol, k });
+            true
+        }
+        Err(e) => {
+            let msg = format!("start decode failed: {e:#}");
+            fail_task_waiters(state, &mol, k, &msg);
+            false
+        }
+    }
+}
+
 /// Route one inbound message: admit expansions, queue cancellations,
 /// answer debug probes. Returns whether the message was an expansion
-/// (the only kind counted toward the gather budget).
+/// (the only kind counted toward the gather budget); sets `answered`
+/// when an expansion was served immediately from cache (the only
+/// gather outcome that warrants a completion event).
 fn on_msg(
     msg: HubMsg,
     state: &mut HubState,
     cancels: &mut Vec<(String, u64)>,
     sched_in_flight: usize,
+    encode: (u64, u64),
+    answered: &mut bool,
 ) -> bool {
     match msg {
         HubMsg::Expand(r) => {
-            state.admit(r);
+            *answered |= state.admit(r);
             true
         }
         HubMsg::Cancel { smiles, ticket } => {
@@ -419,7 +696,7 @@ fn on_msg(
         }
         HubMsg::Debug(tx) => {
             let tasks: usize = state.covered.values().map(Vec::len).sum();
-            let _ = tx.send((state.waiting.len(), tasks, sched_in_flight));
+            let _ = tx.send((state.waiting.len(), tasks, sched_in_flight, encode.0, encode.1));
             false
         }
     }
@@ -434,6 +711,7 @@ fn hub_loop<M: StepModel>(
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
     counters: HubCounters,
+    events: Arc<CompletionQueue>,
 ) {
     let mut scheduler = DecodeScheduler::new(SchedulerConfig { max_rows: cfg.max_rows });
     let mut state = HubState {
@@ -441,6 +719,7 @@ fn hub_loop<M: StepModel>(
         waiting: HashMap::new(),
         covered: HashMap::new(),
         to_submit: Vec::new(),
+        to_submit_idx: HashMap::new(),
     };
     let mut tasks_meta: HashMap<TaskId, TaskMeta> = HashMap::new();
     let mut cancels: Vec<(String, u64)> = Vec::new();
@@ -451,19 +730,26 @@ fn hub_loop<M: StepModel>(
     while open || !scheduler.is_idle() || !state.waiting.is_empty() {
         // ---- 1. gather requests ----
         state.to_submit.clear();
+        state.to_submit_idx.clear();
+        let mut gathered = 0usize;
+        let mut answered = false;
+        let encode_now = (
+            counters.encode_calls.load(Ordering::Relaxed),
+            counters.encode_rounds.load(Ordering::Relaxed),
+        );
         if open && scheduler.is_idle() && state.waiting.is_empty() {
             // Idle: block for the next request, then give stragglers a
             // short window so simultaneous arrivals share the first
-            // ticks.
+            // ticks (and the round's single fused encode).
             match rx.recv() {
                 Ok(msg) => {
-                    let mut n = 0;
-                    if on_msg(msg, &mut state, &mut cancels, scheduler.in_flight()) {
+                    let fl = scheduler.in_flight();
+                    if on_msg(msg, &mut state, &mut cancels, fl, encode_now, &mut answered) {
                         counters.merged.fetch_add(1, Ordering::Relaxed);
-                        n += 1;
+                        gathered += 1;
                     }
                     let deadline = std::time::Instant::now() + cfg.max_wait;
-                    while n < cfg.max_batch && !state.to_submit.is_empty() {
+                    while gathered < cfg.max_batch && state.has_queued_misses() {
                         let now = std::time::Instant::now();
                         if now >= deadline {
                             break;
@@ -471,9 +757,17 @@ fn hub_loop<M: StepModel>(
                         match rx.recv_timeout(deadline - now) {
                             Ok(msg) => {
                                 let fl = scheduler.in_flight();
-                                if on_msg(msg, &mut state, &mut cancels, fl) {
+                                let expand = on_msg(
+                                    msg,
+                                    &mut state,
+                                    &mut cancels,
+                                    fl,
+                                    encode_now,
+                                    &mut answered,
+                                );
+                                if expand {
                                     counters.merged.fetch_add(1, Ordering::Relaxed);
-                                    n += 1;
+                                    gathered += 1;
                                 }
                             }
                             Err(mpsc::RecvTimeoutError::Timeout) => break,
@@ -492,13 +786,15 @@ fn hub_loop<M: StepModel>(
         } else {
             // Busy: drain without blocking — late arrivals join the
             // very next fused call.
-            let mut drained = 0;
-            while drained < cfg.max_batch {
+            while gathered < cfg.max_batch {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if on_msg(msg, &mut state, &mut cancels, scheduler.in_flight()) {
+                        let fl = scheduler.in_flight();
+                        let expand =
+                            on_msg(msg, &mut state, &mut cancels, fl, encode_now, &mut answered);
+                        if expand {
                             counters.merged.fetch_add(1, Ordering::Relaxed);
-                            drained += 1;
+                            gathered += 1;
                         }
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
@@ -509,15 +805,24 @@ fn hub_loop<M: StepModel>(
                 }
             }
         }
+        if answered {
+            // At least one request was answered from cache inside
+            // `admit`: wake blocked `wait_any`/`wait_event` callers.
+            // Miss-only rounds deliver nothing, so they wake nobody.
+            events.notify();
+        }
 
         // ---- 2. apply cancellations ----
         // A molecule whose last waiter withdrew loses its queued miss
         // and its in-flight decode tasks: the scheduler frees the rows
-        // and encoder memory immediately, so speculative searches that
-        // changed their mind never pay for the full decode.
+        // and encoder memory immediately (a task's claim on a shared
+        // encode batch drops; siblings keep the memory alive), so
+        // speculative searches that changed their mind never pay for
+        // the full decode.
+        let had_cancels = !cancels.is_empty();
         for (smiles, ticket) in cancels.drain(..) {
             if state.remove_waiter(&smiles, ticket) {
-                state.to_submit.retain(|(m, _)| *m != smiles);
+                state.drop_queued_miss(&smiles);
                 if let Some(tasks) = state.covered.remove(&smiles) {
                     for (id, _) in tasks {
                         if scheduler.cancel(&model, id) {
@@ -529,28 +834,91 @@ fn hub_loop<M: StepModel>(
                 }
             }
         }
+        if had_cancels {
+            events.notify();
+        }
 
-        // ---- 3. submit this round's misses: one task per query ----
-        // Per-query tasks let each molecule retire independently while
-        // still fusing into the same scheduler ticks; a slow molecule
-        // no longer stalls its co-arrivals' answers.
-        for (mol, k) in std::mem::take(&mut state.to_submit) {
-            let srcs = [vocab.encode(&mol, true)];
-            match decoder.start_task(&model, &srcs, k) {
-                Ok(task) => {
-                    let id = scheduler.submit(task);
-                    counters.batches.fetch_add(1, Ordering::Relaxed);
-                    metrics.inc("batcher.tasks", 1);
-                    state.covered.entry(mol.clone()).or_default().push((id, k));
-                    tasks_meta.insert(id, TaskMeta { mol, k });
+        // ---- 3. submit this round's misses: ONE fused encode ----
+        // Every cache-missing molecule gathered this round shares a
+        // single `StepModel::encode` call; each then gets its own
+        // per-query decode task over its row view of the shared batch
+        // (released when the round's last member retires or is
+        // cancelled). Encoder cost is O(rounds), not O(misses), while
+        // retirement semantics stay per-query: a slow molecule neither
+        // stalls its co-arrivals' answers nor pins their memory.
+        let round = state.take_submit_round();
+        if !round.is_empty() {
+            let srcs: Vec<Vec<i32>> =
+                round.iter().map(|(mol, _)| vocab.encode(mol, true)).collect();
+            counters.encode_rounds.fetch_add(1, Ordering::Relaxed);
+            metrics.inc("batcher.encode_rounds", 1);
+            let mut failed_any = false;
+            match encode_shared(&model, &srcs) {
+                Ok(views) => {
+                    counters.encode_calls.fetch_add(1, Ordering::Relaxed);
+                    metrics.inc("batcher.encode_calls", 1);
+                    for (((mol, k), view), src) in
+                        round.into_iter().zip(views).zip(srcs.iter())
+                    {
+                        let one = std::slice::from_ref(src);
+                        failed_any |= !start_round_task(
+                            &model,
+                            decoder.as_ref(),
+                            &mut scheduler,
+                            &mut state,
+                            &mut tasks_meta,
+                            &counters,
+                            &metrics,
+                            mol,
+                            k,
+                            view,
+                            one,
+                        );
+                    }
                 }
-                Err(e) => {
-                    // Encode failed: fail only this molecule's waiters
-                    // (anything covered by an older in-flight task
-                    // keeps waiting).
-                    let msg = format!("encode failed: {e:#}");
-                    fail_task_waiters(&mut state, &mol, k, &msg);
+                Err(fused_err) => {
+                    // The round's ONE fused encode failed. Don't fail
+                    // the whole round — one bad source must not take
+                    // down every co-arriving session's expansion.
+                    // Retry each molecule alone (the pre-fusion blast
+                    // radius): healthy co-arrivals still fly, only the
+                    // truly failing molecule's waiters error, and the
+                    // per-molecule encode cost is paid on this error
+                    // path only.
+                    for ((mol, k), src) in round.into_iter().zip(srcs.iter()) {
+                        let one = std::slice::from_ref(src);
+                        match encode_shared(&model, one) {
+                            Ok(views) => {
+                                counters.encode_calls.fetch_add(1, Ordering::Relaxed);
+                                metrics.inc("batcher.encode_calls", 1);
+                                let view =
+                                    views.into_iter().next().expect("one view per source");
+                                failed_any |= !start_round_task(
+                                    &model,
+                                    decoder.as_ref(),
+                                    &mut scheduler,
+                                    &mut state,
+                                    &mut tasks_meta,
+                                    &counters,
+                                    &metrics,
+                                    mol,
+                                    k,
+                                    view,
+                                    one,
+                                );
+                            }
+                            Err(e) => {
+                                let msg =
+                                    format!("encode failed: {e:#} (fused: {fused_err:#})");
+                                fail_task_waiters(&mut state, &mol, k, &msg);
+                                failed_any = true;
+                            }
+                        }
+                    }
                 }
+            }
+            if failed_any {
+                events.notify();
             }
         }
 
@@ -566,6 +934,7 @@ fn hub_loop<M: StepModel>(
                 // Unreachable by construction (waiters always have a
                 // covering task); fail loudly instead of spinning.
                 state.fail_all("internal: waiters without an in-flight task");
+                events.notify();
             }
             continue;
         }
@@ -584,10 +953,16 @@ fn hub_loop<M: StepModel>(
                     // granularity.
                     metrics.observe("batcher.decode", t_tick.elapsed().as_secs_f64());
                 }
+                let retired_any = !finished.is_empty();
                 for f in finished.drain(..) {
                     let meta = tasks_meta.remove(&f.id).expect("task bookkeeping");
                     counters.stats.lock().unwrap().merge(&f.stats);
                     retire_task(f.id, &meta, &f, &vocab, &mut state, &counters);
+                }
+                if retired_any {
+                    // Answers are on their channels: wake blocked
+                    // wait_any / wait_event callers.
+                    events.notify();
                 }
             }
             Err(e) => {
@@ -606,9 +981,17 @@ fn hub_loop<M: StepModel>(
                         fail_task_waiters(&mut state, &meta.mol, meta.k, &msg);
                     }
                 }
+                events.notify();
             }
         }
     }
+
+    // Shutdown: drop the request channel and remaining state first so
+    // every outstanding reply sender is gone, THEN wake waiters — they
+    // observe the disconnect instead of sleeping to their deadline.
+    drop(rx);
+    drop(state);
+    events.notify();
 }
 
 /// Parse a finished per-query task's output, populate the cache, and
@@ -674,10 +1057,17 @@ impl BatchedPolicy {
 struct HubHandle {
     futs: Vec<Option<ExpansionFuture>>,
     results: Vec<Option<Vec<Proposal>>>,
+    /// The hub's completion events, for `wait_event`.
+    events: Arc<CompletionQueue>,
+    /// Epoch captured at the start of the last `poll`: `wait_event`
+    /// blocks past it, so an event landing between that poll and the
+    /// wait is never missed.
+    seen: u64,
 }
 
 impl ExpansionHandle for HubHandle {
     fn poll(&mut self) -> Option<Result<Vec<Vec<Proposal>>>> {
+        self.seen = self.events.epoch();
         let mut pending = false;
         for (i, slot) in self.futs.iter_mut().enumerate() {
             if self.results[i].is_some() {
@@ -721,6 +1111,12 @@ impl ExpansionHandle for HubHandle {
             .collect())
     }
 
+    fn wait_event(&mut self, deadline: std::time::Instant) {
+        // Any hub completion (not just this batch's) wakes the wait;
+        // the caller re-polls. Condvar-backed — no sleep-polling.
+        self.events.wait_past(self.seen, deadline);
+    }
+
     fn cancel(self: Box<Self>) {
         // Drop on the remaining futures sends the hub cancellations.
     }
@@ -749,7 +1145,12 @@ impl AsyncExpansionPolicy for BatchedPolicy {
         for m in molecules {
             futs.push(Some(self.hub.submit(m, k)?));
         }
-        Ok(Box::new(HubHandle { results: vec![None; futs.len()], futs }))
+        Ok(Box::new(HubHandle {
+            results: vec![None; futs.len()],
+            futs,
+            events: self.hub.events.clone(),
+            seen: 0,
+        }))
     }
 }
 
@@ -867,19 +1268,32 @@ mod tests {
         // Solo per-molecule decoding would have cost at least as many
         // device calls as the hub's fused path.
         assert!(h.stats().model_calls >= fused_calls);
+        // Fused-encode admission: exactly one encoder call per
+        // submission round, never one per miss.
+        let (encode_calls, encode_rounds) = h.encode_ratio();
+        assert_eq!(encode_calls, encode_rounds, "one encode per round");
+        assert!(encode_calls >= 1 && encode_calls <= mols.len() as u64);
     }
 
     #[test]
     fn futures_poll_to_completion() {
         let h = hub();
         let mut fut = h.submit("CC(=O)O.CN", 3).unwrap();
+        // Event-driven wait: poll, then block on the completion epoch —
+        // no sleeps. The epoch is captured BEFORE the poll so a
+        // completion landing in between wakes the wait immediately.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
         let mut result = None;
-        for _ in 0..2000 {
+        loop {
+            let seen = h.completion_epoch();
             if let Some(r) = fut.poll() {
                 result = Some(r);
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+            h.wait_completion_past(seen, deadline);
         }
         let props = result.expect("future must complete").unwrap();
         assert!(!props.is_empty());
@@ -891,19 +1305,49 @@ mod tests {
     }
 
     #[test]
+    fn wait_any_buffers_first_completion() {
+        let h = hub();
+        let mut futs = vec![
+            h.submit("CC(=O)O.CN", 3).unwrap(),
+            h.submit("CC(=O)NC", 3).unwrap(),
+        ];
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let mut answered = 0;
+        while !futs.is_empty() {
+            let i = h.wait_any(&mut futs, deadline).expect("a future must complete");
+            let fut = futs.remove(i);
+            // wait_any buffered the result: this wait returns instantly.
+            let _ = fut.wait().unwrap();
+            answered += 1;
+        }
+        assert_eq!(answered, 2);
+        // All consumed: wait_any on an empty/spent set yields None at
+        // the deadline rather than blocking forever.
+        let soon = std::time::Instant::now() + std::time::Duration::from_millis(5);
+        assert!(h.wait_any(&mut [], soon).is_none());
+    }
+
+    #[test]
     fn cancelled_future_leaves_no_state_behind() {
         let h = hub();
         let fut = h.submit("CC(=O)NC", 4).unwrap();
         fut.cancel();
-        // settle: the hub processes the cancel between ticks
+        // settle: the hub processes the cancel between ticks; each
+        // processed cancel bumps the completion epoch, so this blocks
+        // instead of sleep-polling.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
         let mut clean = false;
-        for _ in 0..2000 {
-            let (waiting, tasks, in_flight) = h.debug_snapshot().unwrap();
-            if waiting == 0 && tasks == 0 && in_flight == 0 {
+        loop {
+            let seen = h.completion_epoch();
+            let s = h.debug_snapshot().unwrap();
+            if s.waiting_molecules == 0 && s.decode_tasks == 0 && s.sched_in_flight == 0 {
                 clean = true;
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+            h.wait_completion_past(seen, deadline);
         }
         assert!(clean, "cancelled request must leave no waiters or tasks");
         // the hub still serves fresh work afterwards
@@ -921,6 +1365,41 @@ mod tests {
         drop_me.cancel();
         let props = keep.wait().unwrap();
         assert!(!props.is_empty(), "surviving waiter must still be answered");
+    }
+
+    #[test]
+    fn fused_encode_failure_keeps_per_molecule_blast_radius() {
+        use crate::benchkit::InstrumentedModel;
+        let vocab = Vocab::build(["CC(=O)O.CN", "CCO"]);
+        // Any encode batch containing the poisoned source errors —
+        // exercising the fused-encode failure fallback.
+        let poison = vocab.encode("CCO", true);
+        let model = InstrumentedModel::new(MockModel::new(MockConfig {
+            vocab: vocab.len(),
+            ..Default::default()
+        }))
+        .with_encode_failure(move |src| src.iter().any(|s| *s == poison));
+        let h = ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig {
+                // Wide straggler window: both submissions land in one
+                // round, so the ROUND's fused encode fails and the
+                // per-molecule fallback must rescue the healthy one.
+                max_wait: std::time::Duration::from_millis(10),
+                ..Default::default()
+            },
+            Arc::new(Metrics::new()),
+        );
+        let healthy = h.submit("CC(=O)O.CN", 3).unwrap();
+        let poisoned = h.submit("CCO", 3).unwrap();
+        let p = healthy
+            .wait()
+            .expect("healthy co-arrival must survive a sibling's encode failure");
+        assert!(!p.is_empty());
+        let err = poisoned.wait().expect_err("poisoned molecule must fail");
+        assert!(format!("{err:#}").contains("encode failed"), "{err:#}");
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! ```text
 //! TCP clients ──► server (thread per connection)
 //!                    │  plan: pipelined Retro* keeps up to spec_depth
-//!                    │  expansion groups in flight as futures
+//!                    │  expansion groups in flight as futures; waits
+//!                    │  block on the hub's completion events (condvar),
+//!                    │  never sleep-poll
 //!                    ▼
 //!              ExpansionHub (continuous batcher)
 //!                    │  submit(smiles, k) -> ExpansionFuture
@@ -13,6 +15,12 @@
 //!                    │  molecule becomes ONE per-query decode task —
 //!                    │  it retires the moment its own beams finish,
 //!                    │  and cancellation drops it from the scheduler
+//!                    ▼
+//!              encode admission: ALL of a round's misses share ONE
+//!                    │  StepModel::encode call; each task decodes over
+//!                    │  its own ref-counted row view (MemView) of the
+//!                    │  shared batch — encoder cost is O(rounds), not
+//!                    │  O(misses)
 //!                    ▼
 //!              DecodeScheduler: ONE fused device call per decode
 //!                    │  cycle over ALL in-flight tasks' rows; a tick
@@ -23,6 +31,14 @@
 //!                    ▼
 //!              PJRT CPU client over the AOT HLO artifacts
 //! ```
+//!
+//! **MemView ownership rule:** a round's shared encoder batch is freed
+//! on the device exactly when the *last* member task retires or is
+//! cancelled — each task holds one ref-counted row view, released in
+//! its `finish` on every path (retirement, cancellation, tick error),
+//! so speculative cancellation never strands a sibling's memory and no
+//! task can free memory a sibling still decodes from
+//! (`tests/parity_encode_fusion.rs` pins both directions).
 //!
 //! Cross-tree batching is the paper's closing "future work" realized:
 //! AiZynthFinder calls its model with batch size 1; here concurrent

@@ -23,7 +23,7 @@ use super::{
     RowBuf, TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::ScoringScratch;
-use crate::model::{DecodeOut, MemHandle, StepModel};
+use crate::model::{DecodeOut, MemView, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -53,13 +53,14 @@ impl Decoder for BeamSearch {
         }
     }
 
-    fn start_task(
+    fn start_task_on(
         &self,
         model: &dyn StepModel,
+        views: Vec<MemView>,
         srcs: &[Vec<i32>],
         k: usize,
     ) -> Result<Box<dyn DecodeTask>> {
-        let mem = model.encode(srcs)?;
+        debug_assert_eq!(views.len(), srcs.len(), "one memory view per query");
         // Per query: K beams. Step 0 starts from a single root beam; the
         // vanilla variant still submits K duplicate rows to keep the
         // effective batch at B*K from the start (naive-implementation
@@ -70,7 +71,7 @@ impl Decoder for BeamSearch {
             optimized: self.optimized,
             k,
             max_len: model.max_tgt(),
-            mem,
+            views,
             arena,
             beams: srcs.iter().map(|_| vec![root]).collect(),
             done: vec![false; srcs.len()],
@@ -91,7 +92,9 @@ pub struct BeamTask {
     optimized: bool,
     k: usize,
     max_len: usize,
-    mem: MemHandle,
+    /// One ref-counted encoder-memory view per query (possibly rows of
+    /// a batch shared with other tasks).
+    views: Vec<MemView>,
     arena: TokenArena,
     beams: Vec<Vec<Beam>>,
     done: Vec<bool>,
@@ -123,14 +126,16 @@ impl DecodeTask for BeamTask {
                 let live_row = !b.finished;
                 // Vanilla: submit rows even for finished beams/queries.
                 if !self.optimized || live_row {
-                    rows.push_row(&self.arena, self.mem, q, b.node, &[]);
+                    let v = &self.views[q];
+                    rows.push_row(&self.arena, v.mem(), v.row(), b.node, &[]);
                     self.row_of.push((q, bi));
                 }
             }
             // Vanilla duplicates the root beam K times on the first step.
             if !self.optimized && qbeams.len() == 1 && !qbeams[0].finished {
                 for _ in 1..self.k {
-                    rows.push_row(&self.arena, self.mem, q, qbeams[0].node, &[]);
+                    let v = &self.views[q];
+                    rows.push_row(&self.arena, v.mem(), v.row(), qbeams[0].node, &[]);
                     self.row_of.push((q, usize::MAX)); // duplicate; ignored
                 }
             }
@@ -201,9 +206,10 @@ impl DecodeTask for BeamTask {
     }
 
     fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
-        model.release(self.mem);
-        let outs = self.beams.iter().map(|qb| finalize(&self.arena, qb)).collect();
-        (outs, self.stats)
+        let this = *self;
+        crate::model::release_views(model, this.views);
+        let outs = this.beams.iter().map(|qb| finalize(&this.arena, qb)).collect();
+        (outs, this.stats)
     }
 }
 

@@ -29,7 +29,7 @@ use super::{
     RowBuf, TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::ScoringScratch;
-use crate::model::{argmax, DecodeOut, MemHandle, StepModel};
+use crate::model::{argmax, DecodeOut, MemView, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -105,13 +105,14 @@ impl Decoder for Hsbs {
         "hsbs"
     }
 
-    fn start_task(
+    fn start_task_on(
         &self,
         model: &dyn StepModel,
+        views: Vec<MemView>,
         srcs: &[Vec<i32>],
         k: usize,
     ) -> Result<Box<dyn DecodeTask>> {
-        let mem = model.encode(srcs)?;
+        debug_assert_eq!(views.len(), srcs.len(), "one memory view per query");
         // Source bodies (without BOS/EOS) for drafting.
         let bodies: Vec<Vec<i32>> = srcs
             .iter()
@@ -129,7 +130,7 @@ impl Decoder for Hsbs {
             cfg: self.clone(),
             k,
             max_len: model.max_tgt(),
-            mem,
+            views,
             bodies,
             arena,
             beams: srcs.iter().map(|_| vec![root]).collect(),
@@ -153,7 +154,9 @@ pub struct HsbsTask {
     cfg: Hsbs,
     k: usize,
     max_len: usize,
-    mem: MemHandle,
+    /// One ref-counted encoder-memory view per query (possibly rows of
+    /// a batch shared with other tasks).
+    views: Vec<MemView>,
     /// Source bodies (without BOS/EOS), owned by the task for drafting.
     bodies: Vec<Vec<i32>>,
     arena: TokenArena,
@@ -195,7 +198,8 @@ impl DecodeTask for HsbsTask {
                     self.windows.push((0, 0)); // plain one-token step
                 }
                 for &(s, e) in &self.windows {
-                    rows.push_row(&self.arena, self.mem, q, b.node, &self.bodies[q][s..e]);
+                    let v = &self.views[q];
+                    rows.push_row(&self.arena, v.mem(), v.row(), b.node, &self.bodies[q][s..e]);
                     self.row_meta.push((q, bi, s, e));
                 }
             }
@@ -316,9 +320,10 @@ impl DecodeTask for HsbsTask {
     }
 
     fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
-        model.release(self.mem);
-        let outs = self.beams.iter().map(|qb| finalize(&self.arena, qb)).collect();
-        (outs, self.stats)
+        let this = *self;
+        crate::model::release_views(model, this.views);
+        let outs = this.beams.iter().map(|qb| finalize(&this.arena, qb)).collect();
+        (outs, this.stats)
     }
 }
 

@@ -48,6 +48,20 @@
 //! result-invariant: `tests/parity_decoding.rs` pins scheduler-fused
 //! decoding bit-identical to solo `generate` for all four engines.
 //!
+//! ## Shared-encode admission
+//!
+//! Encoder memory is held through ref-counted row views
+//! ([`crate::model::MemView`]): [`Decoder::start_task_on`] builds a
+//! task over *pre-encoded* rows, so an admission layer (the
+//! coordinator's hub) can encode every co-arriving molecule in ONE
+//! [`StepModel::encode`] call and hand each molecule its own task over
+//! its row — encoder cost becomes O(submission rounds), not O(misses).
+//! The batch memory is freed on the device exactly when the last
+//! member task finishes or is cancelled, so speculative cancellation
+//! never strands a sibling's memory
+//! (`tests/parity_encode_fusion.rs` pins both the bit-parity and the
+//! ref-count rule).
+//!
 //! ## Zero-allocation decoding core
 //!
 //! All engines share primitives that keep the host-side hot loop free of
@@ -78,7 +92,7 @@ pub mod hsbs;
 pub mod msbs;
 pub mod scheduler;
 
-use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use crate::model::{encode_shared, DecodeOut, DecodeRow, MemHandle, MemView, StepModel};
 use anyhow::Result;
 use arena::{NodeId, TokenArena};
 
@@ -227,12 +241,37 @@ pub fn run_task_to_done(model: &dyn StepModel, task: &mut dyn DecodeTask) -> Res
 /// a group of query token sequences.
 pub trait Decoder: Send + Sync {
     fn name(&self) -> &'static str;
-    /// Start a resumable task over one group: encodes `srcs` (the task
-    /// owns the returned memory until `finish`) and returns the engine's
-    /// state machine positioned before its first decode cycle.
+    /// Start a resumable task over one group: encodes `srcs` in one
+    /// [`encode_shared`] call (the task owns the resulting views until
+    /// `finish`) and returns the engine's state machine positioned
+    /// before its first decode cycle.
     fn start_task(
         &self,
         model: &dyn StepModel,
+        srcs: &[Vec<i32>],
+        k: usize,
+    ) -> Result<Box<dyn DecodeTask>> {
+        let views = encode_shared(model, srcs)?;
+        self.start_task_on(model, views, srcs, k)
+    }
+    /// Start a resumable task over **pre-encoded** memory: `views[q]` is
+    /// query `q`'s row of a (possibly shared) encoder batch, and
+    /// `srcs[q]` its token row (still needed for drafting and shape
+    /// checks). This is the fused-encode admission entry point —
+    /// co-arriving molecules share ONE encoder call and each gets its
+    /// own task over its row view.
+    ///
+    /// Ownership: the task takes the views and releases them in
+    /// `finish` (normal retirement *and* cancellation); on error this
+    /// method releases them before returning, so callers never clean
+    /// up. Per-task [`DecodeStats::encode_calls`] stays at the
+    /// solo-equivalent 1 (like `pad_rows` padding, a task is charged
+    /// what it would have cost alone); *physical* encoder calls are the
+    /// admission layer's counter.
+    fn start_task_on(
+        &self,
+        model: &dyn StepModel,
+        views: Vec<MemView>,
         srcs: &[Vec<i32>],
         k: usize,
     ) -> Result<Box<dyn DecodeTask>>;

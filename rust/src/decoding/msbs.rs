@@ -34,7 +34,7 @@ use super::{
     RowBuf, TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::{nucleus_mass_before, ScoringScratch};
-use crate::model::{argmax, DecodeOut, MemHandle, StepModel};
+use crate::model::{argmax, encode_shared, release_views, DecodeOut, MemView, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -85,13 +85,14 @@ impl Decoder for Msbs {
         "msbs"
     }
 
-    fn start_task(
+    fn start_task_on(
         &self,
         model: &dyn StepModel,
+        views: Vec<MemView>,
         srcs: &[Vec<i32>],
         k: usize,
     ) -> Result<Box<dyn DecodeTask>> {
-        Ok(Box::new(self.task(model, srcs, k)?))
+        Ok(Box::new(self.task_on(model, views, srcs, k)?))
     }
 }
 
@@ -103,17 +104,27 @@ enum MsbsPhase {
 }
 
 impl Msbs {
-    /// Build the concrete task (the trait object path goes through
-    /// [`Decoder::start_task`]; [`Msbs::generate_traced`] needs the
-    /// concrete type to thread the trace through).
-    fn task(&self, model: &dyn StepModel, srcs: &[Vec<i32>], k: usize) -> Result<MsbsTask> {
+    /// Build the concrete task over pre-encoded views (the trait object
+    /// path goes through [`Decoder::start_task_on`];
+    /// [`Msbs::generate_traced`] needs the concrete type to thread the
+    /// trace through). Releases the views on error.
+    fn task_on(
+        &self,
+        model: &dyn StepModel,
+        views: Vec<MemView>,
+        srcs: &[Vec<i32>],
+        k: usize,
+    ) -> Result<MsbsTask> {
+        debug_assert_eq!(views.len(), srcs.len(), "one memory view per query");
         let m = if let Some(cap) = self.max_draft {
             cap.min(model.medusa_heads())
         } else {
             model.medusa_heads()
         };
-        anyhow::ensure!(m > 0, "MSBS requires a model with Medusa heads");
-        let mem = model.encode(srcs)?;
+        if m == 0 {
+            release_views(model, views);
+            anyhow::bail!("MSBS requires a model with Medusa heads");
+        }
         let mut arena = TokenArena::with_capacity(srcs.len() * k * 16);
         let root = Beam::root(&mut arena);
         Ok(MsbsTask {
@@ -121,7 +132,7 @@ impl Msbs {
             k,
             m,
             max_len: model.max_tgt(),
-            mem,
+            views,
             arena,
             beams: srcs.iter().map(|_| vec![root]).collect(),
             done: vec![false; srcs.len()],
@@ -152,7 +163,8 @@ impl Msbs {
         trace: &mut Option<Vec<CycleTrace>>,
     ) -> Result<Vec<GenOutput>> {
         let t0 = std::time::Instant::now();
-        let mut task = self.task(model, srcs, k)?;
+        let views = encode_shared(model, srcs)?;
+        let mut task = self.task_on(model, views, srcs, k)?;
         task.trace = trace.take();
         if let Err(e) = super::run_task_to_done(model, &mut task) {
             *trace = task.trace.take(); // completed cycles survive the error
@@ -175,7 +187,9 @@ pub struct MsbsTask {
     /// Draft length (Medusa heads, possibly capped).
     m: usize,
     max_len: usize,
-    mem: MemHandle,
+    /// One ref-counted encoder-memory view per query (possibly rows of
+    /// a batch shared with other tasks).
+    views: Vec<MemView>,
     arena: TokenArena,
     beams: Vec<Vec<Beam>>,
     done: Vec<bool>,
@@ -346,7 +360,8 @@ impl DecodeTask for MsbsTask {
                     }
                     for (bi, b) in qbeams.iter().enumerate() {
                         if !b.finished {
-                            rows.push_row(&self.arena, self.mem, q, b.node, &[]);
+                            let v = &self.views[q];
+                            rows.push_row(&self.arena, v.mem(), v.row(), b.node, &[]);
                             self.row_of.push((q, bi));
                         }
                     }
@@ -363,7 +378,8 @@ impl DecodeTask for MsbsTask {
                 for (r, &(q, bi)) in self.row_of.iter().enumerate() {
                     let b = self.beams[q][bi];
                     let (s, e) = self.draft_span[r];
-                    rows.push_row(&self.arena, self.mem, q, b.node, &self.draft_flat[s..e]);
+                    let v = &self.views[q];
+                    rows.push_row(&self.arena, v.mem(), v.row(), b.node, &self.draft_flat[s..e]);
                 }
                 TaskState::Need { win: self.m + 1 }
             }
@@ -387,9 +403,10 @@ impl DecodeTask for MsbsTask {
     }
 
     fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
-        model.release(self.mem);
-        let outs = self.beams.iter().map(|qb| finalize(&self.arena, qb)).collect();
-        (outs, self.stats)
+        let this = *self;
+        release_views(model, this.views);
+        let outs = this.beams.iter().map(|qb| finalize(&this.arena, qb)).collect();
+        (outs, this.stats)
     }
 }
 

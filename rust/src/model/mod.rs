@@ -24,10 +24,98 @@ pub mod scratch;
 pub mod scripted;
 
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Opaque handle to encoder memory for a batch of sources.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MemHandle(pub u64);
+
+/// Interior of a shared encoder batch: the device handle plus the count
+/// of outstanding row views. Private — callers only ever hold
+/// [`MemView`]s.
+#[derive(Debug)]
+struct SharedMemInner {
+    mem: MemHandle,
+    live: AtomicUsize,
+}
+
+/// A row-sliced view of a **ref-counted** batch encode: several decode
+/// tasks share one [`StepModel::encode`] call (one row each), and the
+/// device memory is released exactly when the *last* view drops its
+/// claim via [`MemView::release`] — whether that task retired normally
+/// or was cancelled mid-flight. Speculative cancellation of one member
+/// therefore never strands its siblings' encoder memory, and no member
+/// can free memory a sibling still decodes from.
+///
+/// Views are deliberately not `Clone`: each view is a unique claim, and
+/// release consumes it, so the count cannot drift. The refcount lives
+/// host-side in an `Arc`, which makes the same bookkeeping correct for
+/// in-process models and for [`crate::runtime::server::SharedModel`]
+/// (the final `release` crosses to the executor thread as an ordinary
+/// release request).
+#[derive(Debug)]
+pub struct MemView {
+    shared: Arc<SharedMemInner>,
+    row: usize,
+}
+
+impl MemView {
+    /// Split one encoded batch of `rows` rows into per-row views, each
+    /// holding one claim on the handle. `rows` must be at least 1 —
+    /// with zero views nobody could ever release the handle.
+    pub fn split(mem: MemHandle, rows: usize) -> Vec<MemView> {
+        debug_assert!(rows > 0, "a zero-view split would strand the handle");
+        let shared = Arc::new(SharedMemInner { mem, live: AtomicUsize::new(rows) });
+        (0..rows).map(|row| MemView { shared: shared.clone(), row }).collect()
+    }
+
+    /// The underlying batch handle (for [`DecodeRow::mem`]).
+    pub fn mem(&self) -> MemHandle {
+        self.shared.mem
+    }
+
+    /// This view's row within the encoded batch (for
+    /// [`DecodeRow::mem_row`]).
+    pub fn row(&self) -> usize {
+        self.row
+    }
+
+    /// Outstanding views on this view's batch (diagnostics and the
+    /// ref-count tests).
+    pub fn live(&self) -> usize {
+        self.shared.live.load(Ordering::Acquire)
+    }
+
+    /// Drop this view's claim; the device memory is released iff this
+    /// was the last one.
+    pub fn release(self, model: &dyn StepModel) {
+        if self.shared.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            model.release(self.shared.mem);
+        }
+    }
+}
+
+/// Encode a batch of sources in ONE [`StepModel::encode`] call and
+/// return a per-row [`MemView`] for each source. This is the
+/// fused-encode admission primitive: co-arriving cache-missing
+/// molecules share a single encoder call, each decoding over its own
+/// row view, and the batch memory is freed when the last of them
+/// retires or is cancelled.
+pub fn encode_shared(model: &dyn StepModel, srcs: &[Vec<i32>]) -> Result<Vec<MemView>> {
+    if srcs.is_empty() {
+        return Ok(Vec::new());
+    }
+    Ok(MemView::split(model.encode(srcs)?, srcs.len()))
+}
+
+/// Release every view in `views` (task teardown and error-path
+/// cleanup).
+pub fn release_views(model: &dyn StepModel, views: Vec<MemView>) {
+    for v in views {
+        v.release(model);
+    }
+}
 
 /// One decoder row: a target prefix (optionally extended with a draft)
 /// over one encoded source.
@@ -222,6 +310,49 @@ mod tests {
         let xs = [0.1f64, 0.7, 0.2];
         assert_eq!(top_k(&xs, 2), vec![1, 2]);
         assert_eq!(argmax(&[0.1f32, 0.7, 0.2]), 1);
+    }
+
+    #[test]
+    fn mem_views_release_on_last_claim() {
+        use crate::model::mock::{MockConfig, MockModel};
+        let m = MockModel::new(MockConfig::default());
+        let srcs: Vec<Vec<i32>> = (0..3).map(|i| vec![1, 5 + i, 2]).collect();
+        let views = encode_shared(&m, &srcs).unwrap();
+        assert_eq!(views.len(), 3);
+        assert_eq!(m.encode_calls.load(Ordering::Relaxed), 1, "one fused encode");
+        assert_eq!(m.live_handles(), 1, "one shared batch handle");
+        let mem = views[0].mem();
+        for (i, v) in views.iter().enumerate() {
+            assert_eq!(v.mem(), mem, "all views share the batch handle");
+            assert_eq!(v.row(), i);
+        }
+        let mut it = views.into_iter();
+        it.next().unwrap().release(&m);
+        assert_eq!(m.live_handles(), 1, "siblings keep the memory alive");
+        it.next().unwrap().release(&m);
+        assert_eq!(m.live_handles(), 1);
+        it.next().unwrap().release(&m);
+        assert_eq!(m.live_handles(), 0, "last claim frees the device memory");
+    }
+
+    #[test]
+    fn encode_shared_empty_batch_encodes_nothing() {
+        use crate::model::mock::{MockConfig, MockModel};
+        let m = MockModel::new(MockConfig::default());
+        let views = encode_shared(&m, &[]).unwrap();
+        assert!(views.is_empty());
+        assert_eq!(m.encode_calls.load(Ordering::Relaxed), 0);
+        assert_eq!(m.live_handles(), 0);
+    }
+
+    #[test]
+    fn release_views_drains_every_claim() {
+        use crate::model::mock::{MockConfig, MockModel};
+        let m = MockModel::new(MockConfig::default());
+        let views = encode_shared(&m, &[vec![1, 5, 2], vec![1, 6, 2]]).unwrap();
+        assert_eq!(views[1].live(), 2);
+        release_views(&m, views);
+        assert_eq!(m.live_handles(), 0);
     }
 
     #[test]

@@ -59,6 +59,23 @@ pub trait ExpansionHandle {
     /// every molecule in the batch has retired (or the batch failed).
     /// After that the handle is spent.
     fn poll(&mut self) -> Option<Result<Vec<Vec<Proposal>>>>;
+    /// Block until an event that may have completed (part of) this
+    /// batch occurs, or `deadline` passes. Spurious returns are allowed
+    /// — the caller re-polls. Handles whose `poll` can stay pending
+    /// SHOULD override this with a real blocking wait (the
+    /// coordinator's hub handle blocks on a condvar-backed completion
+    /// queue, so completions wake it immediately). The default is a
+    /// short bounded sleep: always-ready handles (like
+    /// [`EagerAsync`]'s) never reach it, and a pending-capable handle
+    /// that forgets to override degrades to the old 100µs poll cadence
+    /// instead of a 100%-CPU busy-spin.
+    fn wait_event(&mut self, deadline: std::time::Instant) {
+        let nap = std::time::Duration::from_micros(100);
+        let now = std::time::Instant::now();
+        if now < deadline {
+            std::thread::sleep(nap.min(deadline - now));
+        }
+    }
     /// Block until the batch retires.
     fn wait(self: Box<Self>) -> Result<Vec<Vec<Proposal>>>;
     /// Abandon the batch: any decode work still queued for it may be

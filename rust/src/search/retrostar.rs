@@ -42,10 +42,6 @@ use std::collections::{HashMap, HashSet, VecDeque};
 const INF: f64 = f64::INFINITY;
 /// Floor on reaction cost so zero-cost cycles cannot form.
 const MIN_COST: f64 = 1e-3;
-/// Sleep between poll sweeps while waiting on in-flight expansions
-/// (speculative mode only; with one group in flight the wait is a
-/// blocking `wait()`).
-const POLL_SLEEP: std::time::Duration = std::time::Duration::from_micros(100);
 
 /// Retro\* planner.
 #[derive(Clone, Debug)]
@@ -555,6 +551,7 @@ impl RetroStar {
                     Err(e) => return Err(e),
                 }
             } else {
+                let deadline_at = t0 + limits.deadline;
                 let mut found: Option<(usize, Result<Vec<Vec<crate::search::Proposal>>>)>;
                 loop {
                     found = None;
@@ -570,7 +567,18 @@ impl RetroStar {
                     if t0.elapsed() >= limits.deadline {
                         break 'search None; // deadline while waiting
                     }
-                    std::thread::sleep(POLL_SLEEP);
+                    // Block on completion events until any group could
+                    // have finished (all groups share the policy's
+                    // completion queue, so any handle's wait covers the
+                    // whole sweep); spurious wakeups cost one re-poll.
+                    // No sleep-polling on this path.
+                    inflight
+                        .front_mut()
+                        .expect("in-flight checked non-empty")
+                        .handle
+                        .as_mut()
+                        .expect("pending handle")
+                        .wait_event(deadline_at);
                 }
                 match found.expect("loop exits with a completion") {
                     (i, Ok(r)) => {

@@ -1,0 +1,340 @@
+//! Fused-encode admission parity and MemView ref-count suite.
+//!
+//! Pins the two contracts of shared-encode admission groups:
+//!
+//! 1. **Bit-parity** — decoding a molecule from a row view of a shared
+//!    batch encode is bit-identical (tokens, logp @1e-9, every
+//!    `DecodeStats` field) to decoding it from its own per-molecule
+//!    encode, for all four engines, including staggered joins where
+//!    later admission rounds fuse into ticks mid-flight. The mock runs
+//!    with perfect Medusa heads so its logits are content-pure (the
+//!    default mock corrupts heads by a hash of the memory handle id,
+//!    which *legitimately* differs between the two encode layouts);
+//!    real models are content-pure by construction, as is
+//!    `ScriptedModel`, covered below.
+//! 2. **Ref-counting** — the shared batch is freed on the device
+//!    exactly when its last member task finishes or is cancelled:
+//!    cancelling one member never strands a sibling's memory, and no
+//!    member frees memory a sibling still decodes from. Covered for
+//!    `MockModel`, `ScriptedModel`, and `SharedModel` (where the final
+//!    release crosses the executor thread).
+
+use retroserve::benchkit::InstrumentedModel;
+use retroserve::decoding::scheduler::{DecodeScheduler, SchedulerConfig};
+use retroserve::decoding::{
+    beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder, GenOutput,
+};
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::scripted::{smiles_vocab, Script, ScriptedModel};
+use retroserve::model::{encode_shared, StepModel};
+use retroserve::runtime::server::SharedModel;
+use retroserve::tokenizer::{BOS, EOS};
+use retroserve::util::Rng;
+
+fn engines() -> Vec<Box<dyn Decoder>> {
+    vec![
+        Box::new(BeamSearch::vanilla()),
+        Box::new(BeamSearch::optimized()),
+        Box::new(Hsbs::new(3, 10)),
+        Box::new(Msbs::default()),
+    ]
+}
+
+/// Content-pure mock: perfect Medusa heads, so every logit depends only
+/// on the source tokens — never on which batch/row the source was
+/// encoded into.
+fn pure_cfg() -> MockConfig {
+    MockConfig { head_base_acc: 100, head_acc_decay: 0, ..Default::default() }
+}
+
+fn random_src(rng: &mut Rng, max_body: usize, vocab: usize) -> Vec<i32> {
+    let len = 4 + rng.gen_range(max_body.saturating_sub(4).max(1));
+    let mut s = vec![BOS];
+    for _ in 0..len {
+        s.push(4 + rng.gen_range(vocab - 4) as i32);
+    }
+    s.push(EOS);
+    s
+}
+
+/// The admission workload: per-molecule tasks arriving in rounds, with
+/// scheduler ticks between rounds (staggered joins).
+struct Round {
+    srcs: Vec<Vec<i32>>,
+    k: usize,
+    /// Ticks run after this round is submitted, before the next.
+    ticks_after: usize,
+}
+
+fn rounds(rng: &mut Rng, vocab: usize) -> Vec<Round> {
+    vec![
+        Round {
+            srcs: (0..3).map(|_| random_src(rng, 14, vocab)).collect(),
+            k: 3,
+            ticks_after: 2,
+        },
+        Round {
+            srcs: (0..2).map(|_| random_src(rng, 20, vocab)).collect(),
+            k: 5,
+            ticks_after: 1,
+        },
+        Round { srcs: vec![random_src(rng, 10, vocab)], k: 2, ticks_after: 0 },
+    ]
+}
+
+/// Drive the rounds through a scheduler. `fused` encodes each round in
+/// ONE `encode_shared` call (a task per row view); otherwise every
+/// molecule pays its own `start_task` encode. Returns per-molecule
+/// outputs + stats, in submission order.
+fn run_rounds(
+    model: &dyn StepModel,
+    dec: &dyn Decoder,
+    rounds: &[Round],
+    fused: bool,
+) -> Vec<(Vec<GenOutput>, DecodeStats)> {
+    let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4096 });
+    let mut finished = Vec::new();
+    let mut ids = Vec::new();
+    for round in rounds {
+        if fused {
+            let views = encode_shared(model, &round.srcs).unwrap();
+            for (view, src) in views.into_iter().zip(round.srcs.iter()) {
+                let one = std::slice::from_ref(src);
+                let task = dec.start_task_on(model, vec![view], one, round.k).unwrap();
+                ids.push(sched.submit(task));
+            }
+        } else {
+            for src in &round.srcs {
+                let one = std::slice::from_ref(src);
+                ids.push(sched.submit(dec.start_task(model, one, round.k).unwrap()));
+            }
+        }
+        for _ in 0..round.ticks_after {
+            sched.tick(model, &mut finished).unwrap();
+        }
+    }
+    sched.run_to_idle(model, &mut finished).unwrap();
+    assert_eq!(finished.len(), ids.len());
+    ids.iter()
+        .map(|id| {
+            let f = finished.iter().find(|f| f.id == *id).unwrap();
+            (f.outputs.clone(), f.stats.clone())
+        })
+        .collect()
+}
+
+fn assert_parity(
+    label: &str,
+    fused: &[(Vec<GenOutput>, DecodeStats)],
+    solo: &[(Vec<GenOutput>, DecodeStats)],
+) {
+    assert_eq!(fused.len(), solo.len(), "{label}: task count");
+    for (t, ((f_out, f_st), (s_out, s_st))) in fused.iter().zip(solo.iter()).enumerate() {
+        assert_eq!(f_out.len(), s_out.len(), "{label} task{t}: query count");
+        for (q, (fg, sg)) in f_out.iter().zip(s_out.iter()).enumerate() {
+            assert_eq!(fg.hyps.len(), sg.hyps.len(), "{label} task{t} q{q}: hyp count");
+            for (i, (fh, sh)) in fg.hyps.iter().zip(sg.hyps.iter()).enumerate() {
+                assert_eq!(fh.tokens, sh.tokens, "{label} task{t} q{q} hyp{i}: tokens");
+                assert!(
+                    (fh.logp - sh.logp).abs() < 1e-9,
+                    "{label} task{t} q{q} hyp{i}: logp {} vs {}",
+                    fh.logp,
+                    sh.logp
+                );
+            }
+        }
+        assert_eq!(f_st.model_calls, s_st.model_calls, "{label} task{t}: model_calls");
+        assert_eq!(f_st.encode_calls, s_st.encode_calls, "{label} task{t}: encode_calls");
+        assert_eq!(f_st.rows_logical, s_st.rows_logical, "{label} task{t}: rows_logical");
+        assert_eq!(f_st.rows_padded, s_st.rows_padded, "{label} task{t}: rows_padded");
+        assert_eq!(
+            f_st.drafts_offered, s_st.drafts_offered,
+            "{label} task{t}: drafts_offered"
+        );
+        assert_eq!(
+            f_st.drafts_accepted, s_st.drafts_accepted,
+            "{label} task{t}: drafts_accepted"
+        );
+    }
+}
+
+#[test]
+fn fused_encode_matches_per_molecule_encode_with_staggered_joins() {
+    let cfg = pure_cfg();
+    for dec in engines() {
+        let mut rng = Rng::new(0xF0ED ^ dec.name().len() as u64);
+        let work = rounds(&mut rng, cfg.vocab);
+        let solo_model = MockModel::new(cfg.clone());
+        let solo = run_rounds(&solo_model, dec.as_ref(), &work, false);
+        assert_eq!(solo_model.live_handles(), 0, "{}: solo run leaks", dec.name());
+        let fused_model = MockModel::new(cfg.clone());
+        let fused = run_rounds(&fused_model, dec.as_ref(), &work, true);
+        assert_eq!(fused_model.live_handles(), 0, "{}: fused run leaks", dec.name());
+        assert_parity(dec.name(), &fused, &solo);
+        // The whole point: the fused run paid one encoder call per
+        // round, the per-molecule run one per task.
+        let n_tasks: u64 = work.iter().map(|r| r.srcs.len() as u64).sum();
+        assert_eq!(
+            fused_model.encode_calls.load(std::sync::atomic::Ordering::Relaxed),
+            work.len() as u64,
+            "{}: one encode per round",
+            dec.name()
+        );
+        assert_eq!(
+            solo_model.encode_calls.load(std::sync::atomic::Ordering::Relaxed),
+            n_tasks,
+            "{}: reference encodes per molecule",
+            dec.name()
+        );
+    }
+}
+
+#[test]
+fn fused_encode_parity_on_scripted_model() {
+    // ScriptedModel is content-pure by construction (its logits come
+    // from the decoded source string), so fused vs per-molecule parity
+    // holds on real SMILES through MSBS's two-phase cycle too.
+    let products = ["CC(=O)NC", "CCOC(C)=O", "CCO"];
+    let vocab = smiles_vocab(products.into_iter());
+    let targets: Vec<(String, f64)> =
+        vec![("CC(=O)O.CN".to_string(), -0.5), ("CC(=O)Cl.CN".to_string(), -1.0)];
+    let mk = |targets: Vec<(String, f64)>| {
+        let script: Script = Box::new(move |_p: &str| targets.clone());
+        ScriptedModel::new(vocab.clone(), script)
+    };
+    let work: Vec<Round> = vec![
+        Round {
+            srcs: products.iter().map(|p| vocab.encode(p, true)).collect(),
+            k: 4,
+            ticks_after: 1,
+        },
+        Round { srcs: vec![vocab.encode(products[0], true)], k: 2, ticks_after: 0 },
+    ];
+    let dec = Msbs::default();
+    let solo_model = mk(targets.clone());
+    let solo = run_rounds(&solo_model, &dec, &work, false);
+    let fused_model = mk(targets);
+    let fused = run_rounds(&fused_model, &dec, &work, true);
+    assert_parity("scripted msbs", &fused, &solo);
+    assert_eq!(fused_model.live_handles(), 0);
+    assert_eq!(solo_model.live_handles(), 0);
+}
+
+#[test]
+fn shared_batch_frees_only_when_last_member_finishes() {
+    let cfg = pure_cfg();
+    let model = MockModel::new(cfg.clone());
+    let mut rng = Rng::new(42);
+    let srcs: Vec<Vec<i32>> = (0..3).map(|_| random_src(&mut rng, 12, cfg.vocab)).collect();
+    let dec = BeamSearch::optimized();
+    let views = encode_shared(&model, &srcs).unwrap();
+    assert_eq!(model.live_handles(), 1, "one batch handle for three tasks");
+    let mut tasks: Vec<_> = views
+        .into_iter()
+        .zip(srcs.iter())
+        .map(|(view, src)| {
+            let one = std::slice::from_ref(src);
+            dec.start_task_on(&model, vec![view], one, 3).unwrap()
+        })
+        .collect();
+    // Finish members one by one: the batch survives every release but
+    // the last.
+    while let Some(mut task) = tasks.pop() {
+        retroserve::decoding::run_task_to_done(&model, task.as_mut()).unwrap();
+        let (outs, _) = task.finish(&model);
+        assert_eq!(outs.len(), 1);
+        let want = if tasks.is_empty() { 0 } else { 1 };
+        assert_eq!(model.live_handles(), want, "{} members left", tasks.len());
+    }
+}
+
+#[test]
+fn cancelling_a_member_mid_flight_keeps_siblings_memory() {
+    let cfg = pure_cfg();
+    let model = MockModel::new(cfg.clone());
+    let mut rng = Rng::new(43);
+    let srcs: Vec<Vec<i32>> = (0..2).map(|_| random_src(&mut rng, 12, cfg.vocab)).collect();
+    let dec = Msbs::default();
+    let views = encode_shared(&model, &srcs).unwrap();
+    let mut sched = DecodeScheduler::new(SchedulerConfig::default());
+    let mut ids = Vec::new();
+    for (view, src) in views.into_iter().zip(srcs.iter()) {
+        let one = std::slice::from_ref(src);
+        ids.push(sched.submit(dec.start_task_on(&model, vec![view], one, 3).unwrap()));
+    }
+    let mut finished = Vec::new();
+    sched.tick(&model, &mut finished).unwrap();
+    // Cancel the first member mid-flight: its claim drops, but the
+    // sibling still decodes from the shared batch — memory must stay.
+    assert!(sched.cancel(&model, ids[0]));
+    assert_eq!(model.live_handles(), 1, "sibling keeps the shared batch alive");
+    sched.run_to_idle(&model, &mut finished).unwrap();
+    assert_eq!(finished.len(), 1, "only the surviving member retires");
+    assert_eq!(finished[0].id, ids[1]);
+    assert_eq!(model.live_handles(), 0, "last member's retirement frees the batch");
+}
+
+#[test]
+fn scripted_model_refcounts_shared_batches() {
+    let products = ["CC(=O)NC", "CCO"];
+    let vocab = smiles_vocab(products.into_iter());
+    let script: Script = Box::new(|_p: &str| vec![("CC.O".to_string(), -0.3)]);
+    let model = ScriptedModel::new(vocab.clone(), script);
+    let srcs: Vec<Vec<i32>> = products.iter().map(|p| vocab.encode(p, true)).collect();
+    let views = encode_shared(&model, &srcs).unwrap();
+    assert_eq!(model.live_handles(), 1);
+    let mut it = views.into_iter();
+    it.next().unwrap().release(&model);
+    assert_eq!(model.live_handles(), 1, "one claim left");
+    it.next().unwrap().release(&model);
+    assert_eq!(model.live_handles(), 0);
+}
+
+#[test]
+fn shared_model_view_release_crosses_the_executor_thread() {
+    // The live-handle counter (encode minus release) is mirrored into a
+    // shared atomic, so it stays observable after the model moves onto
+    // the executor thread.
+    let live = std::sync::Arc::new(std::sync::atomic::AtomicIsize::new(0));
+    let live_thread = live.clone();
+    let shared = SharedModel::spawn(move || {
+        Ok(InstrumentedModel::new(MockModel::new(pure_cfg())).with_live_counter(live_thread))
+    })
+    .unwrap();
+    let srcs = vec![vec![BOS, 5, 6, EOS], vec![BOS, 7, 8, 9, EOS]];
+    let views = encode_shared(&shared, &srcs).unwrap();
+    assert_eq!(live.load(std::sync::atomic::Ordering::SeqCst), 1);
+    let mut it = views.into_iter();
+    let (first, second) = (it.next().unwrap(), it.next().unwrap());
+    let keep_row = second.row();
+    first.release(&shared);
+    // `release` crosses to the executor thread asynchronously; a
+    // synchronous decode round-trip afterwards proves it was processed
+    // (the executor serves requests in order) without freeing the
+    // batch the sibling still uses.
+    let out = shared
+        .decode(
+            &[retroserve::model::DecodeRow {
+                mem: second.mem(),
+                mem_row: keep_row,
+                tgt: vec![BOS],
+                pos: 0,
+            }],
+            1,
+        )
+        .unwrap();
+    assert_eq!(out.rows, 1);
+    assert_eq!(
+        live.load(std::sync::atomic::Ordering::SeqCst),
+        1,
+        "sibling's claim must keep the batch alive across the thread hop"
+    );
+    second.release(&shared);
+    // Another round-trip orders us after the final release.
+    let _ = shared.encode(&[vec![BOS, 5, EOS]]).unwrap();
+    assert_eq!(
+        live.load(std::sync::atomic::Ordering::SeqCst),
+        1,
+        "the shared batch is gone; only the fresh probe encode remains"
+    );
+}

@@ -8,13 +8,13 @@
 //! serving stack. Also pins that abandoned speculative expansions
 //! release their scheduler tasks and leak no waiters.
 
+use retroserve::benchkit::InstrumentedModel;
 use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
 use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::msbs::Msbs;
 use retroserve::decoding::DecodeStats;
 use retroserve::metrics::Metrics;
 use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
-use retroserve::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
 use retroserve::search::policy::{ModelPolicy, OraclePolicy};
 use retroserve::search::{
     retrostar::RetroStar, EagerAsync, Planner, SearchLimits, SolveResult, Stock,
@@ -199,53 +199,35 @@ fn speculative_hub_planning_solves_the_solvable_molecules() {
     assert!(spec_submitted > 0);
 }
 
-/// Wraps a model with a gate: while `hold` is set, decode calls block.
-/// Lets the cancellation test pin "task is mid-flight when the cancel
-/// arrives" without timing games.
-struct GatedModel {
-    inner: ScriptedModel,
+/// Gated + live-handle-counting model for the cancellation tests:
+/// while `hold` is set decode calls block (pins "task is mid-flight
+/// when the cancel arrives" without timing games), and `live` mirrors
+/// encoded batches minus releases so the fused-encode tests can assert
+/// the shared batch memory is freed exactly once, by the last member.
+fn gated_model(
+    vocab: &retroserve::tokenizer::Vocab,
     hold: Arc<std::sync::atomic::AtomicBool>,
+    live: Arc<std::sync::atomic::AtomicIsize>,
+) -> InstrumentedModel<ScriptedModel> {
+    InstrumentedModel::new(ScriptedModel::new(vocab.clone(), oracle_script()))
+        .with_gate(hold)
+        .with_live_counter(live)
 }
 
-impl GatedModel {
-    fn wait_gate(&self) {
-        while self.hold.load(std::sync::atomic::Ordering::Relaxed) {
-            std::thread::sleep(std::time::Duration::from_micros(200));
+/// Event-driven settle: block on hub completion events until the hub
+/// holds no waiters or tasks (no sleep-polling).
+fn settle_clean(hub: &ExpansionHub) -> bool {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let seen = hub.completion_epoch();
+        let s = hub.debug_snapshot().unwrap();
+        if s.waiting_molecules == 0 && s.decode_tasks == 0 && s.sched_in_flight == 0 {
+            return true;
         }
-    }
-}
-
-impl StepModel for GatedModel {
-    fn vocab(&self) -> usize {
-        self.inner.vocab()
-    }
-    fn medusa_heads(&self) -> usize {
-        self.inner.medusa_heads()
-    }
-    fn max_src(&self) -> usize {
-        self.inner.max_src()
-    }
-    fn max_tgt(&self) -> usize {
-        self.inner.max_tgt()
-    }
-    fn encode(&self, src: &[Vec<i32>]) -> anyhow::Result<MemHandle> {
-        self.inner.encode(src)
-    }
-    fn decode(&self, rows: &[DecodeRow], win: usize) -> anyhow::Result<DecodeOut> {
-        self.wait_gate();
-        self.inner.decode(rows, win)
-    }
-    fn decode_into(
-        &self,
-        rows: &[DecodeRow],
-        win: usize,
-        out: &mut DecodeOut,
-    ) -> anyhow::Result<()> {
-        self.wait_gate();
-        self.inner.decode_into(rows, win, out)
-    }
-    fn release(&self, mem: MemHandle) {
-        self.inner.release(mem)
+        if std::time::Instant::now() >= deadline {
+            return false;
+        }
+        hub.wait_completion_past(seen, deadline);
     }
 }
 
@@ -254,11 +236,9 @@ fn cancelled_speculation_releases_scheduler_tasks_and_waiters() {
     let product = retroserve::chem::canonicalize("CC(=O)NCC(=O)OCC").unwrap();
     let vocab = smiles_vocab([product.as_str()].into_iter());
     let hold = Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let live = Arc::new(std::sync::atomic::AtomicIsize::new(0));
     let hub = ExpansionHub::start(
-        GatedModel {
-            inner: ScriptedModel::new(vocab.clone(), oracle_script()),
-            hold: hold.clone(),
-        },
+        gated_model(&vocab, hold.clone(), live.clone()),
         Box::new(Msbs::default()),
         vocab,
         BatcherConfig {
@@ -275,19 +255,67 @@ fn cancelled_speculation_releases_scheduler_tasks_and_waiters() {
     fut.cancel();
     hold.store(false, std::sync::atomic::Ordering::Relaxed);
     // The hub processes the cancel after the gated tick returns: the
-    // task leaves the scheduler, no waiters remain.
-    let mut clean = false;
-    for _ in 0..5000 {
-        let (waiting, tasks, in_flight) = hub.debug_snapshot().unwrap();
-        if waiting == 0 && tasks == 0 && in_flight == 0 {
-            clean = true;
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_micros(500));
-    }
-    assert!(clean, "cancelled task must leave no waiters or scheduler state");
+    // task leaves the scheduler, no waiters remain. Settling is
+    // event-driven (cancel processing bumps the completion epoch).
+    assert!(
+        settle_clean(&hub),
+        "cancelled task must leave no waiters or scheduler state"
+    );
     assert_eq!(hub.cancelled(), 1, "exactly one in-flight task abandoned");
+    assert_eq!(
+        live.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "the cancelled task's encoder memory must be released"
+    );
     // The hub still serves fresh work afterwards (nothing wedged).
     let props = hub.expand(&product, 4).unwrap();
     assert!(!props.is_empty());
+}
+
+/// The fused-encode ownership rule through the full hub stack: two
+/// molecules co-arrive, share ONE encoder call, one is cancelled
+/// mid-decode — the sibling still answers from the shared memory, and
+/// the batch is freed exactly when the last member is gone.
+#[test]
+fn cancelling_one_member_of_a_fused_encode_spares_the_sibling() {
+    let prod_a = retroserve::chem::canonicalize("CC(=O)NCC(=O)OCC").unwrap();
+    let prod_b = retroserve::chem::canonicalize("CC(=O)NC").unwrap();
+    let vocab = smiles_vocab([prod_a.as_str(), prod_b.as_str()].into_iter());
+    let hold = Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let live = Arc::new(std::sync::atomic::AtomicIsize::new(0));
+    let hub = ExpansionHub::start(
+        gated_model(&vocab, hold.clone(), live.clone()),
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig {
+            // Straggler window wide enough that both back-to-back
+            // submissions land in ONE admission round, but well short
+            // of the sleep below — by cancel time the round has
+            // encoded and is blocked inside the gated decode tick.
+            max_wait: std::time::Duration::from_millis(10),
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let fut_a = hub.submit(&prod_a, 6).unwrap();
+    let fut_b = hub.submit(&prod_b, 6).unwrap();
+    // Let the round encode (ungated) and block inside the first gated
+    // decode tick, then cancel one member mid-flight.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    fut_a.cancel();
+    hold.store(false, std::sync::atomic::Ordering::Relaxed);
+    // The surviving sibling must still be answered, from the shared
+    // encoder memory the cancellation must not have freed.
+    let props_b = fut_b.wait().unwrap();
+    assert!(!props_b.is_empty(), "sibling of a cancelled member must still answer");
+    assert!(settle_clean(&hub), "no waiters or tasks may remain");
+    let snap = hub.debug_snapshot().unwrap();
+    assert_eq!(snap.encode_calls, 1, "co-arriving misses share one encoder call");
+    assert_eq!(snap.encode_rounds, 1);
+    assert_eq!(hub.cancelled(), 1);
+    assert_eq!(
+        live.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "the shared batch must be freed once its last member is gone"
+    );
 }
