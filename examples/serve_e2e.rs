@@ -67,6 +67,8 @@ fn main() -> Result<()> {
             default_algo: "retrostar".into(),
             default_beam_width: 1,
             default_spec_depth: 1,
+            default_spec_adaptive: false,
+            default_spec_max: 8,
         },
     )?;
     let addr = server.addr();

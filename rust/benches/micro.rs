@@ -8,7 +8,9 @@
 //! `BENCH_decoding.json` with tokens/sec, model calls and a heap
 //! allocations-per-cycle proxy from the counting global allocator.
 
-use retroserve::benchkit::{allocs_now, write_bench_json, BenchRecord, CountingAlloc};
+use retroserve::benchkit::{
+    allocs_now, write_bench_json, BenchRecord, CountingAlloc, InstrumentedModel,
+};
 use retroserve::chem;
 use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
 use retroserve::model::mock::{MockConfig, MockModel};
@@ -48,8 +50,10 @@ fn rand_srcs(n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
 }
 
 /// Decode-cycle benchmark over the mock model: wall time, model calls,
-/// generated tokens/sec, and steady-state allocations per decode cycle
-/// (model-call cost held constant by the mock).
+/// generated tokens/sec, steady-state allocations per decode cycle
+/// (model-call cost held constant by the mock), and the incremental
+/// decode protocol's headline number — decoder positions processed per
+/// generated token, against the full-prefix path's O(prefix) charge.
 fn bench_decode_cycles() -> Vec<BenchRecord> {
     println!("== decode-cycle benches (mock model, B=8, K=10) ==");
     let group = rand_srcs(8, 30, 3);
@@ -90,9 +94,26 @@ fn bench_decode_cycles() -> Vec<BenchRecord> {
         let cycles = if name == "msbs" { calls / 2 } else { calls };
         let allocs_per_cycle = allocs as f64 / (cycles.max(1) * reps as u64) as f64;
         let toks_per_sec = gen_tokens as f64 / (ms * 1e-3 * reps as f64);
+        // Full-prefix reference for the same workload: capability
+        // forced off, so every row resends its whole prefix. Mirror the
+        // measured run's shape exactly (one warmup + `reps` repeats) so
+        // the mock's handle-id-keyed Medusa corruption — and therefore
+        // draft acceptance and prefix lengths — match row for row.
+        let full_model =
+            InstrumentedModel::new(MockModel::new(MockConfig::default())).with_incremental(false);
+        let mut full_warm = DecodeStats::default();
+        decoder.generate(&full_model, &group, k, &mut full_warm).unwrap();
+        let mut full_stats = DecodeStats::default();
+        for _ in 0..reps {
+            decoder.generate(&full_model, &group, k, &mut full_stats).unwrap();
+        }
+        let decode_tokens = stats.decode_tokens / reps as u64;
+        let per_gen = stats.decode_tokens as f64 / gen_tokens.max(1) as f64;
+        let full_per_gen = full_stats.decode_tokens as f64 / gen_tokens.max(1) as f64;
         println!(
             "{name:<24} {ms:>9.3} ms/group  {calls:>4} calls  \
-             {allocs_per_cycle:>8.1} allocs/cycle  {toks_per_sec:>12.0} tok/s"
+             {allocs_per_cycle:>8.1} allocs/cycle  {toks_per_sec:>12.0} tok/s  \
+             {per_gen:>6.2} dec-tok/gen (full-prefix {full_per_gen:>7.2})"
         );
         records.push(
             BenchRecord::new(name)
@@ -100,7 +121,13 @@ fn bench_decode_cycles() -> Vec<BenchRecord> {
                 .metric("model_calls", calls as f64)
                 .metric("tokens_per_sec", toks_per_sec)
                 .metric("allocs_per_cycle", allocs_per_cycle)
-                .metric("avg_effective_batch", stats.avg_effective_batch()),
+                .metric("avg_effective_batch", stats.avg_effective_batch())
+                .metric("decode_tokens", decode_tokens as f64)
+                .metric("decode_tokens_per_gen", per_gen)
+                .metric(
+                    "fullprefix_decode_tokens",
+                    (full_stats.decode_tokens / reps as u64) as f64,
+                ),
         );
     }
     records

@@ -2,7 +2,7 @@
 //! (`bench_table1..4`) and the criterion-style micro benches.
 
 use crate::jsonx::Json;
-use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StateId, StepModel};
 use anyhow::{Context, Result};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
@@ -25,7 +25,14 @@ use std::sync::Arc;
 ///   thread — the ref-count tests' probe;
 /// * **encode-failure injection** (`with_encode_failure`): `encode`
 ///   errors for any batch the predicate matches — blast-radius and
-///   fallback tests.
+///   fallback tests;
+/// * an **incremental override** (`with_incremental(false)`): force the
+///   full-prefix path on a state-caching model — the A/B lever the
+///   incremental parity tests and the `decode_tokens` benches use;
+/// * a shared **live state-claim counter** (`with_state_counter`):
+///   commits + retains − releases, observable across the executor
+///   thread — the state-leak tests' probe (zero when every task chain
+///   was released).
 ///
 /// Everything defaults to a transparent pass-through.
 pub struct InstrumentedModel<M> {
@@ -35,6 +42,8 @@ pub struct InstrumentedModel<M> {
     hold: Arc<AtomicBool>,
     live: Arc<AtomicIsize>,
     encode_fail: Option<Box<dyn Fn(&[Vec<i32>]) -> bool + Send + Sync>>,
+    incremental: Option<bool>,
+    state_claims: Arc<AtomicIsize>,
 }
 
 impl<M> InstrumentedModel<M> {
@@ -46,6 +55,8 @@ impl<M> InstrumentedModel<M> {
             hold: Arc::new(AtomicBool::new(false)),
             live: Arc::new(AtomicIsize::new(0)),
             encode_fail: None,
+            incremental: None,
+            state_claims: Arc::new(AtomicIsize::new(0)),
         }
     }
 
@@ -82,6 +93,20 @@ impl<M> InstrumentedModel<M> {
         F: Fn(&[Vec<i32>]) -> bool + Send + Sync + 'static,
     {
         self.encode_fail = Some(Box::new(f));
+        self
+    }
+
+    /// Override the wrapped model's incremental capability (pass
+    /// `false` to force the full-prefix path on a state-caching model).
+    pub fn with_incremental(mut self, on: bool) -> Self {
+        self.incremental = Some(on);
+        self
+    }
+
+    /// Mirror the live state-claim count (commits + retains − releases)
+    /// into `claims`.
+    pub fn with_state_counter(mut self, claims: Arc<AtomicIsize>) -> Self {
+        self.state_claims = claims;
         self
     }
 
@@ -151,6 +176,32 @@ impl<M: StepModel> StepModel for InstrumentedModel<M> {
     fn release(&self, mem: MemHandle) {
         self.live.fetch_sub(1, Ordering::SeqCst);
         self.inner.release(mem)
+    }
+
+    fn supports_incremental(&self) -> bool {
+        self.incremental.unwrap_or_else(|| self.inner.supports_incremental())
+    }
+
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        let s = self.inner.state_commit(mem, mem_row, parent, delta)?;
+        self.state_claims.fetch_add(1, Ordering::SeqCst);
+        Ok(s)
+    }
+
+    fn state_retain(&self, state: StateId) {
+        self.state_claims.fetch_add(1, Ordering::SeqCst);
+        self.inner.state_retain(state)
+    }
+
+    fn state_release(&self, state: StateId) {
+        self.state_claims.fetch_sub(1, Ordering::SeqCst);
+        self.inner.state_release(state)
     }
 }
 
@@ -356,12 +407,7 @@ pub fn warmup_model(model: &dyn StepModel, vocab: &crate::tokenizer::Vocab, samp
     let ids = vocab.encode(sample, true);
     if let Ok(mem) = model.encode(&[ids]) {
         let _ = model.decode(
-            &[crate::model::DecodeRow {
-                mem,
-                mem_row: 0,
-                tgt: vec![crate::tokenizer::BOS],
-                pos: 0,
-            }],
+            &[crate::model::DecodeRow::full(mem, 0, vec![crate::tokenizer::BOS], 0)],
             1,
         );
         model.release(mem);
@@ -409,7 +455,7 @@ mod tests {
         let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
         assert_eq!(live.load(Ordering::SeqCst), 1);
         let out = m
-            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .decode(&[DecodeRow::full(h, 0, vec![BOS], 0)], 1)
             .unwrap();
         assert_eq!(out.rows, 1);
         m.release(h);

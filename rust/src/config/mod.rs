@@ -156,13 +156,25 @@ pub struct ServeConfig {
     pub max_depth: usize,
     pub beam_width: usize,
     /// Pipelined Retro\*: expansion groups kept in flight per plan
-    /// (1 = sequential selection semantics).
+    /// (1 = sequential selection semantics). With `spec_adaptive` this
+    /// is the adaptive controller's max depth.
     pub spec_depth: usize,
+    /// `planner.spec_depth = "auto"`: adapt the in-flight depth to the
+    /// observed speculation apply-rate, up to `planner.spec_depth_max`.
+    pub spec_adaptive: bool,
+    /// Max depth the adaptive controller may reach — also the cap
+    /// applied when a *request* asks for `"spec_depth": "auto"` on a
+    /// fixed-depth server.
+    pub spec_depth_max: usize,
     pub algo: String,
     /// Continuous batcher: max requests merged into one decode task.
     pub batch_max: usize,
     /// Continuous batcher: max idle wait for more work, microseconds.
     pub batch_wait_us: u64,
+    /// Deadline-based encode coalescer window, microseconds (0 = off):
+    /// under load a round with queued misses is held open this long so
+    /// near-arrivals share its single fused encode.
+    pub batch_coalesce_us: u64,
     /// Continuous batcher: fused-call row budget per scheduler tick.
     pub batch_rows: usize,
     /// Expansion cache capacity (molecules, LRU).
@@ -172,6 +184,13 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     pub fn from_config(c: &Config) -> ServeConfig {
+        // `spec_depth` accepts an integer (fixed depth) or the string
+        // "auto" (adaptive, bounded by `planner.spec_depth_max`).
+        let spec_max = c.int_or("planner.spec_depth_max", 8).max(1) as usize;
+        let (spec_depth, spec_adaptive) = match c.get("planner.spec_depth") {
+            Some(Value::Str(v)) if v == "auto" => (spec_max, true),
+            _ => (c.int_or("planner.spec_depth", 1).max(1) as usize, false),
+        };
         ServeConfig {
             artifacts: c.str_or("server.artifacts", "artifacts"),
             listen: c.str_or("server.listen", "127.0.0.1:7878"),
@@ -181,10 +200,13 @@ impl ServeConfig {
             max_iterations: c.int_or("planner.max_iterations", 35000) as usize,
             max_depth: c.int_or("planner.max_depth", 5) as usize,
             beam_width: c.int_or("planner.beam_width", 1) as usize,
-            spec_depth: c.int_or("planner.spec_depth", 1).max(1) as usize,
+            spec_depth,
+            spec_adaptive,
+            spec_depth_max: spec_max,
             algo: c.str_or("planner.algo", "retrostar"),
             batch_max: c.int_or("batcher.max_batch", 16) as usize,
             batch_wait_us: c.int_or("batcher.max_wait_us", 2000) as u64,
+            batch_coalesce_us: c.int_or("batcher.coalesce_us", 0).max(0) as u64,
             batch_rows: c.int_or("batcher.max_rows", 256) as usize,
             cache_cap: c.int_or("batcher.cache_cap", 10_000) as usize,
             workers: c.int_or("server.workers", 4) as usize,
@@ -240,9 +262,30 @@ mod tests {
     #[test]
     fn spec_depth_parses_and_clamps() {
         let c = Config::parse("[planner]\nspec_depth = 4\n").unwrap();
-        assert_eq!(ServeConfig::from_config(&c).spec_depth, 4);
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.spec_depth, 4);
+        assert!(!sc.spec_adaptive);
         let c = Config::parse("[planner]\nspec_depth = 0\n").unwrap();
         assert_eq!(ServeConfig::from_config(&c).spec_depth, 1, "clamped to >= 1");
+    }
+
+    #[test]
+    fn spec_depth_auto_enables_the_adaptive_controller() {
+        let c = Config::parse("[planner]\nspec_depth = auto\n").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert!(sc.spec_adaptive);
+        assert_eq!(sc.spec_depth, 8, "default adaptive max");
+        let c = Config::parse("[planner]\nspec_depth = auto\nspec_depth_max = 3\n").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert!(sc.spec_adaptive);
+        assert_eq!(sc.spec_depth, 3);
+    }
+
+    #[test]
+    fn coalesce_window_parses_with_zero_default() {
+        assert_eq!(ServeConfig::from_config(&Config::new()).batch_coalesce_us, 0);
+        let c = Config::parse("[batcher]\ncoalesce_us = 400\n").unwrap();
+        assert_eq!(ServeConfig::from_config(&c).batch_coalesce_us, 400);
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //! shared batch, handed to the engine through
 //! [`Decoder::start_task_on`]. Encoder cost is therefore O(submission
 //! rounds), not O(misses) — at fan-in N one call does the work of N —
-//! while retirement stays per-query. The batch memory is released on
+//! while retirement stays per-query. Under load, `batcher.coalesce_us`
+//! optionally holds a round with queued misses open for a bounded
+//! window so *near*-arrivals (not just co-arrivals) share the round's
+//! single encode — the ROADMAP's deadline-based encode coalescer.
+//! The batch memory is released on
 //! the device exactly when the round's *last* member task retires or is
 //! cancelled, so abandoning one speculative expansion never strands its
 //! co-arrivals' memory. [`ExpansionHub::encode_ratio`] exposes the
@@ -261,6 +265,13 @@ pub struct BatcherConfig {
     /// tick. While decoding, arrivals are drained non-blockingly and
     /// join the next tick anyway.
     pub max_wait: std::time::Duration,
+    /// Deadline-based encode coalescer (`batcher.coalesce_us`; zero =
+    /// off): while the scheduler is busy, a round that gathered at
+    /// least one miss is held open this long so near-arrivals join its
+    /// single fused encode instead of paying their own round. Trades a
+    /// bounded admission delay for fewer encoder calls under load —
+    /// visible in [`ExpansionHub::encode_ratio`].
+    pub coalesce: std::time::Duration,
     /// Fused-call row budget per scheduler tick.
     pub max_rows: usize,
     /// Expansion-cache capacity (molecules, LRU).
@@ -272,6 +283,7 @@ impl Default for BatcherConfig {
         Self {
             max_batch: 16,
             max_wait: std::time::Duration::from_micros(2000),
+            coalesce: std::time::Duration::ZERO,
             max_rows: 256,
             cache_cap: DEFAULT_CACHE_CAP,
         }
@@ -801,6 +813,59 @@ fn hub_loop<M: StepModel>(
                     Err(mpsc::TryRecvError::Disconnected) => {
                         open = false;
                         break;
+                    }
+                }
+            }
+            // Deadline-based encode coalescer: the round already has a
+            // miss and the device is busy with in-flight work, so
+            // holding the round open briefly lets near-arrivals share
+            // its ONE fused encode instead of paying their own round.
+            // The hold delays the next tick by at most `coalesce` — a
+            // bounded latency trade, off by default.
+            if !cfg.coalesce.is_zero()
+                && open
+                && !scheduler.is_idle()
+                && state.has_queued_misses()
+            {
+                // Hits answered by the drain above must not wait out
+                // the hold — their replies are already on the wire.
+                if answered {
+                    events.notify();
+                    answered = false;
+                }
+                let deadline = std::time::Instant::now() + cfg.coalesce;
+                while gathered < cfg.max_batch {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(msg) => {
+                            let fl = scheduler.in_flight();
+                            let expand = on_msg(
+                                msg,
+                                &mut state,
+                                &mut cancels,
+                                fl,
+                                encode_now,
+                                &mut answered,
+                            );
+                            if expand {
+                                counters.merged.fetch_add(1, Ordering::Relaxed);
+                                gathered += 1;
+                            }
+                            // A cache hit answered inside the hold: wake
+                            // its waiter now, not when the window ends.
+                            if answered {
+                                events.notify();
+                                answered = false;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
                     }
                 }
             }
@@ -1400,6 +1465,52 @@ mod tests {
         assert!(!p.is_empty());
         let err = poisoned.wait().expect_err("poisoned molecule must fail");
         assert!(format!("{err:#}").contains("encode failed"), "{err:#}");
+    }
+
+    #[test]
+    fn deadline_coalescer_fuses_near_arrivals_under_load() {
+        use crate::benchkit::InstrumentedModel;
+        use std::sync::atomic::AtomicBool;
+        let vocab = Vocab::build(["CC(=O)O.CN", "CC(=O)NC", "CCO"]);
+        let hold = Arc::new(AtomicBool::new(true));
+        let model = InstrumentedModel::new(MockModel::new(MockConfig {
+            vocab: vocab.len(),
+            ..Default::default()
+        }))
+        .with_gate(hold.clone());
+        let h = ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig {
+                max_wait: std::time::Duration::from_micros(500),
+                // Generous coalesce window: while molecule A keeps the
+                // scheduler busy, B's round stays open long enough for
+                // C (submitted well after B) to join it.
+                coalesce: std::time::Duration::from_millis(120),
+                ..Default::default()
+            },
+            Arc::new(Metrics::new()),
+        );
+        // Round 1: A alone. Its first fused tick blocks on the gate,
+        // so B and C below arrive while the hub is demonstrably busy.
+        let fa = h.submit("CC(=O)O.CN", 3).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let fb = h.submit("CC(=O)NC", 3).unwrap();
+        hold.store(false, Ordering::SeqCst);
+        // C arrives only after the gate opened — past any same-drain
+        // co-arrival window, inside the coalesce hold for B's round.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let fc = h.submit("CCO", 3).unwrap();
+        assert!(!fa.wait().unwrap().is_empty());
+        assert!(!fb.wait().unwrap().is_empty());
+        assert!(!fc.wait().unwrap().is_empty());
+        let (encode_calls, encode_rounds) = h.encode_ratio();
+        assert_eq!(encode_calls, encode_rounds, "one encode per round");
+        assert_eq!(
+            encode_rounds, 2,
+            "coalescer must fold the near-arrival into the held round (A | B+C)"
+        );
     }
 
     #[test]

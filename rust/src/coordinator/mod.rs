@@ -20,11 +20,16 @@
 //!                    │  StepModel::encode call; each task decodes over
 //!                    │  its own ref-counted row view (MemView) of the
 //!                    │  shared batch — encoder cost is O(rounds), not
-//!                    │  O(misses)
+//!                    │  O(misses). Under load, batcher.coalesce_us
+//!                    │  holds a round open briefly so NEAR-arrivals
+//!                    │  join the same fused encode too
 //!                    ▼
 //!              DecodeScheduler: ONE fused device call per decode
-//!                    │  cycle over ALL in-flight tasks' rows; a tick
-//!                    │  error fails only the tasks in that call
+//!                    │  cycle over ALL in-flight tasks' rows (delta
+//!                    │  rows: each row is a cached StateId + only its
+//!                    │  new tokens, so decode cost is O(fresh
+//!                    │  positions) per cycle); a tick error fails only
+//!                    │  the tasks in that call
 //!                    ▼
 //!              SharedModel (model-executor thread; startup Meta ships
 //!                    │  the device's row-bucketing rule)
@@ -39,6 +44,20 @@
 //! so speculative cancellation never strands a sibling's memory and no
 //! task can free memory a sibling still decodes from
 //! (`tests/parity_encode_fusion.rs` pins both directions).
+//!
+//! **Decoder-state ownership rule (fork / commit / release):** cached
+//! decoder states ([`crate::model::StateId`]) follow the same lifetime
+//! discipline one level deeper. A task *commits* a state only for
+//! positions the decode call it just absorbed processed; beam
+//! reordering is explicit *forking* — every surviving beam takes its
+//! own claim on the anchor it extends (siblings share the committed
+//! state); rejected draft positions are never committed and unadopted
+//! commits are *released* at the end of the cycle (rollback is free).
+//! A task's whole chain is released when it retires or is cancelled —
+//! `tests/parity_decoding.rs` pins zero leaked states through
+//! mid-phase cancellation, and `decode_tokens` in `DecodeStats` makes
+//! the payoff measurable (positions processed per generated token stays
+//! a small constant instead of growing with prefix length).
 //!
 //! Cross-tree batching is the paper's closing "future work" realized:
 //! AiZynthFinder calls its model with batch size 1; here concurrent

@@ -11,9 +11,12 @@
 //! ```
 //!
 //! `spec_depth` sets how many expansion groups pipelined Retro\* keeps
-//! in flight (1 = sequential selection; the default comes from
-//! `planner.spec_depth`). Plan responses report the speculation
-//! accounting under `speculation`.
+//! in flight: an integer pins it (1 = sequential selection), the string
+//! `"auto"` enables the adaptive controller (depth follows the observed
+//! speculation apply-rate up to the server's configured max). The
+//! default comes from `planner.spec_depth`. Plan responses report the
+//! speculation accounting under `speculation`, including the
+//! `depth_trajectory` the adaptive controller walked.
 //!
 //! Responses mirror the `id` and carry `ok`/`error` plus op-specific
 //! fields; routes serialize as nested `{smiles, logp?, children?}`.
@@ -78,6 +81,16 @@ pub fn plan_response(id: i64, r: &SolveResult) -> Json {
                 ("cancelled", Json::num(r.spec.groups_cancelled as f64)),
                 ("hits", Json::num(r.spec.spec_hits as f64)),
                 ("max_in_flight", Json::num(r.spec.max_in_flight as f64)),
+                (
+                    "depth_trajectory",
+                    Json::Arr(
+                        r.spec
+                            .depth_trajectory
+                            .iter()
+                            .map(|&d| Json::num(d as f64))
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
     ];

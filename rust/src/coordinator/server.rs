@@ -28,8 +28,16 @@ pub struct ServerCtx {
     pub default_algo: String,
     pub default_beam_width: usize,
     /// Default in-flight expansion depth for pipelined Retro\* (1 =
-    /// sequential selection; requests may override via `spec_depth`).
+    /// sequential selection; requests may override via `spec_depth`,
+    /// either an integer or `"auto"`). When `default_spec_adaptive` is
+    /// set this is the adaptive controller's max depth.
     pub default_spec_depth: usize,
+    /// `planner.spec_depth = "auto"`: adapt depth to the observed
+    /// speculation apply-rate.
+    pub default_spec_adaptive: bool,
+    /// Adaptive-depth cap (`planner.spec_depth_max`), used when either
+    /// the server default or the request selects `"auto"`.
+    pub default_spec_max: usize,
 }
 
 impl Server {
@@ -176,11 +184,19 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                 .get("beam_width")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(ctx.default_beam_width);
-            let sd = req
-                .get("spec_depth")
-                .and_then(|x| x.as_usize())
-                .unwrap_or(ctx.default_spec_depth)
-                .max(1);
+            // `spec_depth` accepts an integer or "auto" (adaptive up to
+            // the server's configured max depth).
+            let (sd, sd_auto) = match req.get("spec_depth") {
+                Some(v) if v.as_str() == Some("auto") => (ctx.default_spec_max.max(1), true),
+                Some(v) => (
+                    v.as_usize().unwrap_or(ctx.default_spec_depth).max(1),
+                    false,
+                ),
+                None => (
+                    ctx.default_spec_depth.max(1),
+                    ctx.default_spec_adaptive,
+                ),
+            };
             let policy = BatchedPolicy::new(ctx.hub.clone());
             // Retro* plans ride the async path: per-query expansion
             // futures into the hub's scheduler. spec_depth = 1 keeps
@@ -192,9 +208,12 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                     .metrics
                     .time("request.plan", || Dfs.solve(smiles, &policy, &ctx.stock, &limits)),
                 "retrostar" | "retro*" => ctx.metrics.time("request.plan", || {
-                    RetroStar::new(bw)
-                        .with_spec_depth(sd)
-                        .solve_pipelined(smiles, &policy, &ctx.stock, &limits)
+                    let rs = if sd_auto {
+                        RetroStar::new(bw).with_adaptive_spec_depth(sd)
+                    } else {
+                        RetroStar::new(bw).with_spec_depth(sd)
+                    };
+                    rs.solve_pipelined(smiles, &policy, &ctx.stock, &limits)
                 }),
                 other => return protocol::error_response(id, &format!("unknown algo {other}")),
             };
@@ -279,6 +298,8 @@ mod tests {
             default_algo: "retrostar".into(),
             default_beam_width: 1,
             default_spec_depth: 1,
+            default_spec_adaptive: false,
+            default_spec_max: 8,
         }
     }
 
@@ -337,6 +358,22 @@ mod tests {
         );
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
         assert!(r.get("speculation").is_some(), "plan response must report speculation");
+    }
+
+    #[test]
+    fn plan_accepts_spec_depth_auto() {
+        let ctx = test_ctx();
+        let r = handle_line(
+            "{\"id\":1,\"op\":\"plan\",\"smiles\":\"CC(=O)NC\",\"deadline_ms\":200,\
+             \"spec_depth\":\"auto\"}",
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        let spec = r.get("speculation").expect("speculation reported");
+        assert!(
+            spec.get("depth_trajectory").and_then(|t| t.as_arr()).is_some(),
+            "adaptive plans must report the depth trajectory: {spec:?}"
+        );
     }
 
     #[test]

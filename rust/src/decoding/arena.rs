@@ -140,10 +140,21 @@ impl TokenArena {
     /// Write the full token sequence at `id` into `out` (cleared first).
     /// Reuses `out`'s capacity, so steady-state calls allocate nothing.
     pub fn materialize_into(&self, id: NodeId, out: &mut Vec<i32>) {
+        self.materialize_suffix_into(id, 0, out);
+    }
+
+    /// Write tokens `[from..len)` of the chain at `id` into `out`
+    /// (cleared first); `from >= len` yields an empty suffix. This is
+    /// the delta-row builder: a row whose cached state covers the first
+    /// `from` tokens sends only this suffix to the model.
+    pub fn materialize_suffix_into(&self, id: NodeId, from: usize, out: &mut Vec<i32>) {
         out.clear();
         let mut cur = id.0;
         while cur != NIL {
             let n = &self.nodes[cur as usize];
+            if (n.len as usize) <= from {
+                break;
+            }
             out.push(n.tok);
             cur = n.parent;
         }
@@ -239,6 +250,25 @@ mod tests {
         assert_eq!(a.len(n2), 3);
         assert_eq!(a.last_tok(n2), 6);
         assert_eq!(a.node_count(), 4);
+    }
+
+    #[test]
+    fn materialize_suffix_slices_the_chain() {
+        let mut a = TokenArena::new();
+        let r = a.root(1);
+        let n1 = a.push(r, 5);
+        let n2 = a.push(n1, 6);
+        let mut buf = Vec::new();
+        a.materialize_suffix_into(n2, 0, &mut buf);
+        assert_eq!(buf, vec![1, 5, 6]);
+        a.materialize_suffix_into(n2, 1, &mut buf);
+        assert_eq!(buf, vec![5, 6]);
+        a.materialize_suffix_into(n2, 2, &mut buf);
+        assert_eq!(buf, vec![6]);
+        a.materialize_suffix_into(n2, 3, &mut buf);
+        assert!(buf.is_empty());
+        a.materialize_suffix_into(n2, 9, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -19,11 +19,12 @@
 
 use super::arena::{CompactScratch, TokenArena};
 use super::{
-    compact_beams, finalize, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput,
-    RowBuf, TaskState, COMPACT_MIN,
+    adopt_beams, compact_beams, delta_spec, finalize, fork_anchor, release_beam_states,
+    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput, RowBuf,
+    TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::ScoringScratch;
-use crate::model::{DecodeOut, MemView, StepModel};
+use crate::model::{DecodeOut, MemView, StateId, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -71,6 +72,7 @@ impl Decoder for BeamSearch {
             optimized: self.optimized,
             k,
             max_len: model.max_tgt(),
+            inc: model.supports_incremental(),
             views,
             arena,
             beams: srcs.iter().map(|_| vec![root]).collect(),
@@ -82,6 +84,7 @@ impl Decoder for BeamSearch {
             stats: DecodeStats { encode_calls: 1, ..Default::default() },
             compact: CompactScratch::new(),
             compact_at: COMPACT_MIN,
+            cycle_states: Vec::new(),
         }))
     }
 }
@@ -92,6 +95,9 @@ pub struct BeamTask {
     optimized: bool,
     k: usize,
     max_len: usize,
+    /// Delta rows over cached decoder state (the model supports the
+    /// incremental protocol); otherwise classic full-prefix rows.
+    inc: bool,
     /// One ref-counted encoder-memory view per query (possibly rows of
     /// a batch shared with other tasks).
     views: Vec<MemView>,
@@ -106,6 +112,9 @@ pub struct BeamTask {
     stats: DecodeStats,
     compact: CompactScratch,
     compact_at: usize,
+    /// Claims from this cycle's `state_commit`s, released once
+    /// survivors have adopted theirs.
+    cycle_states: Vec<StateId>,
 }
 
 impl DecodeTask for BeamTask {
@@ -127,15 +136,18 @@ impl DecodeTask for BeamTask {
                 // Vanilla: submit rows even for finished beams/queries.
                 if !self.optimized || live_row {
                     let v = &self.views[q];
-                    rows.push_row(&self.arena, v.mem(), v.row(), b.node, &[]);
+                    let (state, from) = delta_spec(&self.arena, b, self.inc);
+                    rows.push_row_delta(&self.arena, v.mem(), v.row(), state, b.node, from, &[]);
                     self.row_of.push((q, bi));
                 }
             }
             // Vanilla duplicates the root beam K times on the first step.
             if !self.optimized && qbeams.len() == 1 && !qbeams[0].finished {
                 for _ in 1..self.k {
+                    let b = qbeams[0];
                     let v = &self.views[q];
-                    rows.push_row(&self.arena, v.mem(), v.row(), qbeams[0].node, &[]);
+                    let (state, from) = delta_spec(&self.arena, &b, self.inc);
+                    rows.push_row_delta(&self.arena, v.mem(), v.row(), state, b.node, from, &[]);
                     self.row_of.push((q, usize::MAX)); // duplicate; ignored
                 }
             }
@@ -147,7 +159,7 @@ impl DecodeTask for BeamTask {
         }
     }
 
-    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>) {
+    fn absorb(&mut self, model: &dyn StepModel, out: &DecodeOut, range: std::ops::Range<usize>) {
         debug_assert_eq!(range.len(), self.row_of.len());
         // Expand each query.
         for pool in self.pools.iter_mut() {
@@ -161,6 +173,7 @@ impl DecodeTask for BeamTask {
                 }
             }
         }
+        self.cycle_states.clear();
         for (r, &(q, bi)) in self.row_of.iter().enumerate() {
             if bi == usize::MAX {
                 continue; // first-step duplicate row
@@ -173,6 +186,17 @@ impl DecodeTask for BeamTask {
             let j = out
                 .offset_of(gr, self.arena.len(b.node) - 1)
                 .expect("window covers last position");
+            // Fork the cached state: this call processed the beam's
+            // last token, so `prefix ++ [last]` is committable now and
+            // every surviving child anchors on it.
+            let anchor = fork_anchor(
+                model,
+                &mut self.inc,
+                &self.views[q],
+                b.state,
+                self.arena.last_tok(b.node),
+                &mut self.cycle_states,
+            );
             self.scratch.top_k_log_softmax(out.logits(gr, j, 0), self.k);
             for &tok in &self.scratch.topk {
                 let node = self.arena.push(b.node, tok as i32);
@@ -181,6 +205,7 @@ impl DecodeTask for BeamTask {
                     node,
                     logp: b.logp + self.scratch.lsm[tok],
                     finished,
+                    state: anchor,
                 });
             }
         }
@@ -190,9 +215,14 @@ impl DecodeTask for BeamTask {
             }
             pool.take_into(&self.arena, &mut self.next);
             if !self.next.is_empty() {
-                std::mem::swap(&mut self.beams[q], &mut self.next);
+                adopt_beams(model, &mut self.beams[q], &mut self.next);
             }
             self.done[q] = self.beams[q].iter().all(|b| b.finished);
+        }
+        // Commits nobody adopted die here (rollback); adopted anchors
+        // survive on the beams' own claims.
+        for s in self.cycle_states.drain(..) {
+            release_state(model, s);
         }
         compact_beams(&mut self.arena, &mut self.compact, &mut self.beams, &mut self.compact_at);
     }
@@ -207,6 +237,7 @@ impl DecodeTask for BeamTask {
 
     fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
         let this = *self;
+        release_beam_states(model, &this.beams);
         crate::model::release_views(model, this.views);
         let outs = this.beams.iter().map(|qb| finalize(&this.arena, qb)).collect();
         (outs, this.stats)

@@ -25,11 +25,12 @@
 
 use super::arena::{CompactScratch, TokenArena};
 use super::{
-    compact_beams, finalize, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput,
-    RowBuf, TaskState, COMPACT_MIN,
+    adopt_beams, compact_beams, delta_spec, finalize, fork_anchor, release_beam_states,
+    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput, RowBuf,
+    TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::ScoringScratch;
-use crate::model::{argmax, DecodeOut, MemView, StepModel};
+use crate::model::{argmax, DecodeOut, MemView, StateId, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -130,6 +131,7 @@ impl Decoder for Hsbs {
             cfg: self.clone(),
             k,
             max_len: model.max_tgt(),
+            inc: model.supports_incremental(),
             views,
             bodies,
             arena,
@@ -144,6 +146,7 @@ impl Decoder for Hsbs {
             stats: DecodeStats { encode_calls: 1, ..Default::default() },
             compact: CompactScratch::new(),
             compact_at: COMPACT_MIN,
+            cycle_states: Vec::new(),
         }))
     }
 }
@@ -154,6 +157,8 @@ pub struct HsbsTask {
     cfg: Hsbs,
     k: usize,
     max_len: usize,
+    /// Delta rows over cached decoder state when the model supports it.
+    inc: bool,
     /// One ref-counted encoder-memory view per query (possibly rows of
     /// a batch shared with other tasks).
     views: Vec<MemView>,
@@ -173,6 +178,9 @@ pub struct HsbsTask {
     stats: DecodeStats,
     compact: CompactScratch,
     compact_at: usize,
+    /// Claims from this cycle's backbone commits, released after
+    /// survivor adoption (losing drafts are never committed — rollback).
+    cycle_states: Vec<StateId>,
 }
 
 impl DecodeTask for HsbsTask {
@@ -199,7 +207,16 @@ impl DecodeTask for HsbsTask {
                 }
                 for &(s, e) in &self.windows {
                     let v = &self.views[q];
-                    rows.push_row(&self.arena, v.mem(), v.row(), b.node, &self.bodies[q][s..e]);
+                    let (state, from) = delta_spec(&self.arena, b, self.inc);
+                    rows.push_row_delta(
+                        &self.arena,
+                        v.mem(),
+                        v.row(),
+                        state,
+                        b.node,
+                        from,
+                        &self.bodies[q][s..e],
+                    );
                     self.row_meta.push((q, bi, s, e));
                 }
             }
@@ -211,7 +228,7 @@ impl DecodeTask for HsbsTask {
         }
     }
 
-    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>) {
+    fn absorb(&mut self, model: &dyn StepModel, out: &DecodeOut, range: std::ops::Range<usize>) {
         debug_assert_eq!(range.len(), self.row_meta.len());
         // Per (query, beam): pick the draft with most accepted
         // tokens. Rows of one beam are contiguous, so one scan with
@@ -255,6 +272,7 @@ impl DecodeTask for HsbsTask {
                 }
             }
         }
+        self.cycle_states.clear();
         for &(q, bi, acc, r) in self.best.iter() {
             let b = self.beams[q][bi];
             let blen = self.arena.len(b.node);
@@ -267,12 +285,31 @@ impl DecodeTask for HsbsTask {
             // Backbone-and-divergences harvesting (see msbs.rs for the
             // rationale): top-K continuations at the end of the
             // accepted backbone, top-K divergent branches elsewhere.
+            // Incrementally, the accepted backbone is committed one
+            // fork at a time (the best row's call just processed those
+            // positions); losing drafts never commit — free rollback.
             let ext_cap = acc.min(draft.len());
             let mut cum = b.logp;
             let mut backbone = b.node;
+            let mut anchor = fork_anchor(
+                model,
+                &mut self.inc,
+                &self.views[q],
+                b.state,
+                self.arena.last_tok(b.node),
+                &mut self.cycle_states,
+            );
             for j in 0..=ext_cap {
                 if j > 0 {
                     backbone = self.arena.push(backbone, draft[j - 1]);
+                    anchor = fork_anchor(
+                        model,
+                        &mut self.inc,
+                        &self.views[q],
+                        anchor,
+                        draft[j - 1],
+                        &mut self.cycle_states,
+                    );
                 }
                 let Some(off) = out.offset_of(gr, p0 + j) else { break };
                 let prefix_len = blen + j;
@@ -291,6 +328,7 @@ impl DecodeTask for HsbsTask {
                         node,
                         logp: cum + self.scratch.lsm[tok],
                         finished,
+                        state: anchor,
                     });
                 }
                 if j < draft.len() {
@@ -304,9 +342,12 @@ impl DecodeTask for HsbsTask {
             }
             pool.take_into(&self.arena, &mut self.next);
             if !self.next.is_empty() {
-                std::mem::swap(&mut self.beams[q], &mut self.next);
+                adopt_beams(model, &mut self.beams[q], &mut self.next);
             }
             self.done[q] = self.beams[q].iter().all(|b| b.finished);
+        }
+        for s in self.cycle_states.drain(..) {
+            release_state(model, s);
         }
         compact_beams(&mut self.arena, &mut self.compact, &mut self.beams, &mut self.compact_at);
     }
@@ -321,6 +362,7 @@ impl DecodeTask for HsbsTask {
 
     fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
         let this = *self;
+        release_beam_states(model, &this.beams);
         crate::model::release_views(model, this.views);
         let outs = this.beams.iter().map(|qb| finalize(&this.arena, qb)).collect();
         (outs, this.stats)

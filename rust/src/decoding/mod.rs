@@ -62,6 +62,27 @@
 //! (`tests/parity_encode_fusion.rs` pins both the bit-parity and the
 //! ref-count rule).
 //!
+//! ## Incremental decode protocol
+//!
+//! When the model caches decoder state
+//! ([`StepModel::supports_incremental`]), every engine sends **delta
+//! rows**: a [`crate::model::StateId`] anchor covering the beam's
+//! prefix plus only the new tokens ([`RowBuf::push_row_delta`]), so
+//! decode cost per cycle is proportional to fresh positions, not
+//! prefix length. Beam reordering is explicit state forking — each
+//! survivor adopts (claims) the state committed for its parent's row
+//! ([`adopt_beams`]); MSBS's draft and verify phases share the
+//! accepted-prefix state, so a verify cycle processes only `draft_len`
+//! new positions; rejected draft positions are never committed
+//! (rollback is free). State lifetime follows the `MemView` ownership
+//! discipline: a task's whole chain is released on retirement *and* on
+//! cancellation, never stranding a sibling fork.
+//! `DecodeStats::decode_tokens` counts positions actually processed,
+//! and `tests/parity_decoding.rs` pins the incremental path
+//! bit-identical (tokens, logp, all other stats) to the full-prefix
+//! path for all four engines, solo and scheduler-fused. Models without
+//! cached state keep receiving classic full-prefix rows.
+//!
 //! ## Zero-allocation decoding core
 //!
 //! All engines share primitives that keep the host-side hot loop free of
@@ -92,7 +113,7 @@ pub mod hsbs;
 pub mod msbs;
 pub mod scheduler;
 
-use crate::model::{encode_shared, DecodeOut, DecodeRow, MemHandle, MemView, StepModel};
+use crate::model::{encode_shared, DecodeOut, DecodeRow, MemHandle, MemView, StateId, StepModel};
 use anyhow::Result;
 use arena::{NodeId, TokenArena};
 
@@ -135,6 +156,12 @@ pub struct DecodeStats {
     pub rows_logical: u64,
     /// Sum over calls of the padded (bucketed) row count.
     pub rows_padded: u64,
+    /// Decoder positions actually processed: the sum of every row's
+    /// delta length. On the full-prefix path this grows O(L²) per
+    /// sequence (each cycle resends the whole prefix); with incremental
+    /// state it is a small constant per generated token — the win the
+    /// incremental decode protocol exists to deliver.
+    pub decode_tokens: u64,
     /// Draft tokens offered by the chosen draft per verification.
     pub drafts_offered: u64,
     /// Draft tokens accepted (Table 1D numerator).
@@ -164,6 +191,7 @@ impl DecodeStats {
         self.encode_calls += o.encode_calls;
         self.rows_logical += o.rows_logical;
         self.rows_padded += o.rows_padded;
+        self.decode_tokens += o.decode_tokens;
         self.drafts_offered += o.drafts_offered;
         self.drafts_accepted += o.drafts_accepted;
         self.wall_secs += o.wall_secs;
@@ -202,8 +230,10 @@ pub enum TaskState {
 pub trait DecodeTask: Send {
     /// Append pending rows for the current phase; see the trait docs.
     fn next_rows(&mut self, rows: &mut RowBuf) -> TaskState;
-    /// Consume this task's logits window and advance one phase.
-    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>);
+    /// Consume this task's logits window and advance one phase. The
+    /// model is passed so incremental tasks can commit the decoder
+    /// states this call just processed (and fork/release beam anchors).
+    fn absorb(&mut self, model: &dyn StepModel, out: &DecodeOut, range: std::ops::Range<usize>);
     /// Per-task accounting (the paper's Table 1 counters).
     fn stats_mut(&mut self) -> &mut DecodeStats;
     /// Current token-arena node count (compaction diagnostics).
@@ -227,11 +257,13 @@ pub fn run_task_to_done(model: &dyn StepModel, task: &mut dyn DecodeTask) -> Res
             TaskState::Need { win } => {
                 model.decode_into(&rows.rows, win, &mut out)?;
                 let (n, padded) = (rows.len() as u64, out.padded_rows as u64);
+                let toks: u64 = rows.rows.iter().map(|r| r.delta.len() as u64).sum();
                 let st = task.stats_mut();
                 st.model_calls += 1;
                 st.rows_logical += n;
                 st.rows_padded += padded;
-                task.absorb(&out, 0..rows.len());
+                st.decode_tokens += toks;
+                task.absorb(model, &out, 0..rows.len());
             }
         }
     }
@@ -298,24 +330,122 @@ pub trait Decoder: Send + Sync {
     }
 }
 
-/// An in-flight beam: a prefix node in the token arena plus its score.
-/// 24 bytes, `Copy` — extending or carrying a beam never touches the
-/// heap.
+/// An in-flight beam: a prefix node in the token arena plus its score
+/// and (under the incremental protocol) the cached decoder state
+/// covering all of its tokens but the last — the **anchor** the beam's
+/// next delta row continues from. 32 bytes, `Copy` — extending or
+/// carrying a beam never touches the heap.
+///
+/// Claim discipline: every beam held in a task's `beams` owns exactly
+/// one claim on its anchor ([`adopt_beams`] retains for survivors
+/// before releasing the beams they replace; `finish`/cancel releases
+/// the lot). Candidates inside a cycle carry anchors without claims —
+/// the cycle's commit claims keep them alive until adoption.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct Beam {
     pub node: NodeId,
     pub logp: f64,
     pub finished: bool,
+    /// Cached state covering `tokens[0..len-1]` (`NONE` on the
+    /// full-prefix path and for root beams).
+    pub state: StateId,
 }
 
 impl Beam {
     /// A fresh BOS-only beam rooted in `arena`.
     pub fn root(arena: &mut TokenArena) -> Beam {
-        Beam { node: arena.root(crate::tokenizer::BOS), logp: 0.0, finished: false }
+        Beam {
+            node: arena.root(crate::tokenizer::BOS),
+            logp: 0.0,
+            finished: false,
+            state: StateId::NONE,
+        }
     }
 }
 
-/// Reusable decode-call row storage: `DecodeRow.tgt` buffers are
+/// Release a beam-state claim (`NONE`-safe).
+#[inline]
+pub(crate) fn release_state(model: &dyn StepModel, s: StateId) {
+    if !s.is_none() {
+        model.state_release(s);
+    }
+}
+
+/// Swap a query's beams for the pool's selection under the state-claim
+/// discipline: survivors take their claims *before* the beams they
+/// replace drop theirs, so an anchor shared by both sides never dips to
+/// zero claims mid-swap. NONE anchors are skipped, so this is free on
+/// the full-prefix path — and stays correct if a task degrades to it
+/// mid-flight while earlier beams still hold real claims.
+pub(crate) fn adopt_beams(model: &dyn StepModel, beams: &mut Vec<Beam>, next: &mut Vec<Beam>) {
+    for b in next.iter() {
+        if !b.state.is_none() {
+            model.state_retain(b.state);
+        }
+    }
+    for b in beams.iter() {
+        release_state(model, b.state);
+    }
+    std::mem::swap(beams, next);
+}
+
+/// Release every beam's anchor claim (task retirement / cancellation).
+/// NONE-safe and unconditional for the same degradation reason as
+/// [`adopt_beams`].
+pub(crate) fn release_beam_states(model: &dyn StepModel, beams: &[Vec<Beam>]) {
+    for qb in beams {
+        for b in qb {
+            release_state(model, b.state);
+        }
+    }
+}
+
+/// The `(state, from)` pair for a beam's next delta row: under the
+/// incremental protocol the anchor covers all but the last token (the
+/// delta is exactly one fresh position plus any extension); on the
+/// full-prefix path the row carries everything from position 0.
+#[inline]
+pub(crate) fn delta_spec(arena: &TokenArena, b: &Beam, inc: bool) -> (StateId, usize) {
+    if inc {
+        (b.state, arena.len(b.node) - 1)
+    } else {
+        (StateId::NONE, 0)
+    }
+}
+
+/// Fork a cached anchor: commit `parent ++ [tok]` and record the claim
+/// in `cycle_states` (released at the end of the cycle unless a
+/// survivor adopted it). A commit failure must not take down the whole
+/// scheduler tick (the tick-error contract scopes failures to the
+/// failing *call*), so instead of propagating, the task **degrades to
+/// full-prefix rows** for the rest of its life: `inc` flips off, the
+/// candidate anchors become NONE, and the claims already held drain
+/// through the usual adopt/cycle/finish releases. Results are
+/// unaffected — full rows are the bit-identical fallback path.
+pub(crate) fn fork_anchor(
+    model: &dyn StepModel,
+    inc: &mut bool,
+    view: &MemView,
+    parent: StateId,
+    tok: i32,
+    cycle_states: &mut Vec<StateId>,
+) -> StateId {
+    if !*inc {
+        return StateId::NONE;
+    }
+    match model.state_commit(view.mem(), view.row(), parent, &[tok]) {
+        Ok(s) => {
+            cycle_states.push(s);
+            s
+        }
+        Err(_) => {
+            *inc = false;
+            StateId::NONE
+        }
+    }
+}
+
+/// Reusable decode-call row storage: `DecodeRow::delta` buffers are
 /// recycled between cycles, so steady-state row building allocates
 /// nothing. Tasks append rows here; the solo driver and the fused
 /// scheduler both own one `RowBuf` for the lifetime of their loop.
@@ -332,12 +462,13 @@ impl RowBuf {
     /// Start a new decode call: reclaim all previous rows' buffers.
     pub fn begin(&mut self) {
         for r in self.rows.drain(..) {
-            self.spare.push(r.tgt);
+            self.spare.push(r.delta);
         }
     }
 
-    /// Append a row for `node`'s sequence extended by `ext`, windowed at
-    /// the node's last position (the seed's `prefix ++ draft` shape).
+    /// Append a full-prefix row for `node`'s sequence extended by
+    /// `ext`, windowed at the node's last position (the seed's
+    /// `prefix ++ draft` shape; no cached state).
     pub fn push_row(
         &mut self,
         arena: &TokenArena,
@@ -346,10 +477,29 @@ impl RowBuf {
         node: NodeId,
         ext: &[i32],
     ) {
-        let mut tgt = self.spare.pop().unwrap_or_default();
-        arena.materialize_into(node, &mut tgt);
-        tgt.extend_from_slice(ext);
-        self.rows.push(DecodeRow { mem, mem_row, tgt, pos: arena.len(node) - 1 });
+        self.push_row_delta(arena, mem, mem_row, StateId::NONE, node, 0, ext);
+    }
+
+    /// Append a delta row: `state` names cached decoder state covering
+    /// `node`'s first `from` tokens; the row carries only tokens
+    /// `[from..len)` plus `ext`. The window start stays the node's last
+    /// position, identical to the full-prefix row for the same node —
+    /// which is what makes the two paths bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_row_delta(
+        &mut self,
+        arena: &TokenArena,
+        mem: MemHandle,
+        mem_row: usize,
+        state: StateId,
+        node: NodeId,
+        from: usize,
+        ext: &[i32],
+    ) {
+        let mut delta = self.spare.pop().unwrap_or_default();
+        arena.materialize_suffix_into(node, from, &mut delta);
+        delta.extend_from_slice(ext);
+        self.rows.push(DecodeRow { mem, mem_row, state, delta, pos: arena.len(node) - 1 });
     }
 
     pub fn is_empty(&self) -> bool {
@@ -365,7 +515,7 @@ impl RowBuf {
     pub fn truncate_to(&mut self, n: usize) {
         while self.rows.len() > n {
             let r = self.rows.pop().expect("len checked");
-            self.spare.push(r.tgt);
+            self.spare.push(r.delta);
         }
     }
 }
@@ -534,7 +684,7 @@ mod tests {
         for &t in &toks[1..] {
             node = arena.push(node, t);
         }
-        Beam { node, logp, finished: false }
+        Beam { node, logp, finished: false, state: StateId::NONE }
     }
 
     #[test]
@@ -581,21 +731,39 @@ mod tests {
     }
 
     #[test]
-    fn row_buf_recycles_tgt_buffers() {
+    fn row_buf_recycles_delta_buffers() {
         let mut arena = TokenArena::new();
         let b = beam(&mut arena, &[1, 5, 6], 0.0);
         let mut rb = RowBuf::new();
         rb.begin();
         rb.push_row(&arena, MemHandle(1), 0, b.node, &[7, 8]);
         assert_eq!(rb.len(), 1);
-        assert_eq!(rb.rows[0].tgt, vec![1, 5, 6, 7, 8]);
+        assert_eq!(rb.rows[0].delta, vec![1, 5, 6, 7, 8]);
         assert_eq!(rb.rows[0].pos, 2);
-        let ptr = rb.rows[0].tgt.as_ptr();
+        let ptr = rb.rows[0].delta.as_ptr();
         rb.begin();
         assert!(rb.is_empty());
         rb.push_row(&arena, MemHandle(1), 0, b.node, &[]);
-        assert_eq!(rb.rows[0].tgt, vec![1, 5, 6]);
-        assert_eq!(ptr, rb.rows[0].tgt.as_ptr(), "tgt buffer must be recycled");
+        assert_eq!(rb.rows[0].delta, vec![1, 5, 6]);
+        assert_eq!(ptr, rb.rows[0].delta.as_ptr(), "delta buffer must be recycled");
+    }
+
+    #[test]
+    fn push_row_delta_carries_suffix_and_state() {
+        let mut arena = TokenArena::new();
+        let b = beam(&mut arena, &[1, 5, 6], 0.0);
+        let mut rb = RowBuf::new();
+        rb.begin();
+        // Anchor covers [1, 5]; the delta is the last token plus a draft.
+        rb.push_row_delta(&arena, MemHandle(1), 0, StateId(9), b.node, 2, &[7, 8]);
+        assert_eq!(rb.rows[0].state, StateId(9));
+        assert_eq!(rb.rows[0].delta, vec![6, 7, 8]);
+        assert_eq!(rb.rows[0].pos, 2, "window start stays the node's last position");
+        // from == len: the delta is just the extension (MSBS verify shape).
+        rb.begin();
+        rb.push_row_delta(&arena, MemHandle(1), 0, StateId(9), b.node, 3, &[7, 8]);
+        assert_eq!(rb.rows[0].delta, vec![7, 8]);
+        assert_eq!(rb.rows[0].pos, 2);
     }
 
     #[test]

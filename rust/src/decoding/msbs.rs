@@ -30,11 +30,14 @@
 
 use super::arena::{CompactScratch, TokenArena};
 use super::{
-    compact_beams, finalize, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput,
-    RowBuf, TaskState, COMPACT_MIN,
+    adopt_beams, compact_beams, delta_spec, finalize, fork_anchor, release_beam_states,
+    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput, RowBuf,
+    TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::{nucleus_mass_before, ScoringScratch};
-use crate::model::{argmax, encode_shared, release_views, DecodeOut, MemView, StepModel};
+use crate::model::{
+    argmax, encode_shared, release_views, DecodeOut, MemView, StateId, StepModel,
+};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -132,6 +135,7 @@ impl Msbs {
             k,
             m,
             max_len: model.max_tgt(),
+            inc: model.supports_incremental(),
             views,
             arena,
             beams: srcs.iter().map(|_| vec![root]).collect(),
@@ -149,6 +153,8 @@ impl Msbs {
             stats: DecodeStats { encode_calls: 1, ..Default::default() },
             compact: CompactScratch::new(),
             compact_at: COMPACT_MIN,
+            row_states: Vec::new(),
+            cycle_states: Vec::new(),
         })
     }
 
@@ -187,6 +193,8 @@ pub struct MsbsTask {
     /// Draft length (Medusa heads, possibly capped).
     m: usize,
     max_len: usize,
+    /// Delta rows over cached decoder state when the model supports it.
+    inc: bool,
     /// One ref-counted encoder-memory view per query (possibly rows of
     /// a batch shared with other tasks).
     views: Vec<MemView>,
@@ -208,15 +216,34 @@ pub struct MsbsTask {
     stats: DecodeStats,
     compact: CompactScratch,
     compact_at: usize,
+    /// Per-row full-prefix states committed by the draft phase and
+    /// **shared with the verify phase**: the verify row continues from
+    /// the accepted-prefix state, so it carries only `draft_len` new
+    /// positions. Claims are held across the phase boundary and
+    /// released at the end of `absorb_verify` (or in `finish`, so a
+    /// cancellation between the phases leaks nothing).
+    row_states: Vec<StateId>,
+    /// Claims from the verify phase's backbone commits, released after
+    /// survivor adoption (rejected draft positions are never committed).
+    cycle_states: Vec<StateId>,
 }
 
 impl MsbsTask {
     /// Absorb the draft call: greedy draft per beam, token j from head j
-    /// (head 0 = main).
-    fn absorb_draft(&mut self, dout: &DecodeOut, range: std::ops::Range<usize>) {
+    /// (head 0 = main). Incrementally, the draft call processed each
+    /// beam's last position, so the full prefix is committed here and
+    /// handed to the verify phase — prefix-shared verification.
+    fn absorb_draft(
+        &mut self,
+        model: &dyn StepModel,
+        dout: &DecodeOut,
+        range: std::ops::Range<usize>,
+    ) {
         self.cycle += 1;
         self.draft_flat.clear();
         self.draft_span.clear();
+        debug_assert!(self.row_states.is_empty(), "verify must have drained row states");
+        self.row_states.clear();
         for (r, &(q, bi)) in self.row_of.iter().enumerate() {
             let b = self.beams[q][bi];
             let blen = self.arena.len(b.node);
@@ -230,12 +257,33 @@ impl MsbsTask {
                 self.draft_flat.push(argmax(dout.logits(gr, off, h)) as i32);
             }
             self.draft_span.push((start, self.draft_flat.len()));
+            if self.inc {
+                let anchor = fork_anchor(
+                    model,
+                    &mut self.inc,
+                    &self.views[q],
+                    b.state,
+                    self.arena.last_tok(b.node),
+                    &mut self.row_states,
+                );
+                // A mid-batch degradation leaves earlier rows with real
+                // states and later ones without; the verify builder
+                // indexes row_states per row, so keep the slots aligned.
+                if anchor.is_none() {
+                    self.row_states.push(StateId::NONE);
+                }
+            }
         }
         self.phase = MsbsPhase::Verify;
     }
 
     /// Absorb the verify call: nucleus acceptance + candidate harvest.
-    fn absorb_verify(&mut self, vout: &DecodeOut, range: std::ops::Range<usize>) {
+    fn absorb_verify(
+        &mut self,
+        model: &dyn StepModel,
+        vout: &DecodeOut,
+        range: std::ops::Range<usize>,
+    ) {
         for pool in self.pools.iter_mut() {
             pool.reset();
         }
@@ -287,9 +335,25 @@ impl MsbsTask {
             let ext_cap = eos_idx.unwrap_or(acc);
             let mut cum = b.logp;
             let mut backbone = b.node;
+            // The anchor chain starts at the draft phase's full-prefix
+            // state and forks one accepted token at a time; positions
+            // past the accepted backbone are never committed, so a
+            // rejected draft rolls back for free.
+            let mut anchor =
+                self.row_states.get(r).copied().unwrap_or(StateId::NONE);
             for j in 0..=ext_cap {
                 if j > 0 {
                     backbone = self.arena.push(backbone, draft[j - 1]);
+                    if !anchor.is_none() {
+                        anchor = fork_anchor(
+                            model,
+                            &mut self.inc,
+                            &self.views[q],
+                            anchor,
+                            draft[j - 1],
+                            &mut self.cycle_states,
+                        );
+                    }
                 }
                 let Some(off) = vout.offset_of(gr, p0 + j) else { break };
                 let prefix_len = blen + j;
@@ -308,6 +372,7 @@ impl MsbsTask {
                         node,
                         logp: cum + self.scratch.lsm[tok],
                         finished,
+                        state: anchor,
                     });
                 }
                 if j < draft.len() {
@@ -321,9 +386,15 @@ impl MsbsTask {
             }
             pool.take_into(&self.arena, &mut self.next);
             if !self.next.is_empty() {
-                std::mem::swap(&mut self.beams[q], &mut self.next);
+                adopt_beams(model, &mut self.beams[q], &mut self.next);
             }
             self.done[q] = self.beams[q].iter().all(|b| b.finished);
+        }
+        for s in self.cycle_states.drain(..) {
+            release_state(model, s);
+        }
+        for s in self.row_states.drain(..) {
+            release_state(model, s);
         }
         if let Some(tr) = self.trace.as_mut() {
             tr.push(CycleTrace {
@@ -361,7 +432,16 @@ impl DecodeTask for MsbsTask {
                     for (bi, b) in qbeams.iter().enumerate() {
                         if !b.finished {
                             let v = &self.views[q];
-                            rows.push_row(&self.arena, v.mem(), v.row(), b.node, &[]);
+                            let (state, from) = delta_spec(&self.arena, b, self.inc);
+                            rows.push_row_delta(
+                                &self.arena,
+                                v.mem(),
+                                v.row(),
+                                state,
+                                b.node,
+                                from,
+                                &[],
+                            );
                             self.row_of.push((q, bi));
                         }
                     }
@@ -374,23 +454,41 @@ impl DecodeTask for MsbsTask {
             }
             MsbsPhase::Verify => {
                 // Never empty: the draft phase only transitions here
-                // with at least one live row.
+                // with at least one live row. Incrementally, the verify
+                // row continues from the draft phase's full-prefix
+                // state, so its delta is ONLY the draft — a verify
+                // cycle processes `draft_len` new positions, not the
+                // whole prefix (prefix-shared Medusa verification).
                 for (r, &(q, bi)) in self.row_of.iter().enumerate() {
                     let b = self.beams[q][bi];
                     let (s, e) = self.draft_span[r];
                     let v = &self.views[q];
-                    rows.push_row(&self.arena, v.mem(), v.row(), b.node, &self.draft_flat[s..e]);
+                    // Prefix-shared verification: continue from the
+                    // draft phase's full-prefix state so the delta is
+                    // ONLY the draft (a NONE slot — degraded task —
+                    // falls back to the full row).
+                    let state = self.row_states.get(r).copied().unwrap_or(StateId::NONE);
+                    let from = if state.is_none() { 0 } else { self.arena.len(b.node) };
+                    rows.push_row_delta(
+                        &self.arena,
+                        v.mem(),
+                        v.row(),
+                        state,
+                        b.node,
+                        from,
+                        &self.draft_flat[s..e],
+                    );
                 }
                 TaskState::Need { win: self.m + 1 }
             }
         }
     }
 
-    fn absorb(&mut self, out: &DecodeOut, range: std::ops::Range<usize>) {
+    fn absorb(&mut self, model: &dyn StepModel, out: &DecodeOut, range: std::ops::Range<usize>) {
         debug_assert_eq!(range.len(), self.row_of.len());
         match self.phase {
-            MsbsPhase::Draft => self.absorb_draft(out, range),
-            MsbsPhase::Verify => self.absorb_verify(out, range),
+            MsbsPhase::Draft => self.absorb_draft(model, out, range),
+            MsbsPhase::Verify => self.absorb_verify(model, out, range),
         }
     }
 
@@ -404,6 +502,12 @@ impl DecodeTask for MsbsTask {
 
     fn finish(self: Box<Self>, model: &dyn StepModel) -> (Vec<GenOutput>, DecodeStats) {
         let this = *self;
+        // A cancellation between the draft and verify phases leaves the
+        // per-row prefix states claimed — release them with the beams'.
+        for s in this.row_states {
+            release_state(model, s);
+        }
+        release_beam_states(model, &this.beams);
         release_views(model, this.views);
         let outs = this.beams.iter().map(|qb| finalize(&this.arena, qb)).collect();
         (outs, this.stats)

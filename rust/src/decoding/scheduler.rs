@@ -230,12 +230,17 @@ impl DecodeScheduler {
             self.stats.rows_logical += fused_rows as u64;
             self.stats.rows_padded += self.out.padded_rows as u64;
             for &(i, start, end) in &self.staged {
+                // Positions actually processed for this task's rows: the
+                // delta lengths, the same number solo `generate` charges.
+                let toks: u64 =
+                    self.rows.rows[start..end].iter().map(|r| r.delta.len() as u64).sum();
                 let slot = &mut self.tasks[i];
                 let st = slot.task.stats_mut();
                 st.model_calls += 1;
                 st.rows_logical += (end - start) as u64;
                 st.rows_padded += model.pad_rows(end - start) as u64;
-                slot.task.absorb(&self.out, start..end);
+                st.decode_tokens += toks;
+                slot.task.absorb(model, &self.out, start..end);
             }
         }
 

@@ -115,6 +115,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         BatcherConfig {
             max_batch: sc.batch_max,
             max_wait: std::time::Duration::from_micros(sc.batch_wait_us),
+            coalesce: std::time::Duration::from_micros(sc.batch_coalesce_us),
             max_rows: sc.batch_rows,
             cache_cap: sc.cache_cap,
         },
@@ -137,6 +138,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default_algo: sc.algo.clone(),
             default_beam_width: sc.beam_width,
             default_spec_depth: sc.spec_depth,
+            default_spec_adaptive: sc.spec_adaptive,
+            default_spec_max: sc.spec_depth_max,
         },
     )?;
     eprintln!("retroserve: ready on {}", server.addr());
@@ -170,14 +173,27 @@ fn cmd_plan(args: &Args) -> Result<()> {
     if let Some(k) = args.flags.get("k") {
         limits.expansions_per_step = k.parse()?;
     }
-    let sd: usize =
-        args.flags.get("spec-depth").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    // --spec-depth N pins the in-flight depth; --spec-depth auto adapts
+    // it to the observed apply-rate (bounded by --spec-max, default 8).
+    let sd_raw = args.flags.get("spec-depth").map(String::as_str).unwrap_or("1");
+    let (sd, sd_auto) = if sd_raw == "auto" {
+        let max: usize =
+            args.flags.get("spec-max").map(|s| s.parse()).transpose()?.unwrap_or(8);
+        (max.max(1), true)
+    } else {
+        (sd_raw.parse::<usize>()?.max(1), false)
+    };
     let policy = BatchedPolicy::new(hub);
     let r = match algo {
         "dfs" => Dfs.solve(smiles, &policy, &stock, &limits)?,
-        "retrostar" | "retro*" => RetroStar::new(bw)
-            .with_spec_depth(sd)
-            .solve_pipelined(smiles, &policy, &stock, &limits)?,
+        "retrostar" | "retro*" => {
+            let rs = if sd_auto {
+                RetroStar::new(bw).with_adaptive_spec_depth(sd)
+            } else {
+                RetroStar::new(bw).with_spec_depth(sd)
+            };
+            rs.solve_pipelined(smiles, &policy, &stock, &limits)?
+        }
         other => bail!("unknown algo {other}"),
     };
     println!(
@@ -191,12 +207,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
     );
     if r.spec.groups_submitted > 0 && sd > 1 {
         println!(
-            "speculation: submitted={} applied={} cancelled={} hits={} max_in_flight={}",
+            "speculation: submitted={} applied={} cancelled={} hits={} max_in_flight={} \
+             depth_trajectory={:?}",
             r.spec.groups_submitted,
             r.spec.groups_applied,
             r.spec.groups_cancelled,
             r.spec.spec_hits,
-            r.spec.max_in_flight
+            r.spec.max_in_flight,
+            r.spec.depth_trajectory
         );
     }
     if let Some(route) = &r.route {

@@ -9,7 +9,7 @@
 //! with a per-head accuracy knob that deterministically (seeded hash)
 //! corrupts some positions so acceptance rates are interesting.
 
-use super::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use super::{DecodeOut, DecodeRow, MemHandle, StateId, StateStore, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -46,10 +46,16 @@ impl Default for MockConfig {
     }
 }
 
-/// Deterministic mock model. Thread-safe; counts calls.
+/// Deterministic mock model. Thread-safe; counts calls. Supports the
+/// incremental decode protocol (its "KV cache" is a [`StateStore`] of
+/// committed prefixes; logits depend only on the source and position,
+/// so delta rows are bit-identical to full rows by construction — but
+/// the store still *validates* every incremental row, so a stale or
+/// cross-row state reference fails the decode loudly).
 pub struct MockModel {
     cfg: MockConfig,
     store: Mutex<HashMap<u64, Vec<Vec<i32>>>>,
+    states: StateStore,
     next_id: AtomicU64,
     pub encode_calls: AtomicU64,
     pub decode_calls: AtomicU64,
@@ -60,6 +66,7 @@ impl MockModel {
         Self {
             cfg,
             store: Mutex::new(HashMap::new()),
+            states: StateStore::new(),
             next_id: AtomicU64::new(1),
             encode_calls: AtomicU64::new(0),
             decode_calls: AtomicU64::new(0),
@@ -99,6 +106,12 @@ impl MockModel {
     /// `encode` must be balanced by a `release`).
     pub fn live_handles(&self) -> usize {
         self.store.lock().unwrap().len()
+    }
+
+    /// Cached decoder states currently held (leak diagnostics: every
+    /// claim a task takes must be released by retirement/cancel).
+    pub fn live_states(&self) -> usize {
+        self.states.live()
     }
 
     /// A deterministic wrong-but-plausible alternative token.
@@ -156,11 +169,20 @@ impl StepModel for MockModel {
         out.heads = heads;
         out.vocab = vocab;
         out.padded_rows = self.pad_rows(rows.len());
+        let mut full = Vec::new();
         for (r, row) in rows.iter().enumerate() {
             let srcs = store
                 .get(&row.mem.0)
                 .ok_or_else(|| anyhow::anyhow!("unknown mem handle"))?;
             let src = &srcs[row.mem_row];
+            // The mock's logits depend only on (src, position), so the
+            // delta tokens are not needed to compute them — but resolve
+            // incremental rows anyway so stale-state protocol bugs
+            // surface here instead of silently decoding garbage.
+            if !row.state.is_none() {
+                self.states.resolve_into(row.state, row.mem, row.mem_row, &row.delta, &mut full)?;
+                anyhow::ensure!(row.pos < full.len(), "window start past row end");
+            }
             // emulate the dynamic_slice clamp against the padded length
             let padded = self.cfg.max_tgt;
             let start = row.pos.min(padded - win);
@@ -203,6 +225,28 @@ impl StepModel for MockModel {
     fn release(&self, mem: MemHandle) {
         self.store.lock().unwrap().remove(&mem.0);
     }
+
+    fn supports_incremental(&self) -> bool {
+        true
+    }
+
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        self.states.commit(mem, mem_row, parent, delta)
+    }
+
+    fn state_retain(&self, state: StateId) {
+        self.states.retain(state)
+    }
+
+    fn state_release(&self, state: StateId) {
+        self.states.release(state)
+    }
 }
 
 #[cfg(test)]
@@ -223,7 +267,7 @@ mod tests {
         for _ in 0..10 {
             let out = m
                 .decode(
-                    &[DecodeRow { mem: h, mem_row: 0, tgt: prefix.clone(), pos: prefix.len() - 1 }],
+                    &[DecodeRow::full(h, 0, prefix.clone(), prefix.len() - 1)],
                     1,
                 )
                 .unwrap();
@@ -246,7 +290,7 @@ mod tests {
         });
         let h = m.encode(&[src_seq()]).unwrap();
         let out = m
-            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .decode(&[DecodeRow::full(h, 0, vec![BOS], 0)], 1)
             .unwrap();
         // head k at position 0 predicts src[1 + k]
         for k in 0..=6 {
@@ -263,10 +307,10 @@ mod tests {
         let h1 = m1.encode(&[src_seq()]).unwrap();
         let h2 = m2.encode(&[src_seq()]).unwrap();
         let r1 = m1
-            .decode(&[DecodeRow { mem: h1, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .decode(&[DecodeRow::full(h1, 0, vec![BOS], 0)], 1)
             .unwrap();
         let r2 = m2
-            .decode(&[DecodeRow { mem: h2, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .decode(&[DecodeRow::full(h2, 0, vec![BOS], 0)], 1)
             .unwrap();
         assert_eq!(r1.data, r2.data);
         // at 50% accuracy some head must disagree with the oracle
@@ -285,7 +329,7 @@ mod tests {
         let m = MockModel::new(MockConfig { max_tgt: 16, ..Default::default() });
         let h = m.encode(&[src_seq()]).unwrap();
         let out = m
-            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 14 }], 8)
+            .decode(&[DecodeRow::full(h, 0, vec![BOS], 14)], 8)
             .unwrap();
         assert_eq!(out.starts[0], 8); // min(14, 16-8)
     }
@@ -294,7 +338,7 @@ mod tests {
     fn decode_into_recycles_buffers() {
         let m = MockModel::new(MockConfig::default());
         let h = m.encode(&[src_seq()]).unwrap();
-        let row = DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 };
+        let row = DecodeRow::full(h, 0, vec![BOS], 0);
         let mut out = DecodeOut::default();
         m.decode_into(std::slice::from_ref(&row), 2, &mut out).unwrap();
         let want = m.decode(std::slice::from_ref(&row), 2).unwrap();
@@ -313,7 +357,7 @@ mod tests {
         let m = MockModel::new(MockConfig::default());
         let h = m.encode(&[src_seq(), src_seq(), src_seq()]).unwrap();
         let rows: Vec<DecodeRow> = (0..3)
-            .map(|i| DecodeRow { mem: h, mem_row: i, tgt: vec![BOS], pos: 0 })
+            .map(|i| DecodeRow::full(h, i, vec![BOS], 0))
             .collect();
         let out = m.decode(&rows, 1).unwrap();
         assert_eq!(out.padded_rows, m.pad_rows(3));
@@ -326,7 +370,7 @@ mod tests {
         let h = m.encode(&[src_seq()]).unwrap();
         m.release(h);
         assert!(m
-            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .decode(&[DecodeRow::full(h, 0, vec![BOS], 0)], 1)
             .is_err());
     }
 }

@@ -18,10 +18,37 @@
 //! `python/compile/aot.py`): `encode` turns token rows into an opaque
 //! memory handle; `decode` runs the decoder on a set of rows, returning
 //! main + Medusa-head logits for a *window* of positions per row.
+//!
+//! ## Incremental decode protocol
+//!
+//! A [`DecodeRow`] carries `(state, delta, pos)`: a [`StateId`] naming
+//! cached decoder state the model owns (the processed prefix — a KV
+//! cache in a real runtime) plus only the *new* tokens past it, so
+//! decode cost is proportional to fresh positions per cycle instead of
+//! resending the whole prefix every call. Models opt in via
+//! [`StepModel::supports_incremental`]; engines fall back to
+//! full-prefix rows (`state = NONE`, delta = the whole BOS-led input)
+//! for models that cannot cache state — mirroring how
+//! `Decoder::start_task` defaults over `start_task_on`.
+//!
+//! **State-ownership rule (fork / commit / release):** states are
+//! ref-counted and content-addressed ([`state::StateStore`]). A decode
+//! task commits a state only for positions the call it just absorbed
+//! actually processed; every surviving beam holds exactly one claim on
+//! its anchor state (beam reordering = explicit forking — siblings of
+//! one parent share the committed state, each with its own claim);
+//! rejected draft positions are simply never committed and unadopted
+//! commits are released at the end of the cycle (rollback). A task's
+//! whole chain is released when it retires **or is cancelled**, never
+//! stranding a sibling fork — the same lifetime discipline as
+//! [`MemView`] encoder memory.
 
 pub mod mock;
 pub mod scratch;
 pub mod scripted;
+pub mod state;
+
+pub use state::{StateId, StateStore};
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -117,17 +144,37 @@ pub fn release_views(model: &dyn StepModel, views: Vec<MemView>) {
     }
 }
 
-/// One decoder row: a target prefix (optionally extended with a draft)
+/// One decoder row: cached state plus the delta tokens extending it,
 /// over one encoded source.
+///
+/// The model's decoder input for the row is `state's prefix ++ delta`.
+/// With `state == StateId::NONE` the delta is the full BOS-led input
+/// (prefix ++ draft) — the classic full-prefix row every model
+/// understands. With a real state the model processes only the delta
+/// positions (plus any window positions the clamp pulls into the
+/// cached region, which it may re-derive); `DecodeStats::decode_tokens`
+/// charges exactly the delta lengths.
 #[derive(Debug, Clone)]
 pub struct DecodeRow {
     pub mem: MemHandle,
     /// Row within the encoded batch.
     pub mem_row: usize,
-    /// BOS-led decoder input (prefix ++ draft), unpadded.
-    pub tgt: Vec<i32>,
+    /// Cached decoder state covering this row's tokens before `delta`
+    /// (`StateId::NONE`: no cached state).
+    pub state: StateId,
+    /// Decoder-input tokens past the cached state, unpadded.
+    pub delta: Vec<i32>,
     /// First position whose logits are needed (window start).
     pub pos: usize,
+}
+
+impl DecodeRow {
+    /// A full-prefix row (no cached state): `tgt` is the whole BOS-led
+    /// decoder input. The pre-incremental contract, still what engines
+    /// send to models without [`StepModel::supports_incremental`].
+    pub fn full(mem: MemHandle, mem_row: usize, tgt: Vec<i32>, pos: usize) -> DecodeRow {
+        DecodeRow { mem, mem_row, state: StateId::NONE, delta: tgt, pos }
+    }
 }
 
 /// Logits for a window of positions per row: `(rows, win, heads, vocab)`.
@@ -213,6 +260,39 @@ pub trait StepModel {
     }
     /// Drop an encoded batch.
     fn release(&self, mem: MemHandle);
+    /// Whether this model caches per-row decoder state ([`StateId`]),
+    /// enabling delta rows. Models that return `false` keep working:
+    /// engines send full-prefix rows instead (the reconstruction-free
+    /// path), exactly as before the incremental protocol existed.
+    fn supports_incremental(&self) -> bool {
+        false
+    }
+    /// Commit the decoder state for `parent's prefix ++ delta` on
+    /// encoder row `(mem, mem_row)` and return a ref-counted claim on
+    /// it. Callers may only commit positions a decode call has already
+    /// processed for that row (the model can then snapshot its cache
+    /// rather than recompute). Content-addressed: an identical prefix
+    /// returns the same id with its count bumped.
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        let _ = (mem, mem_row, parent, delta);
+        anyhow::bail!("model does not support incremental decode state")
+    }
+    /// Add a claim on a cached state (a surviving fork adopting an
+    /// anchor). No-op by default.
+    fn state_retain(&self, state: StateId) {
+        let _ = state;
+    }
+    /// Drop a claim on a cached state; the model frees it when the last
+    /// claim goes. No-op by default.
+    fn state_release(&self, state: StateId) {
+        let _ = state;
+    }
 }
 
 impl<T: StepModel + ?Sized> StepModel for Box<T> {
@@ -242,6 +322,24 @@ impl<T: StepModel + ?Sized> StepModel for Box<T> {
     }
     fn release(&self, mem: MemHandle) {
         (**self).release(mem)
+    }
+    fn supports_incremental(&self) -> bool {
+        (**self).supports_incremental()
+    }
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        (**self).state_commit(mem, mem_row, parent, delta)
+    }
+    fn state_retain(&self, state: StateId) {
+        (**self).state_retain(state)
+    }
+    fn state_release(&self, state: StateId) {
+        (**self).state_release(state)
     }
 }
 

@@ -24,7 +24,7 @@
 //! by the best branch. Medusa head `h` predicts position `p + h` along
 //! the same trie (no corruption, so speculative acceptance is high).
 
-use super::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use super::{DecodeOut, DecodeRow, MemHandle, StateId, StateStore, StepModel};
 use crate::tokenizer::{Vocab, EOS};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -51,6 +51,7 @@ pub struct ScriptedModel {
     max_tgt: usize,
     script: Script,
     store: Mutex<HashMap<u64, Vec<Scripted>>>,
+    states: StateStore,
     next_id: AtomicU64,
 }
 
@@ -63,6 +64,7 @@ impl ScriptedModel {
             max_tgt: 224,
             script,
             store: Mutex::new(HashMap::new()),
+            states: StateStore::new(),
             next_id: AtomicU64::new(1),
         }
     }
@@ -75,6 +77,11 @@ impl ScriptedModel {
     /// Encoded batches currently held (leak diagnostics).
     pub fn live_handles(&self) -> usize {
         self.store.lock().unwrap().len()
+    }
+
+    /// Cached decoder states currently held (leak diagnostics).
+    pub fn live_states(&self) -> usize {
+        self.states.live()
     }
 }
 
@@ -134,11 +141,22 @@ impl StepModel for ScriptedModel {
         out.heads = heads;
         out.vocab = vocab;
         out.padded_rows = self.pad_rows(rows.len());
+        let mut full = Vec::new();
         for (r, row) in rows.iter().enumerate() {
             let srcs = store
                 .get(&row.mem.0)
                 .ok_or_else(|| anyhow::anyhow!("unknown mem handle"))?;
             let entry = &srcs[row.mem_row];
+            // Incremental rows: reconstruct the full decoder input from
+            // the cached state (the full-prefix shim) — the trie
+            // conditioning below genuinely reads the target tokens, so
+            // this is where delta-row/full-row bit-identity is earned.
+            let tgt: &[i32] = if row.state.is_none() {
+                &row.delta
+            } else {
+                self.states.resolve_into(row.state, row.mem, row.mem_row, &row.delta, &mut full)?;
+                &full
+            };
             // emulate the dynamic_slice clamp against the padded length
             let start = row.pos.min(self.max_tgt - win);
             out.starts.push(start);
@@ -149,8 +167,8 @@ impl StepModel for ScriptedModel {
                 // tokens condition on everything available — the trie
                 // continuation fills in the rest, which is what Medusa
                 // look-ahead needs.
-                let ctx_len = p.min(row.tgt.len() - 1);
-                let ctx = &row.tgt[1..1 + ctx_len];
+                let ctx_len = p.min(tgt.len() - 1);
+                let ctx = &tgt[1..1 + ctx_len];
                 for h in 0..heads {
                     let q = p + h;
                     let base = ((r * win + j) * heads + h) * vocab;
@@ -179,6 +197,28 @@ impl StepModel for ScriptedModel {
 
     fn release(&self, mem: MemHandle) {
         self.store.lock().unwrap().remove(&mem.0);
+    }
+
+    fn supports_incremental(&self) -> bool {
+        true
+    }
+
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        self.states.commit(mem, mem_row, parent, delta)
+    }
+
+    fn state_retain(&self, state: StateId) {
+        self.states.retain(state)
+    }
+
+    fn state_release(&self, state: StateId) {
+        self.states.release(state)
     }
 }
 
@@ -295,6 +335,65 @@ mod tests {
             out[0].iter().any(|p| p.reactants == expect),
             "scripted oracle must reproduce the amide disconnection: {:?}",
             out[0]
+        );
+    }
+
+    #[test]
+    fn delta_rows_match_full_prefix_rows() {
+        use crate::model::{DecodeRow, StateId};
+        let (model, vocab) = model_for("CCOC(C)=O", &[("CC(=O)O.CCO", -0.3)]);
+        let src = vocab.encode("CCOC(C)=O", true);
+        let mem = model.encode(&[src]).unwrap();
+        // Target prefix [BOS, t0, t1]: full row vs state(BOS,t0) + delta [t1].
+        let t = vocab.encode("CC", false);
+        let full_tgt = {
+            let mut v = vec![crate::tokenizer::BOS];
+            v.extend_from_slice(&t[..2.min(t.len())]);
+            v
+        };
+        let full = model
+            .decode(&[DecodeRow::full(mem, 0, full_tgt.clone(), full_tgt.len() - 1)], 2)
+            .unwrap();
+        let state = model
+            .state_commit(mem, 0, StateId::NONE, &full_tgt[..full_tgt.len() - 1])
+            .unwrap();
+        let inc = model
+            .decode(
+                &[DecodeRow {
+                    mem,
+                    mem_row: 0,
+                    state,
+                    delta: vec![full_tgt[full_tgt.len() - 1]],
+                    pos: full_tgt.len() - 1,
+                }],
+                2,
+            )
+            .unwrap();
+        assert_eq!(inc.data, full.data, "delta row must be bit-identical to full row");
+        assert_eq!(inc.starts, full.starts);
+        model.state_release(state);
+        assert_eq!(model.live_states(), 0);
+        model.release(mem);
+    }
+
+    #[test]
+    fn engines_leave_no_states_behind() {
+        let (model, vocab) = model_for("CC(=O)NC", &[("CC(=O)O.CN", -0.5)]);
+        assert!(model.supports_incremental());
+        let dec = Msbs::default();
+        let mut st = DecodeStats::default();
+        let out =
+            dec.generate(&model, &[vocab.encode("CC(=O)NC", true)], 3, &mut st).unwrap();
+        assert!(out[0].hyps[0].finished());
+        assert_eq!(model.live_states(), 0, "a retired task must release its state chain");
+        assert_eq!(model.live_handles(), 0);
+        // MSBS incremental identity: draft rows carry 1 fresh position,
+        // verify rows carry exactly their draft (prefix-shared
+        // verification) — never the whole prefix again.
+        assert_eq!(
+            st.decode_tokens,
+            st.rows_logical / 2 + st.drafts_offered,
+            "incremental decode must process O(delta) tokens per row"
         );
     }
 

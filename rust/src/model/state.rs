@@ -1,0 +1,272 @@
+//! Content-addressed decoder-state store: the host-side bookkeeping
+//! behind the incremental decode protocol.
+//!
+//! A [`StateId`] names **cached decoder state** owned by a model: the
+//! result of having processed one decoded prefix of one encoded source
+//! row (in a real transformer runtime this is the per-row KV cache; the
+//! in-process models simulate it by storing the prefix tokens and
+//! reconstructing the full decoder input on demand). Rows carry a state
+//! plus only their *delta* tokens, so decode cost is proportional to
+//! new positions per cycle instead of O(prefix²) per sequence — the
+//! dominant inference cost identified for industrial SMILES-to-SMILES
+//! deployment (Andronov et al., arXiv:2407.09685).
+//!
+//! ## Lifecycle (fork / commit / release)
+//!
+//! * **Commit** ([`StateStore::commit`]) registers `parent ++ delta` as
+//!   a cached prefix and returns a ref-counted id. The store is
+//!   *content-addressed* — committing the same `(mem, row, prefix)`
+//!   twice returns the same id with its count bumped — so beam
+//!   reordering is explicit state **forking**: every surviving beam
+//!   that extends the same parent shares one committed state, each
+//!   holding its own claim.
+//! * **Retain** ([`StateStore::retain`]) adds a claim (a survivor beam
+//!   adopting an anchor another beam also uses).
+//! * **Release** ([`StateStore::release`]) drops a claim; the state is
+//!   freed when the last claim goes, which is the **rollback** path for
+//!   rejected speculation: draft positions past the accepted prefix are
+//!   simply never committed, and committed backbones nobody adopted are
+//!   released at the end of the cycle.
+//!
+//! Claims are owned by decode tasks (each beam holds exactly one claim
+//! on its anchor), so a task retiring or being cancelled releases its
+//! whole chain without stranding a sibling fork — the same ownership
+//! discipline as [`super::MemView`] encoder memory.
+
+use super::MemHandle;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Names cached decoder state owned by a model. `StateId::NONE` means
+/// "no cached state" (the row's delta is the full BOS-led input).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StateId(pub u64);
+
+impl StateId {
+    /// The empty state: no cached positions.
+    pub const NONE: StateId = StateId(0);
+
+    /// Whether this is the empty state.
+    pub fn is_none(self) -> bool {
+        self == StateId::NONE
+    }
+}
+
+struct Entry {
+    mem: u64,
+    row: usize,
+    tokens: Vec<i32>,
+    refs: usize,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// `(mem, row, prefix tokens)` -> id: the content address.
+    by_content: HashMap<(u64, usize, Vec<i32>), u64>,
+    entries: HashMap<u64, Entry>,
+    next: u64,
+}
+
+/// Thread-safe ref-counted store of cached decoder prefixes, embedded
+/// by models that support the incremental protocol (`MockModel`,
+/// `ScriptedModel`; a real KV-cache runtime would keep device-side
+/// state under the same ids).
+pub struct StateStore {
+    inner: Mutex<Inner>,
+}
+
+impl Default for StateStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Inner { next: 1, ..Default::default() }) }
+    }
+
+    /// Commit the prefix `parent ++ delta` of encoder row
+    /// `(mem, mem_row)` and return a claim on its state. Content-
+    /// addressed: an identical prefix returns the existing id with its
+    /// refcount bumped. Errors if `parent` is unknown (released or
+    /// never committed) or bound to a different encoder row.
+    pub fn commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        let mut g = self.inner.lock().unwrap();
+        let tokens = if parent.is_none() {
+            delta.to_vec()
+        } else {
+            let p = g
+                .entries
+                .get(&parent.0)
+                .ok_or_else(|| anyhow!("unknown parent state {parent:?}"))?;
+            ensure!(
+                p.mem == mem.0 && p.row == mem_row,
+                "parent state {parent:?} bound to a different encoder row"
+            );
+            let mut t = Vec::with_capacity(p.tokens.len() + delta.len());
+            t.extend_from_slice(&p.tokens);
+            t.extend_from_slice(delta);
+            t
+        };
+        let key = (mem.0, mem_row, tokens);
+        if let Some(&id) = g.by_content.get(&key) {
+            g.entries.get_mut(&id).expect("content-indexed entry").refs += 1;
+            return Ok(StateId(id));
+        }
+        let id = g.next;
+        g.next += 1;
+        g.entries.insert(id, Entry { mem: mem.0, row: mem_row, tokens: key.2.clone(), refs: 1 });
+        g.by_content.insert(key, id);
+        Ok(StateId(id))
+    }
+
+    /// Add a claim on `state` (no-op for `NONE`).
+    pub fn retain(&self, state: StateId) {
+        if state.is_none() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&state.0) {
+            e.refs += 1;
+        } else {
+            debug_assert!(false, "retain of unknown state {state:?}");
+        }
+    }
+
+    /// Drop a claim on `state`; the cached prefix is freed when the
+    /// last claim goes (no-op for `NONE`).
+    pub fn release(&self, state: StateId) {
+        if state.is_none() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.entries.get_mut(&state.0) else {
+            debug_assert!(false, "release of unknown state {state:?}");
+            return;
+        };
+        e.refs -= 1;
+        if e.refs == 0 {
+            let e = g.entries.remove(&state.0).expect("present above");
+            g.by_content.remove(&(e.mem, e.row, e.tokens));
+        }
+    }
+
+    /// Reconstruct a row's full decoder input (`state tokens ++ delta`)
+    /// into `out` — the full-prefix shim the in-process models use.
+    /// Verifies the state is live and bound to `(mem, mem_row)`, so a
+    /// use-after-release or a cross-row state reference fails loudly.
+    pub fn resolve_into(
+        &self,
+        state: StateId,
+        mem: MemHandle,
+        mem_row: usize,
+        delta: &[i32],
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        out.clear();
+        if !state.is_none() {
+            let g = self.inner.lock().unwrap();
+            let e = g
+                .entries
+                .get(&state.0)
+                .ok_or_else(|| anyhow!("unknown decode state {state:?}"))?;
+            ensure!(
+                e.mem == mem.0 && e.row == mem_row,
+                "decode state {state:?} bound to a different encoder row"
+            );
+            out.extend_from_slice(&e.tokens);
+        }
+        out.extend_from_slice(delta);
+        Ok(())
+    }
+
+    /// Cached states currently live (leak diagnostics: every claim a
+    /// task takes must be balanced by a release by the time it
+    /// retires or is cancelled).
+    pub fn live(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MEM: MemHandle = MemHandle(7);
+
+    #[test]
+    fn commit_is_content_addressed_and_refcounted() {
+        let s = StateStore::new();
+        let a = s.commit(MEM, 0, StateId::NONE, &[1, 5]).unwrap();
+        let b = s.commit(MEM, 0, StateId::NONE, &[1, 5]).unwrap();
+        assert_eq!(a, b, "same content, same id");
+        assert_eq!(s.live(), 1);
+        // A chain commit reaching the same content also dedups.
+        let root = s.commit(MEM, 0, StateId::NONE, &[1]).unwrap();
+        let c = s.commit(MEM, 0, root, &[5]).unwrap();
+        assert_eq!(c, a);
+        assert_eq!(s.live(), 2, "root + shared [1,5]");
+        // Three claims on `a`: release them all, then the root.
+        s.release(a);
+        s.release(b);
+        assert_eq!(s.live(), 2, "one claim left on [1,5]");
+        s.release(c);
+        assert_eq!(s.live(), 1);
+        s.release(root);
+        assert_eq!(s.live(), 0);
+    }
+
+    #[test]
+    fn retain_adds_a_claim() {
+        let s = StateStore::new();
+        let a = s.commit(MEM, 0, StateId::NONE, &[1]).unwrap();
+        s.retain(a);
+        s.release(a);
+        assert_eq!(s.live(), 1, "retained claim keeps the state alive");
+        s.release(a);
+        assert_eq!(s.live(), 0);
+    }
+
+    #[test]
+    fn resolve_reconstructs_and_validates() {
+        let s = StateStore::new();
+        let a = s.commit(MEM, 2, StateId::NONE, &[1, 5, 6]).unwrap();
+        let mut out = Vec::new();
+        s.resolve_into(a, MEM, 2, &[7, 8], &mut out).unwrap();
+        assert_eq!(out, vec![1, 5, 6, 7, 8]);
+        // NONE state: delta is the full input.
+        s.resolve_into(StateId::NONE, MEM, 2, &[1, 9], &mut out).unwrap();
+        assert_eq!(out, vec![1, 9]);
+        // Wrong row / released state fail loudly.
+        assert!(s.resolve_into(a, MEM, 0, &[], &mut out).is_err());
+        s.release(a);
+        assert!(s.resolve_into(a, MEM, 2, &[], &mut out).is_err());
+    }
+
+    #[test]
+    fn commit_rejects_foreign_or_dead_parents() {
+        let s = StateStore::new();
+        let a = s.commit(MEM, 0, StateId::NONE, &[1]).unwrap();
+        assert!(s.commit(MEM, 1, a, &[5]).is_err(), "parent bound to row 0");
+        s.release(a);
+        assert!(s.commit(MEM, 0, a, &[5]).is_err(), "parent released");
+    }
+
+    #[test]
+    fn states_key_on_encoder_row() {
+        let s = StateStore::new();
+        let a = s.commit(MEM, 0, StateId::NONE, &[1, 5]).unwrap();
+        let b = s.commit(MEM, 1, StateId::NONE, &[1, 5]).unwrap();
+        let c = s.commit(MemHandle(8), 0, StateId::NONE, &[1, 5]).unwrap();
+        assert_ne!(a, b, "same tokens, different row: distinct state");
+        assert_ne!(a, c, "same tokens, different batch: distinct state");
+    }
+}

@@ -220,10 +220,17 @@ impl PjrtModel {
     /// Execute one decode chunk of at most `max(dec_row_buckets)` rows.
     fn decode_chunk(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
         let cfg = &self.cfg;
+        // The PJRT artifacts take the full target row; this backend does
+        // not cache decoder state yet (`supports_incremental` stays
+        // false), so engines always send full-prefix rows here.
+        anyhow::ensure!(
+            rows.iter().all(|r| r.state.is_none()),
+            "incremental decode rows require a state-caching model"
+        );
         let w = Self::pick_bucket(&cfg.dec_win_buckets, win)?;
         let need_len = rows
             .iter()
-            .map(|r| r.tgt.len().max(r.pos + 1))
+            .map(|r| r.delta.len().max(r.pos + 1))
             .max()
             .unwrap_or(1)
             .max(w);
@@ -249,8 +256,8 @@ impl PjrtModel {
                 .copy_from_slice(&hm.mem[row.mem_row * ls * d..(row.mem_row + 1) * ls * d]);
             mask[i * ls..(i + 1) * ls]
                 .copy_from_slice(&hm.mask[row.mem_row * ls..(row.mem_row + 1) * ls]);
-            let n = row.tgt.len().min(l);
-            tgt[i * l..i * l + n].copy_from_slice(&row.tgt[..n]);
+            let n = row.delta.len().min(l);
+            tgt[i * l..i * l + n].copy_from_slice(&row.delta[..n]);
             pos[i] = row.pos.min(l - 1) as i32;
         }
         drop(mems);

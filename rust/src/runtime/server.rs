@@ -7,7 +7,7 @@
 //! batcher (see [`crate::coordinator`]) builds on this by merging
 //! expansion requests *before* they reach the executor.
 
-use crate::model::{DecodeOut, DecodeRow, MemHandle, StepModel};
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StateId, StepModel};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -20,6 +20,12 @@ enum Req {
     /// so buffer recycling survives the thread hop.
     DecodeInto(Vec<DecodeRow>, usize, Box<DecodeOut>, mpsc::SyncSender<Result<Box<DecodeOut>>>),
     Release(MemHandle),
+    /// Incremental decode-state ops: commit is a synchronous round trip
+    /// (the caller needs the id); retain/release are fire-and-forget
+    /// like `Release` — the channel keeps them ordered with decodes.
+    StateCommit(MemHandle, usize, StateId, Vec<i32>, mpsc::SyncSender<Result<StateId>>),
+    StateRetain(StateId),
+    StateRelease(StateId),
     Shutdown,
 }
 
@@ -36,6 +42,9 @@ struct Meta {
     medusa_heads: usize,
     max_src: usize,
     max_tgt: usize,
+    /// Whether the wrapped model caches decoder state (mirrored so the
+    /// capability check costs no round trip).
+    supports_incremental: bool,
     /// The wrapped model's row-bucketing rule, sampled at startup:
     /// `pad_table[n] == wrapped.pad_rows(n)` for `n <= PAD_TABLE_ROWS`.
     /// Shipping the rule in the startup meta keeps the scheduler's
@@ -90,6 +99,7 @@ impl SharedModel {
                             medusa_heads: m.medusa_heads(),
                             max_src: m.max_src(),
                             max_tgt: m.max_tgt(),
+                            supports_incremental: m.supports_incremental(),
                             pad_table: Arc::new(
                                 (0..=PAD_TABLE_ROWS).map(|n| m.pad_rows(n)).collect(),
                             ),
@@ -114,6 +124,11 @@ impl SharedModel {
                             let _ = reply.send(r);
                         }
                         Req::Release(h) => model.release(h),
+                        Req::StateCommit(mem, row, parent, delta, reply) => {
+                            let _ = reply.send(model.state_commit(mem, row, parent, &delta));
+                        }
+                        Req::StateRetain(s) => model.state_retain(s),
+                        Req::StateRelease(s) => model.state_release(s),
                         Req::Shutdown => break,
                     }
                 }
@@ -190,6 +205,32 @@ impl StepModel for SharedModel {
     fn release(&self, mem: MemHandle) {
         let _ = self.tx.send(Req::Release(mem));
     }
+
+    fn supports_incremental(&self) -> bool {
+        self.meta.supports_incremental
+    }
+
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req::StateCommit(mem, mem_row, parent, delta.to_vec(), tx))
+            .map_err(|_| anyhow!("model thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("model thread gone"))?
+    }
+
+    fn state_retain(&self, state: StateId) {
+        let _ = self.tx.send(Req::StateRetain(state));
+    }
+
+    fn state_release(&self, state: StateId) {
+        let _ = self.tx.send(Req::StateRelease(state));
+    }
 }
 
 #[cfg(test)]
@@ -204,12 +245,13 @@ mod tests {
             SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
         let h = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
         let out = shared
-            .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+            .decode(&[DecodeRow::full(h, 0, vec![BOS], 0)], 1)
             .unwrap();
         assert_eq!(out.rows, 1);
         shared.release(h);
         assert_eq!(shared.vocab(), 26);
         assert_eq!(shared.medusa_heads(), 6);
+        assert!(shared.supports_incremental(), "mock capability mirrored in Meta");
     }
 
     #[test]
@@ -217,7 +259,7 @@ mod tests {
         let shared =
             SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
         let h = shared.encode(&[vec![BOS, 5, 6, 7, EOS]]).unwrap();
-        let row = DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 };
+        let row = DecodeRow::full(h, 0, vec![BOS], 0);
         let want = shared.decode(std::slice::from_ref(&row), 2).unwrap();
         let mut out = DecodeOut::default();
         shared.decode_into(std::slice::from_ref(&row), 2, &mut out).unwrap();
@@ -236,7 +278,7 @@ mod tests {
             joins.push(std::thread::spawn(move || {
                 let h = m.encode(&[vec![BOS, 5 + t, 6, EOS]]).unwrap();
                 let out = m
-                    .decode(&[DecodeRow { mem: h, mem_row: 0, tgt: vec![BOS], pos: 0 }], 1)
+                    .decode(&[DecodeRow::full(h, 0, vec![BOS], 0)], 1)
                     .unwrap();
                 m.release(h);
                 out.rows
@@ -288,6 +330,35 @@ mod tests {
             SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
         assert_eq!(shared2.pad_rows(3), 4);
         assert_eq!(shared2.pad_rows(5), 8);
+    }
+
+    #[test]
+    fn state_ops_cross_the_executor_thread() {
+        use crate::model::StateId;
+        let shared =
+            SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
+        let h = shared.encode(&[vec![BOS, 5, 6, 7, EOS]]).unwrap();
+        let s = shared.state_commit(h, 0, StateId::NONE, &[BOS, 5]).unwrap();
+        // A delta row over the committed state decodes identically to
+        // the full row.
+        let full = shared.decode(&[DecodeRow::full(h, 0, vec![BOS, 5, 6], 2)], 1).unwrap();
+        let inc = shared
+            .decode(
+                &[DecodeRow { mem: h, mem_row: 0, state: s, delta: vec![6], pos: 2 }],
+                1,
+            )
+            .unwrap();
+        assert_eq!(inc.data, full.data);
+        shared.state_retain(s);
+        shared.state_release(s);
+        shared.state_release(s);
+        // Order after the fire-and-forget releases with a round trip,
+        // then prove the state is gone: decoding over it must error.
+        let _ = shared.encode(&[vec![BOS, 5, EOS]]).unwrap();
+        assert!(shared
+            .decode(&[DecodeRow { mem: h, mem_row: 0, state: s, delta: vec![6], pos: 2 }], 1)
+            .is_err());
+        shared.release(h);
     }
 
     #[test]

@@ -65,6 +65,13 @@ pub struct SpecStats {
     pub spec_hits: u64,
     /// High-water mark of groups simultaneously in flight.
     pub max_in_flight: u64,
+    /// Target in-flight depth over the solve, recorded at the start and
+    /// on every change (capped at 256 entries so a thrashing controller
+    /// cannot grow responses without bound; adaptation continues past
+    /// the cap). Fixed `spec_depth` yields a single entry; the adaptive
+    /// controller (`spec_depth = "auto"`) walks it up on speculative
+    /// hits and down on cancellations, bounded by the configured max.
+    pub depth_trajectory: Vec<u64>,
 }
 
 /// Outcome of one planning query.

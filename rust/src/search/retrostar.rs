@@ -42,6 +42,12 @@ use std::collections::{HashMap, HashSet, VecDeque};
 const INF: f64 = f64::INFINITY;
 /// Floor on reaction cost so zero-cost cycles cannot form.
 const MIN_COST: f64 = 1e-3;
+/// Most depth changes recorded in [`SpecStats::depth_trajectory`]; a
+/// thrashing adaptive controller on a 35k-iteration solve would
+/// otherwise grow the trajectory (and every plan response carrying it)
+/// without bound. The controller keeps adapting past the cap — only
+/// the recording stops.
+const DEPTH_TRAJECTORY_CAP: usize = 256;
 
 /// Retro\* planner.
 #[derive(Clone, Debug)]
@@ -49,22 +55,29 @@ pub struct RetroStar {
     /// Molecules expanded per algorithm iteration (Table 4 "Bw").
     pub beam_width: usize,
     /// Expansion groups kept in flight by the pipelined loop (1 =
-    /// sequential; > 1 enables speculative selection).
+    /// sequential; > 1 enables speculative selection). With
+    /// `spec_adaptive` this is the controller's *max* depth.
     pub spec_depth: usize,
+    /// Adapt the in-flight depth to the observed speculation
+    /// apply-rate instead of pinning it: start shallow (2), go one
+    /// deeper on every speculative hit, one shallower on every
+    /// cancellation, clamped to `[1, spec_depth]`. The trajectory is
+    /// reported in [`SpecStats::depth_trajectory`].
+    pub spec_adaptive: bool,
 }
 
 impl Default for RetroStar {
     fn default() -> Self {
-        Self { beam_width: 1, spec_depth: 1 }
+        Self { beam_width: 1, spec_depth: 1, spec_adaptive: false }
     }
 }
 
 impl RetroStar {
     pub fn new(beam_width: usize) -> Self {
-        Self { beam_width: beam_width.max(1), spec_depth: 1 }
+        Self { beam_width: beam_width.max(1), spec_depth: 1, spec_adaptive: false }
     }
 
-    /// Set the pipelined loop's in-flight depth.
+    /// Set the pipelined loop's in-flight depth (fixed).
     ///
     /// Depths > 1 only pay off over a *genuinely asynchronous* policy
     /// (the coordinator's hub): expansions overlap in the fused
@@ -75,6 +88,18 @@ impl RetroStar {
     /// overlap; keep `spec_depth = 1` there.
     pub fn with_spec_depth(mut self, spec_depth: usize) -> Self {
         self.spec_depth = spec_depth.max(1);
+        self.spec_adaptive = false;
+        self
+    }
+
+    /// Adaptive speculation depth (`planner.spec_depth = "auto"`): the
+    /// in-flight depth follows the observed apply-rate up to `max`.
+    /// Wasted speculation (cancellations) walks it back toward the
+    /// sequential depth, so a workload whose graph updates keep
+    /// invalidating the window stops paying for deep speculation.
+    pub fn with_adaptive_spec_depth(mut self, max: usize) -> Self {
+        self.spec_depth = max.max(1);
+        self.spec_adaptive = true;
         self
     }
 }
@@ -444,7 +469,10 @@ impl RetroStar {
         stock: &Stock,
         limits: &SearchLimits,
     ) -> Result<SolveResult> {
-        let spec_depth = self.spec_depth.max(1);
+        let depth_cap = self.spec_depth.max(1);
+        // Adaptive mode starts shallow: speculation must earn its depth
+        // (a hit deepens by one, a cancellation backs off by one).
+        let mut cur_depth = if self.spec_adaptive { depth_cap.min(2) } else { depth_cap };
         let t0 = std::time::Instant::now();
         let target = crate::chem::canonicalize(target)
             .map_err(|e| anyhow::anyhow!("target does not parse: {e}"))?;
@@ -453,6 +481,7 @@ impl RetroStar {
         let mut iterations = 0usize;
         let mut expansions = 0usize;
         let mut spec = SpecStats::default();
+        spec.depth_trajectory.push(cur_depth as u64);
         let mut inflight: VecDeque<Pending> = VecDeque::new();
 
         if g.mols[0].in_stock {
@@ -487,7 +516,7 @@ impl RetroStar {
             let window: HashSet<usize> = ranked
                 .iter()
                 .copied()
-                .take(spec_depth * self.beam_width)
+                .take(cur_depth * self.beam_width)
                 .collect();
             let mut kept: VecDeque<Pending> = VecDeque::with_capacity(inflight.len());
             for p in inflight.drain(..) {
@@ -498,6 +527,13 @@ impl RetroStar {
                 } else {
                     spec.groups_cancelled += 1;
                     p.cancel();
+                    // Wasted speculation: back the target depth off.
+                    if self.spec_adaptive && cur_depth > 1 {
+                        cur_depth -= 1;
+                        if spec.depth_trajectory.len() < DEPTH_TRAJECTORY_CAP {
+                            spec.depth_trajectory.push(cur_depth as u64);
+                        }
+                    }
                 }
             }
             inflight = kept;
@@ -509,7 +545,7 @@ impl RetroStar {
             let busy: HashSet<usize> =
                 inflight.iter().flat_map(|p| p.mols.iter().copied()).collect();
             let mut avail = ranked.iter().copied().filter(|m| !busy.contains(m));
-            while inflight.len() < spec_depth {
+            while inflight.len() < cur_depth {
                 let group: Vec<usize> = avail.by_ref().take(self.beam_width).collect();
                 if group.is_empty() {
                     break;
@@ -602,6 +638,13 @@ impl RetroStar {
             spec.groups_applied += 1;
             if done.speculative {
                 spec.spec_hits += 1;
+                // Speculation paid off: allow one more group in flight.
+                if self.spec_adaptive && cur_depth < depth_cap {
+                    cur_depth += 1;
+                    if spec.depth_trajectory.len() < DEPTH_TRAJECTORY_CAP {
+                        spec.depth_trajectory.push(cur_depth as u64);
+                    }
+                }
             }
             for (slot, props) in done.mols.iter().zip(results.into_iter()) {
                 g.apply_expansion(*slot, props, stock);
@@ -658,6 +701,7 @@ impl DecodeDelta {
             encode_calls: after.encode_calls - before.encode_calls,
             rows_logical: after.rows_logical - before.rows_logical,
             rows_padded: after.rows_padded - before.rows_padded,
+            decode_tokens: after.decode_tokens - before.decode_tokens,
             drafts_offered: after.drafts_offered - before.drafts_offered,
             drafts_accepted: after.drafts_accepted - before.drafts_accepted,
             wall_secs: after.wall_secs - before.wall_secs,
@@ -808,6 +852,42 @@ mod tests {
             .unwrap();
         assert!(r.solved);
         assert_eq!(r.iterations, 0);
+    }
+
+    #[test]
+    fn adaptive_depth_stays_bounded_and_solves() {
+        let stock = stock_of(&["CC(=O)O", "NCC(=O)O", "CCO"]);
+        let r = RetroStar::new(1)
+            .with_adaptive_spec_depth(4)
+            .solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        assert!(r.solved, "{r:?}");
+        let traj = &r.spec.depth_trajectory;
+        assert!(!traj.is_empty(), "trajectory must record the starting depth");
+        assert_eq!(traj[0], 2, "adaptive mode starts shallow");
+        assert!(traj.iter().all(|&d| (1..=4).contains(&d)), "depth within [1, max]: {traj:?}");
+        for w in traj.windows(2) {
+            assert_eq!(w[0].abs_diff(w[1]), 1, "depth moves one step at a time: {traj:?}");
+        }
+    }
+
+    #[test]
+    fn adaptive_depth_max_one_matches_sequential() {
+        let stock = stock_of(&["CC(=O)O", "NCC(=O)O", "CCO"]);
+        let seq = RetroStar::new(1)
+            .solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        let pol = OraclePolicy::new();
+        let auto1 = RetroStar::new(1)
+            .with_adaptive_spec_depth(1)
+            .solve_pipelined("CC(=O)NCC(=O)OCC", &EagerAsync(&pol), &stock, &limits())
+            .unwrap();
+        assert_eq!(seq.solved, auto1.solved);
+        assert_eq!(seq.route, auto1.route);
+        assert_eq!(seq.iterations, auto1.iterations);
+        assert_eq!(seq.expansions, auto1.expansions);
+        assert_eq!(auto1.spec.depth_trajectory, vec![1], "max 1 never deepens");
+        assert_eq!(auto1.spec.spec_hits, 0);
     }
 
     #[test]

@@ -117,7 +117,7 @@ fn arena_compaction_bounds_node_growth() {
             TaskState::Need { win } => {
                 cycles += 1;
                 let out = model.decode(&rows.rows, win).unwrap();
-                task.absorb(&out, 0..rows.rows.len());
+                task.absorb(&model, &out, 0..rows.rows.len());
                 peak = peak.max(task.arena_nodes());
             }
         }

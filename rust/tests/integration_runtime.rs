@@ -53,15 +53,17 @@ fn selftest_numerics_match_jax() {
     let lt = tgt_raw.len() / rows_n;
     let pos = pos_lit.to_vec::<i32>().unwrap();
     let rows: Vec<DecodeRow> = (0..rows_n)
-        .map(|i| DecodeRow {
-            mem,
-            mem_row: i,
-            tgt: tgt_raw[i * lt..(i + 1) * lt]
-                .iter()
-                .copied()
-                .take_while(|&t| t != 0)
-                .collect(),
-            pos: pos[i] as usize,
+        .map(|i| {
+            DecodeRow::full(
+                mem,
+                i,
+                tgt_raw[i * lt..(i + 1) * lt]
+                    .iter()
+                    .copied()
+                    .take_while(|&t| t != 0)
+                    .collect(),
+                pos[i] as usize,
+            )
         })
         .collect();
     // fixture was generated with window 8
@@ -102,7 +104,7 @@ fn greedy_decode_mostly_produces_valid_chemistry() {
         for _ in 0..model.max_tgt() - 1 {
             let out = model
                 .decode(
-                    &[DecodeRow { mem, mem_row: 0, tgt: prefix.clone(), pos: prefix.len() - 1 }],
+                    &[DecodeRow::full(mem, 0, prefix.clone(), prefix.len() - 1)],
                     1,
                 )
                 .unwrap();
@@ -137,7 +139,7 @@ fn medusa_heads_expose_window() {
     let src = vocab.encode("CC(=O)NC", true);
     let mem = model.encode(&[src]).unwrap();
     let out = model
-        .decode(&[DecodeRow { mem, mem_row: 0, tgt: vec![BOS], pos: 0 }], 8)
+        .decode(&[DecodeRow::full(mem, 0, vec![BOS], 0)], 8)
         .unwrap();
     assert_eq!(out.heads, model.medusa_heads() + 1);
     assert_eq!(out.vocab, model.vocab());
@@ -156,7 +158,7 @@ fn bucket_padding_does_not_change_results() {
     // encode alone vs inside a batch: same memory -> same logits
     let mem_a = model.encode(&[s1.clone()]).unwrap();
     let mem_b = model.encode(&[s2, s1.clone(), s3]).unwrap();
-    let row = |mem, mem_row| DecodeRow { mem, mem_row, tgt: vec![BOS], pos: 0 };
+    let row = |mem, mem_row| DecodeRow::full(mem, mem_row, vec![BOS], 0);
     let out_a = model.decode(&[row(mem_a, 0)], 1).unwrap();
     let out_b = model.decode(&[row(mem_b, 1)], 1).unwrap();
     let la = out_a.logits(0, 0, 0);

@@ -48,6 +48,8 @@ fn ctx() -> ServerCtx {
         default_algo: "retrostar".into(),
         default_beam_width: 1,
         default_spec_depth: 1,
+        default_spec_adaptive: false,
+        default_spec_max: 8,
     }
 }
 

@@ -115,23 +115,23 @@ mod reference {
                     }
                     let live_row = !b.finished;
                     if !optimized || live_row {
-                        rows.push(DecodeRow {
+                        rows.push(DecodeRow::full(
                             mem,
-                            mem_row: q,
-                            tgt: b.tokens.clone(),
-                            pos: b.tokens.len() - 1,
-                        });
+                            q,
+                            b.tokens.clone(),
+                            b.tokens.len() - 1,
+                        ));
                         row_of.push((q, bi));
                     }
                 }
                 if !optimized && qbeams.len() == 1 && !qbeams[0].finished {
                     for _ in 1..k {
-                        rows.push(DecodeRow {
+                        rows.push(DecodeRow::full(
                             mem,
-                            mem_row: q,
-                            tgt: qbeams[0].tokens.clone(),
-                            pos: qbeams[0].tokens.len() - 1,
-                        });
+                            q,
+                            qbeams[0].tokens.clone(),
+                            qbeams[0].tokens.len() - 1,
+                        ));
                         row_of.push((q, usize::MAX));
                     }
                 }
@@ -216,12 +216,12 @@ mod reference {
                 }
                 for (bi, b) in qbeams.iter().enumerate() {
                     if !b.finished {
-                        rows.push(DecodeRow {
+                        rows.push(DecodeRow::full(
                             mem,
-                            mem_row: q,
-                            tgt: b.tokens.clone(),
-                            pos: b.tokens.len() - 1,
-                        });
+                            q,
+                            b.tokens.clone(),
+                            b.tokens.len() - 1,
+                        ));
                         row_of.push((q, bi));
                     }
                 }
@@ -252,7 +252,7 @@ mod reference {
                 let b = &beams[q][bi];
                 let mut tgt = b.tokens.clone();
                 tgt.extend_from_slice(&drafts[r]);
-                vrows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+                vrows.push(DecodeRow::full(mem, q, tgt, b.tokens.len() - 1));
             }
             let vout = model.decode(&vrows, win).unwrap();
             stats.model_calls += 1;
@@ -408,7 +408,7 @@ mod reference {
                     for d in drafts {
                         let mut tgt = b.tokens.clone();
                         tgt.extend_from_slice(&d);
-                        rows.push(DecodeRow { mem, mem_row: q, tgt, pos: b.tokens.len() - 1 });
+                        rows.push(DecodeRow::full(mem, q, tgt, b.tokens.len() - 1));
                         row_meta.push((q, bi, d));
                     }
                 }
@@ -701,6 +701,10 @@ fn assert_finished_matches(
         }
     }
     assert_stats_match(label, got_stats, &want.1);
+    assert_eq!(
+        got_stats.decode_tokens, want.1.decode_tokens,
+        "{label}: decode_tokens (fused must charge the solo number)"
+    );
 }
 
 fn run_scheduler_parity(max_rows: usize, stagger: bool) {
@@ -785,4 +789,201 @@ fn hsbs_matches_seed_reference() {
             assert_stats_match(&label, &stats, &ref_stats);
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Incremental decode protocol parity: delta rows over cached decoder
+// state must be bit-identical to the full-prefix path — same
+// hypotheses, logp @1e-9, and every DecodeStats field except
+// `decode_tokens`, which is the point: it drops from O(prefix) per row
+// to O(delta).
+// ---------------------------------------------------------------------
+
+use retroserve::benchkit::InstrumentedModel;
+use retroserve::model::StepModel;
+
+#[test]
+fn incremental_matches_full_prefix_for_all_engines() {
+    let mut saw_accepted = false;
+    let mut saw_rejected = false;
+    for (si, sc) in scenarios().iter().enumerate() {
+        let mut rng = Rng::new(sc.seed ^ 0x1234);
+        let srcs = random_srcs(&mut rng, sc.n_srcs, sc.max_body, sc.cfg.vocab);
+        for dec in engines() {
+            let label = format!("scenario {si} {} incremental", dec.name());
+            // Full-prefix reference: same mock, capability forced off.
+            let full_model = InstrumentedModel::new(MockModel::new(sc.cfg.clone()))
+                .with_incremental(false);
+            assert!(!full_model.supports_incremental());
+            let mut full_st = DecodeStats::default();
+            let want = dec.generate(&full_model, &srcs, sc.k, &mut full_st).unwrap();
+            // Incremental run (the mock's default capability).
+            let inc_model = MockModel::new(sc.cfg.clone());
+            assert!(inc_model.supports_incremental());
+            let mut inc_st = DecodeStats::default();
+            let got = dec.generate(&inc_model, &srcs, sc.k, &mut inc_st).unwrap();
+            assert_eq!(got.len(), want.len(), "{label}: query count");
+            for (q, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(g.hyps.len(), w.hyps.len(), "{label} q{q}: hyp count");
+                for (i, (gh, wh)) in g.hyps.iter().zip(w.hyps.iter()).enumerate() {
+                    assert_eq!(gh.tokens, wh.tokens, "{label} q{q} hyp{i}: tokens");
+                    assert!(
+                        (gh.logp - wh.logp).abs() < 1e-9,
+                        "{label} q{q} hyp{i}: logp {} vs {}",
+                        gh.logp,
+                        wh.logp
+                    );
+                }
+            }
+            assert_stats_match(&label, &inc_st, &full_st);
+            // The win: positions processed stop scaling with prefix
+            // length.
+            assert!(
+                inc_st.decode_tokens <= full_st.decode_tokens,
+                "{label}: incremental {} !<= full {}",
+                inc_st.decode_tokens,
+                full_st.decode_tokens
+            );
+            match dec.name() {
+                "beam-search" | "beam-search-optimized" => {
+                    assert_eq!(
+                        inc_st.decode_tokens, inc_st.rows_logical,
+                        "{label}: beam rows carry exactly one fresh position"
+                    );
+                }
+                "msbs" => {
+                    // Draft rows carry 1 fresh position each; verify
+                    // rows carry exactly their draft (prefix-shared
+                    // verification). Draft and verify phases stage the
+                    // same row set, so draft rows = rows_logical / 2.
+                    assert_eq!(
+                        inc_st.decode_tokens,
+                        inc_st.rows_logical / 2 + inc_st.drafts_offered,
+                        "{label}: verify cycles must process only draft_len new positions"
+                    );
+                    if inc_st.drafts_accepted > 0 {
+                        saw_accepted = true;
+                    }
+                    if inc_st.drafts_accepted < inc_st.drafts_offered {
+                        saw_rejected = true;
+                    }
+                }
+                _ => {}
+            }
+            if full_st.model_calls > 2 {
+                assert!(
+                    inc_st.decode_tokens < full_st.decode_tokens,
+                    "{label}: a multi-cycle decode must save tokens ({} vs {})",
+                    inc_st.decode_tokens,
+                    full_st.decode_tokens
+                );
+            }
+            assert_eq!(
+                inc_model.live_states(),
+                0,
+                "{label}: retired tasks must release every cached state"
+            );
+            assert_eq!(inc_model.live_handles(), 0, "{label}: encoder memory released");
+        }
+    }
+    // The scenario set must exercise both MSBS verify outcomes.
+    assert!(saw_accepted, "no scenario accepted a draft (accept path untested)");
+    assert!(saw_rejected, "no scenario rejected a draft (reject/rollback path untested)");
+}
+
+#[test]
+fn incremental_scheduler_fused_matches_full_prefix_solo() {
+    // Scheduler-fused incremental decoding (staggered joins, mixed
+    // delta rows in one call) against solo FULL-PREFIX generate: the
+    // strongest cross-path pin — everything identical except
+    // decode_tokens.
+    for cfg in [
+        MockConfig::default(),
+        MockConfig { head_base_acc: 55, head_acc_decay: 5, ..Default::default() },
+    ] {
+        for dec in engines() {
+            let mut rng = Rng::new(0xD0D0);
+            let groups = task_groups(&mut rng, cfg.vocab);
+            // Solo full-prefix reference, sequential on one model (same
+            // encode-id order as the scheduler run).
+            let full_model =
+                InstrumentedModel::new(MockModel::new(cfg.clone())).with_incremental(false);
+            let solo: Vec<(Vec<GenOutput>, DecodeStats)> = groups
+                .iter()
+                .map(|(srcs, k)| {
+                    let mut st = DecodeStats::default();
+                    let out = dec.generate(&full_model, srcs, *k, &mut st).unwrap();
+                    (out, st)
+                })
+                .collect();
+
+            let model = MockModel::new(cfg.clone());
+            let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4096 });
+            let mut finished = Vec::new();
+            let mut ids = Vec::new();
+            for (gi, (srcs, k)) in groups.iter().enumerate() {
+                ids.push(sched.submit(dec.start_task(&model, srcs, *k).unwrap()));
+                if gi + 1 < groups.len() {
+                    for _ in 0..=gi {
+                        sched.tick(&model, &mut finished).unwrap();
+                    }
+                }
+            }
+            sched.run_to_idle(&model, &mut finished).unwrap();
+            for (gi, id) in ids.iter().enumerate() {
+                let f = finished.iter().find(|f| f.id == *id).unwrap();
+                let label = format!("{} inc-fused-vs-full-solo task{gi}", dec.name());
+                let (want_out, want_st) = &solo[gi];
+                for (a, b) in f.outputs.iter().zip(want_out.iter()) {
+                    for (x, y) in a.hyps.iter().zip(b.hyps.iter()) {
+                        assert_eq!(x.tokens, y.tokens, "{label}: tokens");
+                        assert!((x.logp - y.logp).abs() < 1e-9, "{label}: logp");
+                    }
+                }
+                assert_stats_match(&label, &f.stats, want_st);
+                assert!(
+                    f.stats.decode_tokens <= want_st.decode_tokens,
+                    "{label}: fused incremental must not process more positions"
+                );
+            }
+            assert_eq!(model.live_states(), 0, "{}: no leaked states", dec.name());
+            assert_eq!(model.live_handles(), 0);
+        }
+    }
+}
+
+#[test]
+fn cancelled_task_releases_every_cached_state() {
+    use std::sync::atomic::{AtomicIsize, Ordering};
+    use std::sync::Arc;
+    let claims = Arc::new(AtomicIsize::new(0));
+    let model = InstrumentedModel::new(MockModel::new(MockConfig::default()))
+        .with_state_counter(claims.clone());
+    let dec = Msbs::default();
+    let mut rng = Rng::new(0xCAFE);
+    let groups = task_groups(&mut rng, MockConfig::default().vocab);
+    let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4096 });
+    let mut finished = Vec::new();
+    let mut ids = Vec::new();
+    for (srcs, k) in &groups {
+        ids.push(sched.submit(dec.start_task(&model, srcs, *k).unwrap()));
+    }
+    // One tick: every MSBS task absorbed its draft phase and now holds
+    // per-row prefix states for the verify phase — the exact moment a
+    // cancellation must not leak them.
+    sched.tick(&model, &mut finished).unwrap();
+    assert!(
+        claims.load(Ordering::SeqCst) > 0,
+        "mid-cycle tasks must hold state claims"
+    );
+    assert!(sched.cancel(&model, ids[0]), "cancel mid-phase");
+    sched.run_to_idle(&model, &mut finished).unwrap();
+    assert_eq!(finished.len(), groups.len() - 1, "cancelled task never retires");
+    assert_eq!(
+        claims.load(Ordering::SeqCst),
+        0,
+        "every state claim must be released after cancel + retirement"
+    );
+    assert_eq!(model.inner().live_states(), 0, "no cached states leaked");
+    assert_eq!(model.inner().live_handles(), 0, "no encoder memory leaked");
 }

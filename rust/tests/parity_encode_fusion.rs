@@ -155,6 +155,11 @@ fn assert_parity(
             f_st.drafts_accepted, s_st.drafts_accepted,
             "{label} task{t}: drafts_accepted"
         );
+        assert_eq!(
+            f_st.decode_tokens, s_st.decode_tokens,
+            "{label} task{t}: decode_tokens (fused-encode admission must not change \
+             the incremental charge)"
+        );
     }
 }
 
@@ -314,12 +319,7 @@ fn shared_model_view_release_crosses_the_executor_thread() {
     // batch the sibling still uses.
     let out = shared
         .decode(
-            &[retroserve::model::DecodeRow {
-                mem: second.mem(),
-                mem_row: keep_row,
-                tgt: vec![BOS],
-                pos: 0,
-            }],
+            &[retroserve::model::DecodeRow::full(second.mem(), keep_row, vec![BOS], 0)],
             1,
         )
         .unwrap();
@@ -337,4 +337,71 @@ fn shared_model_view_release_crosses_the_executor_thread() {
         1,
         "the shared batch is gone; only the fresh probe encode remains"
     );
+}
+
+#[test]
+fn shared_model_incremental_decoding_matches_in_process_and_leaks_nothing() {
+    use std::sync::atomic::{AtomicIsize, Ordering};
+    use std::sync::Arc;
+    // In-process incremental reference.
+    let cfg = pure_cfg();
+    let mut rng = Rng::new(0x51AE);
+    let srcs: Vec<Vec<i32>> = (0..2).map(|_| random_src(&mut rng, 14, cfg.vocab)).collect();
+    let dec = Msbs::default();
+    let ref_model = MockModel::new(cfg.clone());
+    let mut ref_st = DecodeStats::default();
+    let want = dec.generate(&ref_model, &srcs, 3, &mut ref_st).unwrap();
+    // Same decode through a SharedModel: every state commit/retain/
+    // release crosses the executor thread.
+    let claims = Arc::new(AtomicIsize::new(0));
+    let claims_thread = claims.clone();
+    let cfg2 = cfg.clone();
+    let shared = SharedModel::spawn(move || {
+        Ok(InstrumentedModel::new(MockModel::new(cfg2)).with_state_counter(claims_thread))
+    })
+    .unwrap();
+    assert!(shared.supports_incremental(), "capability must cross the thread hop");
+    let mut st = DecodeStats::default();
+    let got = dec.generate(&shared, &srcs, 3, &mut st).unwrap();
+    for (g, w) in got.iter().zip(want.iter()) {
+        for (gh, wh) in g.hyps.iter().zip(w.hyps.iter()) {
+            assert_eq!(gh.tokens, wh.tokens, "tokens across the executor thread");
+            assert!((gh.logp - wh.logp).abs() < 1e-9);
+        }
+    }
+    assert_eq!(st.decode_tokens, ref_st.decode_tokens, "same incremental charge");
+    assert_eq!(st.model_calls, ref_st.model_calls);
+    // The releases are fire-and-forget; a synchronous round trip orders
+    // us after them before reading the claim counter.
+    let _ = shared.encode(&[srcs[0].clone()]).unwrap();
+    assert_eq!(
+        claims.load(Ordering::SeqCst),
+        0,
+        "state claims must drain to zero across the executor thread"
+    );
+}
+
+#[test]
+fn fused_encode_rounds_share_states_per_row_not_per_batch() {
+    // Incremental decoding over a SHARED batch encode: states key on
+    // (mem, mem_row), so sibling tasks of one fused round never collide
+    // — and the round's states all drain when its members retire.
+    let cfg = pure_cfg();
+    let model = MockModel::new(cfg.clone());
+    let mut rng = Rng::new(0x5EED);
+    let srcs: Vec<Vec<i32>> = (0..3).map(|_| random_src(&mut rng, 12, cfg.vocab)).collect();
+    let dec = Msbs::default();
+    let views = encode_shared(&model, &srcs).unwrap();
+    let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4096 });
+    for (view, src) in views.into_iter().zip(srcs.iter()) {
+        let one = std::slice::from_ref(src);
+        sched.submit(dec.start_task_on(&model, vec![view], one, 3).unwrap());
+    }
+    let mut finished = Vec::new();
+    sched.tick(&model, &mut finished).unwrap();
+    assert!(model.live_states() > 0, "mid-flight round holds committed states");
+    sched.run_to_idle(&model, &mut finished).unwrap();
+    assert_eq!(finished.len(), 3);
+    assert_eq!(model.live_states(), 0, "retired round drains every state");
+    assert_eq!(model.live_handles(), 0);
 }

@@ -66,6 +66,7 @@ fn assert_stats_eq(a: &DecodeStats, b: &DecodeStats, ctx: &str) {
     assert_eq!(a.encode_calls, b.encode_calls, "{ctx}: encode_calls");
     assert_eq!(a.rows_logical, b.rows_logical, "{ctx}: rows_logical");
     assert_eq!(a.rows_padded, b.rows_padded, "{ctx}: rows_padded");
+    assert_eq!(a.decode_tokens, b.decode_tokens, "{ctx}: decode_tokens");
     assert_eq!(a.drafts_offered, b.drafts_offered, "{ctx}: drafts_offered");
     assert_eq!(a.drafts_accepted, b.drafts_accepted, "{ctx}: drafts_accepted");
 }

@@ -16,6 +16,10 @@ any pair fails. Rules, per result name present in both files of a pair:
     --max-regress (relative) — same slack, opposite direction;
   * `model_calls` may not increase at all — it is deterministic, so any
     increase is an algorithmic regression, not noise;
+  * `decode_tokens` may not increase at all — decoder positions
+    processed are deterministic, and the incremental decode protocol
+    exists to keep them O(delta); any increase means rows started
+    resending prefix tokens again;
   * `encode_calls` may not increase more than --max-regress (relative)
     — fused-encode admission pays one encoder call per submission
     round; the slack absorbs timing-dependent round formation (a
@@ -85,6 +89,15 @@ def check_pair(base_path, fresh_path, max_regress, lines):
         if b_mc is not None and c_mc is not None and c_mc > b_mc:
             failures.append(
                 f"{tag}: model_calls increased {b_mc:.0f} -> {c_mc:.0f}")
+        b_dt, c_dt = base.get("decode_tokens"), cur.get("decode_tokens")
+        if b_dt is not None and c_dt is not None:
+            ok = c_dt <= b_dt
+            lines.append(f"{'ok  ' if ok else 'FAIL'} {tag} decode_tokens "
+                         f"{b_dt:.0f} -> {c_dt:.0f}")
+            if not ok:
+                failures.append(
+                    f"{tag}: decode_tokens increased {b_dt:.0f} -> {c_dt:.0f} "
+                    "(deterministic; incremental decode must not regress)")
         # encoder calls: fused-encode admission makes these one per
         # submission round, but round FORMATION depends on wall-clock
         # straggler windows, so runner jitter can legitimately split a
