@@ -8,6 +8,10 @@
 //! example prints the same story for a held-out molecule.
 //!
 //! `cargo run --release --example msbs_trace [-- --smiles S] [--k 2] [--mock]`
+//!
+//! `--mock` needs no artifacts: the copy-task mock model and a built-in
+//! molecule stand in for the trained transformer — CI's smoke path,
+//! which also asserts the Fig. 2 call-count relation.
 
 use anyhow::Result;
 use retroserve::benchkit::Flags;
@@ -24,20 +28,27 @@ fn main() -> Result<()> {
     let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
     let k = flags.usize_or("k", 2);
 
-    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
-    let model: Box<dyn StepModel> = if flags.has("mock") {
-        Box::new(MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() }))
-    } else {
-        Box::new(PjrtModel::load(&art)?)
-    };
+    let mock = flags.has("mock");
     let smiles = if flags.has("smiles") {
         flags.str_or("smiles", "")
+    } else if mock {
+        // Artifact-free default: long enough that per-token beam search
+        // pays visibly more model calls than MSBS's draft+verify cycles.
+        "CC(=O)NCC(=O)OCC.CC(=O)O.CN".to_string()
     } else {
         retroserve::benchkit::load_test_pairs(&art, 20)?
             .into_iter()
             .map(|p| p.product)
             .max_by_key(|s| s.len())
             .expect("test set not empty")
+    };
+    let (vocab, model): (Vocab, Box<dyn StepModel>) = if mock {
+        let vocab = Vocab::build([smiles.as_str()]);
+        let model = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+        (vocab, Box::new(model))
+    } else {
+        let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+        (vocab, Box::new(PjrtModel::load(&art)?))
     };
     println!("source molecule: {smiles}\n");
     let src = vec![vocab.encode(&smiles, true)];
@@ -85,5 +96,15 @@ fn main() -> Result<()> {
         bs_stats.model_calls as f64 / stats.model_calls.max(1) as f64,
         outputs[0].hyps[0].tokens == bs_out[0].hyps[0].tokens
     );
+    if mock {
+        anyhow::ensure!(
+            stats.model_calls <= bs_stats.model_calls,
+            "MSBS must not pay more model calls than beam search"
+        );
+        println!(
+            "EXAMPLE OK: msbs_trace ({} msbs vs {} bs calls)",
+            stats.model_calls, bs_stats.model_calls
+        );
+    }
     Ok(())
 }

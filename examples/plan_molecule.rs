@@ -2,31 +2,62 @@
 //! BS vs MSBS — the single-molecule version of Table 3.
 //!
 //! `cargo run --release --example plan_molecule [-- --smiles S]
-//! [--deadline-ms 15000] [--oracle]`
+//! [--deadline-ms 15000] [--oracle] [--mock]`
+//!
+//! `--mock` needs no artifacts: the SynthChem world provides the stock
+//! and target, and a scripted model replays the oracle retro templates
+//! through the real decoders — CI's smoke path.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use retroserve::benchkit::Flags;
 use retroserve::decoding::make_decoder;
+use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
 use retroserve::runtime::PjrtModel;
 use retroserve::search::policy::{ModelPolicy, OraclePolicy};
 use retroserve::search::{
     dfs::Dfs, retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock,
 };
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
 use retroserve::tokenizer::Vocab;
+use retroserve::util::Rng;
 
 fn main() -> Result<()> {
     let flags = Flags::parse();
+    let mock = flags.has("mock");
     let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
-    let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
-    let stock = Stock::load(art.join("stock.txt"))?;
-    let smiles = if flags.has("smiles") {
-        flags.str_or("smiles", "")
+    let (stock, smiles, vocab) = if mock {
+        // Artifact-free: generated stock + target, vocab wide enough
+        // for anything the oracle script emits.
+        let blocks = generate_blocks(7, 300);
+        let stock = Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+            retroserve::chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT)
+                .unwrap(),
+        ]));
+        let idx = BlockIndex::new(blocks);
+        let mut rng = Rng::new(21);
+        let t = (0..40)
+            .find_map(|_| gen_tree(&idx, &mut rng, 2, 26))
+            .expect("synthetic target");
+        let smiles = match flags.has("smiles") {
+            true => flags.str_or("smiles", ""),
+            false => t.product_smiles().to_string(),
+        };
+        let vocab = smiles_vocab([smiles.as_str()]);
+        (stock, smiles, vocab)
     } else {
-        retroserve::benchkit::load_queries(&art, 100)?
-            .into_iter()
-            .find(|q| q.solvable_hint && q.depth >= 2)
-            .map(|q| q.smiles)
-            .expect("a solvable query")
+        let vocab = Vocab::load(&art.join("vocab.json")).map_err(|e| anyhow::anyhow!(e))?;
+        let stock = Stock::load(art.join("stock.txt"))?;
+        let smiles = if flags.has("smiles") {
+            flags.str_or("smiles", "")
+        } else {
+            retroserve::benchkit::load_queries(&art, 100)?
+                .into_iter()
+                .find(|q| q.solvable_hint && q.depth >= 2)
+                .map(|q| q.smiles)
+                .expect("a solvable query")
+        };
+        (stock, smiles, vocab)
     };
     let limits = SearchLimits {
         deadline: std::time::Duration::from_millis(flags.usize_or("deadline-ms", 15000) as u64),
@@ -38,10 +69,14 @@ fn main() -> Result<()> {
         "planner", "decoder", "solved", "iters", "model calls", "wall s"
     );
 
+    let mut any_solved = false;
     for planner_name in ["dfs", "retrostar"] {
         for decoder_name in ["bs", "msbs"] {
             let policy: Box<dyn ExpansionPolicy> = if flags.has("oracle") {
                 Box::new(OraclePolicy::new())
+            } else if mock {
+                let model = ScriptedModel::new(vocab.clone(), oracle_script());
+                Box::new(ModelPolicy::new(model, make_decoder(decoder_name, 1)?, vocab.clone()))
             } else {
                 let model = PjrtModel::load(&art)?;
                 Box::new(ModelPolicy::new(model, make_decoder(decoder_name, 1)?, vocab.clone()))
@@ -51,6 +86,7 @@ fn main() -> Result<()> {
                 _ => Box::new(RetroStar::new(1)),
             };
             let r = planner.solve(&smiles, policy.as_ref(), &stock, &limits)?;
+            any_solved |= r.solved;
             println!(
                 "{:<12} {:<8} {:>8} {:>8} {:>12} {:>10.2}",
                 planner_name,
@@ -66,6 +102,10 @@ fn main() -> Result<()> {
                 }
             }
         }
+    }
+    if mock {
+        ensure!(any_solved, "scripted oracle world must solve the generated target");
+        println!("EXAMPLE OK: plan_molecule (solved via scripted oracle)");
     }
     Ok(())
 }

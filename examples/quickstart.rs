@@ -5,18 +5,30 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Optional flags: `--artifacts DIR`, `--smiles S`.
+//! Optional flags: `--artifacts DIR`, `--smiles S`, `--mock`.
+//!
+//! `--mock` needs no artifacts: it runs the identical flow over the
+//! in-memory scripted SynthChem world (the oracle retro templates
+//! spoken through a real neural decode path) — CI's smoke path.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use retroserve::benchkit::Flags;
 use retroserve::decoding::msbs::Msbs;
+use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
+use retroserve::model::StepModel;
 use retroserve::runtime::PjrtModel;
 use retroserve::search::policy::ModelPolicy;
-use retroserve::search::{retrostar::RetroStar, Planner, SearchLimits, Stock};
+use retroserve::search::{retrostar::RetroStar, ExpansionPolicy, Planner, SearchLimits, Stock};
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
 use retroserve::tokenizer::Vocab;
+use retroserve::util::Rng;
 
 fn main() -> Result<()> {
     let flags = Flags::parse();
+    if flags.has("mock") {
+        return mock_world(&flags);
+    }
     let art = std::path::PathBuf::from(flags.str_or("artifacts", "artifacts"));
 
     // 1. Load the AOT artifacts through the PJRT runtime (pure Rust —
@@ -43,12 +55,48 @@ fn main() -> Result<()> {
                 .unwrap_or_else(|| queries[0].smiles.clone())
         }
     };
+    run(model, vocab, stock, smiles, &flags)
+}
+
+/// The artifact-free world: a scripted model replaying the SynthChem
+/// oracle templates over a generated target, same flow as the real one.
+fn mock_world(flags: &Flags) -> Result<()> {
+    let blocks = generate_blocks(7, 300);
+    let stock = Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+        retroserve::chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT).unwrap(),
+    ]));
+    let idx = BlockIndex::new(blocks);
+    let mut rng = Rng::new(9);
+    let t = (0..40)
+        .find_map(|_| gen_tree(&idx, &mut rng, 2, 26))
+        .expect("synthetic target");
+    let smiles = match flags.has("smiles") {
+        true => flags.str_or("smiles", ""),
+        false => t.product_smiles().to_string(),
+    };
+    let vocab = smiles_vocab([smiles.as_str()]);
+    let model = ScriptedModel::new(vocab.clone(), oracle_script());
+    println!(
+        "loaded mock world: vocab={} medusa_heads={} | stock: {} building blocks",
+        vocab.len(),
+        model.medusa_heads(),
+        stock.len()
+    );
+    run(model, vocab, stock, smiles, flags)
+}
+
+fn run<M: StepModel>(
+    model: M,
+    vocab: Vocab,
+    stock: Stock,
+    smiles: String,
+    flags: &Flags,
+) -> Result<()> {
     println!("\ntarget molecule: {smiles}");
 
     // 3. Single-step expansion with MSBS (the paper's accelerated
     //    decoder): 10 candidate precursor sets in a couple of model
     //    calls per cycle instead of one per token.
-    use retroserve::search::ExpansionPolicy as _;
     let policy = ModelPolicy::new(model, Box::new(Msbs::default()), vocab);
     let t0 = std::time::Instant::now();
     let proposals = &policy.expand_batch(&[&smiles], 10)?[0];
@@ -69,11 +117,23 @@ fn main() -> Result<()> {
     };
     let result = RetroStar::new(1).solve(&smiles, &policy, &stock, &limits)?;
     println!(
-        "\nmulti-step: solved={} in {:.2}s ({} iterations, {} model calls)",
-        result.solved, result.wall_secs, result.iterations, result.decode_stats.model_calls
+        "\nmulti-step: solved={} stop={} in {:.2}s ({} iterations, {} model calls)",
+        result.solved,
+        result.stop_reason,
+        result.wall_secs,
+        result.iterations,
+        result.decode_stats.model_calls
     );
     if let Some(route) = result.route {
         println!("route:\n{}", route.render());
+    }
+    if flags.has("mock") {
+        ensure!(!proposals.is_empty(), "scripted world must propose precursors");
+        println!(
+            "EXAMPLE OK: quickstart (proposals={}, stop={})",
+            proposals.len(),
+            result.stop_reason
+        );
     }
     Ok(())
 }

@@ -11,6 +11,13 @@
 //! make artifacts && cargo run --release --example serve_e2e -- \
 //!     --n 24 --clients 4 --deadline-ms 3000
 //! ```
+//!
+//! `--mock` needs no artifacts: the SynthChem world plus a scripted
+//! oracle model stand in for the trained transformer, behind the same
+//! supervised executor / hub / TCP stack — CI's smoke path. In both
+//! modes the driver finishes with the anytime demonstration: a plan
+//! whose `deadline_ms` is already spent still answers, with
+//! `stop_reason = "deadline"`.
 
 use anyhow::Result;
 use retroserve::benchkit::Flags;
@@ -20,11 +27,15 @@ use retroserve::coordinator::server::{Client, Server, ServerCtx};
 use retroserve::decoding::make_decoder;
 use retroserve::jsonx::Json;
 use retroserve::metrics::Metrics;
-use retroserve::runtime::server::SharedModel;
+use retroserve::model::scripted::{oracle_script, smiles_vocab, ScriptedModel};
+use retroserve::runtime::server::{SharedModel, SupervisorConfig};
 use retroserve::runtime::PjrtModel;
 use retroserve::search::Stock;
+use retroserve::synthchem::blocks::generate_blocks;
+use retroserve::synthchem::gen::{gen_tree, BlockIndex};
 use retroserve::tokenizer::Vocab;
 use retroserve::util::stats::{mean, percentile};
+use retroserve::util::Rng;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
@@ -34,15 +45,54 @@ fn main() -> Result<()> {
     let clients = flags.usize_or("clients", 4);
     let deadline_ms = flags.usize_or("deadline-ms", 3000);
     let decoder = flags.str_or("decoder", "msbs");
+    let mock = flags.has("mock");
 
-    // --- boot the full stack ---
+    // --- boot the full stack (supervised executor in both modes: a
+    // model panic fails only its in-flight calls, then the factory
+    // rebuilds) ---
     let t_boot = std::time::Instant::now();
-    let vocab = Vocab::load(&std::path::Path::new(&art).join("vocab.json"))
-        .map_err(|e| anyhow::anyhow!(e))?;
-    let stock = Arc::new(Stock::load(std::path::Path::new(&art).join("stock.txt"))?);
+    let (vocab, stock, queries, model) = if mock {
+        let blocks = generate_blocks(7, 400);
+        let stock = Arc::new(Stock::from_iter(blocks.iter().map(|b| b.smiles()).chain([
+            retroserve::chem::canonicalize(retroserve::synthchem::templates::BOC_REAGENT)
+                .unwrap(),
+        ])));
+        let idx = BlockIndex::new(blocks);
+        let mut rng = Rng::new(33);
+        let mut queries = Vec::new();
+        let mut guard = 0;
+        while queries.len() < n && guard < n * 40 {
+            guard += 1;
+            let depth = 1 + rng.gen_range(2);
+            if let Some(t) = gen_tree(&idx, &mut rng, depth, 24) {
+                queries.push(t.product_smiles().to_string());
+            }
+        }
+        let vocab = smiles_vocab(queries.iter().map(String::as_str));
+        let v2 = vocab.clone();
+        let model = SharedModel::spawn_supervised(
+            move || Ok(ScriptedModel::new(v2.clone(), oracle_script())),
+            SupervisorConfig::default(),
+        )?;
+        (vocab, stock, queries, model)
+    } else {
+        let vocab = Vocab::load(&std::path::Path::new(&art).join("vocab.json"))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let stock = Arc::new(Stock::load(std::path::Path::new(&art).join("stock.txt"))?);
+        let queries: Vec<String> =
+            retroserve::benchkit::load_queries(std::path::Path::new(&art), n)?
+                .into_iter()
+                .map(|q| q.smiles)
+                .collect();
+        let art2 = art.clone();
+        let model = SharedModel::spawn_supervised(
+            move || PjrtModel::load(&art2),
+            SupervisorConfig::default(),
+        )?;
+        (vocab, stock, queries, model)
+    };
+    anyhow::ensure!(!queries.is_empty(), "no queries; run `make artifacts` (or pass --mock)");
     let metrics = Arc::new(Metrics::new());
-    let art2 = art.clone();
-    let model = SharedModel::spawn(move || PjrtModel::load(&art2))?;
     let hub = ExpansionHub::start(
         model,
         make_decoder(&decoder, 4)?,
@@ -79,14 +129,6 @@ fn main() -> Result<()> {
     );
 
     // --- drive it with concurrent clients over real TCP ---
-    let queries: Vec<String> = retroserve::benchkit::load_queries(
-        std::path::Path::new(&art),
-        n,
-    )?
-    .into_iter()
-    .map(|q| q.smiles)
-    .collect();
-    anyhow::ensure!(!queries.is_empty(), "no queries; run `make artifacts`");
     let t0 = std::time::Instant::now();
     let chunk = queries.len().div_ceil(clients);
     let mut joins = Vec::new();
@@ -147,6 +189,32 @@ fn main() -> Result<()> {
         stats.acceptance_rate() * 100.0,
         stats.avg_effective_batch()
     );
+
+    // --- anytime demonstration: a plan whose budget is already spent
+    // still answers within one scheduler tick — ok = true, stop_reason
+    // "deadline", partial statistics instead of a hang ---
+    let mut c = Client::connect(addr)?;
+    let resp = c.call(Json::obj(vec![
+        ("op", Json::str("plan")),
+        ("smiles", Json::str(queries[0].clone())),
+        ("deadline_ms", Json::num(0.0)),
+    ]))?;
+    let stop = resp
+        .get("stop_reason")
+        .and_then(|x| x.as_str())
+        .unwrap_or("<missing>")
+        .to_string();
+    anyhow::ensure!(
+        resp.get("ok").and_then(|x| x.as_bool()) == Some(true) && stop == "deadline",
+        "deadline_ms=0 must answer ok with stop_reason=deadline (got {stop})"
+    );
+    println!("anytime: deadline_ms=0 answered ok with stop_reason={stop}");
+    if mock {
+        println!(
+            "EXAMPLE OK: serve_e2e ({} queries, {solved} solved, anytime deadline verified)",
+            lat.len()
+        );
+    }
     server.shutdown();
     Ok(())
 }

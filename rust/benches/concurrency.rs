@@ -22,19 +22,29 @@
 //! tick (ticks with no submit/retire, past warm-up) — the
 //! zero-allocation discipline check for the scheduler hot path.
 //!
-//! Emits `BENCH_concurrency.json`.
+//! A third scenario exercises the request-budget path end to end: every
+//! request carries a `DEADLINE_MS` wall-clock budget through
+//! `ExpansionHub::submit_deadline`, and the bench reports the expiry
+//! rate, time-to-result percentiles, and how far past its deadline an
+//! expired request came back (the anytime-overrun, which the hub bounds
+//! at roughly one scheduler tick).
+//!
+//! Emits `BENCH_concurrency.json` and `BENCH_deadline.json`.
 
 use retroserve::benchkit::{
     allocs_now, write_bench_json, BenchRecord, CountingAlloc, InstrumentedModel,
 };
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
 use retroserve::decoding::msbs::Msbs;
 use retroserve::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
 use retroserve::decoding::{DecodeStats, Decoder};
+use retroserve::metrics::Metrics;
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::model::{encode_shared, StepModel};
-use retroserve::tokenizer::{BOS, EOS};
+use retroserve::tokenizer::{Vocab, BOS, EOS};
 use retroserve::util::stats::percentile;
 use retroserve::util::Rng;
+use std::sync::Arc;
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
@@ -195,6 +205,87 @@ fn run_cycle_fused(sessions: usize) -> RunReport {
     }
 }
 
+/// Wall-clock budget each deadline-scenario request carries.
+const DEADLINE_MS: u64 = 4;
+
+struct DeadlineReport {
+    expired_rate: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p95_overrun_ms: f64,
+    wall_ms: f64,
+}
+
+/// Deadline discipline through the real hub: closed-loop sessions whose
+/// every request carries a `DEADLINE_MS` budget. Time-to-result is the
+/// wait until *either* the proposals or the scoped deadline error
+/// arrives — the anytime contract says the latter lands within about
+/// one scheduler tick of expiry, so the overrun percentile is the
+/// bound under test. Distinct random molecules defeat the expansion
+/// cache (every request pays real decode work).
+fn run_deadline(sessions: usize) -> DeadlineReport {
+    let mut rng = Rng::new(0xDEAD ^ sessions as u64);
+    let work: Vec<Vec<String>> = (0..sessions)
+        .map(|_| {
+            (0..REQUESTS_PER_SESSION)
+                .map(|_| {
+                    let len = 4 + rng.gen_range(10);
+                    (0..len).map(|_| ['C', 'C', 'C', 'O', 'N'][rng.gen_range(5)]).collect()
+                })
+                .collect()
+        })
+        .collect();
+    let vocab = Vocab::build(work.iter().flatten().map(String::as_str));
+    let hub = ExpansionHub::start(
+        make_model(),
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig {
+            max_wait: std::time::Duration::from_micros(100),
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for mols in work {
+        let hub = hub.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut out: Vec<(f64, bool)> = Vec::new();
+            for m in &mols {
+                let issue = std::time::Instant::now();
+                let d = issue + std::time::Duration::from_millis(DEADLINE_MS);
+                let expired = match hub.submit_deadline(m, K, Some(d)) {
+                    Ok(fut) => match fut.wait_deadline(d) {
+                        Ok(_) => false,
+                        Err(e) => format!("{e:#}").contains("deadline"),
+                    },
+                    Err(_) => false,
+                };
+                out.push((issue.elapsed().as_secs_f64() * 1e3, expired));
+            }
+            out
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    let mut overruns: Vec<f64> = Vec::new();
+    for j in joins {
+        for (ms, expired) in j.join().expect("session thread") {
+            if expired {
+                overruns.push((ms - DEADLINE_MS as f64).max(0.0));
+            }
+            lat.push(ms);
+        }
+    }
+    DeadlineReport {
+        expired_rate: overruns.len() as f64 / lat.len().max(1) as f64,
+        p50_ms: percentile(&lat, 50.0),
+        p95_ms: percentile(&lat, 95.0),
+        p95_overrun_ms: if overruns.is_empty() { 0.0 } else { percentile(&overruns, 95.0) },
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
 fn main() {
     println!(
         "== concurrency bench (msbs, K={K}, {REQUESTS_PER_SESSION} requests/session, \
@@ -245,5 +336,35 @@ fn main() {
     match write_bench_json(path, "concurrency", &records) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+
+    println!("== deadline scenario ({DEADLINE_MS}ms budget per request) ==");
+    let mut dl_records = Vec::new();
+    for sessions in [1usize, 4, 16] {
+        let r = run_deadline(sessions);
+        println!(
+            "deadline           s={sessions:<3} expired {:>5.1}%  p50 {:>7.2}ms  \
+             p95 {:>7.2}ms  p95 overrun {:>6.2}ms  wall {:>8.1}ms",
+            r.expired_rate * 100.0,
+            r.p50_ms,
+            r.p95_ms,
+            r.p95_overrun_ms,
+            r.wall_ms
+        );
+        dl_records.push(
+            BenchRecord::new(format!("deadline-s{sessions}"))
+                .metric("sessions", sessions as f64)
+                .metric("deadline_ms", DEADLINE_MS as f64)
+                .metric("expired_rate", r.expired_rate)
+                .metric("p50_ms", r.p50_ms)
+                .metric("p95_ms", r.p95_ms)
+                .metric("p95_overrun_ms", r.p95_overrun_ms)
+                .metric("wall_ms", r.wall_ms),
+        );
+    }
+    let dpath = std::path::Path::new("BENCH_deadline.json");
+    match write_bench_json(dpath, "deadline", &dl_records) {
+        Ok(()) => println!("wrote {}", dpath.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", dpath.display()),
     }
 }

@@ -29,6 +29,7 @@ fn main() {
         max_iterations: 200,
         max_depth: 5,
         expansions_per_step: 10,
+        ..Default::default()
     };
     let mut records = Vec::new();
     for (name, planner) in [

@@ -85,6 +85,7 @@ fn run(targets: &[String], stock: &Stock, vocab: &Vocab, spec_depth: usize) -> R
         max_iterations: 100,
         max_depth: 5,
         expansions_per_step: K,
+        ..Default::default()
     };
     let planner = RetroStar::new(1).with_spec_depth(spec_depth);
     let mut solved = 0usize;

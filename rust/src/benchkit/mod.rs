@@ -205,6 +205,256 @@ impl<M: StepModel> StepModel for InstrumentedModel<M> {
     }
 }
 
+/// Fault menu for [`ChaosModel`]: scripted (1-based global call
+/// indices) and seeded-random (per-call probabilities) injection of
+/// encode/decode errors, latency spikes, stalls and panics.
+///
+/// Injection happens strictly on the *call* paths (`encode`, `decode`,
+/// `decode_into`). Release paths (`release`, `state_release`,
+/// `state_retain`) are never faulted: recovery code runs them while
+/// cleaning up after an injected panic, and a fault there would turn
+/// containment itself into the crash under test.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosConfig {
+    /// Seed for the random schedule; equal seeds give equal fault
+    /// sequences (the soak test's reproducibility contract).
+    pub seed: u64,
+    /// Per-call probability of an injected `Err` from `encode`.
+    pub encode_error_rate: f64,
+    /// Per-call probability of an injected `Err` from `decode`.
+    pub decode_error_rate: f64,
+    /// Per-call probability of an injected panic in `encode`.
+    pub encode_panic_rate: f64,
+    /// Per-call probability of an injected panic in `decode`.
+    pub decode_panic_rate: f64,
+    /// Per-call probability of sleeping `delay` (latency spike).
+    pub delay_rate: f64,
+    pub delay: std::time::Duration,
+    /// Per-call probability of sleeping `stall` (long wedge; pair with
+    /// request deadlines to exercise the anytime path).
+    pub stall_rate: f64,
+    pub stall: std::time::Duration,
+    /// Scripted faults: 1-based global call indices per phase.
+    pub err_on_encode: Vec<usize>,
+    pub err_on_decode: Vec<usize>,
+    pub panic_on_encode: Vec<usize>,
+    pub panic_on_decode: Vec<usize>,
+}
+
+/// Shared tally of injected faults, readable after the model moves onto
+/// an executor/hub thread (grab a clone via [`ChaosModel::counters`]).
+#[derive(Debug, Default)]
+pub struct ChaosCounters {
+    pub encode_errors: AtomicU64,
+    pub decode_errors: AtomicU64,
+    pub panics: AtomicU64,
+    pub delays: AtomicU64,
+    pub stalls: AtomicU64,
+}
+
+enum Fault {
+    None,
+    Err,
+    Panic,
+}
+
+/// Chaos-injection [`StepModel`] wrapper — layer it over
+/// [`InstrumentedModel`] to combine fault schedules with the live
+/// handle/state probes:
+/// `ChaosModel::new(InstrumentedModel::new(mock).with_live_counter(..), cfg)`.
+pub struct ChaosModel<M> {
+    inner: M,
+    cfg: ChaosConfig,
+    rng: std::sync::Mutex<crate::util::Rng>,
+    encode_calls: AtomicU64,
+    decode_calls: AtomicU64,
+    injected: Arc<ChaosCounters>,
+}
+
+impl<M> ChaosModel<M> {
+    pub fn new(inner: M, cfg: ChaosConfig) -> Self {
+        let rng = std::sync::Mutex::new(crate::util::Rng::new(cfg.seed));
+        Self {
+            inner,
+            cfg,
+            rng,
+            encode_calls: AtomicU64::new(0),
+            decode_calls: AtomicU64::new(0),
+            injected: Arc::new(ChaosCounters::default()),
+        }
+    }
+
+    /// Clone of the shared fault tally (take it before handing the
+    /// model to a hub/executor).
+    pub fn counters(&self) -> Arc<ChaosCounters> {
+        self.injected.clone()
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Decide this call's fate. All random draws happen in one short
+    /// lock scope and in a fixed order, so the schedule is a pure
+    /// function of (seed, call sequence) — and the injected panic fires
+    /// *after* the rng lock is released.
+    fn plan(
+        &self,
+        n: u64,
+        err_on: &[usize],
+        panic_on: &[usize],
+        err_rate: f64,
+        panic_rate: f64,
+    ) -> (Fault, std::time::Duration) {
+        let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+        let spike = rng.gen_bool(self.cfg.delay_rate);
+        let stall = rng.gen_bool(self.cfg.stall_rate);
+        let err = rng.gen_bool(err_rate);
+        let panic = rng.gen_bool(panic_rate);
+        drop(rng);
+        let mut sleep = std::time::Duration::ZERO;
+        if spike && !self.cfg.delay.is_zero() {
+            self.injected.delays.fetch_add(1, Ordering::Relaxed);
+            sleep += self.cfg.delay;
+        }
+        if stall && !self.cfg.stall.is_zero() {
+            self.injected.stalls.fetch_add(1, Ordering::Relaxed);
+            sleep += self.cfg.stall;
+        }
+        let fault = if panic || panic_on.contains(&(n as usize)) {
+            Fault::Panic
+        } else if err || err_on.contains(&(n as usize)) {
+            Fault::Err
+        } else {
+            Fault::None
+        };
+        (fault, sleep)
+    }
+}
+
+impl<M: StepModel> StepModel for ChaosModel<M> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn medusa_heads(&self) -> usize {
+        self.inner.medusa_heads()
+    }
+
+    fn max_src(&self) -> usize {
+        self.inner.max_src()
+    }
+
+    fn max_tgt(&self) -> usize {
+        self.inner.max_tgt()
+    }
+
+    fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+        let n = self.encode_calls.fetch_add(1, Ordering::SeqCst) + 1;
+        let (fault, sleep) = self.plan(
+            n,
+            &self.cfg.err_on_encode,
+            &self.cfg.panic_on_encode,
+            self.cfg.encode_error_rate,
+            self.cfg.encode_panic_rate,
+        );
+        if !sleep.is_zero() {
+            std::thread::sleep(sleep);
+        }
+        match fault {
+            Fault::Panic => {
+                self.injected.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("chaos: injected encode panic (call #{n})");
+            }
+            Fault::Err => {
+                self.injected.encode_errors.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("chaos: injected encode error (call #{n})");
+            }
+            Fault::None => self.inner.encode(src),
+        }
+    }
+
+    fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+        let n = self.decode_calls.fetch_add(1, Ordering::SeqCst) + 1;
+        let (fault, sleep) = self.plan(
+            n,
+            &self.cfg.err_on_decode,
+            &self.cfg.panic_on_decode,
+            self.cfg.decode_error_rate,
+            self.cfg.decode_panic_rate,
+        );
+        if !sleep.is_zero() {
+            std::thread::sleep(sleep);
+        }
+        match fault {
+            Fault::Panic => {
+                self.injected.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("chaos: injected decode panic (call #{n})");
+            }
+            Fault::Err => {
+                self.injected.decode_errors.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("chaos: injected decode error (call #{n})");
+            }
+            Fault::None => self.inner.decode(rows, win),
+        }
+    }
+
+    fn decode_into(&self, rows: &[DecodeRow], win: usize, out: &mut DecodeOut) -> Result<()> {
+        let n = self.decode_calls.fetch_add(1, Ordering::SeqCst) + 1;
+        let (fault, sleep) = self.plan(
+            n,
+            &self.cfg.err_on_decode,
+            &self.cfg.panic_on_decode,
+            self.cfg.decode_error_rate,
+            self.cfg.decode_panic_rate,
+        );
+        if !sleep.is_zero() {
+            std::thread::sleep(sleep);
+        }
+        match fault {
+            Fault::Panic => {
+                self.injected.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("chaos: injected decode panic (call #{n})");
+            }
+            Fault::Err => {
+                self.injected.decode_errors.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("chaos: injected decode error (call #{n})");
+            }
+            Fault::None => self.inner.decode_into(rows, win, out),
+        }
+    }
+
+    fn pad_rows(&self, n: usize) -> usize {
+        self.inner.pad_rows(n)
+    }
+
+    fn release(&self, mem: MemHandle) {
+        self.inner.release(mem)
+    }
+
+    fn supports_incremental(&self) -> bool {
+        self.inner.supports_incremental()
+    }
+
+    fn state_commit(
+        &self,
+        mem: MemHandle,
+        mem_row: usize,
+        parent: StateId,
+        delta: &[i32],
+    ) -> Result<StateId> {
+        self.inner.state_commit(mem, mem_row, parent, delta)
+    }
+
+    fn state_retain(&self, state: StateId) {
+        self.inner.state_retain(state)
+    }
+
+    fn state_release(&self, state: StateId) {
+        self.inner.state_release(state)
+    }
+}
+
 /// One held-out single-step sample.
 #[derive(Clone, Debug)]
 pub struct TestPair {
@@ -461,6 +711,67 @@ mod tests {
         m.release(h);
         assert_eq!(live.load(Ordering::SeqCst), 0);
         assert_eq!(m.inner().encode_calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chaos_model_scripted_faults_hit_exact_calls() {
+        use crate::model::mock::{MockConfig, MockModel};
+        use crate::tokenizer::{BOS, EOS};
+        let m = ChaosModel::new(
+            MockModel::new(MockConfig::default()),
+            ChaosConfig { err_on_encode: vec![2], ..Default::default() },
+        );
+        let c = m.counters();
+        let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        m.release(h);
+        let err = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err:#}");
+        let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        m.release(h);
+        assert_eq!(c.encode_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(c.panics.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn chaos_schedule_is_deterministic_per_seed() {
+        use crate::model::mock::{MockConfig, MockModel};
+        use crate::tokenizer::{BOS, EOS};
+        let run = |seed: u64| -> Vec<bool> {
+            let m = ChaosModel::new(
+                MockModel::new(MockConfig::default()),
+                ChaosConfig { seed, encode_error_rate: 0.5, ..Default::default() },
+            );
+            (0..32)
+                .map(|_| {
+                    let r = m.encode(&[vec![BOS, 5, 6, EOS]]);
+                    if let Ok(h) = &r {
+                        m.release(*h);
+                    }
+                    r.is_ok()
+                })
+                .collect()
+        };
+        assert_eq!(run(7), run(7), "equal seeds must give equal fault schedules");
+        assert_ne!(run(7), run(8), "different seeds should differ at rate 0.5");
+    }
+
+    #[test]
+    fn chaos_panic_is_injected_on_schedule() {
+        use crate::model::mock::{MockConfig, MockModel};
+        use crate::tokenizer::{BOS, EOS};
+        let m = ChaosModel::new(
+            MockModel::new(MockConfig::default()),
+            ChaosConfig { panic_on_encode: vec![1], ..Default::default() },
+        );
+        let c = m.counters();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.encode(&[vec![BOS, 5, 6, EOS]])
+        }));
+        assert!(r.is_err(), "scripted panic must fire");
+        assert_eq!(c.panics.load(Ordering::Relaxed), 1);
+        // The next call is healthy again.
+        let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        m.release(h);
     }
 
     #[test]

@@ -155,6 +155,7 @@ fn main() -> Result<()> {
         max_iterations: max_iter,
         max_depth: 5,
         expansions_per_step: k,
+        ..Default::default()
     };
 
     // --share-cache: one molecule-keyed cache per decoder, spanning

@@ -86,6 +86,7 @@ fn main() -> Result<()> {
         max_iterations: max_iter,
         max_depth: 5,
         expansions_per_step: k,
+        ..Default::default()
     };
 
     // (label, decoder, beam width)

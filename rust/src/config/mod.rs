@@ -180,6 +180,14 @@ pub struct ServeConfig {
     /// Expansion cache capacity (molecules, LRU).
     pub cache_cap: usize,
     pub workers: usize,
+    /// Request budget: policy expansion batches per plan (0 = off).
+    pub max_expansions: usize,
+    /// Request budget: decoder positions per plan (0 = off).
+    pub max_decode_tokens: u64,
+    /// Executor supervision: transient model-error retries per call.
+    pub model_retries: u32,
+    /// Executor supervision: base retry/restart backoff, microseconds.
+    pub model_backoff_us: u64,
 }
 
 impl ServeConfig {
@@ -210,6 +218,10 @@ impl ServeConfig {
             batch_rows: c.int_or("batcher.max_rows", 256) as usize,
             cache_cap: c.int_or("batcher.cache_cap", 10_000) as usize,
             workers: c.int_or("server.workers", 4) as usize,
+            max_expansions: c.int_or("planner.max_expansions", 0).max(0) as usize,
+            max_decode_tokens: c.int_or("planner.max_decode_tokens", 0).max(0) as u64,
+            model_retries: c.int_or("model.retries", 0).max(0) as u32,
+            model_backoff_us: c.int_or("model.backoff_us", 200).max(0) as u64,
         }
     }
 
@@ -219,6 +231,8 @@ impl ServeConfig {
             max_iterations: self.max_iterations,
             max_depth: self.max_depth,
             expansions_per_step: self.expansions_per_step,
+            max_expansions: self.max_expansions,
+            max_decode_tokens: self.max_decode_tokens,
         }
     }
 }
@@ -257,6 +271,27 @@ mod tests {
         assert_eq!(sc.max_depth, 5);
         assert_eq!(sc.spec_depth, 1);
         assert_eq!(sc.limits().expansions_per_step, 10);
+        assert_eq!(sc.max_expansions, 0, "work caps default to off");
+        assert_eq!(sc.max_decode_tokens, 0);
+        assert_eq!(sc.model_retries, 0, "retries default to fail-fast");
+        assert_eq!(sc.model_backoff_us, 200);
+    }
+
+    #[test]
+    fn budget_and_supervision_keys_parse() {
+        let c = Config::parse(concat!(
+            "[planner]\nmax_expansions = 40\nmax_decode_tokens = 9000\n",
+            "[model]\nretries = 2\nbackoff_us = 50\n",
+        ))
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.max_expansions, 40);
+        assert_eq!(sc.max_decode_tokens, 9000);
+        assert_eq!(sc.model_retries, 2);
+        assert_eq!(sc.model_backoff_us, 50);
+        let l = sc.limits();
+        assert_eq!(l.max_expansions, 40);
+        assert_eq!(l.max_decode_tokens, 9000);
     }
 
     #[test]

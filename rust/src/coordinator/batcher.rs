@@ -90,12 +90,16 @@ impl CompletionQueue {
         Self { epoch: Mutex::new(0), cv: Condvar::new() }
     }
 
+    // The epoch is a bare counter, so a poisoned lock (a waiter
+    // panicked while holding it) cannot leave it torn — recover the
+    // guard instead of cascading the panic into every other session's
+    // wait path.
     pub(crate) fn epoch(&self) -> u64 {
-        *self.epoch.lock().unwrap()
+        *self.epoch.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     fn notify(&self) {
-        let mut e = self.epoch.lock().unwrap();
+        let mut e = self.epoch.lock().unwrap_or_else(|p| p.into_inner());
         *e += 1;
         self.cv.notify_all();
     }
@@ -103,14 +107,16 @@ impl CompletionQueue {
     /// Block until the epoch advances past `seen` or `deadline` passes;
     /// returns the current epoch (feed it back in as the next `seen`).
     pub(crate) fn wait_past(&self, seen: u64, deadline: std::time::Instant) -> u64 {
-        let mut e = self.epoch.lock().unwrap();
+        let mut e = self.epoch.lock().unwrap_or_else(|p| p.into_inner());
         while *e <= seen {
             let now = std::time::Instant::now();
             if now >= deadline {
                 break;
             }
-            let (guard, _) = self.cv.wait_timeout(e, deadline - now).unwrap();
-            e = guard;
+            match self.cv.wait_timeout(e, deadline - now) {
+                Ok((guard, _)) => e = guard,
+                Err(p) => e = p.into_inner().0,
+            }
         }
         *e
     }
@@ -120,6 +126,11 @@ struct ExpandReq {
     smiles: String,
     k: usize,
     ticket: u64,
+    /// Request-budget deadline: the hub expires the waiter (scoped
+    /// error, task cancelled when it was the last waiter) at the first
+    /// round boundary past this instant, even if the submitting thread
+    /// never polls again. `None` = no deadline.
+    deadline: Option<std::time::Instant>,
     reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
 }
 
@@ -236,6 +247,34 @@ impl ExpansionFuture {
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(anyhow::anyhow!("hub gone")),
+        }
+    }
+
+    /// Block until the expansion retires or `deadline` passes. Expiry
+    /// returns a scoped "deadline" error and withdraws the request
+    /// (the drop-cancel path runs, so the hub releases the decode task
+    /// if this was its last waiter) — only this waiter fails.
+    pub fn wait_deadline(mut self, deadline: std::time::Instant) -> Result<Vec<Proposal>> {
+        if let Some(r) = self.ready.take() {
+            return r;
+        }
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            return Err(anyhow::anyhow!("request deadline expired"));
+        }
+        match self.rx.recv_timeout(deadline - now) {
+            Ok(r) => {
+                self.spent = true;
+                r
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // NOT spent: dropping `self` sends the hub a Cancel.
+                Err(anyhow::anyhow!("request deadline expired"))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.spent = true;
+                Err(anyhow::anyhow!("hub gone"))
+            }
         }
     }
 
@@ -381,10 +420,31 @@ impl ExpansionHub {
     /// caller polls, waits on, or cancels. This is the pipelined
     /// planner's entry point.
     pub fn submit(&self, smiles: &str, k: usize) -> Result<ExpansionFuture> {
+        self.submit_deadline(smiles, k, None)
+    }
+
+    /// As [`ExpansionHub::submit`] with a request-budget deadline: past
+    /// it the hub fails the waiter with a scoped "deadline" error at
+    /// the next round boundary (within one scheduler tick) and cancels
+    /// the molecule's decode task if no other waiter covers it — rows,
+    /// encoder memory and decoder states are released through the
+    /// existing cancel path.
+    pub fn submit_deadline(
+        &self,
+        smiles: &str,
+        k: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<ExpansionFuture> {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
-            .send(HubMsg::Expand(ExpandReq { smiles: smiles.to_string(), k, ticket, reply }))
+            .send(HubMsg::Expand(ExpandReq {
+                smiles: smiles.to_string(),
+                k,
+                ticket,
+                deadline,
+                reply,
+            }))
             .map_err(|_| anyhow::anyhow!("hub gone"))?;
         Ok(ExpansionFuture {
             smiles: smiles.to_string(),
@@ -442,7 +502,9 @@ impl ExpansionHub {
     }
 
     pub fn stats(&self) -> DecodeStats {
-        self.stats.lock().unwrap().clone()
+        // Counters only — recover from a poisoned lock rather than
+        // propagating a panic into every stats reader.
+        self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// (per-query decode tasks submitted, requests admitted): requests
@@ -517,6 +579,8 @@ struct HubCounters {
 struct Waiter {
     ticket: u64,
     k: usize,
+    /// Request-budget deadline; the hub expires the waiter past it.
+    deadline: Option<std::time::Instant>,
     reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
 }
 
@@ -568,11 +632,41 @@ impl HubState {
                 }
             }
         }
-        self.waiting
-            .entry(req.smiles)
-            .or_default()
-            .push(Waiter { ticket: req.ticket, k: req.k, reply: req.reply });
+        self.waiting.entry(req.smiles).or_default().push(Waiter {
+            ticket: req.ticket,
+            k: req.k,
+            deadline: req.deadline,
+            reply: req.reply,
+        });
         false
+    }
+
+    /// Expire every waiter whose deadline passed: each gets a scoped
+    /// "deadline" error, and a molecule left with no waiters releases
+    /// its queued miss. Returns the expired molecules so the caller can
+    /// cancel their now-unwatched decode tasks (needs the scheduler,
+    /// which the state doesn't own).
+    fn expire_deadlines(&mut self, now: std::time::Instant) -> Vec<String> {
+        let mut orphaned = Vec::new();
+        self.waiting.retain(|mol, ws| {
+            ws.retain(|w| {
+                let expired = w.deadline.is_some_and(|d| now >= d);
+                if expired {
+                    let _ = w.reply.send(Err(anyhow::anyhow!("request deadline expired")));
+                }
+                !expired
+            });
+            if ws.is_empty() {
+                orphaned.push(mol.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for mol in &orphaned {
+            self.drop_queued_miss(mol);
+        }
+        orphaned
     }
 
     /// Drop a molecule's queued miss (its last waiter cancelled before
@@ -903,151 +997,66 @@ fn hub_loop<M: StepModel>(
             events.notify();
         }
 
-        // ---- 3. submit this round's misses: ONE fused encode ----
-        // Every cache-missing molecule gathered this round shares a
-        // single `StepModel::encode` call; each then gets its own
-        // per-query decode task over its row view of the shared batch
-        // (released when the round's last member retires or is
-        // cancelled). Encoder cost is O(rounds), not O(misses), while
-        // retirement semantics stay per-query: a slow molecule neither
-        // stalls its co-arrivals' answers nor pins their memory.
-        let round = state.take_submit_round();
-        if !round.is_empty() {
-            let srcs: Vec<Vec<i32>> =
-                round.iter().map(|(mol, _)| vocab.encode(mol, true)).collect();
-            counters.encode_rounds.fetch_add(1, Ordering::Relaxed);
-            metrics.inc("batcher.encode_rounds", 1);
-            let mut failed_any = false;
-            match encode_shared(&model, &srcs) {
-                Ok(views) => {
-                    counters.encode_calls.fetch_add(1, Ordering::Relaxed);
-                    metrics.inc("batcher.encode_calls", 1);
-                    for (((mol, k), view), src) in
-                        round.into_iter().zip(views).zip(srcs.iter())
-                    {
-                        let one = std::slice::from_ref(src);
-                        failed_any |= !start_round_task(
-                            &model,
-                            decoder.as_ref(),
-                            &mut scheduler,
-                            &mut state,
-                            &mut tasks_meta,
-                            &counters,
-                            &metrics,
-                            mol,
-                            k,
-                            view,
-                            one,
-                        );
-                    }
-                }
-                Err(fused_err) => {
-                    // The round's ONE fused encode failed. Don't fail
-                    // the whole round — one bad source must not take
-                    // down every co-arriving session's expansion.
-                    // Retry each molecule alone (the pre-fusion blast
-                    // radius): healthy co-arrivals still fly, only the
-                    // truly failing molecule's waiters error, and the
-                    // per-molecule encode cost is paid on this error
-                    // path only.
-                    for ((mol, k), src) in round.into_iter().zip(srcs.iter()) {
-                        let one = std::slice::from_ref(src);
-                        match encode_shared(&model, one) {
-                            Ok(views) => {
-                                counters.encode_calls.fetch_add(1, Ordering::Relaxed);
-                                metrics.inc("batcher.encode_calls", 1);
-                                let view =
-                                    views.into_iter().next().expect("one view per source");
-                                failed_any |= !start_round_task(
-                                    &model,
-                                    decoder.as_ref(),
-                                    &mut scheduler,
-                                    &mut state,
-                                    &mut tasks_meta,
-                                    &counters,
-                                    &metrics,
-                                    mol,
-                                    k,
-                                    view,
-                                    one,
-                                );
-                            }
-                            Err(e) => {
-                                let msg =
-                                    format!("encode failed: {e:#} (fused: {fused_err:#})");
-                                fail_task_waiters(&mut state, &mol, k, &msg);
-                                failed_any = true;
-                            }
+        // ---- 2b. expire request deadlines ----
+        // Budget enforcement on the hub side: waiters whose deadline
+        // passed get a scoped error NOW (round boundary — within one
+        // scheduler tick of expiry), and a molecule left with no
+        // waiters releases its decode task exactly like a cancel. The
+        // submitting thread normally beats us to it (its waits are
+        // deadline-aware), but a stuck client must not pin device work.
+        let orphaned = state.expire_deadlines(std::time::Instant::now());
+        if !orphaned.is_empty() {
+            for mol in &orphaned {
+                if let Some(tasks) = state.covered.remove(mol) {
+                    for (id, _) in tasks {
+                        if scheduler.cancel(&model, id) {
+                            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                            metrics.inc("batcher.tasks_cancelled", 1);
                         }
+                        tasks_meta.remove(&id);
                     }
                 }
             }
-            if failed_any {
-                events.notify();
-            }
+            metrics.inc("batcher.deadline_expired", orphaned.len() as u64);
+            events.notify();
         }
 
-        // ---- 4. one fused tick ----
-        // Publish the in-flight high-water mark only when it moves:
-        // steady-state ticks must stay free of mutex/alloc traffic.
-        if scheduler.in_flight() > in_flight_hw {
-            in_flight_hw = scheduler.in_flight();
-            metrics.gauge_max("scheduler.in_flight_tasks", in_flight_hw as u64);
-        }
-        if scheduler.is_idle() {
-            if !state.waiting.is_empty() {
-                // Unreachable by construction (waiters always have a
-                // covering task); fail loudly instead of spinning.
-                state.fail_all("internal: waiters without an in-flight task");
-                events.notify();
-            }
-            continue;
-        }
-        finished.clear();
-        let t_tick = std::time::Instant::now();
-        match scheduler.tick(&model, &mut finished) {
-            Ok(rows) => {
-                if rows > 0 {
-                    counters.fused_calls.fetch_add(1, Ordering::Relaxed);
-                    counters.fused_rows.fetch_add(rows as u64, Ordering::Relaxed);
-                    metrics.inc("batcher.fused_calls", 1);
-                    metrics.inc("batcher.fused_rows", rows as u64);
-                    // A rows>0 tick is dominated by its one fused device
-                    // call: this histogram replaces the old whole-
-                    // `generate` "batcher.decode" timing at cycle
-                    // granularity.
-                    metrics.observe("batcher.decode", t_tick.elapsed().as_secs_f64());
-                }
-                let retired_any = !finished.is_empty();
-                for f in finished.drain(..) {
-                    let meta = tasks_meta.remove(&f.id).expect("task bookkeeping");
-                    counters.stats.lock().unwrap().merge(&f.stats);
-                    retire_task(f.id, &meta, &f, &vocab, &mut state, &counters);
-                }
-                if retired_any {
-                    // Answers are on their channels: wake blocked
-                    // wait_any / wait_event callers.
-                    events.notify();
-                }
-            }
-            Err(e) => {
-                // The fused call failed: exactly the tasks staged in it
-                // were dropped by the scheduler. Fail their waiters and
-                // nobody else's — unstaged tasks keep flying.
-                let msg = format!("{e:#}");
-                for id in scheduler.drain_failed() {
-                    if let Some(meta) = tasks_meta.remove(&id) {
-                        if let Some(tasks) = state.covered.get_mut(&meta.mol) {
-                            tasks.retain(|&(tid, _)| tid != id);
-                            if tasks.is_empty() {
-                                state.covered.remove(&meta.mol);
-                            }
-                        }
-                        fail_task_waiters(&mut state, &meta.mol, meta.k, &msg);
-                    }
-                }
-                events.notify();
-            }
+        // ---- 3 + 4: the model-facing phases, panic-contained ----
+        // Everything below calls into the model (fused encode, fused
+        // decode tick). A model panic must not take the hub thread — and
+        // with it every session — down: catch it, abort the scheduler
+        // (releasing rows, views and decoder states through the tasks'
+        // `finish` path), fail the current waiters with a scoped error,
+        // and keep serving the next round on a clean slate.
+        let round_panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model_phases(
+                &model,
+                decoder.as_ref(),
+                &vocab,
+                &mut scheduler,
+                &mut state,
+                &mut tasks_meta,
+                &mut finished,
+                &mut in_flight_hw,
+                &counters,
+                &metrics,
+                &events,
+            )
+        }));
+        if round_panicked.is_err() {
+            // A panic unwound out of the model mid-round. Release every
+            // in-flight task (their `finish` paths free rows, memory
+            // views and decoder states; a second panic during cleanup
+            // is swallowed — the thread must survive), fail the waiters
+            // scoped to this hub, and continue on a clean slate.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                scheduler.abort(&model);
+            }));
+            let _ = scheduler.drain_failed();
+            tasks_meta.clear();
+            state.fail_all("hub round panicked (model fault); request failed, hub restarted");
+            metrics.inc("batcher.hub_panics", 1);
+            events.notify();
         }
     }
 
@@ -1057,6 +1066,156 @@ fn hub_loop<M: StepModel>(
     drop(rx);
     drop(state);
     events.notify();
+}
+
+/// Phases 3+4 of one hub round: submit this round's misses behind ONE
+/// fused encode, then run one fused decode tick. These are the only
+/// phases that call into the model, so `hub_loop` runs this function
+/// inside `catch_unwind` — a model panic is contained here and the
+/// bookkeeping phases (gather / cancel / deadline sweep) stay outside
+/// the failure domain.
+#[allow(clippy::too_many_arguments)]
+fn model_phases(
+    model: &dyn StepModel,
+    decoder: &(dyn Decoder + Send),
+    vocab: &Vocab,
+    scheduler: &mut DecodeScheduler,
+    state: &mut HubState,
+    tasks_meta: &mut HashMap<TaskId, TaskMeta>,
+    finished: &mut Vec<Finished>,
+    in_flight_hw: &mut usize,
+    counters: &HubCounters,
+    metrics: &Metrics,
+    events: &CompletionQueue,
+) {
+    // ---- 3. submit this round's misses: ONE fused encode ----
+    // Every cache-missing molecule gathered this round shares a
+    // single `StepModel::encode` call; each then gets its own
+    // per-query decode task over its row view of the shared batch
+    // (released when the round's last member retires or is
+    // cancelled). Encoder cost is O(rounds), not O(misses), while
+    // retirement semantics stay per-query: a slow molecule neither
+    // stalls its co-arrivals' answers nor pins their memory.
+    let round = state.take_submit_round();
+    if !round.is_empty() {
+        let srcs: Vec<Vec<i32>> = round.iter().map(|(mol, _)| vocab.encode(mol, true)).collect();
+        counters.encode_rounds.fetch_add(1, Ordering::Relaxed);
+        metrics.inc("batcher.encode_rounds", 1);
+        let mut failed_any = false;
+        match encode_shared(model, &srcs) {
+            Ok(views) => {
+                counters.encode_calls.fetch_add(1, Ordering::Relaxed);
+                metrics.inc("batcher.encode_calls", 1);
+                for (((mol, k), view), src) in round.into_iter().zip(views).zip(srcs.iter()) {
+                    let one = std::slice::from_ref(src);
+                    failed_any |= !start_round_task(
+                        model, decoder, scheduler, state, tasks_meta, counters, metrics, mol, k,
+                        view, one,
+                    );
+                }
+            }
+            Err(fused_err) => {
+                // The round's ONE fused encode failed. Don't fail
+                // the whole round — one bad source must not take
+                // down every co-arriving session's expansion.
+                // Retry each molecule alone (the pre-fusion blast
+                // radius): healthy co-arrivals still fly, only the
+                // truly failing molecule's waiters error, and the
+                // per-molecule encode cost is paid on this error
+                // path only.
+                for ((mol, k), src) in round.into_iter().zip(srcs.iter()) {
+                    let one = std::slice::from_ref(src);
+                    match encode_shared(model, one) {
+                        Ok(views) => {
+                            counters.encode_calls.fetch_add(1, Ordering::Relaxed);
+                            metrics.inc("batcher.encode_calls", 1);
+                            let view = views.into_iter().next().expect("one view per source");
+                            failed_any |= !start_round_task(
+                                model, decoder, scheduler, state, tasks_meta, counters, metrics,
+                                mol, k, view, one,
+                            );
+                        }
+                        Err(e) => {
+                            let msg = format!("encode failed: {e:#} (fused: {fused_err:#})");
+                            fail_task_waiters(state, &mol, k, &msg);
+                            failed_any = true;
+                        }
+                    }
+                }
+            }
+        }
+        if failed_any {
+            events.notify();
+        }
+    }
+
+    // ---- 4. one fused tick ----
+    // Publish the in-flight high-water mark only when it moves:
+    // steady-state ticks must stay free of mutex/alloc traffic.
+    if scheduler.in_flight() > *in_flight_hw {
+        *in_flight_hw = scheduler.in_flight();
+        metrics.gauge_max("scheduler.in_flight_tasks", *in_flight_hw as u64);
+    }
+    if scheduler.is_idle() {
+        if !state.waiting.is_empty() {
+            // Unreachable by construction (waiters always have a
+            // covering task); fail loudly instead of spinning.
+            state.fail_all("internal: waiters without an in-flight task");
+            events.notify();
+        }
+        return; // nothing in flight: the round ends here
+    }
+    finished.clear();
+    let t_tick = std::time::Instant::now();
+    match scheduler.tick(model, finished) {
+        Ok(rows) => {
+            if rows > 0 {
+                counters.fused_calls.fetch_add(1, Ordering::Relaxed);
+                counters.fused_rows.fetch_add(rows as u64, Ordering::Relaxed);
+                metrics.inc("batcher.fused_calls", 1);
+                metrics.inc("batcher.fused_rows", rows as u64);
+                // A rows>0 tick is dominated by its one fused device
+                // call: this histogram replaces the old whole-
+                // `generate` "batcher.decode" timing at cycle
+                // granularity.
+                metrics.observe("batcher.decode", t_tick.elapsed().as_secs_f64());
+            }
+            let retired_any = !finished.is_empty();
+            for f in finished.drain(..) {
+                // A task without bookkeeping (cancelled in the same
+                // round it finished) has no waiters to answer —
+                // skip it instead of panicking the hub thread.
+                let Some(meta) = tasks_meta.remove(&f.id) else {
+                    continue;
+                };
+                counters.stats.lock().unwrap_or_else(|p| p.into_inner()).merge(&f.stats);
+                retire_task(f.id, &meta, &f, vocab, state, counters);
+            }
+            if retired_any {
+                // Answers are on their channels: wake blocked
+                // wait_any / wait_event callers.
+                events.notify();
+            }
+        }
+        Err(e) => {
+            // The fused call failed: exactly the tasks staged in it
+            // were dropped by the scheduler. Fail their waiters and
+            // nobody else's — unstaged tasks keep flying.
+            let msg = format!("{e:#}");
+            for id in scheduler.drain_failed() {
+                if let Some(meta) = tasks_meta.remove(&id) {
+                    if let Some(tasks) = state.covered.get_mut(&meta.mol) {
+                        tasks.retain(|&(tid, _)| tid != id);
+                        if tasks.is_empty() {
+                            state.covered.remove(&meta.mol);
+                        }
+                    }
+                    fail_task_waiters(state, &meta.mol, meta.k, &msg);
+                }
+            }
+            events.notify();
+        }
+    }
 }
 
 /// Parse a finished per-query task's output, populate the cache, and
@@ -1069,8 +1228,20 @@ fn retire_task(
     state: &mut HubState,
     counters: &HubCounters,
 ) {
-    let gen = f.outputs.first().expect("per-query task has one output");
     let mol = &meta.mol;
+    let Some(gen) = f.outputs.first() else {
+        // A per-query task always has one output; if the invariant ever
+        // breaks, fail this task's waiters (scoped) instead of
+        // panicking the hub thread out from under every session.
+        fail_task_waiters(state, mol, meta.k, "internal: task finished without output");
+        if let Some(tasks) = state.covered.get_mut(mol) {
+            tasks.retain(|&(tid, _)| tid != id);
+            if tasks.is_empty() {
+                state.covered.remove(mol);
+            }
+        }
+        return;
+    };
     let mut inv = 0usize;
     let mut tot = 0usize;
     let props = proposals_from_output(vocab, mol, gen, &mut inv, &mut tot);
@@ -1205,10 +1376,30 @@ impl ExpansionPolicy for BatchedPolicy {
 
 impl AsyncExpansionPolicy for BatchedPolicy {
     fn submit(&self, molecules: &[&str], k: usize) -> Result<Box<dyn ExpansionHandle>> {
+        self.submit_inner(molecules, k, None)
+    }
+
+    fn submit_deadline(
+        &self,
+        molecules: &[&str],
+        k: usize,
+        deadline: std::time::Instant,
+    ) -> Result<Box<dyn ExpansionHandle>> {
+        self.submit_inner(molecules, k, Some(deadline))
+    }
+}
+
+impl BatchedPolicy {
+    fn submit_inner(
+        &self,
+        molecules: &[&str],
+        k: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Box<dyn ExpansionHandle>> {
         self.calls.fetch_add(1, Ordering::Relaxed);
         let mut futs = Vec::with_capacity(molecules.len());
         for m in molecules {
-            futs.push(Some(self.hub.submit(m, k)?));
+            futs.push(Some(self.hub.submit_deadline(m, k, deadline)?));
         }
         Ok(Box::new(HubHandle {
             results: vec![None; futs.len()],

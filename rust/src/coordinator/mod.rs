@@ -7,14 +7,23 @@
 //!                    │  plan: pipelined Retro* keeps up to spec_depth
 //!                    │  expansion groups in flight as futures; waits
 //!                    │  block on the hub's completion events (condvar),
-//!                    │  never sleep-poll
+//!                    │  never sleep-poll. Every plan carries a Budget
+//!                    │  (deadline + optional expansion/token caps),
+//!                    │  checked at the selection cadence and threaded
+//!                    │  into every blocking wait — expiry breaks the
+//!                    │  loop with a stop_reason and the anytime
+//!                    │  best-so-far partial route, never a hang
 //!                    ▼
 //!              ExpansionHub (continuous batcher)
-//!                    │  submit(smiles, k) -> ExpansionFuture
-//!                    │  (poll / wait / cancel); each cache-missing
-//!                    │  molecule becomes ONE per-query decode task —
-//!                    │  it retires the moment its own beams finish,
-//!                    │  and cancellation drops it from the scheduler
+//!                    │  submit(smiles, k) / submit_deadline(.., at)
+//!                    │  -> ExpansionFuture (poll / wait / wait_deadline
+//!                    │  / cancel); each cache-missing molecule becomes
+//!                    │  ONE per-query decode task — it retires the
+//!                    │  moment its own beams finish, and cancellation
+//!                    │  (dropped future, expired deadline: both sweep
+//!                    │  phase 2/2b of the round loop) drops it from
+//!                    │  the scheduler, releasing rows, encoder memory
+//!                    │  and decoder states through one shared path
 //!                    ▼
 //!              encode admission: ALL of a round's misses share ONE
 //!                    │  StepModel::encode call; each task decodes over
@@ -31,11 +40,40 @@
 //!                    │  positions) per cycle); a tick error fails only
 //!                    │  the tasks in that call
 //!                    ▼
-//!              SharedModel (model-executor thread; startup Meta ships
-//!                    │  the device's row-bucketing rule)
+//!              SharedModel (supervised model-executor thread; startup
+//!                    │  Meta ships the device's row-bucketing rule)
 //!                    ▼
 //!              PJRT CPU client over the AOT HLO artifacts
 //! ```
+//!
+//! **Supervision failure domains** (each fault is contained one level
+//! up, never escalated to the process):
+//!
+//! ```text
+//! model call Err ──► SharedModel retries within policy (model.retries,
+//!                    capped exponential backoff); exhausted retries
+//!                    fail that one call, scoped
+//! model call panic ► caught on the executor thread; the in-flight
+//!                    call errs scoped, the factory rebuilds the model
+//!                    (capped backoff, model.panics / model.restarts
+//!                    metrics); StateCommit is never retried (a blind
+//!                    second commit could double-claim)
+//! hub round panic ─► caught around the model phases of the round
+//!                    loop (encode + tick); the scheduler aborts its
+//!                    in-flight tasks, every registered waiter fails
+//!                    scoped, batcher.hub_panics increments, the hub
+//!                    thread lives on to serve the next round
+//! request deadline ► phase 2b fails just-expired waiters and cancels
+//!                    tasks nobody still covers; the planner's Budget
+//!                    turns the scoped error into stop_reason=deadline
+//!                    with partial stats (anytime result)
+//! ```
+//!
+//! `tests/chaos_soak.rs` drives all four domains at once: 110 seeded
+//! random fault schedules (errors / panics / spikes / stalls from
+//! `benchkit::ChaosModel`) against mixed impatient / abandoning /
+//! patient waiters, asserting the hub still answers afterwards and
+//! that waiters, memory views and decoder-state claims drain to zero.
 //!
 //! **MemView ownership rule:** a round's shared encoder batch is freed
 //! on the device exactly when the *last* member task retires or is

@@ -18,6 +18,15 @@
 //! speculation accounting under `speculation`, including the
 //! `depth_trajectory` the adaptive controller walked.
 //!
+//! Plan requests may also carry a work budget: `max_expansions` (policy
+//! batches) and `max_decode_tokens` (decoder positions), both 0/absent
+//! = unlimited. Every plan response reports `stop_reason`
+//! (`solved | exhausted | deadline | budget | error`); an unsolved plan
+//! that stopped on deadline/budget/error additionally ships the anytime
+//! `partial_route` best-so-far skeleton (when one exists) and, for
+//! `error`, the policy failure message under `plan_error` — the request
+//! itself still answers `ok = true` with its partial statistics.
+//!
 //! Responses mirror the `id` and carry `ok`/`error` plus op-specific
 //! fields; routes serialize as nested `{smiles, logp?, children?}`.
 
@@ -65,6 +74,7 @@ pub fn plan_response(id: i64, r: &SolveResult) -> Json {
         ("id", Json::num(id as f64)),
         ("ok", Json::Bool(true)),
         ("solved", Json::Bool(r.solved)),
+        ("stop_reason", Json::str(r.stop_reason.as_str())),
         ("iterations", Json::num(r.iterations as f64)),
         ("expansions", Json::num(r.expansions as f64)),
         ("wall_ms", Json::num(r.wall_secs * 1e3)),
@@ -97,6 +107,15 @@ pub fn plan_response(id: i64, r: &SolveResult) -> Json {
     if let Some(route) = &r.route {
         fields.push(("route", route_to_json(route)));
         fields.push(("route_depth", Json::num(route.depth() as f64)));
+    }
+    // Anytime result: an unsolved plan that stopped on deadline/budget/
+    // error still ships its best-so-far skeleton (not-yet-expanded
+    // molecules appear as leaves).
+    if let Some(partial) = &r.partial_route {
+        fields.push(("partial_route", route_to_json(partial)));
+    }
+    if let Some(err) = &r.error {
+        fields.push(("plan_error", Json::str(err)));
     }
     Json::obj(fields)
 }
@@ -154,6 +173,48 @@ mod tests {
         let j = route_to_json(&r);
         let back = route_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn plan_response_reports_stop_reason_and_partial_route() {
+        use crate::search::StopReason;
+        let r = SolveResult {
+            solved: false,
+            route: None,
+            stop_reason: StopReason::Deadline,
+            partial_route: Some(Route::Step {
+                smiles: "CC(=O)NC".into(),
+                logp: -0.5,
+                children: vec![Route::Leaf { smiles: "CN".into() }],
+            }),
+            error: None,
+            iterations: 3,
+            expansions: 2,
+            wall_secs: 0.01,
+            decode_stats: Default::default(),
+            spec: Default::default(),
+        };
+        let j = plan_response(9, &r);
+        assert_eq!(j.get("stop_reason").unwrap().as_str(), Some("deadline"));
+        assert!(j.get("route").is_none(), "no closed route on a deadline stop");
+        let partial = j.get("partial_route").expect("anytime skeleton present");
+        assert_eq!(partial.get("smiles").unwrap().as_str(), Some("CC(=O)NC"));
+        // A solved plan reports `solved` and no partial.
+        let solved = SolveResult {
+            solved: true,
+            route: Some(Route::Leaf { smiles: "CCO".into() }),
+            stop_reason: StopReason::Solved,
+            partial_route: None,
+            error: None,
+            iterations: 1,
+            expansions: 0,
+            wall_secs: 0.001,
+            decode_stats: Default::default(),
+            spec: Default::default(),
+        };
+        let j = plan_response(10, &solved);
+        assert_eq!(j.get("stop_reason").unwrap().as_str(), Some("solved"));
+        assert!(j.get("partial_route").is_none());
     }
 
     #[test]

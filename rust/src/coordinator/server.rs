@@ -175,6 +175,13 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
             if let Some(k) = req.get("k").and_then(|x| x.as_usize()) {
                 limits.expansions_per_step = k;
             }
+            // Per-request work budget (0/absent = server default).
+            if let Some(n) = req.get("max_expansions").and_then(|x| x.as_usize()) {
+                limits.max_expansions = n;
+            }
+            if let Some(n) = req.get("max_decode_tokens").and_then(|x| x.as_usize()) {
+                limits.max_decode_tokens = n as u64;
+            }
             let algo = req
                 .get("algo")
                 .and_then(|x| x.as_str())
@@ -220,6 +227,7 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
             match result {
                 Ok(r) => {
                     ctx.metrics.inc(if r.solved { "plan.solved" } else { "plan.unsolved" }, 1);
+                    ctx.metrics.inc(&format!("plan.stop.{}", r.stop_reason), 1);
                     ctx.metrics.gauge_max("plan.spec_in_flight", r.spec.max_in_flight);
                     ctx.metrics.inc("plan.spec_submitted", r.spec.groups_submitted);
                     ctx.metrics.inc("plan.spec_cancelled", r.spec.groups_cancelled);
@@ -294,6 +302,7 @@ mod tests {
                 max_iterations: 50,
                 max_depth: 3,
                 expansions_per_step: 5,
+                ..Default::default()
             },
             default_algo: "retrostar".into(),
             default_beam_width: 1,
@@ -374,6 +383,35 @@ mod tests {
             spec.get("depth_trajectory").and_then(|t| t.as_arr()).is_some(),
             "adaptive plans must report the depth trajectory: {spec:?}"
         );
+    }
+
+    #[test]
+    fn plan_reports_stop_reason_over_protocol() {
+        let ctx = test_ctx();
+        // An expired deadline answers within one scheduler tick with the
+        // `deadline` stop reason — not an error, not a hang.
+        let r = handle_line(
+            "{\"id\":1,\"op\":\"plan\",\"smiles\":\"CC(=O)NCC\",\"deadline_ms\":0}",
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert_eq!(r.get("solved").unwrap().as_bool(), Some(false));
+        assert_eq!(r.get("stop_reason").unwrap().as_str(), Some("deadline"));
+        assert_eq!(ctx.metrics.counter("plan.stop.deadline"), 1);
+        // A request-level expansion budget stops with `budget` and still
+        // reports full statistics.
+        let r = handle_line(
+            "{\"id\":2,\"op\":\"plan\",\"smiles\":\"CC(=O)NCC\",\"deadline_ms\":2000,\
+             \"max_expansions\":1}",
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        let reason = r.get("stop_reason").unwrap().as_str().unwrap().to_string();
+        assert!(
+            reason == "budget" || reason == "solved",
+            "1-expansion budget must trip unless the mock solves instantly: {r:?}"
+        );
+        assert!(r.get("expansions").unwrap().as_usize().unwrap_or(99) <= 1, "{r:?}");
     }
 
     #[test]

@@ -18,7 +18,7 @@ use retroserve::coordinator::server::{Server, ServerCtx};
 use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::make_decoder;
 use retroserve::metrics::Metrics;
-use retroserve::runtime::server::SharedModel;
+use retroserve::runtime::server::{SharedModel, SupervisorConfig};
 use retroserve::runtime::PjrtModel;
 use retroserve::search::{dfs::Dfs, retrostar::RetroStar, Planner, Stock};
 use retroserve::tokenizer::Vocab;
@@ -49,6 +49,7 @@ fn build_hub(
     decoder: &str,
     batch_hint: usize,
     batcher: BatcherConfig,
+    supervise: SupervisorConfig,
     metrics: Arc<Metrics>,
 ) -> Result<(Arc<ExpansionHub>, Arc<Stock>, Vocab)> {
     let vocab = Vocab::load(&std::path::Path::new(artifacts).join("vocab.json"))
@@ -58,7 +59,9 @@ fn build_hub(
             .context("loading stock.txt")?,
     );
     let art = artifacts.to_string();
-    let model = SharedModel::spawn(move || PjrtModel::load(&art))?;
+    // Re-callable factory: a model panic fails only the in-flight call,
+    // then the executor rebuilds from the artifacts on disk.
+    let model = SharedModel::spawn_supervised(move || PjrtModel::load(&art), supervise)?;
     let dec = make_decoder(decoder, batch_hint)?;
     let hub = ExpansionHub::start(model, dec, vocab.clone(), batcher, metrics);
     Ok((hub, stock, vocab))
@@ -82,6 +85,7 @@ fn main() -> Result<()> {
                  retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] \
                  [--deadline-ms N]\n\
                  [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
+                 [--max-expansions N] [--max-decode-tokens N]\n\
                  retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR]\n\
                  retroserve info   [--artifacts DIR]"
             );
@@ -102,6 +106,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "decoder" => cfg.apply_override("planner.decoder", v)?,
             "beam-width" => cfg.apply_override("planner.beam_width", v)?,
             "spec-depth" => cfg.apply_override("planner.spec_depth", v)?,
+            "max-expansions" => cfg.apply_override("planner.max_expansions", v)?,
+            "max-decode-tokens" => cfg.apply_override("planner.max_decode_tokens", v)?,
+            "model-retries" => cfg.apply_override("model.retries", v)?,
+            "model-backoff-us" => cfg.apply_override("model.backoff_us", v)?,
             "config" => {}
             other => cfg.apply_override(other, v)?,
         }
@@ -118,6 +126,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             coalesce: std::time::Duration::from_micros(sc.batch_coalesce_us),
             max_rows: sc.batch_rows,
             cache_cap: sc.cache_cap,
+        },
+        SupervisorConfig {
+            retries: sc.model_retries,
+            backoff_us: sc.model_backoff_us,
+            max_restarts: 3,
+            metrics: Some(metrics.clone()),
         },
         metrics.clone(),
     )?;
@@ -161,6 +175,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         decoder,
         bw.max(1),
         BatcherConfig::default(),
+        SupervisorConfig::default(),
         metrics,
     )?;
     let mut limits = retroserve::search::SearchLimits::default();
@@ -172,6 +187,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     if let Some(k) = args.flags.get("k") {
         limits.expansions_per_step = k.parse()?;
+    }
+    if let Some(n) = args.flags.get("max-expansions") {
+        limits.max_expansions = n.parse()?;
+    }
+    if let Some(n) = args.flags.get("max-decode-tokens") {
+        limits.max_decode_tokens = n.parse()?;
     }
     // --spec-depth N pins the in-flight depth; --spec-depth auto adapts
     // it to the observed apply-rate (bounded by --spec-max, default 8).
@@ -197,14 +218,19 @@ fn cmd_plan(args: &Args) -> Result<()> {
         other => bail!("unknown algo {other}"),
     };
     println!(
-        "solved={} iterations={} expansions={} wall={:.2}s model_calls={} acceptance={:.1}%",
+        "solved={} stop={} iterations={} expansions={} wall={:.2}s model_calls={} \
+         acceptance={:.1}%",
         r.solved,
+        r.stop_reason,
         r.iterations,
         r.expansions,
         r.wall_secs,
         r.decode_stats.model_calls,
         r.decode_stats.acceptance_rate() * 100.0
     );
+    if let Some(err) = &r.error {
+        println!("plan error: {err}");
+    }
     if r.spec.groups_submitted > 0 && sd > 1 {
         println!(
             "speculation: submitted={} applied={} cancelled={} hits={} max_in_flight={} \
@@ -219,6 +245,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     if let Some(route) = &r.route {
         println!("route (depth {}):\n{}", route.depth(), route.render());
+    } else if let Some(partial) = &r.partial_route {
+        println!("partial route (anytime, depth {}):\n{}", partial.depth(), partial.render());
     }
     Ok(())
 }
@@ -229,7 +257,14 @@ fn cmd_expand(args: &Args) -> Result<()> {
     let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
     let k: usize = args.flags.get("k").map(|s| s.parse()).transpose()?.unwrap_or(10);
     let metrics = Arc::new(Metrics::new());
-    let (hub, _, _) = build_hub(artifacts, decoder, 1, BatcherConfig::default(), metrics)?;
+    let (hub, _, _) = build_hub(
+        artifacts,
+        decoder,
+        1,
+        BatcherConfig::default(),
+        SupervisorConfig::default(),
+        metrics,
+    )?;
     let canonical = retroserve::chem::canonicalize(smiles)
         .map_err(|e| anyhow::anyhow!("bad smiles: {e}"))?;
     let t0 = std::time::Instant::now();

@@ -7,8 +7,10 @@
 //! batcher (see [`crate::coordinator`]) builds on this by merging
 //! expansion requests *before* they reach the executor.
 
+use crate::metrics::Metrics;
 use crate::model::{DecodeOut, DecodeRow, MemHandle, StateId, StepModel};
 use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -70,21 +72,216 @@ struct Joiner {
 
 impl Drop for Joiner {
     fn drop(&mut self) {
-        if let Some(tx) = self.tx.lock().unwrap().take() {
+        // Poison-tolerant: a panicking thread elsewhere must not turn
+        // the last handle's drop into a second panic (double-panic
+        // aborts the process).
+        if let Some(tx) = self.tx.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = tx.send(Req::Shutdown);
         }
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = self.handle.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Fault-handling policy for a supervised executor (see
+/// [`SharedModel::spawn_supervised`]).
+#[derive(Clone, Default)]
+pub struct SupervisorConfig {
+    /// Transient-`Err` retries per encode/decode call (0 = fail fast).
+    pub retries: u32,
+    /// Base backoff between retries and restarts, doubled per attempt
+    /// and capped at 100 ms so a flapping model cannot stall shutdown.
+    pub backoff_us: u64,
+    /// Consecutive failed *rebuilds* tolerated after a panic before the
+    /// executor gives up (the panicked call itself always fails).
+    pub max_restarts: u32,
+    /// Counter sink: `model.retries`, `model.panics`, `model.restarts`.
+    pub metrics: Option<Arc<Metrics>>,
+}
+
+/// Outcome of one guarded model call.
+enum Guarded<T> {
+    Ok(T),
+    Err(anyhow::Error),
+    /// The model panicked; the payload message is carried out so the
+    /// caller can reply with a scoped error and trigger a restart.
+    Panicked(String),
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Capped exponential backoff: `base * 2^attempt`, at most 100 ms.
+fn backoff(base_us: u64, attempt: u32) {
+    let us = base_us.max(1).saturating_mul(1u64 << attempt.min(16)).min(100_000);
+    std::thread::sleep(std::time::Duration::from_micros(us));
+}
+
+/// Run one model call with bounded retry on `Err` and panic capture.
+/// Retries sleep an exponentially growing, capped backoff; a panic is
+/// never retried (the model's internal state is unknown).
+fn run_guarded<T>(
+    retries: u32,
+    backoff_us: u64,
+    metrics: Option<&Metrics>,
+    mut op: impl FnMut() -> Result<T>,
+) -> Guarded<T> {
+    let mut attempt = 0u32;
+    loop {
+        match catch_unwind(AssertUnwindSafe(&mut op)) {
+            Ok(Ok(v)) => return Guarded::Ok(v),
+            Ok(Err(e)) => {
+                if attempt >= retries {
+                    return Guarded::Err(e);
+                }
+                if let Some(m) = metrics {
+                    m.inc("model.retries", 1);
+                }
+                backoff(backoff_us, attempt);
+                attempt += 1;
+            }
+            Err(p) => return Guarded::Panicked(panic_msg(p.as_ref())),
+        }
+    }
+}
+
+/// Serve one request against the live model. Replies are always sent —
+/// a panicking call answers its caller with a scoped error *before*
+/// the supervisor decides whether to rebuild the model. Returns the
+/// panic message when the model panicked.
+fn serve_req<M: StepModel>(model: &M, req: Req, cfg: &SupervisorConfig) -> Option<String> {
+    let mx = cfg.metrics.as_deref();
+    match req {
+        Req::Encode(src, reply) => {
+            match run_guarded(cfg.retries, cfg.backoff_us, mx, || model.encode(&src)) {
+                Guarded::Ok(v) => {
+                    let _ = reply.send(Ok(v));
+                    None
+                }
+                Guarded::Err(e) => {
+                    let _ = reply.send(Err(e));
+                    None
+                }
+                Guarded::Panicked(p) => {
+                    let _ = reply.send(Err(anyhow!("model panicked during encode: {p}")));
+                    Some(p)
+                }
+            }
+        }
+        Req::Decode(rows, win, reply) => {
+            match run_guarded(cfg.retries, cfg.backoff_us, mx, || model.decode(&rows, win)) {
+                Guarded::Ok(v) => {
+                    let _ = reply.send(Ok(v));
+                    None
+                }
+                Guarded::Err(e) => {
+                    let _ = reply.send(Err(e));
+                    None
+                }
+                Guarded::Panicked(p) => {
+                    let _ = reply.send(Err(anyhow!("model panicked during decode: {p}")));
+                    Some(p)
+                }
+            }
+        }
+        Req::DecodeInto(rows, win, mut buf, reply) => {
+            let r = run_guarded(cfg.retries, cfg.backoff_us, mx, || {
+                model.decode_into(&rows, win, &mut buf)
+            });
+            match r {
+                Guarded::Ok(()) => {
+                    let _ = reply.send(Ok(buf));
+                    None
+                }
+                Guarded::Err(e) => {
+                    let _ = reply.send(Err(e));
+                    None
+                }
+                Guarded::Panicked(p) => {
+                    let _ = reply.send(Err(anyhow!("model panicked during decode: {p}")));
+                    Some(p)
+                }
+            }
+        }
+        Req::StateCommit(mem, row, parent, delta, reply) => {
+            // No retry: a commit that half-landed before its Err must
+            // not be replayed (it could double-commit the state).
+            match run_guarded(0, cfg.backoff_us, mx, || {
+                model.state_commit(mem, row, parent, &delta)
+            }) {
+                Guarded::Ok(v) => {
+                    let _ = reply.send(Ok(v));
+                    None
+                }
+                Guarded::Err(e) => {
+                    let _ = reply.send(Err(e));
+                    None
+                }
+                Guarded::Panicked(p) => {
+                    let _ = reply.send(Err(anyhow!("model panicked during state_commit: {p}")));
+                    Some(p)
+                }
+            }
+        }
+        // Fire-and-forget ops have no caller to answer; a panic here
+        // still triggers the supervisor.
+        Req::Release(h) => catch_unwind(AssertUnwindSafe(|| model.release(h)))
+            .err()
+            .map(|p| panic_msg(p.as_ref())),
+        Req::StateRetain(s) => catch_unwind(AssertUnwindSafe(|| model.state_retain(s)))
+            .err()
+            .map(|p| panic_msg(p.as_ref())),
+        Req::StateRelease(s) => catch_unwind(AssertUnwindSafe(|| model.state_release(s)))
+            .err()
+            .map(|p| panic_msg(p.as_ref())),
+        Req::Shutdown => None, // handled by the caller; unreachable here
     }
 }
 
 impl SharedModel {
     /// Spawn the executor thread. `make` builds the model *on* that
     /// thread (required: PJRT types are not `Send`).
+    ///
+    /// Unsupervised in the restart sense: a model panic still fails
+    /// only the in-flight call (scoped error instead of a wedged
+    /// caller), but with no re-callable factory the executor cannot
+    /// rebuild — it exits, and later calls see "model thread gone".
     pub fn spawn<F, M>(make: F) -> Result<SharedModel>
     where
         F: FnOnce() -> Result<M> + Send + 'static,
+        M: StepModel + 'static,
+    {
+        let once = Mutex::new(Some(make));
+        SharedModel::spawn_supervised(
+            move || match once.lock().unwrap_or_else(|p| p.into_inner()).take() {
+                Some(f) => f(),
+                None => anyhow::bail!("model factory exhausted (spawn() cannot restart)"),
+            },
+            SupervisorConfig::default(),
+        )
+    }
+
+    /// Spawn a *supervised* executor thread: `make` is a re-callable
+    /// factory, so a model panic is contained to the call it interrupted
+    /// (that caller gets a scoped error) and the worker is rebuilt with
+    /// capped exponential backoff. Transient `Err`s from encode/decode
+    /// are retried up to `cfg.retries` times. Handles from the previous
+    /// incarnation error on next use — exactly the in-flight blast
+    /// radius — while new requests are served by the fresh model.
+    ///
+    /// The handle keeps the *original* model's metadata: a factory must
+    /// rebuild the same model configuration.
+    pub fn spawn_supervised<F, M>(make: F, cfg: SupervisorConfig) -> Result<SharedModel>
+    where
+        F: Fn() -> Result<M> + Send + 'static,
         M: StepModel + 'static,
     {
         let (tx, rx) = mpsc::channel::<Req>();
@@ -92,7 +289,7 @@ impl SharedModel {
         let handle = std::thread::Builder::new()
             .name("model-executor".into())
             .spawn(move || {
-                let model = match make() {
+                let mut model = match make() {
                     Ok(m) => {
                         let _ = meta_tx.send(Ok(Meta {
                             vocab: m.vocab(),
@@ -112,24 +309,45 @@ impl SharedModel {
                     }
                 };
                 while let Ok(req) = rx.recv() {
-                    match req {
-                        Req::Encode(src, reply) => {
-                            let _ = reply.send(model.encode(&src));
+                    if matches!(req, Req::Shutdown) {
+                        break;
+                    }
+                    let Some(_panic) = serve_req(&model, req, &cfg) else {
+                        continue;
+                    };
+                    // The model panicked. Its caller already has a
+                    // scoped error; rebuild the worker so *subsequent*
+                    // requests survive. Consecutive rebuild failures
+                    // are bounded — a factory that cannot produce a
+                    // model ends the executor (callers then observe
+                    // "model thread gone" instead of an infinite
+                    // restart storm).
+                    if let Some(m) = cfg.metrics.as_deref() {
+                        m.inc("model.panics", 1);
+                    }
+                    let mut failures = 0u32;
+                    let rebuilt = loop {
+                        backoff(cfg.backoff_us, failures);
+                        match catch_unwind(AssertUnwindSafe(&make)) {
+                            Ok(Ok(m2)) => break Some(m2),
+                            Ok(Err(_)) | Err(_) => {
+                                failures += 1;
+                                if failures > cfg.max_restarts {
+                                    break None;
+                                }
+                            }
                         }
-                        Req::Decode(rows, win, reply) => {
-                            let _ = reply.send(model.decode(&rows, win));
+                    };
+                    match rebuilt {
+                        Some(m2) => {
+                            // Old incarnation drops here; its device
+                            // memory and decoder states go with it.
+                            model = m2;
+                            if let Some(m) = cfg.metrics.as_deref() {
+                                m.inc("model.restarts", 1);
+                            }
                         }
-                        Req::DecodeInto(rows, win, mut buf, reply) => {
-                            let r = model.decode_into(&rows, win, &mut buf).map(|()| buf);
-                            let _ = reply.send(r);
-                        }
-                        Req::Release(h) => model.release(h),
-                        Req::StateCommit(mem, row, parent, delta, reply) => {
-                            let _ = reply.send(model.state_commit(mem, row, parent, &delta));
-                        }
-                        Req::StateRetain(s) => model.state_retain(s),
-                        Req::StateRelease(s) => model.state_release(s),
-                        Req::Shutdown => break,
+                        None => return,
                     }
                 }
             })?;
@@ -365,5 +583,167 @@ mod tests {
     fn spawn_error_propagates() {
         let r = SharedModel::spawn(|| -> Result<MockModel> { anyhow::bail!("boom") });
         assert!(r.is_err());
+    }
+
+    /// Counts encode calls across model incarnations and faults on a
+    /// scripted subset of them.
+    struct Scripted {
+        inner: MockModel,
+        calls: Arc<std::sync::atomic::AtomicUsize>,
+        /// 1-based global encode calls that panic.
+        panic_on: &'static [usize],
+        /// 1-based global encode calls that return Err.
+        err_on: &'static [usize],
+    }
+
+    impl StepModel for Scripted {
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn medusa_heads(&self) -> usize {
+            self.inner.medusa_heads()
+        }
+        fn max_src(&self) -> usize {
+            self.inner.max_src()
+        }
+        fn max_tgt(&self) -> usize {
+            self.inner.max_tgt()
+        }
+        fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
+            let n = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+            if self.panic_on.contains(&n) {
+                panic!("injected device fault (encode #{n})");
+            }
+            if self.err_on.contains(&n) {
+                anyhow::bail!("injected transient encode error (#{n})");
+            }
+            self.inner.encode(src)
+        }
+        fn decode(&self, rows: &[DecodeRow], win: usize) -> Result<DecodeOut> {
+            self.inner.decode(rows, win)
+        }
+        fn release(&self, mem: MemHandle) {
+            self.inner.release(mem)
+        }
+    }
+
+    #[test]
+    fn supervised_executor_restarts_after_panic() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let metrics = Arc::new(crate::metrics::Metrics::new());
+        let cfg = SupervisorConfig {
+            retries: 0,
+            backoff_us: 10,
+            max_restarts: 3,
+            metrics: Some(metrics.clone()),
+        };
+        let c = calls.clone();
+        let shared = SharedModel::spawn_supervised(
+            move || {
+                Ok(Scripted {
+                    inner: MockModel::new(MockConfig::default()),
+                    calls: c.clone(),
+                    panic_on: &[2],
+                    err_on: &[],
+                })
+            },
+            cfg,
+        )
+        .unwrap();
+        // Call 1 succeeds; call 2 panics — only that caller errors,
+        // with a scoped message, not a wedge or a process abort.
+        let h1 = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        shared.release(h1);
+        let err = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+        // Call 3 lands on the rebuilt incarnation and succeeds.
+        let h3 = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        let out = shared.decode(&[DecodeRow::full(h3, 0, vec![BOS], 0)], 1).unwrap();
+        assert_eq!(out.rows, 1);
+        shared.release(h3);
+        assert_eq!(metrics.counter("model.panics"), 1);
+        assert_eq!(metrics.counter("model.restarts"), 1);
+    }
+
+    #[test]
+    fn transient_errors_are_retried_within_policy() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let metrics = Arc::new(crate::metrics::Metrics::new());
+        let c = calls.clone();
+        let shared = SharedModel::spawn_supervised(
+            move || {
+                Ok(Scripted {
+                    inner: MockModel::new(MockConfig::default()),
+                    calls: c.clone(),
+                    panic_on: &[],
+                    err_on: &[1, 2],
+                })
+            },
+            SupervisorConfig {
+                retries: 3,
+                backoff_us: 10,
+                max_restarts: 0,
+                metrics: Some(metrics.clone()),
+            },
+        )
+        .unwrap();
+        // Two injected failures, then success — the caller never sees
+        // them under retries=3.
+        let h = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        shared.release(h);
+        assert_eq!(metrics.counter("model.retries"), 2);
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn retries_exhausted_surfaces_the_error() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let c = calls.clone();
+        let shared = SharedModel::spawn_supervised(
+            move || {
+                Ok(Scripted {
+                    inner: MockModel::new(MockConfig::default()),
+                    calls: c.clone(),
+                    panic_on: &[],
+                    err_on: &[1, 2, 3],
+                })
+            },
+            SupervisorConfig {
+                retries: 1,
+                backoff_us: 10,
+                max_restarts: 0,
+                metrics: None,
+            },
+        )
+        .unwrap();
+        let err = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap_err();
+        assert!(err.to_string().contains("injected transient"), "{err:#}");
+        // One original attempt + one retry, then fail fast.
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 2);
+        // The executor itself is fine: the next call succeeds.
+        let h = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        shared.release(h);
+    }
+
+    #[test]
+    fn unsupervised_panic_fails_scoped_then_thread_exits() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let c = calls.clone();
+        // `spawn` (FnOnce factory): the panicking call gets a scoped
+        // error; with no re-callable factory the executor exits and
+        // later calls observe the dead thread.
+        let shared = SharedModel::spawn(move || {
+            Ok(Scripted {
+                inner: MockModel::new(MockConfig::default()),
+                calls: c,
+                panic_on: &[1],
+                err_on: &[],
+            })
+        })
+        .unwrap();
+        let err = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+        let err = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap_err();
+        assert!(err.to_string().contains("model thread gone"), "{err:#}");
     }
 }

@@ -5,7 +5,7 @@
 use super::policy::ExpansionPolicy;
 use super::retrostar::DecodeDelta;
 use super::routes::Route;
-use super::{Planner, SearchLimits, SolveResult, Stock};
+use super::{Planner, SearchLimits, SolveResult, StopReason, Stock};
 use anyhow::Result;
 use std::collections::HashSet;
 
@@ -20,14 +20,27 @@ struct Ctx<'a> {
     t0: std::time::Instant,
     iterations: usize,
     expansions: usize,
+    /// Decode tokens already on the policy's counters at solve start.
+    base_tokens: u64,
+    /// First budget dimension that tripped, if any.
+    stopped: Option<StopReason>,
     /// (smiles, remaining budget) proven unsolvable.
     failed: HashSet<(String, usize)>,
 }
 
 impl<'a> Ctx<'a> {
-    fn out_of_budget(&self) -> bool {
-        self.t0.elapsed() >= self.limits.deadline
-            || self.iterations >= self.limits.max_iterations
+    fn out_of_budget(&mut self) -> bool {
+        let budget = super::Budget::start(self.t0, self.limits);
+        // t0-anchored budget: deadline_at is absolute, so re-deriving
+        // the Budget each check is free of drift.
+        let tokens = self.policy.decode_stats().decode_tokens - self.base_tokens;
+        match budget.exceeded(self.iterations, self.expansions, tokens) {
+            Some(reason) => {
+                self.stopped.get_or_insert(reason);
+                true
+            }
+            None => false,
+        }
     }
 
     fn solve_mol(
@@ -113,13 +126,32 @@ impl Planner for Dfs {
             t0,
             iterations: 0,
             expansions: 0,
+            base_tokens: stats0.decode_tokens,
+            stopped: None,
             failed: HashSet::new(),
         };
         let mut path = Vec::new();
-        let route = ctx.solve_mol(&target, limits.max_depth, &mut path)?;
+        // Anytime semantics: a failed policy batch ends the solve with
+        // its partial progress instead of bubbling an Err.
+        let (route, error) = match ctx.solve_mol(&target, limits.max_depth, &mut path) {
+            Ok(route) => (route, None),
+            Err(e) => (None, Some(format!("{e:#}"))),
+        };
+        let stop_reason = if route.is_some() {
+            StopReason::Solved
+        } else if error.is_some() {
+            StopReason::Error
+        } else {
+            ctx.stopped.unwrap_or(StopReason::Exhausted)
+        };
         Ok(SolveResult {
             solved: route.is_some(),
             route,
+            stop_reason,
+            // DFS keeps no AND–OR graph to skim a best-so-far skeleton
+            // from; partial routes are a Retro* feature.
+            partial_route: None,
+            error,
             iterations: ctx.iterations,
             expansions: ctx.expansions,
             wall_secs: t0.elapsed().as_secs_f64(),
@@ -145,7 +177,24 @@ mod tests {
             max_iterations: 500,
             max_depth: 5,
             expansions_per_step: 10,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn dfs_reports_stop_reasons() {
+        let stock = stock_of(&["CC(=O)O", "CN"]);
+        let r = Dfs.solve("CC(=O)NC", &OraclePolicy::new(), &stock, &limits()).unwrap();
+        assert_eq!(r.stop_reason, crate::search::StopReason::Solved);
+        let mut lim = limits();
+        lim.deadline = std::time::Duration::from_millis(0);
+        let r = Dfs.solve("CC(=O)NCC", &OraclePolicy::new(), &stock, &lim).unwrap();
+        assert!(!r.solved);
+        assert_eq!(r.stop_reason, crate::search::StopReason::Deadline);
+        let r = Dfs
+            .solve("CC(=O)NCC", &OraclePolicy::new(), &stock_of(&["CCO"]), &limits())
+            .unwrap();
+        assert_eq!(r.stop_reason, crate::search::StopReason::Exhausted);
     }
 
     #[test]

@@ -36,6 +36,15 @@ pub struct SearchLimits {
     pub max_depth: usize,
     /// Precursor sets requested per expansion (paper: 10).
     pub expansions_per_step: usize,
+    /// Hard cap on policy expansion batches (0 = unlimited). Unlike the
+    /// deadline this is machine-independent, so screening runs can
+    /// bound model work reproducibly.
+    pub max_expansions: usize,
+    /// Hard cap on decoder positions processed (0 = unlimited),
+    /// checked against the policy's cumulative [`DecodeStats`] at the
+    /// selection cadence — the token-budget knob of the request
+    /// [`Budget`].
+    pub max_decode_tokens: u64,
 }
 
 impl Default for SearchLimits {
@@ -45,7 +54,98 @@ impl Default for SearchLimits {
             max_iterations: 35_000,
             max_depth: 5,
             expansions_per_step: 10,
+            max_expansions: 0,
+            max_decode_tokens: 0,
         }
+    }
+}
+
+/// Why a solve stopped. Every [`SolveResult`] carries exactly one of
+/// these; serving layers surface it verbatim (`plan` responses, CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// A closed route was found (first route wins, per the paper).
+    Solved,
+    /// The open set drained without a route — the search space under
+    /// the depth cap is exhausted; more time would not help.
+    Exhausted,
+    /// The wall-clock deadline expired; the result is the anytime
+    /// best-so-far (see [`SolveResult::partial_route`]).
+    Deadline,
+    /// A non-time budget ran out (`max_iterations`, `max_expansions`
+    /// or `max_decode_tokens`).
+    Budget,
+    /// The expansion policy failed mid-search (model error after
+    /// retries); partial progress is still reported, with the message
+    /// in [`SolveResult::error`].
+    Error,
+}
+
+impl StopReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StopReason::Solved => "solved",
+            StopReason::Exhausted => "exhausted",
+            StopReason::Deadline => "deadline",
+            StopReason::Budget => "budget",
+            StopReason::Error => "error",
+        }
+    }
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Runtime view of one request's budget: the wall-clock deadline plus
+/// the optional work caps from [`SearchLimits`], anchored at solve
+/// start. Both search loops consult it once per absorbed expansion
+/// group (the selection cadence), and the pipelined loop additionally
+/// passes `deadline_at` into every blocking wait so an expired request
+/// wakes within one completion-queue timeout rather than hanging on a
+/// wedged model call.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub deadline_at: std::time::Instant,
+    pub max_iterations: usize,
+    pub max_expansions: usize,
+    pub max_decode_tokens: u64,
+}
+
+impl Budget {
+    pub fn start(t0: std::time::Instant, limits: &SearchLimits) -> Budget {
+        Budget {
+            deadline_at: t0 + limits.deadline,
+            max_iterations: limits.max_iterations,
+            max_expansions: limits.max_expansions,
+            max_decode_tokens: limits.max_decode_tokens,
+        }
+    }
+
+    /// First exceeded budget dimension, if any. Deadline outranks the
+    /// work caps so a request that is both late and over-budget reports
+    /// `deadline` (the serving-visible condition).
+    pub fn exceeded(
+        &self,
+        iterations: usize,
+        expansions: usize,
+        decode_tokens: u64,
+    ) -> Option<StopReason> {
+        if std::time::Instant::now() >= self.deadline_at {
+            return Some(StopReason::Deadline);
+        }
+        if iterations >= self.max_iterations {
+            return Some(StopReason::Budget);
+        }
+        if self.max_expansions > 0 && expansions >= self.max_expansions {
+            return Some(StopReason::Budget);
+        }
+        if self.max_decode_tokens > 0 && decode_tokens >= self.max_decode_tokens {
+            return Some(StopReason::Budget);
+        }
+        None
     }
 }
 
@@ -79,6 +179,15 @@ pub struct SpecStats {
 pub struct SolveResult {
     pub solved: bool,
     pub route: Option<Route>,
+    /// Why the solve stopped (`solved` iff `StopReason::Solved`).
+    pub stop_reason: StopReason,
+    /// Anytime result: the best-so-far route skeleton when the solve
+    /// stopped without closing (deadline / budget / error), with open
+    /// (not-yet-purchasable) molecules as leaves. `None` when solved
+    /// (see `route`) or when no expansion landed before the stop.
+    pub partial_route: Option<Route>,
+    /// Policy error that ended the solve (`stop_reason == Error` only).
+    pub error: Option<String>,
     /// Search-algorithm iterations (Retro\*: queue pops; DFS: expansions).
     pub iterations: usize,
     /// Single-step policy invocations (expansion batches).

@@ -78,6 +78,27 @@ pub trait ExpansionHandle {
     }
     /// Block until the batch retires.
     fn wait(self: Box<Self>) -> Result<Vec<Vec<Proposal>>>;
+    /// Block until the batch retires or `deadline` passes. On expiry
+    /// the batch is cancelled (releasing any queued decode work via the
+    /// policy's cancel path) and a scoped "deadline" error is returned
+    /// — only this waiter fails. The default builds on `poll` /
+    /// `wait_event`, so every handle honors a deadline even if it only
+    /// implements the blocking primitives.
+    fn wait_deadline(
+        mut self: Box<Self>,
+        deadline: std::time::Instant,
+    ) -> Result<Vec<Vec<Proposal>>> {
+        loop {
+            if let Some(r) = self.poll() {
+                return r;
+            }
+            if std::time::Instant::now() >= deadline {
+                self.cancel();
+                anyhow::bail!("expansion deadline expired");
+            }
+            self.wait_event(deadline);
+        }
+    }
     /// Abandon the batch: any decode work still queued for it may be
     /// cancelled (speculative expansions invalidated by graph updates).
     fn cancel(self: Box<Self>);
@@ -91,6 +112,21 @@ pub trait ExpansionHandle {
 pub trait AsyncExpansionPolicy: ExpansionPolicy {
     /// Start expanding a batch of canonical product SMILES.
     fn submit(&self, molecules: &[&str], k: usize) -> Result<Box<dyn ExpansionHandle>>;
+
+    /// As [`AsyncExpansionPolicy::submit`], carrying the request
+    /// budget's wall-clock deadline. Policies backed by a serving hub
+    /// forward it so the *hub* can expire the waiter and cancel its
+    /// task even if the submitting thread never polls again; the
+    /// default ignores the deadline (blocking adapters evaluate at
+    /// submit time, so there is nothing to expire).
+    fn submit_deadline(
+        &self,
+        molecules: &[&str],
+        k: usize,
+        _deadline: std::time::Instant,
+    ) -> Result<Box<dyn ExpansionHandle>> {
+        self.submit(molecules, k)
+    }
 }
 
 /// Adapter: any blocking policy as an async one. `submit` evaluates the

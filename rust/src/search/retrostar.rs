@@ -35,7 +35,7 @@
 
 use super::policy::{AsyncExpansionPolicy, EagerAsync, ExpansionHandle, ExpansionPolicy};
 use super::routes::Route;
-use super::{Planner, SearchLimits, SolveResult, SpecStats, Stock};
+use super::{Budget, Planner, SearchLimits, SolveResult, SpecStats, StopReason, Stock};
 use anyhow::Result;
 use std::collections::{HashMap, HashSet, VecDeque};
 
@@ -355,6 +355,65 @@ impl Graph {
         visited.pop();
         result
     }
+
+    /// Anytime extraction: the best-so-far route skeleton from the
+    /// root, with still-open molecules as leaves. Unlike
+    /// [`Graph::best_route`] this never fails on an unexpanded node —
+    /// it reports how far the search got, for deadline/budget stops.
+    /// Returns `None` only when the root has no usable expansion yet.
+    fn partial_route(&self, m: usize, visited: &mut Vec<usize>) -> Option<Route> {
+        let node = &self.mols[m];
+        if node.in_stock {
+            return Some(Route::Leaf { smiles: node.smiles.clone() });
+        }
+        if !node.expanded || node.dead || visited.contains(&m) {
+            // Open frontier (or dead end): report the molecule itself.
+            return if m == 0 { None } else { Some(Route::Leaf { smiles: node.smiles.clone() }) };
+        }
+        visited.push(m);
+        // argmin reaction by cost + sum V, ignoring infinities — any
+        // grafted reaction beats reporting the bare product.
+        let mut best: Option<(f64, usize)> = None;
+        for &ri in &node.child_rxns {
+            let total: f64 = self.rxns[ri].cost
+                + self.rxns[ri]
+                    .reactants
+                    .iter()
+                    .map(|&c| {
+                        let v = self.mols[c].v;
+                        if v.is_finite() {
+                            v
+                        } else {
+                            0.0
+                        }
+                    })
+                    .sum::<f64>();
+            if best.map(|(b, _)| total < b).unwrap_or(true) {
+                best = Some((total, ri));
+            }
+        }
+        let result = best.and_then(|(_, ri)| {
+            let mut children = Vec::new();
+            for &c in &self.rxns[ri].reactants {
+                children.push(self.partial_route(c, visited)?);
+            }
+            Some(Route::Step {
+                smiles: node.smiles.clone(),
+                logp: self.rxns[ri].logp,
+                children,
+            })
+        });
+        visited.pop();
+        if result.is_none() && m != 0 {
+            return Some(Route::Leaf { smiles: node.smiles.clone() });
+        }
+        result
+    }
+
+    /// Best-so-far partial route from the root, for anytime results.
+    fn anytime_route(&self) -> Option<Route> {
+        self.partial_route(0, &mut Vec::new())
+    }
 }
 
 /// One in-flight expansion group of the pipelined loop.
@@ -394,6 +453,7 @@ impl Planner for RetroStar {
         let t0 = std::time::Instant::now();
         let target = crate::chem::canonicalize(target)
             .map_err(|e| anyhow::anyhow!("target does not parse: {e}"))?;
+        let budget = Budget::start(t0, limits);
         let stats0 = policy.decode_stats();
         let mut g = Graph::new(&target, stock);
         let mut iterations = 0usize;
@@ -404,6 +464,9 @@ impl Planner for RetroStar {
             return Ok(SolveResult {
                 solved: true,
                 route: Some(Route::Leaf { smiles: target }),
+                stop_reason: StopReason::Solved,
+                partial_route: None,
+                error: None,
                 iterations: 0,
                 expansions: 0,
                 wall_secs: t0.elapsed().as_secs_f64(),
@@ -412,22 +475,42 @@ impl Planner for RetroStar {
             });
         }
 
-        loop {
-            if t0.elapsed() >= limits.deadline || iterations >= limits.max_iterations {
-                break;
+        let stop = loop {
+            let tokens = DecodeDelta::delta(policy, &stats0).decode_tokens;
+            if let Some(reason) = budget.exceeded(iterations, expansions, tokens) {
+                break reason;
             }
             g.recompute(limits.max_depth);
             // Select up to beam_width open molecules with smallest b.
             let mut open = g.ranked_open(limits.max_depth);
             if open.is_empty() {
-                break; // search space exhausted
+                break StopReason::Exhausted; // search space exhausted
             }
             open.truncate(self.beam_width);
             iterations += open.len();
             expansions += 1;
 
             let mols: Vec<&str> = open.iter().map(|&i| g.mols[i].smiles.as_str()).collect();
-            let proposals = policy.expand_batch(&mols, limits.expansions_per_step)?;
+            let proposals = match policy.expand_batch(&mols, limits.expansions_per_step) {
+                Ok(p) => p,
+                Err(e) => {
+                    // Anytime semantics: a failed policy batch ends the
+                    // solve with its partial progress, not an Err.
+                    g.recompute(limits.max_depth);
+                    return Ok(SolveResult {
+                        solved: false,
+                        route: None,
+                        stop_reason: StopReason::Error,
+                        partial_route: g.anytime_route(),
+                        error: Some(format!("{e:#}")),
+                        iterations,
+                        expansions,
+                        wall_secs: t0.elapsed().as_secs_f64(),
+                        decode_stats: DecodeDelta::delta(policy, &stats0),
+                        spec: SpecStats::default(),
+                    });
+                }
+            };
             for (slot, props) in open.iter().zip(proposals.into_iter()) {
                 g.apply_expansion(*slot, props, stock);
             }
@@ -437,6 +520,9 @@ impl Planner for RetroStar {
                 return Ok(SolveResult {
                     solved: true,
                     route: Some(route),
+                    stop_reason: StopReason::Solved,
+                    partial_route: None,
+                    error: None,
                     iterations,
                     expansions,
                     wall_secs: t0.elapsed().as_secs_f64(),
@@ -444,10 +530,13 @@ impl Planner for RetroStar {
                     spec: SpecStats::default(),
                 });
             }
-        }
+        };
         Ok(SolveResult {
             solved: false,
             route: None,
+            stop_reason: stop,
+            partial_route: g.anytime_route(),
+            error: None,
             iterations,
             expansions,
             wall_secs: t0.elapsed().as_secs_f64(),
@@ -476,6 +565,7 @@ impl RetroStar {
         let t0 = std::time::Instant::now();
         let target = crate::chem::canonicalize(target)
             .map_err(|e| anyhow::anyhow!("target does not parse: {e}"))?;
+        let budget = Budget::start(t0, limits);
         let stats0 = policy.decode_stats();
         let mut g = Graph::new(&target, stock);
         let mut iterations = 0usize;
@@ -483,11 +573,15 @@ impl RetroStar {
         let mut spec = SpecStats::default();
         spec.depth_trajectory.push(cur_depth as u64);
         let mut inflight: VecDeque<Pending> = VecDeque::new();
+        let mut error: Option<String> = None;
 
         if g.mols[0].in_stock {
             return Ok(SolveResult {
                 solved: true,
                 route: Some(Route::Leaf { smiles: target }),
+                stop_reason: StopReason::Solved,
+                partial_route: None,
+                error: None,
                 iterations: 0,
                 expansions: 0,
                 wall_secs: t0.elapsed().as_secs_f64(),
@@ -496,16 +590,17 @@ impl RetroStar {
             });
         }
 
-        let solved = 'search: loop {
+        let (solved, stop) = 'search: loop {
             // Budget gate: the same predicate, at the same cadence (once
             // per absorbed group), as the sequential loop.
-            if t0.elapsed() >= limits.deadline || iterations >= limits.max_iterations {
-                break 'search None;
+            let tokens = DecodeDelta::delta_async(policy, &stats0).decode_tokens;
+            if let Some(reason) = budget.exceeded(iterations, expansions, tokens) {
+                break 'search (None, reason);
             }
             g.recompute(limits.max_depth);
             let ranked = g.ranked_open(limits.max_depth);
             if ranked.is_empty() && inflight.is_empty() {
-                break 'search None; // search space exhausted
+                break 'search (None, StopReason::Exhausted); // search space exhausted
             }
 
             // Cancel speculations the last graph update invalidated: a
@@ -554,13 +649,13 @@ impl RetroStar {
                     group.iter().map(|&i| g.mols[i].smiles.clone()).collect();
                 let refs: Vec<&str> = smiles.iter().map(String::as_str).collect();
                 let speculative = !inflight.is_empty();
-                let handle = match policy.submit(&refs, limits.expansions_per_step) {
+                let submitted =
+                    policy.submit_deadline(&refs, limits.expansions_per_step, budget.deadline_at);
+                let handle = match submitted {
                     Ok(h) => h,
                     Err(e) => {
-                        for p in inflight.drain(..) {
-                            p.cancel();
-                        }
-                        return Err(e);
+                        error = Some(format!("{e:#}"));
+                        break 'search (None, StopReason::Error);
                     }
                 };
                 spec.groups_submitted += 1;
@@ -568,26 +663,19 @@ impl RetroStar {
             }
             spec.max_in_flight = spec.max_in_flight.max(inflight.len() as u64);
             if inflight.is_empty() {
-                break 'search None; // nothing expandable remains
+                break 'search (None, StopReason::Exhausted); // nothing expandable remains
             }
 
             // Absorb the next completion in arrival order (oldest-first
-            // sweeps break ties deterministically). A single in-flight
-            // group blocks outright — the sequential shape, which the
-            // spec_depth = 1 parity relies on.
+            // sweeps break ties deterministically; at spec_depth = 1 the
+            // single group completes before anything else happens — the
+            // sequential shape the parity tests rely on). The wait is
+            // deadline-aware on every path: an expired budget breaks
+            // out and the post-loop drain cancels whatever is in
+            // flight, releasing its rows, views and decoder states.
             let done: Pending;
             let results: Vec<Vec<crate::search::Proposal>>;
-            if inflight.len() == 1 {
-                let mut p = inflight.pop_front().expect("one in flight");
-                match p.handle.take().expect("pending handle").wait() {
-                    Ok(r) => {
-                        done = p;
-                        results = r;
-                    }
-                    Err(e) => return Err(e),
-                }
-            } else {
-                let deadline_at = t0 + limits.deadline;
+            {
                 let mut found: Option<(usize, Result<Vec<Vec<crate::search::Proposal>>>)>;
                 loop {
                     found = None;
@@ -600,8 +688,8 @@ impl RetroStar {
                     if found.is_some() {
                         break;
                     }
-                    if t0.elapsed() >= limits.deadline {
-                        break 'search None; // deadline while waiting
+                    if std::time::Instant::now() >= budget.deadline_at {
+                        break 'search (None, StopReason::Deadline); // deadline while waiting
                     }
                     // Block on completion events until any group could
                     // have finished (all groups share the policy's
@@ -614,7 +702,7 @@ impl RetroStar {
                         .handle
                         .as_mut()
                         .expect("pending handle")
-                        .wait_event(deadline_at);
+                        .wait_event(budget.deadline_at);
                 }
                 match found.expect("loop exits with a completion") {
                     (i, Ok(r)) => {
@@ -625,10 +713,8 @@ impl RetroStar {
                     }
                     (i, Err(e)) => {
                         let _ = inflight.remove(i); // its handle is spent
-                        for p in inflight.drain(..) {
-                            p.cancel();
-                        }
-                        return Err(e);
+                        error = Some(format!("{e:#}"));
+                        break 'search (None, StopReason::Error);
                     }
                 }
             }
@@ -652,16 +738,23 @@ impl RetroStar {
             // Closed-route check (first route wins, per the paper).
             g.recompute(limits.max_depth);
             if let Some(route) = g.closed_route(stock) {
-                break 'search Some(route);
+                break 'search (Some(route), StopReason::Solved);
             }
         };
 
+        // Cooperative cancellation: every still-in-flight group is
+        // cancelled (hub futures send Cancel on the existing path,
+        // freeing rows, encoder memory views and decoder states).
         for p in inflight.drain(..) {
             p.cancel();
         }
+        let partial_route = if solved.is_none() { g.anytime_route() } else { None };
         Ok(SolveResult {
             solved: solved.is_some(),
             route: solved,
+            stop_reason: stop,
+            partial_route,
+            error,
             iterations,
             expansions,
             wall_secs: t0.elapsed().as_secs_f64(),
@@ -725,6 +818,7 @@ mod tests {
             max_iterations: 500,
             max_depth: 5,
             expansions_per_step: 10,
+            ..Default::default()
         }
     }
 
@@ -787,6 +881,74 @@ mod tests {
             .solve("CC(=O)NCC", &OraclePolicy::new(), &stock, &lim)
             .unwrap();
         assert!(!r.solved);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.stop_reason, StopReason::Deadline);
+        assert!(r.partial_route.is_none(), "no expansion landed before expiry");
+    }
+
+    #[test]
+    fn stop_reasons_cover_solved_and_exhausted() {
+        let stock = stock_of(&["CC(=O)O", "CN"]);
+        let r = RetroStar::default()
+            .solve("CC(=O)NC", &OraclePolicy::new(), &stock, &limits())
+            .unwrap();
+        assert_eq!(r.stop_reason, StopReason::Solved);
+        assert!(r.partial_route.is_none());
+        let r = RetroStar::default()
+            .solve("CC(=O)NCC", &OraclePolicy::new(), &stock_of(&["CCO"]), &limits())
+            .unwrap();
+        assert!(!r.solved);
+        assert_eq!(r.stop_reason, StopReason::Exhausted);
+    }
+
+    #[test]
+    fn expansion_budget_stops_with_partial_route() {
+        let stock = stock_of(&["CC(=O)O", "NCC(=O)O", "CCO"]);
+        let mut lim = limits();
+        lim.max_expansions = 1; // the two-step route needs more than one batch
+        let r = RetroStar::default()
+            .solve("CC(=O)NCC(=O)OCC", &OraclePolicy::new(), &stock, &lim)
+            .unwrap();
+        assert!(!r.solved);
+        assert_eq!(r.stop_reason, StopReason::Budget);
+        assert_eq!(r.expansions, 1);
+        let partial = r.partial_route.expect("one expansion landed: skeleton exists");
+        assert!(!partial.closed_over(&stock), "anytime route has open leaves");
+        // The pipelined loop applies the same budget at the same cadence.
+        let pol = OraclePolicy::new();
+        let pip = RetroStar::new(1)
+            .solve_pipelined("CC(=O)NCC(=O)OCC", &EagerAsync(&pol), &stock, &lim)
+            .unwrap();
+        assert_eq!(pip.stop_reason, StopReason::Budget);
+        assert_eq!(pip.expansions, 1);
+        assert!(pip.partial_route.is_some());
+    }
+
+    #[test]
+    fn decode_token_budget_is_enforced() {
+        // The oracle policy decodes nothing, so a token budget can only
+        // trip via the cap = 0 sentinel staying disabled.
+        let stock = stock_of(&["CC(=O)O", "CN"]);
+        let mut lim = limits();
+        lim.max_decode_tokens = u64::MAX; // effectively unlimited
+        let r = RetroStar::default()
+            .solve("CC(=O)NC", &OraclePolicy::new(), &stock, &lim)
+            .unwrap();
+        assert_eq!(r.stop_reason, StopReason::Solved);
+    }
+
+    #[test]
+    fn pipelined_deadline_reports_deadline_stop() {
+        let stock = stock_of(&["CCO"]);
+        let mut lim = limits();
+        lim.deadline = std::time::Duration::from_millis(0);
+        let pol = OraclePolicy::new();
+        let r = RetroStar::new(1)
+            .with_spec_depth(3)
+            .solve_pipelined("CC(=O)NCC", &EagerAsync(&pol), &stock, &lim)
+            .unwrap();
+        assert!(!r.solved);
+        assert_eq!(r.stop_reason, StopReason::Deadline);
         assert_eq!(r.iterations, 0);
     }
 

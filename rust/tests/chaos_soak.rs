@@ -1,0 +1,386 @@
+//! Chaos-injection soak suite — the fault-tolerance acceptance tests.
+//!
+//! Three layers, matching the serving stack's failure domains:
+//!
+//! 1. **Stop reasons** — a deadline expiring mid-decode (and while
+//!    speculative groups are in flight) yields `StopReason::Deadline`
+//!    promptly; an exhausted work budget under the adaptive pipeline
+//!    yields `StopReason::Budget`. Both are anytime returns, not hangs.
+//! 2. **Supervision** — a flaky [`ChaosModel`] behind
+//!    [`SharedModel::spawn_supervised`] has its transient errors
+//!    retried within policy, surfaces them scoped once retries are
+//!    exhausted, and an injected *panic* fails only the in-flight call:
+//!    the same `ExpansionHub` serves the next request after the
+//!    executor rebuilds the model.
+//! 3. **The soak** — 110 seeded-random fault schedules (errors, panics,
+//!    latency spikes, stalls) against a hub with mixed impatient /
+//!    abandoning / cancelling / patient waiters. After every schedule
+//!    the hub must still answer, and waiters, decode tasks, scheduler
+//!    slots, live device memory and decoder-state claims must all
+//!    drain to zero — no leak under any schedule.
+
+use retroserve::benchkit::{ChaosConfig, ChaosModel, InstrumentedModel};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::BatchedPolicy;
+use retroserve::decoding::beam::BeamSearch;
+use retroserve::metrics::Metrics;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::StepModel;
+use retroserve::runtime::server::{SharedModel, SupervisorConfig};
+use retroserve::search::{retrostar::RetroStar, SearchLimits, Stock, StopReason};
+use retroserve::tokenizer::{Vocab, BOS, EOS};
+use retroserve::util::Rng;
+use std::sync::atomic::{AtomicBool, AtomicIsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Molecules the mock's copy task can expand (the dotted one splits
+/// into a 2-component proposal); the vocab is built over exactly these.
+const POOL: [&str; 3] = ["CC(=O)NC", "CC(=O)O.CN", "CCO"];
+
+fn vocab() -> Vocab {
+    Vocab::build(POOL)
+}
+
+/// Injected panics are part of the test plan; mute their default
+/// stderr spew so the harness output stays readable. Anything that is
+/// not a `ChaosModel` injection still prints through the prior hook.
+fn mute_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains("chaos: injected"))
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Block until the hub's bookkeeping and both device-side probes drain
+/// to zero, or fail with the seed so the schedule can be replayed.
+fn assert_drained(hub: &ExpansionHub, live: &AtomicIsize, claims: &AtomicIsize, seed: u64) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let snap = hub
+            .debug_snapshot()
+            .unwrap_or_else(|e| panic!("seed {seed}: hub unreachable while draining: {e:#}"));
+        let l = live.load(Ordering::SeqCst);
+        let c = claims.load(Ordering::SeqCst);
+        if snap.waiting_molecules == 0
+            && snap.decode_tasks == 0
+            && snap.sched_in_flight == 0
+            && l == 0
+            && c == 0
+        {
+            return;
+        }
+        if Instant::now() >= deadline {
+            panic!(
+                "seed {seed}: leak after fault schedule: waiters={} tasks={} sched={} \
+                 live_mem={l} state_claims={c}",
+                snap.waiting_molecules, snap.decode_tasks, snap.sched_in_flight
+            );
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Hub over an instrumented mock (live-memory + state-claim probes)
+/// wrapped in a seeded chaos layer.
+fn chaos_hub(seed: u64, live: Arc<AtomicIsize>, claims: Arc<AtomicIsize>) -> Arc<ExpansionHub> {
+    let vocab = vocab();
+    let mock = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+    let instr = InstrumentedModel::new(mock).with_live_counter(live).with_state_counter(claims);
+    let cfg = ChaosConfig {
+        seed,
+        encode_error_rate: 0.10,
+        decode_error_rate: 0.10,
+        encode_panic_rate: 0.04,
+        decode_panic_rate: 0.04,
+        delay_rate: 0.20,
+        delay: Duration::from_micros(300),
+        stall_rate: 0.04,
+        stall: Duration::from_millis(4),
+        ..Default::default()
+    };
+    ExpansionHub::start(
+        ChaosModel::new(instr, cfg),
+        Box::new(BeamSearch::optimized()),
+        vocab,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    )
+}
+
+/// Hub over a fault-free instrumented mock with a fixed decode delay
+/// (for deadline-mid-decode scenarios) plus the same leak probes.
+fn slow_hub(
+    decode_delay: Duration,
+    live: Arc<AtomicIsize>,
+    claims: Arc<AtomicIsize>,
+) -> Arc<ExpansionHub> {
+    let vocab = vocab();
+    let mock = MockModel::new(MockConfig { vocab: vocab.len(), ..Default::default() });
+    let instr = InstrumentedModel::new(mock)
+        .with_decode_delay(decode_delay)
+        .with_live_counter(live)
+        .with_state_counter(claims);
+    ExpansionHub::start(
+        instr,
+        Box::new(BeamSearch::optimized()),
+        vocab,
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+        Arc::new(Metrics::new()),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Stop reasons: deadline and budget are anytime returns, never hangs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_mid_decode_stops_with_anytime_result() {
+    // Decode takes 30 ms per model call; the request deadline is 20 ms,
+    // so it expires while the first expansion group is still decoding.
+    let live = Arc::new(AtomicIsize::new(0));
+    let claims = Arc::new(AtomicIsize::new(0));
+    let hub = slow_hub(Duration::from_millis(30), live.clone(), claims.clone());
+    let policy = BatchedPolicy::new(hub.clone());
+    let stock = Stock::new();
+    let limits = SearchLimits {
+        deadline: Duration::from_millis(20),
+        max_iterations: 10_000,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = RetroStar::new(1)
+        .solve_pipelined("CC(=O)O.CN", &policy, &stock, &limits)
+        .unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(r.stop_reason, StopReason::Deadline, "expected a deadline stop");
+    assert!(!r.solved);
+    assert!(r.error.is_none());
+    // Anytime contract: the solve returns promptly after expiry instead
+    // of riding out the wedged model call.
+    assert!(wall < Duration::from_secs(2), "anytime return took {wall:?}");
+    // The in-flight group was withdrawn: nothing may stay allocated.
+    assert_drained(&hub, &live, &claims, 0);
+}
+
+#[test]
+fn deadline_expiry_cancels_speculative_groups_in_flight() {
+    let live = Arc::new(AtomicIsize::new(0));
+    let claims = Arc::new(AtomicIsize::new(0));
+    let hub = slow_hub(Duration::from_millis(12), live.clone(), claims.clone());
+    let policy = BatchedPolicy::new(hub.clone());
+    let stock = Stock::new();
+    let limits = SearchLimits {
+        deadline: Duration::from_millis(30),
+        max_iterations: 10_000,
+        ..Default::default()
+    };
+    // Depth 4 keeps several speculative groups in flight when the
+    // deadline fires; all of them must unwind through the cancel path.
+    let r = RetroStar::new(1)
+        .with_spec_depth(4)
+        .solve_pipelined("CC(=O)O.CN", &policy, &stock, &limits)
+        .unwrap();
+    assert_eq!(r.stop_reason, StopReason::Deadline);
+    assert!(!r.solved);
+    assert!(r.spec.groups_submitted >= 1);
+    assert_drained(&hub, &live, &claims, 0);
+}
+
+#[test]
+fn budget_exhaustion_reports_budget_under_adaptive_spec_depth() {
+    let live = Arc::new(AtomicIsize::new(0));
+    let claims = Arc::new(AtomicIsize::new(0));
+    let hub = slow_hub(Duration::ZERO, live.clone(), claims.clone());
+    let policy = BatchedPolicy::new(hub.clone());
+    let stock = Stock::new();
+    let limits = SearchLimits {
+        deadline: Duration::from_secs(5),
+        max_expansions: 1,
+        ..Default::default()
+    };
+    // `spec_depth = auto` must respect the expansion cap exactly: one
+    // group is absorbed, then the budget gate stops the search before
+    // the empty-open-set check can claim exhaustion.
+    let r = RetroStar::new(1)
+        .with_adaptive_spec_depth(8)
+        .solve_pipelined("CC(=O)NC", &policy, &stock, &limits)
+        .unwrap();
+    assert_eq!(r.stop_reason, StopReason::Budget, "expected a budget stop");
+    assert!(!r.solved);
+    assert!(r.expansions <= 1, "cap of 1 but absorbed {} groups", r.expansions);
+    assert_drained(&hub, &live, &claims, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Supervision: flaky ChaosModel behind the supervised executor.
+// ---------------------------------------------------------------------------
+
+fn tok_src() -> Vec<Vec<i32>> {
+    vec![vec![BOS, 5, 6, 7, EOS]]
+}
+
+#[test]
+fn flaky_chaos_model_retries_then_succeeds_under_supervision() {
+    let metrics = Arc::new(Metrics::new());
+    let shared = SharedModel::spawn_supervised(
+        || {
+            Ok(ChaosModel::new(
+                MockModel::new(MockConfig::default()),
+                ChaosConfig { err_on_encode: vec![1, 2], ..Default::default() },
+            ))
+        },
+        SupervisorConfig {
+            retries: 3,
+            backoff_us: 50,
+            max_restarts: 3,
+            metrics: Some(metrics.clone()),
+        },
+    )
+    .unwrap();
+    // Calls 1 and 2 are scripted transient errors; call 3 succeeds
+    // within the retry budget, so the caller never sees the flake.
+    let mem = shared.encode(&tok_src()).expect("retries must absorb the transient errors");
+    shared.release(mem);
+    assert_eq!(metrics.counter("model.retries"), 2);
+    assert_eq!(metrics.counter("model.panics"), 0);
+}
+
+#[test]
+fn flaky_chaos_model_exhausts_retries_and_surfaces_the_error() {
+    let shared = SharedModel::spawn_supervised(
+        || {
+            Ok(ChaosModel::new(
+                MockModel::new(MockConfig::default()),
+                ChaosConfig { err_on_encode: vec![1, 2, 3], ..Default::default() },
+            ))
+        },
+        SupervisorConfig { retries: 1, backoff_us: 50, max_restarts: 3, metrics: None },
+    )
+    .unwrap();
+    // retries = 1 allows two attempts (calls 1, 2) — both scripted to
+    // fail, so the original error reaches the caller, scoped.
+    let err = shared.encode(&tok_src()).unwrap_err();
+    assert!(format!("{err:#}").contains("injected encode error"), "{err:#}");
+    // The executor itself stays healthy: call 3 errs, its retry (call
+    // 4) is past the script and succeeds.
+    let mem = shared.encode(&tok_src()).expect("executor must survive exhausted retries");
+    shared.release(mem);
+}
+
+#[test]
+fn supervised_hub_survives_an_executor_panic() {
+    mute_injected_panics();
+    let vocab = vocab();
+    let vlen = vocab.len();
+    let armed = Arc::new(AtomicBool::new(true));
+    let metrics = Arc::new(Metrics::new());
+    let model = SharedModel::spawn_supervised(
+        move || {
+            // Only the first incarnation carries the panic script; the
+            // rebuilt model must come back healthy, as a real reload
+            // from artifacts would.
+            let script = if armed.swap(false, Ordering::SeqCst) { vec![1] } else { Vec::new() };
+            Ok(ChaosModel::new(
+                MockModel::new(MockConfig { vocab: vlen, ..Default::default() }),
+                ChaosConfig { panic_on_decode: script, ..Default::default() },
+            ))
+        },
+        SupervisorConfig {
+            retries: 0,
+            backoff_us: 50,
+            max_restarts: 3,
+            metrics: Some(metrics.clone()),
+        },
+    )
+    .unwrap();
+    let hub = ExpansionHub::start(
+        model,
+        Box::new(BeamSearch::optimized()),
+        vocab,
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+        Arc::new(Metrics::new()),
+    );
+    // The first expansion hits the injected decode panic: it fails
+    // *scoped* — an error naming the panic, not a poisoned hub.
+    let err = hub.expand("CC(=O)O.CN", 3).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panicked"), "expected a scoped panic error, got: {msg}");
+    // After the supervised restart the very same hub serves again.
+    let proposals = hub.expand("CC(=O)O.CN", 3).expect("hub must survive the model restart");
+    assert!(!proposals.is_empty());
+    assert_eq!(metrics.counter("model.panics"), 1);
+    assert_eq!(metrics.counter("model.restarts"), 1);
+}
+
+// ---------------------------------------------------------------------------
+// The soak: randomized fault schedules, mixed waiter behaviours.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn randomized_fault_schedules_never_leak() {
+    mute_injected_panics();
+    for seed in 0..110u64 {
+        let live = Arc::new(AtomicIsize::new(0));
+        let claims = Arc::new(AtomicIsize::new(0));
+        let hub = chaos_hub(seed, live.clone(), claims.clone());
+        let mut rng = Rng::new(seed ^ 0x51ab);
+        for _ in 0..6 {
+            let smiles = POOL[rng.gen_range(POOL.len())];
+            let k = 1 + rng.gen_range(4);
+            match rng.gen_range(4) {
+                0 => {
+                    // Impatient: a tight deadline that may expire
+                    // mid-flight; expiry must withdraw the request.
+                    let d = Instant::now() + Duration::from_millis(rng.gen_range(4) as u64);
+                    let fut = hub.submit_deadline(smiles, k, Some(d)).unwrap();
+                    let _ = fut.wait_deadline(d);
+                }
+                1 => {
+                    // Abandoning: poll once, then drop (drop-cancels).
+                    let mut fut = hub.submit(smiles, k).unwrap();
+                    let _ = fut.poll();
+                }
+                2 => {
+                    // Cancelling: explicit withdrawal.
+                    hub.submit(smiles, k).unwrap().cancel();
+                }
+                _ => {
+                    // Patient: any completion (Ok, or a scoped fault
+                    // error) is acceptable; only a hang is not.
+                    let d = Instant::now() + Duration::from_secs(2);
+                    let fut = hub.submit_deadline(smiles, k, Some(d)).unwrap();
+                    let _ = fut.wait_deadline(d);
+                }
+            }
+            std::thread::sleep(Duration::from_micros(rng.gen_range(400) as u64));
+        }
+        // Liveness probe: whatever the schedule injected, the hub must
+        // still answer. A scoped fault error is fine; "hub gone" (dead
+        // hub thread) or an expired generous deadline (wedge) is not.
+        let d = Instant::now() + Duration::from_secs(2);
+        let probe = hub.submit_deadline("CCO", 2, Some(d)).unwrap();
+        if let Err(e) = probe.wait_deadline(d) {
+            let msg = format!("{e:#}");
+            assert!(
+                !msg.contains("hub gone") && !msg.contains("deadline expired"),
+                "seed {seed}: hub wedged after fault schedule: {msg}"
+            );
+        }
+        assert_drained(&hub, &live, &claims, seed);
+    }
+}

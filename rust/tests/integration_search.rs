@@ -38,6 +38,7 @@ fn limits() -> SearchLimits {
         max_iterations: 300,
         max_depth: 5,
         expansions_per_step: 10,
+        ..Default::default()
     }
 }
 

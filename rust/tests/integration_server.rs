@@ -44,6 +44,7 @@ fn ctx() -> ServerCtx {
             max_iterations: 30,
             max_depth: 3,
             expansions_per_step: 5,
+            ..Default::default()
         },
         default_algo: "retrostar".into(),
         default_beam_width: 1,

@@ -30,6 +30,7 @@ fn limits() -> SearchLimits {
         max_iterations: 120,
         max_depth: 5,
         expansions_per_step: 8,
+        ..Default::default()
     }
 }
 

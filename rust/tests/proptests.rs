@@ -165,6 +165,7 @@ fn prop_solved_routes_are_closed_and_depth_capped() {
         max_iterations: 200,
         max_depth: 5,
         expansions_per_step: 10,
+        ..Default::default()
     };
     let planner = RetroStar::new(1);
     let policy = OraclePolicy::new();
