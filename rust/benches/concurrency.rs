@@ -1,5 +1,7 @@
 //! Concurrency bench: request-granularity serving vs cycle-level fused
-//! scheduling, at 1 / 4 / 16 concurrent mock planning sessions.
+//! scheduling, at 1 / 4 / 16 / 64 / 256 concurrent mock planning
+//! sessions (the 64/256 rows are the single-hub reference points for
+//! `BENCH_sharded.json`'s scaling comparison).
 //!
 //! Closed-loop simulation: each session issues a chain of expansion
 //! requests (one molecule each, varied length), issuing the next the
@@ -86,6 +88,7 @@ struct RunReport {
     avg_effective_batch: f64,
     p50_ms: f64,
     p95_ms: f64,
+    p99_ms: f64,
     wall_ms: f64,
     allocs_per_tick_steady: f64,
 }
@@ -121,6 +124,7 @@ fn run_request_granular(sessions: usize) -> RunReport {
         avg_effective_batch: stats.avg_effective_batch(),
         p50_ms: percentile(&latencies, 50.0),
         p95_ms: percentile(&latencies, 95.0),
+        p99_ms: percentile(&latencies, 99.0),
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         allocs_per_tick_steady: f64::NAN,
     }
@@ -135,7 +139,10 @@ fn run_cycle_fused(sessions: usize) -> RunReport {
     let work = workload(sessions);
     let model = make_model();
     let dec = Msbs::default();
-    let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 4096 });
+    // Generous row cap: the request-granular discipline has none (one
+    // whole-batch `generate`), so the comparison stays about scheduling
+    // granularity, not device capacity, up to 256 sessions.
+    let mut sched = DecodeScheduler::new(SchedulerConfig { max_rows: 16384 });
     let mut issue: Vec<std::time::Instant> = vec![std::time::Instant::now(); sessions];
     let mut latencies: Vec<f64> = Vec::new();
     let mut task_of = std::collections::HashMap::new();
@@ -196,6 +203,7 @@ fn run_cycle_fused(sessions: usize) -> RunReport {
         avg_effective_batch: sched.stats.avg_effective_batch(),
         p50_ms: percentile(&latencies, 50.0),
         p95_ms: percentile(&latencies, 95.0),
+        p99_ms: percentile(&latencies, 99.0),
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         allocs_per_tick_steady: if steady_ticks == 0 {
             f64::NAN
@@ -212,6 +220,7 @@ struct DeadlineReport {
     expired_rate: f64,
     p50_ms: f64,
     p95_ms: f64,
+    p99_ms: f64,
     p95_overrun_ms: f64,
     wall_ms: f64,
 }
@@ -281,6 +290,7 @@ fn run_deadline(sessions: usize) -> DeadlineReport {
         expired_rate: overruns.len() as f64 / lat.len().max(1) as f64,
         p50_ms: percentile(&lat, 50.0),
         p95_ms: percentile(&lat, 95.0),
+        p99_ms: percentile(&lat, 99.0),
         p95_overrun_ms: if overruns.is_empty() { 0.0 } else { percentile(&overruns, 95.0) },
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     }
@@ -292,16 +302,16 @@ fn main() {
          device call {DEVICE_CALL_US}us) =="
     );
     let mut records = Vec::new();
-    for sessions in [1usize, 4, 16] {
+    for sessions in [1usize, 4, 16, 64, 256] {
         let rg = run_request_granular(sessions);
         let cf = run_cycle_fused(sessions);
         let requests = (sessions * REQUESTS_PER_SESSION) as u64;
         for (name, r) in [("request-granular", &rg), ("cycle-fused", &cf)] {
             println!(
                 "{name:<18} s={sessions:<3} calls {:>5}  encodes {:>4}  eff.batch {:>6.1}  \
-                 p50 {:>7.2}ms  p95 {:>7.2}ms  wall {:>8.1}ms",
+                 p50 {:>7.2}ms  p95 {:>7.2}ms  p99 {:>7.2}ms  wall {:>8.1}ms",
                 r.model_calls, r.encode_calls, r.avg_effective_batch, r.p50_ms, r.p95_ms,
-                r.wall_ms
+                r.p99_ms, r.wall_ms
             );
             let mut rec = BenchRecord::new(format!("{name}-s{sessions}"))
                 .metric("sessions", sessions as f64)
@@ -311,6 +321,7 @@ fn main() {
                 .metric("avg_effective_batch", r.avg_effective_batch)
                 .metric("p50_ms", r.p50_ms)
                 .metric("p95_ms", r.p95_ms)
+                .metric("p99_ms", r.p99_ms)
                 .metric("wall_ms", r.wall_ms);
             if r.allocs_per_tick_steady.is_finite() {
                 rec = rec.metric("allocs_per_tick_steady", r.allocs_per_tick_steady);
@@ -331,6 +342,12 @@ fn main() {
                 cf.encode_calls
             );
         }
+        if sessions == 64 {
+            println!(
+                "  -> 64/256-session rows: single-scheduler reference for the \
+                 shard/replica sweep in BENCH_sharded.json"
+            );
+        }
     }
     let path = std::path::Path::new("BENCH_concurrency.json");
     match write_bench_json(path, "concurrency", &records) {
@@ -340,14 +357,15 @@ fn main() {
 
     println!("== deadline scenario ({DEADLINE_MS}ms budget per request) ==");
     let mut dl_records = Vec::new();
-    for sessions in [1usize, 4, 16] {
+    for sessions in [1usize, 4, 16, 64, 256] {
         let r = run_deadline(sessions);
         println!(
             "deadline           s={sessions:<3} expired {:>5.1}%  p50 {:>7.2}ms  \
-             p95 {:>7.2}ms  p95 overrun {:>6.2}ms  wall {:>8.1}ms",
+             p95 {:>7.2}ms  p99 {:>7.2}ms  p95 overrun {:>6.2}ms  wall {:>8.1}ms",
             r.expired_rate * 100.0,
             r.p50_ms,
             r.p95_ms,
+            r.p99_ms,
             r.p95_overrun_ms,
             r.wall_ms
         );
@@ -358,6 +376,7 @@ fn main() {
                 .metric("expired_rate", r.expired_rate)
                 .metric("p50_ms", r.p50_ms)
                 .metric("p95_ms", r.p95_ms)
+                .metric("p99_ms", r.p99_ms)
                 .metric("p95_overrun_ms", r.p95_overrun_ms)
                 .metric("wall_ms", r.wall_ms),
         );

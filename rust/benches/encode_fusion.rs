@@ -1,5 +1,7 @@
 //! Encode-fusion bench: physical encoder calls per admission round
-//! through the [`ExpansionHub`], at 1 / 4 / 16 co-submitting sessions.
+//! through the [`ExpansionHub`], at 1 / 4 / 16 / 64 / 256 co-submitting
+//! sessions, with per-request time-to-result percentiles (p50/p95/p99)
+//! alongside the counters.
 //!
 //! Workload: `WAVES` waves; in each wave every session submits ONE
 //! distinct (cache-missing) molecule and all futures are awaited before
@@ -28,6 +30,7 @@ use retroserve::decoding::msbs::Msbs;
 use retroserve::metrics::Metrics;
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::percentile;
 use retroserve::util::Rng;
 use std::sync::Arc;
 
@@ -64,6 +67,9 @@ struct RunReport {
     requests: u64,
     encode_calls: u64,
     encode_rounds: u64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
     wall_ms: f64,
 }
 
@@ -87,10 +93,25 @@ fn run(sessions: usize) -> RunReport {
         Arc::new(Metrics::new()),
     );
     let t0 = std::time::Instant::now();
+    // One thread per co-submitting session within each wave, so every
+    // request's time-to-result is measured at ITS completion rather
+    // than behind a sequential wait loop.
+    let mut lat: Vec<f64> = Vec::new();
     for wave in &waves {
-        let futs: Vec<_> = wave.iter().map(|m| hub.submit(m, K).expect("submit")).collect();
-        for f in futs {
-            let _ = f.wait().expect("expansion");
+        let joins: Vec<_> = wave
+            .iter()
+            .map(|m| {
+                let hub = hub.clone();
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    let t = std::time::Instant::now();
+                    hub.expand(&m, K).expect("expansion");
+                    t.elapsed().as_secs_f64() * 1e3
+                })
+            })
+            .collect();
+        for j in joins {
+            lat.push(j.join().expect("request thread"));
         }
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -99,6 +120,9 @@ fn run(sessions: usize) -> RunReport {
         requests: (sessions * WAVES) as u64,
         encode_calls,
         encode_rounds,
+        p50_ms: percentile(&lat, 50.0),
+        p95_ms: percentile(&lat, 95.0),
+        p99_ms: percentile(&lat, 99.0),
         wall_ms,
     }
 }
@@ -110,17 +134,21 @@ fn main() {
     );
     let mut records = Vec::new();
     let mut all_ok = true;
-    for sessions in [1usize, 4, 16] {
+    for sessions in [1usize, 4, 16, 64, 256] {
         let r = run(sessions);
         let fusion = r.requests as f64 / r.encode_calls.max(1) as f64;
         let per_round_ok = r.encode_calls <= r.encode_rounds;
         all_ok &= per_round_ok;
         println!(
-            "sessions {sessions:<3} requests {:>3}  encode calls {:>3}  rounds {:>3}  \
-             fusion {fusion:>5.1}x  wall {:>8.1}ms  one-call-per-round {}",
+            "sessions {sessions:<3} requests {:>4}  encode calls {:>3}  rounds {:>3}  \
+             fusion {fusion:>5.1}x  p50 {:>7.2}ms  p95 {:>7.2}ms  p99 {:>7.2}ms  \
+             wall {:>8.1}ms  one-call-per-round {}",
             r.requests,
             r.encode_calls,
             r.encode_rounds,
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
             r.wall_ms,
             if per_round_ok { "PASS" } else { "VIOLATION" }
         );
@@ -132,6 +160,9 @@ fn main() {
                 .metric("encode_rounds", r.encode_rounds as f64)
                 .metric("encode_calls_per_request", r.encode_calls as f64 / r.requests as f64)
                 .metric("fusion_x", fusion)
+                .metric("p50_ms", r.p50_ms)
+                .metric("p95_ms", r.p95_ms)
+                .metric("p99_ms", r.p99_ms)
                 .metric("wall_ms", r.wall_ms),
         );
         if sessions == 16 {

@@ -1,0 +1,342 @@
+//! Replica-sharded serving bench: the horizontal scaling tier at 64 /
+//! 256 concurrent sessions — the single-hub configuration vs
+//! session-sharded, replicated ones, over the SAME closed-loop
+//! workload.
+//!
+//! Every session issues `REQUESTS_PER_SESSION` distinct (cache-missing)
+//! expansion requests back to back through [`ExpansionHub`], arrivals
+//! lightly staggered the way real clients are. The mock model sleeps a
+//! fixed latency per encode and per decode call, and a fused call
+//! carries at most `max_rows` rows (the synthetic device's batch
+//! capacity) — so once 64 sessions are in flight, one hub thread must
+//! *serialize* several device calls per decode cycle, while S shards
+//! tick concurrently and N replicas give their fused calls independent
+//! executors. Device sleeps dominate, so the wall clock divided by the
+//! device latency counts the fused scheduler ticks serialized on the
+//! critical path:
+//!
+//! ```text
+//! ticks_per_request = (wall / DEVICE_CALL_US) / requests
+//! ```
+//!
+//! The printed invariant (the acceptance bar): at 64 sessions the
+//! sharded configuration reports strictly LOWER ticks-per-request and
+//! strictly lower p95 latency than the single-shard one. The bench
+//! exits nonzero on violation; CI runs it inside the bench-regression
+//! step, and the numeric gate arms once `bench/baseline/` is populated.
+//!
+//! A second, hot-set scenario draws molecules from a small shared pool
+//! so sessions collide on the same molecule: concurrent collisions must
+//! join ONE in-flight decode (cross-shard dedup), and the report
+//! carries the join rate alongside the steal counters and per-replica
+//! utilization.
+//!
+//! Emits `BENCH_sharded.json`.
+
+use retroserve::benchkit::{write_bench_json, BenchRecord, InstrumentedModel};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::metrics::Metrics;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::{PooledModel, ReplicaPool};
+use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::percentile;
+use retroserve::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Synthetic device latency per encoder call.
+const ENCODE_CALL_US: u64 = 200;
+/// Synthetic device latency per fused decode call.
+const DEVICE_CALL_US: u64 = 150;
+/// Requests each session issues, back to back.
+const REQUESTS_PER_SESSION: usize = 3;
+const K: usize = 8;
+/// Arrival stagger between session starts. Clients never co-arrive
+/// perfectly, and a perfectly cold simultaneous burst would also give
+/// the replica pool's load signal (charged as rounds admit) nothing to
+/// steer by.
+const STAGGER_US: u64 = 200;
+
+/// (label, shards, replicas) — the single config is the reference the
+/// invariant compares against.
+const CONFIGS: [(&str, usize, usize); 3] =
+    [("single", 1, 1), ("sharded-2x2", 2, 2), ("sharded-4x4", 4, 4)];
+
+fn mock(vocab: usize) -> PooledModel {
+    Arc::new(
+        InstrumentedModel::new(MockModel::new(MockConfig { vocab, ..Default::default() }))
+            .with_encode_delay(Duration::from_micros(ENCODE_CALL_US))
+            .with_decode_delay(Duration::from_micros(DEVICE_CALL_US)),
+    )
+}
+
+fn hub(vocab: Vocab, shards: usize, replicas: usize) -> ExpansionHub {
+    let models: Vec<PooledModel> = (0..replicas).map(|_| mock(vocab.len())).collect();
+    ExpansionHub::start_pool(
+        ReplicaPool::from_models(models),
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig {
+            max_wait: Duration::from_micros(500),
+            shards,
+            // max_batch / max_rows stay at their serving defaults: the
+            // row cap IS the per-call device capacity under test.
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    )
+}
+
+/// Distinct pseudo-SMILES chains per session (every request misses the
+/// cache and joins nothing), plus a vocabulary covering them all.
+fn distinct_workload(sessions: usize) -> (Vec<Vec<String>>, Vocab) {
+    let mut rng = Rng::new(0x5AA5 ^ sessions as u64);
+    let mut seen = std::collections::HashSet::new();
+    let alphabet = ['C', 'N', 'O'];
+    let chains: Vec<Vec<String>> = (0..sessions)
+        .map(|_| {
+            let mut chain = Vec::with_capacity(REQUESTS_PER_SESSION);
+            while chain.len() < REQUESTS_PER_SESSION {
+                let len = 6 + rng.gen_range(20);
+                let s: String = (0..len).map(|_| alphabet[rng.gen_range(3)]).collect();
+                if seen.insert(s.clone()) {
+                    chain.push(s);
+                }
+            }
+            chain
+        })
+        .collect();
+    let vocab = Vocab::build(chains.iter().flatten().map(String::as_str));
+    (chains, vocab)
+}
+
+/// Closed-loop sessions against one hub config: spawn a thread per
+/// session, time every request, and return per-request latencies.
+fn drive(h: &ExpansionHub, chains: Vec<Vec<String>>) -> Vec<f64> {
+    let mut joins = Vec::new();
+    for (i, chain) in chains.into_iter().enumerate() {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_micros(STAGGER_US * (i % 32) as u64));
+            chain
+                .iter()
+                .map(|m| {
+                    let t = Instant::now();
+                    h.expand(m, K).expect("expansion");
+                    t.elapsed().as_secs_f64() * 1e3
+                })
+                .collect::<Vec<f64>>()
+        }));
+    }
+    let mut lat = Vec::new();
+    for j in joins {
+        lat.extend(j.join().expect("session thread"));
+    }
+    lat
+}
+
+struct ScaleReport {
+    requests: u64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    wall_ms: f64,
+    ticks_per_request: f64,
+    fused_calls: u64,
+    encode_calls: u64,
+    dedup_joins: u64,
+    spills: u64,
+    steals: u64,
+    util_min: f64,
+    util_max: f64,
+}
+
+fn run_scale(sessions: usize, shards: usize, replicas: usize) -> ScaleReport {
+    let (chains, vocab) = distinct_workload(sessions);
+    let h = hub(vocab, shards, replicas);
+    let t0 = Instant::now();
+    let lat = drive(&h, chains);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let requests = lat.len() as u64;
+    let rs = h.replica_stats();
+    assert!(rs.iter().all(|r| r.alive), "no replica may die in the bench");
+    assert!(rs.iter().all(|r| r.outstanding_rows == 0), "idle pool carries no charge");
+    // Per-replica busy share: fused decode time dispatched to the
+    // replica over the run's wall clock (encode time not attributed).
+    let wall_us = wall_ms * 1e3;
+    let utils: Vec<f64> =
+        rs.iter().map(|r| r.fused_calls as f64 * DEVICE_CALL_US as f64 / wall_us).collect();
+    let ticks_critical = wall_us / DEVICE_CALL_US as f64;
+    let (fused_calls, _) = h.fused_ratio();
+    let (encode_calls, _) = h.encode_ratio();
+    let (spills, steals) = h.steal_stats();
+    ScaleReport {
+        requests,
+        p50_ms: percentile(&lat, 50.0),
+        p95_ms: percentile(&lat, 95.0),
+        p99_ms: percentile(&lat, 99.0),
+        wall_ms,
+        ticks_per_request: ticks_critical / requests.max(1) as f64,
+        fused_calls,
+        encode_calls,
+        dedup_joins: h.dedup_joins(),
+        spills,
+        steals,
+        util_min: utils.iter().cloned().fold(f64::INFINITY, f64::min),
+        util_max: utils.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+struct HotsetReport {
+    requests: u64,
+    dedup_joins: u64,
+    dedup_rate: f64,
+    encode_calls: u64,
+    p50_ms: f64,
+    p95_ms: f64,
+    wall_ms: f64,
+}
+
+/// Hot-set scenario: many sessions, few molecules. Concurrent
+/// collisions join one in-flight decode (the cross-shard dedup path);
+/// later repeats come from the shared cache.
+fn run_hotset(sessions: usize, shards: usize, replicas: usize) -> HotsetReport {
+    const HOT: usize = 16;
+    const REQS: usize = 2;
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let alphabet = ['C', 'N', 'O'];
+    let mut hot: Vec<String> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    while hot.len() < HOT {
+        let len = 8 + rng.gen_range(12);
+        let s: String = (0..len).map(|_| alphabet[rng.gen_range(3)]).collect();
+        if seen.insert(s.clone()) {
+            hot.push(s);
+        }
+    }
+    let vocab = Vocab::build(hot.iter().map(String::as_str));
+    let h = hub(vocab, shards, replicas);
+    let chains: Vec<Vec<String>> = (0..sessions)
+        .map(|_| (0..REQS).map(|_| hot[rng.gen_range(HOT)].clone()).collect())
+        .collect();
+    let t0 = Instant::now();
+    let lat = drive(&h, chains);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let requests = lat.len() as u64;
+    let dedup_joins = h.dedup_joins();
+    let (encode_calls, _) = h.encode_ratio();
+    HotsetReport {
+        requests,
+        dedup_joins,
+        dedup_rate: dedup_joins as f64 / requests.max(1) as f64,
+        encode_calls,
+        p50_ms: percentile(&lat, 50.0),
+        p95_ms: percentile(&lat, 95.0),
+        wall_ms,
+    }
+}
+
+fn main() {
+    println!(
+        "== sharded serving bench (msbs, K={K}, {REQUESTS_PER_SESSION} requests/session, \
+         encode {ENCODE_CALL_US}us, decode {DEVICE_CALL_US}us per fused call) =="
+    );
+    let mut records = Vec::new();
+    let mut single64: Option<ScaleReport> = None;
+    let mut sharded64: Option<ScaleReport> = None;
+    for sessions in [64usize, 256] {
+        for (name, shards, replicas) in CONFIGS {
+            let r = run_scale(sessions, shards, replicas);
+            println!(
+                "{name:<12} s={sessions:<4} p50 {:>7.2}ms  p95 {:>7.2}ms  p99 {:>7.2}ms  \
+                 ticks/req {:>6.2}  util {:>3.0}-{:>3.0}%  spill/steal {:>3}/{:<3} \
+                 wall {:>8.1}ms",
+                r.p50_ms,
+                r.p95_ms,
+                r.p99_ms,
+                r.ticks_per_request,
+                r.util_min * 100.0,
+                r.util_max * 100.0,
+                r.spills,
+                r.steals,
+                r.wall_ms
+            );
+            records.push(
+                BenchRecord::new(format!("{name}-s{sessions}"))
+                    .metric("sessions", sessions as f64)
+                    .metric("shards", shards as f64)
+                    .metric("replicas", replicas as f64)
+                    .metric("requests", r.requests as f64)
+                    .metric("p50_ms", r.p50_ms)
+                    .metric("p95_ms", r.p95_ms)
+                    .metric("p99_ms", r.p99_ms)
+                    .metric("ticks_per_request", r.ticks_per_request)
+                    .metric("fused_calls", r.fused_calls as f64)
+                    .metric("encode_calls", r.encode_calls as f64)
+                    .metric("steal_spills", r.spills as f64)
+                    .metric("steals", r.steals as f64)
+                    .metric("dedup_joins", r.dedup_joins as f64)
+                    .metric("replica_util_min", r.util_min)
+                    .metric("replica_util_max", r.util_max)
+                    .metric("wall_ms", r.wall_ms),
+            );
+            if sessions == 64 {
+                match name {
+                    "single" => single64 = Some(r),
+                    "sharded-4x4" => sharded64 = Some(r),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    let single = single64.expect("single config ran");
+    let sharded = sharded64.expect("sharded config ran");
+    let ticks_ok = sharded.ticks_per_request < single.ticks_per_request;
+    let p95_ok = sharded.p95_ms < single.p95_ms;
+    println!(
+        "  -> 64 sessions, sharded-4x4 vs single: ticks/req {:.2} vs {:.2} ({}), \
+         p95 {:.2}ms vs {:.2}ms ({})",
+        sharded.ticks_per_request,
+        single.ticks_per_request,
+        if ticks_ok { "strictly lower: PASS" } else { "VIOLATION" },
+        sharded.p95_ms,
+        single.p95_ms,
+        if p95_ok { "strictly lower: PASS" } else { "VIOLATION" }
+    );
+
+    let hs = run_hotset(64, 2, 2);
+    println!(
+        "hot-set      s=64   p50 {:>7.2}ms  p95 {:>7.2}ms  dedup joins {:>3} \
+         ({:>4.1}% of {} requests)  encodes {:>3}  wall {:>8.1}ms",
+        hs.p50_ms,
+        hs.p95_ms,
+        hs.dedup_joins,
+        hs.dedup_rate * 100.0,
+        hs.requests,
+        hs.encode_calls,
+        hs.wall_ms
+    );
+    records.push(
+        BenchRecord::new("hotset-s64")
+            .metric("sessions", 64.0)
+            .metric("requests", hs.requests as f64)
+            .metric("dedup_joins", hs.dedup_joins as f64)
+            .metric("dedup_rate", hs.dedup_rate)
+            .metric("encode_calls", hs.encode_calls as f64)
+            .metric("p50_ms", hs.p50_ms)
+            .metric("p95_ms", hs.p95_ms)
+            .metric("wall_ms", hs.wall_ms),
+    );
+
+    let path = std::path::Path::new("BENCH_sharded.json");
+    match write_bench_json(path, "sharded", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+    if !(ticks_ok && p95_ok) {
+        eprintln!("sharded scaling invariant VIOLATION at 64 sessions (see above)");
+        std::process::exit(1);
+    }
+}

@@ -179,6 +179,15 @@ pub struct ServeConfig {
     pub batch_rows: usize,
     /// Expansion cache capacity (molecules, LRU).
     pub cache_cap: usize,
+    /// Continuous batcher: session shards (hub loop threads). 1 = the
+    /// classic single hub loop.
+    pub shards: usize,
+    /// Continuous batcher: work stealing between shards (only
+    /// meaningful with `shards > 1`).
+    pub steal: bool,
+    /// Model replicas: independent supervised executors behind
+    /// least-loaded dispatch. 1 = the classic single executor.
+    pub replicas: usize,
     pub workers: usize,
     /// Request budget: policy expansion batches per plan (0 = off).
     pub max_expansions: usize,
@@ -217,6 +226,9 @@ impl ServeConfig {
             batch_coalesce_us: c.int_or("batcher.coalesce_us", 0).max(0) as u64,
             batch_rows: c.int_or("batcher.max_rows", 256) as usize,
             cache_cap: c.int_or("batcher.cache_cap", 10_000) as usize,
+            shards: c.int_or("batcher.shards", 1).max(1) as usize,
+            steal: c.bool_or("batcher.steal", true),
+            replicas: c.int_or("model.replicas", 1).max(1) as usize,
             workers: c.int_or("server.workers", 4) as usize,
             max_expansions: c.int_or("planner.max_expansions", 0).max(0) as usize,
             max_decode_tokens: c.int_or("planner.max_decode_tokens", 0).max(0) as u64,
@@ -275,6 +287,26 @@ mod tests {
         assert_eq!(sc.max_decode_tokens, 0);
         assert_eq!(sc.model_retries, 0, "retries default to fail-fast");
         assert_eq!(sc.model_backoff_us, 200);
+        assert_eq!(sc.shards, 1, "sharding defaults to the classic single loop");
+        assert!(sc.steal, "stealing defaults on (inert at one shard)");
+        assert_eq!(sc.replicas, 1, "one executor by default");
+    }
+
+    #[test]
+    fn shard_and_replica_keys_parse_and_clamp() {
+        let c = Config::parse(concat!(
+            "[batcher]\nshards = 4\nsteal = false\n",
+            "[model]\nreplicas = 2\n",
+        ))
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.shards, 4);
+        assert!(!sc.steal);
+        assert_eq!(sc.replicas, 2);
+        let c = Config::parse("[batcher]\nshards = 0\n[model]\nreplicas = 0\n").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.shards, 1, "clamped to >= 1");
+        assert_eq!(sc.replicas, 1, "clamped to >= 1");
     }
 
     #[test]

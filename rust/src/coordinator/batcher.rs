@@ -1,76 +1,99 @@
 //! The continuous batcher: merges single-step expansion requests from
 //! all in-flight planning sessions into *cycle-level* fused decoder
-//! calls.
+//! calls, sharded across sessions and replicated across devices.
 //!
-//! Requests arrive on a channel — blocking ([`ExpansionHub::expand`])
-//! or as futures ([`ExpansionHub::submit`] →
-//! [`ExpansionFuture`]: poll / wait / cancel). Cache hits answer
-//! immediately. Each missing molecule becomes **one resumable decode
-//! task of its own** submitted to the [`DecodeScheduler`]; the hub
-//! thread then ticks the scheduler — ONE fused `decode` per tick across
-//! *all* in-flight tasks — so every molecule joins the very next device
-//! call when it arrives and **retires independently** the moment its own
-//! beams finish, instead of waiting out the slowest co-arrival in a
-//! drained batch. Cancellation (speculative searches abandoning
-//! invalidated expansions) removes a molecule's task from the scheduler
-//! as soon as its last waiter goes away, releasing its fused-call rows
-//! and encoder memory. A tick error fails only the waiters of the tasks
-//! that were actually in the errored fused call.
+//! Requests arrive through the [`ExpansionHub`] facade — blocking
+//! ([`ExpansionHub::expand`]) or as futures ([`ExpansionHub::submit`]
+//! → [`ExpansionFuture`]: poll / wait / cancel). The facade routes
+//! each request to one of S **shard loops**
+//! ([`super::shard::shard_loop`]), independent hub threads that each
+//! own their sessions' waiter bookkeeping. Cache hits answer
+//! immediately (the expansion cache is a *cross-shard* tier — a
+//! molecule decoded by any shard serves every shard). Each missing
+//! molecule becomes **one resumable decode task of its own** submitted
+//! to a per-replica [`DecodeScheduler`]; the shard thread ticks its
+//! schedulers — ONE fused `decode` per replica per tick across *all*
+//! of that replica's in-flight tasks — so every molecule joins the
+//! very next device call when it arrives and **retires independently**
+//! the moment its own beams finish. Cancellation (speculative searches
+//! abandoning invalidated expansions) removes a molecule's task from
+//! its scheduler as soon as its last waiter goes away, releasing its
+//! fused-call rows and encoder memory. A tick error fails only the
+//! waiters of the tasks that were actually in the errored fused call.
+//!
+//! ## Sharding, replicas, stealing, dedup
+//!
+//! - **Shards** (`batcher.shards`): S independent loop threads;
+//!   submits route to the least-queued shard, so admission and
+//!   bookkeeping scale past the single-thread hub wall at high
+//!   session counts.
+//! - **Replicas** (`model.replicas`): every shard draws replicas from
+//!   one shared [`ReplicaPool`] — N model executors behind
+//!   least-outstanding-rows dispatch, each a supervised failure domain
+//!   of its own. A replica dead past `max_restarts` drains its work
+//!   back onto survivors; waiters fail only when the last replica dies.
+//! - **Work stealing** (`batcher.steal`): a submit whose least-loaded
+//!   shard is already a full gather round deep spills to a shared
+//!   queue; whichever shard frees up first claims it.
+//! - **Cross-shard dedup**: an in-flight registry maps molecule →
+//!   owning shard, so two sessions expanding the same molecule from
+//!   different shards join ONE decode task
+//!   ([`ExpansionHub::dedup_joins`]).
+//!
+//! At `shards = 1, replicas = 1` (the defaults) the tier is
+//! bit-identical to the single hub loop it generalizes: one thread,
+//! one scheduler, routing and stealing degenerate to no-ops.
 //!
 //! ## Fused-encode admission
 //!
-//! All cache-missing molecules gathered in one submission round share
-//! **one** [`StepModel::encode`] call
+//! All cache-missing molecules gathered in one shard's submission
+//! round share **one** [`StepModel::encode`] call
 //! ([`crate::model::encode_shared`]): each molecule then decodes over
 //! its own ref-counted row view ([`crate::model::MemView`]) of the
-//! shared batch, handed to the engine through
-//! [`Decoder::start_task_on`]. Encoder cost is therefore O(submission
-//! rounds), not O(misses) — at fan-in N one call does the work of N —
-//! while retirement stays per-query. Under load, `batcher.coalesce_us`
-//! optionally holds a round with queued misses open for a bounded
-//! window so *near*-arrivals (not just co-arrivals) share the round's
-//! single encode — the ROADMAP's deadline-based encode coalescer.
-//! The batch memory is released on
-//! the device exactly when the round's *last* member task retires or is
-//! cancelled, so abandoning one speculative expansion never strands its
-//! co-arrivals' memory. [`ExpansionHub::encode_ratio`] exposes the
-//! (physical encoder calls, encoding rounds) counters — equal while
-//! fused encodes succeed; a round whose fused encode errors falls back
-//! to per-molecule encodes, so one bad source fails only its own
-//! waiters.
+//! shared batch. Encoder cost is therefore O(submission rounds), not
+//! O(misses), while retirement stays per-query. Under load,
+//! `batcher.coalesce_us` optionally holds a round with queued misses
+//! open for a bounded window so *near*-arrivals share the round's
+//! single encode. The batch memory is released on the device exactly
+//! when the round's *last* member task retires or is cancelled.
+//! [`ExpansionHub::encode_ratio`] exposes the (physical encoder calls,
+//! encoding rounds) counters — equal while fused encodes succeed; a
+//! round whose fused encode errors falls back to per-molecule encodes,
+//! so one bad source fails only its own waiters.
 //!
 //! ## Event-driven completion
 //!
-//! Retirements, failures and processed cancellations bump a
-//! condvar-backed completion epoch; [`ExpansionHub::wait_any`] and the
-//! pipelined planner's multi-group wait ([`HubHandle`]'s `wait_event`)
-//! block on it instead of sleep-polling, so a completion wakes its
-//! waiter immediately and an idle wait burns no CPU.
+//! Retirements, failures and processed cancellations bump
+//! condvar-backed completion epochs — each shard's local queue plus a
+//! hub-global one; [`ExpansionHub::wait_any`] and the pipelined
+//! planner's multi-group wait ([`HubHandle`]'s `wait_event`) block on
+//! the narrowest queue that covers their futures instead of
+//! sleep-polling, so a completion wakes its waiter immediately and an
+//! idle wait burns no CPU.
 //!
 //! The expansion cache is a bounded [`LruCache`] keyed by *molecule*
-//! (not `(molecule, k)`): an entry decoded at k' serves any request with
-//! k <= k' by truncation, and a larger-k request replaces the entry —
-//! the same molecule is never re-decoded just because co-batched k
-//! differed, and sustained traffic cannot leak memory.
+//! (not `(molecule, k)`): an entry decoded at k' serves any request
+//! with k <= k' by truncation, and a larger-k request replaces the
+//! entry — the same molecule is never re-decoded just because
+//! co-batched k differed, and sustained traffic cannot leak memory.
 //!
+//! [`DecodeScheduler`]: crate::decoding::scheduler::DecodeScheduler
 //! [`LruCache`]: crate::util::lru::LruCache
 
-use crate::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
+use super::shard::{shard_loop, InFlightRegistry, ShardCtx, ShardEvents, StealQueue};
 use crate::decoding::{DecodeStats, Decoder};
 use crate::metrics::Metrics;
-use crate::model::{encode_shared, MemView, StepModel};
+use crate::model::{ReplicaPool, ReplicaStats, StepModel};
 use crate::search::policy::{
-    proposals_from_output, AsyncExpansionPolicy, ExpansionHandle, KTruncatedCache, Proposal,
-    DEFAULT_CACHE_CAP,
+    AsyncExpansionPolicy, ExpansionHandle, Proposal, SyncExpansionCache, DEFAULT_CACHE_CAP,
 };
 use crate::search::ExpansionPolicy;
 use crate::tokenizer::Vocab;
 use anyhow::Result;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-/// Condvar-backed completion events: the hub bumps the epoch whenever
+/// Condvar-backed completion events: a shard bumps the epoch whenever
 /// something a waiter could observe happened (a request was answered, a
 /// task failed, a cancellation was processed), and waiters block on it
 /// instead of sleep-polling.
@@ -86,7 +109,7 @@ pub(crate) struct CompletionQueue {
 }
 
 impl CompletionQueue {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self { epoch: Mutex::new(0), cv: Condvar::new() }
     }
 
@@ -98,7 +121,7 @@ impl CompletionQueue {
         *self.epoch.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    fn notify(&self) {
+    pub(crate) fn notify(&self) {
         let mut e = self.epoch.lock().unwrap_or_else(|p| p.into_inner());
         *e += 1;
         self.cv.notify_all();
@@ -122,34 +145,60 @@ impl CompletionQueue {
     }
 }
 
-struct ExpandReq {
-    smiles: String,
-    k: usize,
-    ticket: u64,
-    /// Request-budget deadline: the hub expires the waiter (scoped
+/// One expansion request as a shard sees it.
+pub(crate) struct ExpandReq {
+    pub(crate) smiles: String,
+    pub(crate) k: usize,
+    pub(crate) ticket: u64,
+    /// Request-budget deadline: the shard expires the waiter (scoped
     /// error, task cancelled when it was the last waiter) at the first
     /// round boundary past this instant, even if the submitting thread
     /// never polls again. `None` = no deadline.
-    deadline: Option<std::time::Instant>,
-    reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
+    pub(crate) deadline: Option<std::time::Instant>,
+    pub(crate) reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
 }
 
-enum HubMsg {
+pub(crate) enum HubMsg {
     Expand(ExpandReq),
     /// Withdraw the waiter `ticket` registered for `smiles`; the last
     /// waiter leaving cancels the molecule's in-flight decode tasks.
+    /// Broadcast to every shard for spilled requests — shards without
+    /// the ticket no-op.
     Cancel { smiles: String, ticket: u64 },
+    /// Wake an idle shard so it drains the steal queue (sent by the
+    /// facade after spilling a request there).
+    Poke,
     /// Introspection: (molecules with waiters, in-flight decode tasks,
-    /// scheduler in-flight count, encoder calls, encoding rounds) —
-    /// read together on the hub thread so the snapshot is internally
-    /// consistent. Tests use this to pin "no leaked waiters / tasks"
-    /// after cancellation and one-encode-per-round through the stack.
-    Debug(mpsc::SyncSender<(usize, usize, usize, u64, u64)>),
+    /// scheduler in-flight count) — read together on the shard thread
+    /// so the per-shard snapshot is internally consistent; the facade
+    /// sums shards. Tests use this to pin "no leaked waiters / tasks"
+    /// after cancellation through the stack.
+    Debug(mpsc::SyncSender<(usize, usize, usize)>),
 }
 
-/// Shared handle to the batcher thread.
-pub struct ExpansionHub {
+/// The facade's per-shard handle.
+struct ShardHandle {
     tx: mpsc::Sender<HubMsg>,
+    /// Queued-Expand depth of the shard's inbox (routing signal;
+    /// incremented on send, decremented by the shard on drain).
+    depth: Arc<AtomicUsize>,
+    /// The shard's local completion queue (futures routed there wait
+    /// on it — no cross-shard wakeup storms).
+    events: Arc<CompletionQueue>,
+}
+
+/// Shared handle to the sharded batcher tier.
+pub struct ExpansionHub {
+    shards: Vec<ShardHandle>,
+    pool: Arc<ReplicaPool>,
+    registry: Arc<InFlightRegistry>,
+    steal_q: Arc<StealQueue>,
+    metrics: Arc<Metrics>,
+    /// Work stealing is live (config on AND more than one shard — a
+    /// single shard has nobody to steal from, so its submits never
+    /// spill and parity with the unsharded hub holds).
+    steal_on: bool,
+    max_batch: usize,
     next_ticket: AtomicU64,
     stats: Arc<Mutex<DecodeStats>>,
     pub invalid: Arc<AtomicUsize>,
@@ -167,18 +216,28 @@ pub struct ExpansionHub {
     encode_rounds: Arc<AtomicU64>,
     /// In-flight tasks abandoned because every waiter cancelled.
     cancelled: Arc<AtomicU64>,
-    /// Completion events waiters block on (no sleep-polling).
+    /// Spilled requests claimed by a shard (incremented by shards).
+    steals: Arc<AtomicU64>,
+    /// Replicas lost past `max_restarts` (incremented by shards).
+    replica_deaths: Arc<AtomicU64>,
+    /// Submits joined to another shard's in-flight decode.
+    dedup_joins: AtomicU64,
+    /// Submits spilled to the steal queue (all shards saturated).
+    steal_spills: AtomicU64,
+    /// Hub-global completion events (every shard bumps these too).
     events: Arc<CompletionQueue>,
 }
 
-/// Hub-thread state snapshot (see [`ExpansionHub::debug_snapshot`]).
+/// Hub state snapshot (see [`ExpansionHub::debug_snapshot`]), summed
+/// across shards.
 #[derive(Clone, Copy, Debug)]
 pub struct HubSnapshot {
-    /// Molecules with registered waiters.
+    /// Molecules with registered waiters (per-shard sum; a molecule
+    /// waited on from two shards counts twice).
     pub waiting_molecules: usize,
-    /// In-flight per-query decode tasks the hub tracks.
+    /// In-flight per-query decode tasks the shards track.
     pub decode_tasks: usize,
-    /// Tasks currently inside the scheduler.
+    /// Tasks currently inside the schedulers.
     pub sched_in_flight: usize,
     /// Physical [`StepModel::encode`] calls issued so far.
     pub encode_calls: u64,
@@ -197,7 +256,13 @@ pub struct ExpansionFuture {
     smiles: String,
     ticket: u64,
     rx: mpsc::Receiver<Result<Vec<Proposal>>>,
-    hub_tx: mpsc::Sender<HubMsg>,
+    /// Where a drop-cancel goes: the routed shard's channel, or every
+    /// shard's for a spilled request (whichever shard claimed it acts;
+    /// the rest no-op on the unknown ticket).
+    cancel_txs: Vec<mpsc::Sender<HubMsg>>,
+    /// The completion queue this future's retirement bumps (owner
+    /// shard's local queue; the hub-global one for spilled requests).
+    events: Arc<CompletionQueue>,
     /// A result pulled off the channel but not yet consumed
     /// ([`ExpansionHub::wait_any`] buffers here so readiness can be
     /// observed without consuming).
@@ -287,10 +352,12 @@ impl ExpansionFuture {
 impl Drop for ExpansionFuture {
     fn drop(&mut self) {
         if !self.spent {
-            let _ = self.hub_tx.send(HubMsg::Cancel {
-                smiles: std::mem::take(&mut self.smiles),
-                ticket: self.ticket,
-            });
+            for tx in &self.cancel_txs {
+                let _ = tx.send(HubMsg::Cancel {
+                    smiles: self.smiles.clone(),
+                    ticket: self.ticket,
+                });
+            }
         }
     }
 }
@@ -300,21 +367,27 @@ impl Drop for ExpansionFuture {
 pub struct BatcherConfig {
     /// Most requests drained per gather round.
     pub max_batch: usize,
-    /// How long an *idle* hub waits for stragglers before the first
+    /// How long an *idle* shard waits for stragglers before the first
     /// tick. While decoding, arrivals are drained non-blockingly and
     /// join the next tick anyway.
     pub max_wait: std::time::Duration,
     /// Deadline-based encode coalescer (`batcher.coalesce_us`; zero =
-    /// off): while the scheduler is busy, a round that gathered at
-    /// least one miss is held open this long so near-arrivals join its
-    /// single fused encode instead of paying their own round. Trades a
+    /// off): while a shard is busy, a round that gathered at least one
+    /// miss is held open this long so near-arrivals join its single
+    /// fused encode instead of paying their own round. Trades a
     /// bounded admission delay for fewer encoder calls under load —
     /// visible in [`ExpansionHub::encode_ratio`].
     pub coalesce: std::time::Duration,
     /// Fused-call row budget per scheduler tick.
     pub max_rows: usize,
-    /// Expansion-cache capacity (molecules, LRU).
+    /// Expansion-cache capacity (molecules, LRU, shared across shards).
     pub cache_cap: usize,
+    /// Session shards (`batcher.shards`; 1 = the classic single hub
+    /// loop, bit-identical to the unsharded tier).
+    pub shards: usize,
+    /// Work stealing between shards (`batcher.steal`; only meaningful
+    /// with `shards > 1`).
+    pub steal: bool,
 }
 
 impl Default for BatcherConfig {
@@ -325,18 +398,33 @@ impl Default for BatcherConfig {
             coalesce: std::time::Duration::ZERO,
             max_rows: 256,
             cache_cap: DEFAULT_CACHE_CAP,
+            shards: 1,
+            steal: true,
         }
     }
 }
 
-/// In-flight bookkeeping for one per-query decode task.
-struct TaskMeta {
-    mol: String,
-    k: usize,
+/// Cross-shard counters, shared by every shard loop and the facade.
+#[derive(Clone)]
+pub(crate) struct HubCounters {
+    pub(crate) stats: Arc<Mutex<DecodeStats>>,
+    pub(crate) invalid: Arc<AtomicUsize>,
+    pub(crate) total: Arc<AtomicUsize>,
+    pub(crate) batches: Arc<AtomicU64>,
+    pub(crate) merged: Arc<AtomicU64>,
+    pub(crate) fused_calls: Arc<AtomicU64>,
+    pub(crate) fused_rows: Arc<AtomicU64>,
+    pub(crate) encode_calls: Arc<AtomicU64>,
+    pub(crate) encode_rounds: Arc<AtomicU64>,
+    pub(crate) cancelled: Arc<AtomicU64>,
+    pub(crate) steals: Arc<AtomicU64>,
+    pub(crate) replica_deaths: Arc<AtomicU64>,
 }
 
 impl ExpansionHub {
-    /// Start the hub thread. The model handle must be `Send` (use
+    /// Start the tier over a single model — the classic entry point;
+    /// equivalent to [`ExpansionHub::start_pool`] with a one-replica
+    /// pool. The model handle must be `Send + Sync` (use
     /// [`crate::runtime::server::SharedModel`] for PJRT models).
     pub fn start<M>(
         model: M,
@@ -346,72 +434,92 @@ impl ExpansionHub {
         metrics: Arc<Metrics>,
     ) -> Arc<ExpansionHub>
     where
-        M: StepModel + Send + 'static,
+        M: StepModel + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<HubMsg>();
-        let stats = Arc::new(Mutex::new(DecodeStats::default()));
-        let invalid = Arc::new(AtomicUsize::new(0));
-        let total = Arc::new(AtomicUsize::new(0));
-        let batches = Arc::new(AtomicU64::new(0));
-        let merged = Arc::new(AtomicU64::new(0));
-        let fused_calls = Arc::new(AtomicU64::new(0));
-        let fused_rows = Arc::new(AtomicU64::new(0));
-        let encode_calls = Arc::new(AtomicU64::new(0));
-        let encode_rounds = Arc::new(AtomicU64::new(0));
-        let cancelled = Arc::new(AtomicU64::new(0));
+        Self::start_pool(ReplicaPool::single(model), decoder, vocab, cfg, metrics)
+    }
+
+    /// Start the tier over a replica pool: `cfg.shards` shard threads
+    /// share the pool, the cross-shard cache, the in-flight registry
+    /// and the steal queue.
+    pub fn start_pool(
+        pool: ReplicaPool,
+        decoder: Box<dyn Decoder + Send>,
+        vocab: Vocab,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Arc<ExpansionHub> {
+        let nshards = cfg.shards.max(1);
+        let pool = Arc::new(pool);
+        // `Decoder: Send + Sync` by supertrait, so the one decoder is
+        // shared across shard threads without cloning model state.
+        let decoder: Arc<dyn Decoder + Send> = Arc::from(decoder);
+        let counters = HubCounters {
+            stats: Arc::new(Mutex::new(DecodeStats::default())),
+            invalid: Arc::new(AtomicUsize::new(0)),
+            total: Arc::new(AtomicUsize::new(0)),
+            batches: Arc::new(AtomicU64::new(0)),
+            merged: Arc::new(AtomicU64::new(0)),
+            fused_calls: Arc::new(AtomicU64::new(0)),
+            fused_rows: Arc::new(AtomicU64::new(0)),
+            encode_calls: Arc::new(AtomicU64::new(0)),
+            encode_rounds: Arc::new(AtomicU64::new(0)),
+            cancelled: Arc::new(AtomicU64::new(0)),
+            steals: Arc::new(AtomicU64::new(0)),
+            replica_deaths: Arc::new(AtomicU64::new(0)),
+        };
         let events = Arc::new(CompletionQueue::new());
-        {
-            let stats = stats.clone();
-            let invalid = invalid.clone();
-            let total = total.clone();
-            let batches = batches.clone();
-            let merged = merged.clone();
-            let fused_calls = fused_calls.clone();
-            let fused_rows = fused_rows.clone();
-            let encode_calls = encode_calls.clone();
-            let encode_rounds = encode_rounds.clone();
-            let cancelled = cancelled.clone();
-            let events = events.clone();
+        let registry = Arc::new(InFlightRegistry::new());
+        let steal_q = Arc::new(StealQueue::new());
+        let cache = SyncExpansionCache::new(cfg.cache_cap);
+        let mut shards = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            let (tx, rx) = mpsc::channel::<HubMsg>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let local = Arc::new(CompletionQueue::new());
+            let ctx = ShardCtx {
+                shard: s,
+                pool: pool.clone(),
+                decoder: decoder.clone(),
+                vocab: vocab.clone(),
+                cfg: cfg.clone(),
+                metrics: metrics.clone(),
+                counters: counters.clone(),
+                events: ShardEvents { local: local.clone(), global: events.clone() },
+                registry: registry.clone(),
+                steal_q: steal_q.clone(),
+                depth: depth.clone(),
+                cache: cache.clone(),
+            };
             std::thread::Builder::new()
-                .name("expansion-hub".into())
-                .spawn(move || {
-                    hub_loop(
-                        rx,
-                        model,
-                        decoder,
-                        vocab,
-                        cfg,
-                        metrics,
-                        HubCounters {
-                            stats,
-                            invalid,
-                            total,
-                            batches,
-                            merged,
-                            fused_calls,
-                            fused_rows,
-                            encode_calls,
-                            encode_rounds,
-                            cancelled,
-                        },
-                        events,
-                    )
-                })
-                .expect("spawn expansion hub");
+                .name(format!("expansion-hub-{s}"))
+                .spawn(move || shard_loop(rx, ctx))
+                .expect("spawn expansion hub shard");
+            shards.push(ShardHandle { tx, depth, events: local });
         }
         Arc::new(ExpansionHub {
-            tx,
+            steal_on: cfg.steal && nshards > 1,
+            max_batch: cfg.max_batch,
+            shards,
+            pool,
+            registry,
+            steal_q,
+            metrics,
             next_ticket: AtomicU64::new(1),
-            stats,
-            invalid,
-            total_hyps: total,
-            batches,
-            merged,
-            fused_calls,
-            fused_rows,
-            encode_calls,
-            encode_rounds,
-            cancelled,
+            stats: counters.stats.clone(),
+            invalid: counters.invalid.clone(),
+            total_hyps: counters.total.clone(),
+            batches: counters.batches.clone(),
+            merged: counters.merged.clone(),
+            fused_calls: counters.fused_calls.clone(),
+            fused_rows: counters.fused_rows.clone(),
+            encode_calls: counters.encode_calls.clone(),
+            encode_rounds: counters.encode_rounds.clone(),
+            cancelled: counters.cancelled.clone(),
+            steals: counters.steals.clone(),
+            replica_deaths: counters.replica_deaths.clone(),
+            dedup_joins: AtomicU64::new(0),
+            steal_spills: AtomicU64::new(0),
             events,
         })
     }
@@ -429,6 +537,13 @@ impl ExpansionHub {
     /// the molecule's decode task if no other waiter covers it — rows,
     /// encoder memory and decoder states are released through the
     /// existing cancel path.
+    ///
+    /// Routing: a molecule some shard already decodes goes to that
+    /// shard (cross-shard dedup — the submit joins the in-flight
+    /// task); otherwise the least-queued shard claims it. When even
+    /// the least-queued shard is a full gather round deep and stealing
+    /// is on, the request spills to the shared steal queue instead,
+    /// for whichever shard frees up first.
     pub fn submit_deadline(
         &self,
         smiles: &str,
@@ -437,23 +552,93 @@ impl ExpansionHub {
     ) -> Result<ExpansionFuture> {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(HubMsg::Expand(ExpandReq {
-                smiles: smiles.to_string(),
-                k,
+        let req = ExpandReq { smiles: smiles.to_string(), k, ticket, deadline, reply };
+        let fallback = self.least_depth_shard();
+        if self.steal_on
+            && self.shards[fallback].depth.load(Ordering::Relaxed) >= self.max_batch
+        {
+            // Saturated: even the least-loaded inbox holds a full
+            // gather round. A known in-flight molecule still routes to
+            // its owner (joining beats stealing); anything else spills.
+            if let Some(s) = self.registry.route(smiles) {
+                self.dedup_joins.fetch_add(1, Ordering::Relaxed);
+                self.metrics.inc("batcher.dedup_joins", 1);
+                return self.send_to(s, req, rx);
+            }
+            self.steal_spills.fetch_add(1, Ordering::Relaxed);
+            self.metrics.inc("batcher.steal_spills", 1);
+            let smiles = req.smiles.clone();
+            self.steal_q.push(req);
+            // Wake the least-loaded shard in case it is idle-blocked on
+            // its own channel.
+            let _ = self.shards[fallback].tx.send(HubMsg::Poke);
+            return Ok(ExpansionFuture {
+                smiles,
                 ticket,
-                deadline,
-                reply,
-            }))
-            .map_err(|_| anyhow::anyhow!("hub gone"))?;
+                rx,
+                cancel_txs: self.shards.iter().map(|sh| sh.tx.clone()).collect(),
+                events: self.events.clone(),
+                ready: None,
+                spent: false,
+            });
+        }
+        let (s, joined) = self.registry.route_or_claim(smiles, fallback);
+        if joined {
+            self.dedup_joins.fetch_add(1, Ordering::Relaxed);
+            self.metrics.inc("batcher.dedup_joins", 1);
+        }
+        self.send_to(s, req, rx)
+    }
+
+    fn send_to(
+        &self,
+        s: usize,
+        req: ExpandReq,
+        rx: mpsc::Receiver<Result<Vec<Proposal>>>,
+    ) -> Result<ExpansionFuture> {
+        let smiles = req.smiles.clone();
+        let ticket = req.ticket;
+        self.shards[s].depth.fetch_add(1, Ordering::Relaxed);
+        if self.shards[s].tx.send(HubMsg::Expand(req)).is_err() {
+            self.shards[s].depth.fetch_sub(1, Ordering::Relaxed);
+            self.registry.release_if_owned(&smiles, s);
+            return Err(anyhow::anyhow!("hub gone"));
+        }
         Ok(ExpansionFuture {
-            smiles: smiles.to_string(),
+            smiles,
             ticket,
             rx,
-            hub_tx: self.tx.clone(),
+            cancel_txs: vec![self.shards[s].tx.clone()],
+            events: self.shards[s].events.clone(),
             ready: None,
             spent: false,
         })
+    }
+
+    /// The shard with the shallowest inbox, lowest index on ties (a
+    /// 1-shard tier always answers 0).
+    fn least_depth_shard(&self) -> usize {
+        self.shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, sh)| (sh.depth.load(Ordering::Relaxed), *i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// The narrowest completion queue covering all of `futs`: their
+    /// shared shard-local queue if they live on one shard, else the
+    /// hub-global queue (every shard bumps it too, so it is always
+    /// correct — just busier).
+    fn wait_queue(&self, futs: &[ExpansionFuture]) -> Arc<CompletionQueue> {
+        let Some(first) = futs.first() else {
+            return self.events.clone();
+        };
+        if futs.iter().all(|f| Arc::ptr_eq(&f.events, &first.events)) {
+            first.events.clone()
+        } else {
+            self.events.clone()
+        }
     }
 
     /// Block until at least one of `futs` (futures from **this** hub)
@@ -461,15 +646,16 @@ impl ExpansionHub {
     /// ready future — its next `poll`/`wait` returns without blocking.
     /// Futures whose results were already consumed are skipped; if all
     /// are consumed (or none completes in time) this returns `None`.
-    /// Condvar-backed: the wait wakes on hub completion events, never
+    /// Condvar-backed: the wait wakes on completion events, never
     /// sleep-polls.
     pub fn wait_any(
         &self,
         futs: &mut [ExpansionFuture],
         deadline: std::time::Instant,
     ) -> Option<usize> {
+        let queue = self.wait_queue(futs);
         loop {
-            let seen = self.events.epoch();
+            let seen = queue.epoch();
             for (i, f) in futs.iter_mut().enumerate() {
                 if f.fill() {
                     return Some(i);
@@ -478,11 +664,11 @@ impl ExpansionHub {
             if std::time::Instant::now() >= deadline {
                 return None;
             }
-            self.events.wait_past(seen, deadline);
+            queue.wait_past(seen, deadline);
         }
     }
 
-    /// Current completion-event epoch; pair with
+    /// Current hub-global completion-event epoch; pair with
     /// [`ExpansionHub::wait_completion_past`] for event-driven polling
     /// (capture the epoch BEFORE inspecting state, then wait past it —
     /// no event is ever missed, and no caller ever sleep-polls).
@@ -541,735 +727,62 @@ impl ExpansionHub {
         self.cancelled.load(Ordering::Relaxed)
     }
 
-    /// Hub-thread state snapshot for tests and diagnostics; blocks
-    /// until the hub finishes its current tick. The encoder counters
-    /// ride along so tests can pin one-encode-per-round through the
-    /// full stack.
+    /// Number of shard loops serving this hub.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Point-in-time per-replica counters (alive, outstanding rows,
+    /// fused calls, rows dispatched) — benches print utilization from
+    /// these.
+    pub fn replica_stats(&self) -> Vec<ReplicaStats> {
+        self.pool.stats()
+    }
+
+    /// Replicas lost past `max_restarts` since startup.
+    pub fn replica_deaths(&self) -> u64 {
+        self.replica_deaths.load(Ordering::Relaxed)
+    }
+
+    /// Submits that joined another shard's in-flight decode of the
+    /// same molecule (cross-shard dedup).
+    pub fn dedup_joins(&self) -> u64 {
+        self.dedup_joins.load(Ordering::Relaxed)
+    }
+
+    /// (requests spilled to the steal queue, spilled requests claimed
+    /// by a shard). Equal at quiescence — a spilled request is always
+    /// eventually claimed.
+    pub fn steal_stats(&self) -> (u64, u64) {
+        (
+            self.steal_spills.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Hub state snapshot for tests and diagnostics, summed across
+    /// shards; blocks until every shard finishes its current tick. The
+    /// encoder counters ride along so tests can pin
+    /// one-encode-per-round through the full stack.
     pub fn debug_snapshot(&self) -> Result<HubSnapshot> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(HubMsg::Debug(tx))
-            .map_err(|_| anyhow::anyhow!("hub gone"))?;
-        let (waiting_molecules, decode_tasks, sched_in_flight, encode_calls, encode_rounds) =
-            rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?;
+        let mut waiting_molecules = 0usize;
+        let mut decode_tasks = 0usize;
+        let mut sched_in_flight = 0usize;
+        for sh in &self.shards {
+            let (tx, rx) = mpsc::sync_channel(1);
+            sh.tx.send(HubMsg::Debug(tx)).map_err(|_| anyhow::anyhow!("hub gone"))?;
+            let (w, t, fl) = rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?;
+            waiting_molecules += w;
+            decode_tasks += t;
+            sched_in_flight += fl;
+        }
         Ok(HubSnapshot {
             waiting_molecules,
             decode_tasks,
             sched_in_flight,
-            encode_calls,
-            encode_rounds,
+            encode_calls: self.encode_calls.load(Ordering::Relaxed),
+            encode_rounds: self.encode_rounds.load(Ordering::Relaxed),
         })
-    }
-}
-
-struct HubCounters {
-    stats: Arc<Mutex<DecodeStats>>,
-    invalid: Arc<AtomicUsize>,
-    total: Arc<AtomicUsize>,
-    batches: Arc<AtomicU64>,
-    merged: Arc<AtomicU64>,
-    fused_calls: Arc<AtomicU64>,
-    fused_rows: Arc<AtomicU64>,
-    encode_calls: Arc<AtomicU64>,
-    encode_rounds: Arc<AtomicU64>,
-    cancelled: Arc<AtomicU64>,
-}
-
-/// A queued requester.
-struct Waiter {
-    ticket: u64,
-    k: usize,
-    /// Request-budget deadline; the hub expires the waiter past it.
-    deadline: Option<std::time::Instant>,
-    reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
-}
-
-/// Mutable per-loop state: waiters and in-flight coverage.
-struct HubState {
-    /// Molecule-keyed, k-truncating expansion cache (shared core with
-    /// the offline policies — see [`KTruncatedCache`]).
-    cache: KTruncatedCache,
-    /// Requests not yet answered, per molecule.
-    waiting: HashMap<String, Vec<Waiter>>,
-    /// In-flight per-query decode tasks per molecule — usually one; a
-    /// wider-k re-request adds a second while the first still flies.
-    covered: HashMap<String, Vec<(TaskId, usize)>>,
-    /// Misses gathered this round in admission order — the row order of
-    /// the round's fused encode. `None` marks a slot whose molecule was
-    /// cancelled before submit.
-    to_submit: Vec<Option<(String, usize)>>,
-    /// Molecule -> index into `to_submit`: the per-request merge and
-    /// the per-cancel removal are O(1) map operations instead of a
-    /// linear scan over the round (O(n²) at high fan-in before).
-    to_submit_idx: HashMap<String, usize>,
-}
-
-impl HubState {
-    /// Serve a request from cache or queue it (possibly scheduling a
-    /// decode for this round). Returns whether the request was answered
-    /// immediately (cache hit) — the caller signals completion events
-    /// only then.
-    fn admit(&mut self, req: ExpandReq) -> bool {
-        if let Some(out) = self.cache.get(&req.smiles, req.k) {
-            let _ = req.reply.send(Ok(out));
-            return true;
-        }
-        let in_flight_covers = self
-            .covered
-            .get(&req.smiles)
-            .is_some_and(|tasks| tasks.iter().any(|&(_, ck)| ck >= req.k));
-        if !in_flight_covers {
-            use std::collections::hash_map::Entry;
-            match self.to_submit_idx.entry(req.smiles.clone()) {
-                Entry::Occupied(o) => {
-                    let slot =
-                        self.to_submit[*o.get()].as_mut().expect("indexed slots are live");
-                    slot.1 = slot.1.max(req.k);
-                }
-                Entry::Vacant(v) => {
-                    v.insert(self.to_submit.len());
-                    self.to_submit.push(Some((req.smiles.clone(), req.k)));
-                }
-            }
-        }
-        self.waiting.entry(req.smiles).or_default().push(Waiter {
-            ticket: req.ticket,
-            k: req.k,
-            deadline: req.deadline,
-            reply: req.reply,
-        });
-        false
-    }
-
-    /// Expire every waiter whose deadline passed: each gets a scoped
-    /// "deadline" error, and a molecule left with no waiters releases
-    /// its queued miss. Returns the expired molecules so the caller can
-    /// cancel their now-unwatched decode tasks (needs the scheduler,
-    /// which the state doesn't own).
-    fn expire_deadlines(&mut self, now: std::time::Instant) -> Vec<String> {
-        let mut orphaned = Vec::new();
-        self.waiting.retain(|mol, ws| {
-            ws.retain(|w| {
-                let expired = w.deadline.is_some_and(|d| now >= d);
-                if expired {
-                    let _ = w.reply.send(Err(anyhow::anyhow!("request deadline expired")));
-                }
-                !expired
-            });
-            if ws.is_empty() {
-                orphaned.push(mol.clone());
-                false
-            } else {
-                true
-            }
-        });
-        for mol in &orphaned {
-            self.drop_queued_miss(mol);
-        }
-        orphaned
-    }
-
-    /// Drop a molecule's queued miss (its last waiter cancelled before
-    /// submit). O(1): the slot is tombstoned, not compacted.
-    fn drop_queued_miss(&mut self, smiles: &str) {
-        if let Some(i) = self.to_submit_idx.remove(smiles) {
-            self.to_submit[i] = None;
-        }
-    }
-
-    /// Whether any miss is still queued for this round.
-    fn has_queued_misses(&self) -> bool {
-        !self.to_submit_idx.is_empty()
-    }
-
-    /// Take this round's misses in admission order, clearing the queue.
-    fn take_submit_round(&mut self) -> Vec<(String, usize)> {
-        self.to_submit_idx.clear();
-        self.to_submit.drain(..).flatten().collect()
-    }
-
-    /// Remove one waiter; returns true when the molecule has no waiters
-    /// left (its in-flight tasks may then be abandoned).
-    fn remove_waiter(&mut self, smiles: &str, ticket: u64) -> bool {
-        let Some(ws) = self.waiting.get_mut(smiles) else {
-            return false; // already answered (or never queued)
-        };
-        ws.retain(|w| w.ticket != ticket);
-        if ws.is_empty() {
-            self.waiting.remove(smiles);
-            true
-        } else {
-            false
-        }
-    }
-
-    /// Max beam width of the remaining in-flight tasks for a molecule.
-    fn covered_k(&self, smiles: &str) -> usize {
-        self.covered
-            .get(smiles)
-            .map(|tasks| tasks.iter().map(|&(_, k)| k).max().unwrap_or(0))
-            .unwrap_or(0)
-    }
-
-    /// Fail every queued request (hub-invariant breach only; tick
-    /// errors are scoped per failed task instead).
-    fn fail_all(&mut self, msg: &str) {
-        for (_, ws) in self.waiting.drain() {
-            for w in ws {
-                let _ = w.reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
-            }
-        }
-        self.covered.clear();
-    }
-}
-
-/// Fail the waiters of one failed/unstartable task, keeping any waiter
-/// another in-flight task still covers.
-fn fail_task_waiters(state: &mut HubState, mol: &str, task_k: usize, msg: &str) {
-    let remaining_k = state.covered_k(mol);
-    if let Some(ws) = state.waiting.remove(mol) {
-        let mut kept = Vec::new();
-        for w in ws {
-            if w.k <= task_k && w.k > remaining_k {
-                let _ = w.reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
-            } else {
-                kept.push(w);
-            }
-        }
-        if !kept.is_empty() {
-            state.waiting.insert(mol.to_string(), kept);
-        }
-    }
-}
-
-/// Start one molecule's per-query decode task over its pre-encoded
-/// view and wire the hub bookkeeping. On failure (`start_task_on` has
-/// already released the view) the molecule's waiters are failed —
-/// anything covered by an older in-flight task keeps waiting, and the
-/// round's siblings are untouched. Returns whether the task started.
-#[allow(clippy::too_many_arguments)]
-fn start_round_task(
-    model: &dyn StepModel,
-    decoder: &(dyn Decoder + Send),
-    scheduler: &mut DecodeScheduler,
-    state: &mut HubState,
-    tasks_meta: &mut HashMap<TaskId, TaskMeta>,
-    counters: &HubCounters,
-    metrics: &Metrics,
-    mol: String,
-    k: usize,
-    view: MemView,
-    srcs: &[Vec<i32>],
-) -> bool {
-    match decoder.start_task_on(model, vec![view], srcs, k) {
-        Ok(task) => {
-            let id = scheduler.submit(task);
-            counters.batches.fetch_add(1, Ordering::Relaxed);
-            metrics.inc("batcher.tasks", 1);
-            state.covered.entry(mol.clone()).or_default().push((id, k));
-            tasks_meta.insert(id, TaskMeta { mol, k });
-            true
-        }
-        Err(e) => {
-            let msg = format!("start decode failed: {e:#}");
-            fail_task_waiters(state, &mol, k, &msg);
-            false
-        }
-    }
-}
-
-/// Route one inbound message: admit expansions, queue cancellations,
-/// answer debug probes. Returns whether the message was an expansion
-/// (the only kind counted toward the gather budget); sets `answered`
-/// when an expansion was served immediately from cache (the only
-/// gather outcome that warrants a completion event).
-fn on_msg(
-    msg: HubMsg,
-    state: &mut HubState,
-    cancels: &mut Vec<(String, u64)>,
-    sched_in_flight: usize,
-    encode: (u64, u64),
-    answered: &mut bool,
-) -> bool {
-    match msg {
-        HubMsg::Expand(r) => {
-            *answered |= state.admit(r);
-            true
-        }
-        HubMsg::Cancel { smiles, ticket } => {
-            cancels.push((smiles, ticket));
-            false
-        }
-        HubMsg::Debug(tx) => {
-            let tasks: usize = state.covered.values().map(Vec::len).sum();
-            let _ = tx.send((state.waiting.len(), tasks, sched_in_flight, encode.0, encode.1));
-            false
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn hub_loop<M: StepModel>(
-    rx: mpsc::Receiver<HubMsg>,
-    model: M,
-    decoder: Box<dyn Decoder + Send>,
-    vocab: Vocab,
-    cfg: BatcherConfig,
-    metrics: Arc<Metrics>,
-    counters: HubCounters,
-    events: Arc<CompletionQueue>,
-) {
-    let mut scheduler = DecodeScheduler::new(SchedulerConfig { max_rows: cfg.max_rows });
-    let mut state = HubState {
-        cache: KTruncatedCache::new(cfg.cache_cap),
-        waiting: HashMap::new(),
-        covered: HashMap::new(),
-        to_submit: Vec::new(),
-        to_submit_idx: HashMap::new(),
-    };
-    let mut tasks_meta: HashMap<TaskId, TaskMeta> = HashMap::new();
-    let mut cancels: Vec<(String, u64)> = Vec::new();
-    let mut finished: Vec<Finished> = Vec::new();
-    let mut in_flight_hw = 0usize;
-    let mut open = true;
-
-    while open || !scheduler.is_idle() || !state.waiting.is_empty() {
-        // ---- 1. gather requests ----
-        state.to_submit.clear();
-        state.to_submit_idx.clear();
-        let mut gathered = 0usize;
-        let mut answered = false;
-        let encode_now = (
-            counters.encode_calls.load(Ordering::Relaxed),
-            counters.encode_rounds.load(Ordering::Relaxed),
-        );
-        if open && scheduler.is_idle() && state.waiting.is_empty() {
-            // Idle: block for the next request, then give stragglers a
-            // short window so simultaneous arrivals share the first
-            // ticks (and the round's single fused encode).
-            match rx.recv() {
-                Ok(msg) => {
-                    let fl = scheduler.in_flight();
-                    if on_msg(msg, &mut state, &mut cancels, fl, encode_now, &mut answered) {
-                        counters.merged.fetch_add(1, Ordering::Relaxed);
-                        gathered += 1;
-                    }
-                    let deadline = std::time::Instant::now() + cfg.max_wait;
-                    while gathered < cfg.max_batch && state.has_queued_misses() {
-                        let now = std::time::Instant::now();
-                        if now >= deadline {
-                            break;
-                        }
-                        match rx.recv_timeout(deadline - now) {
-                            Ok(msg) => {
-                                let fl = scheduler.in_flight();
-                                let expand = on_msg(
-                                    msg,
-                                    &mut state,
-                                    &mut cancels,
-                                    fl,
-                                    encode_now,
-                                    &mut answered,
-                                );
-                                if expand {
-                                    counters.merged.fetch_add(1, Ordering::Relaxed);
-                                    gathered += 1;
-                                }
-                            }
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                open = false;
-                                break;
-                            }
-                        }
-                    }
-                }
-                Err(_) => {
-                    open = false;
-                    continue;
-                }
-            }
-        } else {
-            // Busy: drain without blocking — late arrivals join the
-            // very next fused call.
-            while gathered < cfg.max_batch {
-                match rx.try_recv() {
-                    Ok(msg) => {
-                        let fl = scheduler.in_flight();
-                        let expand =
-                            on_msg(msg, &mut state, &mut cancels, fl, encode_now, &mut answered);
-                        if expand {
-                            counters.merged.fetch_add(1, Ordering::Relaxed);
-                            gathered += 1;
-                        }
-                    }
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        open = false;
-                        break;
-                    }
-                }
-            }
-            // Deadline-based encode coalescer: the round already has a
-            // miss and the device is busy with in-flight work, so
-            // holding the round open briefly lets near-arrivals share
-            // its ONE fused encode instead of paying their own round.
-            // The hold delays the next tick by at most `coalesce` — a
-            // bounded latency trade, off by default.
-            if !cfg.coalesce.is_zero()
-                && open
-                && !scheduler.is_idle()
-                && state.has_queued_misses()
-            {
-                // Hits answered by the drain above must not wait out
-                // the hold — their replies are already on the wire.
-                if answered {
-                    events.notify();
-                    answered = false;
-                }
-                let deadline = std::time::Instant::now() + cfg.coalesce;
-                while gathered < cfg.max_batch {
-                    let now = std::time::Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(msg) => {
-                            let fl = scheduler.in_flight();
-                            let expand = on_msg(
-                                msg,
-                                &mut state,
-                                &mut cancels,
-                                fl,
-                                encode_now,
-                                &mut answered,
-                            );
-                            if expand {
-                                counters.merged.fetch_add(1, Ordering::Relaxed);
-                                gathered += 1;
-                            }
-                            // A cache hit answered inside the hold: wake
-                            // its waiter now, not when the window ends.
-                            if answered {
-                                events.notify();
-                                answered = false;
-                            }
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => break,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => {
-                            open = false;
-                            break;
-                        }
-                    }
-                }
-            }
-        }
-        if answered {
-            // At least one request was answered from cache inside
-            // `admit`: wake blocked `wait_any`/`wait_event` callers.
-            // Miss-only rounds deliver nothing, so they wake nobody.
-            events.notify();
-        }
-
-        // ---- 2. apply cancellations ----
-        // A molecule whose last waiter withdrew loses its queued miss
-        // and its in-flight decode tasks: the scheduler frees the rows
-        // and encoder memory immediately (a task's claim on a shared
-        // encode batch drops; siblings keep the memory alive), so
-        // speculative searches that changed their mind never pay for
-        // the full decode.
-        let had_cancels = !cancels.is_empty();
-        for (smiles, ticket) in cancels.drain(..) {
-            if state.remove_waiter(&smiles, ticket) {
-                state.drop_queued_miss(&smiles);
-                if let Some(tasks) = state.covered.remove(&smiles) {
-                    for (id, _) in tasks {
-                        if scheduler.cancel(&model, id) {
-                            counters.cancelled.fetch_add(1, Ordering::Relaxed);
-                            metrics.inc("batcher.tasks_cancelled", 1);
-                        }
-                        tasks_meta.remove(&id);
-                    }
-                }
-            }
-        }
-        if had_cancels {
-            events.notify();
-        }
-
-        // ---- 2b. expire request deadlines ----
-        // Budget enforcement on the hub side: waiters whose deadline
-        // passed get a scoped error NOW (round boundary — within one
-        // scheduler tick of expiry), and a molecule left with no
-        // waiters releases its decode task exactly like a cancel. The
-        // submitting thread normally beats us to it (its waits are
-        // deadline-aware), but a stuck client must not pin device work.
-        let orphaned = state.expire_deadlines(std::time::Instant::now());
-        if !orphaned.is_empty() {
-            for mol in &orphaned {
-                if let Some(tasks) = state.covered.remove(mol) {
-                    for (id, _) in tasks {
-                        if scheduler.cancel(&model, id) {
-                            counters.cancelled.fetch_add(1, Ordering::Relaxed);
-                            metrics.inc("batcher.tasks_cancelled", 1);
-                        }
-                        tasks_meta.remove(&id);
-                    }
-                }
-            }
-            metrics.inc("batcher.deadline_expired", orphaned.len() as u64);
-            events.notify();
-        }
-
-        // ---- 3 + 4: the model-facing phases, panic-contained ----
-        // Everything below calls into the model (fused encode, fused
-        // decode tick). A model panic must not take the hub thread — and
-        // with it every session — down: catch it, abort the scheduler
-        // (releasing rows, views and decoder states through the tasks'
-        // `finish` path), fail the current waiters with a scoped error,
-        // and keep serving the next round on a clean slate.
-        let round_panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model_phases(
-                &model,
-                decoder.as_ref(),
-                &vocab,
-                &mut scheduler,
-                &mut state,
-                &mut tasks_meta,
-                &mut finished,
-                &mut in_flight_hw,
-                &counters,
-                &metrics,
-                &events,
-            )
-        }));
-        if round_panicked.is_err() {
-            // A panic unwound out of the model mid-round. Release every
-            // in-flight task (their `finish` paths free rows, memory
-            // views and decoder states; a second panic during cleanup
-            // is swallowed — the thread must survive), fail the waiters
-            // scoped to this hub, and continue on a clean slate.
-            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                scheduler.abort(&model);
-            }));
-            let _ = scheduler.drain_failed();
-            tasks_meta.clear();
-            state.fail_all("hub round panicked (model fault); request failed, hub restarted");
-            metrics.inc("batcher.hub_panics", 1);
-            events.notify();
-        }
-    }
-
-    // Shutdown: drop the request channel and remaining state first so
-    // every outstanding reply sender is gone, THEN wake waiters — they
-    // observe the disconnect instead of sleeping to their deadline.
-    drop(rx);
-    drop(state);
-    events.notify();
-}
-
-/// Phases 3+4 of one hub round: submit this round's misses behind ONE
-/// fused encode, then run one fused decode tick. These are the only
-/// phases that call into the model, so `hub_loop` runs this function
-/// inside `catch_unwind` — a model panic is contained here and the
-/// bookkeeping phases (gather / cancel / deadline sweep) stay outside
-/// the failure domain.
-#[allow(clippy::too_many_arguments)]
-fn model_phases(
-    model: &dyn StepModel,
-    decoder: &(dyn Decoder + Send),
-    vocab: &Vocab,
-    scheduler: &mut DecodeScheduler,
-    state: &mut HubState,
-    tasks_meta: &mut HashMap<TaskId, TaskMeta>,
-    finished: &mut Vec<Finished>,
-    in_flight_hw: &mut usize,
-    counters: &HubCounters,
-    metrics: &Metrics,
-    events: &CompletionQueue,
-) {
-    // ---- 3. submit this round's misses: ONE fused encode ----
-    // Every cache-missing molecule gathered this round shares a
-    // single `StepModel::encode` call; each then gets its own
-    // per-query decode task over its row view of the shared batch
-    // (released when the round's last member retires or is
-    // cancelled). Encoder cost is O(rounds), not O(misses), while
-    // retirement semantics stay per-query: a slow molecule neither
-    // stalls its co-arrivals' answers nor pins their memory.
-    let round = state.take_submit_round();
-    if !round.is_empty() {
-        let srcs: Vec<Vec<i32>> = round.iter().map(|(mol, _)| vocab.encode(mol, true)).collect();
-        counters.encode_rounds.fetch_add(1, Ordering::Relaxed);
-        metrics.inc("batcher.encode_rounds", 1);
-        let mut failed_any = false;
-        match encode_shared(model, &srcs) {
-            Ok(views) => {
-                counters.encode_calls.fetch_add(1, Ordering::Relaxed);
-                metrics.inc("batcher.encode_calls", 1);
-                for (((mol, k), view), src) in round.into_iter().zip(views).zip(srcs.iter()) {
-                    let one = std::slice::from_ref(src);
-                    failed_any |= !start_round_task(
-                        model, decoder, scheduler, state, tasks_meta, counters, metrics, mol, k,
-                        view, one,
-                    );
-                }
-            }
-            Err(fused_err) => {
-                // The round's ONE fused encode failed. Don't fail
-                // the whole round — one bad source must not take
-                // down every co-arriving session's expansion.
-                // Retry each molecule alone (the pre-fusion blast
-                // radius): healthy co-arrivals still fly, only the
-                // truly failing molecule's waiters error, and the
-                // per-molecule encode cost is paid on this error
-                // path only.
-                for ((mol, k), src) in round.into_iter().zip(srcs.iter()) {
-                    let one = std::slice::from_ref(src);
-                    match encode_shared(model, one) {
-                        Ok(views) => {
-                            counters.encode_calls.fetch_add(1, Ordering::Relaxed);
-                            metrics.inc("batcher.encode_calls", 1);
-                            let view = views.into_iter().next().expect("one view per source");
-                            failed_any |= !start_round_task(
-                                model, decoder, scheduler, state, tasks_meta, counters, metrics,
-                                mol, k, view, one,
-                            );
-                        }
-                        Err(e) => {
-                            let msg = format!("encode failed: {e:#} (fused: {fused_err:#})");
-                            fail_task_waiters(state, &mol, k, &msg);
-                            failed_any = true;
-                        }
-                    }
-                }
-            }
-        }
-        if failed_any {
-            events.notify();
-        }
-    }
-
-    // ---- 4. one fused tick ----
-    // Publish the in-flight high-water mark only when it moves:
-    // steady-state ticks must stay free of mutex/alloc traffic.
-    if scheduler.in_flight() > *in_flight_hw {
-        *in_flight_hw = scheduler.in_flight();
-        metrics.gauge_max("scheduler.in_flight_tasks", *in_flight_hw as u64);
-    }
-    if scheduler.is_idle() {
-        if !state.waiting.is_empty() {
-            // Unreachable by construction (waiters always have a
-            // covering task); fail loudly instead of spinning.
-            state.fail_all("internal: waiters without an in-flight task");
-            events.notify();
-        }
-        return; // nothing in flight: the round ends here
-    }
-    finished.clear();
-    let t_tick = std::time::Instant::now();
-    match scheduler.tick(model, finished) {
-        Ok(rows) => {
-            if rows > 0 {
-                counters.fused_calls.fetch_add(1, Ordering::Relaxed);
-                counters.fused_rows.fetch_add(rows as u64, Ordering::Relaxed);
-                metrics.inc("batcher.fused_calls", 1);
-                metrics.inc("batcher.fused_rows", rows as u64);
-                // A rows>0 tick is dominated by its one fused device
-                // call: this histogram replaces the old whole-
-                // `generate` "batcher.decode" timing at cycle
-                // granularity.
-                metrics.observe("batcher.decode", t_tick.elapsed().as_secs_f64());
-            }
-            let retired_any = !finished.is_empty();
-            for f in finished.drain(..) {
-                // A task without bookkeeping (cancelled in the same
-                // round it finished) has no waiters to answer —
-                // skip it instead of panicking the hub thread.
-                let Some(meta) = tasks_meta.remove(&f.id) else {
-                    continue;
-                };
-                counters.stats.lock().unwrap_or_else(|p| p.into_inner()).merge(&f.stats);
-                retire_task(f.id, &meta, &f, vocab, state, counters);
-            }
-            if retired_any {
-                // Answers are on their channels: wake blocked
-                // wait_any / wait_event callers.
-                events.notify();
-            }
-        }
-        Err(e) => {
-            // The fused call failed: exactly the tasks staged in it
-            // were dropped by the scheduler. Fail their waiters and
-            // nobody else's — unstaged tasks keep flying.
-            let msg = format!("{e:#}");
-            for id in scheduler.drain_failed() {
-                if let Some(meta) = tasks_meta.remove(&id) {
-                    if let Some(tasks) = state.covered.get_mut(&meta.mol) {
-                        tasks.retain(|&(tid, _)| tid != id);
-                        if tasks.is_empty() {
-                            state.covered.remove(&meta.mol);
-                        }
-                    }
-                    fail_task_waiters(state, &meta.mol, meta.k, &msg);
-                }
-            }
-            events.notify();
-        }
-    }
-}
-
-/// Parse a finished per-query task's output, populate the cache, and
-/// answer every waiter the task covers.
-fn retire_task(
-    id: TaskId,
-    meta: &TaskMeta,
-    f: &Finished,
-    vocab: &Vocab,
-    state: &mut HubState,
-    counters: &HubCounters,
-) {
-    let mol = &meta.mol;
-    let Some(gen) = f.outputs.first() else {
-        // A per-query task always has one output; if the invariant ever
-        // breaks, fail this task's waiters (scoped) instead of
-        // panicking the hub thread out from under every session.
-        fail_task_waiters(state, mol, meta.k, "internal: task finished without output");
-        if let Some(tasks) = state.covered.get_mut(mol) {
-            tasks.retain(|&(tid, _)| tid != id);
-            if tasks.is_empty() {
-                state.covered.remove(mol);
-            }
-        }
-        return;
-    };
-    let mut inv = 0usize;
-    let mut tot = 0usize;
-    let props = proposals_from_output(vocab, mol, gen, &mut inv, &mut tot);
-    counters.invalid.fetch_add(inv, Ordering::Relaxed);
-    counters.total.fetch_add(tot, Ordering::Relaxed);
-    state.cache.insert(mol.clone(), meta.k, props.clone());
-    if let Some(ws) = state.waiting.remove(mol) {
-        let mut kept = Vec::new();
-        for w in ws {
-            if w.k <= meta.k {
-                let mut out = props.clone();
-                out.truncate(w.k);
-                let _ = w.reply.send(Ok(out));
-            } else {
-                // A wider request for the same molecule is covered by a
-                // younger, larger-k task still in flight.
-                kept.push(w);
-            }
-        }
-        if !kept.is_empty() {
-            state.waiting.insert(mol.clone(), kept);
-        }
-    }
-    if let Some(tasks) = state.covered.get_mut(mol) {
-        tasks.retain(|&(tid, _)| tid != id);
-        if tasks.is_empty() {
-            state.covered.remove(mol);
-        }
     }
 }
 
@@ -1293,7 +806,8 @@ impl BatchedPolicy {
 struct HubHandle {
     futs: Vec<Option<ExpansionFuture>>,
     results: Vec<Option<Vec<Proposal>>>,
-    /// The hub's completion events, for `wait_event`.
+    /// The completion queue covering every future in the group (their
+    /// shared shard-local queue, else the hub-global one).
     events: Arc<CompletionQueue>,
     /// Epoch captured at the start of the last `poll`: `wait_event`
     /// blocks past it, so an event landing between that poll and the
@@ -1348,8 +862,8 @@ impl ExpansionHandle for HubHandle {
     }
 
     fn wait_event(&mut self, deadline: std::time::Instant) {
-        // Any hub completion (not just this batch's) wakes the wait;
-        // the caller re-polls. Condvar-backed — no sleep-polling.
+        // Any covered completion (not just this batch's) wakes the
+        // wait; the caller re-polls. Condvar-backed — no sleep-polling.
         self.events.wait_past(self.seen, deadline);
     }
 
@@ -1401,10 +915,22 @@ impl BatchedPolicy {
         for m in molecules {
             futs.push(Some(self.hub.submit_deadline(m, k, deadline)?));
         }
+        let events = {
+            let flat: Vec<&ExpansionFuture> =
+                futs.iter().filter_map(|f| f.as_ref()).collect();
+            match flat.first() {
+                Some(first)
+                    if flat.iter().all(|f| Arc::ptr_eq(&f.events, &first.events)) =>
+                {
+                    first.events.clone()
+                }
+                _ => self.hub.events.clone(),
+            }
+        };
         Ok(Box::new(HubHandle {
             results: vec![None; futs.len()],
             futs,
-            events: self.hub.events.clone(),
+            events,
             seen: 0,
         }))
     }
@@ -1701,6 +1227,92 @@ mod tests {
         assert_eq!(
             encode_rounds, 2,
             "coalescer must fold the near-arrival into the held round (A | B+C)"
+        );
+    }
+
+    #[test]
+    fn cross_shard_submits_join_one_in_flight_decode() {
+        use crate::benchkit::InstrumentedModel;
+        use std::sync::atomic::AtomicBool;
+        let vocab = Vocab::build(["CC(=O)O.CN", "CC(=O)NC", "CCO"]);
+        let hold = Arc::new(AtomicBool::new(true));
+        let model = InstrumentedModel::new(MockModel::new(MockConfig {
+            vocab: vocab.len(),
+            ..Default::default()
+        }))
+        .with_gate(hold.clone());
+        let h = ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig {
+                shards: 2,
+                max_wait: std::time::Duration::from_millis(2),
+                ..Default::default()
+            },
+            Arc::new(Metrics::new()),
+        );
+        assert_eq!(h.shard_count(), 2);
+        // The first submit claims the molecule in the in-flight
+        // registry; the gate keeps its decode in flight while the
+        // second submit arrives, so the router must join it to the
+        // SAME shard — one decode task, one fused encode — instead of
+        // decoding the molecule twice on two shards.
+        let f1 = h.submit("CC(=O)O.CN", 3).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let f2 = h.submit("CC(=O)O.CN", 3).unwrap();
+        hold.store(false, Ordering::SeqCst);
+        let p1 = f1.wait().unwrap();
+        let p2 = f2.wait().unwrap();
+        assert_eq!(p1, p2, "joined submit must see the same expansion");
+        assert_eq!(h.dedup_joins(), 1, "second submit must join the first's decode");
+        let (encode_calls, _) = h.encode_ratio();
+        assert_eq!(encode_calls, 1, "one decode task => one fused encode");
+    }
+
+    #[test]
+    fn saturated_shards_spill_and_steal_without_losing_requests() {
+        use crate::benchkit::InstrumentedModel;
+        let mols = ["CC(=O)O.CN", "CC(=O)NC", "CCO", "CCN", "CCC", "CCCC"];
+        let vocab = Vocab::build(mols);
+        let model = InstrumentedModel::new(MockModel::new(MockConfig {
+            vocab: vocab.len(),
+            ..Default::default()
+        }))
+        .with_decode_delay(std::time::Duration::from_millis(2));
+        let h = ExpansionHub::start(
+            model,
+            Box::new(BeamSearch::optimized()),
+            vocab,
+            BatcherConfig {
+                shards: 2,
+                // One-deep inboxes + slowed ticks: concurrent submits
+                // exceed every shard's gather round and must spill.
+                max_batch: 1,
+                max_wait: std::time::Duration::from_micros(200),
+                ..Default::default()
+            },
+            Arc::new(Metrics::new()),
+        );
+        let mut joins = Vec::new();
+        for i in 0..12 {
+            let hc = h.clone();
+            let m = mols[i % mols.len()].to_string();
+            joins.push(std::thread::spawn(move || hc.expand(&m, 2).unwrap()));
+        }
+        for j in joins {
+            assert!(!j.join().unwrap().is_empty());
+        }
+        // Work-stealing conservation: every spilled request was claimed
+        // by some shard (a spilled-but-never-claimed request would have
+        // hung this test inside `expand`), and nothing leaked.
+        let (spills, steals) = h.steal_stats();
+        assert_eq!(spills, steals, "spills {spills} steals {steals}");
+        let s = h.debug_snapshot().unwrap();
+        assert_eq!(
+            (s.waiting_molecules, s.decode_tasks, s.sched_in_flight),
+            (0, 0, 0),
+            "no leaked waiters or tasks after the burst"
         );
     }
 

@@ -14,15 +14,28 @@
 //!                    │  loop with a stop_reason and the anytime
 //!                    │  best-so-far partial route, never a hang
 //!                    ▼
-//!              ExpansionHub (continuous batcher)
+//!              ExpansionHub (facade over the sharded batcher tier)
 //!                    │  submit(smiles, k) / submit_deadline(.., at)
 //!                    │  -> ExpansionFuture (poll / wait / wait_deadline
-//!                    │  / cancel); each cache-missing molecule becomes
-//!                    │  ONE per-query decode task — it retires the
-//!                    │  moment its own beams finish, and cancellation
-//!                    │  (dropped future, expired deadline: both sweep
-//!                    │  phase 2/2b of the round loop) drops it from
-//!                    │  the scheduler, releasing rows, encoder memory
+//!                    │  / cancel); routes each request to the least-
+//!                    │  queued of S shard loops (batcher.shards). A
+//!                    │  molecule some shard already decodes routes to
+//!                    │  that shard instead — cross-shard in-flight
+//!                    │  dedup: both sessions join ONE decode task. A
+//!                    │  submit finding every inbox a full gather round
+//!                    │  deep spills to a shared steal queue
+//!                    │  (batcher.steal); whichever shard frees up
+//!                    │  first claims it
+//!                    ▼
+//!              shard loop ×S (session-sharded continuous batcher;
+//!                    │  shards share the expansion cache — a molecule
+//!                    │  decoded anywhere serves everywhere); each
+//!                    │  cache-missing molecule becomes ONE per-query
+//!                    │  decode task — it retires the moment its own
+//!                    │  beams finish, and cancellation (dropped
+//!                    │  future, expired deadline: both sweep phase
+//!                    │  2/2b of the round loop) drops it from its
+//!                    │  scheduler, releasing rows, encoder memory
 //!                    │  and decoder states through one shared path
 //!                    ▼
 //!              encode admission: ALL of a round's misses share ONE
@@ -33,15 +46,22 @@
 //!                    │  holds a round open briefly so NEAR-arrivals
 //!                    │  join the same fused encode too
 //!                    ▼
-//!              DecodeScheduler: ONE fused device call per decode
-//!                    │  cycle over ALL in-flight tasks' rows (delta
-//!                    │  rows: each row is a cached StateId + only its
-//!                    │  new tokens, so decode cost is O(fresh
-//!                    │  positions) per cycle); a tick error fails only
-//!                    │  the tasks in that call
+//!              DecodeScheduler ×N per shard: ONE fused device call
+//!                    │  per replica per decode cycle over ALL that
+//!                    │  replica's in-flight tasks' rows (delta rows:
+//!                    │  each row is a cached StateId + only its new
+//!                    │  tokens, so decode cost is O(fresh positions)
+//!                    │  per cycle); a tick error fails only the tasks
+//!                    │  in that call
 //!                    ▼
-//!              SharedModel (supervised model-executor thread; startup
-//!                    │  Meta ships the device's row-bucketing rule)
+//!              ReplicaPool (model.replicas): least-outstanding-rows
+//!                    │  dispatch over N replicas, shared by all
+//!                    │  shards; each replica is its own supervised
+//!                    │  failure domain
+//!                    ▼
+//!              SharedModel ×N (supervised model-executor threads;
+//!                    │  startup Meta ships the device's row-bucketing
+//!                    │  rule)
 //!                    ▼
 //!              PJRT CPU client over the AOT HLO artifacts
 //! ```
@@ -58,11 +78,18 @@
 //!                    (capped backoff, model.panics / model.restarts
 //!                    metrics); StateCommit is never retried (a blind
 //!                    second commit could double-claim)
+//! replica death ───► a replica erring "model thread gone" (its
+//!                    supervisor gave up past max_restarts) is marked
+//!                    dead pool-wide; the observing shard requeues its
+//!                    in-flight work onto survivors (replica.deaths
+//!                    metric) — waiters fail scoped only when the LAST
+//!                    replica dies
 //! hub round panic ─► caught around the model phases of the round
-//!                    loop (encode + tick); the scheduler aborts its
-//!                    in-flight tasks, every registered waiter fails
-//!                    scoped, batcher.hub_panics increments, the hub
-//!                    thread lives on to serve the next round
+//!                    loop (encode + tick); the shard's schedulers
+//!                    abort their in-flight tasks, every registered
+//!                    waiter fails scoped, batcher.hub_panics
+//!                    increments, the shard thread lives on to serve
+//!                    the next round (other shards never notice)
 //! request deadline ► phase 2b fails just-expired waiters and cancels
 //!                    tasks nobody still covers; the planner's Budget
 //!                    turns the scoped error into stop_reason=deadline
@@ -121,6 +148,7 @@
 pub mod batcher;
 pub mod protocol;
 pub mod server;
+pub(crate) mod shard;
 
 pub use batcher::{BatchedPolicy, ExpansionFuture, ExpansionHub};
 pub use server::Server;

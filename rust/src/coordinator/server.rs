@@ -141,6 +141,24 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                 let (fused_calls, fused_rows) = ctx.hub.fused_ratio();
                 o.insert("batcher_fused_calls".into(), Json::num(fused_calls as f64));
                 o.insert("batcher_fused_rows".into(), Json::num(fused_rows as f64));
+                o.insert("batcher_shards".into(), Json::num(ctx.hub.shard_count() as f64));
+                o.insert(
+                    "batcher_dedup_joins".into(),
+                    Json::num(ctx.hub.dedup_joins() as f64),
+                );
+                let (spills, steals) = ctx.hub.steal_stats();
+                o.insert("batcher_steal_spills".into(), Json::num(spills as f64));
+                o.insert("batcher_steals".into(), Json::num(steals as f64));
+                let replicas = ctx.hub.replica_stats();
+                o.insert("model_replicas".into(), Json::num(replicas.len() as f64));
+                o.insert(
+                    "model_replicas_alive".into(),
+                    Json::num(replicas.iter().filter(|r| r.alive).count() as f64),
+                );
+                o.insert(
+                    "model_replica_deaths".into(),
+                    Json::num(ctx.hub.replica_deaths() as f64),
+                );
             }
             m
         }

@@ -1,0 +1,1033 @@
+//! The sharded serving tier: S session-sharded hub loops over one
+//! replica pool.
+//!
+//! One hub thread serializes admission, bookkeeping and retirement for
+//! every session — fine at small fan-in, a wall at 64+ concurrent
+//! sessions. This module splits the hub into S **shards**, each an
+//! independent [`shard_loop`] thread with its own request channel,
+//! waiter table, submission round and per-replica
+//! [`DecodeScheduler`]s. Sessions are routed to shards by the facade
+//! ([`super::batcher::ExpansionHub`]); a shard never touches another
+//! shard's waiters.
+//!
+//! What *is* shared is deliberately narrow and lock-cheap:
+//!
+//! - the [`crate::model::ReplicaPool`] — N model executors behind
+//!   least-outstanding-rows dispatch; every shard draws replicas from
+//!   the same pool, so load balances across devices regardless of
+//!   which shard a session landed on;
+//! - the cross-shard expansion cache
+//!   ([`crate::search::policy::SyncExpansionCache`]) — a molecule
+//!   decoded by any shard serves every shard's cache hits;
+//! - the [`InFlightRegistry`] — molecule → owning shard, so two
+//!   sessions expanding the same molecule from different shards join
+//!   ONE decode task instead of paying two;
+//! - the [`StealQueue`] — when a routed shard's inbox is saturated,
+//!   the facade spills the request here and any shard with gather
+//!   budget left claims it (work stealing).
+//!
+//! **Replica failure domain**: a replica whose executor died past
+//! `max_restarts` answers calls with a "model thread gone" error. The
+//! shard that observes it marks the replica dead pool-wide and
+//! re-queues the dead replica's unanswered work onto survivors;
+//! waiters are failed only when the *last* replica dies. A panic that
+//! unwinds out of a model call is contained to the shard that made it
+//! — other shards keep serving.
+
+use super::batcher::{BatcherConfig, CompletionQueue, ExpandReq, HubCounters, HubMsg};
+use crate::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
+use crate::decoding::Decoder;
+use crate::metrics::Metrics;
+use crate::model::{encode_shared, is_replica_gone, MemView, ReplicaPool, StepModel};
+use crate::search::policy::{proposals_from_output, Proposal, SyncExpansionCache};
+use crate::tokenizer::Vocab;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+
+/// Cross-shard in-flight decode registry: molecule → owning shard.
+///
+/// The facade routes a submit for a molecule some shard already
+/// decodes to THAT shard, where the existing waiter/covered machinery
+/// merges it into the in-flight task — cross-shard deduplication with
+/// one small map lookup on the submit path. Claims are released by the
+/// owning shard when the molecule's last waiter and task are gone.
+pub(crate) struct InFlightRegistry {
+    map: Mutex<HashMap<String, usize>>,
+}
+
+impl InFlightRegistry {
+    pub(crate) fn new() -> Self {
+        Self { map: Mutex::new(HashMap::new()) }
+    }
+
+    // Plain map under the lock: a poisoned guard (a shard panicked
+    // mid-release) cannot leave it torn — recover instead of taking
+    // every submit path down.
+    fn lock(&self) -> MutexGuard<'_, HashMap<String, usize>> {
+        self.map.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The shard currently decoding `mol`, if any.
+    pub(crate) fn route(&self, mol: &str) -> Option<usize> {
+        self.lock().get(mol).copied()
+    }
+
+    /// Route to the owning shard, or claim `mol` for `fallback` in the
+    /// same critical section. Returns `(shard, joined)` — `joined` is
+    /// true when an existing owner was found (a cross-shard dedup).
+    pub(crate) fn route_or_claim(&self, mol: &str, fallback: usize) -> (usize, bool) {
+        let mut m = self.lock();
+        if let Some(&s) = m.get(mol) {
+            (s, true)
+        } else {
+            m.insert(mol.to_string(), fallback);
+            (fallback, false)
+        }
+    }
+
+    /// Idempotent claim: the first owner wins (a stolen request's
+    /// processing shard claims at admission; a concurrent router that
+    /// claimed first keeps ownership).
+    pub(crate) fn claim(&self, mol: &str, shard: usize) {
+        self.lock().entry(mol.to_string()).or_insert(shard);
+    }
+
+    /// Release `mol` only if `shard` owns it.
+    pub(crate) fn release_if_owned(&self, mol: &str, shard: usize) {
+        let mut m = self.lock();
+        if m.get(mol) == Some(&shard) {
+            m.remove(mol);
+        }
+    }
+
+    /// Release every molecule `shard` owns (shard shutdown / panic
+    /// recovery — its claims must not strand future submits).
+    pub(crate) fn release_all_owned(&self, shard: usize) {
+        self.lock().retain(|_, &mut s| s != shard);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.lock().len()
+    }
+}
+
+/// Spill-over queue for work stealing: requests whose routed shard was
+/// saturated wait here, and any shard with gather budget left claims
+/// them FIFO at its next round boundary.
+pub(crate) struct StealQueue {
+    q: Mutex<VecDeque<ExpandReq>>,
+}
+
+impl StealQueue {
+    pub(crate) fn new() -> Self {
+        Self { q: Mutex::new(VecDeque::new()) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, VecDeque<ExpandReq>> {
+        self.q.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub(crate) fn push(&self, req: ExpandReq) {
+        self.lock().push_back(req);
+    }
+
+    pub(crate) fn pop(&self) -> Option<ExpandReq> {
+        self.lock().pop_front()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+}
+
+/// A shard's completion events: the shard-local queue (its own
+/// sessions' futures wait here — no cross-shard wakeup storms) plus
+/// the hub-global queue (mixed-shard waits and spilled futures).
+pub(crate) struct ShardEvents {
+    pub(crate) local: Arc<CompletionQueue>,
+    pub(crate) global: Arc<CompletionQueue>,
+}
+
+impl ShardEvents {
+    fn notify(&self) {
+        self.local.notify();
+        self.global.notify();
+    }
+}
+
+/// A queued requester.
+struct Waiter {
+    ticket: u64,
+    k: usize,
+    /// Request-budget deadline; the shard expires the waiter past it.
+    deadline: Option<std::time::Instant>,
+    reply: mpsc::SyncSender<anyhow::Result<Vec<Proposal>>>,
+}
+
+/// In-flight bookkeeping for one per-query decode task.
+struct TaskMeta {
+    mol: String,
+    k: usize,
+    /// Which pool replica runs this task (its rows were charged there).
+    replica: usize,
+}
+
+/// Mutable per-shard state: waiters and in-flight coverage. The cache
+/// is the shared cross-shard tier — every other field is shard-local.
+struct HubState {
+    /// Cross-shard, molecule-keyed, k-truncating expansion cache.
+    cache: SyncExpansionCache,
+    /// Requests not yet answered, per molecule.
+    waiting: HashMap<String, Vec<Waiter>>,
+    /// In-flight per-query decode tasks per molecule — usually one; a
+    /// wider-k re-request adds a second while the first still flies.
+    covered: HashMap<String, Vec<(TaskId, usize)>>,
+    /// Misses gathered this round in admission order — the row order of
+    /// the round's fused encode. `None` marks a slot whose molecule was
+    /// cancelled before submit. Survives across rounds: replica-death
+    /// re-queues land here for the NEXT round's fused encode.
+    to_submit: Vec<Option<(String, usize)>>,
+    /// Molecule -> index into `to_submit` (O(1) merge and removal).
+    to_submit_idx: HashMap<String, usize>,
+}
+
+impl HubState {
+    /// Serve a request from cache or queue it (possibly scheduling a
+    /// decode for this round). Returns whether the request was answered
+    /// immediately (cache hit).
+    fn admit(&mut self, req: ExpandReq) -> bool {
+        if let Some(out) = self.cache.get(&req.smiles, req.k) {
+            let _ = req.reply.send(Ok(out));
+            return true;
+        }
+        let in_flight_covers = self
+            .covered
+            .get(&req.smiles)
+            .is_some_and(|tasks| tasks.iter().any(|&(_, ck)| ck >= req.k));
+        if !in_flight_covers {
+            self.requeue(req.smiles.clone(), req.k);
+        }
+        self.waiting.entry(req.smiles).or_default().push(Waiter {
+            ticket: req.ticket,
+            k: req.k,
+            deadline: req.deadline,
+            reply: req.reply,
+        });
+        false
+    }
+
+    /// Queue `mol` for the next submission round, merging into an
+    /// existing slot by max-k. Used by admission AND by replica-death
+    /// recovery (a dead replica's work re-enters the next round).
+    fn requeue(&mut self, mol: String, k: usize) {
+        use std::collections::hash_map::Entry;
+        match self.to_submit_idx.entry(mol) {
+            Entry::Occupied(o) => {
+                let slot = self.to_submit[*o.get()].as_mut().expect("indexed slots are live");
+                slot.1 = slot.1.max(k);
+            }
+            Entry::Vacant(v) => {
+                let mol = v.key().clone();
+                v.insert(self.to_submit.len());
+                self.to_submit.push(Some((mol, k)));
+            }
+        }
+    }
+
+    /// Expire every waiter whose deadline passed; returns the expired
+    /// molecules so the caller can cancel their decode tasks.
+    fn expire_deadlines(&mut self, now: std::time::Instant) -> Vec<String> {
+        let mut orphaned = Vec::new();
+        self.waiting.retain(|mol, ws| {
+            ws.retain(|w| {
+                let expired = w.deadline.is_some_and(|d| now >= d);
+                if expired {
+                    let _ = w.reply.send(Err(anyhow::anyhow!("request deadline expired")));
+                }
+                !expired
+            });
+            if ws.is_empty() {
+                orphaned.push(mol.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for mol in &orphaned {
+            self.drop_queued_miss(mol);
+        }
+        orphaned
+    }
+
+    /// Drop a molecule's queued miss (its last waiter left before
+    /// submit). O(1): the slot is tombstoned, not compacted.
+    fn drop_queued_miss(&mut self, smiles: &str) {
+        if let Some(i) = self.to_submit_idx.remove(smiles) {
+            self.to_submit[i] = None;
+        }
+    }
+
+    /// Whether any miss is still queued for the next round.
+    fn has_queued_misses(&self) -> bool {
+        !self.to_submit_idx.is_empty()
+    }
+
+    /// Take this round's misses in admission order, clearing the queue.
+    fn take_submit_round(&mut self) -> Vec<(String, usize)> {
+        self.to_submit_idx.clear();
+        self.to_submit.drain(..).flatten().collect()
+    }
+
+    /// Remove one waiter; returns true when the molecule has no waiters
+    /// left (its in-flight tasks may then be abandoned).
+    fn remove_waiter(&mut self, smiles: &str, ticket: u64) -> bool {
+        let Some(ws) = self.waiting.get_mut(smiles) else {
+            return false; // already answered (or queued on another shard)
+        };
+        ws.retain(|w| w.ticket != ticket);
+        if ws.is_empty() {
+            self.waiting.remove(smiles);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Max beam width of the remaining in-flight tasks for a molecule.
+    fn covered_k(&self, smiles: &str) -> usize {
+        self.covered
+            .get(smiles)
+            .map(|tasks| tasks.iter().map(|&(_, k)| k).max().unwrap_or(0))
+            .unwrap_or(0)
+    }
+
+    /// Fail every queued request (shard-invariant breach only; tick
+    /// errors are scoped per failed task instead).
+    fn fail_all(&mut self, msg: &str) {
+        for (_, ws) in self.waiting.drain() {
+            for w in ws {
+                let _ = w.reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
+            }
+        }
+        self.covered.clear();
+    }
+}
+
+/// Everything a shard loop shares with the facade and its sibling
+/// shards. Built once per shard by `ExpansionHub::start_pool`.
+pub(crate) struct ShardCtx {
+    /// This shard's index (registry ownership, scheduler id striding).
+    pub(crate) shard: usize,
+    pub(crate) pool: Arc<ReplicaPool>,
+    pub(crate) decoder: Arc<dyn Decoder + Send>,
+    pub(crate) vocab: Vocab,
+    pub(crate) cfg: BatcherConfig,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) counters: HubCounters,
+    pub(crate) events: ShardEvents,
+    pub(crate) registry: Arc<InFlightRegistry>,
+    pub(crate) steal_q: Arc<StealQueue>,
+    /// Queued-Expand depth of this shard's inbox (facade routing and
+    /// spill decisions read it; the shard decrements on drain).
+    pub(crate) depth: Arc<AtomicUsize>,
+    /// The shared cross-shard cache handle (cloned into `HubState`).
+    pub(crate) cache: SyncExpansionCache,
+}
+
+/// One shard's running state: per-replica schedulers plus the waiter
+/// bookkeeping. All methods run on the shard thread.
+struct ShardRt {
+    ctx: ShardCtx,
+    /// One scheduler per pool replica; TaskIds are strided so ids are
+    /// unique within the shard (base = replica + 1, stride = N).
+    scheds: Vec<DecodeScheduler>,
+    state: HubState,
+    tasks_meta: HashMap<TaskId, TaskMeta>,
+    /// Reusable tick-output buffer.
+    finished: Vec<Finished>,
+    in_flight_hw: usize,
+}
+
+impl ShardRt {
+    fn in_flight(&self) -> usize {
+        self.scheds.iter().map(DecodeScheduler::in_flight).sum()
+    }
+
+    fn all_idle(&self) -> bool {
+        self.scheds.iter().all(DecodeScheduler::is_idle)
+    }
+
+    fn steal_pending(&self) -> bool {
+        self.ctx.cfg.steal && !self.ctx.steal_q.is_empty()
+    }
+
+    /// Release this shard's registry claim on `mol` once nothing local
+    /// references it (no waiters, no in-flight task). Safe to call
+    /// eagerly — it checks before releasing, and only releases claims
+    /// this shard owns.
+    fn registry_release(&self, mol: &str) {
+        if !self.state.waiting.contains_key(mol) && !self.state.covered.contains_key(mol) {
+            self.ctx.registry.release_if_owned(mol, self.ctx.shard);
+        }
+    }
+
+    /// Admit one request: cache hit answers and releases any registry
+    /// claim; a miss claims the molecule for this shard (idempotent —
+    /// covers stolen requests the router never claimed).
+    fn admit(&mut self, req: ExpandReq) -> bool {
+        let mol = req.smiles.clone();
+        let hit = self.state.admit(req);
+        if hit {
+            self.registry_release(&mol);
+        } else {
+            self.ctx.registry.claim(&mol, self.ctx.shard);
+        }
+        hit
+    }
+
+    /// Route one inbound message. Returns whether it was an expansion
+    /// (the only kind counted toward the gather budget); sets
+    /// `answered` when one was served immediately from cache.
+    fn on_msg(
+        &mut self,
+        msg: HubMsg,
+        cancels: &mut Vec<(String, u64)>,
+        answered: &mut bool,
+    ) -> bool {
+        match msg {
+            HubMsg::Expand(r) => {
+                self.ctx.depth.fetch_sub(1, Ordering::Relaxed);
+                *answered |= self.admit(r);
+                true
+            }
+            HubMsg::Cancel { smiles, ticket } => {
+                cancels.push((smiles, ticket));
+                false
+            }
+            HubMsg::Poke => false,
+            HubMsg::Debug(tx) => {
+                let tasks: usize = self.state.covered.values().map(Vec::len).sum();
+                let _ = tx.send((self.state.waiting.len(), tasks, self.in_flight()));
+                false
+            }
+        }
+    }
+
+    /// Remove one task from a molecule's coverage.
+    fn drop_covered(&mut self, mol: &str, id: TaskId) {
+        if let Some(tasks) = self.state.covered.get_mut(mol) {
+            tasks.retain(|&(tid, _)| tid != id);
+            if tasks.is_empty() {
+                self.state.covered.remove(mol);
+            }
+        }
+    }
+
+    /// Cancel every in-flight task of `mol` (its last waiter left):
+    /// rows and encoder memory release through the scheduler, and the
+    /// owning replica's outstanding charge drops.
+    fn cancel_tasks_of(&mut self, mol: &str) {
+        if let Some(tasks) = self.state.covered.remove(mol) {
+            for (id, _) in tasks {
+                let Some(meta) = self.tasks_meta.remove(&id) else { continue };
+                let model = self.ctx.pool.model(meta.replica);
+                if self.scheds[meta.replica].cancel(model, id) {
+                    self.ctx.pool.discharge(meta.replica, meta.k);
+                    self.ctx.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                    self.ctx.metrics.inc("batcher.tasks_cancelled", 1);
+                }
+            }
+        }
+    }
+
+    /// Fail the waiters of one failed/unstartable task, keeping any
+    /// waiter another in-flight task still covers.
+    fn fail_task_waiters(&mut self, mol: &str, task_k: usize, msg: &str) {
+        let remaining_k = self.state.covered_k(mol);
+        if let Some(ws) = self.state.waiting.remove(mol) {
+            let mut kept = Vec::new();
+            for w in ws {
+                if w.k <= task_k && w.k > remaining_k {
+                    let _ = w.reply.send(Err(anyhow::anyhow!("decode failed: {msg}")));
+                } else {
+                    kept.push(w);
+                }
+            }
+            if !kept.is_empty() {
+                self.state.waiting.insert(mol.to_string(), kept);
+            }
+        }
+        self.registry_release(mol);
+    }
+
+    /// Start one molecule's per-query decode task on replica `r` over
+    /// its pre-encoded view. On failure (`start_task_on` has already
+    /// released the view) the molecule's waiters are failed — the
+    /// round's siblings are untouched. Returns whether it started.
+    fn start_round_task(
+        &mut self,
+        r: usize,
+        mol: String,
+        k: usize,
+        view: MemView,
+        srcs: &[Vec<i32>],
+    ) -> bool {
+        let started =
+            self.ctx.decoder.start_task_on(self.ctx.pool.model(r), vec![view], srcs, k);
+        match started {
+            Ok(task) => {
+                let id = self.scheds[r].submit(task);
+                self.ctx.pool.charge(r, k);
+                self.ctx.counters.batches.fetch_add(1, Ordering::Relaxed);
+                self.ctx.metrics.inc("batcher.tasks", 1);
+                self.state.covered.entry(mol.clone()).or_default().push((id, k));
+                self.tasks_meta.insert(id, TaskMeta { mol, k, replica: r });
+                true
+            }
+            Err(e) => {
+                let msg = format!("start decode failed: {e:#}");
+                self.fail_task_waiters(&mol, k, &msg);
+                false
+            }
+        }
+    }
+
+    /// Take replica `r` out of the pool (its executor is gone past
+    /// `max_restarts`) and move its unanswered work to survivors: each
+    /// lost task's molecule re-enters the next submission round if a
+    /// waiter still wants it. Waiters are failed only when this was
+    /// the last live replica.
+    fn kill_replica(&mut self, r: usize) {
+        // Count the death once pool-wide even when several shards
+        // observe it; every shard still tears down its own scheduler
+        // and requeues its own lost tasks below.
+        if self.ctx.pool.mark_dead(r) {
+            self.ctx.counters.replica_deaths.fetch_add(1, Ordering::Relaxed);
+            self.ctx.metrics.inc("replica.deaths", 1);
+        }
+        // Tear the dead replica's scheduler down; its executor is gone,
+        // so teardown calls are fire-and-forget (a panic here must not
+        // take the shard with it). mark_dead zeroed the outstanding
+        // charge — no per-task discharge.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.scheds[r].abort(self.ctx.pool.model(r));
+        }));
+        let _ = self.scheds[r].drain_failed();
+        let lost: Vec<TaskId> = self
+            .tasks_meta
+            .iter()
+            .filter(|(_, m)| m.replica == r)
+            .map(|(id, _)| *id)
+            .collect();
+        let survivors = self.ctx.pool.alive_count() > 0;
+        for id in lost {
+            let Some(meta) = self.tasks_meta.remove(&id) else { continue };
+            self.drop_covered(&meta.mol, id);
+            if survivors && self.state.waiting.contains_key(&meta.mol) {
+                if self.state.covered_k(&meta.mol) < meta.k {
+                    self.state.requeue(meta.mol.clone(), meta.k);
+                }
+            } else {
+                self.fail_task_waiters(&meta.mol, meta.k, "all model replicas lost");
+            }
+            self.registry_release(&meta.mol);
+        }
+    }
+
+    /// Submit one round of misses behind ONE fused encode on the
+    /// least-loaded live replica, failing over to survivors on replica
+    /// death. Returns whether any molecule's waiters were failed.
+    fn submit_round(&mut self, round: Vec<(String, usize)>) -> bool {
+        let srcs: Vec<Vec<i32>> =
+            round.iter().map(|(mol, _)| self.ctx.vocab.encode(mol, true)).collect();
+        self.ctx.counters.encode_rounds.fetch_add(1, Ordering::Relaxed);
+        self.ctx.metrics.inc("batcher.encode_rounds", 1);
+        let mut failed_any = false;
+        let fused_err = loop {
+            let Some(r) = self.ctx.pool.pick() else {
+                for (mol, k) in round {
+                    self.fail_task_waiters(&mol, k, "all model replicas lost");
+                }
+                return true;
+            };
+            match encode_shared(self.ctx.pool.model(r), &srcs) {
+                Ok(views) => {
+                    self.ctx.counters.encode_calls.fetch_add(1, Ordering::Relaxed);
+                    self.ctx.metrics.inc("batcher.encode_calls", 1);
+                    for (((mol, k), view), src) in
+                        round.into_iter().zip(views).zip(srcs.iter())
+                    {
+                        let one = std::slice::from_ref(src);
+                        failed_any |= !self.start_round_task(r, mol, k, view, one);
+                    }
+                    return failed_any;
+                }
+                // The replica's executor is gone — a property of the
+                // replica, not the round. Fail over, don't fail waiters.
+                Err(e) if is_replica_gone(&e) => self.kill_replica(r),
+                Err(e) => break e,
+            }
+        };
+        // The round's ONE fused encode failed on a live replica. Don't
+        // fail the whole round — one bad source must not take down
+        // every co-arriving session's expansion. Retry each molecule
+        // alone (the pre-fusion blast radius), still failing over if a
+        // replica dies mid-fallback.
+        for ((mol, k), src) in round.into_iter().zip(srcs.iter()) {
+            let one = std::slice::from_ref(src);
+            let mut pending = Some((mol, k));
+            while let Some((m, mk)) = pending.take() {
+                let Some(r) = self.ctx.pool.pick() else {
+                    self.fail_task_waiters(&m, mk, "all model replicas lost");
+                    failed_any = true;
+                    break;
+                };
+                match encode_shared(self.ctx.pool.model(r), one) {
+                    Ok(views) => {
+                        self.ctx.counters.encode_calls.fetch_add(1, Ordering::Relaxed);
+                        self.ctx.metrics.inc("batcher.encode_calls", 1);
+                        let view = views.into_iter().next().expect("one view per source");
+                        failed_any |= !self.start_round_task(r, m, mk, view, one);
+                    }
+                    Err(e) if is_replica_gone(&e) => {
+                        self.kill_replica(r);
+                        pending = Some((m, mk));
+                    }
+                    Err(e) => {
+                        let msg = format!("encode failed: {e:#} (fused: {fused_err:#})");
+                        self.fail_task_waiters(&m, mk, &msg);
+                        failed_any = true;
+                    }
+                }
+            }
+        }
+        failed_any
+    }
+
+    /// One fused decode tick on replica `r`: retire finished tasks,
+    /// scope tick errors to the staged tasks, fail over on replica
+    /// death.
+    fn tick_replica(&mut self, r: usize) {
+        let mut finished = std::mem::take(&mut self.finished);
+        finished.clear();
+        let t_tick = std::time::Instant::now();
+        match self.scheds[r].tick(self.ctx.pool.model(r), &mut finished) {
+            Ok(rows) => {
+                if rows > 0 {
+                    self.ctx.pool.note_fused_call(r, rows);
+                    self.ctx.counters.fused_calls.fetch_add(1, Ordering::Relaxed);
+                    self.ctx.counters.fused_rows.fetch_add(rows as u64, Ordering::Relaxed);
+                    self.ctx.metrics.inc("batcher.fused_calls", 1);
+                    self.ctx.metrics.inc("batcher.fused_rows", rows as u64);
+                    self.ctx.metrics.observe("batcher.decode", t_tick.elapsed().as_secs_f64());
+                }
+                let retired_any = !finished.is_empty();
+                for f in finished.drain(..) {
+                    // A task without bookkeeping (cancelled in the same
+                    // round it finished) has no waiters to answer.
+                    let Some(meta) = self.tasks_meta.remove(&f.id) else {
+                        continue;
+                    };
+                    self.ctx.pool.discharge(meta.replica, meta.k);
+                    self.ctx
+                        .counters
+                        .stats
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .merge(&f.stats);
+                    self.retire_task(&meta, &f);
+                }
+                if retired_any {
+                    self.ctx.events.notify();
+                }
+            }
+            Err(e) if is_replica_gone(&e) => {
+                self.kill_replica(r);
+                self.ctx.events.notify();
+            }
+            Err(e) => {
+                // The fused call failed on a live replica: exactly the
+                // tasks staged in it were dropped by the scheduler.
+                // Fail their waiters and nobody else's.
+                let msg = format!("{e:#}");
+                for id in self.scheds[r].drain_failed() {
+                    let Some(meta) = self.tasks_meta.remove(&id) else { continue };
+                    self.ctx.pool.discharge(meta.replica, meta.k);
+                    self.drop_covered(&meta.mol, id);
+                    self.fail_task_waiters(&meta.mol, meta.k, &msg);
+                }
+                self.ctx.events.notify();
+            }
+        }
+        self.finished = finished;
+    }
+
+    /// Parse a finished per-query task's output, populate the shared
+    /// cache, and answer every waiter the task covers.
+    fn retire_task(&mut self, meta: &TaskMeta, f: &Finished) {
+        let mol = &meta.mol;
+        let Some(gen) = f.outputs.first() else {
+            // A per-query task always has one output; if the invariant
+            // ever breaks, fail this task's waiters (scoped) instead of
+            // panicking the shard thread out from under its sessions.
+            self.fail_task_waiters(mol, meta.k, "internal: task finished without output");
+            self.drop_covered(mol, f.id);
+            self.registry_release(mol);
+            return;
+        };
+        let mut inv = 0usize;
+        let mut tot = 0usize;
+        let props = proposals_from_output(&self.ctx.vocab, mol, gen, &mut inv, &mut tot);
+        self.ctx.counters.invalid.fetch_add(inv, Ordering::Relaxed);
+        self.ctx.counters.total.fetch_add(tot, Ordering::Relaxed);
+        self.state.cache.insert(mol.clone(), meta.k, props.clone());
+        if let Some(ws) = self.state.waiting.remove(mol) {
+            let mut kept = Vec::new();
+            for w in ws {
+                if w.k <= meta.k {
+                    let mut out = props.clone();
+                    out.truncate(w.k);
+                    let _ = w.reply.send(Ok(out));
+                } else {
+                    // A wider request for the same molecule is covered
+                    // by a younger, larger-k task still in flight.
+                    kept.push(w);
+                }
+            }
+            if !kept.is_empty() {
+                self.state.waiting.insert(mol.clone(), kept);
+            }
+        }
+        self.drop_covered(mol, f.id);
+        self.registry_release(mol);
+    }
+
+    /// Phases 3+4 of one shard round: submit this round's misses
+    /// behind one fused encode, then one fused tick per busy replica.
+    /// The only phases that call into the model — run under
+    /// `catch_unwind` by `shard_loop`.
+    fn model_phases(&mut self) {
+        let round = self.state.take_submit_round();
+        if !round.is_empty() && self.submit_round(round) {
+            self.ctx.events.notify();
+        }
+        // Publish the in-flight high-water mark only when it moves:
+        // steady-state ticks must stay free of mutex/alloc traffic.
+        let fl = self.in_flight();
+        if fl > self.in_flight_hw {
+            self.in_flight_hw = fl;
+            self.ctx.metrics.gauge_max("scheduler.in_flight_tasks", fl as u64);
+        }
+        if self.all_idle() {
+            // Waiters whose molecule is re-queued (replica failover)
+            // are covered by the NEXT round — only a waiter with
+            // neither a task nor a queued miss is an invariant breach.
+            if !self.state.waiting.is_empty() && !self.state.has_queued_misses() {
+                self.state.fail_all("internal: waiters without an in-flight task");
+                self.ctx.registry.release_all_owned(self.ctx.shard);
+                self.ctx.events.notify();
+            }
+            return;
+        }
+        for r in 0..self.scheds.len() {
+            if !self.scheds[r].is_idle() {
+                self.tick_replica(r);
+            }
+        }
+    }
+
+    /// A panic unwound out of the model mid-round. Release every
+    /// in-flight task on every replica (a second panic during cleanup
+    /// is swallowed — the shard thread must survive), fail the waiters
+    /// scoped to this shard, and continue on a clean slate.
+    fn recover_from_panic(&mut self) {
+        for r in 0..self.scheds.len() {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.scheds[r].abort(self.ctx.pool.model(r));
+            }));
+            let _ = self.scheds[r].drain_failed();
+        }
+        for (_, meta) in self.tasks_meta.drain() {
+            // A dead replica's charge was zeroed by mark_dead; only
+            // live replicas carry outstanding rows to release.
+            if self.ctx.pool.is_alive(meta.replica) {
+                self.ctx.pool.discharge(meta.replica, meta.k);
+            }
+        }
+        self.state.to_submit.clear();
+        self.state.to_submit_idx.clear();
+        self.state.fail_all("hub round panicked (model fault); request failed, hub restarted");
+        self.ctx.registry.release_all_owned(self.ctx.shard);
+        self.ctx.metrics.inc("batcher.hub_panics", 1);
+        self.ctx.events.notify();
+    }
+}
+
+/// One shard's serving loop: gather → cancel → deadline sweep →
+/// (panic-contained) submit + tick. Structurally the single-hub loop,
+/// with three sharding deltas: per-replica schedulers with strided
+/// TaskIds, a work-steal drain after local gather, and re-queues from
+/// replica failover surviving into the next round.
+pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
+    let nrep = ctx.pool.len();
+    let scheds: Vec<DecodeScheduler> = (0..nrep)
+        .map(|r| {
+            DecodeScheduler::with_ids(
+                SchedulerConfig { max_rows: ctx.cfg.max_rows },
+                r as u64 + 1,
+                nrep as u64,
+            )
+        })
+        .collect();
+    let state = HubState {
+        cache: ctx.cache.clone(),
+        waiting: HashMap::new(),
+        covered: HashMap::new(),
+        to_submit: Vec::new(),
+        to_submit_idx: HashMap::new(),
+    };
+    let mut rt = ShardRt {
+        ctx,
+        scheds,
+        state,
+        tasks_meta: HashMap::new(),
+        finished: Vec::new(),
+        in_flight_hw: 0,
+    };
+    let mut cancels: Vec<(String, u64)> = Vec::new();
+    let mut open = true;
+
+    while open || !rt.all_idle() || !rt.state.waiting.is_empty() || rt.steal_pending() {
+        // ---- 1. gather requests ----
+        let mut gathered = 0usize;
+        let mut answered = false;
+        let idle = rt.all_idle() && rt.state.waiting.is_empty() && !rt.state.has_queued_misses();
+        if open && idle && !rt.steal_pending() {
+            // Idle: block for the next request (a spill Poke also wakes
+            // us), then give stragglers a short window so simultaneous
+            // arrivals share the first ticks and the round's single
+            // fused encode.
+            match rx.recv() {
+                Ok(msg) => {
+                    if rt.on_msg(msg, &mut cancels, &mut answered) {
+                        rt.ctx.counters.merged.fetch_add(1, Ordering::Relaxed);
+                        gathered += 1;
+                    }
+                    let deadline = std::time::Instant::now() + rt.ctx.cfg.max_wait;
+                    while gathered < rt.ctx.cfg.max_batch && rt.state.has_queued_misses() {
+                        let now = std::time::Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(msg) => {
+                                if rt.on_msg(msg, &mut cancels, &mut answered) {
+                                    rt.ctx.counters.merged.fetch_add(1, Ordering::Relaxed);
+                                    gathered += 1;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        } else {
+            // Busy: drain without blocking — late arrivals join the
+            // very next fused call.
+            while gathered < rt.ctx.cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if rt.on_msg(msg, &mut cancels, &mut answered) {
+                            rt.ctx.counters.merged.fetch_add(1, Ordering::Relaxed);
+                            gathered += 1;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            // Deadline-based encode coalescer: hold a round with queued
+            // misses open while the shard is busy so near-arrivals
+            // share its ONE fused encode (bounded latency trade).
+            if !rt.ctx.cfg.coalesce.is_zero()
+                && open
+                && !rt.all_idle()
+                && rt.state.has_queued_misses()
+            {
+                if answered {
+                    rt.ctx.events.notify();
+                    answered = false;
+                }
+                let deadline = std::time::Instant::now() + rt.ctx.cfg.coalesce;
+                while gathered < rt.ctx.cfg.max_batch {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(msg) => {
+                            if rt.on_msg(msg, &mut cancels, &mut answered) {
+                                rt.ctx.counters.merged.fetch_add(1, Ordering::Relaxed);
+                                gathered += 1;
+                            }
+                            // A cache hit answered inside the hold:
+                            // wake its waiter now, not at window end.
+                            if answered {
+                                rt.ctx.events.notify();
+                                answered = false;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // ---- 1b. work stealing: claim spilled requests ----
+        // Requests whose routed shard was saturated sit in the shared
+        // spill queue; any shard with gather budget left claims them
+        // FIFO, so a hot shard sheds load to its idle siblings instead
+        // of queueing it behind its own backlog.
+        if rt.ctx.cfg.steal {
+            while gathered < rt.ctx.cfg.max_batch {
+                let Some(req) = rt.ctx.steal_q.pop() else { break };
+                rt.ctx.counters.merged.fetch_add(1, Ordering::Relaxed);
+                rt.ctx.counters.steals.fetch_add(1, Ordering::Relaxed);
+                rt.ctx.metrics.inc("batcher.steals", 1);
+                answered |= rt.admit(req);
+                gathered += 1;
+            }
+        }
+        if answered {
+            rt.ctx.events.notify();
+        }
+
+        // ---- 2. apply cancellations ----
+        // Cancels are broadcast to every shard (a spilled future does
+        // not know which shard claimed it); shards without the ticket
+        // no-op. A molecule whose last waiter withdrew loses its queued
+        // miss, its in-flight tasks and its registry claim.
+        let had_cancels = !cancels.is_empty();
+        for (smiles, ticket) in cancels.drain(..) {
+            if rt.state.remove_waiter(&smiles, ticket) {
+                rt.state.drop_queued_miss(&smiles);
+                rt.cancel_tasks_of(&smiles);
+                rt.registry_release(&smiles);
+            }
+        }
+        if had_cancels {
+            rt.ctx.events.notify();
+        }
+
+        // ---- 2b. expire request deadlines ----
+        let orphaned = rt.state.expire_deadlines(std::time::Instant::now());
+        if !orphaned.is_empty() {
+            for mol in &orphaned {
+                rt.cancel_tasks_of(mol);
+                rt.registry_release(mol);
+            }
+            rt.ctx.metrics.inc("batcher.deadline_expired", orphaned.len() as u64);
+            rt.ctx.events.notify();
+        }
+
+        // ---- 3 + 4: the model-facing phases, panic-contained ----
+        // A model panic must not take the shard thread — and with it
+        // every session routed here — down.
+        let round_panicked =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| rt.model_phases()));
+        if round_panicked.is_err() {
+            rt.recover_from_panic();
+        }
+    }
+
+    // Shutdown: release registry claims and drop remaining state first
+    // so every outstanding reply sender is gone, THEN wake waiters —
+    // they observe the disconnect instead of sleeping to the deadline.
+    let ShardRt { state, ctx, .. } = rt;
+    ctx.registry.release_all_owned(ctx.shard);
+    drop(rx);
+    drop(state);
+    ctx.events.notify();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(mol: &str, k: usize, ticket: u64) -> ExpandReq {
+        let (reply, _rx) = mpsc::sync_channel(1);
+        ExpandReq { smiles: mol.to_string(), k, ticket, deadline: None, reply }
+    }
+
+    #[test]
+    fn registry_routes_joins_and_releases_by_owner() {
+        let reg = InFlightRegistry::new();
+        assert_eq!(reg.route("CCO"), None);
+        assert_eq!(reg.route_or_claim("CCO", 2), (2, false), "first claim takes fallback");
+        assert_eq!(reg.route_or_claim("CCO", 5), (2, true), "second submit joins the owner");
+        assert_eq!(reg.route("CCO"), Some(2));
+        reg.release_if_owned("CCO", 1);
+        assert_eq!(reg.route("CCO"), Some(2), "non-owner release is a no-op");
+        reg.release_if_owned("CCO", 2);
+        assert_eq!(reg.route("CCO"), None);
+    }
+
+    #[test]
+    fn registry_claim_is_first_owner_wins() {
+        let reg = InFlightRegistry::new();
+        reg.claim("CCN", 3);
+        reg.claim("CCN", 0);
+        assert_eq!(reg.route("CCN"), Some(3));
+        reg.claim("CCC", 0);
+        reg.release_all_owned(3);
+        assert_eq!(reg.route("CCN"), None);
+        assert_eq!(reg.route("CCC"), Some(0), "other shards' claims survive");
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn steal_queue_is_fifo() {
+        let q = StealQueue::new();
+        assert!(q.is_empty());
+        q.push(req("A", 1, 1));
+        q.push(req("B", 2, 2));
+        assert!(!q.is_empty());
+        assert_eq!(q.pop().unwrap().smiles, "A");
+        assert_eq!(q.pop().unwrap().smiles, "B");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn requeue_merges_by_max_k_and_tombstones_survive() {
+        let state = &mut HubState {
+            cache: SyncExpansionCache::new(4),
+            waiting: HashMap::new(),
+            covered: HashMap::new(),
+            to_submit: Vec::new(),
+            to_submit_idx: HashMap::new(),
+        };
+        state.requeue("CCO".into(), 3);
+        state.requeue("CCN".into(), 2);
+        state.requeue("CCO".into(), 5);
+        state.drop_queued_miss("CCN");
+        let round = state.take_submit_round();
+        assert_eq!(round, vec![("CCO".to_string(), 5)]);
+        assert!(!state.has_queued_misses());
+    }
+}

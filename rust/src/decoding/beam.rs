@@ -19,12 +19,12 @@
 
 use super::arena::{CompactScratch, TokenArena};
 use super::{
-    adopt_beams, compact_beams, delta_spec, finalize, fork_anchor, release_beam_states,
-    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput, RowBuf,
-    TaskState, COMPACT_MIN,
+    adopt_beams, compact_beams, delta_spec, finalize, release_beam_states, release_state, Beam,
+    CandidatePool, DecodeStats, DecodeTask, Decoder, ForkBatch, GenOutput, RowBuf, TaskState,
+    COMPACT_MIN,
 };
 use crate::model::scratch::ScoringScratch;
-use crate::model::{DecodeOut, MemView, StateId, StepModel};
+use crate::model::{DecodeOut, MemView, StateId, StateParent, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -85,6 +85,7 @@ impl Decoder for BeamSearch {
             compact: CompactScratch::new(),
             compact_at: COMPACT_MIN,
             cycle_states: Vec::new(),
+            fork_batch: ForkBatch::new(),
         }))
     }
 }
@@ -115,6 +116,8 @@ pub struct BeamTask {
     /// Claims from this cycle's `state_commit`s, released once
     /// survivors have adopted theirs.
     cycle_states: Vec<StateId>,
+    /// The cycle's fork commits, batched into one model call.
+    fork_batch: ForkBatch,
 }
 
 impl DecodeTask for BeamTask {
@@ -174,6 +177,31 @@ impl DecodeTask for BeamTask {
             }
         }
         self.cycle_states.clear();
+        // Pass 1: queue one fork per expanding row — this call
+        // processed each beam's last token, so `prefix ++ [last]` is
+        // committable now — then commit the whole cycle in ONE batch.
+        self.fork_batch.clear();
+        if self.inc {
+            for &(q, bi) in self.row_of.iter() {
+                if bi == usize::MAX {
+                    continue;
+                }
+                let b = self.beams[q][bi];
+                if b.finished {
+                    continue;
+                }
+                self.fork_batch.push(
+                    &self.views[q],
+                    StateParent::Id(b.state),
+                    self.arena.last_tok(b.node),
+                );
+            }
+        }
+        self.fork_batch.flush(model, &mut self.inc, &mut self.cycle_states);
+        // Pass 2: expand; every surviving child anchors on the state
+        // committed for its parent's row. The slot counter walks the
+        // same rows pass 1 queued (same skip conditions).
+        let mut slot = 0usize;
         for (r, &(q, bi)) in self.row_of.iter().enumerate() {
             if bi == usize::MAX {
                 continue; // first-step duplicate row
@@ -186,17 +214,8 @@ impl DecodeTask for BeamTask {
             let j = out
                 .offset_of(gr, self.arena.len(b.node) - 1)
                 .expect("window covers last position");
-            // Fork the cached state: this call processed the beam's
-            // last token, so `prefix ++ [last]` is committable now and
-            // every surviving child anchors on it.
-            let anchor = fork_anchor(
-                model,
-                &mut self.inc,
-                &self.views[q],
-                b.state,
-                self.arena.last_tok(b.node),
-                &mut self.cycle_states,
-            );
+            let anchor = self.fork_batch.id(slot);
+            slot += 1;
             self.scratch.top_k_log_softmax(out.logits(gr, j, 0), self.k);
             for &tok in &self.scratch.topk {
                 let node = self.arena.push(b.node, tok as i32);

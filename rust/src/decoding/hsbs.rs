@@ -25,12 +25,12 @@
 
 use super::arena::{CompactScratch, TokenArena};
 use super::{
-    adopt_beams, compact_beams, delta_spec, finalize, fork_anchor, release_beam_states,
-    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput, RowBuf,
-    TaskState, COMPACT_MIN,
+    adopt_beams, chain_links, compact_beams, delta_spec, finalize, release_beam_states,
+    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, ForkBatch, GenOutput,
+    RowBuf, TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::ScoringScratch;
-use crate::model::{argmax, DecodeOut, MemView, StateId, StepModel};
+use crate::model::{argmax, DecodeOut, MemView, StateId, StateParent, StepModel};
 use crate::tokenizer::EOS;
 use anyhow::Result;
 
@@ -147,6 +147,8 @@ impl Decoder for Hsbs {
             compact: CompactScratch::new(),
             compact_at: COMPACT_MIN,
             cycle_states: Vec::new(),
+            fork_batch: ForkBatch::new(),
+            chain_slots: Vec::new(),
         }))
     }
 }
@@ -181,6 +183,11 @@ pub struct HsbsTask {
     /// Claims from this cycle's backbone commits, released after
     /// survivor adoption (losing drafts are never committed — rollback).
     cycle_states: Vec<StateId>,
+    /// The cycle's fork commits, batched into one model call.
+    fork_batch: ForkBatch,
+    /// Per-`best`-entry root slot in the batch; the entry's chain
+    /// occupies slots `root..=root+links` contiguously.
+    chain_slots: Vec<usize>,
 }
 
 impl DecodeTask for HsbsTask {
@@ -273,7 +280,47 @@ impl DecodeTask for HsbsTask {
             }
         }
         self.cycle_states.clear();
-        for &(q, bi, acc, r) in self.best.iter() {
+        // Pass 1 — plan the backbone state chains: one root fork per
+        // winning row (its call just processed the beam's last token)
+        // plus one link per accepted backbone token, expressed as
+        // intra-batch `Slot` parents so the whole cycle commits in ONE
+        // model call. Losing drafts never commit — free rollback.
+        self.fork_batch.clear();
+        self.chain_slots.clear();
+        if self.inc {
+            for &(q, bi, acc, r) in self.best.iter() {
+                let b = self.beams[q][bi];
+                let p0 = self.arena.len(b.node) - 1;
+                let (ds, de) = (self.row_meta[r].2, self.row_meta[r].3);
+                let draft = &self.bodies[q][ds..de];
+                let ext_cap = acc.min(draft.len());
+                let gr = range.start + r;
+                let root = self.fork_batch.push(
+                    &self.views[q],
+                    StateParent::Id(b.state),
+                    self.arena.last_tok(b.node),
+                );
+                self.chain_slots.push(root);
+                // Mirror the harvest loop's break order: the fork at
+                // iteration j happens before that iteration's window /
+                // max-length checks.
+                let links = chain_links(out, gr, p0, self.max_len, ext_cap);
+                let mut prev = root;
+                for j in 1..=links {
+                    prev = self.fork_batch.push(
+                        &self.views[q],
+                        StateParent::Slot(prev),
+                        draft[j - 1],
+                    );
+                }
+            }
+        }
+        self.fork_batch.flush(model, &mut self.inc, &mut self.cycle_states);
+
+        // Pass 2 — harvest. Backbone-and-divergences (see msbs.rs for
+        // the rationale): top-K continuations at the end of the
+        // accepted backbone, top-K divergent branches elsewhere.
+        for (i, &(q, bi, acc, r)) in self.best.iter().enumerate() {
             let b = self.beams[q][bi];
             let blen = self.arena.len(b.node);
             let p0 = blen - 1;
@@ -282,34 +329,23 @@ impl DecodeTask for HsbsTask {
             let draft = &self.bodies[q][ds..de];
             self.stats.drafts_offered += draft.len() as u64;
             self.stats.drafts_accepted += acc as u64;
-            // Backbone-and-divergences harvesting (see msbs.rs for the
-            // rationale): top-K continuations at the end of the
-            // accepted backbone, top-K divergent branches elsewhere.
-            // Incrementally, the accepted backbone is committed one
-            // fork at a time (the best row's call just processed those
-            // positions); losing drafts never commit — free rollback.
             let ext_cap = acc.min(draft.len());
             let mut cum = b.logp;
             let mut backbone = b.node;
-            let mut anchor = fork_anchor(
-                model,
-                &mut self.inc,
-                &self.views[q],
-                b.state,
-                self.arena.last_tok(b.node),
-                &mut self.cycle_states,
-            );
+            let root_slot = self.chain_slots.get(i).copied().unwrap_or(usize::MAX);
+            let mut anchor = if root_slot == usize::MAX {
+                StateId::NONE
+            } else {
+                self.fork_batch.id(root_slot)
+            };
             for j in 0..=ext_cap {
                 if j > 0 {
                     backbone = self.arena.push(backbone, draft[j - 1]);
-                    anchor = fork_anchor(
-                        model,
-                        &mut self.inc,
-                        &self.views[q],
-                        anchor,
-                        draft[j - 1],
-                        &mut self.cycle_states,
-                    );
+                    anchor = if root_slot == usize::MAX {
+                        StateId::NONE
+                    } else {
+                        self.fork_batch.id(root_slot + j)
+                    };
                 }
                 let Some(off) = out.offset_of(gr, p0 + j) else { break };
                 let prefix_len = blen + j;

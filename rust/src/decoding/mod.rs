@@ -113,7 +113,10 @@ pub mod hsbs;
 pub mod msbs;
 pub mod scheduler;
 
-use crate::model::{encode_shared, DecodeOut, DecodeRow, MemHandle, MemView, StateId, StepModel};
+use crate::model::{
+    encode_shared, DecodeOut, DecodeRow, MemHandle, MemView, StateForkReq, StateId, StateParent,
+    StepModel,
+};
 use anyhow::Result;
 use arena::{NodeId, TokenArena};
 
@@ -413,36 +416,101 @@ pub(crate) fn delta_spec(arena: &TokenArena, b: &Beam, inc: bool) -> (StateId, u
     }
 }
 
-/// Fork a cached anchor: commit `parent ++ [tok]` and record the claim
-/// in `cycle_states` (released at the end of the cycle unless a
-/// survivor adopted it). A commit failure must not take down the whole
-/// scheduler tick (the tick-error contract scopes failures to the
-/// failing *call*), so instead of propagating, the task **degrades to
-/// full-prefix rows** for the rest of its life: `inc` flips off, the
-/// candidate anchors become NONE, and the claims already held drain
-/// through the usual adopt/cycle/finish releases. Results are
+/// A decode cycle's state forks, collected first and committed in ONE
+/// [`StepModel::state_commit_batch`] call. Chained forks reference the
+/// preceding link's batch slot ([`StateParent::Slot`]), so a whole
+/// cycle's commits cost one executor round trip on
+/// [`crate::runtime::server::SharedModel`] instead of one per committed
+/// row — the protocol overhead that used to dominate incremental decode
+/// behind the executor channel.
+///
+/// Failure semantics are the old per-call forking's, exactly: the batch
+/// stops at the first failed commit, the task **degrades to
+/// full-prefix rows** for the rest of its life (`inc` flips off; the
+/// failed slot and every later one read back as `NONE`), and each
+/// committed id is recorded in the caller's claim vector so it drains
+/// through the usual adopt/cycle/finish releases. A commit failure
+/// therefore still never takes down a scheduler tick, and results are
 /// unaffected — full rows are the bit-identical fallback path.
-pub(crate) fn fork_anchor(
-    model: &dyn StepModel,
-    inc: &mut bool,
-    view: &MemView,
-    parent: StateId,
-    tok: i32,
-    cycle_states: &mut Vec<StateId>,
-) -> StateId {
-    if !*inc {
-        return StateId::NONE;
+pub(crate) struct ForkBatch {
+    reqs: Vec<StateForkReq>,
+    ids: Vec<StateId>,
+}
+
+impl ForkBatch {
+    pub fn new() -> Self {
+        Self { reqs: Vec::new(), ids: Vec::new() }
     }
-    match model.state_commit(view.mem(), view.row(), parent, &[tok]) {
-        Ok(s) => {
-            cycle_states.push(s);
-            s
+
+    /// Queue a fork of `parent ++ [tok]` on `view`'s encoder row;
+    /// returns the entry's slot (usable as a later entry's parent and
+    /// as the [`ForkBatch::id`] lookup key after the flush).
+    pub fn push(&mut self, view: &MemView, parent: StateParent, tok: i32) -> usize {
+        self.reqs.push(StateForkReq { mem: view.mem(), mem_row: view.row(), parent, tok });
+        self.reqs.len() - 1
+    }
+
+    /// Clear queued entries and resolved ids for the next cycle
+    /// (buffers keep their capacity).
+    pub fn clear(&mut self) {
+        self.reqs.clear();
+        self.ids.clear();
+    }
+
+    /// Commit every queued fork in one model call. Committed ids are
+    /// pushed into `claims` in queue order — identical id assignment to
+    /// committing one at a time — and become readable via
+    /// [`ForkBatch::id`]. The first failure flips `inc` off (degrade to
+    /// full-prefix rows); with `inc` already off nothing is committed
+    /// and every slot reads `NONE`.
+    pub fn flush(&mut self, model: &dyn StepModel, inc: &mut bool, claims: &mut Vec<StateId>) {
+        self.ids.clear();
+        if !*inc || self.reqs.is_empty() {
+            return;
         }
-        Err(_) => {
-            *inc = false;
-            StateId::NONE
+        for res in model.state_commit_batch(&self.reqs) {
+            match res {
+                Ok(s) => {
+                    claims.push(s);
+                    self.ids.push(s);
+                }
+                Err(_) => {
+                    *inc = false;
+                    self.ids.push(StateId::NONE);
+                }
+            }
         }
     }
+
+    /// The committed id for `slot` (`NONE` when that commit failed, was
+    /// never reached, or the batch was skipped entirely).
+    pub fn id(&self, slot: usize) -> StateId {
+        self.ids.get(slot).copied().unwrap_or(StateId::NONE)
+    }
+}
+
+/// How many backbone forks the speculative harvest loop will perform
+/// for one row: a pure mirror of its control flow (a fork at the top of
+/// every iteration `j >= 1`, the window/length break checks after it),
+/// so the chain can be queued on a [`ForkBatch`] and committed *before*
+/// the loop runs. `p0` is the row's window start (`prefix len - 1`).
+pub(crate) fn chain_links(
+    out: &DecodeOut,
+    row: usize,
+    p0: usize,
+    max_len: usize,
+    ext_cap: usize,
+) -> usize {
+    let mut links = 0;
+    for j in 0..=ext_cap {
+        if j > 0 {
+            links += 1;
+        }
+        if out.offset_of(row, p0 + j).is_none() || p0 + 1 + j >= max_len {
+            break;
+        }
+    }
+    links
 }
 
 /// Reusable decode-call row storage: `DecodeRow::delta` buffers are

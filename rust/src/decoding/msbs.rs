@@ -30,13 +30,13 @@
 
 use super::arena::{CompactScratch, TokenArena};
 use super::{
-    adopt_beams, compact_beams, delta_spec, finalize, fork_anchor, release_beam_states,
-    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, GenOutput, RowBuf,
-    TaskState, COMPACT_MIN,
+    adopt_beams, chain_links, compact_beams, delta_spec, finalize, release_beam_states,
+    release_state, Beam, CandidatePool, DecodeStats, DecodeTask, Decoder, ForkBatch, GenOutput,
+    RowBuf, TaskState, COMPACT_MIN,
 };
 use crate::model::scratch::{nucleus_mass_before, ScoringScratch};
 use crate::model::{
-    argmax, encode_shared, release_views, DecodeOut, MemView, StateId, StepModel,
+    argmax, encode_shared, release_views, DecodeOut, MemView, StateId, StateParent, StepModel,
 };
 use crate::tokenizer::EOS;
 use anyhow::Result;
@@ -155,6 +155,8 @@ impl Msbs {
             compact_at: COMPACT_MIN,
             row_states: Vec::new(),
             cycle_states: Vec::new(),
+            fork_batch: ForkBatch::new(),
+            verify_plan: Vec::new(),
         })
     }
 
@@ -226,6 +228,11 @@ pub struct MsbsTask {
     /// Claims from the verify phase's backbone commits, released after
     /// survivor adoption (rejected draft positions are never committed).
     cycle_states: Vec<StateId>,
+    /// The cycle's fork commits, batched into one model call.
+    fork_batch: ForkBatch,
+    /// Per-row `(ext_cap, slot_start)` from the verify plan pass;
+    /// `slot_start == usize::MAX` means the row queued no chain forks.
+    verify_plan: Vec<(usize, usize)>,
 }
 
 impl MsbsTask {
@@ -244,6 +251,7 @@ impl MsbsTask {
         self.draft_span.clear();
         debug_assert!(self.row_states.is_empty(), "verify must have drained row states");
         self.row_states.clear();
+        self.fork_batch.clear();
         for (r, &(q, bi)) in self.row_of.iter().enumerate() {
             let b = self.beams[q][bi];
             let blen = self.arena.len(b.node);
@@ -258,22 +266,19 @@ impl MsbsTask {
             }
             self.draft_span.push((start, self.draft_flat.len()));
             if self.inc {
-                let anchor = fork_anchor(
-                    model,
-                    &mut self.inc,
+                self.fork_batch.push(
                     &self.views[q],
-                    b.state,
+                    StateParent::Id(b.state),
                     self.arena.last_tok(b.node),
-                    &mut self.row_states,
                 );
-                // A mid-batch degradation leaves earlier rows with real
-                // states and later ones without; the verify builder
-                // indexes row_states per row, so keep the slots aligned.
-                if anchor.is_none() {
-                    self.row_states.push(StateId::NONE);
-                }
             }
         }
+        // One batched commit for the whole cycle. The batch stops at
+        // the first failure, so the Ok ids land as a *prefix* of the
+        // rows in row order — the verify builder indexes row_states
+        // per row and a missing tail slot reads as NONE (full-prefix
+        // fallback), keeping the alignment the sequential path had.
+        self.fork_batch.flush(model, &mut self.inc, &mut self.row_states);
         self.phase = MsbsPhase::Verify;
     }
 
@@ -295,6 +300,15 @@ impl MsbsTask {
             }
         }
         self.accepted_log.clear();
+        // Pass 1 — accept drafts and *plan* the backbone state chains.
+        // Each accepted backbone walks `prefix ++ draft[..links]`; the
+        // chain forks one token at a time off the draft phase's
+        // full-prefix state, expressed as intra-batch `Slot` parents so
+        // the whole cycle commits in ONE model call. Positions past the
+        // accepted backbone are never committed, so a rejected draft
+        // rolls back for free.
+        self.fork_batch.clear();
+        self.verify_plan.clear();
         for (r, &(q, bi)) in self.row_of.iter().enumerate() {
             let b = self.beams[q][bi];
             let blen = self.arena.len(b.node);
@@ -322,37 +336,61 @@ impl MsbsTask {
             self.stats.drafts_accepted += acc as u64;
             self.accepted_log.push(acc);
 
-            // Harvest candidates. The accepted tokens form a committed
-            // *backbone*: at its end we take the top-K continuations;
-            // at every earlier accepted position we take the top-K
-            // *divergent* branches (excluding the draft token itself —
-            // it already lives inside the backbone, and re-adding it
-            // would flood the pool with nested prefixes). Cumulative
-            // log-probability ranks the pool, so a weakly-accepted
-            // backbone can lose to a short divergence — the paper's
-            // "both shorter and longer sequences may be the most
-            // probable".
             let ext_cap = eos_idx.unwrap_or(acc);
+            let start_anchor = self.row_states.get(r).copied().unwrap_or(StateId::NONE);
+            let mut slot_start = usize::MAX;
+            if self.inc && !start_anchor.is_none() {
+                // Mirror the harvest loop's break order: a fork at
+                // iteration j happens before that iteration's window /
+                // max-length checks, so the chain length is the number
+                // of iterations the harvest *enters* past j=0.
+                let links = chain_links(vout, gr, p0, self.max_len, ext_cap);
+                let mut prev: Option<usize> = None;
+                for j in 1..=links {
+                    let parent = match prev {
+                        None => StateParent::Id(start_anchor),
+                        Some(s) => StateParent::Slot(s),
+                    };
+                    let s = self.fork_batch.push(&self.views[q], parent, draft[j - 1]);
+                    if j == 1 {
+                        slot_start = s;
+                    }
+                    prev = Some(s);
+                }
+            }
+            self.verify_plan.push((ext_cap, slot_start));
+        }
+        self.fork_batch.flush(model, &mut self.inc, &mut self.cycle_states);
+
+        // Pass 2 — harvest candidates. The accepted tokens form a
+        // committed *backbone*: at its end we take the top-K
+        // continuations; at every earlier accepted position we take
+        // the top-K *divergent* branches (excluding the draft token
+        // itself — it already lives inside the backbone, and re-adding
+        // it would flood the pool with nested prefixes). Cumulative
+        // log-probability ranks the pool, so a weakly-accepted
+        // backbone can lose to a short divergence — the paper's "both
+        // shorter and longer sequences may be the most probable".
+        for (r, &(q, bi)) in self.row_of.iter().enumerate() {
+            let b = self.beams[q][bi];
+            let blen = self.arena.len(b.node);
+            let p0 = blen - 1;
+            let gr = range.start + r;
+            let (ds, de) = self.draft_span[r];
+            let draft = &self.draft_flat[ds..de];
+            let (ext_cap, slot_start) = self.verify_plan[r];
             let mut cum = b.logp;
             let mut backbone = b.node;
-            // The anchor chain starts at the draft phase's full-prefix
-            // state and forks one accepted token at a time; positions
-            // past the accepted backbone are never committed, so a
-            // rejected draft rolls back for free.
-            let mut anchor =
-                self.row_states.get(r).copied().unwrap_or(StateId::NONE);
+            let mut anchor = self.row_states.get(r).copied().unwrap_or(StateId::NONE);
             for j in 0..=ext_cap {
                 if j > 0 {
                     backbone = self.arena.push(backbone, draft[j - 1]);
                     if !anchor.is_none() {
-                        anchor = fork_anchor(
-                            model,
-                            &mut self.inc,
-                            &self.views[q],
-                            anchor,
-                            draft[j - 1],
-                            &mut self.cycle_states,
-                        );
+                        anchor = if slot_start == usize::MAX {
+                            StateId::NONE
+                        } else {
+                            self.fork_batch.id(slot_start + j - 1)
+                        };
                     }
                 }
                 let Some(off) = vout.offset_of(gr, p0 + j) else { break };

@@ -114,11 +114,21 @@ pub struct DecodeScheduler {
     /// [`DecodeScheduler::drain_failed`]).
     failed: Vec<TaskId>,
     next_id: u64,
+    /// Id increment per submit (see [`DecodeScheduler::with_ids`]).
+    id_stride: u64,
     pub stats: FusedStats,
 }
 
 impl DecodeScheduler {
-    pub fn new(mut cfg: SchedulerConfig) -> Self {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Self::with_ids(cfg, 1, 1)
+    }
+
+    /// A scheduler whose [`TaskId`]s walk `base, base+stride, ...` —
+    /// several schedulers (one per model replica) can then share one
+    /// id space without a coordination lock: give scheduler `r` of `N`
+    /// `base = r + 1, stride = N` and their ids interleave disjointly.
+    pub fn with_ids(mut cfg: SchedulerConfig, base: u64, stride: u64) -> Self {
         cfg.max_rows = cfg.max_rows.max(1);
         Self {
             cfg,
@@ -127,7 +137,8 @@ impl DecodeScheduler {
             out: DecodeOut::default(),
             staged: Vec::new(),
             failed: Vec::new(),
-            next_id: 1,
+            next_id: base.max(1),
+            id_stride: stride.max(1),
             stats: FusedStats::default(),
         }
     }
@@ -135,7 +146,7 @@ impl DecodeScheduler {
     /// Park a task; it joins the very next tick's fused call.
     pub fn submit(&mut self, task: Box<dyn DecodeTask>) -> TaskId {
         let id = TaskId(self.next_id);
-        self.next_id += 1;
+        self.next_id += self.id_stride;
         self.stats.tasks_submitted += 1;
         self.tasks.push(InFlight { id, task, done: false });
         id
@@ -490,6 +501,28 @@ mod tests {
         assert_eq!(finished.len(), 1);
         assert_eq!(finished[0].id, b);
         assert_eq!(model.inner.live_handles(), 0, "failed task released its memory");
+    }
+
+    #[test]
+    fn strided_ids_stay_disjoint_across_schedulers() {
+        let dec = BeamSearch::vanilla();
+        let model = MockModel::new(MockConfig::default());
+        // Two schedulers sharing one id space: r+1 base, stride 2.
+        let mut a = DecodeScheduler::with_ids(SchedulerConfig::default(), 1, 2);
+        let mut b = DecodeScheduler::with_ids(SchedulerConfig::default(), 2, 2);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            ids.push(a.submit(dec.start_task(&model, &groups()[0], 2).unwrap()));
+            ids.push(b.submit(dec.start_task(&model, &groups()[1], 2).unwrap()));
+        }
+        assert_eq!(
+            ids.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4, 5, 6],
+            "ids interleave without collision"
+        );
+        a.abort(&model);
+        b.abort(&model);
+        assert_eq!(model.live_handles(), 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use retroserve::coordinator::server::{Server, ServerCtx};
 use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::make_decoder;
 use retroserve::metrics::Metrics;
+use retroserve::model::{PooledModel, ReplicaPool};
 use retroserve::runtime::server::{SharedModel, SupervisorConfig};
 use retroserve::runtime::PjrtModel;
 use retroserve::search::{dfs::Dfs, retrostar::RetroStar, Planner, Stock};
@@ -48,6 +49,7 @@ fn build_hub(
     artifacts: &str,
     decoder: &str,
     batch_hint: usize,
+    replicas: usize,
     batcher: BatcherConfig,
     supervise: SupervisorConfig,
     metrics: Arc<Metrics>,
@@ -58,12 +60,20 @@ fn build_hub(
         Stock::load(std::path::Path::new(artifacts).join("stock.txt"))
             .context("loading stock.txt")?,
     );
-    let art = artifacts.to_string();
-    // Re-callable factory: a model panic fails only the in-flight call,
-    // then the executor rebuilds from the artifacts on disk.
-    let model = SharedModel::spawn_supervised(move || PjrtModel::load(&art), supervise)?;
+    // One supervised executor per replica, each with its own re-callable
+    // factory: a model panic fails only the in-flight call, then that
+    // replica's executor rebuilds from the artifacts on disk.
+    let mut models: Vec<PooledModel> = Vec::with_capacity(replicas.max(1));
+    for _ in 0..replicas.max(1) {
+        let art = artifacts.to_string();
+        models.push(Arc::new(SharedModel::spawn_supervised(
+            move || PjrtModel::load(&art),
+            supervise.clone(),
+        )?));
+    }
+    let pool = ReplicaPool::from_models(models);
     let dec = make_decoder(decoder, batch_hint)?;
-    let hub = ExpansionHub::start(model, dec, vocab.clone(), batcher, metrics);
+    let hub = ExpansionHub::start_pool(pool, dec, vocab.clone(), batcher, metrics);
     Ok((hub, stock, vocab))
 }
 
@@ -82,6 +92,7 @@ fn main() -> Result<()> {
                  usage:\n\
                  retroserve serve  [--config FILE] [--listen ADDR] \
                  [--decoder bs|bs-opt|hsbs|msbs]\n\
+                 [--shards N] [--replicas N] [--steal true|false]\n\
                  retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] \
                  [--deadline-ms N]\n\
                  [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
@@ -110,6 +121,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "max-decode-tokens" => cfg.apply_override("planner.max_decode_tokens", v)?,
             "model-retries" => cfg.apply_override("model.retries", v)?,
             "model-backoff-us" => cfg.apply_override("model.backoff_us", v)?,
+            "replicas" => cfg.apply_override("model.replicas", v)?,
+            "shards" => cfg.apply_override("batcher.shards", v)?,
+            "steal" => cfg.apply_override("batcher.steal", v)?,
             "config" => {}
             other => cfg.apply_override(other, v)?,
         }
@@ -120,12 +134,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &sc.artifacts,
         &sc.decoder,
         sc.batch_max,
+        sc.replicas,
         BatcherConfig {
             max_batch: sc.batch_max,
             max_wait: std::time::Duration::from_micros(sc.batch_wait_us),
             coalesce: std::time::Duration::from_micros(sc.batch_coalesce_us),
             max_rows: sc.batch_rows,
             cache_cap: sc.cache_cap,
+            shards: sc.shards,
+            steal: sc.steal,
         },
         SupervisorConfig {
             retries: sc.model_retries,
@@ -174,6 +191,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         artifacts,
         decoder,
         bw.max(1),
+        1,
         BatcherConfig::default(),
         SupervisorConfig::default(),
         metrics,
@@ -260,6 +278,7 @@ fn cmd_expand(args: &Args) -> Result<()> {
     let (hub, _, _) = build_hub(
         artifacts,
         decoder,
+        1,
         1,
         BatcherConfig::default(),
         SupervisorConfig::default(),

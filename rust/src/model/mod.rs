@@ -44,10 +44,12 @@
 //! [`MemView`] encoder memory.
 
 pub mod mock;
+pub mod replica;
 pub mod scratch;
 pub mod scripted;
 pub mod state;
 
+pub use replica::{is_replica_gone, PooledModel, ReplicaPool, ReplicaStats};
 pub use state::{StateId, StateStore};
 
 use anyhow::Result;
@@ -177,6 +179,30 @@ impl DecodeRow {
     }
 }
 
+/// Parent reference for one entry of a
+/// [`StepModel::state_commit_batch`] call: either an already-committed
+/// state (or [`StateId::NONE`] for a root commit) or the freshly
+/// committed result of an *earlier entry in the same batch*. Slot
+/// references are how an engine ships a chained backbone — each fork's
+/// parent is the previous fork's result — in one executor round trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateParent {
+    /// An existing state id (`StateId::NONE` = no cached parent).
+    Id(StateId),
+    /// The id committed by batch entry `i` (must be an earlier entry).
+    Slot(usize),
+}
+
+/// One decoder-state fork queued for [`StepModel::state_commit_batch`]:
+/// commit `parent's prefix ++ [tok]` on encoder row `(mem, mem_row)`.
+#[derive(Debug, Clone)]
+pub struct StateForkReq {
+    pub mem: MemHandle,
+    pub mem_row: usize,
+    pub parent: StateParent,
+    pub tok: i32,
+}
+
 /// Logits for a window of positions per row: `(rows, win, heads, vocab)`.
 ///
 /// `Default` yields an empty buffer suitable for
@@ -283,6 +309,50 @@ pub trait StepModel {
         let _ = (mem, mem_row, parent, delta);
         anyhow::bail!("model does not support incremental decode state")
     }
+    /// Commit a batch of decoder-state forks in ONE call, in order.
+    /// Entry `i` may name an earlier entry's freshly committed id via
+    /// [`StateParent::Slot`], so chained forks (each link's parent is
+    /// the previous link's result) cost one call, not one per link —
+    /// on [`crate::runtime::server::SharedModel`] that is one executor
+    /// round trip per decode cycle instead of one per committed row.
+    ///
+    /// Semantics mirror sequential committing exactly: entries commit
+    /// in order and the batch STOPS at the first failure — every later
+    /// entry returns `Err` *uncommitted*, and a slot reference to a
+    /// failed or out-of-range entry fails its own entry the same way.
+    /// A caller that degrades to full-prefix rows on the first `Err`
+    /// therefore observes the identical committed-state set it would
+    /// have under one-call-at-a-time committing. Like single commits,
+    /// the batch is never retried (a replay could double-claim).
+    fn state_commit_batch(&self, reqs: &[StateForkReq]) -> Vec<Result<StateId>> {
+        let mut out: Vec<Result<StateId>> = Vec::with_capacity(reqs.len());
+        let mut alive = true;
+        for r in reqs {
+            if !alive {
+                out.push(Err(anyhow::anyhow!("state commit batch stopped at earlier failure")));
+                continue;
+            }
+            let parent = match r.parent {
+                StateParent::Id(id) => Ok(id),
+                StateParent::Slot(i) => match out.get(i) {
+                    Some(Ok(id)) => Ok(*id),
+                    _ => Err(anyhow::anyhow!("batch slot {i} is not an earlier committed entry")),
+                },
+            };
+            match parent {
+                Ok(p) => {
+                    let res = self.state_commit(r.mem, r.mem_row, p, std::slice::from_ref(&r.tok));
+                    alive = res.is_ok();
+                    out.push(res);
+                }
+                Err(e) => {
+                    alive = false;
+                    out.push(Err(e));
+                }
+            }
+        }
+        out
+    }
     /// Add a claim on a cached state (a surviving fork adopting an
     /// anchor). No-op by default.
     fn state_retain(&self, state: StateId) {
@@ -334,6 +404,9 @@ impl<T: StepModel + ?Sized> StepModel for Box<T> {
         delta: &[i32],
     ) -> Result<StateId> {
         (**self).state_commit(mem, mem_row, parent, delta)
+    }
+    fn state_commit_batch(&self, reqs: &[StateForkReq]) -> Vec<Result<StateId>> {
+        (**self).state_commit_batch(reqs)
     }
     fn state_retain(&self, state: StateId) {
         (**self).state_retain(state)
@@ -451,6 +524,36 @@ mod tests {
         assert_eq!(views[1].live(), 2);
         release_views(&m, views);
         assert_eq!(m.live_handles(), 0);
+    }
+
+    #[test]
+    fn state_commit_batch_matches_sequential_and_stops_at_failure() {
+        use crate::model::mock::{MockConfig, MockModel};
+        let m = MockModel::new(MockConfig::default());
+        let h = m.encode(&[vec![1, 5, 6, 7, 2]]).unwrap();
+        // Chained batch: a root commit, then a link whose parent is the
+        // root's slot — the msbs/hsbs backbone shape.
+        let out = m.state_commit_batch(&[
+            StateForkReq { mem: h, mem_row: 0, parent: StateParent::Id(StateId::NONE), tok: 1 },
+            StateForkReq { mem: h, mem_row: 0, parent: StateParent::Slot(0), tok: 5 },
+        ]);
+        let s0 = *out[0].as_ref().unwrap();
+        let s1 = *out[1].as_ref().unwrap();
+        // Content-addressing makes equivalence observable: sequential
+        // commits of the same prefixes return the very same ids.
+        let t0 = m.state_commit(h, 0, StateId::NONE, &[1]).unwrap();
+        let t1 = m.state_commit(h, 0, t0, &[5]).unwrap();
+        assert_eq!(s0, t0);
+        assert_eq!(s1, t1);
+        // A slot reference that names no earlier committed entry fails
+        // its own entry AND stops the batch (later entries uncommitted).
+        let bad = m.state_commit_batch(&[
+            StateForkReq { mem: h, mem_row: 0, parent: StateParent::Slot(7), tok: 1 },
+            StateForkReq { mem: h, mem_row: 0, parent: StateParent::Id(StateId::NONE), tok: 1 },
+        ]);
+        assert!(bad[0].is_err());
+        assert!(bad[1].is_err());
+        m.release(h);
     }
 
     #[test]

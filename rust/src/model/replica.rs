@@ -1,0 +1,247 @@
+//! Model replica pool: N executor-backed [`StepModel`]s behind one
+//! load-aware dispatcher.
+//!
+//! One `SharedModel` executor serializes every fused call onto a single
+//! device — the throughput ceiling once the sharded hub fans out
+//! (ROADMAP: "multi-device serving"). The pool wraps N independent
+//! executors (typically N [`crate::runtime::SharedModel`]s, each owning
+//! its own supervised device thread) and hands shard rounds the
+//! *least-loaded live* replica. Replicas may be heterogeneous — the
+//! trait object erases the model type, so the pool doubles as the
+//! ensemble substrate later.
+//!
+//! The pool is pure bookkeeping: it never calls the models itself.
+//! Shard loops `pick()` a replica, run encode/tick on
+//! [`ReplicaPool::model`], and report load via `charge`/`discharge`
+//! (outstanding logical rows — the same signal the fused-call budget
+//! is denominated in). All counters are atomics; the pool is shared
+//! across shard threads as a plain `Arc` with no lock.
+//!
+//! **Failure domain**: a replica whose executor died past
+//! `max_restarts` answers every call with a "model thread gone" error
+//! ([`is_replica_gone`] recognizes it). The shard that observes this
+//! calls [`ReplicaPool::mark_dead`] and re-submits the dead replica's
+//! work to a survivor — waiters are failed only when the *last*
+//! replica dies ([`ReplicaPool::alive_count`] == 0).
+
+use super::StepModel;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A pool-managed model: shareable across shard threads. Concrete
+/// models that are not `Sync` (the PJRT wrappers) enter the pool via
+/// their `SharedModel` executor handle, which is.
+pub type PooledModel = Arc<dyn StepModel + Send + Sync>;
+
+struct ReplicaSlot {
+    model: PooledModel,
+    alive: AtomicBool,
+    /// Logical rows currently in flight on this replica (charged at
+    /// task start, discharged at retire/cancel/failure).
+    outstanding_rows: AtomicI64,
+    fused_calls: AtomicU64,
+    rows_dispatched: AtomicU64,
+}
+
+/// Point-in-time view of one replica's counters (benches, metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaStats {
+    pub alive: bool,
+    pub outstanding_rows: i64,
+    pub fused_calls: u64,
+    pub rows_dispatched: u64,
+}
+
+/// N `StepModel` executors behind least-outstanding-rows dispatch.
+pub struct ReplicaPool {
+    slots: Vec<ReplicaSlot>,
+}
+
+impl ReplicaPool {
+    /// Pool over pre-built models (one executor each). Panics on an
+    /// empty list — a hub without a model cannot serve.
+    pub fn from_models(models: Vec<PooledModel>) -> Self {
+        assert!(!models.is_empty(), "replica pool needs at least one model");
+        let slots = models
+            .into_iter()
+            .map(|model| ReplicaSlot {
+                model,
+                alive: AtomicBool::new(true),
+                outstanding_rows: AtomicI64::new(0),
+                fused_calls: AtomicU64::new(0),
+                rows_dispatched: AtomicU64::new(0),
+            })
+            .collect();
+        Self { slots }
+    }
+
+    /// Single-replica pool — the parity configuration: `pick` always
+    /// answers 0, so dispatch adds no behavior over the bare model.
+    pub fn single<M: StepModel + Send + Sync + 'static>(model: M) -> Self {
+        Self::from_models(vec![Arc::new(model)])
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.alive.load(Ordering::Relaxed)).count()
+    }
+
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.slots[i].alive.load(Ordering::Relaxed)
+    }
+
+    /// The replica's model, for encode/tick calls. Valid for dead
+    /// replicas too (fire-and-forget releases drain harmlessly into a
+    /// gone executor).
+    pub fn model(&self, i: usize) -> &dyn StepModel {
+        self.slots[i].model.as_ref()
+    }
+
+    /// Clone the shareable handle (per-task decode references).
+    pub fn model_arc(&self, i: usize) -> PooledModel {
+        Arc::clone(&self.slots[i].model)
+    }
+
+    /// Least-outstanding-rows dispatch over live replicas, lowest index
+    /// on ties (deterministic; a 1-replica pool always answers 0).
+    /// `None` means every replica is dead.
+    pub fn pick(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive.load(Ordering::Relaxed))
+            .min_by_key(|(i, s)| (s.outstanding_rows.load(Ordering::Relaxed), *i))
+            .map(|(i, _)| i)
+    }
+
+    /// Rows entering flight on replica `i`.
+    pub fn charge(&self, i: usize, rows: usize) {
+        self.slots[i].outstanding_rows.fetch_add(rows as i64, Ordering::Relaxed);
+    }
+
+    /// Rows leaving flight (retired, cancelled, or failed).
+    pub fn discharge(&self, i: usize, rows: usize) {
+        self.slots[i].outstanding_rows.fetch_sub(rows as i64, Ordering::Relaxed);
+    }
+
+    /// Account one fused device call of `rows` logical rows.
+    pub fn note_fused_call(&self, i: usize, rows: usize) {
+        self.slots[i].fused_calls.fetch_add(1, Ordering::Relaxed);
+        self.slots[i].rows_dispatched.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    /// Take replica `i` out of dispatch (executor past `max_restarts`).
+    /// Its outstanding charge is zeroed — the caller re-submits that
+    /// work elsewhere. Returns `true` only for the FIRST caller to kill
+    /// this replica (several shards may observe the same death; death
+    /// metrics should count replicas, not observations).
+    pub fn mark_dead(&self, i: usize) -> bool {
+        let was_alive = self.slots[i].alive.swap(false, Ordering::Relaxed);
+        self.slots[i].outstanding_rows.store(0, Ordering::Relaxed);
+        was_alive
+    }
+
+    pub fn stats(&self) -> Vec<ReplicaStats> {
+        self.slots
+            .iter()
+            .map(|s| ReplicaStats {
+                alive: s.alive.load(Ordering::Relaxed),
+                outstanding_rows: s.outstanding_rows.load(Ordering::Relaxed),
+                fused_calls: s.fused_calls.load(Ordering::Relaxed),
+                rows_dispatched: s.rows_dispatched.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+/// Does this error mean the replica's executor thread is gone (its
+/// supervisor gave up past `max_restarts`)? Such errors are a property
+/// of the *replica*, not the request — the caller should fail over,
+/// not fail the waiter.
+pub fn is_replica_gone(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains("model thread gone")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mock::{MockConfig, MockModel};
+
+    fn pool(n: usize) -> ReplicaPool {
+        ReplicaPool::from_models(
+            (0..n)
+                .map(|_| Arc::new(MockModel::new(MockConfig::default())) as PooledModel)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn pick_prefers_least_outstanding_with_index_tiebreak() {
+        let p = pool(3);
+        assert_eq!(p.pick(), Some(0), "all-zero load ties break to index 0");
+        p.charge(0, 10);
+        p.charge(1, 4);
+        assert_eq!(p.pick(), Some(2));
+        p.charge(2, 4);
+        assert_eq!(p.pick(), Some(1), "4-row tie breaks to the lower index");
+        p.discharge(0, 10);
+        assert_eq!(p.pick(), Some(0));
+    }
+
+    #[test]
+    fn dead_replicas_leave_dispatch() {
+        let p = pool(2);
+        p.charge(1, 100);
+        p.mark_dead(0);
+        assert_eq!(p.alive_count(), 1);
+        assert_eq!(p.pick(), Some(1), "loaded survivor beats dead idle replica");
+        p.mark_dead(1);
+        assert_eq!(p.pick(), None);
+        assert_eq!(p.alive_count(), 0);
+    }
+
+    #[test]
+    fn mark_dead_zeroes_outstanding_charge() {
+        let p = pool(1);
+        p.charge(0, 42);
+        assert!(p.mark_dead(0), "first observer kills the replica");
+        assert!(!p.mark_dead(0), "repeat observers see it already dead");
+        assert_eq!(p.stats()[0].outstanding_rows, 0);
+        assert!(!p.stats()[0].alive);
+    }
+
+    #[test]
+    fn single_is_a_one_replica_pool() {
+        let p = ReplicaPool::single(MockModel::new(MockConfig::default()));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.pick(), Some(0));
+        assert_eq!(p.model(0).vocab(), p.model_arc(0).vocab());
+    }
+
+    #[test]
+    fn fused_call_accounting_feeds_stats() {
+        let p = pool(2);
+        p.note_fused_call(1, 8);
+        p.note_fused_call(1, 4);
+        let st = p.stats();
+        assert_eq!(st[0].fused_calls, 0);
+        assert_eq!(st[1].fused_calls, 2);
+        assert_eq!(st[1].rows_dispatched, 12);
+    }
+
+    #[test]
+    fn gone_error_detection_matches_executor_message() {
+        assert!(is_replica_gone(&anyhow::anyhow!("model thread gone")));
+        assert!(is_replica_gone(
+            &anyhow::anyhow!("model thread gone").context("encode failed")
+        ));
+        assert!(!is_replica_gone(&anyhow::anyhow!("device OOM")));
+    }
+}

@@ -8,7 +8,7 @@
 //! expansion requests *before* they reach the executor.
 
 use crate::metrics::Metrics;
-use crate::model::{DecodeOut, DecodeRow, MemHandle, StateId, StepModel};
+use crate::model::{DecodeOut, DecodeRow, MemHandle, StateForkReq, StateId, StepModel};
 use anyhow::{anyhow, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -26,6 +26,11 @@ enum Req {
     /// (the caller needs the id); retain/release are fire-and-forget
     /// like `Release` — the channel keeps them ordered with decodes.
     StateCommit(MemHandle, usize, StateId, Vec<i32>, mpsc::SyncSender<Result<StateId>>),
+    /// A whole decode cycle's state forks in one round trip. Like
+    /// `StateCommit`, never retried; a panic answers every entry with a
+    /// scoped error (entries committed before the panic are reported
+    /// failed — the rebuilt incarnation has no states anyway).
+    StateCommitBatch(Vec<StateForkReq>, mpsc::SyncSender<Vec<Result<StateId>>>),
     StateRetain(StateId),
     StateRelease(StateId),
     Shutdown,
@@ -227,6 +232,25 @@ fn serve_req<M: StepModel>(model: &M, req: Req, cfg: &SupervisorConfig) -> Optio
                 }
                 Guarded::Panicked(p) => {
                     let _ = reply.send(Err(anyhow!("model panicked during state_commit: {p}")));
+                    Some(p)
+                }
+            }
+        }
+        Req::StateCommitBatch(reqs, reply) => {
+            // No retry, same as single commits; the batch default impl
+            // already stops at the first per-entry failure.
+            match catch_unwind(AssertUnwindSafe(|| model.state_commit_batch(&reqs))) {
+                Ok(v) => {
+                    let _ = reply.send(v);
+                    None
+                }
+                Err(p) => {
+                    let p = panic_msg(p.as_ref());
+                    let all_err = reqs
+                        .iter()
+                        .map(|_| Err(anyhow!("model panicked during state_commit: {p}")))
+                        .collect();
+                    let _ = reply.send(all_err);
                     Some(p)
                 }
             }
@@ -442,6 +466,22 @@ impl StepModel for SharedModel {
         rx.recv().map_err(|_| anyhow!("model thread gone"))?
     }
 
+    fn state_commit_batch(&self, reqs: &[StateForkReq]) -> Vec<Result<StateId>> {
+        // ONE executor round trip for the whole cycle's forks — the
+        // per-committed-row round trip this replaces was the dominant
+        // protocol overhead of incremental decode on `SharedModel`.
+        let gone = || {
+            reqs.iter()
+                .map(|_| Err(anyhow!("model thread gone")))
+                .collect::<Vec<Result<StateId>>>()
+        };
+        let (tx, rx) = mpsc::sync_channel(1);
+        if self.tx.send(Req::StateCommitBatch(reqs.to_vec(), tx)).is_err() {
+            return gone();
+        }
+        rx.recv().unwrap_or_else(|_| gone())
+    }
+
     fn state_retain(&self, state: StateId) {
         let _ = self.tx.send(Req::StateRetain(state));
     }
@@ -576,6 +616,25 @@ mod tests {
         assert!(shared
             .decode(&[DecodeRow { mem: h, mem_row: 0, state: s, delta: vec![6], pos: 2 }], 1)
             .is_err());
+        shared.release(h);
+    }
+
+    #[test]
+    fn state_commit_batch_crosses_the_executor_thread() {
+        use crate::model::StateParent;
+        let shared =
+            SharedModel::spawn(|| Ok(MockModel::new(MockConfig::default()))).unwrap();
+        let h = shared.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+        let out = shared.state_commit_batch(&[
+            StateForkReq { mem: h, mem_row: 0, parent: StateParent::Id(StateId::NONE), tok: BOS },
+            StateForkReq { mem: h, mem_row: 0, parent: StateParent::Slot(0), tok: 5 },
+        ]);
+        // Content-addressed ids make the one-round-trip batch provably
+        // identical to sequential commits.
+        let t0 = shared.state_commit(h, 0, StateId::NONE, &[BOS]).unwrap();
+        let t1 = shared.state_commit(h, 0, t0, &[5]).unwrap();
+        assert_eq!(*out[0].as_ref().unwrap(), t0);
+        assert_eq!(*out[1].as_ref().unwrap(), t1);
         shared.release(h);
     }
 

@@ -267,6 +267,47 @@ impl SharedExpansionCache {
     }
 }
 
+/// [`KTruncatedCache`] shareable across *threads*: the sharded hub's
+/// cross-shard tier. A molecule decoded by any shard serves every
+/// shard's later hits — the cache would otherwise fragment S ways and
+/// shard routing would change hit rates. Same k-truncation semantics
+/// as [`SharedExpansionCache`] (both wrap the one core), but behind a
+/// `Mutex` instead of a `RefCell`. Lock scope is a probe or an insert —
+/// never held across a model call. Poison-tolerant: a panicking shard
+/// must not take the cache down with it (entries are immutable
+/// snapshots, so a poisoned lock hides no torn state).
+#[derive(Clone)]
+pub struct SyncExpansionCache(std::sync::Arc<std::sync::Mutex<KTruncatedCache>>);
+
+impl SyncExpansionCache {
+    pub fn new(cap: usize) -> Self {
+        Self(std::sync::Arc::new(std::sync::Mutex::new(KTruncatedCache::new(cap))))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, KTruncatedCache> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// See [`KTruncatedCache::get`].
+    #[allow(clippy::ptr_arg)]
+    pub fn get(&self, mol: &String, k: usize) -> Option<Vec<Proposal>> {
+        self.lock().get(mol, k)
+    }
+
+    /// See [`KTruncatedCache::insert`].
+    pub fn insert(&self, mol: String, k: usize, props: Vec<Proposal>) {
+        self.lock().insert(mol, k, props)
+    }
+}
+
 /// Neural policy: decoder over a `StepModel`, with a bounded LRU
 /// expansion cache (planners revisit molecules constantly;
 /// AiZynthFinder caches too). The cache is molecule-keyed and can be
@@ -594,6 +635,31 @@ mod tests {
         assert_eq!(b.calls(), 1);
         let _ = a.expand_batch(&["CC(=O)O.CN"], 6).unwrap();
         assert_eq!(a.calls(), 1, "widened entry must serve policy a");
+    }
+
+    #[test]
+    fn sync_cache_spans_threads_with_same_truncation_semantics() {
+        let cache = SyncExpansionCache::new(16);
+        let wide = vec![
+            Proposal { reactants: vec!["CCO".into()], logp: -0.1 },
+            Proposal { reactants: vec!["CCN".into()], logp: -0.2 },
+        ];
+        cache.insert("CCC".into(), 2, wide.clone());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = cache.clone();
+                std::thread::spawn(move || c.get(&"CCC".to_string(), 1))
+            })
+            .collect();
+        for h in handles {
+            let hit = h.join().unwrap().expect("k=1 must hit the k=2 entry");
+            assert_eq!(hit, wide[..1]);
+        }
+        assert!(cache.get(&"CCC".to_string(), 3).is_none(), "wider k must miss");
+        // A narrower insert never clobbers the wider entry.
+        cache.insert("CCC".into(), 1, wide[..1].to_vec());
+        assert_eq!(cache.get(&"CCC".to_string(), 2).unwrap(), wide);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

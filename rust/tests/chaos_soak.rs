@@ -25,7 +25,7 @@ use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::beam::BeamSearch;
 use retroserve::metrics::Metrics;
 use retroserve::model::mock::{MockConfig, MockModel};
-use retroserve::model::StepModel;
+use retroserve::model::{PooledModel, ReplicaPool, StepModel};
 use retroserve::runtime::server::{SharedModel, SupervisorConfig};
 use retroserve::search::{retrostar::RetroStar, SearchLimits, Stock, StopReason};
 use retroserve::tokenizer::{Vocab, BOS, EOS};
@@ -325,6 +325,94 @@ fn supervised_hub_survives_an_executor_panic() {
     assert!(!proposals.is_empty());
     assert_eq!(metrics.counter("model.panics"), 1);
     assert_eq!(metrics.counter("model.restarts"), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Replica failure domain: one replica of a pool dies past max_restarts;
+// the survivors keep serving and nothing leaks.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replica_death_past_max_restarts_fails_over_to_the_survivor() {
+    mute_injected_panics();
+    let vocab = vocab();
+    let vlen = vocab.len();
+    let live = Arc::new(AtomicIsize::new(0));
+    let claims = Arc::new(AtomicIsize::new(0));
+    let metrics = Arc::new(Metrics::new());
+    // Replica 0 is doomed: its first incarnation panics on its first
+    // encode, and every rebuild attempt fails (as a real reload would
+    // if the device fell off the bus) — so the supervisor gives up
+    // past max_restarts and the executor exits; subsequent calls see
+    // "model thread gone".
+    let armed = Arc::new(AtomicBool::new(true));
+    let doomed = SharedModel::spawn_supervised(
+        move || {
+            if armed.swap(false, Ordering::SeqCst) {
+                Ok(ChaosModel::new(
+                    MockModel::new(MockConfig { vocab: vlen, ..Default::default() }),
+                    ChaosConfig { panic_on_encode: vec![1], ..Default::default() },
+                ))
+            } else {
+                Err(anyhow::anyhow!("chaos: artifacts gone, rebuild impossible"))
+            }
+        },
+        SupervisorConfig {
+            retries: 0,
+            backoff_us: 50,
+            max_restarts: 1,
+            metrics: Some(metrics.clone()),
+        },
+    )
+    .unwrap();
+    // Replica 1 is healthy and carries the leak probes: after the dust
+    // settles, ALL device memory and state claims live here.
+    let healthy =
+        InstrumentedModel::new(MockModel::new(MockConfig { vocab: vlen, ..Default::default() }))
+            .with_live_counter(live.clone())
+            .with_state_counter(claims.clone());
+    let hub = ExpansionHub::start_pool(
+        ReplicaPool::from_models(vec![
+            Arc::new(doomed) as PooledModel,
+            Arc::new(healthy) as PooledModel,
+        ]),
+        Box::new(BeamSearch::optimized()),
+        vocab,
+        BatcherConfig {
+            max_wait: Duration::from_micros(200),
+            shards: 2,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    // Every request must be ANSWERED, including the one that observes
+    // the death: its fused encode fails scoped (the panic), the
+    // per-molecule fallback then sees "model thread gone", the pool
+    // marks replica 0 dead, and the retry lands on the survivor — the
+    // waiter never learns any of this happened.
+    for round in 0..3usize {
+        for smiles in POOL {
+            let d = Instant::now() + Duration::from_secs(5);
+            let fut = hub.submit_deadline(smiles, 2 + round, Some(d)).unwrap();
+            let p = fut.wait_deadline(d).unwrap_or_else(|e| {
+                panic!("{smiles} (round {round}) must survive the replica death: {e:#}")
+            });
+            assert!(!p.is_empty(), "{smiles} round {round}");
+        }
+    }
+    assert_eq!(hub.replica_deaths(), 1, "one replica died, counted once");
+    let stats = hub.replica_stats();
+    assert!(!stats[0].alive, "doomed replica left dispatch: {stats:?}");
+    assert!(stats[1].alive, "survivor still live: {stats:?}");
+    assert!(stats[1].fused_calls > 0, "survivor served the decodes: {stats:?}");
+    assert_eq!(metrics.counter("model.panics"), 1);
+    assert_eq!(metrics.counter("model.restarts"), 0, "every rebuild was refused");
+    // Fresh work keeps flowing on the survivor, and nothing leaked:
+    // waiters, decode tasks, scheduler slots, memory views and state
+    // claims all drain to zero.
+    let p = hub.expand("CCO", 4).expect("survivor must keep serving");
+    assert!(!p.is_empty());
+    assert_drained(&hub, &live, &claims, 0);
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,188 @@
+//! Sharded-serving parity suite.
+//!
+//! The replica-sharded tier's contract: `shards = S, replicas = N` is
+//! *observably identical* to the classic single hub loop — same
+//! proposals (reactant strings exact, log-probs @1e-9) for every
+//! request and the same aggregate `DecodeStats` (every field except
+//! wall time) — for S ∈ {1, 2, 4} × N ∈ {1, 2}, under staggered
+//! multi-threaded submission. Sharding and replication may only change
+//! WHERE work runs, never what it computes.
+//!
+//! The mock runs with perfect Medusa heads so its logits are
+//! content-pure (the default mock corrupts heads by a hash of the
+//! memory handle id, which *legitimately* differs across replicas and
+//! shard batch layouts); real models are content-pure by construction.
+//!
+//! Determinism notes: every request uses a distinct molecule (no cache
+//! hits, no cross-shard dedup joins), the request count stays far
+//! below `max_batch` (no steal-queue spills), and each molecule keeps
+//! a fixed k across configurations. Per-task decode stats depend only
+//! on the task's own rows — a task rides one fused tick per decode
+//! cycle of its own regardless of co-tenancy — so their sum is
+//! invariant under re-sharding.
+
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::decoding::{make_decoder, DecodeStats};
+use retroserve::metrics::Metrics;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::model::{PooledModel, ReplicaPool};
+use retroserve::search::Proposal;
+use retroserve::tokenizer::Vocab;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Distinct molecules, one per request: the dotted ones split into
+/// multi-component proposals under the mock's copy task.
+const MOLS: [&str; 6] = ["CC(=O)O.CN", "CC(=O)NC", "CCO", "CCN", "CCC", "CCCC"];
+
+fn pure_cfg(vocab: usize) -> MockConfig {
+    MockConfig { vocab, head_base_acc: 100, head_acc_decay: 0, ..Default::default() }
+}
+
+/// Fixed per-molecule k so a molecule's decode is identical across
+/// configurations.
+fn k_for(i: usize) -> usize {
+    3 + i % 3
+}
+
+/// Run the full workload against a fresh hub at (shards, replicas):
+/// every molecule submitted from its own thread, optionally staggered
+/// across several scheduler ticks so later arrivals join rounds
+/// mid-flight. Returns per-molecule proposals and aggregate stats.
+fn run_config(
+    decoder: &str,
+    shards: usize,
+    replicas: usize,
+    stagger: bool,
+) -> (HashMap<String, Vec<Proposal>>, DecodeStats) {
+    let vocab = Vocab::build(MOLS);
+    let models: Vec<PooledModel> = (0..replicas)
+        .map(|_| Arc::new(MockModel::new(pure_cfg(vocab.len()))) as PooledModel)
+        .collect();
+    let hub = ExpansionHub::start_pool(
+        ReplicaPool::from_models(models),
+        make_decoder(decoder, 4).unwrap(),
+        vocab,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            shards,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    assert_eq!(hub.shard_count(), shards.max(1));
+    let mut joins = Vec::new();
+    for (i, m) in MOLS.iter().enumerate() {
+        let hc = hub.clone();
+        let mol = m.to_string();
+        joins.push(std::thread::spawn(move || {
+            if stagger {
+                std::thread::sleep(Duration::from_micros(300 * i as u64));
+            }
+            let props = hc.expand(&mol, k_for(i)).unwrap();
+            (mol, props)
+        }));
+    }
+    let mut out = HashMap::new();
+    for j in joins {
+        let (mol, props) = j.join().unwrap();
+        out.insert(mol, props);
+    }
+    (out, hub.stats())
+}
+
+fn assert_same_proposals(
+    label: &str,
+    got: &HashMap<String, Vec<Proposal>>,
+    want: &HashMap<String, Vec<Proposal>>,
+) {
+    assert_eq!(got.len(), want.len(), "{label}: answered request count");
+    for (mol, w) in want {
+        let g = &got[mol];
+        assert_eq!(g.len(), w.len(), "{label} {mol}: proposal count");
+        for (i, (gp, wp)) in g.iter().zip(w.iter()).enumerate() {
+            assert_eq!(gp.reactants, wp.reactants, "{label} {mol} #{i}: reactants");
+            assert!(
+                (gp.logp - wp.logp).abs() < 1e-9,
+                "{label} {mol} #{i}: logp {} vs {}",
+                gp.logp,
+                wp.logp
+            );
+        }
+    }
+}
+
+fn assert_same_stats(label: &str, got: &DecodeStats, want: &DecodeStats) {
+    assert_eq!(got.model_calls, want.model_calls, "{label}: model_calls");
+    assert_eq!(got.encode_calls, want.encode_calls, "{label}: encode_calls");
+    assert_eq!(got.rows_logical, want.rows_logical, "{label}: rows_logical");
+    assert_eq!(got.rows_padded, want.rows_padded, "{label}: rows_padded");
+    assert_eq!(got.decode_tokens, want.decode_tokens, "{label}: decode_tokens");
+    assert_eq!(got.drafts_offered, want.drafts_offered, "{label}: drafts_offered");
+    assert_eq!(got.drafts_accepted, want.drafts_accepted, "{label}: drafts_accepted");
+}
+
+#[test]
+fn sharded_and_replicated_hubs_match_the_single_hub_reference() {
+    // The optimized beam engine and the paper's speculative MSBS engine
+    // both go through the sharded tier's full path (fused encode, per
+    // replica scheduler ticks, per-task retirement).
+    for decoder in ["bs-opt", "msbs"] {
+        let (want, want_stats) = run_config(decoder, 1, 1, false);
+        for shards in [1usize, 2, 4] {
+            for replicas in [1usize, 2] {
+                let label = format!("{decoder} shards={shards} replicas={replicas}");
+                let (got, got_stats) = run_config(decoder, shards, replicas, true);
+                assert_same_proposals(&label, &got, &want);
+                assert_same_stats(&label, &got_stats, &want_stats);
+            }
+        }
+    }
+}
+
+#[test]
+fn replicated_pool_spreads_fused_calls_without_changing_results() {
+    // Sanity on the dispatch itself: at 2 replicas the pool's combined
+    // fused-call accounting covers all work, and the per-replica view
+    // is visible through the hub.
+    let vocab = Vocab::build(MOLS);
+    let models: Vec<PooledModel> = (0..2)
+        .map(|_| Arc::new(MockModel::new(pure_cfg(vocab.len()))) as PooledModel)
+        .collect();
+    let hub = ExpansionHub::start_pool(
+        ReplicaPool::from_models(models),
+        make_decoder("bs-opt", 4).unwrap(),
+        vocab,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            shards: 2,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let mut joins = Vec::new();
+    for (i, m) in MOLS.iter().enumerate() {
+        let hc = hub.clone();
+        let mol = m.to_string();
+        joins.push(std::thread::spawn(move || hc.expand(&mol, k_for(i)).unwrap()));
+    }
+    for j in joins {
+        assert!(!j.join().unwrap().is_empty());
+    }
+    let stats = hub.replica_stats();
+    assert_eq!(stats.len(), 2);
+    assert!(stats.iter().all(|r| r.alive));
+    let pool_calls: u64 = stats.iter().map(|r| r.fused_calls).sum();
+    let (hub_calls, hub_rows) = hub.fused_ratio();
+    assert_eq!(pool_calls, hub_calls, "pool accounting covers every fused call");
+    let pool_rows: u64 = stats.iter().map(|r| r.rows_dispatched).sum();
+    assert_eq!(pool_rows, hub_rows);
+    assert!(
+        stats.iter().all(|r| r.outstanding_rows == 0),
+        "idle pool carries no charge: {stats:?}"
+    );
+    assert_eq!(hub.replica_deaths(), 0);
+}
