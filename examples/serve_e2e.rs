@@ -119,6 +119,7 @@ fn main() -> Result<()> {
             default_spec_depth: 1,
             default_spec_adaptive: false,
             default_spec_max: 8,
+            screen: Default::default(),
         },
     )?;
     let addr = server.addr();

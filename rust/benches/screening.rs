@@ -1,0 +1,404 @@
+//! High-throughput screening bench: one 256-target [`ScreeningJob`]
+//! with cross-target intermediate overlap vs 256 solo plans, plus the
+//! interactive-latency protection check.
+//!
+//! The synthetic library is a forest of depth-2 routes: every target
+//! expands into two intermediates and every intermediate expands into
+//! stock leaves. With probability `--overlap` (default 0.75) an
+//! intermediate is drawn from a small shared pool — the screening
+//! job's sharing opportunity: a shared intermediate decoded for one
+//! target serves every later target from the hub's expansion cache or
+//! by joining the in-flight decode. The scripted model sleeps a fixed
+//! latency per encode and per fused decode call, so device work
+//! dominates and decode-task counts are the cost measure.
+//!
+//! Four scenarios:
+//!
+//! 1. **solo** — every target planned on its OWN fresh hub (nothing
+//!    shared), the per-target baseline the paper's screening numbers
+//!    multiply out; total per-query decode tasks are summed.
+//! 2. **job** — the same targets as ONE `ScreeningJob` over a shared
+//!    2-shard / 2-replica hub at `--concurrency` (default 16).
+//! 3. **interactive baseline** — sequential interactive plans on an
+//!    otherwise idle hub; per-plan p95.
+//! 4. **mixed** — the SAME interactive plans while the screening job
+//!    runs on the same hub; batch-class admission must keep them fast.
+//!
+//! Printed invariants (the acceptance bar; nonzero exit on violation):
+//! the job issues strictly FEWER total decode tasks than the solo
+//! sweep (needs `--overlap` > 0 — at 0 every intermediate is private
+//! and the two are equal by construction), and mixed interactive p95
+//! stays within 15% of the no-job baseline.
+//!
+//! Emits `BENCH_screening.json`.
+
+use retroserve::benchkit::{write_bench_json, BenchRecord, Flags, InstrumentedModel};
+use retroserve::coordinator::batcher::{BatchedPolicy, BatcherConfig, ExpansionHub};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::metrics::Metrics;
+use retroserve::model::scripted::{smiles_vocab, Script, ScriptedModel};
+use retroserve::model::{PooledModel, ReplicaPool};
+use retroserve::search::retrostar::RetroStar;
+use retroserve::search::{ScreenConfig, ScreenSummary, ScreeningJob, SearchLimits, Stock};
+use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::percentile;
+use retroserve::util::Rng;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Synthetic device latency per encoder call.
+const ENCODE_CALL_US: u64 = 200;
+/// Synthetic device latency per fused decode call.
+const DEVICE_CALL_US: u64 = 150;
+/// Shared-pool size the overlap knob draws intermediates from.
+const SHARED_POOL: usize = 32;
+/// Interactive plans per latency scenario.
+const INTERACTIVE_PLANS: usize = 32;
+
+struct World {
+    targets: Vec<String>,
+    interactive: Vec<String>,
+    /// Canonical molecule -> its one scripted retro proposal.
+    script: Arc<HashMap<String, String>>,
+    vocab: Vocab,
+    stock: Arc<Stock>,
+}
+
+/// A fresh canonical chain molecule never handed out before.
+fn fresh(rng: &mut Rng, seen: &mut HashSet<String>, base: usize, spread: usize) -> String {
+    let alphabet = ['C', 'N', 'O'];
+    loop {
+        let len = base + rng.gen_range(spread);
+        let s: String = (0..len).map(|_| alphabet[rng.gen_range(3)]).collect();
+        match retroserve::chem::canonicalize(&s) {
+            Ok(c) if seen.insert(c.clone()) => return c,
+            _ => {}
+        }
+    }
+}
+
+fn gen_world(n_targets: usize, overlap: f64) -> World {
+    let mut rng = Rng::new(0x5C12_EE00 ^ n_targets as u64);
+    let mut seen: HashSet<String> = HashSet::new();
+    let cc = retroserve::chem::canonicalize("CC").unwrap();
+    let co = retroserve::chem::canonicalize("CO").unwrap();
+    let leaves = format!("{cc}.{co}");
+    seen.insert(cc.clone());
+    seen.insert(co.clone());
+
+    let shared: Vec<String> =
+        (0..SHARED_POOL).map(|_| fresh(&mut rng, &mut seen, 8, 6)).collect();
+    let mut script: HashMap<String, String> = HashMap::new();
+    for m in &shared {
+        script.insert(m.clone(), leaves.clone());
+    }
+
+    let roll = (overlap.clamp(0.0, 1.0) * 1000.0) as usize;
+    let mut targets = Vec::with_capacity(n_targets);
+    for _ in 0..n_targets {
+        let t = fresh(&mut rng, &mut seen, 14, 8);
+        let mut pair = Vec::with_capacity(2);
+        for _ in 0..2 {
+            let m = if rng.gen_range(1000) < roll {
+                shared[rng.gen_range(SHARED_POOL)].clone()
+            } else {
+                let p = fresh(&mut rng, &mut seen, 8, 6);
+                script.insert(p.clone(), leaves.clone());
+                p
+            };
+            pair.push(m);
+        }
+        script.insert(t.clone(), format!("{}.{}", pair[0], pair[1]));
+        targets.push(t);
+    }
+
+    // Interactive queries use PRIVATE intermediates: no sharing with the
+    // job, so the mixed scenario measures pure scheduling interference.
+    let mut interactive = Vec::with_capacity(INTERACTIVE_PLANS);
+    for _ in 0..INTERACTIVE_PLANS {
+        let t = fresh(&mut rng, &mut seen, 14, 8);
+        let a = fresh(&mut rng, &mut seen, 8, 6);
+        let b = fresh(&mut rng, &mut seen, 8, 6);
+        script.insert(a.clone(), leaves.clone());
+        script.insert(b.clone(), leaves.clone());
+        script.insert(t.clone(), format!("{a}.{b}"));
+        interactive.push(t);
+    }
+
+    let mut corpus: Vec<&str> = Vec::with_capacity(script.len() * 2);
+    for (k, v) in &script {
+        corpus.push(k);
+        corpus.push(v);
+    }
+    let vocab = smiles_vocab(corpus);
+    World {
+        targets,
+        interactive,
+        script: Arc::new(script),
+        vocab,
+        stock: Arc::new(Stock::from_iter([cc, co])),
+    }
+}
+
+fn hub(world: &World, shards: usize, replicas: usize) -> Arc<ExpansionHub> {
+    let models: Vec<PooledModel> = (0..replicas)
+        .map(|_| {
+            let map = world.script.clone();
+            let script: Script =
+                Box::new(move |p| map.get(p).map(|r| vec![(r.clone(), -0.5)]).unwrap_or_default());
+            Arc::new(
+                InstrumentedModel::new(ScriptedModel::new(world.vocab.clone(), script))
+                    .with_encode_delay(Duration::from_micros(ENCODE_CALL_US))
+                    .with_decode_delay(Duration::from_micros(DEVICE_CALL_US)),
+            ) as PooledModel
+        })
+        .collect();
+    ExpansionHub::start_pool(
+        ReplicaPool::from_models(models),
+        Box::new(Msbs::default()),
+        world.vocab.clone(),
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            shards,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    )
+}
+
+fn limits() -> SearchLimits {
+    SearchLimits {
+        deadline: Duration::from_secs(30),
+        max_depth: 6,
+        expansions_per_step: 4,
+        ..Default::default()
+    }
+}
+
+struct SoloReport {
+    solved: usize,
+    decode_tasks: u64,
+    requests: u64,
+    decode_tokens: u64,
+    wall_ms: f64,
+}
+
+/// Every target on its own fresh single-shard hub: no cache, no dedup,
+/// no co-batching across targets — the per-target cost multiplied out.
+fn run_solo(world: &World) -> SoloReport {
+    let planner = RetroStar::new(1).with_spec_depth(1);
+    let lim = limits();
+    let t0 = Instant::now();
+    let (mut tasks, mut requests, mut tokens) = (0u64, 0u64, 0u64);
+    let mut solved = 0usize;
+    for t in &world.targets {
+        let h = hub(world, 1, 1);
+        let policy = BatchedPolicy::new(h.clone());
+        let r = planner.solve_pipelined(t, &policy, &world.stock, &lim).expect("solo plan");
+        assert!(r.solved, "every solo target is solvable by construction ({t})");
+        solved += 1;
+        let (dt, req) = h.merge_ratio();
+        tasks += dt;
+        requests += req;
+        tokens += h.stats().decode_tokens;
+    }
+    SoloReport {
+        solved,
+        decode_tasks: tasks,
+        requests,
+        decode_tokens: tokens,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+fn screen_cfg(concurrency: usize) -> ScreenConfig {
+    ScreenConfig {
+        concurrency,
+        job_deadline: None,
+        job_decode_tokens: 0,
+        beam_width: 1,
+        spec_depth: 1,
+        spec_adaptive: false,
+        limits: limits(),
+    }
+}
+
+fn run_job(world: &World, concurrency: usize) -> ScreenSummary {
+    let h = hub(world, 2, 2);
+    let job = ScreeningJob::new(screen_cfg(concurrency));
+    let metrics = Metrics::new();
+    let mut streamed = 0usize;
+    let summary = job
+        .run(&h, &world.stock, &world.targets, &metrics, &mut |_r| streamed += 1)
+        .expect("screening job");
+    assert_eq!(streamed, world.targets.len(), "every target streams exactly one result");
+    summary
+}
+
+/// Sequential interactive plans; returns per-plan latencies (ms).
+fn drive_interactive(h: &Arc<ExpansionHub>, world: &World) -> Vec<f64> {
+    let planner = RetroStar::new(1).with_spec_depth(1);
+    let lim = limits();
+    world
+        .interactive
+        .iter()
+        .map(|t| {
+            let policy = BatchedPolicy::new(h.clone());
+            let t0 = Instant::now();
+            let r = planner
+                .solve_pipelined(t, &policy, &world.stock, &lim)
+                .expect("interactive plan");
+            assert!(r.solved, "every interactive target is solvable by construction");
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect()
+}
+
+/// Interactive plans with the screening job live on the SAME hub.
+/// Returns (latencies, job summary, job still running when the last
+/// interactive plan finished).
+fn run_mixed(world: &Arc<World>, concurrency: usize) -> (Vec<f64>, ScreenSummary, bool) {
+    let h = hub(world, 2, 2);
+    let done = Arc::new(AtomicBool::new(false));
+    let (jw, jh, jdone) = (world.clone(), h.clone(), done.clone());
+    let job_thread = std::thread::spawn(move || {
+        let job = ScreeningJob::new(screen_cfg(concurrency));
+        let metrics = Metrics::new();
+        let s = job
+            .run(&jh, &jw.stock, &jw.targets, &metrics, &mut |_| {})
+            .expect("background screening job");
+        jdone.store(true, Ordering::SeqCst);
+        s
+    });
+    // Let the job occupy the hub before the first interactive arrival.
+    std::thread::sleep(Duration::from_millis(10));
+    let lat = drive_interactive(&h, world);
+    let overlapped = !done.load(Ordering::SeqCst);
+    let summary = job_thread.join().expect("job thread");
+    (lat, summary, overlapped)
+}
+
+fn main() {
+    let flags = Flags::parse();
+    let n_targets = flags.usize_or("targets", 256);
+    let overlap = flags.f64_or("overlap", 0.75);
+    let concurrency = flags.usize_or("concurrency", 16);
+    println!(
+        "== screening bench ({n_targets} targets, overlap {overlap:.2}, \
+         job concurrency {concurrency}, encode {ENCODE_CALL_US}us, \
+         decode {DEVICE_CALL_US}us per fused call) =="
+    );
+    let world = Arc::new(gen_world(n_targets, overlap));
+    let mut records = Vec::new();
+
+    let solo = run_solo(&world);
+    println!(
+        "solo         {} plans  decode tasks {:>5}  requests {:>5}  tokens {:>7}  \
+         wall {:>8.1}ms",
+        solo.solved, solo.decode_tasks, solo.requests, solo.decode_tokens, solo.wall_ms
+    );
+    records.push(
+        BenchRecord::new("solo")
+            .metric("targets", n_targets as f64)
+            .metric("solved", solo.solved as f64)
+            .metric("decode_tasks", solo.decode_tasks as f64)
+            .metric("requests", solo.requests as f64)
+            .metric("decode_tokens", solo.decode_tokens as f64)
+            .metric("wall_ms", solo.wall_ms),
+    );
+
+    let job = run_job(&world, concurrency);
+    let solved_per_sec = job.solved as f64 / job.wall_secs.max(1e-9);
+    println!(
+        "job          {}/{} solved  decode tasks {:>5}  requests {:>5}  dedup joins {:>4}  \
+         cache-hit {:>5.1}%  tokens/solved {:>7.1}  {solved_per_sec:>6.1} solved/s  \
+         wall {:>8.1}ms",
+        job.solved,
+        job.targets,
+        job.decode_tasks,
+        job.requests,
+        job.dedup_joins,
+        job.cache_hit_rate * 100.0,
+        job.tokens_per_solved,
+        job.wall_secs * 1e3
+    );
+    records.push(
+        BenchRecord::new("job")
+            .metric("targets", job.targets as f64)
+            .metric("solved", job.solved as f64)
+            .metric("overlap", overlap)
+            .metric("concurrency", concurrency as f64)
+            .metric("decode_tasks", job.decode_tasks as f64)
+            .metric("requests", job.requests as f64)
+            .metric("dedup_joins", job.dedup_joins as f64)
+            .metric("cache_hit_rate", job.cache_hit_rate)
+            .metric("dedup_join_rate", job.dedup_join_rate)
+            .metric("decode_tokens", job.decode_tokens as f64)
+            .metric("tokens_per_solved", job.tokens_per_solved)
+            .metric("solved_per_sec", solved_per_sec)
+            .metric("wall_ms", job.wall_secs * 1e3),
+    );
+
+    let base_h = hub(&world, 2, 2);
+    let base = drive_interactive(&base_h, &world);
+    let (p50_base, p95_base) = (percentile(&base, 50.0), percentile(&base, 95.0));
+    drop(base_h);
+    println!(
+        "interactive  {} plans (idle hub)        p50 {p50_base:>7.2}ms  p95 {p95_base:>7.2}ms",
+        base.len()
+    );
+    records.push(
+        BenchRecord::new("interactive-base")
+            .metric("plans", base.len() as f64)
+            .metric("p50_ms", p50_base)
+            .metric("p95_ms", p95_base),
+    );
+
+    let (mixed, mixed_job, overlapped) = run_mixed(&world, concurrency);
+    let (p50_mixed, p95_mixed) = (percentile(&mixed, 50.0), percentile(&mixed, 95.0));
+    println!(
+        "interactive  {} plans (concurrent job)  p50 {p50_mixed:>7.2}ms  \
+         p95 {p95_mixed:>7.2}ms  (job solved {}/{}, {})",
+        mixed.len(),
+        mixed_job.solved,
+        mixed_job.targets,
+        if overlapped { "ran past the interactive phase" } else { "finished during it" }
+    );
+    records.push(
+        BenchRecord::new("interactive-mixed")
+            .metric("plans", mixed.len() as f64)
+            .metric("p50_ms", p50_mixed)
+            .metric("p95_ms", p95_mixed)
+            .metric("job_solved", mixed_job.solved as f64)
+            .metric("job_wall_ms", mixed_job.wall_secs * 1e3)
+            .metric("job_overlapped_phase", overlapped as i32 as f64),
+    );
+
+    let sharing_ok = job.decode_tasks < solo.decode_tasks;
+    let p95_ok = p95_mixed <= 1.15 * p95_base;
+    println!(
+        "  -> job vs solo decode tasks: {} vs {} ({})",
+        job.decode_tasks,
+        solo.decode_tasks,
+        if sharing_ok { "strictly fewer: PASS" } else { "VIOLATION" }
+    );
+    println!(
+        "  -> interactive p95 with job {p95_mixed:.2}ms vs baseline {p95_base:.2}ms \
+         (limit {:.2}ms): {}",
+        1.15 * p95_base,
+        if p95_ok { "within 15%: PASS" } else { "VIOLATION" }
+    );
+
+    let path = std::path::Path::new("BENCH_screening.json");
+    match write_bench_json(path, "screening", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+    if !(sharing_ok && p95_ok) {
+        eprintln!("screening invariant VIOLATION (see above)");
+        std::process::exit(1);
+    }
+}

@@ -71,7 +71,7 @@ fn mock(vocab: usize) -> PooledModel {
     )
 }
 
-fn hub(vocab: Vocab, shards: usize, replicas: usize) -> ExpansionHub {
+fn hub(vocab: Vocab, shards: usize, replicas: usize) -> Arc<ExpansionHub> {
     let models: Vec<PooledModel> = (0..replicas).map(|_| mock(vocab.len())).collect();
     ExpansionHub::start_pool(
         ReplicaPool::from_models(models),
@@ -113,7 +113,7 @@ fn distinct_workload(sessions: usize) -> (Vec<Vec<String>>, Vocab) {
 
 /// Closed-loop sessions against one hub config: spawn a thread per
 /// session, time every request, and return per-request latencies.
-fn drive(h: &ExpansionHub, chains: Vec<Vec<String>>) -> Vec<f64> {
+fn drive(h: &Arc<ExpansionHub>, chains: Vec<Vec<String>>) -> Vec<f64> {
     let mut joins = Vec::new();
     for (i, chain) in chains.into_iter().enumerate() {
         let h = h.clone();

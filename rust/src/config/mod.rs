@@ -193,6 +193,12 @@ pub struct ServeConfig {
     pub max_expansions: usize,
     /// Request budget: decoder positions per plan (0 = off).
     pub max_decode_tokens: u64,
+    /// Screening: targets planned concurrently per `screen` job.
+    pub screen_concurrency: usize,
+    /// Screening: default per-job wall-clock budget, ms (0 = off).
+    pub screen_job_deadline_ms: u64,
+    /// Screening: default per-job decode-token cap (0 = off).
+    pub screen_job_decode_tokens: u64,
     /// Executor supervision: transient model-error retries per call.
     pub model_retries: u32,
     /// Executor supervision: base retry/restart backoff, microseconds.
@@ -232,6 +238,10 @@ impl ServeConfig {
             workers: c.int_or("server.workers", 4) as usize,
             max_expansions: c.int_or("planner.max_expansions", 0).max(0) as usize,
             max_decode_tokens: c.int_or("planner.max_decode_tokens", 0).max(0) as u64,
+            screen_concurrency: c.int_or("planner.screen_concurrency", 8).max(1) as usize,
+            screen_job_deadline_ms: c.int_or("planner.screen_job_deadline_ms", 0).max(0) as u64,
+            screen_job_decode_tokens: c.int_or("planner.screen_job_decode_tokens", 0).max(0)
+                as u64,
             model_retries: c.int_or("model.retries", 0).max(0) as u32,
             model_backoff_us: c.int_or("model.backoff_us", 200).max(0) as u64,
         }
@@ -324,6 +334,29 @@ mod tests {
         let l = sc.limits();
         assert_eq!(l.max_expansions, 40);
         assert_eq!(l.max_decode_tokens, 9000);
+    }
+
+    #[test]
+    fn screen_keys_parse_and_clamp() {
+        let sc = ServeConfig::from_config(&Config::new());
+        assert_eq!(sc.screen_concurrency, 8, "default job concurrency");
+        assert_eq!(sc.screen_job_deadline_ms, 0, "job budgets default to off");
+        assert_eq!(sc.screen_job_decode_tokens, 0);
+        let c = Config::parse(concat!(
+            "[planner]\nscreen_concurrency = 16\n",
+            "screen_job_deadline_ms = 30000\nscreen_job_decode_tokens = 500000\n",
+        ))
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.screen_concurrency, 16);
+        assert_eq!(sc.screen_job_deadline_ms, 30000);
+        assert_eq!(sc.screen_job_decode_tokens, 500000);
+        let c = Config::parse("[planner]\nscreen_concurrency = 0\n").unwrap();
+        assert_eq!(
+            ServeConfig::from_config(&c).screen_concurrency,
+            1,
+            "clamped to >= 1"
+        );
     }
 
     #[test]

@@ -44,6 +44,24 @@
 //! bit-identical to the single hub loop it generalizes: one thread,
 //! one scheduler, routing and stealing degenerate to no-ops.
 //!
+//! ## Two-tier admission (interactive vs batch)
+//!
+//! Every request carries a [`Priority`] class. Interactive submits
+//! (the default — `plan`/`expand` ops, [`ExpansionHub::submit`]) keep
+//! the strict oldest-first admission they always had. Batch-class
+//! submits ([`ExpansionHub::submit_batch`], used by screening jobs via
+//! [`BatchedPolicy::batch_class`]) are *deferred at round formation*:
+//! a batch miss waits in a shard-local backlog and only enters a
+//! submission round when no interactive miss is pending, so a
+//! thousand-target screening job cannot inflate interactive p95. Batch
+//! cache hits and joins onto already-in-flight decodes still answer
+//! immediately — sharing never waits. The steal queue is two-lane for
+//! the same reason: spilled interactive requests are claimed before
+//! spilled batch ones (FIFO within each class). With no interactive
+//! traffic present, batch admission degenerates to exactly the
+//! interactive path — a lone screening job loses nothing, and
+//! single-target screening stays bit-identical to a solo plan.
+//!
 //! ## Fused-encode admission
 //!
 //! All cache-missing molecules gathered in one shard's submission
@@ -145,6 +163,16 @@ impl CompletionQueue {
     }
 }
 
+/// Admission priority class. Interactive requests keep strict
+/// oldest-first service; batch requests (screening jobs) defer at
+/// round formation whenever an interactive miss is pending and are
+/// claimed last from the steal queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
 /// One expansion request as a shard sees it.
 pub(crate) struct ExpandReq {
     pub(crate) smiles: String,
@@ -155,6 +183,9 @@ pub(crate) struct ExpandReq {
     /// round boundary past this instant, even if the submitting thread
     /// never polls again. `None` = no deadline.
     pub(crate) deadline: Option<std::time::Instant>,
+    /// Admission class: batch-class misses yield round formation to
+    /// interactive ones (two-tier admission).
+    pub(crate) priority: Priority,
     pub(crate) reply: mpsc::SyncSender<Result<Vec<Proposal>>>,
 }
 
@@ -169,11 +200,13 @@ pub(crate) enum HubMsg {
     /// facade after spilling a request there).
     Poke,
     /// Introspection: (molecules with waiters, in-flight decode tasks,
-    /// scheduler in-flight count) — read together on the shard thread
-    /// so the per-shard snapshot is internally consistent; the facade
-    /// sums shards. Tests use this to pin "no leaked waiters / tasks"
-    /// after cancellation through the stack.
-    Debug(mpsc::SyncSender<(usize, usize, usize)>),
+    /// scheduler in-flight count, queued interactive misses, backlogged
+    /// batch requests) — read together on the shard thread so the
+    /// per-shard snapshot is internally consistent; the facade sums
+    /// shards. Tests use this to pin "no leaked waiters / tasks" after
+    /// cancellation through the stack, and the per-priority depths make
+    /// two-tier admission observable.
+    Debug(mpsc::SyncSender<(usize, usize, usize, usize, usize)>),
 }
 
 /// The facade's per-shard handle.
@@ -247,6 +280,17 @@ pub struct HubSnapshot {
     /// errors falls back to per-molecule encodes (extra calls on that
     /// error path only — one bad source must not fail its co-arrivals).
     pub encode_rounds: u64,
+    /// Interactive misses queued for the next submission round
+    /// (per-shard sum).
+    pub queued_interactive: usize,
+    /// Batch-class requests deferred in shard backlogs, waiting for a
+    /// round with no interactive miss pending (per-shard sum).
+    pub queued_batch: usize,
+    /// Spilled interactive requests waiting in the steal queue.
+    pub steal_interactive: usize,
+    /// Spilled batch requests waiting in the steal queue (claimed only
+    /// after every spilled interactive one).
+    pub steal_batch: usize,
 }
 
 /// A pending single-molecule expansion: the hub's future. Dropping it
@@ -550,9 +594,35 @@ impl ExpansionHub {
         k: usize,
         deadline: Option<std::time::Instant>,
     ) -> Result<ExpansionFuture> {
+        self.submit_with(smiles, k, deadline, Priority::Interactive)
+    }
+
+    /// Batch-class submit (two-tier admission): identical to
+    /// [`ExpansionHub::submit_deadline`] except the request defers at
+    /// round formation whenever an interactive miss is pending on its
+    /// shard, and is claimed last from the steal queue. Cache hits and
+    /// joins onto in-flight decodes still answer immediately. With no
+    /// interactive traffic present this is exactly the interactive
+    /// path. Screening jobs submit through this class.
+    pub fn submit_batch(
+        &self,
+        smiles: &str,
+        k: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<ExpansionFuture> {
+        self.submit_with(smiles, k, deadline, Priority::Batch)
+    }
+
+    fn submit_with(
+        &self,
+        smiles: &str,
+        k: usize,
+        deadline: Option<std::time::Instant>,
+        priority: Priority,
+    ) -> Result<ExpansionFuture> {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
-        let req = ExpandReq { smiles: smiles.to_string(), k, ticket, deadline, reply };
+        let req = ExpandReq { smiles: smiles.to_string(), k, ticket, deadline, priority, reply };
         let fallback = self.least_depth_shard();
         if self.steal_on
             && self.shards[fallback].depth.load(Ordering::Relaxed) >= self.max_batch
@@ -768,20 +838,29 @@ impl ExpansionHub {
         let mut waiting_molecules = 0usize;
         let mut decode_tasks = 0usize;
         let mut sched_in_flight = 0usize;
+        let mut queued_interactive = 0usize;
+        let mut queued_batch = 0usize;
         for sh in &self.shards {
             let (tx, rx) = mpsc::sync_channel(1);
             sh.tx.send(HubMsg::Debug(tx)).map_err(|_| anyhow::anyhow!("hub gone"))?;
-            let (w, t, fl) = rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?;
+            let (w, t, fl, qi, qb) = rx.recv().map_err(|_| anyhow::anyhow!("hub gone"))?;
             waiting_molecules += w;
             decode_tasks += t;
             sched_in_flight += fl;
+            queued_interactive += qi;
+            queued_batch += qb;
         }
+        let (steal_interactive, steal_batch) = self.steal_q.depths();
         Ok(HubSnapshot {
             waiting_molecules,
             decode_tasks,
             sched_in_flight,
             encode_calls: self.encode_calls.load(Ordering::Relaxed),
             encode_rounds: self.encode_rounds.load(Ordering::Relaxed),
+            queued_interactive,
+            queued_batch,
+            steal_interactive,
+            steal_batch,
         })
     }
 }
@@ -794,11 +873,19 @@ impl ExpansionHub {
 pub struct BatchedPolicy {
     hub: Arc<ExpansionHub>,
     calls: Arc<AtomicUsize>,
+    priority: Priority,
 }
 
 impl BatchedPolicy {
     pub fn new(hub: Arc<ExpansionHub>) -> Self {
-        Self { hub, calls: Arc::new(AtomicUsize::new(0)) }
+        Self { hub, calls: Arc::new(AtomicUsize::new(0)), priority: Priority::Interactive }
+    }
+
+    /// A batch-class view over the hub: every submit carries
+    /// [`Priority::Batch`], so planning sessions driven through it
+    /// (screening jobs) yield round formation to interactive traffic.
+    pub fn batch_class(hub: Arc<ExpansionHub>) -> Self {
+        Self { hub, calls: Arc::new(AtomicUsize::new(0)), priority: Priority::Batch }
     }
 }
 
@@ -913,7 +1000,7 @@ impl BatchedPolicy {
         self.calls.fetch_add(1, Ordering::Relaxed);
         let mut futs = Vec::with_capacity(molecules.len());
         for m in molecules {
-            futs.push(Some(self.hub.submit_deadline(m, k, deadline)?));
+            futs.push(Some(self.hub.submit_with(m, k, deadline, self.priority)?));
         }
         let events = {
             let flat: Vec<&ExpansionFuture> =

@@ -12,7 +12,27 @@
 //!                    │  checked at the selection cadence and threaded
 //!                    │  into every blocking wait — expiry breaks the
 //!                    │  loop with a stop_reason and the anytime
-//!                    │  best-so-far partial route, never a hang
+//!                    │  best-so-far partial route, never a hang.
+//!                    │  screen: a ScreeningJob plans a whole target
+//!                    │  list as ONE job — up to screen_concurrency
+//!                    │  batch-class sessions over the same hub,
+//!                    │  per-job deadline / decode-token budgets
+//!                    │  (each claim carves its limits from the job's
+//!                    │  remaining allowance; early exits reclaim
+//!                    │  theirs), per-target results streamed in
+//!                    │  completion order
+//!                    ▼
+//!              job scheduler / priority classes (two-tier admission)
+//!                    │  every request carries Interactive | Batch.
+//!                    │  A shard serves batch MISSES only from rounds
+//!                    │  with no interactive miss pending (batch
+//!                    │  backlog, round phase 2c) and the steal queue
+//!                    │  claims interactive spills first — bulk
+//!                    │  screening rides the same fused rounds
+//!                    │  without inflating interactive p95. Cache
+//!                    │  hits and in-flight joins answer immediately
+//!                    │  for BOTH classes, so cross-target sharing
+//!                    │  never waits
 //!                    ▼
 //!              ExpansionHub (facade over the sharded batcher tier)
 //!                    │  submit(smiles, k) / submit_deadline(.., at)

@@ -27,11 +27,28 @@
 //! `error`, the policy failure message under `plan_error` — the request
 //! itself still answers `ok = true` with its partial statistics.
 //!
+//! The `screen` op plans a whole target list as one batch-class job:
+//!
+//! ```json
+//! {"id": 5, "op": "screen", "targets": ["...", "..."],
+//!  "concurrency": 8, "job_deadline_ms": 30000,
+//!  "job_max_decode_tokens": 500000, "deadline_ms": 2000}
+//! ```
+//!
+//! plus the per-target limit overrides a `plan` accepts. Unlike every
+//! other op it streams: one `{"event": "target", "index": ...}` line
+//! per target **in completion order** (stop reason, timing, decode
+//! usage, route or anytime partial route), then a final
+//! `{"event": "done", ...}` line with the job summary — targets
+//! solved / stopped per reason, and the cross-target sharing rates
+//! (job-scoped cache-hit and dedup-join fractions, decode tokens per
+//! solved target).
+//!
 //! Responses mirror the `id` and carry `ok`/`error` plus op-specific
 //! fields; routes serialize as nested `{smiles, logp?, children?}`.
 
 use crate::jsonx::Json;
-use crate::search::{Proposal, Route, SolveResult};
+use crate::search::{Proposal, Route, ScreenSummary, SolveResult};
 
 /// Serialize a route tree.
 pub fn route_to_json(r: &Route) -> Json {
@@ -147,6 +164,59 @@ pub fn expand_response(id: i64, proposals: &[Proposal]) -> Json {
     ])
 }
 
+/// Build one streamed per-target line of a `screen` response.
+pub fn screen_target_response(id: i64, index: usize, smiles: &str, r: &SolveResult) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("event", Json::str("target")),
+        ("index", Json::num(index as f64)),
+        ("target", Json::str(smiles)),
+        ("solved", Json::Bool(r.solved)),
+        ("stop_reason", Json::str(r.stop_reason.as_str())),
+        ("iterations", Json::num(r.iterations as f64)),
+        ("expansions", Json::num(r.expansions as f64)),
+        ("wall_ms", Json::num(r.wall_secs * 1e3)),
+        ("model_calls", Json::num(r.decode_stats.model_calls as f64)),
+        ("decode_tokens", Json::num(r.decode_stats.decode_tokens as f64)),
+    ];
+    if let Some(route) = &r.route {
+        fields.push(("route", route_to_json(route)));
+        fields.push(("route_depth", Json::num(route.depth() as f64)));
+    }
+    if let Some(partial) = &r.partial_route {
+        fields.push(("partial_route", route_to_json(partial)));
+    }
+    if let Some(err) = &r.error {
+        fields.push(("plan_error", Json::str(err)));
+    }
+    Json::obj(fields)
+}
+
+/// Build the final job-summary line of a `screen` response.
+pub fn screen_summary_response(id: i64, s: &ScreenSummary) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("event", Json::str("done")),
+        ("targets", Json::num(s.targets as f64)),
+        ("solved", Json::num(s.solved as f64)),
+        ("stop_deadline", Json::num(s.stop_deadline as f64)),
+        ("stop_budget", Json::num(s.stop_budget as f64)),
+        ("stop_exhausted", Json::num(s.stop_exhausted as f64)),
+        ("stop_error", Json::num(s.stop_error as f64)),
+        ("wall_ms", Json::num(s.wall_secs * 1e3)),
+        ("requests", Json::num(s.requests as f64)),
+        ("decode_tasks", Json::num(s.decode_tasks as f64)),
+        ("dedup_joins", Json::num(s.dedup_joins as f64)),
+        ("decode_tokens", Json::num(s.decode_tokens as f64)),
+        ("model_calls", Json::num(s.model_calls as f64)),
+        ("cache_hit_rate", Json::num(s.cache_hit_rate)),
+        ("dedup_join_rate", Json::num(s.dedup_join_rate)),
+        ("tokens_per_solved", Json::num(s.tokens_per_solved)),
+    ])
+}
+
 /// Build an error response.
 pub fn error_response(id: i64, msg: &str) -> Json {
     Json::obj(vec![
@@ -215,6 +285,54 @@ mod tests {
         let j = plan_response(10, &solved);
         assert_eq!(j.get("stop_reason").unwrap().as_str(), Some("solved"));
         assert!(j.get("partial_route").is_none());
+    }
+
+    #[test]
+    fn screen_target_line_carries_stop_reason_and_partial() {
+        use crate::search::StopReason;
+        let r = SolveResult {
+            solved: false,
+            route: None,
+            stop_reason: StopReason::Deadline,
+            partial_route: Some(Route::Leaf { smiles: "CN".into() }),
+            error: None,
+            iterations: 2,
+            expansions: 1,
+            wall_secs: 0.02,
+            decode_stats: Default::default(),
+            spec: Default::default(),
+        };
+        let j = screen_target_response(3, 7, "CC(=O)NC", &r);
+        assert_eq!(j.get("event").unwrap().as_str(), Some("target"));
+        assert_eq!(j.get("index").unwrap().as_i64(), Some(7));
+        assert_eq!(j.get("target").unwrap().as_str(), Some("CC(=O)NC"));
+        assert_eq!(j.get("stop_reason").unwrap().as_str(), Some("deadline"));
+        assert!(j.get("route").is_none());
+        assert!(j.get("partial_route").is_some(), "anytime partial streamed");
+    }
+
+    #[test]
+    fn screen_summary_line_reports_sharing_rates() {
+        let s = ScreenSummary {
+            targets: 4,
+            solved: 3,
+            stop_deadline: 1,
+            requests: 10,
+            decode_tasks: 5,
+            dedup_joins: 2,
+            decode_tokens: 900,
+            cache_hit_rate: 0.3,
+            dedup_join_rate: 0.2,
+            tokens_per_solved: 300.0,
+            ..Default::default()
+        };
+        let j = screen_summary_response(3, &s);
+        assert_eq!(j.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("targets").unwrap().as_i64(), Some(4));
+        assert_eq!(j.get("solved").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("decode_tasks").unwrap().as_i64(), Some(5));
+        assert!((j.get("cache_hit_rate").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-12);
+        assert!((j.get("tokens_per_solved").unwrap().as_f64().unwrap() - 300.0).abs() < 1e-12);
     }
 
     #[test]

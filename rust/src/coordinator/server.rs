@@ -5,7 +5,10 @@ use super::batcher::{BatchedPolicy, ExpansionHub};
 use super::protocol;
 use crate::jsonx::Json;
 use crate::metrics::Metrics;
-use crate::search::{dfs::Dfs, retrostar::RetroStar, Planner, SearchLimits, Stock};
+use crate::search::{
+    dfs::Dfs, retrostar::RetroStar, Planner, ScreenConfig, ScreeningJob, SearchLimits, Stock,
+    TargetResult,
+};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -38,6 +41,26 @@ pub struct ServerCtx {
     /// Adaptive-depth cap (`planner.spec_depth_max`), used when either
     /// the server default or the request selects `"auto"`.
     pub default_spec_max: usize,
+    /// Defaults for the `screen` op (config `planner.screen_*`).
+    pub screen: ScreenDefaults,
+}
+
+/// Server-side defaults for bulk screening jobs; requests may override
+/// each field (`concurrency`, `job_deadline_ms`, `job_max_decode_tokens`).
+#[derive(Clone, Copy, Debug)]
+pub struct ScreenDefaults {
+    /// Targets planned concurrently per job.
+    pub concurrency: usize,
+    /// Per-job wall-clock budget, ms (0 = off).
+    pub job_deadline_ms: u64,
+    /// Per-job decode-token cap (0 = off).
+    pub job_decode_tokens: u64,
+}
+
+impl Default for ScreenDefaults {
+    fn default() -> Self {
+        Self { concurrency: 8, job_deadline_ms: 0, job_decode_tokens: 0 }
+    }
 }
 
 impl Server {
@@ -104,6 +127,17 @@ fn handle_connection(stream: TcpStream, ctx: &ServerCtx) -> Result<()> {
             Err(_) => break,
         };
         if line.trim().is_empty() {
+            continue;
+        }
+        // `screen` is the one streaming op: many lines per request, so
+        // it writes directly instead of going through handle_line's
+        // one-request-one-response shape.
+        let is_screen = Json::parse(&line)
+            .ok()
+            .and_then(|j| j.get("op").and_then(|o| o.as_str()).map(|o| o == "screen"))
+            .unwrap_or(false);
+        if is_screen {
+            handle_screen(&line, ctx, &mut writer)?;
             continue;
         }
         let response = handle_line(&line, ctx);
@@ -183,23 +217,7 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
             let Some(smiles) = req.get("smiles").and_then(|x| x.as_str()) else {
                 return protocol::error_response(id, "missing smiles");
             };
-            let mut limits = ctx.default_limits.clone();
-            if let Some(ms) = req.get("deadline_ms").and_then(|x| x.as_usize()) {
-                limits.deadline = std::time::Duration::from_millis(ms as u64);
-            }
-            if let Some(d) = req.get("max_depth").and_then(|x| x.as_usize()) {
-                limits.max_depth = d;
-            }
-            if let Some(k) = req.get("k").and_then(|x| x.as_usize()) {
-                limits.expansions_per_step = k;
-            }
-            // Per-request work budget (0/absent = server default).
-            if let Some(n) = req.get("max_expansions").and_then(|x| x.as_usize()) {
-                limits.max_expansions = n;
-            }
-            if let Some(n) = req.get("max_decode_tokens").and_then(|x| x.as_usize()) {
-                limits.max_decode_tokens = n as u64;
-            }
+            let limits = limits_from_req(&req, &ctx.default_limits);
             let algo = req
                 .get("algo")
                 .and_then(|x| x.as_str())
@@ -209,19 +227,7 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                 .get("beam_width")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(ctx.default_beam_width);
-            // `spec_depth` accepts an integer or "auto" (adaptive up to
-            // the server's configured max depth).
-            let (sd, sd_auto) = match req.get("spec_depth") {
-                Some(v) if v.as_str() == Some("auto") => (ctx.default_spec_max.max(1), true),
-                Some(v) => (
-                    v.as_usize().unwrap_or(ctx.default_spec_depth).max(1),
-                    false,
-                ),
-                None => (
-                    ctx.default_spec_depth.max(1),
-                    ctx.default_spec_adaptive,
-                ),
-            };
+            let (sd, sd_auto) = spec_from_req(&req, ctx);
             let policy = BatchedPolicy::new(ctx.hub.clone());
             // Retro* plans ride the async path: per-query expansion
             // futures into the hub's scheduler. spec_depth = 1 keeps
@@ -255,7 +261,123 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                 Err(e) => protocol::error_response(id, &format!("{e:#}")),
             }
         }
+        // Streaming op: handled by `handle_screen` upstream of this
+        // dispatcher; reachable here only when called directly.
+        "screen" => protocol::error_response(
+            id,
+            "screen streams multiple response lines; send it over a connection",
+        ),
         other => protocol::error_response(id, &format!("unknown op {other:?}")),
+    }
+}
+
+/// Apply a request's shared per-target limit overrides onto the server
+/// defaults (used by both `plan` and `screen`).
+fn limits_from_req(req: &Json, base: &SearchLimits) -> SearchLimits {
+    let mut limits = base.clone();
+    if let Some(ms) = req.get("deadline_ms").and_then(|x| x.as_usize()) {
+        limits.deadline = std::time::Duration::from_millis(ms as u64);
+    }
+    if let Some(d) = req.get("max_depth").and_then(|x| x.as_usize()) {
+        limits.max_depth = d;
+    }
+    if let Some(k) = req.get("k").and_then(|x| x.as_usize()) {
+        limits.expansions_per_step = k;
+    }
+    // Per-request work budget (0/absent = server default).
+    if let Some(n) = req.get("max_expansions").and_then(|x| x.as_usize()) {
+        limits.max_expansions = n;
+    }
+    if let Some(n) = req.get("max_decode_tokens").and_then(|x| x.as_usize()) {
+        limits.max_decode_tokens = n as u64;
+    }
+    limits
+}
+
+/// `spec_depth` accepts an integer or "auto" (adaptive up to the
+/// server's configured max depth). Returns `(depth, adaptive)`.
+fn spec_from_req(req: &Json, ctx: &ServerCtx) -> (usize, bool) {
+    match req.get("spec_depth") {
+        Some(v) if v.as_str() == Some("auto") => (ctx.default_spec_max.max(1), true),
+        Some(v) => (v.as_usize().unwrap_or(ctx.default_spec_depth).max(1), false),
+        None => (ctx.default_spec_depth.max(1), ctx.default_spec_adaptive),
+    }
+}
+
+/// Handle one `screen` request: stream a `target` line per completed
+/// target in completion order, then the terminal `done` (or error)
+/// line. Write failures stop the streaming but let the job drain.
+pub fn handle_screen(line: &str, ctx: &ServerCtx, writer: &mut dyn Write) -> Result<()> {
+    let final_line = run_screen(line, ctx, writer);
+    writer.write_all(final_line.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+fn run_screen(line: &str, ctx: &ServerCtx, writer: &mut dyn Write) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return protocol::error_response(-1, &format!("bad json: {e}")),
+    };
+    let id = req.get("id").and_then(|x| x.as_i64()).unwrap_or(-1);
+    ctx.metrics.inc("op.screen", 1);
+    let Some(arr) = req.get("targets").and_then(|t| t.as_arr()) else {
+        return protocol::error_response(id, "missing targets");
+    };
+    let targets: Vec<String> = arr
+        .iter()
+        .filter_map(|t| t.as_str().map(String::from))
+        .collect();
+    if targets.is_empty() {
+        return protocol::error_response(id, "empty targets");
+    }
+    let concurrency = req
+        .get("concurrency")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(ctx.screen.concurrency)
+        .max(1);
+    let job_deadline_ms = req
+        .get("job_deadline_ms")
+        .and_then(|x| x.as_usize())
+        .map(|n| n as u64)
+        .unwrap_or(ctx.screen.job_deadline_ms);
+    let job_decode_tokens = req
+        .get("job_max_decode_tokens")
+        .and_then(|x| x.as_usize())
+        .map(|n| n as u64)
+        .unwrap_or(ctx.screen.job_decode_tokens);
+    let (sd, sd_auto) = spec_from_req(&req, ctx);
+    let cfg = ScreenConfig {
+        concurrency,
+        job_deadline: (job_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(job_deadline_ms)),
+        job_decode_tokens,
+        beam_width: req
+            .get("beam_width")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(ctx.default_beam_width),
+        spec_depth: sd,
+        spec_adaptive: sd_auto,
+        limits: limits_from_req(&req, &ctx.default_limits),
+    };
+    let job = ScreeningJob::new(cfg);
+    let mut write_ok = true;
+    let mut on_result = |tr: TargetResult| {
+        if !write_ok {
+            return;
+        }
+        let j = protocol::screen_target_response(id, tr.index, &tr.smiles, &tr.result);
+        write_ok = writer.write_all(j.to_string().as_bytes()).is_ok()
+            && writer.write_all(b"\n").is_ok()
+            && writer.flush().is_ok();
+    };
+    let res = ctx.metrics.time("request.screen", || {
+        job.run(&ctx.hub, &ctx.stock, &targets, &ctx.metrics, &mut on_result)
+    });
+    match res {
+        Ok(s) => protocol::screen_summary_response(id, &s),
+        Err(e) => protocol::error_response(id, &format!("{e:#}")),
     }
 }
 
@@ -286,6 +408,34 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    /// Send a request whose response streams (the `screen` op) and
+    /// collect every line through the terminal one (`event == "done"`
+    /// or `ok == false`).
+    pub fn call_stream(&mut self, mut req: Json) -> Result<Vec<Json>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Json::Obj(ref mut o) = req {
+            o.insert("id".into(), Json::num(id as f64));
+        }
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut out = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed mid-stream");
+            }
+            let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+            let done = j.get("event").and_then(|e| e.as_str()) == Some("done")
+                || j.get("ok").and_then(|o| o.as_bool()) == Some(false);
+            out.push(j);
+            if done {
+                return Ok(out);
+            }
+        }
     }
 }
 
@@ -327,6 +477,7 @@ mod tests {
             default_spec_depth: 1,
             default_spec_adaptive: false,
             default_spec_max: 8,
+            screen: ScreenDefaults::default(),
         }
     }
 
@@ -430,6 +581,61 @@ mod tests {
             "1-expansion budget must trip unless the mock solves instantly: {r:?}"
         );
         assert!(r.get("expansions").unwrap().as_usize().unwrap_or(99) <= 1, "{r:?}");
+    }
+
+    #[test]
+    fn screen_streams_per_target_then_summary() {
+        let ctx = test_ctx();
+        let server = Server::start("127.0.0.1:0", ctx).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let lines = client
+            .call_stream(Json::obj(vec![
+                ("op", Json::str("screen")),
+                (
+                    "targets",
+                    Json::Arr(vec![Json::str("CC(=O)NC"), Json::str("CC(=O)NC")]),
+                ),
+                ("deadline_ms", Json::num(300.0)),
+                ("concurrency", Json::num(2.0)),
+            ]))
+            .unwrap();
+        assert_eq!(lines.len(), 3, "2 target lines + 1 summary: {lines:?}");
+        for l in &lines[..2] {
+            assert_eq!(l.get("ok").unwrap().as_bool(), Some(true), "{l:?}");
+            assert_eq!(l.get("event").unwrap().as_str(), Some("target"));
+            assert_eq!(l.get("target").unwrap().as_str(), Some("CC(=O)NC"));
+            assert!(l.get("stop_reason").is_some());
+        }
+        let done = &lines[2];
+        assert_eq!(done.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(done.get("targets").unwrap().as_i64(), Some(2));
+        assert!(done.get("cache_hit_rate").is_some());
+        // Both indices streamed, in some completion order.
+        let mut idx: Vec<i64> = lines[..2]
+            .iter()
+            .map(|l| l.get("index").unwrap().as_i64().unwrap())
+            .collect();
+        idx.sort_unstable();
+        assert_eq!(idx, vec![0, 1]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn screen_rejects_missing_targets_and_handle_line_hints() {
+        let ctx = test_ctx();
+        let server = Server::start("127.0.0.1:0", ctx).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let lines = client
+            .call_stream(Json::obj(vec![("op", Json::str("screen"))]))
+            .unwrap();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].get("ok").unwrap().as_bool(), Some(false));
+        server.shutdown();
+        // Direct handle_line use gets a hint, not a hang.
+        let ctx = test_ctx();
+        let r = handle_line("{\"id\":1,\"op\":\"screen\",\"targets\":[\"CCO\"]}", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("stream"));
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //! unwinds out of a model call is contained to the shard that made it
 //! — other shards keep serving.
 
-use super::batcher::{BatcherConfig, CompletionQueue, ExpandReq, HubCounters, HubMsg};
+use super::batcher::{BatcherConfig, CompletionQueue, ExpandReq, HubCounters, HubMsg, Priority};
 use crate::decoding::scheduler::{DecodeScheduler, Finished, SchedulerConfig, TaskId};
 use crate::decoding::Decoder;
 use crate::metrics::Metrics;
@@ -115,30 +115,53 @@ impl InFlightRegistry {
 
 /// Spill-over queue for work stealing: requests whose routed shard was
 /// saturated wait here, and any shard with gather budget left claims
-/// them FIFO at its next round boundary.
+/// them at its next round boundary. The queue is **two-lane by
+/// priority class**: every spilled interactive request is claimed
+/// before any spilled batch one (FIFO within each lane), so a
+/// screening job whose spills flood the queue cannot starve an
+/// interactive plan that spilled after it.
 pub(crate) struct StealQueue {
-    q: Mutex<VecDeque<ExpandReq>>,
+    q: Mutex<StealLanes>,
+}
+
+#[derive(Default)]
+struct StealLanes {
+    interactive: VecDeque<ExpandReq>,
+    batch: VecDeque<ExpandReq>,
 }
 
 impl StealQueue {
     pub(crate) fn new() -> Self {
-        Self { q: Mutex::new(VecDeque::new()) }
+        Self { q: Mutex::new(StealLanes::default()) }
     }
 
-    fn lock(&self) -> MutexGuard<'_, VecDeque<ExpandReq>> {
+    fn lock(&self) -> MutexGuard<'_, StealLanes> {
         self.q.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     pub(crate) fn push(&self, req: ExpandReq) {
-        self.lock().push_back(req);
+        let mut lanes = self.lock();
+        match req.priority {
+            Priority::Interactive => lanes.interactive.push_back(req),
+            Priority::Batch => lanes.batch.push_back(req),
+        }
     }
 
+    /// Claim the oldest spilled request, interactive lane first.
     pub(crate) fn pop(&self) -> Option<ExpandReq> {
-        self.lock().pop_front()
+        let mut lanes = self.lock();
+        lanes.interactive.pop_front().or_else(|| lanes.batch.pop_front())
     }
 
     pub(crate) fn is_empty(&self) -> bool {
-        self.lock().is_empty()
+        let lanes = self.lock();
+        lanes.interactive.is_empty() && lanes.batch.is_empty()
+    }
+
+    /// (spilled interactive, spilled batch) lane depths.
+    pub(crate) fn depths(&self) -> (usize, usize) {
+        let lanes = self.lock();
+        (lanes.interactive.len(), lanes.batch.len())
     }
 }
 
@@ -191,6 +214,12 @@ struct HubState {
     to_submit: Vec<Option<(String, usize)>>,
     /// Molecule -> index into `to_submit` (O(1) merge and removal).
     to_submit_idx: HashMap<String, usize>,
+    /// Two-tier admission: batch-class requests that missed the cache
+    /// AND found no in-flight task to join wait here, FIFO, until a
+    /// round forms with no interactive miss pending. Entries are full
+    /// requests (not yet waiters) — they have claimed nothing but a
+    /// facade-side registry entry.
+    batch_backlog: VecDeque<ExpandReq>,
 }
 
 impl HubState {
@@ -259,6 +288,32 @@ impl HubState {
             self.drop_queued_miss(mol);
         }
         orphaned
+    }
+
+    /// Expire backlogged batch requests whose deadline passed (they
+    /// have no task to cancel — they never entered a round). Returns
+    /// the expired molecules so the caller can release any facade-side
+    /// registry claim.
+    fn expire_batch_backlog(&mut self, now: std::time::Instant) -> Vec<String> {
+        let mut expired = Vec::new();
+        self.batch_backlog.retain(|r| {
+            let out = r.deadline.is_some_and(|d| now >= d);
+            if out {
+                let _ = r.reply.send(Err(anyhow::anyhow!("request deadline expired")));
+                expired.push(r.smiles.clone());
+            }
+            !out
+        });
+        expired
+    }
+
+    /// Withdraw a backlogged batch request by (molecule, ticket);
+    /// returns whether one was removed (it never became a waiter, so
+    /// the regular cancel path does not apply).
+    fn remove_backlogged(&mut self, smiles: &str, ticket: u64) -> bool {
+        let before = self.batch_backlog.len();
+        self.batch_backlog.retain(|r| !(r.ticket == ticket && r.smiles == smiles));
+        self.batch_backlog.len() != before
     }
 
     /// Drop a molecule's queued miss (its last waiter left before
@@ -387,6 +442,59 @@ impl ShardRt {
         hit
     }
 
+    /// Priority-routed admission. Interactive requests take the strict
+    /// oldest-first path. Batch requests answer immediately on a cache
+    /// hit or by joining an in-flight decode that already covers their
+    /// k (sharing never waits); a batch *miss* is deferred to the
+    /// shard's backlog until a round forms with no interactive miss
+    /// pending — so screening traffic cannot displace interactive work
+    /// from a round, only fill rounds interactive traffic left empty.
+    fn admit_any(&mut self, req: ExpandReq) -> bool {
+        if req.priority == Priority::Interactive {
+            return self.admit(req);
+        }
+        if let Some(out) = self.state.cache.get(&req.smiles, req.k) {
+            let _ = req.reply.send(Ok(out));
+            self.registry_release(&req.smiles);
+            return true;
+        }
+        let covers = self
+            .state
+            .covered
+            .get(&req.smiles)
+            .is_some_and(|tasks| tasks.iter().any(|&(_, ck)| ck >= req.k));
+        if covers {
+            // Join the in-flight task as a plain waiter: no new decode
+            // work is created, so this cannot inflate interactive p95.
+            self.ctx.registry.claim(&req.smiles, self.ctx.shard);
+            self.state.waiting.entry(req.smiles).or_default().push(Waiter {
+                ticket: req.ticket,
+                k: req.k,
+                deadline: req.deadline,
+                reply: req.reply,
+            });
+            return false;
+        }
+        self.state.batch_backlog.push_back(req);
+        false
+    }
+
+    /// Two-tier round formation: admit deferred batch requests into
+    /// this round only when no interactive miss is pending, up to one
+    /// gather round's worth. Returns whether any was answered from
+    /// cache (a sibling's retirement may have populated it meanwhile).
+    fn admit_batch_round(&mut self) -> bool {
+        if self.state.has_queued_misses() || self.state.batch_backlog.is_empty() {
+            return false;
+        }
+        let mut answered = false;
+        for _ in 0..self.ctx.cfg.max_batch {
+            let Some(req) = self.state.batch_backlog.pop_front() else { break };
+            answered |= self.admit(req);
+        }
+        answered
+    }
+
     /// Route one inbound message. Returns whether it was an expansion
     /// (the only kind counted toward the gather budget); sets
     /// `answered` when one was served immediately from cache.
@@ -399,7 +507,7 @@ impl ShardRt {
         match msg {
             HubMsg::Expand(r) => {
                 self.ctx.depth.fetch_sub(1, Ordering::Relaxed);
-                *answered |= self.admit(r);
+                *answered |= self.admit_any(r);
                 true
             }
             HubMsg::Cancel { smiles, ticket } => {
@@ -409,7 +517,13 @@ impl ShardRt {
             HubMsg::Poke => false,
             HubMsg::Debug(tx) => {
                 let tasks: usize = self.state.covered.values().map(Vec::len).sum();
-                let _ = tx.send((self.state.waiting.len(), tasks, self.in_flight()));
+                let _ = tx.send((
+                    self.state.waiting.len(),
+                    tasks,
+                    self.in_flight(),
+                    self.state.to_submit_idx.len(),
+                    self.state.batch_backlog.len(),
+                ));
                 false
             }
         }
@@ -787,6 +901,7 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
         covered: HashMap::new(),
         to_submit: Vec::new(),
         to_submit_idx: HashMap::new(),
+        batch_backlog: VecDeque::new(),
     };
     let mut rt = ShardRt {
         ctx,
@@ -799,11 +914,19 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
     let mut cancels: Vec<(String, u64)> = Vec::new();
     let mut open = true;
 
-    while open || !rt.all_idle() || !rt.state.waiting.is_empty() || rt.steal_pending() {
+    while open
+        || !rt.all_idle()
+        || !rt.state.waiting.is_empty()
+        || !rt.state.batch_backlog.is_empty()
+        || rt.steal_pending()
+    {
         // ---- 1. gather requests ----
         let mut gathered = 0usize;
         let mut answered = false;
-        let idle = rt.all_idle() && rt.state.waiting.is_empty() && !rt.state.has_queued_misses();
+        let idle = rt.all_idle()
+            && rt.state.waiting.is_empty()
+            && !rt.state.has_queued_misses()
+            && rt.state.batch_backlog.is_empty();
         if open && idle && !rt.steal_pending() {
             // Idle: block for the next request (a spill Poke also wakes
             // us), then give stragglers a short window so simultaneous
@@ -816,7 +939,13 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
                         gathered += 1;
                     }
                     let deadline = std::time::Instant::now() + rt.ctx.cfg.max_wait;
-                    while gathered < rt.ctx.cfg.max_batch && rt.state.has_queued_misses() {
+                    // The straggler window also covers a backlogged
+                    // batch miss: co-arriving screening submits fuse
+                    // into one round exactly like interactive ones.
+                    while gathered < rt.ctx.cfg.max_batch
+                        && (rt.state.has_queued_misses()
+                            || !rt.state.batch_backlog.is_empty())
+                    {
                         let now = std::time::Instant::now();
                         if now >= deadline {
                             break;
@@ -910,7 +1039,7 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
                 rt.ctx.counters.merged.fetch_add(1, Ordering::Relaxed);
                 rt.ctx.counters.steals.fetch_add(1, Ordering::Relaxed);
                 rt.ctx.metrics.inc("batcher.steals", 1);
-                answered |= rt.admit(req);
+                answered |= rt.admit_any(req);
                 gathered += 1;
             }
         }
@@ -925,6 +1054,13 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
         // miss, its in-flight tasks and its registry claim.
         let had_cancels = !cancels.is_empty();
         for (smiles, ticket) in cancels.drain(..) {
+            // A backlogged batch request never became a waiter or a
+            // queued miss — withdrawing it only needs the facade-side
+            // registry claim released.
+            if rt.state.remove_backlogged(&smiles, ticket) {
+                rt.registry_release(&smiles);
+                continue;
+            }
             if rt.state.remove_waiter(&smiles, ticket) {
                 rt.state.drop_queued_miss(&smiles);
                 rt.cancel_tasks_of(&smiles);
@@ -936,13 +1072,29 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
         }
 
         // ---- 2b. expire request deadlines ----
-        let orphaned = rt.state.expire_deadlines(std::time::Instant::now());
+        let now = std::time::Instant::now();
+        let orphaned = rt.state.expire_deadlines(now);
         if !orphaned.is_empty() {
             for mol in &orphaned {
                 rt.cancel_tasks_of(mol);
                 rt.registry_release(mol);
             }
             rt.ctx.metrics.inc("batcher.deadline_expired", orphaned.len() as u64);
+            rt.ctx.events.notify();
+        }
+        let expired_batch = rt.state.expire_batch_backlog(now);
+        if !expired_batch.is_empty() {
+            for mol in &expired_batch {
+                rt.registry_release(mol);
+            }
+            rt.ctx.metrics.inc("batcher.deadline_expired", expired_batch.len() as u64);
+            rt.ctx.events.notify();
+        }
+
+        // ---- 2c. two-tier admission: form a batch round ----
+        // Deferred batch misses enter a round only when no interactive
+        // miss is pending (after cancels and expiries pruned both).
+        if rt.admit_batch_round() {
             rt.ctx.events.notify();
         }
 
@@ -970,9 +1122,9 @@ pub(crate) fn shard_loop(rx: mpsc::Receiver<HubMsg>, ctx: ShardCtx) {
 mod tests {
     use super::*;
 
-    fn req(mol: &str, k: usize, ticket: u64) -> ExpandReq {
+    fn req(mol: &str, k: usize, ticket: u64, priority: Priority) -> ExpandReq {
         let (reply, _rx) = mpsc::sync_channel(1);
-        ExpandReq { smiles: mol.to_string(), k, ticket, deadline: None, reply }
+        ExpandReq { smiles: mol.to_string(), k, ticket, deadline: None, priority, reply }
     }
 
     #[test]
@@ -1002,26 +1154,39 @@ mod tests {
     }
 
     #[test]
-    fn steal_queue_is_fifo() {
+    fn steal_queue_claims_interactive_first_fifo_within_class() {
         let q = StealQueue::new();
         assert!(q.is_empty());
-        q.push(req("A", 1, 1));
-        q.push(req("B", 2, 2));
+        // Batch spills arrive first; a later interactive spill must
+        // still be claimed before either of them.
+        q.push(req("B1", 1, 1, Priority::Batch));
+        q.push(req("B2", 2, 2, Priority::Batch));
+        q.push(req("I1", 3, 3, Priority::Interactive));
+        q.push(req("I2", 4, 4, Priority::Interactive));
         assert!(!q.is_empty());
-        assert_eq!(q.pop().unwrap().smiles, "A");
-        assert_eq!(q.pop().unwrap().smiles, "B");
+        assert_eq!(q.depths(), (2, 2));
+        assert_eq!(q.pop().unwrap().smiles, "I1", "interactive lane drains first");
+        assert_eq!(q.pop().unwrap().smiles, "I2", "FIFO within the interactive lane");
+        assert_eq!(q.pop().unwrap().smiles, "B1", "then the batch lane, FIFO");
+        assert_eq!(q.pop().unwrap().smiles, "B2");
         assert!(q.pop().is_none());
+        assert_eq!(q.depths(), (0, 0));
     }
 
-    #[test]
-    fn requeue_merges_by_max_k_and_tombstones_survive() {
-        let state = &mut HubState {
+    fn empty_state() -> HubState {
+        HubState {
             cache: SyncExpansionCache::new(4),
             waiting: HashMap::new(),
             covered: HashMap::new(),
             to_submit: Vec::new(),
             to_submit_idx: HashMap::new(),
-        };
+            batch_backlog: VecDeque::new(),
+        }
+    }
+
+    #[test]
+    fn requeue_merges_by_max_k_and_tombstones_survive() {
+        let state = &mut empty_state();
         state.requeue("CCO".into(), 3);
         state.requeue("CCN".into(), 2);
         state.requeue("CCO".into(), 5);
@@ -1029,5 +1194,22 @@ mod tests {
         let round = state.take_submit_round();
         assert_eq!(round, vec![("CCO".to_string(), 5)]);
         assert!(!state.has_queued_misses());
+    }
+
+    #[test]
+    fn batch_backlog_cancel_and_expiry_prune_by_ticket_and_deadline() {
+        let state = &mut empty_state();
+        let past = std::time::Instant::now() - std::time::Duration::from_millis(1);
+        let mut expiring = req("CCO", 2, 7, Priority::Batch);
+        expiring.deadline = Some(past);
+        state.batch_backlog.push_back(expiring);
+        state.batch_backlog.push_back(req("CCN", 2, 8, Priority::Batch));
+        state.batch_backlog.push_back(req("CCC", 2, 9, Priority::Batch));
+        assert!(state.remove_backlogged("CCN", 8), "cancel removes by (mol, ticket)");
+        assert!(!state.remove_backlogged("CCN", 8), "second removal is a no-op");
+        let expired = state.expire_batch_backlog(std::time::Instant::now());
+        assert_eq!(expired, vec!["CCO".to_string()]);
+        assert_eq!(state.batch_backlog.len(), 1, "undated entry survives the sweep");
+        assert_eq!(state.batch_backlog[0].smiles, "CCC");
     }
 }

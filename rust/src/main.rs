@@ -4,9 +4,17 @@
 //! retroserve serve   [--config FILE] [--listen ADDR] [--decoder NAME] ...
 //! retroserve plan    --smiles S [--algo retrostar|dfs] [--decoder NAME]
 //!                    [--deadline-ms N] [--beam-width N] [--artifacts DIR]
+//! retroserve screen  --targets FILE [--out FILE] [--concurrency N]
+//!                    [--job-deadline-ms N] [--job-max-decode-tokens N]
+//!                    [--deadline-ms N] [--decoder NAME] [--artifacts DIR]
 //! retroserve expand  --smiles S [--decoder NAME] [--k N] [--artifacts DIR]
 //! retroserve info    [--artifacts DIR]
 //! ```
+//!
+//! `screen` reads one SMILES per line (blank lines and `#` comments
+//! skipped), plans the whole list as one batch-class job over a shared
+//! hub, and writes one JSON line per target (completion order) plus a
+//! final summary line — JSONL, same shapes as the server's `screen` op.
 //!
 //! All subcommands load the AOT artifacts (HLO text + params.npz) through
 //! the PJRT runtime; Python is never invoked.
@@ -14,15 +22,19 @@
 use anyhow::{bail, Context, Result};
 use retroserve::config::{Config, ServeConfig};
 use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
-use retroserve::coordinator::server::{Server, ServerCtx};
+use retroserve::coordinator::protocol;
+use retroserve::coordinator::server::{ScreenDefaults, Server, ServerCtx};
 use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::make_decoder;
 use retroserve::metrics::Metrics;
 use retroserve::model::{PooledModel, ReplicaPool};
 use retroserve::runtime::server::{SharedModel, SupervisorConfig};
 use retroserve::runtime::PjrtModel;
-use retroserve::search::{dfs::Dfs, retrostar::RetroStar, Planner, Stock};
+use retroserve::search::{
+    dfs::Dfs, retrostar::RetroStar, Planner, ScreenConfig, ScreeningJob, Stock,
+};
 use retroserve::tokenizer::Vocab;
+use std::io::Write;
 use std::sync::Arc;
 
 struct Args {
@@ -82,6 +94,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "serve" => cmd_serve(&args),
         "plan" => cmd_plan(&args),
+        "screen" => cmd_screen(&args),
         "expand" => cmd_expand(&args),
         "info" => cmd_info(&args),
         _ => {
@@ -97,6 +110,9 @@ fn main() -> Result<()> {
                  [--deadline-ms N]\n\
                  [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
                  [--max-expansions N] [--max-decode-tokens N]\n\
+                 retroserve screen --targets FILE [--out FILE] [--concurrency N]\n\
+                 [--job-deadline-ms N] [--job-max-decode-tokens N] [--deadline-ms N]\n\
+                 [--decoder NAME] [--shards N] [--replicas N] [--artifacts DIR]\n\
                  retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR]\n\
                  retroserve info   [--artifacts DIR]"
             );
@@ -124,6 +140,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "replicas" => cfg.apply_override("model.replicas", v)?,
             "shards" => cfg.apply_override("batcher.shards", v)?,
             "steal" => cfg.apply_override("batcher.steal", v)?,
+            "screen-concurrency" => cfg.apply_override("planner.screen_concurrency", v)?,
+            "screen-job-deadline-ms" => {
+                cfg.apply_override("planner.screen_job_deadline_ms", v)?
+            }
+            "screen-job-decode-tokens" => {
+                cfg.apply_override("planner.screen_job_decode_tokens", v)?
+            }
             "config" => {}
             other => cfg.apply_override(other, v)?,
         }
@@ -171,6 +194,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default_spec_depth: sc.spec_depth,
             default_spec_adaptive: sc.spec_adaptive,
             default_spec_max: sc.spec_depth_max,
+            screen: ScreenDefaults {
+                concurrency: sc.screen_concurrency,
+                job_deadline_ms: sc.screen_job_deadline_ms,
+                job_decode_tokens: sc.screen_job_decode_tokens,
+            },
         },
     )?;
     eprintln!("retroserve: ready on {}", server.addr());
@@ -266,6 +294,109 @@ fn cmd_plan(args: &Args) -> Result<()> {
     } else if let Some(partial) = &r.partial_route {
         println!("partial route (anytime, depth {}):\n{}", partial.depth(), partial.render());
     }
+    Ok(())
+}
+
+fn cmd_screen(args: &Args) -> Result<()> {
+    let path = args.flags.get("targets").context("--targets FILE required")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading targets file {path}"))?;
+    let targets: Vec<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    if targets.is_empty() {
+        bail!("no targets in {path} (one SMILES per line)");
+    }
+    let artifacts = args.flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
+    let bw: usize = args.flags.get("beam-width").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let shards: usize = args.flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let replicas: usize =
+        args.flags.get("replicas").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let concurrency: usize =
+        args.flags.get("concurrency").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let job_deadline_ms: u64 =
+        args.flags.get("job-deadline-ms").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let job_decode_tokens: u64 =
+        args.flags.get("job-max-decode-tokens").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let metrics = Arc::new(Metrics::new());
+    let (hub, stock, _) = build_hub(
+        artifacts,
+        decoder,
+        bw.max(1),
+        replicas.max(1),
+        BatcherConfig { shards: shards.max(1), ..Default::default() },
+        SupervisorConfig::default(),
+        metrics.clone(),
+    )?;
+    let mut limits = retroserve::search::SearchLimits::default();
+    if let Some(ms) = args.flags.get("deadline-ms") {
+        limits.deadline = std::time::Duration::from_millis(ms.parse()?);
+    }
+    if let Some(d) = args.flags.get("max-depth") {
+        limits.max_depth = d.parse()?;
+    }
+    if let Some(k) = args.flags.get("k") {
+        limits.expansions_per_step = k.parse()?;
+    }
+    if let Some(n) = args.flags.get("max-expansions") {
+        limits.max_expansions = n.parse()?;
+    }
+    if let Some(n) = args.flags.get("max-decode-tokens") {
+        limits.max_decode_tokens = n.parse()?;
+    }
+    let sd_raw = args.flags.get("spec-depth").map(String::as_str).unwrap_or("1");
+    let (sd, sd_auto) = if sd_raw == "auto" {
+        let max: usize =
+            args.flags.get("spec-max").map(|s| s.parse()).transpose()?.unwrap_or(8);
+        (max.max(1), true)
+    } else {
+        (sd_raw.parse::<usize>()?.max(1), false)
+    };
+    let cfg = ScreenConfig {
+        concurrency: concurrency.max(1),
+        job_deadline: (job_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(job_deadline_ms)),
+        job_decode_tokens,
+        beam_width: bw.max(1),
+        spec_depth: sd,
+        spec_adaptive: sd_auto,
+        limits,
+    };
+    // JSONL out: one line per target in completion order, then the
+    // summary line (same shapes as the server's `screen` op).
+    let mut out: Box<dyn Write> = match args.flags.get("out") {
+        Some(p) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(p).with_context(|| format!("creating {p}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    let mut on_result = |tr: retroserve::search::TargetResult| {
+        let j = protocol::screen_target_response(0, tr.index, &tr.smiles, &tr.result);
+        let _ = writeln!(out, "{j}");
+    };
+    let summary =
+        ScreeningJob::new(cfg).run(&hub, &stock, &targets, &metrics, &mut on_result)?;
+    writeln!(out, "{}", protocol::screen_summary_response(0, &summary))?;
+    out.flush()?;
+    eprintln!(
+        "screen: {}/{} solved in {:.2}s (deadline {}, budget {}, exhausted {}, error {}) — \
+         {:.1} solved/s, {:.0} tokens/solved, cache hit {:.0}%, dedup join {:.0}%",
+        summary.solved,
+        summary.targets,
+        summary.wall_secs,
+        summary.stop_deadline,
+        summary.stop_budget,
+        summary.stop_exhausted,
+        summary.stop_error,
+        summary.solved as f64 / summary.wall_secs.max(1e-9),
+        summary.tokens_per_solved,
+        summary.cache_hit_rate * 100.0,
+        summary.dedup_join_rate * 100.0
+    );
     Ok(())
 }
 

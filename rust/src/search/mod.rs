@@ -9,7 +9,9 @@
 //! * [`retrostar`] — Retro\* (AND–OR graph best-first search with
 //!   optional beam-width batching, Table 4);
 //! * [`dfs`] — depth-first search (Table 3's DFS rows);
-//! * [`routes`] — extracted synthesis routes.
+//! * [`routes`] — extracted synthesis routes;
+//! * [`screen`] — high-throughput bulk screening: many targets planned
+//!   concurrently over one shared hub under job-level budgets.
 //!
 //! The planner stops at the *first* closed route (the paper's protocol),
 //! under a wall-clock deadline, iteration cap and depth cap.
@@ -18,12 +20,14 @@ pub mod dfs;
 pub mod policy;
 pub mod retrostar;
 pub mod routes;
+pub mod screen;
 pub mod stock;
 
 use crate::decoding::DecodeStats;
 use anyhow::Result;
 pub use policy::{AsyncExpansionPolicy, EagerAsync, ExpansionHandle, ExpansionPolicy, Proposal};
 pub use routes::Route;
+pub use screen::{ScreenConfig, ScreenSummary, ScreeningJob, TargetResult};
 pub use stock::Stock;
 
 /// Search-algorithm-independent limits (paper: 5 s / 15 s deadline,

@@ -1,0 +1,338 @@
+//! High-throughput screening: plan many targets over ONE shared hub.
+//!
+//! The paper's latency win is framed as enabling *synthesizability
+//! screening in de novo design* — thousands of candidate molecules per
+//! job, not one interactive query. [`ScreeningJob`] is that job layer:
+//! it drives up to `planner.screen_concurrency` pipelined Retro\*
+//! sessions at a time over one [`ExpansionHub`], so structurally
+//! similar candidates share the hub's expansion cache and in-flight
+//! dedup (the same intermediate decoded once serves every target that
+//! reaches it), while per-job aggregate budgets keep the whole job
+//! bounded.
+//!
+//! ## Priority: screening never inflates interactive p95
+//!
+//! Every expansion a job submits is **batch-class**
+//! ([`BatchedPolicy::batch_class`]): shard round formation defers
+//! batch misses whenever an interactive miss is pending, and the steal
+//! queue claims interactive spills first. Cache hits and joins onto
+//! in-flight decodes still answer immediately — sharing never waits.
+//! With no interactive traffic the batch path degenerates to the
+//! interactive one, which is why single-target screening at
+//! `shards = 1, replicas = 1, screen_concurrency = 1` is bit-identical
+//! to [`RetroStar::solve_pipelined`] (pinned by
+//! `tests/integration_screen.rs`).
+//!
+//! ## Budget apportionment and reclaim
+//!
+//! The job carries an aggregate wall-clock deadline and an aggregate
+//! decode-token cap. Each target, when claimed by a worker, derives
+//! its per-target [`SearchLimits`] from what is *left*: its deadline
+//! is clamped to the job's remaining wall time, and its
+//! `max_decode_tokens` is set to the job's remaining token allowance.
+//! The token allowance is deliberately handed out undivided: a solve's
+//! token gate measures deltas on the *shared* hub counters, so every
+//! in-flight target's gate observes the same token stream and the job
+//! total lands at the cap without per-target division. Reclaim is
+//! inherent — a target that solves early consumed only what it used,
+//! and the next claim recomputes the remainder from actual usage. A
+//! target claimed after the budget is gone returns immediately with
+//! the matching [`StopReason`] (its anytime result is empty); targets
+//! in flight when the job deadline passes stop through their own
+//! per-solve deadline, returning their anytime partial route.
+//!
+//! Per-target `decode_stats` in streamed results are measured on the
+//! shared hub, so concurrent targets' traffic can bleed into each
+//! other's numbers; the [`ScreenSummary`] deltas are the accurate
+//! job-level aggregates.
+//!
+//! [`ExpansionHub`]: crate::coordinator::ExpansionHub
+//! [`BatchedPolicy::batch_class`]: crate::coordinator::BatchedPolicy::batch_class
+//! [`RetroStar::solve_pipelined`]: crate::search::retrostar::RetroStar::solve_pipelined
+
+use crate::coordinator::{BatchedPolicy, ExpansionHub};
+use crate::decoding::DecodeStats;
+use crate::metrics::Metrics;
+use crate::search::retrostar::RetroStar;
+use crate::search::{SearchLimits, SolveResult, SpecStats, StopReason, Stock};
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Screening-job knobs: per-target planner shape plus the job-level
+/// concurrency and aggregate budgets.
+#[derive(Clone, Debug)]
+pub struct ScreenConfig {
+    /// Targets planned concurrently (`planner.screen_concurrency`).
+    pub concurrency: usize,
+    /// Aggregate wall-clock budget for the whole job (`None` = off).
+    /// Per-target deadlines are clamped to the remaining job time.
+    pub job_deadline: Option<std::time::Duration>,
+    /// Aggregate decode-token cap across all targets (0 = off),
+    /// measured as the hub-wide token delta over the job.
+    pub job_decode_tokens: u64,
+    /// Retro\* beam width per target.
+    pub beam_width: usize,
+    /// Speculation depth per target (max depth when adaptive).
+    pub spec_depth: usize,
+    pub spec_adaptive: bool,
+    /// Per-target base limits; the job budgets only ever tighten them.
+    pub limits: SearchLimits,
+}
+
+impl Default for ScreenConfig {
+    fn default() -> Self {
+        Self {
+            concurrency: 8,
+            job_deadline: None,
+            job_decode_tokens: 0,
+            beam_width: 1,
+            spec_depth: 1,
+            spec_adaptive: false,
+            limits: SearchLimits::default(),
+        }
+    }
+}
+
+/// One target's streamed outcome, delivered in completion order.
+#[derive(Clone, Debug)]
+pub struct TargetResult {
+    /// Position in the job's target list.
+    pub index: usize,
+    pub smiles: String,
+    /// Wall time from claim to result for THIS target (queue wait
+    /// behind `concurrency` not included).
+    pub wall_secs: f64,
+    pub result: SolveResult,
+}
+
+/// Job-level aggregates, computed from hub counter deltas over the job
+/// window. With concurrent non-job traffic on the same hub the deltas
+/// include that traffic too — job-scoped under the assumption the job
+/// dominates the hub while it runs.
+#[derive(Clone, Debug, Default)]
+pub struct ScreenSummary {
+    pub targets: usize,
+    pub solved: usize,
+    pub stop_deadline: usize,
+    pub stop_budget: usize,
+    pub stop_exhausted: usize,
+    pub stop_error: usize,
+    pub wall_secs: f64,
+    /// Expansion requests the job admitted to the hub.
+    pub requests: u64,
+    /// Per-query decode tasks those requests actually cost.
+    pub decode_tasks: u64,
+    /// Requests that joined another session's in-flight decode of the
+    /// same molecule (facade-level dedup joins).
+    pub dedup_joins: u64,
+    /// Decoder positions processed over the job.
+    pub decode_tokens: u64,
+    /// Decoder forward passes over the job.
+    pub model_calls: u64,
+    /// Fraction of requests served without a new decode task or a
+    /// dedup join — cache hits plus same-shard in-flight joins, the
+    /// cross-target sharing the job exists to maximize.
+    pub cache_hit_rate: f64,
+    /// Fraction of requests that dedup-joined an in-flight decode.
+    pub dedup_join_rate: f64,
+    /// Decode tokens per solved target (0 when nothing solved).
+    pub tokens_per_solved: f64,
+}
+
+/// Bulk planning driver: see the module docs.
+pub struct ScreeningJob {
+    pub cfg: ScreenConfig,
+}
+
+/// An immediately-stopped result for a target whose budget was gone
+/// before its solve started (no expansion landed — no partial route).
+fn stopped_result(reason: StopReason) -> SolveResult {
+    SolveResult {
+        solved: false,
+        route: None,
+        stop_reason: reason,
+        partial_route: None,
+        error: None,
+        iterations: 0,
+        expansions: 0,
+        wall_secs: 0.0,
+        decode_stats: DecodeStats::default(),
+        spec: SpecStats::default(),
+    }
+}
+
+impl ScreeningJob {
+    pub fn new(cfg: ScreenConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Derive one target's limits from the job's remaining budget; an
+    /// already-spent budget short-circuits with the stop reason the
+    /// target should report. With both job budgets off this is exactly
+    /// `cfg.limits` — the parity contract.
+    fn carve_limits(
+        &self,
+        hub: &ExpansionHub,
+        job_tokens0: u64,
+        job_deadline_at: Option<Instant>,
+    ) -> std::result::Result<SearchLimits, StopReason> {
+        let mut limits = self.cfg.limits.clone();
+        if let Some(at) = job_deadline_at {
+            let now = Instant::now();
+            if now >= at {
+                return Err(StopReason::Deadline);
+            }
+            limits.deadline = limits.deadline.min(at - now);
+        }
+        if self.cfg.job_decode_tokens > 0 {
+            let used = hub.stats().decode_tokens.saturating_sub(job_tokens0);
+            let remaining = self.cfg.job_decode_tokens.saturating_sub(used);
+            if remaining == 0 {
+                return Err(StopReason::Budget);
+            }
+            limits.max_decode_tokens = if limits.max_decode_tokens > 0 {
+                limits.max_decode_tokens.min(remaining)
+            } else {
+                remaining
+            };
+        }
+        Ok(limits)
+    }
+
+    /// Plan one target as a batch-class session over the shared hub.
+    /// Policy errors become an `Error`-stopped result — one bad target
+    /// must not abort the job.
+    fn solve_one(
+        &self,
+        hub: &Arc<ExpansionHub>,
+        stock: &Stock,
+        target: &str,
+        job_tokens0: u64,
+        job_deadline_at: Option<Instant>,
+    ) -> SolveResult {
+        let limits = match self.carve_limits(hub, job_tokens0, job_deadline_at) {
+            Ok(l) => l,
+            Err(reason) => return stopped_result(reason),
+        };
+        let policy = BatchedPolicy::batch_class(hub.clone());
+        let planner = if self.cfg.spec_adaptive {
+            RetroStar::new(self.cfg.beam_width).with_adaptive_spec_depth(self.cfg.spec_depth)
+        } else {
+            RetroStar::new(self.cfg.beam_width).with_spec_depth(self.cfg.spec_depth)
+        };
+        match planner.solve_pipelined(target, &policy, stock, &limits) {
+            Ok(r) => r,
+            Err(e) => {
+                let mut r = stopped_result(StopReason::Error);
+                r.error = Some(format!("{e:#}"));
+                r
+            }
+        }
+    }
+
+    /// Run the job: up to `cfg.concurrency` worker threads claim
+    /// targets in list order and plan them over `hub`; `on_result` is
+    /// called on THIS thread, in completion order, once per target —
+    /// the streaming surface the server's `screen` op writes from.
+    /// Returns the job aggregates (also published to `metrics` under
+    /// `screen.*`).
+    pub fn run(
+        &self,
+        hub: &Arc<ExpansionHub>,
+        stock: &Stock,
+        targets: &[String],
+        metrics: &Metrics,
+        on_result: &mut dyn FnMut(TargetResult),
+    ) -> Result<ScreenSummary> {
+        let t0 = Instant::now();
+        let stats0 = hub.stats();
+        let (tasks0, requests0) = hub.merge_ratio();
+        let dedup0 = hub.dedup_joins();
+        metrics.inc("screen.jobs_started", 1);
+        metrics.inc("screen.targets", targets.len() as u64);
+        let job_deadline_at = self.cfg.job_deadline.map(|d| t0 + d);
+        let job_tokens0 = stats0.decode_tokens;
+        let conc = self.cfg.concurrency.max(1).min(targets.len().max(1));
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<TargetResult>();
+        let mut summary = ScreenSummary { targets: targets.len(), ..Default::default() };
+        std::thread::scope(|scope| {
+            for _ in 0..conc {
+                let tx = tx.clone();
+                let next = &next;
+                let hub = hub.clone();
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= targets.len() {
+                        break;
+                    }
+                    let t_target = Instant::now();
+                    let result =
+                        self.solve_one(&hub, stock, &targets[i], job_tokens0, job_deadline_at);
+                    let done = TargetResult {
+                        index: i,
+                        smiles: targets[i].clone(),
+                        wall_secs: t_target.elapsed().as_secs_f64(),
+                        result,
+                    };
+                    if tx.send(done).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for tr in rx {
+                match tr.result.stop_reason {
+                    StopReason::Solved => summary.solved += 1,
+                    StopReason::Deadline => summary.stop_deadline += 1,
+                    StopReason::Budget => summary.stop_budget += 1,
+                    StopReason::Exhausted => summary.stop_exhausted += 1,
+                    StopReason::Error => summary.stop_error += 1,
+                }
+                on_result(tr);
+            }
+        });
+        summary.wall_secs = t0.elapsed().as_secs_f64();
+        let stats1 = hub.stats();
+        let (tasks1, requests1) = hub.merge_ratio();
+        summary.requests = requests1.saturating_sub(requests0);
+        summary.decode_tasks = tasks1.saturating_sub(tasks0);
+        summary.dedup_joins = hub.dedup_joins().saturating_sub(dedup0);
+        summary.decode_tokens = stats1.decode_tokens.saturating_sub(stats0.decode_tokens);
+        summary.model_calls = stats1.model_calls.saturating_sub(stats0.model_calls);
+        if summary.requests > 0 {
+            let shared = summary
+                .requests
+                .saturating_sub(summary.decode_tasks)
+                .saturating_sub(summary.dedup_joins);
+            summary.cache_hit_rate = shared as f64 / summary.requests as f64;
+            summary.dedup_join_rate = summary.dedup_joins as f64 / summary.requests as f64;
+        }
+        if summary.solved > 0 {
+            summary.tokens_per_solved = summary.decode_tokens as f64 / summary.solved as f64;
+        }
+        metrics.inc("screen.jobs_finished", 1);
+        if summary.solved > 0 {
+            metrics.inc("screen.targets_solved", summary.solved as u64);
+        }
+        if summary.stop_deadline > 0 {
+            metrics.inc("screen.stop.deadline", summary.stop_deadline as u64);
+        }
+        if summary.stop_budget > 0 {
+            metrics.inc("screen.stop.budget", summary.stop_budget as u64);
+        }
+        if summary.stop_exhausted > 0 {
+            metrics.inc("screen.stop.exhausted", summary.stop_exhausted as u64);
+        }
+        if summary.stop_error > 0 {
+            metrics.inc("screen.stop.error", summary.stop_error as u64);
+        }
+        metrics.inc("screen.decode_tokens", summary.decode_tokens);
+        metrics.gauge_set("screen.job_cache_hit_pct", (summary.cache_hit_rate * 100.0) as u64);
+        metrics.gauge_set("screen.job_dedup_join_pct", (summary.dedup_join_rate * 100.0) as u64);
+        metrics.gauge_set("screen.tokens_per_solved", summary.tokens_per_solved as u64);
+        Ok(summary)
+    }
+}

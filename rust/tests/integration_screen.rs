@@ -1,0 +1,378 @@
+//! Bulk screening integration: cross-target sharing, job budgets with
+//! anytime results and zero leaks, interactive-over-batch priority, and
+//! the single-target parity pin.
+//!
+//! World: a `ScriptedModel` where every pure-carbon chain `C^n`
+//! (n >= 4) disconnects into the SHARED intermediates `CCN + CCO`,
+//! which in turn split into stock ({CC, CO, CN}) — so any two targets
+//! re-expand the same molecules and a screening job should pay for
+//! each intermediate decode once, job-wide. The "deep" worlds instead
+//! shrink chains one carbon per step (`C^n -> C^(n-1) + CC`), giving
+//! arbitrarily long solves for deadline/priority tests.
+
+use retroserve::benchkit::InstrumentedModel;
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::BatchedPolicy;
+use retroserve::decoding::{make_decoder, DecodeStats};
+use retroserve::metrics::Metrics;
+use retroserve::model::scripted::{smiles_vocab, Script, ScriptedModel};
+use retroserve::model::{PooledModel, ReplicaPool};
+use retroserve::search::retrostar::RetroStar;
+use retroserve::search::{
+    ScreenConfig, ScreeningJob, SearchLimits, Stock, StopReason, TargetResult,
+};
+use retroserve::tokenizer::Vocab;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+type Probe = Arc<InstrumentedModel<ScriptedModel>>;
+
+/// A 1-replica hub over an instrumented scripted model, keeping the
+/// model handle for leak probes.
+fn hub_with(
+    vocab: Vocab,
+    script: Script,
+    decode_delay: Duration,
+    shards: usize,
+    metrics: Arc<Metrics>,
+) -> (Arc<ExpansionHub>, Probe) {
+    let model = Arc::new(
+        InstrumentedModel::new(ScriptedModel::new(vocab.clone(), script))
+            .with_decode_delay(decode_delay),
+    );
+    let hub = ExpansionHub::start_pool(
+        ReplicaPool::from_models(vec![model.clone() as PooledModel]),
+        make_decoder("msbs", 4).unwrap(),
+        vocab,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            shards,
+            ..Default::default()
+        },
+        metrics,
+    );
+    (hub, model)
+}
+
+/// Shared-intermediate script: any chain -> CCN + CCO; the two
+/// intermediates split into stock.
+fn sharing_script() -> Script {
+    Box::new(|p: &str| match p {
+        "CCN" => vec![("CC.CN".to_string(), -0.3)],
+        "CCO" => vec![("CC.CO".to_string(), -0.3)],
+        chain if chain.len() >= 4 && chain.chars().all(|c| c == 'C') => {
+            vec![("CCN.CCO".to_string(), -0.4)]
+        }
+        _ => Vec::new(),
+    })
+}
+
+/// Deep script: `C^n -> C^(n-1) + CC` (route depth n-2), plus the fast
+/// interactive molecule `CCO -> CC + CO`.
+fn deep_script() -> Script {
+    Box::new(|p: &str| {
+        if p == "CCO" {
+            return vec![("CC.CO".to_string(), -0.3)];
+        }
+        if p.len() > 2 && p.chars().all(|c| c == 'C') {
+            return vec![(format!("{}.CC", "C".repeat(p.len() - 1)), -0.5)];
+        }
+        Vec::new()
+    })
+}
+
+fn sharing_vocab() -> Vocab {
+    smiles_vocab(["CCCCCCCCC", "CCN.CCO", "CC.CN", "CC.CO", "CCN", "CCO"])
+}
+
+fn chain(n: usize) -> String {
+    "C".repeat(n)
+}
+
+fn stock(mols: &[&str]) -> Arc<Stock> {
+    Arc::new(Stock::from_iter(
+        mols.iter().map(|m| retroserve::chem::canonicalize(m).unwrap()),
+    ))
+}
+
+/// Block until the hub bookkeeping and the model-side probes drain to
+/// zero (cancellation is asynchronous), or fail listing what leaked.
+fn assert_drained(hub: &ExpansionHub, model: &Probe) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let snap = hub.debug_snapshot().unwrap();
+        let handles = model.inner().live_handles();
+        let states = model.inner().live_states();
+        if snap.waiting_molecules == 0
+            && snap.decode_tasks == 0
+            && snap.sched_in_flight == 0
+            && snap.queued_interactive == 0
+            && snap.queued_batch == 0
+            && snap.steal_interactive == 0
+            && snap.steal_batch == 0
+            && handles == 0
+            && states == 0
+        {
+            return;
+        }
+        if Instant::now() >= deadline {
+            panic!(
+                "leak after screening job: waiters={} tasks={} sched={} qi={} qb={} \
+                 steal=({},{}) live_mem={handles} state_claims={states}",
+                snap.waiting_molecules,
+                snap.decode_tasks,
+                snap.sched_in_flight,
+                snap.queued_interactive,
+                snap.queued_batch,
+                snap.steal_interactive,
+                snap.steal_batch
+            );
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn screening_job_shares_intermediates_across_targets() {
+    let st = stock(&["CC", "CO", "CN"]);
+    // Solo baseline: one target on a fresh hub = target + CCN + CCO
+    // decode tasks, nothing shared.
+    let (solo_hub, _m) = hub_with(
+        sharing_vocab(),
+        sharing_script(),
+        Duration::from_millis(5),
+        1,
+        Arc::new(Metrics::new()),
+    );
+    let policy = BatchedPolicy::new(solo_hub.clone());
+    let r = RetroStar::new(1)
+        .with_spec_depth(1)
+        .solve_pipelined(&chain(4), &policy, &st, &SearchLimits::default())
+        .unwrap();
+    assert!(r.solved, "solo solve must close: {r:?}");
+    let (solo_tasks, _) = solo_hub.merge_ratio();
+    assert!(solo_tasks >= 3, "solo plan decodes target + both intermediates");
+
+    // The job: 6 distinct targets, all funneling through CCN/CCO.
+    let targets: Vec<String> = (4..10).map(chain).collect();
+    let metrics = Arc::new(Metrics::new());
+    let (hub, model) = hub_with(
+        sharing_vocab(),
+        sharing_script(),
+        Duration::from_millis(5),
+        1,
+        metrics.clone(),
+    );
+    let job = ScreeningJob::new(ScreenConfig { concurrency: 6, ..Default::default() });
+    let mut streamed = Vec::new();
+    let summary = job
+        .run(&hub, &st, &targets, &metrics, &mut |tr: TargetResult| streamed.push(tr))
+        .unwrap();
+
+    assert_eq!(summary.targets, 6);
+    assert_eq!(summary.solved, 6, "all targets solvable: {summary:?}");
+    assert_eq!(streamed.len(), 6, "every target streams exactly once");
+    let mut idx: Vec<usize> = streamed.iter().map(|t| t.index).collect();
+    idx.sort_unstable();
+    assert_eq!(idx, (0..6).collect::<Vec<_>>());
+    // Cross-target sharing: strictly fewer decode tasks than 6 solo
+    // plans, and the shared requests are observable as cache hits +
+    // dedup joins.
+    assert!(
+        summary.decode_tasks < 6 * solo_tasks,
+        "job must decode shared intermediates once, not per target: \
+         {} tasks vs 6 x {solo_tasks} solo",
+        summary.decode_tasks
+    );
+    assert!(
+        summary.requests > summary.decode_tasks,
+        "some requests must be served without their own decode task: {summary:?}"
+    );
+    assert!(
+        summary.cache_hit_rate + summary.dedup_join_rate > 0.0,
+        "sharing must be visible in the job rates: {summary:?}"
+    );
+    assert!(summary.tokens_per_solved > 0.0);
+    // screen.* metrics surface the same story.
+    assert_eq!(metrics.counter("screen.jobs_started"), 1);
+    assert_eq!(metrics.counter("screen.jobs_finished"), 1);
+    assert_eq!(metrics.counter("screen.targets"), 6);
+    assert_eq!(metrics.counter("screen.targets_solved"), 6);
+    assert_drained(&hub, &model);
+}
+
+#[test]
+fn job_deadline_returns_anytime_partials_without_leaks() {
+    // Deep chains: the route exists (depth 30) but takes far longer
+    // than the job deadline, so every target stops on `deadline`.
+    let st = stock(&["CC", "CO"]);
+    let vocab = smiles_vocab(["CCO", "CC.CO", &chain(33)]);
+    let metrics = Arc::new(Metrics::new());
+    let (hub, model) =
+        hub_with(vocab, deep_script(), Duration::from_millis(10), 1, metrics.clone());
+    let targets: Vec<String> = (30..34).map(chain).collect();
+    let limits = SearchLimits { max_depth: 64, ..Default::default() };
+    let job = ScreeningJob::new(ScreenConfig {
+        concurrency: 2,
+        job_deadline: Some(Duration::from_millis(250)),
+        limits,
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let mut results = Vec::new();
+    let summary = job
+        .run(&hub, &st, &targets, &metrics, &mut |tr: TargetResult| results.push(tr))
+        .unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "an expired job must wind down promptly, not run to completion"
+    );
+    assert_eq!(results.len(), 4, "every target reports, finished or not");
+    for tr in &results {
+        assert_eq!(
+            tr.result.stop_reason,
+            StopReason::Deadline,
+            "target {} must stop on the job deadline: {:?}",
+            tr.smiles,
+            tr.result
+        );
+        assert!(!tr.result.solved);
+    }
+    assert_eq!(summary.stop_deadline, 4);
+    assert_eq!(summary.solved, 0);
+    assert_eq!(metrics.counter("screen.stop.deadline"), 4);
+    // Targets that were actually in flight ship their anytime
+    // best-so-far skeleton; late claims (admitted after expiry) ship
+    // an empty immediate result.
+    let with_partial = results.iter().filter(|t| t.result.partial_route.is_some()).count();
+    assert!(
+        with_partial >= 1,
+        "in-flight targets must return anytime partial routes: {results:?}"
+    );
+    assert_drained(&hub, &model);
+}
+
+#[test]
+fn interactive_plan_overtakes_a_running_job() {
+    // An 8-target deep job keeps the hub busy for seconds; an
+    // interactive plan admitted mid-job must ride ahead of the batch
+    // backlog and finish fast.
+    let st = stock(&["CC", "CO"]);
+    let vocab = smiles_vocab(["CCO", "CC.CO", &chain(17)]);
+    let metrics = Arc::new(Metrics::new());
+    let (hub, model) =
+        hub_with(vocab, deep_script(), Duration::from_millis(8), 1, metrics.clone());
+    let targets: Vec<String> = (10..18).map(chain).collect();
+    let finished = Arc::new(AtomicBool::new(false));
+    let job_handle = {
+        let hub = hub.clone();
+        let st = st.clone();
+        let metrics = metrics.clone();
+        let finished = finished.clone();
+        std::thread::spawn(move || {
+            let job = ScreeningJob::new(ScreenConfig {
+                concurrency: 2,
+                limits: SearchLimits { max_depth: 32, ..Default::default() },
+                ..Default::default()
+            });
+            let s = job.run(&hub, &st, &targets, &metrics, &mut |_| {}).unwrap();
+            finished.store(true, Ordering::SeqCst);
+            s
+        })
+    };
+    // Let the job saturate the hub, then plan interactively.
+    std::thread::sleep(Duration::from_millis(150));
+    assert!(!finished.load(Ordering::SeqCst), "job must still be running");
+    let policy = BatchedPolicy::new(hub.clone());
+    let t0 = Instant::now();
+    let r = RetroStar::new(1)
+        .with_spec_depth(1)
+        .solve_pipelined("CCO", &policy, &st, &SearchLimits::default())
+        .unwrap();
+    let wall = t0.elapsed();
+    assert!(r.solved, "interactive plan must solve: {r:?}");
+    assert!(
+        wall < Duration::from_millis(1000),
+        "interactive plan must not wait behind the job's backlog: took {wall:?}"
+    );
+    assert!(
+        !finished.load(Ordering::SeqCst),
+        "the job must still be draining when the interactive plan returns"
+    );
+    let summary = job_handle.join().unwrap();
+    assert_eq!(summary.solved, 8, "the job itself still completes: {summary:?}");
+    assert_drained(&hub, &model);
+}
+
+fn assert_same_stats(label: &str, got: &DecodeStats, want: &DecodeStats) {
+    assert_eq!(got.model_calls, want.model_calls, "{label}: model_calls");
+    assert_eq!(got.encode_calls, want.encode_calls, "{label}: encode_calls");
+    assert_eq!(got.rows_logical, want.rows_logical, "{label}: rows_logical");
+    assert_eq!(got.rows_padded, want.rows_padded, "{label}: rows_padded");
+    assert_eq!(got.decode_tokens, want.decode_tokens, "{label}: decode_tokens");
+    assert_eq!(got.drafts_offered, want.drafts_offered, "{label}: drafts_offered");
+    assert_eq!(got.drafts_accepted, want.drafts_accepted, "{label}: drafts_accepted");
+}
+
+#[test]
+fn single_target_screening_is_bit_identical_to_solve_pipelined() {
+    // shards=1, replicas=1, screen_concurrency=1, no job budgets: the
+    // batch-class path must degenerate to exactly the interactive path.
+    let st = stock(&["CC", "CO", "CN"]);
+    let target = chain(6);
+    let limits = SearchLimits::default();
+
+    let (hub_a, _ma) = hub_with(
+        sharing_vocab(),
+        sharing_script(),
+        Duration::ZERO,
+        1,
+        Arc::new(Metrics::new()),
+    );
+    let policy = BatchedPolicy::new(hub_a.clone());
+    let want = RetroStar::new(1)
+        .with_spec_depth(1)
+        .solve_pipelined(&target, &policy, &st, &limits)
+        .unwrap();
+
+    let metrics = Arc::new(Metrics::new());
+    let (hub_b, _mb) = hub_with(
+        sharing_vocab(),
+        sharing_script(),
+        Duration::ZERO,
+        1,
+        metrics.clone(),
+    );
+    let job = ScreeningJob::new(ScreenConfig {
+        concurrency: 1,
+        beam_width: 1,
+        spec_depth: 1,
+        limits: limits.clone(),
+        ..Default::default()
+    });
+    let mut streamed = Vec::new();
+    let summary = job
+        .run(
+            &hub_b,
+            &st,
+            std::slice::from_ref(&target),
+            &metrics,
+            &mut |tr: TargetResult| streamed.push(tr),
+        )
+        .unwrap();
+    assert_eq!(streamed.len(), 1);
+    let got = &streamed[0].result;
+
+    assert_eq!(got.solved, want.solved, "parity: solved");
+    assert_eq!(got.stop_reason, want.stop_reason, "parity: stop_reason");
+    assert_eq!(got.iterations, want.iterations, "parity: iterations");
+    assert_eq!(got.expansions, want.expansions, "parity: expansions");
+    assert_eq!(got.route, want.route, "parity: route (reactants + logp exact)");
+    assert_eq!(got.partial_route, want.partial_route, "parity: partial");
+    assert_same_stats("screen vs solve_pipelined", &got.decode_stats, &want.decode_stats);
+    // And the hubs did the same amount of work.
+    assert_eq!(hub_b.merge_ratio().0, hub_a.merge_ratio().0, "parity: decode tasks");
+    assert_eq!(summary.solved, 1);
+}

@@ -51,6 +51,7 @@ fn ctx() -> ServerCtx {
         default_spec_depth: 1,
         default_spec_adaptive: false,
         default_spec_max: 8,
+        screen: Default::default(),
     }
 }
 
