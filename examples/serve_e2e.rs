@@ -120,6 +120,7 @@ fn main() -> Result<()> {
             default_spec_adaptive: false,
             default_spec_max: 8,
             screen: Default::default(),
+            overload: Default::default(),
         },
     )?;
     let addr = server.addr();

@@ -1,0 +1,256 @@
+//! Overload bench: the admission-control / degradation ladder under
+//! 1x / 2x / 4x saturation.
+//!
+//! A real TCP server over the mock model (fixed decode delay, so
+//! capacity is known: `SHARDS x MAX_BATCH` concurrent sessions is the
+//! spill-path saturation point, load score 1.0). Closed-loop sessions
+//! each issue a chain of interactive plans, issuing the next the moment
+//! the previous answers. At 1x the ladder should stay quiet; at 2x and
+//! 4x the queue watermark sheds and the degradation ladder clamps —
+//! what this bench measures is that the *answered* interactive p95
+//! stays bounded while the shed rate absorbs the excess.
+//!
+//! Hard invariants (exit 1 on breach, so CI can gate on the binary):
+//! every request gets exactly one structured terminal answer — an
+//! admitted plan or an `overloaded` shed with its retry hint — and no
+//! transport error or hang appears at any load.
+//!
+//! Emits `BENCH_overload.json`.
+
+use retroserve::benchkit::{write_bench_json, BenchRecord, CountingAlloc, InstrumentedModel};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::overload::{OverloadConfig, OverloadController};
+use retroserve::coordinator::server::{Client, Server, ServerCtx};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::jsonx::Json;
+use retroserve::metrics::Metrics;
+use retroserve::model::mock::{MockConfig, MockModel};
+use retroserve::search::{SearchLimits, Stock};
+use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::percentile;
+use retroserve::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Molecules the mock's copy task can expand.
+const POOL: [&str; 3] = ["CC(=O)NC", "CC(=O)O.CN", "CCO"];
+/// Hub geometry: capacity = SHARDS x MAX_BATCH sessions.
+const SHARDS: usize = 2;
+const MAX_BATCH: usize = 8;
+const CAPACITY: usize = SHARDS * MAX_BATCH;
+/// Synthetic device latency per decode call.
+const DEVICE_CALL_US: u64 = 400;
+/// Plans each session issues, back to back.
+const REQUESTS_PER_SESSION: usize = 5;
+/// Per-plan wall budget (anytime answers keep the loop tight).
+const DEADLINE_MS: u64 = 50;
+
+struct LoadReport {
+    sessions: usize,
+    requests: usize,
+    answered: usize,
+    shed: usize,
+    degraded: usize,
+    transport_errors: usize,
+    p50_ms: f64,
+    p95_ms: f64,
+    wall_ms: f64,
+}
+
+fn start_server() -> (Server, Arc<ExpansionHub>) {
+    let vocab = Vocab::build(POOL);
+    let model = InstrumentedModel::new(MockModel::new(MockConfig {
+        vocab: vocab.len(),
+        ..Default::default()
+    }))
+    .with_decode_delay(Duration::from_micros(DEVICE_CALL_US));
+    let hub = ExpansionHub::start(
+        model,
+        Box::new(Msbs::default()),
+        vocab,
+        BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_micros(200),
+            shards: SHARDS,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let server = Server::start(
+        "127.0.0.1:0",
+        ServerCtx {
+            hub: hub.clone(),
+            stock: Arc::new(Stock::new()),
+            metrics: Arc::new(Metrics::new()),
+            default_limits: SearchLimits {
+                deadline: Duration::from_millis(DEADLINE_MS),
+                max_iterations: 12,
+                max_depth: 3,
+                expansions_per_step: 4,
+                ..Default::default()
+            },
+            default_algo: "retrostar".into(),
+            default_beam_width: 2,
+            default_spec_depth: 1,
+            default_spec_adaptive: false,
+            default_spec_max: 8,
+            screen: Default::default(),
+            overload: Arc::new(OverloadController::new(OverloadConfig {
+                // Shed once the backlog is twice the spill-path
+                // capacity; degrade earlier via the default watermarks.
+                max_queue: 2 * CAPACITY,
+                retry_after_ms: 5,
+                degraded_beam: 1,
+                degraded_deadline_ms: DEADLINE_MS / 2,
+                ..Default::default()
+            })),
+        },
+    )
+    .expect("server start");
+    (server, hub)
+}
+
+fn run_load(sessions: usize) -> LoadReport {
+    let (server, _hub) = start_server();
+    let addr = server.addr();
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..sessions as u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t ^ 0x0E71);
+            // (latency_ms, answered, shed, degraded, transport_error)
+            let mut out: Vec<(f64, bool, bool, bool, bool)> = Vec::new();
+            let mut client = Client::connect_retry(addr, 10).ok();
+            for _ in 0..REQUESTS_PER_SESSION {
+                let Some(c) = client.as_mut() else {
+                    out.push((0.0, false, false, false, true));
+                    continue;
+                };
+                let issue = Instant::now();
+                match c.call(Json::obj(vec![
+                    ("op", Json::str("plan")),
+                    ("smiles", Json::str(POOL[rng.gen_range(POOL.len())])),
+                ])) {
+                    Ok(r) => {
+                        let ms = issue.elapsed().as_secs_f64() * 1e3;
+                        let ok = r.get("ok").and_then(|x| x.as_bool()) == Some(true);
+                        let shed =
+                            r.get("code").and_then(|x| x.as_str()) == Some("overloaded");
+                        let degraded =
+                            r.get("degraded").and_then(|x| x.as_bool()) == Some(true);
+                        // A shed without its retry hint is a protocol
+                        // bug; count it as unanswered so CI fails. Any
+                        // other structured reply (an admitted plan or a
+                        // scoped error) counts as answered.
+                        let hinted = !shed
+                            || r.get("retry_after_ms").and_then(|x| x.as_usize()).is_some();
+                        let answered = !shed
+                            && (ok || r.get("error").and_then(|x| x.as_str()).is_some());
+                        out.push((ms, answered, shed && hinted, degraded, shed && !hinted));
+                    }
+                    Err(_) => {
+                        out.push((0.0, false, false, false, true));
+                        client = None;
+                    }
+                }
+            }
+            out
+        }));
+    }
+    let (mut answered, mut shed, mut degraded, mut transport_errors) = (0, 0, 0, 0);
+    let mut requests = 0usize;
+    let mut lat: Vec<f64> = Vec::new();
+    for j in joins {
+        for (ms, ok, sh, dg, err) in j.join().expect("session thread") {
+            requests += 1;
+            if ok {
+                answered += 1;
+                lat.push(ms);
+            }
+            if sh {
+                shed += 1;
+            }
+            if dg {
+                degraded += 1;
+            }
+            if err {
+                transport_errors += 1;
+            }
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    server.shutdown();
+    LoadReport {
+        sessions,
+        requests,
+        answered,
+        shed,
+        degraded,
+        transport_errors,
+        p50_ms: percentile(&lat, 50.0),
+        p95_ms: percentile(&lat, 95.0),
+        wall_ms,
+    }
+}
+
+fn main() {
+    println!(
+        "== overload bench (capacity {CAPACITY} sessions, {REQUESTS_PER_SESSION} \
+         plans/session, {DEADLINE_MS}ms deadline, device call {DEVICE_CALL_US}us) =="
+    );
+    let mut records = Vec::new();
+    let mut breached = false;
+    for mult in [1usize, 2, 4] {
+        let sessions = mult * CAPACITY;
+        let r = run_load(sessions);
+        let shed_rate = r.shed as f64 / r.requests.max(1) as f64;
+        let degraded_rate = r.degraded as f64 / r.requests.max(1) as f64;
+        println!(
+            "load {mult}x s={sessions:<3} answered {:>3}/{:<3} shed {:>5.1}%  \
+             degraded {:>5.1}%  p50 {:>7.2}ms  p95 {:>7.2}ms  wall {:>8.1}ms",
+            r.answered,
+            r.requests,
+            shed_rate * 100.0,
+            degraded_rate * 100.0,
+            r.p50_ms,
+            r.p95_ms,
+            r.wall_ms
+        );
+        // Zero-hang / all-answered invariants: every request must come
+        // back as an admitted answer or a hinted shed, promptly.
+        if r.transport_errors > 0 || r.answered + r.shed != r.requests {
+            eprintln!(
+                "INVARIANT BREACH at {mult}x: {} transport errors, \
+                 {} answered + {} shed != {} requests",
+                r.transport_errors, r.answered, r.shed, r.requests
+            );
+            breached = true;
+        }
+        let wall_cap_ms = (REQUESTS_PER_SESSION as f64) * (DEADLINE_MS as f64) * 40.0;
+        if r.wall_ms > wall_cap_ms {
+            eprintln!("INVARIANT BREACH at {mult}x: wall {}ms > {}ms", r.wall_ms, wall_cap_ms);
+            breached = true;
+        }
+        records.push(
+            BenchRecord::new(format!("overload-{mult}x"))
+                .metric("sessions", r.sessions as f64)
+                .metric("requests", r.requests as f64)
+                .metric("shed_rate", shed_rate)
+                .metric("degraded_rate", degraded_rate)
+                .metric("p50_ms", r.p50_ms)
+                .metric("p95_ms", r.p95_ms)
+                .metric("wall_ms", r.wall_ms),
+        );
+    }
+    let path = std::path::Path::new("BENCH_overload.json");
+    match write_bench_json(path, "overload", &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+    if breached {
+        std::process::exit(1);
+    }
+}

@@ -239,6 +239,17 @@ pub struct ChaosConfig {
     pub err_on_decode: Vec<usize>,
     pub panic_on_encode: Vec<usize>,
     pub panic_on_decode: Vec<usize>,
+    /// Overload storm: a *correlated* latency window, unlike the
+    /// independent per-call `delay_rate` draws. Every call whose
+    /// 1-based per-phase index lands in `[storm_after, storm_after +
+    /// storm_calls)` pays `storm_delay`, so the model slows down for a
+    /// sustained stretch and real queueing builds behind it — the
+    /// overload-protection tests use this to push the hub's load score
+    /// through the shed/degrade watermarks. `storm_calls == 0` (the
+    /// default) disables the window.
+    pub storm_after: u64,
+    pub storm_calls: u64,
+    pub storm_delay: std::time::Duration,
 }
 
 /// Shared tally of injected faults, readable after the model moves onto
@@ -250,6 +261,8 @@ pub struct ChaosCounters {
     pub panics: AtomicU64,
     pub delays: AtomicU64,
     pub stalls: AtomicU64,
+    /// Calls slowed by the correlated storm window.
+    pub storms: AtomicU64,
 }
 
 enum Fault {
@@ -320,6 +333,14 @@ impl<M> ChaosModel<M> {
         if stall && !self.cfg.stall.is_zero() {
             self.injected.stalls.fetch_add(1, Ordering::Relaxed);
             sleep += self.cfg.stall;
+        }
+        if self.cfg.storm_calls > 0
+            && !self.cfg.storm_delay.is_zero()
+            && n >= self.cfg.storm_after
+            && n < self.cfg.storm_after + self.cfg.storm_calls
+        {
+            self.injected.storms.fetch_add(1, Ordering::Relaxed);
+            sleep += self.cfg.storm_delay;
         }
         let fault = if panic || panic_on.contains(&(n as usize)) {
             Fault::Panic
@@ -772,6 +793,30 @@ mod tests {
         // The next call is healthy again.
         let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
         m.release(h);
+    }
+
+    #[test]
+    fn chaos_storm_window_slows_exactly_its_calls() {
+        use crate::model::mock::{MockConfig, MockModel};
+        use crate::tokenizer::{BOS, EOS};
+        let m = ChaosModel::new(
+            MockModel::new(MockConfig::default()),
+            ChaosConfig {
+                storm_after: 2,
+                storm_calls: 3,
+                storm_delay: std::time::Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let c = m.counters();
+        for _ in 0..6 {
+            let h = m.encode(&[vec![BOS, 5, 6, EOS]]).unwrap();
+            m.release(h);
+        }
+        // Calls 2, 3, 4 of the six land in [storm_after, storm_after +
+        // storm_calls); calls 1, 5, 6 stay fast.
+        assert_eq!(c.storms.load(Ordering::Relaxed), 3);
+        assert_eq!(c.delays.load(Ordering::Relaxed), 0);
     }
 
     #[test]

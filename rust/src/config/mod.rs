@@ -203,6 +203,28 @@ pub struct ServeConfig {
     pub model_retries: u32,
     /// Executor supervision: base retry/restart backoff, microseconds.
     pub model_backoff_us: u64,
+    /// Admission control: concurrent connection slots (0 = unlimited).
+    pub max_sessions: usize,
+    /// Admission control: queued-expansion shed threshold (0 = shedding
+    /// off). Batch/screen requests shed at half this depth, interactive
+    /// at the full depth.
+    pub max_queue: usize,
+    /// Drain-clean shutdown: grace window for in-flight solves before
+    /// their deadlines are fenced, ms.
+    pub drain_ms: u64,
+    /// Suggested client backoff carried in shed responses, ms.
+    pub retry_after_ms: u64,
+    /// Degradation ladder: load score at/above which new requests are
+    /// admitted with clamped effort.
+    pub degrade_high: f64,
+    /// Degradation ladder: load score at/below which full effort
+    /// returns (hysteresis band between the two watermarks).
+    pub degrade_low: f64,
+    /// Degradation ladder: beam-width floor for degraded admissions.
+    pub degraded_beam: usize,
+    /// Degradation ladder: deadline clamp for degraded admissions, ms
+    /// (0 = keep the request deadline).
+    pub degraded_deadline_ms: u64,
 }
 
 impl ServeConfig {
@@ -244,6 +266,14 @@ impl ServeConfig {
                 as u64,
             model_retries: c.int_or("model.retries", 0).max(0) as u32,
             model_backoff_us: c.int_or("model.backoff_us", 200).max(0) as u64,
+            max_sessions: c.int_or("server.max_sessions", 0).max(0) as usize,
+            max_queue: c.int_or("server.max_queue", 0).max(0) as usize,
+            drain_ms: c.int_or("server.drain_ms", 1000).max(0) as u64,
+            retry_after_ms: c.int_or("server.retry_after_ms", 250).max(1) as u64,
+            degrade_high: c.float_or("server.degrade_high", 0.75).max(0.0),
+            degrade_low: c.float_or("server.degrade_low", 0.40).max(0.0),
+            degraded_beam: c.int_or("planner.degraded_beam", 1).max(1) as usize,
+            degraded_deadline_ms: c.int_or("planner.degraded_deadline_ms", 0).max(0) as u64,
         }
     }
 
@@ -255,6 +285,7 @@ impl ServeConfig {
             expansions_per_step: self.expansions_per_step,
             max_expansions: self.max_expansions,
             max_decode_tokens: self.max_decode_tokens,
+            fence: crate::search::DeadlineFence::default(),
         }
     }
 }
@@ -357,6 +388,47 @@ mod tests {
             1,
             "clamped to >= 1"
         );
+    }
+
+    #[test]
+    fn overload_keys_default_inert() {
+        let sc = ServeConfig::from_config(&Config::new());
+        assert_eq!(sc.max_sessions, 0, "session slots default to unlimited");
+        assert_eq!(sc.max_queue, 0, "shedding defaults to off");
+        assert_eq!(sc.drain_ms, 1000);
+        assert_eq!(sc.retry_after_ms, 250);
+        assert!((sc.degrade_high - 0.75).abs() < 1e-12);
+        assert!((sc.degrade_low - 0.40).abs() < 1e-12);
+        assert_eq!(sc.degraded_beam, 1);
+        assert_eq!(sc.degraded_deadline_ms, 0, "deadline clamp defaults off");
+        assert!(
+            sc.limits().fence.get().is_none(),
+            "limits carry an unset fence"
+        );
+    }
+
+    #[test]
+    fn overload_keys_parse_and_clamp() {
+        let c = Config::parse(concat!(
+            "[server]\nmax_sessions = 64\nmax_queue = 32\ndrain_ms = 500\n",
+            "retry_after_ms = 100\ndegrade_high = 0.9\ndegrade_low = 0.5\n",
+            "[planner]\ndegraded_beam = 2\ndegraded_deadline_ms = 800\n",
+        ))
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.max_sessions, 64);
+        assert_eq!(sc.max_queue, 32);
+        assert_eq!(sc.drain_ms, 500);
+        assert_eq!(sc.retry_after_ms, 100);
+        assert!((sc.degrade_high - 0.9).abs() < 1e-12);
+        assert!((sc.degrade_low - 0.5).abs() < 1e-12);
+        assert_eq!(sc.degraded_beam, 2);
+        assert_eq!(sc.degraded_deadline_ms, 800);
+        let c = Config::parse("[server]\nretry_after_ms = 0\n[planner]\ndegraded_beam = 0\n")
+            .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.retry_after_ms, 1, "clamped to >= 1");
+        assert_eq!(sc.degraded_beam, 1, "clamped to >= 1");
     }
 
     #[test]

@@ -802,6 +802,31 @@ impl ExpansionHub {
         self.shards.len()
     }
 
+    /// Queued expansion requests: shard-inbox depths (the routing
+    /// atomics) plus both spill lanes. Non-blocking — unlike
+    /// [`ExpansionHub::debug_snapshot`] this never waits on a shard
+    /// tick, so the admission layer can read it per request.
+    pub fn queued_requests(&self) -> usize {
+        let inbox: usize = self
+            .shards
+            .iter()
+            .map(|sh| sh.depth.load(Ordering::Relaxed))
+            .sum();
+        let (steal_i, steal_b) = self.steal_q.depths();
+        inbox + steal_i + steal_b
+    }
+
+    /// Load score: [`ExpansionHub::queued_requests`] normalized by the
+    /// tier's gather capacity (`shards × max_batch`). 1.0 means every
+    /// shard has one full gather round queued — the same saturation
+    /// point at which routing starts spilling to the steal queue, so
+    /// scores at or beyond 1.0 mean requests are already waiting out
+    /// whole model rounds.
+    pub fn load_score(&self) -> f64 {
+        let cap = (self.shards.len().max(1)) * self.max_batch.max(1);
+        self.queued_requests() as f64 / cap as f64
+    }
+
     /// Point-in-time per-replica counters (alive, outstanding rows,
     /// fused calls, rows dispatched) — benches print utilization from
     /// these.

@@ -4,6 +4,25 @@
 //!
 //! ```text
 //! TCP clients ──► server (thread per connection)
+//!                    │  admission (overload::OverloadController):
+//!                    │  connections beyond server.max_sessions and
+//!                    │  requests past the server.max_queue watermark
+//!                    │  are SHED with {code:"overloaded",
+//!                    │  retry_after_ms} — batch/screen class sheds at
+//!                    │  half the interactive threshold, so screening
+//!                    │  floods never starve interactive plans. Above
+//!                    │  the degrade_high load watermark NEW requests
+//!                    │  are admitted DEGRADED (beam → degraded_beam,
+//!                    │  spec_depth → 1, optional tighter deadline;
+//!                    │  response carries degraded:true) until load
+//!                    │  falls back through degrade_low (hysteresis —
+//!                    │  in-flight requests are never touched). A
+//!                    │  draining server refuses new work with
+//!                    │  {code:"draining"} while in-flight solves run
+//!                    │  out a fenced drain deadline and return
+//!                    │  anytime partials; healthz reports readiness
+//!                    │  (alive replicas, load score, draining flag)
+//!                    │  ───
 //!                    │  plan: pipelined Retro* keeps up to spec_depth
 //!                    │  expansion groups in flight as futures; waits
 //!                    │  block on the hub's completion events (condvar),
@@ -121,6 +140,11 @@
 //! `benchkit::ChaosModel`) against mixed impatient / abandoning /
 //! patient waiters, asserting the hub still answers afterwards and
 //! that waiters, memory views and decoder-state claims drain to zero.
+//! Its overload-storm tests add connection floods over a real TCP
+//! server (latency spikes + a replica death mid-storm): every request
+//! must get a terminal structured answer — shed, draining, degraded,
+//! anytime or solved — and the hub must drain to zero both after the
+//! storm and after a mid-storm `drain` shutdown.
 //!
 //! **MemView ownership rule:** a round's shared encoder batch is freed
 //! on the device exactly when the *last* member task retires or is
@@ -166,9 +190,11 @@
 //! memory immediately.
 
 pub mod batcher;
+pub mod overload;
 pub mod protocol;
 pub mod server;
 pub(crate) mod shard;
 
 pub use batcher::{BatchedPolicy, ExpansionFuture, ExpansionHub};
+pub use overload::{Admission, OverloadConfig, OverloadController};
 pub use server::Server;

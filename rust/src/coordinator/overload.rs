@@ -1,0 +1,309 @@
+//! Overload protection: admission control, the graceful-degradation
+//! ladder, and drain-clean shutdown state.
+//!
+//! The serving tier must degrade answer *quality* before it degrades
+//! *availability* (the paper's pitch is strict per-request latency for
+//! screening, and the anytime `StopReason` machinery already gives us
+//! honest partial answers). This module keeps all of that policy in one
+//! deterministic, lock-free object so the server and tests share it:
+//!
+//! * **Session slots** — `max_sessions` bounds concurrent connections;
+//!   excess connects receive a structured shed response instead of an
+//!   unbounded thread.
+//! * **Queue shedding** — `max_queue` bounds queued hub work; batch /
+//!   screen requests shed at half the threshold, interactive at the
+//!   full threshold (interactive last, per the north star).
+//! * **Degradation ladder** — when the hub load score crosses
+//!   `degrade_high`, new requests are admitted with clamped effort
+//!   (beam toward `degraded_beam`, speculation toward 1, optionally a
+//!   tighter deadline); the flag clears only when load falls to
+//!   `degrade_low`, so the ladder recovers hysteretically instead of
+//!   flapping around one watermark. In-flight requests are never
+//!   touched.
+//! * **Draining** — once [`OverloadController::begin_drain`] runs, new
+//!   work is refused with `code:"draining"` and every in-flight solve's
+//!   [`DeadlineFence`] is fenced to `now + drain_ms`, after which the
+//!   solves return anytime partials through the ordinary budget path.
+//!
+//! All decisions are pure functions of (config, load, queued, class,
+//! state bits), so the ladder is unit-testable without a hub.
+
+use crate::search::DeadlineFence;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Knobs for the controller; defaults are inert (no session bound, no
+/// shedding, degradation watermarks unreachable without real load).
+#[derive(Clone, Debug)]
+pub struct OverloadConfig {
+    /// Concurrent connection slots (0 = unlimited).
+    pub max_sessions: usize,
+    /// Queued-request shed threshold (0 = shedding off). Batch-class
+    /// requests shed at `max(1, max_queue / 2)`, interactive at
+    /// `max_queue`.
+    pub max_queue: usize,
+    /// Load score at/above which new requests degrade.
+    pub degrade_high: f64,
+    /// Load score at/below which full effort returns.
+    pub degrade_low: f64,
+    /// Beam-width floor applied to degraded admissions.
+    pub degraded_beam: usize,
+    /// Deadline clamp for degraded admissions, ms (0 = keep request
+    /// deadline).
+    pub degraded_deadline_ms: u64,
+    /// Backoff hint carried in shed responses, ms.
+    pub retry_after_ms: u64,
+    /// Drain grace window for in-flight solves, ms.
+    pub drain_ms: u64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            max_sessions: 0,
+            max_queue: 0,
+            degrade_high: 0.75,
+            degrade_low: 0.40,
+            degraded_beam: 1,
+            degraded_deadline_ms: 0,
+            retry_after_ms: 250,
+            drain_ms: 1000,
+        }
+    }
+}
+
+/// Outcome of one admission decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Run the request; `degraded` means clamp its effort knobs.
+    Admit { degraded: bool },
+    /// Refuse with `code:"overloaded"` and this backoff hint.
+    Shed { retry_after_ms: u64 },
+    /// Refuse with `code:"draining"` — the server is shutting down.
+    Draining,
+}
+
+/// Decrements the in-flight request count on drop, so every exit path
+/// out of a handler (including panics unwinding into the connection
+/// thread) releases its slot.
+pub struct RequestGuard<'a> {
+    ctrl: &'a OverloadController,
+}
+
+impl Drop for RequestGuard<'_> {
+    fn drop(&mut self) {
+        self.ctrl.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Shared overload state for one [`crate::coordinator::Server`].
+#[derive(Debug, Default)]
+pub struct OverloadController {
+    pub cfg: OverloadConfig,
+    /// Connections currently holding a session slot.
+    sessions: AtomicUsize,
+    /// Requests currently inside a handler (plan / expand / screen).
+    inflight: AtomicUsize,
+    draining: AtomicBool,
+    /// Ladder state bit (hysteresis memory between the watermarks).
+    degraded: AtomicBool,
+    /// Shared with every admitted solve's `SearchLimits`; set once at
+    /// drain time.
+    fence: DeadlineFence,
+}
+
+impl OverloadController {
+    pub fn new(cfg: OverloadConfig) -> Self {
+        Self { cfg, ..Default::default() }
+    }
+
+    /// Admission decision for one new request. `load` and `queued` are
+    /// the hub's non-blocking probes; `batch` marks the batch/screen
+    /// class (sheds first). Also advances the hysteretic ladder bit:
+    /// `load >= degrade_high` sets it, `load <= degrade_low` clears it,
+    /// anything between leaves it unchanged.
+    pub fn admit(&self, load: f64, queued: usize, batch: bool) -> Admission {
+        if self.draining.load(Ordering::SeqCst) {
+            return Admission::Draining;
+        }
+        if self.cfg.max_queue > 0 {
+            let threshold = if batch {
+                (self.cfg.max_queue / 2).max(1)
+            } else {
+                self.cfg.max_queue
+            };
+            if queued >= threshold {
+                return Admission::Shed { retry_after_ms: self.cfg.retry_after_ms };
+            }
+        }
+        if load >= self.cfg.degrade_high {
+            self.degraded.store(true, Ordering::SeqCst);
+        } else if load <= self.cfg.degrade_low {
+            self.degraded.store(false, Ordering::SeqCst);
+        }
+        Admission::Admit { degraded: self.degraded.load(Ordering::SeqCst) }
+    }
+
+    /// Claim a connection slot; `false` means shed the connection.
+    /// Compare-and-swap so racing accepts cannot overshoot the bound.
+    pub fn try_acquire_session(&self) -> bool {
+        if self.cfg.max_sessions == 0 {
+            self.sessions.fetch_add(1, Ordering::SeqCst);
+            return true;
+        }
+        loop {
+            let cur = self.sessions.load(Ordering::SeqCst);
+            if cur >= self.cfg.max_sessions {
+                return false;
+            }
+            if self
+                .sessions
+                .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    pub fn release_session(&self) {
+        self.sessions.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.sessions.load(Ordering::SeqCst)
+    }
+
+    /// Mark one request in flight; the guard releases it on drop.
+    pub fn request_begin(&self) -> RequestGuard<'_> {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        RequestGuard { ctrl: self }
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Enter draining: refuse new work and fence every in-flight
+    /// solve's deadline to `now + drain_ms`. Idempotent — the fence
+    /// keeps the earliest instant, so repeated drains only tighten.
+    /// Returns the drain deadline.
+    pub fn begin_drain(&self, now: Instant) -> Instant {
+        self.draining.store(true, Ordering::SeqCst);
+        let at = now + Duration::from_millis(self.cfg.drain_ms);
+        self.fence.set(at);
+        at
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    /// The shared fence; clones installed into admitted requests'
+    /// `SearchLimits` all point at the same cell.
+    pub fn fence(&self) -> DeadlineFence {
+        self.fence.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl(cfg: OverloadConfig) -> OverloadController {
+        OverloadController::new(cfg)
+    }
+
+    #[test]
+    fn defaults_admit_everything_undegraded() {
+        let c = ctrl(OverloadConfig::default());
+        for queued in [0usize, 10, 10_000] {
+            assert_eq!(
+                c.admit(0.0, queued, false),
+                Admission::Admit { degraded: false },
+                "max_queue = 0 disables shedding"
+            );
+            assert_eq!(c.admit(0.0, queued, true), Admission::Admit { degraded: false });
+        }
+        for _ in 0..100 {
+            assert!(c.try_acquire_session(), "max_sessions = 0 is unlimited");
+        }
+    }
+
+    #[test]
+    fn batch_class_sheds_before_interactive() {
+        let c = ctrl(OverloadConfig { max_queue: 8, ..Default::default() });
+        // Below the batch threshold: everyone admitted.
+        assert_eq!(c.admit(0.0, 3, true), Admission::Admit { degraded: false });
+        assert_eq!(c.admit(0.0, 3, false), Admission::Admit { degraded: false });
+        // Between max_queue/2 and max_queue: batch sheds, interactive
+        // still gets in.
+        assert_eq!(c.admit(0.0, 4, true), Admission::Shed { retry_after_ms: 250 });
+        assert_eq!(c.admit(0.0, 4, false), Admission::Admit { degraded: false });
+        // At the full threshold: interactive sheds too.
+        assert_eq!(c.admit(0.0, 8, false), Admission::Shed { retry_after_ms: 250 });
+    }
+
+    #[test]
+    fn shed_carries_the_configured_retry_hint() {
+        let c = ctrl(OverloadConfig { max_queue: 2, retry_after_ms: 77, ..Default::default() });
+        assert_eq!(c.admit(0.0, 2, false), Admission::Shed { retry_after_ms: 77 });
+    }
+
+    #[test]
+    fn ladder_sets_at_high_and_clears_only_at_low() {
+        let c = ctrl(OverloadConfig::default()); // high 0.75, low 0.40
+        assert_eq!(c.admit(0.5, 0, false), Admission::Admit { degraded: false });
+        // Crossing the high watermark flips the bit for NEW requests.
+        assert_eq!(c.admit(0.8, 0, false), Admission::Admit { degraded: true });
+        // In the hysteresis band the bit holds — no flapping at 0.74/0.76.
+        assert_eq!(c.admit(0.6, 0, false), Admission::Admit { degraded: true });
+        assert_eq!(c.admit(0.41, 0, false), Admission::Admit { degraded: true });
+        // Only at/below the low watermark does full effort return.
+        assert_eq!(c.admit(0.40, 0, false), Admission::Admit { degraded: false });
+        assert_eq!(c.admit(0.6, 0, false), Admission::Admit { degraded: false });
+    }
+
+    #[test]
+    fn draining_outranks_everything() {
+        let c = ctrl(OverloadConfig { max_queue: 4, ..Default::default() });
+        let before = Instant::now();
+        let deadline = c.begin_drain(before);
+        assert!(c.is_draining());
+        assert_eq!(deadline, before + Duration::from_millis(1000));
+        assert_eq!(c.admit(0.0, 0, false), Admission::Draining);
+        assert_eq!(c.admit(9.9, 999, true), Admission::Draining);
+        // The fence is installed for in-flight solves.
+        assert_eq!(c.fence().get(), Some(deadline));
+        // A second drain can only tighten the fence.
+        let earlier = before - Duration::from_millis(900);
+        c.begin_drain(earlier);
+        assert_eq!(c.fence().get(), Some(earlier + Duration::from_millis(1000)));
+    }
+
+    #[test]
+    fn session_slots_bound_and_release() {
+        let c = ctrl(OverloadConfig { max_sessions: 2, ..Default::default() });
+        assert!(c.try_acquire_session());
+        assert!(c.try_acquire_session());
+        assert!(!c.try_acquire_session(), "third connection sheds");
+        assert_eq!(c.sessions(), 2);
+        c.release_session();
+        assert!(c.try_acquire_session(), "freed slot is reusable");
+    }
+
+    #[test]
+    fn request_guard_releases_on_drop() {
+        let c = ctrl(OverloadConfig::default());
+        {
+            let _g1 = c.request_begin();
+            let _g2 = c.request_begin();
+            assert_eq!(c.inflight(), 2);
+        }
+        assert_eq!(c.inflight(), 0);
+    }
+}

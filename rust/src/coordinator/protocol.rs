@@ -46,6 +46,16 @@
 //!
 //! Responses mirror the `id` and carry `ok`/`error` plus op-specific
 //! fields; routes serialize as nested `{smiles, logp?, children?}`.
+//!
+//! Overload protection adds three structured refusals and two ops. A
+//! shed request answers `{"ok": false, "code": "overloaded",
+//! "retry_after_ms": ...}` (retry after backing off); a draining server
+//! answers `{"ok": false, "code": "draining"}` (do not retry here). A
+//! plan/screen admitted under the degradation ladder carries
+//! `"degraded": true` — at full effort the key is absent, so low-load
+//! responses are byte-identical to the pre-overload protocol. The
+//! `healthz` op reports liveness/readiness (alive replicas, load score,
+//! sessions, draining flag) and `drain` starts a drain-clean shutdown.
 
 use crate::jsonx::Json;
 use crate::search::{Proposal, Route, ScreenSummary, SolveResult};
@@ -226,6 +236,31 @@ pub fn error_response(id: i64, msg: &str) -> Json {
     ])
 }
 
+/// Build an admission-control shed response: the server refused the
+/// request because it is overloaded. Unlike [`error_response`] it
+/// carries a machine-readable `code` and a client backoff hint, so
+/// callers can distinguish "retry later" from "your request is bad".
+pub fn shed_response(id: i64, retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(false)),
+        ("code", Json::str("overloaded")),
+        ("error", Json::str("server overloaded; retry later")),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
+    ])
+}
+
+/// Build a drain refusal: the server is shutting down and no longer
+/// accepts new work. There is no point retrying against this server.
+pub fn draining_response(id: i64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(false)),
+        ("code", Json::str("draining")),
+        ("error", Json::str("server draining; no new work accepted")),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +368,52 @@ mod tests {
         assert_eq!(j.get("decode_tasks").unwrap().as_i64(), Some(5));
         assert!((j.get("cache_hit_rate").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-12);
         assert!((j.get("tokens_per_solved").unwrap().as_f64().unwrap() - 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_and_draining_shapes() {
+        let s = shed_response(5, 250);
+        assert_eq!(s.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(s.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(s.get("retry_after_ms").unwrap().as_i64(), Some(250));
+        let d = draining_response(6);
+        assert_eq!(d.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(d.get("code").unwrap().as_str(), Some("draining"));
+        assert!(d.get("retry_after_ms").is_none(), "drains are not retryable");
+    }
+
+    /// Parity pin: the exact serialized bytes of an undegraded plan
+    /// response. The overload layer must not perturb low-load responses
+    /// — in particular no `degraded` key may appear unless the server
+    /// actually clamped the request. Keys serialize sorted (BTreeMap),
+    /// so this string is deterministic.
+    #[test]
+    fn undegraded_plan_response_bytes_are_pinned() {
+        use crate::search::StopReason;
+        let r = SolveResult {
+            solved: false,
+            route: None,
+            stop_reason: StopReason::Exhausted,
+            partial_route: None,
+            error: None,
+            iterations: 3,
+            expansions: 2,
+            wall_secs: 0.0,
+            decode_stats: Default::default(),
+            spec: Default::default(),
+        };
+        let j = plan_response(42, &r);
+        assert_eq!(
+            j.to_string(),
+            concat!(
+                "{\"acceptance_rate\":0,\"expansions\":2,\"id\":42,\"iterations\":3,",
+                "\"model_calls\":0,\"ok\":true,\"solved\":false,\"speculation\":",
+                "{\"applied\":0,\"cancelled\":0,\"depth_trajectory\":[],\"hits\":0,",
+                "\"max_in_flight\":0,\"submitted\":0},\"stop_reason\":\"exhausted\",",
+                "\"wall_ms\":0}"
+            )
+        );
+        assert!(j.get("degraded").is_none(), "no degraded key at full effort");
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! TCP server: thread-per-connection over the line-delimited JSON
 //! protocol, planning sessions sharing the expansion hub.
+//!
+//! Every connection and request passes through the
+//! [`OverloadController`]: connections beyond `max_sessions` and
+//! requests beyond the queue watermarks receive structured shed
+//! responses, requests admitted above the load watermark run with
+//! clamped effort (`degraded: true`), and shutdown drains — in-flight
+//! solves get a fenced deadline and return anytime partials before the
+//! listener, connection threads and session slots are all reclaimed.
 
 use super::batcher::{BatchedPolicy, ExpansionHub};
+use super::overload::{Admission, OverloadConfig, OverloadController};
 use super::protocol;
 use crate::jsonx::Json;
 use crate::metrics::Metrics;
@@ -13,13 +22,26 @@ use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One tracked connection: the stream (force-closed at shutdown so a
+/// reader blocked in `lines()` wakes), the thread handle (joined at
+/// shutdown) and a completion flag (lets the accept loop reap finished
+/// entries without joining live ones).
+struct ConnEntry {
+    stream: TcpStream,
+    join: Option<std::thread::JoinHandle<()>>,
+    done: Arc<AtomicBool>,
+}
 
 /// A running coordinator server.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<ConnEntry>>>,
+    overload: Arc<OverloadController>,
 }
 
 /// Everything a connection handler needs.
@@ -43,6 +65,10 @@ pub struct ServerCtx {
     pub default_spec_max: usize,
     /// Defaults for the `screen` op (config `planner.screen_*`).
     pub screen: ScreenDefaults,
+    /// Overload protection: admission control, the degradation ladder
+    /// and drain state. `Default` is fully inert (no session bound, no
+    /// shedding, watermarks unreachable at zero load).
+    pub overload: Arc<OverloadController>,
 }
 
 /// Server-side defaults for bulk screening jobs; requests may override
@@ -72,6 +98,10 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let overload = ctx.overload.clone();
+        let overload2 = overload.clone();
+        let conns: Arc<Mutex<Vec<ConnEntry>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns2 = conns.clone();
         let ctx = Arc::new(ctx);
         let join = std::thread::Builder::new()
             .name("coordinator-accept".into())
@@ -79,42 +109,154 @@ impl Server {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            // The listener is nonblocking; make sure the
+                            // accepted socket is not (platform-dependent
+                            // inheritance), or blocking reads would spin.
+                            let _ = stream.set_nonblocking(false);
+                            reap_finished(&conns2);
+                            if overload2.is_draining() {
+                                deny(stream, protocol::draining_response(-1));
+                                continue;
+                            }
+                            if !overload2.try_acquire_session() {
+                                ctx.metrics.inc("serve.shed.sessions", 1);
+                                deny(
+                                    stream,
+                                    protocol::shed_response(-1, overload2.cfg.retry_after_ms),
+                                );
+                                continue;
+                            }
+                            let tracked = match stream.try_clone() {
+                                Ok(t) => t,
+                                Err(_) => {
+                                    overload2.release_session();
+                                    continue;
+                                }
+                            };
                             let ctx = ctx.clone();
-                            let _ = std::thread::Builder::new()
+                            let ov = overload2.clone();
+                            let done = Arc::new(AtomicBool::new(false));
+                            let done2 = done.clone();
+                            let spawned = std::thread::Builder::new()
                                 .name("coordinator-conn".into())
                                 .spawn(move || {
                                     let _ = handle_connection(stream, &ctx);
+                                    ov.release_session();
+                                    done2.store(true, Ordering::SeqCst);
                                 });
+                            match spawned {
+                                Ok(join) => conns2
+                                    .lock()
+                                    .unwrap_or_else(|p| p.into_inner())
+                                    .push(ConnEntry { stream: tracked, join: Some(join), done }),
+                                Err(_) => overload2.release_session(),
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            std::thread::sleep(Duration::from_millis(5));
                         }
+                        // Transient accept failures (interrupted, a
+                        // connection that reset before accept completed)
+                        // must not kill the listener.
+                        Err(e) if accept_error_is_transient(e.kind()) => {
+                            ctx.metrics.inc("serve.accept_transient", 1);
+                        }
+                        // Anything else means the listener itself is gone
+                        // — exit instead of sleep-spinning on the error.
                         Err(_) => break,
                     }
                 }
             })?;
-        Ok(Server { addr, stop, join: Some(join) })
+        Ok(Server { addr, stop, join: Some(join), conns, overload })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// True once a drain was requested (the `drain` protocol op or a
+    /// local shutdown); serve loops poll this to exit cleanly.
+    pub fn draining(&self) -> bool {
+        self.overload.is_draining()
+    }
+
+    /// Drain-clean shutdown: stop accepting, fence in-flight solves'
+    /// deadlines (they return anytime partials via the budget path),
+    /// wait for them bounded by the drain window, then force-close and
+    /// join every connection thread. Idempotent via `Drop`.
     pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        let drain_deadline = self.overload.begin_drain(Instant::now());
         self.stop.store(true, Ordering::Relaxed);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        // Let in-flight requests finish writing their responses. The
+        // fence guarantees solves stop by the drain deadline; the extra
+        // slack covers response serialization and a wedged model tick,
+        // after which we force-close rather than hang shutdown forever.
+        let hard_cap = drain_deadline + Duration::from_secs(5);
+        while self.overload.inflight() > 0 && Instant::now() < hard_cap {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+        // Close first: readers blocked in `lines()` wake with EOF, so
+        // the joins below cannot hang on an idle client.
+        for entry in conns.iter() {
+            let _ = entry.stream.shutdown(std::net::Shutdown::Both);
+        }
+        for entry in conns.iter_mut() {
+            if let Some(j) = entry.join.take() {
+                let _ = j.join();
+            }
+        }
+        conns.clear();
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.do_shutdown();
     }
+}
+
+/// Accept errors that should be retried rather than treated as a dead
+/// listener.
+fn accept_error_is_transient(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Refuse a connection with one structured line, then drop it.
+fn deny(mut stream: TcpStream, response: Json) {
+    let _ = stream.write_all(response.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
+}
+
+/// Drop entries whose connection thread already finished (joining a
+/// finished thread is immediate), so long-lived servers do not grow the
+/// registry without bound.
+fn reap_finished(conns: &Mutex<Vec<ConnEntry>>) {
+    let mut conns = conns.lock().unwrap_or_else(|p| p.into_inner());
+    conns.retain_mut(|entry| {
+        if entry.done.load(Ordering::SeqCst) {
+            if let Some(j) = entry.join.take() {
+                let _ = j.join();
+            }
+            false
+        } else {
+            true
+        }
+    });
 }
 
 fn handle_connection(stream: TcpStream, ctx: &ServerCtx) -> Result<()> {
@@ -196,7 +338,45 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
             }
             m
         }
+        "healthz" => {
+            let replicas = ctx.hub.replica_stats();
+            let alive = replicas.iter().filter(|r| r.alive).count();
+            let draining = ctx.overload.is_draining();
+            Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("ok", Json::Bool(true)),
+                ("alive", Json::num(alive as f64)),
+                ("replicas", Json::num(replicas.len() as f64)),
+                ("load", Json::num(ctx.hub.load_score())),
+                ("queued", Json::num(ctx.hub.queued_requests() as f64)),
+                ("sessions", Json::num(ctx.overload.sessions() as f64)),
+                ("inflight", Json::num(ctx.overload.inflight() as f64)),
+                ("degraded", Json::Bool(ctx.overload.is_degraded())),
+                ("draining", Json::Bool(draining)),
+                // Readiness for load balancers: route traffic here only
+                // while the server accepts work and can serve a model.
+                ("ready", Json::Bool(!draining && alive > 0)),
+            ])
+        }
+        "drain" => {
+            ctx.overload.begin_drain(Instant::now());
+            ctx.metrics.inc("serve.drain", 1);
+            Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(true)),
+                ("drain_ms", Json::num(ctx.overload.cfg.drain_ms as f64)),
+            ])
+        }
         "expand" => {
+            let _guard = ctx.overload.request_begin();
+            match admit_request(ctx, false) {
+                Admission::Shed { retry_after_ms } => {
+                    return protocol::shed_response(id, retry_after_ms)
+                }
+                Admission::Draining => return protocol::draining_response(id),
+                Admission::Admit { .. } => {}
+            }
             let Some(smiles) = req.get("smiles").and_then(|x| x.as_str()) else {
                 return protocol::error_response(id, "missing smiles");
             };
@@ -214,20 +394,40 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
             }
         }
         "plan" => {
+            let _guard = ctx.overload.request_begin();
+            let degraded = match admit_request(ctx, false) {
+                Admission::Shed { retry_after_ms } => {
+                    return protocol::shed_response(id, retry_after_ms)
+                }
+                Admission::Draining => return protocol::draining_response(id),
+                Admission::Admit { degraded } => degraded,
+            };
             let Some(smiles) = req.get("smiles").and_then(|x| x.as_str()) else {
                 return protocol::error_response(id, "missing smiles");
             };
-            let limits = limits_from_req(&req, &ctx.default_limits);
+            let mut limits = limits_from_req(&req, &ctx.default_limits);
+            // Every admitted solve shares the drain fence, so a later
+            // shutdown tightens its deadline mid-flight.
+            limits.fence = ctx.overload.fence();
             let algo = req
                 .get("algo")
                 .and_then(|x| x.as_str())
                 .unwrap_or(&ctx.default_algo)
                 .to_string();
-            let bw = req
+            let mut bw = req
                 .get("beam_width")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(ctx.default_beam_width);
-            let (sd, sd_auto) = spec_from_req(&req, ctx);
+            let (mut sd, mut sd_auto) = spec_from_req(&req, ctx);
+            if degraded {
+                let (dbw, dsd, dsd_auto, ddl) =
+                    degrade_clamps(&ctx.overload.cfg, bw, limits.deadline);
+                bw = dbw;
+                sd = dsd;
+                sd_auto = dsd_auto;
+                limits.deadline = ddl;
+                ctx.metrics.inc("serve.degrade.plans", 1);
+            }
             let policy = BatchedPolicy::new(ctx.hub.clone());
             // Retro* plans ride the async path: per-query expansion
             // futures into the hub's scheduler. spec_depth = 1 keeps
@@ -256,7 +456,15 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                     ctx.metrics.inc("plan.spec_submitted", r.spec.groups_submitted);
                     ctx.metrics.inc("plan.spec_cancelled", r.spec.groups_cancelled);
                     ctx.metrics.inc("plan.spec_hits", r.spec.spec_hits);
-                    protocol::plan_response(id, &r)
+                    let mut resp = protocol::plan_response(id, &r);
+                    // The key is present only on degraded admissions, so
+                    // full-effort responses stay byte-identical (pinned).
+                    if degraded {
+                        if let Json::Obj(ref mut o) = resp {
+                            o.insert("degraded".into(), Json::Bool(true));
+                        }
+                    }
+                    resp
                 }
                 Err(e) => protocol::error_response(id, &format!("{e:#}")),
             }
@@ -269,6 +477,46 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
         ),
         other => protocol::error_response(id, &format!("unknown op {other:?}")),
     }
+}
+
+/// One admission decision against the hub's live queue probes; bumps
+/// the serving gauges and shed/degrade counters as a side effect.
+/// `batch` marks the batch/screen class, which sheds first.
+fn admit_request(ctx: &ServerCtx, batch: bool) -> Admission {
+    let queued = ctx.hub.queued_requests();
+    let load = ctx.hub.load_score();
+    ctx.metrics.gauge_set("serve.queue_depth", queued as u64);
+    ctx.metrics.gauge_set("serve.load_x1000", (load * 1000.0) as u64);
+    let adm = ctx.overload.admit(load, queued, batch);
+    match adm {
+        Admission::Shed { .. } => ctx
+            .metrics
+            .inc(if batch { "serve.shed.batch" } else { "serve.shed.interactive" }, 1),
+        Admission::Draining => ctx.metrics.inc("serve.shed.draining", 1),
+        Admission::Admit { .. } => {}
+    }
+    adm
+}
+
+/// Effort clamps for a degraded admission: beam width down to the
+/// configured floor, speculation back to sequential, and (when
+/// `degraded_deadline_ms` is set) a tighter implicit deadline. Pure —
+/// the ladder's effect on NEW requests is unit-testable without a hub,
+/// and in-flight requests are untouched by construction (clamps apply
+/// only at admission). Returns `(beam_width, spec_depth, spec_auto,
+/// deadline)`.
+fn degrade_clamps(
+    cfg: &OverloadConfig,
+    bw: usize,
+    deadline: Duration,
+) -> (usize, usize, bool, Duration) {
+    let bw = bw.min(cfg.degraded_beam.max(1)).max(1);
+    let deadline = if cfg.degraded_deadline_ms > 0 {
+        deadline.min(Duration::from_millis(cfg.degraded_deadline_ms))
+    } else {
+        deadline
+    };
+    (bw, 1, false, deadline)
 }
 
 /// Apply a request's shared per-target limit overrides onto the server
@@ -322,6 +570,14 @@ fn run_screen(line: &str, ctx: &ServerCtx, writer: &mut dyn Write) -> Json {
     };
     let id = req.get("id").and_then(|x| x.as_i64()).unwrap_or(-1);
     ctx.metrics.inc("op.screen", 1);
+    // Screening is batch-class: it sheds at half the interactive
+    // threshold and degrades under the same ladder.
+    let _guard = ctx.overload.request_begin();
+    let degraded = match admit_request(ctx, true) {
+        Admission::Shed { retry_after_ms } => return protocol::shed_response(id, retry_after_ms),
+        Admission::Draining => return protocol::draining_response(id),
+        Admission::Admit { degraded } => degraded,
+    };
     let Some(arr) = req.get("targets").and_then(|t| t.as_arr()) else {
         return protocol::error_response(id, "missing targets");
     };
@@ -347,19 +603,31 @@ fn run_screen(line: &str, ctx: &ServerCtx, writer: &mut dyn Write) -> Json {
         .and_then(|x| x.as_usize())
         .map(|n| n as u64)
         .unwrap_or(ctx.screen.job_decode_tokens);
-    let (sd, sd_auto) = spec_from_req(&req, ctx);
+    let (mut sd, mut sd_auto) = spec_from_req(&req, ctx);
+    let mut beam_width = req
+        .get("beam_width")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(ctx.default_beam_width);
+    let mut limits = limits_from_req(&req, &ctx.default_limits);
+    limits.fence = ctx.overload.fence();
+    if degraded {
+        let (dbw, dsd, dsd_auto, ddl) =
+            degrade_clamps(&ctx.overload.cfg, beam_width, limits.deadline);
+        beam_width = dbw;
+        sd = dsd;
+        sd_auto = dsd_auto;
+        limits.deadline = ddl;
+        ctx.metrics.inc("serve.degrade.screens", 1);
+    }
     let cfg = ScreenConfig {
         concurrency,
         job_deadline: (job_deadline_ms > 0)
             .then(|| std::time::Duration::from_millis(job_deadline_ms)),
         job_decode_tokens,
-        beam_width: req
-            .get("beam_width")
-            .and_then(|x| x.as_usize())
-            .unwrap_or(ctx.default_beam_width),
+        beam_width,
         spec_depth: sd,
         spec_adaptive: sd_auto,
-        limits: limits_from_req(&req, &ctx.default_limits),
+        limits,
     };
     let job = ScreeningJob::new(cfg);
     let mut write_ok = true;
@@ -376,13 +644,22 @@ fn run_screen(line: &str, ctx: &ServerCtx, writer: &mut dyn Write) -> Json {
         job.run(&ctx.hub, &ctx.stock, &targets, &ctx.metrics, &mut on_result)
     });
     match res {
-        Ok(s) => protocol::screen_summary_response(id, &s),
+        Ok(s) => {
+            let mut resp = protocol::screen_summary_response(id, &s);
+            if degraded {
+                if let Json::Obj(ref mut o) = resp {
+                    o.insert("degraded".into(), Json::Bool(true));
+                }
+            }
+            resp
+        }
         Err(e) => protocol::error_response(id, &format!("{e:#}")),
     }
 }
 
 /// Blocking client helper (used by examples/tests/benches).
 pub struct Client {
+    addr: std::net::SocketAddr,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     next_id: i64,
@@ -392,7 +669,113 @@ impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+        Ok(Client { addr, reader: BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    /// As [`Client::connect`], with up to `attempts` tries under
+    /// exponential backoff plus deterministic jitter (seeded from the
+    /// target port so concurrent clients do not retry in lockstep).
+    /// Covers transient connect failures AND session-slot sheds: a
+    /// server that answers `code:"overloaded"` on accept closes the
+    /// connection, which surfaces here as an early EOF on first use —
+    /// so the shed line is consumed eagerly and converted to a retry.
+    pub fn connect_retry(addr: std::net::SocketAddr, attempts: u32) -> Result<Client> {
+        let mut rng = crate::util::Rng::new(0xC0FFEE ^ addr.port() as u64);
+        let mut backoff_ms = 10u64;
+        let mut last_err: Option<anyhow::Error> = None;
+        for _ in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(mut c) => {
+                    // A sheds-on-accept server writes one refusal line
+                    // before closing; probe for it without blocking a
+                    // healthy connection (ping is answered by every
+                    // non-shed server).
+                    match c.call(Json::obj(vec![("op", Json::str("ping"))])) {
+                        Ok(resp) => {
+                            let code = resp.get("code").and_then(|x| x.as_str());
+                            match code {
+                                Some("overloaded") => {
+                                    let wait = resp
+                                        .get("retry_after_ms")
+                                        .and_then(|x| x.as_usize())
+                                        .unwrap_or(backoff_ms as usize)
+                                        as u64;
+                                    last_err = Some(anyhow::anyhow!("connection shed: overloaded"));
+                                    std::thread::sleep(Duration::from_millis(
+                                        wait.min(1_000) + rng.gen_range(10) as u64,
+                                    ));
+                                }
+                                Some("draining") => {
+                                    anyhow::bail!("server draining; not retryable here")
+                                }
+                                _ => return Ok(c),
+                            }
+                        }
+                        Err(e) => {
+                            last_err = Some(e);
+                            std::thread::sleep(Duration::from_millis(
+                                backoff_ms + rng.gen_range(10) as u64,
+                            ));
+                        }
+                    }
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(
+                        backoff_ms + rng.gen_range(10) as u64,
+                    ));
+                }
+            }
+            backoff_ms = (backoff_ms * 2).min(500);
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("connect failed")))
+    }
+
+    /// As [`Client::call`], with bounded resilience: transport errors
+    /// reconnect and retry under jittered exponential backoff, and an
+    /// `overloaded` reply honors its `retry_after_ms` hint. A
+    /// `draining` reply returns as-is (retrying the same server is
+    /// pointless — it is shutting down), as does any other structured
+    /// answer.
+    pub fn call_retry(&mut self, req: Json, max_retries: u32) -> Result<Json> {
+        let mut rng = crate::util::Rng::new(0xBACC0FF ^ self.addr.port() as u64);
+        let mut backoff_ms = 10u64;
+        let mut attempt = 0u32;
+        loop {
+            match self.call(req.clone()) {
+                Ok(resp) => {
+                    let code = resp.get("code").and_then(|x| x.as_str());
+                    if code == Some("overloaded") && attempt < max_retries {
+                        attempt += 1;
+                        let wait = resp
+                            .get("retry_after_ms")
+                            .and_then(|x| x.as_usize())
+                            .unwrap_or(backoff_ms as usize) as u64;
+                        std::thread::sleep(Duration::from_millis(
+                            wait.min(1_000) + rng.gen_range(10) as u64,
+                        ));
+                        backoff_ms = (backoff_ms * 2).min(500);
+                        continue;
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    if attempt >= max_retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(
+                        backoff_ms + rng.gen_range(10) as u64,
+                    ));
+                    backoff_ms = (backoff_ms * 2).min(500);
+                    // Reconnect; a dead server fails here and the next
+                    // loop iteration either retries or gives up.
+                    if let Ok(fresh) = Client::connect(self.addr) {
+                        *self = fresh;
+                    }
+                }
+            }
+        }
     }
 
     /// Send a request object (id is filled in) and wait for the reply.
@@ -478,6 +861,7 @@ mod tests {
             default_spec_adaptive: false,
             default_spec_max: 8,
             screen: ScreenDefaults::default(),
+            overload: Arc::new(OverloadController::default()),
         }
     }
 
@@ -636,6 +1020,129 @@ mod tests {
         let r = handle_line("{\"id\":1,\"op\":\"screen\",\"targets\":[\"CCO\"]}", &ctx);
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
         assert!(r.get("error").unwrap().as_str().unwrap().contains("stream"));
+    }
+
+    #[test]
+    fn degrade_clamps_are_pure_and_floor_at_one() {
+        let cfg =
+            OverloadConfig { degraded_beam: 2, degraded_deadline_ms: 100, ..Default::default() };
+        let (bw, sd, sd_auto, ddl) = degrade_clamps(&cfg, 8, Duration::from_millis(500));
+        assert_eq!(bw, 2, "beam clamps to the configured floor");
+        assert_eq!(sd, 1, "speculation collapses to sequential");
+        assert!(!sd_auto);
+        assert_eq!(ddl, Duration::from_millis(100), "deadline tightens");
+        // Requests already under the floor keep their own settings.
+        let (bw, _, _, ddl) = degrade_clamps(&cfg, 1, Duration::from_millis(50));
+        assert_eq!(bw, 1);
+        assert_eq!(ddl, Duration::from_millis(50), "never loosened");
+        // degraded_deadline_ms = 0 keeps the request deadline.
+        let cfg = OverloadConfig { degraded_beam: 1, ..Default::default() };
+        let (bw, _, _, ddl) = degrade_clamps(&cfg, 4, Duration::from_secs(5));
+        assert_eq!(bw, 1);
+        assert_eq!(ddl, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn healthz_reports_readiness() {
+        let ctx = test_ctx();
+        let r = handle_line("{\"id\":1,\"op\":\"healthz\"}", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert_eq!(r.get("ready").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("draining").unwrap().as_bool(), Some(false));
+        assert_eq!(r.get("degraded").unwrap().as_bool(), Some(false));
+        assert!(r.get("alive").unwrap().as_usize().unwrap() >= 1);
+        assert!(r.get("load").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn drain_op_refuses_new_plans_but_answers_probes() {
+        let ctx = test_ctx();
+        let r = handle_line("{\"id\":1,\"op\":\"drain\"}", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert_eq!(r.get("draining").unwrap().as_bool(), Some(true));
+        // New plans are refused with the draining code...
+        let r = handle_line("{\"id\":2,\"op\":\"plan\",\"smiles\":\"CC(=O)NC\"}", &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(r.get("code").unwrap().as_str(), Some("draining"));
+        // ...while probes keep working, and healthz flips not-ready.
+        let r = handle_line("{\"id\":3,\"op\":\"ping\"}", &ctx);
+        assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+        let r = handle_line("{\"id\":4,\"op\":\"healthz\"}", &ctx);
+        assert_eq!(r.get("draining").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("ready").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn degraded_admission_marks_the_plan_response() {
+        let mut ctx = test_ctx();
+        // Watermarks that an idle hub (load = 0) can never leave: high
+        // at 0.0 trips immediately, low below 0 never recovers — so the
+        // server-side clamp path runs deterministically in-process.
+        ctx.overload = Arc::new(OverloadController::new(OverloadConfig {
+            degrade_high: 0.0,
+            degrade_low: -1.0,
+            degraded_deadline_ms: 5_000,
+            ..Default::default()
+        }));
+        let r = handle_line(
+            "{\"id\":1,\"op\":\"plan\",\"smiles\":\"CC(=O)NC\",\"deadline_ms\":200,\
+             \"beam_width\":4,\"spec_depth\":4}",
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert_eq!(r.get("degraded").unwrap().as_bool(), Some(true));
+        // Speculation was clamped to sequential for the NEW request.
+        let max_in_flight = r
+            .get("speculation")
+            .and_then(|s| s.get("max_in_flight"))
+            .and_then(|x| x.as_usize())
+            .unwrap();
+        assert!(max_in_flight <= 1, "degraded plans run sequentially: {r:?}");
+        assert_eq!(ctx.metrics.counter("serve.degrade.plans"), 1);
+    }
+
+    #[test]
+    fn undegraded_responses_carry_no_degraded_key() {
+        let ctx = test_ctx();
+        let r = handle_line(
+            "{\"id\":1,\"op\":\"plan\",\"smiles\":\"CC(=O)NC\",\"deadline_ms\":200}",
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert!(
+            r.get("degraded").is_none(),
+            "full-effort responses must stay byte-identical to the pre-overload protocol"
+        );
+        assert_eq!(ctx.metrics.counter("serve.degrade.plans"), 0);
+    }
+
+    #[test]
+    fn shutdown_with_idle_connected_clients_returns_promptly() {
+        let ctx = test_ctx();
+        let server = Server::start("127.0.0.1:0", ctx).unwrap();
+        let addr = server.addr();
+        // Two idle clients block in the server's line reader; shutdown
+        // must force-close and join their threads, not hang.
+        let _c1 = Client::connect(addr).unwrap();
+        let _c2 = Client::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // let accepts land
+        let t0 = Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "drain-clean shutdown must not wait on idle readers"
+        );
+        // The listener is gone: new connects are refused (or reset).
+        std::thread::sleep(Duration::from_millis(20));
+        let mut c = match TcpStream::connect(addr) {
+            Err(_) => return, // refused outright — fine
+            Ok(s) => s,
+        };
+        // If the OS still accepts (TIME_WAIT edge), any IO must fail.
+        let _ = c.write_all(b"{\"op\":\"ping\"}\n");
+        let mut buf = String::new();
+        let n = BufReader::new(c).read_line(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "no server behind the socket after shutdown: {buf:?}");
     }
 
     #[test]

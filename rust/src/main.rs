@@ -1,15 +1,24 @@
 //! `retroserve` CLI — the leader entrypoint.
 //!
 //! ```text
-//! retroserve serve   [--config FILE] [--listen ADDR] [--decoder NAME] ...
+//! retroserve serve   [--config FILE] [--listen ADDR] [--decoder NAME]
+//!                    [--max-sessions N] [--max-queue N] [--drain-ms N] ...
 //! retroserve plan    --smiles S [--algo retrostar|dfs] [--decoder NAME]
 //!                    [--deadline-ms N] [--beam-width N] [--artifacts DIR]
+//!                    [--connect ADDR]
 //! retroserve screen  --targets FILE [--out FILE] [--concurrency N]
 //!                    [--job-deadline-ms N] [--job-max-decode-tokens N]
 //!                    [--deadline-ms N] [--decoder NAME] [--artifacts DIR]
+//!                    [--connect ADDR]
 //! retroserve expand  --smiles S [--decoder NAME] [--k N] [--artifacts DIR]
 //! retroserve info    [--artifacts DIR]
 //! ```
+//!
+//! With `--connect ADDR`, `plan` and `screen` skip loading artifacts and
+//! act as protocol clients against a running `retroserve serve`, retrying
+//! through transient faults and `overloaded` sheds (honouring the
+//! server's `retry_after_ms` hint) and surfacing `draining` / `degraded`
+//! status on stderr.
 //!
 //! `screen` reads one SMILES per line (blank lines and `#` comments
 //! skipped), plans the whole list as one batch-class job over a shared
@@ -23,9 +32,10 @@ use anyhow::{bail, Context, Result};
 use retroserve::config::{Config, ServeConfig};
 use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
 use retroserve::coordinator::protocol;
-use retroserve::coordinator::server::{ScreenDefaults, Server, ServerCtx};
-use retroserve::coordinator::BatchedPolicy;
+use retroserve::coordinator::server::{Client, ScreenDefaults, Server, ServerCtx};
+use retroserve::coordinator::{BatchedPolicy, OverloadConfig, OverloadController};
 use retroserve::decoding::make_decoder;
+use retroserve::jsonx::Json;
 use retroserve::metrics::Metrics;
 use retroserve::model::{PooledModel, ReplicaPool};
 use retroserve::runtime::server::{SharedModel, SupervisorConfig};
@@ -106,13 +116,18 @@ fn main() -> Result<()> {
                  retroserve serve  [--config FILE] [--listen ADDR] \
                  [--decoder bs|bs-opt|hsbs|msbs]\n\
                  [--shards N] [--replicas N] [--steal true|false]\n\
+                 [--max-sessions N] [--max-queue N] [--drain-ms N] \
+                 [--retry-after-ms N]\n\
+                 [--degrade-high X] [--degrade-low X] [--degraded-beam N] \
+                 [--degraded-deadline-ms N]\n\
                  retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] \
                  [--deadline-ms N]\n\
                  [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
-                 [--max-expansions N] [--max-decode-tokens N]\n\
+                 [--max-expansions N] [--max-decode-tokens N] [--connect ADDR]\n\
                  retroserve screen --targets FILE [--out FILE] [--concurrency N]\n\
                  [--job-deadline-ms N] [--job-max-decode-tokens N] [--deadline-ms N]\n\
-                 [--decoder NAME] [--shards N] [--replicas N] [--artifacts DIR]\n\
+                 [--decoder NAME] [--shards N] [--replicas N] [--artifacts DIR] \
+                 [--connect ADDR]\n\
                  retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR]\n\
                  retroserve info   [--artifacts DIR]"
             );
@@ -146,6 +161,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             "screen-job-decode-tokens" => {
                 cfg.apply_override("planner.screen_job_decode_tokens", v)?
+            }
+            "max-sessions" => cfg.apply_override("server.max_sessions", v)?,
+            "max-queue" => cfg.apply_override("server.max_queue", v)?,
+            "drain-ms" => cfg.apply_override("server.drain_ms", v)?,
+            "retry-after-ms" => cfg.apply_override("server.retry_after_ms", v)?,
+            "degrade-high" => cfg.apply_override("server.degrade_high", v)?,
+            "degrade-low" => cfg.apply_override("server.degrade_low", v)?,
+            "degraded-beam" => cfg.apply_override("planner.degraded_beam", v)?,
+            "degraded-deadline-ms" => {
+                cfg.apply_override("planner.degraded_deadline_ms", v)?
             }
             "config" => {}
             other => cfg.apply_override(other, v)?,
@@ -199,17 +224,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 job_deadline_ms: sc.screen_job_deadline_ms,
                 job_decode_tokens: sc.screen_job_decode_tokens,
             },
+            overload: Arc::new(OverloadController::new(OverloadConfig {
+                max_sessions: sc.max_sessions,
+                max_queue: sc.max_queue,
+                drain_ms: sc.drain_ms,
+                retry_after_ms: sc.retry_after_ms,
+                degrade_high: sc.degrade_high,
+                degrade_low: sc.degrade_low,
+                degraded_beam: sc.degraded_beam,
+                degraded_deadline_ms: sc.degraded_deadline_ms,
+            })),
         },
     )?;
     eprintln!("retroserve: ready on {}", server.addr());
-    // serve until killed
+    // Serve until killed, or until a `drain` protocol op flips the
+    // server into draining — then run the drain-clean shutdown (join
+    // the accept loop, wait out in-flight solves, close connections)
+    // and exit so process managers observe a real termination.
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if server.draining() {
+            eprintln!("retroserve: drain requested; shutting down clean");
+            server.shutdown();
+            return Ok(());
+        }
     }
+}
+
+/// Turn a structured refusal (`ok:false`) into a descriptive error,
+/// surfacing the shed / draining codes and the server's retry hint.
+fn refusal_error(r: &retroserve::jsonx::Json) -> anyhow::Error {
+    let code = r.get("code").and_then(|x| x.as_str()).unwrap_or("error");
+    let msg = r.get("error").and_then(|x| x.as_str()).unwrap_or("request failed");
+    match code {
+        "overloaded" => {
+            let hint = r.get("retry_after_ms").and_then(|x| x.as_usize()).unwrap_or(0);
+            anyhow::anyhow!("server shed the request: {msg} (retry after {hint} ms)")
+        }
+        "draining" => anyhow::anyhow!("server is draining: {msg}"),
+        _ => anyhow::anyhow!("request failed ({code}): {msg}"),
+    }
+}
+
+/// `plan --connect ADDR`: speak the wire protocol to a running
+/// `retroserve serve` instead of loading artifacts locally. Transient
+/// faults and `overloaded` sheds are retried with jittered backoff
+/// (honouring `retry_after_ms`); `draining` refusals and degraded-mode
+/// answers are surfaced instead of silently absorbed.
+fn plan_remote(addr: &str, smiles: &str, args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr =
+        addr.parse().with_context(|| format!("bad --connect address {addr:?}"))?;
+    let mut fields = vec![("op", Json::str("plan")), ("smiles", Json::str(smiles))];
+    if let Some(a) = args.flags.get("algo") {
+        fields.push(("algo", Json::str(a.clone())));
+    }
+    for (flag, key) in [
+        ("deadline-ms", "deadline_ms"),
+        ("beam-width", "beam_width"),
+        ("max-depth", "max_depth"),
+        ("max-expansions", "max_expansions"),
+        ("max-decode-tokens", "max_decode_tokens"),
+        ("k", "k"),
+    ] {
+        if let Some(v) = args.flags.get(flag) {
+            fields.push((key, Json::num(v.parse::<f64>()?)));
+        }
+    }
+    if let Some(sd) = args.flags.get("spec-depth") {
+        if sd == "auto" {
+            fields.push(("spec_depth", Json::str("auto")));
+        } else {
+            fields.push(("spec_depth", Json::num(sd.parse::<f64>()?)));
+        }
+    }
+    let mut client = Client::connect_retry(addr, 5)?;
+    let r = client.call_retry(Json::obj(fields), 5)?;
+    if r.get("ok").and_then(|x| x.as_bool()) != Some(true) {
+        return Err(refusal_error(&r));
+    }
+    if r.get("degraded").and_then(|x| x.as_bool()) == Some(true) {
+        eprintln!("plan: answered in DEGRADED mode (server under load; reduced effort)");
+    }
+    eprintln!(
+        "plan: solved={} stop={} iterations={} expansions={} wall={}ms",
+        r.get("solved").and_then(|x| x.as_bool()).unwrap_or(false),
+        r.get("stop_reason").and_then(|x| x.as_str()).unwrap_or("?"),
+        r.get("iterations").and_then(|x| x.as_usize()).unwrap_or(0),
+        r.get("expansions").and_then(|x| x.as_usize()).unwrap_or(0),
+        r.get("wall_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
+    );
+    println!("{r}");
+    Ok(())
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let smiles = args.flags.get("smiles").context("--smiles required")?;
+    if let Some(addr) = args.flags.get("connect") {
+        return plan_remote(addr, smiles, args);
+    }
     let artifacts = args.flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
     let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
     let algo = args.flags.get("algo").map(String::as_str).unwrap_or("retrostar");
@@ -297,6 +409,61 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `screen --connect ADDR`: run the whole target list as one
+/// batch-class `screen` op against a running server, streaming each
+/// per-target line to `--out` (or stdout) as it arrives. Batch-class
+/// traffic sheds first under overload, so the terminal line may be a
+/// structured refusal — surfaced with the retry hint, never a hang.
+fn screen_remote(addr: &str, targets: &[String], args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr =
+        addr.parse().with_context(|| format!("bad --connect address {addr:?}"))?;
+    let mut fields = vec![
+        ("op", Json::str("screen")),
+        ("targets", Json::Arr(targets.iter().map(|t| Json::str(t.clone())).collect())),
+    ];
+    for (flag, key) in [
+        ("concurrency", "concurrency"),
+        ("job-deadline-ms", "job_deadline_ms"),
+        ("job-max-decode-tokens", "job_max_decode_tokens"),
+        ("deadline-ms", "deadline_ms"),
+        ("beam-width", "beam_width"),
+        ("max-expansions", "max_expansions"),
+        ("max-decode-tokens", "max_decode_tokens"),
+    ] {
+        if let Some(v) = args.flags.get(flag) {
+            fields.push((key, Json::num(v.parse::<f64>()?)));
+        }
+    }
+    let mut client = Client::connect_retry(addr, 5)?;
+    // The stream is one job; a mid-stream retry would re-run it, so
+    // only the connection is retried — refusals surface structurally.
+    let lines = client.call_stream(Json::obj(fields))?;
+    let mut out: Box<dyn Write> = match args.flags.get("out") {
+        Some(p) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(p).with_context(|| format!("creating {p}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    for j in &lines {
+        writeln!(out, "{j}")?;
+    }
+    out.flush()?;
+    let last = lines.last().context("empty response stream")?;
+    if last.get("ok").and_then(|x| x.as_bool()) == Some(false) {
+        return Err(refusal_error(last));
+    }
+    if last.get("degraded").and_then(|x| x.as_bool()) == Some(true) {
+        eprintln!("screen: ran in DEGRADED mode (server under load; reduced effort)");
+    }
+    eprintln!(
+        "screen: {}/{} solved in {:.2}s (remote)",
+        last.get("solved").and_then(|x| x.as_usize()).unwrap_or(0),
+        last.get("targets").and_then(|x| x.as_usize()).unwrap_or(0),
+        last.get("wall_ms").and_then(|x| x.as_f64()).unwrap_or(0.0) / 1e3,
+    );
+    Ok(())
+}
+
 fn cmd_screen(args: &Args) -> Result<()> {
     let path = args.flags.get("targets").context("--targets FILE required")?;
     let text =
@@ -309,6 +476,9 @@ fn cmd_screen(args: &Args) -> Result<()> {
         .collect();
     if targets.is_empty() {
         bail!("no targets in {path} (one SMILES per line)");
+    }
+    if let Some(addr) = args.flags.get("connect") {
+        return screen_remote(addr, &targets, args);
     }
     let artifacts = args.flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
     let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");

@@ -30,6 +30,33 @@ pub use routes::Route;
 pub use screen::{ScreenConfig, ScreenSummary, ScreeningJob, TargetResult};
 pub use stock::Stock;
 
+/// A shared, externally-settable deadline override. Cloning shares the
+/// underlying cell, so a serving layer can hand every in-flight solve a
+/// clone of one fence and later pull the rug from all of them at once
+/// (drain-clean shutdown): `set` installs an [`Instant`] after which
+/// every [`Budget`] carrying the fence reports `StopReason::Deadline`
+/// and returns its anytime partial. Repeated `set` calls keep the
+/// *earliest* instant, so a double drain can only tighten the deadline.
+/// The default fence is unset and a pure no-op.
+#[derive(Clone, Debug, Default)]
+pub struct DeadlineFence {
+    at: std::sync::Arc<std::sync::Mutex<Option<std::time::Instant>>>,
+}
+
+impl DeadlineFence {
+    pub fn set(&self, at: std::time::Instant) {
+        let mut cell = self.at.lock().unwrap_or_else(|p| p.into_inner());
+        *cell = Some(match *cell {
+            Some(prev) => prev.min(at),
+            None => at,
+        });
+    }
+
+    pub fn get(&self) -> Option<std::time::Instant> {
+        *self.at.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
 /// Search-algorithm-independent limits (paper: 5 s / 15 s deadline,
 /// depth <= 5, <= 35,000 iterations; ours are configurable since the
 /// testbed is a single CPU core).
@@ -49,6 +76,9 @@ pub struct SearchLimits {
     /// selection cadence — the token-budget knob of the request
     /// [`Budget`].
     pub max_decode_tokens: u64,
+    /// External deadline override shared with the serving layer (clones
+    /// of these limits share the same fence). Unset by default.
+    pub fence: DeadlineFence,
 }
 
 impl Default for SearchLimits {
@@ -60,6 +90,7 @@ impl Default for SearchLimits {
             expansions_per_step: 10,
             max_expansions: 0,
             max_decode_tokens: 0,
+            fence: DeadlineFence::default(),
         }
     }
 }
@@ -107,15 +138,19 @@ impl std::fmt::Display for StopReason {
 /// the optional work caps from [`SearchLimits`], anchored at solve
 /// start. Both search loops consult it once per absorbed expansion
 /// group (the selection cadence), and the pipelined loop additionally
-/// passes `deadline_at` into every blocking wait so an expired request
-/// wakes within one completion-queue timeout rather than hanging on a
-/// wedged model call.
-#[derive(Clone, Copy, Debug)]
+/// passes [`Budget::deadline`] into every blocking wait so an expired
+/// request wakes within one completion-queue timeout rather than
+/// hanging on a wedged model call. The effective deadline is the
+/// *earlier* of the request's own deadline and the shared
+/// [`DeadlineFence`], so a serving-layer drain tightens every in-flight
+/// solve without touching planner state.
+#[derive(Clone, Debug)]
 pub struct Budget {
     pub deadline_at: std::time::Instant,
     pub max_iterations: usize,
     pub max_expansions: usize,
     pub max_decode_tokens: u64,
+    fence: DeadlineFence,
 }
 
 impl Budget {
@@ -125,6 +160,17 @@ impl Budget {
             max_iterations: limits.max_iterations,
             max_expansions: limits.max_expansions,
             max_decode_tokens: limits.max_decode_tokens,
+            fence: limits.fence.clone(),
+        }
+    }
+
+    /// Effective deadline: the request deadline clamped by the shared
+    /// fence (if set). Re-read on every call because the fence can be
+    /// tightened mid-solve by a drain.
+    pub fn deadline(&self) -> std::time::Instant {
+        match self.fence.get() {
+            Some(fenced) => self.deadline_at.min(fenced),
+            None => self.deadline_at,
         }
     }
 
@@ -137,7 +183,7 @@ impl Budget {
         expansions: usize,
         decode_tokens: u64,
     ) -> Option<StopReason> {
-        if std::time::Instant::now() >= self.deadline_at {
+        if std::time::Instant::now() >= self.deadline() {
             return Some(StopReason::Deadline);
         }
         if iterations >= self.max_iterations {
@@ -213,4 +259,61 @@ pub trait Planner {
         stock: &Stock,
         limits: &SearchLimits,
     ) -> Result<SolveResult>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn fence_keeps_the_earliest_instant() {
+        let fence = DeadlineFence::default();
+        assert!(fence.get().is_none());
+        let now = Instant::now();
+        fence.set(now + Duration::from_secs(10));
+        fence.set(now + Duration::from_secs(2));
+        assert_eq!(fence.get(), Some(now + Duration::from_secs(2)));
+        // A later set cannot loosen an installed fence.
+        fence.set(now + Duration::from_secs(30));
+        assert_eq!(fence.get(), Some(now + Duration::from_secs(2)));
+    }
+
+    #[test]
+    fn fence_is_shared_across_limit_clones() {
+        let limits = SearchLimits::default();
+        let cloned = limits.clone();
+        let at = Instant::now() + Duration::from_secs(1);
+        limits.fence.set(at);
+        assert_eq!(cloned.fence.get(), Some(at), "clones share the cell");
+    }
+
+    #[test]
+    fn budget_deadline_clamps_to_the_fence() {
+        let limits = SearchLimits {
+            deadline: Duration::from_secs(60),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let budget = Budget::start(t0, &limits);
+        assert_eq!(budget.deadline(), budget.deadline_at);
+        assert!(budget.exceeded(0, 0, 0).is_none());
+        // Fence in the past: the very next check reports Deadline, even
+        // for a budget captured before the fence was set.
+        limits.fence.set(t0);
+        assert_eq!(budget.deadline(), t0);
+        assert_eq!(budget.exceeded(0, 0, 0), Some(StopReason::Deadline));
+    }
+
+    #[test]
+    fn fence_later_than_the_deadline_is_inert() {
+        let limits = SearchLimits {
+            deadline: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let budget = Budget::start(t0, &limits);
+        limits.fence.set(t0 + Duration::from_secs(120));
+        assert_eq!(budget.deadline(), budget.deadline_at);
+    }
 }

@@ -650,7 +650,7 @@ impl RetroStar {
                 let refs: Vec<&str> = smiles.iter().map(String::as_str).collect();
                 let speculative = !inflight.is_empty();
                 let submitted =
-                    policy.submit_deadline(&refs, limits.expansions_per_step, budget.deadline_at);
+                    policy.submit_deadline(&refs, limits.expansions_per_step, budget.deadline());
                 let handle = match submitted {
                     Ok(h) => h,
                     Err(e) => {
@@ -688,7 +688,7 @@ impl RetroStar {
                     if found.is_some() {
                         break;
                     }
-                    if std::time::Instant::now() >= budget.deadline_at {
+                    if std::time::Instant::now() >= budget.deadline() {
                         break 'search (None, StopReason::Deadline); // deadline while waiting
                     }
                     // Block on completion events until any group could
@@ -702,7 +702,7 @@ impl RetroStar {
                         .handle
                         .as_mut()
                         .expect("pending handle")
-                        .wait_event(budget.deadline_at);
+                        .wait_event(budget.deadline());
                 }
                 match found.expect("loop exits with a completion") {
                     (i, Ok(r)) => {

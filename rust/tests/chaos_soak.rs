@@ -18,11 +18,21 @@
 //!    the hub must still answer, and waiters, decode tasks, scheduler
 //!    slots, live device memory and decoder-state claims must all
 //!    drain to zero — no leak under any schedule.
+//! 4. **Overload storms** — a connection flood over the real TCP
+//!    server while the model rides a correlated latency-storm window
+//!    AND a replica dies mid-storm. Every request must get a terminal
+//!    structured answer (a planner stop_reason, an `overloaded` shed
+//!    with its retry hint, or a `draining` refusal), `healthz` must
+//!    keep answering, and the hub must drain to zero — both after the
+//!    storm and after a mid-storm `drain` shutdown.
 
 use retroserve::benchkit::{ChaosConfig, ChaosModel, InstrumentedModel};
 use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::overload::{OverloadConfig, OverloadController};
+use retroserve::coordinator::server::{Client, Server, ServerCtx};
 use retroserve::coordinator::BatchedPolicy;
 use retroserve::decoding::beam::BeamSearch;
+use retroserve::jsonx::Json;
 use retroserve::metrics::Metrics;
 use retroserve::model::mock::{MockConfig, MockModel};
 use retroserve::model::{PooledModel, ReplicaPool, StepModel};
@@ -418,6 +428,260 @@ fn replica_death_past_max_restarts_fails_over_to_the_survivor() {
 // ---------------------------------------------------------------------------
 // The soak: randomized fault schedules, mixed waiter behaviours.
 // ---------------------------------------------------------------------------
+
+// ---------------------------------------------------------------------------
+// Overload storms: connection floods over the real TCP server, with
+// latency spikes and a replica death mid-storm. CI hard gate.
+// ---------------------------------------------------------------------------
+
+/// Full TCP stack for the overload storms. Replica 0 is doomed (its
+/// first encode panics and every rebuild is refused, so it dies past
+/// max_restarts mid-storm); replica 1 is the healthy instrumented
+/// model carrying the leak probes, behind a correlated storm window
+/// that slows a sustained stretch of calls — real queueing builds
+/// while the flood runs.
+fn storm_server(
+    overload: OverloadConfig,
+    live: Arc<AtomicIsize>,
+    claims: Arc<AtomicIsize>,
+) -> (Server, Arc<ExpansionHub>) {
+    let vocab = vocab();
+    let vlen = vocab.len();
+    let armed = Arc::new(AtomicBool::new(true));
+    let doomed = SharedModel::spawn_supervised(
+        move || {
+            if armed.swap(false, Ordering::SeqCst) {
+                Ok(ChaosModel::new(
+                    MockModel::new(MockConfig { vocab: vlen, ..Default::default() }),
+                    ChaosConfig { panic_on_encode: vec![1], ..Default::default() },
+                ))
+            } else {
+                Err(anyhow::anyhow!("chaos: artifacts gone, rebuild impossible"))
+            }
+        },
+        SupervisorConfig { retries: 0, backoff_us: 50, max_restarts: 1, metrics: None },
+    )
+    .unwrap();
+    let instr =
+        InstrumentedModel::new(MockModel::new(MockConfig { vocab: vlen, ..Default::default() }))
+            .with_live_counter(live)
+            .with_state_counter(claims);
+    let stormy = ChaosModel::new(
+        instr,
+        ChaosConfig {
+            seed: 0x5708,
+            delay_rate: 0.15,
+            delay: Duration::from_micros(500),
+            storm_after: 4,
+            storm_calls: 60,
+            storm_delay: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let hub = ExpansionHub::start_pool(
+        ReplicaPool::from_models(vec![
+            Arc::new(doomed) as PooledModel,
+            Arc::new(stormy) as PooledModel,
+        ]),
+        Box::new(BeamSearch::optimized()),
+        vocab,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            shards: 2,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let server = Server::start(
+        "127.0.0.1:0",
+        ServerCtx {
+            hub: hub.clone(),
+            stock: Arc::new(Stock::new()),
+            metrics: Arc::new(Metrics::new()),
+            default_limits: SearchLimits {
+                deadline: Duration::from_millis(120),
+                max_iterations: 40,
+                max_depth: 3,
+                expansions_per_step: 4,
+                ..Default::default()
+            },
+            default_algo: "retrostar".into(),
+            default_beam_width: 1,
+            default_spec_depth: 1,
+            default_spec_adaptive: false,
+            default_spec_max: 8,
+            screen: Default::default(),
+            overload: Arc::new(OverloadController::new(overload)),
+        },
+    )
+    .unwrap();
+    (server, hub)
+}
+
+/// Every answer the storm produces must be terminal and structured:
+/// `ok:true` with a planner stop_reason, or `ok:false` as an
+/// `overloaded` shed (with its retry hint), a `draining` refusal, or a
+/// scoped error. Anything else — and any hang — is a protocol bug.
+fn assert_terminal(r: &Json) {
+    match r.get("ok").and_then(|x| x.as_bool()) {
+        Some(true) => {
+            let stop = r.get("stop_reason").and_then(|x| x.as_str()).unwrap_or("");
+            assert!(
+                ["solved", "exhausted", "deadline", "budget", "error"].contains(&stop),
+                "ok response without a terminal stop_reason: {r:?}"
+            );
+        }
+        Some(false) => match r.get("code").and_then(|x| x.as_str()) {
+            Some("overloaded") => assert!(
+                r.get("retry_after_ms").and_then(|x| x.as_usize()).is_some(),
+                "shed without retry hint: {r:?}"
+            ),
+            Some("draining") => {}
+            Some(other) => panic!("unexpected refusal code {other}: {r:?}"),
+            None => assert!(
+                r.get("error").and_then(|x| x.as_str()).is_some(),
+                "refusal without error message: {r:?}"
+            ),
+        },
+        None => panic!("non-terminal response: {r:?}"),
+    }
+}
+
+#[test]
+fn overload_storm_answers_every_request_and_drains() {
+    mute_injected_panics();
+    let live = Arc::new(AtomicIsize::new(0));
+    let claims = Arc::new(AtomicIsize::new(0));
+    let (server, hub) = storm_server(
+        OverloadConfig {
+            max_sessions: 64,
+            max_queue: 6,
+            retry_after_ms: 5,
+            drain_ms: 300,
+            ..Default::default()
+        },
+        live.clone(),
+        claims.clone(),
+    );
+    let addr = server.addr();
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..12u64 {
+        joins.push(std::thread::spawn(move || -> Vec<Json> {
+            let mut rng = Rng::new(t ^ 0xF100D);
+            let mut out = Vec::new();
+            for i in 0..4 {
+                // One connection per call: the flood exercises the
+                // accept path too, and a shed connection answers
+                // exactly one structured line before closing.
+                let mut c = Client::connect(addr)
+                    .unwrap_or_else(|e| panic!("thread {t} call {i}: connect: {e:#}"));
+                let r = c
+                    .call(Json::obj(vec![
+                        ("op", Json::str("plan")),
+                        ("smiles", Json::str(POOL[rng.gen_range(POOL.len())])),
+                        ("deadline_ms", Json::num((40 + rng.gen_range(80)) as f64)),
+                    ]))
+                    .unwrap_or_else(|e| {
+                        panic!("thread {t} call {i}: transport died mid-storm: {e:#}")
+                    });
+                out.push(r);
+            }
+            out
+        }));
+    }
+    // healthz keeps answering from its own session mid-storm.
+    let mut probe = Client::connect(addr).unwrap();
+    for _ in 0..5 {
+        let h = probe.call(Json::obj(vec![("op", Json::str("healthz"))])).unwrap();
+        assert_eq!(h.get("ok").and_then(|x| x.as_bool()), Some(true), "{h:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut answered = 0usize;
+    for j in joins {
+        for r in j.join().expect("flood thread") {
+            assert_terminal(&r);
+            answered += 1;
+        }
+    }
+    assert_eq!(answered, 48, "every flood request got a terminal answer");
+    assert!(t0.elapsed() < Duration::from_secs(30), "zero-hang invariant breached");
+    drop(probe);
+    server.shutdown();
+    assert_drained(&hub, &live, &claims, 0x5708);
+}
+
+#[test]
+fn drain_mid_storm_still_answers_then_drains_clean() {
+    mute_injected_panics();
+    let live = Arc::new(AtomicIsize::new(0));
+    let claims = Arc::new(AtomicIsize::new(0));
+    let (server, hub) = storm_server(
+        OverloadConfig { drain_ms: 300, retry_after_ms: 5, ..Default::default() },
+        live.clone(),
+        claims.clone(),
+    );
+    let addr = server.addr();
+    // The admin connection must exist BEFORE the drain: a draining
+    // server refuses new connections outright.
+    let mut admin = Client::connect(addr).unwrap();
+    let drain_started = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..8u64 {
+        let drain_started = drain_started.clone();
+        joins.push(std::thread::spawn(move || -> usize {
+            let mut rng = Rng::new(t ^ 0xD7A1);
+            let mut c = match Client::connect(addr) {
+                Ok(c) => c,
+                Err(_) => return 0,
+            };
+            let mut answered = 0usize;
+            for _ in 0..10 {
+                match c.call(Json::obj(vec![
+                    ("op", Json::str("plan")),
+                    ("smiles", Json::str(POOL[rng.gen_range(POOL.len())])),
+                    ("deadline_ms", Json::num((30 + rng.gen_range(50)) as f64)),
+                ])) {
+                    Ok(r) => {
+                        assert_terminal(&r);
+                        if r.get("code").and_then(|x| x.as_str()) == Some("draining") {
+                            break; // server is going away; stop flooding
+                        }
+                        answered += 1;
+                    }
+                    Err(e) => {
+                        // The ONLY legitimate transport closure is the
+                        // drain tearing connections down at its
+                        // deadline; before that, a dead socket is a bug.
+                        assert!(
+                            drain_started.load(Ordering::SeqCst),
+                            "thread {t}: connection died before the drain: {e:#}"
+                        );
+                        break;
+                    }
+                }
+            }
+            answered
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    drain_started.store(true, Ordering::SeqCst);
+    let d = admin.call(Json::obj(vec![("op", Json::str("drain"))])).unwrap();
+    assert_eq!(d.get("ok").and_then(|x| x.as_bool()), Some(true), "{d:?}");
+    assert_eq!(d.get("draining").and_then(|x| x.as_bool()), Some(true));
+    let answered: usize = joins.into_iter().map(|j| j.join().expect("flood thread")).sum();
+    assert!(answered > 0, "the flood must land real answers before the drain");
+    // A connection attempted during the drain gets one structured
+    // refusal (or finds the listener already closed — also clean).
+    if let Ok(mut late) = Client::connect(addr) {
+        if let Ok(r) = late.call(Json::obj(vec![("op", Json::str("ping"))])) {
+            assert_eq!(r.get("code").and_then(|x| x.as_str()), Some("draining"), "{r:?}");
+        }
+    }
+    server.shutdown();
+    assert_drained(&hub, &live, &claims, 0xD7A1);
+}
 
 #[test]
 fn randomized_fault_schedules_never_leak() {

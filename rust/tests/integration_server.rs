@@ -2,6 +2,7 @@
 //! concurrent planning sessions, cross-tree batching, metrics.
 
 use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::coordinator::overload::{OverloadConfig, OverloadController};
 use retroserve::coordinator::server::{Client, Server, ServerCtx};
 use retroserve::decoding::msbs::Msbs;
 use retroserve::jsonx::Json;
@@ -52,6 +53,7 @@ fn ctx() -> ServerCtx {
         default_spec_adaptive: false,
         default_spec_max: 8,
         screen: Default::default(),
+        overload: Default::default(),
     }
 }
 
@@ -123,5 +125,95 @@ fn per_request_limits_override_defaults() {
         .unwrap();
     assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true));
     assert!(t0.elapsed().as_secs_f64() < 3.0);
+    server.shutdown();
+}
+
+#[test]
+fn healthz_probes_and_drain_op_over_tcp() {
+    let mut c0 = ctx();
+    c0.overload = Arc::new(OverloadController::new(OverloadConfig {
+        drain_ms: 200,
+        ..Default::default()
+    }));
+    let server = Server::start("127.0.0.1:0", c0).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    // Ready before the drain: alive replicas, not draining.
+    let h = c.call(Json::obj(vec![("op", Json::str("healthz"))])).unwrap();
+    assert_eq!(h.get("ok").and_then(|x| x.as_bool()), Some(true), "{h:?}");
+    assert_eq!(h.get("ready").and_then(|x| x.as_bool()), Some(true));
+    assert!(h.get("alive").and_then(|x| x.as_usize()).unwrap() >= 1);
+    assert!(h.get("load").and_then(|x| x.as_f64()).is_some());
+    assert_eq!(h.get("sessions").and_then(|x| x.as_usize()), Some(1));
+    // The drain op flips the server into draining on an open connection.
+    let d = c.call(Json::obj(vec![("op", Json::str("drain"))])).unwrap();
+    assert_eq!(d.get("ok").and_then(|x| x.as_bool()), Some(true), "{d:?}");
+    assert_eq!(d.get("draining").and_then(|x| x.as_bool()), Some(true));
+    // New plans on the SAME connection are refused with code draining…
+    let r = c
+        .call(Json::obj(vec![
+            ("op", Json::str("plan")),
+            ("smiles", Json::str("CC(=O)NC")),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(false), "{r:?}");
+    assert_eq!(r.get("code").and_then(|x| x.as_str()), Some("draining"));
+    // …probes still answer, and healthz reports not-ready.
+    let h = c.call(Json::obj(vec![("op", Json::str("healthz"))])).unwrap();
+    assert_eq!(h.get("draining").and_then(|x| x.as_bool()), Some(true));
+    assert_eq!(h.get("ready").and_then(|x| x.as_bool()), Some(false));
+    // NEW connections are refused with one structured draining line.
+    let refused = Client::connect(server.addr())
+        .unwrap()
+        .call(Json::obj(vec![("op", Json::str("ping"))]))
+        .unwrap();
+    assert_eq!(refused.get("code").and_then(|x| x.as_str()), Some("draining"));
+    server.shutdown();
+}
+
+#[test]
+fn session_slots_shed_excess_connections_with_retry_hint() {
+    let mut c0 = ctx();
+    c0.overload = Arc::new(OverloadController::new(OverloadConfig {
+        max_sessions: 1,
+        retry_after_ms: 42,
+        ..Default::default()
+    }));
+    let server = Server::start("127.0.0.1:0", c0).unwrap();
+    let addr = server.addr();
+    let mut first = Client::connect(addr).unwrap();
+    let pong = first.call(Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("pong").and_then(|x| x.as_bool()), Some(true));
+    // The second connection is shed with the structured refusal.
+    let shed = Client::connect(addr)
+        .unwrap()
+        .call(Json::obj(vec![("op", Json::str("ping"))]))
+        .unwrap();
+    assert_eq!(shed.get("ok").and_then(|x| x.as_bool()), Some(false), "{shed:?}");
+    assert_eq!(shed.get("code").and_then(|x| x.as_str()), Some("overloaded"));
+    assert_eq!(shed.get("retry_after_ms").and_then(|x| x.as_usize()), Some(42));
+    // Dropping the first client frees the slot; connect_retry rides the
+    // shed responses until it lands.
+    drop(first);
+    let mut again = Client::connect_retry(addr, 50).expect("slot frees after disconnect");
+    let pong = again.call(Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("pong").and_then(|x| x.as_bool()), Some(true));
+    server.shutdown();
+}
+
+#[test]
+fn call_retry_survives_overload_replies_and_returns_answers() {
+    let server = Server::start("127.0.0.1:0", ctx()).unwrap();
+    let mut c = Client::connect_retry(server.addr(), 3).unwrap();
+    let r = c
+        .call_retry(
+            Json::obj(vec![
+                ("op", Json::str("plan")),
+                ("smiles", Json::str("CC(=O)NC")),
+                ("deadline_ms", Json::num(100.0)),
+            ]),
+            3,
+        )
+        .unwrap();
+    assert_eq!(r.get("ok").and_then(|x| x.as_bool()), Some(true), "{r:?}");
     server.shutdown();
 }

@@ -12,8 +12,9 @@ any pair fails. Rules, per result name present in both files of a pair:
 
   * `tokens_per_sec` may not drop more than --max-regress (relative) —
     wall-clock throughput, inherently machine-noisy, hence the slack;
-  * `ms_per_target` / `wall_ms` may not *increase* more than
-    --max-regress (relative) — same slack, opposite direction;
+  * `ms_per_target` / `wall_ms` / `p95_ms` may not *increase* more than
+    --max-regress (relative) — same slack, opposite direction (`p95_ms`
+    is the overload bench's admitted-interactive tail);
   * `model_calls` may not increase at all — it is deterministic, so any
     increase is an algorithmic regression, not noise;
   * `decode_tokens` may not increase at all — decoder positions
@@ -73,7 +74,7 @@ def check_pair(base_path, fresh_path, max_regress, lines):
                     f"{tag}: tokens/sec regressed {drop * 100.0:.1f}% "
                     f"(> {max_regress * 100.0:.0f}%)")
         # wall time: lower is better, bounded relative increase
-        for key in ("ms_per_target", "wall_ms"):
+        for key in ("ms_per_target", "wall_ms", "p95_ms"):
             b_ms, c_ms = base.get(key), cur.get(key)
             if b_ms and c_ms is not None:
                 rise = (c_ms - b_ms) / b_ms
