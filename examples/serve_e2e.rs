@@ -121,6 +121,7 @@ fn main() -> Result<()> {
             default_spec_max: 8,
             screen: Default::default(),
             overload: Default::default(),
+            store: None,
         },
     )?;
     let addr = server.addr();

@@ -107,6 +107,7 @@ fn start_server() -> (Server, Arc<ExpansionHub>) {
                 degraded_deadline_ms: DEADLINE_MS / 2,
                 ..Default::default()
             })),
+            store: None,
         },
     )
     .expect("server start");

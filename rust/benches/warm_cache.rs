@@ -1,0 +1,349 @@
+//! Warm-cache restart bench: cold vs restart-warm screening over the
+//! persistent expansion/route store.
+//!
+//! Scenario: a 128-target screening job (depth-2 synthetic routes with
+//! shared intermediates, same world shape as the screening bench) runs
+//! twice against the SAME store log, with a simulated process restart
+//! in between — the hub (and its L1 cache) is torn down and rebuilt,
+//! only the log file survives. The scripted model sleeps a fixed
+//! latency per encode and per fused decode call, so decode-task counts
+//! are the cost measure.
+//!
+//! 1. **cold** — fresh hub, empty store: the full decode workload, and
+//!    it populates the log.
+//! 2. **warm** — fresh hub (empty L1) reopening the log: every
+//!    expansion the cold run decoded promotes from the L2 tier on its
+//!    first L1 miss, so the model only sees molecules the cold run
+//!    never decoded (none, here).
+//! 3. **hot-path probe** — the no-blocking-disk-I/O evidence: 100k
+//!    `get_expansion` probes against the warm store, timed per call
+//!    under the counting allocator, interleaved with write-behind
+//!    appends. The L2 read path is a mutex-guarded map probe; the
+//!    flusher thread owns all disk writes.
+//!
+//! Printed invariants (the acceptance bar; nonzero exit on violation):
+//! the warm run issues strictly FEWER decode tasks than the cold run
+//! with `cache.l2_hits` > 0 doing the saving, and the slowest hot-path
+//! probe stays far below disk-write latency.
+//!
+//! Emits `BENCH_warm_cache.json`.
+
+use retroserve::benchkit::{
+    allocs_now, write_bench_json, BenchRecord, CountingAlloc, Flags, InstrumentedModel,
+};
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::decoding::msbs::Msbs;
+use retroserve::metrics::Metrics;
+use retroserve::model::scripted::{smiles_vocab, Script, ScriptedModel};
+use retroserve::model::{PooledModel, ReplicaPool};
+use retroserve::search::{ScreenConfig, ScreenSummary, ScreeningJob, SearchLimits, Stock};
+use retroserve::store::{ExpansionStore, StoreConfig};
+use retroserve::tokenizer::Vocab;
+use retroserve::util::stats::percentile;
+use retroserve::util::Rng;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Synthetic device latency per encoder call.
+const ENCODE_CALL_US: u64 = 200;
+/// Synthetic device latency per fused decode call.
+const DEVICE_CALL_US: u64 = 150;
+/// Shared-pool size intermediates are drawn from.
+const SHARED_POOL: usize = 24;
+/// Hot-path probes in the no-disk-I/O evidence pass.
+const PROBES: usize = 100_000;
+/// The slowest probe must stay below this to count as "no blocking
+/// disk I/O on the hot path" — generous against scheduler noise, far
+/// below a synchronous write+fsync.
+const PROBE_MAX_MS: f64 = 2.0;
+
+struct World {
+    targets: Vec<String>,
+    script: Arc<HashMap<String, String>>,
+    vocab: Vocab,
+    stock: Arc<Stock>,
+}
+
+fn fresh(rng: &mut Rng, seen: &mut HashSet<String>, base: usize, spread: usize) -> String {
+    let alphabet = ['C', 'N', 'O'];
+    loop {
+        let len = base + rng.gen_range(spread);
+        let s: String = (0..len).map(|_| alphabet[rng.gen_range(3)]).collect();
+        match retroserve::chem::canonicalize(&s) {
+            Ok(c) if seen.insert(c.clone()) => return c,
+            _ => {}
+        }
+    }
+}
+
+fn gen_world(n_targets: usize, overlap: f64) -> World {
+    let mut rng = Rng::new(0x3A9B_CAFE ^ n_targets as u64);
+    let mut seen: HashSet<String> = HashSet::new();
+    let cc = retroserve::chem::canonicalize("CC").unwrap();
+    let co = retroserve::chem::canonicalize("CO").unwrap();
+    let leaves = format!("{cc}.{co}");
+    seen.insert(cc.clone());
+    seen.insert(co.clone());
+
+    let shared: Vec<String> =
+        (0..SHARED_POOL).map(|_| fresh(&mut rng, &mut seen, 8, 6)).collect();
+    let mut script: HashMap<String, String> = HashMap::new();
+    for m in &shared {
+        script.insert(m.clone(), leaves.clone());
+    }
+    let roll = (overlap.clamp(0.0, 1.0) * 1000.0) as usize;
+    let mut targets = Vec::with_capacity(n_targets);
+    for _ in 0..n_targets {
+        let t = fresh(&mut rng, &mut seen, 14, 8);
+        let mut pair = Vec::with_capacity(2);
+        for _ in 0..2 {
+            let m = if rng.gen_range(1000) < roll {
+                shared[rng.gen_range(SHARED_POOL)].clone()
+            } else {
+                let p = fresh(&mut rng, &mut seen, 8, 6);
+                script.insert(p.clone(), leaves.clone());
+                p
+            };
+            pair.push(m);
+        }
+        script.insert(t.clone(), format!("{}.{}", pair[0], pair[1]));
+        targets.push(t);
+    }
+    let mut corpus: Vec<&str> = Vec::with_capacity(script.len() * 2);
+    for (k, v) in &script {
+        corpus.push(k);
+        corpus.push(v);
+    }
+    World {
+        targets,
+        script: Arc::new(script),
+        vocab: smiles_vocab(corpus),
+        stock: Arc::new(Stock::from_iter([cc, co])),
+    }
+}
+
+fn hub(
+    world: &World,
+    metrics: Arc<Metrics>,
+    store: Option<Arc<ExpansionStore>>,
+) -> Arc<ExpansionHub> {
+    let models: Vec<PooledModel> = (0..2)
+        .map(|_| {
+            let map = world.script.clone();
+            let script: Script =
+                Box::new(move |p| map.get(p).map(|r| vec![(r.clone(), -0.5)]).unwrap_or_default());
+            Arc::new(
+                InstrumentedModel::new(ScriptedModel::new(world.vocab.clone(), script))
+                    .with_encode_delay(Duration::from_micros(ENCODE_CALL_US))
+                    .with_decode_delay(Duration::from_micros(DEVICE_CALL_US)),
+            ) as PooledModel
+        })
+        .collect();
+    ExpansionHub::start_pool_with_store(
+        ReplicaPool::from_models(models),
+        Box::new(Msbs::default()),
+        world.vocab.clone(),
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            shards: 2,
+            ..Default::default()
+        },
+        metrics,
+        store,
+    )
+}
+
+fn screen_cfg(concurrency: usize) -> ScreenConfig {
+    ScreenConfig {
+        concurrency,
+        job_deadline: None,
+        job_decode_tokens: 0,
+        beam_width: 1,
+        spec_depth: 1,
+        spec_adaptive: false,
+        limits: SearchLimits {
+            deadline: Duration::from_secs(30),
+            max_depth: 6,
+            expansions_per_step: 4,
+            ..Default::default()
+        },
+    }
+}
+
+/// One "server process": build a hub over `store`, run the screening
+/// job, and return (summary, metrics). The hub (and its L1) dies with
+/// the call — only the store log carries state to the next process.
+fn run_process(
+    world: &World,
+    store: Arc<ExpansionStore>,
+    concurrency: usize,
+) -> (ScreenSummary, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let h = hub(world, metrics.clone(), Some(store.clone()));
+    let job = ScreeningJob::new(screen_cfg(concurrency)).with_store(store.clone());
+    let summary = job
+        .run(&h, &world.stock, &world.targets, &metrics, &mut |_| {})
+        .expect("screening job");
+    // Durability barrier before "shutdown": shard threads drain
+    // asynchronously, so the flush IS the clean-shutdown point.
+    store.flush();
+    (summary, metrics)
+}
+
+/// The no-blocking-disk-I/O evidence: time individual `get_expansion`
+/// probes against a live store while write-behind appends stream past
+/// them. Returns (max_ms, p99_ms, allocs_per_probe).
+fn probe_hot_path(store: &ExpansionStore, world: &World) -> (f64, f64, f64) {
+    let mols: Vec<&String> = world.script.keys().collect();
+    let mut rng = Rng::new(0xD15C);
+    let mut lat_ms = Vec::with_capacity(PROBES);
+    let a0 = allocs_now();
+    for i in 0..PROBES {
+        // Keep the flusher busy so a probe that DID touch the file
+        // would serialize behind real writes and show up in the tail.
+        if i % 64 == 0 {
+            let m = mols[rng.gen_range(mols.len())];
+            store.put_expansion(
+                m,
+                4,
+                &[retroserve::search::policy::Proposal {
+                    reactants: vec![m.to_string()],
+                    logp: -0.5,
+                }],
+            );
+        }
+        let m = mols[rng.gen_range(mols.len())];
+        let t0 = Instant::now();
+        let _ = std::hint::black_box(store.get_expansion(m, 4));
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let allocs_per_probe = (allocs_now() - a0) as f64 / PROBES as f64;
+    let max = lat_ms.iter().cloned().fold(0.0f64, f64::max);
+    (max, percentile(&lat_ms, 99.0), allocs_per_probe)
+}
+
+fn main() {
+    let flags = Flags::parse();
+    let n_targets = flags.usize_or("targets", 128);
+    let overlap = flags.f64_or("overlap", 0.5);
+    let concurrency = flags.usize_or("concurrency", 16);
+    let path = std::env::temp_dir().join(format!(
+        "retroserve-bench-warm-{}.log",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    println!(
+        "== warm-cache bench ({n_targets} targets, overlap {overlap:.2}, \
+         concurrency {concurrency}, store {}) ==",
+        path.display()
+    );
+    let world = gen_world(n_targets, overlap);
+    let fp = "bench-scripted|msbs|k4";
+    let mut records = Vec::new();
+
+    // Process 1: cold — empty log, full decode workload.
+    let cold_store = Arc::new(
+        ExpansionStore::open(StoreConfig::new(&path, fp), Arc::new(Metrics::new())).unwrap(),
+    );
+    let (cold, cold_metrics) = run_process(&world, cold_store, concurrency);
+    assert_eq!(cold.solved, n_targets, "cold run must solve everything");
+    let cold_l2 = cold_metrics.counter("cache.l2_hits");
+    println!(
+        "cold         {}/{} solved  decode tasks {:>5}  l2 hits {:>5}  wall {:>8.1}ms",
+        cold.solved,
+        cold.targets,
+        cold.decode_tasks,
+        cold_l2,
+        cold.wall_secs * 1e3
+    );
+    records.push(
+        BenchRecord::new("cold")
+            .metric("targets", n_targets as f64)
+            .metric("solved", cold.solved as f64)
+            .metric("decode_tasks", cold.decode_tasks as f64)
+            .metric("l2_hits", cold_l2 as f64)
+            .metric("wall_ms", cold.wall_secs * 1e3),
+    );
+
+    // Process 2: restart-warm — fresh hub and L1, same log.
+    let warm_store_metrics = Arc::new(Metrics::new());
+    let store = Arc::new(
+        ExpansionStore::open(StoreConfig::new(&path, fp), warm_store_metrics.clone()).unwrap(),
+    );
+    assert_eq!(store.recovered_records(), 0, "flushed log must reopen clean");
+    let warm_entries = store.expansions_len();
+    let (warm, warm_metrics) = run_process(&world, store.clone(), concurrency);
+    assert_eq!(warm.solved, n_targets, "warm run must solve everything");
+    let l2_hits = warm_metrics.counter("cache.l2_hits");
+    let l2_promotions = warm_metrics.counter("cache.l2_promotions");
+    println!(
+        "warm         {}/{} solved  decode tasks {:>5}  l2 hits {:>5}  \
+         promotions {:>5}  ({} entries replayed)  wall {:>8.1}ms",
+        warm.solved,
+        warm.targets,
+        warm.decode_tasks,
+        l2_hits,
+        l2_promotions,
+        warm_entries,
+        warm.wall_secs * 1e3
+    );
+    records.push(
+        BenchRecord::new("warm")
+            .metric("targets", n_targets as f64)
+            .metric("solved", warm.solved as f64)
+            .metric("decode_tasks", warm.decode_tasks as f64)
+            .metric("l2_hits", l2_hits as f64)
+            .metric("l2_promotions", l2_promotions as f64)
+            .metric("replayed_entries", warm_entries as f64)
+            .metric("wall_ms", warm.wall_secs * 1e3),
+    );
+
+    // Hot-path probe against the live warm store.
+    let (probe_max_ms, probe_p99_ms, allocs_per_probe) = probe_hot_path(&store, &world);
+    println!(
+        "hot path     {PROBES} get probes  max {probe_max_ms:>7.4}ms  \
+         p99 {probe_p99_ms:>7.4}ms  allocs/probe {allocs_per_probe:>5.1}"
+    );
+    records.push(
+        BenchRecord::new("hot-path-probe")
+            .metric("probes", PROBES as f64)
+            .metric("max_ms", probe_max_ms)
+            .metric("p99_ms", probe_p99_ms)
+            .metric("allocs_per_probe", allocs_per_probe),
+    );
+
+    let fewer_ok = warm.decode_tasks < cold.decode_tasks;
+    let l2_ok = l2_hits > 0;
+    let probe_ok = probe_max_ms < PROBE_MAX_MS;
+    println!(
+        "  -> warm vs cold decode tasks: {} vs {} ({})",
+        warm.decode_tasks,
+        cold.decode_tasks,
+        if fewer_ok { "strictly fewer: PASS" } else { "VIOLATION" }
+    );
+    println!(
+        "  -> cache.l2_hits on warm run: {l2_hits} ({})",
+        if l2_ok { "nonzero: PASS" } else { "VIOLATION" }
+    );
+    println!(
+        "  -> slowest hot-path probe {probe_max_ms:.4}ms (limit {PROBE_MAX_MS:.1}ms): {}",
+        if probe_ok { "no blocking disk I/O: PASS" } else { "VIOLATION" }
+    );
+
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+    let out = std::path::Path::new("BENCH_warm_cache.json");
+    match write_bench_json(out, "warm_cache", &records) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
+    if !(fewer_ok && l2_ok && probe_ok) {
+        eprintln!("warm-cache invariant VIOLATION (see above)");
+        std::process::exit(1);
+    }
+}

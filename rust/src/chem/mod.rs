@@ -372,6 +372,19 @@ pub fn canonicalize(s: &str) -> Result<String, ChemError> {
     Ok(writer::canonical_smiles(&parse_validated(s)?))
 }
 
+/// Canonical cache key for every molecule-keyed tier (the policy and
+/// hub expansion caches, the in-flight dedup registry, the persistent
+/// store): canonical SMILES when the input parses as one molecule, the
+/// raw string otherwise. The fallback keeps multi-fragment reactant
+/// sets and unparsable probes cacheable under a stable key instead of
+/// erroring, and makes the function idempotent — serving paths that
+/// already canonicalized pay only a re-canonicalization that returns
+/// the same string, so keyed behavior cannot fork between the server
+/// (which canonicalizes requests) and offline benches (which did not).
+pub fn cache_key(s: &str) -> String {
+    canonicalize(s).unwrap_or_else(|_| s.to_string())
+}
+
 /// Split a reactant-set string on `.` into individual SMILES.
 pub fn split_components(s: &str) -> Vec<&str> {
     s.split('.').filter(|p| !p.is_empty()).collect()

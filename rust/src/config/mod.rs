@@ -225,6 +225,15 @@ pub struct ServeConfig {
     /// Degradation ladder: deadline clamp for degraded admissions, ms
     /// (0 = keep the request deadline).
     pub degraded_deadline_ms: u64,
+    /// Persistent cache store log path (`cache.path`; empty = memory
+    /// only). An unwritable path downgrades to memory-only with a
+    /// warning — it never fails boot.
+    pub cache_path: String,
+    /// Store write-behind flush cadence, ms (`cache.flush_ms`).
+    pub cache_flush_ms: u64,
+    /// Store dead-record fraction triggering log compaction
+    /// (`cache.compact_ratio`; clamped to [0, 1], 1.0 disables).
+    pub cache_compact_ratio: f64,
 }
 
 impl ServeConfig {
@@ -274,6 +283,9 @@ impl ServeConfig {
             degrade_low: c.float_or("server.degrade_low", 0.40).max(0.0),
             degraded_beam: c.int_or("planner.degraded_beam", 1).max(1) as usize,
             degraded_deadline_ms: c.int_or("planner.degraded_deadline_ms", 0).max(0) as u64,
+            cache_path: c.str_or("cache.path", ""),
+            cache_flush_ms: c.int_or("cache.flush_ms", 200).max(1) as u64,
+            cache_compact_ratio: c.float_or("cache.compact_ratio", 0.5).clamp(0.0, 1.0),
         }
     }
 
@@ -458,6 +470,27 @@ mod tests {
         assert_eq!(ServeConfig::from_config(&Config::new()).batch_coalesce_us, 0);
         let c = Config::parse("[batcher]\ncoalesce_us = 400\n").unwrap();
         assert_eq!(ServeConfig::from_config(&c).batch_coalesce_us, 400);
+    }
+
+    #[test]
+    fn cache_keys_parse_and_clamp() {
+        let sc = ServeConfig::from_config(&Config::new());
+        assert_eq!(sc.cache_path, "", "persistent store defaults to off");
+        assert_eq!(sc.cache_flush_ms, 200);
+        assert!((sc.cache_compact_ratio - 0.5).abs() < 1e-12);
+        let c = Config::parse(concat!(
+            "[cache]\npath = \"/var/lib/retroserve/cache.log\"\n",
+            "flush_ms = 50\ncompact_ratio = 0.8\n",
+        ))
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.cache_path, "/var/lib/retroserve/cache.log");
+        assert_eq!(sc.cache_flush_ms, 50);
+        assert!((sc.cache_compact_ratio - 0.8).abs() < 1e-12);
+        let c = Config::parse("[cache]\nflush_ms = 0\ncompact_ratio = 7.0\n").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.cache_flush_ms, 1, "clamped to >= 1");
+        assert!((sc.cache_compact_ratio - 1.0).abs() < 1e-12, "ratio clamped to <= 1");
     }
 
     #[test]

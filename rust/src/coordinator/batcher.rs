@@ -493,6 +493,22 @@ impl ExpansionHub {
         cfg: BatcherConfig,
         metrics: Arc<Metrics>,
     ) -> Arc<ExpansionHub> {
+        Self::start_pool_with_store(pool, decoder, vocab, cfg, metrics, None)
+    }
+
+    /// As [`ExpansionHub::start_pool`], with an optional persistent
+    /// store as the L2 tier under the cross-shard cache: shards probe
+    /// it on an L1 miss (promoting hits into L1) and record every
+    /// retired expansion into it. `None` is byte-identical to the
+    /// store-less hub.
+    pub fn start_pool_with_store(
+        pool: ReplicaPool,
+        decoder: Box<dyn Decoder + Send>,
+        vocab: Vocab,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+        store: Option<Arc<crate::store::ExpansionStore>>,
+    ) -> Arc<ExpansionHub> {
         let nshards = cfg.shards.max(1);
         let pool = Arc::new(pool);
         // `Decoder: Send + Sync` by supertrait, so the one decoder is
@@ -534,6 +550,7 @@ impl ExpansionHub {
                 steal_q: steal_q.clone(),
                 depth: depth.clone(),
                 cache: cache.clone(),
+                store: store.clone(),
             };
             std::thread::Builder::new()
                 .name(format!("expansion-hub-{s}"))
@@ -620,6 +637,12 @@ impl ExpansionHub {
         deadline: Option<std::time::Instant>,
         priority: Priority,
     ) -> Result<ExpansionFuture> {
+        // Canonicalize once at the hub boundary: the cache, the
+        // in-flight dedup registry and the persistent store all key on
+        // this string, so two spellings of one molecule must collapse
+        // here rather than double-cache (and double-decode) below.
+        let smiles = crate::chem::cache_key(smiles);
+        let smiles = smiles.as_str();
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
         let req = ExpandReq { smiles: smiles.to_string(), k, ticket, deadline, priority, reply };

@@ -67,10 +67,18 @@
 //!                    │  first claims it
 //!                    ▼
 //!              shard loop ×S (session-sharded continuous batcher;
-//!                    │  shards share the expansion cache — a molecule
-//!                    │  decoded anywhere serves everywhere); each
-//!                    │  cache-missing molecule becomes ONE per-query
-//!                    │  decode task — it retires the moment its own
+//!                    │  shards share the L1 expansion cache — a
+//!                    │  molecule decoded anywhere serves everywhere.
+//!                    │  With cache.path set, an L1 miss probes the L2
+//!                    │  persistent store (store::ExpansionStore, a
+//!                    │  pure in-memory map probe — the log replayed
+//!                    │  at open lives in RAM) and PROMOTES a hit into
+//!                    │  L1 at its full stored width (cache.l2_hits /
+//!                    │  cache.l2_promotions); retired expansions are
+//!                    │  recorded into the store write-behind. Only a
+//!                    │  molecule missing BOTH tiers becomes ONE
+//!                    │  per-query decode task — it retires the moment
+//!                    │  its own
 //!                    │  beams finish, and cancellation (dropped
 //!                    │  future, expired deadline: both sweep phase
 //!                    │  2/2b of the round loop) drops it from its
@@ -167,6 +175,19 @@
 //! mid-phase cancellation, and `decode_tokens` in `DecodeStats` makes
 //! the payoff measurable (positions processed per generated token stays
 //! a small constant instead of growing with prefix length).
+//!
+//! **Store flusher ownership rule:** after [`crate::store`] open, the
+//! log file is owned by exactly ONE thread — the store's flusher.
+//! Shards, planners and the server never perform disk I/O on any
+//! request path: an L2 read is a mutex-guarded map probe, and an L2
+//! write is a channel send the flusher drains, buffers and fsyncs on
+//! the `cache.flush_ms` cadence (`cache.flush_lag` gauges records not
+//! yet durable). A crash therefore loses at most the last flush
+//! window and can only tear the TAIL of the log, which open-time
+//! recovery truncates (`cache.recovered_records`) —
+//! `tests/store_crash.rs` pins the recovery shapes and the warm
+//! restart; `benches/warm_cache.rs` pins the no-blocking-disk-I/O hot
+//! path.
 //!
 //! Cross-tree batching is the paper's closing "future work" realized:
 //! AiZynthFinder calls its model with batch size 1; here concurrent

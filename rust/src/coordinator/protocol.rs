@@ -224,6 +224,32 @@ pub fn screen_summary_response(id: i64, s: &ScreenSummary) -> Json {
         ("cache_hit_rate", Json::num(s.cache_hit_rate)),
         ("dedup_join_rate", Json::num(s.dedup_join_rate)),
         ("tokens_per_solved", Json::num(s.tokens_per_solved)),
+        ("skipped_warm", Json::num(s.skipped_warm as f64)),
+    ])
+}
+
+/// Build a `routes` response: the persisted k-best routes for one
+/// target (empty `routes` when the store holds none).
+pub fn routes_response(id: i64, target: &str, routes: &[crate::store::StoredRoute]) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("target", Json::str(target)),
+        (
+            "routes",
+            Json::Arr(
+                routes
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("cost", Json::num(r.cost)),
+                            ("depth", Json::num(r.route.depth() as f64)),
+                            ("route", route_to_json(&r.route)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 

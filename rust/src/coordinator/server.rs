@@ -69,6 +69,12 @@ pub struct ServerCtx {
     /// and drain state. `Default` is fully inert (no session bound, no
     /// shedding, watermarks unreachable at zero load).
     pub overload: Arc<OverloadController>,
+    /// Persistent expansion/route store (the cache's L2 tier). The
+    /// same handle the hub shards were started with: the server uses
+    /// it to persist solved plan/screen routes and to answer the
+    /// `routes` op. `None` = memory-only serving, exactly as before
+    /// the store existed.
+    pub store: Option<Arc<crate::store::ExpansionStore>>,
 }
 
 /// Server-side defaults for bulk screening jobs; requests may override
@@ -456,6 +462,14 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
                     ctx.metrics.inc("plan.spec_submitted", r.spec.groups_submitted);
                     ctx.metrics.inc("plan.spec_cancelled", r.spec.groups_cancelled);
                     ctx.metrics.inc("plan.spec_hits", r.spec.spec_hits);
+                    if let (Some(store), Some(route)) = (&ctx.store, r.route.as_ref()) {
+                        if r.solved {
+                            // Persist the solved route (memory merge +
+                            // flusher-thread write-behind) so warm
+                            // restarts and the `routes` op can serve it.
+                            store.put_route(smiles, route);
+                        }
+                    }
                     let mut resp = protocol::plan_response(id, &r);
                     // The key is present only on degraded admissions, so
                     // full-effort responses stay byte-identical (pinned).
@@ -475,6 +489,18 @@ pub fn handle_line(line: &str, ctx: &ServerCtx) -> Json {
             id,
             "screen streams multiple response lines; send it over a connection",
         ),
+        "routes" => {
+            let Some(store) = &ctx.store else {
+                return protocol::error_response(id, "no persistent store (cache.path unset)");
+            };
+            let Some(target) = req.get("smiles").and_then(|x| x.as_str()) else {
+                return protocol::error_response(id, "missing smiles");
+            };
+            // Keyed exactly as the store keys writes, so any spelling
+            // of the molecule finds its persisted routes.
+            let key = crate::chem::cache_key(target);
+            protocol::routes_response(id, &key, &store.routes(target))
+        }
         other => protocol::error_response(id, &format!("unknown op {other:?}")),
     }
 }
@@ -629,7 +655,11 @@ fn run_screen(line: &str, ctx: &ServerCtx, writer: &mut dyn Write) -> Json {
         spec_adaptive: sd_auto,
         limits,
     };
-    let job = ScreeningJob::new(cfg);
+    let warm = req.get("warm").and_then(|x| x.as_bool()).unwrap_or(false);
+    let mut job = ScreeningJob::new(cfg);
+    if let Some(store) = &ctx.store {
+        job = job.with_store(store.clone()).warm_start(warm);
+    }
     let mut write_ok = true;
     let mut on_result = |tr: TargetResult| {
         if !write_ok {
@@ -862,6 +892,7 @@ mod tests {
             default_spec_max: 8,
             screen: ScreenDefaults::default(),
             overload: Arc::new(OverloadController::default()),
+            store: None,
         }
     }
 

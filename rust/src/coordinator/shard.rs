@@ -389,6 +389,12 @@ pub(crate) struct ShardCtx {
     pub(crate) depth: Arc<AtomicUsize>,
     /// The shared cross-shard cache handle (cloned into `HubState`).
     pub(crate) cache: SyncExpansionCache,
+    /// Optional persistent L2 tier under the cache: probed on L1
+    /// misses (hits promote into L1), fed on retirement. `None` keeps
+    /// the shard byte-identical to the store-less hub. Reads and the
+    /// put are pure memory + a channel send — the store's flusher
+    /// thread owns all disk I/O.
+    pub(crate) store: Option<Arc<crate::store::ExpansionStore>>,
 }
 
 /// One shard's running state: per-replica schedulers plus the waiter
@@ -428,10 +434,31 @@ impl ShardRt {
         }
     }
 
+    /// L2 probe: when the persistent store holds `mol` at `>= k` and
+    /// L1 does not, promote the stored entry into L1 at its FULL
+    /// stored width so the normal admission path (and every later
+    /// request, wider ones included up to the stored k) hits memory.
+    /// An L2 hit can therefore never yield fewer proposals than were
+    /// persisted — L1 truncates to the requested k on read, exactly as
+    /// it does for freshly decoded entries.
+    fn promote_l2(&mut self, mol: &str, k: usize) {
+        let Some(store) = &self.ctx.store else { return };
+        let mol_key = mol.to_string();
+        if self.state.cache.get(&mol_key, k).is_some() {
+            return;
+        }
+        if let Some((stored_k, props)) = store.get_expansion(mol, k) {
+            self.state.cache.insert(mol_key, stored_k, props);
+            self.ctx.metrics.inc("cache.l2_hits", 1);
+            self.ctx.metrics.inc("cache.l2_promotions", 1);
+        }
+    }
+
     /// Admit one request: cache hit answers and releases any registry
     /// claim; a miss claims the molecule for this shard (idempotent —
     /// covers stolen requests the router never claimed).
     fn admit(&mut self, req: ExpandReq) -> bool {
+        self.promote_l2(&req.smiles, req.k);
         let mol = req.smiles.clone();
         let hit = self.state.admit(req);
         if hit {
@@ -453,6 +480,7 @@ impl ShardRt {
         if req.priority == Priority::Interactive {
             return self.admit(req);
         }
+        self.promote_l2(&req.smiles, req.k);
         if let Some(out) = self.state.cache.get(&req.smiles, req.k) {
             let _ = req.reply.send(Ok(out));
             self.registry_release(&req.smiles);
@@ -797,6 +825,11 @@ impl ShardRt {
         self.ctx.counters.invalid.fetch_add(inv, Ordering::Relaxed);
         self.ctx.counters.total.fetch_add(tot, Ordering::Relaxed);
         self.state.cache.insert(mol.clone(), meta.k, props.clone());
+        if let Some(store) = &self.ctx.store {
+            // Write-behind into the L2 tier: memory insert + channel
+            // send; the store's flusher thread does the disk write.
+            store.put_expansion(mol, meta.k, &props);
+        }
         if let Some(ws) = self.state.waiting.remove(mol) {
             let mut kept = Vec::new();
             for w in ws {

@@ -34,6 +34,7 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod search;
+pub mod store;
 pub mod synthchem;
 pub mod tokenizer;
 pub mod util;

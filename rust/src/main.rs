@@ -11,8 +11,15 @@
 //!                    [--deadline-ms N] [--decoder NAME] [--artifacts DIR]
 //!                    [--connect ADDR]
 //! retroserve expand  --smiles S [--decoder NAME] [--k N] [--artifacts DIR]
+//! retroserve routes  --smiles S (--cache-path FILE | --connect ADDR)
 //! retroserve info    [--artifacts DIR]
 //! ```
+//!
+//! `--cache-path FILE` (or `cache.path` in the config) enables the
+//! persistent expansion/route store: a crash-safe append-only log under
+//! the in-memory cache, so a restarted process warm-starts from
+//! yesterday's decodes. `screen --warm` additionally skips targets
+//! whose solved route is already persisted.
 //!
 //! With `--connect ADDR`, `plan` and `screen` skip loading artifacts and
 //! act as protocol clients against a running `retroserve serve`, retrying
@@ -43,6 +50,7 @@ use retroserve::runtime::PjrtModel;
 use retroserve::search::{
     dfs::Dfs, retrostar::RetroStar, Planner, ScreenConfig, ScreeningJob, Stock,
 };
+use retroserve::store::{ExpansionStore, StoreConfig};
 use retroserve::tokenizer::Vocab;
 use std::io::Write;
 use std::sync::Arc;
@@ -67,6 +75,44 @@ fn parse_args() -> Result<Args> {
     Ok(Args { cmd, flags })
 }
 
+/// Persistent-store knobs carried from `cache.*` config keys or
+/// `--cache-*` flags into [`build_hub`]. An empty `path` means
+/// memory-only (no store).
+struct CacheOpts {
+    path: String,
+    flush_ms: u64,
+    compact_ratio: f64,
+    /// Expansions-per-step the tier decodes at — part of the store
+    /// fingerprint, so a store written at one k is never served at
+    /// another configuration.
+    k: usize,
+}
+
+impl CacheOpts {
+    /// `--cache-path` / `--cache-flush-ms` / `--cache-compact-ratio`
+    /// for the offline subcommands (serve reads the config keys).
+    fn from_flags(args: &Args, k: usize) -> Result<CacheOpts> {
+        Ok(CacheOpts {
+            path: args.flags.get("cache-path").cloned().unwrap_or_default(),
+            flush_ms: args
+                .flags
+                .get("cache-flush-ms")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(200u64)
+                .max(1),
+            compact_ratio: args
+                .flags
+                .get("cache-compact-ratio")
+                .map(|s| s.parse::<f64>())
+                .transpose()?
+                .unwrap_or(0.5)
+                .clamp(0.0, 1.0),
+            k,
+        })
+    }
+}
+
 fn build_hub(
     artifacts: &str,
     decoder: &str,
@@ -74,8 +120,9 @@ fn build_hub(
     replicas: usize,
     batcher: BatcherConfig,
     supervise: SupervisorConfig,
+    cache: CacheOpts,
     metrics: Arc<Metrics>,
-) -> Result<(Arc<ExpansionHub>, Arc<Stock>, Vocab)> {
+) -> Result<(Arc<ExpansionHub>, Arc<Stock>, Vocab, Option<Arc<ExpansionStore>>)> {
     let vocab = Vocab::load(&std::path::Path::new(artifacts).join("vocab.json"))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let stock = Arc::new(
@@ -93,10 +140,48 @@ fn build_hub(
             supervise.clone(),
         )?));
     }
+    // The persistent L2 tier under the expansion cache. Open failures
+    // downgrade to memory-only serving with a warning — the store is a
+    // performance tier, never load-bearing for boot.
+    let store = if cache.path.is_empty() {
+        None
+    } else {
+        let fingerprint = format!("{}|{decoder}|k{}", models[0].fingerprint(), cache.k);
+        let cfg = StoreConfig {
+            path: cache.path.clone().into(),
+            fingerprint,
+            flush_ms: cache.flush_ms,
+            compact_ratio: cache.compact_ratio,
+        };
+        match ExpansionStore::open(cfg, metrics.clone()) {
+            Ok(s) => {
+                eprintln!(
+                    "retroserve: cache store {} open ({} expansion(s) warm)",
+                    cache.path,
+                    s.expansions_len()
+                );
+                Some(Arc::new(s))
+            }
+            Err(e) => {
+                eprintln!(
+                    "retroserve: cache store {} unavailable ({e:#}); running memory-only",
+                    cache.path
+                );
+                None
+            }
+        }
+    };
     let pool = ReplicaPool::from_models(models);
     let dec = make_decoder(decoder, batch_hint)?;
-    let hub = ExpansionHub::start_pool(pool, dec, vocab.clone(), batcher, metrics);
-    Ok((hub, stock, vocab))
+    let hub = ExpansionHub::start_pool_with_store(
+        pool,
+        dec,
+        vocab.clone(),
+        batcher,
+        metrics,
+        store.clone(),
+    );
+    Ok((hub, stock, vocab, store))
 }
 
 fn main() -> Result<()> {
@@ -106,6 +191,7 @@ fn main() -> Result<()> {
         "plan" => cmd_plan(&args),
         "screen" => cmd_screen(&args),
         "expand" => cmd_expand(&args),
+        "routes" => cmd_routes(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
@@ -120,15 +206,19 @@ fn main() -> Result<()> {
                  [--retry-after-ms N]\n\
                  [--degrade-high X] [--degrade-low X] [--degraded-beam N] \
                  [--degraded-deadline-ms N]\n\
+                 [--cache-path FILE] [--cache-flush-ms N] [--cache-compact-ratio X]\n\
                  retroserve plan   --smiles S [--algo retrostar|dfs] [--decoder NAME] \
                  [--deadline-ms N]\n\
                  [--beam-width N] [--artifacts DIR] [--k N] [--max-depth N]\n\
-                 [--max-expansions N] [--max-decode-tokens N] [--connect ADDR]\n\
+                 [--max-expansions N] [--max-decode-tokens N] [--cache-path FILE] \
+                 [--connect ADDR]\n\
                  retroserve screen --targets FILE [--out FILE] [--concurrency N]\n\
                  [--job-deadline-ms N] [--job-max-decode-tokens N] [--deadline-ms N]\n\
-                 [--decoder NAME] [--shards N] [--replicas N] [--artifacts DIR] \
-                 [--connect ADDR]\n\
-                 retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR]\n\
+                 [--decoder NAME] [--shards N] [--replicas N] [--artifacts DIR]\n\
+                 [--cache-path FILE] [--warm] [--connect ADDR]\n\
+                 retroserve expand --smiles S [--decoder NAME] [--k N] [--artifacts DIR] \
+                 [--cache-path FILE]\n\
+                 retroserve routes --smiles S (--cache-path FILE | --connect ADDR)\n\
                  retroserve info   [--artifacts DIR]"
             );
             Ok(())
@@ -172,13 +262,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "degraded-deadline-ms" => {
                 cfg.apply_override("planner.degraded_deadline_ms", v)?
             }
+            "cache-path" => cfg.apply_override("cache.path", v)?,
+            "cache-flush-ms" => cfg.apply_override("cache.flush_ms", v)?,
+            "cache-compact-ratio" => cfg.apply_override("cache.compact_ratio", v)?,
             "config" => {}
             other => cfg.apply_override(other, v)?,
         }
     }
     let sc = ServeConfig::from_config(&cfg);
     let metrics = Arc::new(Metrics::new());
-    let (hub, stock, _vocab) = build_hub(
+    let (hub, stock, _vocab, store) = build_hub(
         &sc.artifacts,
         &sc.decoder,
         sc.batch_max,
@@ -197,6 +290,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             backoff_us: sc.model_backoff_us,
             max_restarts: 3,
             metrics: Some(metrics.clone()),
+        },
+        CacheOpts {
+            path: sc.cache_path.clone(),
+            flush_ms: sc.cache_flush_ms,
+            compact_ratio: sc.cache_compact_ratio,
+            k: sc.expansions_per_step,
         },
         metrics.clone(),
     )?;
@@ -234,6 +333,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 degraded_beam: sc.degraded_beam,
                 degraded_deadline_ms: sc.degraded_deadline_ms,
             })),
+            store,
         },
     )?;
     eprintln!("retroserve: ready on {}", server.addr());
@@ -326,17 +426,24 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
     let algo = args.flags.get("algo").map(String::as_str).unwrap_or("retrostar");
     let bw: usize = args.flags.get("beam-width").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let mut limits = retroserve::search::SearchLimits::default();
     let metrics = Arc::new(Metrics::new());
-    let (hub, stock, _) = build_hub(
+    let k_step: usize = args
+        .flags
+        .get("k")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(limits.expansions_per_step);
+    let (hub, stock, _, store) = build_hub(
         artifacts,
         decoder,
         bw.max(1),
         1,
         BatcherConfig::default(),
         SupervisorConfig::default(),
+        CacheOpts::from_flags(args, k_step)?,
         metrics,
     )?;
-    let mut limits = retroserve::search::SearchLimits::default();
     if let Some(ms) = args.flags.get("deadline-ms") {
         limits.deadline = std::time::Duration::from_millis(ms.parse()?);
     }
@@ -375,6 +482,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
         }
         other => bail!("unknown algo {other}"),
     };
+    if let (Some(store), Some(route)) = (&store, &r.route) {
+        if r.solved {
+            // The store's graceful drop at the end of this function
+            // flushes and fsyncs the record.
+            store.put_route(smiles, route);
+        }
+    }
     println!(
         "solved={} stop={} iterations={} expansions={} wall={:.2}s model_calls={} \
          acceptance={:.1}%",
@@ -434,20 +548,32 @@ fn screen_remote(addr: &str, targets: &[String], args: &Args) -> Result<()> {
             fields.push((key, Json::num(v.parse::<f64>()?)));
         }
     }
+    if args.flags.contains_key("warm") {
+        fields.push(("warm", Json::Bool(true)));
+    }
     let mut client = Client::connect_retry(addr, 5)?;
     // The stream is one job; a mid-stream retry would re-run it, so
     // only the connection is retried — refusals surface structurally.
     let lines = client.call_stream(Json::obj(fields))?;
+    // Keep a raw handle next to the BufWriter so the tail of the JSONL
+    // stream can be fsynced once the job is done — a drained or killed
+    // process must not lose results the writer already buffered.
+    let mut sync_handle: Option<std::fs::File> = None;
     let mut out: Box<dyn Write> = match args.flags.get("out") {
-        Some(p) => Box::new(std::io::BufWriter::new(
-            std::fs::File::create(p).with_context(|| format!("creating {p}"))?,
-        )),
+        Some(p) => {
+            let f = std::fs::File::create(p).with_context(|| format!("creating {p}"))?;
+            sync_handle = Some(f.try_clone().with_context(|| format!("cloning handle for {p}"))?);
+            Box::new(std::io::BufWriter::new(f))
+        }
         None => Box::new(std::io::stdout()),
     };
     for j in &lines {
         writeln!(out, "{j}")?;
     }
     out.flush()?;
+    if let Some(f) = &sync_handle {
+        f.sync_all().context("fsyncing --out file")?;
+    }
     let last = lines.last().context("empty response stream")?;
     if last.get("ok").and_then(|x| x.as_bool()) == Some(false) {
         return Err(refusal_error(last));
@@ -493,16 +619,23 @@ fn cmd_screen(args: &Args) -> Result<()> {
     let job_decode_tokens: u64 =
         args.flags.get("job-max-decode-tokens").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let metrics = Arc::new(Metrics::new());
-    let (hub, stock, _) = build_hub(
+    let mut limits = retroserve::search::SearchLimits::default();
+    let k_step: usize = args
+        .flags
+        .get("k")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(limits.expansions_per_step);
+    let (hub, stock, _, store) = build_hub(
         artifacts,
         decoder,
         bw.max(1),
         replicas.max(1),
         BatcherConfig { shards: shards.max(1), ..Default::default() },
         SupervisorConfig::default(),
+        CacheOpts::from_flags(args, k_step)?,
         metrics.clone(),
     )?;
-    let mut limits = retroserve::search::SearchLimits::default();
     if let Some(ms) = args.flags.get("deadline-ms") {
         limits.deadline = std::time::Duration::from_millis(ms.parse()?);
     }
@@ -537,21 +670,37 @@ fn cmd_screen(args: &Args) -> Result<()> {
         limits,
     };
     // JSONL out: one line per target in completion order, then the
-    // summary line (same shapes as the server's `screen` op).
+    // summary line (same shapes as the server's `screen` op). The raw
+    // handle alongside the BufWriter lets the finished job fsync its
+    // tail — a drain must never lose buffered results.
+    let mut sync_handle: Option<std::fs::File> = None;
     let mut out: Box<dyn Write> = match args.flags.get("out") {
-        Some(p) => Box::new(std::io::BufWriter::new(
-            std::fs::File::create(p).with_context(|| format!("creating {p}"))?,
-        )),
+        Some(p) => {
+            let f = std::fs::File::create(p).with_context(|| format!("creating {p}"))?;
+            sync_handle = Some(f.try_clone().with_context(|| format!("cloning handle for {p}"))?);
+            Box::new(std::io::BufWriter::new(f))
+        }
         None => Box::new(std::io::stdout()),
     };
     let mut on_result = |tr: retroserve::search::TargetResult| {
         let j = protocol::screen_target_response(0, tr.index, &tr.smiles, &tr.result);
         let _ = writeln!(out, "{j}");
     };
-    let summary =
-        ScreeningJob::new(cfg).run(&hub, &stock, &targets, &metrics, &mut on_result)?;
+    let mut job = ScreeningJob::new(cfg);
+    if let Some(store) = &store {
+        job = job
+            .with_store(store.clone())
+            .warm_start(args.flags.contains_key("warm"));
+    }
+    let summary = job.run(&hub, &stock, &targets, &metrics, &mut on_result)?;
     writeln!(out, "{}", protocol::screen_summary_response(0, &summary))?;
     out.flush()?;
+    if let Some(f) = &sync_handle {
+        f.sync_all().context("fsyncing --out file")?;
+    }
+    if summary.skipped_warm > 0 {
+        eprintln!("screen: {} target(s) answered warm from the route store", summary.skipped_warm);
+    }
     eprintln!(
         "screen: {}/{} solved in {:.2}s (deadline {}, budget {}, exhausted {}, error {}) — \
          {:.1} solved/s, {:.0} tokens/solved, cache hit {:.0}%, dedup join {:.0}%",
@@ -576,13 +725,14 @@ fn cmd_expand(args: &Args) -> Result<()> {
     let decoder = args.flags.get("decoder").map(String::as_str).unwrap_or("msbs");
     let k: usize = args.flags.get("k").map(|s| s.parse()).transpose()?.unwrap_or(10);
     let metrics = Arc::new(Metrics::new());
-    let (hub, _, _) = build_hub(
+    let (hub, _, _, _store) = build_hub(
         artifacts,
         decoder,
         1,
         1,
         BatcherConfig::default(),
         SupervisorConfig::default(),
+        CacheOpts::from_flags(args, k)?,
         metrics,
     )?;
     let canonical = retroserve::chem::canonicalize(smiles)
@@ -599,6 +749,56 @@ fn cmd_expand(args: &Args) -> Result<()> {
     );
     for (i, p) in proposals.iter().enumerate() {
         println!("{:2}. logp {:7.3}  {}", i + 1, p.logp, p.reactants.join(" . "));
+    }
+    Ok(())
+}
+
+/// `retroserve routes --smiles S`: the persisted k-best routes for a
+/// target, either from a running server (`--connect`, the `routes`
+/// protocol op) or straight from a store log on disk (`--cache-path`,
+/// a read-only scan — no model required and no file mutation).
+fn cmd_routes(args: &Args) -> Result<()> {
+    let smiles = args.flags.get("smiles").context("--smiles required")?;
+    if let Some(addr) = args.flags.get("connect") {
+        let addr: std::net::SocketAddr =
+            addr.parse().with_context(|| format!("bad --connect address {addr:?}"))?;
+        let mut client = Client::connect_retry(addr, 5)?;
+        let r = client.call_retry(
+            Json::obj(vec![("op", Json::str("routes")), ("smiles", Json::str(smiles.clone()))]),
+            5,
+        )?;
+        if r.get("ok").and_then(|x| x.as_bool()) != Some(true) {
+            return Err(refusal_error(&r));
+        }
+        let n = r.get("routes").and_then(|x| x.as_arr()).map(Vec::len).unwrap_or(0);
+        eprintln!("routes: {n} persisted route(s) for {smiles} (remote)");
+        println!("{r}");
+        return Ok(());
+    }
+    let path = args
+        .flags
+        .get("cache-path")
+        .context("--cache-path FILE (or --connect ADDR) required")?;
+    let key = retroserve::chem::cache_key(smiles);
+    let all = retroserve::store::read_routes(std::path::Path::new(path))?;
+    let routes = all
+        .iter()
+        .find(|(t, _)| *t == key)
+        .map(|(_, r)| r.as_slice())
+        .unwrap_or(&[]);
+    println!("{}", protocol::routes_response(0, &key, routes));
+    if routes.is_empty() {
+        eprintln!("routes: none persisted for {key} in {path}");
+    } else {
+        for (i, r) in routes.iter().enumerate() {
+            eprintln!(
+                "routes: #{} cost {:.3} depth {}:\n{}",
+                i + 1,
+                r.cost,
+                r.route.depth(),
+                r.route.render()
+            );
+        }
     }
     Ok(())
 }

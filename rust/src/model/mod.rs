@@ -260,6 +260,22 @@ pub trait StepModel {
     fn max_src(&self) -> usize;
     /// Maximum target length.
     fn max_tgt(&self) -> usize;
+    /// Model identity string for cache binding: the persistent
+    /// expansion store refuses to serve records written under a
+    /// different fingerprint. The default derives it from the four
+    /// meta accessors, which every wrapper forwards, so instrumented /
+    /// chaos / shared wrappers fingerprint identically to the model
+    /// they wrap; real artifact-backed models should override with a
+    /// build hash when one is available.
+    fn fingerprint(&self) -> String {
+        format!(
+            "v{}-m{}-s{}-t{}",
+            self.vocab(),
+            self.medusa_heads(),
+            self.max_src(),
+            self.max_tgt()
+        )
+    }
     /// Encode a batch of sources (unpadded token rows). The handle stays
     /// valid until [`StepModel::release`].
     fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle>;
@@ -377,6 +393,9 @@ impl<T: StepModel + ?Sized> StepModel for Box<T> {
     }
     fn max_tgt(&self) -> usize {
         (**self).max_tgt()
+    }
+    fn fingerprint(&self) -> String {
+        (**self).fingerprint()
     }
     fn encode(&self, src: &[Vec<i32>]) -> Result<MemHandle> {
         (**self).encode(src)

@@ -435,7 +435,11 @@ impl<M: StepModel> ExpansionPolicy for ModelPolicy<M> {
         let mut misses: Vec<(usize, String)> = Vec::new();
         let mut miss_srcs = Vec::new();
         for (i, m) in molecules.iter().enumerate() {
-            let key = m.to_string();
+            // Canonical cache key: the serving path canonicalizes
+            // requests before they reach a cache, offline callers may
+            // not — keying both through chem::cache_key keeps one
+            // molecule from being cached under two spellings.
+            let key = chem::cache_key(m);
             if let Some(hit) = self.cache.get(&key, k) {
                 out[i] = Some(hit);
             } else {

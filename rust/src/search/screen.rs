@@ -139,11 +139,21 @@ pub struct ScreenSummary {
     pub dedup_join_rate: f64,
     /// Decode tokens per solved target (0 when nothing solved).
     pub tokens_per_solved: f64,
+    /// Targets answered from the persistent route store without any
+    /// planning work (`screen --warm`). Counted in `solved` too.
+    pub skipped_warm: usize,
 }
 
 /// Bulk planning driver: see the module docs.
 pub struct ScreeningJob {
     pub cfg: ScreenConfig,
+    /// Persistent route/expansion store: solved routes are recorded
+    /// into it, and warm-start consults it. `None` = exactly the
+    /// pre-store job.
+    store: Option<Arc<crate::store::ExpansionStore>>,
+    /// Warm start: skip targets whose solved route is already
+    /// persisted, reporting them solved with zero planning work.
+    warm: bool,
 }
 
 /// An immediately-stopped result for a target whose budget was gone
@@ -165,7 +175,36 @@ fn stopped_result(reason: StopReason) -> SolveResult {
 
 impl ScreeningJob {
     pub fn new(cfg: ScreenConfig) -> Self {
-        Self { cfg }
+        Self { cfg, store: None, warm: false }
+    }
+
+    /// Attach the persistent store: solved routes are recorded into it
+    /// as targets complete, and [`ScreeningJob::warm_start`] reads it.
+    pub fn with_store(mut self, store: Arc<crate::store::ExpansionStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Enable warm start: a target whose solved route is already in
+    /// the store is answered from it immediately (zero hub traffic)
+    /// and counted under [`ScreenSummary::skipped_warm`]. No-op
+    /// without a store.
+    pub fn warm_start(mut self, warm: bool) -> Self {
+        self.warm = warm;
+        self
+    }
+
+    /// A warm-start hit: the persisted best route for `target`, shaped
+    /// as a solved result with zero planning work.
+    fn warm_result(&self, target: &str) -> Option<SolveResult> {
+        if !self.warm {
+            return None;
+        }
+        let best = self.store.as_ref()?.routes(target).into_iter().next()?;
+        let mut r = stopped_result(StopReason::Solved);
+        r.solved = true;
+        r.route = Some(best.route);
+        Some(r)
     }
 
     /// Derive one target's limits from the job's remaining budget; an
@@ -256,12 +295,14 @@ impl ScreeningJob {
         let job_tokens0 = stats0.decode_tokens;
         let conc = self.cfg.concurrency.max(1).min(targets.len().max(1));
         let next = AtomicUsize::new(0);
+        let skipped_warm = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<TargetResult>();
         let mut summary = ScreenSummary { targets: targets.len(), ..Default::default() };
         std::thread::scope(|scope| {
             for _ in 0..conc {
                 let tx = tx.clone();
                 let next = &next;
+                let skipped_warm = &skipped_warm;
                 let hub = hub.clone();
                 scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -269,8 +310,24 @@ impl ScreeningJob {
                         break;
                     }
                     let t_target = Instant::now();
-                    let result =
-                        self.solve_one(&hub, stock, &targets[i], job_tokens0, job_deadline_at);
+                    let result = match self.warm_result(&targets[i]) {
+                        Some(r) => {
+                            skipped_warm.fetch_add(1, Ordering::Relaxed);
+                            r
+                        }
+                        None => {
+                            let r = self
+                                .solve_one(&hub, stock, &targets[i], job_tokens0, job_deadline_at);
+                            if let (Some(store), true) = (&self.store, r.solved) {
+                                if let Some(route) = &r.route {
+                                    // Memory merge + channel send; the
+                                    // store's flusher owns the disk.
+                                    store.put_route(&targets[i], route);
+                                }
+                            }
+                            r
+                        }
+                    };
                     let done = TargetResult {
                         index: i,
                         smiles: targets[i].clone(),
@@ -295,6 +352,7 @@ impl ScreeningJob {
             }
         });
         summary.wall_secs = t0.elapsed().as_secs_f64();
+        summary.skipped_warm = skipped_warm.load(Ordering::Relaxed);
         let stats1 = hub.stats();
         let (tasks1, requests1) = hub.merge_ratio();
         summary.requests = requests1.saturating_sub(requests0);
@@ -328,6 +386,9 @@ impl ScreeningJob {
         }
         if summary.stop_error > 0 {
             metrics.inc("screen.stop.error", summary.stop_error as u64);
+        }
+        if summary.skipped_warm > 0 {
+            metrics.inc("screen.skipped_warm", summary.skipped_warm as u64);
         }
         metrics.inc("screen.decode_tokens", summary.decode_tokens);
         metrics.gauge_set("screen.job_cache_hit_pct", (summary.cache_hit_rate * 100.0) as u64);

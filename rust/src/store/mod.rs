@@ -1,0 +1,864 @@
+//! Persistent expansion/route store: the crash-safe disk tier (L2)
+//! under the in-memory expansion cache (L1).
+//!
+//! The paper's screening workload re-expands the same intermediates
+//! across targets AND across process restarts; the in-memory LRU only
+//! captures the first kind of reuse. This module adds the second: a
+//! dependency-free, append-only log of expansion and route records
+//! that survives restarts, so a warm-started server serves yesterday's
+//! decodes from memory instead of re-running the model.
+//!
+//! ## Layout
+//!
+//! The log is a sequence of length-prefixed, checksummed frames:
+//!
+//! ```text
+//! u32 payload_len (LE) | u32 crc32(payload) (LE) | payload bytes
+//! ```
+//!
+//! Each payload is one JSON record. The FIRST record is a fingerprint
+//! header binding the file to a (model identity, decoder variant, beam
+//! width) triple — a store written by one model is never served to
+//! another: on open, a mismatched fingerprint discards the old
+//! contents (logged once, counted under `cache.fingerprint_skipped`)
+//! and restarts the log under the current fingerprint. Later records
+//! are expansions (`mol`, decoded `k`, proposals) and per-target
+//! k-best route sets ([`ROUTE_TOPK`]); a record for an existing key
+//! supersedes the earlier one, which becomes dead weight on disk until
+//! compaction rewrites the file from the live set.
+//!
+//! ## Crash safety
+//!
+//! Appends are frames; a crash can only tear the TAIL of the file.
+//! [`ExpansionStore::open`] replays frames until the first partial or
+//! checksum-failing one, truncates the file there, and counts every
+//! dropped trailing frame into `cache.recovered_records` — corrupt
+//! bytes are never parsed into proposals. Compaction writes a full
+//! snapshot to a temp file, fsyncs, then renames over the log, so it
+//! is atomic under the same model.
+//!
+//! ## Threading: the flusher owns the disk
+//!
+//! The serving hot path NEVER touches the file. All live records are
+//! held in memory (reads are a mutex-guarded map probe), and writes
+//! enqueue onto an unbounded channel drained by one background
+//! **flusher thread** — the only thread that performs disk I/O after
+//! open. The flusher buffers appends and flushes on a `flush_ms`
+//! cadence (`cache.flush_lag` gauges the records not yet durable), so
+//! a crash loses at most the last flush window, never corrupts the
+//! prefix. Graceful drop drains, flushes and fsyncs.
+
+use crate::chem;
+use crate::coordinator::protocol::{route_from_json, route_to_json};
+use crate::jsonx::Json;
+use crate::metrics::Metrics;
+use crate::search::policy::Proposal;
+use crate::search::Route;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock};
+
+/// K-best routes persisted per solved target.
+pub const ROUTE_TOPK: usize = 4;
+
+/// Compaction floor: below this many dead records the ratio test is
+/// skipped (rewriting a tiny file buys nothing).
+const COMPACT_MIN_DEAD: u64 = 8;
+
+/// Store construction knobs (`cache.*` config keys).
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Log file path (`cache.path`).
+    pub path: PathBuf,
+    /// Model/config identity the store is bound to: model fingerprint
+    /// + decoder variant + beam width, combined by the caller.
+    pub fingerprint: String,
+    /// Write-behind flush cadence, ms (`cache.flush_ms`).
+    pub flush_ms: u64,
+    /// Dead-record fraction at/above which the flusher compacts the
+    /// log into a snapshot (`cache.compact_ratio`; >= 1.0 disables).
+    pub compact_ratio: f64,
+}
+
+impl StoreConfig {
+    pub fn new(path: impl Into<PathBuf>, fingerprint: impl Into<String>) -> Self {
+        Self {
+            path: path.into(),
+            fingerprint: fingerprint.into(),
+            flush_ms: 200,
+            compact_ratio: 0.5,
+        }
+    }
+}
+
+/// One persisted route with its cost (negated route log-probability;
+/// lower is better).
+#[derive(Clone, Debug)]
+pub struct StoredRoute {
+    pub cost: f64,
+    pub route: Route,
+}
+
+/// CRC32 (IEEE, reflected) over `bytes` — hand-rolled; the offline
+/// build has no checksum crate.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Frame one record payload for the log (`len | crc | payload`).
+/// Public so crash-safety tests and tooling can construct byte-exact
+/// log files without reaching into the module.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Route cost as persisted: [`Route::cost`] (negated sum of step
+/// log-probabilities; lower is better).
+pub fn route_cost(route: &Route) -> f64 {
+    route.cost()
+}
+
+fn prop_to_json(p: &Proposal) -> Json {
+    Json::obj(vec![
+        (
+            "reactants",
+            Json::Arr(p.reactants.iter().map(|r| Json::str(r.clone())).collect()),
+        ),
+        ("logp", Json::num(p.logp)),
+    ])
+}
+
+fn prop_from_json(j: &Json) -> Option<Proposal> {
+    let reactants = j
+        .get("reactants")?
+        .as_arr()?
+        .iter()
+        .map(|r| r.as_str().map(String::from))
+        .collect::<Option<Vec<_>>>()?;
+    Some(Proposal { reactants, logp: j.get("logp")?.as_f64()? })
+}
+
+fn exp_record(mol: &str, k: usize, props: &[Proposal]) -> String {
+    Json::obj(vec![
+        ("t", Json::str("exp")),
+        ("mol", Json::str(mol)),
+        ("k", Json::num(k as f64)),
+        ("props", Json::Arr(props.iter().map(prop_to_json).collect())),
+    ])
+    .to_string()
+}
+
+fn routes_record(target: &str, routes: &[StoredRoute]) -> String {
+    Json::obj(vec![
+        ("t", Json::str("routes")),
+        ("target", Json::str(target)),
+        (
+            "routes",
+            Json::Arr(
+                routes
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("cost", Json::num(r.cost)),
+                            ("route", route_to_json(&r.route)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string()
+}
+
+fn fp_record(fingerprint: &str) -> String {
+    Json::obj(vec![("t", Json::str("fp")), ("fp", Json::str(fingerprint))]).to_string()
+}
+
+/// The in-memory live set: every record the hot path can serve. Reads
+/// never touch disk — this map IS the store as far as shards are
+/// concerned; the log only exists to rebuild it after a restart.
+#[derive(Default)]
+struct MemState {
+    /// mol -> (decoded k, proposals); same supersede rule as
+    /// [`crate::search::policy::KTruncatedCache`] (wider k replaces).
+    exps: HashMap<String, (usize, Vec<Proposal>)>,
+    /// target -> k-best stored routes, sorted by cost.
+    routes: HashMap<String, Vec<StoredRoute>>,
+    /// Records in the log that the live set still reflects.
+    live: u64,
+    /// Superseded records still occupying log bytes (compaction fuel).
+    dead: u64,
+}
+
+enum StoreMsg {
+    /// One framed-on-write record payload.
+    Append(String),
+    /// Barrier: flush + fsync everything enqueued before it, then ack.
+    Flush(mpsc::SyncSender<()>),
+    /// Drain, flush, fsync, ack, exit.
+    Shutdown(mpsc::SyncSender<()>),
+}
+
+/// Crash-safe persistent expansion/route store. See the module docs.
+pub struct ExpansionStore {
+    state: Arc<Mutex<MemState>>,
+    tx: mpsc::Sender<StoreMsg>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    metrics: Arc<Metrics>,
+    fingerprint: String,
+    path: PathBuf,
+    /// Trailing records dropped by tail recovery at open.
+    recovered: u64,
+}
+
+impl ExpansionStore {
+    /// Open (or create) the log at `cfg.path`, replay it into memory,
+    /// recover a torn tail, and start the flusher thread. Errors (path
+    /// unwritable, parent missing) are for the caller to downgrade to
+    /// memory-only operation — opening must never be load-bearing for
+    /// boot.
+    pub fn open(cfg: StoreConfig, metrics: Arc<Metrics>) -> Result<ExpansionStore> {
+        use std::fs::OpenOptions;
+        let path = cfg.path.clone();
+        // Probe writability first: create-or-open for append. A path we
+        // cannot append to is useless regardless of its contents.
+        OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&path)
+            .with_context(|| format!("opening cache store {}", path.display()))?;
+        let buf = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let (records, valid_end, dropped) = scan_frames(&buf);
+        if valid_end < buf.len() {
+            // Torn or corrupt tail: truncate to the last whole valid
+            // frame so the prefix stays servable and future appends
+            // re-establish a clean log.
+            let f = OpenOptions::new().write(true).open(&path)?;
+            f.set_len(valid_end as u64)?;
+            f.sync_all()?;
+        }
+        if dropped > 0 {
+            metrics.inc("cache.recovered_records", dropped);
+            eprintln!(
+                "retroserve: cache store {}: dropped {dropped} corrupt trailing record(s)",
+                path.display()
+            );
+        }
+        let mut state = MemState::default();
+        let mut needs_reset = records.is_empty();
+        if let Some(first) = records.first() {
+            let stored_fp = first
+                .get("fp")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string();
+            if first.get("t").and_then(|x| x.as_str()) != Some("fp")
+                || stored_fp != cfg.fingerprint
+            {
+                // A store written under a different model/decoder/beam
+                // configuration must never serve this process. Skip
+                // everything (logged ONCE) and restart the log under
+                // the current fingerprint.
+                metrics.inc("cache.fingerprint_skipped", records.len() as u64);
+                eprintln!(
+                    "retroserve: cache store {}: fingerprint mismatch \
+                     (stored {:?}, ours {:?}); ignoring {} record(s)",
+                    path.display(),
+                    stored_fp,
+                    cfg.fingerprint,
+                    records.len()
+                );
+                needs_reset = true;
+            } else {
+                for rec in &records[1..] {
+                    replay(&mut state, rec);
+                }
+            }
+        }
+        if needs_reset {
+            let f = OpenOptions::new().write(true).truncate(true).open(&path)?;
+            f.sync_all()?;
+            let mut f = OpenOptions::new().append(true).open(&path)?;
+            f.write_all(&encode_frame(fp_record(&cfg.fingerprint).as_bytes()))?;
+            f.sync_all()?;
+        }
+        let file = OpenOptions::new().append(true).open(&path)?;
+        let state = Arc::new(Mutex::new(state));
+        let (tx, rx) = mpsc::channel::<StoreMsg>();
+        let join = std::thread::Builder::new()
+            .name("cache-store-flusher".into())
+            .spawn({
+                let state = state.clone();
+                let metrics = metrics.clone();
+                let path = path.clone();
+                let fingerprint = cfg.fingerprint.clone();
+                let flush_ms = cfg.flush_ms.max(1);
+                let ratio = cfg.compact_ratio;
+                move || flusher_loop(rx, file, state, metrics, path, fingerprint, flush_ms, ratio)
+            })
+            .map_err(|e| anyhow!("spawn cache-store flusher: {e}"))?;
+        Ok(ExpansionStore {
+            state,
+            tx,
+            join: Mutex::new(Some(join)),
+            metrics,
+            fingerprint: cfg.fingerprint,
+            path,
+            recovered: dropped,
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, MemState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The fingerprint this store is bound to.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Log file path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Trailing records dropped by tail recovery when this store was
+    /// opened (also counted under `cache.recovered_records`).
+    pub fn recovered_records(&self) -> u64 {
+        self.recovered
+    }
+
+    /// Live expansion entries held in memory.
+    pub fn expansions_len(&self) -> usize {
+        self.lock().exps.len()
+    }
+
+    /// (live, dead) record counts — compaction accounting, for tests.
+    pub fn record_counts(&self) -> (u64, u64) {
+        let s = self.lock();
+        (s.live, s.dead)
+    }
+
+    /// Full stored proposals for `mol` when the persisted entry was
+    /// decoded at `>= k`, with its stored k — the caller promotes the
+    /// WHOLE entry into L1 (truncating to k would forget width and
+    /// never yield fewer proposals than were persisted, but would
+    /// force an L2 probe on every wider re-request). Pure memory; no
+    /// disk I/O on any call path.
+    pub fn get_expansion(&self, mol: &str, k: usize) -> Option<(usize, Vec<Proposal>)> {
+        let key = chem::cache_key(mol);
+        let s = self.lock();
+        let (stored_k, props) = s.exps.get(&key)?;
+        if *stored_k >= k {
+            Some((*stored_k, props.clone()))
+        } else {
+            None
+        }
+    }
+
+    /// Persist one decoded expansion (write-behind: memory now, disk on
+    /// the flusher's next cadence). Same supersede rule as the L1
+    /// cache: an entry decoded at a wider k is never replaced.
+    pub fn put_expansion(&self, mol: &str, k: usize, props: &[Proposal]) {
+        let key = chem::cache_key(mol);
+        let mut s = self.lock();
+        match s.exps.get(&key) {
+            Some((stored_k, _)) if *stored_k > k => return,
+            Some(_) => s.dead += 1,
+            None => {}
+        }
+        s.exps.insert(key.clone(), (k, props.to_vec()));
+        s.live += 1;
+        drop(s);
+        let _ = self.tx.send(StoreMsg::Append(exp_record(&key, k, props)));
+    }
+
+    /// K-best persisted routes for `target` (empty when none).
+    pub fn routes(&self, target: &str) -> Vec<StoredRoute> {
+        let key = chem::cache_key(target);
+        self.lock().routes.get(&key).cloned().unwrap_or_default()
+    }
+
+    /// Whether a solved route is persisted for `target` (the
+    /// `screen --warm` skip probe).
+    pub fn has_route(&self, target: &str) -> bool {
+        let key = chem::cache_key(target);
+        self.lock().routes.contains_key(&key)
+    }
+
+    /// Merge one solved route into the target's persisted k-best set
+    /// ([`ROUTE_TOPK`], by cost, duplicates collapsed). No-op when the
+    /// set is unchanged (the route was already stored and no better).
+    pub fn put_route(&self, target: &str, route: &Route) {
+        let key = chem::cache_key(target);
+        let cost = route_cost(route);
+        let new_json = route_to_json(route).to_string();
+        let mut s = self.lock();
+        let existing = s.routes.get(&key).cloned().unwrap_or_default();
+        if existing.iter().any(|r| route_to_json(&r.route).to_string() == new_json) {
+            return;
+        }
+        let mut merged = existing;
+        merged.push(StoredRoute { cost, route: route.clone() });
+        merged.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap_or(std::cmp::Ordering::Equal));
+        merged.truncate(ROUTE_TOPK);
+        if merged.iter().all(|r| route_to_json(&r.route).to_string() != new_json) {
+            return; // worse than the existing k-best; nothing to write
+        }
+        if s.routes.contains_key(&key) {
+            s.dead += 1;
+        }
+        let record = routes_record(&key, &merged);
+        s.routes.insert(key, merged);
+        s.live += 1;
+        drop(s);
+        let _ = self.tx.send(StoreMsg::Append(record));
+    }
+
+    /// Blocking durability barrier: every record enqueued before this
+    /// call is flushed and fsynced when it returns. Tests and drain
+    /// paths use it; the serving hot path never does.
+    pub fn flush(&self) {
+        let (ack, done) = mpsc::sync_channel(1);
+        if self.tx.send(StoreMsg::Flush(ack)).is_ok() {
+            let _ = done.recv();
+        }
+    }
+}
+
+/// Read-only scan of a store log: replay its valid prefix (ANY
+/// fingerprint — inspection must not require the owning model, and a
+/// pure read never resets the file the way [`ExpansionStore::open`]
+/// does on mismatch) and return the persisted route sets, sorted by
+/// target. The `retroserve routes --cache-path` CLI uses this; serving
+/// always goes through the fingerprint-checked open.
+pub fn read_routes(path: &std::path::Path) -> Result<Vec<(String, Vec<StoredRoute>)>> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let (records, _, _) = scan_frames(&buf);
+    let mut state = MemState::default();
+    for rec in &records {
+        replay(&mut state, rec); // the fp header is a no-op in replay
+    }
+    let mut out: Vec<(String, Vec<StoredRoute>)> = state.routes.into_iter().collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+impl Drop for ExpansionStore {
+    fn drop(&mut self) {
+        let (ack, done) = mpsc::sync_channel(1);
+        if self.tx.send(StoreMsg::Shutdown(ack)).is_ok() {
+            let _ = done.recv();
+        }
+        if let Some(j) = self.join.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Replay one parsed record into the live set (same supersede rules as
+/// the write path, so open-replay and steady-state agree).
+fn replay(state: &mut MemState, rec: &Json) {
+    match rec.get("t").and_then(|x| x.as_str()) {
+        Some("exp") => {
+            let (Some(mol), Some(k)) = (
+                rec.get("mol").and_then(|x| x.as_str()),
+                rec.get("k").and_then(|x| x.as_usize()),
+            ) else {
+                return;
+            };
+            let props: Vec<Proposal> = rec
+                .get("props")
+                .and_then(|p| p.as_arr())
+                .map(|arr| arr.iter().filter_map(prop_from_json).collect())
+                .unwrap_or_default();
+            match state.exps.get(mol) {
+                Some((stored_k, _)) if *stored_k > k => {
+                    state.dead += 1; // an out-of-order narrower record
+                    return;
+                }
+                Some(_) => state.dead += 1,
+                None => {}
+            }
+            state.exps.insert(mol.to_string(), (k, props));
+            state.live += 1;
+        }
+        Some("routes") => {
+            let Some(target) = rec.get("target").and_then(|x| x.as_str()) else {
+                return;
+            };
+            let routes: Vec<StoredRoute> = rec
+                .get("routes")
+                .and_then(|r| r.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|j| {
+                            Some(StoredRoute {
+                                cost: j.get("cost")?.as_f64()?,
+                                route: route_from_json(j.get("route")?)?,
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            if state.routes.contains_key(target) {
+                state.dead += 1;
+            }
+            state.routes.insert(target.to_string(), routes);
+            state.live += 1;
+        }
+        _ => {}
+    }
+}
+
+/// Walk the frames of `buf`. Returns (parsed records, byte offset of
+/// the end of the last valid frame, count of dropped trailing frames).
+/// Recovery truncates at the FIRST bad frame — a corrupt length could
+/// alias later framing, so nothing past it is trusted — but the
+/// dropped count still walks the remaining length prefixes
+/// best-effort so `cache.recovered_records` reflects what was lost.
+fn scan_frames(buf: &[u8]) -> (Vec<Json>, usize, u64) {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    loop {
+        if off == buf.len() {
+            return (records, off, 0);
+        }
+        if off + 8 > buf.len() {
+            return (records, off, 1); // torn header
+        }
+        let len = u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+            as usize;
+        let crc = u32::from_le_bytes([buf[off + 4], buf[off + 5], buf[off + 6], buf[off + 7]]);
+        let end = off + 8 + len;
+        if end > buf.len() {
+            return (records, off, 1); // torn payload
+        }
+        let payload = &buf[off + 8..end];
+        let parsed = if crc32(payload) == crc {
+            std::str::from_utf8(payload).ok().and_then(|s| Json::parse(s).ok())
+        } else {
+            None
+        };
+        match parsed {
+            Some(rec) => {
+                records.push(rec);
+                off = end;
+            }
+            None => {
+                // Count this frame plus however many later frames the
+                // untrusted length prefixes still delimit.
+                let mut dropped = 1u64;
+                let mut probe = end;
+                while probe + 8 <= buf.len() {
+                    let l = u32::from_le_bytes([
+                        buf[probe],
+                        buf[probe + 1],
+                        buf[probe + 2],
+                        buf[probe + 3],
+                    ]) as usize;
+                    let e = probe + 8 + l;
+                    if e > buf.len() {
+                        dropped += 1;
+                        break;
+                    }
+                    dropped += 1;
+                    probe = e;
+                }
+                return (records, off, dropped);
+            }
+        }
+    }
+}
+
+/// The flusher: sole owner of the log file after open. Buffers appends,
+/// flushes + fsyncs on the `flush_ms` cadence (and on explicit
+/// barriers), and compacts the log when the dead-record fraction
+/// crosses `compact_ratio`.
+#[allow(clippy::too_many_arguments)]
+fn flusher_loop(
+    rx: mpsc::Receiver<StoreMsg>,
+    file: std::fs::File,
+    state: Arc<Mutex<MemState>>,
+    metrics: Arc<Metrics>,
+    path: PathBuf,
+    fingerprint: String,
+    flush_ms: u64,
+    compact_ratio: f64,
+) {
+    let mut w = std::io::BufWriter::new(file);
+    let mut pending = 0u64;
+    let cadence = std::time::Duration::from_millis(flush_ms);
+    let mut flush = |w: &mut std::io::BufWriter<std::fs::File>, pending: &mut u64| {
+        if *pending > 0 {
+            let _ = w.flush();
+            let _ = w.get_ref().sync_data();
+            *pending = 0;
+        }
+        metrics.gauge_set("cache.flush_lag", 0);
+    };
+    loop {
+        match rx.recv_timeout(cadence) {
+            Ok(StoreMsg::Append(payload)) => {
+                let _ = w.write_all(&encode_frame(payload.as_bytes()));
+                pending += 1;
+                metrics.gauge_set("cache.flush_lag", pending);
+            }
+            Ok(StoreMsg::Flush(ack)) => {
+                flush(&mut w, &mut pending);
+                maybe_compact(&mut w, &state, &metrics, &path, &fingerprint, compact_ratio);
+                let _ = ack.send(());
+            }
+            Ok(StoreMsg::Shutdown(ack)) => {
+                flush(&mut w, &mut pending);
+                let _ = w.get_ref().sync_all();
+                let _ = ack.send(());
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                flush(&mut w, &mut pending);
+                maybe_compact(&mut w, &state, &metrics, &path, &fingerprint, compact_ratio);
+            }
+            // Sender gone without a Shutdown: the owner was torn down
+            // abruptly. Exit without the final flush — crash semantics
+            // are the contract recovery is tested against.
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Rewrite the log as a snapshot of the live set when dead records
+/// dominate: temp file + fsync + atomic rename, then swap the writer
+/// to the fresh file. Runs on the flusher thread only; the state lock
+/// is held just long enough to clone the live set.
+fn maybe_compact(
+    w: &mut std::io::BufWriter<std::fs::File>,
+    state: &Arc<Mutex<MemState>>,
+    metrics: &Arc<Metrics>,
+    path: &PathBuf,
+    fingerprint: &str,
+    compact_ratio: f64,
+) {
+    let (exps, routes, dead, total) = {
+        let s = state.lock().unwrap_or_else(|p| p.into_inner());
+        let total = s.live + s.dead;
+        if s.dead < COMPACT_MIN_DEAD
+            || total == 0
+            || compact_ratio >= 1.0
+            || (s.dead as f64 / total as f64) < compact_ratio
+        {
+            return;
+        }
+        (s.exps.clone(), s.routes.clone(), s.dead, total)
+    };
+    let tmp = path.with_extension("compact-tmp");
+    let write_snapshot = || -> std::io::Result<std::fs::File> {
+        let mut out = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        out.write_all(&encode_frame(fp_record(fingerprint).as_bytes()))?;
+        // Deterministic order keeps snapshots byte-stable for tests.
+        let mut mols: Vec<_> = exps.keys().collect();
+        mols.sort();
+        for mol in mols {
+            let (k, props) = &exps[mol];
+            out.write_all(&encode_frame(exp_record(mol, *k, props).as_bytes()))?;
+        }
+        let mut targets: Vec<_> = routes.keys().collect();
+        targets.sort();
+        for t in targets {
+            out.write_all(&encode_frame(routes_record(t, &routes[t]).as_bytes()))?;
+        }
+        out.flush()?;
+        let f = out.into_inner().map_err(|e| e.into_error())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        std::fs::OpenOptions::new().append(true).open(path)
+    };
+    match write_snapshot() {
+        Ok(fresh) => {
+            *w = std::io::BufWriter::new(fresh);
+            let mut s = state.lock().unwrap_or_else(|p| p.into_inner());
+            // Records appended during the snapshot are double-counted
+            // as live in both the file and the counter reset below;
+            // that only makes the next compaction marginally early.
+            s.live = (exps.len() + routes.len()) as u64;
+            s.dead = 0;
+            metrics.inc("cache.compactions", 1);
+            metrics.inc("cache.compacted_records", dead);
+            let _ = total;
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            metrics.inc("cache.compaction_errors", 1);
+            eprintln!("retroserve: cache store compaction failed: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_store_path(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "retroserve-store-{}-{tag}-{n}.log",
+            std::process::id()
+        ))
+    }
+
+    fn props(n: usize) -> Vec<Proposal> {
+        (0..n)
+            .map(|i| Proposal { reactants: vec![format!("C{}", "C".repeat(i))], logp: -(i as f64) })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_survives_reopen() {
+        let path = temp_store_path("roundtrip");
+        let m = Arc::new(Metrics::new());
+        {
+            let s = ExpansionStore::open(StoreConfig::new(&path, "fp-a"), m.clone()).unwrap();
+            s.put_expansion("CCO", 5, &props(5));
+            s.put_expansion("CCN", 3, &props(3));
+            let route = Route::Step {
+                smiles: "CCO".into(),
+                logp: -0.5,
+                children: vec![Route::Leaf { smiles: "CC".into() }],
+            };
+            s.put_route("CCO", &route);
+        } // graceful drop: flush + fsync
+        let s = ExpansionStore::open(StoreConfig::new(&path, "fp-a"), m).unwrap();
+        assert_eq!(s.recovered_records(), 0);
+        let (k, p) = s.get_expansion("CCO", 4).expect("persisted entry");
+        assert_eq!(k, 5);
+        assert_eq!(p.len(), 5);
+        assert!(s.get_expansion("CCO", 6).is_none(), "wider than stored must miss");
+        assert!(s.get_expansion("CCC", 1).is_none());
+        let routes = s.routes("CCO");
+        assert_eq!(routes.len(), 1);
+        assert!((routes[0].cost - 0.5).abs() < 1e-12);
+        assert!(s.has_route("CCO") && !s.has_route("CCN"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wider_k_supersedes_and_narrower_is_ignored() {
+        let path = temp_store_path("supersede");
+        let m = Arc::new(Metrics::new());
+        let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m.clone()).unwrap();
+        s.put_expansion("CCO", 3, &props(3));
+        s.put_expansion("CCO", 8, &props(8));
+        s.put_expansion("CCO", 2, &props(2)); // ignored: narrower
+        let (k, p) = s.get_expansion("CCO", 1).unwrap();
+        assert_eq!((k, p.len()), (8, 8));
+        s.flush();
+        drop(s);
+        let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m).unwrap();
+        let (k, p) = s.get_expansion("CCO", 8).unwrap();
+        assert_eq!((k, p.len()), (8, 8), "replay must keep the widest entry");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_ignores_old_records() {
+        let path = temp_store_path("fp-mismatch");
+        let m = Arc::new(Metrics::new());
+        {
+            let s = ExpansionStore::open(StoreConfig::new(&path, "model-A"), m.clone()).unwrap();
+            s.put_expansion("CCO", 4, &props(4));
+        }
+        let s = ExpansionStore::open(StoreConfig::new(&path, "model-B"), m.clone()).unwrap();
+        assert!(
+            s.get_expansion("CCO", 1).is_none(),
+            "a different model's records must never be served"
+        );
+        assert!(m.counter("cache.fingerprint_skipped") >= 1);
+        s.put_expansion("CCN", 2, &props(2));
+        drop(s);
+        let s = ExpansionStore::open(StoreConfig::new(&path, "model-B"), m).unwrap();
+        assert!(s.get_expansion("CCN", 2).is_some(), "new-fingerprint records persist");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn route_topk_keeps_best_by_cost() {
+        let path = temp_store_path("topk");
+        let m = Arc::new(Metrics::new());
+        let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m).unwrap();
+        for i in 0..(ROUTE_TOPK + 3) {
+            let route = Route::Step {
+                smiles: "CCO".into(),
+                logp: -(i as f64 + 1.0),
+                children: vec![Route::Leaf { smiles: format!("C{i}") }],
+            };
+            s.put_route("CCO", &route);
+        }
+        let routes = s.routes("CCO");
+        assert_eq!(routes.len(), ROUTE_TOPK);
+        assert!((routes[0].cost - 1.0).abs() < 1e-12, "best (lowest cost) first");
+        for w in routes.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+        }
+        let _ = std::fs::remove_file(s.path());
+    }
+
+    #[test]
+    fn open_fails_gracefully_on_bad_path() {
+        let m = Arc::new(Metrics::new());
+        let bad = std::env::temp_dir().join("retroserve-no-such-dir").join("x").join("s.log");
+        assert!(ExpansionStore::open(StoreConfig::new(bad, "fp"), m).is_err());
+    }
+
+    #[test]
+    fn compaction_shrinks_the_log() {
+        let path = temp_store_path("compact");
+        let m = Arc::new(Metrics::new());
+        let s = ExpansionStore::open(
+            StoreConfig { flush_ms: 5, ..StoreConfig::new(&path, "fp") },
+            m.clone(),
+        )
+        .unwrap();
+        // Rewrite the same molecule enough to dominate the log with
+        // dead records, then force a flush cycle to trigger compaction.
+        for i in 1..=24usize {
+            s.put_expansion("CCO", i, &props(2));
+        }
+        s.flush();
+        s.flush(); // second barrier runs maybe_compact after the flush
+        let size_after = std::fs::metadata(&path).unwrap().len();
+        assert!(m.counter("cache.compactions") >= 1, "compaction must have run");
+        let (_, dead) = s.record_counts();
+        assert_eq!(dead, 0, "compaction resets the dead counter");
+        drop(s);
+        let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m).unwrap();
+        let (k, _) = s.get_expansion("CCO", 1).unwrap();
+        assert_eq!(k, 24, "compacted snapshot keeps the live entry");
+        // A log of 24 supersedes compacts to ~2 records (header + live).
+        assert!(size_after < 2048, "log must shrink, got {size_after}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -513,6 +513,7 @@ fn storm_server(
             default_spec_max: 8,
             screen: Default::default(),
             overload: Arc::new(OverloadController::new(overload)),
+            store: None,
         },
     )
     .unwrap();

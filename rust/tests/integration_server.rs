@@ -54,6 +54,7 @@ fn ctx() -> ServerCtx {
         default_spec_max: 8,
         screen: Default::default(),
         overload: Default::default(),
+        store: None,
     }
 }
 

@@ -11,6 +11,10 @@
 //!   model across many random "molecules"; stats invariants hold.
 //! * retro*: a route returned solved is always closed over the stock
 //!   and within the depth cap.
+//! * caches: `KTruncatedCache` stored-k ≥ requested-k truncation
+//!   matches a reference model; `LruCache` eviction order matches a
+//!   reference recency list; promoting a persistent-store (L2) entry
+//!   into L1 never loses persisted proposals.
 
 use retroserve::chem;
 use retroserve::decoding::{beam::BeamSearch, hsbs::Hsbs, msbs::Msbs, DecodeStats, Decoder};
@@ -184,4 +188,154 @@ fn prop_solved_routes_are_closed_and_depth_capped() {
         }
     }
     assert!(solved >= 8, "oracle should solve most generated targets: {solved}");
+}
+
+/// Deterministic proposal list for (mol, width): entry `i` is
+/// recognizably the i-th proposal of that molecule, so truncation
+/// prefixes are checkable.
+fn props_for(mol: &str, width: usize) -> Vec<retroserve::search::policy::Proposal> {
+    (0..width)
+        .map(|i| retroserve::search::policy::Proposal {
+            reactants: vec![format!("{mol}-r{i}")],
+            logp: -(i as f64),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_ktruncated_cache_matches_reference_model() {
+    use retroserve::search::policy::KTruncatedCache;
+    use std::collections::HashMap;
+
+    let mut cache = KTruncatedCache::new(1 << 20); // no eviction: isolate k semantics
+    // Reference: mol -> stored width, under the documented supersede
+    // rule (a wider or equal decode replaces; narrower is ignored).
+    let mut model: HashMap<String, usize> = HashMap::new();
+    let mols: Vec<String> = (0..8).map(|i| format!("mol-{i}")).collect();
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..2000 {
+        let mol = mols[rng.gen_range(mols.len())].clone();
+        let k = 1 + rng.gen_range(8);
+        if rng.gen_range(2) == 0 {
+            cache.insert(mol.clone(), k, props_for(&mol, k));
+            let e = model.entry(mol).or_insert(0);
+            if *e <= k {
+                *e = k;
+            }
+        } else {
+            let got = cache.get(&mol, k);
+            match model.get(&mol) {
+                Some(&stored) if stored >= k => {
+                    let out = got.expect("stored-k >= requested-k must hit");
+                    assert_eq!(out.len(), k, "hit is truncated to exactly the requested k");
+                    for (i, p) in out.iter().enumerate() {
+                        assert_eq!(
+                            p.reactants[0],
+                            format!("{mol}-r{i}"),
+                            "truncation must be a prefix of the stored entry"
+                        );
+                    }
+                }
+                _ => assert!(got.is_none(), "narrower-than-requested entries must miss"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lru_cache_eviction_order_matches_reference() {
+    use retroserve::util::lru::LruCache;
+
+    const CAP: usize = 5;
+    let mut cache: LruCache<u32, u64> = LruCache::new(CAP);
+    // Reference recency list, front = most recent. Every operation is
+    // mirrored on both sides (including probe gets, which touch
+    // recency), so any divergence in eviction order shows up as a
+    // presence mismatch on a later probe.
+    let mut model: Vec<(u32, u64)> = Vec::new();
+    let mut rng = Rng::new(0xBEEF);
+    for step in 0..3000u64 {
+        let key = rng.gen_range(12) as u32;
+        if rng.gen_range(2) == 0 {
+            let val = step;
+            cache.insert(key, val);
+            if let Some(pos) = model.iter().position(|(k, _)| *k == key) {
+                model.remove(pos);
+            }
+            model.insert(0, (key, val));
+            if model.len() > CAP {
+                model.pop();
+            }
+        } else {
+            let expect = model.iter().position(|(k, _)| *k == key);
+            let got = cache.get(&key).copied();
+            match expect {
+                Some(pos) => {
+                    assert_eq!(got, Some(model[pos].1), "step {step}: wrong value for {key}");
+                    let e = model.remove(pos);
+                    model.insert(0, e); // hit marks MRU on both sides
+                }
+                None => assert!(got.is_none(), "step {step}: {key} should have been evicted"),
+            }
+        }
+        assert_eq!(cache.len(), model.len(), "step {step}: size diverged");
+    }
+}
+
+#[test]
+fn prop_l2_promotion_never_loses_persisted_proposals() {
+    use retroserve::metrics::Metrics;
+    use retroserve::search::policy::SyncExpansionCache;
+    use retroserve::store::{ExpansionStore, StoreConfig};
+    use std::sync::Arc;
+
+    let path = std::env::temp_dir()
+        .join(format!("retroserve-prop-l2-{}.log", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let store =
+        ExpansionStore::open(StoreConfig::new(&path, "prop-fp"), Arc::new(Metrics::new()))
+            .unwrap();
+    let l1 = SyncExpansionCache::new(1 << 20);
+    let mut rng = Rng::new(0xF00D);
+    // Persist entries at random widths (keys like "mol-3" fail SMILES
+    // parsing, so the store's canonical-key fallback keeps them as-is).
+    let mut widths = std::collections::HashMap::new();
+    for i in 0..24 {
+        let mol = format!("mol-{i}");
+        let w = 1 + rng.gen_range(10);
+        store.put_expansion(&mol, w, &props_for(&mol, w));
+        widths.insert(mol, w);
+    }
+    for _ in 0..1500 {
+        let mol = format!("mol-{}", rng.gen_range(24));
+        let stored = widths[&mol];
+        let k = 1 + rng.gen_range(12);
+        // The shard's promote path: on an L1 miss, an L2 hit is
+        // inserted into L1 at its FULL stored width.
+        if l1.get(&mol, k).is_none() {
+            match store.get_expansion(&mol, k) {
+                Some((sk, props)) => {
+                    assert!(sk >= k, "L2 must only hit at stored-k >= requested-k");
+                    assert_eq!(sk, stored);
+                    assert_eq!(props.len(), stored, "L2 hit returns ALL persisted proposals");
+                    l1.insert(mol.clone(), sk, props);
+                }
+                None => {
+                    assert!(k > stored, "L2 missed a satisfiable request");
+                    continue;
+                }
+            }
+        }
+        // Post-promotion, L1 serves the request — and the FULL stored
+        // entry stays reachable (promotion lost nothing).
+        let hit = l1.get(&mol, k).expect("promoted entry must hit L1");
+        assert_eq!(hit.len(), k);
+        let full = l1.get(&mol, stored).expect("full persisted width must stay reachable");
+        assert_eq!(full.len(), stored);
+        for (i, p) in full.iter().enumerate() {
+            assert_eq!(p.reactants[0], format!("{mol}-r{i}"));
+        }
+    }
+    drop(store);
+    let _ = std::fs::remove_file(&path);
 }

@@ -1,0 +1,316 @@
+//! Crash-safety suite for the persistent expansion/route store.
+//!
+//! The store's durability contract: a crash can only tear the TAIL of
+//! the append-only log; reopening truncates at the first bad frame,
+//! counts the loss into `cache.recovered_records`, and never serves a
+//! byte of a corrupt record as proposals. These tests manufacture the
+//! crash shapes directly against the log file — a flusher killed
+//! mid-write (partial trailing frame), a bit-flipped record (checksum
+//! failure), a tail truncated mid-payload — plus the fingerprint
+//! mismatch path and the end-to-end warm-restart invariant over a real
+//! hub (a restarted server's second screening run issues strictly
+//! fewer decode tasks, fed by `cache.l2_hits`).
+
+use retroserve::benchkit::InstrumentedModel;
+use retroserve::coordinator::batcher::{BatcherConfig, ExpansionHub};
+use retroserve::metrics::Metrics;
+use retroserve::model::scripted::{smiles_vocab, Script, ScriptedModel};
+use retroserve::model::{PooledModel, ReplicaPool};
+use retroserve::search::{ScreenConfig, ScreeningJob, ScreenSummary, Stock};
+use retroserve::store::{encode_frame, ExpansionStore, StoreConfig};
+use retroserve::tokenizer::Vocab;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_store_path(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "retroserve-crash-{}-{tag}-{n}.log",
+        std::process::id()
+    ))
+}
+
+fn props(n: usize) -> Vec<retroserve::search::policy::Proposal> {
+    (0..n)
+        .map(|i| retroserve::search::policy::Proposal {
+            reactants: vec![format!("C{}", "C".repeat(i))],
+            logp: -(i as f64),
+        })
+        .collect()
+}
+
+/// Write a clean, gracefully-closed log with `mols` persisted under
+/// `fp`, and return its size on disk.
+fn seed_log(path: &PathBuf, fp: &str, mols: &[(&str, usize)]) -> u64 {
+    let m = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(path, fp), m).unwrap();
+    for (mol, k) in mols {
+        s.put_expansion(mol, *k, &props(*k));
+    }
+    drop(s); // graceful: drain + flush + fsync
+    std::fs::metadata(path).unwrap().len()
+}
+
+#[test]
+fn flusher_killed_mid_write_leaves_a_recoverable_prefix() {
+    // Simulate the flusher dying halfway through a frame write: append
+    // the first half of a VALID frame to a gracefully-closed log.
+    let path = temp_store_path("midwrite");
+    seed_log(&path, "fp", &[("CCO", 5), ("CCN", 3)]);
+    let frame = encode_frame(br#"{"t":"exp","mol":"CCC","k":2,"props":[]}"#);
+    {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&frame[..frame.len() / 2]).unwrap();
+        f.sync_all().unwrap();
+    }
+    let torn_len = std::fs::metadata(&path).unwrap().len();
+    let m = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m.clone()).unwrap();
+    assert_eq!(s.recovered_records(), 1, "the torn trailing frame is dropped");
+    assert_eq!(m.counter("cache.recovered_records"), 1);
+    // The prefix survives untouched; the torn record never surfaces.
+    assert_eq!(s.get_expansion("CCO", 5).map(|(k, p)| (k, p.len())), Some((5, 5)));
+    assert_eq!(s.get_expansion("CCN", 3).map(|(k, p)| (k, p.len())), Some((3, 3)));
+    assert!(s.get_expansion("CCC", 1).is_none(), "a torn record must not be served");
+    // And the file was truncated back to the last whole frame.
+    assert!(
+        std::fs::metadata(&path).unwrap().len() < torn_len,
+        "open must truncate the torn tail"
+    );
+    drop(s);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn bit_flip_fails_the_checksum_and_drops_the_record() {
+    let path = temp_store_path("bitflip");
+    seed_log(&path, "fp", &[("CCO", 4), ("CCN", 6)]);
+    // Flip one byte in the LAST frame's payload: the length prefix
+    // still frames it, but the CRC no longer matches.
+    let mut buf = std::fs::read(&path).unwrap();
+    let last = buf.len() - 1;
+    buf[last] ^= 0x5A;
+    std::fs::write(&path, &buf).unwrap();
+    let m = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m.clone()).unwrap();
+    assert_eq!(s.recovered_records(), 1, "exactly the flipped record is dropped");
+    assert_eq!(m.counter("cache.recovered_records"), 1);
+    // Records ahead of the flip are intact; zero corrupt proposals
+    // are served for the molecule whose record was damaged.
+    assert_eq!(s.get_expansion("CCO", 4).map(|(k, p)| (k, p.len())), Some((4, 4)));
+    assert!(s.get_expansion("CCN", 1).is_none());
+    drop(s);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corruption_truncates_at_the_first_bad_frame_and_counts_the_rest() {
+    // A flip EARLY in the log invalidates everything after it — a
+    // corrupt length prefix could alias later framing, so nothing past
+    // the first bad frame is trusted. The dropped count still reflects
+    // every record lost, via the best-effort length-prefix walk.
+    let path = temp_store_path("midflip");
+    seed_log(&path, "fp", &[("CCO", 2), ("CCN", 2), ("CCC", 2), ("CCCC", 2)]);
+    let mut buf = std::fs::read(&path).unwrap();
+    // Frame 0 is the fingerprint header; corrupt the payload of frame 1
+    // (the first expansion record). Header is 8 bytes + payload.
+    let fp_len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let frame1_payload = 8 + fp_len + 8;
+    buf[frame1_payload] ^= 0xFF;
+    std::fs::write(&path, &buf).unwrap();
+    let m = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m.clone()).unwrap();
+    assert_eq!(s.recovered_records(), 4, "all four expansion records are lost");
+    assert_eq!(m.counter("cache.recovered_records"), 4);
+    for mol in ["CCO", "CCN", "CCC", "CCCC"] {
+        assert!(s.get_expansion(mol, 1).is_none(), "{mol} must not survive the flip");
+    }
+    // The store still works after recovery: new appends land cleanly.
+    s.put_expansion("CCO", 3, &props(3));
+    drop(s);
+    let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), Arc::new(Metrics::new())).unwrap();
+    assert_eq!(s.recovered_records(), 0, "recovered log reopens clean");
+    assert!(s.get_expansion("CCO", 3).is_some());
+    drop(s);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn truncated_tail_mid_payload_recovers_the_prefix() {
+    let path = temp_store_path("settruncate");
+    let full = seed_log(&path, "fp", &[("CCO", 5), ("CCN", 5)]);
+    // Chop 3 bytes off the end — a torn final payload, as if the
+    // machine died between write() and the sector hitting the platter.
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(full - 3).unwrap();
+    f.sync_all().unwrap();
+    drop(f);
+    let m = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(&path, "fp"), m.clone()).unwrap();
+    assert_eq!(s.recovered_records(), 1);
+    assert_eq!(m.counter("cache.recovered_records"), 1);
+    assert_eq!(s.get_expansion("CCO", 5).map(|(k, p)| (k, p.len())), Some((5, 5)));
+    assert!(s.get_expansion("CCN", 1).is_none(), "the torn final record is gone");
+    drop(s);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fingerprint_mismatch_skips_everything_and_warns_once() {
+    let path = temp_store_path("fpswap");
+    seed_log(&path, "model-A|msbs|k4", &[("CCO", 4), ("CCN", 4), ("CCC", 4)]);
+    let m = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(&path, "model-B|msbs|k4"), m.clone()).unwrap();
+    // All records (fp header + 3 expansions) are skipped, counted
+    // under the single-warning metric — NOT under recovered_records,
+    // which is reserved for corruption.
+    assert_eq!(m.counter("cache.fingerprint_skipped"), 4);
+    assert_eq!(m.counter("cache.recovered_records"), 0);
+    assert_eq!(s.recovered_records(), 0);
+    for mol in ["CCO", "CCN", "CCC"] {
+        assert!(
+            s.get_expansion(mol, 1).is_none(),
+            "{mol}: another model's proposals must never be served"
+        );
+    }
+    // The log restarts under the new fingerprint and persists normally.
+    s.put_expansion("CCO", 2, &props(2));
+    drop(s);
+    let m2 = Arc::new(Metrics::new());
+    let s = ExpansionStore::open(StoreConfig::new(&path, "model-B|msbs|k4"), m2.clone()).unwrap();
+    assert_eq!(m2.counter("cache.fingerprint_skipped"), 0, "no re-warn once reset");
+    assert_eq!(s.get_expansion("CCO", 2).map(|(k, _)| k), Some(2));
+    drop(s);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn unwritable_path_is_an_open_error_not_a_panic() {
+    // The memory-only fallback lives in the caller (build_hub downgrades
+    // an Err to None with a warning); the store's contract is a clean
+    // error, never a panic or a half-open store.
+    let bad = std::env::temp_dir().join("retroserve-no-such-dir").join("deep").join("s.log");
+    let r = ExpansionStore::open(StoreConfig::new(bad, "fp"), Arc::new(Metrics::new()));
+    assert!(r.is_err());
+}
+
+// ---------------------------------------------------------------------
+// Warm-restart invariant over a real hub.
+// ---------------------------------------------------------------------
+
+/// Shared-intermediate world (same shape as the screening tests): any
+/// pure-carbon chain C^n (n >= 4) -> CCN + CCO, which split into stock.
+fn sharing_script() -> Script {
+    Box::new(|p: &str| match p {
+        "CCN" => vec![("CC.CN".to_string(), -0.3)],
+        "CCO" => vec![("CC.CO".to_string(), -0.3)],
+        chain if chain.len() >= 4 && chain.chars().all(|c| c == 'C') => {
+            vec![("CCN.CCO".to_string(), -0.4)]
+        }
+        _ => Vec::new(),
+    })
+}
+
+fn sharing_vocab() -> Vocab {
+    smiles_vocab(["CCCCCCCCC", "CCN.CCO", "CC.CN", "CC.CO", "CCN", "CCO"])
+}
+
+fn stock() -> Arc<Stock> {
+    Arc::new(Stock::from_iter(
+        ["CC", "CO", "CN"].iter().map(|m| retroserve::chem::canonicalize(m).unwrap()),
+    ))
+}
+
+/// One "server process": a 1-replica hub wired to `store`, running one
+/// screening job over `targets`. Returns the job summary.
+fn run_screen(
+    store: Option<Arc<ExpansionStore>>,
+    warm: bool,
+    targets: &[String],
+    metrics: &Arc<Metrics>,
+) -> ScreenSummary {
+    let vocab = sharing_vocab();
+    let model = Arc::new(InstrumentedModel::new(ScriptedModel::new(
+        vocab.clone(),
+        sharing_script(),
+    )));
+    let hub = ExpansionHub::start_pool_with_store(
+        ReplicaPool::from_models(vec![model as PooledModel]),
+        retroserve::decoding::make_decoder("msbs", 4).unwrap(),
+        vocab,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            shards: 1,
+            ..Default::default()
+        },
+        metrics.clone(),
+        store.clone(),
+    );
+    let mut job = ScreeningJob::new(ScreenConfig { concurrency: 4, ..Default::default() });
+    if let Some(store) = &store {
+        job = job.with_store(store.clone()).warm_start(warm);
+    }
+    job.run(&hub, &stock(), targets, metrics, &mut |_| {}).unwrap()
+}
+
+#[test]
+fn warm_restart_issues_strictly_fewer_decode_tasks_via_l2_hits() {
+    let path = temp_store_path("warmrestart");
+    let targets: Vec<String> = (4..10).map(|n| "C".repeat(n)).collect();
+    let fp = "scripted|msbs|k4";
+
+    // Cold process: empty store, full decode workload. Shard threads
+    // wind down asynchronously after the hub drops, so the "clean
+    // shutdown" durability point is the explicit flush barrier, not
+    // the store's Drop.
+    let cold_metrics = Arc::new(Metrics::new());
+    let cold_store = Arc::new(
+        ExpansionStore::open(StoreConfig::new(&path, fp), cold_metrics.clone()).unwrap(),
+    );
+    let cold = run_screen(Some(cold_store.clone()), false, &targets, &cold_metrics);
+    cold_store.flush(); // durability barrier: every record is on disk
+    drop(cold_store);
+    assert_eq!(cold.solved, targets.len(), "cold run must solve everything: {cold:?}");
+    assert!(cold.decode_tasks > 0);
+    assert_eq!(cold_metrics.counter("cache.l2_hits"), 0, "an empty store cannot hit");
+
+    // Restarted process: fresh hub (empty L1), same log. Every
+    // expansion the cold run decoded promotes from L2 instead of
+    // reaching the model.
+    let warm_metrics = Arc::new(Metrics::new());
+    let store = Arc::new(
+        ExpansionStore::open(StoreConfig::new(&path, fp), warm_metrics.clone()).unwrap(),
+    );
+    assert_eq!(store.recovered_records(), 0, "flushed log reopens clean");
+    assert!(store.expansions_len() > 0, "the cold run's decodes must have persisted");
+    let warm = run_screen(Some(store.clone()), false, &targets, &warm_metrics);
+    assert_eq!(warm.solved, targets.len(), "warm run still solves everything: {warm:?}");
+    assert!(
+        warm.decode_tasks < cold.decode_tasks,
+        "restart-warm run must issue strictly fewer decode tasks: \
+         warm {} vs cold {}",
+        warm.decode_tasks,
+        cold.decode_tasks
+    );
+    assert!(
+        warm_metrics.counter("cache.l2_hits") > 0,
+        "the savings must come from the persistent tier"
+    );
+    assert!(warm_metrics.counter("cache.l2_promotions") > 0);
+
+    // Third shape: `screen --warm` answers persisted targets from their
+    // stored routes without any planning at all.
+    let skip_metrics = Arc::new(Metrics::new());
+    let skipped = run_screen(Some(store.clone()), true, &targets, &skip_metrics);
+    assert_eq!(skipped.skipped_warm, targets.len(), "every solved target skips: {skipped:?}");
+    assert_eq!(skipped.solved, targets.len(), "skipped targets still count as solved");
+    assert_eq!(skipped.decode_tasks, 0, "warm skip does zero planning work");
+    assert_eq!(skip_metrics.counter("screen.skipped_warm"), targets.len() as u64);
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+}

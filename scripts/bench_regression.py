@@ -27,10 +27,15 @@ any pair fails. Rules, per result name present in both files of a pair:
     straggler window splitting one round into two), while a real
     fusion regression (per-miss encodes) blows far past it;
   * `solved` must match exactly — the planner workloads are seeded and
-    deterministic, so any change in solve count is a semantic change.
+    deterministic, so any change in solve count is a semantic change;
+  * fresh-side rule, armed even with an empty baseline: a result named
+    `warm` carrying an `l2_hits` metric must report it NONZERO — the
+    warm-cache bench's restart run is only warm if the persistent tier
+    actually served hits, and a zero means the store wiring broke.
 
 A missing or empty baseline passes that pair with a warning (the first
-toolchain run populates it; see bench/baseline/README.md).
+toolchain run populates it; see bench/baseline/README.md) — except for
+the fresh-side rules above, which need no baseline to compare against.
 """
 
 import json
@@ -51,11 +56,23 @@ def check_pair(base_path, fresh_path, max_regress, lines):
     baseline, fresh = load(base_path), load(fresh_path)
     if fresh is None:
         return [f"{fresh_path}: fresh results missing"]
+    failures = []
+    # Fresh-side rules run before the baseline gate so they arm on the
+    # very first run, when the committed baseline is still empty.
+    warm = fresh.get("warm")
+    if warm is not None and "l2_hits" in warm:
+        hits = warm["l2_hits"]
+        ok = hits > 0
+        lines.append(f"{'ok  ' if ok else 'FAIL'} {fresh_path}:warm l2_hits "
+                     f"{hits:.0f} (fresh-side: must be nonzero)")
+        if not ok:
+            failures.append(
+                f"{fresh_path}:warm: l2_hits is zero — the restart-warm run "
+                "never hit the persistent tier")
     if not baseline:
         lines.append(f"WARN {base_path}: baseline missing or empty; nothing "
                      "to gate (commit a populated baseline to arm this check)")
-        return []
-    failures = []
+        return failures
     for name, base in baseline.items():
         cur = fresh.get(name)
         tag = f"{fresh_path}:{name}"
